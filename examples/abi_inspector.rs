@@ -1,0 +1,96 @@
+//! ABI inspector: dump the standard ABI's constant tables and demonstrate
+//! the bit-level properties of the Huffman handle encoding (Appendix A).
+//!
+//! ```bash
+//! cargo run --release --example abi_inspector
+//! ```
+
+use mpi_abi::abi;
+use mpi_abi::abi::huffman::{datatype_class, decode, fixed_size_of, DatatypeClass, HandleKind};
+
+fn main() {
+    println!("standard MPI ABI — {}", abi::AbiVariant::native());
+    println!(
+        "MPI {}.{}  (ABI v{}.{})\n",
+        abi::MPI_VERSION,
+        abi::MPI_SUBVERSION,
+        abi::MPI_ABI_VERSION,
+        abi::MPI_ABI_SUBVERSION
+    );
+
+    println!("integer types:");
+    println!("  MPI_Aint   = intptr_t ({} bits)", std::mem::size_of::<abi::Aint>() * 8);
+    println!("  MPI_Offset = int64_t  ({} bits)", std::mem::size_of::<abi::Offset>() * 8);
+    println!("  MPI_Count  = int64_t  ({} bits)", std::mem::size_of::<abi::Count>() * 8);
+    println!(
+        "  MPI_Status = {} bytes (3 public ints + 5 reserved)\n",
+        std::mem::size_of::<abi::AbiStatus>()
+    );
+
+    println!("predefined handle constants (10-bit Huffman code, zero page):");
+    println!("{:<28} {:>12}  {:<10} {}", "name", "binary", "kind", "decoded properties");
+    let mut all = abi::all_predefined_handles();
+    all.sort_by_key(|&(_, v)| v);
+    for (name, v) in all {
+        let kind = decode(v).unwrap();
+        let props = match kind {
+            HandleKind::Datatype => match datatype_class(v) {
+                DatatypeClass::FixedSize => {
+                    format!("fixed size: {} B (from bits 3..6)", fixed_size_of(v).unwrap())
+                }
+                DatatypeClass::VariableSize => {
+                    match abi::datatypes::platform_size_of(v) {
+                        Some(s) => format!("variable size (this platform: {s} B)"),
+                        None => "no size (null/packed)".to_string(),
+                    }
+                }
+                DatatypeClass::Reserved => "reserved".to_string(),
+            },
+            _ => String::new(),
+        };
+        println!("{name:<28} {v:#012b}  {kind:<10?} {props}");
+    }
+
+    println!("\nzero-page guarantee: max predefined value {:#x} <= {:#x}",
+        abi::all_predefined_handles().iter().map(|&(_, v)| v).max().unwrap(),
+        abi::huffman::HUFFMAN_MAX);
+
+    println!("\ndiagnosable special constants (unique negatives, §5.4):");
+    for &(name, v) in abi::SPECIAL_INTS {
+        println!("  {v:>6}  {name}  (reverse lookup: {:?})", abi::special_int_name(v));
+    }
+
+    println!("\nerror classes ({}), MPI_SUCCESS = 0:", abi::ERROR_CLASSES.len());
+    for &(name, v) in abi::ERROR_CLASSES.iter().take(8) {
+        println!("  {v:>3}  {name:<22} \"{}\"", abi::error_string(v));
+    }
+    println!("  ... and {} more", abi::ERROR_CLASSES.len() - 8);
+
+    // The cross-ABI comparison the paper's §3 tables make.
+    println!("\nthe same constant in three ABIs:");
+    println!("{:<16} {:>14} {:>18} {:>14}", "constant", "standard ABI", "mpich-like", "ompi-like");
+    use mpi_abi::api::{Dt, MpiAbi};
+    use mpi_abi::impls::{MpichAbi, OmpiAbi};
+    let rows = [
+        ("MPI_INT", Dt::Int),
+        ("MPI_DOUBLE", Dt::Double),
+        ("MPI_CHAR", Dt::Char),
+    ];
+    for (name, d) in rows {
+        println!(
+            "{:<16} {:>#14x} {:>#18x} {:>14p}",
+            name,
+            abi::handles::AbiDatatype(mpi_abi::api::dt_to_abi_const(d)).raw(),
+            MpichAbi::datatype(d),
+            OmpiAbi::datatype(d).0,
+        );
+    }
+    println!(
+        "{:<16} {:>14} {:>18} {:>14}",
+        "MPI_ANY_SOURCE",
+        mpi_abi::abi::constants::MPI_ANY_SOURCE,
+        mpi_abi::impls::mpich::MPI_ANY_SOURCE,
+        mpi_abi::impls::ompi::MPI_ANY_SOURCE,
+    );
+    println!("\n(an application binary bakes these in — which is exactly why an ABI standard is needed)");
+}

@@ -1,0 +1,107 @@
+//! The §4.7 container story, executable: **one application "binary",
+//! retargeted across MPI implementations without recompilation.**
+//!
+//! The application below is compiled exactly once against the standard
+//! ABI (it is a single monomorphic function over standard-ABI types).
+//! At "launch time" we run the same function against three different
+//! libraries: Mukautuva→MPICH-like, Mukautuva→OpenMPI-like, and the
+//! native standard-ABI implementation — the drop-in replacement an ABI
+//! makes possible, where today a container image would need one build
+//! per vendor MPI.
+//!
+//! ```bash
+//! cargo run --release --example container_retarget
+//! ```
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+
+/// "The container's entrypoint" — note: NOT generic. It is written
+/// against the standard-ABI types only; the three backends below all
+/// satisfy the same binary contract.
+fn containerized_app<A>(_rank: usize) -> (i32, f64, String)
+where
+    // The one compile-time fact the app relies on: its MPI speaks the
+    // standard ABI types (AbiComm-sized handles, 32-byte status, …).
+    A: MpiAbi<
+        Comm = mpi_abi::abi::handles::AbiComm,
+        Datatype = mpi_abi::abi::handles::AbiDatatype,
+        Op = mpi_abi::abi::handles::AbiOp,
+        Status = mpi_abi::abi::status::AbiStatus,
+    >,
+{
+    A::init();
+    let world = A::comm_world();
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(world, &mut size);
+    A::comm_rank(world, &mut rank);
+
+    // A small halo-ish workload: neighbor exchange + global reduction.
+    let dt = A::datatype(Dt::Double);
+    let right = (rank + 1) % size;
+    let left = (rank + size - 1) % size;
+    let send = [f64::from(rank) * 1.5];
+    let mut recv = [0.0f64];
+    let mut st = A::status_empty();
+    A::sendrecv(
+        send.as_ptr() as *const u8,
+        1,
+        dt,
+        right,
+        0,
+        recv.as_mut_ptr() as *mut u8,
+        1,
+        dt,
+        left,
+        0,
+        world,
+        &mut st,
+    );
+    let mut sum = [0.0f64];
+    let local = [recv[0]];
+    A::allreduce(
+        local.as_ptr() as *const u8,
+        sum.as_mut_ptr() as *mut u8,
+        1,
+        dt,
+        A::op(OpName::Sum),
+        world,
+    );
+    let lib = A::get_library_version();
+    A::finalize();
+    (rank, sum[0], lib)
+}
+
+fn main() {
+    println!("same application, three MPI libraries, zero recompilation:\n");
+    let n = 3;
+
+    // "docker run --mpi=host-mpich app"
+    let out = run_job_ok(JobSpec::new(n), containerized_app::<MukMpich>);
+    report("muk → mpich-like host MPI", &out);
+
+    // "docker run --mpi=host-ompi app"
+    let out = run_job_ok(JobSpec::new(n), containerized_app::<MukOmpi>);
+    report("muk → ompi-like host MPI", &out);
+
+    // "docker run --mpi=native-abi app"
+    let out = run_job_ok(JobSpec::new(n), containerized_app::<NativeAbi>);
+    report("native standard-ABI MPI", &out);
+
+    println!("\nall three runs computed identical results from one \"binary\" —");
+    println!("the retargeting §4.7 says an ABI standard makes possible.");
+}
+
+fn report(label: &str, out: &[(i32, f64, String)]) {
+    let expect: f64 = out.iter().map(|(r, _, _)| f64::from(*r) * 1.5).sum();
+    for (rank, sum, lib) in out {
+        assert_eq!(*sum, expect, "wrong reduction under {label}");
+        if *rank == 0 {
+            println!("[{label}]");
+            println!("   library: {lib}");
+            println!("   global sum: {sum} (expected {expect})");
+        }
+    }
+}

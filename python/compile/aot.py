@@ -1,0 +1,94 @@
+"""AOT compile path: lower the L2/L1 graphs to HLO **text** artifacts
+the Rust runtime loads via PJRT.
+
+Text, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which xla_extension 0.5.1 (the version behind the
+published ``xla`` crate) rejects (``proto.id() <= INT_MAX``). The HLO
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import reduce as kreduce
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Reduction artifact sizes (f32 elements). The Rust op engine dispatches
+# exact matches to XLA and falls back to the scalar loop otherwise.
+REDUCE_SIZES = (4096, 65536, 1048576)
+
+
+def lower_all():
+    """Yield (name, lowered, meta) for every artifact."""
+    # Elementwise reduction kernels.
+    for op in kreduce.OPS:
+        for n in REDUCE_SIZES:
+            spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+            def fn(a, b, _op=op):
+                return (kreduce.reduce_op(a, b, op=_op),)
+
+            lowered = jax.jit(fn).lower(spec, spec)
+            yield (
+                f"reduce_{op}_f32_{n}",
+                lowered,
+                {"inputs": [["f32", [n]], ["f32", [n]]], "outputs": [["f32", [n]]]},
+            )
+
+    # Training step + optimizer.
+    args = model.example_args_grad_step()
+    lowered = jax.jit(model.grad_step).lower(*args)
+    meta = {
+        "inputs": [["f32", list(a.shape)] for a in args],
+        "outputs": [["f32", []]]
+        + [["f32", list(a.shape)] for a in args[:4]],
+    }
+    yield ("grad_step", lowered, meta)
+
+    args = model.example_args_sgd_update()
+    lowered = jax.jit(model.sgd_update).lower(*args)
+    meta = {
+        "inputs": [["f32", list(getattr(a, "shape", []))] for a in args],
+        "outputs": [["f32", list(a.shape)] for a in args[:4]],
+    }
+    yield ("sgd_update", lowered, meta)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for name, lowered, meta in lower_all():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

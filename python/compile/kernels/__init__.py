@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import matmul, reduce, ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: tiled matmul for the L2 model's dense layers.
+
+MXU-shaped: 128x128 output tiles, f32 accumulation, K streamed in
+128-wide slabs so every operand tile is one native MXU operand. The
+surrounding dense layer uses ``jax.custom_vjp`` so the backward pass also
+runs through these kernels (grad through an interpret-mode pallas_call is
+otherwise fragile across jax versions).
+
+interpret=True throughout: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU systolic array edge: output tiles are TILE x TILE.
+TILE = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # K-loop is folded into the grid's last dimension: accumulate partial
+    # products into the output tile (revisited across k steps).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def matmul(x, w):
+    """``x @ w`` via 128x128x128-tiled Pallas kernel.
+
+    Shapes must be multiples of TILE in every dimension (the model pads
+    its dims to 128 multiples — the usual MXU discipline).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % TILE == 0 and k % TILE == 0 and n % TILE == 0, (m, k, n)
+    grid = (m // TILE, n // TILE, k // TILE)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def dense(x, w, b):
+    """Dense layer ``x @ w + b`` with a Pallas forward and Pallas backward."""
+    return matmul(x, w) + b[None, :]
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    # dx = g @ w^T ; dw = x^T @ g ; db = sum_rows(g) — all through the
+    # same MXU-tiled kernel.
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def mxu_utilization_estimate(m, k, n) -> float:
+    """Fraction of MXU issue slots doing useful work for an (m,k)x(k,n)
+    matmul with TILE-aligned dims: 1.0 when all dims are multiples of
+    TILE (no padding waste) — the §Perf roofline input."""
+    pad = lambda d: (d + TILE - 1) // TILE * TILE
+    useful = m * k * n
+    issued = pad(m) * pad(k) * pad(n)
+    return useful / issued
+
+
+def vmem_bytes_per_step(dtype=jnp.float32) -> int:
+    """Three resident 128x128 tiles, double-buffered."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return 3 * 2 * TILE * TILE * itemsize

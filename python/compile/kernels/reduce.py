@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: elementwise binary reduction (the MPI_Reduce /
+MPI_Allreduce combine step).
+
+The engine's reduction hot loop — ``inout[i] = op(in[i], inout[i])`` over
+packed f32/f64 buffers — is the compute hot-spot MPI implementations
+vectorize aggressively. Here it is written the TPU way:
+
+* tiles are ``(BLOCK_ROWS, 128)``: 128 lanes (the VPU/MXU lane width),
+  BLOCK_ROWS sublanes per step, so each grid step moves one VMEM-resident
+  tile per operand;
+* ``BlockSpec`` expresses the HBM→VMEM schedule; three buffers per step
+  (a, b, out) with f32 tiles of 8×128 = 4 KiB each stay far inside the
+  ~16 MiB VMEM budget and let the pipeliner double-buffer;
+* ``interpret=True`` is mandatory for the CPU PJRT runtime (real-TPU
+  lowering emits a Mosaic custom-call the CPU plugin cannot execute);
+  the real-TPU efficiency estimate lives in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU vector unit; last dim of every tile.
+LANES = 128
+# Sublanes per tile: 8 f32 sublanes = the native (8, 128) f32 tile.
+BLOCK_ROWS = 8
+
+OPS = ("sum", "prod", "min", "max")
+
+
+def _combine(op, a, b):
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    raise ValueError(f"unknown op {op}")
+
+
+def _reduce_kernel(a_ref, b_ref, o_ref, *, op):
+    # One VMEM tile per operand; elementwise combine on the VPU.
+    o_ref[...] = _combine(op, a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def reduce_op(a, b, *, op: str):
+    """``op(a, b)`` elementwise via a tiled Pallas kernel.
+
+    ``a``/``b``: rank-1 arrays whose length is a multiple of
+    ``BLOCK_ROWS * LANES``. The wrapper reshapes to (rows, LANES) tiles and
+    grids over row-blocks.
+    """
+    n = a.shape[0]
+    tile_elems = BLOCK_ROWS * LANES
+    assert n % tile_elems == 0, f"n={n} must be a multiple of {tile_elems}"
+    rows = n // LANES
+    a2 = a.reshape(rows, LANES)
+    b2 = b.reshape(rows, LANES)
+    grid = (rows // BLOCK_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(a2, b2)
+    return out.reshape(n)
+
+
+def vmem_bytes_per_step(dtype=jnp.float32) -> int:
+    """VMEM footprint estimate per grid step (3 tiles resident, x2 for
+    double buffering) — the §Perf roofline input."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return 3 * 2 * BLOCK_ROWS * LANES * itemsize

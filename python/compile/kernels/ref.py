@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract (pytest asserts allclose kernel-vs-ref before artifacts ship)."""
+
+import jax.numpy as jnp
+
+
+def reduce_ref(a, b, *, op: str):
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    raise ValueError(f"unknown op {op}")
+
+
+def matmul_ref(x, w):
+    return jnp.matmul(x, w)
+
+
+def dense_ref(x, w, b):
+    return jnp.matmul(x, w) + b[None, :]

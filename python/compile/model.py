@@ -1,0 +1,85 @@
+"""L2: the JAX compute graph the MPI system serves — a data-parallel MLP
+training step whose dense layers run through the L1 Pallas matmul kernel.
+
+Two jitted entry points are AOT-lowered by ``aot.py``:
+
+* ``grad_step(w1, b1, w2, b2, x, y) -> (loss, g_w1, g_b1, g_w2, g_b2)`` —
+  the per-rank forward+backward. Gradients then cross ranks through
+  ``MPI_Allreduce`` on the Rust side (L3), so this function must NOT
+  embed any collective.
+* ``sgd_update(w1, b1, w2, b2, g1..g4, lr) -> (w1', b1', w2', b2')`` —
+  the optimizer step applied after gradient averaging.
+
+Dims are multiples of 128 (the MXU tile edge): D=256 features, H=256
+hidden, batch 128. Regression with MSE loss on synthetic data.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import dense
+
+# Model geometry — all MXU-tile multiples.
+BATCH = 128
+D_IN = 256
+D_HID = 256
+D_OUT = 128  # output padded to a tile; loss masks to the first column
+
+
+def init_params(seed: int = 0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (D_IN, D_HID), jnp.float32) * (1.0 / jnp.sqrt(D_IN))
+    b1 = jnp.zeros((D_HID,), jnp.float32)
+    w2 = jax.random.normal(k2, (D_HID, D_OUT), jnp.float32) * (1.0 / jnp.sqrt(D_HID))
+    b2 = jnp.zeros((D_OUT,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+def synthetic_batch(seed: int):
+    """Deterministic synthetic regression data: y = f(x) for a fixed
+    random teacher; every rank derives its shard from its own seed."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1000))
+    x = jax.random.normal(k1, (BATCH, D_IN), jnp.float32)
+    teacher = jax.random.normal(k2, (D_IN,), jnp.float32)
+    y = jnp.tanh(x @ teacher)  # scalar target per row
+    return x, y
+
+
+def _forward(w1, b1, w2, b2, x):
+    h = jnp.tanh(dense(x, w1, b1))
+    out = dense(h, w2, b2)
+    return out[:, 0]  # first column is the regression head
+
+
+def _loss(w1, b1, w2, b2, x, y):
+    pred = _forward(w1, b1, w2, b2, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+@jax.jit
+def grad_step(w1, b1, w2, b2, x, y):
+    loss, grads = jax.value_and_grad(_loss, argnums=(0, 1, 2, 3))(w1, b1, w2, b2, x, y)
+    return (loss, *grads)
+
+
+@jax.jit
+def sgd_update(w1, b1, w2, b2, g1, g2, g3, g4, lr):
+    return (
+        w1 - lr * g1,
+        b1 - lr * g2,
+        w2 - lr * g3,
+        b2 - lr * g4,
+    )
+
+
+def example_args_grad_step():
+    w1, b1, w2, b2 = init_params()
+    x, y = synthetic_batch(0)
+    return (w1, b1, w2, b2, x, y)
+
+
+def example_args_sgd_update():
+    w1, b1, w2, b2 = init_params()
+    z = (jnp.zeros_like(w1), jnp.zeros_like(b1), jnp.zeros_like(w2), jnp.zeros_like(b2))
+    lr = jnp.float32(0.05)
+    return (w1, b1, w2, b2, *z, lr)

@@ -1,0 +1,106 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, swept with
+hypothesis over shapes, seeds and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as kmm
+from compile.kernels import reduce as kred
+from compile.kernels.ref import dense_ref, matmul_ref, reduce_ref
+
+TILE_ELEMS = kred.BLOCK_ROWS * kred.LANES
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    op=st.sampled_from(kred.OPS),
+    tiles=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_reduce_matches_ref(op, tiles, seed):
+    n = tiles * TILE_ELEMS
+    a = _rand(seed, (n,), jnp.float32)
+    b = _rand(seed + 1, (n,), jnp.float32)
+    got = kred.reduce_op(a, b, op=op)
+    want = reduce_ref(a, b, op=op)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    op=st.sampled_from(kred.OPS),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_reduce_f64(op, seed):
+    n = 2 * TILE_ELEMS
+    a = _rand(seed, (n,), jnp.float64)
+    b = _rand(seed + 9, (n,), jnp.float64)
+    got = kred.reduce_op(a, b, op=op)
+    np.testing.assert_allclose(got, reduce_ref(a, b, op=op), rtol=1e-12)
+
+
+def test_reduce_rejects_unaligned_length():
+    a = jnp.zeros((TILE_ELEMS + 1,), jnp.float32)
+    with pytest.raises(AssertionError):
+        kred.reduce_op(a, a, op="sum")
+
+
+def test_reduce_special_values():
+    n = TILE_ELEMS
+    a = jnp.full((n,), jnp.inf, jnp.float32).at[0].set(-0.0)
+    b = jnp.zeros((n,), jnp.float32).at[0].set(0.0)
+    np.testing.assert_allclose(
+        kred.reduce_op(a, b, op="min"), reduce_ref(a, b, op="min")
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([128, 256]),
+    k=st.sampled_from([128, 256, 384]),
+    n=st.sampled_from([128, 256]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 3, (k, n), jnp.float32)
+    np.testing.assert_allclose(kmm.matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_identity():
+    x = _rand(5, (128, 128), jnp.float32)
+    eye = jnp.eye(128, dtype=jnp.float32)
+    np.testing.assert_allclose(kmm.matmul(x, eye), x, rtol=1e-6)
+
+
+def test_dense_forward_and_grads_match_ref():
+    x = _rand(11, (128, 256), jnp.float32)
+    w = _rand(12, (256, 128), jnp.float32)
+    b = _rand(13, (128,), jnp.float32)
+    np.testing.assert_allclose(kmm.dense(x, w, b), dense_ref(x, w, b), rtol=1e-4, atol=1e-3)
+
+    def f_pallas(w):
+        return jnp.sum(kmm.dense(x, w, b) ** 2)
+
+    def f_ref(w):
+        return jnp.sum(dense_ref(x, w, b) ** 2)
+
+    g_pallas = jax.grad(f_pallas)(w)
+    g_ref = jax.grad(f_ref)(w)
+    np.testing.assert_allclose(g_pallas, g_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_vmem_estimates_fit_budget():
+    # Structural perf check (interpret mode gives no TPU timing): resident
+    # VMEM per grid step must sit far inside a ~16 MiB budget.
+    assert kred.vmem_bytes_per_step() < 1 << 20
+    assert kmm.vmem_bytes_per_step() < 1 << 20
+    assert kmm.mxu_utilization_estimate(256, 256, 128) == 1.0
+    assert kmm.mxu_utilization_estimate(100, 256, 128) < 1.0

@@ -1,0 +1,45 @@
+"""L2 model: shapes, determinism, and that DDP-style training converges."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def test_shapes():
+    out = model.grad_step(*model.example_args_grad_step())
+    assert out[0].shape == ()
+    assert out[1].shape == (model.D_IN, model.D_HID)
+    assert out[2].shape == (model.D_HID,)
+    assert out[3].shape == (model.D_HID, model.D_OUT)
+    assert out[4].shape == (model.D_OUT,)
+
+
+def test_grad_step_deterministic():
+    a = model.grad_step(*model.example_args_grad_step())
+    b = model.grad_step(*model.example_args_grad_step())
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_sgd_update_moves_against_gradient():
+    w1, b1, w2, b2 = model.init_params()
+    g = (jnp.ones_like(w1), jnp.ones_like(b1), jnp.ones_like(w2), jnp.ones_like(b2))
+    nw1, nb1, nw2, nb2 = model.sgd_update(w1, b1, w2, b2, *g, jnp.float32(0.1))
+    np.testing.assert_allclose(nw1, w1 - 0.1, rtol=1e-6)
+    np.testing.assert_allclose(nb2, b2 - 0.1, rtol=1e-6)
+
+
+def test_training_reduces_loss():
+    params = model.init_params(0)
+    lr = jnp.float32(0.05)
+    first = None
+    last = None
+    for step in range(15):
+        x, y = model.synthetic_batch(step)
+        loss, *grads = model.grad_step(*params, x, y)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+        params = model.sgd_update(*params, *grads, lr)
+    assert last < first * 0.8, f"loss did not decrease: {first} -> {last}"

@@ -1,0 +1,144 @@
+//! E5 — the §6.2 worst case: a nonblocking `MPI_Ialltoallw` (whose
+//! converted datatype vectors Mukautuva parks in its request map),
+//! followed by many point-to-point requests completed via `MPI_Testall`
+//! — so *every* Testall poll pays a map lookup per request.
+//!
+//! Measured: time per Testall poll with the alltoallw request pending,
+//! muk vs native; plus the request-map insert/lookup primitives.
+
+use mpi_abi::api::{Dt, MpiAbi};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::bench::{bench, bench_external, Table};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+const PT2PT_REQS: usize = 64;
+const POLLS: usize = 2000;
+
+struct WorstCase;
+
+impl AbiApp<f64> for WorstCase {
+    /// Seconds per Testall poll over PT2PT_REQS+1 requests while an
+    /// ialltoallw request (with map state) is pending.
+    fn run<A: MpiAbi>(self) -> f64 {
+        let out = run_job_ok(JobSpec::new(2), |rank| {
+            A::init();
+            let dt = A::datatype(Dt::Int);
+            let world = A::comm_world();
+            let n = 2usize;
+            let mut elapsed = 0.0;
+            if rank == 0 {
+                // The ialltoallw whose state lands in the request map.
+                let send: Vec<i32> = vec![1; n];
+                let mut recv = vec![0i32; n];
+                let counts = vec![1i32; n];
+                let displs: Vec<i32> = (0..n as i32).map(|d| d * 4).collect();
+                let types = vec![dt; n];
+                let mut wreq = A::request_null();
+                A::ialltoallw(
+                    send.as_ptr() as *const u8,
+                    &counts,
+                    &displs,
+                    &types,
+                    recv.as_mut_ptr() as *mut u8,
+                    &counts,
+                    &displs,
+                    &types,
+                    world,
+                    &mut wreq,
+                );
+                // A pile of pt2pt receives that will never complete during
+                // the timed window (peer sends only afterwards).
+                let mut bufs = vec![[0i32]; PT2PT_REQS];
+                let mut reqs = vec![A::request_null(); PT2PT_REQS + 1];
+                reqs[0] = wreq;
+                for (i, b) in bufs.iter_mut().enumerate() {
+                    A::irecv(b.as_mut_ptr() as *mut u8, 1, dt, 1, 500 + i as i32, world,
+                        &mut reqs[i + 1]);
+                }
+                // Timed: Testall polls (all incomplete until peer sends).
+                let t0 = A::wtime();
+                let mut flag = false;
+                let mut sts = vec![A::status_empty(); PT2PT_REQS + 1];
+                for _ in 0..POLLS {
+                    A::testall(&mut reqs, &mut flag, &mut sts);
+                }
+                elapsed = (A::wtime() - t0) / POLLS as f64;
+                // Release the peer and drain everything.
+                let go = [1i32];
+                A::send(go.as_ptr() as *const u8, 1, dt, 1, 999, world);
+                A::waitall(&mut reqs, &mut sts);
+            } else {
+                // Peer: participate in the alltoallw, then wait for the
+                // release signal before completing the pt2pt pile.
+                let send: Vec<i32> = vec![2; n];
+                let mut recv = vec![0i32; n];
+                let counts = vec![1i32; n];
+                let displs: Vec<i32> = (0..n as i32).map(|d| d * 4).collect();
+                let types = vec![dt; n];
+                let mut wreq = A::request_null();
+                A::ialltoallw(
+                    send.as_ptr() as *const u8,
+                    &counts,
+                    &displs,
+                    &types,
+                    recv.as_mut_ptr() as *mut u8,
+                    &counts,
+                    &displs,
+                    &types,
+                    world,
+                    &mut wreq,
+                );
+                let mut st = A::status_empty();
+                A::wait(&mut wreq, &mut st);
+                let mut go = [0i32];
+                A::recv(go.as_mut_ptr() as *mut u8, 1, dt, 0, 999, world, &mut st);
+                for i in 0..PT2PT_REQS {
+                    let v = [i as i32];
+                    A::send(v.as_ptr() as *const u8, 1, dt, 0, 500 + i as i32, world);
+                }
+            }
+            A::finalize();
+            elapsed
+        });
+        out[0]
+    }
+}
+
+fn main() {
+    std::env::set_var("MPI_ABI_NO_XLA", "1");
+    println!(
+        "\nE5 — §6.2 worst case: Testall over {} requests with pending ialltoallw map state",
+        PT2PT_REQS + 1
+    );
+    let mut table = Table::new("Testall poll cost", &["ABI", "ns/poll", "ns/req"]);
+    for abi in [AbiConfig::Mpich, AbiConfig::NativeAbi, AbiConfig::MukMpich, AbiConfig::MukOmpi] {
+        let s = bench_external(&format!("testall/{}", abi.name()), 3, || {
+            with_abi(abi, WorstCase)
+        });
+        println!("{}", s.report());
+        table.row(&[
+            abi.name().to_string(),
+            format!("{:.0}", s.median * 1e9),
+            format!("{:.1}", s.median * 1e9 / (PT2PT_REQS + 1) as f64),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // The map primitives themselves.
+    let mut sink = false;
+    let s = bench("reqmap/contains (miss)", 2, 10, 200_000, || {
+        sink ^= mpi_abi::muk::state::reqmap_contains(std::hint::black_box(0xABCD));
+    });
+    println!("{}", s.report());
+    mpi_abi::muk::state::reqmap_insert(
+        0x9999,
+        mpi_abi::muk::state::WState { sendtypes: vec![1, 2], recvtypes: vec![3, 4] },
+    );
+    let s = bench("reqmap/contains (hit)", 2, 10, 200_000, || {
+        sink ^= mpi_abi::muk::state::reqmap_contains(std::hint::black_box(0x9999));
+    });
+    println!("{}", s.report());
+    mpi_abi::muk::state::reqmap_remove(0x9999);
+    std::hint::black_box(sink);
+    println!("\nshape: muk pays a per-request map lookup on every Testall — visible but bounded, and \"not currently optimized, due to the low probability of such a scenario\" (paper §6.2).");
+}

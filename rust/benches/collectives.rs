@@ -1,0 +1,128 @@
+//! Collective-path ablations: allreduce cost across ABI configs and the
+//! XLA (compiled Pallas kernel) vs scalar reduce-combine ablation — the
+//! DESIGN.md §5 threshold study for the L1 offload.
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::bench::{bench, bench_external, Table};
+use mpi_abi::core::datatype::ScalarKind;
+use mpi_abi::core::op::{apply_builtin, BuiltinOp};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+struct Allreduce {
+    count: usize,
+    iters: usize,
+}
+
+impl AbiApp<f64> for Allreduce {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let out = run_job_ok(JobSpec::new(2), |_| {
+            A::init();
+            let dt = A::datatype(Dt::Float);
+            let op = A::op(OpName::Sum);
+            let send = vec![1.0f32; self.count];
+            let mut recv = vec![0.0f32; self.count];
+            // Warmup (also compiles the XLA executable if enabled).
+            for _ in 0..3 {
+                A::allreduce(send.as_ptr() as *const u8, recv.as_mut_ptr() as *mut u8,
+                    self.count as i32, dt, op, A::comm_world());
+            }
+            let t0 = A::wtime();
+            for _ in 0..self.iters {
+                A::allreduce(send.as_ptr() as *const u8, recv.as_mut_ptr() as *mut u8,
+                    self.count as i32, dt, op, A::comm_world());
+            }
+            let e = (A::wtime() - t0) / self.iters as f64;
+            A::finalize();
+            e
+        });
+        out[0]
+    }
+}
+
+fn main() {
+    println!("\nCollective ablations (2 ranks, f32 SUM allreduce)");
+
+    // (a) Allreduce across ABI configs at a small and a large count.
+    std::env::set_var("MPI_ABI_NO_XLA", "1");
+    let mut table = Table::new(
+        "allreduce µs/op (scalar combine)",
+        &["ABI", "count=1024", "count=65536"],
+    );
+    for abi in [AbiConfig::Mpich, AbiConfig::NativeAbi, AbiConfig::MukMpich] {
+        let small = with_abi(abi, Allreduce { count: 1024, iters: 200 });
+        let large = with_abi(abi, Allreduce { count: 65536, iters: 30 });
+        table.row(&[
+            abi.name().to_string(),
+            format!("{:.1}", small * 1e6),
+            format!("{:.1}", large * 1e6),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // (b) XLA offload ablation on the raw combine step (no job needed).
+    println!("reduce-combine kernel: scalar loop vs compiled Pallas (XLA)");
+    for n in [4096usize, 65536, 1_048_576] {
+        let a = vec![1.0f32; n];
+        let mut b = vec![2.0f32; n];
+        let abytes = unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, 4 * n) };
+
+        std::env::set_var("MPI_ABI_NO_XLA", "1");
+        mpi_abi::runtime::reset_thread_runtime();
+        let s = bench(&format!("combine/scalar n={n}"), 3, 10, (1 << 22) / n, || {
+            let bb = unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut u8, 4 * n) };
+            apply_builtin(BuiltinOp::Sum, ScalarKind::F32, abytes, bb, n).unwrap();
+        });
+        println!("{}", s.report());
+        let scalar = s.median;
+
+        std::env::set_var("MPI_ABI_NO_XLA", "0");
+        std::env::set_var("MPI_ABI_XLA_REDUCE", "1");
+        mpi_abi::runtime::reset_thread_runtime();
+        let used = {
+            let bb = unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut u8, 4 * n) };
+            mpi_abi::runtime::try_xla_reduce(BuiltinOp::Sum, ScalarKind::F32, abytes, bb, n)
+        };
+        if used {
+            let s = bench(&format!("combine/xla    n={n}"), 3, 10, ((1 << 22) / n).max(2), || {
+                let bb =
+                    unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut u8, 4 * n) };
+                mpi_abi::runtime::try_xla_reduce(BuiltinOp::Sum, ScalarKind::F32, abytes, bb, n);
+            });
+            println!("{}", s.report());
+            println!(
+                "  xla/scalar ratio at n={n}: {:.2}x {}",
+                s.median / scalar,
+                if s.median < scalar { "(offload wins)" } else { "(scalar wins — threshold above this)" }
+            );
+        } else {
+            println!("  (no artifacts for n={n}; run `make artifacts`)");
+        }
+    }
+
+    // (c) DDP step time (the end-to-end compute+comm composition).
+    std::env::set_var("MPI_ABI_NO_XLA", "0");
+    if mpi_abi::runtime::artifacts_dir().is_some() {
+        struct Ddp;
+        impl AbiApp<f64> for Ddp {
+            fn run<A: MpiAbi>(self) -> f64 {
+                let out = run_job_ok(JobSpec::new(2), |_| {
+                    A::init();
+                    let t0 = A::wtime();
+                    let steps = 5;
+                    mpi_abi::apps::ddp::train::<A>(mpi_abi::apps::ddp::DdpParams {
+                        steps,
+                        lr: 0.05,
+                        log_every: 0,
+                    });
+                    let e = (A::wtime() - t0) / steps as f64;
+                    A::finalize();
+                    e
+                });
+                out[0]
+            }
+        }
+        let s = bench_external("ddp/step (abi, 2 ranks)", 1, || with_abi(AbiConfig::NativeAbi, Ddp));
+        println!("{}", s.report());
+    }
+}

@@ -1,0 +1,61 @@
+//! E3 — `osu_latency` analogue: one-way latency across message sizes and
+//! both transports. Grounds §6.1's claim that any per-call ABI cost is
+//! negligible against "at least 500 nanoseconds" of network cost: our
+//! fabric's small-message latency sets the yardstick the translation
+//! overheads (E1/E6) are compared against.
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::apps::osu::{latency, LatencyParams};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::bench::Table;
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+struct Ping {
+    transport: TransportKind,
+    size: usize,
+}
+
+impl AbiApp<f64> for Ping {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let mut best = f64::MAX;
+        for _ in 0..3 {
+            let out = run_job_ok(JobSpec::new(2).with_transport(self.transport), |_| {
+                A::init();
+                let r = latency::<A>(LatencyParams { msg_size: self.size, ..Default::default() });
+                A::finalize();
+                r
+            });
+            best = best.min(out[0]);
+        }
+        best
+    }
+}
+
+fn main() {
+    std::env::set_var("MPI_ABI_NO_XLA", "1");
+    println!("\nE3 — osu_latency analogue (one-way, 2 ranks)");
+    let sizes = [8usize, 64, 512, 4096, 65536];
+    let mut table =
+        Table::new("One-way latency (ns)", &["bytes", "spsc native", "spsc muk", "mutex native"]);
+    let mut base8 = 0.0;
+    for size in sizes {
+        let spsc = with_abi(AbiConfig::Mpich, Ping { transport: TransportKind::Spsc, size });
+        let muk = with_abi(AbiConfig::MukMpich, Ping { transport: TransportKind::Spsc, size });
+        let mutex = with_abi(AbiConfig::Mpich, Ping { transport: TransportKind::Mutex, size });
+        if size == 8 {
+            base8 = spsc;
+        }
+        table.row(&[
+            size.to_string(),
+            format!("{:.0}", spsc * 1e9),
+            format!("{:.0}", muk * 1e9),
+            format!("{:.0}", mutex * 1e9),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "shape: small-message fabric latency {:.0} ns — the \"network cost\" that dwarfs the ~ns ABI costs of E1/E6",
+        base8 * 1e9
+    );
+}

@@ -1,0 +1,90 @@
+//! E1 (§6.1): `MPI_Type_size` throughput across ABI mechanisms.
+//!
+//! The paper measures ≈11.5 ns/query for both MPICH (size encoded in the
+//! handle bits) and Open MPI (descriptor dereference) on an EPYC 7413,
+//! and concludes the mechanism difference is negligible — and both are
+//! negligible against the ≥500 ns cost of any actual message. This bench
+//! reproduces the comparison across all five configurations plus the raw
+//! decode primitives.
+
+use mpi_abi::api::{Dt, MpiAbi};
+use mpi_abi::apps::AbiConfig;
+use mpi_abi::bench::{bench, Table};
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+
+const ITERS: usize = 200_000;
+
+fn measure<A: MpiAbi>() -> f64 {
+    let dts = [
+        A::datatype(Dt::Char),
+        A::datatype(Dt::Int),
+        A::datatype(Dt::Float),
+        A::datatype(Dt::Double),
+        A::datatype(Dt::Int64),
+        A::datatype(Dt::Int32),
+    ];
+    let mut sink = 0i64;
+    let s = bench(&format!("type_size/{}", A::NAME), 2, 10, ITERS, || {
+        for &d in &dts {
+            let mut out = 0;
+            A::type_size(std::hint::black_box(d), &mut out);
+            sink = sink.wrapping_add(out as i64);
+        }
+    });
+    std::hint::black_box(sink);
+    println!("{}", s.report());
+    s.mean / dts.len() as f64
+}
+
+fn main() {
+    println!("\nE1 — MPI_Type_size throughput (paper §6.1: ≈11.5 ns both ABIs)");
+    let mut table = Table::new(
+        "MPI_Type_size mechanisms",
+        &["ABI", "mechanism", "ns/query"],
+    );
+    let rows: Vec<(AbiConfig, &str, f64)> = vec![
+        (AbiConfig::Mpich, "handle-bit decode (0x..ff00>>8)", measure::<MpichAbi>()),
+        (AbiConfig::Ompi, "descriptor load (352-B struct)", measure::<OmpiAbi>()),
+        (AbiConfig::NativeAbi, "Huffman bits + compact table", measure::<NativeAbi>()),
+        (AbiConfig::MukMpich, "dlsym vtable + convert + decode", measure::<MukMpich>()),
+        (AbiConfig::MukOmpi, "dlsym vtable + convert + load", measure::<MukOmpi>()),
+    ];
+    for (abi, mech, t) in &rows {
+        table.row(&[
+            abi.name().to_string(),
+            mech.to_string(),
+            format!("{:.2}", t * 1e9),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Raw decode primitives (no call overhead), for the §Perf log.
+    let mut sink = 0usize;
+    let s = bench("raw/huffman_fixed_size_of", 2, 10, ITERS, || {
+        sink ^= mpi_abi::abi::huffman::fixed_size_of(std::hint::black_box(
+            mpi_abi::abi::datatypes::MPI_INT32_T,
+        ))
+        .unwrap_or(0);
+    });
+    println!("{}", s.report());
+    let s = bench("raw/mpich_basic_size_macro", 2, 10, ITERS, || {
+        sink ^= mpi_abi::impls::mpich::datatype_get_basic_size(std::hint::black_box(
+            mpi_abi::impls::mpich::dt_handle(4, 9),
+        )) as usize;
+    });
+    println!("{}", s.report());
+    std::hint::black_box(sink);
+
+    // Shape check (paper: both mechanisms within noise of each other,
+    // and far below the 500 ns message cost).
+    let native = [rows[0].2, rows[1].2, rows[2].2];
+    let max = native.iter().cloned().fold(0.0, f64::max);
+    let min = native.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "shape: native mechanisms within {:.1}x of each other (paper: ~1x); all ≤ 500ns msg cost: {}",
+        max / min,
+        max * 1e9 < 500.0
+    );
+}

@@ -1,0 +1,254 @@
+//! Integer constants of the standard ABI (§5.4).
+//!
+//! Design rules from the paper, enforced by tests:
+//!
+//! * Special-value integer constants are **unique negative numbers**, so an
+//!   implementation can tell a user *by name* which constant they passed in
+//!   the wrong slot (e.g. `MPI_ANY_TAG` as a rank).
+//! * No constant exceeds 32767 (`INT_MAX` floor guaranteed by C).
+//! * XOR-combinable mode constants are distinct **powers of two**.
+//! * String-length constants are usable as array sizes; the largest known
+//!   implementation values were chosen (8192 for the library version
+//!   string, as MPICH uses).
+//! * Predefined attribute callbacks: `0x0` for the NULL_COPY/DELETE
+//!   functions, `0xD` for DUP functions.
+
+use crate::abi::types::Aint;
+
+// --- Unique negative special values ----------------------------------------
+
+pub const MPI_ANY_SOURCE: i32 = -101;
+pub const MPI_ANY_TAG: i32 = -102;
+pub const MPI_PROC_NULL: i32 = -103;
+pub const MPI_ROOT: i32 = -104;
+pub const MPI_UNDEFINED: i32 = -105;
+pub const MPI_KEYVAL_INVALID: i32 = -106;
+pub const MPI_ERR_IN_STATUS_VAL: i32 = -107;
+
+/// All named special integer constants (for error reporting by name).
+pub const SPECIAL_INTS: &[(&str, i32)] = &[
+    ("MPI_ANY_SOURCE", MPI_ANY_SOURCE),
+    ("MPI_ANY_TAG", MPI_ANY_TAG),
+    ("MPI_PROC_NULL", MPI_PROC_NULL),
+    ("MPI_ROOT", MPI_ROOT),
+    ("MPI_UNDEFINED", MPI_UNDEFINED),
+    ("MPI_KEYVAL_INVALID", MPI_KEYVAL_INVALID),
+];
+
+/// Look up a special constant by value — the §5.4 diagnosability property.
+pub fn special_int_name(v: i32) -> Option<&'static str> {
+    SPECIAL_INTS.iter().find(|&&(_, x)| x == v).map(|&(n, _)| n)
+}
+
+// --- Buffer address constants ----------------------------------------------
+
+/// `MPI_BOTTOM`: must be distinguishable from any user buffer. The zero
+/// address qualifies (and matches existing practice).
+pub const MPI_BOTTOM: usize = 0;
+/// `MPI_IN_PLACE`: a special address that can never be a user buffer; we
+/// use 1 (an unaligned, unmapped address on all relevant platforms).
+pub const MPI_IN_PLACE: usize = 1;
+/// `MPI_STATUS_IGNORE` / `MPI_STATUSES_IGNORE` as special pointers.
+pub const MPI_STATUS_IGNORE: usize = 2;
+pub const MPI_STATUSES_IGNORE: usize = 3;
+
+// --- String lengths (usable as array dimensions) -----------------------------
+
+pub const MPI_MAX_PROCESSOR_NAME: usize = 256;
+pub const MPI_MAX_ERROR_STRING: usize = 512;
+pub const MPI_MAX_OBJECT_NAME: usize = 128;
+pub const MPI_MAX_LIBRARY_VERSION_STRING: usize = 8192;
+pub const MPI_MAX_INFO_KEY: usize = 256;
+pub const MPI_MAX_INFO_VAL: usize = 1024;
+pub const MPI_MAX_PORT_NAME: usize = 1024;
+pub const MPI_MAX_DATAREP_STRING: usize = 128;
+
+// --- XOR-combinable assertion/mode constants (powers of two) -----------------
+
+pub const MPI_MODE_NOCHECK: i32 = 1024;
+pub const MPI_MODE_NOSTORE: i32 = 2048;
+pub const MPI_MODE_NOPUT: i32 = 4096;
+pub const MPI_MODE_NOPRECEDE: i32 = 8192;
+pub const MPI_MODE_NOSUCCEED: i32 = 16384;
+
+pub const XOR_MODES: &[(&str, i32)] = &[
+    ("MPI_MODE_NOCHECK", MPI_MODE_NOCHECK),
+    ("MPI_MODE_NOSTORE", MPI_MODE_NOSTORE),
+    ("MPI_MODE_NOPUT", MPI_MODE_NOPUT),
+    ("MPI_MODE_NOPRECEDE", MPI_MODE_NOPRECEDE),
+    ("MPI_MODE_NOSUCCEED", MPI_MODE_NOSUCCEED),
+];
+
+// --- Thread levels (ordered comparison required by MPI) ----------------------
+
+pub const MPI_THREAD_SINGLE: i32 = 0;
+pub const MPI_THREAD_FUNNELED: i32 = 1;
+pub const MPI_THREAD_SERIALIZED: i32 = 2;
+pub const MPI_THREAD_MULTIPLE: i32 = 3;
+
+// --- Comparison results ------------------------------------------------------
+
+pub const MPI_IDENT: i32 = 0;
+pub const MPI_CONGRUENT: i32 = 1;
+pub const MPI_SIMILAR: i32 = 2;
+pub const MPI_UNEQUAL: i32 = 3;
+
+// --- Type combiners (MPI_Type_get_envelope) ----------------------------------
+
+pub const MPI_COMBINER_NAMED: i32 = 1;
+pub const MPI_COMBINER_DUP: i32 = 2;
+pub const MPI_COMBINER_CONTIGUOUS: i32 = 3;
+pub const MPI_COMBINER_VECTOR: i32 = 4;
+pub const MPI_COMBINER_HVECTOR: i32 = 5;
+pub const MPI_COMBINER_INDEXED: i32 = 6;
+pub const MPI_COMBINER_HINDEXED: i32 = 7;
+pub const MPI_COMBINER_INDEXED_BLOCK: i32 = 8;
+pub const MPI_COMBINER_HINDEXED_BLOCK: i32 = 9;
+pub const MPI_COMBINER_STRUCT: i32 = 10;
+pub const MPI_COMBINER_SUBARRAY: i32 = 11;
+pub const MPI_COMBINER_DARRAY: i32 = 12;
+pub const MPI_COMBINER_RESIZED: i32 = 13;
+
+// --- Predefined attribute callbacks (§5.4) -----------------------------------
+
+/// `MPI_COMM_NULL_COPY_FN`, `MPI_TYPE_NULL_COPY_FN`, … = `0x0`.
+pub const MPI_NULL_COPY_FN: usize = 0x0;
+/// `MPI_COMM_NULL_DELETE_FN`, … = `0x0`.
+pub const MPI_NULL_DELETE_FN: usize = 0x0;
+/// `MPI_COMM_DUP_FN`, `MPI_TYPE_DUP_FN`, … = `0xD`.
+pub const MPI_DUP_FN: usize = 0xD;
+
+// --- Predefined attribute keys -----------------------------------------------
+
+pub const MPI_TAG_UB: i32 = -201;
+pub const MPI_HOST: i32 = -202;
+pub const MPI_IO: i32 = -203;
+pub const MPI_WTIME_IS_GLOBAL: i32 = -204;
+pub const MPI_UNIVERSE_SIZE: i32 = -205;
+pub const MPI_LASTUSEDCODE: i32 = -206;
+pub const MPI_APPNUM: i32 = -207;
+
+/// The value our implementations report for the `MPI_TAG_UB` attribute.
+pub const TAG_UB_VALUE: Aint = 0x00FF_FFFF;
+
+/// Version reported by `MPI_Get_version` for this ABI.
+pub const MPI_VERSION: i32 = 4;
+pub const MPI_SUBVERSION: i32 = 1;
+/// The ABI's own version (would be `MPI_Abi_get_version` in the proposal).
+pub const MPI_ABI_VERSION: i32 = 1;
+pub const MPI_ABI_SUBVERSION: i32 = 0;
+
+// --- Whole-ABI inventory helpers ----------------------------------------------
+
+/// Every predefined handle constant in the ABI (ops + handles + datatypes),
+/// used by inventory tests and the `abi_inspector` example.
+pub fn all_predefined_handles() -> Vec<(&'static str, usize)> {
+    let mut v = Vec::new();
+    v.extend_from_slice(crate::abi::ops::PREDEFINED_OPS);
+    v.extend_from_slice(crate::abi::handles::PREDEFINED_HANDLES);
+    v.extend_from_slice(crate::abi::datatypes::PREDEFINED_DATATYPES);
+    v
+}
+
+/// Resolve any predefined handle value to its MPI name.
+pub fn handle_name(value: usize) -> Option<&'static str> {
+    all_predefined_handles()
+        .into_iter()
+        .find(|&(_, v)| v == value)
+        .map(|(n, _)| n)
+}
+
+/// Resolve an op constant to its name (fast path for A.1 values only).
+pub fn op_name(value: usize) -> Option<&'static str> {
+    crate::abi::ops::PREDEFINED_OPS
+        .iter()
+        .find(|&&(_, v)| v == value)
+        .map(|&(n, _)| n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_ints_unique_and_negative() {
+        let mut seen = std::collections::HashSet::new();
+        for &(name, v) in SPECIAL_INTS {
+            assert!(v < 0, "{name} must be negative");
+            assert!(seen.insert(v), "{name} duplicates another constant");
+        }
+    }
+
+    #[test]
+    fn special_int_lookup_by_value() {
+        // The paper's diagnosability example: user passes MPI_ANY_TAG as a
+        // rank — the implementation can name the mistake.
+        assert_eq!(special_int_name(MPI_ANY_TAG), Some("MPI_ANY_TAG"));
+        assert_eq!(special_int_name(MPI_ANY_SOURCE), Some("MPI_ANY_SOURCE"));
+        assert_eq!(special_int_name(-1), None);
+    }
+
+    #[test]
+    fn constants_fit_portable_int() {
+        // §5.4: integer constants may not exceed 32767.
+        for &(_, v) in XOR_MODES {
+            assert!(v <= 32767);
+        }
+        assert!(MPI_MAX_LIBRARY_VERSION_STRING <= 32767);
+    }
+
+    #[test]
+    fn modes_are_distinct_powers_of_two() {
+        let mut acc = 0i32;
+        for &(name, v) in XOR_MODES {
+            assert_eq!(v & (v - 1), 0, "{name} not a power of two");
+            assert_eq!(acc & v, 0, "{name} overlaps another mode");
+            acc |= v;
+        }
+        // XOR composition roundtrips.
+        let combined = MPI_MODE_NOCHECK ^ MPI_MODE_NOPUT;
+        assert_ne!(combined & MPI_MODE_NOCHECK, 0);
+        assert_eq!(combined & MPI_MODE_NOSTORE, 0);
+    }
+
+    #[test]
+    fn buffer_constants_are_not_plausible_buffers() {
+        // Must be distinguishable from user buffers: all in the zero page.
+        for v in [MPI_BOTTOM, MPI_IN_PLACE, MPI_STATUS_IGNORE, MPI_STATUSES_IGNORE] {
+            assert!(v < 4096);
+        }
+        // And mutually distinct.
+        let s: std::collections::HashSet<_> =
+            [MPI_BOTTOM, MPI_IN_PLACE, MPI_STATUS_IGNORE, MPI_STATUSES_IGNORE].into();
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn dup_fn_is_0xd() {
+        assert_eq!(MPI_DUP_FN, 0xD);
+        assert_eq!(MPI_NULL_COPY_FN, 0x0);
+    }
+
+    #[test]
+    fn thread_levels_ordered() {
+        assert!(MPI_THREAD_SINGLE < MPI_THREAD_FUNNELED);
+        assert!(MPI_THREAD_FUNNELED < MPI_THREAD_SERIALIZED);
+        assert!(MPI_THREAD_SERIALIZED < MPI_THREAD_MULTIPLE);
+    }
+
+    #[test]
+    fn attr_keys_unique_vs_special_ints() {
+        let keys = [MPI_TAG_UB, MPI_HOST, MPI_IO, MPI_WTIME_IS_GLOBAL, MPI_UNIVERSE_SIZE];
+        for k in keys {
+            assert!(special_int_name(k).is_none(), "attr key {k} collides");
+        }
+    }
+
+    #[test]
+    fn string_lengths_match_largest_known() {
+        // §5.4: the largest known implementation values were chosen; MPICH's
+        // 8192-byte library version string is called out explicitly.
+        assert_eq!(MPI_MAX_LIBRARY_VERSION_STRING, 8192);
+        assert!(MPI_MAX_ERROR_STRING >= 256);
+    }
+}

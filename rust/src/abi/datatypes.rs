@@ -1,0 +1,266 @@
+//! Predefined datatype handle constants (Appendix A.3) and the platform
+//! size table.
+//!
+//! Datatypes own half the Huffman code space (`0b10…`/`0b11…`). Two
+//! encoding classes exist:
+//!
+//! * **variable-size** (`0b1000xxxxxx`): C types whose width is a platform
+//!   property (`int`, `long`, `float` …) plus the MPI integer types. Their
+//!   size is *not* in the bits — encoding it would make the constant value
+//!   a function of the platform ABI (§5.4).
+//! * **fixed-size** (`0b1001_SSS_XXX`): width-`2^SSS` types; the size is
+//!   readable with mask+shift ([`crate::abi::huffman::fixed_size_of`]).
+//!
+//! Values beyond the appendix excerpt (e.g. `MPI_DOUBLE`, Fortran types,
+//! pair types for MINLOC/MAXLOC) are allocated in this module from the
+//! reserved ranges, following the same grouping logic; they are marked
+//! `// extension` below and are *our* allocation, not paper text.
+
+pub const MPI_DATATYPE_NULL: usize = 0b1000000000;
+
+// --- Variable-size types (0b1000xxxxxx) ------------------------------------
+
+pub const MPI_AINT: usize = 0b1000000001;
+pub const MPI_COUNT: usize = 0b1000000010;
+pub const MPI_OFFSET: usize = 0b1000000011;
+pub const MPI_PACKED: usize = 0b1000000111;
+
+pub const MPI_SHORT: usize = 0b1000001000;
+pub const MPI_INT: usize = 0b1000001001;
+pub const MPI_LONG: usize = 0b1000001010;
+pub const MPI_LONG_LONG: usize = 0b1000001011;
+/// Alias required by the standard.
+pub const MPI_LONG_LONG_INT: usize = MPI_LONG_LONG;
+pub const MPI_UNSIGNED_SHORT: usize = 0b1000001100;
+pub const MPI_UNSIGNED: usize = 0b1000001101;
+pub const MPI_UNSIGNED_LONG: usize = 0b1000001110;
+pub const MPI_UNSIGNED_LONG_LONG: usize = 0b1000001111;
+pub const MPI_FLOAT: usize = 0b1000010000;
+pub const MPI_DOUBLE: usize = 0b1000010001; // extension
+pub const MPI_LONG_DOUBLE: usize = 0b1000010010; // extension
+pub const MPI_C_BOOL: usize = 0b1000010011; // extension
+pub const MPI_WCHAR: usize = 0b1000010100; // extension
+pub const MPI_C_COMPLEX: usize = 0b1000010101; // extension
+pub const MPI_C_DOUBLE_COMPLEX: usize = 0b1000010110; // extension
+pub const MPI_C_LONG_DOUBLE_COMPLEX: usize = 0b1000010111; // extension
+
+// Fortran variable-size types (sizes track the Fortran compiler). extension
+pub const MPI_INTEGER: usize = 0b1000011000;
+pub const MPI_REAL: usize = 0b1000011001;
+pub const MPI_DOUBLE_PRECISION: usize = 0b1000011010;
+pub const MPI_COMPLEX: usize = 0b1000011011;
+pub const MPI_DOUBLE_COMPLEX: usize = 0b1000011100;
+pub const MPI_LOGICAL: usize = 0b1000011101;
+pub const MPI_CHARACTER: usize = 0b1000011110;
+
+// Pair types for MINLOC/MAXLOC (typemaps, not single scalars). extension
+pub const MPI_FLOAT_INT: usize = 0b1000100000;
+pub const MPI_DOUBLE_INT: usize = 0b1000100001;
+pub const MPI_LONG_INT: usize = 0b1000100010;
+pub const MPI_2INT: usize = 0b1000100011;
+pub const MPI_SHORT_INT: usize = 0b1000100100;
+pub const MPI_LONG_DOUBLE_INT: usize = 0b1000100101;
+pub const MPI_2REAL: usize = 0b1000100110;
+pub const MPI_2DOUBLE_PRECISION: usize = 0b1000100111;
+pub const MPI_2INTEGER: usize = 0b1000101000;
+
+// --- Fixed-size types (0b1001_SSS_XXX, size = 2^SSS) ------------------------
+
+// size 1 (SSS=000)
+pub const MPI_INT8_T: usize = 0b1001000000;
+pub const MPI_UINT8_T: usize = 0b1001000001;
+// 0b1001000010 is reserved for a future 8-bit float in A.3.
+pub const MPI_CHAR: usize = 0b1001000011;
+pub const MPI_SIGNED_CHAR: usize = 0b1001000100;
+pub const MPI_UNSIGNED_CHAR: usize = 0b1001000101;
+pub const MPI_BYTE: usize = 0b1001000111;
+
+// size 2 (SSS=001)
+pub const MPI_INT16_T: usize = 0b1001001000;
+pub const MPI_UINT16_T: usize = 0b1001001001;
+/// `<float 16b>` in A.3 — a future half-precision type; named here because
+/// our compute path (bf16/f16 tiles) exercises it. extension (name only)
+pub const MPI_FLOAT16_T: usize = 0b1001001010;
+
+// size 4 (SSS=010)
+pub const MPI_INT32_T: usize = 0b1001010000;
+pub const MPI_UINT32_T: usize = 0b1001010001;
+/// `<C float 32b>` in A.3. extension (name only)
+pub const MPI_FLOAT32_T: usize = 0b1001010010;
+/// `<C complex 2x16b>` in A.3. extension (name only)
+pub const MPI_COMPLEX32_T: usize = 0b1001010011;
+
+// size 8 (SSS=011)
+pub const MPI_INT64_T: usize = 0b1001011000;
+pub const MPI_UINT64_T: usize = 0b1001011001;
+/// `<C float64>` in A.3. extension (name only)
+pub const MPI_FLOAT64_T: usize = 0b1001011010;
+/// `<C complex 2x32b>` in A.3. extension (name only)
+pub const MPI_COMPLEX64_T: usize = 0b1001011011;
+
+// size 16 (SSS=100). extension
+pub const MPI_COMPLEX128_T: usize = 0b1001100011;
+
+/// Everything predefined in the datatype space, with MPI names.
+pub const PREDEFINED_DATATYPES: &[(&str, usize)] = &[
+    ("MPI_DATATYPE_NULL", MPI_DATATYPE_NULL),
+    ("MPI_AINT", MPI_AINT),
+    ("MPI_COUNT", MPI_COUNT),
+    ("MPI_OFFSET", MPI_OFFSET),
+    ("MPI_PACKED", MPI_PACKED),
+    ("MPI_SHORT", MPI_SHORT),
+    ("MPI_INT", MPI_INT),
+    ("MPI_LONG", MPI_LONG),
+    ("MPI_LONG_LONG", MPI_LONG_LONG),
+    ("MPI_UNSIGNED_SHORT", MPI_UNSIGNED_SHORT),
+    ("MPI_UNSIGNED", MPI_UNSIGNED),
+    ("MPI_UNSIGNED_LONG", MPI_UNSIGNED_LONG),
+    ("MPI_UNSIGNED_LONG_LONG", MPI_UNSIGNED_LONG_LONG),
+    ("MPI_FLOAT", MPI_FLOAT),
+    ("MPI_DOUBLE", MPI_DOUBLE),
+    ("MPI_LONG_DOUBLE", MPI_LONG_DOUBLE),
+    ("MPI_C_BOOL", MPI_C_BOOL),
+    ("MPI_WCHAR", MPI_WCHAR),
+    ("MPI_C_COMPLEX", MPI_C_COMPLEX),
+    ("MPI_C_DOUBLE_COMPLEX", MPI_C_DOUBLE_COMPLEX),
+    ("MPI_C_LONG_DOUBLE_COMPLEX", MPI_C_LONG_DOUBLE_COMPLEX),
+    ("MPI_INTEGER", MPI_INTEGER),
+    ("MPI_REAL", MPI_REAL),
+    ("MPI_DOUBLE_PRECISION", MPI_DOUBLE_PRECISION),
+    ("MPI_COMPLEX", MPI_COMPLEX),
+    ("MPI_DOUBLE_COMPLEX", MPI_DOUBLE_COMPLEX),
+    ("MPI_LOGICAL", MPI_LOGICAL),
+    ("MPI_CHARACTER", MPI_CHARACTER),
+    ("MPI_FLOAT_INT", MPI_FLOAT_INT),
+    ("MPI_DOUBLE_INT", MPI_DOUBLE_INT),
+    ("MPI_LONG_INT", MPI_LONG_INT),
+    ("MPI_2INT", MPI_2INT),
+    ("MPI_SHORT_INT", MPI_SHORT_INT),
+    ("MPI_LONG_DOUBLE_INT", MPI_LONG_DOUBLE_INT),
+    ("MPI_2REAL", MPI_2REAL),
+    ("MPI_2DOUBLE_PRECISION", MPI_2DOUBLE_PRECISION),
+    ("MPI_2INTEGER", MPI_2INTEGER),
+    ("MPI_INT8_T", MPI_INT8_T),
+    ("MPI_UINT8_T", MPI_UINT8_T),
+    ("MPI_CHAR", MPI_CHAR),
+    ("MPI_SIGNED_CHAR", MPI_SIGNED_CHAR),
+    ("MPI_UNSIGNED_CHAR", MPI_UNSIGNED_CHAR),
+    ("MPI_BYTE", MPI_BYTE),
+    ("MPI_INT16_T", MPI_INT16_T),
+    ("MPI_UINT16_T", MPI_UINT16_T),
+    ("MPI_FLOAT16_T", MPI_FLOAT16_T),
+    ("MPI_INT32_T", MPI_INT32_T),
+    ("MPI_UINT32_T", MPI_UINT32_T),
+    ("MPI_FLOAT32_T", MPI_FLOAT32_T),
+    ("MPI_COMPLEX32_T", MPI_COMPLEX32_T),
+    ("MPI_INT64_T", MPI_INT64_T),
+    ("MPI_UINT64_T", MPI_UINT64_T),
+    ("MPI_FLOAT64_T", MPI_FLOAT64_T),
+    ("MPI_COMPLEX64_T", MPI_COMPLEX64_T),
+    ("MPI_COMPLEX128_T", MPI_COMPLEX128_T),
+];
+
+/// Size in bytes of a predefined datatype **on this platform**.
+///
+/// Fixed-size encodings come straight from the handle bits; variable-size
+/// types resolve to this platform's C/Fortran widths (LP64 assumptions,
+/// `MPI_INTEGER`/`MPI_LOGICAL`/`MPI_REAL` = 4 as with default Fortran
+/// flags). `MPI_DATATYPE_NULL` and `MPI_PACKED` report size 1 byte-unit.
+pub fn platform_size_of(dt: usize) -> Option<usize> {
+    if let Some(s) = crate::abi::huffman::fixed_size_of(dt) {
+        return Some(s);
+    }
+    Some(match dt {
+        MPI_AINT => core::mem::size_of::<crate::abi::types::Aint>(),
+        MPI_COUNT => 8,
+        MPI_OFFSET => 8,
+        MPI_PACKED => 1,
+        MPI_SHORT => 2,
+        MPI_INT => 4,
+        MPI_LONG => core::mem::size_of::<libc::c_long>(),
+        MPI_LONG_LONG => 8,
+        MPI_UNSIGNED_SHORT => 2,
+        MPI_UNSIGNED => 4,
+        MPI_UNSIGNED_LONG => core::mem::size_of::<libc::c_ulong>(),
+        MPI_UNSIGNED_LONG_LONG => 8,
+        MPI_FLOAT => 4,
+        MPI_DOUBLE => 8,
+        MPI_LONG_DOUBLE => 16,
+        MPI_C_BOOL => 1,
+        MPI_WCHAR => 4,
+        MPI_C_COMPLEX => 8,
+        MPI_C_DOUBLE_COMPLEX => 16,
+        MPI_C_LONG_DOUBLE_COMPLEX => 32,
+        MPI_INTEGER => 4,
+        MPI_REAL => 4,
+        MPI_DOUBLE_PRECISION => 8,
+        MPI_COMPLEX => 8,
+        MPI_DOUBLE_COMPLEX => 16,
+        MPI_LOGICAL => 4,
+        MPI_CHARACTER => 1,
+        MPI_FLOAT_INT => 8,
+        MPI_DOUBLE_INT => 12,
+        MPI_LONG_INT => core::mem::size_of::<libc::c_long>() + 4,
+        MPI_2INT => 8,
+        MPI_SHORT_INT => 6,
+        MPI_LONG_DOUBLE_INT => 20,
+        MPI_2REAL => 8,
+        MPI_2DOUBLE_PRECISION => 16,
+        MPI_2INTEGER => 8,
+        MPI_DATATYPE_NULL => return None,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abi::huffman::{datatype_class, fixed_size_of, kind_of, DatatypeClass, HandleKind};
+
+    #[test]
+    fn every_datatype_is_datatype_kind() {
+        for &(name, v) in PREDEFINED_DATATYPES {
+            assert_eq!(kind_of(v as u16), HandleKind::Datatype, "{name}");
+        }
+    }
+
+    #[test]
+    fn fixed_size_bits_match_platform_size() {
+        // Where the encoding carries a size, it must agree with the table.
+        for &(name, v) in PREDEFINED_DATATYPES {
+            if let Some(bits_size) = fixed_size_of(v) {
+                assert_eq!(platform_size_of(v), Some(bits_size), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn variable_size_types_do_not_encode_size() {
+        for v in [MPI_INT, MPI_LONG, MPI_FLOAT, MPI_DOUBLE, MPI_AINT] {
+            assert_eq!(datatype_class(v), DatatypeClass::VariableSize);
+            assert_eq!(fixed_size_of(v), None);
+        }
+    }
+
+    #[test]
+    fn long_long_alias() {
+        assert_eq!(MPI_LONG_LONG, MPI_LONG_LONG_INT);
+    }
+
+    #[test]
+    fn sizes_are_sane() {
+        assert_eq!(platform_size_of(MPI_INT), Some(4));
+        assert_eq!(platform_size_of(MPI_DOUBLE), Some(8));
+        assert_eq!(platform_size_of(MPI_BYTE), Some(1));
+        assert_eq!(platform_size_of(MPI_AINT), Some(core::mem::size_of::<usize>()));
+        assert_eq!(platform_size_of(MPI_DATATYPE_NULL), None);
+    }
+
+    #[test]
+    fn a3_reserved_float8_slot_untouched() {
+        // 0b1001000010 is `<float 8b>` in A.3: reserved, not named by us.
+        assert!(!PREDEFINED_DATATYPES.iter().any(|&(_, v)| v == 0b1001000010));
+        // But its *encoding* already promises size 1:
+        assert_eq!(fixed_size_of(0b1001000010), Some(1));
+    }
+}

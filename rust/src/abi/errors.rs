@@ -1,0 +1,176 @@
+//! Standard-ABI error classes.
+//!
+//! `MPI_SUCCESS == 0` is required; the classes are small consecutive
+//! positive integers (unique, so errors can be identified precisely). Each
+//! backend implementation uses its *own* error numbering internally —
+//! Mukautuva's `RETURN_CODE_IMPL_TO_MUK` translation (§6.2) maps them back
+//! to these values, with the success fast path inlined.
+
+/// Error classes of the standard ABI. Values are the ABI contract.
+pub const MPI_SUCCESS: i32 = 0;
+pub const MPI_ERR_BUFFER: i32 = 1;
+pub const MPI_ERR_COUNT: i32 = 2;
+pub const MPI_ERR_TYPE: i32 = 3;
+pub const MPI_ERR_TAG: i32 = 4;
+pub const MPI_ERR_COMM: i32 = 5;
+pub const MPI_ERR_RANK: i32 = 6;
+pub const MPI_ERR_REQUEST: i32 = 7;
+pub const MPI_ERR_ROOT: i32 = 8;
+pub const MPI_ERR_GROUP: i32 = 9;
+pub const MPI_ERR_OP: i32 = 10;
+pub const MPI_ERR_TOPOLOGY: i32 = 11;
+pub const MPI_ERR_DIMS: i32 = 12;
+pub const MPI_ERR_ARG: i32 = 13;
+pub const MPI_ERR_UNKNOWN: i32 = 14;
+pub const MPI_ERR_TRUNCATE: i32 = 15;
+pub const MPI_ERR_OTHER: i32 = 16;
+pub const MPI_ERR_INTERN: i32 = 17;
+pub const MPI_ERR_IN_STATUS: i32 = 18;
+pub const MPI_ERR_PENDING: i32 = 19;
+pub const MPI_ERR_KEYVAL: i32 = 20;
+pub const MPI_ERR_NO_MEM: i32 = 21;
+pub const MPI_ERR_BASE: i32 = 22;
+pub const MPI_ERR_INFO_KEY: i32 = 23;
+pub const MPI_ERR_INFO_VALUE: i32 = 24;
+pub const MPI_ERR_INFO_NOKEY: i32 = 25;
+pub const MPI_ERR_SPAWN: i32 = 26;
+pub const MPI_ERR_PORT: i32 = 27;
+pub const MPI_ERR_SERVICE: i32 = 28;
+pub const MPI_ERR_NAME: i32 = 29;
+pub const MPI_ERR_WIN: i32 = 30;
+pub const MPI_ERR_SIZE: i32 = 31;
+pub const MPI_ERR_DISP: i32 = 32;
+pub const MPI_ERR_INFO: i32 = 33;
+pub const MPI_ERR_LOCKTYPE: i32 = 34;
+pub const MPI_ERR_ASSERT: i32 = 35;
+pub const MPI_ERR_RMA_CONFLICT: i32 = 36;
+pub const MPI_ERR_RMA_SYNC: i32 = 37;
+pub const MPI_ERR_FILE: i32 = 38;
+pub const MPI_ERR_NOT_SAME: i32 = 39;
+pub const MPI_ERR_AMODE: i32 = 40;
+pub const MPI_ERR_UNSUPPORTED_DATAREP: i32 = 41;
+pub const MPI_ERR_UNSUPPORTED_OPERATION: i32 = 42;
+pub const MPI_ERR_NO_SUCH_FILE: i32 = 43;
+pub const MPI_ERR_FILE_EXISTS: i32 = 44;
+pub const MPI_ERR_BAD_FILE: i32 = 45;
+pub const MPI_ERR_ACCESS: i32 = 46;
+pub const MPI_ERR_NO_SPACE: i32 = 47;
+pub const MPI_ERR_QUOTA: i32 = 48;
+pub const MPI_ERR_READ_ONLY: i32 = 49;
+pub const MPI_ERR_FILE_IN_USE: i32 = 50;
+pub const MPI_ERR_DUP_DATAREP: i32 = 51;
+pub const MPI_ERR_CONVERSION: i32 = 52;
+pub const MPI_ERR_IO: i32 = 53;
+pub const MPI_ERR_RMA_RANGE: i32 = 54;
+pub const MPI_ERR_RMA_ATTACH: i32 = 55;
+pub const MPI_ERR_RMA_SHARED: i32 = 56;
+pub const MPI_ERR_RMA_FLAVOR: i32 = 57;
+pub const MPI_ERR_SESSION: i32 = 58;
+pub const MPI_ERR_PROC_ABORTED: i32 = 59;
+pub const MPI_ERR_VALUE_TOO_LARGE: i32 = 60;
+pub const MPI_ERR_ERRHANDLER: i32 = 61;
+/// Last predefined error class (`MPI_ERR_LASTCODE` floor).
+pub const MPI_ERR_LASTCODE: i32 = 128;
+
+/// Names + values of all predefined classes.
+pub const ERROR_CLASSES: &[(&str, i32)] = &[
+    ("MPI_SUCCESS", MPI_SUCCESS),
+    ("MPI_ERR_BUFFER", MPI_ERR_BUFFER),
+    ("MPI_ERR_COUNT", MPI_ERR_COUNT),
+    ("MPI_ERR_TYPE", MPI_ERR_TYPE),
+    ("MPI_ERR_TAG", MPI_ERR_TAG),
+    ("MPI_ERR_COMM", MPI_ERR_COMM),
+    ("MPI_ERR_RANK", MPI_ERR_RANK),
+    ("MPI_ERR_REQUEST", MPI_ERR_REQUEST),
+    ("MPI_ERR_ROOT", MPI_ERR_ROOT),
+    ("MPI_ERR_GROUP", MPI_ERR_GROUP),
+    ("MPI_ERR_OP", MPI_ERR_OP),
+    ("MPI_ERR_TOPOLOGY", MPI_ERR_TOPOLOGY),
+    ("MPI_ERR_DIMS", MPI_ERR_DIMS),
+    ("MPI_ERR_ARG", MPI_ERR_ARG),
+    ("MPI_ERR_UNKNOWN", MPI_ERR_UNKNOWN),
+    ("MPI_ERR_TRUNCATE", MPI_ERR_TRUNCATE),
+    ("MPI_ERR_OTHER", MPI_ERR_OTHER),
+    ("MPI_ERR_INTERN", MPI_ERR_INTERN),
+    ("MPI_ERR_IN_STATUS", MPI_ERR_IN_STATUS),
+    ("MPI_ERR_PENDING", MPI_ERR_PENDING),
+    ("MPI_ERR_KEYVAL", MPI_ERR_KEYVAL),
+    ("MPI_ERR_NO_MEM", MPI_ERR_NO_MEM),
+    ("MPI_ERR_INFO_KEY", MPI_ERR_INFO_KEY),
+    ("MPI_ERR_INFO_VALUE", MPI_ERR_INFO_VALUE),
+    ("MPI_ERR_INFO_NOKEY", MPI_ERR_INFO_NOKEY),
+    ("MPI_ERR_SESSION", MPI_ERR_SESSION),
+    ("MPI_ERR_PROC_ABORTED", MPI_ERR_PROC_ABORTED),
+    ("MPI_ERR_VALUE_TOO_LARGE", MPI_ERR_VALUE_TOO_LARGE),
+    ("MPI_ERR_ERRHANDLER", MPI_ERR_ERRHANDLER),
+];
+
+/// Human-readable message for `MPI_Error_string`.
+pub fn error_string(class: i32) -> &'static str {
+    match class {
+        MPI_SUCCESS => "No error",
+        MPI_ERR_BUFFER => "Invalid buffer pointer",
+        MPI_ERR_COUNT => "Invalid count argument",
+        MPI_ERR_TYPE => "Invalid datatype argument",
+        MPI_ERR_TAG => "Invalid tag argument",
+        MPI_ERR_COMM => "Invalid communicator",
+        MPI_ERR_RANK => "Invalid rank",
+        MPI_ERR_REQUEST => "Invalid request",
+        MPI_ERR_ROOT => "Invalid root",
+        MPI_ERR_GROUP => "Invalid group",
+        MPI_ERR_OP => "Invalid reduction operation",
+        MPI_ERR_ARG => "Invalid argument",
+        MPI_ERR_TRUNCATE => "Message truncated on receive",
+        MPI_ERR_OTHER => "Known error not in this list",
+        MPI_ERR_INTERN => "Internal MPI error",
+        MPI_ERR_IN_STATUS => "Error code is in status",
+        MPI_ERR_PENDING => "Pending request",
+        MPI_ERR_KEYVAL => "Invalid keyval",
+        MPI_ERR_NO_MEM => "Out of memory",
+        MPI_ERR_INFO_KEY => "Invalid info key",
+        MPI_ERR_INFO_VALUE => "Invalid info value",
+        MPI_ERR_INFO_NOKEY => "No such info key",
+        MPI_ERR_SESSION => "Invalid session",
+        MPI_ERR_PROC_ABORTED => "A peer process aborted",
+        MPI_ERR_UNKNOWN => "Unknown error",
+        _ => "Unknown error class",
+    }
+}
+
+/// Class name lookup (diagnostics; mirrors `MPI_Error_class` + name table).
+pub fn error_class_name(class: i32) -> Option<&'static str> {
+    ERROR_CLASSES.iter().find(|&&(_, v)| v == class).map(|&(n, _)| n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn success_is_zero() {
+        assert_eq!(MPI_SUCCESS, 0);
+    }
+
+    #[test]
+    fn classes_unique_positive_below_lastcode() {
+        let mut seen = std::collections::HashSet::new();
+        for &(name, v) in ERROR_CLASSES {
+            assert!(seen.insert(v), "{name} duplicated");
+            assert!(v >= 0 && v <= MPI_ERR_LASTCODE, "{name} out of range");
+        }
+    }
+
+    #[test]
+    fn strings_exist_for_all_classes() {
+        for &(_, v) in ERROR_CLASSES {
+            assert!(!error_string(v).is_empty());
+        }
+        assert_eq!(error_string(MPI_SUCCESS), "No error");
+    }
+
+    #[test]
+    fn name_lookup() {
+        assert_eq!(error_class_name(MPI_ERR_TRUNCATE), Some("MPI_ERR_TRUNCATE"));
+        assert_eq!(error_class_name(9999), None);
+    }
+}

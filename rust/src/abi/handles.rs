@@ -1,0 +1,220 @@
+//! Opaque handle types and non-datatype handle constants (§5.3, A.2).
+//!
+//! The proposal uses **incomplete struct pointers** for type safety:
+//!
+//! ```c
+//! typedef struct MPI_ABI_Comm    *MPI_Comm;
+//! typedef struct MPI_ABI_Request *MPI_Request;
+//! ```
+//!
+//! In Rust we model each as a `#[repr(transparent)]` newtype over a
+//! pointer-sized word. That preserves the two ABI-relevant facts: handles
+//! are exactly one pointer wide (so they fit in a `void*` attribute,
+//! §3.3), and distinct handle types are distinct *types* (the compiler
+//! rejects passing an `AbiComm` where an `AbiDatatype` is expected —
+//! the type-safety benefit the paper credits to Open MPI's design).
+//!
+//! Predefined constants are the zero-page Huffman values of
+//! [`crate::abi::huffman`]; user handles are values above the zero page
+//! (in a C implementation: heap pointers, which never point into page 0).
+
+use crate::abi::huffman::HUFFMAN_MAX;
+
+// --- Non-datatype predefined constants (Appendix A.2) ---------------------
+
+pub const MPI_COMM_NULL: usize = 0b0100000000;
+pub const MPI_COMM_WORLD: usize = 0b0100000001;
+pub const MPI_COMM_SELF: usize = 0b0100000010;
+
+pub const MPI_GROUP_NULL: usize = 0b0100000100;
+pub const MPI_GROUP_EMPTY: usize = 0b0100000101;
+
+pub const MPI_WIN_NULL: usize = 0b0100001000;
+pub const MPI_FILE_NULL: usize = 0b0100001100;
+pub const MPI_SESSION_NULL: usize = 0b0100010000;
+
+pub const MPI_MESSAGE_NULL: usize = 0b0100010100;
+pub const MPI_MESSAGE_NO_PROC: usize = 0b0100010101;
+
+pub const MPI_ERRHANDLER_NULL: usize = 0b0100011000;
+pub const MPI_ERRORS_ARE_FATAL: usize = 0b0100011001;
+pub const MPI_ERRORS_RETURN: usize = 0b0100011010;
+pub const MPI_ERRORS_ABORT: usize = 0b0100011011;
+
+pub const MPI_REQUEST_NULL: usize = 0b0100100000;
+
+/// Info handles are not in the published appendix excerpt; the spec draft
+/// places them in the reserved `0b0100011100` block. We allocate:
+pub const MPI_INFO_NULL: usize = 0b0100011100;
+pub const MPI_INFO_ENV: usize = 0b0100011101;
+
+/// All predefined non-datatype, non-op handles with their MPI names.
+pub const PREDEFINED_HANDLES: &[(&str, usize)] = &[
+    ("MPI_COMM_NULL", MPI_COMM_NULL),
+    ("MPI_COMM_WORLD", MPI_COMM_WORLD),
+    ("MPI_COMM_SELF", MPI_COMM_SELF),
+    ("MPI_GROUP_NULL", MPI_GROUP_NULL),
+    ("MPI_GROUP_EMPTY", MPI_GROUP_EMPTY),
+    ("MPI_WIN_NULL", MPI_WIN_NULL),
+    ("MPI_FILE_NULL", MPI_FILE_NULL),
+    ("MPI_SESSION_NULL", MPI_SESSION_NULL),
+    ("MPI_MESSAGE_NULL", MPI_MESSAGE_NULL),
+    ("MPI_MESSAGE_NO_PROC", MPI_MESSAGE_NO_PROC),
+    ("MPI_ERRHANDLER_NULL", MPI_ERRHANDLER_NULL),
+    ("MPI_ERRORS_ARE_FATAL", MPI_ERRORS_ARE_FATAL),
+    ("MPI_ERRORS_RETURN", MPI_ERRORS_RETURN),
+    ("MPI_ERRORS_ABORT", MPI_ERRORS_ABORT),
+    ("MPI_INFO_NULL", MPI_INFO_NULL),
+    ("MPI_INFO_ENV", MPI_INFO_ENV),
+    ("MPI_REQUEST_NULL", MPI_REQUEST_NULL),
+];
+
+// --- Typed handle newtypes -------------------------------------------------
+
+macro_rules! abi_handle {
+    ($(#[$doc:meta])* $name:ident, $null:expr) => {
+        $(#[$doc])*
+        #[repr(transparent)]
+        #[derive(Clone, Copy, PartialEq, Eq, Hash)]
+        pub struct $name(pub usize);
+
+        impl $name {
+            /// The null handle constant for this type.
+            pub const NULL: $name = $name($null);
+
+            /// Raw word value (what crosses the C ABI).
+            #[inline(always)]
+            pub const fn raw(self) -> usize {
+                self.0
+            }
+
+            /// `true` if this is the type's null handle.
+            #[inline(always)]
+            pub const fn is_null(self) -> bool {
+                self.0 == $null
+            }
+
+            /// `true` if predefined (zero-page Huffman constant).
+            #[inline(always)]
+            pub const fn is_predefined(self) -> bool {
+                self.0 <= HUFFMAN_MAX
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                if let Some(n) = crate::abi::handle_name(self.0) {
+                    write!(f, "{}({})", stringify!($name), n)
+                } else {
+                    write!(f, "{}({:#x})", stringify!($name), self.0)
+                }
+            }
+        }
+    };
+}
+
+abi_handle!(
+    /// `MPI_Comm` in the standard ABI.
+    AbiComm,
+    MPI_COMM_NULL
+);
+abi_handle!(
+    /// `MPI_Group` in the standard ABI.
+    AbiGroup,
+    MPI_GROUP_NULL
+);
+abi_handle!(
+    /// `MPI_Datatype` in the standard ABI.
+    AbiDatatype,
+    crate::abi::datatypes::MPI_DATATYPE_NULL
+);
+abi_handle!(
+    /// `MPI_Op` in the standard ABI.
+    AbiOp,
+    crate::abi::ops::MPI_OP_NULL
+);
+abi_handle!(
+    /// `MPI_Request` in the standard ABI.
+    AbiRequest,
+    MPI_REQUEST_NULL
+);
+abi_handle!(
+    /// `MPI_Errhandler` in the standard ABI.
+    AbiErrhandler,
+    MPI_ERRHANDLER_NULL
+);
+abi_handle!(
+    /// `MPI_Info` in the standard ABI.
+    AbiInfo,
+    MPI_INFO_NULL
+);
+abi_handle!(
+    /// `MPI_Win` in the standard ABI (RMA is out of reproduction scope; the
+    /// handle type exists for ABI-completeness tests).
+    AbiWin,
+    MPI_WIN_NULL
+);
+abi_handle!(
+    /// `MPI_Message` in the standard ABI.
+    AbiMessage,
+    MPI_MESSAGE_NULL
+);
+abi_handle!(
+    /// `MPI_Session` in the standard ABI.
+    AbiSession,
+    MPI_SESSION_NULL
+);
+
+impl AbiComm {
+    /// `MPI_COMM_WORLD`.
+    pub const WORLD: AbiComm = AbiComm(MPI_COMM_WORLD);
+    /// `MPI_COMM_SELF`.
+    pub const SELF: AbiComm = AbiComm(MPI_COMM_SELF);
+}
+
+impl AbiGroup {
+    /// `MPI_GROUP_EMPTY`.
+    pub const EMPTY: AbiGroup = AbiGroup(MPI_GROUP_EMPTY);
+}
+
+impl AbiErrhandler {
+    pub const ERRORS_ARE_FATAL: AbiErrhandler = AbiErrhandler(MPI_ERRORS_ARE_FATAL);
+    pub const ERRORS_RETURN: AbiErrhandler = AbiErrhandler(MPI_ERRORS_RETURN);
+    pub const ERRORS_ABORT: AbiErrhandler = AbiErrhandler(MPI_ERRORS_ABORT);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_pointer_sized() {
+        // §3.3: handles must fit in a `void*` (attributes) — exactly one
+        // word in the standard ABI.
+        assert_eq!(core::mem::size_of::<AbiComm>(), core::mem::size_of::<*mut u8>());
+        assert_eq!(core::mem::size_of::<AbiDatatype>(), core::mem::size_of::<*mut u8>());
+        assert_eq!(core::mem::size_of::<AbiRequest>(), core::mem::size_of::<*mut u8>());
+    }
+
+    #[test]
+    fn null_and_predefined_predicates() {
+        assert!(AbiComm::NULL.is_null());
+        assert!(!AbiComm::WORLD.is_null());
+        assert!(AbiComm::WORLD.is_predefined());
+        assert!(!AbiComm(0x7f00_1234).is_predefined());
+    }
+
+    #[test]
+    fn debug_prints_names() {
+        assert_eq!(format!("{:?}", AbiComm::WORLD), "AbiComm(MPI_COMM_WORLD)");
+        assert_eq!(format!("{:?}", AbiOp(crate::abi::ops::MPI_SUM)), "AbiOp(MPI_SUM)");
+    }
+
+    #[test]
+    fn distinct_types_do_not_unify() {
+        // Compile-time property; assert the runtime values still compare.
+        let c = AbiComm::WORLD;
+        let d = AbiDatatype(crate::abi::datatypes::MPI_INT);
+        assert_ne!(c.raw(), d.raw());
+    }
+}

@@ -1,0 +1,370 @@
+//! The 10-bit modified Huffman code for predefined handle constants
+//! (§5.4 + Appendix A).
+//!
+//! Key properties the paper requires, all enforced by tests here:
+//!
+//! * **Zero is always invalid** — uninitialized handles are detectable.
+//! * **Null handles** are "the non-zero bits of the handle kind followed by
+//!   zeros" (e.g. `MPI_COMM_NULL = 0b01_0000_0000`).
+//! * The whole code fits in **10 bits** → the zero page of common OSes, so
+//!   heap-allocated user handles can never collide with predefined ones.
+//! * **Half of the code space** (`0b10…` and `0b11…`) is reserved for
+//!   datatypes, since they are the majority of predefined handles.
+//! * Fixed-size datatypes carry `log2(size)` in bit positions 3..6 so that
+//!   e.g. `MPI_INT32_T`'s 4-byte size can be read with a mask + shift,
+//!   MPICH-style, with no memory access.
+//! * Decoding the *kind* of any handle takes a couple of bit tests, which
+//!   is what lets implementations error-check handles "simply by applying
+//!   a bitmask".
+
+/// Maximum value of the Huffman code: predefined handles live in
+/// `1..=HUFFMAN_MAX` (10 bits). Anything above is a user handle.
+pub const HUFFMAN_MAX: usize = 0x3FF;
+
+/// The handle kinds distinguishable from the bit pattern alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HandleKind {
+    /// `0b0000000000`: uninitialized/invalid.
+    Invalid,
+    /// `0b00001xxxxx`: reduction operations (A.1).
+    Op,
+    /// `0b01000000xx`: communicators.
+    Comm,
+    /// `0b010000010x`: groups.
+    Group,
+    /// `0b01000010xx`: RMA windows.
+    Win,
+    /// `0b01000011xx`: files.
+    File,
+    /// `0b0100010000 + reserved`: sessions.
+    Session,
+    /// `0b010001010x`: messages (mprobe).
+    Message,
+    /// `0b01000110xx`: error handlers.
+    Errhandler,
+    /// `0b01001xxxxx`: requests.
+    Request,
+    /// `0b10xxxxxxxx` / `0b11xxxxxxxx`: datatypes (A.3).
+    Datatype,
+    /// Codes inside the 10-bit space that are reserved for future handle
+    /// types or future constants of existing types.
+    Reserved,
+}
+
+/// Decode the kind of a predefined (zero-page) handle value.
+///
+/// For values above [`HUFFMAN_MAX`] this returns `None`: the value is a
+/// runtime (user) handle and its kind is known from context, not bits.
+pub fn decode(value: usize) -> Option<HandleKind> {
+    if value > HUFFMAN_MAX {
+        return None;
+    }
+    let v = value as u16;
+    Some(kind_of(v))
+}
+
+/// Kind decode over the 10-bit space. Pure bit tests — this is the
+/// "fast error checking ... simply by applying a bitmask" path.
+pub fn kind_of(v: u16) -> HandleKind {
+    debug_assert!(v as usize <= HUFFMAN_MAX);
+    if v == 0 {
+        return HandleKind::Invalid;
+    }
+    if v & 0b10_0000_0000 != 0 {
+        // 0b1x_xxxx_xxxx: the datatype half of the code space.
+        return HandleKind::Datatype;
+    }
+    if v & 0b01_0000_0000 != 0 {
+        // 0b01_xxxx_xxxx: "other handles" (A.2).
+        return match (v >> 2) & 0b11_1111 {
+            0b00_0000 => {
+                if v & 0b11 == 0b11 {
+                    HandleKind::Reserved // 0b0100000011 reserved comm
+                } else {
+                    HandleKind::Comm
+                }
+            }
+            0b00_0001 => {
+                if v & 0b10 == 0 {
+                    HandleKind::Group // 0b010000010x
+                } else {
+                    HandleKind::Reserved // 0b01000001 1x reserved group
+                }
+            }
+            0b00_0010 => HandleKind::Win,  // 0b01000010xx
+            0b00_0011 => HandleKind::File, // 0b01000011xx
+            0b00_0100 => HandleKind::Session,
+            0b00_0101 => {
+                if v & 0b10 == 0 {
+                    HandleKind::Message // 0b010001010x
+                } else {
+                    HandleKind::Reserved
+                }
+            }
+            0b00_0110 => HandleKind::Errhandler, // 0b01000110xx
+            0b00_0111 => HandleKind::Reserved,
+            k if (0b00_1000..0b01_0000).contains(&k) => HandleKind::Request, // 0b01001xxxxx
+            _ => HandleKind::Reserved, // 0b01 (rest): reserved handles
+        };
+    }
+    // 0b00_xxxx_xxxx:
+    if v & 0b00_1110_0000 == 0b00_0010_0000 {
+        // 0b0000100000..0b0000111111: ops (A.1).
+        HandleKind::Op
+    } else {
+        HandleKind::Reserved
+    }
+}
+
+/// `true` iff `value` is in the predefined 10-bit zero-page range
+/// (including 0, the invalid handle).
+pub fn is_zero_page(value: usize) -> bool {
+    value <= HUFFMAN_MAX
+}
+
+/// `true` iff `value` is the null handle for its kind: the non-zero kind
+/// bits followed by zeros (§5.4).
+pub fn is_null_handle(value: usize) -> bool {
+    matches!(
+        value,
+        v if v == crate::abi::ops::MPI_OP_NULL
+            || v == crate::abi::handles::MPI_COMM_NULL
+            || v == crate::abi::handles::MPI_GROUP_NULL
+            || v == crate::abi::handles::MPI_WIN_NULL
+            || v == crate::abi::handles::MPI_FILE_NULL
+            || v == crate::abi::handles::MPI_SESSION_NULL
+            || v == crate::abi::handles::MPI_MESSAGE_NULL
+            || v == crate::abi::handles::MPI_ERRHANDLER_NULL
+            || v == crate::abi::handles::MPI_REQUEST_NULL
+            || v == crate::abi::datatypes::MPI_DATATYPE_NULL
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Datatype sub-decoding (A.3)
+// ---------------------------------------------------------------------------
+
+/// Datatype encoding class, from the prefix bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatatypeClass {
+    /// `0b1000xxxxxx`: size depends on the platform ABI (C `int`, `long`,
+    /// `MPI_Aint`, …) and is deliberately *not* encoded (§5.4: encoding it
+    /// would make the constant a function of the platform ABI and force
+    /// e.g. Julia to determine the platform ABI).
+    VariableSize,
+    /// `0b1001xxxxxx`: fixed-size type with `log2(size)` in bits 3..6.
+    FixedSize,
+    /// Anything else in the datatype half: reserved for future datatypes.
+    Reserved,
+}
+
+/// Classify a datatype handle value.
+pub fn datatype_class(v: usize) -> DatatypeClass {
+    debug_assert!(kind_of(v as u16) == HandleKind::Datatype);
+    match (v >> 6) & 0b1111 {
+        0b1000 => DatatypeClass::VariableSize,
+        0b1001 => DatatypeClass::FixedSize,
+        _ => DatatypeClass::Reserved,
+    }
+}
+
+/// Extract the size in bytes of a **fixed-size** datatype from the handle
+/// bits alone: `size = 2^(bits 3..6)`. Returns `None` for variable-size or
+/// reserved encodings.
+///
+/// This is the standard-ABI analogue of MPICH's
+/// `MPIR_Datatype_get_basic_size(a) (((a)&0x0000ff00)>>8)` — the §6.1
+/// experiment measures exactly this path.
+#[inline(always)]
+pub fn fixed_size_of(v: usize) -> Option<usize> {
+    if (v >> 6) & 0b1111 == 0b1001 {
+        Some(1usize << ((v >> 3) & 0b111))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abi::datatypes::*;
+    use crate::abi::handles::*;
+    use crate::abi::ops::*;
+
+    #[test]
+    fn zero_is_invalid() {
+        assert_eq!(decode(0), Some(HandleKind::Invalid));
+    }
+
+    #[test]
+    fn above_zero_page_is_user() {
+        assert_eq!(decode(HUFFMAN_MAX + 1), None);
+        assert!(!is_zero_page(0x400));
+        assert!(is_zero_page(0x3FF));
+    }
+
+    #[test]
+    fn op_kinds() {
+        for v in [
+            MPI_OP_NULL, MPI_SUM, MPI_MIN, MPI_MAX, MPI_PROD, MPI_BAND, MPI_BOR, MPI_BXOR,
+            MPI_LAND, MPI_LOR, MPI_LXOR, MPI_MINLOC, MPI_MAXLOC, MPI_REPLACE, MPI_NO_OP,
+        ] {
+            assert_eq!(kind_of(v as u16), HandleKind::Op, "value {v:#012b}");
+        }
+    }
+
+    #[test]
+    fn appendix_a1_exact_values() {
+        // Spot-check the exact binary constants printed in Appendix A.1.
+        assert_eq!(MPI_OP_NULL, 0b0000100000);
+        assert_eq!(MPI_SUM, 0b0000100001);
+        assert_eq!(MPI_MIN, 0b0000100010);
+        assert_eq!(MPI_MAX, 0b0000100011);
+        assert_eq!(MPI_PROD, 0b0000100100);
+        assert_eq!(MPI_BAND, 0b0000101000);
+        assert_eq!(MPI_BOR, 0b0000101001);
+        assert_eq!(MPI_BXOR, 0b0000101010);
+        assert_eq!(MPI_LAND, 0b0000110000);
+        assert_eq!(MPI_LOR, 0b0000110001);
+        assert_eq!(MPI_LXOR, 0b0000110010);
+        assert_eq!(MPI_MINLOC, 0b0000111000);
+        assert_eq!(MPI_MAXLOC, 0b0000111001);
+        assert_eq!(MPI_REPLACE, 0b0000111100);
+        assert_eq!(MPI_NO_OP, 0b0000111101);
+    }
+
+    #[test]
+    fn appendix_a2_exact_values() {
+        assert_eq!(MPI_COMM_NULL, 0b0100000000);
+        assert_eq!(MPI_COMM_WORLD, 0b0100000001);
+        assert_eq!(MPI_COMM_SELF, 0b0100000010);
+        assert_eq!(MPI_GROUP_NULL, 0b0100000100);
+        assert_eq!(MPI_GROUP_EMPTY, 0b0100000101);
+        assert_eq!(MPI_WIN_NULL, 0b0100001000);
+        assert_eq!(MPI_FILE_NULL, 0b0100001100);
+        assert_eq!(MPI_SESSION_NULL, 0b0100010000);
+        assert_eq!(MPI_MESSAGE_NULL, 0b0100010100);
+        assert_eq!(MPI_MESSAGE_NO_PROC, 0b0100010101);
+        assert_eq!(MPI_ERRHANDLER_NULL, 0b0100011000);
+        assert_eq!(MPI_ERRORS_ARE_FATAL, 0b0100011001);
+        assert_eq!(MPI_ERRORS_RETURN, 0b0100011010);
+        assert_eq!(MPI_ERRORS_ABORT, 0b0100011011);
+        assert_eq!(MPI_REQUEST_NULL, 0b0100100000);
+    }
+
+    #[test]
+    fn handle_kind_decode_a2() {
+        assert_eq!(kind_of(MPI_COMM_WORLD as u16), HandleKind::Comm);
+        assert_eq!(kind_of(MPI_COMM_SELF as u16), HandleKind::Comm);
+        assert_eq!(kind_of(MPI_GROUP_EMPTY as u16), HandleKind::Group);
+        assert_eq!(kind_of(MPI_WIN_NULL as u16), HandleKind::Win);
+        assert_eq!(kind_of(MPI_FILE_NULL as u16), HandleKind::File);
+        assert_eq!(kind_of(MPI_SESSION_NULL as u16), HandleKind::Session);
+        assert_eq!(kind_of(MPI_MESSAGE_NO_PROC as u16), HandleKind::Message);
+        assert_eq!(kind_of(MPI_ERRORS_RETURN as u16), HandleKind::Errhandler);
+        assert_eq!(kind_of(MPI_REQUEST_NULL as u16), HandleKind::Request);
+        // 0b0100000011 is explicitly "reserved comm" in A.2 — we treat it
+        // as Reserved so uninitialized garbage isn't misidentified.
+        assert_eq!(kind_of(0b0100000011), HandleKind::Reserved);
+    }
+
+    #[test]
+    fn null_handles_are_kind_bits_then_zeros() {
+        for v in [
+            MPI_COMM_NULL, MPI_GROUP_NULL, MPI_WIN_NULL, MPI_FILE_NULL, MPI_SESSION_NULL,
+            MPI_MESSAGE_NULL, MPI_ERRHANDLER_NULL, MPI_REQUEST_NULL, MPI_OP_NULL,
+            MPI_DATATYPE_NULL,
+        ] {
+            assert!(is_null_handle(v), "{v:#012b}");
+            assert_ne!(v, 0, "null handles must be nonzero so 0 stays invalid");
+        }
+        assert!(!is_null_handle(MPI_COMM_WORLD));
+        assert!(!is_null_handle(MPI_SUM));
+    }
+
+    #[test]
+    fn datatype_half_of_code_space() {
+        // Half the Huffman bits are reserved for datatypes (§5.4): every
+        // value with the top bit of the 10-bit code set decodes as Datatype.
+        for v in 0b10_0000_0000usize..=HUFFMAN_MAX {
+            assert_eq!(kind_of(v as u16), HandleKind::Datatype);
+        }
+    }
+
+    #[test]
+    fn appendix_a3_exact_values() {
+        assert_eq!(MPI_DATATYPE_NULL, 0b1000000000);
+        assert_eq!(MPI_AINT, 0b1000000001);
+        assert_eq!(MPI_COUNT, 0b1000000010);
+        assert_eq!(MPI_OFFSET, 0b1000000011);
+        assert_eq!(MPI_PACKED, 0b1000000111);
+        assert_eq!(MPI_SHORT, 0b1000001000);
+        assert_eq!(MPI_INT, 0b1000001001);
+        assert_eq!(MPI_LONG, 0b1000001010);
+        assert_eq!(MPI_LONG_LONG, 0b1000001011);
+        assert_eq!(MPI_UNSIGNED_SHORT, 0b1000001100);
+        assert_eq!(MPI_UNSIGNED, 0b1000001101);
+        assert_eq!(MPI_UNSIGNED_LONG, 0b1000001110);
+        assert_eq!(MPI_UNSIGNED_LONG_LONG, 0b1000001111);
+        assert_eq!(MPI_FLOAT, 0b1000010000);
+        assert_eq!(MPI_INT8_T, 0b1001000000);
+        assert_eq!(MPI_UINT8_T, 0b1001000001);
+        assert_eq!(MPI_CHAR, 0b1001000011);
+        assert_eq!(MPI_SIGNED_CHAR, 0b1001000100);
+        assert_eq!(MPI_UNSIGNED_CHAR, 0b1001000101);
+        assert_eq!(MPI_BYTE, 0b1001000111);
+        assert_eq!(MPI_INT16_T, 0b1001001000);
+        assert_eq!(MPI_UINT16_T, 0b1001001001);
+        assert_eq!(MPI_INT32_T, 0b1001010000);
+        assert_eq!(MPI_UINT32_T, 0b1001010001);
+        assert_eq!(MPI_INT64_T, 0b1001011000);
+        assert_eq!(MPI_UINT64_T, 0b1001011001);
+    }
+
+    #[test]
+    fn fixed_size_extraction() {
+        // §5.4's worked examples: MPI_BYTE = 0b1001_000_111 → size 2^0 = 1;
+        // MPI_INT32_T = 0b1001_010_000 → size 2^2 = 4.
+        assert_eq!(fixed_size_of(MPI_BYTE), Some(1));
+        assert_eq!(fixed_size_of(MPI_CHAR), Some(1));
+        assert_eq!(fixed_size_of(MPI_INT8_T), Some(1));
+        assert_eq!(fixed_size_of(MPI_INT16_T), Some(2));
+        assert_eq!(fixed_size_of(MPI_INT32_T), Some(4));
+        assert_eq!(fixed_size_of(MPI_UINT32_T), Some(4));
+        assert_eq!(fixed_size_of(MPI_FLOAT32_T), Some(4));
+        assert_eq!(fixed_size_of(MPI_INT64_T), Some(8));
+        assert_eq!(fixed_size_of(MPI_FLOAT64_T), Some(8));
+        // Variable-size types do not encode a size.
+        assert_eq!(fixed_size_of(MPI_INT), None);
+        assert_eq!(fixed_size_of(MPI_FLOAT), None);
+        assert_eq!(fixed_size_of(MPI_AINT), None);
+    }
+
+    #[test]
+    fn datatype_classes() {
+        assert_eq!(datatype_class(MPI_INT), DatatypeClass::VariableSize);
+        assert_eq!(datatype_class(MPI_FLOAT), DatatypeClass::VariableSize);
+        assert_eq!(datatype_class(MPI_INT32_T), DatatypeClass::FixedSize);
+        assert_eq!(datatype_class(MPI_BYTE), DatatypeClass::FixedSize);
+        // 0b1010… is not yet allocated.
+        assert_eq!(datatype_class(0b1010000000), DatatypeClass::Reserved);
+    }
+
+    #[test]
+    fn all_predefined_constants_are_unique() {
+        let all = crate::abi::all_predefined_handles();
+        let mut seen = std::collections::HashSet::new();
+        for (name, v) in all {
+            assert!(seen.insert(v), "duplicate handle value {v:#012b} for {name}");
+            assert!(is_zero_page(v), "{name} escapes the zero page");
+        }
+    }
+
+    #[test]
+    fn code_space_has_room_to_grow() {
+        // §5.4: "sufficient free space to allow many new handle types and
+        // new handle constants ... without breaking changes".
+        let used = crate::abi::all_predefined_handles().len();
+        assert!(used < HUFFMAN_MAX / 2, "only {used} of 1024 codes used");
+    }
+}

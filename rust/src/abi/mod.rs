@@ -1,0 +1,37 @@
+//! The proposed **standard MPI ABI** (the paper's §5 and Appendix A).
+//!
+//! This module is the normative artifact of the reproduction: the ABI is a
+//! *binary* contract, so everything here is specified in terms of exact bit
+//! patterns, byte sizes and alignments, not Rust abstractions.
+//!
+//! Contents:
+//! - [`types`] — the MPI integer types (`MPI_Aint`, `MPI_Offset`,
+//!   `MPI_Count`, `MPI_Fint`) and the `AnOm` ABI-variant notation (§5.1).
+//! - [`status`] — the 32-byte standard status object (§5.2).
+//! - [`handles`] — word-sized opaque handle newtypes modelling the
+//!   incomplete-struct-pointer design (§5.3).
+//! - [`huffman`] — the 10-bit modified Huffman code for predefined handle
+//!   constants (§5.4, Appendix A), including the fast datatype-size and
+//!   handle-kind bit decoders.
+//! - [`ops`] / [`datatypes`] — the predefined constant values (A.1 / A.3).
+//! - [`constants`] — integer constants: unique negatives, XOR-combinable
+//!   powers of two, string lengths, predefined callbacks (§5.4).
+//! - [`errors`] — error classes with `MPI_SUCCESS == 0`.
+
+pub mod constants;
+pub mod datatypes;
+pub mod errors;
+pub mod handles;
+pub mod huffman;
+pub mod ops;
+pub mod status;
+pub mod types;
+
+pub use constants::*;
+pub use datatypes::*;
+pub use errors::*;
+pub use handles::*;
+pub use huffman::{decode, is_zero_page, HandleKind};
+pub use ops::*;
+pub use status::AbiStatus;
+pub use types::{AbiVariant, Aint, Count, Fint, Offset};

@@ -1,0 +1,75 @@
+//! Predefined reduction-operation handle constants (Appendix A.1).
+//!
+//! The op block occupies `0b00001xxxxx` with intentional gaps between the
+//! arithmetic / bitwise / logical / loc / accumulate groups so each group
+//! can grow without breaking changes.
+
+/// `MPI_OP_NULL` — the op-kind bits followed by zeros (the null rule).
+pub const MPI_OP_NULL: usize = 0b0000100000;
+
+// Arithmetic ops.
+pub const MPI_SUM: usize = 0b0000100001;
+pub const MPI_MIN: usize = 0b0000100010;
+pub const MPI_MAX: usize = 0b0000100011;
+pub const MPI_PROD: usize = 0b0000100100;
+
+// Bitwise ops.
+pub const MPI_BAND: usize = 0b0000101000;
+pub const MPI_BOR: usize = 0b0000101001;
+pub const MPI_BXOR: usize = 0b0000101010;
+
+// Logical ops.
+pub const MPI_LAND: usize = 0b0000110000;
+pub const MPI_LOR: usize = 0b0000110001;
+pub const MPI_LXOR: usize = 0b0000110010;
+
+// Loc ops.
+pub const MPI_MINLOC: usize = 0b0000111000;
+pub const MPI_MAXLOC: usize = 0b0000111001;
+
+// Accumulate ops.
+pub const MPI_REPLACE: usize = 0b0000111100;
+pub const MPI_NO_OP: usize = 0b0000111101;
+
+/// All predefined op constants with their MPI names.
+pub const PREDEFINED_OPS: &[(&str, usize)] = &[
+    ("MPI_OP_NULL", MPI_OP_NULL),
+    ("MPI_SUM", MPI_SUM),
+    ("MPI_MIN", MPI_MIN),
+    ("MPI_MAX", MPI_MAX),
+    ("MPI_PROD", MPI_PROD),
+    ("MPI_BAND", MPI_BAND),
+    ("MPI_BOR", MPI_BOR),
+    ("MPI_BXOR", MPI_BXOR),
+    ("MPI_LAND", MPI_LAND),
+    ("MPI_LOR", MPI_LOR),
+    ("MPI_LXOR", MPI_LXOR),
+    ("MPI_MINLOC", MPI_MINLOC),
+    ("MPI_MAXLOC", MPI_MAXLOC),
+    ("MPI_REPLACE", MPI_REPLACE),
+    ("MPI_NO_OP", MPI_NO_OP),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abi::huffman::{kind_of, HandleKind};
+
+    #[test]
+    fn groups_leave_reserved_gaps() {
+        // A.1 reserves 0b00001001xx after PROD, 0b0000101xxx tail after
+        // BXOR, etc. Verify the gaps exist (values absent from the table)
+        // and still decode as Op-kind so future additions stay compatible.
+        for gap in [0b0000100101usize, 0b0000101011, 0b0000110011, 0b0000111010] {
+            assert!(!PREDEFINED_OPS.iter().any(|&(_, v)| v == gap));
+            assert_eq!(kind_of(gap as u16), HandleKind::Op);
+        }
+    }
+
+    #[test]
+    fn names_resolve() {
+        assert_eq!(crate::abi::op_name(MPI_SUM), Some("MPI_SUM"));
+        assert_eq!(crate::abi::op_name(MPI_NO_OP), Some("MPI_NO_OP"));
+        assert_eq!(crate::abi::op_name(0b0000100101), None);
+    }
+}

@@ -1,0 +1,137 @@
+//! The standard-ABI status object (§5.2).
+//!
+//! ```c
+//! typedef struct MPI_Status {
+//!     int MPI_SOURCE;
+//!     int MPI_TAG;
+//!     int MPI_ERROR;
+//!     int mpi_reserved[5];
+//! } MPI_Status;
+//! ```
+//!
+//! 32 bytes total: good alignment for arrays of statuses, and at least two
+//! more hidden slots than any of the surveyed implementations (new-MPICH
+//! needs 2, Open MPI needs 3 incl. a `size_t`), leaving slack for future
+//! needs — including the §4.8 use case of tools hiding state in the
+//! reserved fields.
+//!
+//! The *layout* of the reserved fields is implementation-private. We define
+//! the convention our native implementation of the standard ABI uses (and
+//! that Mukautuva's converter produces), mirroring new-MPICH:
+//! `reserved[0] = count_lo`, `reserved[1] = count_hi_and_cancelled`
+//! (bit 31 = cancelled flag, bits 0..31 = count high bits).
+
+/// The standard ABI `MPI_Status`. `#[repr(C)]`, exactly 32 bytes.
+#[repr(C)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(non_snake_case)]
+pub struct AbiStatus {
+    pub MPI_SOURCE: i32,
+    pub MPI_TAG: i32,
+    pub MPI_ERROR: i32,
+    pub mpi_reserved: [i32; 5],
+}
+
+const _: () = assert!(core::mem::size_of::<AbiStatus>() == 32);
+const _: () = assert!(core::mem::align_of::<AbiStatus>() == 4);
+
+impl AbiStatus {
+    /// An empty status: like `MPI_STATUS_IGNORE`-adjacent zero state.
+    pub const fn empty() -> AbiStatus {
+        AbiStatus { MPI_SOURCE: 0, MPI_TAG: 0, MPI_ERROR: 0, mpi_reserved: [0; 5] }
+    }
+
+    /// Pack the hidden byte count (63-bit) + cancelled flag into the
+    /// reserved fields, new-MPICH style.
+    pub fn set_count_and_cancelled(&mut self, count_bytes: u64, cancelled: bool) {
+        debug_assert!(count_bytes < (1u64 << 63), "count must fit 63 bits");
+        self.mpi_reserved[0] = (count_bytes & 0xFFFF_FFFF) as u32 as i32;
+        let hi = ((count_bytes >> 32) & 0x7FFF_FFFF) as u32;
+        let hi = hi | if cancelled { 0x8000_0000 } else { 0 };
+        self.mpi_reserved[1] = hi as i32;
+    }
+
+    /// Hidden byte count stored by [`Self::set_count_and_cancelled`].
+    pub fn count_bytes(&self) -> u64 {
+        let lo = self.mpi_reserved[0] as u32 as u64;
+        let hi = (self.mpi_reserved[1] as u32 & 0x7FFF_FFFF) as u64;
+        (hi << 32) | lo
+    }
+
+    /// Hidden cancelled flag.
+    pub fn cancelled(&self) -> bool {
+        (self.mpi_reserved[1] as u32) & 0x8000_0000 != 0
+    }
+
+    /// Reserved slots 2..5 are free for tools (§4.8). Returns a mutable
+    /// view so a PMPI/QMPI-style tool can stash state.
+    pub fn tool_slots(&mut self) -> &mut [i32] {
+        &mut self.mpi_reserved[2..]
+    }
+}
+
+impl Default for AbiStatus {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_32_bytes() {
+        assert_eq!(core::mem::size_of::<AbiStatus>(), 32);
+        assert_eq!(core::mem::align_of::<AbiStatus>(), 4);
+    }
+
+    #[test]
+    fn public_fields_lead() {
+        // The three public members must be at the front, in order, so that
+        // `status.MPI_SOURCE` etc. work across implementations.
+        let s = AbiStatus { MPI_SOURCE: 1, MPI_TAG: 2, MPI_ERROR: 3, mpi_reserved: [0; 5] };
+        let base = &s as *const _ as usize;
+        assert_eq!(&s.MPI_SOURCE as *const _ as usize - base, 0);
+        assert_eq!(&s.MPI_TAG as *const _ as usize - base, 4);
+        assert_eq!(&s.MPI_ERROR as *const _ as usize - base, 8);
+    }
+
+    #[test]
+    fn count_roundtrip() {
+        let mut s = AbiStatus::empty();
+        for &c in &[0u64, 1, 8, 0xFFFF_FFFF, 0x1_0000_0000, (1u64 << 62) + 12345] {
+            for &x in &[false, true] {
+                s.set_count_and_cancelled(c, x);
+                assert_eq!(s.count_bytes(), c);
+                assert_eq!(s.cancelled(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn cancelled_does_not_clobber_count() {
+        let mut s = AbiStatus::empty();
+        s.set_count_and_cancelled(u64::MAX >> 1, true);
+        assert_eq!(s.count_bytes(), u64::MAX >> 1);
+        assert!(s.cancelled());
+    }
+
+    #[test]
+    fn tool_slots_are_three() {
+        let mut s = AbiStatus::empty();
+        assert_eq!(s.tool_slots().len(), 3);
+        s.tool_slots()[0] = 42;
+        assert_eq!(s.mpi_reserved[2], 42);
+        // Tool slots must not alias the count/cancelled fields.
+        s.set_count_and_cancelled(7, true);
+        assert_eq!(s.mpi_reserved[2], 42);
+    }
+
+    #[test]
+    fn array_of_statuses_is_dense() {
+        // §5.2 motivates 32 bytes by array alignment.
+        let arr = [AbiStatus::empty(); 4];
+        assert_eq!(core::mem::size_of_val(&arr), 128);
+    }
+}

@@ -1,0 +1,125 @@
+//! MPI integer types as prescribed by the standard ABI (§5.1).
+//!
+//! The proposal fixes:
+//!
+//! ```c
+//! typedef intptr_t MPI_Aint;
+//! typedef int64_t  MPI_Offset;
+//! typedef int64_t  MPI_Count;
+//! ```
+//!
+//! i.e. `MPI_Aint` tracks the platform pointer width (it must hold both
+//! absolute addresses *and* pointer differences, and must be signed because
+//! Fortran has no unsigned integers), while `MPI_Offset`/`MPI_Count` are
+//! pinned to 64 bits on every supported platform (A32O64 and A64O64).
+
+/// `MPI_Aint`: signed integer wide enough to hold a pointer (`intptr_t`).
+pub type Aint = isize;
+
+/// `MPI_Offset`: file offsets; fixed at 64 bits for both standard ABIs.
+pub type Offset = i64;
+
+/// `MPI_Count`: must hold every value of `MPI_Aint` **and** `MPI_Offset`,
+/// hence 64 bits on all A32O64/A64O64 platforms.
+pub type Count = i64;
+
+/// `MPI_Fint`: a Fortran `INTEGER`. The ABI proposal leaves this queryable
+/// at runtime; the common case (and our fixed choice) is a C `int`.
+pub type Fint = i32;
+
+/// The `AnOm` ABI-variant notation from §5.1: number of bits in `MPI_Aint`
+/// and in `MPI_Offset`. Mirrors the `ILP`/`LP64` convention for platform
+/// ABIs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AbiVariant {
+    /// Bits in `MPI_Aint` (pointer width).
+    pub aint_bits: u32,
+    /// Bits in `MPI_Offset`.
+    pub offset_bits: u32,
+}
+
+impl AbiVariant {
+    /// 32-bit addresses, 64-bit file offsets (e.g. ILP32 with LFS).
+    pub const A32O64: AbiVariant = AbiVariant { aint_bits: 32, offset_bits: 64 };
+    /// 64-bit addresses, 64-bit file offsets (all modern LP64 platforms).
+    pub const A64O64: AbiVariant = AbiVariant { aint_bits: 64, offset_bits: 64 };
+
+    /// The variant compiled into this build, derived from the real pointer
+    /// width. Only A32O64 and A64O64 are standardized (§5.1 explicitly
+    /// defers 128-bit platforms such as CHERI).
+    pub const fn native() -> AbiVariant {
+        AbiVariant {
+            aint_bits: (core::mem::size_of::<Aint>() * 8) as u32,
+            offset_bits: (core::mem::size_of::<Offset>() * 8) as u32,
+        }
+    }
+
+    /// Bits in `MPI_Count` = max(aint, offset) (§5.1).
+    pub const fn count_bits(self) -> u32 {
+        if self.aint_bits > self.offset_bits { self.aint_bits } else { self.offset_bits }
+    }
+
+    /// `true` if this is one of the two variants the proposal standardizes.
+    pub const fn is_standardized(self) -> bool {
+        (self.aint_bits == 32 || self.aint_bits == 64) && self.offset_bits == 64
+    }
+
+    /// Render in the paper's `AnOm` notation, e.g. `"A64O64"`.
+    pub fn notation(self) -> String {
+        format!("A{}O{}", self.aint_bits, self.offset_bits)
+    }
+}
+
+impl std::fmt::Display for AbiVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "A{}O{}", self.aint_bits, self.offset_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aint_is_pointer_sized_and_signed() {
+        assert_eq!(core::mem::size_of::<Aint>(), core::mem::size_of::<*mut u8>());
+        // Signedness: Aint must represent negative displacements.
+        let a: Aint = -1;
+        assert!(a < 0);
+    }
+
+    #[test]
+    fn offset_and_count_are_64bit() {
+        assert_eq!(core::mem::size_of::<Offset>(), 8);
+        assert_eq!(core::mem::size_of::<Count>(), 8);
+    }
+
+    #[test]
+    fn count_holds_aint_and_offset() {
+        // MPI_Count must be at least as wide as both MPI_Aint and MPI_Offset.
+        assert!(core::mem::size_of::<Count>() >= core::mem::size_of::<Aint>());
+        assert!(core::mem::size_of::<Count>() >= core::mem::size_of::<Offset>());
+    }
+
+    #[test]
+    fn native_variant_is_standardized() {
+        let v = AbiVariant::native();
+        assert!(v.is_standardized(), "unsupported platform variant {v}");
+        assert_eq!(v.count_bits(), 64);
+    }
+
+    #[test]
+    fn notation_matches_paper() {
+        assert_eq!(AbiVariant::A64O64.notation(), "A64O64");
+        assert_eq!(AbiVariant::A32O64.notation(), "A32O64");
+        assert_eq!(AbiVariant::A32O64.count_bits(), 64);
+    }
+
+    #[test]
+    fn a64o128_not_standardized() {
+        // §5.1: an A64O128 ABI is possible but deliberately not standardized.
+        let v = AbiVariant { aint_bits: 64, offset_bits: 128 };
+        assert!(!v.is_standardized());
+        assert_eq!(v.count_bits(), 128);
+    }
+}

@@ -1,0 +1,425 @@
+//! The MPI **API** surface, abstracted over ABIs.
+//!
+//! MPI is standardized as an API: the same *source* compiles against any
+//! implementation, but each implementation's binary representation of
+//! handles/statuses/constants differs — that is the paper's entire
+//! problem statement. We model "recompiling the same source against a
+//! different mpi.h" with a trait: [`MpiAbi`]'s associated types are the
+//! opaque handles, associated functions return the predefined constants
+//! (functions, not consts, because Open-MPI-style constants are
+//! link-time addresses, §3.3), and generic code (the test suite, the OSU
+//! benchmarks, the examples) is monomorphized per ABI exactly as C code
+//! is recompiled per mpi.h.
+//!
+//! Callback registration uses plain `fn` pointers (as in C) — forcing
+//! translation layers into the trampoline/state-map machinery the paper
+//! describes (§6.2), rather than letting Rust closures smuggle state.
+
+/// Canonical names for the predefined datatypes the portable surface
+/// exposes (each ABI maps them to its own handle representation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dt {
+    Int,
+    Float,
+    Double,
+    Byte,
+    Char,
+    Short,
+    UInt16,
+    Int32,
+    Int64,
+    UInt64,
+    Aint,
+    FloatInt,
+    TwoInt,
+}
+
+/// Canonical names for the predefined reduction ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpName {
+    Sum,
+    Min,
+    Max,
+    Prod,
+    Band,
+    Bor,
+    Bxor,
+    Land,
+    Lor,
+    Lxor,
+    Minloc,
+    Maxloc,
+}
+
+/// User reduction function in ABI `A`: `(invec, inoutvec, len, datatype)`.
+pub type UserOpFn<A> = fn(*const u8, *mut u8, i32, <A as MpiAbi>::Datatype);
+
+/// Attribute copy callback: `(comm, keyval, extra_state, value) ->
+/// (flag, new_value)`.
+pub type AttrCopyFn<A> = fn(<A as MpiAbi>::Comm, i32, usize, usize) -> (bool, usize);
+
+/// Attribute delete callback.
+pub type AttrDeleteFn<A> = fn(<A as MpiAbi>::Comm, i32, usize, usize);
+
+/// Error-handler callback: `(comm, error_code)`.
+pub type ErrhFn<A> = fn(<A as MpiAbi>::Comm, i32);
+
+/// An MPI ABI: the binary surface one compiles against.
+///
+/// Every method returns the ABI's own `int` error code (0 = success in
+/// every known ABI; other values differ and must be translated by layers
+/// like Mukautuva). Output parameters are `&mut` in Rust style.
+#[allow(clippy::too_many_arguments)]
+pub trait MpiAbi: 'static {
+    /// Human name for reports ("mpich", "ompi", "muk(mpich)", "abi").
+    const NAME: &'static str;
+
+    type Comm: Copy + PartialEq + std::fmt::Debug;
+    type Datatype: Copy + PartialEq + std::fmt::Debug;
+    type Op: Copy + PartialEq;
+    type Request: Copy + PartialEq + std::fmt::Debug;
+    type Group: Copy + PartialEq;
+    type Errhandler: Copy + PartialEq;
+    type Info: Copy + PartialEq;
+    /// The ABI's status struct (layouts differ! §3.2).
+    type Status: Copy;
+
+    // --- Predefined constants (functions: OMPI-style constants are
+    // link-time addresses, not compile-time constants) ---
+    fn comm_world() -> Self::Comm;
+    fn comm_self() -> Self::Comm;
+    fn comm_null() -> Self::Comm;
+    fn request_null() -> Self::Request;
+    fn datatype(d: Dt) -> Self::Datatype;
+    fn op(o: OpName) -> Self::Op;
+    fn errhandler_return() -> Self::Errhandler;
+    fn errhandler_fatal() -> Self::Errhandler;
+    fn info_null() -> Self::Info;
+
+    /// Special integer constants — ABIs number these differently.
+    fn any_source() -> i32;
+    fn any_tag() -> i32;
+    fn proc_null() -> i32;
+    fn undefined() -> i32;
+    /// The `MPI_IN_PLACE` buffer sentinel.
+    fn in_place() -> *const u8;
+
+    /// Success / canonical error classes in this ABI's numbering.
+    fn err_class_of(code: i32) -> i32;
+    fn error_string(code: i32) -> String;
+    /// This ABI's numeric value for a canonical (standard-ABI) class.
+    fn err_from_canonical(class: i32) -> i32;
+
+    // --- Environment ---
+    fn init() -> i32;
+    fn finalize() -> i32;
+    fn initialized() -> bool;
+    fn finalized() -> bool;
+    fn abort(comm: Self::Comm, code: i32) -> i32;
+    fn wtime() -> f64;
+    fn get_library_version() -> String;
+    fn get_version() -> (i32, i32);
+    fn get_processor_name() -> String;
+
+    // --- Status accessors (layouts differ per ABI) ---
+    fn status_empty() -> Self::Status;
+    fn status_source(s: &Self::Status) -> i32;
+    fn status_tag(s: &Self::Status) -> i32;
+    fn status_error(s: &Self::Status) -> i32;
+    fn status_cancelled(s: &Self::Status) -> bool;
+    fn get_count(s: &Self::Status, dt: Self::Datatype) -> i32;
+
+    // --- Communicators & groups ---
+    fn comm_size(c: Self::Comm, out: &mut i32) -> i32;
+    fn comm_rank(c: Self::Comm, out: &mut i32) -> i32;
+    fn comm_dup(c: Self::Comm, out: &mut Self::Comm) -> i32;
+    fn comm_split(c: Self::Comm, color: i32, key: i32, out: &mut Self::Comm) -> i32;
+    fn comm_free(c: &mut Self::Comm) -> i32;
+    fn comm_compare(a: Self::Comm, b: Self::Comm, out: &mut i32) -> i32;
+    fn comm_set_name(c: Self::Comm, name: &str) -> i32;
+    fn comm_get_name(c: Self::Comm, out: &mut String) -> i32;
+    fn comm_group(c: Self::Comm, out: &mut Self::Group) -> i32;
+    fn group_size(g: Self::Group, out: &mut i32) -> i32;
+    fn group_rank(g: Self::Group, out: &mut i32) -> i32;
+    fn group_incl(g: Self::Group, ranks: &[i32], out: &mut Self::Group) -> i32;
+    fn group_translate_ranks(
+        a: Self::Group,
+        ranks: &[i32],
+        b: Self::Group,
+        out: &mut [i32],
+    ) -> i32;
+    fn group_free(g: &mut Self::Group) -> i32;
+    fn comm_set_errhandler(c: Self::Comm, e: Self::Errhandler) -> i32;
+    fn comm_get_errhandler(c: Self::Comm, out: &mut Self::Errhandler) -> i32;
+    fn comm_create_errhandler(f: ErrhFn<Self>, out: &mut Self::Errhandler) -> i32;
+    fn errhandler_free(e: &mut Self::Errhandler) -> i32;
+
+    // --- Point-to-point ---
+    fn send(
+        buf: *const u8,
+        count: i32,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+    ) -> i32;
+    fn ssend(
+        buf: *const u8,
+        count: i32,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+    ) -> i32;
+    fn recv(
+        buf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        src: i32,
+        tag: i32,
+        comm: Self::Comm,
+        status: &mut Self::Status,
+    ) -> i32;
+    fn isend(
+        buf: *const u8,
+        count: i32,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn issend(
+        buf: *const u8,
+        count: i32,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn irecv(
+        buf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        src: i32,
+        tag: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn wait(req: &mut Self::Request, status: &mut Self::Status) -> i32;
+    fn test(req: &mut Self::Request, flag: &mut bool, status: &mut Self::Status) -> i32;
+    fn waitall(reqs: &mut [Self::Request], statuses: &mut [Self::Status]) -> i32;
+    fn testall(reqs: &mut [Self::Request], flag: &mut bool, statuses: &mut [Self::Status]) -> i32;
+    fn waitany(reqs: &mut [Self::Request], index: &mut i32, status: &mut Self::Status) -> i32;
+    fn probe(src: i32, tag: i32, comm: Self::Comm, status: &mut Self::Status) -> i32;
+    fn iprobe(
+        src: i32,
+        tag: i32,
+        comm: Self::Comm,
+        flag: &mut bool,
+        status: &mut Self::Status,
+    ) -> i32;
+    fn cancel(req: &mut Self::Request) -> i32;
+    fn request_free(req: &mut Self::Request) -> i32;
+    fn sendrecv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        dest: i32,
+        sendtag: i32,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        src: i32,
+        recvtag: i32,
+        comm: Self::Comm,
+        status: &mut Self::Status,
+    ) -> i32;
+
+    // --- Datatypes ---
+    fn type_size(dt: Self::Datatype, out: &mut i32) -> i32;
+    fn type_get_extent(dt: Self::Datatype, lb: &mut isize, extent: &mut isize) -> i32;
+    fn type_contiguous(count: i32, child: Self::Datatype, out: &mut Self::Datatype) -> i32;
+    fn type_vector(
+        count: i32,
+        blocklen: i32,
+        stride: i32,
+        child: Self::Datatype,
+        out: &mut Self::Datatype,
+    ) -> i32;
+    fn type_create_struct(
+        blocks: &[(i32, isize, Self::Datatype)],
+        out: &mut Self::Datatype,
+    ) -> i32;
+    fn type_commit(dt: &mut Self::Datatype) -> i32;
+    fn type_free(dt: &mut Self::Datatype) -> i32;
+    fn type_dup(dt: Self::Datatype, out: &mut Self::Datatype) -> i32;
+
+    // --- Reduction ops ---
+    fn op_create(f: UserOpFn<Self>, commute: bool, out: &mut Self::Op) -> i32;
+    fn op_free(op: &mut Self::Op) -> i32;
+
+    // --- Collectives ---
+    fn barrier(comm: Self::Comm) -> i32;
+    fn bcast(buf: *mut u8, count: i32, dt: Self::Datatype, root: i32, comm: Self::Comm) -> i32;
+    fn reduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        root: i32,
+        comm: Self::Comm,
+    ) -> i32;
+    fn allreduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+    ) -> i32;
+    fn gather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+    ) -> i32;
+    fn scatter(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+    ) -> i32;
+    fn allgather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+    ) -> i32;
+    fn alltoall(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+    ) -> i32;
+    fn alltoallw(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtypes: &[Self::Datatype],
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtypes: &[Self::Datatype],
+        comm: Self::Comm,
+    ) -> i32;
+    fn ialltoallw(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtypes: &[Self::Datatype],
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtypes: &[Self::Datatype],
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn scan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+    ) -> i32;
+    fn exscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+    ) -> i32;
+    fn reduce_scatter_block(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+    ) -> i32;
+
+    // --- Attributes ---
+    fn comm_create_keyval(
+        copy: Option<AttrCopyFn<Self>>,
+        delete: Option<AttrDeleteFn<Self>>,
+        extra_state: usize,
+        out: &mut i32,
+    ) -> i32;
+    fn comm_free_keyval(keyval: &mut i32) -> i32;
+    fn comm_set_attr(c: Self::Comm, keyval: i32, value: usize) -> i32;
+    fn comm_get_attr(c: Self::Comm, keyval: i32, value: &mut usize, flag: &mut bool) -> i32;
+    fn comm_delete_attr(c: Self::Comm, keyval: i32) -> i32;
+
+    // --- Info ---
+    fn info_create(out: &mut Self::Info) -> i32;
+    fn info_set(i: Self::Info, key: &str, value: &str) -> i32;
+    fn info_get(i: Self::Info, key: &str, out: &mut String, flag: &mut bool) -> i32;
+    fn info_free(i: &mut Self::Info) -> i32;
+}
+
+/// Map a canonical [`Dt`] to the standard-ABI datatype constant.
+pub fn dt_to_abi_const(d: Dt) -> usize {
+    use crate::abi::datatypes as adt;
+    match d {
+        Dt::Int => adt::MPI_INT,
+        Dt::Float => adt::MPI_FLOAT,
+        Dt::Double => adt::MPI_DOUBLE,
+        Dt::Byte => adt::MPI_BYTE,
+        Dt::Char => adt::MPI_CHAR,
+        Dt::Short => adt::MPI_SHORT,
+        Dt::UInt16 => adt::MPI_UINT16_T,
+        Dt::Int32 => adt::MPI_INT32_T,
+        Dt::Int64 => adt::MPI_INT64_T,
+        Dt::UInt64 => adt::MPI_UINT64_T,
+        Dt::Aint => adt::MPI_AINT,
+        Dt::FloatInt => adt::MPI_FLOAT_INT,
+        Dt::TwoInt => adt::MPI_2INT,
+    }
+}
+
+/// Map a canonical [`OpName`] to the standard-ABI op constant.
+pub fn op_to_abi_const(o: OpName) -> usize {
+    use crate::abi::ops as aop;
+    match o {
+        OpName::Sum => aop::MPI_SUM,
+        OpName::Min => aop::MPI_MIN,
+        OpName::Max => aop::MPI_MAX,
+        OpName::Prod => aop::MPI_PROD,
+        OpName::Band => aop::MPI_BAND,
+        OpName::Bor => aop::MPI_BOR,
+        OpName::Bxor => aop::MPI_BXOR,
+        OpName::Land => aop::MPI_LAND,
+        OpName::Lor => aop::MPI_LOR,
+        OpName::Lxor => aop::MPI_LXOR,
+        OpName::Minloc => aop::MPI_MINLOC,
+        OpName::Maxloc => aop::MPI_MAXLOC,
+    }
+}

@@ -1,0 +1,180 @@
+//! The end-to-end driver (E8): data-parallel training of the L2 model.
+//!
+//! Every rank runs the AOT-compiled `grad_step` executable (L2 JAX graph
+//! containing the L1 Pallas matmul kernel) on its own synthetic shard,
+//! averages gradients across ranks with `MPI_Allreduce` through the
+//! chosen ABI (L3 — which itself offloads large f32 sums to the compiled
+//! Pallas *reduce* kernel), then applies the compiled `sgd_update`.
+//! All three layers compose on every step.
+
+use crate::api::{Dt, MpiAbi, OpName};
+use crate::runtime::runtime;
+
+/// Model geometry — must match `python/compile/model.py`.
+pub const D_IN: usize = 256;
+pub const D_HID: usize = 256;
+pub const D_OUT: usize = 128;
+pub const BATCH: usize = 128;
+
+pub struct DdpParams {
+    pub steps: usize,
+    pub lr: f32,
+    /// Log the loss every `log_every` steps (0 = never).
+    pub log_every: usize,
+}
+
+impl Default for DdpParams {
+    fn default() -> Self {
+        DdpParams { steps: 40, lr: 0.05, log_every: 5 }
+    }
+}
+
+pub struct DdpResult {
+    /// (step, mean loss across ranks).
+    pub loss_curve: Vec<(usize, f32)>,
+    pub final_loss: f32,
+}
+
+/// Deterministic pseudo-random init/data (xorshift; no rand crate).
+fn fill_randn(buf: &mut [f32], seed: u64, scale: f32) {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+    let mut next = || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        s
+    };
+    for x in buf.iter_mut() {
+        // Sum of 4 uniforms ≈ gaussian-ish, centered.
+        let mut acc = 0.0f32;
+        for _ in 0..4 {
+            acc += (next() >> 40) as f32 / (1u64 << 24) as f32;
+        }
+        *x = (acc - 2.0) * scale;
+    }
+}
+
+/// Run DDP training; call from every rank after `A::init()`.
+/// Panics if artifacts are unavailable (run `make artifacts`).
+pub fn train<A: MpiAbi>(p: DdpParams) -> DdpResult {
+    let rt = runtime().expect("DDP needs AOT artifacts: run `make artifacts`");
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    let world = A::comm_world();
+    let dt_f = A::datatype(Dt::Float);
+    let op_sum = A::op(OpName::Sum);
+
+    // Identical init on every rank (same seed), per-rank data shards.
+    let mut w1 = vec![0f32; D_IN * D_HID];
+    let mut b1 = vec![0f32; D_HID];
+    let mut w2 = vec![0f32; D_HID * D_OUT];
+    let mut b2 = vec![0f32; D_OUT];
+    fill_randn(&mut w1, 1, 1.0 / (D_IN as f32).sqrt());
+    fill_randn(&mut w2, 2, 1.0 / (D_HID as f32).sqrt());
+
+    // Fixed teacher for the synthetic regression target.
+    let mut teacher = vec![0f32; D_IN];
+    fill_randn(&mut teacher, 7, 1.0);
+
+    let mut loss_curve = Vec::new();
+    let mut final_loss = f32::NAN;
+    let inv_n = 1.0 / n as f32;
+
+    for step in 0..p.steps {
+        // Per-rank shard: new batch every step, disjoint across ranks.
+        let mut x = vec![0f32; BATCH * D_IN];
+        fill_randn(&mut x, (step as u64) << 8 | (me as u64 + 1), 1.0);
+        let mut y = vec![0f32; BATCH];
+        for (i, yy) in y.iter_mut().enumerate() {
+            let row = &x[i * D_IN..(i + 1) * D_IN];
+            let dot: f32 = row.iter().zip(&teacher).map(|(a, b)| a * b).sum();
+            *yy = dot.tanh();
+        }
+
+        // L2+L1: compiled forward/backward.
+        let outs = rt
+            .execute_f32(
+                "grad_step",
+                &[
+                    (&w1, &[D_IN as i64, D_HID as i64]),
+                    (&b1, &[D_HID as i64]),
+                    (&w2, &[D_HID as i64, D_OUT as i64]),
+                    (&b2, &[D_OUT as i64]),
+                    (&x, &[BATCH as i64, D_IN as i64]),
+                    (&y, &[BATCH as i64]),
+                ],
+            )
+            .expect("grad_step");
+        let local_loss = outs[0][0];
+        let mut grads = [
+            outs[1].clone(),
+            outs[2].clone(),
+            outs[3].clone(),
+            outs[4].clone(),
+        ];
+
+        // L3: average gradients across ranks (w1 grad is 65536 elements —
+        // exactly the XLA-offloaded allreduce size).
+        let mut mean_loss = local_loss;
+        for g in grads.iter_mut() {
+            let rc = A::allreduce(
+                A::in_place(),
+                g.as_mut_ptr() as *mut u8,
+                g.len() as i32,
+                dt_f,
+                op_sum,
+                world,
+            );
+            assert_eq!(rc, 0, "allreduce failed");
+            for v in g.iter_mut() {
+                *v *= inv_n;
+            }
+        }
+        {
+            let rc = A::allreduce(
+                A::in_place(),
+                &mut mean_loss as *mut f32 as *mut u8,
+                1,
+                dt_f,
+                op_sum,
+                world,
+            );
+            assert_eq!(rc, 0);
+            mean_loss *= inv_n;
+        }
+
+        // L2: compiled optimizer step.
+        let lr = [p.lr];
+        let upd = rt
+            .execute_f32(
+                "sgd_update",
+                &[
+                    (&w1, &[D_IN as i64, D_HID as i64]),
+                    (&b1, &[D_HID as i64]),
+                    (&w2, &[D_HID as i64, D_OUT as i64]),
+                    (&b2, &[D_OUT as i64]),
+                    (&grads[0], &[D_IN as i64, D_HID as i64]),
+                    (&grads[1], &[D_HID as i64]),
+                    (&grads[2], &[D_HID as i64, D_OUT as i64]),
+                    (&grads[3], &[D_OUT as i64]),
+                    (&lr, &[]),
+                ],
+            )
+            .expect("sgd_update");
+        w1 = upd[0].clone();
+        b1 = upd[1].clone();
+        w2 = upd[2].clone();
+        b2 = upd[3].clone();
+
+        final_loss = mean_loss;
+        if p.log_every > 0 && step % p.log_every == 0 {
+            loss_curve.push((step, mean_loss));
+            if me == 0 {
+                eprintln!("[ddp {}] step {step:4}  loss {mean_loss:.6}", A::NAME);
+            }
+        }
+    }
+    loss_curve.push((p.steps, final_loss));
+    DdpResult { loss_curve, final_loss }
+}

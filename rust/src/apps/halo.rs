@@ -1,0 +1,126 @@
+//! 2-D Jacobi halo exchange — the classic MPI stencil workload (the kind
+//! of application §4.7's containers ship). Decomposes a square grid over
+//! a 1-D rank strip; each iteration exchanges boundary rows with both
+//! neighbors (`MPI_Sendrecv`) and applies a 5-point stencil.
+//!
+//! Used by `examples/halo2d.rs` and the cross-ABI consistency tests: the
+//! result must be bit-identical whichever ABI carries the halos.
+
+use crate::api::{Dt, MpiAbi};
+
+pub struct HaloParams {
+    /// Global grid is `n x n`.
+    pub n: usize,
+    pub iters: usize,
+}
+
+impl Default for HaloParams {
+    fn default() -> Self {
+        HaloParams { n: 64, iters: 20 }
+    }
+}
+
+/// Run the stencil; returns (local residual sum, global residual sum)
+/// after `iters` sweeps. Call from every rank.
+pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    let world = A::comm_world();
+    let dt = A::datatype(Dt::Double);
+    let n = p.n;
+    let rows_per = n / size as usize;
+    assert!(rows_per >= 1, "grid too small for {size} ranks");
+    let my_rows = if rank == size - 1 { n - rows_per * (size as usize - 1) } else { rows_per };
+
+    // Local block with one ghost row above and below.
+    let w = n;
+    let h = my_rows + 2;
+    let idx = |r: usize, c: usize| r * w + c;
+    let mut grid = vec![0.0f64; w * h];
+    let mut next = grid.clone();
+
+    // Dirichlet boundary: global top row = 1.0 (only rank 0 owns it).
+    if rank == 0 {
+        for c in 0..w {
+            grid[idx(1, c)] = 1.0;
+            next[idx(1, c)] = 1.0;
+        }
+    }
+
+    let up = if rank == 0 { A::proc_null() } else { rank - 1 };
+    let down = if rank == size - 1 { A::proc_null() } else { rank + 1 };
+
+    for _ in 0..p.iters {
+        // Exchange: send my first real row up / receive ghost from above,
+        // then send last real row down / receive ghost from below.
+        let mut st = A::status_empty();
+        let first_real = idx(1, 0);
+        let last_real = idx(my_rows, 0);
+        let ghost_top = idx(0, 0);
+        let ghost_bot = idx(my_rows + 1, 0);
+        A::sendrecv(
+            grid[first_real..].as_ptr() as *const u8,
+            w as i32,
+            dt,
+            up,
+            1,
+            grid[ghost_bot..].as_mut_ptr() as *mut u8,
+            w as i32,
+            dt,
+            down,
+            1,
+            world,
+            &mut st,
+        );
+        A::sendrecv(
+            grid[last_real..].as_ptr() as *const u8,
+            w as i32,
+            dt,
+            down,
+            2,
+            grid[ghost_top..].as_mut_ptr() as *mut u8,
+            w as i32,
+            dt,
+            up,
+            2,
+            world,
+            &mut st,
+        );
+
+        // 5-point stencil on interior points (global boundary rows are
+        // held fixed; the very first/last global rows never update).
+        for r in 1..=my_rows {
+            let global_r = rank as usize * rows_per + (r - 1);
+            if global_r == 0 || global_r == n - 1 {
+                for c in 0..w {
+                    next[idx(r, c)] = grid[idx(r, c)];
+                }
+                continue;
+            }
+            for c in 1..w - 1 {
+                next[idx(r, c)] = 0.25
+                    * (grid[idx(r - 1, c)]
+                        + grid[idx(r + 1, c)]
+                        + grid[idx(r, c - 1)]
+                        + grid[idx(r, c + 1)]);
+            }
+            next[idx(r, 0)] = grid[idx(r, 0)];
+            next[idx(r, w - 1)] = grid[idx(r, w - 1)];
+        }
+        std::mem::swap(&mut grid, &mut next);
+    }
+
+    // Residual: sum of interior values (a cheap convergence proxy).
+    let local: f64 = (1..=my_rows).map(|r| (0..w).map(|c| grid[idx(r, c)]).sum::<f64>()).sum();
+    let mut global = 0.0f64;
+    A::allreduce(
+        &local as *const f64 as *const u8,
+        &mut global as *mut f64 as *mut u8,
+        1,
+        dt,
+        A::op(crate::api::OpName::Sum),
+        world,
+    );
+    (local, global)
+}

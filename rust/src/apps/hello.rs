@@ -1,0 +1,16 @@
+//! Smallest possible MPI application: every rank reports in.
+
+use crate::api::MpiAbi;
+
+/// Returns this rank's greeting (rank 0 typically prints all of them via
+/// the launcher's collected outputs).
+pub fn hello<A: MpiAbi>() -> String {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    format!(
+        "Hello from rank {me}/{n} on {} [{}]",
+        A::get_processor_name(),
+        A::get_library_version()
+    )
+}

@@ -1,0 +1,76 @@
+//! Built-in applications, written against the portable [`crate::api::MpiAbi`]
+//! surface (so any of the five ABI configurations can run them — the
+//! "container retargeting" story of §4.7 in executable form).
+
+pub mod ddp;
+pub mod halo;
+pub mod hello;
+pub mod osu;
+
+use crate::api::MpiAbi;
+use crate::impls::{MpichAbi, OmpiAbi};
+use crate::muk::{MukMpich, MukOmpi};
+use crate::native_abi::NativeAbi;
+
+/// The five ABI configurations of the evaluation (Table 1 + E4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbiConfig {
+    /// MPICH-like implementation, its own ABI.
+    Mpich,
+    /// Open-MPI-like implementation, its own ABI.
+    Ompi,
+    /// Standard ABI via Mukautuva over the MPICH-like backend.
+    MukMpich,
+    /// Standard ABI via Mukautuva over the Open-MPI-like backend.
+    MukOmpi,
+    /// Standard ABI implemented natively (`--enable-mpi-abi`).
+    NativeAbi,
+}
+
+impl AbiConfig {
+    pub const ALL: [AbiConfig; 5] = [
+        AbiConfig::Mpich,
+        AbiConfig::Ompi,
+        AbiConfig::MukMpich,
+        AbiConfig::MukOmpi,
+        AbiConfig::NativeAbi,
+    ];
+
+    pub fn parse(s: &str) -> Option<AbiConfig> {
+        Some(match s {
+            "mpich" => AbiConfig::Mpich,
+            "ompi" => AbiConfig::Ompi,
+            "muk-mpich" | "muk:mpich" => AbiConfig::MukMpich,
+            "muk-ompi" | "muk:ompi" => AbiConfig::MukOmpi,
+            "abi" | "native-abi" => AbiConfig::NativeAbi,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AbiConfig::Mpich => "mpich",
+            AbiConfig::Ompi => "ompi",
+            AbiConfig::MukMpich => "muk(mpich)",
+            AbiConfig::MukOmpi => "muk(ompi)",
+            AbiConfig::NativeAbi => "abi",
+        }
+    }
+}
+
+/// Run `f` monomorphized for the chosen ABI configuration — the runtime
+/// analogue of "relink the binary against a different libmpi".
+pub fn with_abi<R>(config: AbiConfig, f: impl AbiApp<R>) -> R {
+    match config {
+        AbiConfig::Mpich => f.run::<MpichAbi>(),
+        AbiConfig::Ompi => f.run::<OmpiAbi>(),
+        AbiConfig::MukMpich => f.run::<MukMpich>(),
+        AbiConfig::MukOmpi => f.run::<MukOmpi>(),
+        AbiConfig::NativeAbi => f.run::<NativeAbi>(),
+    }
+}
+
+/// An application parameterized over the MPI ABI (a generic closure).
+pub trait AbiApp<R> {
+    fn run<A: MpiAbi>(self) -> R;
+}

@@ -1,0 +1,146 @@
+//! OSU-microbenchmark analogues: `osu_mbw_mr` (message rate, Table 1)
+//! and `osu_latency` (§6.1's "network cost of a single message").
+//!
+//! Same shape as the originals: mbw_mr posts a window of nonblocking
+//! sends per iteration and waits for a one-byte ack; latency ping-pongs
+//! a message and halves the round-trip.
+
+use crate::api::{Dt, MpiAbi};
+
+/// osu_mbw_mr parameters (defaults match OSU 7.x).
+#[derive(Clone, Copy, Debug)]
+pub struct MbwMrParams {
+    /// Bytes per message (Table 1 uses 8).
+    pub msg_size: usize,
+    /// Nonblocking sends in flight per iteration.
+    pub window: usize,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Untimed warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for MbwMrParams {
+    fn default() -> Self {
+        MbwMrParams { msg_size: 8, window: 64, iters: 2000, warmup: 200 }
+    }
+}
+
+/// Run on exactly 2 ranks; returns messages/second (valid on rank 0).
+///
+/// Pairs: rank 0 sends `window` isends to rank 1, then blocks on a
+/// one-byte ack, `iters` times. Rate = `iters * window / elapsed`.
+pub fn mbw_mr<A: MpiAbi>(p: MbwMrParams) -> f64 {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    assert!(n >= 2, "osu_mbw_mr needs 2 ranks");
+    let dt = A::datatype(Dt::Byte);
+    let world = A::comm_world();
+    let sbuf = vec![0x5Au8; p.msg_size];
+    let mut rbuf = vec![0u8; p.msg_size];
+    let ack = [1u8];
+    let mut ackbuf = [0u8];
+
+    let mut rate = 0.0;
+    if me == 0 {
+        let mut reqs = vec![A::request_null(); p.window];
+        let mut sts = vec![A::status_empty(); p.window];
+        let mut t0 = 0.0;
+        for iter in 0..(p.warmup + p.iters) {
+            if iter == p.warmup {
+                t0 = A::wtime();
+            }
+            for r in reqs.iter_mut() {
+                A::isend(sbuf.as_ptr(), p.msg_size as i32, dt, 1, 100, world, r);
+            }
+            A::waitall(&mut reqs, &mut sts);
+            let mut st = A::status_empty();
+            A::recv(ackbuf.as_mut_ptr(), 1, dt, 1, 101, world, &mut st);
+        }
+        let dt_s = A::wtime() - t0;
+        rate = (p.iters * p.window) as f64 / dt_s;
+    } else if me == 1 {
+        let mut reqs = vec![A::request_null(); p.window];
+        let mut sts = vec![A::status_empty(); p.window];
+        for _ in 0..(p.warmup + p.iters) {
+            for r in reqs.iter_mut() {
+                A::irecv(rbuf.as_mut_ptr(), p.msg_size as i32, dt, 0, 100, world, r);
+            }
+            A::waitall(&mut reqs, &mut sts);
+            A::send(ack.as_ptr(), 1, dt, 0, 101, world);
+        }
+    }
+    A::barrier(world);
+    rate
+}
+
+/// osu_latency parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyParams {
+    pub msg_size: usize,
+    pub iters: usize,
+    pub warmup: usize,
+}
+
+impl Default for LatencyParams {
+    fn default() -> Self {
+        LatencyParams { msg_size: 8, iters: 1000, warmup: 100 }
+    }
+}
+
+/// Ping-pong latency in seconds (one-way; valid on rank 0).
+pub fn latency<A: MpiAbi>(p: LatencyParams) -> f64 {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    assert!(n >= 2, "osu_latency needs 2 ranks");
+    let dt = A::datatype(Dt::Byte);
+    let world = A::comm_world();
+    let sbuf = vec![0x5Au8; p.msg_size];
+    let mut rbuf = vec![0u8; p.msg_size];
+    let mut st = A::status_empty();
+
+    let mut lat = 0.0;
+    if me == 0 {
+        let mut t0 = 0.0;
+        for iter in 0..(p.warmup + p.iters) {
+            if iter == p.warmup {
+                t0 = A::wtime();
+            }
+            A::send(sbuf.as_ptr(), p.msg_size as i32, dt, 1, 1, world);
+            A::recv(rbuf.as_mut_ptr(), p.msg_size as i32, dt, 1, 2, world, &mut st);
+        }
+        lat = (A::wtime() - t0) / (2.0 * p.iters as f64);
+    } else if me == 1 {
+        for _ in 0..(p.warmup + p.iters) {
+            A::recv(rbuf.as_mut_ptr(), p.msg_size as i32, dt, 0, 1, world, &mut st);
+            A::send(sbuf.as_ptr(), p.msg_size as i32, dt, 0, 2, world);
+        }
+    }
+    A::barrier(world);
+    lat
+}
+
+/// The `MPI_Type_size` throughput micro-measurement of §6.1: mean
+/// nanoseconds per query over the builtin types. Pure representation
+/// decoding — requires no job.
+pub fn type_size_ns<A: MpiAbi>(iters: usize) -> f64 {
+    let dts = [
+        A::datatype(Dt::Char),
+        A::datatype(Dt::Int),
+        A::datatype(Dt::Float),
+        A::datatype(Dt::Double),
+        A::datatype(Dt::Int64),
+    ];
+    let mut sink = 0i64;
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let mut s = 0;
+        A::type_size(dts[i % dts.len()], &mut s);
+        sink = sink.wrapping_add(s as i64);
+    }
+    let e = t0.elapsed().as_nanos() as f64 / iters as f64;
+    std::hint::black_box(sink);
+    e
+}

@@ -1,0 +1,176 @@
+//! Hand-rolled measurement harness (criterion is not in the offline
+//! crate set): warmup, timed iterations, robust statistics, and
+//! criterion-style one-line reports.
+
+use std::time::Instant;
+
+/// Summary statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub samples: usize,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut samples: Vec<f64>) -> Stats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            mean,
+            median: samples[n / 2],
+            stddev: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+            samples: n,
+        }
+    }
+
+    /// criterion-ish report line.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  (±{})",
+            self.name,
+            fmt_time(self.min),
+            fmt_time(self.median),
+            fmt_time(self.max),
+            fmt_time(self.stddev),
+        )
+    }
+
+    /// Iterations (or events) per second at the mean.
+    pub fn rate(&self) -> f64 {
+        1.0 / self.mean
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark a closure: `samples` timed samples of `iters_per_sample`
+/// iterations each, after `warmup` untimed iterations.
+pub fn bench(name: &str, warmup: usize, samples: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        out.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    Stats::from_samples(name, out)
+}
+
+/// Benchmark a closure that measures itself (returns seconds per event):
+/// used for multi-rank benches where the timed region lives on rank 0.
+pub fn bench_external(name: &str, samples: usize, mut f: impl FnMut() -> f64) -> Stats {
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        out.push(f());
+    }
+    Stats::from_samples(name, out)
+}
+
+/// Simple fixed-width table printer for paper-style tables.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n=== {} ===\n", self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let s = bench("noop", 2, 5, 1000, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(s.samples, 5);
+        assert!(s.report().contains("noop"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(5e-9).contains("ns"));
+        assert!(fmt_time(5e-6).contains("µs"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(5.0).contains("s"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["MPI", "Messages/second"]);
+        t.row(&["impl-A".to_string(), "123".to_string()]);
+        let r = t.render();
+        assert!(r.contains("Demo") && r.contains("impl-A"));
+    }
+}

@@ -1,0 +1,257 @@
+//! Attribute caching (`MPI_Comm_create_keyval` / `MPI_Comm_set_attr` /…).
+//!
+//! Attributes matter to the ABI story for two reasons (§3.3): handle size
+//! is capped at pointer size *because* "attributes can always hold an MPI
+//! handle", and the copy/delete callbacks are among the functions a
+//! translation layer must trampoline (§6.2). Attribute values are
+//! word-sized (`void*`-equivalent `usize`).
+
+use super::world::with_ctx;
+use super::{err, CommId, RC};
+use crate::abi::constants as k;
+
+/// Copy callback result: whether to copy, and the (possibly transformed)
+/// value. Registered layers wrap the ABI-level callback in this closure
+/// form, converting handles/extra-state as needed.
+pub type CopyFn = Box<dyn Fn(CommId, i32, usize, usize) -> RC<Option<usize>>>;
+/// Delete callback.
+pub type DeleteFn = Box<dyn Fn(CommId, i32, usize, usize) -> RC<()>>;
+
+/// Keyval object.
+pub struct KeyvalObj {
+    pub copy: KeyvalCopy,
+    pub delete: KeyvalDelete,
+    pub extra_state: usize,
+}
+
+pub enum KeyvalCopy {
+    /// `MPI_COMM_NULL_COPY_FN` (0x0): never copied on dup.
+    NullCopy,
+    /// `MPI_COMM_DUP_FN` (0xD): copied verbatim on dup.
+    Dup,
+    User(CopyFn),
+}
+
+pub enum KeyvalDelete {
+    /// `MPI_COMM_NULL_DELETE_FN` (0x0): nothing to do.
+    NullDelete,
+    User(DeleteFn),
+}
+
+/// External keyval key: positive integers from 1 (0 is reserved so the
+/// standard's `MPI_KEYVAL_INVALID` (-106) can never collide).
+pub type KeyvalKey = i32;
+
+/// `MPI_Comm_create_keyval`.
+pub fn keyval_create(copy: KeyvalCopy, delete: KeyvalDelete, extra_state: usize) -> RC<KeyvalKey> {
+    with_ctx(|ctx| {
+        let id = ctx.tables.borrow_mut().keyvals.insert(KeyvalObj { copy, delete, extra_state });
+        Ok(id as i32 + 1)
+    })
+}
+
+/// `MPI_Comm_free_keyval`.
+pub fn keyval_free(key: KeyvalKey) -> RC<()> {
+    if key <= 0 {
+        return Err(err!(MPI_ERR_KEYVAL));
+    }
+    with_ctx(|ctx| {
+        ctx.tables
+            .borrow_mut()
+            .keyvals
+            .remove((key - 1) as u32)
+            .map(|_| ())
+            .ok_or(err!(MPI_ERR_KEYVAL))
+    })
+}
+
+/// `MPI_Comm_set_attr`. The attribute value is word-sized, per §3.3.
+pub fn set_attr(comm: CommId, key: KeyvalKey, value: usize) -> RC<()> {
+    if key <= 0 {
+        return Err(err!(MPI_ERR_KEYVAL));
+    }
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        if !t.keyvals.contains((key - 1) as u32) && !is_predefined_key(key) {
+            return Err(err!(MPI_ERR_KEYVAL));
+        }
+        let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        c.attrs.insert(key, value);
+        Ok(())
+    })
+}
+
+/// `MPI_Comm_get_attr`: `Ok(None)` = flag false.
+pub fn get_attr(comm: CommId, key: KeyvalKey) -> RC<Option<usize>> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let c = t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        if let Some(&v) = c.attrs.get(&key) {
+            return Ok(Some(v));
+        }
+        // Predefined attributes on COMM_WORLD.
+        if comm == super::reserved::COMM_WORLD {
+            return Ok(predefined_attr(key, ctx.world.size));
+        }
+        Ok(None)
+    })
+}
+
+/// `MPI_Comm_delete_attr` (runs the delete callback).
+pub fn delete_attr(comm: CommId, key: KeyvalKey) -> RC<()> {
+    let (value, extra) = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        let v = c.attrs.remove(&key).ok_or(err!(MPI_ERR_KEYVAL))?;
+        let extra = t.keyvals.get((key - 1) as u32).map(|kv| kv.extra_state).unwrap_or(0);
+        Ok((v, extra))
+    })?;
+    run_delete(comm, key, value, extra)
+}
+
+/// Copy attributes from `src` to `dst` on `MPI_Comm_dup`, honoring each
+/// keyval's copy callback.
+pub fn copy_attrs_for_dup(src: CommId, dst: CommId) -> RC<()> {
+    // Snapshot attrs + copy behaviors without holding borrows during
+    // callbacks (callbacks may call MPI).
+    let snapshot: Vec<(KeyvalKey, usize, usize)> = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let c = t.comms.get(src.0).ok_or(err!(MPI_ERR_COMM))?;
+        Ok(c.attrs
+            .iter()
+            .map(|(&k, &v)| {
+                let extra = t.keyvals.get((k - 1) as u32).map(|kv| kv.extra_state).unwrap_or(0);
+                (k, v, extra)
+            })
+            .collect())
+    })?;
+    for (key, value, extra) in snapshot {
+        let copied = run_copy(src, key, value, extra)?;
+        if let Some(v) = copied {
+            with_ctx(|ctx| {
+                let mut t = ctx.tables.borrow_mut();
+                let c = t.comms.get_mut(dst.0).ok_or(err!(MPI_ERR_COMM))?;
+                c.attrs.insert(key, v);
+                Ok(())
+            })?;
+        }
+    }
+    Ok(())
+}
+
+/// Run delete callbacks for all attributes of a comm being freed.
+pub fn delete_all_attrs(comm: CommId) -> RC<()> {
+    let keys: Vec<KeyvalKey> = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let c = t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        Ok(c.attrs.keys().copied().collect())
+    })?;
+    for key in keys {
+        // Ignore missing-keyval errors: keyval may have been freed already
+        // (MPI says keyval free is deferred; we simplify).
+        let _ = delete_attr(comm, key);
+    }
+    Ok(())
+}
+
+fn run_copy(comm: CommId, key: KeyvalKey, value: usize, extra: usize) -> RC<Option<usize>> {
+    // Move the callback out of the table during invocation (it may call
+    // back into MPI).
+    enum Plan {
+        Keep(Option<usize>),
+        Call(CopyFn),
+    }
+    let plan = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let kv = match t.keyvals.get_mut((key - 1) as u32) {
+            Some(kv) => kv,
+            None => return Ok(Plan::Keep(None)), // predefined/foreign key: no copy
+        };
+        Ok(match &mut kv.copy {
+            KeyvalCopy::NullCopy => Plan::Keep(None),
+            KeyvalCopy::Dup => Plan::Keep(Some(value)),
+            KeyvalCopy::User(_) => {
+                let f = std::mem::replace(&mut kv.copy, KeyvalCopy::NullCopy);
+                match f {
+                    KeyvalCopy::User(f) => Plan::Call(f),
+                    _ => unreachable!(),
+                }
+            }
+        })
+    })?;
+    match plan {
+        Plan::Keep(v) => Ok(v),
+        Plan::Call(f) => {
+            let out = f(comm, key, extra, value);
+            with_ctx(|ctx| {
+                let mut t = ctx.tables.borrow_mut();
+                if let Some(kv) = t.keyvals.get_mut((key - 1) as u32) {
+                    kv.copy = KeyvalCopy::User(f);
+                }
+                Ok(())
+            })?;
+            out
+        }
+    }
+}
+
+fn run_delete(comm: CommId, key: KeyvalKey, value: usize, extra: usize) -> RC<()> {
+    enum Plan {
+        Nothing,
+        Call(DeleteFn),
+    }
+    let plan = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let kv = match t.keyvals.get_mut((key - 1) as u32) {
+            Some(kv) => kv,
+            None => return Ok(Plan::Nothing),
+        };
+        Ok(match &mut kv.delete {
+            KeyvalDelete::NullDelete => Plan::Nothing,
+            KeyvalDelete::User(_) => {
+                let f = std::mem::replace(&mut kv.delete, KeyvalDelete::NullDelete);
+                match f {
+                    KeyvalDelete::User(f) => Plan::Call(f),
+                    _ => unreachable!(),
+                }
+            }
+        })
+    })?;
+    match plan {
+        Plan::Nothing => Ok(()),
+        Plan::Call(f) => {
+            let out = f(comm, key, extra, value);
+            with_ctx(|ctx| {
+                let mut t = ctx.tables.borrow_mut();
+                if let Some(kv) = t.keyvals.get_mut((key - 1) as u32) {
+                    kv.delete = KeyvalDelete::User(f);
+                }
+                Ok(())
+            })?;
+            out
+        }
+    }
+}
+
+fn is_predefined_key(key: KeyvalKey) -> bool {
+    matches!(
+        key,
+        k::MPI_TAG_UB
+            | k::MPI_HOST
+            | k::MPI_IO
+            | k::MPI_WTIME_IS_GLOBAL
+            | k::MPI_UNIVERSE_SIZE
+            | k::MPI_LASTUSEDCODE
+            | k::MPI_APPNUM
+    )
+}
+
+fn predefined_attr(key: KeyvalKey, world_size: usize) -> Option<usize> {
+    match key {
+        k::MPI_TAG_UB => Some(k::TAG_UB_VALUE as usize),
+        k::MPI_WTIME_IS_GLOBAL => Some(1),
+        k::MPI_UNIVERSE_SIZE => Some(world_size),
+        k::MPI_IO => Some(0), // rank 0 does I/O; value is "any rank" semantics simplified
+        _ => None,
+    }
+}

@@ -1,0 +1,250 @@
+//! Collective operations, implemented over the pt2pt engine on each
+//! communicator's dedicated collective context plane.
+//!
+//! Algorithms: dissemination barrier, binomial-tree bcast/reduce,
+//! reduce+bcast allreduce, linear (root-rooted) gather/scatter familes,
+//! pairwise alltoall, linear scan. All collectives advance a per-comm
+//! collective tag so consecutive collectives never cross-match.
+
+mod alltoall;
+mod bcast_reduce;
+mod gather_scatter;
+
+pub use alltoall::{alltoall, alltoall_bytes, alltoallv, alltoallw, ialltoallw, ibarrier, AlltoallwArgs};
+pub use bcast_reduce::{allreduce, bcast, exscan, reduce, reduce_scatter_block, scan};
+pub use gather_scatter::{allgather, allgatherv, gather, gatherv, scatter, scatterv};
+
+use super::comm::{advance_coll_tag, comm_snapshot};
+use super::request::{enqueue_send, progress};
+use super::transport::{Envelope, MsgKind, Payload};
+use super::world::{with_ctx, RankCtx};
+use super::{CommId, RC};
+
+/// Snapshot of what a collective needs: members, my comm rank, the
+/// collective context id, and this collective's tag.
+pub(crate) struct CollCtx {
+    pub members: Vec<usize>,
+    pub my_rank: usize,
+    pub context: u32,
+    pub tag: i32,
+}
+
+impl CollCtx {
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Begin a collective on `comm` (advances the collective sequence).
+///
+/// The returned tag is the collective's *base* tag; each collective may
+/// use up to [`PHASES_PER_COLL`] consecutive tags (`base..base+32`) for
+/// internal rounds (e.g. dissemination-barrier rounds), guaranteed not to
+/// collide with neighbouring collectives on the same comm.
+pub(crate) fn coll_begin(comm: CommId) -> RC<CollCtx> {
+    let (members, my_rank, _p, context) = comm_snapshot(comm)?;
+    let seq = advance_coll_tag(comm)?;
+    Ok(CollCtx { members, my_rank, context, tag: (seq & 0xFF_FFFF) * PHASES_PER_COLL })
+}
+
+/// Tag slots reserved per collective for internal phases/rounds.
+pub(crate) const PHASES_PER_COLL: i32 = 32;
+
+/// Send raw bytes to comm rank `dst` on the collective plane.
+pub(crate) fn coll_send(ctx: &RankCtx, cc: &CollCtx, dst: usize, payload: Payload) {
+    let env = Envelope {
+        src: ctx.rank as u32,
+        context: cc.context,
+        tag: cc.tag,
+        kind: MsgKind::Eager,
+        seq: 0,
+        payload,
+    };
+    enqueue_send(ctx, cc.members[dst], env);
+}
+
+/// Blocking receive of raw bytes from comm rank `src` on the collective
+/// plane (bypasses the request engine: collective internals own their
+/// buffers).
+pub(crate) fn coll_recv(ctx: &RankCtx, cc: &CollCtx, src: usize) -> Payload {
+    let want_src = cc.members[src] as i32;
+    loop {
+        progress(ctx);
+        {
+            let mut st = ctx.state.borrow_mut();
+            let found = st
+                .unexpected
+                .iter()
+                .position(|e| e.matches(cc.context, want_src, cc.tag));
+            if let Some(i) = found {
+                return st.unexpected.remove(i).unwrap().payload;
+            }
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// `MPI_Barrier`: dissemination algorithm (⌈log2 n⌉ rounds), one tag
+/// phase per round so a racing peer's later round never cross-matches.
+pub fn barrier(comm: CommId) -> RC<()> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        if n <= 1 {
+            return Ok(());
+        }
+        let mut k = 1usize;
+        let mut round = 0i32;
+        while k < n {
+            let dst = (cc.my_rank + k) % n;
+            let src = (cc.my_rank + n - k) % n;
+            let rc = CollCtx { tag: cc.tag + round, ..cc_clone(&cc) };
+            coll_send(ctx, &rc, dst, Payload::empty());
+            let _ = coll_recv(ctx, &rc, src);
+            k <<= 1;
+            round += 1;
+        }
+        Ok(())
+    })
+}
+
+/// Cheap CollCtx clone for per-phase tag adjustment.
+pub(crate) fn cc_clone(cc: &CollCtx) -> CollCtx {
+    CollCtx { members: cc.members.clone(), my_rank: cc.my_rank, context: cc.context, tag: cc.tag }
+}
+
+/// Engine-internal: broadcast a fixed byte buffer (used by comm creation
+/// before the new comm exists).
+pub fn bcast_bytes(buf: &mut [u8], root: usize, comm: CommId) -> RC<()> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        bcast_bytes_cc(ctx, &cc, buf, root);
+        Ok(())
+    })
+}
+
+/// Binomial-tree byte broadcast over an existing CollCtx.
+pub(crate) fn bcast_bytes_cc(ctx: &RankCtx, cc: &CollCtx, buf: &mut [u8], root: usize) {
+    let n = cc.size();
+    if n <= 1 {
+        return;
+    }
+    // Virtual ranks with root at 0.
+    let vrank = (cc.my_rank + n - root) % n;
+    // Receive from parent (unless root).
+    if vrank != 0 {
+        let parent = parent_of(vrank);
+        let parent_real = (parent + root) % n;
+        let p = coll_recv(ctx, cc, parent_real);
+        let data = p.as_slice();
+        let take = data.len().min(buf.len());
+        buf[..take].copy_from_slice(&data[..take]);
+    }
+    // Forward to children.
+    for child in children_of(vrank, n) {
+        let child_real = (child + root) % n;
+        coll_send(ctx, cc, child_real, Payload::from_slice(buf));
+    }
+}
+
+/// Engine-internal: gather fixed-size byte blocks at `root`.
+/// `send.len()` bytes from every rank land at `recv[r*send.len()..]`.
+pub fn gather_bytes(send: &[u8], recv: &mut [u8], root: usize, comm: CommId) -> RC<()> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let blk = send.len();
+        if cc.my_rank == root {
+            recv[root * blk..(root + 1) * blk].copy_from_slice(send);
+            for r in 0..n {
+                if r == root {
+                    continue;
+                }
+                let p = coll_recv(ctx, &cc, r);
+                recv[r * blk..r * blk + p.len().min(blk)]
+                    .copy_from_slice(&p.as_slice()[..p.len().min(blk)]);
+            }
+        } else {
+            coll_send(ctx, &cc, root, Payload::from_slice(send));
+        }
+        Ok(())
+    })
+}
+
+/// Engine-internal: scatter variable-size blobs from `root`; returns this
+/// rank's blob.
+pub fn scatter_var_bytes(blobs: &[Vec<u8>], root: usize, comm: CommId) -> RC<Vec<u8>> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        if cc.my_rank == root {
+            for r in 0..n {
+                if r == root {
+                    continue;
+                }
+                coll_send(ctx, &cc, r, Payload::from_slice(&blobs[r]));
+            }
+            Ok(blobs[root].clone())
+        } else {
+            Ok(coll_recv(ctx, &cc, root).as_slice().to_vec())
+        }
+    })
+}
+
+/// Binomial-tree helpers on virtual ranks (root = 0).
+pub(crate) fn parent_of(vrank: usize) -> usize {
+    debug_assert!(vrank != 0);
+    vrank & (vrank - 1) // clear lowest set bit
+}
+
+pub(crate) fn children_of(vrank: usize, n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut bit = 1usize;
+    // Children are vrank | bit for bits below the lowest set bit of vrank
+    // (or all bits for root), while in range.
+    let limit = if vrank == 0 { n.next_power_of_two() } else { vrank & vrank.wrapping_neg() };
+    while bit < limit {
+        let c = vrank | bit;
+        if c < n && c != vrank {
+            out.push(c);
+        }
+        bit <<= 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_tree_shape() {
+        // n = 8: 0 -> {1, 2, 4}; 2 -> {3}; 4 -> {5, 6}; 6 -> {7}.
+        assert_eq!(children_of(0, 8), vec![1, 2, 4]);
+        assert_eq!(children_of(2, 8), vec![3]);
+        assert_eq!(children_of(4, 8), vec![5, 6]);
+        assert_eq!(children_of(6, 8), vec![7]);
+        assert_eq!(children_of(7, 8), Vec::<usize>::new());
+        for v in 1..8 {
+            let p = parent_of(v);
+            assert!(children_of(p, 8).contains(&v), "{p} must parent {v}");
+        }
+    }
+
+    #[test]
+    fn binomial_tree_nonpow2() {
+        // n = 6: every non-root has a parent, all nodes covered exactly once.
+        let n = 6;
+        let mut seen = vec![false; n];
+        seen[0] = true;
+        let mut stack = vec![0usize];
+        while let Some(v) = stack.pop() {
+            for c in children_of(v, n) {
+                assert!(!seen[c], "child {c} visited twice");
+                seen[c] = true;
+                stack.push(c);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all ranks covered: {seen:?}");
+    }
+}

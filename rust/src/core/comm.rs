@@ -1,0 +1,255 @@
+//! Communicators.
+//!
+//! A communicator is (group, context-id pair, attributes, error handler,
+//! name). Context ids separate traffic planes: each comm owns a pt2pt
+//! plane and a collective plane (as MPICH does), allocated world-globally
+//! and agreed upon collectively at creation.
+
+use std::collections::HashMap;
+
+use super::slab::Slab;
+use super::world::with_ctx;
+use super::{err, CommId, ErrhId, GroupId, RC};
+
+#[derive(Debug)]
+pub struct CommObj {
+    /// Member world ranks, in comm-rank order.
+    pub members: Vec<usize>,
+    /// The calling rank's rank within this comm.
+    pub my_rank: usize,
+    /// Context id for point-to-point traffic.
+    pub ctx_pt2pt: u32,
+    /// Context id for collective traffic.
+    pub ctx_coll: u32,
+    /// Per-rank collective sequence number (tag space for collectives).
+    pub coll_seq: i32,
+    /// Cached attributes (word-sized values, §3.3).
+    pub attrs: HashMap<i32, usize>,
+    pub errhandler: ErrhId,
+    pub name: String,
+    pub predefined: bool,
+}
+
+impl CommObj {
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// World rank of comm rank `r`.
+    pub fn world_rank(&self, r: usize) -> Option<usize> {
+        self.members.get(r).copied()
+    }
+
+    /// Next collective tag (advances the per-comm collective sequence).
+    pub fn next_coll_tag(&mut self) -> i32 {
+        self.coll_seq = self.coll_seq.wrapping_add(1) & 0x3FFF_FFFF;
+        self.coll_seq
+    }
+}
+
+/// Install placeholder WORLD/SELF comms; sized at `MPI_Init` by
+/// [`finish_predefined`] (world size unknown at table construction).
+pub fn install_predefined(comms: &mut Slab<CommObj>) {
+    for (id, (name, ctxp, ctxc)) in [
+        (super::reserved::COMM_WORLD.0, ("MPI_COMM_WORLD", 0, 1)),
+        (super::reserved::COMM_SELF.0, ("MPI_COMM_SELF", 2, 3)),
+    ] {
+        comms.insert_at(
+            id,
+            CommObj {
+                members: Vec::new(),
+                my_rank: 0,
+                ctx_pt2pt: ctxp,
+                ctx_coll: ctxc,
+                coll_seq: 0,
+                attrs: HashMap::new(),
+                errhandler: super::reserved::ERRH_ARE_FATAL,
+                name: name.to_string(),
+                predefined: true,
+            },
+        );
+    }
+}
+
+/// Size the predefined comms once world size/rank are known.
+pub fn finish_predefined(comms: &mut Slab<CommObj>, world_size: usize, rank: usize) {
+    let w = comms.get_mut(super::reserved::COMM_WORLD.0).unwrap();
+    w.members = (0..world_size).collect();
+    w.my_rank = rank;
+    let s = comms.get_mut(super::reserved::COMM_SELF.0).unwrap();
+    s.members = vec![rank];
+    s.my_rank = 0;
+}
+
+/// `MPI_Comm_size`.
+#[inline]
+pub fn comm_size(comm: CommId) -> RC<i32> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?.size() as i32)
+    })
+}
+
+/// `MPI_Comm_rank`.
+#[inline]
+pub fn comm_rank(comm: CommId) -> RC<i32> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?.my_rank as i32)
+    })
+}
+
+/// `MPI_Comm_group`.
+pub fn comm_group(comm: CommId) -> RC<GroupId> {
+    let members = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?.members.clone())
+    })?;
+    super::group::group_from_members(members)
+}
+
+/// `MPI_Comm_compare`.
+pub fn comm_compare(a: CommId, b: CommId) -> RC<i32> {
+    use crate::abi::constants::{MPI_CONGRUENT, MPI_IDENT, MPI_SIMILAR, MPI_UNEQUAL};
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let ca = t.comms.get(a.0).ok_or(err!(MPI_ERR_COMM))?;
+        let cb = t.comms.get(b.0).ok_or(err!(MPI_ERR_COMM))?;
+        Ok(if a == b {
+            MPI_IDENT
+        } else if ca.members == cb.members {
+            MPI_CONGRUENT
+        } else if {
+            let sa: std::collections::HashSet<_> = ca.members.iter().collect();
+            let sb: std::collections::HashSet<_> = cb.members.iter().collect();
+            sa == sb
+        } {
+            MPI_SIMILAR
+        } else {
+            MPI_UNEQUAL
+        })
+    })
+}
+
+/// `MPI_Comm_set_name` / `MPI_Comm_get_name`.
+pub fn comm_set_name(comm: CommId, name: &str) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        c.name = name.chars().take(crate::abi::constants::MPI_MAX_OBJECT_NAME - 1).collect();
+        Ok(())
+    })
+}
+
+pub fn comm_get_name(comm: CommId) -> RC<String> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?.name.clone())
+    })
+}
+
+/// `MPI_Comm_set_errhandler` / `MPI_Comm_get_errhandler`.
+pub fn comm_set_errhandler(comm: CommId, errh: ErrhId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        if !t.errhs.contains(errh.0) {
+            return Err(err!(MPI_ERR_ERRHANDLER));
+        }
+        let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        c.errhandler = errh;
+        Ok(())
+    })
+}
+
+pub fn comm_get_errhandler(comm: CommId) -> RC<ErrhId> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?.errhandler)
+    })
+}
+
+/// Engine-internal: insert a fully-formed comm object.
+pub fn insert_comm(
+    members: Vec<usize>,
+    my_rank: usize,
+    ctx_pt2pt: u32,
+    ctx_coll: u32,
+) -> RC<CommId> {
+    with_ctx(|ctx| {
+        Ok(CommId(ctx.tables.borrow_mut().comms.insert(CommObj {
+            members,
+            my_rank,
+            ctx_pt2pt,
+            ctx_coll,
+            coll_seq: 0,
+            attrs: HashMap::new(),
+            errhandler: super::reserved::ERRH_ARE_FATAL,
+            name: String::new(),
+            predefined: false,
+        })))
+    })
+}
+
+/// `MPI_Comm_free` (runs attribute delete callbacks first).
+pub fn comm_free(comm: CommId) -> RC<()> {
+    super::attr::delete_all_attrs(comm)?;
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        match t.comms.get(comm.0) {
+            Some(c) if c.predefined => Err(err!(MPI_ERR_COMM)),
+            Some(_) => {
+                t.comms.remove(comm.0);
+                Ok(())
+            }
+            None => Err(err!(MPI_ERR_COMM)),
+        }
+    })
+}
+
+/// Pt2pt fast path: resolve (comm size, world rank of `r` or None for
+/// wildcard/special, pt2pt context) without cloning the member list.
+/// Takes the rank context directly: this sits on the per-message path,
+/// so it must not pay a second TLS lookup.
+#[inline]
+pub(crate) fn comm_route(
+    ctx: &super::world::RankCtx,
+    comm: CommId,
+    r: i32,
+) -> RC<(usize, Option<usize>, u32)> {
+    let t = ctx.tables.borrow();
+    let c = t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+    let dst = if r >= 0 { c.members.get(r as usize).copied() } else { None };
+    Ok((c.members.len(), dst, c.ctx_pt2pt))
+}
+
+/// World rank → comm rank (status source translation) without cloning.
+#[inline]
+pub(crate) fn comm_rank_of_world(comm: CommId, world_rank: i32) -> RC<Option<i32>> {
+    if world_rank < 0 {
+        return Ok(None);
+    }
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let c = t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        Ok(c.members.iter().position(|&m| m == world_rank as usize).map(|p| p as i32))
+    })
+}
+
+/// Snapshot (members, my_rank, ctx_pt2pt, ctx_coll, next coll tag) — the
+/// common read collectives/pt2pt need; one borrow.
+pub(crate) fn comm_snapshot(comm: CommId) -> RC<(Vec<usize>, usize, u32, u32)> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let c = t.comms.get(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        Ok((c.members.clone(), c.my_rank, c.ctx_pt2pt, c.ctx_coll))
+    })
+}
+
+/// Advance and return the collective tag for `comm`.
+pub(crate) fn advance_coll_tag(comm: CommId) -> RC<i32> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        Ok(c.next_coll_tag())
+    })
+}

@@ -1,0 +1,367 @@
+//! The datatype engine: builtin types, derived type constructors, and the
+//! size/extent algebra.
+//!
+//! Derived datatypes are what make ABI translation of `alltoallw`-style
+//! vector-of-datatype arguments interesting (§6.2), so the engine supports
+//! the full constructor family: contiguous, vector/hvector,
+//! indexed/hindexed, struct, resized, dup.
+
+pub mod pack;
+
+use once_cell::sync::Lazy;
+
+use super::slab::Slab;
+use super::world::with_ctx;
+use super::{err, DtId, RC};
+use crate::abi::datatypes as adt;
+
+/// Scalar element classes, for reduction-op dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalarKind {
+    I8,
+    U8,
+    I16,
+    U16,
+    I32,
+    U32,
+    I64,
+    U64,
+    F32,
+    F64,
+    /// C `_Bool` / logical.
+    Bool,
+    /// (float, int) pair for MINLOC/MAXLOC.
+    FloatInt,
+    /// (double, int) pair.
+    DoubleInt,
+    /// (int, int) pair.
+    IntInt,
+    /// Untyped bytes (BYTE, CHAR, PACKED…): only bitwise ops legal-ish.
+    Bytes,
+}
+
+/// Structure of a datatype.
+pub enum TypeKind {
+    /// Predefined scalar; `abi_dt` is the standard-ABI constant (canonical
+    /// name of the builtin, independent of which impl ABI is in use).
+    Builtin { abi_dt: usize },
+    Contiguous { count: usize, child: DtId },
+    /// `stride` in elements (Vector) or bytes (Hvector) of `child`.
+    Vector { count: usize, blocklen: usize, stride_bytes: isize, child: DtId },
+    /// Blocks of (blocklen, displacement-in-bytes).
+    Indexed { blocks: Vec<(usize, isize)>, child: DtId },
+    /// Blocks of (blocklen, displacement-in-bytes, type).
+    Struct { blocks: Vec<(usize, isize, DtId)> },
+    Resized { child: DtId },
+    Dup { child: DtId },
+}
+
+/// A datatype object.
+pub struct DatatypeObj {
+    pub kind: TypeKind,
+    /// Packed payload bytes per item.
+    pub size: usize,
+    /// Memory span per item (for iterating arrays of this type).
+    pub extent: isize,
+    pub lb: isize,
+    pub committed: bool,
+    pub predefined: bool,
+    /// `MPI_Type_get_envelope` combiner.
+    pub combiner: i32,
+    /// `true` iff memory layout == packed layout (no holes): enables the
+    /// single-memcpy send fast path.
+    pub contiguous: bool,
+}
+
+/// Install all builtin datatypes at their reserved ids
+/// (index in [`adt::PREDEFINED_DATATYPES`]).
+pub fn install_predefined(dtypes: &mut Slab<DatatypeObj>) {
+    for (i, &(_, abi_dt)) in adt::PREDEFINED_DATATYPES.iter().enumerate() {
+        let size = adt::platform_size_of(abi_dt).unwrap_or(0);
+        dtypes.insert_at(
+            i as u32,
+            DatatypeObj {
+                kind: TypeKind::Builtin { abi_dt },
+                size,
+                extent: size as isize,
+                lb: 0,
+                committed: true,
+                predefined: true,
+                combiner: crate::abi::constants::MPI_COMBINER_NAMED,
+                contiguous: true,
+            },
+        );
+    }
+}
+
+/// Builtin dt id (slab index) for a standard-ABI datatype constant.
+/// O(1): a 1024-entry table indexed by the Huffman value.
+pub fn builtin_id_of_abi(abi_dt: usize) -> Option<DtId> {
+    static TABLE: Lazy<[u16; 1024]> = Lazy::new(|| {
+        let mut t = [u16::MAX; 1024];
+        for (i, &(_, v)) in adt::PREDEFINED_DATATYPES.iter().enumerate() {
+            t[v] = i as u16;
+        }
+        t
+    });
+    if abi_dt < 1024 {
+        let i = TABLE[abi_dt];
+        (i != u16::MAX).then(|| DtId(i as u32))
+    } else {
+        None
+    }
+}
+
+/// Standard-ABI constant of a builtin dt id (inverse of
+/// [`builtin_id_of_abi`]).
+pub fn abi_of_builtin_id(dt: DtId) -> Option<usize> {
+    adt::PREDEFINED_DATATYPES.get(dt.0 as usize).map(|&(_, v)| v)
+}
+
+/// Scalar kind of a *builtin* standard-ABI datatype.
+pub fn scalar_kind(abi_dt: usize) -> ScalarKind {
+    use ScalarKind::*;
+    match abi_dt {
+        adt::MPI_INT8_T | adt::MPI_SIGNED_CHAR => I8,
+        adt::MPI_UINT8_T | adt::MPI_UNSIGNED_CHAR => U8,
+        adt::MPI_INT16_T | adt::MPI_SHORT => I16,
+        adt::MPI_UINT16_T | adt::MPI_UNSIGNED_SHORT => U16,
+        adt::MPI_INT32_T | adt::MPI_INT | adt::MPI_INTEGER => I32,
+        adt::MPI_UINT32_T | adt::MPI_UNSIGNED => U32,
+        adt::MPI_INT64_T | adt::MPI_LONG | adt::MPI_LONG_LONG | adt::MPI_AINT
+        | adt::MPI_COUNT | adt::MPI_OFFSET => I64,
+        adt::MPI_UINT64_T | adt::MPI_UNSIGNED_LONG | adt::MPI_UNSIGNED_LONG_LONG => U64,
+        adt::MPI_FLOAT | adt::MPI_FLOAT32_T | adt::MPI_REAL => F32,
+        adt::MPI_DOUBLE | adt::MPI_FLOAT64_T | adt::MPI_DOUBLE_PRECISION => F64,
+        adt::MPI_C_BOOL | adt::MPI_LOGICAL => Bool,
+        adt::MPI_FLOAT_INT => FloatInt,
+        adt::MPI_DOUBLE_INT => DoubleInt,
+        adt::MPI_2INT => IntInt,
+        _ => Bytes,
+    }
+}
+
+pub(crate) fn get_obj<R>(dt: DtId, f: impl FnOnce(&DatatypeObj) -> R) -> RC<R> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(f(t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?))
+    })
+}
+
+/// `MPI_Type_size`.
+#[inline]
+pub fn type_size(dt: DtId) -> RC<usize> {
+    get_obj(dt, |o| o.size)
+}
+
+/// `MPI_Type_get_extent` → (lb, extent).
+pub fn type_get_extent(dt: DtId) -> RC<(isize, isize)> {
+    get_obj(dt, |o| (o.lb, o.extent))
+}
+
+/// `MPI_Type_get_envelope` (combiner only; reconstruction args omitted).
+pub fn type_get_combiner(dt: DtId) -> RC<i32> {
+    get_obj(dt, |o| o.combiner)
+}
+
+/// `MPI_Type_commit`.
+pub fn type_commit(dt: DtId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        t.dtypes.get_mut(dt.0).ok_or(err!(MPI_ERR_TYPE))?.committed = true;
+        Ok(())
+    })
+}
+
+/// `MPI_Type_free`.
+pub fn type_free(dt: DtId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        match t.dtypes.get(dt.0) {
+            Some(o) if o.predefined => Err(err!(MPI_ERR_TYPE)),
+            Some(_) => {
+                t.dtypes.remove(dt.0);
+                Ok(())
+            }
+            None => Err(err!(MPI_ERR_TYPE)),
+        }
+    })
+}
+
+fn insert(obj: DatatypeObj) -> RC<DtId> {
+    with_ctx(|ctx| Ok(DtId(ctx.tables.borrow_mut().dtypes.insert(obj))))
+}
+
+fn child_props(child: DtId) -> RC<(usize, isize, isize, bool)> {
+    get_obj(child, |o| (o.size, o.extent, o.lb, o.contiguous))
+}
+
+/// `MPI_Type_contiguous`.
+pub fn type_contiguous(count: usize, child: DtId) -> RC<DtId> {
+    let (csize, cext, clb, ccontig) = child_props(child)?;
+    insert(DatatypeObj {
+        kind: TypeKind::Contiguous { count, child },
+        size: csize * count,
+        extent: cext * count as isize,
+        lb: clb,
+        committed: false,
+        predefined: false,
+        combiner: crate::abi::constants::MPI_COMBINER_CONTIGUOUS,
+        contiguous: ccontig && cext == csize as isize,
+    })
+}
+
+/// `MPI_Type_vector` (stride in elements).
+pub fn type_vector(count: usize, blocklen: usize, stride: isize, child: DtId) -> RC<DtId> {
+    let (_, cext, _, _) = child_props(child)?;
+    type_hvector_bytes(
+        count,
+        blocklen,
+        stride * cext,
+        child,
+        crate::abi::constants::MPI_COMBINER_VECTOR,
+    )
+}
+
+/// `MPI_Type_create_hvector` (stride in bytes).
+pub fn type_hvector(count: usize, blocklen: usize, stride_bytes: isize, child: DtId) -> RC<DtId> {
+    type_hvector_bytes(
+        count,
+        blocklen,
+        stride_bytes,
+        child,
+        crate::abi::constants::MPI_COMBINER_HVECTOR,
+    )
+}
+
+fn type_hvector_bytes(
+    count: usize,
+    blocklen: usize,
+    stride_bytes: isize,
+    child: DtId,
+    combiner: i32,
+) -> RC<DtId> {
+    let (csize, cext, clb, _) = child_props(child)?;
+    let block_span = blocklen as isize * cext;
+    let (mut lo, mut hi) = (clb, block_span);
+    if count > 0 {
+        let last = (count - 1) as isize * stride_bytes;
+        lo = lo.min(clb + last.min(0));
+        hi = hi.max(last + block_span);
+    }
+    insert(DatatypeObj {
+        kind: TypeKind::Vector { count, blocklen, stride_bytes, child },
+        size: csize * blocklen * count,
+        extent: hi - lo.min(0),
+        lb: lo.min(0),
+        committed: false,
+        predefined: false,
+        combiner,
+        contiguous: false,
+    })
+}
+
+/// `MPI_Type_indexed` (displacements in elements of `child`).
+pub fn type_indexed(blocks: &[(usize, isize)], child: DtId) -> RC<DtId> {
+    let (_, cext, _, _) = child_props(child)?;
+    let byte_blocks: Vec<(usize, isize)> =
+        blocks.iter().map(|&(len, disp)| (len, disp * cext)).collect();
+    indexed_common(byte_blocks, child, crate::abi::constants::MPI_COMBINER_INDEXED)
+}
+
+/// `MPI_Type_create_hindexed` (displacements in bytes).
+pub fn type_hindexed(blocks: &[(usize, isize)], child: DtId) -> RC<DtId> {
+    indexed_common(blocks.to_vec(), child, crate::abi::constants::MPI_COMBINER_HINDEXED)
+}
+
+fn indexed_common(blocks: Vec<(usize, isize)>, child: DtId, combiner: i32) -> RC<DtId> {
+    let (csize, cext, _, _) = child_props(child)?;
+    let size = blocks.iter().map(|&(len, _)| len * csize).sum();
+    let mut lo = 0isize;
+    let mut hi = 0isize;
+    for &(len, disp) in &blocks {
+        lo = lo.min(disp);
+        hi = hi.max(disp + len as isize * cext);
+    }
+    insert(DatatypeObj {
+        kind: TypeKind::Indexed { blocks, child },
+        size,
+        extent: hi - lo,
+        lb: lo,
+        committed: false,
+        predefined: false,
+        combiner,
+        contiguous: false,
+    })
+}
+
+/// `MPI_Type_create_struct`.
+pub fn type_struct(blocks: &[(usize, isize, DtId)]) -> RC<DtId> {
+    let mut size = 0usize;
+    let mut lo = 0isize;
+    let mut hi = 0isize;
+    for &(len, disp, t) in blocks {
+        let (csize, cext, clb, _) = child_props(t)?;
+        size += len * csize;
+        lo = lo.min(disp + clb);
+        hi = hi.max(disp + len as isize * cext);
+    }
+    insert(DatatypeObj {
+        kind: TypeKind::Struct { blocks: blocks.to_vec() },
+        size,
+        extent: hi - lo,
+        lb: lo,
+        committed: false,
+        predefined: false,
+        combiner: crate::abi::constants::MPI_COMBINER_STRUCT,
+        contiguous: false,
+    })
+}
+
+/// `MPI_Type_create_resized`.
+pub fn type_resized(child: DtId, lb: isize, extent: isize) -> RC<DtId> {
+    let (csize, _, _, _) = child_props(child)?;
+    insert(DatatypeObj {
+        kind: TypeKind::Resized { child },
+        size: csize,
+        extent,
+        lb,
+        committed: false,
+        predefined: false,
+        combiner: crate::abi::constants::MPI_COMBINER_RESIZED,
+        contiguous: false,
+    })
+}
+
+/// `MPI_Type_dup`.
+pub fn type_dup(child: DtId) -> RC<DtId> {
+    let (csize, cext, clb, ccontig) = child_props(child)?;
+    insert(DatatypeObj {
+        kind: TypeKind::Dup { child },
+        size: csize,
+        extent: cext,
+        lb: clb,
+        committed: true,
+        predefined: false,
+        combiner: crate::abi::constants::MPI_COMBINER_DUP,
+        contiguous: ccontig,
+    })
+}
+
+/// Leaf builtin of a (possibly nested) datatype, if it reduces to a single
+/// uniform builtin — used by the reduction-op engine.
+pub fn leaf_builtin(dt: DtId) -> RC<Option<usize>> {
+    let kind_child = get_obj(dt, |o| match &o.kind {
+        TypeKind::Builtin { abi_dt } => Ok(Some(*abi_dt)),
+        TypeKind::Contiguous { child, .. }
+        | TypeKind::Vector { child, .. }
+        | TypeKind::Indexed { child, .. }
+        | TypeKind::Resized { child }
+        | TypeKind::Dup { child } => Err(*child),
+        TypeKind::Struct { .. } => Ok(None),
+    })?;
+    match kind_child {
+        Ok(v) => Ok(v),
+        Err(child) => leaf_builtin(child),
+    }
+}

@@ -1,0 +1,193 @@
+//! Pack/unpack: user memory (laid out per the datatype's typemap) ↔
+//! contiguous wire bytes.
+//!
+//! All transport payloads are packed bytes, so `MPI_Send(buf, 3, vector_t)`
+//! walks the typemap gather-style, and the receive side scatters. This is
+//! also the engine behind `MPI_Pack`/`MPI_Unpack`.
+//!
+//! Safety: `ptr` arguments are user buffer addresses paired with datatype
+//! extents, exactly as at a C MPI boundary. The caller (ABI shim) is
+//! responsible for the buffer being live and large enough — MPI semantics.
+
+use super::{DatatypeObj, TypeKind};
+use crate::core::slab::Slab;
+use crate::core::{err, DtId, RC};
+
+/// Pack `count` items of `dt` starting at `ptr` into `out`.
+pub fn pack(
+    dtypes: &Slab<DatatypeObj>,
+    ptr: *const u8,
+    count: usize,
+    dt: DtId,
+    out: &mut Vec<u8>,
+) -> RC<()> {
+    let obj = dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+    out.reserve(obj.size * count);
+    for i in 0..count {
+        let base = unsafe { ptr.offset(obj.extent * i as isize) };
+        pack_one(dtypes, obj, base, out)?;
+    }
+    Ok(())
+}
+
+fn pack_one(
+    dtypes: &Slab<DatatypeObj>,
+    obj: &DatatypeObj,
+    ptr: *const u8,
+    out: &mut Vec<u8>,
+) -> RC<()> {
+    match &obj.kind {
+        TypeKind::Builtin { .. } => {
+            if obj.size > 0 {
+                let bytes = unsafe { std::slice::from_raw_parts(ptr, obj.size) };
+                out.extend_from_slice(bytes);
+            }
+            Ok(())
+        }
+        TypeKind::Contiguous { count, child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            for i in 0..*count {
+                pack_one(dtypes, c, unsafe { ptr.offset(c.extent * i as isize) }, out)?;
+            }
+            Ok(())
+        }
+        TypeKind::Vector { count, blocklen, stride_bytes, child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            for i in 0..*count {
+                let block = unsafe { ptr.offset(stride_bytes * i as isize) };
+                for j in 0..*blocklen {
+                    pack_one(dtypes, c, unsafe { block.offset(c.extent * j as isize) }, out)?;
+                }
+            }
+            Ok(())
+        }
+        TypeKind::Indexed { blocks, child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            for &(len, disp) in blocks {
+                let block = unsafe { ptr.offset(disp) };
+                for j in 0..len {
+                    pack_one(dtypes, c, unsafe { block.offset(c.extent * j as isize) }, out)?;
+                }
+            }
+            Ok(())
+        }
+        TypeKind::Struct { blocks } => {
+            for &(len, disp, t) in blocks {
+                let c = dtypes.get(t.0).ok_or(err!(MPI_ERR_TYPE))?;
+                let block = unsafe { ptr.offset(disp) };
+                for j in 0..len {
+                    pack_one(dtypes, c, unsafe { block.offset(c.extent * j as isize) }, out)?;
+                }
+            }
+            Ok(())
+        }
+        TypeKind::Resized { child } | TypeKind::Dup { child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            pack_one(dtypes, c, ptr, out)
+        }
+    }
+}
+
+/// Unpack from `data` into `count` items of `dt` at `ptr`. Returns the
+/// number of bytes consumed (may be less than `data.len()` if the sender
+/// sent less; the caller computes truncation separately).
+pub fn unpack(
+    dtypes: &Slab<DatatypeObj>,
+    data: &[u8],
+    ptr: *mut u8,
+    count: usize,
+    dt: DtId,
+) -> RC<usize> {
+    let obj = dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+    let mut cursor = 0usize;
+    for i in 0..count {
+        if cursor >= data.len() {
+            break;
+        }
+        let base = unsafe { ptr.offset(obj.extent * i as isize) };
+        unpack_one(dtypes, obj, data, &mut cursor, base)?;
+    }
+    Ok(cursor)
+}
+
+fn unpack_one(
+    dtypes: &Slab<DatatypeObj>,
+    obj: &DatatypeObj,
+    data: &[u8],
+    cursor: &mut usize,
+    ptr: *mut u8,
+) -> RC<()> {
+    match &obj.kind {
+        TypeKind::Builtin { .. } => {
+            let n = obj.size.min(data.len().saturating_sub(*cursor));
+            if n > 0 {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(data.as_ptr().add(*cursor), ptr, n);
+                }
+                *cursor += n;
+            }
+            Ok(())
+        }
+        TypeKind::Contiguous { count, child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            for i in 0..*count {
+                if *cursor >= data.len() {
+                    break;
+                }
+                unpack_one(dtypes, c, data, cursor, unsafe {
+                    ptr.offset(c.extent * i as isize)
+                })?;
+            }
+            Ok(())
+        }
+        TypeKind::Vector { count, blocklen, stride_bytes, child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            for i in 0..*count {
+                let block = unsafe { ptr.offset(stride_bytes * i as isize) };
+                for j in 0..*blocklen {
+                    if *cursor >= data.len() {
+                        return Ok(());
+                    }
+                    unpack_one(dtypes, c, data, cursor, unsafe {
+                        block.offset(c.extent * j as isize)
+                    })?;
+                }
+            }
+            Ok(())
+        }
+        TypeKind::Indexed { blocks, child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            for &(len, disp) in blocks {
+                let block = unsafe { ptr.offset(disp) };
+                for j in 0..len {
+                    if *cursor >= data.len() {
+                        return Ok(());
+                    }
+                    unpack_one(dtypes, c, data, cursor, unsafe {
+                        block.offset(c.extent * j as isize)
+                    })?;
+                }
+            }
+            Ok(())
+        }
+        TypeKind::Struct { blocks } => {
+            for &(len, disp, t) in blocks {
+                let c = dtypes.get(t.0).ok_or(err!(MPI_ERR_TYPE))?;
+                let block = unsafe { ptr.offset(disp) };
+                for j in 0..len {
+                    if *cursor >= data.len() {
+                        return Ok(());
+                    }
+                    unpack_one(dtypes, c, data, cursor, unsafe {
+                        block.offset(c.extent * j as isize)
+                    })?;
+                }
+            }
+            Ok(())
+        }
+        TypeKind::Resized { child } | TypeKind::Dup { child } => {
+            let c = dtypes.get(child.0).ok_or(err!(MPI_ERR_TYPE))?;
+            unpack_one(dtypes, c, data, cursor, ptr)
+        }
+    }
+}

@@ -1,0 +1,585 @@
+//! The engine facade: MPI semantics over engine ids.
+//!
+//! Every implementation ABI (mpich-like, ompi-like, native standard ABI)
+//! is a handle-representation shim over exactly these functions, so the
+//! *semantics* are shared and the benchmarks measure only representation
+//! and translation costs — the paper's subject.
+
+use super::comm::{comm_snapshot, finish_predefined as finish_comms};
+use super::group::finish_predefined as finish_groups;
+use super::request::{
+    enqueue_send, new_request, post_recv, progress, test_one, wait_one, ReqKind,
+    StatusCore,
+};
+use super::transport::{Envelope, MsgKind, Payload};
+use super::world::{try_ctx, with_ctx, RankCtx};
+use super::{err, CommId, DtId, MpiError, ReqId, RC};
+use crate::abi::constants::{MPI_ANY_SOURCE, MPI_ANY_TAG, MPI_PROC_NULL, MPI_UNDEFINED};
+
+// ---------------------------------------------------------------------------
+// Init / finalize / environment
+// ---------------------------------------------------------------------------
+
+/// `MPI_Init`. The launcher has already bound the rank context; this marks
+/// the library initialized and sizes the predefined world/self objects.
+pub fn init() -> RC<()> {
+    with_ctx(|ctx| {
+        if ctx.initialized.get() {
+            return Err(err!(MPI_ERR_OTHER)); // double init
+        }
+        let (size, rank) = (ctx.world.size, ctx.rank);
+        {
+            let mut t = ctx.tables.borrow_mut();
+            finish_groups(&mut t.groups, size, rank);
+            finish_comms(&mut t.comms, size, rank);
+        }
+        ctx.initialized.set(true);
+        Ok(())
+    })
+}
+
+/// `MPI_Initialized` — callable at any time.
+pub fn initialized() -> bool {
+    try_ctx(|ctx| ctx.map(|c| c.initialized.get()).unwrap_or(false))
+}
+
+/// `MPI_Finalized` — callable at any time.
+pub fn finalized() -> bool {
+    try_ctx(|ctx| ctx.map(|c| c.finalized.get()).unwrap_or(false))
+}
+
+/// `MPI_Finalize`: quiesce (barrier over world) then mark finalized.
+pub fn finalize() -> RC<()> {
+    super::collectives::barrier(super::reserved::COMM_WORLD)?;
+    with_ctx(|ctx| {
+        if !ctx.initialized.get() || ctx.finalized.get() {
+            return Err(err!(MPI_ERR_OTHER));
+        }
+        ctx.finalized.set(true);
+        ctx.world.note_finalize();
+        Ok(())
+    })
+}
+
+/// `MPI_Abort`.
+pub fn abort(code: i32) -> RC<()> {
+    with_ctx(|ctx| {
+        ctx.world.abort(code);
+        std::panic::panic_any(super::world::AbortUnwind(code));
+    })
+}
+
+/// `MPI_Wtime`.
+pub fn wtime() -> f64 {
+    try_ctx(|ctx| ctx.map(|c| c.world.wtime()).unwrap_or(0.0))
+}
+
+/// `MPI_Wtick`.
+pub fn wtick() -> f64 {
+    1e-9
+}
+
+/// `MPI_Get_processor_name`.
+pub fn get_processor_name() -> String {
+    let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "localhost".to_string());
+    let rank = super::world::current_rank().unwrap_or(0);
+    format!("{host}-rank{rank}")
+}
+
+/// `MPI_Get_version`.
+pub fn get_version() -> (i32, i32) {
+    (crate::abi::constants::MPI_VERSION, crate::abi::constants::MPI_SUBVERSION)
+}
+
+/// `MPI_Get_library_version`.
+pub fn get_library_version() -> String {
+    crate::LIBRARY_VERSION.to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Point-to-point
+// ---------------------------------------------------------------------------
+
+/// Send mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendMode {
+    /// `MPI_Send` / `MPI_Isend` (eager).
+    Standard,
+    /// `MPI_Ssend` / `MPI_Issend` (completes on match).
+    Sync,
+}
+
+fn check_tag_send(tag: i32) -> RC<()> {
+    if tag < 0 || tag > crate::abi::constants::TAG_UB_VALUE as i32 {
+        return Err(err!(MPI_ERR_TAG));
+    }
+    Ok(())
+}
+
+fn check_rank(r: i32, size: usize, allow_any: bool) -> RC<()> {
+    if r == MPI_PROC_NULL || (allow_any && r == MPI_ANY_SOURCE) {
+        return Ok(());
+    }
+    if r < 0 || r as usize >= size {
+        return Err(err!(MPI_ERR_RANK));
+    }
+    Ok(())
+}
+
+/// Pack `count` items of `dt` at `buf` into a payload (fast path for
+/// contiguous layouts: single copy, inline for small messages).
+fn pack_payload(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Payload> {
+    let t = ctx.tables.borrow();
+    let obj = t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+    if obj.contiguous {
+        let n = obj.size * count;
+        let bytes = unsafe { std::slice::from_raw_parts(buf, n) };
+        Ok(Payload::from_slice(bytes))
+    } else {
+        let mut v = Vec::new();
+        super::datatype::pack::pack(&t.dtypes, buf, count, dt, &mut v)?;
+        Ok(Payload::from_vec(v))
+    }
+}
+
+fn isend_impl(
+    ctx: &RankCtx,
+    buf: *const u8,
+    count: usize,
+    dt: DtId,
+    dest: i32,
+    tag: i32,
+    comm: CommId,
+    mode: SendMode,
+) -> RC<ReqId> {
+    if dest == MPI_PROC_NULL {
+        return Ok(new_request(ctx, ReqKind::Send, Some(StatusCore::empty())));
+    }
+    check_tag_send(tag)?;
+    let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
+    check_rank(dest, size, false)?;
+    let dst_world = dst.ok_or(err!(MPI_ERR_RANK))?;
+    let payload = pack_payload(ctx, buf, count, dt)?;
+    let (kind, sync_id) = match mode {
+        SendMode::Standard => (MsgKind::Eager, 0),
+        SendMode::Sync => {
+            let mut st = ctx.state.borrow_mut();
+            let id = st.next_sync_id;
+            st.next_sync_id += 1;
+            (MsgKind::EagerSync, id)
+        }
+    };
+    let seq = {
+        let mut st = ctx.state.borrow_mut();
+        st.send_seq += 1;
+        if mode == SendMode::Sync {
+            sync_id
+        } else {
+            st.send_seq
+        }
+    };
+    let env = Envelope {
+        src: ctx.rank as u32,
+        context: ctx_pt2pt,
+        tag,
+        kind,
+        seq,
+        payload,
+    };
+    enqueue_send(ctx, dst_world, env);
+    Ok(match mode {
+        SendMode::Standard => new_request(ctx, ReqKind::Send, Some(StatusCore::empty())),
+        SendMode::Sync => new_request(ctx, ReqKind::Ssend { sync_id }, None),
+    })
+}
+
+/// `MPI_Isend` / `MPI_Issend`.
+pub fn isend(
+    buf: *const u8,
+    count: usize,
+    dt: DtId,
+    dest: i32,
+    tag: i32,
+    comm: CommId,
+    mode: SendMode,
+) -> RC<ReqId> {
+    with_ctx(|ctx| isend_impl(ctx, buf, count, dt, dest, tag, comm, mode))
+}
+
+/// `MPI_Send` / `MPI_Ssend`.
+pub fn send(
+    buf: *const u8,
+    count: usize,
+    dt: DtId,
+    dest: i32,
+    tag: i32,
+    comm: CommId,
+    mode: SendMode,
+) -> RC<()> {
+    with_ctx(|ctx| {
+        let rid = isend_impl(ctx, buf, count, dt, dest, tag, comm, mode)?;
+        wait_one(ctx, rid)?;
+        Ok(())
+    })
+}
+
+fn irecv_impl(
+    ctx: &RankCtx,
+    buf: *mut u8,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    if src == MPI_PROC_NULL {
+        return Ok(new_request(ctx, ReqKind::Send, Some(StatusCore::empty())));
+    }
+    if tag != MPI_ANY_TAG {
+        check_tag_send(tag)?;
+    }
+    let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
+    check_rank(src, size, true)?;
+    // Wildcard source matches by *world* rank of comm members; translate a
+    // concrete source to its world rank for envelope matching.
+    let src_match = if src == MPI_ANY_SOURCE {
+        MPI_ANY_SOURCE
+    } else {
+        src_world.ok_or(err!(MPI_ERR_RANK))? as i32
+    };
+    Ok(post_recv(ctx, buf as usize, count, dt, src_match, tag, ctx_pt2pt))
+}
+
+/// `MPI_Irecv`.
+pub fn irecv(
+    buf: *mut u8,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| irecv_impl(ctx, buf, count, dt, src, tag, comm))
+}
+
+/// `MPI_Recv`.
+pub fn recv(
+    buf: *mut u8,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    comm: CommId,
+) -> RC<StatusCore> {
+    with_ctx(|ctx| {
+        let rid = irecv_impl(ctx, buf, count, dt, src, tag, comm)?;
+        let mut s = wait_one(ctx, rid)?;
+        if let Some(r) = super::comm::comm_rank_of_world(comm, s.source)? {
+            s.source = r;
+        }
+        if s.error != 0 {
+            return Err(MpiError::new(s.error));
+        }
+        Ok(s)
+    })
+}
+
+/// `MPI_Sendrecv`.
+#[allow(clippy::too_many_arguments)]
+pub fn sendrecv(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    dest: i32,
+    sendtag: i32,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    src: i32,
+    recvtag: i32,
+    comm: CommId,
+) -> RC<StatusCore> {
+    with_ctx(|ctx| {
+        let r = irecv_impl(ctx, recvbuf, recvcount, recvtype, src, recvtag, comm)?;
+        let s = isend_impl(ctx, sendbuf, sendcount, sendtype, dest, sendtag, comm, SendMode::Standard)?;
+        wait_one(ctx, s)?;
+        let mut st = wait_one(ctx, r)?;
+        if let Some(cr) = super::comm::comm_rank_of_world(comm, st.source)? {
+            st.source = cr;
+        }
+        Ok(st)
+    })
+}
+
+/// `MPI_Probe`: blocking; returns the matched message's status without
+/// receiving it.
+pub fn probe(src: i32, tag: i32, comm: CommId) -> RC<StatusCore> {
+    loop {
+        if let Some(s) = iprobe(src, tag, comm)? {
+            return Ok(s);
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// `MPI_Iprobe`.
+pub fn iprobe(src: i32, tag: i32, comm: CommId) -> RC<Option<StatusCore>> {
+    let found = with_ctx(|ctx| {
+        let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
+        check_rank(src, size, true)?;
+        let src_match = if src == MPI_ANY_SOURCE {
+            MPI_ANY_SOURCE
+        } else {
+            src_world.ok_or(err!(MPI_ERR_RANK))? as i32
+        };
+        progress(ctx);
+        let st = ctx.state.borrow();
+        for env in st.unexpected.iter() {
+            if env.matches(ctx_pt2pt, src_match, tag) {
+                return Ok(Some(StatusCore::success(
+                    env.src as i32,
+                    env.tag,
+                    env.payload.len() as u64,
+                )));
+            }
+        }
+        Ok(None)
+    })?;
+    match found {
+        Some(mut s) => {
+            if let Some(cr) = super::comm::comm_rank_of_world(comm, s.source)? {
+                s.source = cr;
+            }
+            Ok(Some(s))
+        }
+        None => Ok(None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Completion
+// ---------------------------------------------------------------------------
+
+/// `MPI_Wait`.
+pub fn wait(rid: ReqId) -> RC<StatusCore> {
+    with_ctx(|ctx| wait_one(ctx, rid))
+}
+
+/// `MPI_Test`.
+pub fn test(rid: ReqId) -> RC<Option<StatusCore>> {
+    with_ctx(|ctx| test_one(ctx, rid))
+}
+
+/// `MPI_Waitall`.
+pub fn waitall(rids: &[ReqId]) -> RC<Vec<StatusCore>> {
+    with_ctx(|ctx| {
+        let mut done: Vec<Option<StatusCore>> = vec![None; rids.len()];
+        loop {
+            // One progress cycle per sweep (not per request): draining the
+            // fabric once lets the whole window match in a single pass.
+            progress(ctx);
+            let mut all = true;
+            for (i, &rid) in rids.iter().enumerate() {
+                if done[i].is_none() {
+                    match super::request::finish_if_done(ctx, rid)? {
+                        Some(s) => {
+                            ctx.tables.borrow_mut().reqs.remove(rid.0);
+                            done[i] = Some(s);
+                        }
+                        None => all = false,
+                    }
+                }
+            }
+            if all {
+                return Ok(done.into_iter().map(|s| s.unwrap()).collect());
+            }
+            std::thread::yield_now();
+        }
+    })
+}
+
+/// `MPI_Testall`: `Some(statuses)` iff all complete (and then all freed).
+pub fn testall(rids: &[ReqId]) -> RC<Option<Vec<StatusCore>>> {
+    with_ctx(|ctx| {
+        progress(ctx);
+        let mut out = Vec::with_capacity(rids.len());
+        for &rid in rids {
+            match super::request::finish_if_done(ctx, rid)? {
+                Some(s) => out.push(s),
+                None => return Ok(None),
+            }
+        }
+        let mut t = ctx.tables.borrow_mut();
+        for &rid in rids {
+            t.reqs.remove(rid.0);
+        }
+        Ok(Some(out))
+    })
+}
+
+/// `MPI_Waitany` → (index, status).
+pub fn waitany(rids: &[ReqId]) -> RC<(usize, StatusCore)> {
+    with_ctx(|ctx| loop {
+        progress(ctx);
+        for (i, &rid) in rids.iter().enumerate() {
+            if let Some(s) = super::request::finish_if_done(ctx, rid)? {
+                ctx.tables.borrow_mut().reqs.remove(rid.0);
+                return Ok((i, s));
+            }
+        }
+        std::thread::yield_now();
+    })
+}
+
+/// `MPI_Testany` → `Some((index, status))`.
+pub fn testany(rids: &[ReqId]) -> RC<Option<(usize, StatusCore)>> {
+    with_ctx(|ctx| {
+        progress(ctx);
+        for (i, &rid) in rids.iter().enumerate() {
+            if let Some(s) = super::request::finish_if_done(ctx, rid)? {
+                ctx.tables.borrow_mut().reqs.remove(rid.0);
+                return Ok(Some((i, s)));
+            }
+        }
+        Ok(None)
+    })
+}
+
+/// `MPI_Get_count`.
+pub fn get_count(status: &StatusCore, dt: DtId) -> RC<i32> {
+    let size = super::datatype::type_size(dt)?;
+    if size == 0 {
+        return Ok(0);
+    }
+    if status.count_bytes % size as u64 != 0 {
+        return Ok(MPI_UNDEFINED);
+    }
+    Ok((status.count_bytes / size as u64) as i32)
+}
+
+// ---------------------------------------------------------------------------
+// Communicator creation (collective)
+// ---------------------------------------------------------------------------
+
+/// `MPI_Comm_dup`: same group, fresh context ids, attributes copied per
+/// their copy callbacks.
+pub fn comm_dup(comm: CommId) -> RC<CommId> {
+    let (members, my_rank, _, _) = comm_snapshot(comm)?;
+    // Rank 0 of the comm allocates the context pair and broadcasts it.
+    let mut ctx_pair = [0u32; 2];
+    if my_rank == 0 {
+        let (p, c) = with_ctx(|ctx| Ok(ctx.world.alloc_context_pair()))?;
+        ctx_pair = [p, c];
+    }
+    let mut bytes = [0u8; 8];
+    bytes[..4].copy_from_slice(&ctx_pair[0].to_le_bytes());
+    bytes[4..].copy_from_slice(&ctx_pair[1].to_le_bytes());
+    super::collectives::bcast_bytes(&mut bytes, 0, comm)?;
+    let p = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+    let c = u32::from_le_bytes(bytes[4..].try_into().unwrap());
+    let new = super::comm::insert_comm(members, my_rank, p, c)?;
+    super::attr::copy_attrs_for_dup(comm, new)?;
+    // Dup'd comms inherit the error handler.
+    let errh = super::comm::comm_get_errhandler(comm)?;
+    super::comm::comm_set_errhandler(new, errh)?;
+    Ok(new)
+}
+
+/// `MPI_Comm_split`. Returns `None` for `MPI_UNDEFINED` color.
+pub fn comm_split(comm: CommId, color: i32, key: i32) -> RC<Option<CommId>> {
+    let (members, my_rank, _, _) = comm_snapshot(comm)?;
+    let size = members.len();
+    // Gather (color, key) at comm rank 0.
+    let mine = [color, key];
+    let mut all: Vec<i32> = vec![0; 2 * size];
+    super::collectives::gather_bytes(as_bytes(&mine), as_bytes_mut(&mut all), 0, comm)?;
+    // Rank 0 computes each member's (new_rank, ctxp, ctxc, world members…)
+    // and scatters the variable-size results.
+    let mut results: Vec<Vec<u8>> = Vec::new();
+    if my_rank == 0 {
+        results = split_assignments(&all, &members)?;
+    }
+    let my_blob = super::collectives::scatter_var_bytes(&results, 0, comm)?;
+    decode_split_result(&my_blob)
+}
+
+fn split_assignments(colorkeys: &[i32], parent_members: &[usize]) -> RC<Vec<Vec<u8>>> {
+    let size = parent_members.len();
+    let mut colors: Vec<i32> = Vec::new();
+    for r in 0..size {
+        let c = colorkeys[2 * r];
+        if c != MPI_UNDEFINED && !colors.contains(&c) {
+            colors.push(c);
+        }
+    }
+    colors.sort_unstable();
+    let mut blobs: Vec<Vec<u8>> = vec![Vec::new(); size];
+    for &c in &colors {
+        let mut group: Vec<usize> = (0..size).filter(|&r| colorkeys[2 * r] == c).collect();
+        // Order by (key, old rank).
+        group.sort_by_key(|&r| (colorkeys[2 * r + 1], r));
+        let (ctxp, ctxc) = with_ctx(|ctx| Ok(ctx.world.alloc_context_pair()))?;
+        for (new_rank, &old_rank) in group.iter().enumerate() {
+            let mut b = Vec::with_capacity(16 + 4 * group.len());
+            b.extend_from_slice(&(new_rank as u32).to_le_bytes());
+            b.extend_from_slice(&ctxp.to_le_bytes());
+            b.extend_from_slice(&ctxc.to_le_bytes());
+            b.extend_from_slice(&(group.len() as u32).to_le_bytes());
+            for &r in &group {
+                // Store *world* ranks so members need no further translation.
+                b.extend_from_slice(&(parent_members[r] as u32).to_le_bytes());
+            }
+            blobs[old_rank] = b;
+        }
+    }
+    Ok(blobs)
+}
+
+fn decode_split_result(blob: &[u8]) -> RC<Option<CommId>> {
+    if blob.is_empty() {
+        return Ok(None); // MPI_UNDEFINED color
+    }
+    let rd = |i: usize| u32::from_le_bytes(blob[4 * i..4 * i + 4].try_into().unwrap());
+    let new_rank = rd(0) as usize;
+    let ctxp = rd(1);
+    let ctxc = rd(2);
+    let n = rd(3) as usize;
+    let world_members: Vec<usize> = (0..n).map(|i| rd(4 + i) as usize).collect();
+    Ok(Some(super::comm::insert_comm(world_members, new_rank, ctxp, ctxc)?))
+}
+
+/// `MPI_Comm_create` from a group (collective over `comm`).
+pub fn comm_create(comm: CommId, group: super::GroupId) -> RC<Option<CommId>> {
+    let (members, my_rank, _, _) = comm_snapshot(comm)?;
+    let _ = members;
+    // Rank 0 allocates a context pair for the new comm; everyone gets it.
+    let mut ctx_pair = [0u32; 2];
+    if my_rank == 0 {
+        let (p, c) = with_ctx(|ctx| Ok(ctx.world.alloc_context_pair()))?;
+        ctx_pair = [p, c];
+    }
+    let mut bytes = [0u8; 8];
+    bytes[..4].copy_from_slice(&ctx_pair[0].to_le_bytes());
+    bytes[4..].copy_from_slice(&ctx_pair[1].to_le_bytes());
+    super::collectives::bcast_bytes(&mut bytes, 0, comm)?;
+    let p = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+    let c = u32::from_le_bytes(bytes[4..].try_into().unwrap());
+    let (g_members, my_world) = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let g = t.groups.get(group.0).ok_or(err!(MPI_ERR_GROUP))?;
+        Ok((g.members.clone(), ctx.rank))
+    })?;
+    match g_members.iter().position(|&m| m == my_world) {
+        Some(new_rank) => Ok(Some(super::comm::insert_comm(g_members, new_rank, p, c)?)),
+        None => Ok(None),
+    }
+}
+
+// Helpers for viewing i32 slices as bytes (little-endian host).
+pub(crate) fn as_bytes(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+pub(crate) fn as_bytes_mut(v: &mut [i32]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, std::mem::size_of_val(v)) }
+}

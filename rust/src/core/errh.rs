@@ -1,0 +1,115 @@
+//! Error handlers (`MPI_Errhandler`).
+//!
+//! Three predefined behaviors plus user handlers. A user handler is a
+//! callback registered through some ABI; the registering layer supplies a
+//! closure that converts the comm handle and error code into *its own*
+//! representation before invoking the user function — the same trampoline
+//! pattern Mukautuva needs (§6.2).
+
+use super::slab::Slab;
+use super::world::with_ctx;
+use super::{err, CommId, ErrhId, RC};
+
+/// What to do when an MPI call on a comm fails.
+pub enum ErrhKind {
+    /// `MPI_ERRORS_ARE_FATAL`: abort the job.
+    AreFatal,
+    /// `MPI_ERRORS_RETURN`: return the code to the caller.
+    Return,
+    /// `MPI_ERRORS_ABORT`: abort the processes of this comm (≈ job here).
+    Abort,
+    /// User handler: invoked with (engine comm id, canonical error class).
+    /// The registering ABI layer owns representation conversion.
+    User(Box<dyn Fn(CommId, i32)>),
+}
+
+pub struct ErrhObj {
+    pub kind: ErrhKind,
+    pub predefined: bool,
+}
+
+pub fn install_predefined(errhs: &mut Slab<ErrhObj>) {
+    errhs.insert_at(
+        super::reserved::ERRH_ARE_FATAL.0,
+        ErrhObj { kind: ErrhKind::AreFatal, predefined: true },
+    );
+    errhs.insert_at(
+        super::reserved::ERRH_RETURN.0,
+        ErrhObj { kind: ErrhKind::Return, predefined: true },
+    );
+    errhs.insert_at(
+        super::reserved::ERRH_ABORT.0,
+        ErrhObj { kind: ErrhKind::Abort, predefined: true },
+    );
+}
+
+/// `MPI_Comm_create_errhandler` (representation-converted by the caller).
+pub fn errhandler_create(f: Box<dyn Fn(CommId, i32)>) -> RC<ErrhId> {
+    with_ctx(|ctx| {
+        Ok(ErrhId(ctx.tables.borrow_mut().errhs.insert(ErrhObj {
+            kind: ErrhKind::User(f),
+            predefined: false,
+        })))
+    })
+}
+
+/// `MPI_Errhandler_free`.
+pub fn errhandler_free(id: ErrhId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        match t.errhs.get(id.0) {
+            Some(e) if e.predefined => Err(err!(MPI_ERR_ARG)),
+            Some(_) => {
+                t.errhs.remove(id.0);
+                Ok(())
+            }
+            None => Err(err!(MPI_ERR_ERRHANDLER)),
+        }
+    })
+}
+
+/// Run the error handler attached to `comm` for error class `class`.
+/// Returns the class (for `Return`/`User`) or diverges (fatal/abort).
+pub fn invoke(comm: CommId, errh: ErrhId, class: i32) -> i32 {
+    let fatal = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        match t.errhs.get(errh.0).map(|e| &e.kind) {
+            Some(ErrhKind::AreFatal) | Some(ErrhKind::Abort) | None => Ok(true),
+            Some(ErrhKind::Return) => Ok(false),
+            Some(ErrhKind::User(_)) => Ok(false), // invoked below, outside borrow
+        }
+    })
+    .unwrap_or(true);
+    if fatal {
+        let _ = with_ctx(|ctx| {
+            ctx.world.abort(class);
+            Ok(())
+        });
+        std::panic::panic_any(super::world::AbortUnwind(class));
+    }
+    // Re-borrow to call a user handler if present. The handler may call
+    // MPI functions, so we must not hold the tables borrow while invoking:
+    // temporarily move the closure out.
+    let user = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        if let Some(e) = t.errhs.get_mut(errh.0) {
+            if matches!(e.kind, ErrhKind::User(_)) {
+                let k = std::mem::replace(&mut e.kind, ErrhKind::Return);
+                return Ok(Some(k));
+            }
+        }
+        Ok(None)
+    })
+    .unwrap_or(None);
+    if let Some(ErrhKind::User(f)) = user {
+        f(comm, class);
+        let _ = with_ctx(|ctx| {
+            let mut t = ctx.tables.borrow_mut();
+            if let Some(e) = t.errhs.get_mut(errh.0) {
+                e.kind = ErrhKind::User(f);
+            }
+            Ok(())
+        });
+    }
+    class
+}

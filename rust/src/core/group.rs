@@ -1,0 +1,182 @@
+//! Process groups (`MPI_Group`).
+//!
+//! A group is an ordered set of world ranks. Group operations are purely
+//! local (no communication), exactly as in MPI.
+
+use super::slab::Slab;
+use super::world::with_ctx;
+use super::{err, GroupId, RC};
+use crate::abi::constants::MPI_UNDEFINED;
+
+/// Group object: member world ranks in group-rank order.
+#[derive(Clone, Debug)]
+pub struct GroupObj {
+    pub members: Vec<usize>,
+    /// Predefined groups are not freeable.
+    pub predefined: bool,
+}
+
+impl GroupObj {
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Group rank of `world_rank`, if a member.
+    pub fn rank_of(&self, world_rank: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == world_rank)
+    }
+}
+
+/// Install `MPI_GROUP_EMPTY` (id 0); the world/self groups (ids 1, 2)
+/// are sized when the rank binds.
+pub fn install_predefined(groups: &mut Slab<GroupObj>) {
+    groups.insert_at(
+        super::reserved::GROUP_EMPTY.0,
+        GroupObj { members: Vec::new(), predefined: true },
+    );
+    // World/self member lists are filled by comm::install_predefined's
+    // caller context... they depend on world size/rank which bind_rank
+    // knows; we install placeholders and fix in `finish_predefined`.
+    groups.insert_at(
+        super::reserved::GROUP_WORLD.0,
+        GroupObj { members: Vec::new(), predefined: true },
+    );
+    groups.insert_at(
+        super::reserved::GROUP_SELF.0,
+        GroupObj { members: Vec::new(), predefined: true },
+    );
+}
+
+/// Size the predefined world/self groups once rank and world size are
+/// known (called from engine::init).
+pub fn finish_predefined(groups: &mut Slab<GroupObj>, world_size: usize, rank: usize) {
+    groups.get_mut(super::reserved::GROUP_WORLD.0).unwrap().members = (0..world_size).collect();
+    groups.get_mut(super::reserved::GROUP_SELF.0).unwrap().members = vec![rank];
+}
+
+fn get(id: GroupId) -> RC<GroupObj> {
+    with_ctx(|ctx| {
+        ctx.tables.borrow().groups.get(id.0).cloned().ok_or(err!(MPI_ERR_GROUP))
+    })
+}
+
+/// `MPI_Group_size`.
+pub fn group_size(id: GroupId) -> RC<i32> {
+    Ok(get(id)?.size() as i32)
+}
+
+/// `MPI_Group_rank`: the calling process's rank in the group, or
+/// `MPI_UNDEFINED`.
+pub fn group_rank(id: GroupId) -> RC<i32> {
+    let g = get(id)?;
+    with_ctx(|ctx| Ok(g.rank_of(ctx.rank).map(|r| r as i32).unwrap_or(MPI_UNDEFINED)))
+}
+
+fn insert(g: GroupObj) -> RC<GroupId> {
+    with_ctx(|ctx| Ok(GroupId(ctx.tables.borrow_mut().groups.insert(g))))
+}
+
+/// `MPI_Group_incl`.
+pub fn group_incl(id: GroupId, ranks: &[i32]) -> RC<GroupId> {
+    let g = get(id)?;
+    let mut members = Vec::with_capacity(ranks.len());
+    for &r in ranks {
+        let r = r as usize;
+        if r >= g.members.len() {
+            return Err(err!(MPI_ERR_RANK));
+        }
+        members.push(g.members[r]);
+    }
+    insert(GroupObj { members, predefined: false })
+}
+
+/// `MPI_Group_excl`.
+pub fn group_excl(id: GroupId, ranks: &[i32]) -> RC<GroupId> {
+    let g = get(id)?;
+    let excl: std::collections::HashSet<usize> = ranks.iter().map(|&r| r as usize).collect();
+    for &r in ranks {
+        if (r as usize) >= g.members.len() {
+            return Err(err!(MPI_ERR_RANK));
+        }
+    }
+    let members =
+        g.members.iter().enumerate().filter(|(i, _)| !excl.contains(i)).map(|(_, &m)| m).collect();
+    insert(GroupObj { members, predefined: false })
+}
+
+/// `MPI_Group_union`: members of `a` then members of `b` not in `a`.
+pub fn group_union(a: GroupId, b: GroupId) -> RC<GroupId> {
+    let (ga, gb) = (get(a)?, get(b)?);
+    let mut members = ga.members.clone();
+    for &m in &gb.members {
+        if !members.contains(&m) {
+            members.push(m);
+        }
+    }
+    insert(GroupObj { members, predefined: false })
+}
+
+/// `MPI_Group_intersection`: members of `a` that are in `b`, in `a` order.
+pub fn group_intersection(a: GroupId, b: GroupId) -> RC<GroupId> {
+    let (ga, gb) = (get(a)?, get(b)?);
+    let members = ga.members.iter().filter(|m| gb.members.contains(m)).copied().collect();
+    insert(GroupObj { members, predefined: false })
+}
+
+/// `MPI_Group_difference`: members of `a` not in `b`, in `a` order.
+pub fn group_difference(a: GroupId, b: GroupId) -> RC<GroupId> {
+    let (ga, gb) = (get(a)?, get(b)?);
+    let members = ga.members.iter().filter(|m| !gb.members.contains(m)).copied().collect();
+    insert(GroupObj { members, predefined: false })
+}
+
+/// `MPI_Group_translate_ranks`.
+pub fn group_translate_ranks(a: GroupId, ranks: &[i32], b: GroupId) -> RC<Vec<i32>> {
+    let (ga, gb) = (get(a)?, get(b)?);
+    let mut out = Vec::with_capacity(ranks.len());
+    for &r in ranks {
+        if r == crate::abi::constants::MPI_PROC_NULL {
+            out.push(r);
+            continue;
+        }
+        let r = r as usize;
+        if r >= ga.members.len() {
+            return Err(err!(MPI_ERR_RANK));
+        }
+        out.push(gb.rank_of(ga.members[r]).map(|x| x as i32).unwrap_or(MPI_UNDEFINED));
+    }
+    Ok(out)
+}
+
+/// `MPI_Group_compare`.
+pub fn group_compare(a: GroupId, b: GroupId) -> RC<i32> {
+    use crate::abi::constants::{MPI_IDENT, MPI_SIMILAR, MPI_UNEQUAL};
+    let (ga, gb) = (get(a)?, get(b)?);
+    if ga.members == gb.members {
+        return Ok(MPI_IDENT);
+    }
+    let sa: std::collections::HashSet<_> = ga.members.iter().collect();
+    let sb: std::collections::HashSet<_> = gb.members.iter().collect();
+    Ok(if sa == sb { MPI_SIMILAR } else { MPI_UNEQUAL })
+}
+
+/// `MPI_Group_free`.
+pub fn group_free(id: GroupId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        match t.groups.get(id.0) {
+            Some(g) if g.predefined => Err(err!(MPI_ERR_GROUP)),
+            Some(_) => {
+                t.groups.remove(id.0);
+                Ok(())
+            }
+            None => Err(err!(MPI_ERR_GROUP)),
+        }
+    })
+}
+
+/// Create a group directly from world ranks (engine-internal, used by
+/// comm creation).
+pub fn group_from_members(members: Vec<usize>) -> RC<GroupId> {
+    insert(GroupObj { members, predefined: false })
+}

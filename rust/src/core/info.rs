@@ -1,0 +1,113 @@
+//! `MPI_Info` objects: ordered string key/value stores.
+
+use super::slab::Slab;
+use super::world::with_ctx;
+use super::{err, InfoId, RC};
+use crate::abi::constants::{MPI_MAX_INFO_KEY, MPI_MAX_INFO_VAL};
+
+#[derive(Clone, Debug, Default)]
+pub struct InfoObj {
+    /// Insertion-ordered (key, value) pairs; keys unique.
+    pub entries: Vec<(String, String)>,
+    pub predefined: bool,
+}
+
+pub fn install_predefined(infos: &mut Slab<InfoObj>) {
+    // MPI_INFO_ENV: a few environment facts, like real implementations.
+    let entries = vec![
+        ("command".to_string(), std::env::args().next().unwrap_or_default()),
+        ("maxprocs".to_string(), String::new()),
+    ];
+    infos.insert_at(super::reserved::INFO_ENV.0, InfoObj { entries, predefined: true });
+}
+
+/// `MPI_Info_create`.
+pub fn info_create() -> RC<InfoId> {
+    with_ctx(|ctx| Ok(InfoId(ctx.tables.borrow_mut().infos.insert(InfoObj::default()))))
+}
+
+/// `MPI_Info_set`.
+pub fn info_set(id: InfoId, key: &str, value: &str) -> RC<()> {
+    if key.is_empty() || key.len() > MPI_MAX_INFO_KEY {
+        return Err(err!(MPI_ERR_INFO_KEY));
+    }
+    if value.len() > MPI_MAX_INFO_VAL {
+        return Err(err!(MPI_ERR_INFO_VALUE));
+    }
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let info = t.infos.get_mut(id.0).ok_or(err!(MPI_ERR_INFO))?;
+        if let Some(e) = info.entries.iter_mut().find(|(k, _)| k == key) {
+            e.1 = value.to_string();
+        } else {
+            info.entries.push((key.to_string(), value.to_string()));
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_Info_get` (returns `None` if the key is absent — flag=false).
+pub fn info_get(id: InfoId, key: &str) -> RC<Option<String>> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let info = t.infos.get(id.0).ok_or(err!(MPI_ERR_INFO))?;
+        Ok(info.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone()))
+    })
+}
+
+/// `MPI_Info_delete`.
+pub fn info_delete(id: InfoId, key: &str) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let info = t.infos.get_mut(id.0).ok_or(err!(MPI_ERR_INFO))?;
+        let n = info.entries.len();
+        info.entries.retain(|(k, _)| k != key);
+        if info.entries.len() == n {
+            Err(err!(MPI_ERR_INFO_NOKEY))
+        } else {
+            Ok(())
+        }
+    })
+}
+
+/// `MPI_Info_dup`.
+pub fn info_dup(id: InfoId) -> RC<InfoId> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let src = t.infos.get(id.0).ok_or(err!(MPI_ERR_INFO))?;
+        let copy = InfoObj { entries: src.entries.clone(), predefined: false };
+        Ok(InfoId(t.infos.insert(copy)))
+    })
+}
+
+/// `MPI_Info_get_nkeys`.
+pub fn info_get_nkeys(id: InfoId) -> RC<i32> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.infos.get(id.0).ok_or(err!(MPI_ERR_INFO))?.entries.len() as i32)
+    })
+}
+
+/// `MPI_Info_get_nthkey`.
+pub fn info_get_nthkey(id: InfoId, n: i32) -> RC<String> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let info = t.infos.get(id.0).ok_or(err!(MPI_ERR_INFO))?;
+        info.entries.get(n as usize).map(|(k, _)| k.clone()).ok_or(err!(MPI_ERR_ARG))
+    })
+}
+
+/// `MPI_Info_free`.
+pub fn info_free(id: InfoId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        match t.infos.get(id.0) {
+            Some(i) if i.predefined => Err(err!(MPI_ERR_INFO)),
+            Some(_) => {
+                t.infos.remove(id.0);
+                Ok(())
+            }
+            None => Err(err!(MPI_ERR_INFO)),
+        }
+    })
+}

@@ -1,0 +1,127 @@
+//! The MPI engine substrate.
+//!
+//! Everything below the ABI surfaces: a complete message-passing engine
+//! (the role MPICH's CH4 / Open MPI's OB1 play under their `mpi.h`s).
+//! Both implementation ABIs ([`crate::impls`]) and the native standard-ABI
+//! build ([`crate::native_abi`]) are thin handle-conversion shims over the
+//! functions in [`engine`].
+//!
+//! Object identity: the engine names objects with dense per-rank ids
+//! ([`slab::Slab`] indices). ABIs map their wire representation (an `i32`
+//! with encoded bits, a pointer to a descriptor, a zero-page Huffman word)
+//! to these ids at the boundary — that conversion *is* the subject of the
+//! paper.
+
+pub mod attr;
+pub mod collectives;
+pub mod comm;
+pub mod datatype;
+pub mod engine;
+pub mod errh;
+pub mod group;
+pub mod info;
+pub mod op;
+pub mod request;
+pub mod slab;
+pub mod transport;
+pub mod world;
+
+use crate::abi::errors as ec;
+
+/// Engine-level error: canonical (standard-ABI-numbered) error class.
+/// Implementations re-encode this into their own error-code spaces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MpiError {
+    pub class: i32,
+}
+
+impl MpiError {
+    pub const fn new(class: i32) -> MpiError {
+        MpiError { class }
+    }
+    pub fn message(self) -> &'static str {
+        ec::error_string(self.class)
+    }
+}
+
+impl std::fmt::Display for MpiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({})",
+            ec::error_class_name(self.class).unwrap_or("MPI_ERR_?"),
+            self.message()
+        )
+    }
+}
+
+impl std::error::Error for MpiError {}
+
+/// Engine result type.
+pub type RC<T = ()> = Result<T, MpiError>;
+
+macro_rules! err {
+    ($class:ident) => {
+        crate::core::MpiError::new(crate::abi::errors::$class)
+    };
+}
+pub(crate) use err;
+
+/// Dense engine object ids (indices into per-rank slabs).
+macro_rules! engine_id {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u32);
+    };
+}
+
+engine_id!(
+    /// Communicator id.
+    CommId
+);
+engine_id!(
+    /// Group id.
+    GroupId
+);
+engine_id!(
+    /// Datatype id.
+    DtId
+);
+engine_id!(
+    /// Reduction-op id.
+    OpId
+);
+engine_id!(
+    /// Request id.
+    ReqId
+);
+engine_id!(
+    /// Error-handler id.
+    ErrhId
+);
+engine_id!(
+    /// Info-object id.
+    InfoId
+);
+
+/// Pre-reserved ids for predefined objects: every rank's tables are
+/// initialized so these indices hold the predefined objects, letting
+/// ABI constants convert to ids with pure arithmetic.
+pub mod reserved {
+    use super::*;
+    pub const COMM_WORLD: CommId = CommId(0);
+    pub const COMM_SELF: CommId = CommId(1);
+    pub const GROUP_EMPTY: GroupId = GroupId(0);
+    pub const GROUP_WORLD: GroupId = GroupId(1);
+    pub const GROUP_SELF: GroupId = GroupId(2);
+    pub const ERRH_ARE_FATAL: ErrhId = ErrhId(0);
+    pub const ERRH_RETURN: ErrhId = ErrhId(1);
+    pub const ERRH_ABORT: ErrhId = ErrhId(2);
+    pub const INFO_ENV: InfoId = InfoId(0);
+    /// Builtin ops occupy op ids 0..NUM_BUILTIN_OPS in A.1 order.
+    pub const NUM_BUILTIN_OPS: u32 = 15;
+    /// Builtin datatypes occupy dt ids 0..len(PREDEFINED_DATATYPES) in
+    /// table order (id 0 = MPI_DATATYPE_NULL's slot, never dereferenced).
+    pub const NUM_BUILTIN_DTYPES: u32 = crate::abi::datatypes::PREDEFINED_DATATYPES.len() as u32;
+}

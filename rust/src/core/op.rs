@@ -1,0 +1,502 @@
+//! Reduction operations.
+//!
+//! Builtin ops are applied with typed scalar loops; large contiguous f32/f64
+//! SUM/PROD/MIN/MAX buffers are offloaded to the AOT-compiled XLA
+//! executable (the Pallas kernel lowered by `python/compile/aot.py`) via
+//! [`crate::runtime::try_xla_reduce`] when the runtime is enabled.
+//!
+//! User-defined ops are closures installed by an ABI layer; the closure
+//! receives raw buffers plus the engine datatype id and converts to the
+//! registering ABI's representation before calling the user function —
+//! the callback-translation problem of §6.2 in miniature.
+
+use super::datatype::{scalar_kind, ScalarKind};
+use super::slab::Slab;
+use super::world::with_ctx;
+use super::{err, DtId, OpId, RC};
+use crate::abi::ops as aop;
+
+/// Builtin reduction operators, in A.1 order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuiltinOp {
+    Null,
+    Sum,
+    Min,
+    Max,
+    Prod,
+    Band,
+    Bor,
+    Bxor,
+    Land,
+    Lor,
+    Lxor,
+    Minloc,
+    Maxloc,
+    Replace,
+    NoOp,
+}
+
+impl BuiltinOp {
+    /// Map a standard-ABI op constant.
+    pub fn from_abi(v: usize) -> Option<BuiltinOp> {
+        use BuiltinOp::*;
+        Some(match v {
+            aop::MPI_OP_NULL => Null,
+            aop::MPI_SUM => Sum,
+            aop::MPI_MIN => Min,
+            aop::MPI_MAX => Max,
+            aop::MPI_PROD => Prod,
+            aop::MPI_BAND => Band,
+            aop::MPI_BOR => Bor,
+            aop::MPI_BXOR => Bxor,
+            aop::MPI_LAND => Land,
+            aop::MPI_LOR => Lor,
+            aop::MPI_LXOR => Lxor,
+            aop::MPI_MINLOC => Minloc,
+            aop::MPI_MAXLOC => Maxloc,
+            aop::MPI_REPLACE => Replace,
+            aop::MPI_NO_OP => NoOp,
+            _ => return None,
+        })
+    }
+
+    pub fn to_abi(self) -> usize {
+        use BuiltinOp::*;
+        match self {
+            Null => aop::MPI_OP_NULL,
+            Sum => aop::MPI_SUM,
+            Min => aop::MPI_MIN,
+            Max => aop::MPI_MAX,
+            Prod => aop::MPI_PROD,
+            Band => aop::MPI_BAND,
+            Bor => aop::MPI_BOR,
+            Bxor => aop::MPI_BXOR,
+            Land => aop::MPI_LAND,
+            Lor => aop::MPI_LOR,
+            Lxor => aop::MPI_LXOR,
+            Minloc => aop::MPI_MINLOC,
+            Maxloc => aop::MPI_MAXLOC,
+            Replace => aop::MPI_REPLACE,
+            NoOp => aop::MPI_NO_OP,
+        }
+    }
+}
+
+/// In A.1 order; index = reserved op id.
+pub const BUILTIN_ORDER: [BuiltinOp; 15] = [
+    BuiltinOp::Null,
+    BuiltinOp::Sum,
+    BuiltinOp::Min,
+    BuiltinOp::Max,
+    BuiltinOp::Prod,
+    BuiltinOp::Band,
+    BuiltinOp::Bor,
+    BuiltinOp::Bxor,
+    BuiltinOp::Land,
+    BuiltinOp::Lor,
+    BuiltinOp::Lxor,
+    BuiltinOp::Minloc,
+    BuiltinOp::Maxloc,
+    BuiltinOp::Replace,
+    BuiltinOp::NoOp,
+];
+
+/// User op callback: `(invec, inoutvec, count, dt)` over packed buffers.
+pub type UserOpFn = Box<dyn Fn(*const u8, *mut u8, i32, DtId)>;
+
+pub enum OpKind {
+    Builtin(BuiltinOp),
+    User { f: UserOpFn, commute: bool },
+}
+
+pub struct OpObj {
+    pub kind: OpKind,
+    pub predefined: bool,
+}
+
+pub fn install_predefined(ops: &mut Slab<OpObj>) {
+    for (i, &b) in BUILTIN_ORDER.iter().enumerate() {
+        ops.insert_at(i as u32, OpObj { kind: OpKind::Builtin(b), predefined: true });
+    }
+}
+
+/// Engine op id for a standard-ABI op constant.
+pub fn builtin_id_of_abi(v: usize) -> Option<OpId> {
+    BuiltinOp::from_abi(v)
+        .and_then(|b| BUILTIN_ORDER.iter().position(|&x| x == b))
+        .map(|i| OpId(i as u32))
+}
+
+/// Standard-ABI constant for a builtin op id.
+pub fn abi_of_builtin_id(op: OpId) -> Option<usize> {
+    BUILTIN_ORDER.get(op.0 as usize).map(|b| b.to_abi())
+}
+
+/// `MPI_Op_create`.
+pub fn op_create(f: UserOpFn, commute: bool) -> RC<OpId> {
+    with_ctx(|ctx| {
+        Ok(OpId(ctx.tables.borrow_mut().ops.insert(OpObj {
+            kind: OpKind::User { f, commute },
+            predefined: false,
+        })))
+    })
+}
+
+/// `MPI_Op_free`.
+pub fn op_free(op: OpId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        match t.ops.get(op.0) {
+            Some(o) if o.predefined => Err(err!(MPI_ERR_OP)),
+            Some(_) => {
+                t.ops.remove(op.0);
+                Ok(())
+            }
+            None => Err(err!(MPI_ERR_OP)),
+        }
+    })
+}
+
+/// Apply `op` over packed buffers: `inout[i] = op(in[i], inout[i])`.
+/// `count` items of datatype `dt`. This is `MPI_Reduce_local` and the
+/// combine step of every reduction collective.
+pub fn apply(op: OpId, inbuf: &[u8], inout: &mut [u8], count: usize, dt: DtId) -> RC<()> {
+    // Snapshot what we need, then release borrows (user fn may call MPI).
+    enum Plan {
+        Builtin(BuiltinOp),
+        User(UserOpFn),
+    }
+    let plan = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let o = t.ops.get_mut(op.0).ok_or(err!(MPI_ERR_OP))?;
+        Ok(match &mut o.kind {
+            OpKind::Builtin(b) => Plan::Builtin(*b),
+            OpKind::User { f, .. } => {
+                let taken = std::mem::replace(f, Box::new(|_, _, _, _| {}));
+                Plan::User(taken)
+            }
+        })
+    })?;
+    match plan {
+        Plan::Builtin(b) => {
+            let abi_dt = super::datatype::leaf_builtin(dt)?.ok_or(err!(MPI_ERR_TYPE))?;
+            let elem_size = crate::abi::datatypes::platform_size_of(abi_dt)
+                .ok_or(err!(MPI_ERR_TYPE))?;
+            let nscalars = inout.len() / elem_size.max(1);
+            debug_assert!(nscalars >= count, "packed buffers shorter than count");
+            apply_builtin(b, scalar_kind(abi_dt), inbuf, inout, nscalars)
+        }
+        Plan::User(f) => {
+            f(inbuf.as_ptr(), inout.as_mut_ptr(), count as i32, dt);
+            // Reinstall the user function.
+            with_ctx(|ctx| {
+                let mut t = ctx.tables.borrow_mut();
+                if let Some(o) = t.ops.get_mut(op.0) {
+                    if let OpKind::User { f: slot, .. } = &mut o.kind {
+                        *slot = f;
+                    }
+                }
+                Ok(())
+            })
+        }
+    }
+}
+
+/// Scalar arithmetic used by the builtin ops. Integer sum/prod wrap (C
+/// unsigned-overflow semantics; MPI leaves signed overflow undefined).
+pub trait Scalar: Copy {
+    fn op_sum(self, o: Self) -> Self;
+    fn op_prod(self, o: Self) -> Self;
+    fn op_min(self, o: Self) -> Self;
+    fn op_max(self, o: Self) -> Self;
+}
+
+macro_rules! impl_scalar_int {
+    ($($t:ty),*) => {$(
+        impl Scalar for $t {
+            #[inline(always)] fn op_sum(self, o: Self) -> Self { self.wrapping_add(o) }
+            #[inline(always)] fn op_prod(self, o: Self) -> Self { self.wrapping_mul(o) }
+            #[inline(always)] fn op_min(self, o: Self) -> Self { if self < o { self } else { o } }
+            #[inline(always)] fn op_max(self, o: Self) -> Self { if self > o { self } else { o } }
+        }
+    )*};
+}
+impl_scalar_int!(i8, u8, i16, u16, i32, u32, i64, u64);
+
+macro_rules! impl_scalar_float {
+    ($($t:ty),*) => {$(
+        impl Scalar for $t {
+            #[inline(always)] fn op_sum(self, o: Self) -> Self { self + o }
+            #[inline(always)] fn op_prod(self, o: Self) -> Self { self * o }
+            #[inline(always)] fn op_min(self, o: Self) -> Self { if self < o { self } else { o } }
+            #[inline(always)] fn op_max(self, o: Self) -> Self { if self > o { self } else { o } }
+        }
+    )*};
+}
+impl_scalar_float!(f32, f64);
+
+/// Elementwise `inout[i] = f(in[i], inout[i])` over reinterpreted scalars.
+#[inline(always)]
+fn binloop<T: Copy>(inbuf: &[u8], inout: &mut [u8], n: usize, f: impl Fn(T, T) -> T) {
+    let a = inbuf.as_ptr() as *const T;
+    let b = inout.as_mut_ptr() as *mut T;
+    for i in 0..n {
+        unsafe {
+            let x = a.add(i).read_unaligned();
+            let y = b.add(i).read_unaligned();
+            b.add(i).write_unaligned(f(x, y));
+        }
+    }
+}
+
+macro_rules! arith_dispatch {
+    ($kind:expr, $inbuf:expr, $inout:expr, $n:expr, $op:ident) => {
+        match $kind {
+            ScalarKind::I8 => Ok(binloop($inbuf, $inout, $n, <i8 as Scalar>::$op)),
+            ScalarKind::U8 => Ok(binloop($inbuf, $inout, $n, <u8 as Scalar>::$op)),
+            ScalarKind::I16 => Ok(binloop($inbuf, $inout, $n, <i16 as Scalar>::$op)),
+            ScalarKind::U16 => Ok(binloop($inbuf, $inout, $n, <u16 as Scalar>::$op)),
+            ScalarKind::I32 => Ok(binloop($inbuf, $inout, $n, <i32 as Scalar>::$op)),
+            ScalarKind::U32 => Ok(binloop($inbuf, $inout, $n, <u32 as Scalar>::$op)),
+            ScalarKind::I64 => Ok(binloop($inbuf, $inout, $n, <i64 as Scalar>::$op)),
+            ScalarKind::U64 => Ok(binloop($inbuf, $inout, $n, <u64 as Scalar>::$op)),
+            ScalarKind::F32 => Ok(binloop($inbuf, $inout, $n, <f32 as Scalar>::$op)),
+            ScalarKind::F64 => Ok(binloop($inbuf, $inout, $n, <f64 as Scalar>::$op)),
+            _ => Err(err!(MPI_ERR_OP)),
+        }
+    };
+}
+
+macro_rules! bitwise_dispatch {
+    ($kind:expr, $inbuf:expr, $inout:expr, $n:expr, $f:tt) => {
+        match $kind {
+            ScalarKind::I8 | ScalarKind::U8 | ScalarKind::Bool | ScalarKind::Bytes => {
+                Ok(binloop::<u8>($inbuf, $inout, $n, |x, y| x $f y))
+            }
+            ScalarKind::I16 | ScalarKind::U16 => {
+                Ok(binloop::<u16>($inbuf, $inout, $n, |x, y| x $f y))
+            }
+            ScalarKind::I32 | ScalarKind::U32 => {
+                Ok(binloop::<u32>($inbuf, $inout, $n, |x, y| x $f y))
+            }
+            ScalarKind::I64 | ScalarKind::U64 => {
+                Ok(binloop::<u64>($inbuf, $inout, $n, |x, y| x $f y))
+            }
+            _ => Err(err!(MPI_ERR_OP)),
+        }
+    };
+}
+
+macro_rules! logical_dispatch {
+    ($kind:expr, $inbuf:expr, $inout:expr, $n:expr, $f:expr) => {
+        match $kind {
+            ScalarKind::I8 | ScalarKind::U8 | ScalarKind::Bool => {
+                Ok(binloop::<u8>($inbuf, $inout, $n, |x, y| ($f)(x != 0, y != 0) as u8))
+            }
+            ScalarKind::I16 | ScalarKind::U16 => {
+                Ok(binloop::<u16>($inbuf, $inout, $n, |x, y| ($f)(x != 0, y != 0) as u16))
+            }
+            ScalarKind::I32 | ScalarKind::U32 => {
+                Ok(binloop::<u32>($inbuf, $inout, $n, |x, y| ($f)(x != 0, y != 0) as u32))
+            }
+            ScalarKind::I64 | ScalarKind::U64 => {
+                Ok(binloop::<u64>($inbuf, $inout, $n, |x, y| ($f)(x != 0, y != 0) as u64))
+            }
+            _ => Err(err!(MPI_ERR_OP)),
+        }
+    };
+}
+
+/// Loc-pair loop: (value, index) pairs, packed.
+macro_rules! loc_loop {
+    ($vt:ty, $inbuf:expr, $inout:expr, $n:expr, $min:expr) => {{
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct Pair {
+            v: $vt,
+            i: i32,
+        }
+        let a = $inbuf.as_ptr() as *const Pair;
+        let b = $inout.as_mut_ptr() as *mut Pair;
+        for k in 0..$n {
+            unsafe {
+                let x = a.add(k).read_unaligned();
+                let y = b.add(k).read_unaligned();
+                let pick_x = if $min {
+                    x.v < y.v || (x.v == y.v && x.i < y.i)
+                } else {
+                    x.v > y.v || (x.v == y.v && x.i < y.i)
+                };
+                if pick_x {
+                    b.add(k).write_unaligned(x);
+                }
+            }
+        }
+        Ok(())
+    }};
+}
+
+/// Typed builtin application over `n` packed scalars.
+pub fn apply_builtin(
+    b: BuiltinOp,
+    kind: ScalarKind,
+    inbuf: &[u8],
+    inout: &mut [u8],
+    n: usize,
+) -> RC<()> {
+    debug_assert!(inbuf.len() >= inout.len());
+    // Hot-path offload: large contiguous float reductions run on the
+    // AOT-compiled Pallas kernel through PJRT, when available.
+    if crate::runtime::try_xla_reduce(b, kind, inbuf, inout, n) {
+        return Ok(());
+    }
+    use BuiltinOp::*;
+    match b {
+        Null => Err(err!(MPI_ERR_OP)),
+        NoOp => Ok(()),
+        Replace => {
+            inout.copy_from_slice(&inbuf[..inout.len()]);
+            Ok(())
+        }
+        Sum => arith_dispatch!(kind, inbuf, inout, n, op_sum),
+        Prod => arith_dispatch!(kind, inbuf, inout, n, op_prod),
+        Min => arith_dispatch!(kind, inbuf, inout, n, op_min),
+        Max => arith_dispatch!(kind, inbuf, inout, n, op_max),
+        Band => bitwise_dispatch!(kind, inbuf, inout, n, &),
+        Bor => bitwise_dispatch!(kind, inbuf, inout, n, |),
+        Bxor => bitwise_dispatch!(kind, inbuf, inout, n, ^),
+        Land => logical_dispatch!(kind, inbuf, inout, n, |x: bool, y: bool| x && y),
+        Lor => logical_dispatch!(kind, inbuf, inout, n, |x: bool, y: bool| x || y),
+        Lxor => logical_dispatch!(kind, inbuf, inout, n, |x: bool, y: bool| x ^ y),
+        Minloc => match kind {
+            ScalarKind::FloatInt => loc_loop!(f32, inbuf, inout, n, true),
+            ScalarKind::DoubleInt => loc_loop!(f64, inbuf, inout, n, true),
+            ScalarKind::IntInt => loc_loop!(i32, inbuf, inout, n, true),
+            _ => Err(err!(MPI_ERR_OP)),
+        },
+        Maxloc => match kind {
+            ScalarKind::FloatInt => loc_loop!(f32, inbuf, inout, n, false),
+            ScalarKind::DoubleInt => loc_loop!(f64, inbuf, inout, n, false),
+            ScalarKind::IntInt => loc_loop!(i32, inbuf, inout, n, false),
+            _ => Err(err!(MPI_ERR_OP)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bytes_of<T: Copy>(v: &[T]) -> Vec<u8> {
+        unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)).to_vec()
+        }
+    }
+
+    fn from_bytes<T: Copy>(b: &[u8]) -> Vec<T> {
+        let n = b.len() / std::mem::size_of::<T>();
+        (0..n)
+            .map(|i| unsafe { (b.as_ptr() as *const T).add(i).read_unaligned() })
+            .collect()
+    }
+
+    #[test]
+    fn sum_f32() {
+        let a = bytes_of(&[1.0f32, 2.0, 3.0]);
+        let mut b = bytes_of(&[10.0f32, 20.0, 30.0]);
+        apply_builtin(BuiltinOp::Sum, ScalarKind::F32, &a, &mut b, 3).unwrap();
+        assert_eq!(from_bytes::<f32>(&b), vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn sum_wraps_integers() {
+        let a = bytes_of(&[i32::MAX]);
+        let mut b = bytes_of(&[1i32]);
+        apply_builtin(BuiltinOp::Sum, ScalarKind::I32, &a, &mut b, 1).unwrap();
+        assert_eq!(from_bytes::<i32>(&b), vec![i32::MIN]);
+    }
+
+    #[test]
+    fn min_max_prod() {
+        let a = bytes_of(&[5i64, -7, 2]);
+        let mut b = bytes_of(&[3i64, -2, 10]);
+        apply_builtin(BuiltinOp::Min, ScalarKind::I64, &a, &mut b.clone(), 3).unwrap();
+        let mut bm = bytes_of(&[3i64, -2, 10]);
+        apply_builtin(BuiltinOp::Max, ScalarKind::I64, &a, &mut bm, 3).unwrap();
+        assert_eq!(from_bytes::<i64>(&bm), vec![5, -2, 10]);
+        apply_builtin(BuiltinOp::Prod, ScalarKind::I64, &a, &mut b, 3).unwrap();
+        assert_eq!(from_bytes::<i64>(&b), vec![15, 14, 20]);
+    }
+
+    #[test]
+    fn bitwise_ops() {
+        let a = bytes_of(&[0b1100u32]);
+        let mut band = bytes_of(&[0b1010u32]);
+        apply_builtin(BuiltinOp::Band, ScalarKind::U32, &a, &mut band, 1).unwrap();
+        assert_eq!(from_bytes::<u32>(&band), vec![0b1000]);
+        let mut bxor = bytes_of(&[0b1010u32]);
+        apply_builtin(BuiltinOp::Bxor, ScalarKind::U32, &a, &mut bxor, 1).unwrap();
+        assert_eq!(from_bytes::<u32>(&bxor), vec![0b0110]);
+    }
+
+    #[test]
+    fn logical_ops_normalize() {
+        let a = bytes_of(&[7i32, 0]);
+        let mut b = bytes_of(&[2i32, 0]);
+        apply_builtin(BuiltinOp::Land, ScalarKind::I32, &a, &mut b, 2).unwrap();
+        assert_eq!(from_bytes::<i32>(&b), vec![1, 0]);
+    }
+
+    #[test]
+    fn minloc_ties_pick_lower_index() {
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct P(f32, i32);
+        let a = bytes_of(&[P(1.0, 3)]);
+        let mut b = bytes_of(&[P(1.0, 5)]);
+        apply_builtin(BuiltinOp::Minloc, ScalarKind::FloatInt, &a, &mut b, 1).unwrap();
+        let out: Vec<P> = from_bytes(&b);
+        assert_eq!(out[0].1, 3);
+    }
+
+    #[test]
+    fn maxloc_picks_max() {
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        struct P(f64, i32);
+        let a = bytes_of(&[P(2.0, 1), P(0.5, 1)]);
+        let mut b = bytes_of(&[P(1.0, 0), P(1.5, 0)]);
+        apply_builtin(BuiltinOp::Maxloc, ScalarKind::DoubleInt, &a, &mut b, 2).unwrap();
+        let out: Vec<P> = from_bytes(&b);
+        assert_eq!((out[0].0, out[0].1), (2.0, 1));
+        assert_eq!((out[1].0, out[1].1), (1.5, 0));
+    }
+
+    #[test]
+    fn replace_and_noop() {
+        let a = bytes_of(&[9i32]);
+        let mut b = bytes_of(&[1i32]);
+        apply_builtin(BuiltinOp::Replace, ScalarKind::I32, &a, &mut b, 1).unwrap();
+        assert_eq!(from_bytes::<i32>(&b), vec![9]);
+        let mut c = bytes_of(&[1i32]);
+        apply_builtin(BuiltinOp::NoOp, ScalarKind::I32, &a, &mut c, 1).unwrap();
+        assert_eq!(from_bytes::<i32>(&c), vec![1]);
+    }
+
+    #[test]
+    fn sum_on_bytes_kind_is_an_error() {
+        let a = [0u8; 4];
+        let mut b = [0u8; 4];
+        let e = apply_builtin(BuiltinOp::Sum, ScalarKind::Bytes, &a, &mut b, 4).unwrap_err();
+        assert_eq!(e.class, crate::abi::errors::MPI_ERR_OP);
+    }
+
+    #[test]
+    fn abi_mapping_roundtrip() {
+        for (i, &b) in BUILTIN_ORDER.iter().enumerate() {
+            assert_eq!(builtin_id_of_abi(b.to_abi()), Some(OpId(i as u32)));
+            assert_eq!(abi_of_builtin_id(OpId(i as u32)), Some(b.to_abi()));
+        }
+        assert_eq!(builtin_id_of_abi(0b0000100101), None);
+    }
+}

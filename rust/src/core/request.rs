@@ -1,0 +1,333 @@
+//! Requests and the progress engine.
+//!
+//! Every nonblocking operation creates a request; blocking operations are
+//! request + wait. Progress is made inside test/wait/recv loops (polling
+//! the fabric, matching posted receives against arrivals, acking
+//! synchronous sends) — the single-threaded progress model of most MPI
+//! implementations.
+
+use super::transport::{Envelope, MsgKind, Payload};
+use super::world::{with_ctx, RankCtx};
+use super::{err, DtId, ReqId, RC};
+use crate::abi::constants::MPI_PROC_NULL;
+
+/// Implementation-independent status record. Each ABI converts this to its
+/// own status layout — the translation the paper's §3.2 catalogues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StatusCore {
+    pub source: i32,
+    pub tag: i32,
+    /// Canonical (standard-ABI) error class.
+    pub error: i32,
+    pub count_bytes: u64,
+    pub cancelled: bool,
+}
+
+impl StatusCore {
+    pub fn success(source: i32, tag: i32, count_bytes: u64) -> StatusCore {
+        StatusCore { source, tag, error: 0, count_bytes, cancelled: false }
+    }
+
+    /// Status for a send completion or PROC_NULL op.
+    pub fn empty() -> StatusCore {
+        StatusCore {
+            source: MPI_PROC_NULL,
+            tag: crate::abi::constants::MPI_ANY_TAG,
+            error: 0,
+            count_bytes: 0,
+            cancelled: false,
+        }
+    }
+}
+
+/// What a request is waiting for.
+pub enum ReqKind {
+    /// Eager send: complete at creation (buffer copied).
+    Send,
+    /// Synchronous send: complete when the ack for `sync_id` arrives.
+    Ssend { sync_id: u64 },
+    /// Posted receive.
+    Recv { buf: usize, count: usize, dt: DtId, src: i32, tag: i32, context: u32 },
+    /// Compound (e.g. `MPI_Ialltoallw`): complete when all children are.
+    Coll { children: Vec<ReqId> },
+}
+
+pub struct RequestObj {
+    pub kind: ReqKind,
+    /// `Some` = complete.
+    pub status: Option<StatusCore>,
+}
+
+/// Create a request in the table.
+pub(crate) fn new_request(ctx: &RankCtx, kind: ReqKind, status: Option<StatusCore>) -> ReqId {
+    ReqId(ctx.tables.borrow_mut().reqs.insert(RequestObj { kind, status }))
+}
+
+/// Post a receive request (and try to match it immediately against the
+/// unexpected queue).
+pub(crate) fn post_recv(
+    ctx: &RankCtx,
+    buf: usize,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    context: u32,
+) -> ReqId {
+    let id = new_request(ctx, ReqKind::Recv { buf, count, dt, src, tag, context }, None);
+    ctx.state.borrow_mut().posted.push_back(id);
+    // Immediate match attempt: the message may already be here.
+    match_posted(ctx);
+    id
+}
+
+/// One progress cycle: flush deferred sends, drain the fabric, match.
+pub(crate) fn progress(ctx: &RankCtx) {
+    if let Some(code) = ctx.world.aborted() {
+        std::panic::panic_any(super::world::AbortUnwind(code));
+    }
+    flush_pending_sends(ctx);
+    drain_fabric(ctx);
+    match_posted(ctx);
+}
+
+fn flush_pending_sends(ctx: &RankCtx) {
+    let mut st = ctx.state.borrow_mut();
+    while let Some((dst, env)) = st.pending_sends.pop_front() {
+        match ctx.world.fabric.try_send(dst, env) {
+            Ok(()) => {}
+            Err(env) => {
+                st.pending_sends.push_front((dst, env));
+                break;
+            }
+        }
+    }
+}
+
+fn drain_fabric(ctx: &RankCtx) {
+    let mut st = ctx.state.borrow_mut();
+    if ctx.world.fabric.inbound_empty(ctx.rank) {
+        return;
+    }
+    let mut inbox = std::mem::take(&mut st.inbox);
+    ctx.world.fabric.poll_into(ctx.rank, &mut inbox);
+    for env in inbox.drain(..) {
+        match env.kind {
+            MsgKind::SsendAck => {
+                st.ssend_acks.insert(env.seq);
+            }
+            MsgKind::Eager | MsgKind::EagerSync => st.unexpected.push_back(env),
+        }
+    }
+    st.inbox = inbox;
+}
+
+/// Try to complete posted receives against the unexpected queue, in post
+/// order (MPI matching semantics: posted order × arrival order).
+fn match_posted(ctx: &RankCtx) {
+    loop {
+        // Find the first posted request that has a matching message.
+        let mut matched: Option<(usize, usize, ReqId)> = None; // (posted idx, unexpected idx, req)
+        {
+            let st = ctx.state.borrow();
+            let t = ctx.tables.borrow();
+            'outer: for (pi, &rid) in st.posted.iter().enumerate() {
+                let Some(req) = t.reqs.get(rid.0) else { continue };
+                let ReqKind::Recv { src, tag, context, .. } = req.kind else { continue };
+                for (ui, env) in st.unexpected.iter().enumerate() {
+                    if env.matches(context, src, tag) {
+                        matched = Some((pi, ui, rid));
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        let Some((pi, ui, rid)) = matched else { return };
+        // Remove both, then deliver.
+        let env = {
+            let mut st = ctx.state.borrow_mut();
+            st.posted.remove(pi);
+            st.unexpected.remove(ui).expect("index valid")
+        };
+        deliver(ctx, rid, env);
+    }
+}
+
+/// Copy a matched message into the receive buffer and complete the request.
+fn deliver(ctx: &RankCtx, rid: ReqId, env: Envelope) {
+    let mut t = ctx.tables.borrow_mut();
+    let tables = &mut *t;
+    let Some(req) = tables.reqs.get_mut(rid.0) else { return };
+    let ReqKind::Recv { buf, count, dt, .. } = req.kind else { return };
+    let data = env.payload.as_slice();
+    // Capacity in packed bytes of the posted buffer.
+    let cap = tables.dtypes.get(dt.0).map(|o| o.size * count).unwrap_or(0);
+    let truncated = data.len() > cap;
+    let take = data.len().min(cap);
+    let consumed = super::datatype::pack::unpack(
+        &tables.dtypes,
+        &data[..take],
+        buf as *mut u8,
+        count,
+        dt,
+    )
+    .unwrap_or(0);
+    let mut status = StatusCore::success(env.src as i32, env.tag, consumed as u64);
+    if truncated {
+        status.error = crate::abi::errors::MPI_ERR_TRUNCATE;
+    }
+    req.status = Some(status);
+    drop(t);
+    // Ack synchronous sends now that the message is matched.
+    if env.kind == MsgKind::EagerSync {
+        let ack = Envelope {
+            src: ctx.rank as u32,
+            context: env.context,
+            tag: env.tag,
+            kind: MsgKind::SsendAck,
+            seq: env.seq,
+            payload: Payload::empty(),
+        };
+        enqueue_send(ctx, env.src as usize, ack);
+    }
+}
+
+/// Send an envelope, preserving per-destination FIFO even under
+/// backpressure (deferred envelopes drain before new ones).
+pub(crate) fn enqueue_send(ctx: &RankCtx, dst: usize, env: Envelope) {
+    let mut st = ctx.state.borrow_mut();
+    let blocked = st.pending_sends.iter().any(|&(d, _)| d == dst);
+    if blocked {
+        st.pending_sends.push_back((dst, env));
+        return;
+    }
+    if let Err(env) = ctx.world.fabric.try_send(dst, env) {
+        st.pending_sends.push_back((dst, env));
+    }
+}
+
+/// Poll a request's completion state; applies one progress cycle first.
+pub(crate) fn poll_complete(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>> {
+    progress(ctx);
+    finish_if_done(ctx, rid)
+}
+
+/// Check (without progressing) whether `rid` is complete, resolving
+/// Ssend acks and collective children.
+pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>> {
+    enum Next {
+        Done(StatusCore),
+        Pending,
+        CheckSsend(u64),
+        CheckColl(Vec<ReqId>),
+    }
+    let next = {
+        let t = ctx.tables.borrow();
+        let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+        match (&req.status, &req.kind) {
+            (Some(s), _) => Next::Done(*s),
+            (None, ReqKind::Ssend { sync_id }) => Next::CheckSsend(*sync_id),
+            (None, ReqKind::Coll { children }) => Next::CheckColl(children.clone()),
+            (None, _) => Next::Pending,
+        }
+    };
+    match next {
+        Next::Done(s) => Ok(Some(s)),
+        Next::Pending => Ok(None),
+        Next::CheckSsend(sync_id) => {
+            let acked = ctx.state.borrow_mut().ssend_acks.remove(&sync_id);
+            if acked {
+                let s = StatusCore::empty();
+                ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().status = Some(s);
+                Ok(Some(s))
+            } else {
+                Ok(None)
+            }
+        }
+        Next::CheckColl(children) => {
+            let mut all = true;
+            for c in &children {
+                if finish_if_done(ctx, *c)?.is_none() {
+                    all = false;
+                    break;
+                }
+            }
+            if all {
+                // Aggregate: a collective request reports an empty status;
+                // child error classes propagate as MPI_ERR_IN_STATUS-adjacent
+                // simplification (first error wins).
+                let mut status = StatusCore::empty();
+                {
+                    let mut t = ctx.tables.borrow_mut();
+                    for c in &children {
+                        if let Some(cr) = t.reqs.remove(c.0) {
+                            if let Some(cs) = cr.status {
+                                if cs.error != 0 && status.error == 0 {
+                                    status.error = cs.error;
+                                }
+                                status.count_bytes += cs.count_bytes;
+                            }
+                        }
+                    }
+                    t.reqs.get_mut(rid.0).unwrap().status = Some(status);
+                }
+                Ok(Some(status))
+            } else {
+                Ok(None)
+            }
+        }
+    }
+}
+
+/// Block until `rid` completes; deallocate it; return its status.
+pub(crate) fn wait_one(ctx: &RankCtx, rid: ReqId) -> RC<StatusCore> {
+    loop {
+        if let Some(s) = poll_complete(ctx, rid)? {
+            ctx.tables.borrow_mut().reqs.remove(rid.0);
+            return Ok(s);
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// Nonblocking completion check; deallocates on completion (`MPI_Test`).
+pub(crate) fn test_one(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>> {
+    match poll_complete(ctx, rid)? {
+        Some(s) => {
+            ctx.tables.borrow_mut().reqs.remove(rid.0);
+            Ok(Some(s))
+        }
+        None => Ok(None),
+    }
+}
+
+/// `MPI_Cancel` — supported for unmatched receives (marks cancelled).
+pub fn cancel(rid: ReqId) -> RC<()> {
+    with_ctx(|ctx| {
+        let is_recv_pending = {
+            let t = ctx.tables.borrow();
+            let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+            matches!(req.kind, ReqKind::Recv { .. }) && req.status.is_none()
+        };
+        if is_recv_pending {
+            let mut st = ctx.state.borrow_mut();
+            st.posted.retain(|&r| r != rid);
+            drop(st);
+            let mut t = ctx.tables.borrow_mut();
+            let req = t.reqs.get_mut(rid.0).unwrap();
+            let mut s = StatusCore::empty();
+            s.cancelled = true;
+            req.status = Some(s);
+        }
+        // Sends: cancel is best-effort; eager sends already completed.
+        Ok(())
+    })
+}
+
+/// `MPI_Request_free`.
+pub fn request_free(rid: ReqId) -> RC<()> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        t.reqs.remove(rid.0).map(|_| ()).ok_or(err!(MPI_ERR_REQUEST))
+    })
+}

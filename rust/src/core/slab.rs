@@ -1,0 +1,150 @@
+//! Minimal slab allocator for engine object tables.
+//!
+//! Dense `u32` keys with free-list reuse — the same structure MPI
+//! implementations use for handle tables, so "handle → object" is one
+//! bounds-checked index.
+
+/// Growable table of `T` with stable `u32` keys.
+pub struct Slab<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Insert, returning the new key.
+    pub fn insert(&mut self, v: T) -> u32 {
+        self.live += 1;
+        if let Some(k) = self.free.pop() {
+            self.slots[k as usize] = Some(v);
+            k
+        } else {
+            self.slots.push(Some(v));
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    /// Insert at a specific key (used to pin predefined objects at their
+    /// reserved indices during table initialization). Panics if occupied.
+    pub fn insert_at(&mut self, key: u32, v: T) {
+        let k = key as usize;
+        if self.slots.len() <= k {
+            self.slots.resize_with(k + 1, || None);
+        }
+        assert!(self.slots[k].is_none(), "slab slot {key} already occupied");
+        self.slots[k] = Some(v);
+        self.live += 1;
+        // Note: we do not maintain the free list for interior holes created
+        // by resize_with; init fills 0..N densely so none arise in practice.
+    }
+
+    pub fn get(&self, key: u32) -> Option<&T> {
+        self.slots.get(key as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, key: u32) -> Option<&mut T> {
+        self.slots.get_mut(key as usize).and_then(|s| s.as_mut())
+    }
+
+    /// Remove and return the object at `key`.
+    pub fn remove(&mut self, key: u32) -> Option<T> {
+        let v = self.slots.get_mut(key as usize).and_then(|s| s.take());
+        if v.is_some() {
+            self.live -= 1;
+            self.free.push(key);
+        }
+        v
+    }
+
+    pub fn contains(&self, key: u32) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Number of live objects.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate `(key, &T)` over live slots.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_ne!(a, b);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn keys_are_reused_after_free() {
+        let mut s = Slab::new();
+        let a = s.insert(1);
+        s.remove(a);
+        let b = s.insert(2);
+        assert_eq!(a, b, "free-list reuse");
+    }
+
+    #[test]
+    fn insert_at_pins_reserved_slots() {
+        let mut s = Slab::new();
+        s.insert_at(3, "x");
+        assert_eq!(s.get(3), Some(&"x"));
+        // Dynamic inserts fill from the end, never colliding.
+        let k = s.insert("y");
+        assert_ne!(k, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn insert_at_occupied_panics() {
+        let mut s = Slab::new();
+        s.insert_at(0, 1);
+        s.insert_at(0, 2);
+    }
+
+    #[test]
+    fn double_remove_is_none() {
+        let mut s = Slab::new();
+        let a = s.insert(9);
+        assert_eq!(s.remove(a), Some(9));
+        assert_eq!(s.remove(a), None);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn iter_skips_holes() {
+        let mut s = Slab::new();
+        let a = s.insert(10);
+        let _b = s.insert(20);
+        let _c = s.insert(30);
+        s.remove(a);
+        let items: Vec<_> = s.iter().map(|(_, v)| *v).collect();
+        assert_eq!(items, vec![20, 30]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Message envelopes — what actually travels between ranks.
+//!
+//! The payload uses a small-message inline buffer (no heap allocation for
+//! messages ≤ [`INLINE_CAP`] bytes): `osu_mbw_mr`-style 8-byte message
+//! rate is the paper's headline metric (Table 1), and a per-message
+//! `Vec` allocation would swamp the ABI effects we are measuring.
+
+/// Bytes stored inline in the envelope before spilling to the heap.
+pub const INLINE_CAP: usize = 64;
+
+/// Message payload: inline for small messages, heap for large.
+pub enum Payload {
+    Inline { len: u8, bytes: [u8; INLINE_CAP] },
+    Heap(Vec<u8>),
+}
+
+impl Payload {
+    /// Copy `data` into a payload.
+    #[inline]
+    pub fn from_slice(data: &[u8]) -> Payload {
+        if data.len() <= INLINE_CAP {
+            let mut bytes = [0u8; INLINE_CAP];
+            bytes[..data.len()].copy_from_slice(data);
+            Payload::Inline { len: data.len() as u8, bytes }
+        } else {
+            Payload::Heap(data.to_vec())
+        }
+    }
+
+    /// Take ownership of an already-heap-allocated buffer (no copy).
+    #[inline]
+    pub fn from_vec(data: Vec<u8>) -> Payload {
+        Payload::Heap(data)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Payload::Inline { len, bytes } => &bytes[..*len as usize],
+            Payload::Heap(v) => v.as_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Inline { len, .. } => *len as usize,
+            Payload::Heap(v) => v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Empty payload (control messages).
+    #[inline]
+    pub fn empty() -> Payload {
+        Payload::Inline { len: 0, bytes: [0u8; INLINE_CAP] }
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Payload({} bytes)", self.len())
+    }
+}
+
+/// Wire-level message class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Plain eager message: payload is the packed data.
+    Eager,
+    /// Synchronous-mode eager message: receiver must reply [`MsgKind::SsendAck`]
+    /// carrying the same `sync_seq` in `tag`.
+    EagerSync,
+    /// Ack for an `EagerSync`; `tag` carries the sender's sync sequence.
+    SsendAck,
+}
+
+/// A message in flight between two ranks.
+#[derive(Debug)]
+pub struct Envelope {
+    /// World rank of the sender.
+    pub src: u32,
+    /// Communicator context id (pt2pt or collective plane).
+    pub context: u32,
+    /// User tag (pt2pt) or collective tag (coll plane).
+    pub tag: i32,
+    pub kind: MsgKind,
+    /// Per-(src, context) monotone sequence, for FIFO-ordering assertions.
+    pub seq: u64,
+    pub payload: Payload,
+}
+
+impl Envelope {
+    /// Does this envelope match a receive posted for `(src, tag, context)`?
+    /// `src`/`tag` may be the ABI wildcards.
+    #[inline]
+    pub fn matches(&self, context: u32, src: i32, tag: i32) -> bool {
+        use crate::abi::constants::{MPI_ANY_SOURCE, MPI_ANY_TAG};
+        self.context == context
+            && matches!(self.kind, MsgKind::Eager | MsgKind::EagerSync)
+            && (src == MPI_ANY_SOURCE || self.src == src as u32)
+            && (tag == MPI_ANY_TAG || self.tag == tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abi::constants::{MPI_ANY_SOURCE, MPI_ANY_TAG};
+
+    #[test]
+    fn inline_payload_roundtrip() {
+        let data = [7u8; 8];
+        let p = Payload::from_slice(&data);
+        assert!(matches!(p, Payload::Inline { .. }));
+        assert_eq!(p.as_slice(), &data);
+        assert_eq!(p.len(), 8);
+    }
+
+    #[test]
+    fn heap_payload_above_inline_cap() {
+        let data = vec![1u8; INLINE_CAP + 1];
+        let p = Payload::from_slice(&data);
+        assert!(matches!(p, Payload::Heap(_)));
+        assert_eq!(p.as_slice(), &data[..]);
+    }
+
+    #[test]
+    fn boundary_is_inline() {
+        let data = vec![3u8; INLINE_CAP];
+        assert!(matches!(Payload::from_slice(&data), Payload::Inline { .. }));
+    }
+
+    #[test]
+    fn empty_payload() {
+        let p = Payload::empty();
+        assert!(p.is_empty());
+        assert_eq!(p.as_slice(), &[] as &[u8]);
+    }
+
+    fn env(src: u32, context: u32, tag: i32) -> Envelope {
+        Envelope { src, context, tag, kind: MsgKind::Eager, seq: 0, payload: Payload::empty() }
+    }
+
+    #[test]
+    fn matching_rules() {
+        let e = env(3, 7, 42);
+        assert!(e.matches(7, 3, 42));
+        assert!(e.matches(7, MPI_ANY_SOURCE, 42));
+        assert!(e.matches(7, 3, MPI_ANY_TAG));
+        assert!(e.matches(7, MPI_ANY_SOURCE, MPI_ANY_TAG));
+        assert!(!e.matches(8, 3, 42), "context never wildcards");
+        assert!(!e.matches(7, 2, 42));
+        assert!(!e.matches(7, 3, 41));
+    }
+
+    #[test]
+    fn acks_never_match_recvs() {
+        let mut e = env(1, 7, 5);
+        e.kind = MsgKind::SsendAck;
+        assert!(!e.matches(7, MPI_ANY_SOURCE, MPI_ANY_TAG));
+    }
+}

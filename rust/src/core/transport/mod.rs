@@ -1,0 +1,187 @@
+//! The shared-memory "network" between ranks.
+//!
+//! Two interchangeable transports model the paper's UCX/OFI sensitivity
+//! (Table 1 note: "build options unrelated to ABI — the shared-memory
+//! performance of UCX versus OFI — have a significant impact"):
+//!
+//! * [`TransportKind::Spsc`] — per-pair lock-free rings (fast, "UCX").
+//! * [`TransportKind::Mutex`] — per-rank locked queues (slow, "OFI").
+//!
+//! The fabric is ABI-agnostic: it moves [`Envelope`]s of packed bytes.
+
+pub mod envelope;
+pub mod mutex_queue;
+pub mod spsc;
+
+pub use envelope::{Envelope, MsgKind, Payload, INLINE_CAP};
+
+use mutex_queue::MutexQueue;
+use spsc::Spsc;
+
+/// Which shared-memory transport a world uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Lock-free SPSC rings per rank pair — the fast path ("UCX shm").
+    Spsc,
+    /// Mutex-guarded MPSC queue per rank — the slow path ("OFI shm").
+    Mutex,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "spsc" | "ucx" | "fast" => Some(TransportKind::Spsc),
+            "mutex" | "ofi" | "slow" => Some(TransportKind::Mutex),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Spsc => "spsc",
+            TransportKind::Mutex => "mutex",
+        }
+    }
+}
+
+/// Capacity of each SPSC ring (envelopes). Must exceed the largest
+/// send-window used by apps/benches (osu_mbw_mr uses 64) with slack so
+/// senders rarely hit backpressure.
+pub const SPSC_CAPACITY: usize = 1024;
+
+/// The full fabric: every rank's inbound queues.
+pub enum Fabric {
+    /// `rings[dst][src]` — inbound ring at `dst` from `src`.
+    Spsc { rings: Vec<Vec<Spsc<Envelope>>>, size: usize },
+    /// `queues[dst]` — single locked inbound queue at `dst`.
+    Mutex { queues: Vec<MutexQueue>, size: usize },
+}
+
+impl Fabric {
+    pub fn new(kind: TransportKind, size: usize) -> Fabric {
+        match kind {
+            TransportKind::Spsc => Fabric::Spsc {
+                rings: (0..size)
+                    .map(|_| (0..size).map(|_| Spsc::new(SPSC_CAPACITY)).collect())
+                    .collect(),
+                size,
+            },
+            TransportKind::Mutex => {
+                Fabric::Mutex { queues: (0..size).map(|_| MutexQueue::new()).collect(), size }
+            }
+        }
+    }
+
+    pub fn kind(&self) -> TransportKind {
+        match self {
+            Fabric::Spsc { .. } => TransportKind::Spsc,
+            Fabric::Mutex { .. } => TransportKind::Mutex,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Fabric::Spsc { size, .. } | Fabric::Mutex { size, .. } => *size,
+        }
+    }
+
+    /// Try to deliver `env` to `dst`'s inbound queue. On the bounded SPSC
+    /// transport a full ring returns the envelope for retry (the caller
+    /// must progress its own inbound traffic and retry — backpressure).
+    ///
+    /// Caller discipline: only the thread owning world-rank `env.src` may
+    /// send from that src on the SPSC transport.
+    #[inline]
+    pub fn try_send(&self, dst: usize, env: Envelope) -> Result<(), Envelope> {
+        match self {
+            Fabric::Spsc { rings, .. } => rings[dst][env.src as usize].push(env),
+            Fabric::Mutex { queues, .. } => {
+                queues[dst].push(env);
+                Ok(())
+            }
+        }
+    }
+
+    /// Drain all messages currently inbound at `dst` into `out`, in a
+    /// per-sender FIFO order. Only `dst`'s thread may call this.
+    #[inline]
+    pub fn poll_into(&self, dst: usize, out: &mut Vec<Envelope>) {
+        match self {
+            Fabric::Spsc { rings, .. } => {
+                for q in &rings[dst] {
+                    while let Some(e) = q.pop() {
+                        out.push(e);
+                    }
+                }
+            }
+            Fabric::Mutex { queues, .. } => queues[dst].drain_into(out),
+        }
+    }
+
+    /// `true` if nothing is inbound at `dst` (cheap; used to avoid
+    /// allocating in tight progress loops).
+    #[inline]
+    pub fn inbound_empty(&self, dst: usize) -> bool {
+        match self {
+            Fabric::Spsc { rings, .. } => rings[dst].iter().all(|q| q.is_empty()),
+            Fabric::Mutex { queues, .. } => queues[dst].is_empty(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(src: u32, tag: i32) -> Envelope {
+        Envelope { src, context: 0, tag, kind: MsgKind::Eager, seq: 0, payload: Payload::empty() }
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(TransportKind::parse("ucx"), Some(TransportKind::Spsc));
+        assert_eq!(TransportKind::parse("ofi"), Some(TransportKind::Mutex));
+        assert_eq!(TransportKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spsc_fabric_routes_by_pair() {
+        let f = Fabric::new(TransportKind::Spsc, 3);
+        f.try_send(2, env(0, 10)).unwrap();
+        f.try_send(2, env(1, 11)).unwrap();
+        f.try_send(0, env(2, 12)).unwrap();
+        let mut out = Vec::new();
+        f.poll_into(2, &mut out);
+        assert_eq!(out.len(), 2);
+        let mut out0 = Vec::new();
+        f.poll_into(0, &mut out0);
+        assert_eq!(out0.len(), 1);
+        assert_eq!(out0[0].tag, 12);
+        assert!(f.inbound_empty(1));
+    }
+
+    #[test]
+    fn mutex_fabric_routes() {
+        let f = Fabric::new(TransportKind::Mutex, 2);
+        f.try_send(1, env(0, 5)).unwrap();
+        assert!(!f.inbound_empty(1));
+        let mut out = Vec::new();
+        f.poll_into(1, &mut out);
+        assert_eq!(out[0].tag, 5);
+        assert!(f.inbound_empty(1));
+    }
+
+    #[test]
+    fn spsc_backpressure_surfaces() {
+        let f = Fabric::new(TransportKind::Spsc, 2);
+        let mut rejected = None;
+        for i in 0..(SPSC_CAPACITY + 1) {
+            if let Err(e) = f.try_send(1, env(0, i as i32)) {
+                rejected = Some(e);
+                break;
+            }
+        }
+        let e = rejected.expect("ring must fill at capacity");
+        assert_eq!(e.tag, SPSC_CAPACITY as i32);
+    }
+}

@@ -1,0 +1,121 @@
+//! Mutex-guarded MPSC queue — the "slower shared-memory build" transport.
+//!
+//! Table 1's point is that *transport* choice (UCX vs OFI shm) moves the
+//! message rate far more than any ABI decision. This queue models the slow
+//! side: every enqueue takes a lock shared by all senders to one rank, and
+//! the receiver takes the same lock to drain.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::envelope::Envelope;
+
+/// One inbound queue per rank; all peers contend on the same mutex.
+pub struct MutexQueue {
+    q: Mutex<VecDeque<Envelope>>,
+}
+
+impl MutexQueue {
+    pub fn new() -> MutexQueue {
+        MutexQueue { q: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Enqueue (any sender thread). Unbounded: the lock itself is the
+    /// backpressure in this transport model.
+    ///
+    /// Models the OFI-shm protocol's bounce buffer: the payload takes an
+    /// extra staging copy through a heap buffer before landing in the
+    /// queue (the copy the UCX fast path avoids). On multi-core hosts the
+    /// shared lock adds contention on top.
+    #[inline]
+    pub fn push(&self, mut env: Envelope) {
+        let staged = env.payload.as_slice().to_vec();
+        env.payload = super::envelope::Payload::from_vec(staged);
+        self.q.lock().unwrap().push_back(env);
+    }
+
+    /// Dequeue the oldest message (receiver thread).
+    #[inline]
+    pub fn pop(&self) -> Option<Envelope> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    /// Drain everything currently queued into `out` (receiver thread).
+    /// One lock acquisition per progress poll instead of per message.
+    #[inline]
+    pub fn drain_into(&self, out: &mut Vec<Envelope>) {
+        let mut g = self.q.lock().unwrap();
+        out.extend(g.drain(..));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.lock().unwrap().is_empty()
+    }
+}
+
+impl Default for MutexQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::transport::envelope::{MsgKind, Payload};
+
+    fn env(src: u32, tag: i32) -> Envelope {
+        Envelope { src, context: 0, tag, kind: MsgKind::Eager, seq: 0, payload: Payload::empty() }
+    }
+
+    #[test]
+    fn fifo() {
+        let q = MutexQueue::new();
+        q.push(env(0, 1));
+        q.push(env(0, 2));
+        assert_eq!(q.pop().unwrap().tag, 1);
+        assert_eq!(q.pop().unwrap().tag, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn drain_preserves_order() {
+        let q = MutexQueue::new();
+        for t in 0..10 {
+            q.push(env(1, t));
+        }
+        let mut out = Vec::new();
+        q.drain_into(&mut out);
+        assert_eq!(out.len(), 10);
+        for (i, e) in out.iter().enumerate() {
+            assert_eq!(e.tag, i as i32);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn multi_producer() {
+        let q = std::sync::Arc::new(MutexQueue::new());
+        let mut handles = Vec::new();
+        for src in 0..4u32 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for t in 0..100 {
+                    q.push(env(src, t));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut count = 0;
+        let mut last_tag_per_src = [-1i32; 4];
+        while let Some(e) = q.pop() {
+            // Per-producer FIFO must hold even under interleaving.
+            assert!(e.tag > last_tag_per_src[e.src as usize]);
+            last_tag_per_src[e.src as usize] = e.tag;
+            count += 1;
+        }
+        assert_eq!(count, 400);
+    }
+}

@@ -1,0 +1,184 @@
+//! Lock-free single-producer single-consumer ring queue.
+//!
+//! This is the "UCX shared-memory" analogue of Table 1: the fast transport.
+//! One queue exists per ordered rank pair `(sender, receiver)`; the sender
+//! thread is the only producer and the receiver thread the only consumer,
+//! so a classic Lamport ring with acquire/release indices suffices — no
+//! CAS, no locks on the message path.
+
+use core::cell::UnsafeCell;
+use core::mem::MaybeUninit;
+use core::sync::atomic::{AtomicUsize, Ordering};
+use crossbeam_utils::CachePadded;
+
+/// Fixed-capacity SPSC ring. Capacity is rounded up to a power of two.
+pub struct Spsc<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Next slot to read (owned by consumer; read by producer).
+    head: CachePadded<AtomicUsize>,
+    /// Next slot to write (owned by producer; read by consumer).
+    tail: CachePadded<AtomicUsize>,
+}
+
+// Safety: only one thread pushes and one thread pops; the atomics order
+// access to the slots.
+unsafe impl<T: Send> Send for Spsc<T> {}
+unsafe impl<T: Send> Sync for Spsc<T> {}
+
+impl<T> Spsc<T> {
+    /// Create with at least `capacity` slots.
+    pub fn new(capacity: usize) -> Spsc<T> {
+        let cap = capacity.next_power_of_two().max(2);
+        let buf = (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Spsc {
+            buf,
+            mask: cap - 1,
+            head: CachePadded::new(AtomicUsize::new(0)),
+            tail: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Producer-side: append `v`, or return it if the ring is full.
+    ///
+    /// # Safety contract (by construction, not types)
+    /// Must only be called from the unique producer thread.
+    #[inline]
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > self.mask {
+            return Err(v); // full
+        }
+        unsafe {
+            (*self.buf[tail & self.mask].get()).write(v);
+        }
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer-side: pop the oldest element, if any.
+    ///
+    /// Must only be called from the unique consumer thread.
+    #[inline]
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None; // empty
+        }
+        let v = unsafe { (*self.buf[head & self.mask].get()).assume_init_read() };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+
+    /// Consumer-side: `true` if no messages are waiting. Cheap peek used by
+    /// the progress loop to skip empty peers.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.head.load(Ordering::Relaxed) == self.tail.load(Ordering::Acquire)
+    }
+}
+
+impl<T> Drop for Spsc<T> {
+    fn drop(&mut self) {
+        // Drain remaining elements so their destructors run.
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = Spsc::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let q: Spsc<u8> = Spsc::new(5);
+        assert_eq!(q.capacity(), 8);
+        let q: Spsc<u8> = Spsc::new(8);
+        assert_eq!(q.capacity(), 8);
+    }
+
+    #[test]
+    fn full_rejects_and_returns_value() {
+        let q = Spsc::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let q = Spsc::new(4);
+        for round in 0u64..100 {
+            for i in 0..3 {
+                q.push(round * 10 + i).unwrap();
+            }
+            for i in 0..3 {
+                assert_eq!(q.pop(), Some(round * 10 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn drop_drains_elements() {
+        // Vec payloads must be freed when the queue is dropped non-empty.
+        let q = Spsc::new(8);
+        q.push(vec![1u8; 100]).unwrap();
+        q.push(vec![2u8; 100]).unwrap();
+        drop(q); // must not leak (checked under miri/asan in CI-like runs)
+    }
+
+    #[test]
+    fn two_thread_stress() {
+        let q = std::sync::Arc::new(Spsc::new(16));
+        let p = q.clone();
+        let n = 10_000u64;
+        let producer = std::thread::spawn(move || {
+            for i in 0..n {
+                let mut v = i;
+                loop {
+                    match p.push(v) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            v = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }
+        });
+        let mut expected = 0u64;
+        while expected < n {
+            if let Some(v) = q.pop() {
+                assert_eq!(v, expected);
+                expected += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+        assert!(q.is_empty());
+    }
+}

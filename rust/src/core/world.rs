@@ -1,0 +1,319 @@
+//! The simulated parallel job: one [`World`] shared by all rank threads,
+//! one thread-local [`RankCtx`] per rank (the analogue of an MPI process's
+//! library globals).
+//!
+//! MPI libraries keep their state in process globals; our "processes" are
+//! threads, so the same state lives in TLS. All engine entry points resolve
+//! the current rank context through [`with_ctx`], which also models the
+//! "MPI call before init / after finalize" failure modes.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashSet, VecDeque};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::comm::CommObj;
+use super::datatype::DatatypeObj;
+use super::errh::ErrhObj;
+use super::group::GroupObj;
+use super::info::InfoObj;
+use super::op::OpObj;
+use super::request::RequestObj;
+use super::slab::Slab;
+use super::transport::{Envelope, Fabric, TransportKind};
+use super::{attr::KeyvalObj, err, RC};
+
+/// Sentinel in `abort_code` meaning "no abort requested".
+const NO_ABORT: i64 = i64::MIN;
+
+/// Job-global state shared by all ranks.
+pub struct World {
+    pub size: usize,
+    pub fabric: Fabric,
+    /// `MPI_Abort` latch: the exit code once some rank aborts.
+    abort_code: AtomicI64,
+    /// Epoch for `MPI_Wtime`.
+    epoch: Instant,
+    /// Allocator for communicator context ids (2 per comm: pt2pt, coll).
+    context_counter: AtomicU32,
+    /// Ranks that called `MPI_Finalize` (for `world_finalized` diagnostics).
+    finalize_count: AtomicUsize,
+}
+
+impl World {
+    pub fn new(size: usize, transport: TransportKind) -> Arc<World> {
+        assert!(size >= 1, "world needs at least one rank");
+        Arc::new(World {
+            size,
+            fabric: Fabric::new(transport, size),
+            abort_code: AtomicI64::new(NO_ABORT),
+            epoch: Instant::now(),
+            // 0/1 = COMM_WORLD pt2pt/coll, 2/3 = COMM_SELF.
+            context_counter: AtomicU32::new(4),
+            finalize_count: AtomicUsize::new(0),
+        })
+    }
+
+    /// Allocate a fresh pair of context ids (pt2pt, coll) for a new comm.
+    /// Called by exactly one rank per comm-creation; the result is
+    /// distributed to the other members over the parent communicator.
+    pub fn alloc_context_pair(&self) -> (u32, u32) {
+        let base = self.context_counter.fetch_add(2, Ordering::Relaxed);
+        (base, base + 1)
+    }
+
+    /// Seconds since job start (`MPI_Wtime`).
+    pub fn wtime(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Request job abort with `code` (`MPI_Abort`). First caller wins.
+    pub fn abort(&self, code: i32) {
+        let _ = self.abort_code.compare_exchange(
+            NO_ABORT,
+            code as i64,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        );
+    }
+
+    /// The abort code, if some rank aborted.
+    pub fn aborted(&self) -> Option<i32> {
+        match self.abort_code.load(Ordering::SeqCst) {
+            NO_ABORT => None,
+            c => Some(c as i32),
+        }
+    }
+
+    pub(crate) fn note_finalize(&self) {
+        self.finalize_count.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Panic payload used to unwind a rank when the job aborts; the launcher
+/// downcasts this to report the code instead of a crash.
+#[derive(Debug)]
+pub struct AbortUnwind(pub i32);
+
+/// Object tables of one rank — the per-process handle tables of a real MPI.
+pub struct Tables {
+    pub comms: Slab<CommObj>,
+    pub groups: Slab<GroupObj>,
+    pub dtypes: Slab<DatatypeObj>,
+    pub ops: Slab<OpObj>,
+    pub reqs: Slab<RequestObj>,
+    pub errhs: Slab<ErrhObj>,
+    pub infos: Slab<InfoObj>,
+    pub keyvals: Slab<KeyvalObj>,
+}
+
+/// Mutable per-rank messaging state.
+pub struct RankState {
+    /// Messages received but not yet matched (the unexpected queue).
+    pub unexpected: VecDeque<Envelope>,
+    /// Recv requests posted and not yet matched, in post order.
+    pub posted: VecDeque<super::ReqId>,
+    /// Sends that hit transport backpressure, awaiting retry.
+    pub pending_sends: VecDeque<(usize, Envelope)>,
+    /// Ssend acks received (sync ids).
+    pub ssend_acks: HashSet<u64>,
+    /// Next sync id for Ssend.
+    pub next_sync_id: u64,
+    /// Per-destination send sequence (FIFO diagnostics).
+    pub send_seq: u64,
+    /// Scratch buffer for fabric polls (reused to avoid allocation).
+    pub inbox: Vec<Envelope>,
+}
+
+impl RankState {
+    fn new() -> RankState {
+        RankState {
+            unexpected: VecDeque::new(),
+            posted: VecDeque::new(),
+            pending_sends: VecDeque::new(),
+            ssend_acks: HashSet::new(),
+            next_sync_id: 1,
+            send_seq: 0,
+            inbox: Vec::with_capacity(64),
+        }
+    }
+}
+
+/// One rank's complete library state.
+pub struct RankCtx {
+    pub world: Arc<World>,
+    pub rank: usize,
+    pub tables: RefCell<Tables>,
+    pub state: RefCell<RankState>,
+    pub initialized: Cell<bool>,
+    pub finalized: Cell<bool>,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Rc<RankCtx>>> = const { RefCell::new(None) };
+}
+
+/// Bind this thread as `rank` of `world`, constructing the rank context
+/// with all predefined objects installed. Called by the launcher before
+/// the application runs (the "process created" moment, pre-`MPI_Init`).
+pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
+    assert!(rank < world.size, "rank {rank} out of bounds");
+    let ctx = Rc::new(RankCtx {
+        world,
+        rank,
+        tables: RefCell::new(init_tables()),
+        state: RefCell::new(RankState::new()),
+        initialized: Cell::new(false),
+        finalized: Cell::new(false),
+    });
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        assert!(cur.is_none(), "thread already bound to a rank");
+        *cur = Some(ctx.clone());
+    });
+    ctx
+}
+
+/// Unbind this thread (launcher, after the application returns).
+pub fn unbind_rank() {
+    CURRENT.with(|c| {
+        c.borrow_mut().take();
+    });
+}
+
+/// Run `f` with the current rank context. Errors with `MPI_ERR_OTHER` if
+/// the thread is not bound (MPI call outside a job) — the paper notes
+/// Mukautuva likewise does not fully support pre-init/post-finalize calls.
+pub fn with_ctx<R>(f: impl FnOnce(&RankCtx) -> RC<R>) -> RC<R> {
+    CURRENT.with(|c| {
+        let cur = c.borrow();
+        match cur.as_ref() {
+            Some(ctx) => {
+                if let Some(code) = ctx.world.aborted() {
+                    std::panic::panic_any(AbortUnwind(code));
+                }
+                f(ctx)
+            }
+            None => Err(err!(MPI_ERR_OTHER)),
+        }
+    })
+}
+
+/// Like [`with_ctx`] but doesn't require `MPI_Init` to have been called —
+/// for the handful of calls that are legal pre-init (`MPI_Initialized`,
+/// `MPI_Finalized`, version queries).
+pub fn try_ctx<R>(f: impl FnOnce(Option<&RankCtx>) -> R) -> R {
+    CURRENT.with(|c| {
+        let cur = c.borrow();
+        f(cur.as_deref())
+    })
+}
+
+/// Build the predefined object tables (§2 of DESIGN.md "reserved ids").
+fn init_tables() -> Tables {
+    let mut t = Tables {
+        comms: Slab::new(),
+        groups: Slab::new(),
+        dtypes: Slab::new(),
+        ops: Slab::new(),
+        reqs: Slab::new(),
+        errhs: Slab::new(),
+        infos: Slab::new(),
+        keyvals: Slab::new(),
+    };
+    super::group::install_predefined(&mut t.groups);
+    super::comm::install_predefined(&mut t.comms);
+    super::datatype::install_predefined(&mut t.dtypes);
+    super::op::install_predefined(&mut t.ops);
+    super::errh::install_predefined(&mut t.errhs);
+    super::info::install_predefined(&mut t.infos);
+    t
+}
+
+/// Convenience: world size/rank of the calling thread (post-bind).
+pub fn current_rank() -> Option<usize> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|ctx| ctx.rank))
+}
+
+#[cfg(test)]
+pub(crate) fn test_world(size: usize) -> Arc<World> {
+    World::new(size, TransportKind::Spsc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_pairs_are_unique() {
+        let w = test_world(2);
+        let (a, b) = w.alloc_context_pair();
+        let (c, d) = w.alloc_context_pair();
+        assert_eq!(b, a + 1);
+        assert_eq!(d, c + 1);
+        assert!(c > b);
+        // Predefined planes 0..4 are never handed out.
+        assert!(a >= 4);
+    }
+
+    #[test]
+    fn abort_first_caller_wins() {
+        let w = test_world(1);
+        assert_eq!(w.aborted(), None);
+        w.abort(42);
+        w.abort(7);
+        assert_eq!(w.aborted(), Some(42));
+    }
+
+    #[test]
+    fn wtime_is_monotone() {
+        let w = test_world(1);
+        let a = w.wtime();
+        let b = w.wtime();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn unbound_thread_errors() {
+        let r: RC<()> = with_ctx(|_| Ok(()));
+        assert_eq!(r.unwrap_err().class, crate::abi::errors::MPI_ERR_OTHER);
+    }
+
+    #[test]
+    fn bind_installs_predefined_objects() {
+        std::thread::spawn(|| {
+            let w = test_world(1);
+            let ctx = bind_rank(w, 0);
+            let t = ctx.tables.borrow();
+            assert!(t.comms.contains(super::super::reserved::COMM_WORLD.0));
+            assert!(t.comms.contains(super::super::reserved::COMM_SELF.0));
+            assert!(t.groups.len() >= 3);
+            assert_eq!(t.ops.len() as u32, super::super::reserved::NUM_BUILTIN_OPS);
+            assert_eq!(t.dtypes.len() as u32, super::super::reserved::NUM_BUILTIN_DTYPES);
+            assert!(t.errhs.len() >= 3);
+            unbind_rank();
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "already bound")]
+    fn double_bind_panics() {
+        // Run in a scoped thread so the panic doesn't poison other tests'
+        // TLS.
+        let w = test_world(1);
+        let w2 = w.clone();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let _a = bind_rank(w2.clone(), 0);
+                let _b = bind_rank(w2, 0); // panics
+            })
+            .join()
+            .map_err(|e| std::panic::resume_unwind(e))
+            .unwrap();
+        });
+    }
+}

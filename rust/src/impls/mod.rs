@@ -1,0 +1,22 @@
+//! The two deliberately divergent MPI implementation ABIs.
+//!
+//! [`mpich`] uses MPICH's design: handles are C `int`s with kind bits and
+//! (for builtin datatypes) the element size encoded in the handle value;
+//! predefined constants are compile-time constants.
+//!
+//! [`ompi`] uses Open MPI's design: handles are pointers to descriptor
+//! structs; predefined constants are addresses of global descriptors
+//! (link-time, *not* compile-time constants); querying a datatype's size
+//! dereferences the descriptor.
+//!
+//! Both are representation shims ([`repr::Repr`]) over the same engine —
+//! exactly the situation of real MPI implementations sharing the MPI
+//! semantics but differing in ABI, which is what makes translation
+//! layers possible at all.
+
+pub mod mpich;
+pub mod ompi;
+pub mod repr;
+
+pub use mpich::MpichAbi;
+pub use ompi::OmpiAbi;

@@ -1,0 +1,496 @@
+//! The MPICH-like implementation ABI.
+//!
+//! Handles are C `int`s (§3.3): two *kind* bits (invalid / builtin /
+//! direct), four object-type bits, and a payload. Builtin datatype
+//! handles encode the element size in bits 8..16 — the paper quotes the
+//! real macro:
+//!
+//! ```c
+//! #define MPIR_Datatype_get_basic_size(a) (((a)&0x0000ff00)>>8)
+//! ```
+//!
+//! so `MPI_CHAR = 0x4c000101` (size 1, index 1), `MPI_DOUBLE ≈
+//! 0x4c00080b` (size 8). Predefined constants are **compile-time
+//! constants** (`pub const`), the status layout is the MPICH-ABI-
+//! initiative one (count split across two leading ints), wildcard
+//! integers use MPICH's venerable values (`MPI_ANY_SOURCE = -2`), and
+//! error codes are "rich": class in the low bits, a set bit marking a
+//! code ≠ class.
+
+use once_cell::sync::Lazy;
+
+use super::repr::{Backed, Repr};
+use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
+use crate::core::request::StatusCore;
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+
+/// The public ABI type: `MpichAbi::send(...)` etc.
+pub type MpichAbi = Backed<MpichRepr>;
+
+// --- Handle bit layout -------------------------------------------------------
+
+/// Kind field (bits 30..32).
+pub const KIND_INVALID: i32 = 0x0000_0000;
+pub const KIND_BUILTIN: i32 = 0x4000_0000;
+pub const KIND_DIRECT: i32 = -0x8000_0000; // 0x8000_0000 as i32
+
+/// Object-type field (bits 26..30), MPICH's numbering.
+pub const T_COMM: i32 = 0x1 << 26;
+pub const T_GROUP: i32 = 0x2 << 26;
+pub const T_DATATYPE: i32 = 0x3 << 26;
+pub const T_FILE: i32 = 0x4 << 26;
+pub const T_ERRHANDLER: i32 = 0x5 << 26;
+pub const T_OP: i32 = 0x6 << 26;
+pub const T_INFO: i32 = 0x7 << 26;
+pub const T_WIN: i32 = 0x8 << 26;
+pub const T_REQUEST: i32 = 0xB << 26;
+
+const KIND_MASK: i32 = KIND_DIRECT | KIND_BUILTIN; // top two bits
+const TYPE_MASK: i32 = 0xF << 26;
+const PAYLOAD_MASK: i32 = (1 << 26) - 1;
+
+#[inline(always)]
+pub fn kind_of(h: i32) -> i32 {
+    h & KIND_MASK
+}
+
+#[inline(always)]
+pub fn type_of(h: i32) -> i32 {
+    h & TYPE_MASK
+}
+
+#[inline(always)]
+pub fn payload_of(h: i32) -> i32 {
+    h & PAYLOAD_MASK
+}
+
+// --- Predefined constants (compile-time, like real MPICH) --------------------
+
+pub const MPI_COMM_NULL: i32 = KIND_INVALID | T_COMM; // 0x04000000
+pub const MPI_COMM_WORLD: i32 = KIND_BUILTIN | T_COMM; // 0x44000000
+pub const MPI_COMM_SELF: i32 = KIND_BUILTIN | T_COMM | 1; // 0x44000001
+
+pub const MPI_GROUP_NULL: i32 = KIND_INVALID | T_GROUP;
+pub const MPI_GROUP_EMPTY: i32 = KIND_BUILTIN | T_GROUP;
+
+pub const MPI_DATATYPE_NULL: i32 = KIND_INVALID | T_DATATYPE; // 0x0c000000
+pub const MPI_REQUEST_NULL: i32 = KIND_INVALID | T_REQUEST; // 0x2c000000
+pub const MPI_OP_NULL: i32 = KIND_INVALID | T_OP; // 0x18000000
+pub const MPI_ERRHANDLER_NULL: i32 = KIND_INVALID | T_ERRHANDLER;
+pub const MPI_INFO_NULL: i32 = KIND_INVALID | T_INFO;
+
+pub const MPI_ERRORS_ARE_FATAL: i32 = KIND_BUILTIN | T_ERRHANDLER; // 0x54000000
+pub const MPI_ERRORS_RETURN: i32 = KIND_BUILTIN | T_ERRHANDLER | 1;
+pub const MPI_ERRORS_ABORT: i32 = KIND_BUILTIN | T_ERRHANDLER | 2;
+pub const MPI_INFO_ENV: i32 = KIND_BUILTIN | T_INFO;
+
+/// Wildcards and specials — MPICH's historical values, deliberately
+/// different from the standard ABI's unique negatives.
+pub const MPI_ANY_SOURCE: i32 = -2;
+pub const MPI_ANY_TAG: i32 = -1;
+pub const MPI_PROC_NULL: i32 = -1;
+pub const MPI_ROOT: i32 = -3;
+pub const MPI_UNDEFINED: i32 = -32766;
+
+/// `MPI_IN_PLACE` in MPICH is `(void *) -1`.
+pub const fn in_place_ptr() -> *const u8 {
+    usize::MAX as *const u8
+}
+
+/// Builtin datatype handle: size in bits 8..16, engine index in bits 0..8.
+#[inline(always)]
+pub const fn dt_handle(size: usize, index: usize) -> i32 {
+    KIND_BUILTIN | T_DATATYPE | ((size as i32) << 8) | index as i32
+}
+
+/// The quoted MPICH macro.
+#[inline(always)]
+pub fn datatype_get_basic_size(h: i32) -> i32 {
+    (h & 0x0000_ff00) >> 8
+}
+
+/// Builtin datatype handles, indexed by engine dt id (= position in
+/// [`crate::abi::datatypes::PREDEFINED_DATATYPES`]).
+pub static DT_HANDLES: Lazy<Vec<i32>> = Lazy::new(|| {
+    crate::abi::datatypes::PREDEFINED_DATATYPES
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, abi))| {
+            let size = crate::abi::datatypes::platform_size_of(abi).unwrap_or(0);
+            if i == 0 {
+                MPI_DATATYPE_NULL
+            } else {
+                dt_handle(size, i)
+            }
+        })
+        .collect()
+});
+
+/// Classic names for a few datatypes (spot-checked against the paper).
+pub fn mpi_char() -> i32 {
+    handle_for(crate::abi::datatypes::MPI_CHAR)
+}
+pub fn mpi_int() -> i32 {
+    handle_for(crate::abi::datatypes::MPI_INT)
+}
+pub fn mpi_double() -> i32 {
+    handle_for(crate::abi::datatypes::MPI_DOUBLE)
+}
+
+fn handle_for(abi_dt: usize) -> i32 {
+    let id = crate::core::datatype::builtin_id_of_abi(abi_dt).unwrap();
+    DT_HANDLES[id.0 as usize]
+}
+
+/// Builtin op handle: engine op index in the payload. `MPI_SUM =
+/// 0x58000001`, as in real MPICH.
+#[inline(always)]
+pub const fn op_handle(index: usize) -> i32 {
+    KIND_BUILTIN | T_OP | index as i32
+}
+
+// --- Status: the MPICH-ABI-initiative layout (§3.2.1) -------------------------
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(non_snake_case)]
+pub struct MpichStatus {
+    pub count_lo: i32,
+    pub count_hi_and_cancelled: i32,
+    pub MPI_SOURCE: i32,
+    pub MPI_TAG: i32,
+    pub MPI_ERROR: i32,
+}
+
+const _: () = assert!(core::mem::size_of::<MpichStatus>() == 20);
+
+impl MpichStatus {
+    pub fn count_bytes(&self) -> u64 {
+        let hi = (self.count_hi_and_cancelled as u32 & 0x7FFF_FFFF) as u64;
+        (hi << 32) | self.count_lo as u32 as u64
+    }
+
+    pub fn cancelled(&self) -> bool {
+        (self.count_hi_and_cancelled as u32) & 0x8000_0000 != 0
+    }
+}
+
+// --- Error codes: rich encoding, class in low 8 bits ---------------------------
+
+/// Codes carry the class in the low byte; bit 14 marks "code beyond
+/// class" so codes are visibly ≠ standard-ABI classes (forcing layers to
+/// translate).
+pub fn err_code(class: i32) -> i32 {
+    if class == 0 {
+        0
+    } else {
+        class | 0x4000
+    }
+}
+
+pub fn err_class(code: i32) -> i32 {
+    code & 0xFF
+}
+
+// --- The Repr ------------------------------------------------------------------
+
+pub struct MpichRepr;
+
+impl Repr for MpichRepr {
+    const NAME: &'static str = "mpich";
+
+    type Comm = i32;
+    type Datatype = i32;
+    type Op = i32;
+    type Request = i32;
+    type Group = i32;
+    type Errhandler = i32;
+    type Info = i32;
+    type Status = MpichStatus;
+
+    fn c_comm_world() -> i32 {
+        MPI_COMM_WORLD
+    }
+    fn c_comm_self() -> i32 {
+        MPI_COMM_SELF
+    }
+    fn c_comm_null() -> i32 {
+        MPI_COMM_NULL
+    }
+    fn c_request_null() -> i32 {
+        MPI_REQUEST_NULL
+    }
+    fn c_errh_return() -> i32 {
+        MPI_ERRORS_RETURN
+    }
+    fn c_errh_fatal() -> i32 {
+        MPI_ERRORS_ARE_FATAL
+    }
+    fn c_info_null() -> i32 {
+        MPI_INFO_NULL
+    }
+
+    fn c_datatype(d: Dt) -> i32 {
+        handle_for(dt_to_abi_const(d))
+    }
+
+    fn c_op(o: OpName) -> i32 {
+        let id = crate::core::op::builtin_id_of_abi(op_to_abi_const(o)).unwrap();
+        op_handle(id.0 as usize)
+    }
+
+    fn c_any_source() -> i32 {
+        MPI_ANY_SOURCE
+    }
+    fn c_any_tag() -> i32 {
+        MPI_ANY_TAG
+    }
+    fn c_proc_null() -> i32 {
+        MPI_PROC_NULL
+    }
+    fn c_undefined() -> i32 {
+        MPI_UNDEFINED
+    }
+    fn c_in_place() -> *const u8 {
+        in_place_ptr()
+    }
+
+    #[inline]
+    fn comm_id(c: i32) -> RC<CommId> {
+        match c {
+            MPI_COMM_WORLD => Ok(crate::core::reserved::COMM_WORLD),
+            MPI_COMM_SELF => Ok(crate::core::reserved::COMM_SELF),
+            _ if kind_of(c) == KIND_DIRECT && type_of(c) == T_COMM => {
+                Ok(CommId(payload_of(c) as u32))
+            }
+            _ => Err(err!(MPI_ERR_COMM)),
+        }
+    }
+
+    #[inline]
+    fn comm_h(id: CommId) -> i32 {
+        match id {
+            crate::core::reserved::COMM_WORLD => MPI_COMM_WORLD,
+            crate::core::reserved::COMM_SELF => MPI_COMM_SELF,
+            CommId(n) => KIND_DIRECT | T_COMM | n as i32,
+        }
+    }
+
+    #[inline]
+    fn dt_id(d: i32) -> RC<DtId> {
+        match kind_of(d) {
+            KIND_BUILTIN if type_of(d) == T_DATATYPE => Ok(DtId((d & 0xFF) as u32)),
+            KIND_DIRECT if type_of(d) == T_DATATYPE => Ok(DtId(payload_of(d) as u32)),
+            _ => Err(err!(MPI_ERR_TYPE)),
+        }
+    }
+
+    #[inline]
+    fn dt_h(id: DtId) -> i32 {
+        if (id.0 as usize) < DT_HANDLES.len() {
+            DT_HANDLES[id.0 as usize]
+        } else {
+            KIND_DIRECT | T_DATATYPE | id.0 as i32
+        }
+    }
+
+    #[inline]
+    fn op_id(o: i32) -> RC<OpId> {
+        match kind_of(o) {
+            KIND_BUILTIN if type_of(o) == T_OP => Ok(OpId(payload_of(o) as u32)),
+            KIND_DIRECT if type_of(o) == T_OP => Ok(OpId(payload_of(o) as u32)),
+            _ => Err(err!(MPI_ERR_OP)),
+        }
+    }
+
+    #[inline]
+    fn op_h(id: OpId) -> i32 {
+        if id.0 < crate::core::reserved::NUM_BUILTIN_OPS {
+            op_handle(id.0 as usize)
+        } else {
+            KIND_DIRECT | T_OP | id.0 as i32
+        }
+    }
+
+    #[inline]
+    fn req_id(r: i32) -> RC<ReqId> {
+        if kind_of(r) == KIND_DIRECT && type_of(r) == T_REQUEST {
+            Ok(ReqId(payload_of(r) as u32))
+        } else {
+            Err(err!(MPI_ERR_REQUEST))
+        }
+    }
+
+    #[inline]
+    fn req_h(id: ReqId) -> i32 {
+        KIND_DIRECT | T_REQUEST | id.0 as i32
+    }
+
+    #[inline]
+    fn group_id(g: i32) -> RC<GroupId> {
+        match kind_of(g) {
+            KIND_BUILTIN if type_of(g) == T_GROUP => Ok(GroupId(payload_of(g) as u32)),
+            KIND_DIRECT if type_of(g) == T_GROUP => Ok(GroupId(payload_of(g) as u32)),
+            _ => Err(err!(MPI_ERR_GROUP)),
+        }
+    }
+
+    #[inline]
+    fn group_h(id: GroupId) -> i32 {
+        if id.0 <= 2 {
+            KIND_BUILTIN | T_GROUP | id.0 as i32
+        } else {
+            KIND_DIRECT | T_GROUP | id.0 as i32
+        }
+    }
+
+    #[inline]
+    fn errh_id(e: i32) -> RC<ErrhId> {
+        match kind_of(e) {
+            KIND_BUILTIN if type_of(e) == T_ERRHANDLER => Ok(ErrhId(payload_of(e) as u32)),
+            KIND_DIRECT if type_of(e) == T_ERRHANDLER => Ok(ErrhId(payload_of(e) as u32)),
+            _ => Err(err!(MPI_ERR_ARG)),
+        }
+    }
+
+    #[inline]
+    fn errh_h(id: ErrhId) -> i32 {
+        if id.0 <= 2 {
+            KIND_BUILTIN | T_ERRHANDLER | id.0 as i32
+        } else {
+            KIND_DIRECT | T_ERRHANDLER | id.0 as i32
+        }
+    }
+
+    #[inline]
+    fn info_id(i: i32) -> RC<InfoId> {
+        match kind_of(i) {
+            KIND_BUILTIN if type_of(i) == T_INFO => Ok(InfoId(payload_of(i) as u32)),
+            KIND_DIRECT if type_of(i) == T_INFO => Ok(InfoId(payload_of(i) as u32)),
+            _ => Err(err!(MPI_ERR_INFO)),
+        }
+    }
+
+    #[inline]
+    fn info_h(id: InfoId) -> i32 {
+        if id.0 == 0 {
+            MPI_INFO_ENV
+        } else {
+            KIND_DIRECT | T_INFO | id.0 as i32
+        }
+    }
+
+    fn status_empty() -> MpichStatus {
+        MpichStatus {
+            count_lo: 0,
+            count_hi_and_cancelled: 0,
+            MPI_SOURCE: MPI_PROC_NULL,
+            MPI_TAG: MPI_ANY_TAG,
+            MPI_ERROR: 0,
+        }
+    }
+
+    fn status_from_core(s: &StatusCore) -> MpichStatus {
+        let hi = ((s.count_bytes >> 32) & 0x7FFF_FFFF) as u32
+            | if s.cancelled { 0x8000_0000 } else { 0 };
+        MpichStatus {
+            count_lo: (s.count_bytes & 0xFFFF_FFFF) as u32 as i32,
+            count_hi_and_cancelled: hi as i32,
+            MPI_SOURCE: s.source,
+            MPI_TAG: s.tag,
+            MPI_ERROR: s.error,
+        }
+    }
+
+    fn status_source(s: &MpichStatus) -> i32 {
+        s.MPI_SOURCE
+    }
+    fn status_tag(s: &MpichStatus) -> i32 {
+        s.MPI_TAG
+    }
+    fn status_error(s: &MpichStatus) -> i32 {
+        s.MPI_ERROR
+    }
+    fn status_cancelled(s: &MpichStatus) -> bool {
+        s.cancelled()
+    }
+    fn status_count_bytes(s: &MpichStatus) -> u64 {
+        s.count_bytes()
+    }
+
+    fn err_from_class(class: i32) -> i32 {
+        err_code(class)
+    }
+    fn class_of_err(code: i32) -> i32 {
+        err_class(code)
+    }
+
+    /// MPICH's mechanism: decode the size from the handle bits — no
+    /// memory access for builtins.
+    #[inline(always)]
+    fn type_size_fast(d: i32) -> Option<i32> {
+        if kind_of(d) == KIND_BUILTIN && type_of(d) == T_DATATYPE {
+            Some(datatype_get_basic_size(d))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_real_mpich_values() {
+        assert_eq!(MPI_COMM_WORLD, 0x44000000);
+        assert_eq!(MPI_COMM_SELF, 0x44000001);
+        assert_eq!(MPI_COMM_NULL, 0x04000000);
+        assert_eq!(MPI_REQUEST_NULL, 0x2c000000u32 as i32);
+        assert_eq!(MPI_ERRORS_ARE_FATAL, 0x54000000);
+        assert_eq!(op_handle(1), 0x58000001, "MPI_SUM");
+    }
+
+    #[test]
+    fn datatype_handles_encode_size() {
+        // Paper: MPI_CHAR = 0x4c000101-style (size byte = 1).
+        let c = mpi_char();
+        assert_eq!(kind_of(c), KIND_BUILTIN);
+        assert_eq!(type_of(c), T_DATATYPE);
+        assert_eq!(datatype_get_basic_size(c), 1);
+        assert_eq!(datatype_get_basic_size(mpi_int()), 4);
+        assert_eq!(datatype_get_basic_size(mpi_double()), 8);
+    }
+
+    #[test]
+    fn status_layout_is_the_abi_initiative_one() {
+        // count fields lead, then SOURCE/TAG/ERROR.
+        assert_eq!(core::mem::size_of::<MpichStatus>(), 20);
+        let s = MpichStatus {
+            count_lo: 1,
+            count_hi_and_cancelled: 2,
+            MPI_SOURCE: 3,
+            MPI_TAG: 4,
+            MPI_ERROR: 5,
+        };
+        let base = &s as *const _ as usize;
+        assert_eq!(&s.MPI_SOURCE as *const _ as usize - base, 8);
+    }
+
+    #[test]
+    fn error_codes_are_not_classes() {
+        let code = err_code(crate::abi::errors::MPI_ERR_TRUNCATE);
+        assert_ne!(code, crate::abi::errors::MPI_ERR_TRUNCATE);
+        assert_eq!(err_class(code), crate::abi::errors::MPI_ERR_TRUNCATE);
+        assert_eq!(err_code(0), 0, "success stays 0 in every ABI");
+    }
+
+    #[test]
+    fn wildcards_differ_from_standard_abi() {
+        assert_ne!(MPI_ANY_SOURCE, crate::abi::constants::MPI_ANY_SOURCE);
+        assert_ne!(MPI_ANY_TAG, crate::abi::constants::MPI_ANY_TAG);
+        // MPICH's PROC_NULL == ANY_TAG == -1: the aliasing the standard
+        // ABI's unique negatives were designed to eliminate (§5.4).
+        assert_eq!(MPI_PROC_NULL, MPI_ANY_TAG);
+    }
+}

@@ -1,0 +1,503 @@
+//! The Open-MPI-like implementation ABI.
+//!
+//! Handles are **pointers to incomplete structs** (§3.3): the compiler
+//! type-checks them, but their values are link-time addresses of global
+//! descriptor objects — *not* compile-time constants. Datatype size
+//! queries dereference the descriptor (the `opal_datatype_type_size`
+//! path quoted in §3.3), and the descriptor is deliberately sized like
+//! Open MPI's (352 bytes) so the cache behaviour is comparable.
+//!
+//! The status layout is Open MPI's (`_cancelled` + `size_t _ucount`
+//! after the three public fields), and the wildcard integers use Open
+//! MPI's values (`MPI_ANY_SOURCE = -1`, `MPI_PROC_NULL = -2`).
+
+use once_cell::sync::Lazy;
+
+use super::repr::{Backed, Repr};
+use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
+use crate::core::request::StatusCore;
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+
+/// The public ABI type.
+pub type OmpiAbi = Backed<OmpiRepr>;
+
+/// Descriptor object kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum DescKind {
+    Comm = 1,
+    Group,
+    Datatype,
+    Op,
+    Request,
+    Errhandler,
+    Info,
+}
+
+pub const DESC_MAGIC: u32 = 0x4F4D_5049; // "OMPI"
+const NULL_ID: u32 = u32::MAX;
+
+/// The descriptor every handle points to. Padded to 352 bytes — the
+/// paper's "352-byte struct" for Open MPI datatypes — so size lookups
+/// touch realistic cache footprints.
+#[repr(C)]
+pub struct Desc {
+    pub magic: u32,
+    pub kind: DescKind,
+    pub predefined: bool,
+    pub engine_id: u32,
+    /// Datatype size cache (what `opal_datatype_type_size` loads).
+    pub size: i32,
+    pub name: [u8; 64],
+    _pad: [u8; 352 - 4 - 1 - 1 - 4 - 4 - 64 - 2],
+}
+
+const _: () = assert!(core::mem::size_of::<Desc>() == 352);
+
+impl Desc {
+    fn new(kind: DescKind, engine_id: u32, size: i32, predefined: bool) -> Desc {
+        Desc {
+            magic: DESC_MAGIC,
+            kind,
+            predefined,
+            engine_id,
+            size,
+            name: [0; 64],
+            _pad: [0; 352 - 4 - 1 - 1 - 4 - 4 - 64 - 2],
+        }
+    }
+
+    fn leak(kind: DescKind, engine_id: u32, size: i32) -> &'static Desc {
+        Box::leak(Box::new(Desc::new(kind, engine_id, size, true)))
+    }
+}
+
+// Descriptors are immutable after creation; sharing across rank threads
+// is sound.
+unsafe impl Sync for Desc {}
+unsafe impl Send for Desc {}
+
+macro_rules! ompi_handle {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq)]
+        pub struct $name(pub *const Desc);
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}({:p})", stringify!($name), self.0)
+            }
+        }
+    };
+}
+
+ompi_handle!(
+    /// `MPI_Comm` = `struct ompi_communicator_t *`.
+    OmpiComm
+);
+ompi_handle!(OmpiDatatype);
+ompi_handle!(OmpiOp);
+ompi_handle!(OmpiRequest);
+ompi_handle!(OmpiGroup);
+ompi_handle!(OmpiErrhandler);
+ompi_handle!(OmpiInfo);
+
+// --- Predefined descriptor globals (the "link-time constants") ---------------
+
+static COMM_WORLD_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Comm, 0, 0));
+static COMM_SELF_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Comm, 1, 0));
+static COMM_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Comm, NULL_ID, 0));
+static REQUEST_NULL_DESC: Lazy<&'static Desc> =
+    Lazy::new(|| Desc::leak(DescKind::Request, NULL_ID, 0));
+#[allow(dead_code)] // part of the ABI surface even if unreferenced internally
+static GROUP_NULL_DESC: Lazy<&'static Desc> =
+    Lazy::new(|| Desc::leak(DescKind::Group, NULL_ID, 0));
+static GROUP_EMPTY_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Group, 0, 0));
+static ERRH_FATAL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Errhandler, 0, 0));
+static ERRH_RETURN_DESC: Lazy<&'static Desc> =
+    Lazy::new(|| Desc::leak(DescKind::Errhandler, 1, 0));
+static ERRH_ABORT_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Errhandler, 2, 0));
+static INFO_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Info, NULL_ID, 0));
+static INFO_ENV_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Info, 0, 0));
+#[allow(dead_code)] // part of the ABI surface even if unreferenced internally
+static OP_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Op, NULL_ID, 0));
+
+/// Builtin datatype descriptors, indexed by engine dt id.
+static DT_DESCS: Lazy<Vec<&'static Desc>> = Lazy::new(|| {
+    crate::abi::datatypes::PREDEFINED_DATATYPES
+        .iter()
+        .enumerate()
+        .map(|(i, &(name, abi))| {
+            let size = crate::abi::datatypes::platform_size_of(abi).unwrap_or(0) as i32;
+            let d = Box::leak(Box::new(Desc::new(DescKind::Datatype, i as u32, size, true)));
+            let n = name.as_bytes();
+            let len = n.len().min(63);
+            d.name[..len].copy_from_slice(&n[..len]);
+            &*d
+        })
+        .collect()
+});
+
+/// Builtin op descriptors, indexed by engine op id.
+static OP_DESCS: Lazy<Vec<&'static Desc>> = Lazy::new(|| {
+    (0..crate::core::reserved::NUM_BUILTIN_OPS)
+        .map(|i| Desc::leak(DescKind::Op, i, 0))
+        .collect()
+});
+
+// --- Special integers: Open MPI's values --------------------------------------
+
+pub const MPI_ANY_SOURCE: i32 = -1;
+pub const MPI_ANY_TAG: i32 = -1;
+pub const MPI_PROC_NULL: i32 = -2;
+pub const MPI_ROOT: i32 = -4;
+pub const MPI_UNDEFINED: i32 = -32766;
+
+/// Open MPI's `MPI_IN_PLACE` is `(void *) 1`.
+pub const fn in_place_ptr() -> *const u8 {
+    1 as *const u8
+}
+
+// --- Status: Open MPI's layout (§3.2.3) ----------------------------------------
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(non_snake_case)]
+pub struct OmpiStatus {
+    pub MPI_SOURCE: i32,
+    pub MPI_TAG: i32,
+    pub MPI_ERROR: i32,
+    pub _cancelled: i32,
+    pub _ucount: usize,
+}
+
+// --- Conversion helpers ---------------------------------------------------------
+
+#[inline]
+fn deref(p: *const Desc, kind: DescKind) -> Option<&'static Desc> {
+    if p.is_null() {
+        return None;
+    }
+    let d = unsafe { &*p };
+    if d.magic == DESC_MAGIC && d.kind == kind && d.engine_id != NULL_ID {
+        Some(unsafe { std::mem::transmute::<&Desc, &'static Desc>(d) })
+    } else {
+        None
+    }
+}
+
+thread_local! {
+    /// Handle identity: in Open MPI the handle *is* the object pointer,
+    /// so wrapping the same engine object twice must yield the same
+    /// address (e.g. `MPI_Comm_get_errhandler` returns what was set).
+    static USER_DESCS: std::cell::RefCell<std::collections::HashMap<(u8, u32), *const Desc>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+fn alloc(kind: DescKind, engine_id: u32, size: i32) -> *const Desc {
+    USER_DESCS.with(|m| {
+        *m.borrow_mut().entry((kind as u8, engine_id)).or_insert_with(|| {
+            Box::into_raw(Box::new(Desc::new(kind, engine_id, size, false)))
+        })
+    })
+}
+
+fn release(p: *const Desc) {
+    if p.is_null() {
+        return;
+    }
+    let d = unsafe { &*p };
+    if d.magic == DESC_MAGIC && !d.predefined {
+        USER_DESCS.with(|m| m.borrow_mut().remove(&(d.kind as u8, d.engine_id)));
+        drop(unsafe { Box::from_raw(p as *mut Desc) });
+    }
+}
+
+pub struct OmpiRepr;
+
+impl Repr for OmpiRepr {
+    const NAME: &'static str = "ompi";
+
+    type Comm = OmpiComm;
+    type Datatype = OmpiDatatype;
+    type Op = OmpiOp;
+    type Request = OmpiRequest;
+    type Group = OmpiGroup;
+    type Errhandler = OmpiErrhandler;
+    type Info = OmpiInfo;
+    type Status = OmpiStatus;
+
+    fn c_comm_world() -> OmpiComm {
+        OmpiComm(*COMM_WORLD_DESC)
+    }
+    fn c_comm_self() -> OmpiComm {
+        OmpiComm(*COMM_SELF_DESC)
+    }
+    fn c_comm_null() -> OmpiComm {
+        OmpiComm(*COMM_NULL_DESC)
+    }
+    fn c_request_null() -> OmpiRequest {
+        OmpiRequest(*REQUEST_NULL_DESC)
+    }
+    fn c_errh_return() -> OmpiErrhandler {
+        OmpiErrhandler(*ERRH_RETURN_DESC)
+    }
+    fn c_errh_fatal() -> OmpiErrhandler {
+        OmpiErrhandler(*ERRH_FATAL_DESC)
+    }
+    fn c_info_null() -> OmpiInfo {
+        OmpiInfo(*INFO_NULL_DESC)
+    }
+
+    fn c_datatype(d: Dt) -> OmpiDatatype {
+        let id = crate::core::datatype::builtin_id_of_abi(dt_to_abi_const(d)).unwrap();
+        OmpiDatatype(DT_DESCS[id.0 as usize])
+    }
+
+    fn c_op(o: OpName) -> OmpiOp {
+        let id = crate::core::op::builtin_id_of_abi(op_to_abi_const(o)).unwrap();
+        OmpiOp(OP_DESCS[id.0 as usize])
+    }
+
+    fn c_any_source() -> i32 {
+        MPI_ANY_SOURCE
+    }
+    fn c_any_tag() -> i32 {
+        MPI_ANY_TAG
+    }
+    fn c_proc_null() -> i32 {
+        MPI_PROC_NULL
+    }
+    fn c_undefined() -> i32 {
+        MPI_UNDEFINED
+    }
+    fn c_in_place() -> *const u8 {
+        in_place_ptr()
+    }
+
+    #[inline]
+    fn comm_id(c: OmpiComm) -> RC<CommId> {
+        deref(c.0, DescKind::Comm).map(|d| CommId(d.engine_id)).ok_or(err!(MPI_ERR_COMM))
+    }
+
+    fn comm_h(id: CommId) -> OmpiComm {
+        match id.0 {
+            0 => OmpiComm(*COMM_WORLD_DESC),
+            1 => OmpiComm(*COMM_SELF_DESC),
+            n => OmpiComm(alloc(DescKind::Comm, n, 0)),
+        }
+    }
+
+    #[inline]
+    fn dt_id(d: OmpiDatatype) -> RC<DtId> {
+        deref(d.0, DescKind::Datatype).map(|d| DtId(d.engine_id)).ok_or(err!(MPI_ERR_TYPE))
+    }
+
+    fn dt_h(id: DtId) -> OmpiDatatype {
+        if (id.0 as usize) < DT_DESCS.len() {
+            OmpiDatatype(DT_DESCS[id.0 as usize])
+        } else {
+            // Derived type: cache the engine size in the descriptor, as
+            // Open MPI materializes it at type-creation time.
+            let size = crate::core::datatype::type_size(id).unwrap_or(0) as i32;
+            OmpiDatatype(alloc(DescKind::Datatype, id.0, size))
+        }
+    }
+
+    #[inline]
+    fn op_id(o: OmpiOp) -> RC<OpId> {
+        deref(o.0, DescKind::Op).map(|d| OpId(d.engine_id)).ok_or(err!(MPI_ERR_OP))
+    }
+
+    fn op_h(id: OpId) -> OmpiOp {
+        if id.0 < crate::core::reserved::NUM_BUILTIN_OPS {
+            OmpiOp(OP_DESCS[id.0 as usize])
+        } else {
+            OmpiOp(alloc(DescKind::Op, id.0, 0))
+        }
+    }
+
+    #[inline]
+    fn req_id(r: OmpiRequest) -> RC<ReqId> {
+        deref(r.0, DescKind::Request).map(|d| ReqId(d.engine_id)).ok_or(err!(MPI_ERR_REQUEST))
+    }
+
+    fn req_h(id: ReqId) -> OmpiRequest {
+        OmpiRequest(alloc(DescKind::Request, id.0, 0))
+    }
+
+    #[inline]
+    fn group_id(g: OmpiGroup) -> RC<GroupId> {
+        deref(g.0, DescKind::Group).map(|d| GroupId(d.engine_id)).ok_or(err!(MPI_ERR_GROUP))
+    }
+
+    fn group_h(id: GroupId) -> OmpiGroup {
+        match id.0 {
+            0 => OmpiGroup(*GROUP_EMPTY_DESC),
+            n => OmpiGroup(alloc(DescKind::Group, n, 0)),
+        }
+    }
+
+    #[inline]
+    fn errh_id(e: OmpiErrhandler) -> RC<ErrhId> {
+        deref(e.0, DescKind::Errhandler).map(|d| ErrhId(d.engine_id)).ok_or(err!(MPI_ERR_ARG))
+    }
+
+    fn errh_h(id: ErrhId) -> OmpiErrhandler {
+        match id.0 {
+            0 => OmpiErrhandler(*ERRH_FATAL_DESC),
+            1 => OmpiErrhandler(*ERRH_RETURN_DESC),
+            2 => OmpiErrhandler(*ERRH_ABORT_DESC),
+            n => OmpiErrhandler(alloc(DescKind::Errhandler, n, 0)),
+        }
+    }
+
+    #[inline]
+    fn info_id(i: OmpiInfo) -> RC<InfoId> {
+        deref(i.0, DescKind::Info).map(|d| InfoId(d.engine_id)).ok_or(err!(MPI_ERR_INFO))
+    }
+
+    fn info_h(id: InfoId) -> OmpiInfo {
+        match id.0 {
+            0 => OmpiInfo(*INFO_ENV_DESC),
+            n => OmpiInfo(alloc(DescKind::Info, n, 0)),
+        }
+    }
+
+    fn req_release(r: OmpiRequest) {
+        release(r.0);
+    }
+    fn dt_release(d: OmpiDatatype) {
+        release(d.0);
+    }
+    fn comm_release(c: OmpiComm) {
+        release(c.0);
+    }
+    fn op_release(o: OmpiOp) {
+        release(o.0);
+    }
+    fn group_release(g: OmpiGroup) {
+        release(g.0);
+    }
+    fn errh_release(e: OmpiErrhandler) {
+        release(e.0);
+    }
+    fn info_release(i: OmpiInfo) {
+        release(i.0);
+    }
+
+    fn status_empty() -> OmpiStatus {
+        OmpiStatus {
+            MPI_SOURCE: MPI_PROC_NULL,
+            MPI_TAG: MPI_ANY_TAG,
+            MPI_ERROR: 0,
+            _cancelled: 0,
+            _ucount: 0,
+        }
+    }
+
+    fn status_from_core(s: &StatusCore) -> OmpiStatus {
+        OmpiStatus {
+            MPI_SOURCE: s.source,
+            MPI_TAG: s.tag,
+            MPI_ERROR: s.error,
+            _cancelled: s.cancelled as i32,
+            _ucount: s.count_bytes as usize,
+        }
+    }
+
+    fn status_source(s: &OmpiStatus) -> i32 {
+        s.MPI_SOURCE
+    }
+    fn status_tag(s: &OmpiStatus) -> i32 {
+        s.MPI_TAG
+    }
+    fn status_error(s: &OmpiStatus) -> i32 {
+        s.MPI_ERROR
+    }
+    fn status_cancelled(s: &OmpiStatus) -> bool {
+        s._cancelled != 0
+    }
+    fn status_count_bytes(s: &OmpiStatus) -> u64 {
+        s._ucount as u64
+    }
+
+    /// Open MPI returns canonical classes directly as codes.
+    fn err_from_class(class: i32) -> i32 {
+        class
+    }
+    fn class_of_err(code: i32) -> i32 {
+        code
+    }
+
+    /// Open MPI's mechanism: dereference the (352-byte) descriptor.
+    #[inline(always)]
+    fn type_size_fast(d: OmpiDatatype) -> Option<i32> {
+        deref(d.0, DescKind::Datatype).map(|desc| desc.size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_is_352_bytes() {
+        assert_eq!(core::mem::size_of::<Desc>(), 352);
+    }
+
+    #[test]
+    fn constants_are_addresses_not_literals() {
+        // Two reads of the "constant" give the same address (link-time
+        // semantics), and it's a real dereferenceable descriptor.
+        let a = OmpiRepr::c_comm_world();
+        let b = OmpiRepr::c_comm_world();
+        assert_eq!(a, b);
+        assert_eq!(OmpiRepr::comm_id(a).unwrap(), crate::core::reserved::COMM_WORLD);
+    }
+
+    #[test]
+    fn null_handles_fail_conversion() {
+        let n = OmpiRepr::c_comm_null();
+        assert!(OmpiRepr::comm_id(n).is_err());
+        let rn = OmpiRepr::c_request_null();
+        assert!(OmpiRepr::req_id(rn).is_err());
+    }
+
+    #[test]
+    fn wrong_kind_pointer_rejected() {
+        // A datatype descriptor passed as a comm must be rejected (this is
+        // what incomplete-struct-pointer typing prevents in C at compile
+        // time; at runtime the magic/kind check catches casts).
+        let dt = OmpiRepr::c_datatype(crate::api::Dt::Int);
+        let fake = OmpiComm(dt.0);
+        assert!(OmpiRepr::comm_id(fake).is_err());
+    }
+
+    #[test]
+    fn dtype_size_via_descriptor() {
+        assert_eq!(OmpiRepr::type_size_fast(OmpiRepr::c_datatype(crate::api::Dt::Int)), Some(4));
+        assert_eq!(
+            OmpiRepr::type_size_fast(OmpiRepr::c_datatype(crate::api::Dt::Double)),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn status_layout_matches_ompi() {
+        let s = OmpiStatus { MPI_SOURCE: 1, MPI_TAG: 2, MPI_ERROR: 3, _cancelled: 0, _ucount: 9 };
+        let base = &s as *const _ as usize;
+        assert_eq!(&s.MPI_SOURCE as *const _ as usize - base, 0);
+        assert_eq!(&s._ucount as *const _ as usize - base, 16);
+        assert_eq!(core::mem::size_of::<OmpiStatus>(), 24);
+    }
+
+    #[test]
+    fn proc_null_and_any_source_use_ompi_numbering() {
+        assert_eq!(MPI_ANY_SOURCE, -1);
+        assert_eq!(MPI_PROC_NULL, -2);
+        // Different from both MPICH and the standard ABI:
+        assert_ne!(MPI_ANY_SOURCE, crate::impls::mpich::MPI_ANY_SOURCE);
+        assert_ne!(MPI_ANY_SOURCE, crate::abi::constants::MPI_ANY_SOURCE);
+    }
+}

@@ -1,0 +1,1317 @@
+//! Representation backends and the generic ABI plumbing.
+//!
+//! A [`Repr`] captures exactly what differs between MPI ABIs:
+//! handle representation (+ conversions to engine ids), status layout,
+//! constant values (including wildcard integers), error-code encoding,
+//! and the fast datatype-size mechanism (§6.1). [`Backed<R>`] then
+//! implements the full [`MpiAbi`] API generically — the shared semantics
+//! every implementation has, monomorphized per representation.
+
+use std::marker::PhantomData;
+
+use crate::api::{AttrCopyFn, AttrDeleteFn, Dt, ErrhFn, MpiAbi, OpName, UserOpFn};
+use crate::core::request::StatusCore;
+use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op};
+use crate::core::{CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+
+/// What one MPI ABI fixes. See module docs.
+pub trait Repr: 'static {
+    const NAME: &'static str;
+
+    type Comm: Copy + PartialEq + std::fmt::Debug;
+    type Datatype: Copy + PartialEq + std::fmt::Debug;
+    type Op: Copy + PartialEq;
+    type Request: Copy + PartialEq + std::fmt::Debug;
+    type Group: Copy + PartialEq;
+    type Errhandler: Copy + PartialEq;
+    type Info: Copy + PartialEq;
+    type Status: Copy;
+
+    // Predefined handle constants.
+    fn c_comm_world() -> Self::Comm;
+    fn c_comm_self() -> Self::Comm;
+    fn c_comm_null() -> Self::Comm;
+    fn c_request_null() -> Self::Request;
+    fn c_errh_return() -> Self::Errhandler;
+    fn c_errh_fatal() -> Self::Errhandler;
+    fn c_info_null() -> Self::Info;
+    fn c_datatype(d: Dt) -> Self::Datatype;
+    fn c_op(o: OpName) -> Self::Op;
+
+    // Special integer constants (ABIs number these differently!).
+    fn c_any_source() -> i32;
+    fn c_any_tag() -> i32;
+    fn c_proc_null() -> i32;
+    fn c_undefined() -> i32;
+    fn c_in_place() -> *const u8;
+
+    // Handle ↔ engine-id conversion (the cost Mukautuva pays per call).
+    fn comm_id(c: Self::Comm) -> RC<CommId>;
+    fn comm_h(id: CommId) -> Self::Comm;
+    fn dt_id(d: Self::Datatype) -> RC<DtId>;
+    fn dt_h(id: DtId) -> Self::Datatype;
+    fn op_id(o: Self::Op) -> RC<OpId>;
+    fn op_h(id: OpId) -> Self::Op;
+    fn req_id(r: Self::Request) -> RC<ReqId>;
+    fn req_h(id: ReqId) -> Self::Request;
+    fn group_id(g: Self::Group) -> RC<GroupId>;
+    fn group_h(id: GroupId) -> Self::Group;
+    fn errh_id(e: Self::Errhandler) -> RC<ErrhId>;
+    fn errh_h(id: ErrhId) -> Self::Errhandler;
+    fn info_id(i: Self::Info) -> RC<InfoId>;
+    fn info_h(id: InfoId) -> Self::Info;
+
+    /// Drop any per-handle allocation when a request handle is consumed
+    /// (pointer-handle ABIs heap-allocate request descriptors).
+    fn req_release(r: Self::Request) {
+        let _ = r;
+    }
+    /// Likewise for freed objects of other kinds.
+    fn dt_release(d: Self::Datatype) {
+        let _ = d;
+    }
+    fn comm_release(c: Self::Comm) {
+        let _ = c;
+    }
+    fn op_release(o: Self::Op) {
+        let _ = o;
+    }
+    fn group_release(g: Self::Group) {
+        let _ = g;
+    }
+    fn errh_release(e: Self::Errhandler) {
+        let _ = e;
+    }
+    fn info_release(i: Self::Info) {
+        let _ = i;
+    }
+
+    // Status layout.
+    fn status_empty() -> Self::Status;
+    fn status_from_core(s: &StatusCore) -> Self::Status;
+    fn status_source(s: &Self::Status) -> i32;
+    fn status_tag(s: &Self::Status) -> i32;
+    fn status_error(s: &Self::Status) -> i32;
+    fn status_cancelled(s: &Self::Status) -> bool;
+    fn status_count_bytes(s: &Self::Status) -> u64;
+
+    // Error-code encoding.
+    fn err_from_class(class: i32) -> i32;
+    fn class_of_err(code: i32) -> i32;
+
+    /// The ABI's fast `MPI_Type_size` mechanism (bit decode for MPICH,
+    /// descriptor load for OMPI, Huffman decode + table for the standard
+    /// ABI). `None` = take the slow engine path (derived datatypes).
+    fn type_size_fast(d: Self::Datatype) -> Option<i32>;
+}
+
+/// Generic MPI implementation over a representation backend.
+pub struct Backed<R: Repr>(PhantomData<R>);
+
+// --- Shared glue -----------------------------------------------------------
+
+/// Convert an engine error into this ABI's error code, running the comm's
+/// error handler (fatal by default, per MPI).
+fn fail<R: Repr>(comm: Option<CommId>, e: crate::core::MpiError) -> i32 {
+    let class = match comm {
+        Some(c) => {
+            let h = comm::comm_get_errhandler(c).unwrap_or(crate::core::reserved::ERRH_ARE_FATAL);
+            errh::invoke(c, h, e.class)
+        }
+        None => e.class,
+    };
+    R::err_from_class(class)
+}
+
+fn ret<R: Repr>(comm: Option<CommId>, r: RC<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => fail::<R>(comm, e),
+    }
+}
+
+/// Canonicalize wildcard/special rank+tag inputs from ABI values to the
+/// engine's (standard-ABI) values.
+fn src_in<R: Repr>(src: i32) -> i32 {
+    use crate::abi::constants as k;
+    if src == R::c_any_source() {
+        k::MPI_ANY_SOURCE
+    } else if src == R::c_proc_null() {
+        k::MPI_PROC_NULL
+    } else {
+        src
+    }
+}
+
+fn dest_in<R: Repr>(dest: i32) -> i32 {
+    use crate::abi::constants as k;
+    if dest == R::c_proc_null() {
+        k::MPI_PROC_NULL
+    } else {
+        dest
+    }
+}
+
+fn tag_in<R: Repr>(tag: i32) -> i32 {
+    use crate::abi::constants as k;
+    if tag == R::c_any_tag() {
+        k::MPI_ANY_TAG
+    } else {
+        tag
+    }
+}
+
+/// De-canonicalize a status's source/error for this ABI.
+fn status_out<R: Repr>(mut s: StatusCore) -> R::Status {
+    use crate::abi::constants as k;
+    if s.source == k::MPI_PROC_NULL {
+        s.source = R::c_proc_null();
+    } else if s.source == k::MPI_ANY_TAG {
+        // never a source; keep
+    }
+    if s.tag == k::MPI_ANY_TAG {
+        s.tag = R::c_any_tag();
+    }
+    if s.error != 0 {
+        s.error = R::err_from_class(s.error);
+    }
+    R::status_from_core(&s)
+}
+
+fn buf_in<R: Repr>(b: *const u8) -> *const u8 {
+    if b == R::c_in_place() {
+        crate::abi::constants::MPI_IN_PLACE as *const u8
+    } else {
+        b
+    }
+}
+
+macro_rules! conv {
+    ($r:ident, $comm:expr, $e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(err) => return fail::<$r>($comm, err),
+        }
+    };
+}
+
+impl<R: Repr> MpiAbi for Backed<R> {
+    const NAME: &'static str = R::NAME;
+
+    type Comm = R::Comm;
+    type Datatype = R::Datatype;
+    type Op = R::Op;
+    type Request = R::Request;
+    type Group = R::Group;
+    type Errhandler = R::Errhandler;
+    type Info = R::Info;
+    type Status = R::Status;
+
+    fn comm_world() -> R::Comm {
+        R::c_comm_world()
+    }
+    fn comm_self() -> R::Comm {
+        R::c_comm_self()
+    }
+    fn comm_null() -> R::Comm {
+        R::c_comm_null()
+    }
+    fn request_null() -> R::Request {
+        R::c_request_null()
+    }
+    fn datatype(d: Dt) -> R::Datatype {
+        R::c_datatype(d)
+    }
+    fn op(o: OpName) -> R::Op {
+        R::c_op(o)
+    }
+    fn errhandler_return() -> R::Errhandler {
+        R::c_errh_return()
+    }
+    fn errhandler_fatal() -> R::Errhandler {
+        R::c_errh_fatal()
+    }
+    fn info_null() -> R::Info {
+        R::c_info_null()
+    }
+    fn any_source() -> i32 {
+        R::c_any_source()
+    }
+    fn any_tag() -> i32 {
+        R::c_any_tag()
+    }
+    fn proc_null() -> i32 {
+        R::c_proc_null()
+    }
+    fn undefined() -> i32 {
+        R::c_undefined()
+    }
+    fn in_place() -> *const u8 {
+        R::c_in_place()
+    }
+
+    fn err_class_of(code: i32) -> i32 {
+        R::class_of_err(code)
+    }
+    fn error_string(code: i32) -> String {
+        crate::abi::errors::error_string(R::class_of_err(code)).to_string()
+    }
+    fn err_from_canonical(class: i32) -> i32 {
+        R::err_from_class(class)
+    }
+
+    fn init() -> i32 {
+        ret::<R>(None, engine::init())
+    }
+    fn finalize() -> i32 {
+        ret::<R>(None, engine::finalize())
+    }
+    fn initialized() -> bool {
+        engine::initialized()
+    }
+    fn finalized() -> bool {
+        engine::finalized()
+    }
+    fn abort(_comm: R::Comm, code: i32) -> i32 {
+        ret::<R>(None, engine::abort(code))
+    }
+    fn wtime() -> f64 {
+        engine::wtime()
+    }
+    fn get_library_version() -> String {
+        format!("{} [{} ABI]", engine::get_library_version(), R::NAME)
+    }
+    fn get_version() -> (i32, i32) {
+        engine::get_version()
+    }
+    fn get_processor_name() -> String {
+        engine::get_processor_name()
+    }
+
+    fn status_empty() -> R::Status {
+        R::status_empty()
+    }
+    fn status_source(s: &R::Status) -> i32 {
+        R::status_source(s)
+    }
+    fn status_tag(s: &R::Status) -> i32 {
+        R::status_tag(s)
+    }
+    fn status_error(s: &R::Status) -> i32 {
+        R::status_error(s)
+    }
+    fn status_cancelled(s: &R::Status) -> bool {
+        R::status_cancelled(s)
+    }
+    fn get_count(s: &R::Status, dt: R::Datatype) -> i32 {
+        let Ok(id) = R::dt_id(dt) else { return R::c_undefined() };
+        let Ok(size) = datatype::type_size(id) else { return R::c_undefined() };
+        if size == 0 {
+            return 0;
+        }
+        let bytes = R::status_count_bytes(s);
+        if bytes % size as u64 != 0 {
+            R::c_undefined()
+        } else {
+            (bytes / size as u64) as i32
+        }
+    }
+
+    fn comm_size(c: R::Comm, out: &mut i32) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match comm::comm_size(id) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_rank(c: R::Comm, out: &mut i32) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match comm::comm_rank(id) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_dup(c: R::Comm, out: &mut R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::comm_dup(id) {
+            Ok(new) => {
+                *out = R::comm_h(new);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_split(c: R::Comm, color: i32, key: i32, out: &mut R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let color = if color == R::c_undefined() {
+            crate::abi::constants::MPI_UNDEFINED
+        } else {
+            color
+        };
+        match engine::comm_split(id, color, key) {
+            Ok(Some(new)) => {
+                *out = R::comm_h(new);
+                0
+            }
+            Ok(None) => {
+                *out = R::c_comm_null();
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_free(c: &mut R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(*c));
+        let r = ret::<R>(Some(id), comm::comm_free(id));
+        if r == 0 {
+            R::comm_release(*c);
+            *c = R::c_comm_null();
+        }
+        r
+    }
+
+    fn comm_compare(a: R::Comm, b: R::Comm, out: &mut i32) -> i32 {
+        let ia = conv!(R, None, R::comm_id(a));
+        let ib = conv!(R, None, R::comm_id(b));
+        match comm::comm_compare(ia, ib) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(Some(ia), e),
+        }
+    }
+
+    fn comm_set_name(c: R::Comm, name: &str) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        ret::<R>(Some(id), comm::comm_set_name(id, name))
+    }
+
+    fn comm_get_name(c: R::Comm, out: &mut String) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match comm::comm_get_name(id) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_group(c: R::Comm, out: &mut R::Group) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match comm::comm_group(id) {
+            Ok(g) => {
+                *out = R::group_h(g);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn group_size(g: R::Group, out: &mut i32) -> i32 {
+        let id = conv!(R, None, R::group_id(g));
+        match group::group_size(id) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn group_rank(g: R::Group, out: &mut i32) -> i32 {
+        let id = conv!(R, None, R::group_id(g));
+        match group::group_rank(id) {
+            Ok(v) => {
+                *out = if v == crate::abi::constants::MPI_UNDEFINED { R::c_undefined() } else { v };
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn group_incl(g: R::Group, ranks: &[i32], out: &mut R::Group) -> i32 {
+        let id = conv!(R, None, R::group_id(g));
+        match group::group_incl(id, ranks) {
+            Ok(n) => {
+                *out = R::group_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn group_translate_ranks(a: R::Group, ranks: &[i32], b: R::Group, out: &mut [i32]) -> i32 {
+        let ia = conv!(R, None, R::group_id(a));
+        let ib = conv!(R, None, R::group_id(b));
+        let canon: Vec<i32> = ranks.iter().map(|&r| src_in::<R>(r)).collect();
+        match group::group_translate_ranks(ia, &canon, ib) {
+            Ok(v) => {
+                for (o, x) in out.iter_mut().zip(v) {
+                    *o = if x == crate::abi::constants::MPI_UNDEFINED {
+                        R::c_undefined()
+                    } else if x == crate::abi::constants::MPI_PROC_NULL {
+                        R::c_proc_null()
+                    } else {
+                        x
+                    };
+                }
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn group_free(g: &mut R::Group) -> i32 {
+        let id = conv!(R, None, R::group_id(*g));
+        let r = ret::<R>(None, group::group_free(id));
+        if r == 0 {
+            R::group_release(*g);
+        }
+        r
+    }
+
+    fn comm_set_errhandler(c: R::Comm, e: R::Errhandler) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let eid = conv!(R, Some(id), R::errh_id(e));
+        ret::<R>(Some(id), comm::comm_set_errhandler(id, eid))
+    }
+
+    fn comm_get_errhandler(c: R::Comm, out: &mut R::Errhandler) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match comm::comm_get_errhandler(id) {
+            Ok(e) => {
+                *out = R::errh_h(e);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_create_errhandler(f: ErrhFn<Self>, out: &mut R::Errhandler) -> i32 {
+        // The closure converts the engine comm id + canonical class into
+        // *this ABI's* representation before invoking the user callback.
+        let g = Box::new(move |c: CommId, class: i32| {
+            f(R::comm_h(c), R::err_from_class(class));
+        });
+        match errh::errhandler_create(g) {
+            Ok(id) => {
+                *out = R::errh_h(id);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn errhandler_free(e: &mut R::Errhandler) -> i32 {
+        let id = conv!(R, None, R::errh_id(*e));
+        let r = ret::<R>(None, errh::errhandler_free(id));
+        if r == 0 {
+            R::errh_release(*e);
+        }
+        r
+    }
+
+    fn send(buf: *const u8, count: i32, dt: R::Datatype, dest: i32, tag: i32, c: R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        ret::<R>(
+            Some(id),
+            engine::send(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+                engine::SendMode::Standard),
+        )
+    }
+
+    fn ssend(buf: *const u8, count: i32, dt: R::Datatype, dest: i32, tag: i32, c: R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        ret::<R>(
+            Some(id),
+            engine::send(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+                engine::SendMode::Sync),
+        )
+    }
+
+    fn recv(
+        buf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        src: i32,
+        tag: i32,
+        c: R::Comm,
+        status: &mut R::Status,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::recv(buf, count as usize, d, src_in::<R>(src), tag_in::<R>(tag), id) {
+            Ok(s) => {
+                *status = status_out::<R>(s);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn isend(
+        buf: *const u8,
+        count: i32,
+        dt: R::Datatype,
+        dest: i32,
+        tag: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::isend(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+            engine::SendMode::Standard)
+        {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn issend(
+        buf: *const u8,
+        count: i32,
+        dt: R::Datatype,
+        dest: i32,
+        tag: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::isend(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+            engine::SendMode::Sync)
+        {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn irecv(
+        buf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        src: i32,
+        tag: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::irecv(buf, count as usize, d, src_in::<R>(src), tag_in::<R>(tag), id) {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn wait(req: &mut R::Request, status: &mut R::Status) -> i32 {
+        if *req == R::c_request_null() {
+            *status = R::status_empty();
+            return 0;
+        }
+        let id = conv!(R, None, R::req_id(*req));
+        match engine::wait(id) {
+            Ok(s) => {
+                R::req_release(*req);
+                *req = R::c_request_null();
+                *status = status_out::<R>(s);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn test(req: &mut R::Request, flag: &mut bool, status: &mut R::Status) -> i32 {
+        if *req == R::c_request_null() {
+            *flag = true;
+            *status = R::status_empty();
+            return 0;
+        }
+        let id = conv!(R, None, R::req_id(*req));
+        match engine::test(id) {
+            Ok(Some(s)) => {
+                R::req_release(*req);
+                *req = R::c_request_null();
+                *flag = true;
+                *status = status_out::<R>(s);
+                0
+            }
+            Ok(None) => {
+                *flag = false;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn waitall(reqs: &mut [R::Request], statuses: &mut [R::Status]) -> i32 {
+        let null = R::c_request_null();
+        let ids: Vec<Option<ReqId>> = reqs
+            .iter()
+            .map(|&r| if r == null { None } else { R::req_id(r).ok() })
+            .collect();
+        let live: Vec<ReqId> = ids.iter().flatten().copied().collect();
+        match engine::waitall(&live) {
+            Ok(ss) => {
+                let mut it = ss.into_iter();
+                for (i, id) in ids.iter().enumerate() {
+                    if id.is_some() {
+                        let s = it.next().unwrap();
+                        if i < statuses.len() {
+                            statuses[i] = status_out::<R>(s);
+                        }
+                        R::req_release(reqs[i]);
+                        reqs[i] = null;
+                    } else if i < statuses.len() {
+                        statuses[i] = R::status_empty();
+                    }
+                }
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn testall(reqs: &mut [R::Request], flag: &mut bool, statuses: &mut [R::Status]) -> i32 {
+        let null = R::c_request_null();
+        let ids: Vec<Option<ReqId>> = reqs
+            .iter()
+            .map(|&r| if r == null { None } else { R::req_id(r).ok() })
+            .collect();
+        let live: Vec<ReqId> = ids.iter().flatten().copied().collect();
+        match engine::testall(&live) {
+            Ok(Some(ss)) => {
+                *flag = true;
+                let mut it = ss.into_iter();
+                for (i, id) in ids.iter().enumerate() {
+                    if id.is_some() {
+                        let s = it.next().unwrap();
+                        if i < statuses.len() {
+                            statuses[i] = status_out::<R>(s);
+                        }
+                        R::req_release(reqs[i]);
+                        reqs[i] = null;
+                    } else if i < statuses.len() {
+                        statuses[i] = R::status_empty();
+                    }
+                }
+                0
+            }
+            Ok(None) => {
+                *flag = false;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn waitany(reqs: &mut [R::Request], index: &mut i32, status: &mut R::Status) -> i32 {
+        let null = R::c_request_null();
+        let mut live = Vec::new();
+        let mut map = Vec::new();
+        for (i, &r) in reqs.iter().enumerate() {
+            if r != null {
+                if let Ok(id) = R::req_id(r) {
+                    live.push(id);
+                    map.push(i);
+                }
+            }
+        }
+        if live.is_empty() {
+            *index = R::c_undefined();
+            *status = R::status_empty();
+            return 0;
+        }
+        match engine::waitany(&live) {
+            Ok((k, s)) => {
+                let i = map[k];
+                *index = i as i32;
+                *status = status_out::<R>(s);
+                R::req_release(reqs[i]);
+                reqs[i] = null;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn probe(src: i32, tag: i32, c: R::Comm, status: &mut R::Status) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::probe(src_in::<R>(src), tag_in::<R>(tag), id) {
+            Ok(s) => {
+                *status = status_out::<R>(s);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn iprobe(src: i32, tag: i32, c: R::Comm, flag: &mut bool, status: &mut R::Status) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::iprobe(src_in::<R>(src), tag_in::<R>(tag), id) {
+            Ok(Some(s)) => {
+                *flag = true;
+                *status = status_out::<R>(s);
+                0
+            }
+            Ok(None) => {
+                *flag = false;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn cancel(req: &mut R::Request) -> i32 {
+        let id = conv!(R, None, R::req_id(*req));
+        ret::<R>(None, crate::core::request::cancel(id))
+    }
+
+    fn request_free(req: &mut R::Request) -> i32 {
+        let id = conv!(R, None, R::req_id(*req));
+        let r = ret::<R>(None, crate::core::request::request_free(id));
+        if r == 0 {
+            R::req_release(*req);
+            *req = R::c_request_null();
+        }
+        r
+    }
+
+    fn sendrecv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        dest: i32,
+        sendtag: i32,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        src: i32,
+        recvtag: i32,
+        c: R::Comm,
+        status: &mut R::Status,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        match engine::sendrecv(
+            sendbuf,
+            sendcount as usize,
+            sd,
+            dest_in::<R>(dest),
+            sendtag,
+            recvbuf,
+            recvcount as usize,
+            rd,
+            src_in::<R>(src),
+            tag_in::<R>(recvtag),
+            id,
+        ) {
+            Ok(s) => {
+                *status = status_out::<R>(s);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn type_size(dt: R::Datatype, out: &mut i32) -> i32 {
+        // The §6.1 fast path: representation-specific size decode.
+        if let Some(s) = R::type_size_fast(dt) {
+            *out = s;
+            return 0;
+        }
+        let id = conv!(R, None, R::dt_id(dt));
+        match datatype::type_size(id) {
+            Ok(v) => {
+                *out = v as i32;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_get_extent(dt: R::Datatype, lb: &mut isize, extent: &mut isize) -> i32 {
+        let id = conv!(R, None, R::dt_id(dt));
+        match datatype::type_get_extent(id) {
+            Ok((l, e)) => {
+                *lb = l;
+                *extent = e;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_contiguous(count: i32, child: R::Datatype, out: &mut R::Datatype) -> i32 {
+        let id = conv!(R, None, R::dt_id(child));
+        match datatype::type_contiguous(count as usize, id) {
+            Ok(n) => {
+                *out = R::dt_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_vector(
+        count: i32,
+        blocklen: i32,
+        stride: i32,
+        child: R::Datatype,
+        out: &mut R::Datatype,
+    ) -> i32 {
+        let id = conv!(R, None, R::dt_id(child));
+        match datatype::type_vector(count as usize, blocklen as usize, stride as isize, id) {
+            Ok(n) => {
+                *out = R::dt_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_create_struct(blocks: &[(i32, isize, R::Datatype)], out: &mut R::Datatype) -> i32 {
+        let mut conv_blocks = Vec::with_capacity(blocks.len());
+        for &(len, disp, t) in blocks {
+            let id = conv!(R, None, R::dt_id(t));
+            conv_blocks.push((len as usize, disp, id));
+        }
+        match datatype::type_struct(&conv_blocks) {
+            Ok(n) => {
+                *out = R::dt_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_commit(dt: &mut R::Datatype) -> i32 {
+        let id = conv!(R, None, R::dt_id(*dt));
+        ret::<R>(None, datatype::type_commit(id))
+    }
+
+    fn type_free(dt: &mut R::Datatype) -> i32 {
+        let id = conv!(R, None, R::dt_id(*dt));
+        let r = ret::<R>(None, datatype::type_free(id));
+        if r == 0 {
+            R::dt_release(*dt);
+        }
+        r
+    }
+
+    fn type_dup(dt: R::Datatype, out: &mut R::Datatype) -> i32 {
+        let id = conv!(R, None, R::dt_id(dt));
+        match datatype::type_dup(id) {
+            Ok(n) => {
+                *out = R::dt_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn op_create(f: UserOpFn<Self>, commute: bool, out: &mut R::Op) -> i32 {
+        // Representation conversion for the callback's datatype argument
+        // happens inside the library (closures allowed here; only
+        // *external* layers like Mukautuva need static trampolines).
+        let g: crate::core::op::UserOpFn = Box::new(move |inv, inout, len, dtid| {
+            f(inv, inout, len, R::dt_h(dtid));
+        });
+        match op::op_create(g, commute) {
+            Ok(id) => {
+                *out = R::op_h(id);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn op_free(o: &mut R::Op) -> i32 {
+        let id = conv!(R, None, R::op_id(*o));
+        let r = ret::<R>(None, op::op_free(id));
+        if r == 0 {
+            R::op_release(*o);
+        }
+        r
+    }
+
+    fn barrier(c: R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        ret::<R>(Some(id), coll::barrier(id))
+    }
+
+    fn bcast(buf: *mut u8, count: i32, dt: R::Datatype, root: i32, c: R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        ret::<R>(Some(id), coll::bcast(buf, count as usize, d, root, id))
+    }
+
+    fn reduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        root: i32,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        ret::<R>(Some(id), coll::reduce(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid,
+            root, id))
+    }
+
+    fn allreduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        ret::<R>(Some(id), coll::allreduce(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid,
+            id))
+    }
+
+    fn gather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        ret::<R>(
+            Some(id),
+            coll::gather(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, root, id),
+        )
+    }
+
+    fn scatter(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let rb = if recvbuf as *const u8 == R::c_in_place() {
+            crate::abi::constants::MPI_IN_PLACE as *mut u8
+        } else {
+            recvbuf
+        };
+        ret::<R>(
+            Some(id),
+            coll::scatter(sendbuf, sendcount as usize, sd, rb, recvcount as usize, rd, root, id),
+        )
+    }
+
+    fn allgather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        ret::<R>(
+            Some(id),
+            coll::allgather(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, id),
+        )
+    }
+
+    fn alltoall(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        ret::<R>(
+            Some(id),
+            coll::alltoall(sendbuf, sendcount as usize, sd, recvbuf, recvcount as usize, rd, id),
+        )
+    }
+
+    fn alltoallw(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtypes: &[R::Datatype],
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtypes: &[R::Datatype],
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let args = conv!(
+            R,
+            Some(id),
+            build_w_args::<R>(
+                sendbuf, sendcounts, sdispls, sendtypes, recvbuf, recvcounts, rdispls, recvtypes
+            )
+        );
+        ret::<R>(Some(id), coll::alltoallw(&args, id))
+    }
+
+    fn ialltoallw(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtypes: &[R::Datatype],
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtypes: &[R::Datatype],
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let args = conv!(
+            R,
+            Some(id),
+            build_w_args::<R>(
+                sendbuf, sendcounts, sdispls, sendtypes, recvbuf, recvcounts, rdispls, recvtypes
+            )
+        );
+        match coll::ialltoallw(&args, id) {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn scan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        ret::<R>(Some(id), coll::scan(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, id))
+    }
+
+    fn exscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        ret::<R>(Some(id), coll::exscan(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, id))
+    }
+
+    fn reduce_scatter_block(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        ret::<R>(
+            Some(id),
+            coll::reduce_scatter_block(buf_in::<R>(sendbuf), recvbuf, recvcount as usize, d, oid,
+                id),
+        )
+    }
+
+    fn comm_create_keyval(
+        copy: Option<AttrCopyFn<Self>>,
+        delete: Option<AttrDeleteFn<Self>>,
+        extra_state: usize,
+        out: &mut i32,
+    ) -> i32 {
+        use crate::core::attr::{KeyvalCopy, KeyvalDelete};
+        let c = match copy {
+            Some(f) => KeyvalCopy::User(Box::new(move |comm, kv, extra, val| {
+                let (flag, newv) = f(R::comm_h(comm), kv, extra, val);
+                Ok(flag.then_some(newv))
+            })),
+            None => KeyvalCopy::NullCopy,
+        };
+        let d = match delete {
+            Some(f) => KeyvalDelete::User(Box::new(move |comm, kv, extra, val| {
+                f(R::comm_h(comm), kv, extra, val);
+                Ok(())
+            })),
+            None => KeyvalDelete::NullDelete,
+        };
+        match crate::core::attr::keyval_create(c, d, extra_state) {
+            Ok(k) => {
+                *out = k;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn comm_free_keyval(keyval: &mut i32) -> i32 {
+        let r = ret::<R>(None, crate::core::attr::keyval_free(*keyval));
+        if r == 0 {
+            *keyval = crate::abi::constants::MPI_KEYVAL_INVALID;
+        }
+        r
+    }
+
+    fn comm_set_attr(c: R::Comm, keyval: i32, value: usize) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        ret::<R>(Some(id), crate::core::attr::set_attr(id, keyval, value))
+    }
+
+    fn comm_get_attr(c: R::Comm, keyval: i32, value: &mut usize, flag: &mut bool) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match crate::core::attr::get_attr(id, keyval) {
+            Ok(Some(v)) => {
+                *value = v;
+                *flag = true;
+                0
+            }
+            Ok(None) => {
+                *flag = false;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_delete_attr(c: R::Comm, keyval: i32) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        ret::<R>(Some(id), crate::core::attr::delete_attr(id, keyval))
+    }
+
+    fn info_create(out: &mut R::Info) -> i32 {
+        match info::info_create() {
+            Ok(i) => {
+                *out = R::info_h(i);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn info_set(i: R::Info, key: &str, value: &str) -> i32 {
+        let id = conv!(R, None, R::info_id(i));
+        ret::<R>(None, info::info_set(id, key, value))
+    }
+
+    fn info_get(i: R::Info, key: &str, out: &mut String, flag: &mut bool) -> i32 {
+        let id = conv!(R, None, R::info_id(i));
+        match info::info_get(id, key) {
+            Ok(Some(v)) => {
+                *out = v;
+                *flag = true;
+                0
+            }
+            Ok(None) => {
+                *flag = false;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn info_free(i: &mut R::Info) -> i32 {
+        let id = conv!(R, None, R::info_id(*i));
+        let r = ret::<R>(None, info::info_free(id));
+        if r == 0 {
+            R::info_release(*i);
+            *i = R::c_info_null();
+        }
+        r
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_w_args<R: Repr>(
+    sendbuf: *const u8,
+    sendcounts: &[i32],
+    sdispls: &[i32],
+    sendtypes: &[R::Datatype],
+    recvbuf: *mut u8,
+    recvcounts: &[i32],
+    rdispls: &[i32],
+    recvtypes: &[R::Datatype],
+) -> RC<coll::AlltoallwArgs> {
+    let mut st = Vec::with_capacity(sendtypes.len());
+    for &t in sendtypes {
+        st.push(R::dt_id(t)?);
+    }
+    let mut rt = Vec::with_capacity(recvtypes.len());
+    for &t in recvtypes {
+        rt.push(R::dt_id(t)?);
+    }
+    Ok(coll::AlltoallwArgs {
+        sendbuf,
+        sendcounts: sendcounts.iter().map(|&c| c as usize).collect(),
+        sdispls: sdispls.iter().map(|&d| d as isize).collect(),
+        sendtypes: st,
+        recvbuf,
+        recvcounts: recvcounts.iter().map(|&c| c as usize).collect(),
+        rdispls: rdispls.iter().map(|&d| d as isize).collect(),
+        recvtypes: rt,
+    })
+}

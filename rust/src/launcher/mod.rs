@@ -1,0 +1,227 @@
+//! The job launcher — our `mpiexec`.
+//!
+//! Spawns one thread per rank, binds each to the shared [`World`], runs
+//! the application closure, and collects per-rank outcomes. A rank that
+//! panics unexpectedly triggers job abort (so peers blocked in recv
+//! unwind instead of hanging), mirroring how a real launcher kills the
+//! job when a process dies.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::Arc;
+
+use crate::core::transport::TransportKind;
+use crate::core::world::{bind_rank, unbind_rank, AbortUnwind, World};
+
+/// Job parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct JobSpec {
+    pub ranks: usize,
+    pub transport: TransportKind,
+}
+
+impl JobSpec {
+    pub fn new(ranks: usize) -> JobSpec {
+        JobSpec { ranks, transport: TransportKind::Spsc }
+    }
+
+    pub fn with_transport(mut self, t: TransportKind) -> JobSpec {
+        self.transport = t;
+        self
+    }
+}
+
+/// Per-rank outcome.
+#[derive(Debug)]
+pub enum RankOutcome<T> {
+    /// The rank's closure returned.
+    Ok(T),
+    /// The job aborted (`MPI_Abort` or fatal error handler) with this code.
+    Aborted(i32),
+    /// The rank panicked (bug in the application or library).
+    Panicked(String),
+}
+
+impl<T> RankOutcome<T> {
+    pub fn unwrap(self) -> T {
+        match self {
+            RankOutcome::Ok(v) => v,
+            RankOutcome::Aborted(c) => panic!("rank aborted with code {c}"),
+            RankOutcome::Panicked(m) => panic!("rank panicked: {m}"),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, RankOutcome::Ok(_))
+    }
+}
+
+/// Run `f(rank)` on every rank of a fresh world. Blocks until all ranks
+/// finish; returns outcomes in rank order.
+pub fn run_job<T, F>(spec: JobSpec, f: F) -> Vec<RankOutcome<T>>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let world = World::new(spec.ranks, spec.transport);
+    run_on_world(world, spec.ranks, f)
+}
+
+/// Run on an existing world (used by benches that pre-create worlds).
+pub fn run_on_world<T, F>(world: Arc<World>, ranks: usize, f: F) -> Vec<RankOutcome<T>>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert_eq!(world.size, ranks);
+    let f = &f;
+    let mut outcomes: Vec<Option<RankOutcome<T>>> = (0..ranks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..ranks)
+            .map(|rank| {
+                let world = world.clone();
+                s.spawn(move || {
+                    let _ctx = bind_rank(world.clone(), rank);
+                    let result = std::panic::catch_unwind(AssertUnwindSafe(|| f(rank)));
+                    unbind_rank();
+                    match result {
+                        Ok(v) => RankOutcome::Ok(v),
+                        Err(payload) => {
+                            if let Some(a) = payload.downcast_ref::<AbortUnwind>() {
+                                RankOutcome::Aborted(a.0)
+                            } else {
+                                // Unexpected panic: take the whole job down
+                                // so peers don't hang in blocking calls.
+                                world.abort(1);
+                                let msg = panic_message(&payload);
+                                RankOutcome::Panicked(msg)
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            outcomes[rank] = Some(h.join().unwrap_or_else(|_| {
+                RankOutcome::Panicked("rank thread join failed".to_string())
+            }));
+        }
+    });
+    outcomes.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run and unwrap all outcomes (panics if any rank failed). The common
+/// test/app helper.
+pub fn run_job_ok<T, F>(spec: JobSpec, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    run_job(spec, f).into_iter().map(|o| o.unwrap()).collect()
+}
+
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::engine;
+    use crate::core::reserved::COMM_WORLD;
+    use crate::core::transport::TransportKind;
+
+    #[test]
+    fn ranks_see_their_ids() {
+        let out = run_job_ok(JobSpec::new(4), |rank| {
+            engine::init().unwrap();
+            let r = crate::core::comm::comm_rank(COMM_WORLD).unwrap();
+            let s = crate::core::comm::comm_size(COMM_WORLD).unwrap();
+            engine::finalize().unwrap();
+            (rank, r, s)
+        });
+        for (i, (rank, r, s)) in out.into_iter().enumerate() {
+            assert_eq!(rank, i);
+            assert_eq!(r as usize, i);
+            assert_eq!(s, 4);
+        }
+    }
+
+    #[test]
+    fn send_recv_roundtrip_both_transports() {
+        for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+            let out = run_job_ok(JobSpec::new(2).with_transport(transport), |rank| {
+                engine::init().unwrap();
+                let dt = crate::core::datatype::builtin_id_of_abi(
+                    crate::abi::datatypes::MPI_INT32_T,
+                )
+                .unwrap();
+                let result = if rank == 0 {
+                    let data = [1i32, 2, 3, 4];
+                    engine::send(
+                        data.as_ptr() as *const u8,
+                        4,
+                        dt,
+                        1,
+                        42,
+                        COMM_WORLD,
+                        engine::SendMode::Standard,
+                    )
+                    .unwrap();
+                    vec![]
+                } else {
+                    let mut buf = [0i32; 4];
+                    let st = engine::recv(buf.as_mut_ptr() as *mut u8, 4, dt, 0, 42, COMM_WORLD)
+                        .unwrap();
+                    assert_eq!(st.source, 0);
+                    assert_eq!(st.tag, 42);
+                    assert_eq!(st.count_bytes, 16);
+                    buf.to_vec()
+                };
+                engine::finalize().unwrap();
+                result
+            });
+            assert_eq!(out[1], vec![1, 2, 3, 4], "transport {transport:?}");
+        }
+    }
+
+    #[test]
+    fn abort_propagates_to_all_ranks() {
+        let out = run_job(JobSpec::new(2), |rank| {
+            engine::init().unwrap();
+            if rank == 0 {
+                let _ = engine::abort(7);
+                unreachable!()
+            }
+            // Rank 1 blocks in a recv that can never match; job abort must
+            // unwind it.
+            let dt =
+                crate::core::datatype::builtin_id_of_abi(crate::abi::datatypes::MPI_BYTE).unwrap();
+            let mut b = [0u8; 1];
+            let _ = engine::recv(b.as_mut_ptr(), 1, dt, 0, 9, COMM_WORLD);
+        });
+        assert!(matches!(out[0], RankOutcome::Aborted(7)));
+        assert!(matches!(out[1], RankOutcome::Aborted(7)));
+    }
+
+    #[test]
+    fn panicking_rank_takes_job_down() {
+        let out = run_job(JobSpec::new(2), |rank| {
+            engine::init().unwrap();
+            if rank == 0 {
+                panic!("application bug");
+            }
+            let dt =
+                crate::core::datatype::builtin_id_of_abi(crate::abi::datatypes::MPI_BYTE).unwrap();
+            let mut b = [0u8; 1];
+            let _ = engine::recv(b.as_mut_ptr(), 1, dt, 0, 9, COMM_WORLD);
+        });
+        assert!(matches!(out[0], RankOutcome::Panicked(_)));
+        assert!(matches!(out[1], RankOutcome::Aborted(1)));
+    }
+}

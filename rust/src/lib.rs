@@ -1,0 +1,43 @@
+//! # mpi-abi — reproduction of *MPI Application Binary Interface
+//! # Standardization* (EuroMPI 2023)
+//!
+//! A three-layer Rust + JAX/Pallas system implementing:
+//!
+//! * the proposed **standard MPI ABI** ([`abi`]): integer types, the
+//!   32-byte status object, Huffman-coded handle constants, and the
+//!   constant tables of §5 / Appendix A;
+//! * a complete **MPI engine substrate** ([`core`]): communicators,
+//!   groups, tag matching over two shared-memory transports, a datatype
+//!   engine with pack/unpack, a request engine, collectives, reduction
+//!   ops, attributes, info objects, and error handlers;
+//! * two deliberately **divergent implementation ABIs** ([`impls`]):
+//!   an MPICH-like integer-handle ABI and an Open-MPI-like
+//!   pointer-handle ABI;
+//! * **Mukautuva** ([`muk`]): the standalone translation layer that
+//!   implements the standard ABI on top of either backend through
+//!   dlsym-style symbol resolution, handle/constant/status/error-code
+//!   conversion, callback trampolines and request-state maps;
+//! * a **native standard-ABI build** ([`native_abi`]) — the
+//!   `--enable-mpi-abi` analogue — implementing the standard ABI with no
+//!   translation;
+//! * a **PJRT runtime** ([`runtime`]) that loads the JAX/Pallas-compiled
+//!   HLO artifacts (built once by `make artifacts`; Python is never on
+//!   the request path) for the compute-heavy reduction and training-step
+//!   paths;
+//! * the [`launcher`], [`apps`] (OSU-style microbenchmarks, DDP trainer)
+//!   [`testsuite`], and a hand-rolled [`bench`] harness.
+
+pub mod abi;
+pub mod api;
+pub mod apps;
+pub mod bench;
+pub mod core;
+pub mod impls;
+pub mod native_abi;
+pub mod launcher;
+pub mod muk;
+pub mod runtime;
+pub mod testsuite;
+
+/// Crate version string (reported as the "library version" of our MPI).
+pub const LIBRARY_VERSION: &str = concat!("mpi-abi ", env!("CARGO_PKG_VERSION"));

@@ -1,0 +1,193 @@
+//! `abirun` — the launcher CLI (our `mpiexec`).
+//!
+//! ```text
+//! abirun [-n RANKS] [--abi CONFIG] [--transport spsc|mutex] APP [ARGS]
+//!
+//! CONFIG: mpich | ompi | muk-mpich | muk-ompi | abi
+//! APP:    hello | suite | osu_mbw_mr | osu_latency | ddp | table1
+//! ```
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::apps::{osu, with_abi, AbiApp, AbiConfig};
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: abirun [-n RANKS] [--abi mpich|ompi|muk-mpich|muk-ompi|abi] \
+         [--transport spsc|mutex] APP [ARGS]\n\
+         apps: hello | suite | osu_mbw_mr | osu_latency | ddp | table1"
+    );
+    std::process::exit(2);
+}
+
+struct Opts {
+    ranks: usize,
+    abi: AbiConfig,
+    transport: TransportKind,
+    app: String,
+    args: Vec<String>,
+}
+
+fn parse_args() -> Opts {
+    let mut ranks = 2;
+    let mut abi = AbiConfig::NativeAbi;
+    let mut transport = TransportKind::Spsc;
+    let mut app = None;
+    let mut rest = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-n" | "--ranks" => {
+                ranks = it.next().and_then(|v| v.parse().ok()).unwrap_or_else(|| usage())
+            }
+            "--abi" => {
+                abi = it.next().and_then(|v| AbiConfig::parse(&v)).unwrap_or_else(|| usage())
+            }
+            "--transport" => {
+                transport =
+                    it.next().and_then(|v| TransportKind::parse(&v)).unwrap_or_else(|| usage())
+            }
+            "-h" | "--help" => usage(),
+            _ if app.is_none() => app = Some(a),
+            _ => rest.push(a),
+        }
+    }
+    Opts { ranks, abi, transport, app: app.unwrap_or_else(|| usage()), args: rest }
+}
+
+struct AppRunner {
+    opts: Opts,
+}
+
+impl AbiApp<()> for AppRunner {
+    fn run<A: MpiAbi>(self) {
+        let spec = JobSpec::new(self.opts.ranks).with_transport(self.opts.transport);
+        match self.opts.app.as_str() {
+            "hello" => {
+                let out = run_job_ok(spec, |_| {
+                    A::init();
+                    let msg = mpi_abi::apps::hello::hello::<A>();
+                    A::finalize();
+                    msg
+                });
+                for line in out {
+                    println!("{line}");
+                }
+            }
+            "suite" => {
+                let out = run_job_ok(spec, |rank| {
+                    A::init();
+                    let results = mpi_abi::testsuite::run_all::<A>(rank);
+                    let report = mpi_abi::testsuite::report(A::NAME, &results);
+                    let ok = results.iter().all(|r| r.passed);
+                    A::finalize();
+                    (report, ok)
+                });
+                println!("{}", out[0].0);
+                if !out[0].1 {
+                    std::process::exit(1);
+                }
+            }
+            "osu_mbw_mr" => {
+                let size: usize =
+                    self.opts.args.first().and_then(|v| v.parse().ok()).unwrap_or(8);
+                let out = run_job_ok(spec, |_| {
+                    A::init();
+                    let r = osu::mbw_mr::<A>(osu::MbwMrParams {
+                        msg_size: size,
+                        ..Default::default()
+                    });
+                    A::finalize();
+                    r
+                });
+                println!(
+                    "osu_mbw_mr [{}] {} B: {:.2} messages/second",
+                    A::NAME,
+                    size,
+                    out[0]
+                );
+            }
+            "osu_latency" => {
+                let size: usize =
+                    self.opts.args.first().and_then(|v| v.parse().ok()).unwrap_or(8);
+                let out = run_job_ok(spec, |_| {
+                    A::init();
+                    let r = osu::latency::<A>(osu::LatencyParams {
+                        msg_size: size,
+                        ..Default::default()
+                    });
+                    A::finalize();
+                    r
+                });
+                println!(
+                    "osu_latency [{}] {} B: {:.1} ns one-way",
+                    A::NAME,
+                    size,
+                    out[0] * 1e9
+                );
+            }
+            "ddp" => {
+                let steps: usize =
+                    self.opts.args.first().and_then(|v| v.parse().ok()).unwrap_or(40);
+                let out = run_job_ok(spec, |_| {
+                    A::init();
+                    let r = mpi_abi::apps::ddp::train::<A>(mpi_abi::apps::ddp::DdpParams {
+                        steps,
+                        ..Default::default()
+                    });
+                    A::finalize();
+                    (r.loss_curve, r.final_loss)
+                });
+                println!("ddp [{}] loss curve:", A::NAME);
+                for (step, loss) in &out[0].0 {
+                    println!("  step {step:4}  loss {loss:.6}");
+                }
+            }
+            _ => usage(),
+        }
+    }
+}
+
+/// Table 1 reproduction: message rate across the five ABI configs and
+/// both transports (also available as `cargo bench` message_rate).
+fn table1(ranks: usize) {
+    println!("Table 1 analogue: message rate (8-byte messages), {ranks} ranks");
+    println!("{:<34} {:>18}", "MPI", "Messages/second");
+    let rows: [(&str, AbiConfig, TransportKind); 5] = [
+        ("impl-A mutex shm (\"Intel MPI\")", AbiConfig::Mpich, TransportKind::Mutex),
+        ("+ Mukautuva", AbiConfig::MukMpich, TransportKind::Mutex),
+        ("impl-A spsc shm (\"MPICH dev UCX\")", AbiConfig::Mpich, TransportKind::Spsc),
+        ("+ Mukautuva", AbiConfig::MukMpich, TransportKind::Spsc),
+        ("impl-A spsc, native std ABI", AbiConfig::NativeAbi, TransportKind::Spsc),
+    ];
+    struct Row {
+        transport: TransportKind,
+    }
+    impl AbiApp<f64> for Row {
+        fn run<A: MpiAbi>(self) -> f64 {
+            let spec = JobSpec::new(2).with_transport(self.transport);
+            let out = run_job_ok(spec, |_| {
+                A::init();
+                let r = osu::mbw_mr::<A>(Default::default());
+                A::finalize();
+                r
+            });
+            out[0]
+        }
+    }
+    for (label, abi, transport) in rows {
+        let rate = with_abi(abi, Row { transport });
+        println!("{label:<34} {rate:>18.2}");
+    }
+}
+
+fn main() {
+    let opts = parse_args();
+    if opts.app == "table1" {
+        table1(opts.ranks);
+        return;
+    }
+    let abi = opts.abi;
+    with_abi(abi, AppRunner { opts });
+}

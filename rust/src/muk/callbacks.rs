@@ -1,0 +1,163 @@
+//! Callback trampolines.
+//!
+//! MPI callback signatures carry no user-data pointer (§3, item 4), so a
+//! translation layer cannot hand the backend a closure: it must register
+//! a plain function that (a) converts the backend-ABI arguments to
+//! standard-ABI ones, and (b) finds the user's function *without any
+//! context argument*. Mukautuva solves this with a pool of static
+//! trampoline functions, each hard-wired (by its index) to a slot in a
+//! registry. We reproduce that: [`POOL_SIZE`] monomorphic trampolines
+//! per callback kind per backend, slot state in rank-local storage.
+
+use std::cell::RefCell;
+
+use crate::abi::handles::{AbiComm, AbiDatatype};
+use crate::muk::convert::{comm_to_muk, dt_to_muk, ret_code, MukBackend};
+
+/// Trampolines per callback kind. Exceeding this returns
+/// `MPI_ERR_NO_MEM`-ish errors, as a real static pool would.
+pub const POOL_SIZE: usize = 32;
+
+/// User callbacks in standard-ABI terms.
+pub type MukOpFn = fn(*const u8, *mut u8, i32, AbiDatatype);
+pub type MukErrhFn = fn(AbiComm, i32);
+pub type MukCopyFn = fn(AbiComm, i32, usize, usize) -> (bool, usize);
+pub type MukDeleteFn = fn(AbiComm, i32, usize, usize);
+
+thread_local! {
+    static OP_SLOTS: RefCell<[Option<MukOpFn>; POOL_SIZE]> = const { RefCell::new([None; POOL_SIZE]) };
+    static ERRH_SLOTS: RefCell<[Option<MukErrhFn>; POOL_SIZE]> = const { RefCell::new([None; POOL_SIZE]) };
+    static COPY_SLOTS: RefCell<[Option<MukCopyFn>; POOL_SIZE]> = const { RefCell::new([None; POOL_SIZE]) };
+    static DELETE_SLOTS: RefCell<[Option<MukDeleteFn>; POOL_SIZE]> = const { RefCell::new([None; POOL_SIZE]) };
+}
+
+macro_rules! slot_ops {
+    ($alloc:ident, $free:ident, $slots:ident, $t:ty) => {
+        /// Claim a free trampoline slot for `f`; `None` if the pool is full.
+        pub fn $alloc(f: $t) -> Option<usize> {
+            $slots.with(|s| {
+                let mut s = s.borrow_mut();
+                for (i, slot) in s.iter_mut().enumerate() {
+                    if slot.is_none() {
+                        *slot = Some(f);
+                        return Some(i);
+                    }
+                }
+                None
+            })
+        }
+
+        /// Release a slot.
+        pub fn $free(i: usize) {
+            $slots.with(|s| s.borrow_mut()[i] = None);
+        }
+    };
+}
+
+slot_ops!(alloc_op_slot, free_op_slot, OP_SLOTS, MukOpFn);
+slot_ops!(alloc_errh_slot, free_errh_slot, ERRH_SLOTS, MukErrhFn);
+slot_ops!(alloc_copy_slot, free_copy_slot, COPY_SLOTS, MukCopyFn);
+slot_ops!(alloc_delete_slot, free_delete_slot, DELETE_SLOTS, MukDeleteFn);
+
+// --- The trampolines ---------------------------------------------------------
+
+fn op_tramp<A: MukBackend, const I: usize>(
+    inv: *const u8,
+    inout: *mut u8,
+    len: i32,
+    dt: A::Datatype,
+) {
+    let f = OP_SLOTS.with(|s| s.borrow()[I]).expect("op trampoline slot empty");
+    f(inv, inout, len, AbiDatatype(dt_to_muk::<A>(dt)));
+}
+
+fn errh_tramp<A: MukBackend, const I: usize>(c: A::Comm, code: i32) {
+    let f = ERRH_SLOTS.with(|s| s.borrow()[I]).expect("errh trampoline slot empty");
+    f(AbiComm(comm_to_muk::<A>(c)), ret_code::<A>(code));
+}
+
+fn copy_tramp<A: MukBackend, const I: usize>(
+    c: A::Comm,
+    kv: i32,
+    extra: usize,
+    val: usize,
+) -> (bool, usize) {
+    let f = COPY_SLOTS.with(|s| s.borrow()[I]).expect("copy trampoline slot empty");
+    f(AbiComm(comm_to_muk::<A>(c)), kv, extra, val)
+}
+
+fn delete_tramp<A: MukBackend, const I: usize>(c: A::Comm, kv: i32, extra: usize, val: usize) {
+    let f = DELETE_SLOTS.with(|s| s.borrow()[I]).expect("delete trampoline slot empty");
+    f(AbiComm(comm_to_muk::<A>(c)), kv, extra, val);
+}
+
+macro_rules! tramp_table {
+    ($f:ident, $A:ident) => {
+        [
+            $f::<$A, 0>, $f::<$A, 1>, $f::<$A, 2>, $f::<$A, 3>, $f::<$A, 4>, $f::<$A, 5>,
+            $f::<$A, 6>, $f::<$A, 7>, $f::<$A, 8>, $f::<$A, 9>, $f::<$A, 10>, $f::<$A, 11>,
+            $f::<$A, 12>, $f::<$A, 13>, $f::<$A, 14>, $f::<$A, 15>, $f::<$A, 16>, $f::<$A, 17>,
+            $f::<$A, 18>, $f::<$A, 19>, $f::<$A, 20>, $f::<$A, 21>, $f::<$A, 22>, $f::<$A, 23>,
+            $f::<$A, 24>, $f::<$A, 25>, $f::<$A, 26>, $f::<$A, 27>, $f::<$A, 28>, $f::<$A, 29>,
+            $f::<$A, 30>, $f::<$A, 31>,
+        ]
+    };
+}
+
+/// The static trampoline pools, monomorphized per backend.
+pub fn op_tramp_pool<A: MukBackend>() -> [crate::api::UserOpFn<A>; POOL_SIZE] {
+    tramp_table!(op_tramp, A)
+}
+
+pub fn errh_tramp_pool<A: MukBackend>() -> [crate::api::ErrhFn<A>; POOL_SIZE] {
+    tramp_table!(errh_tramp, A)
+}
+
+pub fn copy_tramp_pool<A: MukBackend>() -> [crate::api::AttrCopyFn<A>; POOL_SIZE] {
+    tramp_table!(copy_tramp, A)
+}
+
+pub fn delete_tramp_pool<A: MukBackend>() -> [crate::api::AttrDeleteFn<A>; POOL_SIZE] {
+    tramp_table!(delete_tramp, A)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_alloc_free_cycle() {
+        fn f(_: *const u8, _: *mut u8, _: i32, _: AbiDatatype) {}
+        let a = alloc_op_slot(f).unwrap();
+        let b = alloc_op_slot(f).unwrap();
+        assert_ne!(a, b);
+        free_op_slot(a);
+        let c = alloc_op_slot(f).unwrap();
+        assert_eq!(c, a, "slots are reused");
+        free_op_slot(b);
+        free_op_slot(c);
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none() {
+        fn f(_: AbiComm, _: i32) {}
+        let mut got = Vec::new();
+        while let Some(i) = alloc_errh_slot(f) {
+            got.push(i);
+        }
+        assert_eq!(got.len(), POOL_SIZE);
+        for i in got {
+            free_errh_slot(i);
+        }
+    }
+
+    #[test]
+    fn distinct_trampolines_per_slot() {
+        use crate::impls::mpich::MpichAbi;
+        let pool = op_tramp_pool::<MpichAbi>();
+        // Each trampoline is a distinct function (distinct code address).
+        let addrs: std::collections::HashSet<usize> =
+            pool.iter().map(|&f| f as usize).collect();
+        assert_eq!(addrs.len(), POOL_SIZE);
+    }
+}

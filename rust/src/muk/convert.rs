@@ -1,0 +1,387 @@
+//! Handle / constant / status / error-code conversion between the
+//! standard ABI ("MUK" side) and a backend implementation ABI.
+//!
+//! This is the heart of Mukautuva (§6.2): predefined constants are
+//! translated by table (the big `CONVERT_MPI_*` switches of
+//! `impl-wrap.so`), user handles pass through the word union
+//! ([`super::word::AsWord`]), statuses are converted field-by-field
+//! between layouts, and error codes hit the inlined success fast path
+//! before the class mapping.
+
+use crate::abi::constants as std_k;
+use crate::abi::handles as std_h;
+use crate::abi::status::AbiStatus;
+use crate::api::MpiAbi;
+use crate::impls::mpich::MpichAbi;
+use crate::impls::ompi::OmpiAbi;
+use crate::muk::word::AsWord;
+
+/// A backend Mukautuva can wrap: an [`MpiAbi`] whose handles fit the
+/// word union, plus the predefined-constant mappings that the wrap
+/// library compiles in from the backend's `mpi.h`.
+pub trait MukBackend:
+    MpiAbi<
+    Comm: AsWord,
+    Datatype: AsWord,
+    Op: AsWord,
+    Request: AsWord,
+    Group: AsWord,
+    Errhandler: AsWord,
+    Info: AsWord,
+>
+{
+    /// Backend handle for a predefined standard-ABI datatype constant.
+    fn predef_dt(abi_const: usize) -> Option<Self::Datatype>;
+    /// Standard-ABI constant for a backend *predefined* datatype handle.
+    fn predef_dt_rev(h: Self::Datatype) -> Option<usize>;
+    /// Backend handle for a predefined standard-ABI op constant.
+    fn predef_op(abi_const: usize) -> Option<Self::Op>;
+    fn predef_op_rev(h: Self::Op) -> Option<usize>;
+    /// Raw byte count hidden in the backend's status layout (the wrap
+    /// library is compiled against the backend's mpi.h and knows it).
+    fn status_bytes(s: &Self::Status) -> u64;
+}
+
+impl MukBackend for MpichAbi {
+    fn predef_dt(abi_const: usize) -> Option<Self::Datatype> {
+        let id = crate::core::datatype::builtin_id_of_abi(abi_const)?;
+        Some(crate::impls::mpich::DT_HANDLES[id.0 as usize])
+    }
+
+    fn predef_dt_rev(h: i32) -> Option<usize> {
+        use crate::impls::mpich as m;
+        if m::kind_of(h) == m::KIND_BUILTIN && m::type_of(h) == m::T_DATATYPE {
+            crate::core::datatype::abi_of_builtin_id(crate::core::DtId((h & 0xFF) as u32))
+        } else {
+            None
+        }
+    }
+
+    fn predef_op(abi_const: usize) -> Option<Self::Op> {
+        let id = crate::core::op::builtin_id_of_abi(abi_const)?;
+        Some(crate::impls::mpich::op_handle(id.0 as usize))
+    }
+
+    fn predef_op_rev(h: i32) -> Option<usize> {
+        use crate::impls::mpich as m;
+        if m::kind_of(h) == m::KIND_BUILTIN && m::type_of(h) == m::T_OP {
+            crate::core::op::abi_of_builtin_id(crate::core::OpId(m::payload_of(h) as u32))
+        } else {
+            None
+        }
+    }
+
+    fn status_bytes(s: &Self::Status) -> u64 {
+        s.count_bytes()
+    }
+}
+
+impl MukBackend for OmpiAbi {
+    fn predef_dt(abi_const: usize) -> Option<Self::Datatype> {
+        let id = crate::core::datatype::builtin_id_of_abi(abi_const)?;
+        Some(<crate::impls::ompi::OmpiRepr as crate::impls::repr::Repr>::dt_h(id))
+    }
+
+    fn predef_dt_rev(h: Self::Datatype) -> Option<usize> {
+        use crate::impls::repr::Repr;
+        let id = crate::impls::ompi::OmpiRepr::dt_id(h).ok()?;
+        if id.0 < crate::core::reserved::NUM_BUILTIN_DTYPES {
+            crate::core::datatype::abi_of_builtin_id(id)
+        } else {
+            None
+        }
+    }
+
+    fn predef_op(abi_const: usize) -> Option<Self::Op> {
+        let id = crate::core::op::builtin_id_of_abi(abi_const)?;
+        Some(<crate::impls::ompi::OmpiRepr as crate::impls::repr::Repr>::op_h(id))
+    }
+
+    fn predef_op_rev(h: Self::Op) -> Option<usize> {
+        use crate::impls::repr::Repr;
+        let id = crate::impls::ompi::OmpiRepr::op_id(h).ok()?;
+        if id.0 < crate::core::reserved::NUM_BUILTIN_OPS {
+            crate::core::op::abi_of_builtin_id(id)
+        } else {
+            None
+        }
+    }
+
+    fn status_bytes(s: &Self::Status) -> u64 {
+        s._ucount as u64
+    }
+}
+
+// --- Handle conversions (the CONVERT_MPI_* functions) ------------------------
+
+#[inline(always)]
+pub fn comm_to_impl<A: MukBackend>(muk: usize) -> A::Comm {
+    match muk {
+        std_h::MPI_COMM_WORLD => A::comm_world(),
+        std_h::MPI_COMM_SELF => A::comm_self(),
+        std_h::MPI_COMM_NULL => A::comm_null(),
+        w => A::Comm::from_word(w),
+    }
+}
+
+#[inline(always)]
+pub fn comm_to_muk<A: MukBackend>(c: A::Comm) -> usize {
+    if c == A::comm_world() {
+        std_h::MPI_COMM_WORLD
+    } else if c == A::comm_self() {
+        std_h::MPI_COMM_SELF
+    } else if c == A::comm_null() {
+        std_h::MPI_COMM_NULL
+    } else {
+        c.to_word()
+    }
+}
+
+#[inline(always)]
+pub fn dt_to_impl<A: MukBackend>(muk: usize) -> A::Datatype {
+    if muk <= crate::abi::huffman::HUFFMAN_MAX {
+        if let Some(h) = A::predef_dt(muk) {
+            return h;
+        }
+    }
+    A::Datatype::from_word(muk)
+}
+
+#[inline(always)]
+pub fn dt_to_muk<A: MukBackend>(d: A::Datatype) -> usize {
+    if let Some(c) = A::predef_dt_rev(d) {
+        c
+    } else {
+        d.to_word()
+    }
+}
+
+#[inline(always)]
+pub fn op_to_impl<A: MukBackend>(muk: usize) -> A::Op {
+    if muk <= crate::abi::huffman::HUFFMAN_MAX {
+        if let Some(h) = A::predef_op(muk) {
+            return h;
+        }
+    }
+    A::Op::from_word(muk)
+}
+
+#[inline(always)]
+pub fn req_to_impl<A: MukBackend>(muk: usize) -> A::Request {
+    if muk == std_h::MPI_REQUEST_NULL {
+        A::request_null()
+    } else {
+        A::Request::from_word(muk)
+    }
+}
+
+#[inline(always)]
+pub fn req_to_muk<A: MukBackend>(r: A::Request) -> usize {
+    if r == A::request_null() {
+        std_h::MPI_REQUEST_NULL
+    } else {
+        r.to_word()
+    }
+}
+
+#[inline(always)]
+pub fn errh_to_impl<A: MukBackend>(muk: usize) -> A::Errhandler {
+    match muk {
+        std_h::MPI_ERRORS_RETURN => A::errhandler_return(),
+        std_h::MPI_ERRORS_ARE_FATAL | std_h::MPI_ERRORS_ABORT => A::errhandler_fatal(),
+        w => A::Errhandler::from_word(w),
+    }
+}
+
+#[inline(always)]
+pub fn errh_to_muk<A: MukBackend>(e: A::Errhandler) -> usize {
+    if e == A::errhandler_return() {
+        std_h::MPI_ERRORS_RETURN
+    } else if e == A::errhandler_fatal() {
+        std_h::MPI_ERRORS_ARE_FATAL
+    } else {
+        e.to_word()
+    }
+}
+
+#[inline(always)]
+pub fn group_to_impl<A: MukBackend>(muk: usize) -> A::Group {
+    A::Group::from_word(muk)
+}
+
+#[inline(always)]
+pub fn info_to_impl<A: MukBackend>(muk: usize) -> A::Info {
+    if muk == std_h::MPI_INFO_NULL {
+        A::info_null()
+    } else {
+        A::Info::from_word(muk)
+    }
+}
+
+// --- Special integer constants -------------------------------------------------
+
+#[inline(always)]
+pub fn src_to_impl<A: MukBackend>(src: i32) -> i32 {
+    if src == std_k::MPI_ANY_SOURCE {
+        A::any_source()
+    } else if src == std_k::MPI_PROC_NULL {
+        A::proc_null()
+    } else {
+        src
+    }
+}
+
+#[inline(always)]
+pub fn dest_to_impl<A: MukBackend>(dest: i32) -> i32 {
+    if dest == std_k::MPI_PROC_NULL {
+        A::proc_null()
+    } else {
+        dest
+    }
+}
+
+#[inline(always)]
+pub fn tag_to_impl<A: MukBackend>(tag: i32) -> i32 {
+    if tag == std_k::MPI_ANY_TAG {
+        A::any_tag()
+    } else {
+        tag
+    }
+}
+
+#[inline(always)]
+pub fn buf_to_impl<A: MukBackend>(b: *const u8) -> *const u8 {
+    if b as usize == std_k::MPI_IN_PLACE {
+        A::in_place()
+    } else {
+        b
+    }
+}
+
+// --- Status conversion -----------------------------------------------------------
+
+/// Convert a backend status to the standard 32-byte status, translating
+/// special source values and the error code.
+pub fn status_to_muk<A: MukBackend>(s: &A::Status) -> AbiStatus {
+    let mut source = A::status_source(s);
+    if source == A::proc_null() {
+        source = std_k::MPI_PROC_NULL;
+    }
+    let mut tag = A::status_tag(s);
+    if tag == A::any_tag() {
+        tag = std_k::MPI_ANY_TAG;
+    }
+    let code = A::status_error(s);
+    let mut out = AbiStatus {
+        MPI_SOURCE: source,
+        MPI_TAG: tag,
+        MPI_ERROR: ret_code::<A>(code),
+        mpi_reserved: [0; 5],
+    };
+    // Recover the byte count for MPI_Get_count on the MUK side. The
+    // backend status carries it in its own hidden layout.
+    let bytes = status_count_bytes::<A>(s);
+    out.set_count_and_cancelled(bytes, A::status_cancelled(s));
+    out
+}
+
+/// Backend-hidden count extraction — the wrap library reads the
+/// backend's status layout directly (it is compiled against that
+/// `mpi.h`), so the full 63-bit count survives translation.
+pub fn status_count_bytes<A: MukBackend>(s: &A::Status) -> u64 {
+    A::status_bytes(s)
+}
+
+/// `RETURN_CODE_IMPL_TO_MUK`, with the success fast path inlined as in
+/// the paper's listing.
+#[inline(always)]
+pub fn ret_code<A: MukBackend>(code: i32) -> i32 {
+    if code == 0 {
+        return 0;
+    }
+    error_code_impl_to_muk::<A>(code)
+}
+
+#[cold]
+fn error_code_impl_to_muk<A: MukBackend>(code: i32) -> i32 {
+    // Backend class numbering is canonical in both our backends once the
+    // class is extracted; the standard ABI uses classes as codes.
+    A::err_class_of(code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Dt;
+
+    #[test]
+    fn comm_constants_translate_both_ways() {
+        let w = comm_to_impl::<MpichAbi>(std_h::MPI_COMM_WORLD);
+        assert_eq!(w, crate::impls::mpich::MPI_COMM_WORLD);
+        assert_eq!(comm_to_muk::<MpichAbi>(w), std_h::MPI_COMM_WORLD);
+
+        let w = comm_to_impl::<OmpiAbi>(std_h::MPI_COMM_WORLD);
+        assert_eq!(comm_to_muk::<OmpiAbi>(w), std_h::MPI_COMM_WORLD);
+    }
+
+    #[test]
+    fn dt_constants_translate() {
+        use crate::abi::datatypes as adt;
+        for c in [adt::MPI_INT, adt::MPI_DOUBLE, adt::MPI_BYTE, adt::MPI_INT64_T] {
+            let m = dt_to_impl::<MpichAbi>(c);
+            assert_eq!(dt_to_muk::<MpichAbi>(m), c, "mpich {c:#x}");
+            let o = dt_to_impl::<OmpiAbi>(c);
+            assert_eq!(dt_to_muk::<OmpiAbi>(o), c, "ompi {c:#x}");
+        }
+    }
+
+    #[test]
+    fn specials_translate() {
+        assert_eq!(src_to_impl::<MpichAbi>(std_k::MPI_ANY_SOURCE), -2);
+        assert_eq!(src_to_impl::<OmpiAbi>(std_k::MPI_ANY_SOURCE), -1);
+        assert_eq!(dest_to_impl::<MpichAbi>(std_k::MPI_PROC_NULL), -1);
+        assert_eq!(dest_to_impl::<OmpiAbi>(std_k::MPI_PROC_NULL), -2);
+        assert_eq!(tag_to_impl::<MpichAbi>(7), 7);
+    }
+
+    #[test]
+    fn error_codes_translate_with_fast_success() {
+        assert_eq!(ret_code::<MpichAbi>(0), 0);
+        let mpich_code = crate::impls::mpich::err_code(crate::abi::errors::MPI_ERR_TRUNCATE);
+        assert_eq!(ret_code::<MpichAbi>(mpich_code), crate::abi::errors::MPI_ERR_TRUNCATE);
+        assert_eq!(
+            ret_code::<OmpiAbi>(crate::abi::errors::MPI_ERR_TRUNCATE),
+            crate::abi::errors::MPI_ERR_TRUNCATE
+        );
+    }
+
+    #[test]
+    fn in_place_translates() {
+        let muk = std_k::MPI_IN_PLACE as *const u8;
+        assert_eq!(buf_to_impl::<MpichAbi>(muk), usize::MAX as *const u8);
+        assert_eq!(buf_to_impl::<OmpiAbi>(muk), 1 as *const u8);
+        let real = 0xdead0 as *const u8;
+        assert_eq!(buf_to_impl::<MpichAbi>(real), real);
+    }
+
+    #[test]
+    fn op_constants_translate() {
+        use crate::abi::ops as aop;
+        let m = op_to_impl::<MpichAbi>(aop::MPI_SUM);
+        assert_eq!(m, 0x58000001);
+        assert_eq!(MpichAbi::predef_op_rev(m), Some(aop::MPI_SUM));
+        let o = op_to_impl::<OmpiAbi>(aop::MPI_MAXLOC);
+        assert_eq!(OmpiAbi::predef_op_rev(o), Some(aop::MPI_MAXLOC));
+    }
+
+    #[test]
+    fn byte_dt_used_for_count_recovery() {
+        // status_count_bytes needs MPI_BYTE size 1 in both backends.
+        let mut sz = 0;
+        MpichAbi::type_size(MpichAbi::datatype(Dt::Byte), &mut sz);
+        assert_eq!(sz, 1);
+        let mut sz = 0;
+        OmpiAbi::type_size(OmpiAbi::datatype(Dt::Byte), &mut sz);
+        assert_eq!(sz, 1);
+    }
+}

@@ -1,0 +1,669 @@
+//! **Mukautuva** ("adaptable"): the standalone standard-ABI translation
+//! layer (§6.2) — `libmuk.so` in the paper's architecture.
+//!
+//! Applications compile against the standard ABI (`Muk<…>` implements
+//! [`MpiAbi`] with the standard handle/status/constant types). At init,
+//! libmuk "dlopens" the chosen backend's wrap library and resolves every
+//! `WRAP_*` symbol into a function-pointer vtable; every MPI call is one
+//! indirect call through that vtable into the wrap layer, which performs
+//! the representation conversion. This is the paper's *worst-case*
+//! implementation of the standard ABI — the +Mukautuva rows of Table 1.
+
+pub mod callbacks;
+pub mod convert;
+pub mod state;
+pub mod word;
+pub mod wrap;
+
+use once_cell::sync::Lazy;
+
+use crate::abi::handles::*;
+use crate::abi::status::AbiStatus;
+use crate::api::{dt_to_abi_const, op_to_abi_const, AttrCopyFn, AttrDeleteFn, Dt, ErrhFn, MpiAbi,
+    OpName, UserOpFn};
+use crate::impls::{MpichAbi, OmpiAbi};
+use wrap::{build_symbols, SymbolTable, Vtable};
+
+/// Which backend implementation libmuk redirects to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Mpich,
+    Ompi,
+}
+
+/// Backend selection marker (the `MUK_MPI=...` environment choice),
+/// resolved to a vtable at first use ("dlopen at initialization").
+pub trait BackendSel: 'static {
+    const BACKEND: Backend;
+    const NAME: &'static str;
+    fn vtable() -> &'static Vtable;
+}
+
+pub struct OverMpich;
+pub struct OverOmpi;
+
+static MPICH_SYMBOLS: Lazy<SymbolTable> = Lazy::new(|| build_symbols::<MpichAbi>("mpich-wrap"));
+static OMPI_SYMBOLS: Lazy<SymbolTable> = Lazy::new(|| build_symbols::<OmpiAbi>("ompi-wrap"));
+static MPICH_VTABLE: Lazy<Vtable> = Lazy::new(|| Vtable::resolve(&MPICH_SYMBOLS));
+static OMPI_VTABLE: Lazy<Vtable> = Lazy::new(|| Vtable::resolve(&OMPI_SYMBOLS));
+
+impl BackendSel for OverMpich {
+    const BACKEND: Backend = Backend::Mpich;
+    const NAME: &'static str = "muk(mpich)";
+    fn vtable() -> &'static Vtable {
+        &MPICH_VTABLE
+    }
+}
+
+impl BackendSel for OverOmpi {
+    const BACKEND: Backend = Backend::Ompi;
+    const NAME: &'static str = "muk(ompi)";
+    fn vtable() -> &'static Vtable {
+        &OMPI_VTABLE
+    }
+}
+
+/// The symbol table of a backend's wrap library (for inspection/tests).
+pub fn symbols(b: Backend) -> &'static SymbolTable {
+    match b {
+        Backend::Mpich => &MPICH_SYMBOLS,
+        Backend::Ompi => &OMPI_SYMBOLS,
+    }
+}
+
+/// `libmuk` as an [`MpiAbi`]: standard-ABI types throughout; every call
+/// dispatches through the backend's resolved vtable.
+pub struct Muk<B: BackendSel>(std::marker::PhantomData<B>);
+
+/// Mukautuva over the MPICH-like backend.
+pub type MukMpich = Muk<OverMpich>;
+/// Mukautuva over the Open-MPI-like backend.
+pub type MukOmpi = Muk<OverOmpi>;
+
+impl<B: BackendSel> MpiAbi for Muk<B> {
+    const NAME: &'static str = B::NAME;
+
+    type Comm = AbiComm;
+    type Datatype = AbiDatatype;
+    type Op = AbiOp;
+    type Request = AbiRequest;
+    type Group = AbiGroup;
+    type Errhandler = AbiErrhandler;
+    type Info = AbiInfo;
+    type Status = AbiStatus;
+
+    fn comm_world() -> AbiComm {
+        AbiComm::WORLD
+    }
+    fn comm_self() -> AbiComm {
+        AbiComm::SELF
+    }
+    fn comm_null() -> AbiComm {
+        AbiComm::NULL
+    }
+    fn request_null() -> AbiRequest {
+        AbiRequest::NULL
+    }
+    fn datatype(d: Dt) -> AbiDatatype {
+        AbiDatatype(dt_to_abi_const(d))
+    }
+    fn op(o: OpName) -> AbiOp {
+        AbiOp(op_to_abi_const(o))
+    }
+    fn errhandler_return() -> AbiErrhandler {
+        AbiErrhandler::ERRORS_RETURN
+    }
+    fn errhandler_fatal() -> AbiErrhandler {
+        AbiErrhandler::ERRORS_ARE_FATAL
+    }
+    fn info_null() -> AbiInfo {
+        AbiInfo::NULL
+    }
+    fn any_source() -> i32 {
+        crate::abi::constants::MPI_ANY_SOURCE
+    }
+    fn any_tag() -> i32 {
+        crate::abi::constants::MPI_ANY_TAG
+    }
+    fn proc_null() -> i32 {
+        crate::abi::constants::MPI_PROC_NULL
+    }
+    fn undefined() -> i32 {
+        crate::abi::constants::MPI_UNDEFINED
+    }
+    fn in_place() -> *const u8 {
+        crate::abi::constants::MPI_IN_PLACE as *const u8
+    }
+    fn err_class_of(code: i32) -> i32 {
+        code
+    }
+    fn error_string(code: i32) -> String {
+        crate::abi::errors::error_string(code).to_string()
+    }
+    fn err_from_canonical(class: i32) -> i32 {
+        class
+    }
+
+    fn init() -> i32 {
+        (B::vtable().init)()
+    }
+    fn finalize() -> i32 {
+        (B::vtable().finalize)()
+    }
+    fn initialized() -> bool {
+        (B::vtable().initialized)()
+    }
+    fn finalized() -> bool {
+        (B::vtable().finalized)()
+    }
+    fn abort(c: AbiComm, code: i32) -> i32 {
+        (B::vtable().abort)(c.0, code)
+    }
+    fn wtime() -> f64 {
+        (B::vtable().wtime)()
+    }
+    fn get_library_version() -> String {
+        let mut s = String::new();
+        (B::vtable().get_library_version)(&mut s);
+        s
+    }
+    fn get_version() -> (i32, i32) {
+        let (mut a, mut b) = (0, 0);
+        (B::vtable().get_version)(&mut a, &mut b);
+        (a, b)
+    }
+    fn get_processor_name() -> String {
+        let mut s = String::new();
+        (B::vtable().get_processor_name)(&mut s);
+        s
+    }
+
+    fn status_empty() -> AbiStatus {
+        let mut s = AbiStatus::empty();
+        s.MPI_SOURCE = crate::abi::constants::MPI_PROC_NULL;
+        s.MPI_TAG = crate::abi::constants::MPI_ANY_TAG;
+        s
+    }
+    fn status_source(s: &AbiStatus) -> i32 {
+        s.MPI_SOURCE
+    }
+    fn status_tag(s: &AbiStatus) -> i32 {
+        s.MPI_TAG
+    }
+    fn status_error(s: &AbiStatus) -> i32 {
+        s.MPI_ERROR
+    }
+    fn status_cancelled(s: &AbiStatus) -> bool {
+        s.cancelled()
+    }
+    fn get_count(s: &AbiStatus, dt: AbiDatatype) -> i32 {
+        let mut out = 0;
+        (B::vtable().get_count)(s as *const AbiStatus, dt.0, &mut out);
+        out
+    }
+
+    fn comm_size(c: AbiComm, out: &mut i32) -> i32 {
+        (B::vtable().comm_size)(c.0, out)
+    }
+    fn comm_rank(c: AbiComm, out: &mut i32) -> i32 {
+        (B::vtable().comm_rank)(c.0, out)
+    }
+    fn comm_dup(c: AbiComm, out: &mut AbiComm) -> i32 {
+        (B::vtable().comm_dup)(c.0, &mut out.0)
+    }
+    fn comm_split(c: AbiComm, color: i32, key: i32, out: &mut AbiComm) -> i32 {
+        (B::vtable().comm_split)(c.0, color, key, &mut out.0)
+    }
+    fn comm_free(c: &mut AbiComm) -> i32 {
+        (B::vtable().comm_free)(&mut c.0)
+    }
+    fn comm_compare(a: AbiComm, b: AbiComm, out: &mut i32) -> i32 {
+        (B::vtable().comm_compare)(a.0, b.0, out)
+    }
+    fn comm_set_name(c: AbiComm, name: &str) -> i32 {
+        (B::vtable().comm_set_name)(c.0, name)
+    }
+    fn comm_get_name(c: AbiComm, out: &mut String) -> i32 {
+        (B::vtable().comm_get_name)(c.0, out)
+    }
+    fn comm_group(c: AbiComm, out: &mut AbiGroup) -> i32 {
+        (B::vtable().comm_group)(c.0, &mut out.0)
+    }
+    fn group_size(g: AbiGroup, out: &mut i32) -> i32 {
+        (B::vtable().group_size)(g.0, out)
+    }
+    fn group_rank(g: AbiGroup, out: &mut i32) -> i32 {
+        (B::vtable().group_rank)(g.0, out)
+    }
+    fn group_incl(g: AbiGroup, ranks: &[i32], out: &mut AbiGroup) -> i32 {
+        (B::vtable().group_incl)(g.0, ranks, &mut out.0)
+    }
+    fn group_translate_ranks(a: AbiGroup, ranks: &[i32], b: AbiGroup, out: &mut [i32]) -> i32 {
+        (B::vtable().group_translate_ranks)(a.0, ranks, b.0, out)
+    }
+    fn group_free(g: &mut AbiGroup) -> i32 {
+        (B::vtable().group_free)(&mut g.0)
+    }
+    fn comm_set_errhandler(c: AbiComm, e: AbiErrhandler) -> i32 {
+        (B::vtable().comm_set_errhandler)(c.0, e.0)
+    }
+    fn comm_get_errhandler(c: AbiComm, out: &mut AbiErrhandler) -> i32 {
+        (B::vtable().comm_get_errhandler)(c.0, &mut out.0)
+    }
+    fn comm_create_errhandler(f: ErrhFn<Self>, out: &mut AbiErrhandler) -> i32 {
+        (B::vtable().comm_create_errhandler)(f, &mut out.0)
+    }
+    fn errhandler_free(e: &mut AbiErrhandler) -> i32 {
+        (B::vtable().errhandler_free)(&mut e.0)
+    }
+
+    fn send(buf: *const u8, count: i32, dt: AbiDatatype, dest: i32, tag: i32, c: AbiComm) -> i32 {
+        (B::vtable().send)(buf, count, dt.0, dest, tag, c.0)
+    }
+    fn ssend(buf: *const u8, count: i32, dt: AbiDatatype, dest: i32, tag: i32, c: AbiComm) -> i32 {
+        (B::vtable().ssend)(buf, count, dt.0, dest, tag, c.0)
+    }
+    fn recv(
+        buf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        src: i32,
+        tag: i32,
+        c: AbiComm,
+        status: &mut AbiStatus,
+    ) -> i32 {
+        (B::vtable().recv)(buf, count, dt.0, src, tag, c.0, status as *mut AbiStatus)
+    }
+    fn isend(
+        buf: *const u8,
+        count: i32,
+        dt: AbiDatatype,
+        dest: i32,
+        tag: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().isend)(buf, count, dt.0, dest, tag, c.0, &mut req.0)
+    }
+    fn issend(
+        buf: *const u8,
+        count: i32,
+        dt: AbiDatatype,
+        dest: i32,
+        tag: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().issend)(buf, count, dt.0, dest, tag, c.0, &mut req.0)
+    }
+    fn irecv(
+        buf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        src: i32,
+        tag: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().irecv)(buf, count, dt.0, src, tag, c.0, &mut req.0)
+    }
+
+    fn wait(req: &mut AbiRequest, status: &mut AbiStatus) -> i32 {
+        let key = req.0;
+        let rc = (B::vtable().wait)(&mut req.0, status as *mut AbiStatus);
+        if rc == 0 && req.is_null() {
+            state::reqmap_remove(key);
+        }
+        rc
+    }
+
+    fn test(req: &mut AbiRequest, flag: &mut bool, status: &mut AbiStatus) -> i32 {
+        let key = req.0;
+        let rc = (B::vtable().test)(&mut req.0, flag, status as *mut AbiStatus);
+        if rc == 0 && *flag {
+            state::reqmap_remove(key);
+        }
+        rc
+    }
+
+    fn waitall(reqs: &mut [AbiRequest], statuses: &mut [AbiStatus]) -> i32 {
+        let keys: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        let mut words: Vec<usize> = keys.clone();
+        let rc = (B::vtable().waitall)(&mut words, statuses.as_mut_ptr());
+        if rc == 0 {
+            for (i, w) in words.iter().enumerate() {
+                reqs[i] = AbiRequest(*w);
+                state::reqmap_remove(keys[i]);
+            }
+        }
+        rc
+    }
+
+    fn testall(reqs: &mut [AbiRequest], flag: &mut bool, statuses: &mut [AbiStatus]) -> i32 {
+        // §6.2 worst case: every Testall looks up every request in the
+        // map, whether or not it has state.
+        let keys: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        for k in &keys {
+            let _ = state::reqmap_contains(*k);
+        }
+        let mut words: Vec<usize> = keys.clone();
+        let rc = (B::vtable().testall)(&mut words, flag, statuses.as_mut_ptr());
+        if rc == 0 && *flag {
+            for (i, w) in words.iter().enumerate() {
+                reqs[i] = AbiRequest(*w);
+                state::reqmap_remove(keys[i]);
+            }
+        }
+        rc
+    }
+
+    fn waitany(reqs: &mut [AbiRequest], index: &mut i32, status: &mut AbiStatus) -> i32 {
+        let keys: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        let mut words: Vec<usize> = keys.clone();
+        let rc = (B::vtable().waitany)(&mut words, index, status as *mut AbiStatus);
+        if rc == 0 && *index >= 0 {
+            let i = *index as usize;
+            reqs[i] = AbiRequest(words[i]);
+            state::reqmap_remove(keys[i]);
+        }
+        rc
+    }
+
+    fn probe(src: i32, tag: i32, c: AbiComm, status: &mut AbiStatus) -> i32 {
+        (B::vtable().probe)(src, tag, c.0, status as *mut AbiStatus)
+    }
+    fn iprobe(src: i32, tag: i32, c: AbiComm, flag: &mut bool, status: &mut AbiStatus) -> i32 {
+        (B::vtable().iprobe)(src, tag, c.0, flag, status as *mut AbiStatus)
+    }
+    fn cancel(req: &mut AbiRequest) -> i32 {
+        (B::vtable().cancel)(&mut req.0)
+    }
+    fn request_free(req: &mut AbiRequest) -> i32 {
+        let key = req.0;
+        let rc = (B::vtable().request_free)(&mut req.0);
+        if rc == 0 {
+            state::reqmap_remove(key);
+        }
+        rc
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn sendrecv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        dest: i32,
+        sendtag: i32,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        src: i32,
+        recvtag: i32,
+        c: AbiComm,
+        status: &mut AbiStatus,
+    ) -> i32 {
+        (B::vtable().sendrecv)(sendbuf, sendcount, sendtype.0, dest, sendtag, recvbuf, recvcount,
+            recvtype.0, src, recvtag, c.0, status as *mut AbiStatus)
+    }
+
+    fn type_size(dt: AbiDatatype, out: &mut i32) -> i32 {
+        (B::vtable().type_size)(dt.0, out)
+    }
+    fn type_get_extent(dt: AbiDatatype, lb: &mut isize, extent: &mut isize) -> i32 {
+        (B::vtable().type_get_extent)(dt.0, lb, extent)
+    }
+    fn type_contiguous(count: i32, child: AbiDatatype, out: &mut AbiDatatype) -> i32 {
+        (B::vtable().type_contiguous)(count, child.0, &mut out.0)
+    }
+    fn type_vector(
+        count: i32,
+        blocklen: i32,
+        stride: i32,
+        child: AbiDatatype,
+        out: &mut AbiDatatype,
+    ) -> i32 {
+        (B::vtable().type_vector)(count, blocklen, stride, child.0, &mut out.0)
+    }
+    fn type_create_struct(blocks: &[(i32, isize, AbiDatatype)], out: &mut AbiDatatype) -> i32 {
+        let conv: Vec<(i32, isize, usize)> =
+            blocks.iter().map(|&(l, d, t)| (l, d, t.0)).collect();
+        (B::vtable().type_create_struct)(&conv, &mut out.0)
+    }
+    fn type_commit(dt: &mut AbiDatatype) -> i32 {
+        (B::vtable().type_commit)(&mut dt.0)
+    }
+    fn type_free(dt: &mut AbiDatatype) -> i32 {
+        (B::vtable().type_free)(&mut dt.0)
+    }
+    fn type_dup(dt: AbiDatatype, out: &mut AbiDatatype) -> i32 {
+        (B::vtable().type_dup)(dt.0, &mut out.0)
+    }
+
+    fn op_create(f: UserOpFn<Self>, commute: bool, out: &mut AbiOp) -> i32 {
+        (B::vtable().op_create)(f, commute, &mut out.0)
+    }
+    fn op_free(op: &mut AbiOp) -> i32 {
+        (B::vtable().op_free)(&mut op.0)
+    }
+
+    fn barrier(c: AbiComm) -> i32 {
+        (B::vtable().barrier)(c.0)
+    }
+    fn bcast(buf: *mut u8, count: i32, dt: AbiDatatype, root: i32, c: AbiComm) -> i32 {
+        (B::vtable().bcast)(buf, count, dt.0, root, c.0)
+    }
+    fn reduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        root: i32,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().reduce)(sendbuf, recvbuf, count, dt.0, op.0, root, c.0)
+    }
+    fn allreduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().allreduce)(sendbuf, recvbuf, count, dt.0, op.0, c.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn gather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().gather)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            root, c.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn scatter(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().scatter)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            root, c.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn allgather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().allgather)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            c.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn alltoall(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().alltoall)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            c.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn alltoallw(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtypes: &[AbiDatatype],
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtypes: &[AbiDatatype],
+        c: AbiComm,
+    ) -> i32 {
+        let st: Vec<usize> = sendtypes.iter().map(|t| t.0).collect();
+        let rt: Vec<usize> = recvtypes.iter().map(|t| t.0).collect();
+        (B::vtable().alltoallw)(sendbuf, sendcounts, sdispls, &st, recvbuf, recvcounts, rdispls,
+            &rt, c.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn ialltoallw(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtypes: &[AbiDatatype],
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtypes: &[AbiDatatype],
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        let st: Vec<usize> = sendtypes.iter().map(|t| t.0).collect();
+        let rt: Vec<usize> = recvtypes.iter().map(|t| t.0).collect();
+        (B::vtable().ialltoallw)(sendbuf, sendcounts, sdispls, &st, recvbuf, recvcounts, rdispls,
+            &rt, c.0, &mut req.0)
+    }
+    fn scan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().scan)(sendbuf, recvbuf, count, dt.0, op.0, c.0)
+    }
+    fn exscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().exscan)(sendbuf, recvbuf, count, dt.0, op.0, c.0)
+    }
+    fn reduce_scatter_block(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().reduce_scatter_block)(sendbuf, recvbuf, recvcount, dt.0, op.0, c.0)
+    }
+
+    fn comm_create_keyval(
+        copy: Option<AttrCopyFn<Self>>,
+        delete: Option<AttrDeleteFn<Self>>,
+        extra_state: usize,
+        out: &mut i32,
+    ) -> i32 {
+        (B::vtable().comm_create_keyval)(copy, delete, extra_state, out)
+    }
+    fn comm_free_keyval(keyval: &mut i32) -> i32 {
+        (B::vtable().comm_free_keyval)(keyval)
+    }
+    fn comm_set_attr(c: AbiComm, keyval: i32, value: usize) -> i32 {
+        (B::vtable().comm_set_attr)(c.0, keyval, value)
+    }
+    fn comm_get_attr(c: AbiComm, keyval: i32, value: &mut usize, flag: &mut bool) -> i32 {
+        (B::vtable().comm_get_attr)(c.0, keyval, value, flag)
+    }
+    fn comm_delete_attr(c: AbiComm, keyval: i32) -> i32 {
+        (B::vtable().comm_delete_attr)(c.0, keyval)
+    }
+
+    fn info_create(out: &mut AbiInfo) -> i32 {
+        (B::vtable().info_create)(&mut out.0)
+    }
+    fn info_set(i: AbiInfo, key: &str, value: &str) -> i32 {
+        (B::vtable().info_set)(i.0, key, value)
+    }
+    fn info_get(i: AbiInfo, key: &str, out: &mut String, flag: &mut bool) -> i32 {
+        (B::vtable().info_get)(i.0, key, out, flag)
+    }
+    fn info_free(i: &mut AbiInfo) -> i32 {
+        (B::vtable().info_free)(&mut i.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symbol_tables_are_complete_and_distinct() {
+        let m = symbols(Backend::Mpich);
+        let o = symbols(Backend::Ompi);
+        assert_eq!(m.len(), o.len());
+        assert!(m.len() >= 70, "expected a full WRAP surface, got {}", m.len());
+        // Same names, different monomorphized addresses.
+        let f_m: fn(usize, &mut i32) -> i32 = unsafe { m.dlsym("WRAP_comm_size") };
+        let f_o: fn(usize, &mut i32) -> i32 = unsafe { o.dlsym("WRAP_comm_size") };
+        assert_ne!(f_m as usize, f_o as usize);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing symbol")]
+    fn dlsym_missing_symbol_panics() {
+        let m = symbols(Backend::Mpich);
+        let _: fn() -> i32 = unsafe { m.dlsym("WRAP_No_such_function") };
+    }
+
+    #[test]
+    fn vtables_resolve() {
+        let v = OverMpich::vtable();
+        // Calling type_size through the vtable outside a job still works:
+        // it's pure representation decoding (MPICH fast path).
+        let mut out = 0;
+        let rc = (v.type_size)(crate::abi::datatypes::MPI_INT, &mut out);
+        assert_eq!(rc, 0);
+        assert_eq!(out, 4);
+        let v = OverOmpi::vtable();
+        let mut out = 0;
+        let rc = (v.type_size)(crate::abi::datatypes::MPI_DOUBLE, &mut out);
+        assert_eq!(rc, 0);
+        assert_eq!(out, 8);
+    }
+}

@@ -1,0 +1,95 @@
+//! Mukautuva's per-process (= per-rank-thread) mutable state: the
+//! request→temporary-state map of §6.2, and the slot bookkeeping for the
+//! callback trampoline pools.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Temporary state parked until a nonblocking operation completes —
+/// for `MPI_Ialltoallw`, the converted datatype-handle vectors, which
+/// the translation layer must keep alive (and eventually free) because
+/// the backend may reference them until completion.
+#[derive(Debug)]
+pub struct WState {
+    pub sendtypes: Vec<usize>,
+    pub recvtypes: Vec<usize>,
+}
+
+thread_local! {
+    /// muk-request-word → temp state (std::map in real Mukautuva).
+    static REQMAP: RefCell<HashMap<usize, WState>> = RefCell::new(HashMap::new());
+    /// impl op handle word → trampoline slot.
+    static OP_SLOT_OF: RefCell<HashMap<usize, usize>> = RefCell::new(HashMap::new());
+    /// impl errhandler word → trampoline slot.
+    static ERRH_SLOT_OF: RefCell<HashMap<usize, usize>> = RefCell::new(HashMap::new());
+    /// keyval → (copy slot, delete slot).
+    static KEYVAL_SLOTS: RefCell<HashMap<i32, (Option<usize>, Option<usize>)>> =
+        RefCell::new(HashMap::new());
+}
+
+pub fn reqmap_insert(req: usize, st: WState) {
+    REQMAP.with(|m| m.borrow_mut().insert(req, st));
+}
+
+/// Lookup + removal on completion. Returns whether the request had state.
+pub fn reqmap_remove(req: usize) -> Option<WState> {
+    REQMAP.with(|m| m.borrow_mut().remove(&req))
+}
+
+/// The pure lookup cost the §6.2 worst case pays on *every* Testall.
+pub fn reqmap_contains(req: usize) -> bool {
+    REQMAP.with(|m| m.borrow().contains_key(&req))
+}
+
+pub fn reqmap_len() -> usize {
+    REQMAP.with(|m| m.borrow().len())
+}
+
+pub fn remember_op_slot(op_word: usize, slot: usize) {
+    OP_SLOT_OF.with(|m| m.borrow_mut().insert(op_word, slot));
+}
+
+pub fn forget_op_slot(op_word: usize) -> Option<usize> {
+    OP_SLOT_OF.with(|m| m.borrow_mut().remove(&op_word))
+}
+
+pub fn remember_errh_slot(errh_word: usize, slot: usize) {
+    ERRH_SLOT_OF.with(|m| m.borrow_mut().insert(errh_word, slot));
+}
+
+pub fn forget_errh_slot(errh_word: usize) -> Option<usize> {
+    ERRH_SLOT_OF.with(|m| m.borrow_mut().remove(&errh_word))
+}
+
+pub fn remember_keyval_slots(kv: i32, copy: Option<usize>, delete: Option<usize>) {
+    KEYVAL_SLOTS.with(|m| m.borrow_mut().insert(kv, (copy, delete)));
+}
+
+pub fn forget_keyval_slots(kv: i32) -> Option<(Option<usize>, Option<usize>)> {
+    KEYVAL_SLOTS.with(|m| m.borrow_mut().remove(&kv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reqmap_roundtrip() {
+        assert!(!reqmap_contains(0x9000));
+        reqmap_insert(0x9000, WState { sendtypes: vec![1], recvtypes: vec![2] });
+        assert!(reqmap_contains(0x9000));
+        assert_eq!(reqmap_len(), 1);
+        let st = reqmap_remove(0x9000).unwrap();
+        assert_eq!(st.sendtypes, vec![1]);
+        assert!(reqmap_remove(0x9000).is_none());
+    }
+
+    #[test]
+    fn slot_maps() {
+        remember_op_slot(42, 3);
+        assert_eq!(forget_op_slot(42), Some(3));
+        assert_eq!(forget_op_slot(42), None);
+        remember_keyval_slots(7, Some(1), None);
+        assert_eq!(forget_keyval_slots(7), Some((Some(1), None)));
+    }
+}

@@ -1,0 +1,82 @@
+//! Mukautuva's handle union.
+//!
+//! The paper's excerpt:
+//!
+//! ```c
+//! typedef union {
+//!     void     *p;  // Open-MPI
+//!     int       i;  // MPICH
+//!     intptr_t ip;
+//! } MUK_Handle;
+//! ```
+//!
+//! A Mukautuva user handle *is* the backend's handle, carried in a
+//! pointer-sized word. [`AsWord`] is that union: every backend handle
+//! type can be stored into / recovered from a word.
+
+use crate::impls::ompi::{OmpiComm, OmpiDatatype, OmpiErrhandler, OmpiGroup, OmpiInfo, OmpiOp,
+    OmpiRequest};
+
+/// Round-trip a backend handle through a pointer-sized word.
+pub trait AsWord: Copy {
+    fn to_word(self) -> usize;
+    fn from_word(w: usize) -> Self;
+}
+
+/// MPICH-style `int` handles: the union's `.i` member.
+impl AsWord for i32 {
+    #[inline(always)]
+    fn to_word(self) -> usize {
+        self as u32 as usize
+    }
+    #[inline(always)]
+    fn from_word(w: usize) -> i32 {
+        w as u32 as i32
+    }
+}
+
+macro_rules! ptr_as_word {
+    ($($t:ident),*) => {$(
+        /// Open-MPI-style pointer handles: the union's `.p` member.
+        impl AsWord for $t {
+            #[inline(always)]
+            fn to_word(self) -> usize {
+                self.0 as usize
+            }
+            #[inline(always)]
+            fn from_word(w: usize) -> $t {
+                $t(w as *const crate::impls::ompi::Desc)
+            }
+        }
+    )*};
+}
+
+ptr_as_word!(OmpiComm, OmpiDatatype, OmpiOp, OmpiRequest, OmpiGroup, OmpiErrhandler, OmpiInfo);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i32_roundtrip_preserves_sign_bit() {
+        // MPICH user handles have the 0x80000000 bit set (negative i32).
+        let h: i32 = 0x8400_0007u32 as i32;
+        assert_eq!(<i32 as AsWord>::from_word(h.to_word()), h);
+    }
+
+    #[test]
+    fn pointer_roundtrip() {
+        let d = Box::leak(Box::new(0u64));
+        let c = OmpiComm(d as *const u64 as *const crate::impls::ompi::Desc);
+        assert_eq!(OmpiComm::from_word(c.to_word()), c);
+    }
+
+    #[test]
+    fn backend_user_handles_never_alias_the_zero_page() {
+        // The guarantee that lets MUK reuse backend handle values as its
+        // own: MPICH user handles have high kind bits; OMPI handles are
+        // heap addresses. Both exceed HUFFMAN_MAX.
+        let mpich_user: i32 = crate::impls::mpich::KIND_DIRECT | crate::impls::mpich::T_COMM;
+        assert!(mpich_user.to_word() > crate::abi::huffman::HUFFMAN_MAX);
+    }
+}

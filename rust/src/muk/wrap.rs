@@ -1,0 +1,1008 @@
+//! The `impl-wrap.so` half of Mukautuva: `WRAP_*` functions compiled
+//! against one backend, exposed through a name→address symbol table
+//! that `libmuk` resolves with [`SymbolTable::dlsym`].
+//!
+//! Every function takes standard-ABI-word arguments, converts handles
+//! and constants to the backend representation (see
+//! [`crate::muk::convert`]), calls the backend, and converts results
+//! back — the paper's `WRAP_Comm_size` listing, for the whole API.
+
+use std::collections::HashMap;
+
+use crate::abi::handles as std_h;
+use crate::abi::status::AbiStatus;
+use crate::muk::callbacks;
+use crate::muk::convert::*;
+use crate::muk::word::AsWord;
+
+/// A "shared library": WRAP symbol name → function address.
+pub struct SymbolTable {
+    map: HashMap<&'static str, *const ()>,
+    pub backend_name: &'static str,
+}
+
+// Function addresses are valid process-wide.
+unsafe impl Send for SymbolTable {}
+unsafe impl Sync for SymbolTable {}
+
+impl SymbolTable {
+    /// `dlsym`: resolve a typed function pointer by name. Panics on a
+    /// missing symbol (a real dlsym failure would abort muk's init too).
+    ///
+    /// # Safety
+    /// `T` must be the fn-pointer type the symbol was registered with.
+    pub unsafe fn dlsym<T: Copy>(&self, name: &str) -> T {
+        let p = self
+            .map
+            .get(name)
+            .unwrap_or_else(|| panic!("dlsym: missing symbol {name} in {}", self.backend_name));
+        assert_eq!(std::mem::size_of::<T>(), std::mem::size_of::<*const ()>());
+        unsafe { std::mem::transmute_copy::<*const (), T>(p) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+// --- WRAP functions -----------------------------------------------------------
+
+pub fn init<A: MukBackend>() -> i32 {
+    ret_code::<A>(A::init())
+}
+
+pub fn finalize<A: MukBackend>() -> i32 {
+    ret_code::<A>(A::finalize())
+}
+
+pub fn initialized<A: MukBackend>() -> bool {
+    A::initialized()
+}
+
+pub fn finalized<A: MukBackend>() -> bool {
+    A::finalized()
+}
+
+pub fn abort<A: MukBackend>(comm: usize, code: i32) -> i32 {
+    ret_code::<A>(A::abort(comm_to_impl::<A>(comm), code))
+}
+
+pub fn wtime<A: MukBackend>() -> f64 {
+    A::wtime()
+}
+
+pub fn get_library_version<A: MukBackend>(out: &mut String) -> i32 {
+    *out = format!("{} via mukautuva", A::get_library_version());
+    0
+}
+
+pub fn get_version<A: MukBackend>(v: &mut i32, sub: &mut i32) -> i32 {
+    let (a, b) = A::get_version();
+    *v = a;
+    *sub = b;
+    0
+}
+
+pub fn get_processor_name<A: MukBackend>(out: &mut String) -> i32 {
+    *out = A::get_processor_name();
+    0
+}
+
+pub fn comm_size<A: MukBackend>(comm: usize, out: &mut i32) -> i32 {
+    ret_code::<A>(A::comm_size(comm_to_impl::<A>(comm), out))
+}
+
+pub fn comm_rank<A: MukBackend>(comm: usize, out: &mut i32) -> i32 {
+    ret_code::<A>(A::comm_rank(comm_to_impl::<A>(comm), out))
+}
+
+pub fn comm_dup<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
+    let mut c = A::comm_null();
+    let rc = A::comm_dup(comm_to_impl::<A>(comm), &mut c);
+    if rc == 0 {
+        *out = comm_to_muk::<A>(c);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_split<A: MukBackend>(comm: usize, color: i32, key: i32, out: &mut usize) -> i32 {
+    let color = if color == crate::abi::constants::MPI_UNDEFINED { A::undefined() } else { color };
+    let mut c = A::comm_null();
+    let rc = A::comm_split(comm_to_impl::<A>(comm), color, key, &mut c);
+    if rc == 0 {
+        *out = comm_to_muk::<A>(c);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_free<A: MukBackend>(comm: &mut usize) -> i32 {
+    let mut c = comm_to_impl::<A>(*comm);
+    let rc = A::comm_free(&mut c);
+    if rc == 0 {
+        *comm = std_h::MPI_COMM_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_compare<A: MukBackend>(a: usize, b: usize, out: &mut i32) -> i32 {
+    ret_code::<A>(A::comm_compare(comm_to_impl::<A>(a), comm_to_impl::<A>(b), out))
+}
+
+pub fn comm_set_name<A: MukBackend>(comm: usize, name: &str) -> i32 {
+    ret_code::<A>(A::comm_set_name(comm_to_impl::<A>(comm), name))
+}
+
+pub fn comm_get_name<A: MukBackend>(comm: usize, out: &mut String) -> i32 {
+    ret_code::<A>(A::comm_get_name(comm_to_impl::<A>(comm), out))
+}
+
+pub fn comm_group<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
+    let mut g = A::Group::from_word(0);
+    let rc = A::comm_group(comm_to_impl::<A>(comm), &mut g);
+    if rc == 0 {
+        *out = g.to_word();
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn group_size<A: MukBackend>(g: usize, out: &mut i32) -> i32 {
+    ret_code::<A>(A::group_size(group_to_impl::<A>(g), out))
+}
+
+pub fn group_rank<A: MukBackend>(g: usize, out: &mut i32) -> i32 {
+    let rc = A::group_rank(group_to_impl::<A>(g), out);
+    if rc == 0 && *out == A::undefined() {
+        *out = crate::abi::constants::MPI_UNDEFINED;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn group_incl<A: MukBackend>(g: usize, ranks: &[i32], out: &mut usize) -> i32 {
+    let mut n = A::Group::from_word(0);
+    let rc = A::group_incl(group_to_impl::<A>(g), ranks, &mut n);
+    if rc == 0 {
+        *out = n.to_word();
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn group_translate_ranks<A: MukBackend>(
+    a: usize,
+    ranks: &[i32],
+    b: usize,
+    out: &mut [i32],
+) -> i32 {
+    let conv: Vec<i32> = ranks.iter().map(|&r| src_to_impl::<A>(r)).collect();
+    let rc = A::group_translate_ranks(group_to_impl::<A>(a), &conv, group_to_impl::<A>(b), out);
+    if rc == 0 {
+        for o in out.iter_mut() {
+            if *o == A::undefined() {
+                *o = crate::abi::constants::MPI_UNDEFINED;
+            } else if *o == A::proc_null() {
+                *o = crate::abi::constants::MPI_PROC_NULL;
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn group_free<A: MukBackend>(g: &mut usize) -> i32 {
+    let mut h = group_to_impl::<A>(*g);
+    let rc = A::group_free(&mut h);
+    if rc == 0 {
+        *g = std_h::MPI_GROUP_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_set_errhandler<A: MukBackend>(comm: usize, e: usize) -> i32 {
+    ret_code::<A>(A::comm_set_errhandler(comm_to_impl::<A>(comm), errh_to_impl::<A>(e)))
+}
+
+pub fn comm_get_errhandler<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
+    let mut e = A::errhandler_fatal();
+    let rc = A::comm_get_errhandler(comm_to_impl::<A>(comm), &mut e);
+    if rc == 0 {
+        *out = errh_to_muk::<A>(e);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_create_errhandler<A: MukBackend>(f: callbacks::MukErrhFn, out: &mut usize) -> i32 {
+    let Some(slot) = callbacks::alloc_errh_slot(f) else {
+        return crate::abi::errors::MPI_ERR_NO_MEM;
+    };
+    let tramp = callbacks::errh_tramp_pool::<A>()[slot];
+    let mut e = A::errhandler_fatal();
+    let rc = A::comm_create_errhandler(tramp, &mut e);
+    if rc == 0 {
+        *out = e.to_word();
+        crate::muk::state::remember_errh_slot(e.to_word(), slot);
+    } else {
+        callbacks::free_errh_slot(slot);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn errhandler_free<A: MukBackend>(e: &mut usize) -> i32 {
+    let mut h = errh_to_impl::<A>(*e);
+    let rc = A::errhandler_free(&mut h);
+    if rc == 0 {
+        if let Some(slot) = crate::muk::state::forget_errh_slot(*e) {
+            callbacks::free_errh_slot(slot);
+        }
+        *e = std_h::MPI_ERRHANDLER_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn send<A: MukBackend>(
+    buf: *const u8,
+    count: i32,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::send(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm)))
+}
+
+pub fn ssend<A: MukBackend>(
+    buf: *const u8,
+    count: i32,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::ssend(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm)))
+}
+
+pub fn recv<A: MukBackend>(
+    buf: *mut u8,
+    count: i32,
+    dt: usize,
+    src: i32,
+    tag: i32,
+    comm: usize,
+    status: *mut AbiStatus,
+) -> i32 {
+    let mut s = A::status_empty();
+    let rc = A::recv(buf, count, dt_to_impl::<A>(dt), src_to_impl::<A>(src),
+        tag_to_impl::<A>(tag), comm_to_impl::<A>(comm), &mut s);
+    if !status.is_null() {
+        unsafe { *status = status_to_muk::<A>(&s) };
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn isend<A: MukBackend>(
+    buf: *const u8,
+    count: i32,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::isend(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn issend<A: MukBackend>(
+    buf: *const u8,
+    count: i32,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::issend(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn irecv<A: MukBackend>(
+    buf: *mut u8,
+    count: i32,
+    dt: usize,
+    src: i32,
+    tag: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::irecv(buf, count, dt_to_impl::<A>(dt), src_to_impl::<A>(src),
+        tag_to_impl::<A>(tag), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn wait<A: MukBackend>(req: &mut usize, status: *mut AbiStatus) -> i32 {
+    let mut r = req_to_impl::<A>(*req);
+    let mut s = A::status_empty();
+    let rc = A::wait(&mut r, &mut s);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+        if !status.is_null() {
+            unsafe { *status = status_to_muk::<A>(&s) };
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn test<A: MukBackend>(req: &mut usize, flag: &mut bool, status: *mut AbiStatus) -> i32 {
+    let mut r = req_to_impl::<A>(*req);
+    let mut s = A::status_empty();
+    let rc = A::test(&mut r, flag, &mut s);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+        if *flag && !status.is_null() {
+            unsafe { *status = status_to_muk::<A>(&s) };
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn waitall<A: MukBackend>(reqs: &mut [usize], statuses: *mut AbiStatus) -> i32 {
+    let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
+    let mut ss = vec![A::status_empty(); rs.len()];
+    let rc = A::waitall(&mut rs, &mut ss);
+    if rc == 0 {
+        for (i, r) in rs.iter().enumerate() {
+            reqs[i] = req_to_muk::<A>(*r);
+            if !statuses.is_null() {
+                unsafe { *statuses.add(i) = status_to_muk::<A>(&ss[i]) };
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn testall<A: MukBackend>(reqs: &mut [usize], flag: &mut bool, statuses: *mut AbiStatus) -> i32 {
+    let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
+    let mut ss = vec![A::status_empty(); rs.len()];
+    let rc = A::testall(&mut rs, flag, &mut ss);
+    if rc == 0 && *flag {
+        for (i, r) in rs.iter().enumerate() {
+            reqs[i] = req_to_muk::<A>(*r);
+            if !statuses.is_null() {
+                unsafe { *statuses.add(i) = status_to_muk::<A>(&ss[i]) };
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn waitany<A: MukBackend>(reqs: &mut [usize], index: &mut i32, status: *mut AbiStatus) -> i32 {
+    let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
+    let mut s = A::status_empty();
+    let rc = A::waitany(&mut rs, index, &mut s);
+    if rc == 0 {
+        if *index == A::undefined() {
+            *index = crate::abi::constants::MPI_UNDEFINED;
+        } else if *index >= 0 {
+            let i = *index as usize;
+            reqs[i] = req_to_muk::<A>(rs[i]);
+            if !status.is_null() {
+                unsafe { *status = status_to_muk::<A>(&s) };
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn probe<A: MukBackend>(src: i32, tag: i32, comm: usize, status: *mut AbiStatus) -> i32 {
+    let mut s = A::status_empty();
+    let rc = A::probe(src_to_impl::<A>(src), tag_to_impl::<A>(tag), comm_to_impl::<A>(comm),
+        &mut s);
+    if rc == 0 && !status.is_null() {
+        unsafe { *status = status_to_muk::<A>(&s) };
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn iprobe<A: MukBackend>(
+    src: i32,
+    tag: i32,
+    comm: usize,
+    flag: &mut bool,
+    status: *mut AbiStatus,
+) -> i32 {
+    let mut s = A::status_empty();
+    let rc = A::iprobe(src_to_impl::<A>(src), tag_to_impl::<A>(tag), comm_to_impl::<A>(comm),
+        flag, &mut s);
+    if rc == 0 && *flag && !status.is_null() {
+        unsafe { *status = status_to_muk::<A>(&s) };
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn cancel<A: MukBackend>(req: &mut usize) -> i32 {
+    let mut r = req_to_impl::<A>(*req);
+    ret_code::<A>(A::cancel(&mut r))
+}
+
+pub fn request_free<A: MukBackend>(req: &mut usize) -> i32 {
+    let mut r = req_to_impl::<A>(*req);
+    let rc = A::request_free(&mut r);
+    if rc == 0 {
+        *req = std_h::MPI_REQUEST_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn sendrecv<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    dest: i32,
+    sendtag: i32,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    src: i32,
+    recvtag: i32,
+    comm: usize,
+    status: *mut AbiStatus,
+) -> i32 {
+    let mut s = A::status_empty();
+    let rc = A::sendrecv(
+        sendbuf,
+        sendcount,
+        dt_to_impl::<A>(sendtype),
+        dest_to_impl::<A>(dest),
+        sendtag,
+        recvbuf,
+        recvcount,
+        dt_to_impl::<A>(recvtype),
+        src_to_impl::<A>(src),
+        tag_to_impl::<A>(recvtag),
+        comm_to_impl::<A>(comm),
+        &mut s,
+    );
+    if rc == 0 && !status.is_null() {
+        unsafe { *status = status_to_muk::<A>(&s) };
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn type_size<A: MukBackend>(dt: usize, out: &mut i32) -> i32 {
+    ret_code::<A>(A::type_size(dt_to_impl::<A>(dt), out))
+}
+
+pub fn type_get_extent<A: MukBackend>(dt: usize, lb: &mut isize, extent: &mut isize) -> i32 {
+    ret_code::<A>(A::type_get_extent(dt_to_impl::<A>(dt), lb, extent))
+}
+
+pub fn type_contiguous<A: MukBackend>(count: i32, child: usize, out: &mut usize) -> i32 {
+    let mut d = A::datatype(crate::api::Dt::Byte);
+    let rc = A::type_contiguous(count, dt_to_impl::<A>(child), &mut d);
+    if rc == 0 {
+        *out = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn type_vector<A: MukBackend>(
+    count: i32,
+    blocklen: i32,
+    stride: i32,
+    child: usize,
+    out: &mut usize,
+) -> i32 {
+    let mut d = A::datatype(crate::api::Dt::Byte);
+    let rc = A::type_vector(count, blocklen, stride, dt_to_impl::<A>(child), &mut d);
+    if rc == 0 {
+        *out = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn type_create_struct<A: MukBackend>(
+    blocks: &[(i32, isize, usize)],
+    out: &mut usize,
+) -> i32 {
+    // Vector-of-datatypes conversion: the §6.2 pain point.
+    let conv: Vec<(i32, isize, A::Datatype)> =
+        blocks.iter().map(|&(l, d, t)| (l, d, dt_to_impl::<A>(t))).collect();
+    let mut d = A::datatype(crate::api::Dt::Byte);
+    let rc = A::type_create_struct(&conv, &mut d);
+    if rc == 0 {
+        *out = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn type_commit<A: MukBackend>(dt: &mut usize) -> i32 {
+    let mut d = dt_to_impl::<A>(*dt);
+    let rc = A::type_commit(&mut d);
+    if rc == 0 {
+        *dt = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn type_free<A: MukBackend>(dt: &mut usize) -> i32 {
+    let mut d = dt_to_impl::<A>(*dt);
+    let rc = A::type_free(&mut d);
+    if rc == 0 {
+        *dt = crate::abi::datatypes::MPI_DATATYPE_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn type_dup<A: MukBackend>(dt: usize, out: &mut usize) -> i32 {
+    let mut d = A::datatype(crate::api::Dt::Byte);
+    let rc = A::type_dup(dt_to_impl::<A>(dt), &mut d);
+    if rc == 0 {
+        *out = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn op_create<A: MukBackend>(f: callbacks::MukOpFn, commute: bool, out: &mut usize) -> i32 {
+    let Some(slot) = callbacks::alloc_op_slot(f) else {
+        return crate::abi::errors::MPI_ERR_NO_MEM;
+    };
+    let tramp = callbacks::op_tramp_pool::<A>()[slot];
+    let mut o = A::op(crate::api::OpName::Sum);
+    let rc = A::op_create(tramp, commute, &mut o);
+    if rc == 0 {
+        *out = o.to_word();
+        crate::muk::state::remember_op_slot(o.to_word(), slot);
+    } else {
+        callbacks::free_op_slot(slot);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn op_free<A: MukBackend>(op: &mut usize) -> i32 {
+    let mut o = op_to_impl::<A>(*op);
+    let rc = A::op_free(&mut o);
+    if rc == 0 {
+        if let Some(slot) = crate::muk::state::forget_op_slot(*op) {
+            callbacks::free_op_slot(slot);
+        }
+        *op = crate::abi::ops::MPI_OP_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn barrier<A: MukBackend>(comm: usize) -> i32 {
+    ret_code::<A>(A::barrier(comm_to_impl::<A>(comm)))
+}
+
+pub fn bcast<A: MukBackend>(buf: *mut u8, count: i32, dt: usize, root: i32, comm: usize) -> i32 {
+    ret_code::<A>(A::bcast(buf, count, dt_to_impl::<A>(dt), root, comm_to_impl::<A>(comm)))
+}
+
+pub fn reduce<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    root: i32,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::reduce(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), root, comm_to_impl::<A>(comm)))
+}
+
+pub fn allreduce<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::allreduce(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn gather<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::gather(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn scatter<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+) -> i32 {
+    let rb = if recvbuf as usize == crate::abi::constants::MPI_IN_PLACE {
+        A::in_place() as *mut u8
+    } else {
+        recvbuf
+    };
+    ret_code::<A>(A::scatter(sendbuf, sendcount, dt_to_impl::<A>(sendtype), rb, recvcount,
+        dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn allgather<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::allgather(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn alltoall<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::alltoall(sendbuf, sendcount, dt_to_impl::<A>(sendtype), recvbuf, recvcount,
+        dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn alltoallw<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcounts: &[i32],
+    sdispls: &[i32],
+    sendtypes: &[usize],
+    recvbuf: *mut u8,
+    recvcounts: &[i32],
+    rdispls: &[i32],
+    recvtypes: &[usize],
+    comm: usize,
+) -> i32 {
+    // Vectors of datatype handles: convert whole arrays (§6.2).
+    let st: Vec<A::Datatype> = sendtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
+    let rt: Vec<A::Datatype> = recvtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
+    ret_code::<A>(A::alltoallw(sendbuf, sendcounts, sdispls, &st, recvbuf, recvcounts, rdispls,
+        &rt, comm_to_impl::<A>(comm)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn ialltoallw<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcounts: &[i32],
+    sdispls: &[i32],
+    sendtypes: &[usize],
+    recvbuf: *mut u8,
+    recvcounts: &[i32],
+    rdispls: &[i32],
+    recvtypes: &[usize],
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let st: Vec<A::Datatype> = sendtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
+    let rt: Vec<A::Datatype> = recvtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
+    let mut r = A::request_null();
+    let rc = A::ialltoallw(sendbuf, sendcounts, sdispls, &st, recvbuf, recvcounts, rdispls, &rt,
+        comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+        // The converted datatype vectors are temporary state that must
+        // live until the request completes: park them in the request map
+        // (the §6.2 mechanism whose lookup cost E5 measures).
+        crate::muk::state::reqmap_insert(
+            *req,
+            crate::muk::state::WState {
+                sendtypes: sendtypes.to_vec(),
+                recvtypes: recvtypes.to_vec(),
+            },
+        );
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn scan<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::scan(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
+}
+
+pub fn exscan<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::exscan(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
+}
+
+pub fn reduce_scatter_block<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::reduce_scatter_block(buf_to_impl::<A>(sendbuf), recvbuf, recvcount,
+        dt_to_impl::<A>(dt), op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
+}
+
+pub fn comm_create_keyval<A: MukBackend>(
+    copy: Option<callbacks::MukCopyFn>,
+    delete: Option<callbacks::MukDeleteFn>,
+    extra_state: usize,
+    out: &mut i32,
+) -> i32 {
+    let mut slots = (None, None);
+    let copy_t = match copy {
+        Some(f) => {
+            let Some(s) = callbacks::alloc_copy_slot(f) else {
+                return crate::abi::errors::MPI_ERR_NO_MEM;
+            };
+            slots.0 = Some(s);
+            Some(callbacks::copy_tramp_pool::<A>()[s])
+        }
+        None => None,
+    };
+    let delete_t = match delete {
+        Some(f) => {
+            let Some(s) = callbacks::alloc_delete_slot(f) else {
+                if let Some(cs) = slots.0 {
+                    callbacks::free_copy_slot(cs);
+                }
+                return crate::abi::errors::MPI_ERR_NO_MEM;
+            };
+            slots.1 = Some(s);
+            Some(callbacks::delete_tramp_pool::<A>()[s])
+        }
+        None => None,
+    };
+    let rc = A::comm_create_keyval(copy_t, delete_t, extra_state, out);
+    if rc == 0 {
+        crate::muk::state::remember_keyval_slots(*out, slots.0, slots.1);
+    } else {
+        if let Some(s) = slots.0 {
+            callbacks::free_copy_slot(s);
+        }
+        if let Some(s) = slots.1 {
+            callbacks::free_delete_slot(s);
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_free_keyval<A: MukBackend>(keyval: &mut i32) -> i32 {
+    let kv = *keyval;
+    let rc = A::comm_free_keyval(keyval);
+    if rc == 0 {
+        if let Some((c, d)) = crate::muk::state::forget_keyval_slots(kv) {
+            if let Some(s) = c {
+                callbacks::free_copy_slot(s);
+            }
+            if let Some(s) = d {
+                callbacks::free_delete_slot(s);
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn comm_set_attr<A: MukBackend>(comm: usize, keyval: i32, value: usize) -> i32 {
+    ret_code::<A>(A::comm_set_attr(comm_to_impl::<A>(comm), keyval, value))
+}
+
+pub fn comm_get_attr<A: MukBackend>(
+    comm: usize,
+    keyval: i32,
+    value: &mut usize,
+    flag: &mut bool,
+) -> i32 {
+    ret_code::<A>(A::comm_get_attr(comm_to_impl::<A>(comm), keyval, value, flag))
+}
+
+pub fn comm_delete_attr<A: MukBackend>(comm: usize, keyval: i32) -> i32 {
+    ret_code::<A>(A::comm_delete_attr(comm_to_impl::<A>(comm), keyval))
+}
+
+pub fn info_create<A: MukBackend>(out: &mut usize) -> i32 {
+    let mut i = A::info_null();
+    let rc = A::info_create(&mut i);
+    if rc == 0 {
+        *out = i.to_word();
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn info_set<A: MukBackend>(info: usize, key: &str, value: &str) -> i32 {
+    ret_code::<A>(A::info_set(info_to_impl::<A>(info), key, value))
+}
+
+pub fn info_get<A: MukBackend>(info: usize, key: &str, out: &mut String, flag: &mut bool) -> i32 {
+    ret_code::<A>(A::info_get(info_to_impl::<A>(info), key, out, flag))
+}
+
+pub fn info_free<A: MukBackend>(info: &mut usize) -> i32 {
+    let mut i = info_to_impl::<A>(*info);
+    let rc = A::info_free(&mut i);
+    if rc == 0 {
+        *info = std_h::MPI_INFO_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn get_count<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i32) -> i32 {
+    // Counts live in the MUK status's reserved fields after conversion.
+    let s = unsafe { &*status };
+    let mut size = 0;
+    let rc = A::type_size(dt_to_impl::<A>(dt), &mut size);
+    if rc != 0 {
+        return ret_code::<A>(rc);
+    }
+    if size == 0 {
+        *out = 0;
+        return 0;
+    }
+    let bytes = s.count_bytes();
+    *out = if bytes % size as u64 != 0 {
+        crate::abi::constants::MPI_UNDEFINED
+    } else {
+        (bytes / size as u64) as i32
+    };
+    0
+}
+
+// --- The vtable and symbol table -------------------------------------------------
+
+macro_rules! define_vtable {
+    ($( $name:ident : $ty:ty ),* $(,)?) => {
+        /// `libmuk`'s resolved function-pointer table (MUK_* pointers in
+        /// the paper's listing).
+        #[allow(non_snake_case)]
+        pub struct Vtable {
+            $( pub $name: $ty, )*
+        }
+
+        impl Vtable {
+            /// Resolve every `WRAP_*` symbol from an opened backend —
+            /// the dlsym loop Mukautuva runs at init.
+            pub fn resolve(st: &SymbolTable) -> Vtable {
+                Vtable {
+                    $( $name: unsafe { st.dlsym::<$ty>(concat!("WRAP_", stringify!($name))) }, )*
+                }
+            }
+        }
+
+        /// Build the WRAP symbol table for backend `A` — what compiling
+        /// `impl-wrap.c` against the backend's `mpi.h` produces.
+        pub fn build_symbols<A: MukBackend>(backend_name: &'static str) -> SymbolTable {
+            let mut map: HashMap<&'static str, *const ()> = HashMap::new();
+            $( map.insert(concat!("WRAP_", stringify!($name)), $name::<A> as *const ()); )*
+            SymbolTable { map, backend_name }
+        }
+    };
+}
+
+define_vtable! {
+    init: fn() -> i32,
+    finalize: fn() -> i32,
+    initialized: fn() -> bool,
+    finalized: fn() -> bool,
+    abort: fn(usize, i32) -> i32,
+    wtime: fn() -> f64,
+    get_library_version: fn(&mut String) -> i32,
+    get_version: fn(&mut i32, &mut i32) -> i32,
+    get_processor_name: fn(&mut String) -> i32,
+    comm_size: fn(usize, &mut i32) -> i32,
+    comm_rank: fn(usize, &mut i32) -> i32,
+    comm_dup: fn(usize, &mut usize) -> i32,
+    comm_split: fn(usize, i32, i32, &mut usize) -> i32,
+    comm_free: fn(&mut usize) -> i32,
+    comm_compare: fn(usize, usize, &mut i32) -> i32,
+    comm_set_name: fn(usize, &str) -> i32,
+    comm_get_name: fn(usize, &mut String) -> i32,
+    comm_group: fn(usize, &mut usize) -> i32,
+    group_size: fn(usize, &mut i32) -> i32,
+    group_rank: fn(usize, &mut i32) -> i32,
+    group_incl: fn(usize, &[i32], &mut usize) -> i32,
+    group_translate_ranks: fn(usize, &[i32], usize, &mut [i32]) -> i32,
+    group_free: fn(&mut usize) -> i32,
+    comm_set_errhandler: fn(usize, usize) -> i32,
+    comm_get_errhandler: fn(usize, &mut usize) -> i32,
+    comm_create_errhandler: fn(callbacks::MukErrhFn, &mut usize) -> i32,
+    errhandler_free: fn(&mut usize) -> i32,
+    send: fn(*const u8, i32, usize, i32, i32, usize) -> i32,
+    ssend: fn(*const u8, i32, usize, i32, i32, usize) -> i32,
+    recv: fn(*mut u8, i32, usize, i32, i32, usize, *mut AbiStatus) -> i32,
+    isend: fn(*const u8, i32, usize, i32, i32, usize, &mut usize) -> i32,
+    issend: fn(*const u8, i32, usize, i32, i32, usize, &mut usize) -> i32,
+    irecv: fn(*mut u8, i32, usize, i32, i32, usize, &mut usize) -> i32,
+    wait: fn(&mut usize, *mut AbiStatus) -> i32,
+    test: fn(&mut usize, &mut bool, *mut AbiStatus) -> i32,
+    waitall: fn(&mut [usize], *mut AbiStatus) -> i32,
+    testall: fn(&mut [usize], &mut bool, *mut AbiStatus) -> i32,
+    waitany: fn(&mut [usize], &mut i32, *mut AbiStatus) -> i32,
+    probe: fn(i32, i32, usize, *mut AbiStatus) -> i32,
+    iprobe: fn(i32, i32, usize, &mut bool, *mut AbiStatus) -> i32,
+    cancel: fn(&mut usize) -> i32,
+    request_free: fn(&mut usize) -> i32,
+    sendrecv: fn(*const u8, i32, usize, i32, i32, *mut u8, i32, usize, i32, i32, usize, *mut AbiStatus) -> i32,
+    type_size: fn(usize, &mut i32) -> i32,
+    type_get_extent: fn(usize, &mut isize, &mut isize) -> i32,
+    type_contiguous: fn(i32, usize, &mut usize) -> i32,
+    type_vector: fn(i32, i32, i32, usize, &mut usize) -> i32,
+    type_create_struct: fn(&[(i32, isize, usize)], &mut usize) -> i32,
+    type_commit: fn(&mut usize) -> i32,
+    type_free: fn(&mut usize) -> i32,
+    type_dup: fn(usize, &mut usize) -> i32,
+    op_create: fn(callbacks::MukOpFn, bool, &mut usize) -> i32,
+    op_free: fn(&mut usize) -> i32,
+    barrier: fn(usize) -> i32,
+    bcast: fn(*mut u8, i32, usize, i32, usize) -> i32,
+    reduce: fn(*const u8, *mut u8, i32, usize, usize, i32, usize) -> i32,
+    allreduce: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
+    gather: fn(*const u8, i32, usize, *mut u8, i32, usize, i32, usize) -> i32,
+    scatter: fn(*const u8, i32, usize, *mut u8, i32, usize, i32, usize) -> i32,
+    allgather: fn(*const u8, i32, usize, *mut u8, i32, usize, usize) -> i32,
+    alltoall: fn(*const u8, i32, usize, *mut u8, i32, usize, usize) -> i32,
+    alltoallw: fn(*const u8, &[i32], &[i32], &[usize], *mut u8, &[i32], &[i32], &[usize], usize) -> i32,
+    ialltoallw: fn(*const u8, &[i32], &[i32], &[usize], *mut u8, &[i32], &[i32], &[usize], usize, &mut usize) -> i32,
+    scan: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
+    exscan: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
+    reduce_scatter_block: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
+    comm_create_keyval: fn(Option<callbacks::MukCopyFn>, Option<callbacks::MukDeleteFn>, usize, &mut i32) -> i32,
+    comm_free_keyval: fn(&mut i32) -> i32,
+    comm_set_attr: fn(usize, i32, usize) -> i32,
+    comm_get_attr: fn(usize, i32, &mut usize, &mut bool) -> i32,
+    comm_delete_attr: fn(usize, i32) -> i32,
+    info_create: fn(&mut usize) -> i32,
+    info_set: fn(usize, &str, &str) -> i32,
+    info_get: fn(usize, &str, &mut String, &mut bool) -> i32,
+    info_free: fn(&mut usize) -> i32,
+    get_count: fn(*const AbiStatus, usize, &mut i32) -> i32,
+}

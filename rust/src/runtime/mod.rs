@@ -1,0 +1,278 @@
+//! The PJRT runtime: loads the AOT-compiled HLO artifacts (produced once
+//! by `make artifacts` — Python is never on the request path) and
+//! executes them from the Rust hot paths.
+//!
+//! Two consumers:
+//! * the reduction-op engine ([`try_xla_reduce`]) offloads large
+//!   contiguous f32 SUM/PROD/MIN/MAX combines to the compiled Pallas
+//!   kernel;
+//! * the DDP application ([`crate::apps`]) runs the whole training
+//!   step (`grad_step` + `sgd_update`) through compiled executables.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! rank thread owns its own lazily-created client, and executables are
+//! compiled once per thread per artifact and cached.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::core::datatype::ScalarKind;
+use crate::core::op::BuiltinOp;
+
+/// Artifact sizes the reduce kernels were lowered for (must match
+/// `python/compile/aot.py`'s `REDUCE_SIZES`).
+pub const REDUCE_SIZES: [usize; 3] = [4096, 65536, 1_048_576];
+
+/// Environment switch: set `MPI_ABI_NO_XLA=1` to force the scalar path
+/// (used by benches to ablate the offload).
+fn xla_disabled() -> bool {
+    std::env::var("MPI_ABI_NO_XLA").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The reduce-combine offload is **opt-in** (`MPI_ABI_XLA_REDUCE=1`):
+/// the §Perf ablation measured the CPU-interpret Pallas kernel at
+/// 200–4000x the scalar loop (PJRT dispatch + interpret-lowered grid
+/// loops), so on this substrate the practical roofline says scalar.
+/// On a real TPU the VMEM/MXU estimates (DESIGN.md §Perf) flip this.
+fn xla_reduce_enabled() -> bool {
+    std::env::var("MPI_ABI_XLA_REDUCE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Locate the artifacts directory: `$MPI_ABI_ARTIFACTS`, else
+/// `./artifacts`, else the crate-root artifacts dir.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(d) = std::env::var("MPI_ABI_ARTIFACTS") {
+        let p = PathBuf::from(d);
+        return p.is_dir().then_some(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return Some(cwd);
+    }
+    let here = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    here.is_dir().then_some(here)
+}
+
+/// Per-thread PJRT state.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+thread_local! {
+    static RUNTIME: RefCell<Option<Option<Rc<Runtime>>>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's runtime, if artifacts exist and XLA is enabled.
+pub fn runtime() -> Option<Rc<Runtime>> {
+    RUNTIME.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.is_none() {
+            *r = Some(init_runtime());
+        }
+        r.as_ref().unwrap().clone()
+    })
+}
+
+/// Drop the calling thread's cached runtime so the next [`runtime`] call
+/// re-evaluates the environment (used by benches to ablate the offload).
+pub fn reset_thread_runtime() {
+    RUNTIME.with(|r| *r.borrow_mut() = None);
+}
+
+fn init_runtime() -> Option<Rc<Runtime>> {
+    if xla_disabled() {
+        return None;
+    }
+    let dir = artifacts_dir()?;
+    let client = xla::PjRtClient::cpu().ok()?;
+    Some(Rc::new(Runtime { client, dir, execs: RefCell::new(HashMap::new()) }))
+}
+
+impl Runtime {
+    /// Load + compile an artifact by name (cached per thread).
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.execs.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// `true` if the artifact file exists (without compiling it).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).is_file()
+    }
+
+    /// Execute an artifact on f32 inputs; returns the outputs as f32
+    /// vectors (the lowered functions return tuples).
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let l = xla::Literal::vec1(data);
+                if shape.len() == 1 && shape[0] as usize == data.len() {
+                    Ok(l)
+                } else {
+                    l.reshape(shape).map_err(anyhow::Error::from)
+                }
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(anyhow::Error::from))
+            .collect()
+    }
+}
+
+/// Offload hook for the reduction-op engine: `inout = op(in, inout)` over
+/// `n` packed f32 scalars via the compiled Pallas kernel. Returns `false`
+/// when the scalar loop should run instead (wrong type/op/size, runtime
+/// unavailable, or execution error).
+pub fn try_xla_reduce(
+    op: BuiltinOp,
+    kind: ScalarKind,
+    inbuf: &[u8],
+    inout: &mut [u8],
+    n: usize,
+) -> bool {
+    if !xla_reduce_enabled() || kind != ScalarKind::F32 || !REDUCE_SIZES.contains(&n) {
+        return false;
+    }
+    let opname = match op {
+        BuiltinOp::Sum => "sum",
+        BuiltinOp::Prod => "prod",
+        BuiltinOp::Min => "min",
+        BuiltinOp::Max => "max",
+        _ => return false,
+    };
+    let Some(rt) = runtime() else { return false };
+    let name = format!("reduce_{opname}_f32_{n}");
+    // Copy out of the (possibly unaligned) packed buffers.
+    let mut a = vec![0f32; n];
+    let mut b = vec![0f32; n];
+    unsafe {
+        std::ptr::copy_nonoverlapping(inbuf.as_ptr(), a.as_mut_ptr() as *mut u8, 4 * n);
+        std::ptr::copy_nonoverlapping(inout.as_ptr(), b.as_mut_ptr() as *mut u8, 4 * n);
+    }
+    match rt.execute_f32(&name, &[(&a, &[n as i64]), (&b, &[n as i64])]) {
+        Ok(outs) if outs.len() == 1 && outs[0].len() == n => {
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    outs[0].as_ptr() as *const u8,
+                    inout.as_mut_ptr(),
+                    4 * n,
+                );
+            }
+            true
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().is_some()
+    }
+
+    #[test]
+    fn reduce_artifact_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let rt = runtime().expect("runtime");
+        let n = 4096usize;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+        let out = rt
+            .execute_f32("reduce_sum_f32_4096", &[(&a, &[n as i64]), (&b, &[n as i64])])
+            .expect("execute");
+        assert_eq!(out.len(), 1);
+        for i in (0..n).step_by(97) {
+            assert_eq!(out[0][i], a[i] + b[i]);
+        }
+    }
+
+    #[test]
+    fn xla_reduce_hook_matches_scalar() {
+        if !have_artifacts() {
+            return;
+        }
+        std::env::set_var("MPI_ABI_XLA_REDUCE", "1");
+        reset_thread_runtime();
+        let n = 4096usize;
+        let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let mut b: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x.max(*y)).collect();
+        let abytes = unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, 4 * n) };
+        let bbytes = unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut u8, 4 * n) };
+        let used = try_xla_reduce(BuiltinOp::Max, ScalarKind::F32, abytes, bbytes, n);
+        assert!(used, "offload should engage at n=4096");
+        assert_eq!(b, want);
+    }
+
+    #[test]
+    fn hook_declines_wrong_shapes() {
+        // Non-matching size → scalar path.
+        let a = [0u8; 16];
+        let mut b = [0u8; 16];
+        assert!(!try_xla_reduce(BuiltinOp::Sum, ScalarKind::F32, &a, &mut b, 4));
+        // f64 → scalar path (artifacts are f32-only).
+        assert!(!try_xla_reduce(BuiltinOp::Sum, ScalarKind::F64, &a, &mut b, 2));
+    }
+
+    #[test]
+    fn grad_step_executes_and_loss_is_finite() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = runtime().expect("runtime");
+        if !rt.has_artifact("grad_step") {
+            return;
+        }
+        // Shapes must match python/compile/model.py.
+        let (d_in, d_hid, d_out, batch) = (256i64, 256i64, 128i64, 128i64);
+        let w1 = vec![0.05f32; (d_in * d_hid) as usize];
+        let b1 = vec![0.0f32; d_hid as usize];
+        let w2 = vec![0.05f32; (d_hid * d_out) as usize];
+        let b2 = vec![0.0f32; d_out as usize];
+        let x = vec![0.1f32; (batch * d_in) as usize];
+        let y = vec![0.3f32; batch as usize];
+        let outs = rt
+            .execute_f32(
+                "grad_step",
+                &[
+                    (&w1, &[d_in, d_hid]),
+                    (&b1, &[d_hid]),
+                    (&w2, &[d_hid, d_out]),
+                    (&b2, &[d_out]),
+                    (&x, &[batch, d_in]),
+                    (&y, &[batch]),
+                ],
+            )
+            .expect("grad_step");
+        assert_eq!(outs.len(), 5, "loss + 4 grads");
+        assert!(outs[0][0].is_finite(), "loss finite: {}", outs[0][0]);
+        assert_eq!(outs[1].len(), (d_in * d_hid) as usize);
+    }
+}

@@ -1,0 +1,348 @@
+//! Collective tests, including user-defined ops (callback translation)
+//! and the `Ialltoallw`+`Testall` path (§6.2's worst case).
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi, OpName};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("coll.barrier_stagger", barrier_stagger::<A>),
+        ("coll.bcast_all_roots", bcast_all_roots::<A>),
+        ("coll.reduce_sum", reduce_sum::<A>),
+        ("coll.reduce_minloc", reduce_minloc::<A>),
+        ("coll.allreduce_in_place", allreduce_in_place::<A>),
+        ("coll.allreduce_bitwise", allreduce_bitwise::<A>),
+        ("coll.gather_scatter", gather_scatter::<A>),
+        ("coll.allgather", allgather::<A>),
+        ("coll.alltoall", alltoall::<A>),
+        ("coll.alltoallw_heterogeneous", alltoallw_heterogeneous::<A>),
+        ("coll.ialltoallw_testall", ialltoallw_testall::<A>),
+        ("coll.scan_exscan", scan_exscan::<A>),
+        ("coll.reduce_scatter_block", reduce_scatter_block::<A>),
+        ("coll.user_op", user_op::<A>),
+        ("coll.user_op_derived_dt", user_op_derived_dt::<A>),
+    ]
+}
+
+fn geom<A: MpiAbi>() -> (i32, i32) {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    (n, me)
+}
+
+fn barrier_stagger<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_, me) = geom::<A>();
+    // Stagger entry so the barrier actually orders something.
+    std::thread::sleep(std::time::Duration::from_micros(50 * me as u64));
+    for _ in 0..5 {
+        check_rc!(A::barrier(A::comm_world()), "barrier");
+    }
+    Ok(())
+}
+
+fn bcast_all_roots<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int64);
+    for root in 0..n {
+        let mut v: [i64; 3] =
+            if me == root { [root as i64, -1, root as i64 * 1000] } else { [0; 3] };
+        check_rc!(A::bcast(slice_ptr_mut(&mut v), 3, dt, root, A::comm_world()), "bcast");
+        check!(v == [root as i64, -1, root as i64 * 1000], "root {root}: got {v:?}");
+    }
+    Ok(())
+}
+
+fn reduce_sum<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Double);
+    let send = [me as f64 + 1.0, 2.0];
+    let mut recv = [0.0f64; 2];
+    check_rc!(
+        A::reduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 2, dt, A::op(OpName::Sum),
+            n - 1, A::comm_world()),
+        "reduce"
+    );
+    if me == n - 1 {
+        let total: f64 = (1..=n as i64).map(|x| x as f64).sum();
+        check!(recv == [total, 2.0 * n as f64], "sum at root: {recv:?}");
+    }
+    Ok(())
+}
+
+fn reduce_minloc<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    #[repr(C)]
+    #[derive(Clone, Copy, PartialEq, Debug)]
+    struct Fi(f32, i32);
+    let send = [Fi(100.0 - me as f32, me)];
+    let mut recv = [Fi(0.0, -1)];
+    check_rc!(
+        A::reduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 1, A::datatype(Dt::FloatInt),
+            A::op(OpName::Minloc), 0, A::comm_world()),
+        "reduce minloc"
+    );
+    if me == 0 {
+        check!(recv[0] == Fi(100.0 - (n - 1) as f32, n - 1), "minloc: {recv:?}");
+    }
+    Ok(())
+}
+
+fn allreduce_in_place<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let mut v = [me + 1, 10 * (me + 1)];
+    check_rc!(
+        A::allreduce(A::in_place(), slice_ptr_mut(&mut v), 2, dt, A::op(OpName::Sum),
+            A::comm_world()),
+        "allreduce in place"
+    );
+    let t: i32 = (1..=n).sum();
+    check!(v == [t, 10 * t], "in-place sum: {v:?}");
+    Ok(())
+}
+
+fn allreduce_bitwise<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::UInt64);
+    let send = [1u64 << (me as u64 % 60)];
+    let mut recv = [0u64];
+    check_rc!(
+        A::allreduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 1, dt, A::op(OpName::Bor),
+            A::comm_world()),
+        "allreduce bor"
+    );
+    let mut want = 0u64;
+    for r in 0..n as u64 {
+        want |= 1 << (r % 60);
+    }
+    check!(recv[0] == want, "bor {:#x} want {:#x}", recv[0], want);
+    Ok(())
+}
+
+fn gather_scatter<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let send = [me * 2, me * 2 + 1];
+    let mut all = vec![0i32; 2 * n as usize];
+    check_rc!(
+        A::gather(slice_ptr(&send), 2, dt, slice_ptr_mut(&mut all), 2, dt, 0, A::comm_world()),
+        "gather"
+    );
+    if me == 0 {
+        let want: Vec<i32> = (0..2 * n).collect();
+        check!(all == want, "gathered {all:?}");
+    }
+    let mut back = [0i32; 2];
+    check_rc!(
+        A::scatter(slice_ptr(&all), 2, dt, slice_ptr_mut(&mut back), 2, dt, 0, A::comm_world()),
+        "scatter"
+    );
+    check!(back == [me * 2, me * 2 + 1], "scattered back {back:?}");
+    Ok(())
+}
+
+fn allgather<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Double);
+    let send = [me as f64 * 0.5];
+    let mut all = vec![-1.0f64; n as usize];
+    check_rc!(
+        A::allgather(slice_ptr(&send), 1, dt, slice_ptr_mut(&mut all), 1, dt, A::comm_world()),
+        "allgather"
+    );
+    for (r, &x) in all.iter().enumerate() {
+        check!(x == r as f64 * 0.5, "slot {r}: {x}");
+    }
+    Ok(())
+}
+
+fn alltoall<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let send: Vec<i32> = (0..n).map(|d| me * 1000 + d).collect();
+    let mut recv = vec![0i32; n as usize];
+    check_rc!(
+        A::alltoall(slice_ptr(&send), 1, dt, slice_ptr_mut(&mut recv), 1, dt, A::comm_world()),
+        "alltoall"
+    );
+    let want: Vec<i32> = (0..n).map(|s| s * 1000 + me).collect();
+    check!(recv == want, "transposed {recv:?}");
+    Ok(())
+}
+
+fn alltoallw_heterogeneous<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    // Every peer pair exchanges one i32, but through per-peer datatypes —
+    // the vector-of-datatypes conversion path.
+    let dt = A::datatype(Dt::Int);
+    let send: Vec<i32> = (0..n).map(|d| me * 100 + d).collect();
+    let mut recv = vec![0i32; n as usize];
+    let counts = vec![1i32; n as usize];
+    let displs: Vec<i32> = (0..n).map(|d| d * 4).collect();
+    let types = vec![dt; n as usize];
+    check_rc!(
+        A::alltoallw(slice_ptr(&send), &counts, &displs, &types, slice_ptr_mut(&mut recv),
+            &counts, &displs, &types, A::comm_world()),
+        "alltoallw"
+    );
+    let want: Vec<i32> = (0..n).map(|s| s * 100 + me).collect();
+    check!(recv == want, "alltoallw {recv:?} want {want:?}");
+    Ok(())
+}
+
+fn ialltoallw_testall<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let send: Vec<i32> = (0..n).map(|d| me * 10 + d).collect();
+    let mut recv = vec![0i32; n as usize];
+    let counts = vec![1i32; n as usize];
+    let displs: Vec<i32> = (0..n).map(|d| d * 4).collect();
+    let types = vec![dt; n as usize];
+    let mut req = A::request_null();
+    check_rc!(
+        A::ialltoallw(slice_ptr(&send), &counts, &displs, &types, slice_ptr_mut(&mut recv),
+            &counts, &displs, &types, A::comm_world(), &mut req),
+        "ialltoallw"
+    );
+    // Complete via Testall — the §6.2 request-map worst case.
+    let mut reqs = vec![req];
+    let mut flag = false;
+    let mut sts = vec![A::status_empty()];
+    let mut spins = 0u64;
+    while !flag {
+        check_rc!(A::testall(&mut reqs, &mut flag, &mut sts), "testall");
+        spins += 1;
+        if spins > 100_000_000 {
+            return Err("ialltoallw never completed".to_string());
+        }
+    }
+    check!(reqs[0] == A::request_null(), "request reset");
+    let want: Vec<i32> = (0..n).map(|s| s * 10 + me).collect();
+    check!(recv == want, "ialltoallw {recv:?}");
+    Ok(())
+}
+
+fn scan_exscan<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int64);
+    let send = [me as i64 + 1];
+    let mut inc = [0i64];
+    check_rc!(
+        A::scan(slice_ptr(&send), slice_ptr_mut(&mut inc), 1, dt, A::op(OpName::Sum),
+            A::comm_world()),
+        "scan"
+    );
+    let want: i64 = (1..=me as i64 + 1).sum();
+    check!(inc[0] == want, "scan: {} want {want}", inc[0]);
+    let mut exc = [-7i64];
+    check_rc!(
+        A::exscan(slice_ptr(&send), slice_ptr_mut(&mut exc), 1, dt, A::op(OpName::Sum),
+            A::comm_world()),
+        "exscan"
+    );
+    if me == 0 {
+        check!(exc[0] == -7, "rank 0 exscan untouched");
+    } else {
+        check!(exc[0] == (1..=me as i64).sum::<i64>(), "exscan: {}", exc[0]);
+    }
+    Ok(())
+}
+
+fn reduce_scatter_block<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    // Each rank contributes a vector of n blocks of 2; block r lands at
+    // rank r, summed.
+    let send: Vec<i32> = (0..2 * n).map(|i| i + me).collect();
+    let mut recv = [0i32; 2];
+    check_rc!(
+        A::reduce_scatter_block(slice_ptr(&send), slice_ptr_mut(&mut recv), 2, dt,
+            A::op(OpName::Sum), A::comm_world()),
+        "reduce_scatter_block"
+    );
+    let rank_sum: i32 = (0..n).sum();
+    check!(
+        recv == [2 * me * n + rank_sum, (2 * me + 1) * n + rank_sum],
+        "block at {me}: {recv:?}"
+    );
+    Ok(())
+}
+
+/// User op: componentwise (max, sum) over pairs of doubles — exercises
+/// the callback translation (muk: static trampoline + datatype handle
+/// conversion back into the standard ABI).
+fn user_maxsum<A: MpiAbi>(inv: *const u8, inout: *mut u8, len: i32, _dt: A::Datatype) {
+    // NB: reduction buffers are *packed* bytes — a portable user function
+    // must not assume natural alignment (unaligned access, as a careful C
+    // callback would memcpy).
+    let a = inv as *const f64;
+    let b = inout as *mut f64;
+    for i in 0..len as usize {
+        unsafe {
+            let (x1, x2) = (a.add(2 * i).read_unaligned(), a.add(2 * i + 1).read_unaligned());
+            let (y1, y2) = (b.add(2 * i).read_unaligned(), b.add(2 * i + 1).read_unaligned());
+            b.add(2 * i).write_unaligned(x1.max(y1));
+            b.add(2 * i + 1).write_unaligned(x2 + y2);
+        }
+    }
+}
+
+fn user_op<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    // Datatype: contiguous pair of doubles, so len counts pairs.
+    let mut pair_t = A::datatype(Dt::Byte);
+    check_rc!(A::type_contiguous(2, A::datatype(Dt::Double), &mut pair_t), "pair type");
+    check_rc!(A::type_commit(&mut pair_t), "commit");
+    let mut op = A::op(OpName::Sum);
+    check_rc!(A::op_create(user_maxsum::<A>, true, &mut op), "op_create");
+
+    let send = [me as f64, 1.0];
+    let mut recv = [0.0f64, 0.0];
+    check_rc!(
+        A::allreduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 1, pair_t, op, A::comm_world()),
+        "allreduce user op"
+    );
+    check!(recv[0] == (n - 1) as f64, "max of ranks: {}", recv[0]);
+    check!(recv[1] == n as f64, "sum of ones: {}", recv[1]);
+
+    check_rc!(A::op_free(&mut op), "op_free");
+    check_rc!(A::type_free(&mut pair_t), "type_free");
+    Ok(())
+}
+
+/// User op receiving the *datatype handle*: verifies the handle arrives
+/// in the caller's own ABI (the trampoline's conversion) by querying its
+/// size through the same ABI.
+fn user_size_probe<A: MpiAbi>(inv: *const u8, inout: *mut u8, len: i32, dt: A::Datatype) {
+    let mut size = 0;
+    let rc = A::type_size(dt, &mut size);
+    // Fold: sum, but poison the result if the handle was not usable.
+    let a = inv as *const i64;
+    let b = inout as *mut i64;
+    let poison = if rc != 0 || size != 8 { 1_000_000 } else { 0 };
+    for i in 0..len as usize {
+        unsafe {
+            b.add(i)
+                .write_unaligned(a.add(i).read_unaligned() + b.add(i).read_unaligned() + poison)
+        };
+    }
+}
+
+fn user_op_derived_dt<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let mut op = A::op(OpName::Sum);
+    check_rc!(A::op_create(user_size_probe::<A>, true, &mut op), "op_create");
+    let send = [me as i64];
+    let mut recv = [0i64];
+    check_rc!(
+        A::allreduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 1, A::datatype(Dt::Int64), op,
+            A::comm_world()),
+        "allreduce probe op"
+    );
+    let want: i64 = (0..n as i64).sum();
+    check!(recv[0] == want, "datatype handle usable in callback: {} want {want}", recv[0]);
+    check_rc!(A::op_free(&mut op), "op_free");
+    Ok(())
+}

@@ -1,0 +1,266 @@
+//! Communicator, group, error-handler, attribute and info tests.
+
+use std::cell::Cell;
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("comm.dup_isolated_traffic", dup_isolated_traffic::<A>),
+        ("comm.split_even_odd", split_even_odd::<A>),
+        ("comm.split_undefined", split_undefined::<A>),
+        ("comm.compare", compare::<A>),
+        ("comm.names", names::<A>),
+        ("comm.groups", groups::<A>),
+        ("comm.errhandler_custom", errhandler_custom::<A>),
+        ("comm.attributes", attributes::<A>),
+        ("comm.attr_callbacks_on_dup", attr_callbacks_on_dup::<A>),
+        ("comm.info", info::<A>),
+    ]
+}
+
+fn geom<A: MpiAbi>() -> (i32, i32) {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    (n, me)
+}
+
+fn dup_isolated_traffic<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let mut dup = A::comm_null();
+    check_rc!(A::comm_dup(A::comm_world(), &mut dup), "dup");
+    check!(dup != A::comm_null(), "dup produced a comm");
+    if n >= 2 {
+        let dt = A::datatype(Dt::Int);
+        if me == 0 {
+            let a = [1i32];
+            let b = [2i32];
+            check_rc!(A::send(slice_ptr(&a), 1, dt, 1, 7, A::comm_world()), "send world");
+            check_rc!(A::send(slice_ptr(&b), 1, dt, 1, 7, dup), "send dup");
+        } else if me == 1 {
+            // Opposite receive order: contexts must disambiguate.
+            let mut b = [0i32];
+            let mut st = A::status_empty();
+            check_rc!(A::recv(slice_ptr_mut(&mut b), 1, dt, 0, 7, dup, &mut st), "recv dup");
+            check!(b[0] == 2, "dup traffic: {}", b[0]);
+            let mut a = [0i32];
+            check_rc!(A::recv(slice_ptr_mut(&mut a), 1, dt, 0, 7, A::comm_world(), &mut st),
+                "recv world");
+            check!(a[0] == 1, "world traffic: {}", a[0]);
+        }
+    }
+    check_rc!(A::comm_free(&mut dup), "free");
+    check!(dup == A::comm_null(), "handle reset to null");
+    Ok(())
+}
+
+fn split_even_odd<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let mut sub = A::comm_null();
+    check_rc!(A::comm_split(A::comm_world(), me % 2, me, &mut sub), "split");
+    let (mut sn, mut sr) = (0, 0);
+    check_rc!(A::comm_size(sub, &mut sn), "sub size");
+    check_rc!(A::comm_rank(sub, &mut sr), "sub rank");
+    let want_n = if me % 2 == 0 { (n + 1) / 2 } else { n / 2 };
+    check!(sn == want_n, "subcomm size {sn} want {want_n}");
+    check!(sr == me / 2, "subcomm rank {sr} want {}", me / 2);
+    // Use it.
+    let dt = A::datatype(Dt::Int);
+    let send = [1i32];
+    let mut total = [0i32];
+    check_rc!(
+        A::allreduce(slice_ptr(&send), slice_ptr_mut(&mut total), 1, dt,
+            A::op(crate::api::OpName::Sum), sub),
+        "allreduce on sub"
+    );
+    check!(total[0] == sn, "sub allreduce");
+    check_rc!(A::comm_free(&mut sub), "free");
+    Ok(())
+}
+
+fn split_undefined<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_n, me) = geom::<A>();
+    let color = if me == 0 { A::undefined() } else { 0 };
+    let mut sub = A::comm_null();
+    check_rc!(A::comm_split(A::comm_world(), color, 0, &mut sub), "split");
+    if me == 0 {
+        check!(sub == A::comm_null(), "UNDEFINED color yields COMM_NULL");
+    } else {
+        check!(sub != A::comm_null(), "others get a comm");
+        check_rc!(A::comm_free(&mut sub), "free");
+    }
+    Ok(())
+}
+
+fn compare<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    use crate::abi::constants::{MPI_CONGRUENT, MPI_IDENT};
+    let mut out = -1;
+    check_rc!(A::comm_compare(A::comm_world(), A::comm_world(), &mut out), "compare");
+    check!(out == MPI_IDENT, "world vs world is IDENT, got {out}");
+    let mut dup = A::comm_null();
+    check_rc!(A::comm_dup(A::comm_world(), &mut dup), "dup");
+    check_rc!(A::comm_compare(A::comm_world(), dup, &mut out), "compare dup");
+    check!(out == MPI_CONGRUENT, "world vs dup is CONGRUENT, got {out}");
+    check_rc!(A::comm_free(&mut dup), "free");
+    Ok(())
+}
+
+fn names<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut name = String::new();
+    check_rc!(A::comm_get_name(A::comm_world(), &mut name), "get_name");
+    check!(name == "MPI_COMM_WORLD", "default name {name:?}");
+    let mut dup = A::comm_null();
+    check_rc!(A::comm_dup(A::comm_world(), &mut dup), "dup");
+    check_rc!(A::comm_set_name(dup, "workers"), "set_name");
+    check_rc!(A::comm_get_name(dup, &mut name), "get_name 2");
+    check!(name == "workers", "set name {name:?}");
+    check_rc!(A::comm_free(&mut dup), "free");
+    Ok(())
+}
+
+fn groups<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let mut g = {
+        let mut g = unsafe { std::mem::zeroed() };
+        check_rc!(A::comm_group(A::comm_world(), &mut g), "comm_group");
+        g
+    };
+    let mut gs = 0;
+    check_rc!(A::group_size(g, &mut gs), "group_size");
+    check!(gs == n, "group covers world");
+    let mut gr = -1;
+    check_rc!(A::group_rank(g, &mut gr), "group_rank");
+    check!(gr == me, "group rank");
+    // Reverse subgroup of min(2, n) members.
+    let take = n.min(2);
+    let ranks: Vec<i32> = (0..take).rev().collect();
+    let mut sub = unsafe { std::mem::zeroed() };
+    check_rc!(A::group_incl(g, &ranks, &mut sub), "group_incl");
+    let mut ss = 0;
+    check_rc!(A::group_size(sub, &mut ss), "sub size");
+    check!(ss == take, "sub size {ss}");
+    // Translate: sub rank 0 = world rank take-1.
+    let mut out = vec![0i32; 1];
+    check_rc!(A::group_translate_ranks(sub, &[0], g, &mut out), "translate");
+    check!(out[0] == take - 1, "translate: {out:?}");
+    check_rc!(A::group_free(&mut sub), "free sub");
+    check_rc!(A::group_free(&mut g), "free g");
+    Ok(())
+}
+
+thread_local! {
+    static ERRH_HITS: Cell<i32> = const { Cell::new(0) };
+    static ERRH_LAST_CLASS: Cell<i32> = const { Cell::new(0) };
+}
+
+fn recording_handler<A: MpiAbi>(_c: A::Comm, code: i32) {
+    ERRH_HITS.with(|h| h.set(h.get() + 1));
+    ERRH_LAST_CLASS.with(|c| c.set(A::err_class_of(code)));
+}
+
+fn errhandler_custom<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    ERRH_HITS.with(|h| h.set(0));
+    let mut dup = A::comm_null();
+    check_rc!(A::comm_dup(A::comm_world(), &mut dup), "dup");
+    let mut eh = A::errhandler_return();
+    check_rc!(A::comm_create_errhandler(recording_handler::<A>, &mut eh), "create errh");
+    check_rc!(A::comm_set_errhandler(dup, eh), "set errh");
+    // Trigger: send to an invalid rank.
+    let v = [0i32];
+    let rc = A::send(slice_ptr(&v), 1, A::datatype(Dt::Int), 12345, 0, dup);
+    check!(rc != 0, "invalid rank must error");
+    check!(ERRH_HITS.with(|h| h.get()) == 1, "custom handler invoked once");
+    check!(
+        ERRH_LAST_CLASS.with(|c| c.get()) == crate::abi::errors::MPI_ERR_RANK,
+        "handler saw ERR_RANK, got {}",
+        ERRH_LAST_CLASS.with(|c| c.get())
+    );
+    let mut back = A::errhandler_return();
+    check_rc!(A::comm_get_errhandler(dup, &mut back), "get errh");
+    check!(back == eh, "get returns what was set");
+    check_rc!(A::errhandler_free(&mut eh), "free errh");
+    check_rc!(A::comm_free(&mut dup), "free comm");
+    check_rc!(A::barrier(A::comm_world()), "resync");
+    Ok(())
+}
+
+fn attributes<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    // Predefined TAG_UB.
+    let mut v = 0usize;
+    let mut flag = false;
+    check_rc!(
+        A::comm_get_attr(A::comm_world(), crate::abi::constants::MPI_TAG_UB, &mut v, &mut flag),
+        "get TAG_UB"
+    );
+    check!(flag, "TAG_UB present");
+    check!(v >= 32767, "TAG_UB at least 32767: {v}");
+    // User keyval.
+    let mut kv = 0;
+    check_rc!(A::comm_create_keyval(None, None, 0, &mut kv), "create_keyval");
+    check_rc!(A::comm_set_attr(A::comm_world(), kv, 0xBEEF), "set_attr");
+    check_rc!(A::comm_get_attr(A::comm_world(), kv, &mut v, &mut flag), "get_attr");
+    check!(flag && v == 0xBEEF, "attr roundtrip: {v:#x}");
+    check_rc!(A::comm_delete_attr(A::comm_world(), kv), "delete_attr");
+    check_rc!(A::comm_get_attr(A::comm_world(), kv, &mut v, &mut flag), "get after delete");
+    check!(!flag, "attr gone");
+    check_rc!(A::comm_free_keyval(&mut kv), "free_keyval");
+    Ok(())
+}
+
+thread_local! {
+    static COPIES: Cell<i32> = const { Cell::new(0) };
+    static DELETES: Cell<i32> = const { Cell::new(0) };
+}
+
+fn counting_copy<A: MpiAbi>(_c: A::Comm, _kv: i32, extra: usize, val: usize) -> (bool, usize) {
+    COPIES.with(|c| c.set(c.get() + 1));
+    (true, val + extra)
+}
+
+fn counting_delete<A: MpiAbi>(_c: A::Comm, _kv: i32, _extra: usize, _val: usize) {
+    DELETES.with(|c| c.set(c.get() + 1));
+}
+
+fn attr_callbacks_on_dup<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    COPIES.with(|c| c.set(0));
+    DELETES.with(|c| c.set(0));
+    let mut kv = 0;
+    check_rc!(
+        A::comm_create_keyval(Some(counting_copy::<A>), Some(counting_delete::<A>), 5, &mut kv),
+        "create_keyval"
+    );
+    let mut base = A::comm_null();
+    check_rc!(A::comm_dup(A::comm_world(), &mut base), "dup base");
+    check_rc!(A::comm_set_attr(base, kv, 100), "set");
+    let mut copy = A::comm_null();
+    check_rc!(A::comm_dup(base, &mut copy), "dup copy");
+    check!(COPIES.with(|c| c.get()) == 1, "copy callback ran");
+    let mut v = 0usize;
+    let mut flag = false;
+    check_rc!(A::comm_get_attr(copy, kv, &mut v, &mut flag), "get on copy");
+    check!(flag && v == 105, "copied value transformed by extra_state: {v}");
+    check_rc!(A::comm_free(&mut copy), "free copy");
+    check!(DELETES.with(|c| c.get()) == 1, "delete ran on freed copy");
+    check_rc!(A::comm_free(&mut base), "free base");
+    check!(DELETES.with(|c| c.get()) == 2, "delete ran on freed base");
+    check_rc!(A::comm_free_keyval(&mut kv), "free keyval");
+    Ok(())
+}
+
+fn info<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut i = A::info_null();
+    check_rc!(A::info_create(&mut i), "info_create");
+    check_rc!(A::info_set(i, "io_strategy", "collective"), "info_set");
+    check_rc!(A::info_set(i, "cb_nodes", "4"), "info_set 2");
+    let mut v = String::new();
+    let mut flag = false;
+    check_rc!(A::info_get(i, "io_strategy", &mut v, &mut flag), "info_get");
+    check!(flag && v == "collective", "info roundtrip {v:?}");
+    check_rc!(A::info_get(i, "missing", &mut v, &mut flag), "info_get missing");
+    check!(!flag, "missing key flag false");
+    check_rc!(A::info_free(&mut i), "info_free");
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Datatype tests: sizes, extents, derived constructors, and
+//! heterogeneous transfers.
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("dtype.builtin_sizes", builtin_sizes::<A>),
+        ("dtype.extents", extents::<A>),
+        ("dtype.contiguous", contiguous::<A>),
+        ("dtype.vector_column_exchange", vector_column_exchange::<A>),
+        ("dtype.struct_layout", struct_layout::<A>),
+        ("dtype.dup_and_free", dup_and_free::<A>),
+        ("dtype.get_count_undefined", get_count_undefined::<A>),
+    ]
+}
+
+fn builtin_sizes<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    // The §6.1 semantic: every ABI must report identical sizes, whatever
+    // its lookup mechanism (handle bits, descriptor deref, Huffman).
+    let want: &[(Dt, i32)] = &[
+        (Dt::Byte, 1),
+        (Dt::Char, 1),
+        (Dt::Short, 2),
+        (Dt::UInt16, 2),
+        (Dt::Int, 4),
+        (Dt::Int32, 4),
+        (Dt::Float, 4),
+        (Dt::Double, 8),
+        (Dt::Int64, 8),
+        (Dt::UInt64, 8),
+        (Dt::Aint, core::mem::size_of::<usize>() as i32),
+        (Dt::FloatInt, 8),
+        (Dt::TwoInt, 8),
+    ];
+    for &(d, s) in want {
+        let mut out = 0;
+        check_rc!(A::type_size(A::datatype(d), &mut out), "Type_size");
+        check!(out == s, "{d:?}: size {out}, want {s}");
+    }
+    Ok(())
+}
+
+fn extents<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut lb, mut extent) = (0isize, 0isize);
+    check_rc!(A::type_get_extent(A::datatype(Dt::Double), &mut lb, &mut extent), "extent");
+    check!(lb == 0 && extent == 8, "double: lb {lb}, extent {extent}");
+    Ok(())
+}
+
+fn contiguous<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut t = A::datatype(Dt::Byte);
+    check_rc!(A::type_contiguous(5, A::datatype(Dt::Int), &mut t), "contiguous");
+    check_rc!(A::type_commit(&mut t), "commit");
+    let mut size = 0;
+    check_rc!(A::type_size(t, &mut size), "size");
+    check!(size == 20, "5 ints = 20 bytes, got {size}");
+    let (mut lb, mut extent) = (0isize, 0isize);
+    check_rc!(A::type_get_extent(t, &mut lb, &mut extent), "extent");
+    check!(extent == 20, "extent 20, got {extent}");
+    check_rc!(A::type_free(&mut t), "free");
+    Ok(())
+}
+
+fn vector_column_exchange<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    if n < 2 {
+        return Ok(());
+    }
+    // Column of a 4x4 row-major matrix.
+    let mut col_t = A::datatype(Dt::Byte);
+    check_rc!(A::type_vector(4, 1, 4, A::datatype(Dt::Int), &mut col_t), "vector");
+    check_rc!(A::type_commit(&mut col_t), "commit");
+    let mut size = 0;
+    check_rc!(A::type_size(col_t, &mut size), "size");
+    check!(size == 16, "vector packs 4 ints");
+    if me == 0 {
+        let m: Vec<i32> = (0..16).collect();
+        check_rc!(A::send(slice_ptr(&m), 1, col_t, 1, 4, A::comm_world()), "send column");
+    } else if me == 1 {
+        let mut col = [0i32; 4];
+        let mut st = A::status_empty();
+        check_rc!(
+            A::recv(slice_ptr_mut(&mut col), 4, A::datatype(Dt::Int), 0, 4, A::comm_world(),
+                &mut st),
+            "recv"
+        );
+        check!(col == [0, 4, 8, 12], "column data, got {col:?}");
+        // And scatter a contiguous buffer back *into* a column.
+        let send = [100i32, 101, 102, 103];
+        check_rc!(A::send(slice_ptr(&send), 4, A::datatype(Dt::Int), 0, 5, A::comm_world()),
+            "send back");
+    }
+    if me == 0 {
+        let mut m = [0i32; 16];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut m), 1, col_t, 1, 5, A::comm_world(), &mut st),
+            "recv into column");
+        check!(m[0] == 100 && m[4] == 101 && m[8] == 102 && m[12] == 103,
+            "column scatter: {m:?}");
+        check!(m[1] == 0 && m[5] == 0, "holes untouched");
+    }
+    check_rc!(A::type_free(&mut col_t), "free");
+    Ok(())
+}
+
+fn struct_layout<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    #[repr(C)]
+    struct Particle {
+        pos: [f64; 2],
+        id: i32,
+        flag: u8,
+        // 3 bytes padding
+    }
+    let blocks = [
+        (2i32, 0isize, A::datatype(Dt::Double)),
+        (1i32, 16isize, A::datatype(Dt::Int)),
+        (1i32, 20isize, A::datatype(Dt::Byte)),
+    ];
+    let mut t = A::datatype(Dt::Byte);
+    check_rc!(A::type_create_struct(&blocks, &mut t), "struct");
+    check_rc!(A::type_commit(&mut t), "commit");
+    let mut size = 0;
+    check_rc!(A::type_size(t, &mut size), "size");
+    check!(size == 21, "packed struct size 21, got {size}");
+
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    if n >= 2 {
+        if me == 0 {
+            let p = Particle { pos: [1.5, -2.5], id: 77, flag: 9 };
+            check_rc!(A::send(ptr(&p), 1, t, 1, 6, A::comm_world()), "send struct");
+        } else if me == 1 {
+            let mut p = Particle { pos: [0.0, 0.0], id: 0, flag: 0 };
+            let mut st = A::status_empty();
+            check_rc!(A::recv(ptr_mut(&mut p), 1, t, 0, 6, A::comm_world(), &mut st), "recv");
+            check!(p.pos == [1.5, -2.5] && p.id == 77 && p.flag == 9, "struct fields");
+        }
+    }
+    check_rc!(A::type_free(&mut t), "free");
+    Ok(())
+}
+
+fn dup_and_free<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut d = A::datatype(Dt::Byte);
+    check_rc!(A::type_dup(A::datatype(Dt::Double), &mut d), "dup");
+    let mut size = 0;
+    check_rc!(A::type_size(d, &mut size), "size of dup");
+    check!(size == 8, "dup keeps size");
+    check_rc!(A::type_free(&mut d), "free dup");
+    // Freeing a predefined type must fail (with errors returned).
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_return()), "errh");
+    let mut builtin = A::datatype(Dt::Int);
+    let rc = A::type_free(&mut builtin);
+    check!(rc != 0, "freeing a builtin must fail");
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_fatal()), "errh restore");
+    check_rc!(A::barrier(A::comm_world()), "resync");
+    Ok(())
+}
+
+fn get_count_undefined<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    if n < 2 {
+        return Ok(());
+    }
+    let dt_b = A::datatype(Dt::Byte);
+    let dt_i = A::datatype(Dt::Int);
+    if me == 0 {
+        let v = [0u8; 6]; // 6 bytes: not a whole number of ints
+        check_rc!(A::send(slice_ptr(&v), 6, dt_b, 1, 7, A::comm_world()), "send");
+    } else if me == 1 {
+        let mut v = [0u8; 6];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 6, dt_b, 0, 7, A::comm_world(), &mut st), "recv");
+        check!(A::get_count(&st, dt_b) == 6, "byte count 6");
+        check!(A::get_count(&st, dt_i) == A::undefined(), "int count undefined");
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Environment & init-state tests.
+
+use super::util::*;
+use super::TestFn;
+use crate::api::MpiAbi;
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("env.initialized", initialized::<A>),
+        ("env.world_size_rank", world_size_rank::<A>),
+        ("env.versions", versions::<A>),
+        ("env.wtime_monotone", wtime_monotone::<A>),
+        ("env.processor_name", processor_name::<A>),
+        ("env.comm_self", comm_self::<A>),
+        ("env.error_strings", error_strings::<A>),
+    ]
+}
+
+fn initialized<A: MpiAbi>(_rank: usize) -> Result<(), String> {
+    check!(A::initialized(), "MPI must report initialized inside the job");
+    check!(!A::finalized(), "not finalized yet");
+    Ok(())
+}
+
+fn world_size_rank<A: MpiAbi>(rank: usize) -> Result<(), String> {
+    let (mut size, mut r) = (0, -1);
+    check_rc!(A::comm_size(A::comm_world(), &mut size), "Comm_size");
+    check_rc!(A::comm_rank(A::comm_world(), &mut r), "Comm_rank");
+    check!(size >= 1, "world size {size} >= 1");
+    check!(r as usize == rank, "rank mismatch: MPI says {r}, launcher says {rank}");
+    Ok(())
+}
+
+fn versions<A: MpiAbi>(_rank: usize) -> Result<(), String> {
+    let (major, minor) = A::get_version();
+    check!(major >= 4, "MPI version {major}.{minor} >= 4");
+    let lib = A::get_library_version();
+    check!(!lib.is_empty(), "library version string nonempty");
+    check!(
+        lib.len() <= crate::abi::constants::MPI_MAX_LIBRARY_VERSION_STRING,
+        "library version fits MPI_MAX_LIBRARY_VERSION_STRING"
+    );
+    Ok(())
+}
+
+fn wtime_monotone<A: MpiAbi>(_rank: usize) -> Result<(), String> {
+    let a = A::wtime();
+    let b = A::wtime();
+    check!(b >= a, "wtime must be monotone ({a} then {b})");
+    Ok(())
+}
+
+fn processor_name<A: MpiAbi>(_rank: usize) -> Result<(), String> {
+    let n = A::get_processor_name();
+    check!(!n.is_empty(), "processor name nonempty");
+    check!(n.len() < crate::abi::constants::MPI_MAX_PROCESSOR_NAME, "fits the limit");
+    Ok(())
+}
+
+fn comm_self<A: MpiAbi>(_rank: usize) -> Result<(), String> {
+    let (mut size, mut r) = (0, -1);
+    check_rc!(A::comm_size(A::comm_self(), &mut size), "Comm_size(self)");
+    check_rc!(A::comm_rank(A::comm_self(), &mut r), "Comm_rank(self)");
+    check!(size == 1 && r == 0, "COMM_SELF is a singleton (size {size}, rank {r})");
+    Ok(())
+}
+
+fn error_strings<A: MpiAbi>(_rank: usize) -> Result<(), String> {
+    let code = A::err_from_canonical(crate::abi::errors::MPI_ERR_TRUNCATE);
+    check!(code != 0, "error code for TRUNCATE is nonzero");
+    check!(A::err_class_of(code) != 0, "class recoverable");
+    let s = A::error_string(code);
+    check!(s.to_lowercase().contains("trunc"), "string mentions truncation: {s:?}");
+    Ok(())
+}

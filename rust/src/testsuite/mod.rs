@@ -1,0 +1,130 @@
+//! The ABI-agnostic MPI test suite (E4).
+//!
+//! §6.2 reports that the MPICH test suite originally *assumed the MPICH
+//! ABI* and could not validate other ABIs or translation layers; the
+//! fixed suite plus IMB/OMB is what Mukautuva passes. This module is
+//! that artifact for our system: every test is written against the
+//! portable [`MpiAbi`] surface only (no representation assumptions), so
+//! the same source runs against all five configurations:
+//! `mpich`, `ompi`, `muk(mpich)`, `muk(ompi)`, and the native `abi`.
+//!
+//! Tests are *collective*: every rank of the job runs [`run_all`] and
+//! each test body executes on all ranks (like an MPICH test binary under
+//! `mpiexec`). Results are combined with a logical-AND allreduce so every
+//! rank reports the same verdict.
+
+mod coll;
+mod comm_attr;
+mod dtype;
+mod env;
+mod pt2pt;
+
+use crate::api::MpiAbi;
+
+/// Outcome of one test on this rank.
+#[derive(Clone, Debug)]
+pub struct TestResult {
+    pub name: &'static str,
+    pub passed: bool,
+    pub message: String,
+}
+
+/// A suite test: runs on every rank; `Err` = failure message.
+/// Generic test fns monomorphized for an ABI coerce to this.
+pub type TestFn = fn(usize) -> Result<(), String>;
+
+/// The full registry, in execution order.
+pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    let mut v: Vec<(&'static str, TestFn)> = Vec::new();
+    v.extend(env::tests::<A>());
+    v.extend(pt2pt::tests::<A>());
+    v.extend(dtype::tests::<A>());
+    v.extend(coll::tests::<A>());
+    v.extend(comm_attr::tests::<A>());
+    v
+}
+
+/// Run the whole suite under ABI `A`. Call from every rank of a running
+/// job *after* `A::init()`. Returns per-test results (identical on all
+/// ranks: verdicts are AND-reduced).
+pub fn run_all<A: MpiAbi>(rank: usize) -> Vec<TestResult> {
+    let mut results = Vec::new();
+    for (name, f) in registry::<A>() {
+        let local = f(rank);
+        // Synchronize & combine verdicts: 1 = pass.
+        let mine: i32 = if local.is_ok() { 1 } else { 0 };
+        let mut all: i32 = 0;
+        let rc = A::allreduce(
+            &mine as *const i32 as *const u8,
+            &mut all as *mut i32 as *mut u8,
+            1,
+            A::datatype(crate::api::Dt::Int),
+            A::op(crate::api::OpName::Min),
+            A::comm_world(),
+        );
+        let passed = rc == 0 && all == 1;
+        results.push(TestResult {
+            name,
+            passed,
+            message: match local {
+                Ok(()) if passed => String::new(),
+                Ok(()) => "failed on another rank".to_string(),
+                Err(m) => m,
+            },
+        });
+    }
+    results
+}
+
+/// Render a suite report (rank 0 of the job usually prints this).
+pub fn report(abi_name: &str, results: &[TestResult]) -> String {
+    let passed = results.iter().filter(|r| r.passed).count();
+    let mut out = format!("== test suite [{abi_name}]: {passed}/{} passed ==\n", results.len());
+    for r in results {
+        if r.passed {
+            out.push_str(&format!("  ok   {}\n", r.name));
+        } else {
+            out.push_str(&format!("  FAIL {} — {}\n", r.name, r.message));
+        }
+    }
+    out
+}
+
+/// Helpers shared by the test modules.
+pub(crate) mod util {
+    /// Assert-style helper returning Err instead of panicking (a panic
+    /// would abort the whole job and mask which test failed).
+    macro_rules! check {
+        ($cond:expr, $($fmt:tt)*) => {
+            if !($cond) {
+                return Err(format!($($fmt)*));
+            }
+        };
+    }
+    macro_rules! check_rc {
+        ($rc:expr, $what:expr) => {{
+            let rc = $rc;
+            if rc != 0 {
+                return Err(format!("{} returned rc {}", $what, rc));
+            }
+        }};
+    }
+    pub(crate) use check;
+    pub(crate) use check_rc;
+
+    pub fn ptr<T>(v: &T) -> *const u8 {
+        v as *const T as *const u8
+    }
+
+    pub fn ptr_mut<T>(v: &mut T) -> *mut u8 {
+        v as *mut T as *mut u8
+    }
+
+    pub fn slice_ptr<T>(v: &[T]) -> *const u8 {
+        v.as_ptr() as *const u8
+    }
+
+    pub fn slice_ptr_mut<T>(v: &mut [T]) -> *mut u8 {
+        v.as_mut_ptr() as *mut u8
+    }
+}

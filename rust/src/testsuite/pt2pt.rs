@@ -1,0 +1,358 @@
+//! Point-to-point tests.
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("pt2pt.ring", ring::<A>),
+        ("pt2pt.wildcards", wildcards::<A>),
+        ("pt2pt.isend_waitall_window", isend_waitall_window::<A>),
+        ("pt2pt.ssend", ssend::<A>),
+        ("pt2pt.sendrecv_rotate", sendrecv_rotate::<A>),
+        ("pt2pt.probe_get_count", probe_get_count::<A>),
+        ("pt2pt.iprobe_polling", iprobe_polling::<A>),
+        ("pt2pt.truncation_error", truncation_error::<A>),
+        ("pt2pt.cancel_recv", cancel_recv::<A>),
+        ("pt2pt.large_message", large_message::<A>),
+        ("pt2pt.proc_null", proc_null::<A>),
+        ("pt2pt.tag_selectivity", tag_selectivity::<A>),
+        ("pt2pt.waitany_first", waitany_first::<A>),
+    ]
+}
+
+fn world_geometry<A: MpiAbi>() -> (i32, i32) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    (size, rank)
+}
+
+fn ring<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let next = (me + 1) % n;
+    let prev = (me + n - 1) % n;
+    let token = [me * 7 + 1];
+    let mut got = [0i32];
+    let mut st = A::status_empty();
+    if me == 0 {
+        check_rc!(A::send(slice_ptr(&token), 1, dt, next, 3, A::comm_world()), "send");
+        check_rc!(
+            A::recv(slice_ptr_mut(&mut got), 1, dt, prev, 3, A::comm_world(), &mut st),
+            "recv"
+        );
+    } else {
+        check_rc!(
+            A::recv(slice_ptr_mut(&mut got), 1, dt, prev, 3, A::comm_world(), &mut st),
+            "recv"
+        );
+        check_rc!(A::send(slice_ptr(&token), 1, dt, next, 3, A::comm_world()), "send");
+    }
+    check!(got[0] == prev * 7 + 1, "ring value from {prev}: got {}", got[0]);
+    check!(A::status_source(&st) == prev, "status source");
+    check!(A::status_tag(&st) == 3, "status tag");
+    Ok(())
+}
+
+fn wildcards<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        let mut seen = vec![false; n as usize];
+        for _ in 1..n {
+            let mut v = [0i32];
+            let mut st = A::status_empty();
+            check_rc!(
+                A::recv(slice_ptr_mut(&mut v), 1, dt, A::any_source(), A::any_tag(),
+                    A::comm_world(), &mut st),
+                "wildcard recv"
+            );
+            let src = A::status_source(&st);
+            check!(src >= 1 && src < n, "source in range: {src}");
+            check!(v[0] == src * 100, "payload matches source");
+            check!(A::status_tag(&st) == src, "tag came through");
+            check!(!seen[src as usize], "no duplicate source");
+            seen[src as usize] = true;
+        }
+    } else {
+        let v = [me * 100];
+        check_rc!(A::send(slice_ptr(&v), 1, dt, 0, me, A::comm_world()), "send");
+    }
+    Ok(())
+}
+
+fn isend_waitall_window<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    const WINDOW: usize = 32;
+    let dt = A::datatype(Dt::Int64);
+    if me == 0 {
+        let bufs: Vec<[i64; 1]> = (0..WINDOW).map(|i| [i as i64 * 3]).collect();
+        let mut reqs = vec![A::request_null(); WINDOW];
+        for i in 0..WINDOW {
+            check_rc!(
+                A::isend(slice_ptr(&bufs[i]), 1, dt, 1, i as i32, A::comm_world(), &mut reqs[i]),
+                "isend"
+            );
+        }
+        let mut sts = vec![A::status_empty(); WINDOW];
+        check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+        for r in &reqs {
+            check!(*r == A::request_null(), "requests reset to null");
+        }
+    } else if me == 1 {
+        let mut bufs: Vec<[i64; 1]> = vec![[0]; WINDOW];
+        let mut reqs = vec![A::request_null(); WINDOW];
+        for (i, b) in bufs.iter_mut().enumerate() {
+            check_rc!(
+                A::irecv(slice_ptr_mut(b), 1, dt, 0, i as i32, A::comm_world(), &mut reqs[i]),
+                "irecv"
+            );
+        }
+        let mut sts = vec![A::status_empty(); WINDOW];
+        check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+        for (i, b) in bufs.iter().enumerate() {
+            check!(b[0] == i as i64 * 3, "window payload {i}");
+            check!(A::status_tag(&sts[i]) == i as i32, "window status tag {i}");
+        }
+    }
+    Ok(())
+}
+
+fn ssend<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Double);
+    if me == 0 {
+        let v = [42.5f64];
+        check_rc!(A::ssend(slice_ptr(&v), 1, dt, 1, 9, A::comm_world()), "ssend");
+    } else if me == 1 {
+        let mut v = [0.0f64];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 1, dt, 0, 9, A::comm_world(), &mut st), "recv");
+        check!(v[0] == 42.5, "ssend payload");
+    }
+    Ok(())
+}
+
+fn sendrecv_rotate<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int);
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let send = [me];
+    let mut recv = [-1];
+    let mut st = A::status_empty();
+    check_rc!(
+        A::sendrecv(slice_ptr(&send), 1, dt, right, 5, slice_ptr_mut(&mut recv), 1, dt, left, 5,
+            A::comm_world(), &mut st),
+        "sendrecv"
+    );
+    check!(recv[0] == left, "rotated value");
+    Ok(())
+}
+
+fn probe_get_count<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Short);
+    if me == 0 {
+        let v = [1i16, 2, 3, 4, 5];
+        check_rc!(A::send(slice_ptr(&v), 5, dt, 1, 11, A::comm_world()), "send");
+    } else if me == 1 {
+        let mut st = A::status_empty();
+        check_rc!(A::probe(0, 11, A::comm_world(), &mut st), "probe");
+        let count = A::get_count(&st, dt);
+        check!(count == 5, "probed count = {count}, want 5");
+        let mut v = [0i16; 5];
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 5, dt, 0, 11, A::comm_world(), &mut st), "recv");
+        check!(v == [1, 2, 3, 4, 5], "payload");
+        check!(A::get_count(&st, dt) == 5, "recv status count");
+    }
+    Ok(())
+}
+
+fn iprobe_polling<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Byte);
+    if me == 0 {
+        let v = [0xABu8];
+        check_rc!(A::send(slice_ptr(&v), 1, dt, 1, 2, A::comm_world()), "send");
+    } else if me == 1 {
+        let mut flag = false;
+        let mut st = A::status_empty();
+        let mut spins = 0u64;
+        while !flag {
+            check_rc!(A::iprobe(0, 2, A::comm_world(), &mut flag, &mut st), "iprobe");
+            spins += 1;
+            if spins > 50_000_000 {
+                return Err("iprobe never saw the message".to_string());
+            }
+        }
+        let mut v = [0u8];
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 1, dt, 0, 2, A::comm_world(), &mut st), "recv");
+        check!(v[0] == 0xAB, "payload");
+    }
+    Ok(())
+}
+
+fn truncation_error<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    // Errors must be returned, not fatal, for this test.
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_return()), "set errh");
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        let v = [1i32, 2, 3, 4];
+        check_rc!(A::send(slice_ptr(&v), 4, dt, 1, 8, A::comm_world()), "send");
+    } else if me == 1 {
+        let mut v = [0i32; 2];
+        let mut st = A::status_empty();
+        let rc = A::recv(slice_ptr_mut(&mut v), 2, dt, 0, 8, A::comm_world(), &mut st);
+        check!(rc != 0, "truncated recv must fail");
+        check!(
+            A::err_class_of(rc) == crate::abi::errors::MPI_ERR_TRUNCATE,
+            "class is TRUNCATE (got {})",
+            A::err_class_of(rc)
+        );
+    }
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_fatal()), "restore errh");
+    // Resynchronize before the next test.
+    check_rc!(A::barrier(A::comm_world()), "barrier");
+    Ok(())
+}
+
+fn cancel_recv<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int);
+    let mut v = [0i32];
+    let mut req = A::request_null();
+    // Post a recv that can never match (tag nobody sends).
+    check_rc!(
+        A::irecv(slice_ptr_mut(&mut v), 1, dt, A::any_source(), 31000, A::comm_world(), &mut req),
+        "irecv"
+    );
+    check_rc!(A::cancel(&mut req), "cancel");
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait after cancel");
+    check!(A::status_cancelled(&st), "status must say cancelled");
+    Ok(())
+}
+
+fn large_message<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    const COUNT: usize = 64 * 1024; // 256 KiB of i32: heap payload path
+    let dt = A::datatype(Dt::Int32);
+    if me == 0 {
+        let v: Vec<i32> = (0..COUNT as i32).collect();
+        check_rc!(A::send(slice_ptr(&v), COUNT as i32, dt, 1, 1, A::comm_world()), "send");
+    } else if me == 1 {
+        let mut v = vec![0i32; COUNT];
+        let mut st = A::status_empty();
+        check_rc!(
+            A::recv(slice_ptr_mut(&mut v), COUNT as i32, dt, 0, 1, A::comm_world(), &mut st),
+            "recv"
+        );
+        check!(A::get_count(&st, dt) == COUNT as i32, "count");
+        for (i, &x) in v.iter().enumerate().step_by(4096) {
+            check!(x == i as i32, "content at {i}");
+        }
+        check!(v[COUNT - 1] == COUNT as i32 - 1, "last element");
+    }
+    Ok(())
+}
+
+fn proc_null<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int);
+    let v = [1i32];
+    // Send/recv to PROC_NULL complete immediately.
+    check_rc!(A::send(slice_ptr(&v), 1, dt, A::proc_null(), 0, A::comm_world()), "send to null");
+    let mut b = [9i32];
+    let mut st = A::status_empty();
+    check_rc!(
+        A::recv(slice_ptr_mut(&mut b), 1, dt, A::proc_null(), 0, A::comm_world(), &mut st),
+        "recv from null"
+    );
+    check!(b[0] == 9, "buffer untouched");
+    check!(A::status_source(&st) == A::proc_null(), "status source is PROC_NULL");
+    Ok(())
+}
+
+fn tag_selectivity<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        // Send tag 1 then tag 2; receiver takes tag 2 first.
+        let a = [111i32];
+        let b = [222i32];
+        check_rc!(A::send(slice_ptr(&a), 1, dt, 1, 1, A::comm_world()), "send 1");
+        check_rc!(A::send(slice_ptr(&b), 1, dt, 1, 2, A::comm_world()), "send 2");
+    } else if me == 1 {
+        let mut v = [0i32];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 1, dt, 0, 2, A::comm_world(), &mut st), "recv 2");
+        check!(v[0] == 222, "tag-2 message first");
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 1, dt, 0, 1, A::comm_world(), &mut st), "recv 1");
+        check!(v[0] == 111, "then tag-1");
+    }
+    Ok(())
+}
+
+fn waitany_first<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        let v = [5i32];
+        check_rc!(A::send(slice_ptr(&v), 1, dt, 1, 21, A::comm_world()), "send");
+    } else if me == 1 {
+        let mut a = [0i32];
+        let mut b = [0i32];
+        let mut reqs = vec![A::request_null(); 2];
+        // Request 0 can never complete; request 1 will.
+        check_rc!(
+            A::irecv(slice_ptr_mut(&mut a), 1, dt, 0, 30999, A::comm_world(), &mut reqs[0]),
+            "irecv never"
+        );
+        check_rc!(
+            A::irecv(slice_ptr_mut(&mut b), 1, dt, 0, 21, A::comm_world(), &mut reqs[1]),
+            "irecv real"
+        );
+        let mut idx = -1;
+        let mut st = A::status_empty();
+        check_rc!(A::waitany(&mut reqs, &mut idx, &mut st), "waitany");
+        check!(idx == 1, "completed index is 1, got {idx}");
+        check!(b[0] == 5, "payload");
+        // Clean up the never-matching request.
+        check_rc!(A::cancel(&mut reqs[0]), "cancel leftover");
+        let mut st2 = A::status_empty();
+        check_rc!(A::wait(&mut reqs[0], &mut st2), "wait leftover");
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! E4: the ABI-agnostic test suite, run against all five configurations
+//! (the paper's "MUK passes the MPICH test suite against both backends"
+//! plus the two native ABIs and the native standard-ABI build).
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+use mpi_abi::testsuite;
+
+fn run_suite<A: MpiAbi>(ranks: usize) {
+    let reports = run_job_ok(JobSpec::new(ranks), |rank| {
+        assert_eq!(A::init(), 0, "{} init", A::NAME);
+        let results = testsuite::run_all::<A>(rank);
+        let report = testsuite::report(A::NAME, &results);
+        let failed: Vec<_> = results.iter().filter(|r| !r.passed).collect();
+        assert_eq!(A::finalize(), 0, "{} finalize", A::NAME);
+        (report, failed.len())
+    });
+    let (report, failures) = &reports[0];
+    if *failures > 0 {
+        panic!("{report}");
+    }
+}
+
+#[test]
+fn suite_mpich_native() {
+    run_suite::<MpichAbi>(4);
+}
+
+#[test]
+fn suite_ompi_native() {
+    run_suite::<OmpiAbi>(4);
+}
+
+#[test]
+fn suite_muk_over_mpich() {
+    run_suite::<MukMpich>(4);
+}
+
+#[test]
+fn suite_muk_over_ompi() {
+    run_suite::<MukOmpi>(4);
+}
+
+#[test]
+fn suite_native_standard_abi() {
+    run_suite::<NativeAbi>(4);
+}
+
+#[test]
+fn suite_works_on_two_and_three_ranks() {
+    run_suite::<NativeAbi>(2);
+    run_suite::<MukMpich>(3);
+}

@@ -1,0 +1,669 @@
+//! Engine-level integration tests: collectives, comm management, and
+//! derived datatypes across multiple ranks, on both transports.
+
+use mpi_abi::abi::datatypes as adt;
+use mpi_abi::core::collectives as coll;
+use mpi_abi::core::datatype::builtin_id_of_abi;
+use mpi_abi::core::reserved::COMM_WORLD;
+use mpi_abi::core::{comm, datatype, engine, op};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+fn dt_i32() -> mpi_abi::core::DtId {
+    builtin_id_of_abi(adt::MPI_INT32_T).unwrap()
+}
+
+fn dt_f64() -> mpi_abi::core::DtId {
+    builtin_id_of_abi(adt::MPI_DOUBLE).unwrap()
+}
+
+fn op_sum() -> mpi_abi::core::OpId {
+    op::builtin_id_of_abi(mpi_abi::abi::ops::MPI_SUM).unwrap()
+}
+
+#[test]
+fn barrier_all_sizes() {
+    for n in [1, 2, 3, 4, 5, 8] {
+        run_job_ok(JobSpec::new(n), |_| {
+            engine::init().unwrap();
+            for _ in 0..3 {
+                coll::barrier(COMM_WORLD).unwrap();
+            }
+            engine::finalize().unwrap();
+        });
+    }
+}
+
+#[test]
+fn bcast_from_each_root() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        for root in 0..n as i32 {
+            let mut data = if rank as i32 == root {
+                [root * 10, root * 10 + 1, root * 10 + 2]
+            } else {
+                [0; 3]
+            };
+            coll::bcast(data.as_mut_ptr() as *mut u8, 3, dt_i32(), root, COMM_WORLD).unwrap();
+            assert_eq!(data, [root * 10, root * 10 + 1, root * 10 + 2]);
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn allreduce_sum_f64() {
+    let n = 5;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let send = [rank as f64, 1.0, -(rank as f64)];
+        let mut recv = [0.0f64; 3];
+        coll::allreduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            3,
+            dt_f64(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        let total: f64 = (0..n).map(|r| r as f64).sum();
+        assert_eq!(recv, [total, n as f64, -total]);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn reduce_to_nonzero_root_minloc() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        #[repr(C)]
+        #[derive(Clone, Copy, Debug, PartialEq)]
+        struct P(f32, i32);
+        let send = [P(10.0 - rank as f32, rank as i32)];
+        let mut recv = [P(0.0, -1)];
+        let dt = builtin_id_of_abi(adt::MPI_FLOAT_INT).unwrap();
+        let op = op::builtin_id_of_abi(mpi_abi::abi::ops::MPI_MINLOC).unwrap();
+        coll::reduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt,
+            op,
+            2,
+            COMM_WORLD,
+        )
+        .unwrap();
+        if rank == 2 {
+            // Smallest value is at the largest rank.
+            assert_eq!(recv[0], P(10.0 - (n - 1) as f32, (n - 1) as i32));
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn gather_scatter_roundtrip() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        // Gather 2 ints per rank at root 1.
+        let send = [rank as i32 * 2, rank as i32 * 2 + 1];
+        let mut gathered = vec![0i32; 2 * n];
+        coll::gather(
+            send.as_ptr() as *const u8,
+            2,
+            dt_i32(),
+            gathered.as_mut_ptr() as *mut u8,
+            2,
+            dt_i32(),
+            1,
+            COMM_WORLD,
+        )
+        .unwrap();
+        if rank == 1 {
+            assert_eq!(gathered, vec![0, 1, 2, 3, 4, 5]);
+        }
+        // Scatter it back from root 1.
+        let mut got = [0i32; 2];
+        coll::scatter(
+            gathered.as_ptr() as *const u8,
+            2,
+            dt_i32(),
+            got.as_mut_ptr() as *mut u8,
+            2,
+            dt_i32(),
+            1,
+            COMM_WORLD,
+        )
+        .unwrap();
+        if rank == 1 {
+            assert_eq!(got, [2, 3]);
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn allgather_collects_everything() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let send = [rank as i32 + 100];
+        let mut recv = vec![0i32; n];
+        coll::allgather(
+            send.as_ptr() as *const u8,
+            1,
+            dt_i32(),
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        assert_eq!(recv, vec![100, 101, 102, 103]);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn alltoall_transposes() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        // Rank r sends value r*10+d to rank d.
+        let send: Vec<i32> = (0..n).map(|d| (rank * 10 + d) as i32).collect();
+        let mut recv = vec![0i32; n];
+        coll::alltoall(
+            send.as_ptr() as *const u8,
+            1,
+            dt_i32(),
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        let expect: Vec<i32> = (0..n).map(|s| (s * 10 + rank) as i32).collect();
+        assert_eq!(recv, expect);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn scan_prefix_sums() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let send = [rank as i32 + 1]; // 1, 2, 3, 4
+        let mut recv = [0i32];
+        coll::scan(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        let expect: i32 = (1..=rank as i32 + 1).sum();
+        assert_eq!(recv[0], expect);
+        // Exscan.
+        let mut ex = [-1i32];
+        coll::exscan(
+            send.as_ptr() as *const u8,
+            ex.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        if rank == 0 {
+            assert_eq!(ex[0], -1, "rank 0 exscan buffer untouched");
+        } else {
+            assert_eq!(ex[0], (1..=rank as i32).sum::<i32>());
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn comm_split_even_odd() {
+    let n = 5;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let color = (rank % 2) as i32;
+        // Reverse key order inside each color group.
+        let key = -(rank as i32);
+        let sub = engine::comm_split(COMM_WORLD, color, key).unwrap().unwrap();
+        let sub_size = comm::comm_size(sub).unwrap() as usize;
+        let sub_rank = comm::comm_rank(sub).unwrap() as usize;
+        let expected_size = if color == 0 { n.div_ceil(2) } else { n / 2 };
+        assert_eq!(sub_size, expected_size);
+        // Keys are negative ranks → highest world rank is sub-rank 0.
+        let group: Vec<usize> = (0..n).filter(|r| r % 2 == rank % 2).collect();
+        let pos = group.iter().rev().position(|&r| r == rank).unwrap();
+        assert_eq!(sub_rank, pos);
+        // The subcomm must work for collectives.
+        let send = [1i32];
+        let mut recv = [0i32];
+        coll::allreduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            op_sum(),
+            sub,
+        )
+        .unwrap();
+        assert_eq!(recv[0], sub_size as i32);
+        comm::comm_free(sub).unwrap();
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn comm_split_undefined_gets_none() {
+    run_job_ok(JobSpec::new(3), |rank| {
+        engine::init().unwrap();
+        let color =
+            if rank == 1 { mpi_abi::abi::constants::MPI_UNDEFINED } else { 0 };
+        let sub = engine::comm_split(COMM_WORLD, color, 0).unwrap();
+        assert_eq!(sub.is_some(), rank != 1);
+        if let Some(c) = sub {
+            assert_eq!(comm::comm_size(c).unwrap(), 2);
+            comm::comm_free(c).unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn comm_dup_isolates_traffic() {
+    run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        let dup = engine::comm_dup(COMM_WORLD).unwrap();
+        let dt = dt_i32();
+        // Same (src, tag) on both comms; contexts must keep them separate.
+        if rank == 0 {
+            let a = [111i32];
+            let b = [222i32];
+            engine::send(a.as_ptr() as *const u8, 1, dt, 1, 7, COMM_WORLD,
+                engine::SendMode::Standard).unwrap();
+            engine::send(b.as_ptr() as *const u8, 1, dt, 1, 7, dup,
+                engine::SendMode::Standard).unwrap();
+        } else {
+            // Receive in the *opposite* order: context matching must pick
+            // the right message regardless.
+            let mut b = [0i32];
+            engine::recv(b.as_mut_ptr() as *mut u8, 1, dt, 0, 7, dup).unwrap();
+            assert_eq!(b[0], 222);
+            let mut a = [0i32];
+            engine::recv(a.as_mut_ptr() as *mut u8, 1, dt, 0, 7, COMM_WORLD).unwrap();
+            assert_eq!(a[0], 111);
+        }
+        comm::comm_free(dup).unwrap();
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn derived_vector_type_transfers_strided_data() {
+    run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        // Column of a 4x4 row-major i32 matrix: vector(count=4, blocklen=1,
+        // stride=4).
+        let vec_t = datatype::type_vector(4, 1, 4, dt_i32()).unwrap();
+        datatype::type_commit(vec_t).unwrap();
+        if rank == 0 {
+            let m: Vec<i32> = (0..16).collect();
+            engine::send(m.as_ptr() as *const u8, 1, vec_t, 1, 0, COMM_WORLD,
+                engine::SendMode::Standard).unwrap();
+        } else {
+            // Receive as 4 contiguous ints.
+            let mut col = [0i32; 4];
+            let st = engine::recv(col.as_mut_ptr() as *mut u8, 4, dt_i32(), 0, 0, COMM_WORLD)
+                .unwrap();
+            assert_eq!(st.count_bytes, 16);
+            assert_eq!(col, [0, 4, 8, 12]);
+        }
+        datatype::type_free(vec_t).unwrap();
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn ialltoallw_compound_request() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        let send: Vec<i32> = (0..n).map(|d| (rank * 100 + d) as i32).collect();
+        let mut recv = vec![0i32; n];
+        let args = coll::AlltoallwArgs {
+            sendbuf: send.as_ptr() as *const u8,
+            sendcounts: vec![1; n],
+            sdispls: (0..n).map(|d| (d * 4) as isize).collect(),
+            sendtypes: vec![dt; n],
+            recvbuf: recv.as_mut_ptr() as *mut u8,
+            recvcounts: vec![1; n],
+            rdispls: (0..n).map(|d| (d * 4) as isize).collect(),
+            recvtypes: vec![dt; n],
+        };
+        let req = coll::ialltoallw(&args, COMM_WORLD).unwrap();
+        // Poll with test() until completion (test frees the request when
+        // it completes, so stop immediately then).
+        loop {
+            if engine::test(req).unwrap().is_some() {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        let expect: Vec<i32> = (0..n).map(|s| (s * 100 + rank) as i32).collect();
+        assert_eq!(recv, expect);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn sendrecv_ring_rotation() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        let right = ((rank + 1) % n) as i32;
+        let left = ((rank + n - 1) % n) as i32;
+        let send = [rank as i32];
+        let mut recv = [0i32];
+        let st = engine::sendrecv(
+            send.as_ptr() as *const u8,
+            1,
+            dt,
+            right,
+            5,
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt,
+            left,
+            5,
+            COMM_WORLD,
+        )
+        .unwrap();
+        assert_eq!(recv[0], left);
+        assert_eq!(st.source, left);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn probe_then_recv() {
+    run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        if rank == 0 {
+            let data = [9i32, 8, 7];
+            engine::send(data.as_ptr() as *const u8, 3, dt, 1, 13, COMM_WORLD,
+                engine::SendMode::Standard).unwrap();
+        } else {
+            let st = engine::probe(mpi_abi::abi::constants::MPI_ANY_SOURCE,
+                mpi_abi::abi::constants::MPI_ANY_TAG, COMM_WORLD).unwrap();
+            assert_eq!(st.tag, 13);
+            assert_eq!(st.count_bytes, 12);
+            let count = engine::get_count(&st, dt).unwrap();
+            let mut buf = vec![0i32; count as usize];
+            engine::recv(buf.as_mut_ptr() as *mut u8, count as usize, dt, st.source, st.tag,
+                COMM_WORLD).unwrap();
+            assert_eq!(buf, vec![9, 8, 7]);
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn ssend_completes_only_after_match() {
+    run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        if rank == 0 {
+            let data = [5i32];
+            let req = engine::isend(data.as_ptr() as *const u8, 1, dt, 1, 3, COMM_WORLD,
+                engine::SendMode::Sync).unwrap();
+            // Not matched yet (receiver delays) — test may run a few times.
+            let st = engine::wait(req).unwrap();
+            assert!(!st.cancelled);
+        } else {
+            // Delay, then receive.
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let mut buf = [0i32];
+            engine::recv(buf.as_mut_ptr() as *mut u8, 1, dt, 0, 3, COMM_WORLD).unwrap();
+            assert_eq!(buf[0], 5);
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn truncation_reports_err_truncate() {
+    run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        if rank == 0 {
+            let data = [1i32, 2, 3, 4];
+            engine::send(data.as_ptr() as *const u8, 4, dt, 1, 0, COMM_WORLD,
+                engine::SendMode::Standard).unwrap();
+        } else {
+            let mut buf = [0i32; 2]; // too small
+            let e = engine::recv(buf.as_mut_ptr() as *mut u8, 2, dt, 0, 0, COMM_WORLD)
+                .unwrap_err();
+            assert_eq!(e.class, mpi_abi::abi::errors::MPI_ERR_TRUNCATE);
+            assert_eq!(buf, [1, 2], "partial data delivered");
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn wildcard_any_source_ordering() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        if rank == 0 {
+            let mut seen = Vec::new();
+            for _ in 1..n {
+                let mut buf = [0i32];
+                let st = engine::recv(
+                    buf.as_mut_ptr() as *mut u8,
+                    1,
+                    dt,
+                    mpi_abi::abi::constants::MPI_ANY_SOURCE,
+                    1,
+                    COMM_WORLD,
+                )
+                .unwrap();
+                assert_eq!(buf[0], st.source * 1000);
+                seen.push(st.source);
+            }
+            seen.sort();
+            assert_eq!(seen, vec![1, 2, 3]);
+        } else {
+            let data = [rank as i32 * 1000];
+            engine::send(data.as_ptr() as *const u8, 1, dt, 0, 1, COMM_WORLD,
+                engine::SendMode::Standard).unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn gatherv_scatterv_variable_blocks() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        // Rank r contributes r+1 ints.
+        let send: Vec<i32> = (0..rank as i32 + 1).map(|i| rank as i32 * 10 + i).collect();
+        let counts = [1usize, 2, 3];
+        let displs = [0isize, 1, 3];
+        let mut recv = vec![-1i32; 6];
+        coll::gatherv(
+            send.as_ptr() as *const u8,
+            send.len(),
+            dt_i32(),
+            recv.as_mut_ptr() as *mut u8,
+            &counts,
+            &displs,
+            dt_i32(),
+            0,
+            COMM_WORLD,
+        )
+        .unwrap();
+        if rank == 0 {
+            assert_eq!(recv, vec![0, 10, 11, 20, 21, 22]);
+            // Scatter the variable blocks back.
+        }
+        let mut back = vec![0i32; rank + 1];
+        coll::scatterv(
+            recv.as_ptr() as *const u8,
+            &counts,
+            &displs,
+            dt_i32(),
+            back.as_mut_ptr() as *mut u8,
+            rank + 1,
+            dt_i32(),
+            0,
+            COMM_WORLD,
+        )
+        .unwrap();
+        let expect: Vec<i32> = (0..rank as i32 + 1).map(|i| rank as i32 * 10 + i).collect();
+        assert_eq!(back, expect);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn alltoallv_variable_counts() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        // Rank r sends (d+1) copies of r*100+d to rank d.
+        let scounts: Vec<usize> = (0..n).map(|d| d + 1).collect();
+        let sdispls: Vec<isize> = [0isize, 1, 3].to_vec();
+        let mut send = Vec::new();
+        for d in 0..n {
+            for _ in 0..d + 1 {
+                send.push((rank * 100 + d) as i32);
+            }
+        }
+        // Rank r receives (r+1) ints from each sender.
+        let rcounts: Vec<usize> = vec![rank + 1; n];
+        let rdispls: Vec<isize> = (0..n).map(|s| (s * (rank + 1)) as isize).collect();
+        let mut recv = vec![-1i32; (rank + 1) * n];
+        coll::alltoallv(
+            send.as_ptr() as *const u8,
+            &scounts,
+            &sdispls,
+            dt_i32(),
+            recv.as_mut_ptr() as *mut u8,
+            &rcounts,
+            &rdispls,
+            dt_i32(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        for s in 0..n {
+            for j in 0..rank + 1 {
+                assert_eq!(recv[s * (rank + 1) + j], (s * 100 + rank) as i32);
+            }
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn ibarrier_synchronizes() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        // Stagger arrival, complete via test-loop.
+        std::thread::sleep(std::time::Duration::from_micros(100 * rank as u64));
+        let req = coll::ibarrier(COMM_WORLD).unwrap();
+        loop {
+            if engine::test(req).unwrap().is_some() {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn reduce_local_applies_op_without_communication() {
+    run_job_ok(JobSpec::new(1), |_| {
+        engine::init().unwrap();
+        let a = [1i32, 5, 3];
+        let mut b = [10i32, 2, 3];
+        let abytes =
+            unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, 12) };
+        let bbytes =
+            unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr() as *mut u8, 12) };
+        op::apply(op::builtin_id_of_abi(mpi_abi::abi::ops::MPI_MAX).unwrap(), abytes, bbytes, 3,
+            dt_i32())
+        .unwrap();
+        assert_eq!(b, [10, 5, 3]);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn group_algebra_via_engine() {
+    run_job_ok(JobSpec::new(4), |_| {
+        engine::init().unwrap();
+        use mpi_abi::core::group;
+        let world = comm::comm_group(COMM_WORLD).unwrap();
+        let evens = group::group_incl(world, &[0, 2]).unwrap();
+        let odds = group::group_excl(world, &[0, 2]).unwrap();
+        assert_eq!(group::group_size(evens).unwrap(), 2);
+        assert_eq!(group::group_size(odds).unwrap(), 2);
+        let all = group::group_union(evens, odds).unwrap();
+        assert_eq!(group::group_size(all).unwrap(), 4);
+        let none = group::group_intersection(evens, odds).unwrap();
+        assert_eq!(group::group_size(none).unwrap(), 0);
+        let diff = group::group_difference(all, odds).unwrap();
+        assert_eq!(
+            group::group_compare(diff, evens).unwrap(),
+            mpi_abi::abi::constants::MPI_IDENT
+        );
+        for g in [world, evens, odds, all, none, diff] {
+            group::group_free(g).unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn comm_create_from_subgroup() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        use mpi_abi::core::group;
+        let world = comm::comm_group(COMM_WORLD).unwrap();
+        let first_two = group::group_incl(world, &[0, 1]).unwrap();
+        let sub = engine::comm_create(COMM_WORLD, first_two).unwrap();
+        if rank < 2 {
+            let c = sub.expect("members get a comm");
+            assert_eq!(comm::comm_size(c).unwrap(), 2);
+            assert_eq!(comm::comm_rank(c).unwrap(), rank as i32);
+            // And it works.
+            coll::barrier(c).unwrap();
+            comm::comm_free(c).unwrap();
+        } else {
+            assert!(sub.is_none(), "non-members get COMM_NULL");
+        }
+        group::group_free(world).unwrap();
+        group::group_free(first_two).unwrap();
+        engine::finalize().unwrap();
+    });
+}

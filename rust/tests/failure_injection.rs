@@ -1,0 +1,301 @@
+//! Failure injection and edge cases across the ABI matrix: error classes
+//! surface with the right values in every ABI's numbering, resource
+//! exhaustion fails cleanly, and misuse is caught rather than UB.
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::launcher::{run_job, run_job_ok, JobSpec, RankOutcome};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+
+fn with_errors_returned<A: MpiAbi, R>(f: impl FnOnce() -> R) -> R {
+    A::comm_set_errhandler(A::comm_world(), A::errhandler_return());
+    let r = f();
+    A::comm_set_errhandler(A::comm_world(), A::errhandler_fatal());
+    r
+}
+
+fn invalid_rank_class<A: MpiAbi>() {
+    run_job_ok(JobSpec::new(1), |_| {
+        A::init();
+        with_errors_returned::<A, _>(|| {
+            let v = [0i32];
+            let rc = A::send(v.as_ptr() as *const u8, 1, A::datatype(Dt::Int), 77, 0,
+                A::comm_world());
+            assert_ne!(rc, 0);
+            assert_eq!(A::err_class_of(rc), mpi_abi::abi::errors::MPI_ERR_RANK, "{}", A::NAME);
+            // Error strings resolve in this ABI's code space.
+            assert!(!A::error_string(rc).is_empty());
+        });
+        A::finalize();
+    });
+}
+
+#[test]
+fn invalid_rank_class_all_abis() {
+    invalid_rank_class::<MpichAbi>();
+    invalid_rank_class::<OmpiAbi>();
+    invalid_rank_class::<MukMpich>();
+    invalid_rank_class::<MukOmpi>();
+    invalid_rank_class::<NativeAbi>();
+}
+
+fn invalid_tag_class<A: MpiAbi>() {
+    run_job_ok(JobSpec::new(1), |_| {
+        A::init();
+        with_errors_returned::<A, _>(|| {
+            let v = [0i32];
+            let rc = A::send(v.as_ptr() as *const u8, 1, A::datatype(Dt::Int), 0, -5,
+                A::comm_world());
+            assert_eq!(A::err_class_of(rc), mpi_abi::abi::errors::MPI_ERR_TAG, "{}", A::NAME);
+        });
+        A::finalize();
+    });
+}
+
+#[test]
+fn invalid_tag_class_all_abis() {
+    invalid_tag_class::<MpichAbi>();
+    invalid_tag_class::<MukOmpi>();
+    invalid_tag_class::<NativeAbi>();
+}
+
+#[test]
+fn freeing_predefined_objects_fails_cleanly() {
+    fn body<A: MpiAbi>() {
+        run_job_ok(JobSpec::new(1), |_| {
+            A::init();
+            with_errors_returned::<A, _>(|| {
+                let mut dt = A::datatype(Dt::Int);
+                assert_ne!(A::type_free(&mut dt), 0, "{}: free builtin dtype", A::NAME);
+                let mut op = A::op(OpName::Sum);
+                assert_ne!(A::op_free(&mut op), 0, "{}: free builtin op", A::NAME);
+                let mut w = A::comm_world();
+                assert_ne!(A::comm_free(&mut w), 0, "{}: free COMM_WORLD", A::NAME);
+            });
+            A::finalize();
+        });
+    }
+    body::<MpichAbi>();
+    body::<OmpiAbi>();
+    body::<MukMpich>();
+    body::<NativeAbi>();
+}
+
+#[test]
+fn wait_on_request_null_is_noop() {
+    fn body<A: MpiAbi>() {
+        run_job_ok(JobSpec::new(1), |_| {
+            A::init();
+            let mut r = A::request_null();
+            let mut st = A::status_empty();
+            assert_eq!(A::wait(&mut r, &mut st), 0);
+            assert_eq!(A::status_source(&st), A::proc_null());
+            let mut flag = false;
+            assert_eq!(A::test(&mut r, &mut flag, &mut st), 0);
+            assert!(flag, "null request tests complete");
+            A::finalize();
+        });
+    }
+    body::<MpichAbi>();
+    body::<MukMpich>();
+    body::<NativeAbi>();
+}
+
+#[test]
+fn muk_trampoline_pool_exhaustion_returns_no_mem() {
+    run_job_ok(JobSpec::new(1), |_| {
+        type A = MukMpich;
+        <A as MpiAbi>::init();
+        fn f(_: *const u8, _: *mut u8, _: i32, _: mpi_abi::abi::handles::AbiDatatype) {}
+        let mut ops = Vec::new();
+        let mut rc = 0;
+        // The static trampoline pool has 32 slots; the 33rd create must
+        // fail with a resource error, like a real fixed pool.
+        for _ in 0..40 {
+            let mut op = <A as MpiAbi>::op(OpName::Sum);
+            rc = <A as MpiAbi>::op_create(f, true, &mut op);
+            if rc != 0 {
+                break;
+            }
+            ops.push(op);
+        }
+        assert_eq!(ops.len(), mpi_abi::muk::callbacks::POOL_SIZE);
+        assert_eq!(
+            <A as MpiAbi>::err_class_of(rc),
+            mpi_abi::abi::errors::MPI_ERR_NO_MEM
+        );
+        // Freeing releases slots for reuse.
+        for mut op in ops {
+            assert_eq!(<A as MpiAbi>::op_free(&mut op), 0);
+        }
+        let mut op = <A as MpiAbi>::op(OpName::Sum);
+        assert_eq!(<A as MpiAbi>::op_create(f, true, &mut op), 0, "slots recycled");
+        <A as MpiAbi>::op_free(&mut op);
+        <A as MpiAbi>::finalize();
+    });
+}
+
+#[test]
+fn double_init_is_an_error() {
+    run_job(JobSpec::new(1), |_| {
+        type A = NativeAbi;
+        assert_eq!(<A as MpiAbi>::init(), 0);
+        // Second init must fail (errors pre-attached handlers are fatal;
+        // init errors return directly since no comm exists yet).
+        let rc = <A as MpiAbi>::init();
+        assert_ne!(rc, 0);
+        assert_eq!(<A as MpiAbi>::finalize(), 0);
+        // Finalize twice is an error too.
+        assert_ne!(<A as MpiAbi>::finalize(), 0);
+    });
+}
+
+#[test]
+fn fatal_errhandler_aborts_job() {
+    let out = run_job(JobSpec::new(2), |rank| {
+        type A = MpichAbi;
+        <A as MpiAbi>::init();
+        if rank == 0 {
+            // Default handler is ERRORS_ARE_FATAL: this must abort the job.
+            let v = [0i32];
+            <A as MpiAbi>::send(
+                v.as_ptr() as *const u8,
+                1,
+                <A as MpiAbi>::datatype(Dt::Int),
+                1234,
+                0,
+                <A as MpiAbi>::comm_world(),
+            );
+            unreachable!("fatal errhandler must not return");
+        } else {
+            // Blocked peer must be taken down by the abort.
+            let mut v = [0i32];
+            let mut st = <A as MpiAbi>::status_empty();
+            <A as MpiAbi>::recv(
+                v.as_mut_ptr() as *mut u8,
+                1,
+                <A as MpiAbi>::datatype(Dt::Int),
+                0,
+                9,
+                <A as MpiAbi>::comm_world(),
+                &mut st,
+            );
+        }
+    });
+    assert!(matches!(out[0], RankOutcome::Aborted(_)));
+    assert!(matches!(out[1], RankOutcome::Aborted(_)));
+}
+
+#[test]
+fn zero_count_messages() {
+    fn body<A: MpiAbi>() {
+        run_job_ok(JobSpec::new(2), |rank| {
+            A::init();
+            let dt = A::datatype(Dt::Int);
+            if rank == 0 {
+                let rc = A::send(std::ptr::NonNull::<u8>::dangling().as_ptr(), 0, dt, 1, 0,
+                    A::comm_world());
+                assert_eq!(rc, 0, "{}: zero-count send", A::NAME);
+            } else {
+                let mut st = A::status_empty();
+                let rc = A::recv(std::ptr::NonNull::<u8>::dangling().as_ptr(), 0, dt, 0, 0,
+                    A::comm_world(), &mut st);
+                assert_eq!(rc, 0, "{}: zero-count recv", A::NAME);
+                assert_eq!(A::get_count(&st, dt), 0);
+            }
+            A::finalize();
+        });
+    }
+    body::<MpichAbi>();
+    body::<MukOmpi>();
+    body::<NativeAbi>();
+}
+
+#[test]
+fn self_messaging_on_comm_self() {
+    fn body<A: MpiAbi>() {
+        run_job_ok(JobSpec::new(1), |_| {
+            A::init();
+            let dt = A::datatype(Dt::Int);
+            // isend to self on COMM_SELF, then recv.
+            let v = [31i32];
+            let mut req = A::request_null();
+            assert_eq!(
+                A::isend(v.as_ptr() as *const u8, 1, dt, 0, 5, A::comm_self(), &mut req),
+                0
+            );
+            let mut got = [0i32];
+            let mut st = A::status_empty();
+            assert_eq!(
+                A::recv(got.as_mut_ptr() as *mut u8, 1, dt, 0, 5, A::comm_self(), &mut st),
+                0
+            );
+            assert_eq!(got[0], 31);
+            assert_eq!(A::wait(&mut req, &mut st), 0);
+            A::finalize();
+        });
+    }
+    body::<MpichAbi>();
+    body::<OmpiAbi>();
+    body::<MukMpich>();
+    body::<NativeAbi>();
+}
+
+#[test]
+fn large_alltoallw_with_derived_types_via_muk() {
+    // Stress the §6.2 conversion path: alltoallw where every peer uses a
+    // different derived datatype, through the translation layer.
+    run_job_ok(JobSpec::new(3), |_| {
+        type A = MukMpich;
+        <A as MpiAbi>::init();
+        let n = 3;
+        let base = <A as MpiAbi>::datatype(Dt::Int);
+        // Build per-peer types: contiguous(k+1) of int.
+        let mut types = Vec::new();
+        for k in 0..n {
+            let mut t = base;
+            assert_eq!(<A as MpiAbi>::type_contiguous(k as i32 + 1, base, &mut t), 0);
+            assert_eq!(<A as MpiAbi>::type_commit(&mut t), 0);
+            types.push(t);
+        }
+        // Every rank sends (k+1) ints to peer k; buffers sized to match.
+        let send: Vec<i32> = (0..(1 + 2 + 3)).map(|i| i as i32).collect();
+        let sdispls = [0i32, 4, 12]; // bytes: after 1 int, after 3 ints
+        let counts = [1i32, 1, 1];
+        let mut recv = vec![0i32; 3 * 3];
+        let mut my_rank = 0;
+        <A as MpiAbi>::comm_rank(<A as MpiAbi>::comm_world(), &mut my_rank);
+        // Receive (my_rank+1) ints from each peer.
+        let rdispls: Vec<i32> = (0..n as i32).map(|k| k * 4 * (my_rank + 1)).collect();
+        let rtypes = vec![types[my_rank as usize]; n];
+        let rc = <A as MpiAbi>::alltoallw(
+            send.as_ptr() as *const u8,
+            &counts,
+            &sdispls,
+            &types,
+            recv.as_mut_ptr() as *mut u8,
+            &counts,
+            &rdispls,
+            &rtypes,
+            <A as MpiAbi>::comm_world(),
+        );
+        assert_eq!(rc, 0);
+        // Peer k sent us the slice starting at sdispls[my_rank] of their
+        // identical send buffer: (my_rank+1) ints starting at offset.
+        let start = [0, 1, 3][my_rank as usize];
+        for k in 0..n {
+            for j in 0..(my_rank as usize + 1) {
+                assert_eq!(
+                    recv[k * (my_rank as usize + 1) + j],
+                    (start + j) as i32,
+                    "from peer {k} element {j}"
+                );
+            }
+        }
+        for mut t in types {
+            <A as MpiAbi>::type_free(&mut t);
+        }
+        <A as MpiAbi>::finalize();
+    });
+}

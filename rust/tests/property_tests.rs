@@ -1,0 +1,357 @@
+//! Property-based tests (hand-rolled xorshift generator; proptest is not
+//! in the offline crate set). Each property runs a few hundred random
+//! cases with a fixed seed for reproducibility.
+
+use mpi_abi::abi;
+use mpi_abi::core::request::StatusCore;
+use mpi_abi::impls::mpich::MpichRepr;
+use mpi_abi::impls::ompi::OmpiRepr;
+use mpi_abi::impls::repr::Repr;
+use mpi_abi::native_abi::NativeRepr;
+
+/// xorshift64* PRNG — deterministic, decent distribution.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo)
+    }
+
+    fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + (self.next() % ((hi - lo) as u64)) as i32
+    }
+
+    fn bool(&mut self) -> bool {
+        self.next() & 1 == 1
+    }
+}
+
+const CASES: usize = 500;
+
+// --- Handle representation roundtrips ---------------------------------------
+
+#[test]
+fn prop_mpich_handle_roundtrips() {
+    let mut rng = Rng::new(42);
+    for _ in 0..CASES {
+        let id = mpi_abi::core::CommId(rng.range(2, 1 << 20) as u32);
+        assert_eq!(MpichRepr::comm_id(MpichRepr::comm_h(id)).unwrap(), id);
+        let rid = mpi_abi::core::ReqId(rng.range(0, 1 << 20) as u32);
+        assert_eq!(MpichRepr::req_id(MpichRepr::req_h(rid)).unwrap(), rid);
+        // id 0 is MPI_DATATYPE_NULL: its handle is the null constant,
+        // which correctly refuses conversion — start at 1.
+        let did = mpi_abi::core::DtId(rng.range(1, mpi_abi::core::reserved::NUM_BUILTIN_DTYPES as u64) as u32);
+        assert_eq!(MpichRepr::dt_id(MpichRepr::dt_h(did)).unwrap(), did);
+        // Derived datatype ids too.
+        let did = mpi_abi::core::DtId(rng.range(64, 1 << 20) as u32);
+        assert_eq!(MpichRepr::dt_id(MpichRepr::dt_h(did)).unwrap(), did);
+    }
+}
+
+#[test]
+fn prop_native_abi_handle_roundtrips_avoid_zero_page() {
+    let mut rng = Rng::new(43);
+    for _ in 0..CASES {
+        let id = mpi_abi::core::CommId(rng.range(2, 1 << 24) as u32);
+        let h = NativeRepr::comm_h(id);
+        assert!(h.0 > abi::huffman::HUFFMAN_MAX, "user handle in zero page: {:#x}", h.0);
+        assert_eq!(NativeRepr::comm_id(h).unwrap(), id);
+        let rid = mpi_abi::core::ReqId(rng.range(0, 1 << 24) as u32);
+        let rh = NativeRepr::req_h(rid);
+        assert_eq!(NativeRepr::req_id(rh).unwrap(), rid);
+        // Cross-kind confusion must be rejected.
+        assert!(NativeRepr::comm_id(abi::handles::AbiComm(rh.0)).is_err());
+    }
+}
+
+#[test]
+fn prop_muk_word_union_roundtrips() {
+    use mpi_abi::muk::word::AsWord;
+    let mut rng = Rng::new(44);
+    for _ in 0..CASES {
+        // MPICH user handles are arbitrary i32s with the DIRECT bit.
+        let h = (rng.next() as u32 | 0x8000_0000) as i32;
+        assert_eq!(<i32 as AsWord>::from_word(h.to_word()), h);
+    }
+}
+
+// --- Huffman codec ------------------------------------------------------------
+
+#[test]
+fn prop_huffman_kind_decode_total_and_stable() {
+    // Every 10-bit value decodes to exactly one kind, and twice the same.
+    for v in 0..=abi::huffman::HUFFMAN_MAX {
+        let a = abi::huffman::kind_of(v as u16);
+        let b = abi::huffman::kind_of(v as u16);
+        assert_eq!(a, b);
+        // Fixed-size decode only fires for datatype kind.
+        if abi::huffman::fixed_size_of(v).is_some() {
+            assert_eq!(a, abi::huffman::HandleKind::Datatype, "{v:#012b}");
+        }
+    }
+}
+
+#[test]
+fn prop_fixed_size_is_power_of_two() {
+    for v in 0..=abi::huffman::HUFFMAN_MAX {
+        if let Some(s) = abi::huffman::fixed_size_of(v) {
+            assert!(s.is_power_of_two());
+            assert!(s <= 128);
+        }
+    }
+}
+
+// --- Status conversion --------------------------------------------------------
+
+fn random_status(rng: &mut Rng) -> StatusCore {
+    StatusCore {
+        source: rng.i32_in(0, 1 << 20),
+        tag: rng.i32_in(0, 1 << 20),
+        error: if rng.bool() { 0 } else { rng.i32_in(1, 60) },
+        count_bytes: rng.range(0, 1 << 40),
+        cancelled: rng.bool(),
+    }
+}
+
+#[test]
+fn prop_status_layouts_preserve_fields() {
+    let mut rng = Rng::new(45);
+    for _ in 0..CASES {
+        let s = random_status(&mut rng);
+        // MPICH layout (split 63-bit count + cancel bit).
+        let m = MpichRepr::status_from_core(&s);
+        assert_eq!(MpichRepr::status_source(&m), s.source);
+        assert_eq!(MpichRepr::status_tag(&m), s.tag);
+        assert_eq!(MpichRepr::status_count_bytes(&m), s.count_bytes);
+        assert_eq!(MpichRepr::status_cancelled(&m), s.cancelled);
+        // OMPI layout (size_t _ucount).
+        let o = OmpiRepr::status_from_core(&s);
+        assert_eq!(OmpiRepr::status_source(&o), s.source);
+        assert_eq!(OmpiRepr::status_count_bytes(&o), s.count_bytes);
+        assert_eq!(OmpiRepr::status_cancelled(&o), s.cancelled);
+        // Standard ABI (reserved-field packing).
+        let a = NativeRepr::status_from_core(&s);
+        assert_eq!(NativeRepr::status_source(&a), s.source);
+        assert_eq!(NativeRepr::status_count_bytes(&a), s.count_bytes);
+        assert_eq!(NativeRepr::status_cancelled(&a), s.cancelled);
+    }
+}
+
+#[test]
+fn prop_muk_status_conversion_preserves_count() {
+    use mpi_abi::impls::MpichAbi;
+    let mut rng = Rng::new(46);
+    for _ in 0..CASES {
+        let mut s = random_status(&mut rng);
+        s.error = 0;
+        s.source = rng.i32_in(0, 1000);
+        let backend = MpichRepr::status_from_core(&s);
+        let muk = mpi_abi::muk::convert::status_to_muk::<MpichAbi>(&backend);
+        assert_eq!(muk.MPI_SOURCE, s.source);
+        assert_eq!(muk.MPI_TAG, s.tag);
+        assert_eq!(muk.count_bytes(), s.count_bytes);
+        assert_eq!(muk.cancelled(), s.cancelled);
+    }
+}
+
+// --- Error code spaces ----------------------------------------------------------
+
+#[test]
+fn prop_error_codes_roundtrip_all_reprs() {
+    for &(_, class) in abi::ERROR_CLASSES {
+        assert_eq!(MpichRepr::class_of_err(MpichRepr::err_from_class(class)), class);
+        assert_eq!(OmpiRepr::class_of_err(OmpiRepr::err_from_class(class)), class);
+        assert_eq!(NativeRepr::class_of_err(NativeRepr::err_from_class(class)), class);
+        if class != 0 {
+            // MPICH codes are visibly different from classes (rich codes).
+            assert_ne!(MpichRepr::err_from_class(class), class);
+        }
+    }
+}
+
+// --- Datatype engine: pack/unpack roundtrip over random layouts -----------------
+
+#[test]
+fn prop_pack_unpack_roundtrip_random_types() {
+    use mpi_abi::core::datatype as dt;
+    use mpi_abi::core::{engine, world};
+    use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+    run_job_ok(JobSpec::new(1), |_| {
+        engine::init().unwrap();
+        let mut rng = Rng::new(47);
+        let base = dt::builtin_id_of_abi(abi::datatypes::MPI_INT32_T).unwrap();
+        for case in 0..60 {
+            // Random derived type over i32: vector or indexed or struct.
+            let t = match rng.range(0, 3) {
+                0 => {
+                    let count = rng.range(1, 5) as usize;
+                    let blocklen = rng.range(1, 4) as usize;
+                    let stride = blocklen as isize + rng.range(0, 3) as isize;
+                    dt::type_vector(count, blocklen, stride, base).unwrap()
+                }
+                1 => {
+                    let nblocks = rng.range(1, 4) as usize;
+                    let mut blocks = Vec::new();
+                    let mut disp = 0isize;
+                    for _ in 0..nblocks {
+                        let len = rng.range(1, 4) as usize;
+                        blocks.push((len, disp));
+                        disp += len as isize + rng.range(0, 3) as isize;
+                    }
+                    dt::type_indexed(&blocks, base).unwrap()
+                }
+                _ => {
+                    let count = rng.range(1, 6) as usize;
+                    dt::type_contiguous(count, base).unwrap()
+                }
+            };
+            dt::type_commit(t).unwrap();
+            let (lb, extent) = dt::type_get_extent(t).unwrap();
+            assert!(lb <= 0 || lb >= 0, "extent query works");
+            let size = dt::type_size(t).unwrap();
+            assert!(size > 0 && size % 4 == 0);
+
+            // Fill a source region, pack, unpack into a fresh region,
+            // repack: the two packed streams must be identical.
+            let span = (extent.unsigned_abs() + 64) as usize;
+            let count = 3usize;
+            let mut src = vec![0u8; span * count + 64];
+            for (i, b) in src.iter_mut().enumerate() {
+                *b = (rng.next() as u8).wrapping_add(i as u8);
+            }
+            let packed = world::with_ctx(|ctx| {
+                let tables = ctx.tables.borrow();
+                let mut v = Vec::new();
+                dt::pack::pack(&tables.dtypes, src.as_ptr(), count, t, &mut v)?;
+                Ok(v)
+            })
+            .unwrap();
+            assert_eq!(packed.len(), size * count, "case {case}");
+
+            let mut dst = vec![0u8; span * count + 64];
+            world::with_ctx(|ctx| {
+                let tables = ctx.tables.borrow();
+                dt::pack::unpack(&tables.dtypes, &packed, dst.as_mut_ptr(), count, t)?;
+                Ok(())
+            })
+            .unwrap();
+            let repacked = world::with_ctx(|ctx| {
+                let tables = ctx.tables.borrow();
+                let mut v = Vec::new();
+                dt::pack::pack(&tables.dtypes, dst.as_ptr(), count, t, &mut v)?;
+                Ok(v)
+            })
+            .unwrap();
+            assert_eq!(packed, repacked, "case {case}: pack∘unpack∘pack ≠ pack");
+            dt::type_free(t).unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+// --- Comm split invariants --------------------------------------------------------
+
+#[test]
+fn prop_comm_split_partitions_world() {
+    use mpi_abi::core::{comm, engine};
+    use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+    for seed in 0..8u64 {
+        let n = 2 + (seed % 4) as usize; // 2..=5 ranks
+        let results = run_job_ok(JobSpec::new(n), move |rank| {
+            engine::init().unwrap();
+            let mut rng = Rng::new(seed * 1000 + 17);
+            // All ranks derive the same color assignment deterministically,
+            // then pick their own entry.
+            let colors: Vec<i32> = (0..n).map(|_| rng.i32_in(0, 3)).collect();
+            let keys: Vec<i32> = (0..n).map(|_| rng.i32_in(-5, 5)).collect();
+            let sub = engine::comm_split(
+                mpi_abi::core::reserved::COMM_WORLD,
+                colors[rank],
+                keys[rank],
+            )
+            .unwrap()
+            .unwrap();
+            let sub_size = comm::comm_size(sub).unwrap() as usize;
+            let sub_rank = comm::comm_rank(sub).unwrap() as usize;
+            // Invariant 1: subcomm size = #ranks with my color.
+            let same: Vec<usize> = (0..n).filter(|&r| colors[r] == colors[rank]).collect();
+            assert_eq!(sub_size, same.len());
+            // Invariant 2: my sub-rank equals my position under (key, rank)
+            // ordering.
+            let mut ordered = same.clone();
+            ordered.sort_by_key(|&r| (keys[r], r));
+            assert_eq!(sub_rank, ordered.iter().position(|&r| r == rank).unwrap());
+            comm::comm_free(sub).unwrap();
+            engine::finalize().unwrap();
+            (colors[rank], sub_size)
+        });
+        // Invariant 3 (cross-rank): total of each color's subcomm sizes
+        // covers the world exactly once.
+        let total: usize = {
+            let mut seen = std::collections::HashMap::new();
+            for (color, size) in &results {
+                seen.insert(*color, *size);
+            }
+            results.iter().map(|_| 1).sum()
+        };
+        assert_eq!(total, n);
+    }
+}
+
+// --- Message ordering under random traffic ------------------------------------------
+
+#[test]
+fn prop_fifo_per_sender_under_random_tags() {
+    use mpi_abi::core::engine;
+    use mpi_abi::core::reserved::COMM_WORLD;
+    use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+    for seed in 0..5u64 {
+        run_job_ok(JobSpec::new(2), move |rank| {
+            engine::init().unwrap();
+            let dt = mpi_abi::core::datatype::builtin_id_of_abi(abi::datatypes::MPI_INT32_T)
+                .unwrap();
+            let mut rng = Rng::new(seed + 99);
+            let n_msgs = 50usize;
+            // Same-tag messages must arrive in send order even when other
+            // tags interleave randomly.
+            let tags: Vec<i32> = (0..n_msgs).map(|_| rng.i32_in(0, 3)).collect();
+            if rank == 0 {
+                for (i, &t) in tags.iter().enumerate() {
+                    let v = [i as i32];
+                    engine::send(v.as_ptr() as *const u8, 1, dt, 1, t, COMM_WORLD,
+                        engine::SendMode::Standard).unwrap();
+                }
+            } else {
+                // Receive per tag; within a tag, sequence must ascend.
+                let mut last: [i32; 3] = [-1, -1, -1];
+                for t in 0..3i32 {
+                    let expected = tags.iter().filter(|&&x| x == t).count();
+                    for _ in 0..expected {
+                        let mut v = [0i32];
+                        engine::recv(v.as_mut_ptr() as *mut u8, 1, dt, 0, t, COMM_WORLD).unwrap();
+                        assert!(v[0] > last[t as usize],
+                            "tag {t}: out of order {} after {}", v[0], last[t as usize]);
+                        last[t as usize] = v[0];
+                    }
+                }
+            }
+            engine::finalize().unwrap();
+        });
+    }
+}
