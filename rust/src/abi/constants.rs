@@ -17,12 +17,19 @@ use crate::abi::types::Aint;
 
 // --- Unique negative special values ----------------------------------------
 
+/// The standard-ABI `MPI_ANY_SOURCE` constant.
 pub const MPI_ANY_SOURCE: i32 = -101;
+/// The standard-ABI `MPI_ANY_TAG` constant.
 pub const MPI_ANY_TAG: i32 = -102;
+/// The standard-ABI `MPI_PROC_NULL` constant.
 pub const MPI_PROC_NULL: i32 = -103;
+/// The standard-ABI `MPI_ROOT` constant.
 pub const MPI_ROOT: i32 = -104;
+/// The standard-ABI `MPI_UNDEFINED` constant.
 pub const MPI_UNDEFINED: i32 = -105;
+/// The standard-ABI `MPI_KEYVAL_INVALID` constant.
 pub const MPI_KEYVAL_INVALID: i32 = -106;
+/// The standard-ABI `MPI_ERR_IN_STATUS_VAL` constant.
 pub const MPI_ERR_IN_STATUS_VAL: i32 = -107;
 
 /// All named special integer constants (for error reporting by name).
@@ -50,27 +57,42 @@ pub const MPI_BOTTOM: usize = 0;
 pub const MPI_IN_PLACE: usize = 1;
 /// `MPI_STATUS_IGNORE` / `MPI_STATUSES_IGNORE` as special pointers.
 pub const MPI_STATUS_IGNORE: usize = 2;
+/// The standard-ABI `MPI_STATUSES_IGNORE` constant.
 pub const MPI_STATUSES_IGNORE: usize = 3;
 
 // --- String lengths (usable as array dimensions) -----------------------------
 
+/// The standard-ABI `MPI_MAX_PROCESSOR_NAME` constant.
 pub const MPI_MAX_PROCESSOR_NAME: usize = 256;
+/// The standard-ABI `MPI_MAX_ERROR_STRING` constant.
 pub const MPI_MAX_ERROR_STRING: usize = 512;
+/// The standard-ABI `MPI_MAX_OBJECT_NAME` constant.
 pub const MPI_MAX_OBJECT_NAME: usize = 128;
+/// The standard-ABI `MPI_MAX_LIBRARY_VERSION_STRING` constant.
 pub const MPI_MAX_LIBRARY_VERSION_STRING: usize = 8192;
+/// The standard-ABI `MPI_MAX_INFO_KEY` constant.
 pub const MPI_MAX_INFO_KEY: usize = 256;
+/// The standard-ABI `MPI_MAX_INFO_VAL` constant.
 pub const MPI_MAX_INFO_VAL: usize = 1024;
+/// The standard-ABI `MPI_MAX_PORT_NAME` constant.
 pub const MPI_MAX_PORT_NAME: usize = 1024;
+/// The standard-ABI `MPI_MAX_DATAREP_STRING` constant.
 pub const MPI_MAX_DATAREP_STRING: usize = 128;
 
 // --- XOR-combinable assertion/mode constants (powers of two) -----------------
 
+/// The standard-ABI `MPI_MODE_NOCHECK` constant.
 pub const MPI_MODE_NOCHECK: i32 = 1024;
+/// The standard-ABI `MPI_MODE_NOSTORE` constant.
 pub const MPI_MODE_NOSTORE: i32 = 2048;
+/// The standard-ABI `MPI_MODE_NOPUT` constant.
 pub const MPI_MODE_NOPUT: i32 = 4096;
+/// The standard-ABI `MPI_MODE_NOPRECEDE` constant.
 pub const MPI_MODE_NOPRECEDE: i32 = 8192;
+/// The standard-ABI `MPI_MODE_NOSUCCEED` constant.
 pub const MPI_MODE_NOSUCCEED: i32 = 16384;
 
+/// The standard-ABI `XOR_MODES` constant.
 pub const XOR_MODES: &[(&str, i32)] = &[
     ("MPI_MODE_NOCHECK", MPI_MODE_NOCHECK),
     ("MPI_MODE_NOSTORE", MPI_MODE_NOSTORE),
@@ -81,32 +103,53 @@ pub const XOR_MODES: &[(&str, i32)] = &[
 
 // --- Thread levels (ordered comparison required by MPI) ----------------------
 
+/// The standard-ABI `MPI_THREAD_SINGLE` constant.
 pub const MPI_THREAD_SINGLE: i32 = 0;
+/// The standard-ABI `MPI_THREAD_FUNNELED` constant.
 pub const MPI_THREAD_FUNNELED: i32 = 1;
+/// The standard-ABI `MPI_THREAD_SERIALIZED` constant.
 pub const MPI_THREAD_SERIALIZED: i32 = 2;
+/// The standard-ABI `MPI_THREAD_MULTIPLE` constant.
 pub const MPI_THREAD_MULTIPLE: i32 = 3;
 
 // --- Comparison results ------------------------------------------------------
 
+/// The standard-ABI `MPI_IDENT` constant.
 pub const MPI_IDENT: i32 = 0;
+/// The standard-ABI `MPI_CONGRUENT` constant.
 pub const MPI_CONGRUENT: i32 = 1;
+/// The standard-ABI `MPI_SIMILAR` constant.
 pub const MPI_SIMILAR: i32 = 2;
+/// The standard-ABI `MPI_UNEQUAL` constant.
 pub const MPI_UNEQUAL: i32 = 3;
 
 // --- Type combiners (MPI_Type_get_envelope) ----------------------------------
 
+/// The standard-ABI `MPI_COMBINER_NAMED` constant.
 pub const MPI_COMBINER_NAMED: i32 = 1;
+/// The standard-ABI `MPI_COMBINER_DUP` constant.
 pub const MPI_COMBINER_DUP: i32 = 2;
+/// The standard-ABI `MPI_COMBINER_CONTIGUOUS` constant.
 pub const MPI_COMBINER_CONTIGUOUS: i32 = 3;
+/// The standard-ABI `MPI_COMBINER_VECTOR` constant.
 pub const MPI_COMBINER_VECTOR: i32 = 4;
+/// The standard-ABI `MPI_COMBINER_HVECTOR` constant.
 pub const MPI_COMBINER_HVECTOR: i32 = 5;
+/// The standard-ABI `MPI_COMBINER_INDEXED` constant.
 pub const MPI_COMBINER_INDEXED: i32 = 6;
+/// The standard-ABI `MPI_COMBINER_HINDEXED` constant.
 pub const MPI_COMBINER_HINDEXED: i32 = 7;
+/// The standard-ABI `MPI_COMBINER_INDEXED_BLOCK` constant.
 pub const MPI_COMBINER_INDEXED_BLOCK: i32 = 8;
+/// The standard-ABI `MPI_COMBINER_HINDEXED_BLOCK` constant.
 pub const MPI_COMBINER_HINDEXED_BLOCK: i32 = 9;
+/// The standard-ABI `MPI_COMBINER_STRUCT` constant.
 pub const MPI_COMBINER_STRUCT: i32 = 10;
+/// The standard-ABI `MPI_COMBINER_SUBARRAY` constant.
 pub const MPI_COMBINER_SUBARRAY: i32 = 11;
+/// The standard-ABI `MPI_COMBINER_DARRAY` constant.
 pub const MPI_COMBINER_DARRAY: i32 = 12;
+/// The standard-ABI `MPI_COMBINER_RESIZED` constant.
 pub const MPI_COMBINER_RESIZED: i32 = 13;
 
 // --- Predefined attribute callbacks (§5.4) -----------------------------------
@@ -120,12 +163,19 @@ pub const MPI_DUP_FN: usize = 0xD;
 
 // --- Predefined attribute keys -----------------------------------------------
 
+/// The standard-ABI `MPI_TAG_UB` constant.
 pub const MPI_TAG_UB: i32 = -201;
+/// The standard-ABI `MPI_HOST` constant.
 pub const MPI_HOST: i32 = -202;
+/// The standard-ABI `MPI_IO` constant.
 pub const MPI_IO: i32 = -203;
+/// The standard-ABI `MPI_WTIME_IS_GLOBAL` constant.
 pub const MPI_WTIME_IS_GLOBAL: i32 = -204;
+/// The standard-ABI `MPI_UNIVERSE_SIZE` constant.
 pub const MPI_UNIVERSE_SIZE: i32 = -205;
+/// The standard-ABI `MPI_LASTUSEDCODE` constant.
 pub const MPI_LASTUSEDCODE: i32 = -206;
+/// The standard-ABI `MPI_APPNUM` constant.
 pub const MPI_APPNUM: i32 = -207;
 
 /// The value our implementations report for the `MPI_TAG_UB` attribute.
@@ -133,9 +183,11 @@ pub const TAG_UB_VALUE: Aint = 0x00FF_FFFF;
 
 /// Version reported by `MPI_Get_version` for this ABI.
 pub const MPI_VERSION: i32 = 4;
+/// The standard-ABI `MPI_SUBVERSION` constant.
 pub const MPI_SUBVERSION: i32 = 1;
 /// The ABI's own version (would be `MPI_Abi_get_version` in the proposal).
 pub const MPI_ABI_VERSION: i32 = 1;
+/// The standard-ABI `MPI_ABI_SUBVERSION` constant.
 pub const MPI_ABI_SUBVERSION: i32 = 0;
 
 // --- Whole-ABI inventory helpers ----------------------------------------------

@@ -16,74 +16,121 @@
 //! reserved ranges, following the same grouping logic; they are marked
 //! `// extension` below and are *our* allocation, not paper text.
 
+/// Zero-page Huffman constant for `MPI_DATATYPE_NULL` (Appendix A.3).
 pub const MPI_DATATYPE_NULL: usize = 0b1000000000;
 
 // --- Variable-size types (0b1000xxxxxx) ------------------------------------
 
+/// Zero-page Huffman constant for `MPI_AINT` (Appendix A.3).
 pub const MPI_AINT: usize = 0b1000000001;
+/// Zero-page Huffman constant for `MPI_COUNT` (Appendix A.3).
 pub const MPI_COUNT: usize = 0b1000000010;
+/// Zero-page Huffman constant for `MPI_OFFSET` (Appendix A.3).
 pub const MPI_OFFSET: usize = 0b1000000011;
+/// Zero-page Huffman constant for `MPI_PACKED` (Appendix A.3).
 pub const MPI_PACKED: usize = 0b1000000111;
 
+/// Zero-page Huffman constant for `MPI_SHORT` (Appendix A.3).
 pub const MPI_SHORT: usize = 0b1000001000;
+/// Zero-page Huffman constant for `MPI_INT` (Appendix A.3).
 pub const MPI_INT: usize = 0b1000001001;
+/// Zero-page Huffman constant for `MPI_LONG` (Appendix A.3).
 pub const MPI_LONG: usize = 0b1000001010;
+/// Zero-page Huffman constant for `MPI_LONG_LONG` (Appendix A.3).
 pub const MPI_LONG_LONG: usize = 0b1000001011;
 /// Alias required by the standard.
 pub const MPI_LONG_LONG_INT: usize = MPI_LONG_LONG;
+/// Zero-page Huffman constant for `MPI_UNSIGNED_SHORT` (Appendix A.3).
 pub const MPI_UNSIGNED_SHORT: usize = 0b1000001100;
+/// Zero-page Huffman constant for `MPI_UNSIGNED` (Appendix A.3).
 pub const MPI_UNSIGNED: usize = 0b1000001101;
+/// Zero-page Huffman constant for `MPI_UNSIGNED_LONG` (Appendix A.3).
 pub const MPI_UNSIGNED_LONG: usize = 0b1000001110;
+/// Zero-page Huffman constant for `MPI_UNSIGNED_LONG_LONG` (Appendix A.3).
 pub const MPI_UNSIGNED_LONG_LONG: usize = 0b1000001111;
+/// Zero-page Huffman constant for `MPI_FLOAT` (Appendix A.3).
 pub const MPI_FLOAT: usize = 0b1000010000;
+/// Zero-page Huffman constant for `MPI_DOUBLE` (Appendix A.3).
 pub const MPI_DOUBLE: usize = 0b1000010001; // extension
+/// Zero-page Huffman constant for `MPI_LONG_DOUBLE` (Appendix A.3).
 pub const MPI_LONG_DOUBLE: usize = 0b1000010010; // extension
+/// Zero-page Huffman constant for `MPI_C_BOOL` (Appendix A.3).
 pub const MPI_C_BOOL: usize = 0b1000010011; // extension
+/// Zero-page Huffman constant for `MPI_WCHAR` (Appendix A.3).
 pub const MPI_WCHAR: usize = 0b1000010100; // extension
+/// Zero-page Huffman constant for `MPI_C_COMPLEX` (Appendix A.3).
 pub const MPI_C_COMPLEX: usize = 0b1000010101; // extension
+/// Zero-page Huffman constant for `MPI_C_DOUBLE_COMPLEX` (Appendix A.3).
 pub const MPI_C_DOUBLE_COMPLEX: usize = 0b1000010110; // extension
+/// Zero-page Huffman constant for `MPI_C_LONG_DOUBLE_COMPLEX` (Appendix A.3).
 pub const MPI_C_LONG_DOUBLE_COMPLEX: usize = 0b1000010111; // extension
 
 // Fortran variable-size types (sizes track the Fortran compiler). extension
+/// Zero-page Huffman constant for `MPI_INTEGER` (Appendix A.3).
 pub const MPI_INTEGER: usize = 0b1000011000;
+/// Zero-page Huffman constant for `MPI_REAL` (Appendix A.3).
 pub const MPI_REAL: usize = 0b1000011001;
+/// Zero-page Huffman constant for `MPI_DOUBLE_PRECISION` (Appendix A.3).
 pub const MPI_DOUBLE_PRECISION: usize = 0b1000011010;
+/// Zero-page Huffman constant for `MPI_COMPLEX` (Appendix A.3).
 pub const MPI_COMPLEX: usize = 0b1000011011;
+/// Zero-page Huffman constant for `MPI_DOUBLE_COMPLEX` (Appendix A.3).
 pub const MPI_DOUBLE_COMPLEX: usize = 0b1000011100;
+/// Zero-page Huffman constant for `MPI_LOGICAL` (Appendix A.3).
 pub const MPI_LOGICAL: usize = 0b1000011101;
+/// Zero-page Huffman constant for `MPI_CHARACTER` (Appendix A.3).
 pub const MPI_CHARACTER: usize = 0b1000011110;
 
 // Pair types for MINLOC/MAXLOC (typemaps, not single scalars). extension
+/// Zero-page Huffman constant for `MPI_FLOAT_INT` (Appendix A.3).
 pub const MPI_FLOAT_INT: usize = 0b1000100000;
+/// Zero-page Huffman constant for `MPI_DOUBLE_INT` (Appendix A.3).
 pub const MPI_DOUBLE_INT: usize = 0b1000100001;
+/// Zero-page Huffman constant for `MPI_LONG_INT` (Appendix A.3).
 pub const MPI_LONG_INT: usize = 0b1000100010;
+/// Zero-page Huffman constant for `MPI_2INT` (Appendix A.3).
 pub const MPI_2INT: usize = 0b1000100011;
+/// Zero-page Huffman constant for `MPI_SHORT_INT` (Appendix A.3).
 pub const MPI_SHORT_INT: usize = 0b1000100100;
+/// Zero-page Huffman constant for `MPI_LONG_DOUBLE_INT` (Appendix A.3).
 pub const MPI_LONG_DOUBLE_INT: usize = 0b1000100101;
+/// Zero-page Huffman constant for `MPI_2REAL` (Appendix A.3).
 pub const MPI_2REAL: usize = 0b1000100110;
+/// Zero-page Huffman constant for `MPI_2DOUBLE_PRECISION` (Appendix A.3).
 pub const MPI_2DOUBLE_PRECISION: usize = 0b1000100111;
+/// Zero-page Huffman constant for `MPI_2INTEGER` (Appendix A.3).
 pub const MPI_2INTEGER: usize = 0b1000101000;
 
 // --- Fixed-size types (0b1001_SSS_XXX, size = 2^SSS) ------------------------
 
 // size 1 (SSS=000)
+/// Zero-page Huffman constant for `MPI_INT8_T` (Appendix A.3).
 pub const MPI_INT8_T: usize = 0b1001000000;
+/// Zero-page Huffman constant for `MPI_UINT8_T` (Appendix A.3).
 pub const MPI_UINT8_T: usize = 0b1001000001;
 // 0b1001000010 is reserved for a future 8-bit float in A.3.
+/// Zero-page Huffman constant for `MPI_CHAR` (Appendix A.3).
 pub const MPI_CHAR: usize = 0b1001000011;
+/// Zero-page Huffman constant for `MPI_SIGNED_CHAR` (Appendix A.3).
 pub const MPI_SIGNED_CHAR: usize = 0b1001000100;
+/// Zero-page Huffman constant for `MPI_UNSIGNED_CHAR` (Appendix A.3).
 pub const MPI_UNSIGNED_CHAR: usize = 0b1001000101;
+/// Zero-page Huffman constant for `MPI_BYTE` (Appendix A.3).
 pub const MPI_BYTE: usize = 0b1001000111;
 
 // size 2 (SSS=001)
+/// Zero-page Huffman constant for `MPI_INT16_T` (Appendix A.3).
 pub const MPI_INT16_T: usize = 0b1001001000;
+/// Zero-page Huffman constant for `MPI_UINT16_T` (Appendix A.3).
 pub const MPI_UINT16_T: usize = 0b1001001001;
 /// `<float 16b>` in A.3 — a future half-precision type; named here because
 /// our compute path (bf16/f16 tiles) exercises it. extension (name only)
 pub const MPI_FLOAT16_T: usize = 0b1001001010;
 
 // size 4 (SSS=010)
+/// Zero-page Huffman constant for `MPI_INT32_T` (Appendix A.3).
 pub const MPI_INT32_T: usize = 0b1001010000;
+/// Zero-page Huffman constant for `MPI_UINT32_T` (Appendix A.3).
 pub const MPI_UINT32_T: usize = 0b1001010001;
 /// `<C float 32b>` in A.3. extension (name only)
 pub const MPI_FLOAT32_T: usize = 0b1001010010;
@@ -91,7 +138,9 @@ pub const MPI_FLOAT32_T: usize = 0b1001010010;
 pub const MPI_COMPLEX32_T: usize = 0b1001010011;
 
 // size 8 (SSS=011)
+/// Zero-page Huffman constant for `MPI_INT64_T` (Appendix A.3).
 pub const MPI_INT64_T: usize = 0b1001011000;
+/// Zero-page Huffman constant for `MPI_UINT64_T` (Appendix A.3).
 pub const MPI_UINT64_T: usize = 0b1001011001;
 /// `<C float64>` in A.3. extension (name only)
 pub const MPI_FLOAT64_T: usize = 0b1001011010;
@@ -99,6 +148,7 @@ pub const MPI_FLOAT64_T: usize = 0b1001011010;
 pub const MPI_COMPLEX64_T: usize = 0b1001011011;
 
 // size 16 (SSS=100). extension
+/// Zero-page Huffman constant for `MPI_COMPLEX128_T` (Appendix A.3).
 pub const MPI_COMPLEX128_T: usize = 0b1001100011;
 
 /// Everything predefined in the datatype space, with MPI names.

@@ -8,66 +8,127 @@
 
 /// Error classes of the standard ABI. Values are the ABI contract.
 pub const MPI_SUCCESS: i32 = 0;
+/// Error class `MPI_ERR_BUFFER` (the value is part of the ABI contract).
 pub const MPI_ERR_BUFFER: i32 = 1;
+/// Error class `MPI_ERR_COUNT` (the value is part of the ABI contract).
 pub const MPI_ERR_COUNT: i32 = 2;
+/// Error class `MPI_ERR_TYPE` (the value is part of the ABI contract).
 pub const MPI_ERR_TYPE: i32 = 3;
+/// Error class `MPI_ERR_TAG` (the value is part of the ABI contract).
 pub const MPI_ERR_TAG: i32 = 4;
+/// Error class `MPI_ERR_COMM` (the value is part of the ABI contract).
 pub const MPI_ERR_COMM: i32 = 5;
+/// Error class `MPI_ERR_RANK` (the value is part of the ABI contract).
 pub const MPI_ERR_RANK: i32 = 6;
+/// Error class `MPI_ERR_REQUEST` (the value is part of the ABI contract).
 pub const MPI_ERR_REQUEST: i32 = 7;
+/// Error class `MPI_ERR_ROOT` (the value is part of the ABI contract).
 pub const MPI_ERR_ROOT: i32 = 8;
+/// Error class `MPI_ERR_GROUP` (the value is part of the ABI contract).
 pub const MPI_ERR_GROUP: i32 = 9;
+/// Error class `MPI_ERR_OP` (the value is part of the ABI contract).
 pub const MPI_ERR_OP: i32 = 10;
+/// Error class `MPI_ERR_TOPOLOGY` (the value is part of the ABI contract).
 pub const MPI_ERR_TOPOLOGY: i32 = 11;
+/// Error class `MPI_ERR_DIMS` (the value is part of the ABI contract).
 pub const MPI_ERR_DIMS: i32 = 12;
+/// Error class `MPI_ERR_ARG` (the value is part of the ABI contract).
 pub const MPI_ERR_ARG: i32 = 13;
+/// Error class `MPI_ERR_UNKNOWN` (the value is part of the ABI contract).
 pub const MPI_ERR_UNKNOWN: i32 = 14;
+/// Error class `MPI_ERR_TRUNCATE` (the value is part of the ABI contract).
 pub const MPI_ERR_TRUNCATE: i32 = 15;
+/// Error class `MPI_ERR_OTHER` (the value is part of the ABI contract).
 pub const MPI_ERR_OTHER: i32 = 16;
+/// Error class `MPI_ERR_INTERN` (the value is part of the ABI contract).
 pub const MPI_ERR_INTERN: i32 = 17;
+/// Error class `MPI_ERR_IN_STATUS` (the value is part of the ABI contract).
 pub const MPI_ERR_IN_STATUS: i32 = 18;
+/// Error class `MPI_ERR_PENDING` (the value is part of the ABI contract).
 pub const MPI_ERR_PENDING: i32 = 19;
+/// Error class `MPI_ERR_KEYVAL` (the value is part of the ABI contract).
 pub const MPI_ERR_KEYVAL: i32 = 20;
+/// Error class `MPI_ERR_NO_MEM` (the value is part of the ABI contract).
 pub const MPI_ERR_NO_MEM: i32 = 21;
+/// Error class `MPI_ERR_BASE` (the value is part of the ABI contract).
 pub const MPI_ERR_BASE: i32 = 22;
+/// Error class `MPI_ERR_INFO_KEY` (the value is part of the ABI contract).
 pub const MPI_ERR_INFO_KEY: i32 = 23;
+/// Error class `MPI_ERR_INFO_VALUE` (the value is part of the ABI contract).
 pub const MPI_ERR_INFO_VALUE: i32 = 24;
+/// Error class `MPI_ERR_INFO_NOKEY` (the value is part of the ABI contract).
 pub const MPI_ERR_INFO_NOKEY: i32 = 25;
+/// Error class `MPI_ERR_SPAWN` (the value is part of the ABI contract).
 pub const MPI_ERR_SPAWN: i32 = 26;
+/// Error class `MPI_ERR_PORT` (the value is part of the ABI contract).
 pub const MPI_ERR_PORT: i32 = 27;
+/// Error class `MPI_ERR_SERVICE` (the value is part of the ABI contract).
 pub const MPI_ERR_SERVICE: i32 = 28;
+/// Error class `MPI_ERR_NAME` (the value is part of the ABI contract).
 pub const MPI_ERR_NAME: i32 = 29;
+/// Error class `MPI_ERR_WIN` (the value is part of the ABI contract).
 pub const MPI_ERR_WIN: i32 = 30;
+/// Error class `MPI_ERR_SIZE` (the value is part of the ABI contract).
 pub const MPI_ERR_SIZE: i32 = 31;
+/// Error class `MPI_ERR_DISP` (the value is part of the ABI contract).
 pub const MPI_ERR_DISP: i32 = 32;
+/// Error class `MPI_ERR_INFO` (the value is part of the ABI contract).
 pub const MPI_ERR_INFO: i32 = 33;
+/// Error class `MPI_ERR_LOCKTYPE` (the value is part of the ABI contract).
 pub const MPI_ERR_LOCKTYPE: i32 = 34;
+/// Error class `MPI_ERR_ASSERT` (the value is part of the ABI contract).
 pub const MPI_ERR_ASSERT: i32 = 35;
+/// Error class `MPI_ERR_RMA_CONFLICT` (the value is part of the ABI contract).
 pub const MPI_ERR_RMA_CONFLICT: i32 = 36;
+/// Error class `MPI_ERR_RMA_SYNC` (the value is part of the ABI contract).
 pub const MPI_ERR_RMA_SYNC: i32 = 37;
+/// Error class `MPI_ERR_FILE` (the value is part of the ABI contract).
 pub const MPI_ERR_FILE: i32 = 38;
+/// Error class `MPI_ERR_NOT_SAME` (the value is part of the ABI contract).
 pub const MPI_ERR_NOT_SAME: i32 = 39;
+/// Error class `MPI_ERR_AMODE` (the value is part of the ABI contract).
 pub const MPI_ERR_AMODE: i32 = 40;
+/// Error class `MPI_ERR_UNSUPPORTED_DATAREP` (the value is part of the ABI contract).
 pub const MPI_ERR_UNSUPPORTED_DATAREP: i32 = 41;
+/// Error class `MPI_ERR_UNSUPPORTED_OPERATION` (the value is part of the ABI contract).
 pub const MPI_ERR_UNSUPPORTED_OPERATION: i32 = 42;
+/// Error class `MPI_ERR_NO_SUCH_FILE` (the value is part of the ABI contract).
 pub const MPI_ERR_NO_SUCH_FILE: i32 = 43;
+/// Error class `MPI_ERR_FILE_EXISTS` (the value is part of the ABI contract).
 pub const MPI_ERR_FILE_EXISTS: i32 = 44;
+/// Error class `MPI_ERR_BAD_FILE` (the value is part of the ABI contract).
 pub const MPI_ERR_BAD_FILE: i32 = 45;
+/// Error class `MPI_ERR_ACCESS` (the value is part of the ABI contract).
 pub const MPI_ERR_ACCESS: i32 = 46;
+/// Error class `MPI_ERR_NO_SPACE` (the value is part of the ABI contract).
 pub const MPI_ERR_NO_SPACE: i32 = 47;
+/// Error class `MPI_ERR_QUOTA` (the value is part of the ABI contract).
 pub const MPI_ERR_QUOTA: i32 = 48;
+/// Error class `MPI_ERR_READ_ONLY` (the value is part of the ABI contract).
 pub const MPI_ERR_READ_ONLY: i32 = 49;
+/// Error class `MPI_ERR_FILE_IN_USE` (the value is part of the ABI contract).
 pub const MPI_ERR_FILE_IN_USE: i32 = 50;
+/// Error class `MPI_ERR_DUP_DATAREP` (the value is part of the ABI contract).
 pub const MPI_ERR_DUP_DATAREP: i32 = 51;
+/// Error class `MPI_ERR_CONVERSION` (the value is part of the ABI contract).
 pub const MPI_ERR_CONVERSION: i32 = 52;
+/// Error class `MPI_ERR_IO` (the value is part of the ABI contract).
 pub const MPI_ERR_IO: i32 = 53;
+/// Error class `MPI_ERR_RMA_RANGE` (the value is part of the ABI contract).
 pub const MPI_ERR_RMA_RANGE: i32 = 54;
+/// Error class `MPI_ERR_RMA_ATTACH` (the value is part of the ABI contract).
 pub const MPI_ERR_RMA_ATTACH: i32 = 55;
+/// Error class `MPI_ERR_RMA_SHARED` (the value is part of the ABI contract).
 pub const MPI_ERR_RMA_SHARED: i32 = 56;
+/// Error class `MPI_ERR_RMA_FLAVOR` (the value is part of the ABI contract).
 pub const MPI_ERR_RMA_FLAVOR: i32 = 57;
+/// Error class `MPI_ERR_SESSION` (the value is part of the ABI contract).
 pub const MPI_ERR_SESSION: i32 = 58;
+/// Error class `MPI_ERR_PROC_ABORTED` (the value is part of the ABI contract).
 pub const MPI_ERR_PROC_ABORTED: i32 = 59;
+/// Error class `MPI_ERR_VALUE_TOO_LARGE` (the value is part of the ABI contract).
 pub const MPI_ERR_VALUE_TOO_LARGE: i32 = 60;
+/// Error class `MPI_ERR_ERRHANDLER` (the value is part of the ABI contract).
 pub const MPI_ERR_ERRHANDLER: i32 = 61;
 /// Last predefined error class (`MPI_ERR_LASTCODE` floor).
 pub const MPI_ERR_LASTCODE: i32 = 128;

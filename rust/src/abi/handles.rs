@@ -17,35 +17,80 @@
 //! Predefined constants are the zero-page Huffman values of
 //! [`crate::abi::huffman`]; user handles are values above the zero page
 //! (in a C implementation: heap pointers, which never point into page 0).
+//!
+//! # The handle-encoding scheme
+//!
+//! A handle is one pointer-sized word partitioned by value:
+//!
+//! | word value            | meaning                                      |
+//! |-----------------------|----------------------------------------------|
+//! | `0`                   | reserved (never a valid handle)              |
+//! | `1 ..= HUFFMAN_MAX`   | predefined constant, 10-bit Huffman code     |
+//! | `> HUFFMAN_MAX`       | runtime handle owned by the implementation   |
+//!
+//! The Huffman code itself encodes the handle *kind* (comm, group, op,
+//! datatype, …) and, for fixed-size datatypes, `log2(size)` — see
+//! [`crate::abi::huffman::decode`] and `fixed_size_of`. Invariants the
+//! rest of the system relies on:
+//!
+//! * **Kind is decodable for constants.** Translation layers switch on
+//!   the zero page without any table lookup ([`crate::abi::huffman`]),
+//!   and misuse of a constant in the wrong argument slot is detectable
+//!   by name (§5.4 diagnosability).
+//! * **Runtime handles never collide with the zero page.** A C
+//!   implementation guarantees this because page 0 is never mapped; our
+//!   native build guarantees it by biasing engine ids above
+//!   `HUFFMAN_MAX` (see `native_abi`'s `USER_BASE`).
+//! * **The word is opaque above the zero page.** Only the owning
+//!   implementation may interpret it; Mukautuva round-trips it through
+//!   the word union untouched ([`crate::muk::word::AsWord`]).
+//! * **Null handles are per-kind constants** (`MPI_COMM_NULL`,
+//!   `MPI_REQUEST_NULL`, …), not `0`, so nullness is also kind-checked.
 
 use crate::abi::huffman::HUFFMAN_MAX;
 
 // --- Non-datatype predefined constants (Appendix A.2) ---------------------
 
+/// Zero-page Huffman constant for `MPI_COMM_NULL` (Appendix A.2).
 pub const MPI_COMM_NULL: usize = 0b0100000000;
+/// Zero-page Huffman constant for `MPI_COMM_WORLD` (Appendix A.2).
 pub const MPI_COMM_WORLD: usize = 0b0100000001;
+/// Zero-page Huffman constant for `MPI_COMM_SELF` (Appendix A.2).
 pub const MPI_COMM_SELF: usize = 0b0100000010;
 
+/// Zero-page Huffman constant for `MPI_GROUP_NULL` (Appendix A.2).
 pub const MPI_GROUP_NULL: usize = 0b0100000100;
+/// Zero-page Huffman constant for `MPI_GROUP_EMPTY` (Appendix A.2).
 pub const MPI_GROUP_EMPTY: usize = 0b0100000101;
 
+/// Zero-page Huffman constant for `MPI_WIN_NULL` (Appendix A.2).
 pub const MPI_WIN_NULL: usize = 0b0100001000;
+/// Zero-page Huffman constant for `MPI_FILE_NULL` (Appendix A.2).
 pub const MPI_FILE_NULL: usize = 0b0100001100;
+/// Zero-page Huffman constant for `MPI_SESSION_NULL` (Appendix A.2).
 pub const MPI_SESSION_NULL: usize = 0b0100010000;
 
+/// Zero-page Huffman constant for `MPI_MESSAGE_NULL` (Appendix A.2).
 pub const MPI_MESSAGE_NULL: usize = 0b0100010100;
+/// Zero-page Huffman constant for `MPI_MESSAGE_NO_PROC` (Appendix A.2).
 pub const MPI_MESSAGE_NO_PROC: usize = 0b0100010101;
 
+/// Zero-page Huffman constant for `MPI_ERRHANDLER_NULL` (Appendix A.2).
 pub const MPI_ERRHANDLER_NULL: usize = 0b0100011000;
+/// Zero-page Huffman constant for `MPI_ERRORS_ARE_FATAL` (Appendix A.2).
 pub const MPI_ERRORS_ARE_FATAL: usize = 0b0100011001;
+/// Zero-page Huffman constant for `MPI_ERRORS_RETURN` (Appendix A.2).
 pub const MPI_ERRORS_RETURN: usize = 0b0100011010;
+/// Zero-page Huffman constant for `MPI_ERRORS_ABORT` (Appendix A.2).
 pub const MPI_ERRORS_ABORT: usize = 0b0100011011;
 
+/// Zero-page Huffman constant for `MPI_REQUEST_NULL` (Appendix A.2).
 pub const MPI_REQUEST_NULL: usize = 0b0100100000;
 
 /// Info handles are not in the published appendix excerpt; the spec draft
 /// places them in the reserved `0b0100011100` block. We allocate:
 pub const MPI_INFO_NULL: usize = 0b0100011100;
+/// Zero-page Huffman constant for `MPI_INFO_ENV` (Appendix A.2).
 pub const MPI_INFO_ENV: usize = 0b0100011101;
 
 /// All predefined non-datatype, non-op handles with their MPI names.
@@ -178,8 +223,11 @@ impl AbiGroup {
 }
 
 impl AbiErrhandler {
+    /// Zero-page Huffman constant for `ERRORS_ARE_FATAL` (Appendix A.2).
     pub const ERRORS_ARE_FATAL: AbiErrhandler = AbiErrhandler(MPI_ERRORS_ARE_FATAL);
+    /// Zero-page Huffman constant for `ERRORS_RETURN` (Appendix A.2).
     pub const ERRORS_RETURN: AbiErrhandler = AbiErrhandler(MPI_ERRORS_RETURN);
+    /// Zero-page Huffman constant for `ERRORS_ABORT` (Appendix A.2).
     pub const ERRORS_ABORT: AbiErrhandler = AbiErrhandler(MPI_ERRORS_ABORT);
 }
 

@@ -18,6 +18,10 @@
 //!   powers of two, string lengths, predefined callbacks (§5.4).
 //! - [`errors`] — error classes with `MPI_SUCCESS == 0`.
 
+// The ABI is a normative artifact: every public item is part of the
+// binary contract and must say what it pins down.
+#![warn(missing_docs)]
+
 pub mod constants;
 pub mod datatypes;
 pub mod errors;

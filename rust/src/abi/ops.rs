@@ -8,27 +8,41 @@
 pub const MPI_OP_NULL: usize = 0b0000100000;
 
 // Arithmetic ops.
+/// Zero-page Huffman constant for `MPI_SUM` (Appendix A.1).
 pub const MPI_SUM: usize = 0b0000100001;
+/// Zero-page Huffman constant for `MPI_MIN` (Appendix A.1).
 pub const MPI_MIN: usize = 0b0000100010;
+/// Zero-page Huffman constant for `MPI_MAX` (Appendix A.1).
 pub const MPI_MAX: usize = 0b0000100011;
+/// Zero-page Huffman constant for `MPI_PROD` (Appendix A.1).
 pub const MPI_PROD: usize = 0b0000100100;
 
 // Bitwise ops.
+/// Zero-page Huffman constant for `MPI_BAND` (Appendix A.1).
 pub const MPI_BAND: usize = 0b0000101000;
+/// Zero-page Huffman constant for `MPI_BOR` (Appendix A.1).
 pub const MPI_BOR: usize = 0b0000101001;
+/// Zero-page Huffman constant for `MPI_BXOR` (Appendix A.1).
 pub const MPI_BXOR: usize = 0b0000101010;
 
 // Logical ops.
+/// Zero-page Huffman constant for `MPI_LAND` (Appendix A.1).
 pub const MPI_LAND: usize = 0b0000110000;
+/// Zero-page Huffman constant for `MPI_LOR` (Appendix A.1).
 pub const MPI_LOR: usize = 0b0000110001;
+/// Zero-page Huffman constant for `MPI_LXOR` (Appendix A.1).
 pub const MPI_LXOR: usize = 0b0000110010;
 
 // Loc ops.
+/// Zero-page Huffman constant for `MPI_MINLOC` (Appendix A.1).
 pub const MPI_MINLOC: usize = 0b0000111000;
+/// Zero-page Huffman constant for `MPI_MAXLOC` (Appendix A.1).
 pub const MPI_MAXLOC: usize = 0b0000111001;
 
 // Accumulate ops.
+/// Zero-page Huffman constant for `MPI_REPLACE` (Appendix A.1).
 pub const MPI_REPLACE: usize = 0b0000111100;
+/// Zero-page Huffman constant for `MPI_NO_OP` (Appendix A.1).
 pub const MPI_NO_OP: usize = 0b0000111101;
 
 /// All predefined op constants with their MPI names.

@@ -26,9 +26,14 @@
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[allow(non_snake_case)]
 pub struct AbiStatus {
+    /// Rank of the message's sender (`MPI_SOURCE` public field).
     pub MPI_SOURCE: i32,
+    /// Tag the message was sent with (`MPI_TAG` public field).
     pub MPI_TAG: i32,
+    /// Error class for this operation (`MPI_ERROR` public field).
     pub MPI_ERROR: i32,
+    /// Implementation-private slots; see the module docs for the layout
+    /// convention this build uses (count + cancelled flag, tool slack).
     pub mpi_reserved: [i32; 5],
 }
 

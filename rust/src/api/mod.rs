@@ -366,6 +366,158 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
     ) -> i32;
 
+    // --- Nonblocking collectives (MPI 3.x) ---
+    //
+    // Every operation returns a request handle in this ABI's
+    // representation; translation layers must convert it and keep any
+    // per-call temporary state alive until completion (§6.2) — the
+    // heaviest handle traffic in the API, which is why the benches
+    // measure exactly these paths.
+    fn ibarrier(comm: Self::Comm, req: &mut Self::Request) -> i32;
+    fn ibcast(
+        buf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn ireduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iallreduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn igather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn igatherv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        displs: &[i32],
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iscatter(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iscatterv(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        displs: &[i32],
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iallgather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iallgatherv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        displs: &[i32],
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn ialltoall(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn ialltoallv(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn iexscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn ireduce_scatter_block(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+
     // --- Attributes ---
     fn comm_create_keyval(
         copy: Option<AttrCopyFn<Self>>,

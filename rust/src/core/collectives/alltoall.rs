@@ -1,28 +1,13 @@
-//! All-to-all collectives, including the nonblocking `MPI_Ialltoallw` —
-//! the paper's worst-case ABI-translation scenario (§6.2): a request that
-//! owns *vectors of datatype handles* which a translation layer must
-//! convert and keep alive until completion.
+//! All-to-all collectives — blocking entry points and the
+//! [`AlltoallwArgs`] bundle. `MPI_Alltoallw` remains the paper's
+//! worst-case ABI-translation scenario (§6.2): a request that owns
+//! *vectors of datatype handles* which a translation layer must convert
+//! and keep alive until completion; its engine, like every collective's,
+//! is a schedule in [`super::sched`].
 
-use super::{coll_begin, coll_recv, coll_send};
-use crate::core::datatype::pack::{pack, unpack};
-use crate::core::request::{new_request, post_recv, ReqKind, StatusCore};
-use crate::core::transport::{Envelope, MsgKind, Payload};
-use crate::core::world::{with_ctx, RankCtx};
-use crate::core::{err, CommId, DtId, RC, ReqId};
-
-fn pack_at(
-    ctx: &RankCtx,
-    buf: *const u8,
-    byte_offset: isize,
-    count: usize,
-    dt: DtId,
-) -> RC<Vec<u8>> {
-    let t = ctx.tables.borrow();
-    let src = unsafe { buf.offset(byte_offset) };
-    let mut v = Vec::new();
-    pack(&t.dtypes, src, count, dt, &mut v)?;
-    Ok(v)
-}
+use super::{coll_begin, coll_recv, coll_send, sched, wait_coll};
+use crate::core::world::with_ctx;
+use crate::core::{CommId, DtId, RC};
 
 /// `MPI_Alltoall`.
 #[allow(clippy::too_many_arguments)]
@@ -35,29 +20,8 @@ pub fn alltoall(
     recvtype: DtId,
     comm: CommId,
 ) -> RC<()> {
-    let n = crate::core::comm::comm_size(comm)? as usize;
-    let (sext, rext) = {
-        let se = crate::core::datatype::type_get_extent(sendtype)?.1;
-        let re = crate::core::datatype::type_get_extent(recvtype)?.1;
-        (se, re)
-    };
-    let scounts = vec![sendcount; n];
-    let sdispls: Vec<isize> = (0..n).map(|r| r as isize * sendcount as isize * sext).collect();
-    let stypes = vec![sendtype; n];
-    let rcounts = vec![recvcount; n];
-    let rdispls: Vec<isize> = (0..n).map(|r| r as isize * recvcount as isize * rext).collect();
-    let rtypes = vec![recvtype; n];
-    let args = AlltoallwArgs {
-        sendbuf,
-        sendcounts: scounts,
-        sdispls,
-        sendtypes: stypes,
-        recvbuf,
-        recvcounts: rcounts,
-        rdispls,
-        recvtypes: rtypes,
-    };
-    alltoallw(&args, comm)
+    wait_coll(sched::ialltoall(sendbuf, sendcount, sendtype, recvbuf, recvcount, recvtype,
+        comm)?)
 }
 
 /// `MPI_Alltoallv` (displacements in type extents, MPI-style).
@@ -73,20 +37,8 @@ pub fn alltoallv(
     recvtype: DtId,
     comm: CommId,
 ) -> RC<()> {
-    let n = crate::core::comm::comm_size(comm)? as usize;
-    let sext = crate::core::datatype::type_get_extent(sendtype)?.1;
-    let rext = crate::core::datatype::type_get_extent(recvtype)?.1;
-    let args = AlltoallwArgs {
-        sendbuf,
-        sendcounts: sendcounts.to_vec(),
-        sdispls: sdispls_elems.iter().map(|&d| d * sext).collect(),
-        sendtypes: vec![sendtype; n],
-        recvbuf,
-        recvcounts: recvcounts.to_vec(),
-        rdispls: rdispls_elems.iter().map(|&d| d * rext).collect(),
-        recvtypes: vec![recvtype; n],
-    };
-    alltoallw(&args, comm)
+    wait_coll(sched::ialltoallv(sendbuf, sendcounts, sdispls_elems, sendtype, recvbuf,
+        recvcounts, rdispls_elems, recvtype, comm)?)
 }
 
 /// The `MPI_Alltoallw` argument bundle: per-peer counts, *byte*
@@ -104,90 +56,7 @@ pub struct AlltoallwArgs {
 
 /// `MPI_Alltoallw` (blocking).
 pub fn alltoallw(args: &AlltoallwArgs, comm: CommId) -> RC<()> {
-    with_ctx(|ctx| {
-        let rid = ialltoallw_impl(ctx, args, comm)?;
-        crate::core::request::wait_one(ctx, rid)?;
-        Ok(())
-    })
-}
-
-/// `MPI_Ialltoallw`: returns a compound request completing when all
-/// internal sends/recvs do.
-pub fn ialltoallw(args: &AlltoallwArgs, comm: CommId) -> RC<ReqId> {
-    with_ctx(|ctx| ialltoallw_impl(ctx, args, comm))
-}
-
-fn ialltoallw_impl(ctx: &RankCtx, args: &AlltoallwArgs, comm: CommId) -> RC<ReqId> {
-    let cc = coll_begin(comm)?;
-    let n = cc.size();
-    if args.sendcounts.len() != n || args.recvcounts.len() != n {
-        return Err(err!(MPI_ERR_COUNT));
-    }
-    let mut children = Vec::with_capacity(2 * n);
-    // Post all receives first (so racing peers' eager sends match).
-    for r in 0..n {
-        if r == cc.my_rank {
-            continue;
-        }
-        let dst = unsafe { args.recvbuf.offset(args.rdispls[r]) };
-        let rid = post_recv(
-            ctx,
-            dst as usize,
-            args.recvcounts[r],
-            args.recvtypes[r],
-            cc.members[r] as i32,
-            cc.tag,
-            cc.context,
-        );
-        children.push(rid);
-    }
-    // Send to every peer (eager — complete immediately).
-    for r in 0..n {
-        if r == cc.my_rank {
-            // Self-exchange: local pack/unpack.
-            let bytes = pack_at(ctx, args.sendbuf, args.sdispls[r], args.sendcounts[r],
-                args.sendtypes[r])?;
-            let t = ctx.tables.borrow();
-            let dst = unsafe { args.recvbuf.offset(args.rdispls[r]) };
-            unpack(&t.dtypes, &bytes, dst, args.recvcounts[r], args.recvtypes[r])?;
-            continue;
-        }
-        let bytes =
-            pack_at(ctx, args.sendbuf, args.sdispls[r], args.sendcounts[r], args.sendtypes[r])?;
-        let env = Envelope {
-            src: ctx.rank as u32,
-            context: cc.context,
-            tag: cc.tag,
-            kind: MsgKind::Eager,
-            seq: 0,
-            payload: Payload::from_vec(bytes),
-        };
-        crate::core::request::enqueue_send(ctx, cc.members[r], env);
-    }
-    if children.is_empty() {
-        // size-1 comm: complete immediately.
-        return Ok(new_request(ctx, ReqKind::Send, Some(StatusCore::empty())));
-    }
-    Ok(new_request(ctx, ReqKind::Coll { children }, None))
-}
-
-/// `MPI_Ibarrier`-alike used by the test suite: a compound request over a
-/// zero-byte alltoall (dissemination would need phase-aware children; an
-/// all-to-all of empty messages is a correct, simpler barrier).
-pub fn ibarrier(comm: CommId) -> RC<ReqId> {
-    let n = crate::core::comm::comm_size(comm)? as usize;
-    // Static empty buffers: no data moves, only synchronization.
-    let args = AlltoallwArgs {
-        sendbuf: std::ptr::NonNull::<u8>::dangling().as_ptr(),
-        sendcounts: vec![0; n],
-        sdispls: vec![0; n],
-        sendtypes: vec![DtId(0); n],
-        recvbuf: std::ptr::NonNull::<u8>::dangling().as_ptr(),
-        recvcounts: vec![0; n],
-        rdispls: vec![0; n],
-        recvtypes: vec![DtId(0); n],
-    };
-    ialltoallw(&args, comm)
+    wait_coll(sched::ialltoallw(args, comm)?)
 }
 
 /// Byte-level alltoall used internally and by benches: every rank sends
@@ -200,7 +69,8 @@ pub fn alltoall_bytes(send: &[u8], recv: &mut [u8], blk: usize, comm: CommId) ->
             if r == cc.my_rank {
                 recv[r * blk..(r + 1) * blk].copy_from_slice(&send[r * blk..(r + 1) * blk]);
             } else {
-                coll_send(ctx, &cc, r, Payload::from_slice(&send[r * blk..(r + 1) * blk]));
+                coll_send(ctx, &cc, r, crate::core::transport::Payload::from_slice(
+                    &send[r * blk..(r + 1) * blk]));
             }
         }
         for r in 0..n {

@@ -1,84 +1,15 @@
-//! Broadcast, reduction, and scan collectives.
+//! Broadcast, reduction, and scan collectives — blocking entry points.
+//!
+//! Each is `wait(i<coll>())` over the schedule engine ([`super::sched`]);
+//! the algorithms (binomial trees, reduce+bcast allreduce, linear scan
+//! chains) live exactly once, as schedule builders.
 
-use super::{bcast_bytes_cc, cc_clone, coll_begin, coll_recv, coll_send, CollCtx};
-use crate::core::datatype::pack::{pack, unpack};
-use crate::core::transport::Payload;
-use crate::core::world::{with_ctx, RankCtx};
-use crate::core::{err, CommId, DtId, OpId, RC};
-
-fn in_place(p: *const u8) -> bool {
-    p as usize == crate::abi::constants::MPI_IN_PLACE
-}
-
-fn pack_user(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Vec<u8>> {
-    let t = ctx.tables.borrow();
-    let mut v = Vec::new();
-    pack(&t.dtypes, buf, count, dt, &mut v)?;
-    Ok(v)
-}
-
-fn unpack_user(ctx: &RankCtx, data: &[u8], buf: *mut u8, count: usize, dt: DtId) -> RC<()> {
-    let t = ctx.tables.borrow();
-    unpack(&t.dtypes, data, buf, count, dt)?;
-    Ok(())
-}
-
-fn packed_len(ctx: &RankCtx, count: usize, dt: DtId) -> RC<usize> {
-    let t = ctx.tables.borrow();
-    Ok(t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?.size * count)
-}
+use super::{sched, wait_coll};
+use crate::core::{CommId, DtId, OpId, RC};
 
 /// `MPI_Bcast`.
 pub fn bcast(buf: *mut u8, count: usize, dt: DtId, root: i32, comm: CommId) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        if root < 0 || root as usize >= cc.size() {
-            return Err(err!(MPI_ERR_ROOT));
-        }
-        let root = root as usize;
-        if cc.size() <= 1 {
-            return Ok(());
-        }
-        let mut bytes = if cc.my_rank == root {
-            pack_user(ctx, buf, count, dt)?
-        } else {
-            vec![0u8; packed_len(ctx, count, dt)?]
-        };
-        bcast_bytes_cc(ctx, &cc, &mut bytes, root);
-        if cc.my_rank != root {
-            unpack_user(ctx, &bytes, buf, count, dt)?;
-        }
-        Ok(())
-    })
-}
-
-/// Binomial-tree byte reduction of `accum` toward virtual rank 0 (= real
-/// rank `root`). On return, `accum` at root holds the reduced bytes.
-fn reduce_bytes_cc(
-    ctx: &RankCtx,
-    cc: &CollCtx,
-    accum: &mut Vec<u8>,
-    count: usize,
-    dt: DtId,
-    op: OpId,
-    root: usize,
-) -> RC<()> {
-    let n = cc.size();
-    if n <= 1 {
-        return Ok(());
-    }
-    let vrank = (cc.my_rank + n - root) % n;
-    // Receive from each child (in ascending child order) and fold.
-    for child in super::children_of(vrank, n) {
-        let child_real = (child + root) % n;
-        let p = coll_recv(ctx, cc, child_real);
-        crate::core::op::apply(op, p.as_slice(), accum, count, dt)?;
-    }
-    if vrank != 0 {
-        let parent_real = (super::parent_of(vrank) + root) % n;
-        coll_send(ctx, cc, parent_real, Payload::from_slice(accum));
-    }
-    Ok(())
+    wait_coll(sched::ibcast(buf, count, dt, root, comm)?)
 }
 
 /// `MPI_Reduce`.
@@ -91,24 +22,7 @@ pub fn reduce(
     root: i32,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        if root < 0 || root as usize >= cc.size() {
-            return Err(err!(MPI_ERR_ROOT));
-        }
-        let root = root as usize;
-        let contrib = if in_place(sendbuf) && cc.my_rank == root {
-            recvbuf as *const u8
-        } else {
-            sendbuf
-        };
-        let mut accum = pack_user(ctx, contrib, count, dt)?;
-        reduce_bytes_cc(ctx, &cc, &mut accum, count, dt, op, root)?;
-        if cc.my_rank == root {
-            unpack_user(ctx, &accum, recvbuf, count, dt)?;
-        }
-        Ok(())
-    })
+    wait_coll(sched::ireduce(sendbuf, recvbuf, count, dt, op, root, comm)?)
 }
 
 /// `MPI_Allreduce` (reduce to 0, then broadcast — two tag phases of one
@@ -121,16 +35,7 @@ pub fn allreduce(
     op: OpId,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
-        let mut accum = pack_user(ctx, contrib, count, dt)?;
-        reduce_bytes_cc(ctx, &cc, &mut accum, count, dt, op, 0)?;
-        let bc = CollCtx { tag: cc.tag + 1, ..cc_clone(&cc) };
-        bcast_bytes_cc(ctx, &bc, &mut accum, 0);
-        unpack_user(ctx, &accum, recvbuf, count, dt)?;
-        Ok(())
-    })
+    wait_coll(sched::iallreduce(sendbuf, recvbuf, count, dt, op, comm)?)
 }
 
 /// `MPI_Reduce_scatter_block`.
@@ -142,27 +47,7 @@ pub fn reduce_scatter_block(
     op: OpId,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let total = recvcount * n;
-        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
-        let mut accum = pack_user(ctx, contrib, total, dt)?;
-        reduce_bytes_cc(ctx, &cc, &mut accum, total, dt, op, 0)?;
-        // Scatter blocks from rank 0 (phase 1).
-        let blk = packed_len(ctx, recvcount, dt)?;
-        let sc = CollCtx { tag: cc.tag + 1, ..cc_clone(&cc) };
-        if cc.my_rank == 0 {
-            for r in 1..n {
-                coll_send(ctx, &sc, r, Payload::from_slice(&accum[r * blk..(r + 1) * blk]));
-            }
-            unpack_user(ctx, &accum[..blk], recvbuf, recvcount, dt)?;
-        } else {
-            let p = coll_recv(ctx, &sc, 0);
-            unpack_user(ctx, p.as_slice(), recvbuf, recvcount, dt)?;
-        }
-        Ok(())
-    })
+    wait_coll(sched::ireduce_scatter_block(sendbuf, recvbuf, recvcount, dt, op, comm)?)
 }
 
 /// `MPI_Scan` (inclusive, linear chain).
@@ -174,22 +59,7 @@ pub fn scan(
     op: OpId,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
-        let mut accum = pack_user(ctx, contrib, count, dt)?;
-        if cc.my_rank > 0 {
-            let prev = coll_recv(ctx, &cc, cc.my_rank - 1);
-            // accum = op(prev, own): ranks 0..me fold in rank order.
-            crate::core::op::apply(op, prev.as_slice(), &mut accum, count, dt)?;
-        }
-        if cc.my_rank + 1 < n {
-            coll_send(ctx, &cc, cc.my_rank + 1, Payload::from_slice(&accum));
-        }
-        unpack_user(ctx, &accum, recvbuf, count, dt)?;
-        Ok(())
-    })
+    wait_coll(sched::iscan(sendbuf, recvbuf, count, dt, op, comm)?)
 }
 
 /// `MPI_Exscan` (exclusive; rank 0's recvbuf is untouched, as the
@@ -202,26 +72,5 @@ pub fn exscan(
     op: OpId,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
-        let own = pack_user(ctx, contrib, count, dt)?;
-        let mut partial: Option<Vec<u8>> = None; // op(x0..x_{me-1})
-        if cc.my_rank > 0 {
-            let p = coll_recv(ctx, &cc, cc.my_rank - 1);
-            partial = Some(p.as_slice().to_vec());
-        }
-        if cc.my_rank + 1 < n {
-            let mut fwd = own.clone();
-            if let Some(ref p) = partial {
-                crate::core::op::apply(op, p, &mut fwd, count, dt)?;
-            }
-            coll_send(ctx, &cc, cc.my_rank + 1, Payload::from_vec(fwd));
-        }
-        if let Some(p) = partial {
-            unpack_user(ctx, &p, recvbuf, count, dt)?;
-        }
-        Ok(())
-    })
+    wait_coll(sched::iexscan(sendbuf, recvbuf, count, dt, op, comm)?)
 }

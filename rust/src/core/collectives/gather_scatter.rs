@@ -1,86 +1,9 @@
-//! Gather/scatter/allgather collectives (linear, root-rooted; allgather
-//! adds a broadcast phase).
+//! Gather/scatter/allgather collectives — blocking entry points over the
+//! schedule engine ([`super::sched`]). Displacements are in type extents
+//! (MPI-style); the schedule builders convert to byte offsets.
 
-use super::{bcast_bytes_cc, cc_clone, coll_begin, coll_recv, coll_send, CollCtx};
-use crate::core::datatype::pack::{pack, unpack};
-use crate::core::transport::Payload;
-use crate::core::world::{with_ctx, RankCtx};
-use crate::core::{err, CommId, DtId, RC};
-
-fn in_place(p: *const u8) -> bool {
-    p as usize == crate::abi::constants::MPI_IN_PLACE
-}
-
-fn pack_user(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Vec<u8>> {
-    let t = ctx.tables.borrow();
-    let mut v = Vec::new();
-    pack(&t.dtypes, buf, count, dt, &mut v)?;
-    Ok(v)
-}
-
-fn unpack_at(
-    ctx: &RankCtx,
-    data: &[u8],
-    buf: *mut u8,
-    elem_offset: isize,
-    count: usize,
-    dt: DtId,
-) -> RC<()> {
-    let t = ctx.tables.borrow();
-    let extent = t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?.extent;
-    let dst = unsafe { buf.offset(extent * elem_offset) };
-    unpack(&t.dtypes, data, dst, count, dt)?;
-    Ok(())
-}
-
-fn pack_at(
-    ctx: &RankCtx,
-    buf: *const u8,
-    elem_offset: isize,
-    count: usize,
-    dt: DtId,
-) -> RC<Vec<u8>> {
-    let t = ctx.tables.borrow();
-    let extent = t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?.extent;
-    let src = unsafe { buf.offset(extent * elem_offset) };
-    let mut v = Vec::new();
-    pack(&t.dtypes, src, count, dt, &mut v)?;
-    Ok(v)
-}
-
-/// Core rooted gather with per-rank counts/displacements (in recvtype
-/// extents). `counts.len() == size`.
-#[allow(clippy::too_many_arguments)]
-fn gatherv_cc(
-    ctx: &RankCtx,
-    cc: &CollCtx,
-    sendbuf: *const u8,
-    sendcount: usize,
-    sendtype: DtId,
-    recvbuf: *mut u8,
-    counts: &[usize],
-    displs: &[isize],
-    recvtype: DtId,
-    root: usize,
-) -> RC<()> {
-    if cc.my_rank == root {
-        for r in 0..cc.size() {
-            if r == root {
-                if !in_place(sendbuf) {
-                    let own = pack_user(ctx, sendbuf, sendcount, sendtype)?;
-                    unpack_at(ctx, &own, recvbuf, displs[r], counts[r], recvtype)?;
-                }
-                continue;
-            }
-            let p = coll_recv(ctx, cc, r);
-            unpack_at(ctx, p.as_slice(), recvbuf, displs[r], counts[r], recvtype)?;
-        }
-    } else {
-        let bytes = pack_user(ctx, sendbuf, sendcount, sendtype)?;
-        coll_send(ctx, cc, root, Payload::from_vec(bytes));
-    }
-    Ok(())
-}
+use super::{sched, wait_coll};
+use crate::core::{CommId, DtId, RC};
 
 /// `MPI_Gather`.
 #[allow(clippy::too_many_arguments)]
@@ -94,19 +17,8 @@ pub fn gather(
     root: i32,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        if root < 0 || root as usize >= cc.size() {
-            return Err(err!(MPI_ERR_ROOT));
-        }
-        let n = cc.size();
-        let counts = vec![recvcount; n];
-        let displs: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
-        gatherv_cc(
-            ctx, &cc, sendbuf, sendcount, sendtype, recvbuf, &counts, &displs, recvtype,
-            root as usize,
-        )
-    })
+    wait_coll(sched::igather(sendbuf, sendcount, sendtype, recvbuf, recvcount, recvtype, root,
+        comm)?)
 }
 
 /// `MPI_Gatherv` (displacements in recvtype extents).
@@ -122,16 +34,8 @@ pub fn gatherv(
     root: i32,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        if root < 0 || root as usize >= cc.size() {
-            return Err(err!(MPI_ERR_ROOT));
-        }
-        gatherv_cc(
-            ctx, &cc, sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs, recvtype,
-            root as usize,
-        )
-    })
+    wait_coll(sched::igatherv(sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs,
+        recvtype, root, comm)?)
 }
 
 /// `MPI_Scatter`.
@@ -146,13 +50,8 @@ pub fn scatter(
     root: i32,
     comm: CommId,
 ) -> RC<()> {
-    let n_counts;
-    {
-        n_counts = crate::core::comm::comm_size(comm)? as usize;
-    }
-    let counts = vec![sendcount; n_counts];
-    let displs: Vec<isize> = (0..n_counts).map(|r| (r * sendcount) as isize).collect();
-    scatterv(sendbuf, &counts, &displs, sendtype, recvbuf, recvcount, recvtype, root, comm)
+    wait_coll(sched::iscatter(sendbuf, sendcount, sendtype, recvbuf, recvcount, recvtype, root,
+        comm)?)
 }
 
 /// `MPI_Scatterv` (displacements in sendtype extents).
@@ -168,32 +67,8 @@ pub fn scatterv(
     root: i32,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        if root < 0 || root as usize >= cc.size() {
-            return Err(err!(MPI_ERR_ROOT));
-        }
-        let root = root as usize;
-        if cc.my_rank == root {
-            for r in 0..cc.size() {
-                if r == root {
-                    if !in_place(recvbuf as *const u8) {
-                        let own = pack_at(ctx, sendbuf, displs[r], sendcounts[r], sendtype)?;
-                        let t = ctx.tables.borrow();
-                        unpack(&t.dtypes, &own, recvbuf, recvcount, recvtype)?;
-                    }
-                    continue;
-                }
-                let bytes = pack_at(ctx, sendbuf, displs[r], sendcounts[r], sendtype)?;
-                coll_send(ctx, &cc, r, Payload::from_vec(bytes));
-            }
-        } else {
-            let p = coll_recv(ctx, &cc, root);
-            let t = ctx.tables.borrow();
-            unpack(&t.dtypes, p.as_slice(), recvbuf, recvcount, recvtype)?;
-        }
-        Ok(())
-    })
+    wait_coll(sched::iscatterv(sendbuf, sendcounts, displs, sendtype, recvbuf, recvcount,
+        recvtype, root, comm)?)
 }
 
 /// `MPI_Allgather` (gather at 0, broadcast — two phases).
@@ -207,10 +82,8 @@ pub fn allgather(
     recvtype: DtId,
     comm: CommId,
 ) -> RC<()> {
-    let n = crate::core::comm::comm_size(comm)? as usize;
-    let counts = vec![recvcount; n];
-    let displs: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
-    allgatherv(sendbuf, sendcount, sendtype, recvbuf, &counts, &displs, recvtype, comm)
+    wait_coll(sched::iallgather(sendbuf, sendcount, sendtype, recvbuf, recvcount, recvtype,
+        comm)?)
 }
 
 /// `MPI_Allgatherv`.
@@ -225,54 +98,6 @@ pub fn allgatherv(
     recvtype: DtId,
     comm: CommId,
 ) -> RC<()> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        // For MPI_IN_PLACE the contribution is this rank's block of recvbuf.
-        let (sb, sc, st);
-        if in_place(sendbuf) {
-            sb = {
-                let t = ctx.tables.borrow();
-                let ext = t.dtypes.get(recvtype.0).ok_or(err!(MPI_ERR_TYPE))?.extent;
-                unsafe { (recvbuf as *const u8).offset(ext * displs[cc.my_rank]) }
-            };
-            sc = recvcounts[cc.my_rank];
-            st = recvtype;
-        } else {
-            sb = sendbuf;
-            sc = sendcount;
-            st = sendtype;
-        }
-        gatherv_cc(ctx, &cc, sb, sc, st, recvbuf, recvcounts, displs, recvtype, 0)?;
-        // Broadcast the fully-gathered packed buffer from 0 (phase 1).
-        let total: usize = recvcounts.iter().sum();
-        let mut bytes = if cc.my_rank == 0 {
-            // Repack from recvbuf blocks so displaced layouts transmit
-            // contiguously.
-            let mut v = Vec::new();
-            for r in 0..cc.size() {
-                let b = pack_at(ctx, recvbuf as *const u8, displs[r], recvcounts[r], recvtype)?;
-                v.extend_from_slice(&b);
-            }
-            v
-        } else {
-            let t = ctx.tables.borrow();
-            let per = t.dtypes.get(recvtype.0).ok_or(err!(MPI_ERR_TYPE))?.size;
-            vec![0u8; per * total]
-        };
-        let bc = CollCtx { tag: cc.tag + 1, ..cc_clone(&cc) };
-        bcast_bytes_cc(ctx, &bc, &mut bytes, 0);
-        if cc.my_rank != 0 {
-            let mut off = 0usize;
-            let per = {
-                let t = ctx.tables.borrow();
-                t.dtypes.get(recvtype.0).ok_or(err!(MPI_ERR_TYPE))?.size
-            };
-            for r in 0..cc.size() {
-                let len = per * recvcounts[r];
-                unpack_at(ctx, &bytes[off..off + len], recvbuf, displs[r], recvcounts[r], recvtype)?;
-                off += len;
-            }
-        }
-        Ok(())
-    })
+    wait_coll(sched::iallgatherv(sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs,
+        recvtype, comm)?)
 }

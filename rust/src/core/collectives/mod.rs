@@ -1,24 +1,34 @@
-//! Collective operations, implemented over the pt2pt engine on each
+//! Collective operations, expressed as per-rank schedules over each
 //! communicator's dedicated collective context plane.
 //!
 //! Algorithms: dissemination barrier, binomial-tree bcast/reduce,
 //! reduce+bcast allreduce, linear (root-rooted) gather/scatter familes,
 //! pairwise alltoall, linear scan. All collectives advance a per-comm
 //! collective tag so consecutive collectives never cross-match.
+//!
+//! Every algorithm lives exactly once, as a schedule builder in
+//! [`sched`]; the nonblocking entry points (`ibcast`, `iallreduce`, …)
+//! return the schedule's request, and the blocking entry points are
+//! `wait(i<coll>())` over the same schedules.
 
 mod alltoall;
 mod bcast_reduce;
 mod gather_scatter;
+pub mod sched;
 
-pub use alltoall::{alltoall, alltoall_bytes, alltoallv, alltoallw, ialltoallw, ibarrier, AlltoallwArgs};
+pub use alltoall::{alltoall, alltoall_bytes, alltoallv, alltoallw, AlltoallwArgs};
 pub use bcast_reduce::{allreduce, bcast, exscan, reduce, reduce_scatter_block, scan};
 pub use gather_scatter::{allgather, allgatherv, gather, gatherv, scatter, scatterv};
+pub use sched::{
+    iallgather, iallgatherv, iallreduce, ialltoall, ialltoallv, ialltoallw, ibarrier, ibcast,
+    iexscan, igather, igatherv, ireduce, ireduce_scatter_block, iscan, iscatter, iscatterv,
+};
 
 use super::comm::{advance_coll_tag, comm_snapshot};
 use super::request::{enqueue_send, progress};
 use super::transport::{Envelope, MsgKind, Payload};
 use super::world::{with_ctx, RankCtx};
-use super::{CommId, RC};
+use super::{CommId, MpiError, RC, ReqId};
 
 /// Snapshot of what a collective needs: members, my comm rank, the
 /// collective context id, and this collective's tag.
@@ -84,33 +94,24 @@ pub(crate) fn coll_recv(ctx: &RankCtx, cc: &CollCtx, src: usize) -> Payload {
     }
 }
 
-/// `MPI_Barrier`: dissemination algorithm (⌈log2 n⌉ rounds), one tag
-/// phase per round so a racing peer's later round never cross-matches.
-pub fn barrier(comm: CommId) -> RC<()> {
+/// Block until the collective request `rid` completes, surfacing any
+/// error class its schedule recorded. The blocking collectives are all
+/// `submit schedule → wait_coll`.
+pub(crate) fn wait_coll(rid: ReqId) -> RC<()> {
     with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        if n <= 1 {
-            return Ok(());
-        }
-        let mut k = 1usize;
-        let mut round = 0i32;
-        while k < n {
-            let dst = (cc.my_rank + k) % n;
-            let src = (cc.my_rank + n - k) % n;
-            let rc = CollCtx { tag: cc.tag + round, ..cc_clone(&cc) };
-            coll_send(ctx, &rc, dst, Payload::empty());
-            let _ = coll_recv(ctx, &rc, src);
-            k <<= 1;
-            round += 1;
+        let st = super::request::wait_one(ctx, rid)?;
+        if st.error != 0 {
+            return Err(MpiError::new(st.error));
         }
         Ok(())
     })
 }
 
-/// Cheap CollCtx clone for per-phase tag adjustment.
-pub(crate) fn cc_clone(cc: &CollCtx) -> CollCtx {
-    CollCtx { members: cc.members.clone(), my_rank: cc.my_rank, context: cc.context, tag: cc.tag }
+/// `MPI_Barrier` = wait(`MPI_Ibarrier`): dissemination algorithm
+/// (⌈log2 n⌉ rounds), one tag phase per round so a racing peer's later
+/// round never cross-matches.
+pub fn barrier(comm: CommId) -> RC<()> {
+    wait_coll(sched::ibarrier(comm)?)
 }
 
 /// Engine-internal: broadcast a fixed byte buffer (used by comm creation

@@ -1,0 +1,998 @@
+//! The collective **schedule engine**.
+//!
+//! Every collective is expressed as a per-rank *schedule*: an ordered
+//! list of send / receive / local-reduce steps over the communicator's
+//! collective context plane, advanced incrementally by the progress
+//! engine ([`crate::core::request::progress`]). A nonblocking collective
+//! (`MPI_Ibcast`, `MPI_Iallreduce`, …) is a request whose kind holds its
+//! schedule; the blocking collectives are `wait(i<coll>())` over the same
+//! schedules, so there is exactly one implementation of each algorithm.
+//!
+//! This is the schedule/progress design MPICH uses for its nonblocking
+//! collectives (Zhou et al., "Designing and Prototyping Extensions to
+//! MPI in MPICH"), shrunk to this engine's eager transport:
+//!
+//! * sends are eager — executing a send step enqueues an envelope and
+//!   never blocks;
+//! * a receive step *parks* the schedule until a matching envelope shows
+//!   up in the unexpected queue, then applies its [`RecvAction`];
+//! * tag phases (`base_tag + phase`, see [`super::PHASES_PER_COLL`])
+//!   separate the rounds of one collective, while the per-comm collective
+//!   sequence separates *concurrent* collectives — which is what makes
+//!   out-of-order completion of overlapping nonblocking collectives safe.
+//!
+//! Schedules progress whenever the rank enters the progress engine
+//! (any test/wait/recv), so an `iallreduce` overlaps pt2pt traffic and
+//! other collectives on the same communicator.
+
+use std::collections::VecDeque;
+
+use super::{children_of, coll_begin, parent_of, CollCtx};
+use crate::core::comm::comm_size;
+use crate::core::datatype::pack::{pack, unpack};
+use crate::core::request::{enqueue_send, new_request, ReqKind, StatusCore};
+use crate::core::transport::{Envelope, MsgKind, Payload};
+use crate::core::world::{with_ctx, RankCtx};
+use crate::core::{err, CommId, DtId, OpId, RC, ReqId};
+
+// ---------------------------------------------------------------------------
+// Schedule representation
+// ---------------------------------------------------------------------------
+
+/// What to do with the bytes of a matched receive step.
+pub(crate) enum RecvAction {
+    /// Drop the payload (pure synchronization, e.g. barrier rounds).
+    Discard,
+    /// Replace the accumulator with the payload (tree broadcast).
+    Store,
+    /// Copy the payload into the accumulator at `offset` (gather phases).
+    StoreAt { offset: usize, len: usize },
+    /// Stash the payload in the auxiliary buffer (exscan's partial).
+    StoreAux,
+    /// Fold the payload into the accumulator: `accum = op(payload, accum)`
+    /// (reduction trees and scan chains; fold order matches the blocking
+    /// algorithms so non-commutative user ops see identical bracketing).
+    Combine { op: OpId, count: usize, dt: DtId },
+    /// Unpack the payload straight into user memory at `buf + displ`
+    /// (rooted gathers, scatter leaves, alltoall blocks).
+    Unpack { buf: usize, displ: isize, count: usize, dt: DtId },
+}
+
+/// One step of a per-rank collective schedule. Peers are *comm ranks*;
+/// `phase` offsets the collective's base tag (bounded by
+/// [`super::PHASES_PER_COLL`]).
+pub(crate) enum Step {
+    /// Eager-send bytes fixed at schedule-build time.
+    Send { to: usize, phase: i32, data: Vec<u8> },
+    /// Eager-send the accumulator (or `range` of it) *as of execution
+    /// time* — for data produced by earlier receive steps.
+    SendAccum { to: usize, phase: i32, range: Option<(usize, usize)> },
+    /// Park until a message from `from` on `phase` arrives, then apply
+    /// `action`.
+    Recv { from: usize, phase: i32, action: RecvAction },
+    /// `accum = op(aux, accum)` (exscan's forward combine).
+    FoldAux { op: OpId, count: usize, dt: DtId },
+    /// Unpack accumulator bytes (or `range` of them; or the aux buffer)
+    /// into user memory at `buf + displ`.
+    Unpack {
+        buf: usize,
+        displ: isize,
+        count: usize,
+        dt: DtId,
+        range: Option<(usize, usize)>,
+        from_aux: bool,
+    },
+}
+
+/// A per-rank collective schedule: the restartable state of one
+/// in-flight collective. Lives inside its request
+/// ([`ReqKind::Sched`]) and is advanced by [`progress_scheds`].
+pub struct Schedule {
+    /// Member world ranks, comm-rank order (snapshot from coll_begin).
+    members: Vec<usize>,
+    /// The collective context id of the communicator.
+    context: u32,
+    /// Base tag of this collective (phases offset it).
+    tag: i32,
+    /// Remaining steps, executed front to back.
+    steps: VecDeque<Step>,
+    /// Working buffer (packed bytes) threaded through the steps.
+    accum: Vec<u8>,
+    /// Secondary buffer for algorithms needing two live values (exscan).
+    aux: Vec<u8>,
+    /// Payload bytes received so far (reported in the final status).
+    recv_bytes: u64,
+}
+
+impl Schedule {
+    fn new(cc: CollCtx) -> Schedule {
+        Schedule {
+            members: cc.members,
+            context: cc.context,
+            tag: cc.tag,
+            steps: VecDeque::new(),
+            accum: Vec::new(),
+            aux: Vec::new(),
+            recv_bytes: 0,
+        }
+    }
+
+    fn push(&mut self, s: Step) {
+        self.steps.push_back(s);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+/// Clamped view of `buf[off..off+len]`. Ranges are derived from counts
+/// the *local* rank passed; if a peer disagrees (a user error MPI reports
+/// as truncation), the mismatch must not become a cross-thread panic.
+fn ranged(buf: &[u8], range: Option<(usize, usize)>) -> &[u8] {
+    match range {
+        Some((off, len)) => {
+            let start = off.min(buf.len());
+            let end = off.saturating_add(len).min(buf.len());
+            &buf[start..end]
+        }
+        None => buf,
+    }
+}
+
+fn send_payload(ctx: &RankCtx, s: &Schedule, to: usize, phase: i32, payload: Payload) {
+    let env = Envelope {
+        src: ctx.rank as u32,
+        context: s.context,
+        tag: s.tag + phase,
+        kind: MsgKind::Eager,
+        seq: 0,
+        payload,
+    };
+    enqueue_send(ctx, s.members[to], env);
+}
+
+fn apply_recv(ctx: &RankCtx, s: &mut Schedule, payload: Payload, action: RecvAction) -> RC<()> {
+    let data = payload.as_slice();
+    match action {
+        RecvAction::Discard => Ok(()),
+        RecvAction::Store => {
+            s.accum = data.to_vec();
+            Ok(())
+        }
+        RecvAction::StoreAt { offset, len } => {
+            let end = (offset + len).min(s.accum.len());
+            if offset < end {
+                let take = (end - offset).min(data.len());
+                s.accum[offset..offset + take].copy_from_slice(&data[..take]);
+            }
+            Ok(())
+        }
+        RecvAction::StoreAux => {
+            s.aux = data.to_vec();
+            Ok(())
+        }
+        RecvAction::Combine { op, count, dt } => {
+            crate::core::op::apply(op, data, &mut s.accum, count, dt)
+        }
+        RecvAction::Unpack { buf, displ, count, dt } => {
+            let t = ctx.tables.borrow();
+            let dst = unsafe { (buf as *mut u8).offset(displ) };
+            unpack(&t.dtypes, data, dst, count, dt)?;
+            Ok(())
+        }
+    }
+}
+
+/// Run `s` as far as it will go without blocking. `Ok(true)` = finished.
+fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
+    loop {
+        let Some(step) = s.steps.pop_front() else { return Ok(true) };
+        match step {
+            Step::Send { to, phase, data } => {
+                send_payload(ctx, s, to, phase, Payload::from_vec(data));
+            }
+            Step::SendAccum { to, phase, range } => {
+                let payload = Payload::from_slice(ranged(&s.accum, range));
+                send_payload(ctx, s, to, phase, payload);
+            }
+            Step::Recv { from, phase, action } => {
+                let want_src = s.members[from] as i32;
+                let tag = s.tag + phase;
+                let matched = {
+                    let mut st = ctx.state.borrow_mut();
+                    let found =
+                        st.unexpected.iter().position(|e| e.matches(s.context, want_src, tag));
+                    found.map(|i| st.unexpected.remove(i).unwrap())
+                };
+                match matched {
+                    Some(env) => {
+                        s.recv_bytes += env.payload.len() as u64;
+                        apply_recv(ctx, s, env.payload, action)?;
+                    }
+                    None => {
+                        // Not here yet: park on this step.
+                        s.steps.push_front(Step::Recv { from, phase, action });
+                        return Ok(false);
+                    }
+                }
+            }
+            Step::FoldAux { op, count, dt } => {
+                let aux = std::mem::take(&mut s.aux);
+                let r = crate::core::op::apply(op, &aux, &mut s.accum, count, dt);
+                s.aux = aux;
+                r?;
+            }
+            Step::Unpack { buf, displ, count, dt, range, from_aux } => {
+                let src = ranged(if from_aux { &s.aux } else { &s.accum }, range);
+                let t = ctx.tables.borrow();
+                let dst = unsafe { (buf as *mut u8).offset(displ) };
+                unpack(&t.dtypes, src, dst, count, dt)?;
+            }
+        }
+    }
+}
+
+fn complete_status(s: &Schedule) -> StatusCore {
+    let mut st = StatusCore::empty();
+    st.count_bytes = s.recv_bytes;
+    st
+}
+
+/// Register a built schedule as a request, advancing it once immediately
+/// (local-only schedules — size-1 comms, leaf-only work — complete here).
+fn submit(ctx: &RankCtx, mut s: Schedule) -> RC<ReqId> {
+    if advance(ctx, &mut s)? {
+        return Ok(new_request(ctx, ReqKind::Send, Some(complete_status(&s))));
+    }
+    let rid = new_request(ctx, ReqKind::Sched(Box::new(s)), None);
+    ctx.state.borrow_mut().active_scheds.push(rid);
+    Ok(rid)
+}
+
+/// Progress-engine hook: advance every in-flight schedule. Called from
+/// [`crate::core::request::progress`] after the fabric drain, so parked
+/// receive steps see freshly-arrived envelopes.
+///
+/// Allocation-free: this sits inside every wait/test spin loop, so it
+/// walks `active_scheds` in place (`swap_remove` on completion) instead
+/// of snapshotting it.
+pub(crate) fn progress_scheds(ctx: &RankCtx) {
+    // Re-entrancy guard: a user reduction op may legally call back into
+    // MPI (and thus into progress) while a Combine step runs.
+    if ctx.sched_pump.get() {
+        return;
+    }
+    if ctx.state.borrow().active_scheds.is_empty() {
+        return;
+    }
+    ctx.sched_pump.set(true);
+    enum Taken {
+        Sched(Box<Schedule>),
+        Keep,
+        Drop,
+    }
+    let mut i = 0usize;
+    loop {
+        // Re-read the list each step: a user op callback may submit new
+        // collectives (appends) while we pump.
+        let Some(rid) = ctx.state.borrow().active_scheds.get(i).copied() else { break };
+        // Move the schedule out of the request table so advancing it can
+        // re-borrow tables (pack/unpack, user ops) freely.
+        let taken = {
+            let mut t = ctx.tables.borrow_mut();
+            match t.reqs.get_mut(rid.0) {
+                Some(req) if req.status.is_none() => {
+                    match std::mem::replace(&mut req.kind, ReqKind::Send) {
+                        ReqKind::Sched(s) => Taken::Sched(s),
+                        other => {
+                            req.kind = other;
+                            Taken::Keep
+                        }
+                    }
+                }
+                // Completed and/or already freed by the user.
+                _ => Taken::Drop,
+            }
+        };
+        let keep = match taken {
+            Taken::Keep => true,
+            Taken::Drop => false,
+            Taken::Sched(mut sched) => {
+                let outcome = advance(ctx, &mut sched);
+                let mut t = ctx.tables.borrow_mut();
+                match t.reqs.get_mut(rid.0) {
+                    None => false,
+                    Some(req) => match outcome {
+                        Ok(true) => {
+                            req.status = Some(complete_status(&sched));
+                            false
+                        }
+                        Ok(false) => {
+                            req.kind = ReqKind::Sched(sched);
+                            true
+                        }
+                        Err(e) => {
+                            let mut st = complete_status(&sched);
+                            st.error = e.class;
+                            req.status = Some(st);
+                            false
+                        }
+                    },
+                }
+            }
+        };
+        if keep {
+            i += 1;
+        } else {
+            // The swapped-in tail element is unprocessed; revisit index i.
+            ctx.state.borrow_mut().active_scheds.swap_remove(i);
+        }
+    }
+    ctx.sched_pump.set(false);
+}
+
+// ---------------------------------------------------------------------------
+// Build helpers
+// ---------------------------------------------------------------------------
+
+fn in_place(p: *const u8) -> bool {
+    p as usize == crate::abi::constants::MPI_IN_PLACE
+}
+
+fn pack_user(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Vec<u8>> {
+    let t = ctx.tables.borrow();
+    let mut v = Vec::new();
+    pack(&t.dtypes, buf, count, dt, &mut v)?;
+    Ok(v)
+}
+
+/// Pack `count` items of `dt` at byte displacement `displ` from `buf`.
+fn pack_at(ctx: &RankCtx, buf: *const u8, displ: isize, count: usize, dt: DtId) -> RC<Vec<u8>> {
+    let t = ctx.tables.borrow();
+    let src = unsafe { buf.offset(displ) };
+    let mut v = Vec::new();
+    pack(&t.dtypes, src, count, dt, &mut v)?;
+    Ok(v)
+}
+
+/// Unpack into user memory at byte displacement `displ` from `buf`.
+fn unpack_at(
+    ctx: &RankCtx,
+    data: &[u8],
+    buf: *mut u8,
+    displ: isize,
+    count: usize,
+    dt: DtId,
+) -> RC<()> {
+    let t = ctx.tables.borrow();
+    let dst = unsafe { buf.offset(displ) };
+    unpack(&t.dtypes, data, dst, count, dt)?;
+    Ok(())
+}
+
+fn packed_len(ctx: &RankCtx, count: usize, dt: DtId) -> RC<usize> {
+    let t = ctx.tables.borrow();
+    Ok(t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?.size * count)
+}
+
+fn extent_of(ctx: &RankCtx, dt: DtId) -> RC<isize> {
+    let t = ctx.tables.borrow();
+    Ok(t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?.extent)
+}
+
+fn check_root(cc: &CollCtx, root: i32) -> RC<usize> {
+    if root < 0 || root as usize >= cc.size() {
+        return Err(err!(MPI_ERR_ROOT));
+    }
+    Ok(root as usize)
+}
+
+// ---------------------------------------------------------------------------
+// Schedule builders: the nonblocking collective family
+// ---------------------------------------------------------------------------
+
+/// `MPI_Ibarrier`: dissemination algorithm, one tag phase per round.
+pub fn ibarrier(comm: CommId) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let mut s = Schedule::new(cc);
+        let mut k = 1usize;
+        let mut round = 0i32;
+        while k < n {
+            let dst = (me + k) % n;
+            let src = (me + n - k) % n;
+            s.push(Step::Send { to: dst, phase: round, data: Vec::new() });
+            s.push(Step::Recv { from: src, phase: round, action: RecvAction::Discard });
+            k <<= 1;
+            round += 1;
+        }
+        submit(ctx, s)
+    })
+}
+
+/// Append a binomial-tree broadcast of the accumulator (rooted at comm
+/// rank `root`, tag phase `phase`) to `s`.
+fn push_bcast_tree(s: &mut Schedule, me: usize, n: usize, root: usize, phase: i32) {
+    let vrank = (me + n - root) % n;
+    if vrank != 0 {
+        let parent_real = (parent_of(vrank) + root) % n;
+        s.push(Step::Recv { from: parent_real, phase, action: RecvAction::Store });
+    }
+    for child in children_of(vrank, n) {
+        let child_real = (child + root) % n;
+        s.push(Step::SendAccum { to: child_real, phase, range: None });
+    }
+}
+
+/// Append a binomial-tree reduction of the accumulator toward comm rank
+/// `root` on tag phase `phase`.
+fn push_reduce_tree(
+    s: &mut Schedule,
+    me: usize,
+    n: usize,
+    root: usize,
+    phase: i32,
+    op: OpId,
+    count: usize,
+    dt: DtId,
+) {
+    let vrank = (me + n - root) % n;
+    for child in children_of(vrank, n) {
+        let child_real = (child + root) % n;
+        s.push(Step::Recv {
+            from: child_real,
+            phase,
+            action: RecvAction::Combine { op, count, dt },
+        });
+    }
+    if vrank != 0 {
+        let parent_real = (parent_of(vrank) + root) % n;
+        s.push(Step::SendAccum { to: parent_real, phase, range: None });
+    }
+}
+
+/// `MPI_Ibcast`.
+pub fn ibcast(buf: *mut u8, count: usize, dt: DtId, root: i32, comm: CommId) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let root = check_root(&cc, root)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let mut s = Schedule::new(cc);
+        if n > 1 {
+            if me == root {
+                s.accum = pack_user(ctx, buf as *const u8, count, dt)?;
+            }
+            push_bcast_tree(&mut s, me, n, root, 0);
+            if me != root {
+                s.push(Step::Unpack {
+                    buf: buf as usize,
+                    displ: 0,
+                    count,
+                    dt,
+                    range: None,
+                    from_aux: false,
+                });
+            }
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Ireduce`.
+pub fn ireduce(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let root = check_root(&cc, root)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let contrib =
+            if in_place(sendbuf) && me == root { recvbuf as *const u8 } else { sendbuf };
+        let mut s = Schedule::new(cc);
+        s.accum = pack_user(ctx, contrib, count, dt)?;
+        push_reduce_tree(&mut s, me, n, root, 0, op, count, dt);
+        if me == root {
+            s.push(Step::Unpack {
+                buf: recvbuf as usize,
+                displ: 0,
+                count,
+                dt,
+                range: None,
+                from_aux: false,
+            });
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Iallreduce` (reduce to comm rank 0, then broadcast — two phases).
+pub fn iallreduce(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+        let mut s = Schedule::new(cc);
+        s.accum = pack_user(ctx, contrib, count, dt)?;
+        if n > 1 {
+            push_reduce_tree(&mut s, me, n, 0, 0, op, count, dt);
+            push_bcast_tree(&mut s, me, n, 0, 1);
+        }
+        s.push(Step::Unpack {
+            buf: recvbuf as usize,
+            displ: 0,
+            count,
+            dt,
+            range: None,
+            from_aux: false,
+        });
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Igatherv` (displacements in recvtype extents, MPI-style).
+#[allow(clippy::too_many_arguments)]
+pub fn igatherv(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    displs: &[isize],
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let root = check_root(&cc, root)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        if me == root && (recvcounts.len() != n || displs.len() != n) {
+            return Err(err!(MPI_ERR_COUNT));
+        }
+        let mut s = Schedule::new(cc);
+        if me == root {
+            let rext = extent_of(ctx, recvtype)?;
+            if !in_place(sendbuf) {
+                let own = pack_user(ctx, sendbuf, sendcount, sendtype)?;
+                unpack_at(ctx, &own, recvbuf, rext * displs[me], recvcounts[me], recvtype)?;
+            }
+            for r in 0..n {
+                if r == root {
+                    continue;
+                }
+                s.push(Step::Recv {
+                    from: r,
+                    phase: 0,
+                    action: RecvAction::Unpack {
+                        buf: recvbuf as usize,
+                        displ: rext * displs[r],
+                        count: recvcounts[r],
+                        dt: recvtype,
+                    },
+                });
+            }
+        } else {
+            let bytes = pack_user(ctx, sendbuf, sendcount, sendtype)?;
+            s.push(Step::Send { to: root, phase: 0, data: bytes });
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Igather`.
+#[allow(clippy::too_many_arguments)]
+pub fn igather(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let counts = vec![recvcount; n];
+    let displs: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
+    igatherv(sendbuf, sendcount, sendtype, recvbuf, &counts, &displs, recvtype, root, comm)
+}
+
+/// `MPI_Iscatterv` (displacements in sendtype extents).
+#[allow(clippy::too_many_arguments)]
+pub fn iscatterv(
+    sendbuf: *const u8,
+    sendcounts: &[usize],
+    displs: &[isize],
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let root = check_root(&cc, root)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        if me == root && (sendcounts.len() != n || displs.len() != n) {
+            return Err(err!(MPI_ERR_COUNT));
+        }
+        let mut s = Schedule::new(cc);
+        if me == root {
+            let sext = extent_of(ctx, sendtype)?;
+            for r in 0..n {
+                if r == root {
+                    // In place: the root's block stays where it is.
+                    if !in_place(recvbuf as *const u8) {
+                        let own =
+                            pack_at(ctx, sendbuf, sext * displs[r], sendcounts[r], sendtype)?;
+                        unpack_at(ctx, &own, recvbuf, 0, recvcount, recvtype)?;
+                    }
+                } else {
+                    let bytes =
+                        pack_at(ctx, sendbuf, sext * displs[r], sendcounts[r], sendtype)?;
+                    s.push(Step::Send { to: r, phase: 0, data: bytes });
+                }
+            }
+        } else {
+            s.push(Step::Recv {
+                from: root,
+                phase: 0,
+                action: RecvAction::Unpack {
+                    buf: recvbuf as usize,
+                    displ: 0,
+                    count: recvcount,
+                    dt: recvtype,
+                },
+            });
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Iscatter`.
+#[allow(clippy::too_many_arguments)]
+pub fn iscatter(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let counts = vec![sendcount; n];
+    let displs: Vec<isize> = (0..n).map(|r| (r * sendcount) as isize).collect();
+    iscatterv(sendbuf, &counts, &displs, sendtype, recvbuf, recvcount, recvtype, root, comm)
+}
+
+/// `MPI_Iallgatherv`: gather packed blocks into the accumulator at comm
+/// rank 0 (phase 0), broadcast it (phase 1), unpack every block locally.
+#[allow(clippy::too_many_arguments)]
+pub fn iallgatherv(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    displs: &[isize],
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        if recvcounts.len() != n || displs.len() != n {
+            return Err(err!(MPI_ERR_COUNT));
+        }
+        let rext = extent_of(ctx, recvtype)?;
+        let per = packed_len(ctx, 1, recvtype)?;
+        // Packed block offsets in the accumulator.
+        let mut offs = Vec::with_capacity(n);
+        let mut total = 0usize;
+        for &c in recvcounts {
+            offs.push(total);
+            total += per * c;
+        }
+        // My contribution (for MPI_IN_PLACE: my block of recvbuf).
+        let own = if in_place(sendbuf) {
+            pack_at(ctx, recvbuf as *const u8, rext * displs[me], recvcounts[me], recvtype)?
+        } else {
+            pack_user(ctx, sendbuf, sendcount, sendtype)?
+        };
+        let mut s = Schedule::new(cc);
+        if me == 0 {
+            s.accum = vec![0u8; total];
+            let take = own.len().min(total - offs[0]);
+            s.accum[offs[0]..offs[0] + take].copy_from_slice(&own[..take]);
+            for r in 1..n {
+                s.push(Step::Recv {
+                    from: r,
+                    phase: 0,
+                    action: RecvAction::StoreAt { offset: offs[r], len: per * recvcounts[r] },
+                });
+            }
+        } else {
+            s.push(Step::Send { to: 0, phase: 0, data: own });
+        }
+        push_bcast_tree(&mut s, me, n, 0, 1);
+        for r in 0..n {
+            s.push(Step::Unpack {
+                buf: recvbuf as usize,
+                displ: rext * displs[r],
+                count: recvcounts[r],
+                dt: recvtype,
+                range: Some((offs[r], per * recvcounts[r])),
+                from_aux: false,
+            });
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Iallgather`.
+#[allow(clippy::too_many_arguments)]
+pub fn iallgather(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let counts = vec![recvcount; n];
+    let displs: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
+    iallgatherv(sendbuf, sendcount, sendtype, recvbuf, &counts, &displs, recvtype, comm)
+}
+
+/// `MPI_Ialltoallw` over the schedule engine: one eager send and one
+/// parked receive per peer, all on phase 0 (peer identity disambiguates).
+///
+/// `MPI_IN_PLACE` works because *all* send blocks are packed at build
+/// time, before any receive step can overwrite `recvbuf`: the in-place
+/// send side is simply the receive side's layout.
+pub fn ialltoallw(args: &super::AlltoallwArgs, comm: CommId) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let inp = in_place(args.sendbuf);
+        if args.recvcounts.len() != n || (!inp && args.sendcounts.len() != n) {
+            return Err(err!(MPI_ERR_COUNT));
+        }
+        // Resolve the send side: for MPI_IN_PLACE the data to distribute
+        // sits in recvbuf with the receive-side layout.
+        let (sbuf, scounts, sdispls, stypes) = if inp {
+            (args.recvbuf as *const u8, &args.recvcounts, &args.rdispls, &args.recvtypes)
+        } else {
+            (args.sendbuf, &args.sendcounts, &args.sdispls, &args.sendtypes)
+        };
+        let mut s = Schedule::new(cc);
+        for r in 0..n {
+            let bytes = pack_at(ctx, sbuf, sdispls[r], scounts[r], stypes[r])?;
+            if r == me {
+                // Self-exchange: local pack/unpack at build time.
+                unpack_at(ctx, &bytes, args.recvbuf, args.rdispls[r], args.recvcounts[r],
+                    args.recvtypes[r])?;
+            } else {
+                s.push(Step::Send { to: r, phase: 0, data: bytes });
+            }
+        }
+        for r in 0..n {
+            if r == me {
+                continue;
+            }
+            s.push(Step::Recv {
+                from: r,
+                phase: 0,
+                action: RecvAction::Unpack {
+                    buf: args.recvbuf as usize,
+                    displ: args.rdispls[r],
+                    count: args.recvcounts[r],
+                    dt: args.recvtypes[r],
+                },
+            });
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Ialltoallv` (displacements in type extents).
+#[allow(clippy::too_many_arguments)]
+pub fn ialltoallv(
+    sendbuf: *const u8,
+    sendcounts: &[usize],
+    sdispls_elems: &[isize],
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    rdispls_elems: &[isize],
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let sext = crate::core::datatype::type_get_extent(sendtype)?.1;
+    let rext = crate::core::datatype::type_get_extent(recvtype)?.1;
+    let args = super::AlltoallwArgs {
+        sendbuf,
+        sendcounts: sendcounts.to_vec(),
+        sdispls: sdispls_elems.iter().map(|&d| d * sext).collect(),
+        sendtypes: vec![sendtype; n],
+        recvbuf,
+        recvcounts: recvcounts.to_vec(),
+        rdispls: rdispls_elems.iter().map(|&d| d * rext).collect(),
+        recvtypes: vec![recvtype; n],
+    };
+    ialltoallw(&args, comm)
+}
+
+/// `MPI_Ialltoall`.
+#[allow(clippy::too_many_arguments)]
+pub fn ialltoall(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let scounts = vec![sendcount; n];
+    let sdispls: Vec<isize> = (0..n).map(|r| (r * sendcount) as isize).collect();
+    let rcounts = vec![recvcount; n];
+    let rdispls: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
+    ialltoallv(sendbuf, &scounts, &sdispls, sendtype, recvbuf, &rcounts, &rdispls, recvtype, comm)
+}
+
+/// `MPI_Iscan` (inclusive, linear chain).
+pub fn iscan(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+        let mut s = Schedule::new(cc);
+        s.accum = pack_user(ctx, contrib, count, dt)?;
+        if me > 0 {
+            s.push(Step::Recv {
+                from: me - 1,
+                phase: 0,
+                action: RecvAction::Combine { op, count, dt },
+            });
+        }
+        if me + 1 < n {
+            s.push(Step::SendAccum { to: me + 1, phase: 0, range: None });
+        }
+        s.push(Step::Unpack {
+            buf: recvbuf as usize,
+            displ: 0,
+            count,
+            dt,
+            range: None,
+            from_aux: false,
+        });
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Iexscan` (exclusive; rank 0's recvbuf stays untouched).
+pub fn iexscan(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+        let mut s = Schedule::new(cc);
+        s.accum = pack_user(ctx, contrib, count, dt)?; // own contribution
+        if me > 0 {
+            s.push(Step::Recv { from: me - 1, phase: 0, action: RecvAction::StoreAux });
+        }
+        if me + 1 < n {
+            if me > 0 {
+                // forward = op(partial, own)
+                s.push(Step::FoldAux { op, count, dt });
+            }
+            s.push(Step::SendAccum { to: me + 1, phase: 0, range: None });
+        }
+        if me > 0 {
+            s.push(Step::Unpack {
+                buf: recvbuf as usize,
+                displ: 0,
+                count,
+                dt,
+                range: None,
+                from_aux: true,
+            });
+        }
+        submit(ctx, s)
+    })
+}
+
+/// `MPI_Ireduce_scatter_block`: reduce the full vector to comm rank 0
+/// (phase 0), scatter the per-rank blocks from there (phase 1).
+pub fn ireduce_scatter_block(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        let me = cc.my_rank;
+        let total = recvcount * n;
+        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+        let blk = packed_len(ctx, recvcount, dt)?;
+        let mut s = Schedule::new(cc);
+        s.accum = pack_user(ctx, contrib, total, dt)?;
+        push_reduce_tree(&mut s, me, n, 0, 0, op, total, dt);
+        if me == 0 {
+            for r in 1..n {
+                s.push(Step::SendAccum { to: r, phase: 1, range: Some((r * blk, blk)) });
+            }
+            s.push(Step::Unpack {
+                buf: recvbuf as usize,
+                displ: 0,
+                count: recvcount,
+                dt,
+                range: Some((0, blk)),
+                from_aux: false,
+            });
+        } else {
+            s.push(Step::Recv {
+                from: 0,
+                phase: 1,
+                action: RecvAction::Unpack {
+                    buf: recvbuf as usize,
+                    displ: 0,
+                    count: recvcount,
+                    dt,
+                },
+            });
+        }
+        submit(ctx, s)
+    })
+}

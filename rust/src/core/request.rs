@@ -48,8 +48,9 @@ pub enum ReqKind {
     Ssend { sync_id: u64 },
     /// Posted receive.
     Recv { buf: usize, count: usize, dt: DtId, src: i32, tag: i32, context: u32 },
-    /// Compound (e.g. `MPI_Ialltoallw`): complete when all children are.
-    Coll { children: Vec<ReqId> },
+    /// Nonblocking collective: a schedule advanced by the progress engine
+    /// (see [`crate::core::collectives::sched`]).
+    Sched(Box<crate::core::collectives::sched::Schedule>),
 }
 
 pub struct RequestObj {
@@ -81,7 +82,8 @@ pub(crate) fn post_recv(
     id
 }
 
-/// One progress cycle: flush deferred sends, drain the fabric, match.
+/// One progress cycle: flush deferred sends, drain the fabric, match,
+/// then advance every in-flight collective schedule.
 pub(crate) fn progress(ctx: &RankCtx) {
     if let Some(code) = ctx.world.aborted() {
         std::panic::panic_any(super::world::AbortUnwind(code));
@@ -89,6 +91,7 @@ pub(crate) fn progress(ctx: &RankCtx) {
     flush_pending_sends(ctx);
     drain_fabric(ctx);
     match_posted(ctx);
+    super::collectives::sched::progress_scheds(ctx);
 }
 
 fn flush_pending_sends(ctx: &RankCtx) {
@@ -213,13 +216,13 @@ pub(crate) fn poll_complete(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>>
 }
 
 /// Check (without progressing) whether `rid` is complete, resolving
-/// Ssend acks and collective children.
+/// Ssend acks. Schedule-backed (collective) requests complete inside
+/// [`progress`] — here they are simply pending until their status lands.
 pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>> {
     enum Next {
         Done(StatusCore),
         Pending,
         CheckSsend(u64),
-        CheckColl(Vec<ReqId>),
     }
     let next = {
         let t = ctx.tables.borrow();
@@ -227,7 +230,6 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
         match (&req.status, &req.kind) {
             (Some(s), _) => Next::Done(*s),
             (None, ReqKind::Ssend { sync_id }) => Next::CheckSsend(*sync_id),
-            (None, ReqKind::Coll { children }) => Next::CheckColl(children.clone()),
             (None, _) => Next::Pending,
         }
     };
@@ -240,38 +242,6 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
                 let s = StatusCore::empty();
                 ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().status = Some(s);
                 Ok(Some(s))
-            } else {
-                Ok(None)
-            }
-        }
-        Next::CheckColl(children) => {
-            let mut all = true;
-            for c in &children {
-                if finish_if_done(ctx, *c)?.is_none() {
-                    all = false;
-                    break;
-                }
-            }
-            if all {
-                // Aggregate: a collective request reports an empty status;
-                // child error classes propagate as MPI_ERR_IN_STATUS-adjacent
-                // simplification (first error wins).
-                let mut status = StatusCore::empty();
-                {
-                    let mut t = ctx.tables.borrow_mut();
-                    for c in &children {
-                        if let Some(cr) = t.reqs.remove(c.0) {
-                            if let Some(cs) = cr.status {
-                                if cs.error != 0 && status.error == 0 {
-                                    status.error = cs.error;
-                                }
-                                status.count_bytes += cs.count_bytes;
-                            }
-                        }
-                    }
-                    t.reqs.get_mut(rid.0).unwrap().status = Some(status);
-                }
-                Ok(Some(status))
             } else {
                 Ok(None)
             }
@@ -328,6 +298,13 @@ pub fn cancel(rid: ReqId) -> RC<()> {
 pub fn request_free(rid: ReqId) -> RC<()> {
     with_ctx(|ctx| {
         let mut t = ctx.tables.borrow_mut();
+        let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+        // Freeing an *active* nonblocking-collective request is erroneous
+        // (MPI 3.0 §3.7.3); dropping the schedule would also strand its
+        // unexecuted send steps and deadlock peers, so reject instead.
+        if req.status.is_none() && matches!(req.kind, ReqKind::Sched(_)) {
+            return Err(err!(MPI_ERR_REQUEST));
+        }
         t.reqs.remove(rid.0).map(|_| ()).ok_or(err!(MPI_ERR_REQUEST))
     })
 }

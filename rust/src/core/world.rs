@@ -125,6 +125,9 @@ pub struct RankState {
     pub send_seq: u64,
     /// Scratch buffer for fabric polls (reused to avoid allocation).
     pub inbox: Vec<Envelope>,
+    /// Requests backed by in-flight collective schedules, advanced each
+    /// progress cycle (see [`crate::core::collectives::sched`]).
+    pub active_scheds: Vec<super::ReqId>,
 }
 
 impl RankState {
@@ -137,6 +140,7 @@ impl RankState {
             next_sync_id: 1,
             send_seq: 0,
             inbox: Vec::with_capacity(64),
+            active_scheds: Vec::new(),
         }
     }
 }
@@ -149,6 +153,9 @@ pub struct RankCtx {
     pub state: RefCell<RankState>,
     pub initialized: Cell<bool>,
     pub finalized: Cell<bool>,
+    /// Re-entrancy latch for the collective schedule pump (a user
+    /// reduction op may call back into MPI mid-advance).
+    pub sched_pump: Cell<bool>,
 }
 
 thread_local! {
@@ -167,6 +174,7 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
         state: RefCell::new(RankState::new()),
         initialized: Cell::new(false),
         finalized: Cell::new(false),
+        sched_pump: Cell::new(false),
     });
     CURRENT.with(|c| {
         let mut cur = c.borrow_mut();

@@ -186,11 +186,31 @@ fn buf_in<R: Repr>(b: *const u8) -> *const u8 {
     }
 }
 
+/// [`buf_in`] for receive buffers (the scatter family puts
+/// `MPI_IN_PLACE` in `recvbuf`).
+fn buf_in_mut<R: Repr>(b: *mut u8) -> *mut u8 {
+    buf_in::<R>(b as *const u8) as *mut u8
+}
+
 macro_rules! conv {
     ($r:ident, $comm:expr, $e:expr) => {
         match $e {
             Ok(v) => v,
             Err(err) => return fail::<$r>($comm, err),
+        }
+    };
+}
+
+/// Store a nonblocking collective's engine request into the ABI's
+/// request out-parameter (or run the comm's error handler).
+macro_rules! coll_req {
+    ($r:ident, $id:expr, $req:expr, $e:expr) => {
+        match $e {
+            Ok(rid) => {
+                *$req = $r::req_h(rid);
+                0
+            }
+            Err(err) => fail::<$r>(Some($id), err),
         }
     };
 }
@@ -1034,11 +1054,7 @@ impl<R: Repr> MpiAbi for Backed<R> {
         let id = conv!(R, None, R::comm_id(c));
         let sd = conv!(R, Some(id), R::dt_id(sendtype));
         let rd = conv!(R, Some(id), R::dt_id(recvtype));
-        let rb = if recvbuf as *const u8 == R::c_in_place() {
-            crate::abi::constants::MPI_IN_PLACE as *mut u8
-        } else {
-            recvbuf
-        };
+        let rb = buf_in_mut::<R>(recvbuf);
         ret::<R>(
             Some(id),
             coll::scatter(sendbuf, sendcount as usize, sd, rb, recvcount as usize, rd, root, id),
@@ -1078,7 +1094,8 @@ impl<R: Repr> MpiAbi for Backed<R> {
         let rd = conv!(R, Some(id), R::dt_id(recvtype));
         ret::<R>(
             Some(id),
-            coll::alltoall(sendbuf, sendcount as usize, sd, recvbuf, recvcount as usize, rd, id),
+            coll::alltoall(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, id),
         )
     }
 
@@ -1177,6 +1194,270 @@ impl<R: Repr> MpiAbi for Backed<R> {
             coll::reduce_scatter_block(buf_in::<R>(sendbuf), recvbuf, recvcount as usize, d, oid,
                 id),
         )
+    }
+
+    fn ibarrier(c: R::Comm, req: &mut R::Request) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        coll_req!(R, id, req, coll::ibarrier(id))
+    }
+
+    fn ibcast(
+        buf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        coll_req!(R, id, req, coll::ibcast(buf, count as usize, d, root, id))
+    }
+
+    fn ireduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        coll_req!(R, id, req,
+            coll::ireduce(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, root, id))
+    }
+
+    fn iallreduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        coll_req!(R, id, req,
+            coll::iallreduce(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, id))
+    }
+
+    fn igather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        coll_req!(R, id, req,
+            coll::igather(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, root, id))
+    }
+
+    fn igatherv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        displs: &[i32],
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let counts: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+        let disp: Vec<isize> = displs.iter().map(|&x| x as isize).collect();
+        coll_req!(R, id, req,
+            coll::igatherv(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf, &counts,
+                &disp, rd, root, id))
+    }
+
+    fn iscatter(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let rb = buf_in_mut::<R>(recvbuf);
+        coll_req!(R, id, req,
+            coll::iscatter(sendbuf, sendcount as usize, sd, rb, recvcount as usize, rd, root,
+                id))
+    }
+
+    fn iscatterv(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        displs: &[i32],
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let counts: Vec<usize> = sendcounts.iter().map(|&x| x as usize).collect();
+        let disp: Vec<isize> = displs.iter().map(|&x| x as isize).collect();
+        let rb = buf_in_mut::<R>(recvbuf);
+        coll_req!(R, id, req,
+            coll::iscatterv(sendbuf, &counts, &disp, sd, rb, recvcount as usize, rd, root, id))
+    }
+
+    fn iallgather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        coll_req!(R, id, req,
+            coll::iallgather(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, id))
+    }
+
+    fn iallgatherv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        displs: &[i32],
+        recvtype: R::Datatype,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let counts: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+        let disp: Vec<isize> = displs.iter().map(|&x| x as isize).collect();
+        coll_req!(R, id, req,
+            coll::iallgatherv(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf, &counts,
+                &disp, rd, id))
+    }
+
+    fn ialltoall(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        coll_req!(R, id, req,
+            coll::ialltoall(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, id))
+    }
+
+    fn ialltoallv(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtype: R::Datatype,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let sc: Vec<usize> = sendcounts.iter().map(|&x| x as usize).collect();
+        let sdisp: Vec<isize> = sdispls.iter().map(|&x| x as isize).collect();
+        let rc: Vec<usize> = recvcounts.iter().map(|&x| x as usize).collect();
+        let rdisp: Vec<isize> = rdispls.iter().map(|&x| x as isize).collect();
+        coll_req!(R, id, req,
+            coll::ialltoallv(buf_in::<R>(sendbuf), &sc, &sdisp, sd, recvbuf, &rc, &rdisp, rd,
+                id))
+    }
+
+    fn iscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        coll_req!(R, id, req,
+            coll::iscan(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, id))
+    }
+
+    fn iexscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        coll_req!(R, id, req,
+            coll::iexscan(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, id))
+    }
+
+    fn ireduce_scatter_block(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        coll_req!(R, id, req,
+            coll::ireduce_scatter_block(buf_in::<R>(sendbuf), recvbuf, recvcount as usize, d,
+                oid, id))
     }
 
     fn comm_create_keyval(
@@ -1305,7 +1586,7 @@ fn build_w_args<R: Repr>(
         rt.push(R::dt_id(t)?);
     }
     Ok(coll::AlltoallwArgs {
-        sendbuf,
+        sendbuf: buf_in::<R>(sendbuf),
         sendcounts: sendcounts.iter().map(|&c| c as usize).collect(),
         sdispls: sdispls.iter().map(|&d| d as isize).collect(),
         sendtypes: st,

@@ -7,6 +7,36 @@
 //! ([`super::word::AsWord`]), statuses are converted field-by-field
 //! between layouts, and error codes hit the inlined success fast path
 //! before the class mapping.
+//!
+//! # Conversion invariants
+//!
+//! Every `*_to_impl` / `*_to_muk` pair in this module maintains:
+//!
+//! 1. **Round-trip identity.** `x_to_muk(x_to_impl(w)) == w` for every
+//!    valid standard-ABI word `w`, and symmetrically for backend
+//!    handles. Constants map constant↔constant; runtime handles pass
+//!    through the word union bit-identically (they must — the backend
+//!    dereferences them).
+//! 2. **Zero-page discrimination.** Only words `<=`
+//!    [`crate::abi::huffman::HUFFMAN_MAX`] are candidates for the
+//!    predefined-constant tables; anything above is reinterpreted as a
+//!    backend handle without a lookup. This bounds per-call translation
+//!    at O(1) and is why the fast path in the benches is flat.
+//! 3. **Special integers translate by value, not bit pattern.**
+//!    `MPI_ANY_SOURCE` etc. differ *numerically* between ABIs
+//!    (MPICH: −2, OMPI: −1, standard: −101); ranks/tags that are not
+//!    special pass through unchanged.
+//! 4. **Success is free.** Error-code translation inlines the `== 0`
+//!    fast path ([`ret_code`]); only failures pay the class mapping.
+//! 5. **Statuses convert field-by-field, count included.** The hidden
+//!    byte count crosses layouts via [`MukBackend::status_bytes`], so
+//!    `MPI_Get_count` on a muk status equals what the backend would
+//!    have reported (63-bit counts survive).
+//! 6. **Temporary conversion state lives exactly as long as the
+//!    operation.** Nonblocking calls that convert arrays (Ialltoallw's
+//!    datatype vectors) park them in [`super::state`] keyed by the muk
+//!    request word and free them on completion — the §6.2 request-map
+//!    discipline.
 
 use crate::abi::constants as std_k;
 use crate::abi::handles as std_h;
@@ -256,6 +286,13 @@ pub fn buf_to_impl<A: MukBackend>(b: *const u8) -> *const u8 {
     } else {
         b
     }
+}
+
+/// [`buf_to_impl`] for receive buffers (the scatter family puts
+/// `MPI_IN_PLACE` in `recvbuf`).
+#[inline(always)]
+pub fn recvbuf_to_impl<A: MukBackend>(b: *mut u8) -> *mut u8 {
+    buf_to_impl::<A>(b as *const u8) as *mut u8
 }
 
 // --- Status conversion -----------------------------------------------------------

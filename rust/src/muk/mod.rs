@@ -593,6 +593,199 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
         (B::vtable().reduce_scatter_block)(sendbuf, recvbuf, recvcount, dt.0, op.0, c.0)
     }
 
+    fn ibarrier(c: AbiComm, req: &mut AbiRequest) -> i32 {
+        (B::vtable().ibarrier)(c.0, &mut req.0)
+    }
+    fn ibcast(
+        buf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().ibcast)(buf, count, dt.0, root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn ireduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().ireduce)(sendbuf, recvbuf, count, dt.0, op.0, root, c.0, &mut req.0)
+    }
+    fn iallreduce(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iallreduce)(sendbuf, recvbuf, count, dt.0, op.0, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn igather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().igather)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn igatherv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        displs: &[i32],
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().igatherv)(sendbuf, sendcount, sendtype.0, recvbuf, recvcounts, displs,
+            recvtype.0, root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn iscatter(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iscatter)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn iscatterv(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        displs: &[i32],
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iscatterv)(sendbuf, sendcounts, displs, sendtype.0, recvbuf, recvcount,
+            recvtype.0, root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn iallgather(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iallgather)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn iallgatherv(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        displs: &[i32],
+        recvtype: AbiDatatype,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iallgatherv)(sendbuf, sendcount, sendtype.0, recvbuf, recvcounts, displs,
+            recvtype.0, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn ialltoall(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().ialltoall)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount, recvtype.0,
+            c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn ialltoallv(
+        sendbuf: *const u8,
+        sendcounts: &[i32],
+        sdispls: &[i32],
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcounts: &[i32],
+        rdispls: &[i32],
+        recvtype: AbiDatatype,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().ialltoallv)(sendbuf, sendcounts, sdispls, sendtype.0, recvbuf, recvcounts,
+            rdispls, recvtype.0, c.0, &mut req.0)
+    }
+    fn iscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iscan)(sendbuf, recvbuf, count, dt.0, op.0, c.0, &mut req.0)
+    }
+    fn iexscan(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().iexscan)(sendbuf, recvbuf, count, dt.0, op.0, c.0, &mut req.0)
+    }
+    fn ireduce_scatter_block(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().ireduce_scatter_block)(sendbuf, recvbuf, recvcount, dt.0, op.0, c.0,
+            &mut req.0)
+    }
+
     fn comm_create_keyval(
         copy: Option<AttrCopyFn<Self>>,
         delete: Option<AttrDeleteFn<Self>>,

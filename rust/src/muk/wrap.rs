@@ -647,11 +647,7 @@ pub fn scatter<A: MukBackend>(
     root: i32,
     comm: usize,
 ) -> i32 {
-    let rb = if recvbuf as usize == crate::abi::constants::MPI_IN_PLACE {
-        A::in_place() as *mut u8
-    } else {
-        recvbuf
-    };
+    let rb = recvbuf_to_impl::<A>(recvbuf);
     ret_code::<A>(A::scatter(sendbuf, sendcount, dt_to_impl::<A>(sendtype), rb, recvcount,
         dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm)))
 }
@@ -680,8 +676,8 @@ pub fn alltoall<A: MukBackend>(
     recvtype: usize,
     comm: usize,
 ) -> i32 {
-    ret_code::<A>(A::alltoall(sendbuf, sendcount, dt_to_impl::<A>(sendtype), recvbuf, recvcount,
-        dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm)))
+    ret_code::<A>(A::alltoall(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm)))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -699,8 +695,8 @@ pub fn alltoallw<A: MukBackend>(
     // Vectors of datatype handles: convert whole arrays (§6.2).
     let st: Vec<A::Datatype> = sendtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
     let rt: Vec<A::Datatype> = recvtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
-    ret_code::<A>(A::alltoallw(sendbuf, sendcounts, sdispls, &st, recvbuf, recvcounts, rdispls,
-        &rt, comm_to_impl::<A>(comm)))
+    ret_code::<A>(A::alltoallw(buf_to_impl::<A>(sendbuf), sendcounts, sdispls, &st, recvbuf,
+        recvcounts, rdispls, &rt, comm_to_impl::<A>(comm)))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -719,8 +715,8 @@ pub fn ialltoallw<A: MukBackend>(
     let st: Vec<A::Datatype> = sendtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
     let rt: Vec<A::Datatype> = recvtypes.iter().map(|&t| dt_to_impl::<A>(t)).collect();
     let mut r = A::request_null();
-    let rc = A::ialltoallw(sendbuf, sendcounts, sdispls, &st, recvbuf, recvcounts, rdispls, &rt,
-        comm_to_impl::<A>(comm), &mut r);
+    let rc = A::ialltoallw(buf_to_impl::<A>(sendbuf), sendcounts, sdispls, &st, recvbuf,
+        recvcounts, rdispls, &rt, comm_to_impl::<A>(comm), &mut r);
     if rc == 0 {
         *req = req_to_muk::<A>(r);
         // The converted datatype vectors are temporary state that must
@@ -771,6 +767,304 @@ pub fn reduce_scatter_block<A: MukBackend>(
 ) -> i32 {
     ret_code::<A>(A::reduce_scatter_block(buf_to_impl::<A>(sendbuf), recvbuf, recvcount,
         dt_to_impl::<A>(dt), op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
+}
+
+// --- Nonblocking collectives ---------------------------------------------------
+//
+// Each converts the standard-ABI handles into the backend representation,
+// forwards, and converts the resulting request handle back — the
+// request-heavy paths the paper's §6.2 worries about.
+
+pub fn ibarrier<A: MukBackend>(comm: usize, req: &mut usize) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ibarrier(comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn ibcast<A: MukBackend>(
+    buf: *mut u8,
+    count: i32,
+    dt: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ibcast(buf, count, dt_to_impl::<A>(dt), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn ireduce<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ireduce(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn iallreduce<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::iallreduce(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn igather<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::igather(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn igatherv<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcounts: &[i32],
+    displs: &[i32],
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::igatherv(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcounts, displs, dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm),
+        &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn iscatter<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let rb = recvbuf_to_impl::<A>(recvbuf);
+    let mut r = A::request_null();
+    let rc = A::iscatter(sendbuf, sendcount, dt_to_impl::<A>(sendtype), rb, recvcount,
+        dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn iscatterv<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcounts: &[i32],
+    displs: &[i32],
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let rb = recvbuf_to_impl::<A>(recvbuf);
+    let mut r = A::request_null();
+    let rc = A::iscatterv(sendbuf, sendcounts, displs, dt_to_impl::<A>(sendtype), rb, recvcount,
+        dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn iallgather<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::iallgather(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn iallgatherv<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcounts: &[i32],
+    displs: &[i32],
+    recvtype: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::iallgatherv(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcounts, displs, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn ialltoall<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ialltoall(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn ialltoallv<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcounts: &[i32],
+    sdispls: &[i32],
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcounts: &[i32],
+    rdispls: &[i32],
+    recvtype: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ialltoallv(buf_to_impl::<A>(sendbuf), sendcounts, sdispls,
+        dt_to_impl::<A>(sendtype), recvbuf, recvcounts, rdispls, dt_to_impl::<A>(recvtype),
+        comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn iscan<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::iscan(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn iexscan<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::iexscan(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn ireduce_scatter_block<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ireduce_scatter_block(buf_to_impl::<A>(sendbuf), recvbuf, recvcount,
+        dt_to_impl::<A>(dt), op_to_impl::<A>(op), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
 }
 
 pub fn comm_create_keyval<A: MukBackend>(
@@ -995,6 +1289,21 @@ define_vtable! {
     scan: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
     exscan: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
     reduce_scatter_block: fn(*const u8, *mut u8, i32, usize, usize, usize) -> i32,
+    ibarrier: fn(usize, &mut usize) -> i32,
+    ibcast: fn(*mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    ireduce: fn(*const u8, *mut u8, i32, usize, usize, i32, usize, &mut usize) -> i32,
+    iallreduce: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
+    igather: fn(*const u8, i32, usize, *mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    igatherv: fn(*const u8, i32, usize, *mut u8, &[i32], &[i32], usize, i32, usize, &mut usize) -> i32,
+    iscatter: fn(*const u8, i32, usize, *mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    iscatterv: fn(*const u8, &[i32], &[i32], usize, *mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    iallgather: fn(*const u8, i32, usize, *mut u8, i32, usize, usize, &mut usize) -> i32,
+    iallgatherv: fn(*const u8, i32, usize, *mut u8, &[i32], &[i32], usize, usize, &mut usize) -> i32,
+    ialltoall: fn(*const u8, i32, usize, *mut u8, i32, usize, usize, &mut usize) -> i32,
+    ialltoallv: fn(*const u8, &[i32], &[i32], usize, *mut u8, &[i32], &[i32], usize, usize, &mut usize) -> i32,
+    iscan: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
+    iexscan: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
+    ireduce_scatter_block: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
     comm_create_keyval: fn(Option<callbacks::MukCopyFn>, Option<callbacks::MukDeleteFn>, usize, &mut i32) -> i32,
     comm_free_keyval: fn(&mut i32) -> i32,
     comm_set_attr: fn(usize, i32, usize) -> i32,

@@ -22,6 +22,13 @@ pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
         ("coll.reduce_scatter_block", reduce_scatter_block::<A>),
         ("coll.user_op", user_op::<A>),
         ("coll.user_op_derived_dt", user_op_derived_dt::<A>),
+        ("coll.ibcast_wait", ibcast_wait::<A>),
+        ("coll.iallreduce_overlaps_pt2pt", iallreduce_overlaps_pt2pt::<A>),
+        ("coll.igatherv_iscatterv_nonblocking", igatherv_iscatterv_nonblocking::<A>),
+        ("coll.iallgather_ialltoall_nonblocking", iallgather_ialltoall_nonblocking::<A>),
+        ("coll.iscan_family_waitall", iscan_family_waitall::<A>),
+        ("coll.waitall_mixed_request_kinds", waitall_mixed_request_kinds::<A>),
+        ("coll.nonblocking_out_of_order", nonblocking_out_of_order::<A>),
     ]
 }
 
@@ -344,5 +351,247 @@ fn user_op_derived_dt<A: MpiAbi>(_r: usize) -> Result<(), String> {
     let want: i64 = (0..n as i64).sum();
     check!(recv[0] == want, "datatype handle usable in callback: {} want {want}", recv[0]);
     check_rc!(A::op_free(&mut op), "op_free");
+    Ok(())
+}
+
+// --- Nonblocking collective battery ----------------------------------------
+//
+// Exercises the schedule engine through the portable surface: request
+// handles for collectives cross every representation (and, under muk,
+// the request-word conversion), with completion via wait/waitall.
+
+fn ibcast_wait<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int64);
+    for root in 0..n {
+        let mut v: [i64; 4] =
+            if me == root { [root as i64, 7, -root as i64, 1] } else { [0; 4] };
+        let mut req = A::request_null();
+        check_rc!(A::ibcast(slice_ptr_mut(&mut v), 4, dt, root, A::comm_world(), &mut req),
+            "ibcast");
+        let mut st = A::status_empty();
+        check_rc!(A::wait(&mut req, &mut st), "wait(ibcast)");
+        check!(req == A::request_null(), "request reset after wait");
+        check!(v == [root as i64, 7, -root as i64, 1], "root {root}: got {v:?}");
+    }
+    Ok(())
+}
+
+fn iallreduce_overlaps_pt2pt<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    // Start the collective...
+    let send = [me + 1, 100];
+    let mut recv = [0i32; 2];
+    let mut req = A::request_null();
+    check_rc!(
+        A::iallreduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 2, dt, A::op(OpName::Sum),
+            A::comm_world(), &mut req),
+        "iallreduce"
+    );
+    // ...then run pt2pt traffic on the *same* communicator while it is in
+    // flight: a ring rotation with a tag of its own.
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let psend = [me * 11];
+    let mut precv = [-1i32];
+    let mut pst = A::status_empty();
+    check_rc!(
+        A::sendrecv(slice_ptr(&psend), 1, dt, right, 77, slice_ptr_mut(&mut precv), 1, dt,
+            left, 77, A::comm_world(), &mut pst),
+        "sendrecv during iallreduce"
+    );
+    check!(precv[0] == left * 11, "ring value {precv:?}");
+    // Now complete the collective.
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait(iallreduce)");
+    let t: i32 = (1..=n).sum();
+    check!(recv == [t, 100 * n], "overlapped sum: {recv:?}");
+    Ok(())
+}
+
+fn igatherv_iscatterv_nonblocking<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    // Rank r contributes r+1 ints; block displacements are prefix sums.
+    let send: Vec<i32> = (0..me + 1).map(|i| me * 10 + i).collect();
+    let counts: Vec<i32> = (0..n).map(|r| r + 1).collect();
+    let displs: Vec<i32> = {
+        let mut d = Vec::with_capacity(n as usize);
+        let mut acc = 0;
+        for r in 0..n {
+            d.push(acc);
+            acc += r + 1;
+        }
+        d
+    };
+    let total: i32 = counts.iter().sum();
+    let mut gathered = vec![-1i32; total as usize];
+    let mut req = A::request_null();
+    check_rc!(
+        A::igatherv(slice_ptr(&send), me + 1, dt, slice_ptr_mut(&mut gathered), &counts,
+            &displs, dt, 0, A::comm_world(), &mut req),
+        "igatherv"
+    );
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait(igatherv)");
+    if me == 0 {
+        let mut want = Vec::new();
+        for r in 0..n {
+            for i in 0..r + 1 {
+                want.push(r * 10 + i);
+            }
+        }
+        check!(gathered == want, "gathered {gathered:?} want {want:?}");
+    }
+    // Scatter the variable blocks back.
+    let mut back = vec![0i32; (me + 1) as usize];
+    let mut req = A::request_null();
+    check_rc!(
+        A::iscatterv(slice_ptr(&gathered), &counts, &displs, dt, slice_ptr_mut(&mut back),
+            me + 1, dt, 0, A::comm_world(), &mut req),
+        "iscatterv"
+    );
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait(iscatterv)");
+    check!(back == send, "scattered back {back:?}");
+    Ok(())
+}
+
+fn iallgather_ialltoall_nonblocking<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Double);
+    // iallgather.
+    let send = [me as f64 + 0.25];
+    let mut all = vec![-1.0f64; n as usize];
+    let mut req = A::request_null();
+    check_rc!(
+        A::iallgather(slice_ptr(&send), 1, dt, slice_ptr_mut(&mut all), 1, dt, A::comm_world(),
+            &mut req),
+        "iallgather"
+    );
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait(iallgather)");
+    for (r, &x) in all.iter().enumerate() {
+        check!(x == r as f64 + 0.25, "slot {r}: {x}");
+    }
+    // ialltoall.
+    let dt = A::datatype(Dt::Int);
+    let send: Vec<i32> = (0..n).map(|d| me * 1000 + d).collect();
+    let mut recv = vec![0i32; n as usize];
+    let mut req = A::request_null();
+    check_rc!(
+        A::ialltoall(slice_ptr(&send), 1, dt, slice_ptr_mut(&mut recv), 1, dt, A::comm_world(),
+            &mut req),
+        "ialltoall"
+    );
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait(ialltoall)");
+    let want: Vec<i32> = (0..n).map(|s| s * 1000 + me).collect();
+    check!(recv == want, "transposed {recv:?}");
+    Ok(())
+}
+
+/// Three different schedule-backed collectives in flight at once,
+/// completed by one waitall — mixed *collective* kinds.
+fn iscan_family_waitall<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let op = A::op(OpName::Sum);
+    let scan_in = [me + 1];
+    let mut scan_out = [0i32];
+    let ex_in = [me + 1];
+    let mut ex_out = [-9i32];
+    let rsb_in: Vec<i32> = (0..n).flat_map(|b| [b + me, 2 * (b + me)]).collect();
+    let mut rsb_out = [0i32; 2];
+    let mut reqs = vec![A::request_null(); 3];
+    check_rc!(
+        A::iscan(slice_ptr(&scan_in), slice_ptr_mut(&mut scan_out), 1, dt, op, A::comm_world(),
+            &mut reqs[0]),
+        "iscan"
+    );
+    check_rc!(
+        A::iexscan(slice_ptr(&ex_in), slice_ptr_mut(&mut ex_out), 1, dt, op, A::comm_world(),
+            &mut reqs[1]),
+        "iexscan"
+    );
+    check_rc!(
+        A::ireduce_scatter_block(slice_ptr(&rsb_in), slice_ptr_mut(&mut rsb_out), 2, dt, op,
+            A::comm_world(), &mut reqs[2]),
+        "ireduce_scatter_block"
+    );
+    let mut sts = vec![A::status_empty(); 3];
+    check_rc!(A::waitall(&mut reqs, &mut sts), "waitall(3 collectives)");
+    for r in &reqs {
+        check!(*r == A::request_null(), "requests reset");
+    }
+    check!(scan_out[0] == (1..=me + 1).sum::<i32>(), "iscan: {}", scan_out[0]);
+    if me == 0 {
+        check!(ex_out[0] == -9, "rank 0 iexscan buffer untouched: {}", ex_out[0]);
+    } else {
+        check!(ex_out[0] == (1..=me).sum::<i32>(), "iexscan: {}", ex_out[0]);
+    }
+    let rank_sum: i32 = (0..n).sum();
+    check!(
+        rsb_out == [me * n + rank_sum, 2 * (me * n + rank_sum)],
+        "ireduce_scatter_block at {me}: {rsb_out:?}"
+    );
+    Ok(())
+}
+
+/// One waitall over pt2pt sends, pt2pt receives, a barrier, and a bcast:
+/// mixed request *kinds* behind one completion call.
+fn waitall_mixed_request_kinds<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let right = (me + 1) % n;
+    let left = (me + n - 1) % n;
+    let psend = [me + 500];
+    let mut precv = [-1i32];
+    let mut bc = if me == 0 { [4242i32] } else { [0i32] };
+    let mut reqs = vec![A::request_null(); 4];
+    check_rc!(
+        A::irecv(slice_ptr_mut(&mut precv), 1, dt, left, 5, A::comm_world(), &mut reqs[0]),
+        "irecv"
+    );
+    check_rc!(
+        A::isend(slice_ptr(&psend), 1, dt, right, 5, A::comm_world(), &mut reqs[1]),
+        "isend"
+    );
+    check_rc!(A::ibarrier(A::comm_world(), &mut reqs[2]), "ibarrier");
+    check_rc!(A::ibcast(slice_ptr_mut(&mut bc), 1, dt, 0, A::comm_world(), &mut reqs[3]),
+        "ibcast");
+    let mut sts = vec![A::status_empty(); 4];
+    check_rc!(A::waitall(&mut reqs, &mut sts), "waitall(mixed kinds)");
+    check!(precv[0] == left + 500, "pt2pt through mixed waitall: {precv:?}");
+    check!(bc[0] == 4242, "bcast through mixed waitall: {bc:?}");
+    check!(A::status_source(&sts[0]) == left, "recv status source");
+    Ok(())
+}
+
+/// Two nonblocking collectives issued back-to-back and completed in
+/// reverse order: the per-comm collective sequence keeps their traffic
+/// apart even though their schedules overlap.
+fn nonblocking_out_of_order<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = geom::<A>();
+    let dt = A::datatype(Dt::Int);
+    let mut bc = if me == 0 { [31i32, 41] } else { [0i32; 2] };
+    let mut breq = A::request_null();
+    check_rc!(A::ibcast(slice_ptr_mut(&mut bc), 2, dt, 0, A::comm_world(), &mut breq),
+        "ibcast first");
+    let send = [me];
+    let mut recv = [0i32];
+    let mut areq = A::request_null();
+    check_rc!(
+        A::iallreduce(slice_ptr(&send), slice_ptr_mut(&mut recv), 1, dt, A::op(OpName::Max),
+            A::comm_world(), &mut areq),
+        "iallreduce second"
+    );
+    // Complete the *second* collective first.
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut areq, &mut st), "wait(iallreduce)");
+    check!(recv[0] == n - 1, "max rank: {}", recv[0]);
+    check_rc!(A::wait(&mut breq, &mut st), "wait(ibcast)");
+    check!(bc == [31, 41], "bcast data after out-of-order waits: {bc:?}");
     Ok(())
 }

@@ -667,3 +667,257 @@ fn comm_create_from_subgroup() {
         engine::finalize().unwrap();
     });
 }
+
+// --- Nonblocking collectives over the schedule engine -----------------------
+
+#[test]
+fn nonblocking_out_of_order_completion() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        // Issue ibcast then iallreduce; complete them in reverse order.
+        let mut bc = if rank == 0 { [5i32, 6, 7] } else { [0i32; 3] };
+        let breq = coll::ibcast(bc.as_mut_ptr() as *mut u8, 3, dt_i32(), 0, COMM_WORLD).unwrap();
+        let send = [rank as i32 + 1];
+        let mut recv = [0i32];
+        let areq = coll::iallreduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        let st = engine::wait(areq).unwrap();
+        assert_eq!(st.error, 0);
+        assert_eq!(recv[0], (1..=n as i32).sum::<i32>());
+        engine::wait(breq).unwrap();
+        assert_eq!(bc, [5, 6, 7]);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn iallreduce_overlaps_pt2pt_on_same_comm() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let send = [rank as f64, 2.0];
+        let mut recv = [0.0f64; 2];
+        let req = coll::iallreduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            2,
+            dt_f64(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        // Pt2pt ring on the same comm while the collective is pending.
+        let right = ((rank + 1) % n) as i32;
+        let left = ((rank + n - 1) % n) as i32;
+        let ps = [rank as i32 * 3];
+        let mut pr = [-1i32];
+        let st = engine::sendrecv(
+            ps.as_ptr() as *const u8,
+            1,
+            dt_i32(),
+            right,
+            9,
+            pr.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            left,
+            9,
+            COMM_WORLD,
+        )
+        .unwrap();
+        assert_eq!(st.source, left);
+        assert_eq!(pr[0], left * 3);
+        engine::wait(req).unwrap();
+        let total: f64 = (0..n).map(|r| r as f64).sum();
+        assert_eq!(recv, [total, 2.0 * n as f64]);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn waitall_over_mixed_request_kinds() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        let right = ((rank + 1) % n) as i32;
+        let left = ((rank + n - 1) % n) as i32;
+        let ps = [rank as i32 + 40];
+        let mut pr = [0i32];
+        let mut bc = if rank == 2 { [99i32] } else { [0i32] };
+        let reqs = vec![
+            engine::irecv(pr.as_mut_ptr() as *mut u8, 1, dt, left, 6, COMM_WORLD).unwrap(),
+            engine::isend(ps.as_ptr() as *const u8, 1, dt, right, 6, COMM_WORLD,
+                engine::SendMode::Standard).unwrap(),
+            coll::ibarrier(COMM_WORLD).unwrap(),
+            coll::ibcast(bc.as_mut_ptr() as *mut u8, 1, dt, 2, COMM_WORLD).unwrap(),
+        ];
+        let sts = engine::waitall(&reqs).unwrap();
+        assert_eq!(sts.len(), 4);
+        assert_eq!(pr[0], left + 40);
+        assert_eq!(bc[0], 99);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn nonblocking_collectives_on_mutex_transport() {
+    use mpi_abi::core::transport::TransportKind;
+    let n = 4;
+    run_job_ok(JobSpec::new(n).with_transport(TransportKind::Mutex), |rank| {
+        engine::init().unwrap();
+        let mut bc = if rank == 1 { [17i32, 18] } else { [0i32; 2] };
+        let breq = coll::ibcast(bc.as_mut_ptr() as *mut u8, 2, dt_i32(), 1, COMM_WORLD).unwrap();
+        let send = [rank as i32];
+        let mut recv = [0i32];
+        let areq = coll::iallreduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        for r in engine::waitall(&[breq, areq]).unwrap() {
+            assert_eq!(r.error, 0);
+        }
+        assert_eq!(bc, [17, 18]);
+        assert_eq!(recv[0], (0..n as i32).sum::<i32>());
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn igatherv_nonblocking_variable_blocks() {
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let send: Vec<i32> = (0..rank as i32 + 1).map(|i| rank as i32 * 10 + i).collect();
+        let counts = [1usize, 2, 3];
+        let displs = [0isize, 1, 3];
+        let mut recv = vec![-1i32; 6];
+        let req = coll::igatherv(
+            send.as_ptr() as *const u8,
+            send.len(),
+            dt_i32(),
+            recv.as_mut_ptr() as *mut u8,
+            &counts,
+            &displs,
+            dt_i32(),
+            0,
+            COMM_WORLD,
+        )
+        .unwrap();
+        engine::wait(req).unwrap();
+        if rank == 0 {
+            assert_eq!(recv, vec![0, 10, 11, 20, 21, 22]);
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn iscan_iexscan_ireduce_scatter_block_concurrent() {
+    let n = 4;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let dt = dt_i32();
+        let op = op_sum();
+        let scan_in = [rank as i32 + 1];
+        let mut scan_out = [0i32];
+        let ex_in = [rank as i32 + 1];
+        let mut ex_out = [-5i32];
+        let rsb_in: Vec<i32> = (0..2 * n as i32).map(|i| i + rank as i32).collect();
+        let mut rsb_out = [0i32; 2];
+        let reqs = vec![
+            coll::iscan(scan_in.as_ptr() as *const u8, scan_out.as_mut_ptr() as *mut u8, 1, dt,
+                op, COMM_WORLD).unwrap(),
+            coll::iexscan(ex_in.as_ptr() as *const u8, ex_out.as_mut_ptr() as *mut u8, 1, dt,
+                op, COMM_WORLD).unwrap(),
+            coll::ireduce_scatter_block(rsb_in.as_ptr() as *const u8,
+                rsb_out.as_mut_ptr() as *mut u8, 2, dt, op, COMM_WORLD).unwrap(),
+        ];
+        for st in engine::waitall(&reqs).unwrap() {
+            assert_eq!(st.error, 0);
+        }
+        assert_eq!(scan_out[0], (1..=rank as i32 + 1).sum::<i32>());
+        if rank == 0 {
+            assert_eq!(ex_out[0], -5, "rank 0 exscan buffer untouched");
+        } else {
+            assert_eq!(ex_out[0], (1..=rank as i32).sum::<i32>());
+        }
+        let rank_sum: i32 = (0..n as i32).sum();
+        let r = rank as i32;
+        let nn = n as i32;
+        assert_eq!(rsb_out, [2 * r * nn + rank_sum, (2 * r + 1) * nn + rank_sum]);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn ireduce_to_nonzero_root_nonblocking() {
+    let n = 5;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let send = [rank as i32, 100];
+        let mut recv = [0i32; 2];
+        let req = coll::ireduce(
+            send.as_ptr() as *const u8,
+            recv.as_mut_ptr() as *mut u8,
+            2,
+            dt_i32(),
+            op_sum(),
+            3,
+            COMM_WORLD,
+        )
+        .unwrap();
+        engine::wait(req).unwrap();
+        if rank == 3 {
+            assert_eq!(recv, [(0..n as i32).sum::<i32>(), 100 * n as i32]);
+        }
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn many_nonblocking_collectives_in_flight() {
+    // A window of nonblocking collectives on one comm, completed together:
+    // the per-comm sequence must keep every schedule's traffic separate.
+    let n = 3;
+    run_job_ok(JobSpec::new(n), |rank| {
+        engine::init().unwrap();
+        let k = 8;
+        let bufs: Vec<[i32; 1]> = (0..k).map(|_| [rank as i32 + 1]).collect();
+        let mut outs: Vec<[i32; 1]> = (0..k).map(|_| [0]).collect();
+        let mut reqs = Vec::new();
+        for i in 0..k {
+            reqs.push(
+                coll::iallreduce(
+                    bufs[i].as_ptr() as *const u8,
+                    outs[i].as_mut_ptr() as *mut u8,
+                    1,
+                    dt_i32(),
+                    op_sum(),
+                    COMM_WORLD,
+                )
+                .unwrap(),
+            );
+        }
+        for st in engine::waitall(&reqs).unwrap() {
+            assert_eq!(st.error, 0);
+        }
+        for o in &outs {
+            assert_eq!(o[0], (1..=n as i32).sum::<i32>());
+        }
+        engine::finalize().unwrap();
+    });
+}
