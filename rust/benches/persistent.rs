@@ -1,0 +1,208 @@
+//! Persistent-operation ablations (MPI-4): init-once/start-N versus
+//! per-iteration nonblocking setup, through every ABI layer, on both
+//! transports.
+//!
+//! What persistence amortizes in this engine: argument validation and
+//! comm routing (pt2pt), request allocation/free per iteration, and —
+//! for collectives — the whole schedule build (step list, tag plane,
+//! staging buffers). The schedule-reuse claim is not just timed but
+//! *proved*: the engine counts schedule constructions, and the
+//! persistent start/wait loop must construct zero.
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::bench::Table;
+use mpi_abi::core::collectives::schedules_built;
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+const RANKS: usize = 2;
+const PP_COUNT: usize = 256; // f32 elements per pt2pt message (small: per-op overhead dominates)
+const AR_COUNT: usize = 1024; // f32 elements per allreduce
+
+struct Results {
+    /// Persistent ping-pong exchange, µs per iteration.
+    pp_persist_us: f64,
+    /// isend/irecv-per-iteration exchange, µs per iteration.
+    pp_nb_us: f64,
+    /// Persistent allreduce (start/wait), µs per iteration.
+    ar_persist_us: f64,
+    /// iallreduce-per-iteration, µs per iteration.
+    ar_nb_us: f64,
+    /// Schedules built during the persistent allreduce loop (must be 0).
+    persist_builds: u64,
+    /// Schedules built during the iallreduce loop (≈ ranks × iters).
+    nb_builds: u64,
+}
+
+struct Persistent {
+    transport: TransportKind,
+    iters: usize,
+}
+
+impl AbiApp<Results> for Persistent {
+    fn run<A: MpiAbi>(self) -> Results {
+        let iters = self.iters;
+        let out = run_job_ok(JobSpec::new(RANKS).with_transport(self.transport), move |rank| {
+            A::init();
+            let world = A::comm_world();
+            let dt = A::datatype(Dt::Float);
+            let op = A::op(OpName::Sum);
+            let peer = (1 - rank) as i32;
+            let me = rank as i32;
+            let sendb = vec![1.0f32; PP_COUNT];
+            let mut recvb = vec![0.0f32; PP_COUNT];
+            let ar_send = vec![1.0f32; AR_COUNT];
+            let mut ar_recv = vec![0.0f32; AR_COUNT];
+
+            // --- pt2pt: persistent exchange (init once, startall/waitall per iter)
+            let mut preqs = vec![A::request_null(); 2];
+            A::send_init(sendb.as_ptr() as *const u8, PP_COUNT as i32, dt, peer, me, world,
+                &mut preqs[0]);
+            A::recv_init(recvb.as_mut_ptr() as *mut u8, PP_COUNT as i32, dt, peer, peer, world,
+                &mut preqs[1]);
+            // Warmup (primes rings and allocations on both paths).
+            for _ in 0..5 {
+                A::startall(&mut preqs);
+                let mut sts = vec![A::status_empty(); 2];
+                A::waitall(&mut preqs, &mut sts);
+            }
+            A::barrier(world);
+            let t0 = A::wtime();
+            for _ in 0..iters {
+                A::startall(&mut preqs);
+                let mut sts = vec![A::status_empty(); 2];
+                A::waitall(&mut preqs, &mut sts);
+            }
+            let pp_persist = (A::wtime() - t0) / iters as f64;
+            for r in preqs.iter_mut() {
+                A::request_free(r);
+            }
+
+            // --- pt2pt: per-iteration isend/irecv (same traffic)
+            A::barrier(world);
+            let t0 = A::wtime();
+            for _ in 0..iters {
+                let mut reqs = vec![A::request_null(); 2];
+                A::isend(sendb.as_ptr() as *const u8, PP_COUNT as i32, dt, peer, me, world,
+                    &mut reqs[0]);
+                A::irecv(recvb.as_mut_ptr() as *mut u8, PP_COUNT as i32, dt, peer, peer, world,
+                    &mut reqs[1]);
+                let mut sts = vec![A::status_empty(); 2];
+                A::waitall(&mut reqs, &mut sts);
+            }
+            let pp_nb = (A::wtime() - t0) / iters as f64;
+
+            // --- collective: persistent allreduce (schedule built once)
+            let mut ar_req = A::request_null();
+            A::allreduce_init(ar_send.as_ptr() as *const u8, ar_recv.as_mut_ptr() as *mut u8,
+                AR_COUNT as i32, dt, op, world, &mut ar_req);
+            A::barrier(world);
+            let b0 = schedules_built();
+            let t0 = A::wtime();
+            for _ in 0..iters {
+                A::start(&mut ar_req);
+                let mut st = A::status_empty();
+                A::wait(&mut ar_req, &mut st);
+            }
+            let ar_persist = (A::wtime() - t0) / iters as f64;
+            let persist_builds = schedules_built() - b0;
+            // Schedule-free rendezvous (pt2pt sendrecv, not a barrier):
+            // the counter is process-global, so the peer's *next*
+            // collective build must not land before both ranks have read
+            // their delta.
+            let token = [0u8];
+            let mut tok = [0u8];
+            let mut st = A::status_empty();
+            A::sendrecv(token.as_ptr(), 1, A::datatype(Dt::Byte), peer, 77, tok.as_mut_ptr(),
+                1, A::datatype(Dt::Byte), peer, 77, world, &mut st);
+            // The acceptance invariant: starts reuse the schedule, so the
+            // start/wait loop constructs none.
+            assert_eq!(persist_builds, 0, "persistent starts must not rebuild schedules");
+            A::request_free(&mut ar_req);
+
+            // --- collective: per-iteration iallreduce (schedule per call)
+            A::barrier(world);
+            let b0 = schedules_built();
+            let t0 = A::wtime();
+            for _ in 0..iters {
+                let mut req = A::request_null();
+                A::iallreduce(ar_send.as_ptr() as *const u8, ar_recv.as_mut_ptr() as *mut u8,
+                    AR_COUNT as i32, dt, op, world, &mut req);
+                let mut st = A::status_empty();
+                A::wait(&mut req, &mut st);
+            }
+            let ar_nb = (A::wtime() - t0) / iters as f64;
+            let nb_builds = schedules_built() - b0;
+
+            A::finalize();
+            Results {
+                pp_persist_us: pp_persist * 1e6,
+                pp_nb_us: pp_nb * 1e6,
+                ar_persist_us: ar_persist * 1e6,
+                ar_nb_us: ar_nb * 1e6,
+                persist_builds,
+                nb_builds,
+            }
+        });
+        // Slowest rank = the operation's latency; builds: take the max
+        // observed delta (the counter is process-global).
+        out.into_iter()
+            .reduce(|a, b| Results {
+                pp_persist_us: a.pp_persist_us.max(b.pp_persist_us),
+                pp_nb_us: a.pp_nb_us.max(b.pp_nb_us),
+                ar_persist_us: a.ar_persist_us.max(b.ar_persist_us),
+                ar_nb_us: a.ar_nb_us.max(b.ar_nb_us),
+                persist_builds: a.persist_builds.max(b.persist_builds),
+                nb_builds: a.nb_builds.max(b.nb_builds),
+            })
+            .unwrap()
+    }
+}
+
+fn main() {
+    println!(
+        "\nPersistent ops ({RANKS} ranks): init-once/start-N vs per-iteration nonblocking \
+         ({PP_COUNT} f32 pt2pt, {AR_COUNT} f32 allreduce)"
+    );
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        let iters = match transport {
+            TransportKind::Spsc => 300,
+            TransportKind::Mutex => 100,
+        };
+        let mut table = Table::new(
+            &format!("persistent vs nonblocking [{} transport]", transport.name()),
+            &[
+                "ABI",
+                "pp persist µs",
+                "pp isend µs",
+                "speedup",
+                "ar persist µs",
+                "ar icoll µs",
+                "speedup",
+                "builds/start",
+            ],
+        );
+        for abi in AbiConfig::ALL {
+            let r = with_abi(abi, Persistent { transport, iters });
+            table.row(&[
+                abi.name().to_string(),
+                format!("{:.1}", r.pp_persist_us),
+                format!("{:.1}", r.pp_nb_us),
+                format!("{:.2}x", r.pp_nb_us / r.pp_persist_us),
+                format!("{:.1}", r.ar_persist_us),
+                format!("{:.1}", r.ar_nb_us),
+                format!("{:.2}x", r.ar_nb_us / r.ar_persist_us),
+                format!("{} vs {:.1}", 0, r.nb_builds as f64 / iters as f64),
+            ]);
+            let _ = r.persist_builds; // asserted 0 inside the job
+        }
+        println!("{}", table.render());
+    }
+    println!(
+        "shape: persistent start/wait skips per-iteration validation/routing/allocation (pt2pt) \
+         and the whole schedule build (collectives) — the builds/start column shows persistent \
+         collectives constructing 0 schedules per start versus ~ranks for the i-collective; \
+         speedups > 1.0x are the amortization the ROADMAP's hot-path item asks for."
+    );
+}

@@ -237,6 +237,44 @@ pub trait MpiAbi: 'static {
         status: &mut Self::Status,
     ) -> i32;
 
+    // --- Persistent point-to-point (MPI_Send_init / MPI_Recv_init) ---
+    //
+    // `*_init` returns an **inactive** request that `start`/`startall`
+    // re-arm any number of times; wait/test return it to inactive
+    // instead of freeing it, and the handle stays valid (it only becomes
+    // REQUEST_NULL through `request_free`, legal while inactive). The
+    // lifecycle must behave identically across ABIs — it is part of the
+    // binary contract the paper standardizes.
+    fn send_init(
+        buf: *const u8,
+        count: i32,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn ssend_init(
+        buf: *const u8,
+        count: i32,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn recv_init(
+        buf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        src: i32,
+        tag: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn start(req: &mut Self::Request) -> i32;
+    fn startall(reqs: &mut [Self::Request]) -> i32;
+
     // --- Datatypes ---
     fn type_size(dt: Self::Datatype, out: &mut i32) -> i32;
     fn type_get_extent(dt: Self::Datatype, lb: &mut isize, extent: &mut isize) -> i32;
@@ -514,6 +552,63 @@ pub trait MpiAbi: 'static {
         recvcount: i32,
         dt: Self::Datatype,
         op: Self::Op,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+
+    // --- Persistent collectives (MPI-4) ---
+    //
+    // Collective calls: every rank of `comm` must create the same
+    // persistent collectives in the same order (they agree on a tag
+    // plane at init time). Starts re-read the user buffers; the
+    // schedule built at init is reused, never rebuilt.
+    fn barrier_init(comm: Self::Comm, req: &mut Self::Request) -> i32;
+    fn bcast_init(
+        buf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn allreduce_init(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: Self::Datatype,
+        op: Self::Op,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn gather_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn scatter_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
+        root: i32,
+        comm: Self::Comm,
+        req: &mut Self::Request,
+    ) -> i32;
+    fn alltoall_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: Self::Datatype,
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;

@@ -1,22 +1,39 @@
 //! 2-D Jacobi halo exchange — the classic MPI stencil workload (the kind
 //! of application §4.7's containers ship). Decomposes a square grid over
 //! a 1-D rank strip; each iteration exchanges boundary rows with both
-//! neighbors (`MPI_Sendrecv`) and applies a 5-point stencil.
+//! neighbors and applies a 5-point stencil.
+//!
+//! Two exchange modes:
+//!
+//! * **blocking** (default): two `MPI_Sendrecv` calls per sweep — the
+//!   classic textbook form;
+//! * **persistent** ([`HaloParams::persistent`]): four persistent
+//!   requests per buffer created once (`MPI_Send_init`/`MPI_Recv_init`),
+//!   then `MPI_Startall` + `MPI_Waitall` per sweep. Because the two grid
+//!   buffers swap roles every sweep, one request set exists per buffer
+//!   and the sweep's parity picks the set — the standard MPI idiom for
+//!   persistent double buffering.
 //!
 //! Used by `examples/halo2d.rs` and the cross-ABI consistency tests: the
-//! result must be bit-identical whichever ABI carries the halos.
+//! result must be bit-identical whichever ABI (and whichever exchange
+//! mode) carries the halos.
 
 use crate::api::{Dt, MpiAbi};
 
+/// Stencil configuration.
 pub struct HaloParams {
     /// Global grid is `n x n`.
     pub n: usize,
+    /// Number of Jacobi sweeps.
     pub iters: usize,
+    /// Exchange halos with persistent requests (init once, start per
+    /// sweep) instead of per-sweep `MPI_Sendrecv`.
+    pub persistent: bool,
 }
 
 impl Default for HaloParams {
     fn default() -> Self {
-        HaloParams { n: 64, iters: 20 }
+        HaloParams { n: 64, iters: 20, persistent: false }
     }
 }
 
@@ -51,42 +68,74 @@ pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
     let up = if rank == 0 { A::proc_null() } else { rank - 1 };
     let down = if rank == size - 1 { A::proc_null() } else { rank + 1 };
 
-    for _ in 0..p.iters {
-        // Exchange: send my first real row up / receive ghost from above,
-        // then send last real row down / receive ghost from below.
-        let mut st = A::status_empty();
-        let first_real = idx(1, 0);
-        let last_real = idx(my_rows, 0);
-        let ghost_top = idx(0, 0);
-        let ghost_bot = idx(my_rows + 1, 0);
-        A::sendrecv(
-            grid[first_real..].as_ptr() as *const u8,
-            w as i32,
-            dt,
-            up,
-            1,
-            grid[ghost_bot..].as_mut_ptr() as *mut u8,
-            w as i32,
-            dt,
-            down,
-            1,
-            world,
-            &mut st,
-        );
-        A::sendrecv(
-            grid[last_real..].as_ptr() as *const u8,
-            w as i32,
-            dt,
-            down,
-            2,
-            grid[ghost_top..].as_mut_ptr() as *mut u8,
-            w as i32,
-            dt,
-            up,
-            2,
-            world,
-            &mut st,
-        );
+    // Persistent mode: one request set per buffer, created once. The
+    // four requests of a set carry the same traffic as the two Sendrecv
+    // calls of the blocking path (tags 1 and 2 disambiguate direction).
+    let mut req_sets: Vec<Vec<A::Request>> = Vec::new();
+    if p.persistent {
+        for buf in [&mut grid, &mut next] {
+            // Derive every request pointer from a mutable borrow: the
+            // receives write through them across sweeps.
+            let base = buf.as_mut_ptr();
+            let first_real = unsafe { base.add(idx(1, 0)) } as *const u8;
+            let last_real = unsafe { base.add(idx(my_rows, 0)) } as *const u8;
+            let ghost_top = unsafe { base.add(idx(0, 0)) } as *mut u8;
+            let ghost_bot = unsafe { base.add(idx(my_rows + 1, 0)) } as *mut u8;
+            let mut rs = vec![A::request_null(); 4];
+            A::send_init(first_real, w as i32, dt, up, 1, world, &mut rs[0]);
+            A::recv_init(ghost_bot, w as i32, dt, down, 1, world, &mut rs[1]);
+            A::send_init(last_real, w as i32, dt, down, 2, world, &mut rs[2]);
+            A::recv_init(ghost_top, w as i32, dt, up, 2, world, &mut rs[3]);
+            req_sets.push(rs);
+        }
+    }
+
+    for it in 0..p.iters {
+        if p.persistent {
+            // Start the set bound to whichever buffer is "grid" this
+            // sweep, then wait all four halo transfers.
+            let set = &mut req_sets[it % 2];
+            A::startall(set);
+            let mut sts = vec![A::status_empty(); 4];
+            A::waitall(set, &mut sts);
+        } else {
+            // Exchange: send my first real row up / receive ghost from
+            // above, then send last real row down / receive ghost from
+            // below.
+            let mut st = A::status_empty();
+            let first_real = idx(1, 0);
+            let last_real = idx(my_rows, 0);
+            let ghost_top = idx(0, 0);
+            let ghost_bot = idx(my_rows + 1, 0);
+            A::sendrecv(
+                grid[first_real..].as_ptr() as *const u8,
+                w as i32,
+                dt,
+                up,
+                1,
+                grid[ghost_bot..].as_mut_ptr() as *mut u8,
+                w as i32,
+                dt,
+                down,
+                1,
+                world,
+                &mut st,
+            );
+            A::sendrecv(
+                grid[last_real..].as_ptr() as *const u8,
+                w as i32,
+                dt,
+                down,
+                2,
+                grid[ghost_top..].as_mut_ptr() as *mut u8,
+                w as i32,
+                dt,
+                up,
+                2,
+                world,
+                &mut st,
+            );
+        }
 
         // 5-point stencil on interior points (global boundary rows are
         // held fixed; the very first/last global rows never update).
@@ -109,6 +158,13 @@ pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
             next[idx(r, w - 1)] = grid[idx(r, w - 1)];
         }
         std::mem::swap(&mut grid, &mut next);
+    }
+
+    // Persistent requests are inactive after their last wait: free them.
+    for set in req_sets.iter_mut() {
+        for r in set.iter_mut() {
+            A::request_free(r);
+        }
     }
 
     // Residual: sum of interior values (a cheap convergence proxy).

@@ -19,22 +19,29 @@ pub type DeleteFn = Box<dyn Fn(CommId, i32, usize, usize) -> RC<()>>;
 
 /// Keyval object.
 pub struct KeyvalObj {
+    /// Behavior on `MPI_Comm_dup`.
     pub copy: KeyvalCopy,
+    /// Behavior on attribute/comm deletion.
     pub delete: KeyvalDelete,
+    /// The user's extra-state word, passed to both callbacks.
     pub extra_state: usize,
 }
 
+/// A keyval's copy behavior.
 pub enum KeyvalCopy {
     /// `MPI_COMM_NULL_COPY_FN` (0x0): never copied on dup.
     NullCopy,
     /// `MPI_COMM_DUP_FN` (0xD): copied verbatim on dup.
     Dup,
+    /// User copy callback.
     User(CopyFn),
 }
 
+/// A keyval's delete behavior.
 pub enum KeyvalDelete {
     /// `MPI_COMM_NULL_DELETE_FN` (0x0): nothing to do.
     NullDelete,
+    /// User delete callback.
     User(DeleteFn),
 }
 

@@ -43,6 +43,7 @@ pub fn alltoallv(
 
 /// The `MPI_Alltoallw` argument bundle: per-peer counts, *byte*
 /// displacements, and per-peer datatypes.
+#[allow(missing_docs)] // field names mirror the MPI_Alltoallw parameters
 pub struct AlltoallwArgs {
     pub sendbuf: *const u8,
     pub sendcounts: Vec<usize>,

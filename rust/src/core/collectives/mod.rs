@@ -23,6 +23,10 @@ pub use sched::{
     iallgather, iallgatherv, iallreduce, ialltoall, ialltoallv, ialltoallw, ibarrier, ibcast,
     iexscan, igather, igatherv, ireduce, ireduce_scatter_block, iscan, iscatter, iscatterv,
 };
+pub use sched::{
+    allreduce_init, alltoall_init, barrier_init, bcast_init, gather_init, scatter_init,
+    schedules_built,
+};
 
 use super::comm::{advance_coll_tag, comm_snapshot};
 use super::request::{enqueue_send, progress};

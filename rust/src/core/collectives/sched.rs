@@ -21,25 +21,61 @@
 //!   sequence separates *concurrent* collectives — which is what makes
 //!   out-of-order completion of overlapping nonblocking collectives safe.
 //!
+//! # Restartability (persistent collectives, MPI-4)
+//!
+//! A schedule is a **reusable program**: an immutable step list executed
+//! from a program counter, plus a small list of start-time [`Prep`]
+//! actions that refresh the data the steps carry (re-packing user
+//! buffers, so each start observes their current contents). The
+//! nonblocking entry points arm-and-run a schedule once; the `*_init`
+//! entry points park the same schedule inside an Inactive persistent
+//! request, and each `MPI_Start` re-arms it via [`start_sched`] —
+//! **reset and re-run, never rebuild**. [`schedules_built`] counts
+//! constructions so benches and tests can prove the reuse.
+//!
+//! Tag discipline across restarts: a persistent collective keeps the
+//! base tag allocated at `*_init` time (the init calls are collective,
+//! so all ranks agree). Consecutive starts of the same request reuse
+//! that tag safely because messages between one (src, context, tag)
+//! pair are delivered and matched in FIFO order; other collectives on
+//! the comm advance the per-comm sequence and stay on different tags —
+//! until the 24-bit sequence wraps (~16.7M collectives on one comm
+//! while the persistent request stays alive), the same transient
+//! wrap-collision window the nonblocking family already has.
+//!
 //! Schedules progress whenever the rank enters the progress engine
 //! (any test/wait/recv), so an `iallreduce` overlaps pt2pt traffic and
 //! other collectives on the same communicator.
 
-use std::collections::VecDeque;
-
 use super::{children_of, coll_begin, parent_of, CollCtx};
 use crate::core::comm::comm_size;
 use crate::core::datatype::pack::{pack, unpack};
-use crate::core::request::{enqueue_send, new_request, ReqKind, StatusCore};
+use crate::core::request::{
+    new_persistent, new_request, enqueue_send, PersistSpec, ReqKind, ReqState, StatusCore,
+};
 use crate::core::transport::{Envelope, MsgKind, Payload};
 use crate::core::world::{with_ctx, RankCtx};
 use crate::core::{err, CommId, DtId, OpId, RC, ReqId};
+
+/// Count of schedule constructions in the **calling rank's job** (the
+/// counter lives on the [`World`], so parallel jobs in one process —
+/// e.g. concurrently running tests — never perturb each other). A
+/// persistent collective builds exactly one schedule per rank at
+/// `*_init`; each nonblocking call builds one. Benches and tests read
+/// the delta across a start/wait loop to prove that persistent
+/// collectives reuse, not rebuild. Returns 0 on an unbound thread.
+///
+/// [`World`]: crate::core::world::World
+pub fn schedules_built() -> u64 {
+    crate::core::world::try_ctx(|ctx| ctx.map(|c| c.world.sched_builds()).unwrap_or(0))
+}
 
 // ---------------------------------------------------------------------------
 // Schedule representation
 // ---------------------------------------------------------------------------
 
 /// What to do with the bytes of a matched receive step.
+#[derive(Clone, Copy)]
 pub(crate) enum RecvAction {
     /// Drop the payload (pure synchronization, e.g. barrier rounds).
     Discard,
@@ -60,9 +96,12 @@ pub(crate) enum RecvAction {
 
 /// One step of a per-rank collective schedule. Peers are *comm ranks*;
 /// `phase` offsets the collective's base tag (bounded by
-/// [`super::PHASES_PER_COLL`]).
+/// [`super::PHASES_PER_COLL`]). Steps are immutable during execution —
+/// the program counter walks them, and only [`Prep`] actions (run at
+/// arm time) refresh the data they carry.
 pub(crate) enum Step {
-    /// Eager-send bytes fixed at schedule-build time.
+    /// Eager-send a byte block. The block is filled at arm time by a
+    /// [`Prep::PackStep`] action (or stays empty: barrier rounds).
     Send { to: usize, phase: i32, data: Vec<u8> },
     /// Eager-send the accumulator (or `range` of it) *as of execution
     /// time* — for data produced by earlier receive steps.
@@ -84,41 +123,96 @@ pub(crate) enum Step {
     },
 }
 
-/// A per-rank collective schedule: the restartable state of one
-/// in-flight collective. Lives inside its request
-/// ([`ReqKind::Sched`]) and is advanced by [`progress_scheds`].
+/// A start-time data-refresh action. Preps re-read the *user buffers*
+/// captured at build time, so every start of a persistent collective
+/// observes their current contents (MPI-4 semantics); the one-shot
+/// nonblocking path runs them exactly once, at submit.
+#[derive(Clone, Copy)]
+pub(crate) enum Prep {
+    /// `accum = pack(count items of dt at buf + displ)`.
+    PackAccum { buf: usize, displ: isize, count: usize, dt: DtId },
+    /// `accum = [0u8; len]` (gather staging area).
+    ClearAccum { len: usize },
+    /// Overwrite `accum[off..]` with packed user bytes (a root's own
+    /// block in the gather staging area). Runs after [`Prep::ClearAccum`].
+    PackAccumAt { off: usize, buf: usize, displ: isize, count: usize, dt: DtId },
+    /// Fill `program[idx]` (a [`Step::Send`]) with packed user bytes.
+    PackStep { idx: usize, buf: usize, displ: isize, count: usize, dt: DtId },
+    /// Local self-exchange: pack from one user buffer, unpack into
+    /// another (root's own block in gather/scatter, alltoall diagonal).
+    Exchange {
+        sbuf: usize,
+        sdispl: isize,
+        scount: usize,
+        sdt: DtId,
+        dbuf: usize,
+        ddispl: isize,
+        dcount: usize,
+        ddt: DtId,
+    },
+}
+
+/// A per-rank collective schedule: the restartable program of one
+/// collective. Lives inside its request ([`ReqKind::Sched`]) and is
+/// advanced by [`progress_scheds`]; persistent requests retain it across
+/// starts and [`start_sched`] re-arms it in place.
 pub struct Schedule {
     /// Member world ranks, comm-rank order (snapshot from coll_begin).
     members: Vec<usize>,
     /// The collective context id of the communicator.
     context: u32,
-    /// Base tag of this collective (phases offset it).
+    /// Base tag of this collective (phases offset it). Persistent
+    /// schedules keep it across starts — see the module docs.
     tag: i32,
-    /// Remaining steps, executed front to back.
-    steps: VecDeque<Step>,
+    /// Start-time data refresh, run by [`arm`] before each execution.
+    prep: Vec<Prep>,
+    /// The step program, executed from [`Schedule::pc`] forward.
+    program: Vec<Step>,
+    /// Program counter: next step to execute.
+    pc: usize,
     /// Working buffer (packed bytes) threaded through the steps.
     accum: Vec<u8>,
     /// Secondary buffer for algorithms needing two live values (exscan).
     aux: Vec<u8>,
     /// Payload bytes received so far (reported in the final status).
     recv_bytes: u64,
+    /// Staging buffer for arm-time preps (self-exchange, gather own
+    /// block) — retained so restarts stay allocation-free.
+    scratch: Vec<u8>,
+    /// Whether this schedule will be re-armed ([`submit_init`] sets it).
+    /// One-shot schedules surrender their send blocks instead of copying.
+    persistent: bool,
 }
 
 impl Schedule {
     fn new(cc: CollCtx) -> Schedule {
+        crate::core::world::try_ctx(|ctx| {
+            if let Some(c) = ctx {
+                c.world.note_sched_build();
+            }
+        });
         Schedule {
             members: cc.members,
             context: cc.context,
             tag: cc.tag,
-            steps: VecDeque::new(),
+            prep: Vec::new(),
+            program: Vec::new(),
+            pc: 0,
             accum: Vec::new(),
             aux: Vec::new(),
             recv_bytes: 0,
+            scratch: Vec::new(),
+            persistent: false,
         }
     }
 
     fn push(&mut self, s: Step) {
-        self.steps.push_back(s);
+        self.program.push(s);
+    }
+
+    /// Index the next step will get (for [`Prep::PackStep`] targets).
+    fn next_idx(&self) -> usize {
+        self.program.len()
     }
 }
 
@@ -157,7 +251,8 @@ fn apply_recv(ctx: &RankCtx, s: &mut Schedule, payload: Payload, action: RecvAct
     match action {
         RecvAction::Discard => Ok(()),
         RecvAction::Store => {
-            s.accum = data.to_vec();
+            s.accum.clear();
+            s.accum.extend_from_slice(data);
             Ok(())
         }
         RecvAction::StoreAt { offset, len } => {
@@ -169,7 +264,8 @@ fn apply_recv(ctx: &RankCtx, s: &mut Schedule, payload: Payload, action: RecvAct
             Ok(())
         }
         RecvAction::StoreAux => {
-            s.aux = data.to_vec();
+            s.aux.clear();
+            s.aux.extend_from_slice(data);
             Ok(())
         }
         RecvAction::Combine { op, count, dt } => {
@@ -184,19 +280,84 @@ fn apply_recv(ctx: &RankCtx, s: &mut Schedule, payload: Payload, action: RecvAct
     }
 }
 
+/// Run the start-time prep actions and reset the program counter —
+/// everything [`start_sched`] (and the one-shot submit path) needs to
+/// (re)launch a schedule. User buffers are re-read here, so restarts
+/// pick up updated contents; heap allocations (accum, step data blocks)
+/// are reused across starts.
+fn arm(ctx: &RankCtx, s: &mut Schedule) -> RC<()> {
+    s.pc = 0;
+    s.recv_bytes = 0;
+    s.aux.clear();
+    for i in 0..s.prep.len() {
+        match s.prep[i] {
+            Prep::PackAccum { buf, displ, count, dt } => {
+                s.accum.clear();
+                let t = ctx.tables.borrow();
+                let src = unsafe { (buf as *const u8).offset(displ) };
+                pack(&t.dtypes, src, count, dt, &mut s.accum)?;
+            }
+            Prep::ClearAccum { len } => {
+                s.accum.clear();
+                s.accum.resize(len, 0);
+            }
+            Prep::PackAccumAt { off, buf, displ, count, dt } => {
+                s.scratch.clear();
+                {
+                    let t = ctx.tables.borrow();
+                    let src = unsafe { (buf as *const u8).offset(displ) };
+                    pack(&t.dtypes, src, count, dt, &mut s.scratch)?;
+                }
+                if off < s.accum.len() {
+                    let take = s.scratch.len().min(s.accum.len() - off);
+                    s.accum[off..off + take].copy_from_slice(&s.scratch[..take]);
+                }
+            }
+            Prep::PackStep { idx, buf, displ, count, dt } => {
+                let t = ctx.tables.borrow();
+                let src = unsafe { (buf as *const u8).offset(displ) };
+                if let Some(Step::Send { data, .. }) = s.program.get_mut(idx) {
+                    data.clear();
+                    pack(&t.dtypes, src, count, dt, data)?;
+                }
+            }
+            Prep::Exchange { sbuf, sdispl, scount, sdt, dbuf, ddispl, dcount, ddt } => {
+                s.scratch.clear();
+                let t = ctx.tables.borrow();
+                let src = unsafe { (sbuf as *const u8).offset(sdispl) };
+                pack(&t.dtypes, src, scount, sdt, &mut s.scratch)?;
+                let dst = unsafe { (dbuf as *mut u8).offset(ddispl) };
+                unpack(&t.dtypes, &s.scratch, dst, dcount, ddt)?;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Run `s` as far as it will go without blocking. `Ok(true)` = finished.
 fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
-    loop {
-        let Some(step) = s.steps.pop_front() else { return Ok(true) };
-        match step {
+    let persistent = s.persistent;
+    while s.pc < s.program.len() {
+        match &mut s.program[s.pc] {
             Step::Send { to, phase, data } => {
-                send_payload(ctx, s, to, phase, Payload::from_vec(data));
+                let (to, phase) = (*to, *phase);
+                let payload = if persistent {
+                    // Re-armed schedules keep the block (Prep::PackStep
+                    // refills it at the next start).
+                    Payload::from_slice(data)
+                } else {
+                    // One-shot: move the built block, no copy.
+                    Payload::from_vec(std::mem::take(data))
+                };
+                send_payload(ctx, s, to, phase, payload);
             }
             Step::SendAccum { to, phase, range } => {
+                let (to, phase, range) = (*to, *phase, *range);
                 let payload = Payload::from_slice(ranged(&s.accum, range));
                 send_payload(ctx, s, to, phase, payload);
             }
             Step::Recv { from, phase, action } => {
+                let (from, phase, action) = (*from, *phase, *action);
                 let want_src = s.members[from] as i32;
                 let tag = s.tag + phase;
                 let matched = {
@@ -211,26 +372,30 @@ fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
                         apply_recv(ctx, s, env.payload, action)?;
                     }
                     None => {
-                        // Not here yet: park on this step.
-                        s.steps.push_front(Step::Recv { from, phase, action });
+                        // Not here yet: park on this step (pc unchanged).
                         return Ok(false);
                     }
                 }
             }
             Step::FoldAux { op, count, dt } => {
+                let (op, count, dt) = (*op, *count, *dt);
                 let aux = std::mem::take(&mut s.aux);
                 let r = crate::core::op::apply(op, &aux, &mut s.accum, count, dt);
                 s.aux = aux;
                 r?;
             }
             Step::Unpack { buf, displ, count, dt, range, from_aux } => {
+                let (buf, displ, count, dt, range, from_aux) =
+                    (*buf, *displ, *count, *dt, *range, *from_aux);
                 let src = ranged(if from_aux { &s.aux } else { &s.accum }, range);
                 let t = ctx.tables.borrow();
                 let dst = unsafe { (buf as *mut u8).offset(displ) };
                 unpack(&t.dtypes, src, dst, count, dt)?;
             }
         }
+        s.pc += 1;
     }
+    Ok(true)
 }
 
 fn complete_status(s: &Schedule) -> StatusCore {
@@ -239,15 +404,72 @@ fn complete_status(s: &Schedule) -> StatusCore {
     st
 }
 
-/// Register a built schedule as a request, advancing it once immediately
-/// (local-only schedules — size-1 comms, leaf-only work — complete here).
+/// Register a built schedule as a one-shot (nonblocking) request,
+/// arming and advancing it once immediately (local-only schedules —
+/// size-1 comms, leaf-only work — complete here).
 fn submit(ctx: &RankCtx, mut s: Schedule) -> RC<ReqId> {
+    arm(ctx, &mut s)?;
     if advance(ctx, &mut s)? {
-        return Ok(new_request(ctx, ReqKind::Send, Some(complete_status(&s))));
+        return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(complete_status(&s))));
     }
-    let rid = new_request(ctx, ReqKind::Sched(Box::new(s)), None);
+    let rid = new_request(ctx, ReqKind::Sched(Box::new(s)), ReqState::Active);
     ctx.state.borrow_mut().active_scheds.push(rid);
     Ok(rid)
+}
+
+/// Park a built schedule inside an **Inactive persistent** request
+/// (`MPI_Bcast_init` & co.). Nothing runs until `MPI_Start`.
+fn submit_init(ctx: &RankCtx, mut s: Schedule) -> RC<ReqId> {
+    s.persistent = true;
+    Ok(new_persistent(ctx, ReqKind::Sched(Box::new(s)), PersistSpec::Coll))
+}
+
+/// `MPI_Start` for a persistent collective: re-arm the retained schedule
+/// (reset program counter, re-run preps) and advance it once. Called
+/// from the engine's start path; the request is known Inactive.
+pub(crate) fn start_sched(ctx: &RankCtx, rid: ReqId) -> RC<()> {
+    // Move the schedule out of the request table so arming/advancing can
+    // re-borrow tables (pack/unpack, user ops) freely.
+    let mut sched = {
+        let mut t = ctx.tables.borrow_mut();
+        let req = t.reqs.get_mut(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+        match std::mem::replace(&mut req.kind, ReqKind::Send) {
+            ReqKind::Sched(s) => s,
+            other => {
+                req.kind = other;
+                return Err(err!(MPI_ERR_REQUEST));
+            }
+        }
+    };
+    let outcome = arm(ctx, &mut sched).and_then(|()| advance(ctx, &mut sched));
+    let became_active = {
+        let mut t = ctx.tables.borrow_mut();
+        let req = t.reqs.get_mut(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+        let active = match &outcome {
+            Ok(true) => {
+                req.state = ReqState::Complete(complete_status(&sched));
+                false
+            }
+            Ok(false) => {
+                req.state = ReqState::Active;
+                true
+            }
+            Err(e) => {
+                // Errors land in the status (surfaced at wait/test); the
+                // schedule survives, so a restart after error is legal.
+                let mut st = complete_status(&sched);
+                st.error = e.class;
+                req.state = ReqState::Complete(st);
+                false
+            }
+        };
+        req.kind = ReqKind::Sched(sched);
+        active
+    };
+    if became_active {
+        ctx.state.borrow_mut().active_scheds.push(rid);
+    }
+    Ok(())
 }
 
 /// Progress-engine hook: advance every in-flight schedule. Called from
@@ -282,7 +504,7 @@ pub(crate) fn progress_scheds(ctx: &RankCtx) {
         let taken = {
             let mut t = ctx.tables.borrow_mut();
             match t.reqs.get_mut(rid.0) {
-                Some(req) if req.status.is_none() => {
+                Some(req) if req.state == ReqState::Active => {
                     match std::mem::replace(&mut req.kind, ReqKind::Send) {
                         ReqKind::Sched(s) => Taken::Sched(s),
                         other => {
@@ -305,7 +527,12 @@ pub(crate) fn progress_scheds(ctx: &RankCtx) {
                     None => false,
                     Some(req) => match outcome {
                         Ok(true) => {
-                            req.status = Some(complete_status(&sched));
+                            req.state = ReqState::Complete(complete_status(&sched));
+                            if req.persist.is_some() {
+                                // Persistent collective: the schedule
+                                // survives for the next MPI_Start.
+                                req.kind = ReqKind::Sched(sched);
+                            }
                             false
                         }
                         Ok(false) => {
@@ -315,7 +542,10 @@ pub(crate) fn progress_scheds(ctx: &RankCtx) {
                         Err(e) => {
                             let mut st = complete_status(&sched);
                             st.error = e.class;
-                            req.status = Some(st);
+                            req.state = ReqState::Complete(st);
+                            if req.persist.is_some() {
+                                req.kind = ReqKind::Sched(sched);
+                            }
                             false
                         }
                     },
@@ -340,37 +570,6 @@ fn in_place(p: *const u8) -> bool {
     p as usize == crate::abi::constants::MPI_IN_PLACE
 }
 
-fn pack_user(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Vec<u8>> {
-    let t = ctx.tables.borrow();
-    let mut v = Vec::new();
-    pack(&t.dtypes, buf, count, dt, &mut v)?;
-    Ok(v)
-}
-
-/// Pack `count` items of `dt` at byte displacement `displ` from `buf`.
-fn pack_at(ctx: &RankCtx, buf: *const u8, displ: isize, count: usize, dt: DtId) -> RC<Vec<u8>> {
-    let t = ctx.tables.borrow();
-    let src = unsafe { buf.offset(displ) };
-    let mut v = Vec::new();
-    pack(&t.dtypes, src, count, dt, &mut v)?;
-    Ok(v)
-}
-
-/// Unpack into user memory at byte displacement `displ` from `buf`.
-fn unpack_at(
-    ctx: &RankCtx,
-    data: &[u8],
-    buf: *mut u8,
-    displ: isize,
-    count: usize,
-    dt: DtId,
-) -> RC<()> {
-    let t = ctx.tables.borrow();
-    let dst = unsafe { buf.offset(displ) };
-    unpack(&t.dtypes, data, dst, count, dt)?;
-    Ok(())
-}
-
 fn packed_len(ctx: &RankCtx, count: usize, dt: DtId) -> RC<usize> {
     let t = ctx.tables.borrow();
     Ok(t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?.size * count)
@@ -388,29 +587,48 @@ fn check_root(cc: &CollCtx, root: i32) -> RC<usize> {
     Ok(root as usize)
 }
 
-// ---------------------------------------------------------------------------
-// Schedule builders: the nonblocking collective family
-// ---------------------------------------------------------------------------
+/// Uniform-block layout of the fixed-count collective entry points:
+/// `count` elements per rank, rank `r`'s block at element displacement
+/// `r * count`.
+fn uniform_layout(count: usize, n: usize) -> (Vec<usize>, Vec<isize>) {
+    (vec![count; n], (0..n).map(|r| (r * count) as isize).collect())
+}
 
-/// `MPI_Ibarrier`: dissemination algorithm, one tag phase per round.
+// ---------------------------------------------------------------------------
+// Schedule builders
+// ---------------------------------------------------------------------------
+//
+// Each collective has exactly one builder, returning a restartable
+// Schedule; the nonblocking entry point submits it one-shot, the
+// persistent `*_init` entry point parks it in an Inactive request.
+
+/// Dissemination barrier, one tag phase per round.
+fn build_barrier(comm: CommId) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let mut s = Schedule::new(cc);
+    let mut k = 1usize;
+    let mut round = 0i32;
+    while k < n {
+        let dst = (me + k) % n;
+        let src = (me + n - k) % n;
+        s.push(Step::Send { to: dst, phase: round, data: Vec::new() });
+        s.push(Step::Recv { from: src, phase: round, action: RecvAction::Discard });
+        k <<= 1;
+        round += 1;
+    }
+    Ok(s)
+}
+
+/// `MPI_Ibarrier`.
 pub fn ibarrier(comm: CommId) -> RC<ReqId> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        let mut s = Schedule::new(cc);
-        let mut k = 1usize;
-        let mut round = 0i32;
-        while k < n {
-            let dst = (me + k) % n;
-            let src = (me + n - k) % n;
-            s.push(Step::Send { to: dst, phase: round, data: Vec::new() });
-            s.push(Step::Recv { from: src, phase: round, action: RecvAction::Discard });
-            k <<= 1;
-            round += 1;
-        }
-        submit(ctx, s)
-    })
+    with_ctx(|ctx| submit(ctx, build_barrier(comm)?))
+}
+
+/// `MPI_Barrier_init` (MPI-4): persistent barrier. Collective call.
+pub fn barrier_init(comm: CommId) -> RC<ReqId> {
+    with_ctx(|ctx| submit_init(ctx, build_barrier(comm)?))
 }
 
 /// Append a binomial-tree broadcast of the accumulator (rooted at comm
@@ -454,32 +672,72 @@ fn push_reduce_tree(
     }
 }
 
+/// Binomial-tree broadcast.
+fn build_bcast(buf: *mut u8, count: usize, dt: DtId, root: i32, comm: CommId) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let root = check_root(&cc, root)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let mut s = Schedule::new(cc);
+    if n > 1 {
+        if me == root {
+            s.prep.push(Prep::PackAccum { buf: buf as usize, displ: 0, count, dt });
+        }
+        push_bcast_tree(&mut s, me, n, root, 0);
+        if me != root {
+            s.push(Step::Unpack {
+                buf: buf as usize,
+                displ: 0,
+                count,
+                dt,
+                range: None,
+                from_aux: false,
+            });
+        }
+    }
+    Ok(s)
+}
+
 /// `MPI_Ibcast`.
 pub fn ibcast(buf: *mut u8, count: usize, dt: DtId, root: i32, comm: CommId) -> RC<ReqId> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let root = check_root(&cc, root)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        let mut s = Schedule::new(cc);
-        if n > 1 {
-            if me == root {
-                s.accum = pack_user(ctx, buf as *const u8, count, dt)?;
-            }
-            push_bcast_tree(&mut s, me, n, root, 0);
-            if me != root {
-                s.push(Step::Unpack {
-                    buf: buf as usize,
-                    displ: 0,
-                    count,
-                    dt,
-                    range: None,
-                    from_aux: false,
-                });
-            }
-        }
-        submit(ctx, s)
-    })
+    with_ctx(|ctx| submit(ctx, build_bcast(buf, count, dt, root, comm)?))
+}
+
+/// `MPI_Bcast_init` (MPI-4): the root's buffer is re-read at every
+/// start. Collective call.
+pub fn bcast_init(buf: *mut u8, count: usize, dt: DtId, root: i32, comm: CommId) -> RC<ReqId> {
+    with_ctx(|ctx| submit_init(ctx, build_bcast(buf, count, dt, root, comm)?))
+}
+
+/// Binomial-tree reduction to `root`.
+fn build_reduce(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    root: i32,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let root = check_root(&cc, root)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let contrib = if in_place(sendbuf) && me == root { recvbuf as *const u8 } else { sendbuf };
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
+    push_reduce_tree(&mut s, me, n, root, 0, op, count, dt);
+    if me == root {
+        s.push(Step::Unpack {
+            buf: recvbuf as usize,
+            displ: 0,
+            count,
+            dt,
+            range: None,
+            from_aux: false,
+        });
+    }
+    Ok(s)
 }
 
 /// `MPI_Ireduce`.
@@ -492,31 +750,40 @@ pub fn ireduce(
     root: i32,
     comm: CommId,
 ) -> RC<ReqId> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let root = check_root(&cc, root)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        let contrib =
-            if in_place(sendbuf) && me == root { recvbuf as *const u8 } else { sendbuf };
-        let mut s = Schedule::new(cc);
-        s.accum = pack_user(ctx, contrib, count, dt)?;
-        push_reduce_tree(&mut s, me, n, root, 0, op, count, dt);
-        if me == root {
-            s.push(Step::Unpack {
-                buf: recvbuf as usize,
-                displ: 0,
-                count,
-                dt,
-                range: None,
-                from_aux: false,
-            });
-        }
-        submit(ctx, s)
-    })
+    with_ctx(|ctx| submit(ctx, build_reduce(sendbuf, recvbuf, count, dt, op, root, comm)?))
 }
 
-/// `MPI_Iallreduce` (reduce to comm rank 0, then broadcast — two phases).
+/// Reduce to comm rank 0, then broadcast — two phases.
+fn build_allreduce(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
+    if n > 1 {
+        push_reduce_tree(&mut s, me, n, 0, 0, op, count, dt);
+        push_bcast_tree(&mut s, me, n, 0, 1);
+    }
+    s.push(Step::Unpack {
+        buf: recvbuf as usize,
+        displ: 0,
+        count,
+        dt,
+        range: None,
+        from_aux: false,
+    });
+    Ok(s)
+}
+
+/// `MPI_Iallreduce`.
 pub fn iallreduce(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -525,30 +792,88 @@ pub fn iallreduce(
     op: OpId,
     comm: CommId,
 ) -> RC<ReqId> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
-        let mut s = Schedule::new(cc);
-        s.accum = pack_user(ctx, contrib, count, dt)?;
-        if n > 1 {
-            push_reduce_tree(&mut s, me, n, 0, 0, op, count, dt);
-            push_bcast_tree(&mut s, me, n, 0, 1);
-        }
-        s.push(Step::Unpack {
-            buf: recvbuf as usize,
-            displ: 0,
-            count,
-            dt,
-            range: None,
-            from_aux: false,
-        });
-        submit(ctx, s)
-    })
+    with_ctx(|ctx| submit(ctx, build_allreduce(sendbuf, recvbuf, count, dt, op, comm)?))
 }
 
-/// `MPI_Igatherv` (displacements in recvtype extents, MPI-style).
+/// `MPI_Allreduce_init` (MPI-4): contributions are re-packed from the
+/// send buffer at every start. Collective call.
+pub fn allreduce_init(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| submit_init(ctx, build_allreduce(sendbuf, recvbuf, count, dt, op, comm)?))
+}
+
+/// Linear rooted gather (displacements in recvtype extents, MPI-style).
+#[allow(clippy::too_many_arguments)]
+fn build_gatherv(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    displs: &[isize],
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let root = check_root(&cc, root)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    if me == root && (recvcounts.len() != n || displs.len() != n) {
+        return Err(err!(MPI_ERR_COUNT));
+    }
+    let mut s = Schedule::new(cc);
+    if me == root {
+        let rext = extent_of(ctx, recvtype)?;
+        if !in_place(sendbuf) {
+            s.prep.push(Prep::Exchange {
+                sbuf: sendbuf as usize,
+                sdispl: 0,
+                scount: sendcount,
+                sdt: sendtype,
+                dbuf: recvbuf as usize,
+                ddispl: rext * displs[me],
+                dcount: recvcounts[me],
+                ddt: recvtype,
+            });
+        }
+        for r in 0..n {
+            if r == root {
+                continue;
+            }
+            s.push(Step::Recv {
+                from: r,
+                phase: 0,
+                action: RecvAction::Unpack {
+                    buf: recvbuf as usize,
+                    displ: rext * displs[r],
+                    count: recvcounts[r],
+                    dt: recvtype,
+                },
+            });
+        }
+    } else {
+        let idx = s.next_idx();
+        s.push(Step::Send { to: root, phase: 0, data: Vec::new() });
+        s.prep.push(Prep::PackStep {
+            idx,
+            buf: sendbuf as usize,
+            displ: 0,
+            count: sendcount,
+            dt: sendtype,
+        });
+    }
+    Ok(s)
+}
+
+/// `MPI_Igatherv`.
 #[allow(clippy::too_many_arguments)]
 pub fn igatherv(
     sendbuf: *const u8,
@@ -562,39 +887,8 @@ pub fn igatherv(
     comm: CommId,
 ) -> RC<ReqId> {
     with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let root = check_root(&cc, root)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        if me == root && (recvcounts.len() != n || displs.len() != n) {
-            return Err(err!(MPI_ERR_COUNT));
-        }
-        let mut s = Schedule::new(cc);
-        if me == root {
-            let rext = extent_of(ctx, recvtype)?;
-            if !in_place(sendbuf) {
-                let own = pack_user(ctx, sendbuf, sendcount, sendtype)?;
-                unpack_at(ctx, &own, recvbuf, rext * displs[me], recvcounts[me], recvtype)?;
-            }
-            for r in 0..n {
-                if r == root {
-                    continue;
-                }
-                s.push(Step::Recv {
-                    from: r,
-                    phase: 0,
-                    action: RecvAction::Unpack {
-                        buf: recvbuf as usize,
-                        displ: rext * displs[r],
-                        count: recvcounts[r],
-                        dt: recvtype,
-                    },
-                });
-            }
-        } else {
-            let bytes = pack_user(ctx, sendbuf, sendcount, sendtype)?;
-            s.push(Step::Send { to: root, phase: 0, data: bytes });
-        }
+        let s = build_gatherv(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs,
+            recvtype, root, comm)?;
         submit(ctx, s)
     })
 }
@@ -612,12 +906,98 @@ pub fn igather(
     comm: CommId,
 ) -> RC<ReqId> {
     let n = comm_size(comm)? as usize;
-    let counts = vec![recvcount; n];
-    let displs: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
+    let (counts, displs) = uniform_layout(recvcount, n);
     igatherv(sendbuf, sendcount, sendtype, recvbuf, &counts, &displs, recvtype, root, comm)
 }
 
-/// `MPI_Iscatterv` (displacements in sendtype extents).
+/// `MPI_Gather_init` (MPI-4). Collective call.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_init(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let (counts, displs) = uniform_layout(recvcount, n);
+    with_ctx(|ctx| {
+        let s = build_gatherv(ctx, sendbuf, sendcount, sendtype, recvbuf, &counts, &displs,
+            recvtype, root, comm)?;
+        submit_init(ctx, s)
+    })
+}
+
+/// Linear rooted scatter (displacements in sendtype extents).
+#[allow(clippy::too_many_arguments)]
+fn build_scatterv(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcounts: &[usize],
+    displs: &[isize],
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let root = check_root(&cc, root)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    if me == root && (sendcounts.len() != n || displs.len() != n) {
+        return Err(err!(MPI_ERR_COUNT));
+    }
+    let mut s = Schedule::new(cc);
+    if me == root {
+        let sext = extent_of(ctx, sendtype)?;
+        for r in 0..n {
+            if r == root {
+                // In place: the root's block stays where it is.
+                if !in_place(recvbuf as *const u8) {
+                    s.prep.push(Prep::Exchange {
+                        sbuf: sendbuf as usize,
+                        sdispl: sext * displs[r],
+                        scount: sendcounts[r],
+                        sdt: sendtype,
+                        dbuf: recvbuf as usize,
+                        ddispl: 0,
+                        dcount: recvcount,
+                        ddt: recvtype,
+                    });
+                }
+            } else {
+                let idx = s.next_idx();
+                s.push(Step::Send { to: r, phase: 0, data: Vec::new() });
+                s.prep.push(Prep::PackStep {
+                    idx,
+                    buf: sendbuf as usize,
+                    displ: sext * displs[r],
+                    count: sendcounts[r],
+                    dt: sendtype,
+                });
+            }
+        }
+    } else {
+        s.push(Step::Recv {
+            from: root,
+            phase: 0,
+            action: RecvAction::Unpack {
+                buf: recvbuf as usize,
+                displ: 0,
+                count: recvcount,
+                dt: recvtype,
+            },
+        });
+    }
+    Ok(s)
+}
+
+/// `MPI_Iscatterv`.
 #[allow(clippy::too_many_arguments)]
 pub fn iscatterv(
     sendbuf: *const u8,
@@ -631,42 +1011,8 @@ pub fn iscatterv(
     comm: CommId,
 ) -> RC<ReqId> {
     with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let root = check_root(&cc, root)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        if me == root && (sendcounts.len() != n || displs.len() != n) {
-            return Err(err!(MPI_ERR_COUNT));
-        }
-        let mut s = Schedule::new(cc);
-        if me == root {
-            let sext = extent_of(ctx, sendtype)?;
-            for r in 0..n {
-                if r == root {
-                    // In place: the root's block stays where it is.
-                    if !in_place(recvbuf as *const u8) {
-                        let own =
-                            pack_at(ctx, sendbuf, sext * displs[r], sendcounts[r], sendtype)?;
-                        unpack_at(ctx, &own, recvbuf, 0, recvcount, recvtype)?;
-                    }
-                } else {
-                    let bytes =
-                        pack_at(ctx, sendbuf, sext * displs[r], sendcounts[r], sendtype)?;
-                    s.push(Step::Send { to: r, phase: 0, data: bytes });
-                }
-            }
-        } else {
-            s.push(Step::Recv {
-                from: root,
-                phase: 0,
-                action: RecvAction::Unpack {
-                    buf: recvbuf as usize,
-                    displ: 0,
-                    count: recvcount,
-                    dt: recvtype,
-                },
-            });
-        }
+        let s = build_scatterv(ctx, sendbuf, sendcounts, displs, sendtype, recvbuf, recvcount,
+            recvtype, root, comm)?;
         submit(ctx, s)
     })
 }
@@ -684,13 +1030,110 @@ pub fn iscatter(
     comm: CommId,
 ) -> RC<ReqId> {
     let n = comm_size(comm)? as usize;
-    let counts = vec![sendcount; n];
-    let displs: Vec<isize> = (0..n).map(|r| (r * sendcount) as isize).collect();
+    let (counts, displs) = uniform_layout(sendcount, n);
     iscatterv(sendbuf, &counts, &displs, sendtype, recvbuf, recvcount, recvtype, root, comm)
 }
 
-/// `MPI_Iallgatherv`: gather packed blocks into the accumulator at comm
-/// rank 0 (phase 0), broadcast it (phase 1), unpack every block locally.
+/// `MPI_Scatter_init` (MPI-4): the root's blocks are re-packed at every
+/// start. Collective call.
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_init(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    root: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let (counts, displs) = uniform_layout(sendcount, n);
+    with_ctx(|ctx| {
+        let s = build_scatterv(ctx, sendbuf, &counts, &displs, sendtype, recvbuf, recvcount,
+            recvtype, root, comm)?;
+        submit_init(ctx, s)
+    })
+}
+
+/// Gather packed blocks into the accumulator at comm rank 0 (phase 0),
+/// broadcast it (phase 1), unpack every block locally.
+#[allow(clippy::too_many_arguments)]
+fn build_allgatherv(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    displs: &[isize],
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    if recvcounts.len() != n || displs.len() != n {
+        return Err(err!(MPI_ERR_COUNT));
+    }
+    let rext = extent_of(ctx, recvtype)?;
+    let per = packed_len(ctx, 1, recvtype)?;
+    // Packed block offsets in the accumulator.
+    let mut offs = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for &c in recvcounts {
+        offs.push(total);
+        total += per * c;
+    }
+    // My contribution (for MPI_IN_PLACE: my block of recvbuf).
+    let (own_buf, own_displ, own_count, own_dt) = if in_place(sendbuf) {
+        (recvbuf as usize, rext * displs[me], recvcounts[me], recvtype)
+    } else {
+        (sendbuf as usize, 0, sendcount, sendtype)
+    };
+    let mut s = Schedule::new(cc);
+    if me == 0 {
+        s.prep.push(Prep::ClearAccum { len: total });
+        s.prep.push(Prep::PackAccumAt {
+            off: offs[0],
+            buf: own_buf,
+            displ: own_displ,
+            count: own_count,
+            dt: own_dt,
+        });
+        for r in 1..n {
+            s.push(Step::Recv {
+                from: r,
+                phase: 0,
+                action: RecvAction::StoreAt { offset: offs[r], len: per * recvcounts[r] },
+            });
+        }
+    } else {
+        let idx = s.next_idx();
+        s.push(Step::Send { to: 0, phase: 0, data: Vec::new() });
+        s.prep.push(Prep::PackStep {
+            idx,
+            buf: own_buf,
+            displ: own_displ,
+            count: own_count,
+            dt: own_dt,
+        });
+    }
+    push_bcast_tree(&mut s, me, n, 0, 1);
+    for r in 0..n {
+        s.push(Step::Unpack {
+            buf: recvbuf as usize,
+            displ: rext * displs[r],
+            count: recvcounts[r],
+            dt: recvtype,
+            range: Some((offs[r], per * recvcounts[r])),
+            from_aux: false,
+        });
+    }
+    Ok(s)
+}
+
+/// `MPI_Iallgatherv`.
 #[allow(clippy::too_many_arguments)]
 pub fn iallgatherv(
     sendbuf: *const u8,
@@ -703,53 +1146,8 @@ pub fn iallgatherv(
     comm: CommId,
 ) -> RC<ReqId> {
     with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        if recvcounts.len() != n || displs.len() != n {
-            return Err(err!(MPI_ERR_COUNT));
-        }
-        let rext = extent_of(ctx, recvtype)?;
-        let per = packed_len(ctx, 1, recvtype)?;
-        // Packed block offsets in the accumulator.
-        let mut offs = Vec::with_capacity(n);
-        let mut total = 0usize;
-        for &c in recvcounts {
-            offs.push(total);
-            total += per * c;
-        }
-        // My contribution (for MPI_IN_PLACE: my block of recvbuf).
-        let own = if in_place(sendbuf) {
-            pack_at(ctx, recvbuf as *const u8, rext * displs[me], recvcounts[me], recvtype)?
-        } else {
-            pack_user(ctx, sendbuf, sendcount, sendtype)?
-        };
-        let mut s = Schedule::new(cc);
-        if me == 0 {
-            s.accum = vec![0u8; total];
-            let take = own.len().min(total - offs[0]);
-            s.accum[offs[0]..offs[0] + take].copy_from_slice(&own[..take]);
-            for r in 1..n {
-                s.push(Step::Recv {
-                    from: r,
-                    phase: 0,
-                    action: RecvAction::StoreAt { offset: offs[r], len: per * recvcounts[r] },
-                });
-            }
-        } else {
-            s.push(Step::Send { to: 0, phase: 0, data: own });
-        }
-        push_bcast_tree(&mut s, me, n, 0, 1);
-        for r in 0..n {
-            s.push(Step::Unpack {
-                buf: recvbuf as usize,
-                displ: rext * displs[r],
-                count: recvcounts[r],
-                dt: recvtype,
-                range: Some((offs[r], per * recvcounts[r])),
-                from_aux: false,
-            });
-        }
+        let s = build_allgatherv(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs,
+            recvtype, comm)?;
         submit(ctx, s)
     })
 }
@@ -766,60 +1164,105 @@ pub fn iallgather(
     comm: CommId,
 ) -> RC<ReqId> {
     let n = comm_size(comm)? as usize;
-    let counts = vec![recvcount; n];
-    let displs: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
+    let (counts, displs) = uniform_layout(recvcount, n);
     iallgatherv(sendbuf, sendcount, sendtype, recvbuf, &counts, &displs, recvtype, comm)
 }
 
-/// `MPI_Ialltoallw` over the schedule engine: one eager send and one
-/// parked receive per peer, all on phase 0 (peer identity disambiguates).
+/// Pairwise exchange: one eager send and one parked receive per peer,
+/// all on phase 0 (peer identity disambiguates).
 ///
-/// `MPI_IN_PLACE` works because *all* send blocks are packed at build
+/// `MPI_IN_PLACE` works because *all* send blocks are packed at arm
 /// time, before any receive step can overwrite `recvbuf`: the in-place
 /// send side is simply the receive side's layout.
-pub fn ialltoallw(args: &super::AlltoallwArgs, comm: CommId) -> RC<ReqId> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        let inp = in_place(args.sendbuf);
-        if args.recvcounts.len() != n || (!inp && args.sendcounts.len() != n) {
-            return Err(err!(MPI_ERR_COUNT));
-        }
-        // Resolve the send side: for MPI_IN_PLACE the data to distribute
-        // sits in recvbuf with the receive-side layout.
-        let (sbuf, scounts, sdispls, stypes) = if inp {
-            (args.recvbuf as *const u8, &args.recvcounts, &args.rdispls, &args.recvtypes)
+fn build_alltoallw(args: &super::AlltoallwArgs, comm: CommId) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let inp = in_place(args.sendbuf);
+    if args.recvcounts.len() != n || (!inp && args.sendcounts.len() != n) {
+        return Err(err!(MPI_ERR_COUNT));
+    }
+    // Resolve the send side: for MPI_IN_PLACE the data to distribute
+    // sits in recvbuf with the receive-side layout.
+    let (sbuf, scounts, sdispls, stypes) = if inp {
+        (args.recvbuf as *const u8, &args.recvcounts, &args.rdispls, &args.recvtypes)
+    } else {
+        (args.sendbuf, &args.sendcounts, &args.sdispls, &args.sendtypes)
+    };
+    let mut s = Schedule::new(cc);
+    for r in 0..n {
+        if r == me {
+            // Self-exchange: local pack/unpack at arm time.
+            s.prep.push(Prep::Exchange {
+                sbuf: sbuf as usize,
+                sdispl: sdispls[r],
+                scount: scounts[r],
+                sdt: stypes[r],
+                dbuf: args.recvbuf as usize,
+                ddispl: args.rdispls[r],
+                dcount: args.recvcounts[r],
+                ddt: args.recvtypes[r],
+            });
         } else {
-            (args.sendbuf, &args.sendcounts, &args.sdispls, &args.sendtypes)
-        };
-        let mut s = Schedule::new(cc);
-        for r in 0..n {
-            let bytes = pack_at(ctx, sbuf, sdispls[r], scounts[r], stypes[r])?;
-            if r == me {
-                // Self-exchange: local pack/unpack at build time.
-                unpack_at(ctx, &bytes, args.recvbuf, args.rdispls[r], args.recvcounts[r],
-                    args.recvtypes[r])?;
-            } else {
-                s.push(Step::Send { to: r, phase: 0, data: bytes });
-            }
-        }
-        for r in 0..n {
-            if r == me {
-                continue;
-            }
-            s.push(Step::Recv {
-                from: r,
-                phase: 0,
-                action: RecvAction::Unpack {
-                    buf: args.recvbuf as usize,
-                    displ: args.rdispls[r],
-                    count: args.recvcounts[r],
-                    dt: args.recvtypes[r],
-                },
+            let idx = s.next_idx();
+            s.push(Step::Send { to: r, phase: 0, data: Vec::new() });
+            s.prep.push(Prep::PackStep {
+                idx,
+                buf: sbuf as usize,
+                displ: sdispls[r],
+                count: scounts[r],
+                dt: stypes[r],
             });
         }
-        submit(ctx, s)
+    }
+    for r in 0..n {
+        if r == me {
+            continue;
+        }
+        s.push(Step::Recv {
+            from: r,
+            phase: 0,
+            action: RecvAction::Unpack {
+                buf: args.recvbuf as usize,
+                displ: args.rdispls[r],
+                count: args.recvcounts[r],
+                dt: args.recvtypes[r],
+            },
+        });
+    }
+    Ok(s)
+}
+
+/// `MPI_Ialltoallw` over the schedule engine.
+pub fn ialltoallw(args: &super::AlltoallwArgs, comm: CommId) -> RC<ReqId> {
+    with_ctx(|ctx| submit(ctx, build_alltoallw(args, comm)?))
+}
+
+/// Expand `MPI_Ialltoallv`-style arguments (displacements in type
+/// extents) into [`super::AlltoallwArgs`] (displacements in bytes).
+#[allow(clippy::too_many_arguments)]
+fn alltoallv_args(
+    sendbuf: *const u8,
+    sendcounts: &[usize],
+    sdispls_elems: &[isize],
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    rdispls_elems: &[isize],
+    recvtype: DtId,
+    n: usize,
+) -> RC<super::AlltoallwArgs> {
+    let sext = crate::core::datatype::type_get_extent(sendtype)?.1;
+    let rext = crate::core::datatype::type_get_extent(recvtype)?.1;
+    Ok(super::AlltoallwArgs {
+        sendbuf,
+        sendcounts: sendcounts.to_vec(),
+        sdispls: sdispls_elems.iter().map(|&d| d * sext).collect(),
+        sendtypes: vec![sendtype; n],
+        recvbuf,
+        recvcounts: recvcounts.to_vec(),
+        rdispls: rdispls_elems.iter().map(|&d| d * rext).collect(),
+        recvtypes: vec![recvtype; n],
     })
 }
 
@@ -837,18 +1280,8 @@ pub fn ialltoallv(
     comm: CommId,
 ) -> RC<ReqId> {
     let n = comm_size(comm)? as usize;
-    let sext = crate::core::datatype::type_get_extent(sendtype)?.1;
-    let rext = crate::core::datatype::type_get_extent(recvtype)?.1;
-    let args = super::AlltoallwArgs {
-        sendbuf,
-        sendcounts: sendcounts.to_vec(),
-        sdispls: sdispls_elems.iter().map(|&d| d * sext).collect(),
-        sendtypes: vec![sendtype; n],
-        recvbuf,
-        recvcounts: recvcounts.to_vec(),
-        rdispls: rdispls_elems.iter().map(|&d| d * rext).collect(),
-        recvtypes: vec![recvtype; n],
-    };
+    let args = alltoallv_args(sendbuf, sendcounts, sdispls_elems, sendtype, recvbuf, recvcounts,
+        rdispls_elems, recvtype, n)?;
     ialltoallw(&args, comm)
 }
 
@@ -864,11 +1297,65 @@ pub fn ialltoall(
     comm: CommId,
 ) -> RC<ReqId> {
     let n = comm_size(comm)? as usize;
-    let scounts = vec![sendcount; n];
-    let sdispls: Vec<isize> = (0..n).map(|r| (r * sendcount) as isize).collect();
-    let rcounts = vec![recvcount; n];
-    let rdispls: Vec<isize> = (0..n).map(|r| (r * recvcount) as isize).collect();
+    let (scounts, sdispls) = uniform_layout(sendcount, n);
+    let (rcounts, rdispls) = uniform_layout(recvcount, n);
     ialltoallv(sendbuf, &scounts, &sdispls, sendtype, recvbuf, &rcounts, &rdispls, recvtype, comm)
+}
+
+/// `MPI_Alltoall_init` (MPI-4): every send block is re-packed at every
+/// start. Collective call.
+#[allow(clippy::too_many_arguments)]
+pub fn alltoall_init(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<ReqId> {
+    let n = comm_size(comm)? as usize;
+    let (scounts, sdispls) = uniform_layout(sendcount, n);
+    let (rcounts, rdispls) = uniform_layout(recvcount, n);
+    let args = alltoallv_args(sendbuf, &scounts, &sdispls, sendtype, recvbuf, &rcounts, &rdispls,
+        recvtype, n)?;
+    with_ctx(|ctx| submit_init(ctx, build_alltoallw(&args, comm)?))
+}
+
+/// Inclusive scan, linear chain.
+fn build_scan(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
+    if me > 0 {
+        s.push(Step::Recv {
+            from: me - 1,
+            phase: 0,
+            action: RecvAction::Combine { op, count, dt },
+        });
+    }
+    if me + 1 < n {
+        s.push(Step::SendAccum { to: me + 1, phase: 0, range: None });
+    }
+    s.push(Step::Unpack {
+        buf: recvbuf as usize,
+        displ: 0,
+        count,
+        dt,
+        range: None,
+        from_aux: false,
+    });
+    Ok(s)
 }
 
 /// `MPI_Iscan` (inclusive, linear chain).
@@ -880,33 +1367,7 @@ pub fn iscan(
     op: OpId,
     comm: CommId,
 ) -> RC<ReqId> {
-    with_ctx(|ctx| {
-        let cc = coll_begin(comm)?;
-        let n = cc.size();
-        let me = cc.my_rank;
-        let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
-        let mut s = Schedule::new(cc);
-        s.accum = pack_user(ctx, contrib, count, dt)?;
-        if me > 0 {
-            s.push(Step::Recv {
-                from: me - 1,
-                phase: 0,
-                action: RecvAction::Combine { op, count, dt },
-            });
-        }
-        if me + 1 < n {
-            s.push(Step::SendAccum { to: me + 1, phase: 0, range: None });
-        }
-        s.push(Step::Unpack {
-            buf: recvbuf as usize,
-            displ: 0,
-            count,
-            dt,
-            range: None,
-            from_aux: false,
-        });
-        submit(ctx, s)
-    })
+    with_ctx(|ctx| submit(ctx, build_scan(sendbuf, recvbuf, count, dt, op, comm)?))
 }
 
 /// `MPI_Iexscan` (exclusive; rank 0's recvbuf stays untouched).
@@ -924,7 +1385,8 @@ pub fn iexscan(
         let me = cc.my_rank;
         let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
         let mut s = Schedule::new(cc);
-        s.accum = pack_user(ctx, contrib, count, dt)?; // own contribution
+        // Own contribution.
+        s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
         if me > 0 {
             s.push(Step::Recv { from: me - 1, phase: 0, action: RecvAction::StoreAux });
         }
@@ -967,7 +1429,7 @@ pub fn ireduce_scatter_block(
         let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
         let blk = packed_len(ctx, recvcount, dt)?;
         let mut s = Schedule::new(cc);
-        s.accum = pack_user(ctx, contrib, total, dt)?;
+        s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count: total, dt });
         push_reduce_tree(&mut s, me, n, 0, 0, op, total, dt);
         if me == 0 {
             for r in 1..n {

@@ -11,6 +11,7 @@ use super::slab::Slab;
 use super::world::with_ctx;
 use super::{err, CommId, ErrhId, GroupId, RC};
 
+/// Communicator object.
 #[derive(Debug)]
 pub struct CommObj {
     /// Member world ranks, in comm-rank order.
@@ -25,12 +26,16 @@ pub struct CommObj {
     pub coll_seq: i32,
     /// Cached attributes (word-sized values, §3.3).
     pub attrs: HashMap<i32, usize>,
+    /// The comm's error handler.
     pub errhandler: ErrhId,
+    /// `MPI_Comm_set_name` string.
     pub name: String,
+    /// Predefined comms (world/self) are not freeable.
     pub predefined: bool,
 }
 
 impl CommObj {
+    /// Number of members.
     pub fn size(&self) -> usize {
         self.members.len()
     }
@@ -141,6 +146,7 @@ pub fn comm_set_name(comm: CommId, name: &str) -> RC<()> {
     })
 }
 
+/// `MPI_Comm_get_name`.
 pub fn comm_get_name(comm: CommId) -> RC<String> {
     with_ctx(|ctx| {
         let t = ctx.tables.borrow();
@@ -161,6 +167,7 @@ pub fn comm_set_errhandler(comm: CommId, errh: ErrhId) -> RC<()> {
     })
 }
 
+/// `MPI_Comm_get_errhandler`.
 pub fn comm_get_errhandler(comm: CommId) -> RC<ErrhId> {
     with_ctx(|ctx| {
         let t = ctx.tables.borrow();

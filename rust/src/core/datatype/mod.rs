@@ -17,6 +17,7 @@ use crate::abi::datatypes as adt;
 
 /// Scalar element classes, for reduction-op dispatch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(missing_docs)] // numeric variants name their machine type 1:1
 pub enum ScalarKind {
     I8,
     U8,
@@ -41,36 +42,141 @@ pub enum ScalarKind {
 }
 
 /// Structure of a datatype.
+#[allow(missing_docs)] // constructor parameters; the variant docs name them
 pub enum TypeKind {
     /// Predefined scalar; `abi_dt` is the standard-ABI constant (canonical
     /// name of the builtin, independent of which impl ABI is in use).
     Builtin { abi_dt: usize },
+    /// `count` back-to-back children (`MPI_Type_contiguous`).
     Contiguous { count: usize, child: DtId },
-    /// `stride` in elements (Vector) or bytes (Hvector) of `child`.
+    /// `count` blocks of `blocklen` children, `stride_bytes` apart
+    /// (stride given in elements for Vector, bytes for Hvector).
     Vector { count: usize, blocklen: usize, stride_bytes: isize, child: DtId },
     /// Blocks of (blocklen, displacement-in-bytes).
     Indexed { blocks: Vec<(usize, isize)>, child: DtId },
     /// Blocks of (blocklen, displacement-in-bytes, type).
     Struct { blocks: Vec<(usize, isize, DtId)> },
+    /// `MPI_Type_create_resized`: child with overridden lb/extent.
     Resized { child: DtId },
+    /// `MPI_Type_dup`.
     Dup { child: DtId },
 }
 
 /// A datatype object.
 pub struct DatatypeObj {
+    /// The typemap structure.
     pub kind: TypeKind,
     /// Packed payload bytes per item.
     pub size: usize,
     /// Memory span per item (for iterating arrays of this type).
     pub extent: isize,
+    /// Lower bound (byte offset of the first element).
     pub lb: isize,
+    /// `MPI_Type_commit` was called.
     pub committed: bool,
+    /// Predefined datatypes are not freeable.
     pub predefined: bool,
     /// `MPI_Type_get_envelope` combiner.
     pub combiner: i32,
     /// `true` iff memory layout == packed layout (no holes): enables the
     /// single-memcpy send fast path.
     pub contiguous: bool,
+    /// Cached **pack plan**: the typemap flattened once, at construction,
+    /// into `(byte offset, length)` contiguous runs of one item.
+    /// Pack/unpack walk this list instead of recursing the typemap on
+    /// every call — the amortization that makes persistent operations
+    /// (and every collective's accumulator staging) cheap. `None` for
+    /// typemaps that flatten to more than [`PLAN_MAX_SEGMENTS`] runs;
+    /// those take the recursive path.
+    pub plan: Option<Vec<(isize, usize)>>,
+}
+
+/// Cap on cached pack-plan segments. A typemap that flattens to more
+/// contiguous runs than this is packed recursively instead — the cache
+/// would cost more memory than the traversal saves.
+pub const PLAN_MAX_SEGMENTS: usize = 256;
+
+/// Append a run to a plan under construction, merging with the previous
+/// run when memory-adjacent (keeps plans short for contiguous layouts).
+/// `None` = segment budget exceeded.
+fn plan_push(out: &mut Vec<(isize, usize)>, off: isize, len: usize) -> Option<()> {
+    if len == 0 {
+        return Some(());
+    }
+    if let Some(last) = out.last_mut() {
+        if last.0 + last.1 as isize == off {
+            last.1 += len;
+            return Some(());
+        }
+    }
+    if out.len() >= PLAN_MAX_SEGMENTS {
+        return None;
+    }
+    out.push((off, len));
+    Some(())
+}
+
+/// Splice a child's cached plan at byte offset `base`. Children are
+/// always constructed (and planned) before their parents, so an
+/// unplannable child makes the parent unplannable too.
+fn plan_splice(
+    dtypes: &Slab<DatatypeObj>,
+    child: DtId,
+    base: isize,
+    out: &mut Vec<(isize, usize)>,
+) -> Option<()> {
+    let c = dtypes.get(child.0)?;
+    let p = c.plan.as_ref()?;
+    for &(off, len) in p {
+        plan_push(out, base + off, len)?;
+    }
+    Some(())
+}
+
+/// Flatten `obj`'s typemap into a pack plan (pack order = typemap
+/// order). Returns `None` when the layout exceeds the segment budget.
+fn build_plan(dtypes: &Slab<DatatypeObj>, obj: &DatatypeObj) -> Option<Vec<(isize, usize)>> {
+    let mut out = Vec::new();
+    match &obj.kind {
+        TypeKind::Builtin { .. } => {
+            plan_push(&mut out, 0, obj.size)?;
+        }
+        TypeKind::Contiguous { count, child } => {
+            let cext = dtypes.get(child.0)?.extent;
+            for i in 0..*count {
+                plan_splice(dtypes, *child, cext * i as isize, &mut out)?;
+            }
+        }
+        TypeKind::Vector { count, blocklen, stride_bytes, child } => {
+            let cext = dtypes.get(child.0)?.extent;
+            for i in 0..*count {
+                let b = *stride_bytes * i as isize;
+                for j in 0..*blocklen {
+                    plan_splice(dtypes, *child, b + cext * j as isize, &mut out)?;
+                }
+            }
+        }
+        TypeKind::Indexed { blocks, child } => {
+            let cext = dtypes.get(child.0)?.extent;
+            for &(len, disp) in blocks {
+                for j in 0..len {
+                    plan_splice(dtypes, *child, disp + cext * j as isize, &mut out)?;
+                }
+            }
+        }
+        TypeKind::Struct { blocks } => {
+            for &(len, disp, t) in blocks {
+                let cext = dtypes.get(t.0)?.extent;
+                for j in 0..len {
+                    plan_splice(dtypes, t, disp + cext * j as isize, &mut out)?;
+                }
+            }
+        }
+        TypeKind::Resized { child } | TypeKind::Dup { child } => {
+            plan_splice(dtypes, *child, 0, &mut out)?;
+        }
+    }
+    Some(out)
 }
 
 /// Install all builtin datatypes at their reserved ids
@@ -78,6 +184,7 @@ pub struct DatatypeObj {
 pub fn install_predefined(dtypes: &mut Slab<DatatypeObj>) {
     for (i, &(_, abi_dt)) in adt::PREDEFINED_DATATYPES.iter().enumerate() {
         let size = adt::platform_size_of(abi_dt).unwrap_or(0);
+        let plan = if size > 0 { vec![(0, size)] } else { Vec::new() };
         dtypes.insert_at(
             i as u32,
             DatatypeObj {
@@ -89,6 +196,7 @@ pub fn install_predefined(dtypes: &mut Slab<DatatypeObj>) {
                 predefined: true,
                 combiner: crate::abi::constants::MPI_COMBINER_NAMED,
                 contiguous: true,
+                plan: Some(plan),
             },
         );
     }
@@ -188,8 +296,14 @@ pub fn type_free(dt: DtId) -> RC<()> {
     })
 }
 
-fn insert(obj: DatatypeObj) -> RC<DtId> {
-    with_ctx(|ctx| Ok(DtId(ctx.tables.borrow_mut().dtypes.insert(obj))))
+fn insert(mut obj: DatatypeObj) -> RC<DtId> {
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        // Flatten the typemap once, at construction: every later
+        // pack/unpack of this type walks the cached plan.
+        obj.plan = build_plan(&t.dtypes, &obj);
+        Ok(DtId(t.dtypes.insert(obj)))
+    })
 }
 
 fn child_props(child: DtId) -> RC<(usize, isize, isize, bool)> {
@@ -207,6 +321,7 @@ pub fn type_contiguous(count: usize, child: DtId) -> RC<DtId> {
         committed: false,
         predefined: false,
         combiner: crate::abi::constants::MPI_COMBINER_CONTIGUOUS,
+        plan: None,
         contiguous: ccontig && cext == csize as isize,
     })
 }
@@ -257,6 +372,7 @@ fn type_hvector_bytes(
         committed: false,
         predefined: false,
         combiner,
+        plan: None,
         contiguous: false,
     })
 }
@@ -291,6 +407,7 @@ fn indexed_common(blocks: Vec<(usize, isize)>, child: DtId, combiner: i32) -> RC
         committed: false,
         predefined: false,
         combiner,
+        plan: None,
         contiguous: false,
     })
 }
@@ -314,6 +431,7 @@ pub fn type_struct(blocks: &[(usize, isize, DtId)]) -> RC<DtId> {
         committed: false,
         predefined: false,
         combiner: crate::abi::constants::MPI_COMBINER_STRUCT,
+        plan: None,
         contiguous: false,
     })
 }
@@ -329,6 +447,7 @@ pub fn type_resized(child: DtId, lb: isize, extent: isize) -> RC<DtId> {
         committed: false,
         predefined: false,
         combiner: crate::abi::constants::MPI_COMBINER_RESIZED,
+        plan: None,
         contiguous: false,
     })
 }
@@ -344,6 +463,7 @@ pub fn type_dup(child: DtId) -> RC<DtId> {
         committed: true,
         predefined: false,
         combiner: crate::abi::constants::MPI_COMBINER_DUP,
+        plan: None,
         contiguous: ccontig,
     })
 }

@@ -8,10 +8,23 @@
 //! Safety: `ptr` arguments are user buffer addresses paired with datatype
 //! extents, exactly as at a C MPI boundary. The caller (ABI shim) is
 //! responsible for the buffer being live and large enough — MPI semantics.
+//!
+//! Fast path: most types carry a **cached pack plan**
+//! ([`DatatypeObj::plan`]) — the typemap flattened at construction into
+//! `(offset, len)` runs — so the per-call work is a handful of memcpys
+//! instead of a typemap recursion. Dense types (one run covering the
+//! whole extent) collapse to a single memcpy for the entire array.
 
 use super::{DatatypeObj, TypeKind};
 use crate::core::slab::Slab;
 use crate::core::{err, DtId, RC};
+
+/// Whether `plan` is one hole-free run covering the full extent — the
+/// whole array can then move in a single memcpy.
+#[inline]
+fn plan_is_dense(plan: &[(isize, usize)], obj: &DatatypeObj) -> bool {
+    plan.len() == 1 && plan[0].0 == 0 && plan[0].1 == obj.size && obj.extent == obj.size as isize
+}
 
 /// Pack `count` items of `dt` starting at `ptr` into `out`.
 pub fn pack(
@@ -23,6 +36,23 @@ pub fn pack(
 ) -> RC<()> {
     let obj = dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
     out.reserve(obj.size * count);
+    if let Some(plan) = &obj.plan {
+        if plan_is_dense(plan, obj) {
+            if obj.size * count > 0 {
+                let bytes = unsafe { std::slice::from_raw_parts(ptr, obj.size * count) };
+                out.extend_from_slice(bytes);
+            }
+            return Ok(());
+        }
+        for i in 0..count {
+            let base = unsafe { ptr.offset(obj.extent * i as isize) };
+            for &(off, len) in plan {
+                let bytes = unsafe { std::slice::from_raw_parts(base.offset(off), len) };
+                out.extend_from_slice(bytes);
+            }
+        }
+        return Ok(());
+    }
     for i in 0..count {
         let base = unsafe { ptr.offset(obj.extent * i as isize) };
         pack_one(dtypes, obj, base, out)?;
@@ -99,6 +129,39 @@ pub fn unpack(
     dt: DtId,
 ) -> RC<usize> {
     let obj = dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+    if let Some(plan) = &obj.plan {
+        if plan_is_dense(plan, obj) {
+            let n = data.len().min(obj.size * count);
+            if n > 0 {
+                unsafe { std::ptr::copy_nonoverlapping(data.as_ptr(), ptr, n) };
+            }
+            return Ok(n);
+        }
+        let mut cursor = 0usize;
+        'items: for i in 0..count {
+            if cursor >= data.len() {
+                break;
+            }
+            let base = unsafe { ptr.offset(obj.extent * i as isize) };
+            for &(off, len) in plan {
+                let take = len.min(data.len() - cursor);
+                if take > 0 {
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            data.as_ptr().add(cursor),
+                            base.offset(off),
+                            take,
+                        );
+                    }
+                    cursor += take;
+                }
+                if take < len {
+                    break 'items;
+                }
+            }
+        }
+        return Ok(cursor);
+    }
     let mut cursor = 0usize;
     for i in 0..count {
         if cursor >= data.len() {

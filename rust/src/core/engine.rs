@@ -8,8 +8,8 @@
 use super::comm::{comm_snapshot, finish_predefined as finish_comms};
 use super::group::finish_predefined as finish_groups;
 use super::request::{
-    enqueue_send, new_request, post_recv, progress, test_one, wait_one, ReqKind,
-    StatusCore,
+    enqueue_send, new_persistent, new_request, post_recv, progress, test_one, wait_one,
+    PersistSpec, ReqKind, ReqState, StatusCore,
 };
 use super::transport::{Envelope, MsgKind, Payload};
 use super::world::{try_ctx, with_ctx, RankCtx};
@@ -153,31 +153,14 @@ fn isend_impl(
     mode: SendMode,
 ) -> RC<ReqId> {
     if dest == MPI_PROC_NULL {
-        return Ok(new_request(ctx, ReqKind::Send, Some(StatusCore::empty())));
+        return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
     check_tag_send(tag)?;
     let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
     check_rank(dest, size, false)?;
     let dst_world = dst.ok_or(err!(MPI_ERR_RANK))?;
     let payload = pack_payload(ctx, buf, count, dt)?;
-    let (kind, sync_id) = match mode {
-        SendMode::Standard => (MsgKind::Eager, 0),
-        SendMode::Sync => {
-            let mut st = ctx.state.borrow_mut();
-            let id = st.next_sync_id;
-            st.next_sync_id += 1;
-            (MsgKind::EagerSync, id)
-        }
-    };
-    let seq = {
-        let mut st = ctx.state.borrow_mut();
-        st.send_seq += 1;
-        if mode == SendMode::Sync {
-            sync_id
-        } else {
-            st.send_seq
-        }
-    };
+    let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
     let env = Envelope {
         src: ctx.rank as u32,
         context: ctx_pt2pt,
@@ -187,10 +170,26 @@ fn isend_impl(
         payload,
     };
     enqueue_send(ctx, dst_world, env);
-    Ok(match mode {
-        SendMode::Standard => new_request(ctx, ReqKind::Send, Some(StatusCore::empty())),
-        SendMode::Sync => new_request(ctx, ReqKind::Ssend { sync_id }, None),
+    Ok(match sync_id {
+        None => new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())),
+        Some(id) => new_request(ctx, ReqKind::Ssend { sync_id: id }, ReqState::Active),
     })
+}
+
+/// Allocate the wire (kind, seq) for an eager send — and the ack id for
+/// synchronous mode. Shared by [`isend_impl`] and the persistent start
+/// path so the per-(src, context) send sequence stays monotone however
+/// the send was issued.
+fn send_wire_ids(ctx: &RankCtx, sync: bool) -> (MsgKind, u64, Option<u64>) {
+    let mut st = ctx.state.borrow_mut();
+    st.send_seq += 1;
+    if sync {
+        let id = st.next_sync_id;
+        st.next_sync_id += 1;
+        (MsgKind::EagerSync, id, Some(id))
+    } else {
+        (MsgKind::Eager, st.send_seq, None)
+    }
 }
 
 /// `MPI_Isend` / `MPI_Issend`.
@@ -233,7 +232,7 @@ fn irecv_impl(
     comm: CommId,
 ) -> RC<ReqId> {
     if src == MPI_PROC_NULL {
-        return Ok(new_request(ctx, ReqKind::Send, Some(StatusCore::empty())));
+        return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
     if tag != MPI_ANY_TAG {
         check_tag_send(tag)?;
@@ -311,6 +310,192 @@ pub fn sendrecv(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Persistent point-to-point (MPI_Send_init / MPI_Recv_init / MPI_Start)
+// ---------------------------------------------------------------------------
+
+/// `MPI_Send_init` / `MPI_Ssend_init`: validate and comm-resolve the
+/// arguments once, returning an **Inactive** persistent request.
+/// `MPI_Start` re-packs the user buffer and enqueues the envelope — the
+/// per-iteration path skips validation, routing, and request allocation.
+pub fn send_init(
+    buf: *const u8,
+    count: usize,
+    dt: DtId,
+    dest: i32,
+    tag: i32,
+    comm: CommId,
+    mode: SendMode,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        let sync = mode == SendMode::Sync;
+        if dest == MPI_PROC_NULL {
+            return Ok(new_persistent(
+                ctx,
+                ReqKind::Send,
+                PersistSpec::Send {
+                    buf: buf as usize,
+                    count,
+                    dt,
+                    dest_world: None,
+                    tag,
+                    context: 0,
+                    sync,
+                },
+            ));
+        }
+        check_tag_send(tag)?;
+        let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
+        check_rank(dest, size, false)?;
+        let dst_world = dst.ok_or(err!(MPI_ERR_RANK))?;
+        Ok(new_persistent(
+            ctx,
+            ReqKind::Send,
+            PersistSpec::Send {
+                buf: buf as usize,
+                count,
+                dt,
+                dest_world: Some(dst_world),
+                tag,
+                context: ctx_pt2pt,
+                sync,
+            },
+        ))
+    })
+}
+
+/// `MPI_Recv_init`: the receive-side persistent init. Each `MPI_Start`
+/// re-posts the receive into the matching engine.
+pub fn recv_init(
+    buf: *mut u8,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    comm: CommId,
+) -> RC<ReqId> {
+    with_ctx(|ctx| {
+        if src == MPI_PROC_NULL {
+            return Ok(new_persistent(
+                ctx,
+                ReqKind::Send,
+                PersistSpec::Recv {
+                    buf: buf as usize,
+                    count,
+                    dt,
+                    src: MPI_PROC_NULL,
+                    tag,
+                    context: 0,
+                },
+            ));
+        }
+        if tag != MPI_ANY_TAG {
+            check_tag_send(tag)?;
+        }
+        let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
+        check_rank(src, size, true)?;
+        let src_match = if src == MPI_ANY_SOURCE {
+            MPI_ANY_SOURCE
+        } else {
+            src_world.ok_or(err!(MPI_ERR_RANK))? as i32
+        };
+        // The armed kind is installed by each start (repost_recv); until
+        // then the spec is the single source of truth.
+        Ok(new_persistent(
+            ctx,
+            ReqKind::Send,
+            PersistSpec::Recv {
+                buf: buf as usize,
+                count,
+                dt,
+                src: src_match,
+                tag,
+                context: ctx_pt2pt,
+            },
+        ))
+    })
+}
+
+/// `MPI_Start`: re-arm one Inactive persistent request. Starting a
+/// request that is active (or was never created persistent) is an error.
+pub fn start(rid: ReqId) -> RC<()> {
+    with_ctx(|ctx| start_impl(ctx, rid))
+}
+
+/// `MPI_Startall`: start a batch of persistent requests, in order.
+pub fn startall(rids: &[ReqId]) -> RC<()> {
+    with_ctx(|ctx| {
+        for &rid in rids {
+            start_impl(ctx, rid)?;
+        }
+        Ok(())
+    })
+}
+
+fn start_impl(ctx: &RankCtx, rid: ReqId) -> RC<()> {
+    let spec = {
+        let t = ctx.tables.borrow();
+        let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+        match (&req.persist, &req.state) {
+            (Some(spec), ReqState::Inactive) => *spec,
+            // Start on an active (or complete-but-uncollected) request,
+            // or on a nonpersistent request, is erroneous.
+            _ => return Err(err!(MPI_ERR_REQUEST)),
+        }
+    };
+    match spec {
+        PersistSpec::Send { buf, count, dt, dest_world, tag, context, sync } => {
+            let Some(dst_world) = dest_world else {
+                arm_as(ctx, rid, ReqKind::Send, ReqState::Complete(StatusCore::empty()));
+                return Ok(());
+            };
+            let payload = pack_payload(ctx, buf as *const u8, count, dt)?;
+            let (msg_kind, seq, sync_id) = send_wire_ids(ctx, sync);
+            let (req_kind, state) = match sync_id {
+                Some(id) => (ReqKind::Ssend { sync_id: id }, ReqState::Active),
+                None => (ReqKind::Send, ReqState::Complete(StatusCore::empty())),
+            };
+            let env = Envelope {
+                src: ctx.rank as u32,
+                context,
+                tag,
+                kind: msg_kind,
+                seq,
+                payload,
+            };
+            enqueue_send(ctx, dst_world, env);
+            arm_as(ctx, rid, req_kind, state);
+            Ok(())
+        }
+        PersistSpec::Recv { buf, count, dt, src, tag, context } => {
+            if src == MPI_PROC_NULL {
+                arm_as(ctx, rid, ReqKind::Send, ReqState::Complete(StatusCore::empty()));
+                return Ok(());
+            }
+            super::request::repost_recv(ctx, rid, buf, count, dt, src, tag, context);
+            Ok(())
+        }
+        PersistSpec::Coll => super::collectives::sched::start_sched(ctx, rid),
+    }
+}
+
+/// Flip a persistent request into its armed form.
+fn arm_as(ctx: &RankCtx, rid: ReqId, kind: ReqKind, state: ReqState) {
+    if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
+        req.kind = kind;
+        req.state = state;
+    }
+}
+
+/// Whether `rid` is a persistent request. ABI shims use this to keep the
+/// user's handle valid across wait/test (persistent handles survive
+/// completion; nonpersistent handles become `MPI_REQUEST_NULL`).
+pub fn request_is_persistent(rid: ReqId) -> bool {
+    super::world::try_ctx(|ctx| {
+        ctx.map(|c| super::request::is_persistent(c, rid)).unwrap_or(false)
+    })
+}
+
 /// `MPI_Probe`: blocking; returns the matched message's status without
 /// receiving it.
 pub fn probe(src: i32, tag: i32, comm: CommId) -> RC<StatusCore> {
@@ -383,7 +568,7 @@ pub fn waitall(rids: &[ReqId]) -> RC<Vec<StatusCore>> {
                 if done[i].is_none() {
                     match super::request::finish_if_done(ctx, rid)? {
                         Some(s) => {
-                            ctx.tables.borrow_mut().reqs.remove(rid.0);
+                            super::request::retire(ctx, rid);
                             done[i] = Some(s);
                         }
                         None => all = false,
@@ -409,39 +594,68 @@ pub fn testall(rids: &[ReqId]) -> RC<Option<Vec<StatusCore>>> {
                 None => return Ok(None),
             }
         }
-        let mut t = ctx.tables.borrow_mut();
         for &rid in rids {
-            t.reqs.remove(rid.0);
+            super::request::retire(ctx, rid);
         }
         Ok(Some(out))
     })
 }
 
-/// `MPI_Waitany` → (index, status).
-pub fn waitany(rids: &[ReqId]) -> RC<(usize, StatusCore)> {
+/// `MPI_Waitany` → `Some((index, status))`, or `None` when every request
+/// in the list is an inactive persistent one (MPI 3.0 §3.7.5: waitany
+/// ignores inactive handles; with no active handle it returns
+/// `MPI_UNDEFINED` + empty status, which the ABI shims synthesize).
+pub fn waitany(rids: &[ReqId]) -> RC<Option<(usize, StatusCore)>> {
     with_ctx(|ctx| loop {
         progress(ctx);
+        let mut any_active = false;
         for (i, &rid) in rids.iter().enumerate() {
-            if let Some(s) = super::request::finish_if_done(ctx, rid)? {
-                ctx.tables.borrow_mut().reqs.remove(rid.0);
-                return Ok((i, s));
+            if super::request::is_inactive(ctx, rid)? {
+                continue;
             }
+            any_active = true;
+            if let Some(s) = super::request::finish_if_done(ctx, rid)? {
+                super::request::retire(ctx, rid);
+                return Ok(Some((i, s)));
+            }
+        }
+        if !any_active {
+            return Ok(None);
         }
         std::thread::yield_now();
     })
 }
 
-/// `MPI_Testany` → `Some((index, status))`.
-pub fn testany(rids: &[ReqId]) -> RC<Option<(usize, StatusCore)>> {
+/// Outcome of [`testany`], mirroring MPI 3.0 §3.7.5's three cases.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TestAnyOutcome {
+    /// An active request completed: its index and status.
+    Completed(usize, StatusCore),
+    /// Every request in the list is inactive (or the list is empty):
+    /// flag=true with `MPI_UNDEFINED` and an empty status at the ABI.
+    NoneActive,
+    /// Active requests exist but none has completed yet (flag=false).
+    Pending,
+}
+
+/// `MPI_Testany`. Inactive persistent requests are ignored, as in
+/// [`waitany`]; the outcome distinguishes "all inactive" from "none
+/// complete yet" so ABI shims can report the §3.7.5 flag correctly.
+pub fn testany(rids: &[ReqId]) -> RC<TestAnyOutcome> {
     with_ctx(|ctx| {
         progress(ctx);
+        let mut any_active = false;
         for (i, &rid) in rids.iter().enumerate() {
+            if super::request::is_inactive(ctx, rid)? {
+                continue;
+            }
+            any_active = true;
             if let Some(s) = super::request::finish_if_done(ctx, rid)? {
-                ctx.tables.borrow_mut().reqs.remove(rid.0);
-                return Ok(Some((i, s)));
+                super::request::retire(ctx, rid);
+                return Ok(TestAnyOutcome::Completed(i, s));
             }
         }
-        Ok(None)
+        Ok(if any_active { TestAnyOutcome::Pending } else { TestAnyOutcome::NoneActive })
     })
 }
 

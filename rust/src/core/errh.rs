@@ -23,11 +23,15 @@ pub enum ErrhKind {
     User(Box<dyn Fn(CommId, i32)>),
 }
 
+/// Error-handler table entry.
 pub struct ErrhObj {
+    /// The handler's behavior.
     pub kind: ErrhKind,
+    /// Predefined handlers are not freeable.
     pub predefined: bool,
 }
 
+/// Install the three predefined handlers at their reserved ids.
 pub fn install_predefined(errhs: &mut Slab<ErrhObj>) {
     errhs.insert_at(
         super::reserved::ERRH_ARE_FATAL.0,

@@ -11,12 +11,14 @@ use crate::abi::constants::MPI_UNDEFINED;
 /// Group object: member world ranks in group-rank order.
 #[derive(Clone, Debug)]
 pub struct GroupObj {
+    /// Member world ranks, group-rank order.
     pub members: Vec<usize>,
     /// Predefined groups are not freeable.
     pub predefined: bool,
 }
 
 impl GroupObj {
+    /// Number of members.
     pub fn size(&self) -> usize {
         self.members.len()
     }

@@ -5,13 +5,16 @@ use super::world::with_ctx;
 use super::{err, InfoId, RC};
 use crate::abi::constants::{MPI_MAX_INFO_KEY, MPI_MAX_INFO_VAL};
 
+/// Info-object table entry.
 #[derive(Clone, Debug, Default)]
 pub struct InfoObj {
     /// Insertion-ordered (key, value) pairs; keys unique.
     pub entries: Vec<(String, String)>,
+    /// Predefined infos (`MPI_INFO_ENV`) are not freeable.
     pub predefined: bool,
 }
 
+/// Install `MPI_INFO_ENV` at its reserved id.
 pub fn install_predefined(infos: &mut Slab<InfoObj>) {
     // MPI_INFO_ENV: a few environment facts, like real implementations.
     let entries = vec![

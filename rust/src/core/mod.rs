@@ -12,6 +12,8 @@
 //! to these ids at the boundary — that conversion *is* the subject of the
 //! paper.
 
+#![warn(missing_docs)]
+
 pub mod attr;
 pub mod collectives;
 pub mod comm;
@@ -32,13 +34,16 @@ use crate::abi::errors as ec;
 /// Implementations re-encode this into their own error-code spaces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MpiError {
+    /// Canonical error class (standard-ABI numbering, `abi::errors`).
     pub class: i32,
 }
 
 impl MpiError {
+    /// Wrap a canonical error class.
     pub const fn new(class: i32) -> MpiError {
         MpiError { class }
     }
+    /// Human-readable description of the class.
     pub fn message(self) -> &'static str {
         ec::error_string(self.class)
     }
@@ -110,14 +115,23 @@ engine_id!(
 /// ABI constants convert to ids with pure arithmetic.
 pub mod reserved {
     use super::*;
+    /// `MPI_COMM_WORLD`'s engine id.
     pub const COMM_WORLD: CommId = CommId(0);
+    /// `MPI_COMM_SELF`'s engine id.
     pub const COMM_SELF: CommId = CommId(1);
+    /// `MPI_GROUP_EMPTY`'s engine id.
     pub const GROUP_EMPTY: GroupId = GroupId(0);
+    /// The world group's engine id.
     pub const GROUP_WORLD: GroupId = GroupId(1);
+    /// The self group's engine id.
     pub const GROUP_SELF: GroupId = GroupId(2);
+    /// `MPI_ERRORS_ARE_FATAL`'s engine id.
     pub const ERRH_ARE_FATAL: ErrhId = ErrhId(0);
+    /// `MPI_ERRORS_RETURN`'s engine id.
     pub const ERRH_RETURN: ErrhId = ErrhId(1);
+    /// `MPI_ERRORS_ABORT`'s engine id.
     pub const ERRH_ABORT: ErrhId = ErrhId(2);
+    /// `MPI_INFO_ENV`'s engine id.
     pub const INFO_ENV: InfoId = InfoId(0);
     /// Builtin ops occupy op ids 0..NUM_BUILTIN_OPS in A.1 order.
     pub const NUM_BUILTIN_OPS: u32 = 15;

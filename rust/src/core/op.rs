@@ -18,6 +18,7 @@ use crate::abi::ops as aop;
 
 /// Builtin reduction operators, in A.1 order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(missing_docs)] // variants mirror the MPI_* op names 1:1
 pub enum BuiltinOp {
     Null,
     Sum,
@@ -60,6 +61,7 @@ impl BuiltinOp {
         })
     }
 
+    /// The standard-ABI constant of this operator.
     pub fn to_abi(self) -> usize {
         use BuiltinOp::*;
         match self {
@@ -104,16 +106,28 @@ pub const BUILTIN_ORDER: [BuiltinOp; 15] = [
 /// User op callback: `(invec, inoutvec, count, dt)` over packed buffers.
 pub type UserOpFn = Box<dyn Fn(*const u8, *mut u8, i32, DtId)>;
 
+/// How an op object reduces: a builtin operator or a user callback.
 pub enum OpKind {
+    /// One of the predefined operators.
     Builtin(BuiltinOp),
-    User { f: UserOpFn, commute: bool },
+    /// User-defined op (`MPI_Op_create`).
+    User {
+        /// The (representation-converted) user callback.
+        f: UserOpFn,
+        /// Whether the user declared the op commutative.
+        commute: bool,
+    },
 }
 
+/// Reduction-op table entry.
 pub struct OpObj {
+    /// What the op does.
     pub kind: OpKind,
+    /// Predefined ops are not freeable.
     pub predefined: bool,
 }
 
+/// Install the builtin ops at their reserved ids (A.1 order).
 pub fn install_predefined(ops: &mut Slab<OpObj>) {
     for (i, &b) in BUILTIN_ORDER.iter().enumerate() {
         ops.insert_at(i as u32, OpObj { kind: OpKind::Builtin(b), predefined: true });

@@ -1,10 +1,39 @@
-//! Requests and the progress engine.
+//! Requests, the request **lifecycle state machine**, and the progress
+//! engine.
 //!
 //! Every nonblocking operation creates a request; blocking operations are
-//! request + wait. Progress is made inside test/wait/recv loops (polling
-//! the fabric, matching posted receives against arrivals, acking
-//! synchronous sends) — the single-threaded progress model of most MPI
-//! implementations.
+//! request + wait; persistent operations (`MPI_Send_init`,
+//! `MPI_Recv_init`, the MPI-4 `*_init` collectives) create a request
+//! *once* and re-arm it with `MPI_Start`. Progress is made inside
+//! test/wait/recv loops (polling the fabric, matching posted receives
+//! against arrivals, acking synchronous sends) — the single-threaded
+//! progress model of most MPI implementations.
+//!
+//! # The lifecycle
+//!
+//! ```text
+//!                    nonblocking path                persistent path
+//!                    ----------------                ---------------
+//!   isend/irecv ──► Active                *_init ──► Inactive ◄────────┐
+//!                     │ op finishes                    │ MPI_Start     │
+//!                     ▼                                ▼               │
+//!                  Complete(status)                  Active            │
+//!                     │ wait/test                      │ op finishes   │
+//!                     ▼                                ▼               │
+//!                  (freed)                           Complete(status)  │
+//!                                                      │ wait/test ────┘
+//!                                                      (request survives;
+//!                                                       MPI_Request_free
+//!                                                       only when Inactive)
+//! ```
+//!
+//! The same three states drive every request kind; what differs is the
+//! *re-arm recipe* ([`PersistSpec`]) a persistent request carries.
+//! Schedule-backed (collective) requests keep their [`Schedule`] inside
+//! [`ReqKind::Sched`] across restarts — `MPI_Start` resets and re-runs
+//! it instead of rebuilding (see [`crate::core::collectives::sched`]).
+//!
+//! [`Schedule`]: crate::core::collectives::sched::Schedule
 
 use super::transport::{Envelope, MsgKind, Payload};
 use super::world::{with_ctx, RankCtx};
@@ -15,15 +44,20 @@ use crate::abi::constants::MPI_PROC_NULL;
 /// own status layout — the translation the paper's §3.2 catalogues.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StatusCore {
+    /// World rank of the message source (or `MPI_PROC_NULL`).
     pub source: i32,
+    /// Message tag.
     pub tag: i32,
     /// Canonical (standard-ABI) error class.
     pub error: i32,
+    /// Received payload size in packed bytes.
     pub count_bytes: u64,
+    /// `MPI_Test_cancelled` flag.
     pub cancelled: bool,
 }
 
 impl StatusCore {
+    /// Status of a successfully matched receive.
     pub fn success(source: i32, tag: i32, count_bytes: u64) -> StatusCore {
         StatusCore { source, tag, error: 0, count_bytes, cancelled: false }
     }
@@ -45,23 +79,115 @@ pub enum ReqKind {
     /// Eager send: complete at creation (buffer copied).
     Send,
     /// Synchronous send: complete when the ack for `sync_id` arrives.
-    Ssend { sync_id: u64 },
+    Ssend {
+        /// Ack id the matching receive will echo back.
+        sync_id: u64,
+    },
     /// Posted receive.
-    Recv { buf: usize, count: usize, dt: DtId, src: i32, tag: i32, context: u32 },
-    /// Nonblocking collective: a schedule advanced by the progress engine
-    /// (see [`crate::core::collectives::sched`]).
+    Recv {
+        /// Destination buffer address.
+        buf: usize,
+        /// Element count.
+        count: usize,
+        /// Element datatype.
+        dt: DtId,
+        /// Matching source (world rank or `MPI_ANY_SOURCE`).
+        src: i32,
+        /// Matching tag (or `MPI_ANY_TAG`).
+        tag: i32,
+        /// Matching context plane.
+        context: u32,
+    },
+    /// Nonblocking or persistent collective: a schedule advanced by the
+    /// progress engine (see [`crate::core::collectives::sched`]).
     Sched(Box<crate::core::collectives::sched::Schedule>),
 }
 
-pub struct RequestObj {
-    pub kind: ReqKind,
-    /// `Some` = complete.
-    pub status: Option<StatusCore>,
+/// Lifecycle state of a request — see the module docs for the diagram.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReqState {
+    /// Persistent request between starts (or before the first start).
+    /// wait/test on an inactive request return immediately with an empty
+    /// status (MPI 3.0 §3.7.3).
+    Inactive,
+    /// Operation in flight.
+    Active,
+    /// Operation finished; status not yet collected by wait/test.
+    Complete(StatusCore),
 }
 
-/// Create a request in the table.
-pub(crate) fn new_request(ctx: &RankCtx, kind: ReqKind, status: Option<StatusCore>) -> ReqId {
-    ReqId(ctx.tables.borrow_mut().reqs.insert(RequestObj { kind, status }))
+/// The re-arm recipe of a persistent request: everything `MPI_Start`
+/// needs to launch the operation again. Arguments were validated and
+/// comm-resolved once, at `*_init` time — restarts skip straight to the
+/// data path (the point of persistence).
+#[derive(Clone, Copy, Debug)]
+pub enum PersistSpec {
+    /// `MPI_Send_init` / `MPI_Ssend_init`: each start re-packs the user
+    /// buffer (picking up updated contents) and enqueues one envelope.
+    Send {
+        /// Source buffer address (re-read at every start).
+        buf: usize,
+        /// Element count.
+        count: usize,
+        /// Element datatype.
+        dt: DtId,
+        /// Destination world rank; `None` = `MPI_PROC_NULL` (each start
+        /// completes immediately).
+        dest_world: Option<usize>,
+        /// Message tag.
+        tag: i32,
+        /// Pt2pt context plane of the communicator.
+        context: u32,
+        /// Synchronous mode (`MPI_Ssend_init`): active until acked.
+        sync: bool,
+    },
+    /// `MPI_Recv_init`: each start re-posts the receive.
+    Recv {
+        /// Destination buffer address.
+        buf: usize,
+        /// Element count.
+        count: usize,
+        /// Element datatype.
+        dt: DtId,
+        /// Matching source: world rank, `MPI_ANY_SOURCE`, or
+        /// `MPI_PROC_NULL` (start completes immediately).
+        src: i32,
+        /// Matching tag.
+        tag: i32,
+        /// Pt2pt context plane.
+        context: u32,
+    },
+    /// Persistent collective: the [`Schedule`] living in this request's
+    /// [`ReqKind::Sched`] is reset and re-armed by each start — reused,
+    /// never rebuilt.
+    ///
+    /// [`Schedule`]: crate::core::collectives::sched::Schedule
+    Coll,
+}
+
+/// One request-table entry: current kind, lifecycle state, and (for
+/// persistent requests) the re-arm recipe.
+pub struct RequestObj {
+    /// What the request is currently doing (or armed to do).
+    pub kind: ReqKind,
+    /// Lifecycle state.
+    pub state: ReqState,
+    /// `Some` marks a persistent request; holds what `MPI_Start` re-arms.
+    pub persist: Option<PersistSpec>,
+}
+
+/// Create a (nonpersistent) request in the table.
+pub(crate) fn new_request(ctx: &RankCtx, kind: ReqKind, state: ReqState) -> ReqId {
+    ReqId(ctx.tables.borrow_mut().reqs.insert(RequestObj { kind, state, persist: None }))
+}
+
+/// Create a persistent request in the table, born Inactive.
+pub(crate) fn new_persistent(ctx: &RankCtx, kind: ReqKind, spec: PersistSpec) -> ReqId {
+    ReqId(ctx.tables.borrow_mut().reqs.insert(RequestObj {
+        kind,
+        state: ReqState::Inactive,
+        persist: Some(spec),
+    }))
 }
 
 /// Post a receive request (and try to match it immediately against the
@@ -75,11 +201,34 @@ pub(crate) fn post_recv(
     tag: i32,
     context: u32,
 ) -> ReqId {
-    let id = new_request(ctx, ReqKind::Recv { buf, count, dt, src, tag, context }, None);
+    let id = new_request(ctx, ReqKind::Recv { buf, count, dt, src, tag, context }, ReqState::Active);
     ctx.state.borrow_mut().posted.push_back(id);
     // Immediate match attempt: the message may already be here.
     match_posted(ctx);
     id
+}
+
+/// Re-post an existing (persistent) receive request: set its armed kind,
+/// mark Active, enqueue on the posted list, and try to match.
+pub(crate) fn repost_recv(
+    ctx: &RankCtx,
+    rid: ReqId,
+    buf: usize,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    context: u32,
+) {
+    {
+        let mut t = ctx.tables.borrow_mut();
+        if let Some(req) = t.reqs.get_mut(rid.0) {
+            req.kind = ReqKind::Recv { buf, count, dt, src, tag, context };
+            req.state = ReqState::Active;
+        }
+    }
+    ctx.state.borrow_mut().posted.push_back(rid);
+    match_posted(ctx);
 }
 
 /// One progress cycle: flush deferred sends, drain the fabric, match,
@@ -179,7 +328,7 @@ fn deliver(ctx: &RankCtx, rid: ReqId, env: Envelope) {
     if truncated {
         status.error = crate::abi::errors::MPI_ERR_TRUNCATE;
     }
-    req.status = Some(status);
+    req.state = ReqState::Complete(status);
     drop(t);
     // Ack synchronous sends now that the message is matched.
     if env.kind == MsgKind::EagerSync {
@@ -218,6 +367,8 @@ pub(crate) fn poll_complete(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>>
 /// Check (without progressing) whether `rid` is complete, resolving
 /// Ssend acks. Schedule-backed (collective) requests complete inside
 /// [`progress`] — here they are simply pending until their status lands.
+/// Inactive persistent requests count as complete with an empty status
+/// (MPI 3.0 §3.7.3: wait on an inactive request returns immediately).
 pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>> {
     enum Next {
         Done(StatusCore),
@@ -227,10 +378,11 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
     let next = {
         let t = ctx.tables.borrow();
         let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
-        match (&req.status, &req.kind) {
-            (Some(s), _) => Next::Done(*s),
-            (None, ReqKind::Ssend { sync_id }) => Next::CheckSsend(*sync_id),
-            (None, _) => Next::Pending,
+        match (&req.state, &req.kind) {
+            (ReqState::Complete(s), _) => Next::Done(*s),
+            (ReqState::Inactive, _) => Next::Done(StatusCore::empty()),
+            (ReqState::Active, ReqKind::Ssend { sync_id }) => Next::CheckSsend(*sync_id),
+            (ReqState::Active, _) => Next::Pending,
         }
     };
     match next {
@@ -240,7 +392,8 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
             let acked = ctx.state.borrow_mut().ssend_acks.remove(&sync_id);
             if acked {
                 let s = StatusCore::empty();
-                ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().status = Some(s);
+                ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
+                    ReqState::Complete(s);
                 Ok(Some(s))
             } else {
                 Ok(None)
@@ -249,22 +402,52 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
     }
 }
 
-/// Block until `rid` completes; deallocate it; return its status.
+/// Consume a completed request in wait/test: persistent requests return
+/// to Inactive and stay in the table (the lifecycle's back edge);
+/// nonpersistent requests are deallocated.
+pub(crate) fn retire(ctx: &RankCtx, rid: ReqId) {
+    let mut t = ctx.tables.borrow_mut();
+    let persistent = t.reqs.get(rid.0).map(|r| r.persist.is_some()).unwrap_or(false);
+    if persistent {
+        if let Some(req) = t.reqs.get_mut(rid.0) {
+            req.state = ReqState::Inactive;
+        }
+    } else {
+        t.reqs.remove(rid.0);
+    }
+}
+
+/// Whether `rid` names a persistent request (ABI layers use this to keep
+/// the user's handle valid across wait/test instead of nulling it).
+pub(crate) fn is_persistent(ctx: &RankCtx, rid: ReqId) -> bool {
+    ctx.tables.borrow().reqs.get(rid.0).map(|r| r.persist.is_some()).unwrap_or(false)
+}
+
+/// Whether `rid` is an Inactive persistent request. Waitany/testany must
+/// *ignore* inactive handles rather than report them complete (MPI 3.0
+/// §3.7.5 — only wait/test/waitall return empty statuses for them).
+pub(crate) fn is_inactive(ctx: &RankCtx, rid: ReqId) -> RC<bool> {
+    let t = ctx.tables.borrow();
+    let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+    Ok(req.state == ReqState::Inactive)
+}
+
+/// Block until `rid` completes; retire it; return its status.
 pub(crate) fn wait_one(ctx: &RankCtx, rid: ReqId) -> RC<StatusCore> {
     loop {
         if let Some(s) = poll_complete(ctx, rid)? {
-            ctx.tables.borrow_mut().reqs.remove(rid.0);
+            retire(ctx, rid);
             return Ok(s);
         }
         std::thread::yield_now();
     }
 }
 
-/// Nonblocking completion check; deallocates on completion (`MPI_Test`).
+/// Nonblocking completion check; retires on completion (`MPI_Test`).
 pub(crate) fn test_one(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>> {
     match poll_complete(ctx, rid)? {
         Some(s) => {
-            ctx.tables.borrow_mut().reqs.remove(rid.0);
+            retire(ctx, rid);
             Ok(Some(s))
         }
         None => Ok(None),
@@ -277,7 +460,7 @@ pub fn cancel(rid: ReqId) -> RC<()> {
         let is_recv_pending = {
             let t = ctx.tables.borrow();
             let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
-            matches!(req.kind, ReqKind::Recv { .. }) && req.status.is_none()
+            matches!(req.kind, ReqKind::Recv { .. }) && req.state == ReqState::Active
         };
         if is_recv_pending {
             let mut st = ctx.state.borrow_mut();
@@ -287,7 +470,7 @@ pub fn cancel(rid: ReqId) -> RC<()> {
             let req = t.reqs.get_mut(rid.0).unwrap();
             let mut s = StatusCore::empty();
             s.cancelled = true;
-            req.status = Some(s);
+            req.state = ReqState::Complete(s);
         }
         // Sends: cancel is best-effort; eager sends already completed.
         Ok(())
@@ -295,16 +478,35 @@ pub fn cancel(rid: ReqId) -> RC<()> {
 }
 
 /// `MPI_Request_free`.
+///
+/// Freeing an *active* schedule-backed request is rejected (dropping the
+/// schedule would strand its unexecuted send steps and deadlock peers),
+/// as is freeing a persistent request that is not Inactive — a started
+/// persistent request stays "in use" until wait/test collects it, even
+/// if the operation already finished internally (MPI-4 §3.9). **Inactive
+/// persistent requests free cleanly** — including persistent
+/// collectives, whose retained schedule is simply dropped with the
+/// request.
 pub fn request_free(rid: ReqId) -> RC<()> {
     with_ctx(|ctx| {
-        let mut t = ctx.tables.borrow_mut();
-        let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
-        // Freeing an *active* nonblocking-collective request is erroneous
-        // (MPI 3.0 §3.7.3); dropping the schedule would also strand its
-        // unexecuted send steps and deadlock peers, so reject instead.
-        if req.status.is_none() && matches!(req.kind, ReqKind::Sched(_)) {
-            return Err(err!(MPI_ERR_REQUEST));
+        let withdraw = {
+            let t = ctx.tables.borrow();
+            let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
+            let active = req.state == ReqState::Active;
+            if req.persist.is_some() && req.state != ReqState::Inactive {
+                return Err(err!(MPI_ERR_REQUEST));
+            }
+            if active && matches!(req.kind, ReqKind::Sched(_)) {
+                return Err(err!(MPI_ERR_REQUEST));
+            }
+            active && matches!(req.kind, ReqKind::Recv { .. })
+        };
+        // Freeing a still-posted receive: withdraw it from the matching
+        // engine first, so the freed slot can be recycled without a stale
+        // posted entry matching a foreign message into it.
+        if withdraw {
+            ctx.state.borrow_mut().posted.retain(|&r| r != rid);
         }
-        t.reqs.remove(rid.0).map(|_| ()).ok_or(err!(MPI_ERR_REQUEST))
+        ctx.tables.borrow_mut().reqs.remove(rid.0).map(|_| ()).ok_or(err!(MPI_ERR_REQUEST))
     })
 }

@@ -12,6 +12,7 @@ pub struct Slab<T> {
 }
 
 impl<T> Slab<T> {
+    /// Create an empty slab.
     pub fn new() -> Slab<T> {
         Slab { slots: Vec::new(), free: Vec::new(), live: 0 }
     }
@@ -42,10 +43,12 @@ impl<T> Slab<T> {
         // by resize_with; init fills 0..N densely so none arise in practice.
     }
 
+    /// Borrow the object at `key`, if live.
     pub fn get(&self, key: u32) -> Option<&T> {
         self.slots.get(key as usize).and_then(|s| s.as_ref())
     }
 
+    /// Mutably borrow the object at `key`, if live.
     pub fn get_mut(&mut self, key: u32) -> Option<&mut T> {
         self.slots.get_mut(key as usize).and_then(|s| s.as_mut())
     }
@@ -60,6 +63,7 @@ impl<T> Slab<T> {
         v
     }
 
+    /// Whether `key` names a live object.
     pub fn contains(&self, key: u32) -> bool {
         self.get(key).is_some()
     }
@@ -69,6 +73,7 @@ impl<T> Slab<T> {
         self.live
     }
 
+    /// `true` when no objects are live.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }

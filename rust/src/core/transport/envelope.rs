@@ -10,7 +10,14 @@ pub const INLINE_CAP: usize = 64;
 
 /// Message payload: inline for small messages, heap for large.
 pub enum Payload {
-    Inline { len: u8, bytes: [u8; INLINE_CAP] },
+    /// ≤ [`INLINE_CAP`] bytes stored in the envelope itself.
+    Inline {
+        /// Used length of `bytes`.
+        len: u8,
+        /// Inline storage.
+        bytes: [u8; INLINE_CAP],
+    },
+    /// Larger payloads spill to the heap.
     Heap(Vec<u8>),
 }
 
@@ -33,6 +40,7 @@ impl Payload {
         Payload::Heap(data)
     }
 
+    /// View the payload bytes.
     #[inline]
     pub fn as_slice(&self) -> &[u8] {
         match self {
@@ -41,6 +49,7 @@ impl Payload {
         }
     }
 
+    /// Payload size in bytes.
     #[inline]
     pub fn len(&self) -> usize {
         match self {
@@ -49,6 +58,7 @@ impl Payload {
         }
     }
 
+    /// `true` for a zero-byte payload.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len() == 0
@@ -88,9 +98,11 @@ pub struct Envelope {
     pub context: u32,
     /// User tag (pt2pt) or collective tag (coll plane).
     pub tag: i32,
+    /// Wire-level message class.
     pub kind: MsgKind,
     /// Per-(src, context) monotone sequence, for FIFO-ordering assertions.
     pub seq: u64,
+    /// The packed bytes.
     pub payload: Payload,
 }
 

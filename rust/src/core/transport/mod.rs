@@ -28,6 +28,7 @@ pub enum TransportKind {
 }
 
 impl TransportKind {
+    /// Parse a CLI/env transport name (`spsc|ucx|fast`, `mutex|ofi|slow`).
     pub fn parse(s: &str) -> Option<TransportKind> {
         match s {
             "spsc" | "ucx" | "fast" => Some(TransportKind::Spsc),
@@ -36,6 +37,7 @@ impl TransportKind {
         }
     }
 
+    /// Canonical name (for reports and tables).
     pub fn name(self) -> &'static str {
         match self {
             TransportKind::Spsc => "spsc",
@@ -52,12 +54,23 @@ pub const SPSC_CAPACITY: usize = 1024;
 /// The full fabric: every rank's inbound queues.
 pub enum Fabric {
     /// `rings[dst][src]` — inbound ring at `dst` from `src`.
-    Spsc { rings: Vec<Vec<Spsc<Envelope>>>, size: usize },
+    Spsc {
+        /// Per-ordered-pair rings, indexed `[dst][src]`.
+        rings: Vec<Vec<Spsc<Envelope>>>,
+        /// World size.
+        size: usize,
+    },
     /// `queues[dst]` — single locked inbound queue at `dst`.
-    Mutex { queues: Vec<MutexQueue>, size: usize },
+    Mutex {
+        /// One inbound queue per rank.
+        queues: Vec<MutexQueue>,
+        /// World size.
+        size: usize,
+    },
 }
 
 impl Fabric {
+    /// Build the fabric for a `size`-rank world.
     pub fn new(kind: TransportKind, size: usize) -> Fabric {
         match kind {
             TransportKind::Spsc => Fabric::Spsc {
@@ -72,6 +85,7 @@ impl Fabric {
         }
     }
 
+    /// Which transport this fabric is.
     pub fn kind(&self) -> TransportKind {
         match self {
             Fabric::Spsc { .. } => TransportKind::Spsc,
@@ -79,6 +93,7 @@ impl Fabric {
         }
     }
 
+    /// World size the fabric was built for.
     pub fn size(&self) -> usize {
         match self {
             Fabric::Spsc { size, .. } | Fabric::Mutex { size, .. } => *size,

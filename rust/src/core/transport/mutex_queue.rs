@@ -16,6 +16,7 @@ pub struct MutexQueue {
 }
 
 impl MutexQueue {
+    /// Create an empty queue.
     pub fn new() -> MutexQueue {
         MutexQueue { q: Mutex::new(VecDeque::new()) }
     }
@@ -48,6 +49,7 @@ impl MutexQueue {
         out.extend(g.drain(..));
     }
 
+    /// `true` if nothing is queued (takes the lock).
     pub fn is_empty(&self) -> bool {
         self.q.lock().unwrap().is_empty()
     }

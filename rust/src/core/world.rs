@@ -10,7 +10,7 @@
 use std::cell::{Cell, RefCell};
 use std::collections::{HashSet, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicI64, AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -30,7 +30,9 @@ const NO_ABORT: i64 = i64::MIN;
 
 /// Job-global state shared by all ranks.
 pub struct World {
+    /// Number of ranks in the job.
     pub size: usize,
+    /// The shared-memory network between ranks.
     pub fabric: Fabric,
     /// `MPI_Abort` latch: the exit code once some rank aborts.
     abort_code: AtomicI64,
@@ -40,6 +42,10 @@ pub struct World {
     context_counter: AtomicU32,
     /// Ranks that called `MPI_Finalize` (for `world_finalized` diagnostics).
     finalize_count: AtomicUsize,
+    /// Collective-schedule constructions in this job (all ranks).
+    /// Per-world (not process-global) so parallel test jobs in one
+    /// process don't perturb each other's reuse assertions.
+    sched_builds: AtomicU64,
 }
 
 impl World {
@@ -53,7 +59,19 @@ impl World {
             // 0/1 = COMM_WORLD pt2pt/coll, 2/3 = COMM_SELF.
             context_counter: AtomicU32::new(4),
             finalize_count: AtomicUsize::new(0),
+            sched_builds: AtomicU64::new(0),
         })
+    }
+
+    /// Record one collective-schedule construction (see
+    /// [`crate::core::collectives::schedules_built`]).
+    pub(crate) fn note_sched_build(&self) {
+        self.sched_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Collective-schedule constructions in this job so far.
+    pub fn sched_builds(&self) -> u64 {
+        self.sched_builds.load(Ordering::Relaxed)
     }
 
     /// Allocate a fresh pair of context ids (pt2pt, coll) for a new comm.
@@ -98,6 +116,7 @@ impl World {
 pub struct AbortUnwind(pub i32);
 
 /// Object tables of one rank — the per-process handle tables of a real MPI.
+#[allow(missing_docs)] // one slab per engine object kind; names say it all
 pub struct Tables {
     pub comms: Slab<CommObj>,
     pub groups: Slab<GroupObj>,
@@ -147,11 +166,17 @@ impl RankState {
 
 /// One rank's complete library state.
 pub struct RankCtx {
+    /// The job this rank belongs to.
     pub world: Arc<World>,
+    /// This rank's world rank.
     pub rank: usize,
+    /// Handle tables (comms, datatypes, requests, …).
     pub tables: RefCell<Tables>,
+    /// Messaging state (queues, acks, in-flight schedules).
     pub state: RefCell<RankState>,
+    /// `MPI_Init` has run.
     pub initialized: Cell<bool>,
+    /// `MPI_Finalize` has run.
     pub finalized: Cell<bool>,
     /// Re-entrancy latch for the collective schedule pump (a user
     /// reduction op may call back into MPI mid-advance).

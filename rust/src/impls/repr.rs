@@ -178,6 +178,14 @@ fn status_out<R: Repr>(mut s: StatusCore) -> R::Status {
     R::status_from_core(&s)
 }
 
+/// Consume a completed request handle: release any per-handle allocation
+/// and null it. Callers skip this for persistent requests, whose handles
+/// stay valid across completion.
+fn release_done<R: Repr>(req: &mut R::Request) {
+    R::req_release(*req);
+    *req = R::c_request_null();
+}
+
 fn buf_in<R: Repr>(b: *const u8) -> *const u8 {
     if b == R::c_in_place() {
         crate::abi::constants::MPI_IN_PLACE as *const u8
@@ -655,8 +663,12 @@ impl<R: Repr> MpiAbi for Backed<R> {
         let id = conv!(R, None, R::req_id(*req));
         match engine::wait(id) {
             Ok(s) => {
-                R::req_release(*req);
-                *req = R::c_request_null();
+                // Persistent requests survive completion (back to
+                // Inactive) and keep their handle; retired nonpersistent
+                // ids are gone by now and report false.
+                if !engine::request_is_persistent(id) {
+                    release_done::<R>(req);
+                }
                 *status = status_out::<R>(s);
                 0
             }
@@ -673,8 +685,9 @@ impl<R: Repr> MpiAbi for Backed<R> {
         let id = conv!(R, None, R::req_id(*req));
         match engine::test(id) {
             Ok(Some(s)) => {
-                R::req_release(*req);
-                *req = R::c_request_null();
+                if !engine::request_is_persistent(id) {
+                    release_done::<R>(req);
+                }
                 *flag = true;
                 *status = status_out::<R>(s);
                 0
@@ -698,13 +711,17 @@ impl<R: Repr> MpiAbi for Backed<R> {
             Ok(ss) => {
                 let mut it = ss.into_iter();
                 for (i, id) in ids.iter().enumerate() {
-                    if id.is_some() {
+                    if let Some(rid) = id {
                         let s = it.next().unwrap();
                         if i < statuses.len() {
                             statuses[i] = status_out::<R>(s);
                         }
-                        R::req_release(reqs[i]);
-                        reqs[i] = null;
+                        // Queried after the wait: persistent requests
+                        // survive in the table; retired ones are gone
+                        // and report false.
+                        if !engine::request_is_persistent(*rid) {
+                            release_done::<R>(&mut reqs[i]);
+                        }
                     } else if i < statuses.len() {
                         statuses[i] = R::status_empty();
                     }
@@ -727,13 +744,14 @@ impl<R: Repr> MpiAbi for Backed<R> {
                 *flag = true;
                 let mut it = ss.into_iter();
                 for (i, id) in ids.iter().enumerate() {
-                    if id.is_some() {
+                    if let Some(rid) = id {
                         let s = it.next().unwrap();
                         if i < statuses.len() {
                             statuses[i] = status_out::<R>(s);
                         }
-                        R::req_release(reqs[i]);
-                        reqs[i] = null;
+                        if !engine::request_is_persistent(*rid) {
+                            release_done::<R>(&mut reqs[i]);
+                        }
                     } else if i < statuses.len() {
                         statuses[i] = R::status_empty();
                     }
@@ -766,12 +784,20 @@ impl<R: Repr> MpiAbi for Backed<R> {
             return 0;
         }
         match engine::waitany(&live) {
-            Ok((k, s)) => {
+            Ok(Some((k, s))) => {
                 let i = map[k];
                 *index = i as i32;
                 *status = status_out::<R>(s);
-                R::req_release(reqs[i]);
-                reqs[i] = null;
+                if !engine::request_is_persistent(live[k]) {
+                    release_done::<R>(&mut reqs[i]);
+                }
+                0
+            }
+            // Every live request is an inactive persistent one: nothing
+            // to wait for (MPI 3.0 §3.7.5).
+            Ok(None) => {
+                *index = R::c_undefined();
+                *status = R::status_empty();
                 0
             }
             Err(e) => fail::<R>(None, e),
@@ -856,6 +882,83 @@ impl<R: Repr> MpiAbi for Backed<R> {
             }
             Err(e) => fail::<R>(Some(id), e),
         }
+    }
+
+    fn send_init(
+        buf: *const u8,
+        count: i32,
+        dt: R::Datatype,
+        dest: i32,
+        tag: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::send_init(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+            engine::SendMode::Standard)
+        {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn ssend_init(
+        buf: *const u8,
+        count: i32,
+        dt: R::Datatype,
+        dest: i32,
+        tag: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::send_init(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+            engine::SendMode::Sync)
+        {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn recv_init(
+        buf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        src: i32,
+        tag: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        match engine::recv_init(buf, count as usize, d, src_in::<R>(src), tag_in::<R>(tag), id) {
+            Ok(r) => {
+                *req = R::req_h(r);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn start(req: &mut R::Request) -> i32 {
+        let id = conv!(R, None, R::req_id(*req));
+        ret::<R>(None, engine::start(id))
+    }
+
+    fn startall(reqs: &mut [R::Request]) -> i32 {
+        let mut ids = Vec::with_capacity(reqs.len());
+        for &r in reqs.iter() {
+            ids.push(conv!(R, None, R::req_id(r)));
+        }
+        ret::<R>(None, engine::startall(&ids))
     }
 
     fn type_size(dt: R::Datatype, out: &mut i32) -> i32 {
@@ -1458,6 +1561,97 @@ impl<R: Repr> MpiAbi for Backed<R> {
         coll_req!(R, id, req,
             coll::ireduce_scatter_block(buf_in::<R>(sendbuf), recvbuf, recvcount as usize, d,
                 oid, id))
+    }
+
+    fn barrier_init(c: R::Comm, req: &mut R::Request) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        coll_req!(R, id, req, coll::barrier_init(id))
+    }
+
+    fn bcast_init(
+        buf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        coll_req!(R, id, req, coll::bcast_init(buf, count as usize, d, root, id))
+    }
+
+    fn allreduce_init(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: R::Datatype,
+        o: R::Op,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        let oid = conv!(R, Some(id), R::op_id(o));
+        coll_req!(R, id, req,
+            coll::allreduce_init(buf_in::<R>(sendbuf), recvbuf, count as usize, d, oid, id))
+    }
+
+    fn gather_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        coll_req!(R, id, req,
+            coll::gather_init(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, root, id))
+    }
+
+    fn scatter_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        root: i32,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        let rb = buf_in_mut::<R>(recvbuf);
+        coll_req!(R, id, req,
+            coll::scatter_init(sendbuf, sendcount as usize, sd, rb, recvcount as usize, rd,
+                root, id))
+    }
+
+    fn alltoall_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: R::Datatype,
+        c: R::Comm,
+        req: &mut R::Request,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        coll_req!(R, id, req,
+            coll::alltoall_init(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
+                recvcount as usize, rd, id))
     }
 
     fn comm_create_keyval(

@@ -308,6 +308,53 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
         (B::vtable().irecv)(buf, count, dt.0, src, tag, c.0, &mut req.0)
     }
 
+    fn send_init(
+        buf: *const u8,
+        count: i32,
+        dt: AbiDatatype,
+        dest: i32,
+        tag: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().send_init)(buf, count, dt.0, dest, tag, c.0, &mut req.0)
+    }
+    fn ssend_init(
+        buf: *const u8,
+        count: i32,
+        dt: AbiDatatype,
+        dest: i32,
+        tag: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().ssend_init)(buf, count, dt.0, dest, tag, c.0, &mut req.0)
+    }
+    fn recv_init(
+        buf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        src: i32,
+        tag: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().recv_init)(buf, count, dt.0, src, tag, c.0, &mut req.0)
+    }
+    fn start(req: &mut AbiRequest) -> i32 {
+        (B::vtable().start)(&mut req.0)
+    }
+    fn startall(reqs: &mut [AbiRequest]) -> i32 {
+        let mut words: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        let rc = (B::vtable().startall)(&mut words);
+        if rc == 0 {
+            for (i, w) in words.iter().enumerate() {
+                reqs[i] = AbiRequest(*w);
+            }
+        }
+        rc
+    }
+
     fn wait(req: &mut AbiRequest, status: &mut AbiStatus) -> i32 {
         let key = req.0;
         let rc = (B::vtable().wait)(&mut req.0, status as *mut AbiStatus);
@@ -784,6 +831,75 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     ) -> i32 {
         (B::vtable().ireduce_scatter_block)(sendbuf, recvbuf, recvcount, dt.0, op.0, c.0,
             &mut req.0)
+    }
+
+    fn barrier_init(c: AbiComm, req: &mut AbiRequest) -> i32 {
+        (B::vtable().barrier_init)(c.0, &mut req.0)
+    }
+    fn bcast_init(
+        buf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().bcast_init)(buf, count, dt.0, root, c.0, &mut req.0)
+    }
+    fn allreduce_init(
+        sendbuf: *const u8,
+        recvbuf: *mut u8,
+        count: i32,
+        dt: AbiDatatype,
+        op: AbiOp,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().allreduce_init)(sendbuf, recvbuf, count, dt.0, op.0, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn gather_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().gather_init)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount,
+            recvtype.0, root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn scatter_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        root: i32,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().scatter_init)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount,
+            recvtype.0, root, c.0, &mut req.0)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn alltoall_init(
+        sendbuf: *const u8,
+        sendcount: i32,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcount: i32,
+        recvtype: AbiDatatype,
+        c: AbiComm,
+        req: &mut AbiRequest,
+    ) -> i32 {
+        (B::vtable().alltoall_init)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount,
+            recvtype.0, c.0, &mut req.0)
     }
 
     fn comm_create_keyval(

@@ -398,7 +398,13 @@ pub fn waitany<A: MukBackend>(reqs: &mut [usize], index: &mut i32, status: *mut 
     let rc = A::waitany(&mut rs, index, &mut s);
     if rc == 0 {
         if *index == A::undefined() {
+            // No active request in the list (all null or inactive
+            // persistent): MPI_UNDEFINED + an *empty* status, same as
+            // the backend path reports (MPI 3.0 §3.7.5).
             *index = crate::abi::constants::MPI_UNDEFINED;
+            if !status.is_null() {
+                unsafe { *status = status_to_muk::<A>(&A::status_empty()) };
+            }
         } else if *index >= 0 {
             let i = *index as usize;
             reqs[i] = req_to_muk::<A>(rs[i]);
@@ -446,6 +452,87 @@ pub fn request_free<A: MukBackend>(req: &mut usize) -> i32 {
     let rc = A::request_free(&mut r);
     if rc == 0 {
         *req = std_h::MPI_REQUEST_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+// --- Persistent point-to-point -------------------------------------------------
+//
+// The init calls convert like their nonblocking cousins; start/startall
+// pass the request word through the union both ways. The backend keeps
+// persistent handles alive across wait/test, so the word the app holds
+// stays valid — exactly the lifecycle the standard ABI mandates.
+
+pub fn send_init<A: MukBackend>(
+    buf: *const u8,
+    count: i32,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::send_init(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn ssend_init<A: MukBackend>(
+    buf: *const u8,
+    count: i32,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::ssend_init(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn recv_init<A: MukBackend>(
+    buf: *mut u8,
+    count: i32,
+    dt: usize,
+    src: i32,
+    tag: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::recv_init(buf, count, dt_to_impl::<A>(dt), src_to_impl::<A>(src),
+        tag_to_impl::<A>(tag), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn start<A: MukBackend>(req: &mut usize) -> i32 {
+    let mut r = req_to_impl::<A>(*req);
+    let rc = A::start(&mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn startall<A: MukBackend>(reqs: &mut [usize]) -> i32 {
+    let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
+    let rc = A::startall(&mut rs);
+    if rc == 0 {
+        for (i, r) in rs.iter().enumerate() {
+            reqs[i] = req_to_muk::<A>(*r);
+        }
     }
     ret_code::<A>(rc)
 }
@@ -1067,6 +1154,116 @@ pub fn ireduce_scatter_block<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+// --- Persistent collectives (MPI-4) --------------------------------------------
+
+pub fn barrier_init<A: MukBackend>(comm: usize, req: &mut usize) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::barrier_init(comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn bcast_init<A: MukBackend>(
+    buf: *mut u8,
+    count: i32,
+    dt: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc =
+        A::bcast_init(buf, count, dt_to_impl::<A>(dt), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce_init<A: MukBackend>(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: i32,
+    dt: usize,
+    op: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::allreduce_init(buf_to_impl::<A>(sendbuf), recvbuf, count, dt_to_impl::<A>(dt),
+        op_to_impl::<A>(op), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn gather_init<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::gather_init(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_init<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    root: i32,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let rb = recvbuf_to_impl::<A>(recvbuf);
+    let mut r = A::request_null();
+    let rc = A::scatter_init(sendbuf, sendcount, dt_to_impl::<A>(sendtype), rb, recvcount,
+        dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn alltoall_init<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i32,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcount: i32,
+    recvtype: usize,
+    comm: usize,
+    req: &mut usize,
+) -> i32 {
+    let mut r = A::request_null();
+    let rc = A::alltoall_init(buf_to_impl::<A>(sendbuf), sendcount, dt_to_impl::<A>(sendtype),
+        recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm), &mut r);
+    if rc == 0 {
+        *req = req_to_muk::<A>(r);
+    }
+    ret_code::<A>(rc)
+}
+
 pub fn comm_create_keyval<A: MukBackend>(
     copy: Option<callbacks::MukCopyFn>,
     delete: Option<callbacks::MukDeleteFn>,
@@ -1265,6 +1462,11 @@ define_vtable! {
     iprobe: fn(i32, i32, usize, &mut bool, *mut AbiStatus) -> i32,
     cancel: fn(&mut usize) -> i32,
     request_free: fn(&mut usize) -> i32,
+    send_init: fn(*const u8, i32, usize, i32, i32, usize, &mut usize) -> i32,
+    ssend_init: fn(*const u8, i32, usize, i32, i32, usize, &mut usize) -> i32,
+    recv_init: fn(*mut u8, i32, usize, i32, i32, usize, &mut usize) -> i32,
+    start: fn(&mut usize) -> i32,
+    startall: fn(&mut [usize]) -> i32,
     sendrecv: fn(*const u8, i32, usize, i32, i32, *mut u8, i32, usize, i32, i32, usize, *mut AbiStatus) -> i32,
     type_size: fn(usize, &mut i32) -> i32,
     type_get_extent: fn(usize, &mut isize, &mut isize) -> i32,
@@ -1304,6 +1506,12 @@ define_vtable! {
     iscan: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
     iexscan: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
     ireduce_scatter_block: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
+    barrier_init: fn(usize, &mut usize) -> i32,
+    bcast_init: fn(*mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    allreduce_init: fn(*const u8, *mut u8, i32, usize, usize, usize, &mut usize) -> i32,
+    gather_init: fn(*const u8, i32, usize, *mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    scatter_init: fn(*const u8, i32, usize, *mut u8, i32, usize, i32, usize, &mut usize) -> i32,
+    alltoall_init: fn(*const u8, i32, usize, *mut u8, i32, usize, usize, &mut usize) -> i32,
     comm_create_keyval: fn(Option<callbacks::MukCopyFn>, Option<callbacks::MukDeleteFn>, usize, &mut i32) -> i32,
     comm_free_keyval: fn(&mut i32) -> i32,
     comm_set_attr: fn(usize, i32, usize) -> i32,

@@ -17,6 +17,7 @@ mod coll;
 mod comm_attr;
 mod dtype;
 mod env;
+mod persistent;
 mod pt2pt;
 
 use crate::api::MpiAbi;
@@ -38,6 +39,7 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     let mut v: Vec<(&'static str, TestFn)> = Vec::new();
     v.extend(env::tests::<A>());
     v.extend(pt2pt::tests::<A>());
+    v.extend(persistent::tests::<A>());
     v.extend(dtype::tests::<A>());
     v.extend(coll::tests::<A>());
     v.extend(comm_attr::tests::<A>());

@@ -1,0 +1,518 @@
+//! Persistent-request tests (MPI_Send_init/Recv_init, MPI_Start[all],
+//! and the MPI-4 persistent collectives): the request lifecycle —
+//! inactive → started → complete → inactive — must behave identically
+//! across every ABI configuration; it is part of the binary contract.
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi, OpName};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("persistent.send_recv_restart", send_recv_restart::<A>),
+        ("persistent.ssend_restart", ssend_restart::<A>),
+        ("persistent.proc_null", proc_null::<A>),
+        ("persistent.wait_inactive_empty", wait_inactive_empty::<A>),
+        ("persistent.waitany_ignores_inactive", waitany_ignores_inactive::<A>),
+        ("persistent.start_while_active_rejected", start_while_active_rejected::<A>),
+        ("persistent.free_active_pt2pt_rejected", free_active_pt2pt_rejected::<A>),
+        ("persistent.free_active_sched_rejected", free_active_sched_rejected::<A>),
+        ("persistent.free_inactive_collective", free_inactive_collective::<A>),
+        ("persistent.restart_after_error", restart_after_error::<A>),
+        ("persistent.coll_restart_fresh_data", coll_restart_fresh_data::<A>),
+        ("persistent.startall_mixed", startall_mixed::<A>),
+        ("persistent.gather_scatter_alltoall", gather_scatter_alltoall::<A>),
+    ]
+}
+
+fn world_geometry<A: MpiAbi>() -> (i32, i32) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    (size, rank)
+}
+
+/// Init once, start/wait five times; the receiver must observe each
+/// round's fresh buffer contents, and the handles must survive waits.
+fn send_recv_restart<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    const ROUNDS: i32 = 5;
+    if me == 0 {
+        let mut buf = [0i32; 4];
+        let mut req = A::request_null();
+        check_rc!(
+            A::send_init(slice_ptr(&buf), 4, dt, 1, 7, A::comm_world(), &mut req),
+            "send_init"
+        );
+        check!(req != A::request_null(), "send_init handle non-null");
+        for k in 0..ROUNDS {
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = k * 100 + i as i32;
+            }
+            check_rc!(A::start(&mut req), "start (send)");
+            let mut st = A::status_empty();
+            check_rc!(A::wait(&mut req, &mut st), "wait (send)");
+            check!(req != A::request_null(), "persistent handle survives wait");
+        }
+        check_rc!(A::request_free(&mut req), "free (send)");
+        check!(req == A::request_null(), "free nulls the handle");
+    } else if me == 1 {
+        let mut buf = [0i32; 4];
+        let mut req = A::request_null();
+        check_rc!(
+            A::recv_init(slice_ptr_mut(&mut buf), 4, dt, 0, 7, A::comm_world(), &mut req),
+            "recv_init"
+        );
+        for k in 0..ROUNDS {
+            check_rc!(A::start(&mut req), "start (recv)");
+            let mut st = A::status_empty();
+            check_rc!(A::wait(&mut req, &mut st), "wait (recv)");
+            check!(req != A::request_null(), "persistent handle survives wait");
+            check!(A::status_source(&st) == 0, "status source");
+            check!(A::status_tag(&st) == 7, "status tag");
+            check!(A::get_count(&st, dt) == 4, "status count");
+            for (i, &b) in buf.iter().enumerate() {
+                check!(b == k * 100 + i as i32, "round {k} payload at {i}: got {b}");
+            }
+        }
+        check_rc!(A::request_free(&mut req), "free (recv)");
+        check!(req == A::request_null(), "free nulls the handle");
+    }
+    Ok(())
+}
+
+/// Persistent synchronous-mode send: completes only when matched.
+fn ssend_restart<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Double);
+    if me == 0 {
+        let mut v = [0.0f64];
+        let mut req = A::request_null();
+        check_rc!(A::ssend_init(slice_ptr(&v), 1, dt, 1, 9, A::comm_world(), &mut req),
+            "ssend_init");
+        for k in 0..3 {
+            v[0] = 0.5 + k as f64;
+            check_rc!(A::start(&mut req), "start (ssend)");
+            let mut st = A::status_empty();
+            check_rc!(A::wait(&mut req, &mut st), "wait (ssend)");
+        }
+        check_rc!(A::request_free(&mut req), "free (ssend)");
+    } else if me == 1 {
+        for k in 0..3 {
+            let mut v = [0.0f64];
+            let mut st = A::status_empty();
+            check_rc!(
+                A::recv(slice_ptr_mut(&mut v), 1, dt, 0, 9, A::comm_world(), &mut st),
+                "recv"
+            );
+            check!(v[0] == 0.5 + k as f64, "ssend round {k} payload");
+        }
+    }
+    Ok(())
+}
+
+/// Persistent ops on MPI_PROC_NULL complete immediately at every start.
+fn proc_null<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int);
+    let v = [3i32];
+    let mut b = [9i32];
+    let mut sreq = A::request_null();
+    let mut rreq = A::request_null();
+    check_rc!(
+        A::send_init(slice_ptr(&v), 1, dt, A::proc_null(), 0, A::comm_world(), &mut sreq),
+        "send_init to null"
+    );
+    check_rc!(
+        A::recv_init(slice_ptr_mut(&mut b), 1, dt, A::proc_null(), 0, A::comm_world(),
+            &mut rreq),
+        "recv_init from null"
+    );
+    for _ in 0..3 {
+        let mut reqs = vec![sreq, rreq];
+        check_rc!(A::startall(&mut reqs), "startall");
+        let mut sts = vec![A::status_empty(); 2];
+        check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+        sreq = reqs[0];
+        rreq = reqs[1];
+        check!(b[0] == 9, "buffer untouched by PROC_NULL recv");
+        check!(A::status_source(&sts[1]) == A::proc_null(), "status source PROC_NULL");
+    }
+    check_rc!(A::request_free(&mut sreq), "free send");
+    check_rc!(A::request_free(&mut rreq), "free recv");
+    Ok(())
+}
+
+/// Wait/test on a never-started persistent request returns immediately
+/// with an empty status and leaves the request usable (MPI 3.0 §3.7.3).
+fn wait_inactive_empty<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int);
+    let mut b = [0i32];
+    let mut req = A::request_null();
+    check_rc!(
+        A::recv_init(slice_ptr_mut(&mut b), 1, dt, A::any_source(), 31400, A::comm_world(),
+            &mut req),
+        "recv_init"
+    );
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait on inactive");
+    check!(req != A::request_null(), "handle survives wait on inactive");
+    check!(A::status_source(&st) == A::proc_null(), "empty status source");
+    let mut flag = false;
+    check_rc!(A::test(&mut req, &mut flag, &mut st), "test on inactive");
+    check!(flag, "test on inactive sets flag");
+    check_rc!(A::request_free(&mut req), "free");
+    Ok(())
+}
+
+/// Waitany must *ignore* inactive persistent requests (MPI 3.0 §3.7.5):
+/// it picks an active completed one over them, and returns
+/// `MPI_UNDEFINED` when the whole list is inactive.
+fn waitany_ignores_inactive<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int);
+    let mut b = [0i32];
+    let mut inactive = A::request_null();
+    check_rc!(
+        A::recv_init(slice_ptr_mut(&mut b), 1, dt, A::proc_null(), 0, A::comm_world(),
+            &mut inactive),
+        "recv_init"
+    );
+    // All-inactive list → MPI_UNDEFINED, not index 0.
+    let mut reqs = vec![inactive];
+    let mut idx = 0i32;
+    let mut st = A::status_empty();
+    check_rc!(A::waitany(&mut reqs, &mut idx, &mut st), "waitany all-inactive");
+    check!(idx == A::undefined(), "all-inactive waitany must return UNDEFINED, got {idx}");
+    check!(reqs[0] != A::request_null(), "inactive handle untouched");
+    // Inactive + a completed active request → the active one wins.
+    let v = [1i32];
+    let mut done = A::request_null();
+    check_rc!(
+        A::isend(slice_ptr(&v), 1, dt, A::proc_null(), 0, A::comm_world(), &mut done),
+        "isend to null"
+    );
+    let mut reqs = vec![inactive, done];
+    check_rc!(A::waitany(&mut reqs, &mut idx, &mut st), "waitany mixed");
+    check!(idx == 1, "waitany must skip the inactive request, got {idx}");
+    inactive = reqs[0];
+    check_rc!(A::request_free(&mut inactive), "free");
+    Ok(())
+}
+
+/// Starting an already-active persistent request is erroneous.
+fn start_while_active_rejected<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int);
+    let mut b = [0i32];
+    let mut req = A::request_null();
+    check_rc!(
+        A::recv_init(slice_ptr_mut(&mut b), 1, dt, A::any_source(), 31500, A::comm_world(),
+            &mut req),
+        "recv_init"
+    );
+    check_rc!(A::start(&mut req), "first start");
+    let rc = A::start(&mut req);
+    check!(rc != 0, "second start while active must fail");
+    // Clean up: cancel the unmatched receive, collect, free.
+    check_rc!(A::cancel(&mut req), "cancel");
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req, &mut st), "wait after cancel");
+    check!(A::status_cancelled(&st), "cancelled status");
+    check!(req != A::request_null(), "handle survives cancelled wait");
+    check_rc!(A::request_free(&mut req), "free");
+    Ok(())
+}
+
+/// request_free on an *active* persistent request must be rejected; the
+/// same request frees cleanly once inactive again.
+fn free_active_pt2pt_rejected<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        let v = [11i32];
+        let mut req = A::request_null();
+        check_rc!(A::ssend_init(slice_ptr(&v), 1, dt, 1, 6, A::comm_world(), &mut req),
+            "ssend_init");
+        check_rc!(A::start(&mut req), "start");
+        // Unmatched synchronous send: provably still active.
+        let rc = A::request_free(&mut req);
+        check!(rc != 0, "free of active persistent request must fail");
+        // Unblock the receiver, then complete and free legally.
+        let go = [1i32];
+        check_rc!(A::send(slice_ptr(&go), 1, dt, 1, 60, A::comm_world()), "go");
+        let mut st = A::status_empty();
+        check_rc!(A::wait(&mut req, &mut st), "wait");
+        check_rc!(A::request_free(&mut req), "free once inactive");
+    } else if me == 1 {
+        let mut go = [0i32];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut go), 1, dt, 0, 60, A::comm_world(), &mut st),
+            "recv go");
+        let mut v = [0i32];
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 1, dt, 0, 6, A::comm_world(), &mut st),
+            "recv payload");
+        check!(v[0] == 11, "payload");
+    }
+    Ok(())
+}
+
+/// Regression guard for the PR-1 behavior that must *stay*: freeing an
+/// active schedule-backed (collective) request is rejected — dropping
+/// the schedule would strand unexecuted sends and deadlock peers.
+fn free_active_sched_rejected<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        // No other rank has entered the barrier yet (they are gated on
+        // the "go" message below), so this request is provably active.
+        let mut req = A::request_null();
+        check_rc!(A::ibarrier(A::comm_world(), &mut req), "ibarrier");
+        let rc = A::request_free(&mut req);
+        check!(rc != 0, "free of active collective request must fail");
+        let go = [1i32];
+        for r in 1..n {
+            check_rc!(A::send(slice_ptr(&go), 1, dt, r, 61, A::comm_world()), "go");
+        }
+        let mut st = A::status_empty();
+        check_rc!(A::wait(&mut req, &mut st), "wait ibarrier");
+    } else {
+        let mut go = [0i32];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut go), 1, dt, 0, 61, A::comm_world(), &mut st),
+            "recv go");
+        let mut req = A::request_null();
+        check_rc!(A::ibarrier(A::comm_world(), &mut req), "ibarrier");
+        check_rc!(A::wait(&mut req, &mut st), "wait ibarrier");
+    }
+    Ok(())
+}
+
+/// The PR-1 bugfix: request_free must *accept* an inactive persistent
+/// request — including a persistent collective, whose retained schedule
+/// is schedule-backed exactly like the requests PR 1 blanket-rejected.
+fn free_inactive_collective<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    // Never started: free immediately.
+    let mut req = A::request_null();
+    check_rc!(A::barrier_init(A::comm_world(), &mut req), "barrier_init");
+    check!(req != A::request_null(), "init handle non-null");
+    check_rc!(A::request_free(&mut req), "free never-started persistent collective");
+    check!(req == A::request_null(), "free nulls the handle");
+    // Started, completed, inactive again: free as well.
+    let mut req2 = A::request_null();
+    check_rc!(A::barrier_init(A::comm_world(), &mut req2), "barrier_init (2)");
+    check_rc!(A::start(&mut req2), "start");
+    let mut st = A::status_empty();
+    check_rc!(A::wait(&mut req2, &mut st), "wait");
+    check_rc!(A::request_free(&mut req2), "free after start+wait");
+    Ok(())
+}
+
+/// A persistent receive that hits a truncation error completes with the
+/// error in its status, returns to inactive, and restarts cleanly.
+fn restart_after_error<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int);
+    if me == 0 {
+        let big = [1i32, 2, 3, 4];
+        check_rc!(A::send(slice_ptr(&big), 4, dt, 1, 8, A::comm_world()), "send big");
+        let fit = [5i32, 6];
+        check_rc!(A::send(slice_ptr(&fit), 2, dt, 1, 8, A::comm_world()), "send fit");
+    } else if me == 1 {
+        let mut buf = [0i32; 2];
+        let mut req = A::request_null();
+        check_rc!(
+            A::recv_init(slice_ptr_mut(&mut buf), 2, dt, 0, 8, A::comm_world(), &mut req),
+            "recv_init"
+        );
+        // Round 1: sender ships 4 ints into a 2-int buffer — truncation,
+        // reported in the status.
+        check_rc!(A::start(&mut req), "start 1");
+        let mut st = A::status_empty();
+        check_rc!(A::wait(&mut req, &mut st), "wait 1");
+        check!(
+            A::err_class_of(A::status_error(&st)) == crate::abi::errors::MPI_ERR_TRUNCATE,
+            "round 1 must report TRUNCATE in status, got {}",
+            A::err_class_of(A::status_error(&st))
+        );
+        check!(req != A::request_null(), "handle survives the error");
+        // Round 2: restart after the error; a fitting message lands.
+        check_rc!(A::start(&mut req), "start 2");
+        let mut st2 = A::status_empty();
+        check_rc!(A::wait(&mut req, &mut st2), "wait 2");
+        check!(A::status_error(&st2) == 0, "round 2 clean");
+        check!(buf == [5, 6], "round 2 payload");
+        check_rc!(A::request_free(&mut req), "free");
+    }
+    Ok(())
+}
+
+/// Persistent bcast: the root's buffer is re-read at every start (the
+/// schedule is reused, but the data must be fresh).
+fn coll_restart_fresh_data<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut buf = [0i32; 4];
+    let mut req = A::request_null();
+    check_rc!(
+        A::bcast_init(slice_ptr_mut(&mut buf), 4, dt, 0, A::comm_world(), &mut req),
+        "bcast_init"
+    );
+    for k in 0..4 {
+        if me == 0 {
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = k * 10 + i as i32;
+            }
+        } else {
+            buf = [-1; 4];
+        }
+        check_rc!(A::start(&mut req), "start");
+        let mut st = A::status_empty();
+        check_rc!(A::wait(&mut req, &mut st), "wait");
+        for (i, &b) in buf.iter().enumerate() {
+            check!(b == k * 10 + i as i32, "round {k} bcast payload at {i}: got {b}");
+        }
+    }
+    check_rc!(A::request_free(&mut req), "free");
+    Ok(())
+}
+
+/// Startall over a mixed window: persistent pt2pt + a persistent
+/// collective, completed by one waitall, restarted three times.
+fn startall_mixed<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let op = A::op(OpName::Sum);
+    let mut contrib = [0i32];
+    let mut sum = [0i32];
+    let mut ar = A::request_null();
+    check_rc!(
+        A::allreduce_init(slice_ptr(&contrib), slice_ptr_mut(&mut sum), 1, dt, op,
+            A::comm_world(), &mut ar),
+        "allreduce_init"
+    );
+    let mut pbuf = [0i32];
+    let mut p2p = A::request_null();
+    if me == 0 {
+        check_rc!(A::send_init(slice_ptr(&pbuf), 1, dt, 1, 13, A::comm_world(), &mut p2p),
+            "send_init");
+    } else if me == 1 {
+        check_rc!(A::recv_init(slice_ptr_mut(&mut pbuf), 1, dt, 0, 13, A::comm_world(),
+            &mut p2p), "recv_init");
+    }
+    for k in 1..=3i32 {
+        contrib[0] = (me + 1) * k;
+        if me == 0 {
+            pbuf[0] = 1000 + k;
+        }
+        if me <= 1 {
+            let mut reqs = vec![p2p, ar];
+            check_rc!(A::startall(&mut reqs), "startall mixed");
+            let mut sts = vec![A::status_empty(); 2];
+            check_rc!(A::waitall(&mut reqs, &mut sts), "waitall mixed");
+            p2p = reqs[0];
+            ar = reqs[1];
+            check!(p2p != A::request_null(), "pt2pt handle survives waitall");
+            check!(ar != A::request_null(), "collective handle survives waitall");
+        } else {
+            let mut reqs = vec![ar];
+            check_rc!(A::startall(&mut reqs), "startall coll");
+            let mut sts = vec![A::status_empty(); 1];
+            check_rc!(A::waitall(&mut reqs, &mut sts), "waitall coll");
+            ar = reqs[0];
+        }
+        let expect = (1..=n).sum::<i32>() * k;
+        check!(sum[0] == expect, "round {k} allreduce: got {}, want {expect}", sum[0]);
+        if me == 1 {
+            check!(pbuf[0] == 1000 + k, "round {k} pt2pt payload");
+        }
+    }
+    check_rc!(A::request_free(&mut ar), "free allreduce");
+    if me <= 1 {
+        check_rc!(A::request_free(&mut p2p), "free pt2pt");
+    }
+    Ok(())
+}
+
+/// The rooted/pairwise persistent collectives move fresh data each
+/// round: gather_init, scatter_init, alltoall_init.
+fn gather_scatter_alltoall<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let nu = n as usize;
+    let dt = A::datatype(Dt::Int32);
+    // gather_init: everyone contributes (me*100 + round).
+    let mut gsend = [0i32];
+    let mut grecv = vec![0i32; nu];
+    let mut greq = A::request_null();
+    check_rc!(
+        A::gather_init(slice_ptr(&gsend), 1, dt, slice_ptr_mut(&mut grecv), 1, dt, 0,
+            A::comm_world(), &mut greq),
+        "gather_init"
+    );
+    // scatter_init: root 0 deals out (rank*1000 + round).
+    let mut ssend = vec![0i32; nu];
+    let mut srecv = [0i32];
+    let mut sreq = A::request_null();
+    check_rc!(
+        A::scatter_init(slice_ptr(&ssend), 1, dt, slice_ptr_mut(&mut srecv), 1, dt, 0,
+            A::comm_world(), &mut sreq),
+        "scatter_init"
+    );
+    // alltoall_init: block for rank r is (me*10000 + r*100 + round).
+    let mut asend = vec![0i32; nu];
+    let mut arecv = vec![0i32; nu];
+    let mut areq = A::request_null();
+    check_rc!(
+        A::alltoall_init(slice_ptr(&asend), 1, dt, slice_ptr_mut(&mut arecv), 1, dt,
+            A::comm_world(), &mut areq),
+        "alltoall_init"
+    );
+    for k in 0..3i32 {
+        gsend[0] = me * 100 + k;
+        if me == 0 {
+            for (r, v) in ssend.iter_mut().enumerate() {
+                *v = r as i32 * 1000 + k;
+            }
+        }
+        for (r, v) in asend.iter_mut().enumerate() {
+            *v = me * 10000 + r as i32 * 100 + k;
+        }
+        let mut reqs = vec![greq, sreq, areq];
+        check_rc!(A::startall(&mut reqs), "startall");
+        let mut sts = vec![A::status_empty(); 3];
+        check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+        greq = reqs[0];
+        sreq = reqs[1];
+        areq = reqs[2];
+        if me == 0 {
+            for (r, &v) in grecv.iter().enumerate() {
+                check!(v == r as i32 * 100 + k, "gather round {k} from {r}: got {v}");
+            }
+        }
+        check!(srecv[0] == me * 1000 + k, "scatter round {k}: got {}", srecv[0]);
+        for (r, &v) in arecv.iter().enumerate() {
+            let want = r as i32 * 10000 + me * 100 + k;
+            check!(v == want, "alltoall round {k} from {r}: got {v}, want {want}");
+        }
+    }
+    check_rc!(A::request_free(&mut greq), "free gather");
+    check_rc!(A::request_free(&mut sreq), "free scatter");
+    check_rc!(A::request_free(&mut areq), "free alltoall");
+    Ok(())
+}

@@ -921,3 +921,209 @@ fn many_nonblocking_collectives_in_flight() {
         engine::finalize().unwrap();
     });
 }
+
+// ---------------------------------------------------------------------------
+// Persistent requests (engine level)
+// ---------------------------------------------------------------------------
+
+fn dt_byte() -> mpi_abi::core::DtId {
+    builtin_id_of_abi(adt::MPI_BYTE).unwrap()
+}
+
+#[test]
+fn persistent_pt2pt_restart_both_transports() {
+    use mpi_abi::core::transport::TransportKind;
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        run_job_ok(JobSpec::new(2).with_transport(transport), move |rank| {
+            engine::init().unwrap();
+            if rank == 0 {
+                let mut buf = [0i32; 2];
+                let req = engine::send_init(
+                    buf.as_ptr() as *const u8,
+                    2,
+                    dt_i32(),
+                    1,
+                    3,
+                    COMM_WORLD,
+                    engine::SendMode::Standard,
+                )
+                .unwrap();
+                for k in 0..4i32 {
+                    buf = [k, k + 10];
+                    engine::start(req).unwrap();
+                    engine::wait(req).unwrap();
+                }
+                mpi_abi::core::request::request_free(req).unwrap();
+            } else {
+                let mut buf = [0i32; 2];
+                let req = engine::recv_init(
+                    buf.as_mut_ptr() as *mut u8,
+                    2,
+                    dt_i32(),
+                    0,
+                    3,
+                    COMM_WORLD,
+                )
+                .unwrap();
+                for k in 0..4i32 {
+                    engine::start(req).unwrap();
+                    let st = engine::wait(req).unwrap();
+                    assert_eq!(st.error, 0);
+                    assert_eq!(st.count_bytes, 8);
+                    assert_eq!(buf, [k, k + 10], "restart {k} must see fresh data");
+                }
+                mpi_abi::core::request::request_free(req).unwrap();
+            }
+            engine::finalize().unwrap();
+        });
+    }
+}
+
+#[test]
+fn persistent_collective_reuses_schedule() {
+    run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        let contrib = [rank as i32 + 1];
+        let mut out = [0i32];
+        let req = coll::allreduce_init(
+            contrib.as_ptr() as *const u8,
+            out.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            op_sum(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        coll::barrier(COMM_WORLD).unwrap();
+        let b0 = coll::schedules_built();
+        for _ in 0..10 {
+            engine::start(req).unwrap();
+            let st = engine::wait(req).unwrap();
+            assert_eq!(st.error, 0);
+            assert_eq!(out[0], 3);
+        }
+        let delta = coll::schedules_built() - b0;
+        // Rendezvous (schedule-free pt2pt) before asserting: the counter
+        // is process-global and the peer's *next* collective build must
+        // not land inside our measurement window.
+        let peer = (1 - rank) as i32;
+        let token = [0u8];
+        let mut tok = [0u8];
+        engine::sendrecv(
+            token.as_ptr(),
+            1,
+            dt_byte(),
+            peer,
+            70,
+            tok.as_mut_ptr(),
+            1,
+            dt_byte(),
+            peer,
+            70,
+            COMM_WORLD,
+        )
+        .unwrap();
+        assert_eq!(delta, 0, "persistent starts must reuse, not rebuild, the schedule");
+        mpi_abi::core::request::request_free(req).unwrap();
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn request_free_accepts_inactive_persistent_collective() {
+    // Regression: PR 1's request_free rejected *every* schedule-backed
+    // request; inactive persistent collectives must free cleanly, while
+    // active schedule-backed requests must still be rejected (covered at
+    // the ABI level by testsuite/persistent.rs).
+    run_job_ok(JobSpec::new(2), |_| {
+        engine::init().unwrap();
+        // Never started: free must succeed.
+        let req = coll::barrier_init(COMM_WORLD).unwrap();
+        mpi_abi::core::request::request_free(req).unwrap();
+        // Started then waited: inactive again, frees as well.
+        let req = coll::barrier_init(COMM_WORLD).unwrap();
+        engine::start(req).unwrap();
+        engine::wait(req).unwrap();
+        mpi_abi::core::request::request_free(req).unwrap();
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn start_while_active_is_an_error() {
+    run_job_ok(JobSpec::new(1), |_| {
+        engine::init().unwrap();
+        let mut buf = [0i32];
+        let req = engine::recv_init(
+            buf.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            mpi_abi::abi::constants::MPI_ANY_SOURCE,
+            31000,
+            COMM_WORLD,
+        )
+        .unwrap();
+        engine::start(req).unwrap();
+        assert!(engine::start(req).is_err(), "start on an active request must fail");
+        mpi_abi::core::request::cancel(req).unwrap();
+        let st = engine::wait(req).unwrap();
+        assert!(st.cancelled);
+        mpi_abi::core::request::request_free(req).unwrap();
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn testany_distinguishes_inactive_from_pending() {
+    use mpi_abi::core::engine::TestAnyOutcome;
+    run_job_ok(JobSpec::new(1), |_| {
+        engine::init().unwrap();
+        let mut b = [0i32];
+        // One inactive persistent request: NoneActive, not Pending and
+        // not a phantom completion (MPI 3.0 §3.7.5).
+        let inactive = engine::recv_init(
+            b.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            mpi_abi::abi::constants::MPI_PROC_NULL,
+            0,
+            COMM_WORLD,
+        )
+        .unwrap();
+        assert_eq!(engine::testany(&[inactive]).unwrap(), TestAnyOutcome::NoneActive);
+        // Add an active-but-unmatchable receive: Pending.
+        let mut c = [0i32];
+        let pending = engine::irecv(
+            c.as_mut_ptr() as *mut u8,
+            1,
+            dt_i32(),
+            mpi_abi::abi::constants::MPI_ANY_SOURCE,
+            30999,
+            COMM_WORLD,
+        )
+        .unwrap();
+        assert_eq!(engine::testany(&[inactive, pending]).unwrap(), TestAnyOutcome::Pending);
+        // Add a completed send: Completed at its index, skipping the
+        // inactive one.
+        let v = [1i32];
+        let done = engine::isend(
+            v.as_ptr() as *const u8,
+            1,
+            dt_i32(),
+            mpi_abi::abi::constants::MPI_PROC_NULL,
+            0,
+            COMM_WORLD,
+            engine::SendMode::Standard,
+        )
+        .unwrap();
+        match engine::testany(&[inactive, pending, done]).unwrap() {
+            TestAnyOutcome::Completed(2, _) => {}
+            other => panic!("expected Completed(2, _), got {other:?}"),
+        }
+        // Clean up.
+        mpi_abi::core::request::cancel(pending).unwrap();
+        engine::wait(pending).unwrap();
+        mpi_abi::core::request::request_free(inactive).unwrap();
+        engine::finalize().unwrap();
+    });
+}
