@@ -1,22 +1,23 @@
 //! 2-D Jacobi halo exchange across ABIs: the stencil result must be
 //! bit-identical whichever MPI library carries the halos — and whichever
-//! exchange mode (per-sweep sendrecv vs persistent start/wait) drives it.
+//! exchange mode (per-sweep sendrecv, persistent start/wait, or
+//! fence-synchronized RMA puts) drives it.
 //!
 //! ```bash
 //! cargo run --release --example halo2d [ranks] [n] [iters]
 //! ```
 
 use mpi_abi::api::MpiAbi;
-use mpi_abi::apps::halo::{jacobi, HaloParams};
+use mpi_abi::apps::halo::{jacobi, HaloMode, HaloParams};
 use mpi_abi::impls::{MpichAbi, OmpiAbi};
 use mpi_abi::launcher::{run_job_ok, JobSpec};
 use mpi_abi::muk::MukMpich;
 use mpi_abi::native_abi::NativeAbi;
 
-fn run<A: MpiAbi>(ranks: usize, n: usize, iters: usize, persistent: bool) -> f64 {
+fn run<A: MpiAbi>(ranks: usize, n: usize, iters: usize, mode: HaloMode) -> f64 {
     let out = run_job_ok(JobSpec::new(ranks), move |_| {
         A::init();
-        let (_, global) = jacobi::<A>(HaloParams { n, iters, persistent });
+        let (_, global) = jacobi::<A>(HaloParams { n, iters, mode });
         A::finalize();
         global
     });
@@ -30,23 +31,31 @@ fn main() {
     let iters: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(50);
     println!("2-D Jacobi: {n}x{n} grid, {ranks} ranks, {iters} sweeps");
 
-    let a = run::<NativeAbi>(ranks, n, iters, false);
+    let a = run::<NativeAbi>(ranks, n, iters, HaloMode::Sendrecv);
     println!("  native std ABI : residual {a:.12}");
-    let b = run::<MpichAbi>(ranks, n, iters, false);
+    let b = run::<MpichAbi>(ranks, n, iters, HaloMode::Sendrecv);
     println!("  mpich-like ABI : residual {b:.12}");
-    let c = run::<OmpiAbi>(ranks, n, iters, false);
+    let c = run::<OmpiAbi>(ranks, n, iters, HaloMode::Sendrecv);
     println!("  ompi-like ABI  : residual {c:.12}");
-    let d = run::<MukMpich>(ranks, n, iters, false);
+    let d = run::<MukMpich>(ranks, n, iters, HaloMode::Sendrecv);
     println!("  muk(mpich)     : residual {d:.12}");
     assert!(a == b && b == c && c == d, "results must be ABI-independent");
     assert!(a > 0.0, "heat must have diffused from the boundary");
 
     // Persistent halo exchange (MPI-4 Send_init/Recv_init + Startall):
     // same halos, init-once/start-N — the result must not change.
-    let e = run::<NativeAbi>(ranks, n, iters, true);
+    let e = run::<NativeAbi>(ranks, n, iters, HaloMode::Persistent);
     println!("  abi, persistent: residual {e:.12}");
-    let f = run::<MukMpich>(ranks, n, iters, true);
+    let f = run::<MukMpich>(ranks, n, iters, HaloMode::Persistent);
     println!("  muk, persistent: residual {f:.12}");
     assert!(a == e && e == f, "persistent exchange must be bit-identical");
+
+    // RMA halo exchange (MPI_Put + MPI_Win_fence): one-sided ghost-row
+    // updates must produce the same bits as the two-sided modes.
+    let g = run::<NativeAbi>(ranks, n, iters, HaloMode::Rma);
+    println!("  abi, rma       : residual {g:.12}");
+    let h = run::<MukMpich>(ranks, n, iters, HaloMode::Rma);
+    println!("  muk, rma       : residual {h:.12}");
+    assert!(a == g && g == h, "RMA exchange must be bit-identical");
     println!("bit-identical across all libraries and exchange modes ✓");
 }

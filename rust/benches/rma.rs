@@ -1,0 +1,153 @@
+//! One-sided op latency through every ABI layer: put / get / accumulate
+//! under a passive-target (lock/flush) epoch, across the five ABI
+//! configurations and both transports.
+//!
+//! What the layers add on this path: window-handle conversion (int bits
+//! vs pointer deref vs zero-page word), `MPI_Aint` displacement
+//! plumbing, and — for Mukautuva — the §5.4 constant translation
+//! (assert bitmasks, lock types) on every synchronization call.
+//!
+//! `cargo bench --bench rma -- --smoke` runs one iteration per op on
+//! one transport (the CI bit-rot guard).
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::bench::Table;
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+const RANKS: usize = 2;
+const SLOTS: usize = 64;
+
+struct Results {
+    put_us: f64,
+    get_us: f64,
+    acc_us: f64,
+    fence_us: f64,
+}
+
+struct Rma {
+    transport: TransportKind,
+    iters: usize,
+}
+
+impl AbiApp<Results> for Rma {
+    fn run<A: MpiAbi>(self) -> Results {
+        let iters = self.iters;
+        let out = run_job_ok(JobSpec::new(RANKS).with_transport(self.transport), move |rank| {
+            A::init();
+            let world = A::comm_world();
+            let dt = A::datatype(Dt::Int32);
+            let op = A::op(OpName::Sum);
+            let mut mem = vec![0i32; SLOTS];
+            let mut win = A::win_null();
+            A::win_create(
+                mem.as_mut_ptr() as *mut u8,
+                std::mem::size_of_val(&mem[..]) as isize,
+                4,
+                A::info_null(),
+                world,
+                &mut win,
+            );
+            let v = [1i32];
+            let mut g = [0i32];
+            let mut r = Results { put_us: 0.0, get_us: 0.0, acc_us: 0.0, fence_us: 0.0 };
+
+            // --- passive-target put / get / accumulate (+flush per op) ---
+            // Rank 1 sits in the barrier, its progress engine applying
+            // the one-sided traffic — the passive-target model.
+            if rank == 0 {
+                A::win_lock(A::lock_exclusive(), 1, 0, win);
+                for _ in 0..iters.min(8) {
+                    A::put(v.as_ptr() as *const u8, 1, dt, 1, 0, 1, dt, win);
+                    A::win_flush(1, win);
+                }
+                let t0 = A::wtime();
+                for _ in 0..iters {
+                    A::put(v.as_ptr() as *const u8, 1, dt, 1, 0, 1, dt, win);
+                    A::win_flush(1, win);
+                }
+                r.put_us = (A::wtime() - t0) / iters as f64 * 1e6;
+                let t0 = A::wtime();
+                for _ in 0..iters {
+                    A::get(g.as_mut_ptr() as *mut u8, 1, dt, 1, 0, 1, dt, win);
+                    A::win_flush(1, win);
+                }
+                r.get_us = (A::wtime() - t0) / iters as f64 * 1e6;
+                let t0 = A::wtime();
+                for _ in 0..iters {
+                    A::accumulate(v.as_ptr() as *const u8, 1, dt, 1, 0, 1, dt, op, win);
+                    A::win_flush(1, win);
+                }
+                r.acc_us = (A::wtime() - t0) / iters as f64 * 1e6;
+                A::win_unlock(1, win);
+            }
+            A::barrier(world);
+
+            // --- fence epoch cost (collective; both ranks measure) ---
+            A::win_fence(0, win);
+            let t0 = A::wtime();
+            for _ in 0..iters {
+                A::win_fence(0, win);
+            }
+            r.fence_us = (A::wtime() - t0) / iters as f64 * 1e6;
+            A::win_fence(A::mode_nosucceed(), win);
+
+            A::win_free(&mut win);
+            A::finalize();
+            r
+        });
+        out.into_iter()
+            .reduce(|a, b| Results {
+                put_us: a.put_us.max(b.put_us),
+                get_us: a.get_us.max(b.get_us),
+                acc_us: a.acc_us.max(b.acc_us),
+                fence_us: a.fence_us.max(b.fence_us),
+            })
+            .unwrap()
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let transports: &[TransportKind] = if smoke {
+        &[TransportKind::Spsc]
+    } else {
+        &[TransportKind::Spsc, TransportKind::Mutex]
+    };
+    println!("\nRMA op latency ({RANKS} ranks): 4-byte put/get/accumulate + flush, fence round");
+    for &transport in transports {
+        let iters = if smoke {
+            1
+        } else {
+            match transport {
+                TransportKind::Spsc => 2000,
+                TransportKind::Mutex => 400,
+            }
+        };
+        let mut table = Table::new(
+            &format!("one-sided latency [{} transport]", transport.name()),
+            &["ABI", "put µs", "get µs", "acc µs", "fence µs"],
+        );
+        for abi in AbiConfig::ALL {
+            let r = with_abi(abi, Rma { transport, iters });
+            table.row(&[
+                abi.name().to_string(),
+                format!("{:.2}", r.put_us),
+                format!("{:.2}", r.get_us),
+                format!("{:.2}", r.acc_us),
+                format!("{:.2}", r.fence_us),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    if smoke {
+        println!("smoke run complete (1 iteration, spsc only)");
+    } else {
+        println!(
+            "shape: put/get/acc pay one op message + flush round-trip; the muk rows add \
+             window-handle + constant translation per call; fence adds the dissemination \
+             rounds on the window's ctrl plane."
+        );
+    }
+}

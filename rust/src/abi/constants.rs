@@ -101,6 +101,15 @@ pub const XOR_MODES: &[(&str, i32)] = &[
     ("MPI_MODE_NOSUCCEED", MPI_MODE_NOSUCCEED),
 ];
 
+// --- RMA lock types (§5.4) ----------------------------------------------------
+
+/// The standard-ABI `MPI_LOCK_EXCLUSIVE` constant. Implementations number
+/// these differently (MPICH: 234/235, Open MPI: 1/2); the standard ABI
+/// pins the small values.
+pub const MPI_LOCK_EXCLUSIVE: i32 = 1;
+/// The standard-ABI `MPI_LOCK_SHARED` constant.
+pub const MPI_LOCK_SHARED: i32 = 2;
+
 // --- Thread levels (ordered comparison required by MPI) ----------------------
 
 /// The standard-ABI `MPI_THREAD_SINGLE` constant.

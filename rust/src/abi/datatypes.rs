@@ -227,11 +227,11 @@ pub fn platform_size_of(dt: usize) -> Option<usize> {
         MPI_PACKED => 1,
         MPI_SHORT => 2,
         MPI_INT => 4,
-        MPI_LONG => core::mem::size_of::<libc::c_long>(),
+        MPI_LONG => core::mem::size_of::<core::ffi::c_long>(),
         MPI_LONG_LONG => 8,
         MPI_UNSIGNED_SHORT => 2,
         MPI_UNSIGNED => 4,
-        MPI_UNSIGNED_LONG => core::mem::size_of::<libc::c_ulong>(),
+        MPI_UNSIGNED_LONG => core::mem::size_of::<core::ffi::c_ulong>(),
         MPI_UNSIGNED_LONG_LONG => 8,
         MPI_FLOAT => 4,
         MPI_DOUBLE => 8,
@@ -250,7 +250,7 @@ pub fn platform_size_of(dt: usize) -> Option<usize> {
         MPI_CHARACTER => 1,
         MPI_FLOAT_INT => 8,
         MPI_DOUBLE_INT => 12,
-        MPI_LONG_INT => core::mem::size_of::<libc::c_long>() + 4,
+        MPI_LONG_INT => core::mem::size_of::<core::ffi::c_long>() + 4,
         MPI_2INT => 8,
         MPI_SHORT_INT => 6,
         MPI_LONG_DOUBLE_INT => 20,

@@ -194,8 +194,8 @@ abi_handle!(
     MPI_INFO_NULL
 );
 abi_handle!(
-    /// `MPI_Win` in the standard ABI (RMA is out of reproduction scope; the
-    /// handle type exists for ABI-completeness tests).
+    /// `MPI_Win` in the standard ABI — the one-sided subsystem's handle
+    /// (windows, epochs, Put/Get/Accumulate; see [`crate::core::rma`]).
     AbiWin,
     MPI_WIN_NULL
 );

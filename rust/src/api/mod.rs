@@ -81,6 +81,9 @@ pub trait MpiAbi: 'static {
     type Group: Copy + PartialEq;
     type Errhandler: Copy + PartialEq;
     type Info: Copy + PartialEq;
+    /// `MPI_Win` — the RMA window handle (in the paper's handle table
+    /// alongside `MPI_Comm` and `MPI_Request`).
+    type Win: Copy + PartialEq + std::fmt::Debug;
     /// The ABI's status struct (layouts differ! §3.2).
     type Status: Copy;
 
@@ -95,6 +98,7 @@ pub trait MpiAbi: 'static {
     fn errhandler_return() -> Self::Errhandler;
     fn errhandler_fatal() -> Self::Errhandler;
     fn info_null() -> Self::Info;
+    fn win_null() -> Self::Win;
 
     /// Special integer constants — ABIs number these differently.
     fn any_source() -> i32;
@@ -103,6 +107,22 @@ pub trait MpiAbi: 'static {
     fn undefined() -> i32;
     /// The `MPI_IN_PLACE` buffer sentinel.
     fn in_place() -> *const u8;
+    /// `MPI_LOCK_EXCLUSIVE` — implementations number lock types
+    /// differently (MPICH: 234, Open MPI: 1), §5.4.
+    fn lock_exclusive() -> i32;
+    /// `MPI_LOCK_SHARED`.
+    fn lock_shared() -> i32;
+    /// `MPI_MODE_NOCHECK` (window assertion bit; OMPI numbers the whole
+    /// family differently from MPICH and the standard ABI).
+    fn mode_nocheck() -> i32;
+    /// `MPI_MODE_NOSTORE`.
+    fn mode_nostore() -> i32;
+    /// `MPI_MODE_NOPUT`.
+    fn mode_noput() -> i32;
+    /// `MPI_MODE_NOPRECEDE`.
+    fn mode_noprecede() -> i32;
+    /// `MPI_MODE_NOSUCCEED`.
+    fn mode_nosucceed() -> i32;
 
     /// Success / canonical error classes in this ABI's numbering.
     fn err_class_of(code: i32) -> i32;
@@ -128,6 +148,10 @@ pub trait MpiAbi: 'static {
     fn status_error(s: &Self::Status) -> i32;
     fn status_cancelled(s: &Self::Status) -> bool;
     fn get_count(s: &Self::Status, dt: Self::Datatype) -> i32;
+    /// `MPI_Get_elements`: basic-element count of the received data —
+    /// unlike `get_count` it resolves partial items of a derived type
+    /// down to their basic leaves.
+    fn get_elements(s: &Self::Status, dt: Self::Datatype) -> i32;
 
     // --- Communicators & groups ---
     fn comm_size(c: Self::Comm, out: &mut i32) -> i32;
@@ -212,6 +236,34 @@ pub trait MpiAbi: 'static {
     fn waitall(reqs: &mut [Self::Request], statuses: &mut [Self::Status]) -> i32;
     fn testall(reqs: &mut [Self::Request], flag: &mut bool, statuses: &mut [Self::Status]) -> i32;
     fn waitany(reqs: &mut [Self::Request], index: &mut i32, status: &mut Self::Status) -> i32;
+    /// `MPI_Testany` (§3.7.5): on return, `flag && index >= 0` means that
+    /// request completed; `flag && index == MPI_UNDEFINED` means no
+    /// active request exists in the list; `!flag` means none is done yet.
+    fn testany(
+        reqs: &mut [Self::Request],
+        index: &mut i32,
+        flag: &mut bool,
+        status: &mut Self::Status,
+    ) -> i32;
+    /// `MPI_Waitsome`: blocks until ≥ 1 active request completes;
+    /// `indices[..outcount]` name the completed slots (with their
+    /// statuses in `statuses[..outcount]`). `outcount = MPI_UNDEFINED`
+    /// when the list holds no active request. Inactive persistent
+    /// requests are ignored, as in `waitany`.
+    fn waitsome(
+        reqs: &mut [Self::Request],
+        outcount: &mut i32,
+        indices: &mut [i32],
+        statuses: &mut [Self::Status],
+    ) -> i32;
+    /// `MPI_Testsome`: like `waitsome` but never blocks — `outcount` may
+    /// be 0 when active requests exist and none has completed.
+    fn testsome(
+        reqs: &mut [Self::Request],
+        outcount: &mut i32,
+        indices: &mut [i32],
+        statuses: &mut [Self::Status],
+    ) -> i32;
     fn probe(src: i32, tag: i32, comm: Self::Comm, status: &mut Self::Status) -> i32;
     fn iprobe(
         src: i32,
@@ -612,6 +664,83 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+
+    // --- One-sided communication (RMA) ---
+    //
+    // `MPI_Win` is a first-class opaque handle: every layer represents
+    // it its own way (int with T_WIN bits, pointer-to-descriptor,
+    // zero-page word) and the translation layer round-trips it through
+    // the word union like any other handle. Displacements are `MPI_Aint`
+    // (§5.1) and assertion/lock-type constants differ per ABI (§5.4) —
+    // use the `mode_*`/`lock_*` constant functions above.
+    fn win_create(
+        base: *mut u8,
+        size: crate::abi::types::Aint,
+        disp_unit: i32,
+        info: Self::Info,
+        comm: Self::Comm,
+        win: &mut Self::Win,
+    ) -> i32;
+    fn win_allocate(
+        size: crate::abi::types::Aint,
+        disp_unit: i32,
+        info: Self::Info,
+        comm: Self::Comm,
+        baseptr: &mut *mut u8,
+        win: &mut Self::Win,
+    ) -> i32;
+    fn win_free(win: &mut Self::Win) -> i32;
+    fn win_fence(assert: i32, win: Self::Win) -> i32;
+    fn win_lock(lock_type: i32, rank: i32, assert: i32, win: Self::Win) -> i32;
+    fn win_unlock(rank: i32, win: Self::Win) -> i32;
+    fn win_flush(rank: i32, win: Self::Win) -> i32;
+    fn put(
+        origin: *const u8,
+        origin_count: i32,
+        origin_dt: Self::Datatype,
+        target_rank: i32,
+        target_disp: crate::abi::types::Aint,
+        target_count: i32,
+        target_dt: Self::Datatype,
+        win: Self::Win,
+    ) -> i32;
+    fn get(
+        origin: *mut u8,
+        origin_count: i32,
+        origin_dt: Self::Datatype,
+        target_rank: i32,
+        target_disp: crate::abi::types::Aint,
+        target_count: i32,
+        target_dt: Self::Datatype,
+        win: Self::Win,
+    ) -> i32;
+    fn accumulate(
+        origin: *const u8,
+        origin_count: i32,
+        origin_dt: Self::Datatype,
+        target_rank: i32,
+        target_disp: crate::abi::types::Aint,
+        target_count: i32,
+        target_dt: Self::Datatype,
+        op: Self::Op,
+        win: Self::Win,
+    ) -> i32;
+    /// `MPI_Get_address`: identical arithmetic in every ABI, but part of
+    /// the binary surface because `MPI_Aint`'s width is pinned by §5.1.
+    fn get_address(location: *const u8, out: &mut crate::abi::types::Aint) -> i32 {
+        *out = location as crate::abi::types::Aint;
+        0
+    }
+    /// `MPI_Aint_add` (MPI 3.1 §4.1.5: wraps like pointer arithmetic).
+    fn aint_add(base: crate::abi::types::Aint, disp: crate::abi::types::Aint)
+        -> crate::abi::types::Aint {
+        base.wrapping_add(disp)
+    }
+    /// `MPI_Aint_diff`.
+    fn aint_diff(addr1: crate::abi::types::Aint, addr2: crate::abi::types::Aint)
+        -> crate::abi::types::Aint {
+        addr1.wrapping_sub(addr2)
+    }
 
     // --- Attributes ---
     fn comm_create_keyval(

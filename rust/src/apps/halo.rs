@@ -3,16 +3,21 @@
 //! a 1-D rank strip; each iteration exchanges boundary rows with both
 //! neighbors and applies a 5-point stencil.
 //!
-//! Two exchange modes:
+//! Three exchange modes:
 //!
 //! * **blocking** (default): two `MPI_Sendrecv` calls per sweep — the
 //!   classic textbook form;
-//! * **persistent** ([`HaloParams::persistent`]): four persistent
+//! * **persistent** ([`HaloMode::Persistent`]): four persistent
 //!   requests per buffer created once (`MPI_Send_init`/`MPI_Recv_init`),
 //!   then `MPI_Startall` + `MPI_Waitall` per sweep. Because the two grid
 //!   buffers swap roles every sweep, one request set exists per buffer
 //!   and the sweep's parity picks the set — the standard MPI idiom for
-//!   persistent double buffering.
+//!   persistent double buffering;
+//! * **RMA** ([`HaloMode::Rma`]): one window per grid buffer; each sweep
+//!   `MPI_Put`s the boundary rows straight into the neighbors' ghost
+//!   rows and an `MPI_Win_fence` closes the exposure — no receives at
+//!   all. The sweep's parity picks the window, mirroring the persistent
+//!   request sets.
 //!
 //! Used by `examples/halo2d.rs` and the cross-ABI consistency tests: the
 //! result must be bit-identical whichever ABI (and whichever exchange
@@ -20,20 +25,51 @@
 
 use crate::api::{Dt, MpiAbi};
 
+/// How the halo rows travel each sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HaloMode {
+    /// Two `MPI_Sendrecv` calls per sweep.
+    Sendrecv,
+    /// Persistent requests, `MPI_Startall` + `MPI_Waitall` per sweep.
+    Persistent,
+    /// Fence-synchronized `MPI_Put`s into the neighbors' ghost rows.
+    Rma,
+}
+
+impl HaloMode {
+    /// Parse a CLI mode name.
+    pub fn parse(s: &str) -> Option<HaloMode> {
+        match s {
+            "sendrecv" | "blocking" => Some(HaloMode::Sendrecv),
+            "persistent" => Some(HaloMode::Persistent),
+            "rma" => Some(HaloMode::Rma),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (for reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            HaloMode::Sendrecv => "sendrecv",
+            HaloMode::Persistent => "persistent",
+            HaloMode::Rma => "rma",
+        }
+    }
+}
+
 /// Stencil configuration.
 pub struct HaloParams {
     /// Global grid is `n x n`.
     pub n: usize,
     /// Number of Jacobi sweeps.
     pub iters: usize,
-    /// Exchange halos with persistent requests (init once, start per
-    /// sweep) instead of per-sweep `MPI_Sendrecv`.
-    pub persistent: bool,
+    /// Halo exchange mode.
+    pub mode: HaloMode,
 }
 
 impl Default for HaloParams {
     fn default() -> Self {
-        HaloParams { n: 64, iters: 20, persistent: false }
+        HaloParams { n: 64, iters: 20, mode: HaloMode::Sendrecv }
     }
 }
 
@@ -72,7 +108,7 @@ pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
     // four requests of a set carry the same traffic as the two Sendrecv
     // calls of the blocking path (tags 1 and 2 disambiguate direction).
     let mut req_sets: Vec<Vec<A::Request>> = Vec::new();
-    if p.persistent {
+    if p.mode == HaloMode::Persistent {
         for buf in [&mut grid, &mut next] {
             // Derive every request pointer from a mutable borrow: the
             // receives write through them across sweeps.
@@ -90,51 +126,105 @@ pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
         }
     }
 
+    // RMA mode: one window per buffer over the whole local block; the
+    // sweep's parity picks the window (like the persistent sets). One
+    // fence before the loop opens the first exposure epoch on both.
+    let mut wins: Vec<A::Win> = Vec::new();
+    if p.mode == HaloMode::Rma {
+        for buf in [&mut grid, &mut next] {
+            let mut win = A::win_null();
+            A::win_create(
+                buf.as_mut_ptr() as *mut u8,
+                (w * h * std::mem::size_of::<f64>()) as crate::abi::types::Aint,
+                std::mem::size_of::<f64>() as i32,
+                A::info_null(),
+                world,
+                &mut win,
+            );
+            A::win_fence(0, win);
+            wins.push(win);
+        }
+    }
+
     for it in 0..p.iters {
-        if p.persistent {
-            // Start the set bound to whichever buffer is "grid" this
-            // sweep, then wait all four halo transfers.
-            let set = &mut req_sets[it % 2];
-            A::startall(set);
-            let mut sts = vec![A::status_empty(); 4];
-            A::waitall(set, &mut sts);
-        } else {
-            // Exchange: send my first real row up / receive ghost from
-            // above, then send last real row down / receive ghost from
-            // below.
-            let mut st = A::status_empty();
-            let first_real = idx(1, 0);
-            let last_real = idx(my_rows, 0);
-            let ghost_top = idx(0, 0);
-            let ghost_bot = idx(my_rows + 1, 0);
-            A::sendrecv(
-                grid[first_real..].as_ptr() as *const u8,
-                w as i32,
-                dt,
-                up,
-                1,
-                grid[ghost_bot..].as_mut_ptr() as *mut u8,
-                w as i32,
-                dt,
-                down,
-                1,
-                world,
-                &mut st,
-            );
-            A::sendrecv(
-                grid[last_real..].as_ptr() as *const u8,
-                w as i32,
-                dt,
-                down,
-                2,
-                grid[ghost_top..].as_mut_ptr() as *mut u8,
-                w as i32,
-                dt,
-                up,
-                2,
-                world,
-                &mut st,
-            );
+        match p.mode {
+            HaloMode::Persistent => {
+                // Start the set bound to whichever buffer is "grid" this
+                // sweep, then wait all four halo transfers.
+                let set = &mut req_sets[it % 2];
+                A::startall(set);
+                let mut sts = vec![A::status_empty(); 4];
+                A::waitall(set, &mut sts);
+            }
+            HaloMode::Rma => {
+                // Put my boundary rows straight into the neighbors'
+                // ghost rows of the same-parity buffer; the fence
+                // completes every put in the exposure epoch. The up
+                // neighbor is never the last rank, so its ghost-bottom
+                // row sits at (rows_per + 1) * w in displacement units.
+                let win = wins[it % 2];
+                let first_real = idx(1, 0);
+                let last_real = idx(my_rows, 0);
+                A::put(
+                    grid[first_real..].as_ptr() as *const u8,
+                    w as i32,
+                    dt,
+                    up,
+                    ((rows_per + 1) * w) as crate::abi::types::Aint,
+                    w as i32,
+                    dt,
+                    win,
+                );
+                A::put(
+                    grid[last_real..].as_ptr() as *const u8,
+                    w as i32,
+                    dt,
+                    down,
+                    0,
+                    w as i32,
+                    dt,
+                    win,
+                );
+                A::win_fence(0, win);
+            }
+            HaloMode::Sendrecv => {
+                // Exchange: send my first real row up / receive ghost
+                // from above, then send last real row down / receive
+                // ghost from below.
+                let mut st = A::status_empty();
+                let first_real = idx(1, 0);
+                let last_real = idx(my_rows, 0);
+                let ghost_top = idx(0, 0);
+                let ghost_bot = idx(my_rows + 1, 0);
+                A::sendrecv(
+                    grid[first_real..].as_ptr() as *const u8,
+                    w as i32,
+                    dt,
+                    up,
+                    1,
+                    grid[ghost_bot..].as_mut_ptr() as *mut u8,
+                    w as i32,
+                    dt,
+                    down,
+                    1,
+                    world,
+                    &mut st,
+                );
+                A::sendrecv(
+                    grid[last_real..].as_ptr() as *const u8,
+                    w as i32,
+                    dt,
+                    down,
+                    2,
+                    grid[ghost_top..].as_mut_ptr() as *mut u8,
+                    w as i32,
+                    dt,
+                    up,
+                    2,
+                    world,
+                    &mut st,
+                );
+            }
         }
 
         // 5-point stencil on interior points (global boundary rows are
@@ -165,6 +255,12 @@ pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
         for r in set.iter_mut() {
             A::request_free(r);
         }
+    }
+
+    // RMA windows: close the open fence epoch, then free collectively.
+    for win in wins.iter_mut() {
+        A::win_fence(A::mode_nosucceed(), *win);
+        A::win_free(win);
     }
 
     // Residual: sum of interior values (a cheap convergence proxy).

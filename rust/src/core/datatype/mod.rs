@@ -468,6 +468,101 @@ pub fn type_dup(child: DtId) -> RC<DtId> {
     })
 }
 
+/// Flatten `count` items of `dt` into absolute `(byte offset, length)`
+/// runs — the cached pack plan repeated at the type's extent stride.
+/// This is how RMA describes a *target* layout on the wire: the origin
+/// flattens its (origin-side) description of the target datatype and the
+/// target applies plain byte runs, never needing the origin's handle.
+/// Errors with `MPI_ERR_TYPE` for typemaps too irregular to plan
+/// (beyond [`PLAN_MAX_SEGMENTS`] runs).
+pub fn flatten(dt: DtId, count: usize) -> RC<Vec<(isize, usize)>> {
+    get_obj(dt, |o| {
+        let plan = o.plan.as_ref().ok_or(err!(MPI_ERR_TYPE))?;
+        let mut out = Vec::with_capacity(plan.len() * count);
+        for i in 0..count {
+            let base = o.extent * i as isize;
+            for &(off, len) in plan {
+                // Re-merge runs that become adjacent across items.
+                if let Some((loff, llen)) = out.last_mut() {
+                    if *loff + *llen as isize == base + off {
+                        *llen += len;
+                        continue;
+                    }
+                }
+                out.push((base + off, len));
+            }
+        }
+        Ok(out)
+    })?
+}
+
+/// Sizes (bytes) of the *basic elements* of one item of `dt`, in typemap
+/// order — what `MPI_Get_elements` counts. Pair types (`MPI_FLOAT_INT`,
+/// …) contribute their two components separately.
+pub fn leaf_sizes(dt: DtId) -> RC<Vec<usize>> {
+    enum Step {
+        Leaf(Vec<usize>),
+        Repeat(DtId, usize),
+        Blocks(Vec<(usize, DtId)>),
+    }
+    let step = get_obj(dt, |o| match &o.kind {
+        TypeKind::Builtin { abi_dt } => Step::Leaf(builtin_leaves(*abi_dt, o.size)),
+        TypeKind::Contiguous { count, child } => Step::Repeat(*child, *count),
+        TypeKind::Vector { count, blocklen, child, .. } => {
+            Step::Repeat(*child, count * blocklen)
+        }
+        TypeKind::Indexed { blocks, child } => {
+            Step::Repeat(*child, blocks.iter().map(|&(len, _)| len).sum())
+        }
+        TypeKind::Struct { blocks } => {
+            Step::Blocks(blocks.iter().map(|&(len, _, t)| (len, t)).collect())
+        }
+        TypeKind::Resized { child } | TypeKind::Dup { child } => Step::Repeat(*child, 1),
+    })?;
+    match step {
+        Step::Leaf(v) => Ok(v),
+        Step::Repeat(child, repeat) => {
+            let inner = leaf_sizes(child)?;
+            let mut out = Vec::with_capacity(inner.len() * repeat);
+            for _ in 0..repeat {
+                out.extend_from_slice(&inner);
+            }
+            Ok(out)
+        }
+        Step::Blocks(blocks) => {
+            let mut out = Vec::new();
+            for (len, t) in blocks {
+                let inner = leaf_sizes(t)?;
+                for _ in 0..len {
+                    out.extend_from_slice(&inner);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Basic-element decomposition of a builtin: every MINLOC/MAXLOC pair
+/// type splits into its two components (including the ones
+/// [`scalar_kind`] lumps into `Bytes`); every other builtin is a single
+/// element of its own size.
+fn builtin_leaves(abi_dt: usize, size: usize) -> Vec<usize> {
+    match abi_dt {
+        adt::MPI_LONG_INT => vec![size - 4, 4], // (long, int); long is platform-wide
+        adt::MPI_SHORT_INT => vec![2, 4],
+        adt::MPI_LONG_DOUBLE_INT => vec![size - 4, 4],
+        adt::MPI_2REAL => vec![4, 4],
+        adt::MPI_2DOUBLE_PRECISION => vec![8, 8],
+        adt::MPI_2INTEGER => vec![4, 4],
+        _ => match scalar_kind(abi_dt) {
+            ScalarKind::FloatInt => vec![4, 4],
+            ScalarKind::DoubleInt => vec![8, 4],
+            ScalarKind::IntInt => vec![4, 4],
+            _ => vec![size],
+        },
+    }
+}
+
 /// Leaf builtin of a (possibly nested) datatype, if it reduces to a single
 /// uniform builtin — used by the reduction-op engine.
 pub fn leaf_builtin(dt: DtId) -> RC<Option<usize>> {

@@ -659,6 +659,59 @@ pub fn testany(rids: &[ReqId]) -> RC<TestAnyOutcome> {
     })
 }
 
+/// `MPI_Waitsome`: block until at least one *active* request completes,
+/// then return every request complete at that moment. `None` = the list
+/// has no active request (all null at the ABI, or inactive persistent):
+/// the ABI reports `outcount = MPI_UNDEFINED` (MPI 3.0 §3.7.5).
+pub fn waitsome(rids: &[ReqId]) -> RC<Option<Vec<(usize, StatusCore)>>> {
+    with_ctx(|ctx| loop {
+        progress(ctx);
+        let mut any_active = false;
+        let mut done = Vec::new();
+        for (i, &rid) in rids.iter().enumerate() {
+            if super::request::is_inactive(ctx, rid)? {
+                continue;
+            }
+            any_active = true;
+            if let Some(s) = super::request::finish_if_done(ctx, rid)? {
+                super::request::retire(ctx, rid);
+                done.push((i, s));
+            }
+        }
+        if !any_active {
+            return Ok(None);
+        }
+        if !done.is_empty() {
+            return Ok(Some(done));
+        }
+        std::thread::yield_now();
+    })
+}
+
+/// `MPI_Testsome`: like [`waitsome`] without blocking — `Some(vec)` may
+/// be empty when active requests exist but none has completed.
+pub fn testsome(rids: &[ReqId]) -> RC<Option<Vec<(usize, StatusCore)>>> {
+    with_ctx(|ctx| {
+        progress(ctx);
+        let mut any_active = false;
+        let mut done = Vec::new();
+        for (i, &rid) in rids.iter().enumerate() {
+            if super::request::is_inactive(ctx, rid)? {
+                continue;
+            }
+            any_active = true;
+            if let Some(s) = super::request::finish_if_done(ctx, rid)? {
+                super::request::retire(ctx, rid);
+                done.push((i, s));
+            }
+        }
+        if !any_active {
+            return Ok(None);
+        }
+        Ok(Some(done))
+    })
+}
+
 /// `MPI_Get_count`.
 pub fn get_count(status: &StatusCore, dt: DtId) -> RC<i32> {
     let size = super::datatype::type_size(dt)?;
@@ -669,6 +722,33 @@ pub fn get_count(status: &StatusCore, dt: DtId) -> RC<i32> {
         return Ok(MPI_UNDEFINED);
     }
     Ok((status.count_bytes / size as u64) as i32)
+}
+
+/// `MPI_Get_elements`: the number of *basic* elements received — unlike
+/// [`get_count`] it resolves partial items of a derived datatype down to
+/// their leaves (pair types count as two elements). `MPI_UNDEFINED` only
+/// when the byte count splits a basic element.
+pub fn get_elements(status: &StatusCore, dt: DtId) -> RC<i32> {
+    let leaves = super::datatype::leaf_sizes(dt)?;
+    let item_size: usize = leaves.iter().sum();
+    let bytes = status.count_bytes;
+    if item_size == 0 || leaves.is_empty() {
+        return Ok(0);
+    }
+    let full_items = bytes / item_size as u64;
+    let mut elems = full_items * leaves.len() as u64;
+    let mut rem = (bytes % item_size as u64) as usize;
+    for &l in &leaves {
+        if rem == 0 {
+            break;
+        }
+        if rem < l {
+            return Ok(MPI_UNDEFINED); // a basic element was split
+        }
+        rem -= l;
+        elems += 1;
+    }
+    Ok(elems as i32)
 }
 
 // ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ pub mod group;
 pub mod info;
 pub mod op;
 pub mod request;
+pub mod rma;
 pub mod slab;
 pub mod transport;
 pub mod world;
@@ -108,6 +109,10 @@ engine_id!(
 engine_id!(
     /// Info-object id.
     InfoId
+);
+engine_id!(
+    /// RMA window id.
+    WinId
 );
 
 /// Pre-reserved ids for predefined objects: every rank's tables are

@@ -232,7 +232,8 @@ pub(crate) fn repost_recv(
 }
 
 /// One progress cycle: flush deferred sends, drain the fabric, match,
-/// then advance every in-flight collective schedule.
+/// service one-sided traffic, then advance every in-flight collective
+/// schedule.
 pub(crate) fn progress(ctx: &RankCtx) {
     if let Some(code) = ctx.world.aborted() {
         std::panic::panic_any(super::world::AbortUnwind(code));
@@ -240,6 +241,7 @@ pub(crate) fn progress(ctx: &RankCtx) {
     flush_pending_sends(ctx);
     drain_fabric(ctx);
     match_posted(ctx);
+    super::rma::progress_rma(ctx);
     super::collectives::sched::progress_scheds(ctx);
 }
 

@@ -1,0 +1,1111 @@
+//! One-sided communication (RMA): windows, epochs, and the Put/Get/
+//! Accumulate data path.
+//!
+//! A window exposes a region of one rank's memory to its peers. Because
+//! our "processes" are threads, we deliberately do **not** write remote
+//! memory directly: every one-sided operation travels the transport
+//! fabric as an *active message* on the window's dedicated context
+//! planes, and is applied **by the target's own progress engine** — the
+//! same single-threaded progress model the pt2pt and collective paths
+//! use, and the reason no window memory is ever touched cross-thread.
+//!
+//! # Wire protocol
+//!
+//! Each window owns two context planes (allocated like a communicator's
+//! pair, agreed collectively at creation):
+//!
+//! * **ops plane** (origin → target): `PUT`, `GET`, `ACC` requests plus
+//!   passive-target `LOCKREQ`/`UNLOCK` control;
+//! * **ctrl plane** (target → origin): `ACK` (op applied, with an error
+//!   class), `GETREPLY` (requested bytes), `LOCKGRANT`, and the fence
+//!   barrier rounds.
+//!
+//! Target layouts cross the wire as flattened `(offset, len)` byte runs
+//! — the origin flattens its description of the target datatype via the
+//! cached pack plans ([`crate::core::datatype::flatten`]), so the target
+//! applies plain byte runs and never needs the origin's handles. Origin
+//! data is packed with the same plans that serve sends.
+//!
+//! # The epoch state machine
+//!
+//! ```text
+//!             MPI_Win_fence (no NOSUCCEED)
+//!        ┌────────────────────────────────────┐
+//!        ▼                                    │
+//!      Fence ── MPI_Win_fence(NOSUCCEED) ──► None ◄──────────┐
+//!                                             │              │
+//!                                             │ MPI_Win_lock │ MPI_Win_unlock
+//!                                             ▼              │
+//!                                        Lock{target} ───────┘
+//! ```
+//!
+//! Put/Get/Accumulate are erroneous (`MPI_ERR_RMA_SYNC`) outside an
+//! epoch, and in a passive epoch only toward the locked target. An op
+//! counts as *pending* until the target's ack (or get reply) returns;
+//! fence, unlock, and flush drain the pending count — which is exactly
+//! the "implementation-internal state leaking into the interface" that
+//! makes RMA the sharpest ABI stress test.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::comm::comm_snapshot;
+use super::op::BUILTIN_ORDER;
+use super::request::{enqueue_send, progress};
+use super::transport::{Envelope, MsgKind, Payload};
+use super::world::{with_ctx, RankCtx};
+use super::{err, CommId, DtId, MpiError, OpId, WinId, RC};
+use crate::abi::constants as k;
+use crate::abi::errors as ec;
+
+// --- Message tags on the window planes --------------------------------------
+
+/// `Put` request (ops plane).
+const TAG_PUT: i32 = 1;
+/// `Get` request (ops plane); envelope `seq` carries the reply id.
+const TAG_GET: i32 = 2;
+/// `Accumulate` request (ops plane).
+const TAG_ACC: i32 = 3;
+/// Passive-target lock request (ops plane); payload is the lock type.
+const TAG_LOCKREQ: i32 = 4;
+/// Passive-target unlock (ops plane).
+const TAG_UNLOCK: i32 = 5;
+/// Op-applied ack (ctrl plane); payload is an error class (0 = ok).
+const TAG_ACK: i32 = 10;
+/// Get reply (ctrl plane); `seq` echoes the reply id.
+const TAG_GETREPLY: i32 = 11;
+/// Lock granted (ctrl plane).
+const TAG_LOCKGRANT: i32 = 12;
+/// Fence/free barrier rounds live above this tag; everything below is
+/// routed to the RMA message handlers by the progress engine.
+const FENCE_TAG_BASE: i32 = 1 << 24;
+
+/// Origin-side access-epoch state. See the module docs for the diagram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Epoch {
+    /// No epoch open: one-sided ops are erroneous.
+    None,
+    /// Fence epoch (between two `MPI_Win_fence` calls).
+    Fence,
+    /// Passive-target epoch to one locked target (window-group rank).
+    Lock {
+        /// The locked target's rank in the window group.
+        target: i32,
+    },
+}
+
+/// Target-side passive lock state of this rank's window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockState {
+    /// Nobody holds the lock.
+    Unlocked,
+    /// `n` shared holders.
+    Shared(u32),
+    /// One exclusive holder (world rank).
+    Exclusive(u32),
+}
+
+/// Where an outstanding `Get`'s bytes land when the reply arrives.
+#[derive(Clone, Copy, Debug)]
+pub struct GetDest {
+    /// Origin buffer address.
+    pub buf: usize,
+    /// Origin element count.
+    pub count: usize,
+    /// Origin datatype.
+    pub dt: DtId,
+}
+
+/// One RMA window: the exposed memory, the group, the two context
+/// planes, and both sides of the synchronization state.
+pub struct WinObj {
+    /// Base address of the exposed local region.
+    pub base: usize,
+    /// Size of the exposed region in bytes.
+    pub size: usize,
+    /// Local displacement unit (bytes per `target_disp` step).
+    pub disp_unit: usize,
+    /// Member world ranks, in window-group rank order.
+    pub members: Vec<usize>,
+    /// This rank's rank within the window group.
+    pub my_rank: usize,
+    /// Context plane for origin→target requests.
+    pub ctx_ops: u32,
+    /// Context plane for target→origin replies and fence rounds.
+    pub ctx_ctrl: u32,
+    /// Origin-side epoch state.
+    pub epoch: Epoch,
+    /// Ops issued this epoch not yet acked by their targets.
+    pub pending: u64,
+    /// First error class a target reported for this epoch's ops.
+    pub epoch_err: i32,
+    /// Fence counter (keeps successive fences' barrier tags apart).
+    pub fence_seq: u32,
+    /// Outstanding gets: reply id → local destination.
+    pub gets: HashMap<u64, GetDest>,
+    /// Next get reply id.
+    pub next_get_id: u64,
+    /// Target-side passive lock state.
+    pub lock: LockState,
+    /// Queued lock requests: (origin world rank, canonical lock type).
+    pub lock_queue: VecDeque<(u32, i32)>,
+    /// Origin-side latch: our lock request has been granted.
+    pub lock_granted: bool,
+    /// Backing storage for `MPI_Win_allocate` windows.
+    pub alloc: Option<Vec<u8>>,
+}
+
+/// Snapshot of the target-memory fields (applied without table borrows).
+#[derive(Clone, Copy)]
+struct WinMem {
+    base: usize,
+    size: usize,
+    disp_unit: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Window lifecycle
+// ---------------------------------------------------------------------------
+
+/// `MPI_Win_create`: expose `size` bytes at `base`. Collective over
+/// `comm`; the window's context planes are allocated by comm rank 0 and
+/// broadcast, exactly like a communicator's context pair.
+pub fn win_create(base: usize, size: usize, disp_unit: usize, comm: CommId) -> RC<WinId> {
+    win_create_impl(base, size, disp_unit, comm, None)
+}
+
+/// `MPI_Win_allocate`: like [`win_create`], but the engine owns the
+/// memory. Returns the window and the base address of the allocation.
+pub fn win_allocate(size: usize, disp_unit: usize, comm: CommId) -> RC<(WinId, usize)> {
+    let mem = vec![0u8; size];
+    let base = mem.as_ptr() as usize;
+    let id = win_create_impl(base, size, disp_unit, comm, Some(mem))?;
+    Ok((id, base))
+}
+
+fn win_create_impl(
+    base: usize,
+    size: usize,
+    disp_unit: usize,
+    comm: CommId,
+    alloc: Option<Vec<u8>>,
+) -> RC<WinId> {
+    if disp_unit == 0 {
+        return Err(err!(MPI_ERR_DISP));
+    }
+    let (members, my_rank, _, _) = comm_snapshot(comm)?;
+    // Rank 0 of the comm allocates the (ops, ctrl) plane pair.
+    let mut bytes = [0u8; 8];
+    if my_rank == 0 {
+        let (a, b) = with_ctx(|ctx| Ok(ctx.world.alloc_context_pair()))?;
+        bytes[..4].copy_from_slice(&a.to_le_bytes());
+        bytes[4..].copy_from_slice(&b.to_le_bytes());
+    }
+    super::collectives::bcast_bytes(&mut bytes, 0, comm)?;
+    let ctx_ops = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+    let ctx_ctrl = u32::from_le_bytes(bytes[4..].try_into().unwrap());
+    let id = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let id = t.wins.insert(WinObj {
+            base,
+            size,
+            disp_unit,
+            members: members.clone(),
+            my_rank,
+            ctx_ops,
+            ctx_ctrl,
+            epoch: Epoch::None,
+            pending: 0,
+            epoch_err: 0,
+            fence_seq: 0,
+            gets: HashMap::new(),
+            next_get_id: 0,
+            lock: LockState::Unlocked,
+            lock_queue: VecDeque::new(),
+            lock_granted: false,
+            alloc,
+        });
+        t.win_by_ctx.insert(ctx_ops, id);
+        t.win_by_ctx.insert(ctx_ctrl, id);
+        Ok(WinId(id))
+    })?;
+    // Every rank registers the window before any one-sided traffic can
+    // target it.
+    super::collectives::barrier(comm)?;
+    Ok(id)
+}
+
+/// `MPI_Win_free`. Collective. A passive-target epoch must be closed
+/// (fence epochs are fine — freeing after a final fence is the normal
+/// idiom); outstanding acks are drained, then a barrier over the window
+/// group quiesces the planes before the window vanishes.
+pub fn win_free(win: WinId) -> RC<()> {
+    let (members, my_rank, ctrl, seq) = with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+        if matches!(w.epoch, Epoch::Lock { .. }) {
+            return Err(err!(MPI_ERR_RMA_SYNC));
+        }
+        w.fence_seq = w.fence_seq.wrapping_add(1);
+        Ok((w.members.clone(), w.my_rank, w.ctx_ctrl, w.fence_seq))
+    })?;
+    with_ctx(|ctx| {
+        wait_pending(ctx, win)?;
+        win_barrier(ctx, &members, my_rank, ctrl, seq);
+        let mut t = ctx.tables.borrow_mut();
+        if let Some(w) = t.wins.remove(win.0) {
+            t.win_by_ctx.remove(&w.ctx_ops);
+            t.win_by_ctx.remove(&w.ctx_ctrl);
+        }
+        Ok(())
+    })
+}
+
+/// Window-group size (`MPI_Win_get_group` + `MPI_Group_size` shortcut).
+pub fn win_size(win: WinId) -> RC<usize> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        Ok(t.wins.get(win.0).ok_or(err!(MPI_ERR_WIN))?.members.len())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Synchronization
+// ---------------------------------------------------------------------------
+
+/// `MPI_Win_fence`. Completes every op issued this epoch (waits for the
+/// targets' acks), barriers the window group, and opens the next fence
+/// epoch — unless `assert` carries `MPI_MODE_NOSUCCEED` (canonical
+/// standard-ABI numbering), which closes the epoch instead.
+pub fn win_fence(assert: i32, win: WinId) -> RC<()> {
+    with_ctx(|ctx| {
+        let (members, my_rank, ctrl, seq) = {
+            let mut t = ctx.tables.borrow_mut();
+            let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+            if matches!(w.epoch, Epoch::Lock { .. }) {
+                return Err(err!(MPI_ERR_RMA_SYNC));
+            }
+            w.fence_seq = w.fence_seq.wrapping_add(1);
+            (w.members.clone(), w.my_rank, w.ctx_ctrl, w.fence_seq)
+        };
+        wait_pending(ctx, win)?;
+        win_barrier(ctx, &members, my_rank, ctrl, seq);
+        let mut t = ctx.tables.borrow_mut();
+        let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+        w.epoch = if assert & k::MPI_MODE_NOSUCCEED != 0 { Epoch::None } else { Epoch::Fence };
+        let e = std::mem::replace(&mut w.epoch_err, 0);
+        if e != 0 {
+            return Err(MpiError::new(e));
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_Win_lock` (canonical lock types: `MPI_LOCK_EXCLUSIVE`/`_SHARED`
+/// of the standard ABI). Blocks until the target grants the lock.
+pub fn win_lock(lock_type: i32, rank: i32, _assert: i32, win: WinId) -> RC<()> {
+    if lock_type != k::MPI_LOCK_EXCLUSIVE && lock_type != k::MPI_LOCK_SHARED {
+        return Err(err!(MPI_ERR_LOCKTYPE));
+    }
+    with_ctx(|ctx| {
+        let (target_world, ctx_ops) = {
+            let mut t = ctx.tables.borrow_mut();
+            let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+            if w.epoch != Epoch::None {
+                return Err(err!(MPI_ERR_RMA_SYNC));
+            }
+            if rank < 0 || rank as usize >= w.members.len() {
+                return Err(err!(MPI_ERR_RANK));
+            }
+            w.lock_granted = false;
+            (w.members[rank as usize], w.ctx_ops)
+        };
+        if target_world == ctx.rank {
+            // Local target: take the lock through the same state machine,
+            // spinning so a remote holder's unlock (processed by our own
+            // progress engine) can release it.
+            loop {
+                {
+                    let mut t = ctx.tables.borrow_mut();
+                    let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+                    if w.lock_queue.is_empty()
+                        && try_take_lock(&mut w.lock, ctx.rank as u32, lock_type)
+                    {
+                        w.epoch = Epoch::Lock { target: rank };
+                        return Ok(());
+                    }
+                }
+                progress(ctx);
+                std::thread::yield_now();
+            }
+        }
+        let env = Envelope {
+            src: ctx.rank as u32,
+            context: ctx_ops,
+            tag: TAG_LOCKREQ,
+            kind: MsgKind::Eager,
+            seq: 0,
+            payload: Payload::from_slice(&lock_type.to_le_bytes()),
+        };
+        enqueue_send(ctx, target_world, env);
+        loop {
+            progress(ctx);
+            {
+                let mut t = ctx.tables.borrow_mut();
+                let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+                if w.lock_granted {
+                    w.lock_granted = false;
+                    w.epoch = Epoch::Lock { target: rank };
+                    return Ok(());
+                }
+            }
+            std::thread::yield_now();
+        }
+    })
+}
+
+/// `MPI_Win_unlock`: completes every op of the passive epoch (origin
+/// *and* target side — ops are acked only after application), releases
+/// the target's lock, and closes the epoch.
+pub fn win_unlock(rank: i32, win: WinId) -> RC<()> {
+    with_ctx(|ctx| {
+        let (target_world, ctx_ops) = {
+            let t = ctx.tables.borrow();
+            let w = t.wins.get(win.0).ok_or(err!(MPI_ERR_WIN))?;
+            if w.epoch != (Epoch::Lock { target: rank }) {
+                return Err(err!(MPI_ERR_RMA_SYNC));
+            }
+            (w.members[rank as usize], w.ctx_ops)
+        };
+        wait_pending(ctx, win)?;
+        if target_world == ctx.rank {
+            let grants = {
+                let mut t = ctx.tables.borrow_mut();
+                let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+                release_lock(w)
+            };
+            for (dst, ctrl) in grants {
+                send_ctrl(ctx, dst, ctrl, TAG_LOCKGRANT, 0, Payload::empty());
+            }
+        } else {
+            let env = Envelope {
+                src: ctx.rank as u32,
+                context: ctx_ops,
+                tag: TAG_UNLOCK,
+                kind: MsgKind::Eager,
+                seq: 0,
+                payload: Payload::empty(),
+            };
+            enqueue_send(ctx, target_world, env);
+        }
+        let mut t = ctx.tables.borrow_mut();
+        let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+        w.epoch = Epoch::None;
+        let e = std::mem::replace(&mut w.epoch_err, 0);
+        if e != 0 {
+            return Err(MpiError::new(e));
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_Win_flush`: completes all outstanding ops of the current passive
+/// epoch at origin and target, without releasing the lock.
+pub fn win_flush(_rank: i32, win: WinId) -> RC<()> {
+    with_ctx(|ctx| {
+        {
+            let t = ctx.tables.borrow();
+            let w = t.wins.get(win.0).ok_or(err!(MPI_ERR_WIN))?;
+            if !matches!(w.epoch, Epoch::Lock { .. }) {
+                return Err(err!(MPI_ERR_RMA_SYNC));
+            }
+        }
+        wait_pending(ctx, win)?;
+        let mut t = ctx.tables.borrow_mut();
+        let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+        let e = std::mem::replace(&mut w.epoch_err, 0);
+        if e != 0 {
+            return Err(MpiError::new(e));
+        }
+        Ok(())
+    })
+}
+
+/// Spin the progress engine until every op this origin issued on `win`
+/// has been acked (the target applied it).
+fn wait_pending(ctx: &RankCtx, win: WinId) -> RC<()> {
+    loop {
+        progress(ctx);
+        {
+            let t = ctx.tables.borrow();
+            let w = t.wins.get(win.0).ok_or(err!(MPI_ERR_WIN))?;
+            if w.pending == 0 {
+                return Ok(());
+            }
+        }
+        std::thread::yield_now();
+    }
+}
+
+/// Dissemination barrier over the window group on the ctrl plane.
+/// `seq` (the fence counter) keeps successive barriers' tags distinct.
+fn win_barrier(ctx: &RankCtx, members: &[usize], my_rank: usize, ctx_ctrl: u32, seq: u32) {
+    let n = members.len();
+    if n <= 1 {
+        return;
+    }
+    let mut k = 1usize;
+    let mut round: i32 = 0;
+    while k < n {
+        let to_world = members[(my_rank + k) % n];
+        let from_world = members[(my_rank + n - k) % n] as u32;
+        let tag = FENCE_TAG_BASE + ((seq & 0xFFFF) as i32) * 64 + round;
+        let env = Envelope {
+            src: ctx.rank as u32,
+            context: ctx_ctrl,
+            tag,
+            kind: MsgKind::Eager,
+            seq: 0,
+            payload: Payload::empty(),
+        };
+        enqueue_send(ctx, to_world, env);
+        loop {
+            progress(ctx);
+            {
+                let mut st = ctx.state.borrow_mut();
+                if let Some(i) = st
+                    .unexpected
+                    .iter()
+                    .position(|e| e.context == ctx_ctrl && e.tag == tag && e.src == from_world)
+                {
+                    st.unexpected.remove(i);
+                    break;
+                }
+            }
+            std::thread::yield_now();
+        }
+        k <<= 1;
+        round += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data path: Put / Get / Accumulate
+// ---------------------------------------------------------------------------
+
+struct Route {
+    target_world: usize,
+    ctx_ops: u32,
+}
+
+/// Validate the epoch + target rank and resolve the wire route.
+fn route(ctx: &RankCtx, win: WinId, target_rank: i32) -> RC<Route> {
+    let t = ctx.tables.borrow();
+    let w = t.wins.get(win.0).ok_or(err!(MPI_ERR_WIN))?;
+    match w.epoch {
+        Epoch::None => return Err(err!(MPI_ERR_RMA_SYNC)),
+        Epoch::Lock { target } if target != target_rank => {
+            return Err(err!(MPI_ERR_RMA_SYNC))
+        }
+        _ => {}
+    }
+    if target_rank < 0 || target_rank as usize >= w.members.len() {
+        return Err(err!(MPI_ERR_RANK));
+    }
+    Ok(Route { target_world: w.members[target_rank as usize], ctx_ops: w.ctx_ops })
+}
+
+fn pack_origin(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Vec<u8>> {
+    let t = ctx.tables.borrow();
+    let mut v = Vec::new();
+    super::datatype::pack::pack(&t.dtypes, buf, count, dt, &mut v)?;
+    Ok(v)
+}
+
+fn snapshot_mem(ctx: &RankCtx, win: WinId) -> RC<WinMem> {
+    let t = ctx.tables.borrow();
+    let w = t.wins.get(win.0).ok_or(err!(MPI_ERR_WIN))?;
+    Ok(WinMem { base: w.base, size: w.size, disp_unit: w.disp_unit })
+}
+
+/// Register one in-flight op and ship its request to the target.
+fn send_op(ctx: &RankCtx, win: WinId, r: &Route, tag: i32, seq: u64, payload: Payload) -> RC<()> {
+    {
+        let mut t = ctx.tables.borrow_mut();
+        let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+        w.pending += 1;
+    }
+    let env = Envelope {
+        src: ctx.rank as u32,
+        context: r.ctx_ops,
+        tag,
+        kind: MsgKind::Eager,
+        seq,
+        payload,
+    };
+    enqueue_send(ctx, r.target_world, env);
+    Ok(())
+}
+
+/// `MPI_Put`. The origin packs its data with the cached pack plans and
+/// flattens the target datatype into byte runs; the target applies runs.
+#[allow(clippy::too_many_arguments)]
+pub fn put(
+    origin: *const u8,
+    origin_count: usize,
+    origin_dt: DtId,
+    target_rank: i32,
+    target_disp: isize,
+    target_count: usize,
+    target_dt: DtId,
+    win: WinId,
+) -> RC<()> {
+    with_ctx(|ctx| {
+        let r = route(ctx, win, target_rank)?;
+        if target_disp < 0 {
+            return Err(err!(MPI_ERR_DISP));
+        }
+        let data = pack_origin(ctx, origin, origin_count, origin_dt)?;
+        let segs = super::datatype::flatten(target_dt, target_count)?;
+        let need: usize = segs.iter().map(|&(_, l)| l).sum();
+        if need != data.len() {
+            return Err(err!(MPI_ERR_SIZE));
+        }
+        if r.target_world == ctx.rank {
+            let mem = snapshot_mem(ctx, win)?;
+            let e = apply_put(&mem, target_disp, &segs, &data);
+            if e != 0 {
+                return Err(MpiError::new(e));
+            }
+            return Ok(());
+        }
+        send_op(ctx, win, &r, TAG_PUT, 0, encode_put(target_disp, &segs, &data))
+    })
+}
+
+/// `MPI_Get`. The reply is unpacked into the origin buffer when it
+/// arrives; the buffer is guaranteed valid after the closing fence,
+/// flush, or unlock.
+#[allow(clippy::too_many_arguments)]
+pub fn get(
+    origin: *mut u8,
+    origin_count: usize,
+    origin_dt: DtId,
+    target_rank: i32,
+    target_disp: isize,
+    target_count: usize,
+    target_dt: DtId,
+    win: WinId,
+) -> RC<()> {
+    with_ctx(|ctx| {
+        let r = route(ctx, win, target_rank)?;
+        if target_disp < 0 {
+            return Err(err!(MPI_ERR_DISP));
+        }
+        let segs = super::datatype::flatten(target_dt, target_count)?;
+        let need: usize = segs.iter().map(|&(_, l)| l).sum();
+        let osize = super::datatype::type_size(origin_dt)? * origin_count;
+        if need != osize {
+            return Err(err!(MPI_ERR_SIZE));
+        }
+        if r.target_world == ctx.rank {
+            let mem = snapshot_mem(ctx, win)?;
+            let data = read_get(&mem, target_disp, &segs).map_err(MpiError::new)?;
+            let t = ctx.tables.borrow();
+            super::datatype::pack::unpack(&t.dtypes, &data, origin, origin_count, origin_dt)?;
+            return Ok(());
+        }
+        let reply_id = {
+            let mut t = ctx.tables.borrow_mut();
+            let w = t.wins.get_mut(win.0).ok_or(err!(MPI_ERR_WIN))?;
+            w.next_get_id += 1;
+            let id = w.next_get_id;
+            w.gets.insert(
+                id,
+                GetDest { buf: origin as usize, count: origin_count, dt: origin_dt },
+            );
+            id
+        };
+        send_op(ctx, win, &r, TAG_GET, reply_id, encode_get(target_disp, &segs))
+    })
+}
+
+/// `MPI_Accumulate` with a predefined op (user ops are not legal for
+/// accumulate, per MPI). Origin and target datatypes must reduce to the
+/// same single basic type; the target combines element-wise.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate(
+    origin: *const u8,
+    origin_count: usize,
+    origin_dt: DtId,
+    target_rank: i32,
+    target_disp: isize,
+    target_count: usize,
+    target_dt: DtId,
+    op: OpId,
+    win: WinId,
+) -> RC<()> {
+    with_ctx(|ctx| {
+        let r = route(ctx, win, target_rank)?;
+        if target_disp < 0 {
+            return Err(err!(MPI_ERR_DISP));
+        }
+        if op.0 == 0 || op.0 >= super::reserved::NUM_BUILTIN_OPS {
+            return Err(err!(MPI_ERR_OP));
+        }
+        let leaf_o =
+            super::datatype::leaf_builtin(origin_dt)?.ok_or(err!(MPI_ERR_TYPE))?;
+        let leaf_t =
+            super::datatype::leaf_builtin(target_dt)?.ok_or(err!(MPI_ERR_TYPE))?;
+        if leaf_o != leaf_t {
+            return Err(err!(MPI_ERR_TYPE));
+        }
+        let data = pack_origin(ctx, origin, origin_count, origin_dt)?;
+        let segs = super::datatype::flatten(target_dt, target_count)?;
+        let need: usize = segs.iter().map(|&(_, l)| l).sum();
+        if need != data.len() {
+            return Err(err!(MPI_ERR_SIZE));
+        }
+        if r.target_world == ctx.rank {
+            let mem = snapshot_mem(ctx, win)?;
+            let e = apply_acc(&mem, op.0, leaf_t, target_disp, &segs, &data);
+            if e != 0 {
+                return Err(MpiError::new(e));
+            }
+            return Ok(());
+        }
+        send_op(
+            ctx,
+            win,
+            &r,
+            TAG_ACC,
+            0,
+            encode_acc(op.0, leaf_t, target_disp, &segs, &data),
+        )
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding (little-endian; both ends are this engine)
+// ---------------------------------------------------------------------------
+
+fn put_i32(v: &mut Vec<u8>, x: i32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_i64(v: &mut Vec<u8>, x: i64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a request payload.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.b.get(self.pos..self.pos + n)?;
+        self.pos += n;
+        Some(s)
+    }
+    fn i32(&mut self) -> Option<i32> {
+        Some(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Option<i64> {
+        Some(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn rest(self) -> &'a [u8] {
+        &self.b[self.pos..]
+    }
+}
+
+fn put_segs(v: &mut Vec<u8>, segs: &[(isize, usize)]) {
+    put_u32(v, segs.len() as u32);
+    for &(off, len) in segs {
+        put_i64(v, off as i64);
+        put_u64(v, len as u64);
+    }
+}
+
+fn read_segs(rd: &mut Rd<'_>) -> Option<Vec<(isize, usize)>> {
+    let n = rd.u32()? as usize;
+    // A malformed count can't make us allocate unboundedly: each segment
+    // costs 16 payload bytes, so the payload length bounds n.
+    if n > rd.b.len() / 16 + 1 {
+        return None;
+    }
+    let mut segs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let off = rd.i64()? as isize;
+        let len = rd.u64()? as usize;
+        segs.push((off, len));
+    }
+    Some(segs)
+}
+
+fn encode_put(disp: isize, segs: &[(isize, usize)], data: &[u8]) -> Payload {
+    let mut v = Vec::with_capacity(12 + segs.len() * 16 + data.len());
+    put_i64(&mut v, disp as i64);
+    put_segs(&mut v, segs);
+    v.extend_from_slice(data);
+    Payload::from_vec(v)
+}
+
+fn decode_put(b: &[u8]) -> Option<(isize, Vec<(isize, usize)>, &[u8])> {
+    let mut rd = Rd::new(b);
+    let disp = rd.i64()? as isize;
+    let segs = read_segs(&mut rd)?;
+    Some((disp, segs, rd.rest()))
+}
+
+fn encode_get(disp: isize, segs: &[(isize, usize)]) -> Payload {
+    let mut v = Vec::with_capacity(12 + segs.len() * 16);
+    put_i64(&mut v, disp as i64);
+    put_segs(&mut v, segs);
+    Payload::from_vec(v)
+}
+
+fn decode_get(b: &[u8]) -> Option<(isize, Vec<(isize, usize)>)> {
+    let mut rd = Rd::new(b);
+    let disp = rd.i64()? as isize;
+    let segs = read_segs(&mut rd)?;
+    Some((disp, segs))
+}
+
+fn encode_acc(
+    op_idx: u32,
+    abi_dt: usize,
+    disp: isize,
+    segs: &[(isize, usize)],
+    data: &[u8],
+) -> Payload {
+    let mut v = Vec::with_capacity(24 + segs.len() * 16 + data.len());
+    put_u32(&mut v, op_idx);
+    put_u64(&mut v, abi_dt as u64);
+    put_i64(&mut v, disp as i64);
+    put_segs(&mut v, segs);
+    v.extend_from_slice(data);
+    Payload::from_vec(v)
+}
+
+#[allow(clippy::type_complexity)]
+fn decode_acc(b: &[u8]) -> Option<(u32, usize, isize, Vec<(isize, usize)>, &[u8])> {
+    let mut rd = Rd::new(b);
+    let op_idx = rd.u32()?;
+    let abi_dt = rd.u64()? as usize;
+    let disp = rd.i64()? as isize;
+    let segs = read_segs(&mut rd)?;
+    Some((op_idx, abi_dt, disp, segs, rd.rest()))
+}
+
+// ---------------------------------------------------------------------------
+// Target-side application (always on the window owner's own thread)
+// ---------------------------------------------------------------------------
+
+fn seg_range(mem: &WinMem, disp: isize, off: isize, len: usize) -> Result<usize, i32> {
+    let o = disp
+        .checked_mul(mem.disp_unit as isize)
+        .and_then(|d| d.checked_add(off))
+        .ok_or(ec::MPI_ERR_RMA_RANGE)?;
+    if o < 0 || (o as usize).saturating_add(len) > mem.size {
+        return Err(ec::MPI_ERR_RMA_RANGE);
+    }
+    Ok(mem.base + o as usize)
+}
+
+fn apply_put(mem: &WinMem, disp: isize, segs: &[(isize, usize)], data: &[u8]) -> i32 {
+    let mut pos = 0usize;
+    for &(off, len) in segs {
+        if pos + len > data.len() {
+            return ec::MPI_ERR_INTERN;
+        }
+        let dst = match seg_range(mem, disp, off, len) {
+            Ok(a) => a,
+            Err(e) => return e,
+        };
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr().add(pos), dst as *mut u8, len);
+        }
+        pos += len;
+    }
+    0
+}
+
+fn read_get(mem: &WinMem, disp: isize, segs: &[(isize, usize)]) -> Result<Vec<u8>, i32> {
+    let total: usize = segs.iter().map(|&(_, l)| l).sum();
+    let mut out = Vec::with_capacity(total);
+    for &(off, len) in segs {
+        let src = seg_range(mem, disp, off, len)?;
+        out.extend_from_slice(unsafe { std::slice::from_raw_parts(src as *const u8, len) });
+    }
+    Ok(out)
+}
+
+fn apply_acc(
+    mem: &WinMem,
+    op_idx: u32,
+    abi_dt: usize,
+    disp: isize,
+    segs: &[(isize, usize)],
+    data: &[u8],
+) -> i32 {
+    let Some(&b) = BUILTIN_ORDER.get(op_idx as usize) else {
+        return ec::MPI_ERR_OP;
+    };
+    let kind = super::datatype::scalar_kind(abi_dt);
+    let elem = crate::abi::datatypes::platform_size_of(abi_dt).unwrap_or(0);
+    if elem == 0 {
+        return ec::MPI_ERR_TYPE;
+    }
+    let mut pos = 0usize;
+    for &(off, len) in segs {
+        if pos + len > data.len() || len % elem != 0 {
+            return ec::MPI_ERR_INTERN;
+        }
+        let dst = match seg_range(mem, disp, off, len) {
+            Ok(a) => a,
+            Err(e) => return e,
+        };
+        let inout = unsafe { std::slice::from_raw_parts_mut(dst as *mut u8, len) };
+        let inbuf = &data[pos..pos + len];
+        if let Err(e) = super::op::apply_builtin(b, kind, inbuf, inout, len / elem) {
+            return e.class;
+        }
+        pos += len;
+    }
+    0
+}
+
+// ---------------------------------------------------------------------------
+// Passive-target lock state machine (target side)
+// ---------------------------------------------------------------------------
+
+fn try_take_lock(lock: &mut LockState, origin: u32, lock_type: i32) -> bool {
+    match *lock {
+        LockState::Unlocked => {
+            *lock = if lock_type == k::MPI_LOCK_EXCLUSIVE {
+                LockState::Exclusive(origin)
+            } else {
+                LockState::Shared(1)
+            };
+            true
+        }
+        LockState::Shared(n) if lock_type == k::MPI_LOCK_SHARED => {
+            *lock = LockState::Shared(n + 1);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Release one hold on the lock and grant every queued request that now
+/// fits (one exclusive, or a run of shareds). Returns (origin world
+/// rank, ctrl plane) pairs to send `LOCKGRANT`s to.
+fn release_lock(w: &mut WinObj) -> Vec<(usize, u32)> {
+    w.lock = match w.lock {
+        LockState::Shared(n) if n > 1 => LockState::Shared(n - 1),
+        _ => LockState::Unlocked,
+    };
+    let mut grants = Vec::new();
+    while let Some(&(origin, lt)) = w.lock_queue.front() {
+        if try_take_lock(&mut w.lock, origin, lt) {
+            w.lock_queue.pop_front();
+            grants.push((origin as usize, w.ctx_ctrl));
+        } else {
+            break;
+        }
+    }
+    grants
+}
+
+// ---------------------------------------------------------------------------
+// Progress integration
+// ---------------------------------------------------------------------------
+
+fn send_ctrl(ctx: &RankCtx, dst: usize, context: u32, tag: i32, seq: u64, payload: Payload) {
+    let env = Envelope { src: ctx.rank as u32, context, tag, kind: MsgKind::Eager, seq, payload };
+    enqueue_send(ctx, dst, env);
+}
+
+/// One RMA progress cycle: route every fabric arrival on a window plane
+/// to its handler. Called from the engine's progress loop, so any rank
+/// blocked in *any* MPI call services incoming one-sided traffic — that
+/// is what makes passive-target epochs make progress.
+pub(crate) fn progress_rma(ctx: &RankCtx) {
+    loop {
+        let found = {
+            let st = ctx.state.borrow();
+            let t = ctx.tables.borrow();
+            if t.win_by_ctx.is_empty() {
+                return;
+            }
+            st.unexpected.iter().enumerate().find_map(|(i, env)| {
+                if env.tag < FENCE_TAG_BASE {
+                    t.win_by_ctx.get(&env.context).map(|&w| (i, w))
+                } else {
+                    None
+                }
+            })
+        };
+        let Some((i, w)) = found else { return };
+        let env = ctx.state.borrow_mut().unexpected.remove(i).expect("index valid");
+        handle_msg(ctx, WinId(w), env);
+    }
+}
+
+fn handle_msg(ctx: &RankCtx, win: WinId, env: Envelope) {
+    match env.tag {
+        TAG_PUT | TAG_GET | TAG_ACC => handle_request(ctx, win, env),
+        TAG_LOCKREQ => handle_lock_req(ctx, win, env),
+        TAG_UNLOCK => {
+            let grants = {
+                let mut t = ctx.tables.borrow_mut();
+                match t.wins.get_mut(win.0) {
+                    Some(w) => release_lock(w),
+                    None => return,
+                }
+            };
+            for (dst, ctrl) in grants {
+                send_ctrl(ctx, dst, ctrl, TAG_LOCKGRANT, 0, Payload::empty());
+            }
+        }
+        TAG_ACK => {
+            let mut t = ctx.tables.borrow_mut();
+            if let Some(w) = t.wins.get_mut(win.0) {
+                w.pending = w.pending.saturating_sub(1);
+                let e = env.payload.as_slice();
+                let code = if e.len() >= 4 {
+                    i32::from_le_bytes(e[..4].try_into().unwrap())
+                } else {
+                    ec::MPI_ERR_INTERN
+                };
+                if code != 0 && w.epoch_err == 0 {
+                    w.epoch_err = code;
+                }
+            }
+        }
+        TAG_GETREPLY => handle_get_reply(ctx, win, env),
+        TAG_LOCKGRANT => {
+            let mut t = ctx.tables.borrow_mut();
+            if let Some(w) = t.wins.get_mut(win.0) {
+                w.lock_granted = true;
+            }
+        }
+        _ => {} // unknown tag on a window plane: drop
+    }
+}
+
+fn handle_request(ctx: &RankCtx, win: WinId, env: Envelope) {
+    let origin = env.src as usize;
+    let (mem, ctrl) = {
+        let t = ctx.tables.borrow();
+        let Some(w) = t.wins.get(win.0) else { return };
+        (WinMem { base: w.base, size: w.size, disp_unit: w.disp_unit }, w.ctx_ctrl)
+    };
+    let data = env.payload.as_slice();
+    match env.tag {
+        TAG_PUT => {
+            let code = match decode_put(data) {
+                Some((disp, segs, body)) => apply_put(&mem, disp, &segs, body),
+                None => ec::MPI_ERR_INTERN,
+            };
+            send_ctrl(ctx, origin, ctrl, TAG_ACK, 0, Payload::from_slice(&code.to_le_bytes()));
+        }
+        TAG_ACC => {
+            let code = match decode_acc(data) {
+                Some((op_idx, abi_dt, disp, segs, body)) => {
+                    apply_acc(&mem, op_idx, abi_dt, disp, &segs, body)
+                }
+                None => ec::MPI_ERR_INTERN,
+            };
+            send_ctrl(ctx, origin, ctrl, TAG_ACK, 0, Payload::from_slice(&code.to_le_bytes()));
+        }
+        TAG_GET => {
+            let (code, body) = match decode_get(data) {
+                Some((disp, segs)) => match read_get(&mem, disp, &segs) {
+                    Ok(v) => (0, v),
+                    Err(e) => (e, Vec::new()),
+                },
+                None => (ec::MPI_ERR_INTERN, Vec::new()),
+            };
+            let mut p = Vec::with_capacity(4 + body.len());
+            put_i32(&mut p, code);
+            p.extend_from_slice(&body);
+            send_ctrl(ctx, origin, ctrl, TAG_GETREPLY, env.seq, Payload::from_vec(p));
+        }
+        _ => unreachable!("handle_request only sees op tags"),
+    }
+}
+
+fn handle_lock_req(ctx: &RankCtx, win: WinId, env: Envelope) {
+    let p = env.payload.as_slice();
+    let lock_type = if p.len() >= 4 {
+        i32::from_le_bytes(p[..4].try_into().unwrap())
+    } else {
+        k::MPI_LOCK_SHARED
+    };
+    let origin = env.src;
+    let grant = {
+        let mut t = ctx.tables.borrow_mut();
+        let Some(w) = t.wins.get_mut(win.0) else { return };
+        if w.lock_queue.is_empty() && try_take_lock(&mut w.lock, origin, lock_type) {
+            Some((origin as usize, w.ctx_ctrl))
+        } else {
+            w.lock_queue.push_back((origin, lock_type));
+            None
+        }
+    };
+    if let Some((dst, ctrl)) = grant {
+        send_ctrl(ctx, dst, ctrl, TAG_LOCKGRANT, 0, Payload::empty());
+    }
+}
+
+fn handle_get_reply(ctx: &RankCtx, win: WinId, env: Envelope) {
+    let mut t = ctx.tables.borrow_mut();
+    let tables = &mut *t;
+    let Some(w) = tables.wins.get_mut(win.0) else { return };
+    w.pending = w.pending.saturating_sub(1);
+    let data = env.payload.as_slice();
+    if data.len() < 4 {
+        if w.epoch_err == 0 {
+            w.epoch_err = ec::MPI_ERR_INTERN;
+        }
+        return;
+    }
+    let code = i32::from_le_bytes(data[..4].try_into().unwrap());
+    let Some(dest) = w.gets.remove(&env.seq) else { return };
+    if code != 0 {
+        if w.epoch_err == 0 {
+            w.epoch_err = code;
+        }
+        return;
+    }
+    if let Err(e) = super::datatype::pack::unpack(
+        &tables.dtypes,
+        &data[4..],
+        dest.buf as *mut u8,
+        dest.count,
+        dest.dt,
+    ) {
+        // E.g. the origin freed its datatype before the closing sync
+        // call: the buffer was not written, so the epoch must not
+        // report success.
+        if w.epoch_err == 0 {
+            w.epoch_err = e.class;
+        }
+    }
+}

@@ -21,6 +21,7 @@ use super::group::GroupObj;
 use super::info::InfoObj;
 use super::op::OpObj;
 use super::request::RequestObj;
+use super::rma::WinObj;
 use super::slab::Slab;
 use super::transport::{Envelope, Fabric, TransportKind};
 use super::{attr::KeyvalObj, err, RC};
@@ -126,6 +127,10 @@ pub struct Tables {
     pub errhs: Slab<ErrhObj>,
     pub infos: Slab<InfoObj>,
     pub keyvals: Slab<KeyvalObj>,
+    pub wins: Slab<WinObj>,
+    /// RMA context plane → window id, so the progress engine can route
+    /// incoming one-sided traffic without scanning the window table.
+    pub win_by_ctx: std::collections::HashMap<u32, u32>,
 }
 
 /// Mutable per-rank messaging state.
@@ -255,6 +260,8 @@ fn init_tables() -> Tables {
         errhs: Slab::new(),
         infos: Slab::new(),
         keyvals: Slab::new(),
+        wins: Slab::new(),
+        win_by_ctx: std::collections::HashMap::new(),
     };
     super::group::install_predefined(&mut t.groups);
     super::comm::install_predefined(&mut t.comms);

@@ -13,6 +13,14 @@
 //! exactly the situation of real MPI implementations sharing the MPI
 //! semantics but differing in ABI, which is what makes translation
 //! layers possible at all.
+//!
+//! The divergence extends to every handle kind the paper's table pins
+//! down — including `MPI_Win`: an `int` with `T_WIN` kind bits here, a
+//! `struct ompi_win_t *` there — and to the §5.4 integer constants
+//! (MPICH's 234/235 lock types vs Open MPI's 1/2; Open MPI's dense
+//! 1..16 assertion bits vs the 1024..16384 family).
+
+#![warn(missing_docs)]
 
 pub mod mpich;
 pub mod ompi;

@@ -22,43 +22,56 @@ use once_cell::sync::Lazy;
 use super::repr::{Backed, Repr};
 use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
 use crate::core::request::StatusCore;
-use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
 
 /// The public ABI type: `MpichAbi::send(...)` etc.
 pub type MpichAbi = Backed<MpichRepr>;
 
 // --- Handle bit layout -------------------------------------------------------
 
-/// Kind field (bits 30..32).
+/// Kind field (bits 30..32): an invalid (null) handle.
 pub const KIND_INVALID: i32 = 0x0000_0000;
+/// Kind field: a builtin (predefined) object.
 pub const KIND_BUILTIN: i32 = 0x4000_0000;
+/// Kind field: a "direct" (runtime-allocated) object.
 pub const KIND_DIRECT: i32 = -0x8000_0000; // 0x8000_0000 as i32
 
-/// Object-type field (bits 26..30), MPICH's numbering.
+/// Object-type field (bits 26..30), MPICH's numbering: communicator.
 pub const T_COMM: i32 = 0x1 << 26;
+/// Object-type field: group.
 pub const T_GROUP: i32 = 0x2 << 26;
+/// Object-type field: datatype.
 pub const T_DATATYPE: i32 = 0x3 << 26;
+/// Object-type field: file.
 pub const T_FILE: i32 = 0x4 << 26;
+/// Object-type field: error handler.
 pub const T_ERRHANDLER: i32 = 0x5 << 26;
+/// Object-type field: reduction op.
 pub const T_OP: i32 = 0x6 << 26;
+/// Object-type field: info object.
 pub const T_INFO: i32 = 0x7 << 26;
+/// Object-type field: RMA window.
 pub const T_WIN: i32 = 0x8 << 26;
+/// Object-type field: request.
 pub const T_REQUEST: i32 = 0xB << 26;
 
 const KIND_MASK: i32 = KIND_DIRECT | KIND_BUILTIN; // top two bits
 const TYPE_MASK: i32 = 0xF << 26;
 const PAYLOAD_MASK: i32 = (1 << 26) - 1;
 
+/// Extract a handle's kind bits.
 #[inline(always)]
 pub fn kind_of(h: i32) -> i32 {
     h & KIND_MASK
 }
 
+/// Extract a handle's object-type bits.
 #[inline(always)]
 pub fn type_of(h: i32) -> i32 {
     h & TYPE_MASK
 }
 
+/// Extract a handle's payload (the engine object index).
 #[inline(always)]
 pub fn payload_of(h: i32) -> i32 {
     h & PAYLOAD_MASK
@@ -66,30 +79,58 @@ pub fn payload_of(h: i32) -> i32 {
 
 // --- Predefined constants (compile-time, like real MPICH) --------------------
 
+/// MPICH's `MPI_COMM_NULL` (compile-time constant).
 pub const MPI_COMM_NULL: i32 = KIND_INVALID | T_COMM; // 0x04000000
+/// MPICH's `MPI_COMM_WORLD`.
 pub const MPI_COMM_WORLD: i32 = KIND_BUILTIN | T_COMM; // 0x44000000
+/// MPICH's `MPI_COMM_SELF`.
 pub const MPI_COMM_SELF: i32 = KIND_BUILTIN | T_COMM | 1; // 0x44000001
 
+/// MPICH's `MPI_GROUP_NULL`.
 pub const MPI_GROUP_NULL: i32 = KIND_INVALID | T_GROUP;
+/// MPICH's `MPI_GROUP_EMPTY`.
 pub const MPI_GROUP_EMPTY: i32 = KIND_BUILTIN | T_GROUP;
 
+/// MPICH's `MPI_DATATYPE_NULL`.
 pub const MPI_DATATYPE_NULL: i32 = KIND_INVALID | T_DATATYPE; // 0x0c000000
+/// MPICH's `MPI_REQUEST_NULL`.
 pub const MPI_REQUEST_NULL: i32 = KIND_INVALID | T_REQUEST; // 0x2c000000
+/// MPICH's `MPI_OP_NULL`.
 pub const MPI_OP_NULL: i32 = KIND_INVALID | T_OP; // 0x18000000
+/// MPICH's `MPI_ERRHANDLER_NULL`.
 pub const MPI_ERRHANDLER_NULL: i32 = KIND_INVALID | T_ERRHANDLER;
+/// MPICH's `MPI_INFO_NULL`.
 pub const MPI_INFO_NULL: i32 = KIND_INVALID | T_INFO;
 
+/// MPICH's `MPI_ERRORS_ARE_FATAL`.
 pub const MPI_ERRORS_ARE_FATAL: i32 = KIND_BUILTIN | T_ERRHANDLER; // 0x54000000
+/// MPICH's `MPI_ERRORS_RETURN`.
 pub const MPI_ERRORS_RETURN: i32 = KIND_BUILTIN | T_ERRHANDLER | 1;
+/// MPICH's `MPI_ERRORS_ABORT`.
 pub const MPI_ERRORS_ABORT: i32 = KIND_BUILTIN | T_ERRHANDLER | 2;
+/// MPICH's `MPI_INFO_ENV`.
 pub const MPI_INFO_ENV: i32 = KIND_BUILTIN | T_INFO;
+/// MPICH's `MPI_WIN_NULL` — the window handle is an `int` like every
+/// other MPICH handle, with the `T_WIN` object-type bits.
+pub const MPI_WIN_NULL: i32 = KIND_INVALID | T_WIN; // 0x20000000
 
-/// Wildcards and specials — MPICH's historical values, deliberately
-/// different from the standard ABI's unique negatives.
+/// MPICH's historical `MPI_LOCK_EXCLUSIVE` — nowhere near the standard
+/// ABI's small integers, so translation layers must map it.
+pub const MPI_LOCK_EXCLUSIVE: i32 = 234;
+/// MPICH's historical `MPI_LOCK_SHARED`.
+pub const MPI_LOCK_SHARED: i32 = 235;
+
+/// `MPI_ANY_SOURCE` — MPICH's historical value, deliberately different
+/// from the standard ABI's unique negatives.
 pub const MPI_ANY_SOURCE: i32 = -2;
+/// `MPI_ANY_TAG` (aliases `MPI_PROC_NULL` — the §5.4 ambiguity the
+/// standard ABI eliminates).
 pub const MPI_ANY_TAG: i32 = -1;
+/// `MPI_PROC_NULL` in MPICH's numbering.
 pub const MPI_PROC_NULL: i32 = -1;
+/// `MPI_ROOT` in MPICH's numbering.
 pub const MPI_ROOT: i32 = -3;
+/// `MPI_UNDEFINED` in MPICH's numbering.
 pub const MPI_UNDEFINED: i32 = -32766;
 
 /// `MPI_IN_PLACE` in MPICH is `(void *) -1`.
@@ -126,13 +167,15 @@ pub static DT_HANDLES: Lazy<Vec<i32>> = Lazy::new(|| {
         .collect()
 });
 
-/// Classic names for a few datatypes (spot-checked against the paper).
+/// Classic `MPI_CHAR` handle (spot-checked against the paper).
 pub fn mpi_char() -> i32 {
     handle_for(crate::abi::datatypes::MPI_CHAR)
 }
+/// Classic `MPI_INT` handle.
 pub fn mpi_int() -> i32 {
     handle_for(crate::abi::datatypes::MPI_INT)
 }
+/// Classic `MPI_DOUBLE` handle.
 pub fn mpi_double() -> i32 {
     handle_for(crate::abi::datatypes::MPI_DOUBLE)
 }
@@ -151,25 +194,35 @@ pub const fn op_handle(index: usize) -> i32 {
 
 // --- Status: the MPICH-ABI-initiative layout (§3.2.1) -------------------------
 
+/// The MPICH-ABI-initiative `MPI_Status` layout: the hidden count split
+/// across two leading ints (with the cancelled flag in the top bit),
+/// then the three public fields.
 #[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[allow(non_snake_case)]
 pub struct MpichStatus {
+    /// Low 32 bits of the received byte count.
     pub count_lo: i32,
+    /// High count bits (bit 31 = cancelled flag).
     pub count_hi_and_cancelled: i32,
+    /// Public `MPI_SOURCE` field.
     pub MPI_SOURCE: i32,
+    /// Public `MPI_TAG` field.
     pub MPI_TAG: i32,
+    /// Public `MPI_ERROR` field.
     pub MPI_ERROR: i32,
 }
 
 const _: () = assert!(core::mem::size_of::<MpichStatus>() == 20);
 
 impl MpichStatus {
+    /// Reassemble the 63-bit received byte count.
     pub fn count_bytes(&self) -> u64 {
         let hi = (self.count_hi_and_cancelled as u32 & 0x7FFF_FFFF) as u64;
         (hi << 32) | self.count_lo as u32 as u64
     }
 
+    /// The `MPI_Test_cancelled` flag (top bit of the high count word).
     pub fn cancelled(&self) -> bool {
         (self.count_hi_and_cancelled as u32) & 0x8000_0000 != 0
     }
@@ -188,12 +241,14 @@ pub fn err_code(class: i32) -> i32 {
     }
 }
 
+/// Extract the canonical class from a rich MPICH error code.
 pub fn err_class(code: i32) -> i32 {
     code & 0xFF
 }
 
 // --- The Repr ------------------------------------------------------------------
 
+/// The MPICH-like representation backend (see the module docs).
 pub struct MpichRepr;
 
 impl Repr for MpichRepr {
@@ -206,6 +261,7 @@ impl Repr for MpichRepr {
     type Group = i32;
     type Errhandler = i32;
     type Info = i32;
+    type Win = i32;
     type Status = MpichStatus;
 
     fn c_comm_world() -> i32 {
@@ -228,6 +284,15 @@ impl Repr for MpichRepr {
     }
     fn c_info_null() -> i32 {
         MPI_INFO_NULL
+    }
+    fn c_win_null() -> i32 {
+        MPI_WIN_NULL
+    }
+    fn c_lock_exclusive() -> i32 {
+        MPI_LOCK_EXCLUSIVE
+    }
+    fn c_lock_shared() -> i32 {
+        MPI_LOCK_SHARED
     }
 
     fn c_datatype(d: Dt) -> i32 {
@@ -378,6 +443,20 @@ impl Repr for MpichRepr {
         } else {
             KIND_DIRECT | T_INFO | id.0 as i32
         }
+    }
+
+    #[inline]
+    fn win_id(w: i32) -> RC<WinId> {
+        if kind_of(w) == KIND_DIRECT && type_of(w) == T_WIN {
+            Ok(WinId(payload_of(w) as u32))
+        } else {
+            Err(err!(MPI_ERR_WIN))
+        }
+    }
+
+    #[inline]
+    fn win_h(id: WinId) -> i32 {
+        KIND_DIRECT | T_WIN | id.0 as i32
     }
 
     fn status_empty() -> MpichStatus {

@@ -16,7 +16,7 @@ use once_cell::sync::Lazy;
 use super::repr::{Backed, Repr};
 use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
 use crate::core::request::StatusCore;
-use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
 
 /// The public ABI type.
 pub type OmpiAbi = Backed<OmpiRepr>;
@@ -24,6 +24,7 @@ pub type OmpiAbi = Backed<OmpiRepr>;
 /// Descriptor object kind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
+#[allow(missing_docs)] // variants mirror the handle kinds 1:1
 pub enum DescKind {
     Comm = 1,
     Group,
@@ -32,9 +33,11 @@ pub enum DescKind {
     Request,
     Errhandler,
     Info,
+    Win,
 }
 
-pub const DESC_MAGIC: u32 = 0x4F4D_5049; // "OMPI"
+/// Magic word every live descriptor carries ("OMPI").
+pub const DESC_MAGIC: u32 = 0x4F4D_5049;
 const NULL_ID: u32 = u32::MAX;
 
 /// The descriptor every handle points to. Padded to 352 bytes — the
@@ -42,12 +45,17 @@ const NULL_ID: u32 = u32::MAX;
 /// touch realistic cache footprints.
 #[repr(C)]
 pub struct Desc {
+    /// [`DESC_MAGIC`] when live (cast-misuse detection).
     pub magic: u32,
+    /// What kind of object this descriptor represents.
     pub kind: DescKind,
+    /// Predefined descriptors are never freed.
     pub predefined: bool,
+    /// The engine object id this descriptor wraps.
     pub engine_id: u32,
     /// Datatype size cache (what `opal_datatype_type_size` loads).
     pub size: i32,
+    /// Object name (datatype names for the predefined descriptors).
     pub name: [u8; 64],
     _pad: [u8; 352 - 4 - 1 - 1 - 4 - 4 - 64 - 2],
 }
@@ -95,12 +103,34 @@ ompi_handle!(
     /// `MPI_Comm` = `struct ompi_communicator_t *`.
     OmpiComm
 );
-ompi_handle!(OmpiDatatype);
-ompi_handle!(OmpiOp);
-ompi_handle!(OmpiRequest);
-ompi_handle!(OmpiGroup);
-ompi_handle!(OmpiErrhandler);
-ompi_handle!(OmpiInfo);
+ompi_handle!(
+    /// `MPI_Datatype` = `struct ompi_datatype_t *`.
+    OmpiDatatype
+);
+ompi_handle!(
+    /// `MPI_Op` = `struct ompi_op_t *`.
+    OmpiOp
+);
+ompi_handle!(
+    /// `MPI_Request` = `struct ompi_request_t *`.
+    OmpiRequest
+);
+ompi_handle!(
+    /// `MPI_Group` = `struct ompi_group_t *`.
+    OmpiGroup
+);
+ompi_handle!(
+    /// `MPI_Errhandler` = `struct ompi_errhandler_t *`.
+    OmpiErrhandler
+);
+ompi_handle!(
+    /// `MPI_Info` = `struct ompi_info_t *`.
+    OmpiInfo
+);
+ompi_handle!(
+    /// `MPI_Win` = `struct ompi_win_t *`.
+    OmpiWin
+);
 
 // --- Predefined descriptor globals (the "link-time constants") ---------------
 
@@ -119,6 +149,7 @@ static ERRH_RETURN_DESC: Lazy<&'static Desc> =
 static ERRH_ABORT_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Errhandler, 2, 0));
 static INFO_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Info, NULL_ID, 0));
 static INFO_ENV_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Info, 0, 0));
+static WIN_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Win, NULL_ID, 0));
 #[allow(dead_code)] // part of the ABI surface even if unreferenced internally
 static OP_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Op, NULL_ID, 0));
 
@@ -147,11 +178,34 @@ static OP_DESCS: Lazy<Vec<&'static Desc>> = Lazy::new(|| {
 
 // --- Special integers: Open MPI's values --------------------------------------
 
+/// `MPI_ANY_SOURCE` in Open MPI's numbering.
 pub const MPI_ANY_SOURCE: i32 = -1;
+/// `MPI_ANY_TAG` in Open MPI's numbering.
 pub const MPI_ANY_TAG: i32 = -1;
+/// `MPI_PROC_NULL` in Open MPI's numbering.
 pub const MPI_PROC_NULL: i32 = -2;
+/// `MPI_ROOT` in Open MPI's numbering.
 pub const MPI_ROOT: i32 = -4;
+/// `MPI_UNDEFINED` in Open MPI's numbering.
 pub const MPI_UNDEFINED: i32 = -32766;
+
+/// Open MPI's `MPI_MODE_NOCHECK`: the assertion family uses a *dense*
+/// 1/2/4/8/16 numbering, deliberately different from MPICH's (and the
+/// standard ABI's) 1024..16384 — a §5.4 divergence translation layers
+/// must map bit by bit.
+pub const MPI_MODE_NOCHECK: i32 = 1;
+/// Open MPI's `MPI_MODE_NOPRECEDE`.
+pub const MPI_MODE_NOPRECEDE: i32 = 2;
+/// Open MPI's `MPI_MODE_NOPUT`.
+pub const MPI_MODE_NOPUT: i32 = 4;
+/// Open MPI's `MPI_MODE_NOSTORE`.
+pub const MPI_MODE_NOSTORE: i32 = 8;
+/// Open MPI's `MPI_MODE_NOSUCCEED`.
+pub const MPI_MODE_NOSUCCEED: i32 = 16;
+/// Open MPI's `MPI_LOCK_EXCLUSIVE` (happens to match the standard ABI).
+pub const MPI_LOCK_EXCLUSIVE: i32 = 1;
+/// Open MPI's `MPI_LOCK_SHARED`.
+pub const MPI_LOCK_SHARED: i32 = 2;
 
 /// Open MPI's `MPI_IN_PLACE` is `(void *) 1`.
 pub const fn in_place_ptr() -> *const u8 {
@@ -160,14 +214,21 @@ pub const fn in_place_ptr() -> *const u8 {
 
 // --- Status: Open MPI's layout (§3.2.3) ----------------------------------------
 
+/// Open MPI's `MPI_Status` layout: the three public fields first, then
+/// the hidden cancelled flag and `size_t` byte count.
 #[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[allow(non_snake_case)]
 pub struct OmpiStatus {
+    /// Public `MPI_SOURCE` field.
     pub MPI_SOURCE: i32,
+    /// Public `MPI_TAG` field.
     pub MPI_TAG: i32,
+    /// Public `MPI_ERROR` field.
     pub MPI_ERROR: i32,
+    /// Hidden cancelled flag.
     pub _cancelled: i32,
+    /// Hidden received byte count.
     pub _ucount: usize,
 }
 
@@ -213,6 +274,7 @@ fn release(p: *const Desc) {
     }
 }
 
+/// The Open-MPI-like representation backend (see the module docs).
 pub struct OmpiRepr;
 
 impl Repr for OmpiRepr {
@@ -225,6 +287,7 @@ impl Repr for OmpiRepr {
     type Group = OmpiGroup;
     type Errhandler = OmpiErrhandler;
     type Info = OmpiInfo;
+    type Win = OmpiWin;
     type Status = OmpiStatus;
 
     fn c_comm_world() -> OmpiComm {
@@ -247,6 +310,30 @@ impl Repr for OmpiRepr {
     }
     fn c_info_null() -> OmpiInfo {
         OmpiInfo(*INFO_NULL_DESC)
+    }
+    fn c_win_null() -> OmpiWin {
+        OmpiWin(*WIN_NULL_DESC)
+    }
+    fn c_lock_exclusive() -> i32 {
+        MPI_LOCK_EXCLUSIVE
+    }
+    fn c_lock_shared() -> i32 {
+        MPI_LOCK_SHARED
+    }
+    fn c_mode_nocheck() -> i32 {
+        MPI_MODE_NOCHECK
+    }
+    fn c_mode_nostore() -> i32 {
+        MPI_MODE_NOSTORE
+    }
+    fn c_mode_noput() -> i32 {
+        MPI_MODE_NOPUT
+    }
+    fn c_mode_noprecede() -> i32 {
+        MPI_MODE_NOPRECEDE
+    }
+    fn c_mode_nosucceed() -> i32 {
+        MPI_MODE_NOSUCCEED
     }
 
     fn c_datatype(d: Dt) -> OmpiDatatype {
@@ -364,6 +451,15 @@ impl Repr for OmpiRepr {
         }
     }
 
+    #[inline]
+    fn win_id(w: OmpiWin) -> RC<WinId> {
+        deref(w.0, DescKind::Win).map(|d| WinId(d.engine_id)).ok_or(err!(MPI_ERR_WIN))
+    }
+
+    fn win_h(id: WinId) -> OmpiWin {
+        OmpiWin(alloc(DescKind::Win, id.0, 0))
+    }
+
     fn req_release(r: OmpiRequest) {
         release(r.0);
     }
@@ -384,6 +480,9 @@ impl Repr for OmpiRepr {
     }
     fn info_release(i: OmpiInfo) {
         release(i.0);
+    }
+    fn win_release(w: OmpiWin) {
+        release(w.0);
     }
 
     fn status_empty() -> OmpiStatus {

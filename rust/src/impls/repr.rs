@@ -9,94 +9,183 @@
 
 use std::marker::PhantomData;
 
+use crate::abi::types::Aint;
 use crate::api::{AttrCopyFn, AttrDeleteFn, Dt, ErrhFn, MpiAbi, OpName, UserOpFn};
 use crate::core::request::StatusCore;
-use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op};
-use crate::core::{CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op, rma};
+use crate::core::{CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
 
 /// What one MPI ABI fixes. See module docs.
 pub trait Repr: 'static {
+    /// Human name for reports ("mpich", "ompi", "abi").
     const NAME: &'static str;
 
+    /// `MPI_Comm` in this ABI's representation.
     type Comm: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Datatype` in this ABI's representation.
     type Datatype: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Op` in this ABI's representation.
     type Op: Copy + PartialEq;
+    /// `MPI_Request` in this ABI's representation.
     type Request: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Group` in this ABI's representation.
     type Group: Copy + PartialEq;
+    /// `MPI_Errhandler` in this ABI's representation.
     type Errhandler: Copy + PartialEq;
+    /// `MPI_Info` in this ABI's representation.
     type Info: Copy + PartialEq;
+    /// `MPI_Win` in this ABI's representation.
+    type Win: Copy + PartialEq + std::fmt::Debug;
+    /// The ABI's status struct.
     type Status: Copy;
 
-    // Predefined handle constants.
+    /// `MPI_COMM_WORLD`'s handle value.
     fn c_comm_world() -> Self::Comm;
+    /// `MPI_COMM_SELF`'s handle value.
     fn c_comm_self() -> Self::Comm;
+    /// `MPI_COMM_NULL`'s handle value.
     fn c_comm_null() -> Self::Comm;
+    /// `MPI_REQUEST_NULL`'s handle value.
     fn c_request_null() -> Self::Request;
+    /// `MPI_ERRORS_RETURN`'s handle value.
     fn c_errh_return() -> Self::Errhandler;
+    /// `MPI_ERRORS_ARE_FATAL`'s handle value.
     fn c_errh_fatal() -> Self::Errhandler;
+    /// `MPI_INFO_NULL`'s handle value.
     fn c_info_null() -> Self::Info;
+    /// `MPI_WIN_NULL`'s handle value.
+    fn c_win_null() -> Self::Win;
+    /// The handle for a predefined datatype.
     fn c_datatype(d: Dt) -> Self::Datatype;
+    /// The handle for a predefined reduction op.
     fn c_op(o: OpName) -> Self::Op;
 
-    // Special integer constants (ABIs number these differently!).
+    /// `MPI_LOCK_EXCLUSIVE` in this ABI's numbering (MPICH: 234).
+    fn c_lock_exclusive() -> i32 {
+        crate::abi::constants::MPI_LOCK_EXCLUSIVE
+    }
+    /// `MPI_LOCK_SHARED` in this ABI's numbering (MPICH: 235).
+    fn c_lock_shared() -> i32 {
+        crate::abi::constants::MPI_LOCK_SHARED
+    }
+    /// `MPI_MODE_NOCHECK` — Open MPI numbers the whole `MPI_MODE_*`
+    /// family differently (1/2/4/8/16) from MPICH and the standard ABI.
+    fn c_mode_nocheck() -> i32 {
+        crate::abi::constants::MPI_MODE_NOCHECK
+    }
+    /// `MPI_MODE_NOSTORE` in this ABI's numbering.
+    fn c_mode_nostore() -> i32 {
+        crate::abi::constants::MPI_MODE_NOSTORE
+    }
+    /// `MPI_MODE_NOPUT` in this ABI's numbering.
+    fn c_mode_noput() -> i32 {
+        crate::abi::constants::MPI_MODE_NOPUT
+    }
+    /// `MPI_MODE_NOPRECEDE` in this ABI's numbering.
+    fn c_mode_noprecede() -> i32 {
+        crate::abi::constants::MPI_MODE_NOPRECEDE
+    }
+    /// `MPI_MODE_NOSUCCEED` in this ABI's numbering.
+    fn c_mode_nosucceed() -> i32 {
+        crate::abi::constants::MPI_MODE_NOSUCCEED
+    }
+
+    /// This ABI's `MPI_ANY_SOURCE` (ABIs number these differently!).
     fn c_any_source() -> i32;
+    /// This ABI's `MPI_ANY_TAG`.
     fn c_any_tag() -> i32;
+    /// This ABI's `MPI_PROC_NULL`.
     fn c_proc_null() -> i32;
+    /// This ABI's `MPI_UNDEFINED`.
     fn c_undefined() -> i32;
+    /// This ABI's `MPI_IN_PLACE` sentinel.
     fn c_in_place() -> *const u8;
 
-    // Handle ↔ engine-id conversion (the cost Mukautuva pays per call).
+    /// Comm handle → engine id (the cost Mukautuva pays per call).
     fn comm_id(c: Self::Comm) -> RC<CommId>;
+    /// Engine id → comm handle.
     fn comm_h(id: CommId) -> Self::Comm;
+    /// Datatype handle → engine id.
     fn dt_id(d: Self::Datatype) -> RC<DtId>;
+    /// Engine id → datatype handle.
     fn dt_h(id: DtId) -> Self::Datatype;
+    /// Op handle → engine id.
     fn op_id(o: Self::Op) -> RC<OpId>;
+    /// Engine id → op handle.
     fn op_h(id: OpId) -> Self::Op;
+    /// Request handle → engine id.
     fn req_id(r: Self::Request) -> RC<ReqId>;
+    /// Engine id → request handle.
     fn req_h(id: ReqId) -> Self::Request;
+    /// Group handle → engine id.
     fn group_id(g: Self::Group) -> RC<GroupId>;
+    /// Engine id → group handle.
     fn group_h(id: GroupId) -> Self::Group;
+    /// Errhandler handle → engine id.
     fn errh_id(e: Self::Errhandler) -> RC<ErrhId>;
+    /// Engine id → errhandler handle.
     fn errh_h(id: ErrhId) -> Self::Errhandler;
+    /// Info handle → engine id.
     fn info_id(i: Self::Info) -> RC<InfoId>;
+    /// Engine id → info handle.
     fn info_h(id: InfoId) -> Self::Info;
+    /// Window handle → engine id.
+    fn win_id(w: Self::Win) -> RC<WinId>;
+    /// Engine id → window handle.
+    fn win_h(id: WinId) -> Self::Win;
 
     /// Drop any per-handle allocation when a request handle is consumed
     /// (pointer-handle ABIs heap-allocate request descriptors).
     fn req_release(r: Self::Request) {
         let _ = r;
     }
-    /// Likewise for freed objects of other kinds.
+    /// Likewise for freed datatype handles.
     fn dt_release(d: Self::Datatype) {
         let _ = d;
     }
+    /// Likewise for freed comm handles.
     fn comm_release(c: Self::Comm) {
         let _ = c;
     }
+    /// Likewise for freed op handles.
     fn op_release(o: Self::Op) {
         let _ = o;
     }
+    /// Likewise for freed group handles.
     fn group_release(g: Self::Group) {
         let _ = g;
     }
+    /// Likewise for freed errhandler handles.
     fn errh_release(e: Self::Errhandler) {
         let _ = e;
     }
+    /// Likewise for freed info handles.
     fn info_release(i: Self::Info) {
         let _ = i;
     }
+    /// Likewise for freed window handles.
+    fn win_release(w: Self::Win) {
+        let _ = w;
+    }
 
-    // Status layout.
+    /// An empty status in this ABI's layout.
     fn status_empty() -> Self::Status;
+    /// Convert the engine's status record into this ABI's layout.
     fn status_from_core(s: &StatusCore) -> Self::Status;
+    /// Read `MPI_SOURCE` from this ABI's status layout.
     fn status_source(s: &Self::Status) -> i32;
+    /// Read `MPI_TAG`.
     fn status_tag(s: &Self::Status) -> i32;
+    /// Read `MPI_ERROR`.
     fn status_error(s: &Self::Status) -> i32;
+    /// Read the cancelled flag.
     fn status_cancelled(s: &Self::Status) -> bool;
+    /// Read the hidden received byte count.
     fn status_count_bytes(s: &Self::Status) -> u64;
 
-    // Error-code encoding.
+    /// Encode a canonical error class into this ABI's error-code space.
     fn err_from_class(class: i32) -> i32;
+    /// Decode this ABI's error code back to the canonical class.
     fn class_of_err(code: i32) -> i32;
 
     /// The ABI's fast `MPI_Type_size` mechanism (bit decode for MPICH,
@@ -186,6 +275,85 @@ fn release_done<R: Repr>(req: &mut R::Request) {
     *req = R::c_request_null();
 }
 
+/// Split an ABI request list into engine ids + their original indices,
+/// skipping null handles — the shared front half of the any/some
+/// completion family.
+fn live_requests<R: Repr>(reqs: &[R::Request]) -> (Vec<ReqId>, Vec<usize>) {
+    let null = R::c_request_null();
+    let mut live = Vec::new();
+    let mut map = Vec::new();
+    for (i, &r) in reqs.iter().enumerate() {
+        if r != null {
+            if let Ok(id) = R::req_id(r) {
+                live.push(id);
+                map.push(i);
+            }
+        }
+    }
+    (live, map)
+}
+
+/// Write one completed entry of a waitsome/testsome result and release
+/// the handle unless it is persistent (the shared back half).
+fn some_outcome<R: Repr>(
+    reqs: &mut [R::Request],
+    live: &[ReqId],
+    map: &[usize],
+    done: Vec<(usize, StatusCore)>,
+    outcount: &mut i32,
+    indices: &mut [i32],
+    statuses: &mut [R::Status],
+) {
+    *outcount = done.len() as i32;
+    for (j, (k, s)) in done.into_iter().enumerate() {
+        let i = map[k];
+        if j < indices.len() {
+            indices[j] = i as i32;
+        }
+        if j < statuses.len() {
+            statuses[j] = status_out::<R>(s);
+        }
+        if !engine::request_is_persistent(live[k]) {
+            release_done::<R>(&mut reqs[i]);
+        }
+    }
+}
+
+/// Canonicalize this ABI's window assertion bitmask to the engine's
+/// (standard-ABI) bits.
+fn assert_in<R: Repr>(a: i32) -> i32 {
+    use crate::abi::constants as kc;
+    let mut out = 0;
+    if a & R::c_mode_nocheck() != 0 {
+        out |= kc::MPI_MODE_NOCHECK;
+    }
+    if a & R::c_mode_nostore() != 0 {
+        out |= kc::MPI_MODE_NOSTORE;
+    }
+    if a & R::c_mode_noput() != 0 {
+        out |= kc::MPI_MODE_NOPUT;
+    }
+    if a & R::c_mode_noprecede() != 0 {
+        out |= kc::MPI_MODE_NOPRECEDE;
+    }
+    if a & R::c_mode_nosucceed() != 0 {
+        out |= kc::MPI_MODE_NOSUCCEED;
+    }
+    out
+}
+
+/// Canonicalize this ABI's lock-type constant.
+fn lock_in<R: Repr>(lt: i32) -> i32 {
+    use crate::abi::constants as kc;
+    if lt == R::c_lock_exclusive() {
+        kc::MPI_LOCK_EXCLUSIVE
+    } else if lt == R::c_lock_shared() {
+        kc::MPI_LOCK_SHARED
+    } else {
+        lt
+    }
+}
+
 fn buf_in<R: Repr>(b: *const u8) -> *const u8 {
     if b == R::c_in_place() {
         crate::abi::constants::MPI_IN_PLACE as *const u8
@@ -233,6 +401,7 @@ impl<R: Repr> MpiAbi for Backed<R> {
     type Group = R::Group;
     type Errhandler = R::Errhandler;
     type Info = R::Info;
+    type Win = R::Win;
     type Status = R::Status;
 
     fn comm_world() -> R::Comm {
@@ -261,6 +430,30 @@ impl<R: Repr> MpiAbi for Backed<R> {
     }
     fn info_null() -> R::Info {
         R::c_info_null()
+    }
+    fn win_null() -> R::Win {
+        R::c_win_null()
+    }
+    fn lock_exclusive() -> i32 {
+        R::c_lock_exclusive()
+    }
+    fn lock_shared() -> i32 {
+        R::c_lock_shared()
+    }
+    fn mode_nocheck() -> i32 {
+        R::c_mode_nocheck()
+    }
+    fn mode_nostore() -> i32 {
+        R::c_mode_nostore()
+    }
+    fn mode_noput() -> i32 {
+        R::c_mode_noput()
+    }
+    fn mode_noprecede() -> i32 {
+        R::c_mode_noprecede()
+    }
+    fn mode_nosucceed() -> i32 {
+        R::c_mode_nosucceed()
     }
     fn any_source() -> i32 {
         R::c_any_source()
@@ -342,6 +535,17 @@ impl<R: Repr> MpiAbi for Backed<R> {
             R::c_undefined()
         } else {
             (bytes / size as u64) as i32
+        }
+    }
+
+    fn get_elements(s: &R::Status, dt: R::Datatype) -> i32 {
+        let Ok(id) = R::dt_id(dt) else { return R::c_undefined() };
+        let mut core = StatusCore::empty();
+        core.count_bytes = R::status_count_bytes(s);
+        match engine::get_elements(&core, id) {
+            Ok(v) if v == crate::abi::constants::MPI_UNDEFINED => R::c_undefined(),
+            Ok(v) => v,
+            Err(_) => R::c_undefined(),
         }
     }
 
@@ -767,17 +971,7 @@ impl<R: Repr> MpiAbi for Backed<R> {
     }
 
     fn waitany(reqs: &mut [R::Request], index: &mut i32, status: &mut R::Status) -> i32 {
-        let null = R::c_request_null();
-        let mut live = Vec::new();
-        let mut map = Vec::new();
-        for (i, &r) in reqs.iter().enumerate() {
-            if r != null {
-                if let Ok(id) = R::req_id(r) {
-                    live.push(id);
-                    map.push(i);
-                }
-            }
-        }
+        let (live, map) = live_requests::<R>(reqs);
         if live.is_empty() {
             *index = R::c_undefined();
             *status = R::status_empty();
@@ -798,6 +992,92 @@ impl<R: Repr> MpiAbi for Backed<R> {
             Ok(None) => {
                 *index = R::c_undefined();
                 *status = R::status_empty();
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn testany(
+        reqs: &mut [R::Request],
+        index: &mut i32,
+        flag: &mut bool,
+        status: &mut R::Status,
+    ) -> i32 {
+        let (live, map) = live_requests::<R>(reqs);
+        if live.is_empty() {
+            *flag = true;
+            *index = R::c_undefined();
+            *status = R::status_empty();
+            return 0;
+        }
+        match engine::testany(&live) {
+            Ok(engine::TestAnyOutcome::Completed(k, s)) => {
+                let i = map[k];
+                *flag = true;
+                *index = i as i32;
+                *status = status_out::<R>(s);
+                if !engine::request_is_persistent(live[k]) {
+                    release_done::<R>(&mut reqs[i]);
+                }
+                0
+            }
+            Ok(engine::TestAnyOutcome::NoneActive) => {
+                *flag = true;
+                *index = R::c_undefined();
+                *status = R::status_empty();
+                0
+            }
+            Ok(engine::TestAnyOutcome::Pending) => {
+                *flag = false;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn waitsome(
+        reqs: &mut [R::Request],
+        outcount: &mut i32,
+        indices: &mut [i32],
+        statuses: &mut [R::Status],
+    ) -> i32 {
+        let (live, map) = live_requests::<R>(reqs);
+        if live.is_empty() {
+            *outcount = R::c_undefined();
+            return 0;
+        }
+        match engine::waitsome(&live) {
+            Ok(Some(done)) => {
+                some_outcome::<R>(reqs, &live, &map, done, outcount, indices, statuses);
+                0
+            }
+            Ok(None) => {
+                *outcount = R::c_undefined();
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn testsome(
+        reqs: &mut [R::Request],
+        outcount: &mut i32,
+        indices: &mut [i32],
+        statuses: &mut [R::Status],
+    ) -> i32 {
+        let (live, map) = live_requests::<R>(reqs);
+        if live.is_empty() {
+            *outcount = R::c_undefined();
+            return 0;
+        }
+        match engine::testsome(&live) {
+            Ok(Some(done)) => {
+                some_outcome::<R>(reqs, &live, &map, done, outcount, indices, statuses);
+                0
+            }
+            Ok(None) => {
+                *outcount = R::c_undefined();
                 0
             }
             Err(e) => fail::<R>(None, e),
@@ -1652,6 +1932,165 @@ impl<R: Repr> MpiAbi for Backed<R> {
         coll_req!(R, id, req,
             coll::alltoall_init(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf,
                 recvcount as usize, rd, id))
+    }
+
+    fn win_create(
+        base: *mut u8,
+        size: Aint,
+        disp_unit: i32,
+        _info: R::Info,
+        c: R::Comm,
+        win: &mut R::Win,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        if size < 0 {
+            return fail::<R>(Some(id), crate::core::MpiError::new(crate::abi::errors::MPI_ERR_SIZE));
+        }
+        if disp_unit <= 0 {
+            return fail::<R>(Some(id), crate::core::MpiError::new(crate::abi::errors::MPI_ERR_DISP));
+        }
+        match rma::win_create(base as usize, size as usize, disp_unit as usize, id) {
+            Ok(w) => {
+                *win = R::win_h(w);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn win_allocate(
+        size: Aint,
+        disp_unit: i32,
+        _info: R::Info,
+        c: R::Comm,
+        baseptr: &mut *mut u8,
+        win: &mut R::Win,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        if size < 0 {
+            return fail::<R>(Some(id), crate::core::MpiError::new(crate::abi::errors::MPI_ERR_SIZE));
+        }
+        if disp_unit <= 0 {
+            return fail::<R>(Some(id), crate::core::MpiError::new(crate::abi::errors::MPI_ERR_DISP));
+        }
+        match rma::win_allocate(size as usize, disp_unit as usize, id) {
+            Ok((w, base)) => {
+                *baseptr = base as *mut u8;
+                *win = R::win_h(w);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn win_free(win: &mut R::Win) -> i32 {
+        let id = conv!(R, None, R::win_id(*win));
+        let r = ret::<R>(None, rma::win_free(id));
+        if r == 0 {
+            R::win_release(*win);
+            *win = R::c_win_null();
+        }
+        r
+    }
+
+    fn win_fence(assert: i32, win: R::Win) -> i32 {
+        let id = conv!(R, None, R::win_id(win));
+        ret::<R>(None, rma::win_fence(assert_in::<R>(assert), id))
+    }
+
+    fn win_lock(lock_type: i32, rank: i32, assert: i32, win: R::Win) -> i32 {
+        let id = conv!(R, None, R::win_id(win));
+        ret::<R>(None, rma::win_lock(lock_in::<R>(lock_type), rank, assert_in::<R>(assert), id))
+    }
+
+    fn win_unlock(rank: i32, win: R::Win) -> i32 {
+        let id = conv!(R, None, R::win_id(win));
+        ret::<R>(None, rma::win_unlock(rank, id))
+    }
+
+    fn win_flush(rank: i32, win: R::Win) -> i32 {
+        let id = conv!(R, None, R::win_id(win));
+        ret::<R>(None, rma::win_flush(rank, id))
+    }
+
+    fn put(
+        origin: *const u8,
+        origin_count: i32,
+        origin_dt: R::Datatype,
+        target_rank: i32,
+        target_disp: Aint,
+        target_count: i32,
+        target_dt: R::Datatype,
+        win: R::Win,
+    ) -> i32 {
+        if target_rank == R::c_proc_null() {
+            return 0; // MPI: PROC_NULL target makes the op a no-op
+        }
+        let id = conv!(R, None, R::win_id(win));
+        let od = conv!(R, None, R::dt_id(origin_dt));
+        let td = conv!(R, None, R::dt_id(target_dt));
+        if origin_count < 0 || target_count < 0 {
+            return fail::<R>(None, crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        ret::<R>(
+            None,
+            rma::put(origin, origin_count as usize, od, target_rank, target_disp,
+                target_count as usize, td, id),
+        )
+    }
+
+    fn get(
+        origin: *mut u8,
+        origin_count: i32,
+        origin_dt: R::Datatype,
+        target_rank: i32,
+        target_disp: Aint,
+        target_count: i32,
+        target_dt: R::Datatype,
+        win: R::Win,
+    ) -> i32 {
+        if target_rank == R::c_proc_null() {
+            return 0;
+        }
+        let id = conv!(R, None, R::win_id(win));
+        let od = conv!(R, None, R::dt_id(origin_dt));
+        let td = conv!(R, None, R::dt_id(target_dt));
+        if origin_count < 0 || target_count < 0 {
+            return fail::<R>(None, crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        ret::<R>(
+            None,
+            rma::get(origin, origin_count as usize, od, target_rank, target_disp,
+                target_count as usize, td, id),
+        )
+    }
+
+    fn accumulate(
+        origin: *const u8,
+        origin_count: i32,
+        origin_dt: R::Datatype,
+        target_rank: i32,
+        target_disp: Aint,
+        target_count: i32,
+        target_dt: R::Datatype,
+        o: R::Op,
+        win: R::Win,
+    ) -> i32 {
+        if target_rank == R::c_proc_null() {
+            return 0;
+        }
+        let id = conv!(R, None, R::win_id(win));
+        let od = conv!(R, None, R::dt_id(origin_dt));
+        let td = conv!(R, None, R::dt_id(target_dt));
+        let oid = conv!(R, None, R::op_id(o));
+        if origin_count < 0 || target_count < 0 {
+            return fail::<R>(None, crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        ret::<R>(
+            None,
+            rma::accumulate(origin, origin_count as usize, od, target_rank, target_disp,
+                target_count as usize, td, oid, id),
+        )
     }
 
     fn comm_create_keyval(

@@ -4,7 +4,7 @@
 //! abirun [-n RANKS] [--abi CONFIG] [--transport spsc|mutex] APP [ARGS]
 //!
 //! CONFIG: mpich | ompi | muk-mpich | muk-ompi | abi
-//! APP:    hello | suite | osu_mbw_mr | osu_latency | ddp | table1
+//! APP:    hello | suite | osu_mbw_mr | osu_latency | halo | ddp | table1
 //! ```
 
 use mpi_abi::api::MpiAbi;
@@ -16,7 +16,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: abirun [-n RANKS] [--abi mpich|ompi|muk-mpich|muk-ompi|abi] \
          [--transport spsc|mutex] APP [ARGS]\n\
-         apps: hello | suite | osu_mbw_mr | osu_latency | ddp | table1"
+         apps: hello | suite | osu_mbw_mr | osu_latency | halo | ddp | table1"
     );
     std::process::exit(2);
 }
@@ -125,6 +125,40 @@ impl AbiApp<()> for AppRunner {
                     A::NAME,
                     size,
                     out[0] * 1e9
+                );
+            }
+            "halo" => {
+                // abirun halo [--mode sendrecv|persistent|rma] [n] [iters]
+                use mpi_abi::apps::halo::{jacobi, HaloMode, HaloParams};
+                let mut mode = HaloMode::Sendrecv;
+                let mut nums = Vec::new();
+                let mut it = self.opts.args.iter();
+                while let Some(a) = it.next() {
+                    if a == "--mode" {
+                        mode = it
+                            .next()
+                            .and_then(|v| HaloMode::parse(v))
+                            .unwrap_or_else(|| usage());
+                    } else if let Ok(v) = a.parse::<usize>() {
+                        nums.push(v);
+                    }
+                }
+                let n = nums.first().copied().unwrap_or(96);
+                let iters = nums.get(1).copied().unwrap_or(50);
+                let out = run_job_ok(spec, move |_| {
+                    A::init();
+                    let (_, global) = jacobi::<A>(HaloParams { n, iters, mode });
+                    A::finalize();
+                    global
+                });
+                println!(
+                    "halo [{}] {}x{} grid, {} sweeps, mode {}: residual {:.12}",
+                    A::NAME,
+                    n,
+                    n,
+                    iters,
+                    mode.name(),
+                    out[0]
                 );
             }
             "ddp" => {

@@ -58,6 +58,7 @@ pub trait MukBackend:
     Group: AsWord,
     Errhandler: AsWord,
     Info: AsWord,
+    Win: AsWord,
 >
 {
     /// Backend handle for a predefined standard-ABI datatype constant.
@@ -70,6 +71,10 @@ pub trait MukBackend:
     /// Raw byte count hidden in the backend's status layout (the wrap
     /// library is compiled against the backend's mpi.h and knows it).
     fn status_bytes(s: &Self::Status) -> u64;
+    /// Inverse of [`MukBackend::status_bytes`]: a backend-layout status
+    /// carrying `bytes` (for `WRAP_get_elements`, which must hand the
+    /// backend a status in *its* layout).
+    fn status_with_bytes(bytes: u64) -> Self::Status;
 }
 
 impl MukBackend for MpichAbi {
@@ -103,6 +108,13 @@ impl MukBackend for MpichAbi {
 
     fn status_bytes(s: &Self::Status) -> u64 {
         s.count_bytes()
+    }
+
+    fn status_with_bytes(bytes: u64) -> Self::Status {
+        use crate::impls::repr::Repr;
+        let mut core = crate::core::request::StatusCore::empty();
+        core.count_bytes = bytes;
+        crate::impls::mpich::MpichRepr::status_from_core(&core)
     }
 }
 
@@ -139,6 +151,13 @@ impl MukBackend for OmpiAbi {
 
     fn status_bytes(s: &Self::Status) -> u64 {
         s._ucount as u64
+    }
+
+    fn status_with_bytes(bytes: u64) -> Self::Status {
+        use crate::impls::repr::Repr;
+        let mut core = crate::core::request::StatusCore::empty();
+        core.count_bytes = bytes;
+        crate::impls::ompi::OmpiRepr::status_from_core(&core)
     }
 }
 
@@ -245,6 +264,59 @@ pub fn info_to_impl<A: MukBackend>(muk: usize) -> A::Info {
         A::info_null()
     } else {
         A::Info::from_word(muk)
+    }
+}
+
+#[inline(always)]
+pub fn win_to_impl<A: MukBackend>(muk: usize) -> A::Win {
+    if muk == std_h::MPI_WIN_NULL {
+        A::win_null()
+    } else {
+        A::Win::from_word(muk)
+    }
+}
+
+#[inline(always)]
+pub fn win_to_muk<A: MukBackend>(w: A::Win) -> usize {
+    if w == A::win_null() {
+        std_h::MPI_WIN_NULL
+    } else {
+        w.to_word()
+    }
+}
+
+/// Standard-ABI window assertion bits → the backend's numbering (Open
+/// MPI's dense 1..16 family vs MPICH's 1024..16384 — a §5.4 divergence).
+#[inline(always)]
+pub fn assert_to_impl<A: MukBackend>(assert: i32) -> i32 {
+    let mut out = 0;
+    if assert & std_k::MPI_MODE_NOCHECK != 0 {
+        out |= A::mode_nocheck();
+    }
+    if assert & std_k::MPI_MODE_NOSTORE != 0 {
+        out |= A::mode_nostore();
+    }
+    if assert & std_k::MPI_MODE_NOPUT != 0 {
+        out |= A::mode_noput();
+    }
+    if assert & std_k::MPI_MODE_NOPRECEDE != 0 {
+        out |= A::mode_noprecede();
+    }
+    if assert & std_k::MPI_MODE_NOSUCCEED != 0 {
+        out |= A::mode_nosucceed();
+    }
+    out
+}
+
+/// Standard-ABI lock type → the backend's value (MPICH: 234/235).
+#[inline(always)]
+pub fn lock_type_to_impl<A: MukBackend>(lt: i32) -> i32 {
+    if lt == std_k::MPI_LOCK_EXCLUSIVE {
+        A::lock_exclusive()
+    } else if lt == std_k::MPI_LOCK_SHARED {
+        A::lock_shared()
+    } else {
+        lt
     }
 }
 

@@ -90,6 +90,7 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     type Group = AbiGroup;
     type Errhandler = AbiErrhandler;
     type Info = AbiInfo;
+    type Win = AbiWin;
     type Status = AbiStatus;
 
     fn comm_world() -> AbiComm {
@@ -118,6 +119,30 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     }
     fn info_null() -> AbiInfo {
         AbiInfo::NULL
+    }
+    fn win_null() -> AbiWin {
+        AbiWin::NULL
+    }
+    fn lock_exclusive() -> i32 {
+        crate::abi::constants::MPI_LOCK_EXCLUSIVE
+    }
+    fn lock_shared() -> i32 {
+        crate::abi::constants::MPI_LOCK_SHARED
+    }
+    fn mode_nocheck() -> i32 {
+        crate::abi::constants::MPI_MODE_NOCHECK
+    }
+    fn mode_nostore() -> i32 {
+        crate::abi::constants::MPI_MODE_NOSTORE
+    }
+    fn mode_noput() -> i32 {
+        crate::abi::constants::MPI_MODE_NOPUT
+    }
+    fn mode_noprecede() -> i32 {
+        crate::abi::constants::MPI_MODE_NOPRECEDE
+    }
+    fn mode_nosucceed() -> i32 {
+        crate::abi::constants::MPI_MODE_NOSUCCEED
     }
     fn any_source() -> i32 {
         crate::abi::constants::MPI_ANY_SOURCE
@@ -199,6 +224,11 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     fn get_count(s: &AbiStatus, dt: AbiDatatype) -> i32 {
         let mut out = 0;
         (B::vtable().get_count)(s as *const AbiStatus, dt.0, &mut out);
+        out
+    }
+    fn get_elements(s: &AbiStatus, dt: AbiDatatype) -> i32 {
+        let mut out = 0;
+        (B::vtable().get_elements)(s as *const AbiStatus, dt.0, &mut out);
         out
     }
 
@@ -412,6 +442,61 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
             let i = *index as usize;
             reqs[i] = AbiRequest(words[i]);
             state::reqmap_remove(keys[i]);
+        }
+        rc
+    }
+
+    fn testany(
+        reqs: &mut [AbiRequest],
+        index: &mut i32,
+        flag: &mut bool,
+        status: &mut AbiStatus,
+    ) -> i32 {
+        let keys: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        let mut words: Vec<usize> = keys.clone();
+        let rc = (B::vtable().testany)(&mut words, index, flag, status as *mut AbiStatus);
+        if rc == 0 && *flag && *index >= 0 {
+            let i = *index as usize;
+            reqs[i] = AbiRequest(words[i]);
+            state::reqmap_remove(keys[i]);
+        }
+        rc
+    }
+
+    fn waitsome(
+        reqs: &mut [AbiRequest],
+        outcount: &mut i32,
+        indices: &mut [i32],
+        statuses: &mut [AbiStatus],
+    ) -> i32 {
+        let keys: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        let mut words: Vec<usize> = keys.clone();
+        let rc = (B::vtable().waitsome)(&mut words, outcount, indices, statuses.as_mut_ptr());
+        if rc == 0 && *outcount >= 0 {
+            for j in 0..*outcount as usize {
+                let i = indices[j] as usize;
+                reqs[i] = AbiRequest(words[i]);
+                state::reqmap_remove(keys[i]);
+            }
+        }
+        rc
+    }
+
+    fn testsome(
+        reqs: &mut [AbiRequest],
+        outcount: &mut i32,
+        indices: &mut [i32],
+        statuses: &mut [AbiStatus],
+    ) -> i32 {
+        let keys: Vec<usize> = reqs.iter().map(|r| r.0).collect();
+        let mut words: Vec<usize> = keys.clone();
+        let rc = (B::vtable().testsome)(&mut words, outcount, indices, statuses.as_mut_ptr());
+        if rc == 0 && *outcount >= 0 {
+            for j in 0..*outcount as usize {
+                let i = indices[j] as usize;
+                reqs[i] = AbiRequest(words[i]);
+                state::reqmap_remove(keys[i]);
+            }
         }
         rc
     }
@@ -900,6 +985,94 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     ) -> i32 {
         (B::vtable().alltoall_init)(sendbuf, sendcount, sendtype.0, recvbuf, recvcount,
             recvtype.0, c.0, &mut req.0)
+    }
+
+    fn win_create(
+        base: *mut u8,
+        size: crate::abi::types::Aint,
+        disp_unit: i32,
+        info: AbiInfo,
+        c: AbiComm,
+        win: &mut AbiWin,
+    ) -> i32 {
+        (B::vtable().win_create)(base, size, disp_unit, info.0, c.0, &mut win.0)
+    }
+
+    fn win_allocate(
+        size: crate::abi::types::Aint,
+        disp_unit: i32,
+        info: AbiInfo,
+        c: AbiComm,
+        baseptr: &mut *mut u8,
+        win: &mut AbiWin,
+    ) -> i32 {
+        (B::vtable().win_allocate)(size, disp_unit, info.0, c.0, baseptr, &mut win.0)
+    }
+
+    fn win_free(win: &mut AbiWin) -> i32 {
+        (B::vtable().win_free)(&mut win.0)
+    }
+
+    fn win_fence(assert: i32, win: AbiWin) -> i32 {
+        (B::vtable().win_fence)(assert, win.0)
+    }
+
+    fn win_lock(lock_type: i32, rank: i32, assert: i32, win: AbiWin) -> i32 {
+        (B::vtable().win_lock)(lock_type, rank, assert, win.0)
+    }
+
+    fn win_unlock(rank: i32, win: AbiWin) -> i32 {
+        (B::vtable().win_unlock)(rank, win.0)
+    }
+
+    fn win_flush(rank: i32, win: AbiWin) -> i32 {
+        (B::vtable().win_flush)(rank, win.0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn put(
+        origin: *const u8,
+        origin_count: i32,
+        origin_dt: AbiDatatype,
+        target_rank: i32,
+        target_disp: crate::abi::types::Aint,
+        target_count: i32,
+        target_dt: AbiDatatype,
+        win: AbiWin,
+    ) -> i32 {
+        (B::vtable().put)(origin, origin_count, origin_dt.0, target_rank, target_disp,
+            target_count, target_dt.0, win.0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn get(
+        origin: *mut u8,
+        origin_count: i32,
+        origin_dt: AbiDatatype,
+        target_rank: i32,
+        target_disp: crate::abi::types::Aint,
+        target_count: i32,
+        target_dt: AbiDatatype,
+        win: AbiWin,
+    ) -> i32 {
+        (B::vtable().get)(origin, origin_count, origin_dt.0, target_rank, target_disp,
+            target_count, target_dt.0, win.0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate(
+        origin: *const u8,
+        origin_count: i32,
+        origin_dt: AbiDatatype,
+        target_rank: i32,
+        target_disp: crate::abi::types::Aint,
+        target_count: i32,
+        target_dt: AbiDatatype,
+        op: AbiOp,
+        win: AbiWin,
+    ) -> i32 {
+        (B::vtable().accumulate)(origin, origin_count, origin_dt.0, target_rank, target_disp,
+            target_count, target_dt.0, op.0, win.0)
     }
 
     fn comm_create_keyval(

@@ -15,7 +15,7 @@
 //! type can be stored into / recovered from a word.
 
 use crate::impls::ompi::{OmpiComm, OmpiDatatype, OmpiErrhandler, OmpiGroup, OmpiInfo, OmpiOp,
-    OmpiRequest};
+    OmpiRequest, OmpiWin};
 
 /// Round-trip a backend handle through a pointer-sized word.
 pub trait AsWord: Copy {
@@ -51,7 +51,8 @@ macro_rules! ptr_as_word {
     )*};
 }
 
-ptr_as_word!(OmpiComm, OmpiDatatype, OmpiOp, OmpiRequest, OmpiGroup, OmpiErrhandler, OmpiInfo);
+ptr_as_word!(OmpiComm, OmpiDatatype, OmpiOp, OmpiRequest, OmpiGroup, OmpiErrhandler, OmpiInfo,
+    OmpiWin);
 
 #[cfg(test)]
 mod tests {

@@ -416,6 +416,83 @@ pub fn waitany<A: MukBackend>(reqs: &mut [usize], index: &mut i32, status: *mut 
     ret_code::<A>(rc)
 }
 
+pub fn testany<A: MukBackend>(
+    reqs: &mut [usize],
+    index: &mut i32,
+    flag: &mut bool,
+    status: *mut AbiStatus,
+) -> i32 {
+    let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
+    let mut s = A::status_empty();
+    let rc = A::testany(&mut rs, index, flag, &mut s);
+    if rc == 0 && *flag {
+        if *index == A::undefined() {
+            *index = crate::abi::constants::MPI_UNDEFINED;
+            if !status.is_null() {
+                unsafe { *status = status_to_muk::<A>(&A::status_empty()) };
+            }
+        } else if *index >= 0 {
+            let i = *index as usize;
+            reqs[i] = req_to_muk::<A>(rs[i]);
+            if !status.is_null() {
+                unsafe { *status = status_to_muk::<A>(&s) };
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+/// Shared body of WRAP_waitsome/WRAP_testsome: convert the request
+/// words in, call the backend entry point, and convert the completed
+/// indices' handles + statuses (and the `MPI_UNDEFINED` outcount) back.
+fn some_via<A, F>(
+    call: F,
+    reqs: &mut [usize],
+    outcount: &mut i32,
+    indices: &mut [i32],
+    statuses: *mut AbiStatus,
+) -> i32
+where
+    A: MukBackend,
+    F: FnOnce(&mut [A::Request], &mut i32, &mut [i32], &mut [A::Status]) -> i32,
+{
+    let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
+    let mut ss = vec![A::status_empty(); rs.len()];
+    let rc = call(&mut rs, outcount, indices, &mut ss);
+    if rc == 0 {
+        if *outcount == A::undefined() {
+            *outcount = crate::abi::constants::MPI_UNDEFINED;
+        } else {
+            for j in 0..*outcount as usize {
+                let i = indices[j] as usize;
+                reqs[i] = req_to_muk::<A>(rs[i]);
+                if !statuses.is_null() {
+                    unsafe { *statuses.add(j) = status_to_muk::<A>(&ss[j]) };
+                }
+            }
+        }
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn waitsome<A: MukBackend>(
+    reqs: &mut [usize],
+    outcount: &mut i32,
+    indices: &mut [i32],
+    statuses: *mut AbiStatus,
+) -> i32 {
+    some_via::<A, _>(A::waitsome, reqs, outcount, indices, statuses)
+}
+
+pub fn testsome<A: MukBackend>(
+    reqs: &mut [usize],
+    outcount: &mut i32,
+    indices: &mut [i32],
+    statuses: *mut AbiStatus,
+) -> i32 {
+    some_via::<A, _>(A::testsome, reqs, outcount, indices, statuses)
+}
+
 pub fn probe<A: MukBackend>(src: i32, tag: i32, comm: usize, status: *mut AbiStatus) -> i32 {
     let mut s = A::status_empty();
     let rc = A::probe(src_to_impl::<A>(src), tag_to_impl::<A>(tag), comm_to_impl::<A>(comm),
@@ -1367,6 +1444,135 @@ pub fn info_free<A: MukBackend>(info: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+// --- One-sided communication -----------------------------------------------
+//
+// Window handles ride the word union like every other handle; the §5.4
+// constants that differ per backend (lock types, assertion bitmasks)
+// are translated by value, not bit pattern.
+
+pub fn win_create<A: MukBackend>(
+    base: *mut u8,
+    size: isize,
+    disp_unit: i32,
+    info: usize,
+    comm: usize,
+    win: &mut usize,
+) -> i32 {
+    let mut w = A::win_null();
+    let rc = A::win_create(base, size, disp_unit, info_to_impl::<A>(info),
+        comm_to_impl::<A>(comm), &mut w);
+    if rc == 0 {
+        *win = win_to_muk::<A>(w);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn win_allocate<A: MukBackend>(
+    size: isize,
+    disp_unit: i32,
+    info: usize,
+    comm: usize,
+    baseptr: &mut *mut u8,
+    win: &mut usize,
+) -> i32 {
+    let mut w = A::win_null();
+    let rc = A::win_allocate(size, disp_unit, info_to_impl::<A>(info), comm_to_impl::<A>(comm),
+        baseptr, &mut w);
+    if rc == 0 {
+        *win = win_to_muk::<A>(w);
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn win_free<A: MukBackend>(win: &mut usize) -> i32 {
+    let mut w = win_to_impl::<A>(*win);
+    let rc = A::win_free(&mut w);
+    if rc == 0 {
+        *win = std_h::MPI_WIN_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+pub fn win_fence<A: MukBackend>(assert: i32, win: usize) -> i32 {
+    ret_code::<A>(A::win_fence(assert_to_impl::<A>(assert), win_to_impl::<A>(win)))
+}
+
+pub fn win_lock<A: MukBackend>(lock_type: i32, rank: i32, assert: i32, win: usize) -> i32 {
+    ret_code::<A>(A::win_lock(lock_type_to_impl::<A>(lock_type), rank,
+        assert_to_impl::<A>(assert), win_to_impl::<A>(win)))
+}
+
+pub fn win_unlock<A: MukBackend>(rank: i32, win: usize) -> i32 {
+    ret_code::<A>(A::win_unlock(rank, win_to_impl::<A>(win)))
+}
+
+pub fn win_flush<A: MukBackend>(rank: i32, win: usize) -> i32 {
+    ret_code::<A>(A::win_flush(rank, win_to_impl::<A>(win)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn put<A: MukBackend>(
+    origin: *const u8,
+    origin_count: i32,
+    origin_dt: usize,
+    target_rank: i32,
+    target_disp: isize,
+    target_count: i32,
+    target_dt: usize,
+    win: usize,
+) -> i32 {
+    ret_code::<A>(A::put(origin, origin_count, dt_to_impl::<A>(origin_dt),
+        dest_to_impl::<A>(target_rank), target_disp, target_count, dt_to_impl::<A>(target_dt),
+        win_to_impl::<A>(win)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn get<A: MukBackend>(
+    origin: *mut u8,
+    origin_count: i32,
+    origin_dt: usize,
+    target_rank: i32,
+    target_disp: isize,
+    target_count: i32,
+    target_dt: usize,
+    win: usize,
+) -> i32 {
+    ret_code::<A>(A::get(origin, origin_count, dt_to_impl::<A>(origin_dt),
+        dest_to_impl::<A>(target_rank), target_disp, target_count, dt_to_impl::<A>(target_dt),
+        win_to_impl::<A>(win)))
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate<A: MukBackend>(
+    origin: *const u8,
+    origin_count: i32,
+    origin_dt: usize,
+    target_rank: i32,
+    target_disp: isize,
+    target_count: i32,
+    target_dt: usize,
+    op: usize,
+    win: usize,
+) -> i32 {
+    ret_code::<A>(A::accumulate(origin, origin_count, dt_to_impl::<A>(origin_dt),
+        dest_to_impl::<A>(target_rank), target_disp, target_count, dt_to_impl::<A>(target_dt),
+        op_to_impl::<A>(op), win_to_impl::<A>(win)))
+}
+
+pub fn get_elements<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i32) -> i32 {
+    // Rebuild a backend-layout status carrying the muk status's byte
+    // count (the wrap library knows the backend layout — it is compiled
+    // against that mpi.h), then let the backend resolve the leaf
+    // decomposition through its own datatype representation.
+    let s = unsafe { &*status };
+    let b = A::status_with_bytes(s.count_bytes());
+    *out = A::get_elements(&b, dt_to_impl::<A>(dt));
+    if *out == A::undefined() {
+        *out = crate::abi::constants::MPI_UNDEFINED;
+    }
+    0
+}
+
 pub fn get_count<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i32) -> i32 {
     // Counts live in the MUK status's reserved fields after conversion.
     let s = unsafe { &*status };
@@ -1458,6 +1664,9 @@ define_vtable! {
     waitall: fn(&mut [usize], *mut AbiStatus) -> i32,
     testall: fn(&mut [usize], &mut bool, *mut AbiStatus) -> i32,
     waitany: fn(&mut [usize], &mut i32, *mut AbiStatus) -> i32,
+    testany: fn(&mut [usize], &mut i32, &mut bool, *mut AbiStatus) -> i32,
+    waitsome: fn(&mut [usize], &mut i32, &mut [i32], *mut AbiStatus) -> i32,
+    testsome: fn(&mut [usize], &mut i32, &mut [i32], *mut AbiStatus) -> i32,
     probe: fn(i32, i32, usize, *mut AbiStatus) -> i32,
     iprobe: fn(i32, i32, usize, &mut bool, *mut AbiStatus) -> i32,
     cancel: fn(&mut usize) -> i32,
@@ -1522,4 +1731,15 @@ define_vtable! {
     info_get: fn(usize, &str, &mut String, &mut bool) -> i32,
     info_free: fn(&mut usize) -> i32,
     get_count: fn(*const AbiStatus, usize, &mut i32) -> i32,
+    get_elements: fn(*const AbiStatus, usize, &mut i32) -> i32,
+    win_create: fn(*mut u8, isize, i32, usize, usize, &mut usize) -> i32,
+    win_allocate: fn(isize, i32, usize, usize, &mut *mut u8, &mut usize) -> i32,
+    win_free: fn(&mut usize) -> i32,
+    win_fence: fn(i32, usize) -> i32,
+    win_lock: fn(i32, i32, i32, usize) -> i32,
+    win_unlock: fn(i32, usize) -> i32,
+    win_flush: fn(i32, usize) -> i32,
+    put: fn(*const u8, i32, usize, i32, isize, i32, usize, usize) -> i32,
+    get: fn(*mut u8, i32, usize, i32, isize, i32, usize, usize) -> i32,
+    accumulate: fn(*const u8, i32, usize, i32, isize, i32, usize, usize, usize) -> i32,
 }

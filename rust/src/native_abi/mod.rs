@@ -21,7 +21,7 @@ use crate::abi::handles::*;
 use crate::abi::status::AbiStatus;
 use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
 use crate::core::request::StatusCore;
-use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId};
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
 use crate::impls::repr::{Backed, Repr};
 
 /// The public ABI type.
@@ -42,6 +42,7 @@ enum UserKind {
     Request,
     Errhandler,
     Info,
+    Win,
 }
 
 #[inline(always)]
@@ -85,6 +86,7 @@ impl Repr for NativeRepr {
     type Group = AbiGroup;
     type Errhandler = AbiErrhandler;
     type Info = AbiInfo;
+    type Win = AbiWin;
     type Status = AbiStatus;
 
     fn c_comm_world() -> AbiComm {
@@ -107,6 +109,9 @@ impl Repr for NativeRepr {
     }
     fn c_info_null() -> AbiInfo {
         AbiInfo::NULL
+    }
+    fn c_win_null() -> AbiWin {
+        AbiWin::NULL
     }
 
     fn c_datatype(d: Dt) -> AbiDatatype {
@@ -246,6 +251,16 @@ impl Repr for NativeRepr {
             crate::core::reserved::INFO_ENV => AbiInfo(MPI_INFO_ENV),
             InfoId(n) => AbiInfo(user_h(UserKind::Info, n)),
         }
+    }
+
+    #[inline]
+    fn win_id(w: AbiWin) -> RC<WinId> {
+        user_id(UserKind::Win, w.0).map(WinId).ok_or(err!(MPI_ERR_WIN))
+    }
+
+    #[inline]
+    fn win_h(id: WinId) -> AbiWin {
+        AbiWin(user_h(UserKind::Win, id.0))
     }
 
     fn status_empty() -> AbiStatus {

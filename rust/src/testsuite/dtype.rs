@@ -14,6 +14,8 @@ pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
         ("dtype.struct_layout", struct_layout::<A>),
         ("dtype.dup_and_free", dup_and_free::<A>),
         ("dtype.get_count_undefined", get_count_undefined::<A>),
+        ("dtype.get_count_derived", get_count_derived::<A>),
+        ("dtype.get_elements_partial", get_elements_partial::<A>),
     ]
 }
 
@@ -182,5 +184,84 @@ fn get_count_undefined<A: MpiAbi>(_r: usize) -> Result<(), String> {
         check!(A::get_count(&st, dt_b) == 6, "byte count 6");
         check!(A::get_count(&st, dt_i) == A::undefined(), "int count undefined");
     }
+    Ok(())
+}
+
+/// `MPI_Get_count` against a *derived* datatype: a byte count that is
+/// not a whole number of items must report `MPI_UNDEFINED`, and a whole
+/// number of items must report the item count.
+fn get_count_derived<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    if n < 2 {
+        return Ok(());
+    }
+    let dt_b = A::datatype(Dt::Byte);
+    // 3 ints per item (12 bytes packed).
+    let mut tri = A::datatype(Dt::Byte);
+    check_rc!(A::type_contiguous(3, A::datatype(Dt::Int32), &mut tri), "contiguous");
+    check_rc!(A::type_commit(&mut tri), "commit");
+    if me == 0 {
+        let v = [0u8; 24];
+        check_rc!(A::send(slice_ptr(&v), 24, dt_b, 1, 8, A::comm_world()), "send 24");
+        check_rc!(A::send(slice_ptr(&v), 16, dt_b, 1, 9, A::comm_world()), "send 16");
+    } else if me == 1 {
+        let mut v = [0u8; 24];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 24, dt_b, 0, 8, A::comm_world(), &mut st),
+            "recv 24");
+        check!(A::get_count(&st, tri) == 2, "24 bytes = 2 items");
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 16, dt_b, 0, 9, A::comm_world(), &mut st),
+            "recv 16");
+        check!(A::get_count(&st, tri) == A::undefined(),
+            "16 bytes is not a whole number of 12-byte items");
+    }
+    check_rc!(A::type_free(&mut tri), "free");
+    Ok(())
+}
+
+/// `MPI_Get_elements` resolves partial items to their basic leaves: 16
+/// bytes of a 3-int item type is 4 whole ints, and a pair type counts
+/// its two components separately.
+fn get_elements_partial<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    if n < 2 {
+        return Ok(());
+    }
+    let dt_b = A::datatype(Dt::Byte);
+    let mut tri = A::datatype(Dt::Byte);
+    check_rc!(A::type_contiguous(3, A::datatype(Dt::Int32), &mut tri), "contiguous");
+    check_rc!(A::type_commit(&mut tri), "commit");
+    if me == 0 {
+        let v = [0u8; 16];
+        check_rc!(A::send(slice_ptr(&v), 16, dt_b, 1, 8, A::comm_world()), "send 16");
+        check_rc!(A::send(slice_ptr(&v), 6, dt_b, 1, 9, A::comm_world()), "send 6");
+        check_rc!(A::send(slice_ptr(&v), 12, dt_b, 1, 10, A::comm_world()), "send 12");
+    } else if me == 1 {
+        let mut v = [0u8; 16];
+        let mut st = A::status_empty();
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 16, dt_b, 0, 8, A::comm_world(), &mut st),
+            "recv 16");
+        // get_count: undefined (partial item); get_elements: 4 whole ints.
+        check!(A::get_count(&st, tri) == A::undefined(), "partial item count undefined");
+        check!(A::get_elements(&st, tri) == 4, "16 bytes = 4 basic ints, got {}",
+            A::get_elements(&st, tri));
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 6, dt_b, 0, 9, A::comm_world(), &mut st),
+            "recv 6");
+        // 6 bytes splits the second int: elements undefined too.
+        check!(A::get_elements(&st, tri) == A::undefined(), "split basic element");
+        check_rc!(A::recv(slice_ptr_mut(&mut v), 12, dt_b, 0, 10, A::comm_world(), &mut st),
+            "recv 12");
+        // A pair type: 12 bytes = one and a half FLOAT_INT pairs = 3
+        // basic elements.
+        let fi = A::datatype(Dt::FloatInt);
+        check!(A::get_count(&st, fi) == A::undefined(), "1.5 pairs undefined");
+        check!(A::get_elements(&st, fi) == 3, "1.5 pairs = 3 basic elements, got {}",
+            A::get_elements(&st, fi));
+    }
+    check_rc!(A::type_free(&mut tri), "free");
     Ok(())
 }

@@ -19,6 +19,7 @@ mod dtype;
 mod env;
 mod persistent;
 mod pt2pt;
+mod rma;
 
 use crate::api::MpiAbi;
 
@@ -43,6 +44,7 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     v.extend(dtype::tests::<A>());
     v.extend(coll::tests::<A>());
     v.extend(comm_attr::tests::<A>());
+    v.extend(rma::tests::<A>());
     v
 }
 

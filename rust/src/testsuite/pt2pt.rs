@@ -19,6 +19,9 @@ pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
         ("pt2pt.proc_null", proc_null::<A>),
         ("pt2pt.tag_selectivity", tag_selectivity::<A>),
         ("pt2pt.waitany_first", waitany_first::<A>),
+        ("pt2pt.testany_polls", testany_polls::<A>),
+        ("pt2pt.waitsome_batch", waitsome_batch::<A>),
+        ("pt2pt.testsome_drains", testsome_drains::<A>),
     ]
 }
 
@@ -354,5 +357,148 @@ fn waitany_first<A: MpiAbi>(_r: usize) -> Result<(), String> {
         let mut st2 = A::status_empty();
         check_rc!(A::wait(&mut reqs[0], &mut st2), "wait leftover");
     }
+    Ok(())
+}
+
+/// `MPI_Testany` over a mixed list: flag=false while nothing is ready,
+/// the completed index once the message lands, and `MPI_UNDEFINED` with
+/// flag=true when the list holds only null handles.
+fn testany_polls<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    if me == 0 {
+        let mut buf = [0i32; 2];
+        let mut reqs = vec![A::request_null(); 2];
+        check_rc!(
+            A::irecv(slice_ptr_mut(&mut buf), 2, dt, 1, 5, A::comm_world(), &mut reqs[1]),
+            "irecv"
+        );
+        let (mut index, mut flag) = (0i32, false);
+        let mut st = A::status_empty();
+        loop {
+            check_rc!(A::testany(&mut reqs, &mut index, &mut flag, &mut st), "testany");
+            if flag {
+                break;
+            }
+        }
+        check!(index == 1, "completed index: {index}");
+        check!(reqs[1] == A::request_null(), "handle nulled");
+        check!(buf == [7, 8], "payload {buf:?}");
+        // Only nulls left: flag=true with MPI_UNDEFINED.
+        check_rc!(A::testany(&mut reqs, &mut index, &mut flag, &mut st), "testany nulls");
+        check!(flag && index == A::undefined(), "all-null testany: flag={flag} idx={index}");
+    } else if me == 1 {
+        let v = [7i32, 8];
+        check_rc!(A::send(slice_ptr(&v), 2, dt, 0, 5, A::comm_world()), "send");
+    }
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// `MPI_Waitsome` returns a batch of completed receives; repeated calls
+/// drain the list, and an all-null list reports `MPI_UNDEFINED`.
+fn waitsome_batch<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    const K: usize = 3;
+    if me == 0 {
+        let mut bufs = vec![[0i32; 1]; K];
+        let mut reqs = vec![A::request_null(); K];
+        for (i, b) in bufs.iter_mut().enumerate() {
+            check_rc!(
+                A::irecv(slice_ptr_mut(b), 1, dt, 1, i as i32 + 20, A::comm_world(),
+                    &mut reqs[i]),
+                "irecv"
+            );
+        }
+        let mut seen = vec![false; K];
+        let mut total = 0usize;
+        while total < K {
+            let mut outcount = 0i32;
+            let mut indices = vec![0i32; K];
+            let mut sts = vec![A::status_empty(); K];
+            check_rc!(A::waitsome(&mut reqs, &mut outcount, &mut indices, &mut sts),
+                "waitsome");
+            check!(outcount >= 1, "waitsome returns at least one, got {outcount}");
+            for j in 0..outcount as usize {
+                let i = indices[j] as usize;
+                check!(!seen[i], "index {i} reported twice");
+                seen[i] = true;
+                check!(A::status_tag(&sts[j]) == i as i32 + 20, "status tag for {i}");
+                check!(reqs[i] == A::request_null(), "handle {i} nulled");
+            }
+            total += outcount as usize;
+        }
+        for (i, b) in bufs.iter().enumerate() {
+            check!(b[0] == i as i32 * 11, "payload {i}: {}", b[0]);
+        }
+        // Exhausted list: outcount = MPI_UNDEFINED.
+        let mut outcount = 0i32;
+        let mut indices = vec![0i32; K];
+        let mut sts = vec![A::status_empty(); K];
+        check_rc!(A::waitsome(&mut reqs, &mut outcount, &mut indices, &mut sts),
+            "waitsome empty");
+        check!(outcount == A::undefined(), "all-null waitsome: {outcount}");
+    } else if me == 1 {
+        for i in 0..K {
+            let v = [i as i32 * 11];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, i as i32 + 20, A::comm_world()),
+                "send");
+        }
+    }
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// `MPI_Testsome` never blocks: zero completions is a valid outcome, and
+/// once the sends land, polling drains every request.
+fn testsome_drains<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    const K: usize = 2;
+    if me == 0 {
+        let mut bufs = vec![[0i32; 1]; K];
+        let mut reqs = vec![A::request_null(); K];
+        for (i, b) in bufs.iter_mut().enumerate() {
+            check_rc!(
+                A::irecv(slice_ptr_mut(b), 1, dt, 1, i as i32 + 40, A::comm_world(),
+                    &mut reqs[i]),
+                "irecv"
+            );
+        }
+        let mut total = 0usize;
+        while total < K {
+            let mut outcount = 0i32;
+            let mut indices = vec![0i32; K];
+            let mut sts = vec![A::status_empty(); K];
+            check_rc!(A::testsome(&mut reqs, &mut outcount, &mut indices, &mut sts),
+                "testsome");
+            check!(outcount >= 0, "testsome outcount never negative while active");
+            total += outcount as usize;
+        }
+        check!(bufs[0][0] == 100 && bufs[1][0] == 101, "payloads {bufs:?}");
+        let mut outcount = 0i32;
+        let mut indices = vec![0i32; K];
+        let mut sts = vec![A::status_empty(); K];
+        check_rc!(A::testsome(&mut reqs, &mut outcount, &mut indices, &mut sts),
+            "testsome empty");
+        check!(outcount == A::undefined(), "all-null testsome: {outcount}");
+    } else if me == 1 {
+        for i in 0..K {
+            let v = [100 + i as i32];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, i as i32 + 40, A::comm_world()),
+                "send");
+        }
+    }
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
     Ok(())
 }

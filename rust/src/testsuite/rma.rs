@@ -1,0 +1,366 @@
+//! One-sided (RMA) tests: windows, the fence + passive-target epoch
+//! machinery, Put/Get/Accumulate with builtin and derived datatypes, and
+//! the epoch error rules. Every test runs against all five ABI
+//! configurations — window handles, `MPI_Aint` displacements, and the
+//! §5.4 assertion/lock-type constants are part of the binary contract.
+
+use super::util::*;
+use super::TestFn;
+use crate::abi::types::Aint;
+use crate::api::{Dt, MpiAbi, OpName};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("rma.fence_put_ring", fence_put_ring::<A>),
+        ("rma.fence_get", fence_get::<A>),
+        ("rma.fence_zero_ops", fence_zero_ops::<A>),
+        ("rma.fence_ordering", fence_ordering::<A>),
+        ("rma.self_put", self_put::<A>),
+        ("rma.put_outside_epoch_errors", put_outside_epoch_errors::<A>),
+        ("rma.accumulate_sum", accumulate_sum::<A>),
+        ("rma.accumulate_derived_target", accumulate_derived_target::<A>),
+        ("rma.put_derived_target", put_derived_target::<A>),
+        ("rma.lock_exclusive_counter", lock_exclusive_counter::<A>),
+        ("rma.lock_shared_readers", lock_shared_readers::<A>),
+        ("rma.win_allocate", win_allocate::<A>),
+        ("rma.get_address_aint", get_address_aint::<A>),
+        ("rma.proc_null_target", proc_null_target::<A>),
+    ]
+}
+
+fn world_geometry<A: MpiAbi>() -> (i32, i32) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    (size, rank)
+}
+
+const I32_BYTES: i32 = std::mem::size_of::<i32>() as i32;
+
+/// Create an i32 window over `mem`, run `f(win)`, then free the window.
+/// The closing fence is `f`'s job (it knows the epoch structure).
+fn with_i32_win<A: MpiAbi, F: FnOnce(A::Win) -> Result<(), String>>(
+    mem: &mut [i32],
+    f: F,
+) -> Result<(), String> {
+    let mut win = A::win_null();
+    check_rc!(
+        A::win_create(
+            mem.as_mut_ptr() as *mut u8,
+            std::mem::size_of_val(mem) as Aint,
+            I32_BYTES,
+            A::info_null(),
+            A::comm_world(),
+            &mut win,
+        ),
+        "win_create"
+    );
+    check!(win != A::win_null(), "win_create yields a non-null handle");
+    f(win)?;
+    check_rc!(A::win_free(&mut win), "win_free");
+    check!(win == A::win_null(), "win_free nulls the handle");
+    Ok(())
+}
+
+/// Each rank puts `1000 + me` into slot `me` of its right neighbor's
+/// window; after the fence the slot written by the left neighbor holds
+/// the left neighbor's value.
+fn fence_put_ring<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![-1i32; n as usize];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        let right = (me + 1) % n;
+        let v = [1000 + me];
+        check_rc!(A::put(slice_ptr(&v), 1, dt, right, me as Aint, 1, dt, win), "put");
+        check_rc!(A::win_fence(0, win), "closing fence");
+        Ok(())
+    })?;
+    let left = ((me + n - 1) % n) as usize;
+    check!(mem[left] == 1000 + left as i32, "slot {left} holds {} not {}", mem[left],
+        1000 + left as i32);
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// Each rank fills its window, then gets the right neighbor's block.
+fn fence_get<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut mem: Vec<i32> = (0..4).map(|i| me * 100 + i).collect();
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        let right = (me + 1) % n;
+        let mut got = [0i32; 4];
+        check_rc!(A::get(slice_ptr_mut(&mut got), 4, dt, right, 0, 4, dt, win), "get");
+        check_rc!(A::win_fence(0, win), "closing fence");
+        for (i, &g) in got.iter().enumerate() {
+            check!(g == right * 100 + i as i32, "got[{i}] = {g}");
+        }
+        Ok(())
+    })
+}
+
+/// Fences with no operations between them must complete.
+fn fence_zero_ops<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut mem = vec![0i32; 2];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        for k in 0..4 {
+            let rc = A::win_fence(0, win);
+            check!(rc == 0, "zero-op fence {k} returned rc {rc}");
+        }
+        check_rc!(A::win_fence(A::mode_nosucceed(), win), "closing fence");
+        Ok(())
+    })
+}
+
+/// Successive fence epochs order puts: a value put in epoch 1 is visible
+/// to a get in epoch 2.
+fn fence_ordering<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![0i32; 1];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "fence 0");
+        // Epoch 1: rank 0 puts into rank 1.
+        if me == 0 {
+            let v = [777i32];
+            check_rc!(A::put(slice_ptr(&v), 1, dt, 1, 0, 1, dt, win), "put");
+        }
+        check_rc!(A::win_fence(0, win), "fence 1");
+        // Epoch 2: the last rank reads it back from rank 1.
+        let mut got = [0i32];
+        if me == n - 1 {
+            check_rc!(A::get(slice_ptr_mut(&mut got), 1, dt, 1, 0, 1, dt, win), "get");
+        }
+        check_rc!(A::win_fence(0, win), "fence 2");
+        if me == n - 1 {
+            check!(got[0] == 777, "epoch-2 get sees epoch-1 put: {}", got[0]);
+        }
+        Ok(())
+    })
+}
+
+/// Put with the target being the origin itself (the local fast path).
+fn self_put<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![0i32; 2];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        let v = [me * 3 + 1, me * 3 + 2];
+        check_rc!(A::put(slice_ptr(&v), 2, dt, me, 0, 2, dt, win), "self put");
+        check_rc!(A::win_fence(0, win), "closing fence");
+        Ok(())
+    })?;
+    check!(mem == vec![me * 3 + 1, me * 3 + 2], "self put landed: {mem:?}");
+    Ok(())
+}
+
+/// A Put outside any epoch is erroneous (`MPI_ERR_RMA_SYNC` class); the
+/// same Put succeeds once a fence opens an epoch, and fails again after
+/// a NOSUCCEED fence closes it.
+fn put_outside_epoch_errors<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![0i32; 1];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        let v = [me];
+        let right = (me + 1) % n;
+        let rc = A::put(slice_ptr(&v), 1, dt, right, 0, 1, dt, win);
+        check!(rc != 0, "put before any fence must fail, got rc {rc}");
+        check_rc!(A::win_fence(0, win), "opening fence");
+        check_rc!(A::put(slice_ptr(&v), 1, dt, right, 0, 1, dt, win), "put in epoch");
+        check_rc!(A::win_fence(A::mode_nosucceed(), win), "closing fence");
+        let rc = A::put(slice_ptr(&v), 1, dt, right, 0, 1, dt, win);
+        check!(rc != 0, "put after NOSUCCEED fence must fail, got rc {rc}");
+        Ok(())
+    })
+}
+
+/// Every rank accumulates into rank 0's slots with SUM; order-free.
+fn accumulate_sum<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let op = A::op(OpName::Sum);
+    let mut mem = vec![0i32; 3];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        let v = [1i32, me, 2 * me];
+        check_rc!(A::accumulate(slice_ptr(&v), 3, dt, 0, 0, 3, dt, op, win), "accumulate");
+        check_rc!(A::win_fence(0, win), "closing fence");
+        Ok(())
+    })?;
+    if me == 0 {
+        let ranksum: i32 = (0..n).sum();
+        check!(mem[0] == n, "sum of ones: {}", mem[0]);
+        check!(mem[1] == ranksum, "sum of ranks: {}", mem[1]);
+        check!(mem[2] == 2 * ranksum, "sum of 2*ranks: {}", mem[2]);
+    }
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// Accumulate into a *derived* (strided vector) target layout: MAX over
+/// every even slot of rank 0's window.
+fn accumulate_derived_target<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let op = A::op(OpName::Max);
+    let mut vt = dt;
+    check_rc!(A::type_vector(3, 1, 2, dt, &mut vt), "type_vector");
+    check_rc!(A::type_commit(&mut vt), "type_commit");
+    let mut mem = vec![-1i32; 6];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        let v = [me * 10, me * 10 + 1, me * 10 + 2];
+        check_rc!(A::accumulate(slice_ptr(&v), 3, dt, 0, 0, 1, vt, op, win), "accumulate");
+        check_rc!(A::win_fence(0, win), "closing fence");
+        Ok(())
+    })?;
+    if me == 0 {
+        let (n, _) = world_geometry::<A>();
+        let top = (n - 1) * 10;
+        check!(mem[0] == top && mem[2] == top + 1 && mem[4] == top + 2,
+            "strided MAX landed: {mem:?}");
+        check!(mem[1] == -1 && mem[3] == -1 && mem[5] == -1, "holes untouched: {mem:?}");
+    }
+    check_rc!(A::type_free(&mut vt), "type_free");
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// Put a contiguous origin block into a strided target layout.
+fn put_derived_target<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let mut vt = dt;
+    check_rc!(A::type_vector(2, 1, 3, dt, &mut vt), "type_vector");
+    check_rc!(A::type_commit(&mut vt), "type_commit");
+    let mut mem = vec![0i32; 6];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        if me == 0 {
+            let v = [41i32, 42];
+            check_rc!(A::put(slice_ptr(&v), 2, dt, 1, 0, 1, vt, win), "strided put");
+        }
+        check_rc!(A::win_fence(0, win), "closing fence");
+        Ok(())
+    })?;
+    if me == 1 {
+        check!(mem == vec![41, 0, 0, 42, 0, 0], "strided put landed: {mem:?}");
+    }
+    check_rc!(A::type_free(&mut vt), "type_free");
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// Exclusive locks serialize read-modify-write: every rank increments a
+/// counter at rank 0 under `MPI_Win_lock(EXCLUSIVE)` with a flush
+/// between the get and the put. The final count proves mutual exclusion.
+fn lock_exclusive_counter<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![0i32; 1];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_lock(A::lock_exclusive(), 0, 0, win), "lock");
+        let mut cur = [0i32];
+        check_rc!(A::get(slice_ptr_mut(&mut cur), 1, dt, 0, 0, 1, dt, win), "get");
+        check_rc!(A::win_flush(0, win), "flush");
+        let next = [cur[0] + 1];
+        check_rc!(A::put(slice_ptr(&next), 1, dt, 0, 0, 1, dt, win), "put");
+        check_rc!(A::win_unlock(0, win), "unlock");
+        // Every increment is complete at its unlock; the barrier makes
+        // all of them happen-before the window is freed and read.
+        check_rc!(A::barrier(A::comm_world()), "quiesce barrier");
+        Ok(())
+    })?;
+    if me == 0 {
+        check!(mem[0] == n, "counter reached {} not {n}", mem[0]);
+    }
+    check_rc!(A::barrier(A::comm_world()), "exit barrier");
+    Ok(())
+}
+
+/// Shared locks admit concurrent readers.
+fn lock_shared_readers<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_, _me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![31337i32; 1];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::barrier(A::comm_world()), "fill barrier");
+        check_rc!(A::win_lock(A::lock_shared(), 0, 0, win), "shared lock");
+        let mut got = [0i32];
+        check_rc!(A::get(slice_ptr_mut(&mut got), 1, dt, 0, 0, 1, dt, win), "get");
+        check_rc!(A::win_unlock(0, win), "unlock");
+        check!(got[0] == 31337, "shared read: {}", got[0]);
+        check_rc!(A::barrier(A::comm_world()), "exit barrier");
+        Ok(())
+    })
+}
+
+/// `MPI_Win_allocate`: the library owns the memory; ensure puts land in
+/// the buffer the baseptr names.
+fn win_allocate<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let dt = A::datatype(Dt::Int32);
+    let mut base: *mut u8 = std::ptr::null_mut();
+    let mut win = A::win_null();
+    check_rc!(
+        A::win_allocate(
+            (n as usize * std::mem::size_of::<i32>()) as Aint,
+            I32_BYTES,
+            A::info_null(),
+            A::comm_world(),
+            &mut base,
+            &mut win,
+        ),
+        "win_allocate"
+    );
+    check!(!base.is_null(), "win_allocate returns a base pointer");
+    check_rc!(A::win_fence(0, win), "opening fence");
+    let right = (me + 1) % n;
+    let v = [me + 500];
+    check_rc!(A::put(slice_ptr(&v), 1, dt, right, me as Aint, 1, dt, win), "put");
+    check_rc!(A::win_fence(0, win), "closing fence");
+    let left = ((me + n - 1) % n) as usize;
+    let got = unsafe { *(base as *const i32).add(left) };
+    check!(got == left as i32 + 500, "allocated window slot {left} = {got}");
+    check_rc!(A::win_free(&mut win), "win_free");
+    Ok(())
+}
+
+/// `MPI_Get_address` / `MPI_Aint_add` / `MPI_Aint_diff` arithmetic.
+fn get_address_aint<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let arr = [0u8; 16];
+    let mut a0: Aint = 0;
+    let mut a8: Aint = 0;
+    check_rc!(A::get_address(arr.as_ptr(), &mut a0), "get_address");
+    check_rc!(A::get_address(unsafe { arr.as_ptr().add(8) }, &mut a8), "get_address+8");
+    check!(A::aint_diff(a8, a0) == 8, "aint_diff");
+    check!(A::aint_add(a0, 8) == a8, "aint_add");
+    Ok(())
+}
+
+/// RMA to `MPI_PROC_NULL` is a no-op that succeeds.
+fn proc_null_target<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int32);
+    let mut mem = vec![0i32; 1];
+    with_i32_win::<A, _>(&mut mem, |win| {
+        check_rc!(A::win_fence(0, win), "opening fence");
+        let v = [9i32];
+        check_rc!(A::put(slice_ptr(&v), 1, dt, A::proc_null(), 0, 1, dt, win), "put null");
+        let mut g = [0i32];
+        check_rc!(A::get(slice_ptr_mut(&mut g), 1, dt, A::proc_null(), 0, 1, dt, win),
+            "get null");
+        check_rc!(A::win_fence(A::mode_nosucceed(), win), "closing fence");
+        Ok(())
+    })
+}

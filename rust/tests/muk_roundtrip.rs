@@ -1,0 +1,167 @@
+//! Mukautuva handle-conversion round-trip properties, over every handle
+//! kind (including `Win`): wrap→backend→wrap identity for runtime
+//! handles (the word union must be lossless), null-handle mapping in
+//! both directions, predefined-constant table symmetry, and the §5.4
+//! integer-constant translation (lock types, assertion bitmasks).
+
+use mpi_abi::abi::constants as std_k;
+use mpi_abi::abi::handles as std_h;
+use mpi_abi::abi::huffman::HUFFMAN_MAX;
+use mpi_abi::api::MpiAbi;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::muk::convert::*;
+use mpi_abi::muk::word::AsWord;
+
+/// Deterministic word stream above the zero page. For the MPICH backend
+/// the union member is an `int`, so words stay in u32 range with the
+/// KIND_DIRECT bit patterns real MPICH user handles carry.
+fn sample_words(kind_bits: i32) -> Vec<usize> {
+    let mut x: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut out = Vec::new();
+    for _ in 0..64 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let payload = (x >> 40) as i32 & ((1 << 26) - 1);
+        let w = (mpi_abi::impls::mpich::KIND_DIRECT | kind_bits | payload) as u32 as usize;
+        assert!(w > HUFFMAN_MAX, "sample must clear the zero page");
+        out.push(w);
+    }
+    out
+}
+
+/// One kind's property: every sampled runtime word survives
+/// muk→backend→muk bit-identically.
+macro_rules! roundtrip_kind {
+    ($backend:ty, $to_impl:ident, $to_muk:ident, $kind_bits:expr) => {
+        for w in sample_words($kind_bits) {
+            let b = $to_impl::<$backend>(w);
+            assert_eq!($to_muk::<$backend>(b), w, "{} word {w:#x}", stringify!($to_impl));
+        }
+    };
+}
+
+#[test]
+fn runtime_handles_roundtrip_mpich() {
+    use mpi_abi::impls::mpich as m;
+    roundtrip_kind!(MpichAbi, comm_to_impl, comm_to_muk, m::T_COMM);
+    roundtrip_kind!(MpichAbi, dt_to_impl, dt_to_muk, m::T_DATATYPE);
+    roundtrip_kind!(MpichAbi, req_to_impl, req_to_muk, m::T_REQUEST);
+    roundtrip_kind!(MpichAbi, win_to_impl, win_to_muk, m::T_WIN);
+    roundtrip_kind!(MpichAbi, errh_to_impl, errh_to_muk, m::T_ERRHANDLER);
+}
+
+#[test]
+fn runtime_handles_roundtrip_ompi() {
+    // Pointer-handle backend. Comm/request/win/errhandler conversion
+    // only *compares* addresses against the predefined descriptors, so
+    // synthetic words round-trip without ever being dereferenced.
+    use mpi_abi::impls::mpich as m;
+    roundtrip_kind!(OmpiAbi, comm_to_impl, comm_to_muk, m::T_COMM);
+    roundtrip_kind!(OmpiAbi, req_to_impl, req_to_muk, m::T_REQUEST);
+    roundtrip_kind!(OmpiAbi, win_to_impl, win_to_muk, m::T_WIN);
+    roundtrip_kind!(OmpiAbi, errh_to_impl, errh_to_muk, m::T_ERRHANDLER);
+}
+
+#[test]
+fn runtime_datatype_handles_roundtrip_ompi() {
+    // Datatype conversion *dereferences* the descriptor (the
+    // predefined-reverse check reads its engine id), so the samples must
+    // be genuine Open-MPI-style descriptors — exactly what the backend
+    // would hand out for derived types.
+    use mpi_abi::impls::repr::Repr;
+    for k in 0..32u32 {
+        let h = mpi_abi::impls::ompi::OmpiRepr::dt_h(mpi_abi::core::DtId(1000 + k));
+        let w = h.to_word();
+        assert!(w > HUFFMAN_MAX);
+        let b = dt_to_impl::<OmpiAbi>(w);
+        assert_eq!(dt_to_muk::<OmpiAbi>(b), w, "ompi derived dt {w:#x}");
+    }
+}
+
+/// Null handles map constant↔constant in both directions, for both
+/// backends, for every kind that has a null conversion.
+#[test]
+fn null_handles_map_both_ways() {
+    fn check<A: MukBackend>() {
+        assert_eq!(comm_to_impl::<A>(std_h::MPI_COMM_NULL), A::comm_null());
+        assert_eq!(comm_to_muk::<A>(A::comm_null()), std_h::MPI_COMM_NULL);
+        assert_eq!(req_to_impl::<A>(std_h::MPI_REQUEST_NULL), A::request_null());
+        assert_eq!(req_to_muk::<A>(A::request_null()), std_h::MPI_REQUEST_NULL);
+        assert_eq!(win_to_impl::<A>(std_h::MPI_WIN_NULL), A::win_null());
+        assert_eq!(win_to_muk::<A>(A::win_null()), std_h::MPI_WIN_NULL);
+        // Info lacks Debug in the ABI trait; compare without assert_eq.
+        assert!(info_to_impl::<A>(std_h::MPI_INFO_NULL) == A::info_null());
+    }
+    check::<MpichAbi>();
+    check::<OmpiAbi>();
+}
+
+/// Every predefined datatype and op constant translates to the backend
+/// and back to the same zero-page word.
+#[test]
+fn predefined_constants_roundtrip() {
+    fn check<A: MukBackend>(name: &str) {
+        for &(_, c) in mpi_abi::abi::datatypes::PREDEFINED_DATATYPES {
+            if c == mpi_abi::abi::datatypes::MPI_DATATYPE_NULL {
+                continue;
+            }
+            let b = dt_to_impl::<A>(c);
+            assert_eq!(dt_to_muk::<A>(b), c, "{name} dt {c:#x}");
+        }
+        for &(_, c) in mpi_abi::abi::ops::PREDEFINED_OPS {
+            if c == mpi_abi::abi::ops::MPI_OP_NULL {
+                continue;
+            }
+            let b = op_to_impl::<A>(c);
+            assert_eq!(A::predef_op_rev(b), Some(c), "{name} op {c:#x}");
+        }
+    }
+    check::<MpichAbi>("mpich");
+    check::<OmpiAbi>("ompi");
+}
+
+/// §5.4 integer constants translate by value: lock types hit MPICH's
+/// historical 234/235, and assertion bitmasks re-encode into Open MPI's
+/// dense numbering bit by bit.
+#[test]
+fn lock_and_assert_constants_translate() {
+    assert_eq!(lock_type_to_impl::<MpichAbi>(std_k::MPI_LOCK_EXCLUSIVE), 234);
+    assert_eq!(lock_type_to_impl::<MpichAbi>(std_k::MPI_LOCK_SHARED), 235);
+    assert_eq!(
+        lock_type_to_impl::<OmpiAbi>(std_k::MPI_LOCK_EXCLUSIVE),
+        std_k::MPI_LOCK_EXCLUSIVE
+    );
+
+    // MPICH shares the standard ABI's mode values: identity.
+    let all = std_k::MPI_MODE_NOCHECK
+        | std_k::MPI_MODE_NOSTORE
+        | std_k::MPI_MODE_NOPUT
+        | std_k::MPI_MODE_NOPRECEDE
+        | std_k::MPI_MODE_NOSUCCEED;
+    assert_eq!(assert_to_impl::<MpichAbi>(all), all);
+    assert_eq!(assert_to_impl::<MpichAbi>(0), 0);
+
+    // Open MPI renumbers the family; each bit maps individually.
+    use mpi_abi::impls::ompi as o;
+    assert_eq!(assert_to_impl::<OmpiAbi>(std_k::MPI_MODE_NOCHECK), o::MPI_MODE_NOCHECK);
+    assert_eq!(assert_to_impl::<OmpiAbi>(std_k::MPI_MODE_NOSUCCEED), o::MPI_MODE_NOSUCCEED);
+    assert_eq!(
+        assert_to_impl::<OmpiAbi>(std_k::MPI_MODE_NOCHECK | std_k::MPI_MODE_NOPUT),
+        o::MPI_MODE_NOCHECK | o::MPI_MODE_NOPUT
+    );
+    assert_eq!(assert_to_impl::<OmpiAbi>(all),
+        o::MPI_MODE_NOCHECK | o::MPI_MODE_NOSTORE | o::MPI_MODE_NOPUT | o::MPI_MODE_NOPRECEDE
+            | o::MPI_MODE_NOSUCCEED);
+}
+
+/// The backend `Win` handle types ride the word union losslessly
+/// (pointer-width preservation, sign bit of MPICH int handles included).
+#[test]
+fn win_word_union_preserves_bits() {
+    let mpich_win: i32 = mpi_abi::impls::mpich::KIND_DIRECT | mpi_abi::impls::mpich::T_WIN | 7;
+    assert_eq!(<i32 as AsWord>::from_word(mpich_win.to_word()), mpich_win);
+    let desc = Box::leak(Box::new(0u64));
+    let ompi_win = mpi_abi::impls::ompi::OmpiWin(
+        desc as *const u64 as *const mpi_abi::impls::ompi::Desc,
+    );
+    assert_eq!(mpi_abi::impls::ompi::OmpiWin::from_word(ompi_win.to_word()), ompi_win);
+}

@@ -1,0 +1,56 @@
+//! Acceptance: the RMA halo exchange produces bitwise-identical results
+//! to the pt2pt (sendrecv) and persistent modes, under every ABI
+//! configuration and on both transports.
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::apps::halo::{jacobi, HaloMode, HaloParams};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+const RANKS: usize = 3;
+const N: usize = 48;
+const ITERS: usize = 8;
+
+struct Halo {
+    transport: TransportKind,
+    mode: HaloMode,
+}
+
+impl AbiApp<f64> for Halo {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let mode = self.mode;
+        let out = run_job_ok(JobSpec::new(RANKS).with_transport(self.transport), move |_| {
+            A::init();
+            let (_, global) = jacobi::<A>(HaloParams { n: N, iters: ITERS, mode });
+            A::finalize();
+            global
+        });
+        out[0]
+    }
+}
+
+#[test]
+fn rma_halo_bitwise_matches_pt2pt_all_configs_both_transports() {
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        // Reference: sendrecv on the native standard ABI.
+        let reference = with_abi(
+            AbiConfig::NativeAbi,
+            Halo { transport, mode: HaloMode::Sendrecv },
+        );
+        assert!(reference > 0.0, "heat must have diffused");
+        for abi in AbiConfig::ALL {
+            for mode in [HaloMode::Sendrecv, HaloMode::Persistent, HaloMode::Rma] {
+                let got = with_abi(abi, Halo { transport, mode });
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "{} / {} on {} transport diverged: {got} vs {reference}",
+                    abi.name(),
+                    mode.name(),
+                    transport.name(),
+                );
+            }
+        }
+    }
+}
