@@ -1,0 +1,76 @@
+//! Sessions quick-start (MPI-4): initialize MPI **without `MPI_Init`**,
+//! discover process sets, derive a communicator with no parent, and
+//! compute over it — the library-friendly initialization story of
+//! MPI-4 §11, against the standard ABI.
+//!
+//! ```bash
+//! cargo run --release --example sessions
+//! ```
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+use mpi_abi::native_abi::NativeAbi;
+
+// init → pset → group → comm, never calling MPI_Init.
+fn app<A: MpiAbi>(_rank: usize) -> Vec<String> {
+    let mut log = Vec::new();
+
+    // 1. A session is this component's own init epoch.
+    let mut session = A::session_null();
+    A::session_init(A::info_null(), A::errhandler_return(), &mut session);
+    log.push(format!("initialized via sessions: MPI_Initialized = {}", A::initialized()));
+
+    // 2. Discover the process sets the launcher exposes.
+    let mut n = 0;
+    A::session_get_num_psets(session, &mut n);
+    for i in 0..n {
+        let mut name = String::new();
+        A::session_get_nth_pset(session, i, &mut name);
+        let mut info = A::info_null();
+        A::session_get_pset_info(session, &name, &mut info);
+        let (mut size, mut flag) = (String::new(), false);
+        A::info_get(info, "mpi_size", &mut size, &mut flag);
+        A::info_free(&mut info);
+        log.push(format!("pset {i}: {name} (mpi_size = {size})"));
+    }
+
+    // 3. Group from a pset, communicator from the group — no parent
+    //    comm; the tag string disambiguates concurrent creations.
+    let mut group = unsafe { std::mem::zeroed::<A::Group>() };
+    A::group_from_session_pset(session, "mpi://WORLD", &mut group);
+    let mut comm = A::comm_null();
+    A::comm_create_from_group(group, "example://sessions", A::info_null(),
+        A::errhandler_return(), &mut comm);
+    A::group_free(&mut group);
+
+    // 4. The derived comm is a full communicator.
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(comm, &mut size);
+    A::comm_rank(comm, &mut rank);
+    let mine = (rank + 1) as i64;
+    let mut sum = 0i64;
+    A::allreduce(
+        &mine as *const i64 as *const u8,
+        &mut sum as *mut i64 as *mut u8,
+        1,
+        A::datatype(Dt::Int64),
+        A::op(OpName::Sum),
+        comm,
+    );
+    log.push(format!("rank {rank}/{size}: sum(1..={size}) = {sum}"));
+
+    // 5. Tear down. MPI_Finalized turns true at the last finalize.
+    A::comm_free(&mut comm);
+    A::session_finalize(&mut session);
+    log.push(format!("session closed: MPI_Finalized = {}", A::finalized()));
+    log
+}
+
+fn main() {
+    let logs = run_job_ok(JobSpec::new(4), app::<NativeAbi>);
+    for (rank, log) in logs.into_iter().enumerate() {
+        for line in log {
+            println!("[rank {rank}] {line}");
+        }
+    }
+}

@@ -15,9 +15,14 @@
 //! translation layers into the trampoline/state-map machinery the paper
 //! describes (§6.2), rather than letting Rust closures smuggle state.
 
+// The portable surface is itself part of the reproduced contract: every
+// public item must say which MPI entity it stands for.
+#![warn(missing_docs)]
+
 /// Canonical names for the predefined datatypes the portable surface
 /// exposes (each ABI maps them to its own handle representation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // variants name their `MPI_*` datatype 1:1
 pub enum Dt {
     Int,
     Float,
@@ -36,6 +41,7 @@ pub enum Dt {
 
 /// Canonical names for the predefined reduction ops.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // variants name their `MPI_*` op 1:1
 pub enum OpName {
     Sum,
     Min,
@@ -74,36 +80,61 @@ pub trait MpiAbi: 'static {
     /// Human name for reports ("mpich", "ompi", "muk(mpich)", "abi").
     const NAME: &'static str;
 
+    /// `MPI_Comm` in this ABI's representation.
     type Comm: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Datatype` in this ABI's representation.
     type Datatype: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Op` in this ABI's representation.
     type Op: Copy + PartialEq;
+    /// `MPI_Request` in this ABI's representation.
     type Request: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Group` in this ABI's representation.
     type Group: Copy + PartialEq;
+    /// `MPI_Errhandler` in this ABI's representation.
     type Errhandler: Copy + PartialEq;
+    /// `MPI_Info` in this ABI's representation.
     type Info: Copy + PartialEq;
     /// `MPI_Win` — the RMA window handle (in the paper's handle table
     /// alongside `MPI_Comm` and `MPI_Request`).
     type Win: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Session` — the MPI-4 sessions handle, reserved its own kind
+    /// in the standard ABI's Huffman code from day one (§5.4 / A.2).
+    type Session: Copy + PartialEq + std::fmt::Debug;
     /// The ABI's status struct (layouts differ! §3.2).
     type Status: Copy;
 
     // --- Predefined constants (functions: OMPI-style constants are
     // link-time addresses, not compile-time constants) ---
+    /// The `MPI_COMM_WORLD` handle constant.
     fn comm_world() -> Self::Comm;
+    /// The `MPI_COMM_SELF` handle constant.
     fn comm_self() -> Self::Comm;
+    /// The `MPI_COMM_NULL` handle constant.
     fn comm_null() -> Self::Comm;
+    /// The `MPI_REQUEST_NULL` handle constant.
     fn request_null() -> Self::Request;
+    /// The handle for a predefined datatype.
     fn datatype(d: Dt) -> Self::Datatype;
+    /// The handle for a predefined reduction op.
     fn op(o: OpName) -> Self::Op;
+    /// The `MPI_ERRORS_RETURN` handle constant.
     fn errhandler_return() -> Self::Errhandler;
+    /// The `MPI_ERRORS_ARE_FATAL` handle constant.
     fn errhandler_fatal() -> Self::Errhandler;
+    /// The `MPI_INFO_NULL` handle constant.
     fn info_null() -> Self::Info;
+    /// The `MPI_WIN_NULL` handle constant.
     fn win_null() -> Self::Win;
+    /// The `MPI_SESSION_NULL` handle constant.
+    fn session_null() -> Self::Session;
 
     /// Special integer constants — ABIs number these differently.
     fn any_source() -> i32;
+    /// This ABI's `MPI_ANY_TAG` value.
     fn any_tag() -> i32;
+    /// This ABI's `MPI_PROC_NULL` value.
     fn proc_null() -> i32;
+    /// This ABI's `MPI_UNDEFINED` value.
     fn undefined() -> i32;
     /// The `MPI_IN_PLACE` buffer sentinel.
     fn in_place() -> *const u8;
@@ -126,27 +157,88 @@ pub trait MpiAbi: 'static {
 
     /// Success / canonical error classes in this ABI's numbering.
     fn err_class_of(code: i32) -> i32;
+    /// `MPI_Error_string`.
     fn error_string(code: i32) -> String;
     /// This ABI's numeric value for a canonical (standard-ABI) class.
     fn err_from_canonical(class: i32) -> i32;
 
     // --- Environment ---
+    /// `MPI_Init`.
     fn init() -> i32;
+    /// `MPI_Finalize`.
     fn finalize() -> i32;
+    /// `MPI_Initialized`.
     fn initialized() -> bool;
+    /// `MPI_Finalized`.
     fn finalized() -> bool;
+    /// `MPI_Abort`.
     fn abort(comm: Self::Comm, code: i32) -> i32;
+    /// `MPI_Wtime`.
     fn wtime() -> f64;
+    /// `MPI_Get_library_version`.
     fn get_library_version() -> String;
+    /// `MPI_Get_version`: (version, subversion).
     fn get_version() -> (i32, i32);
+    /// `MPI_Get_processor_name`.
     fn get_processor_name() -> String;
 
+    // --- Sessions (MPI-4) ---
+    //
+    // The sessions model initializes MPI without `MPI_Init`: a session
+    // is its own init epoch (world and N sessions may coexist; finalize
+    // order is free), process sets are discovered by name, and
+    // `MPI_Comm_create_from_group` derives a communicator with *no
+    // parent* — concurrent creations are disambiguated by the caller's
+    // tag string. `MPI_Session` is a first-class opaque handle in every
+    // layer, exactly like `MPI_Comm` and `MPI_Win`.
+
+    /// `MPI_Session_init`. The info argument carries requested runtime
+    /// hints (ignored by this engine); the error handler is attached to
+    /// the session.
+    fn session_init(
+        info: Self::Info,
+        errh: Self::Errhandler,
+        session: &mut Self::Session,
+    ) -> i32;
+    /// `MPI_Session_finalize`: nulls the handle on success; finalizing
+    /// an already-finalized (null) session is an error.
+    fn session_finalize(session: &mut Self::Session) -> i32;
+    /// `MPI_Session_get_num_psets` (info argument elided: no matching
+    /// criteria are supported).
+    fn session_get_num_psets(session: Self::Session, out: &mut i32) -> i32;
+    /// `MPI_Session_get_nth_pset`: the nth process-set name, in a
+    /// stable order (`mpi://WORLD`, `mpi://SELF`, launcher sets).
+    fn session_get_nth_pset(session: Self::Session, n: i32, out: &mut String) -> i32;
+    /// `MPI_Session_get_pset_info`: an info object describing the named
+    /// set (key `mpi_size`); the caller frees it.
+    fn session_get_pset_info(session: Self::Session, pset: &str, out: &mut Self::Info) -> i32;
+    /// `MPI_Group_from_session_pset`.
+    fn group_from_session_pset(session: Self::Session, pset: &str, out: &mut Self::Group) -> i32;
+    /// `MPI_Comm_create_from_group`: collective over exactly the
+    /// group's members, no parent communicator; `stringtag`
+    /// disambiguates concurrent creations over overlapping groups. The
+    /// info argument is ignored; the error handler is attached to the
+    /// new communicator.
+    fn comm_create_from_group(
+        group: Self::Group,
+        stringtag: &str,
+        info: Self::Info,
+        errh: Self::Errhandler,
+        out: &mut Self::Comm,
+    ) -> i32;
+
     // --- Status accessors (layouts differ per ABI) ---
+    /// An empty status in this ABI's layout.
     fn status_empty() -> Self::Status;
+    /// Read `MPI_SOURCE` from this ABI's status layout.
     fn status_source(s: &Self::Status) -> i32;
+    /// Read `MPI_TAG` from this ABI's status layout.
     fn status_tag(s: &Self::Status) -> i32;
+    /// Read `MPI_ERROR` from this ABI's status layout.
     fn status_error(s: &Self::Status) -> i32;
+    /// `MPI_Test_cancelled`.
     fn status_cancelled(s: &Self::Status) -> bool;
+    /// `MPI_Get_count`.
     fn get_count(s: &Self::Status, dt: Self::Datatype) -> i32;
     /// `MPI_Get_elements`: basic-element count of the received data —
     /// unlike `get_count` it resolves partial items of a derived type
@@ -154,31 +246,50 @@ pub trait MpiAbi: 'static {
     fn get_elements(s: &Self::Status, dt: Self::Datatype) -> i32;
 
     // --- Communicators & groups ---
+    /// `MPI_Comm_size`.
     fn comm_size(c: Self::Comm, out: &mut i32) -> i32;
+    /// `MPI_Comm_rank`.
     fn comm_rank(c: Self::Comm, out: &mut i32) -> i32;
+    /// `MPI_Comm_dup`.
     fn comm_dup(c: Self::Comm, out: &mut Self::Comm) -> i32;
+    /// `MPI_Comm_split`.
     fn comm_split(c: Self::Comm, color: i32, key: i32, out: &mut Self::Comm) -> i32;
+    /// `MPI_Comm_free`.
     fn comm_free(c: &mut Self::Comm) -> i32;
+    /// `MPI_Comm_compare`.
     fn comm_compare(a: Self::Comm, b: Self::Comm, out: &mut i32) -> i32;
+    /// `MPI_Comm_set_name`.
     fn comm_set_name(c: Self::Comm, name: &str) -> i32;
+    /// `MPI_Comm_get_name`.
     fn comm_get_name(c: Self::Comm, out: &mut String) -> i32;
+    /// `MPI_Comm_group`.
     fn comm_group(c: Self::Comm, out: &mut Self::Group) -> i32;
+    /// `MPI_Group_size`.
     fn group_size(g: Self::Group, out: &mut i32) -> i32;
+    /// `MPI_Group_rank`.
     fn group_rank(g: Self::Group, out: &mut i32) -> i32;
+    /// `MPI_Group_incl`.
     fn group_incl(g: Self::Group, ranks: &[i32], out: &mut Self::Group) -> i32;
+    /// `MPI_Group_translate_ranks`.
     fn group_translate_ranks(
         a: Self::Group,
         ranks: &[i32],
         b: Self::Group,
         out: &mut [i32],
     ) -> i32;
+    /// `MPI_Group_free`.
     fn group_free(g: &mut Self::Group) -> i32;
+    /// `MPI_Comm_set_errhandler`.
     fn comm_set_errhandler(c: Self::Comm, e: Self::Errhandler) -> i32;
+    /// `MPI_Comm_get_errhandler`.
     fn comm_get_errhandler(c: Self::Comm, out: &mut Self::Errhandler) -> i32;
+    /// `MPI_Comm_create_errhandler`.
     fn comm_create_errhandler(f: ErrhFn<Self>, out: &mut Self::Errhandler) -> i32;
+    /// `MPI_Errhandler_free`.
     fn errhandler_free(e: &mut Self::Errhandler) -> i32;
 
     // --- Point-to-point ---
+    /// `MPI_Send`.
     fn send(
         buf: *const u8,
         count: i32,
@@ -187,6 +298,7 @@ pub trait MpiAbi: 'static {
         tag: i32,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Ssend`.
     fn ssend(
         buf: *const u8,
         count: i32,
@@ -195,6 +307,7 @@ pub trait MpiAbi: 'static {
         tag: i32,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Recv`.
     fn recv(
         buf: *mut u8,
         count: i32,
@@ -204,6 +317,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         status: &mut Self::Status,
     ) -> i32;
+    /// `MPI_Isend`.
     fn isend(
         buf: *const u8,
         count: i32,
@@ -213,6 +327,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Issend`.
     fn issend(
         buf: *const u8,
         count: i32,
@@ -222,6 +337,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Irecv`.
     fn irecv(
         buf: *mut u8,
         count: i32,
@@ -231,10 +347,15 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Wait`.
     fn wait(req: &mut Self::Request, status: &mut Self::Status) -> i32;
+    /// `MPI_Test`.
     fn test(req: &mut Self::Request, flag: &mut bool, status: &mut Self::Status) -> i32;
+    /// `MPI_Waitall`.
     fn waitall(reqs: &mut [Self::Request], statuses: &mut [Self::Status]) -> i32;
+    /// `MPI_Testall`.
     fn testall(reqs: &mut [Self::Request], flag: &mut bool, statuses: &mut [Self::Status]) -> i32;
+    /// `MPI_Waitany`.
     fn waitany(reqs: &mut [Self::Request], index: &mut i32, status: &mut Self::Status) -> i32;
     /// `MPI_Testany` (§3.7.5): on return, `flag && index >= 0` means that
     /// request completed; `flag && index == MPI_UNDEFINED` means no
@@ -264,7 +385,9 @@ pub trait MpiAbi: 'static {
         indices: &mut [i32],
         statuses: &mut [Self::Status],
     ) -> i32;
+    /// `MPI_Probe`.
     fn probe(src: i32, tag: i32, comm: Self::Comm, status: &mut Self::Status) -> i32;
+    /// `MPI_Iprobe`.
     fn iprobe(
         src: i32,
         tag: i32,
@@ -272,8 +395,11 @@ pub trait MpiAbi: 'static {
         flag: &mut bool,
         status: &mut Self::Status,
     ) -> i32;
+    /// `MPI_Cancel`.
     fn cancel(req: &mut Self::Request) -> i32;
+    /// `MPI_Request_free`.
     fn request_free(req: &mut Self::Request) -> i32;
+    /// `MPI_Sendrecv`.
     fn sendrecv(
         sendbuf: *const u8,
         sendcount: i32,
@@ -297,6 +423,7 @@ pub trait MpiAbi: 'static {
     // REQUEST_NULL through `request_free`, legal while inactive). The
     // lifecycle must behave identically across ABIs — it is part of the
     // binary contract the paper standardizes.
+    /// `MPI_Send_init`.
     fn send_init(
         buf: *const u8,
         count: i32,
@@ -306,6 +433,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Ssend_init`.
     fn ssend_init(
         buf: *const u8,
         count: i32,
@@ -315,6 +443,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Recv_init`.
     fn recv_init(
         buf: *mut u8,
         count: i32,
@@ -324,13 +453,19 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Start`.
     fn start(req: &mut Self::Request) -> i32;
+    /// `MPI_Startall`.
     fn startall(reqs: &mut [Self::Request]) -> i32;
 
     // --- Datatypes ---
+    /// `MPI_Type_size`.
     fn type_size(dt: Self::Datatype, out: &mut i32) -> i32;
+    /// `MPI_Type_get_extent`.
     fn type_get_extent(dt: Self::Datatype, lb: &mut isize, extent: &mut isize) -> i32;
+    /// `MPI_Type_contiguous`.
     fn type_contiguous(count: i32, child: Self::Datatype, out: &mut Self::Datatype) -> i32;
+    /// `MPI_Type_vector`.
     fn type_vector(
         count: i32,
         blocklen: i32,
@@ -338,21 +473,30 @@ pub trait MpiAbi: 'static {
         child: Self::Datatype,
         out: &mut Self::Datatype,
     ) -> i32;
+    /// `MPI_Type_create_struct`.
     fn type_create_struct(
         blocks: &[(i32, isize, Self::Datatype)],
         out: &mut Self::Datatype,
     ) -> i32;
+    /// `MPI_Type_commit`.
     fn type_commit(dt: &mut Self::Datatype) -> i32;
+    /// `MPI_Type_free`.
     fn type_free(dt: &mut Self::Datatype) -> i32;
+    /// `MPI_Type_dup`.
     fn type_dup(dt: Self::Datatype, out: &mut Self::Datatype) -> i32;
 
     // --- Reduction ops ---
+    /// `MPI_Op_create`.
     fn op_create(f: UserOpFn<Self>, commute: bool, out: &mut Self::Op) -> i32;
+    /// `MPI_Op_free`.
     fn op_free(op: &mut Self::Op) -> i32;
 
     // --- Collectives ---
+    /// `MPI_Barrier`.
     fn barrier(comm: Self::Comm) -> i32;
+    /// `MPI_Bcast`.
     fn bcast(buf: *mut u8, count: i32, dt: Self::Datatype, root: i32, comm: Self::Comm) -> i32;
+    /// `MPI_Reduce`.
     fn reduce(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -362,6 +506,7 @@ pub trait MpiAbi: 'static {
         root: i32,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Allreduce`.
     fn allreduce(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -370,6 +515,7 @@ pub trait MpiAbi: 'static {
         op: Self::Op,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Gather`.
     fn gather(
         sendbuf: *const u8,
         sendcount: i32,
@@ -380,6 +526,7 @@ pub trait MpiAbi: 'static {
         root: i32,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Scatter`.
     fn scatter(
         sendbuf: *const u8,
         sendcount: i32,
@@ -390,6 +537,7 @@ pub trait MpiAbi: 'static {
         root: i32,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Allgather`.
     fn allgather(
         sendbuf: *const u8,
         sendcount: i32,
@@ -399,6 +547,7 @@ pub trait MpiAbi: 'static {
         recvtype: Self::Datatype,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Alltoall`.
     fn alltoall(
         sendbuf: *const u8,
         sendcount: i32,
@@ -408,6 +557,7 @@ pub trait MpiAbi: 'static {
         recvtype: Self::Datatype,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Alltoallw`.
     fn alltoallw(
         sendbuf: *const u8,
         sendcounts: &[i32],
@@ -419,6 +569,7 @@ pub trait MpiAbi: 'static {
         recvtypes: &[Self::Datatype],
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Ialltoallw`.
     fn ialltoallw(
         sendbuf: *const u8,
         sendcounts: &[i32],
@@ -431,6 +582,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Scan`.
     fn scan(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -439,6 +591,7 @@ pub trait MpiAbi: 'static {
         op: Self::Op,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Exscan`.
     fn exscan(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -447,6 +600,7 @@ pub trait MpiAbi: 'static {
         op: Self::Op,
         comm: Self::Comm,
     ) -> i32;
+    /// `MPI_Reduce_scatter_block`.
     fn reduce_scatter_block(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -463,7 +617,9 @@ pub trait MpiAbi: 'static {
     // per-call temporary state alive until completion (§6.2) — the
     // heaviest handle traffic in the API, which is why the benches
     // measure exactly these paths.
+    /// `MPI_Ibarrier`.
     fn ibarrier(comm: Self::Comm, req: &mut Self::Request) -> i32;
+    /// `MPI_Ibcast`.
     fn ibcast(
         buf: *mut u8,
         count: i32,
@@ -472,6 +628,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Ireduce`.
     fn ireduce(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -482,6 +639,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iallreduce`.
     fn iallreduce(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -491,6 +649,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Igather`.
     fn igather(
         sendbuf: *const u8,
         sendcount: i32,
@@ -502,6 +661,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Igatherv`.
     fn igatherv(
         sendbuf: *const u8,
         sendcount: i32,
@@ -514,6 +674,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iscatter`.
     fn iscatter(
         sendbuf: *const u8,
         sendcount: i32,
@@ -525,6 +686,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iscatterv`.
     fn iscatterv(
         sendbuf: *const u8,
         sendcounts: &[i32],
@@ -537,6 +699,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iallgather`.
     fn iallgather(
         sendbuf: *const u8,
         sendcount: i32,
@@ -547,6 +710,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iallgatherv`.
     fn iallgatherv(
         sendbuf: *const u8,
         sendcount: i32,
@@ -558,6 +722,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Ialltoall`.
     fn ialltoall(
         sendbuf: *const u8,
         sendcount: i32,
@@ -568,6 +733,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Ialltoallv`.
     fn ialltoallv(
         sendbuf: *const u8,
         sendcounts: &[i32],
@@ -580,6 +746,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iscan`.
     fn iscan(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -589,6 +756,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Iexscan`.
     fn iexscan(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -598,6 +766,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Ireduce_scatter_block`.
     fn ireduce_scatter_block(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -614,7 +783,9 @@ pub trait MpiAbi: 'static {
     // persistent collectives in the same order (they agree on a tag
     // plane at init time). Starts re-read the user buffers; the
     // schedule built at init is reused, never rebuilt.
+    /// `MPI_Barrier_init`.
     fn barrier_init(comm: Self::Comm, req: &mut Self::Request) -> i32;
+    /// `MPI_Bcast_init`.
     fn bcast_init(
         buf: *mut u8,
         count: i32,
@@ -623,6 +794,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Allreduce_init`.
     fn allreduce_init(
         sendbuf: *const u8,
         recvbuf: *mut u8,
@@ -632,6 +804,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Gather_init`.
     fn gather_init(
         sendbuf: *const u8,
         sendcount: i32,
@@ -643,6 +816,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Scatter_init`.
     fn scatter_init(
         sendbuf: *const u8,
         sendcount: i32,
@@ -654,6 +828,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         req: &mut Self::Request,
     ) -> i32;
+    /// `MPI_Alltoall_init`.
     fn alltoall_init(
         sendbuf: *const u8,
         sendcount: i32,
@@ -673,6 +848,7 @@ pub trait MpiAbi: 'static {
     // the word union like any other handle. Displacements are `MPI_Aint`
     // (§5.1) and assertion/lock-type constants differ per ABI (§5.4) —
     // use the `mode_*`/`lock_*` constant functions above.
+    /// `MPI_Win_create`.
     fn win_create(
         base: *mut u8,
         size: crate::abi::types::Aint,
@@ -681,6 +857,7 @@ pub trait MpiAbi: 'static {
         comm: Self::Comm,
         win: &mut Self::Win,
     ) -> i32;
+    /// `MPI_Win_allocate`.
     fn win_allocate(
         size: crate::abi::types::Aint,
         disp_unit: i32,
@@ -689,11 +866,17 @@ pub trait MpiAbi: 'static {
         baseptr: &mut *mut u8,
         win: &mut Self::Win,
     ) -> i32;
+    /// `MPI_Win_free`.
     fn win_free(win: &mut Self::Win) -> i32;
+    /// `MPI_Win_fence`.
     fn win_fence(assert: i32, win: Self::Win) -> i32;
+    /// `MPI_Win_lock`.
     fn win_lock(lock_type: i32, rank: i32, assert: i32, win: Self::Win) -> i32;
+    /// `MPI_Win_unlock`.
     fn win_unlock(rank: i32, win: Self::Win) -> i32;
+    /// `MPI_Win_flush`.
     fn win_flush(rank: i32, win: Self::Win) -> i32;
+    /// `MPI_Put`.
     fn put(
         origin: *const u8,
         origin_count: i32,
@@ -704,6 +887,7 @@ pub trait MpiAbi: 'static {
         target_dt: Self::Datatype,
         win: Self::Win,
     ) -> i32;
+    /// `MPI_Get`.
     fn get(
         origin: *mut u8,
         origin_count: i32,
@@ -714,6 +898,7 @@ pub trait MpiAbi: 'static {
         target_dt: Self::Datatype,
         win: Self::Win,
     ) -> i32;
+    /// `MPI_Accumulate`.
     fn accumulate(
         origin: *const u8,
         origin_count: i32,
@@ -743,21 +928,30 @@ pub trait MpiAbi: 'static {
     }
 
     // --- Attributes ---
+    /// `MPI_Comm_create_keyval`.
     fn comm_create_keyval(
         copy: Option<AttrCopyFn<Self>>,
         delete: Option<AttrDeleteFn<Self>>,
         extra_state: usize,
         out: &mut i32,
     ) -> i32;
+    /// `MPI_Comm_free_keyval`.
     fn comm_free_keyval(keyval: &mut i32) -> i32;
+    /// `MPI_Comm_set_attr`.
     fn comm_set_attr(c: Self::Comm, keyval: i32, value: usize) -> i32;
+    /// `MPI_Comm_get_attr`.
     fn comm_get_attr(c: Self::Comm, keyval: i32, value: &mut usize, flag: &mut bool) -> i32;
+    /// `MPI_Comm_delete_attr`.
     fn comm_delete_attr(c: Self::Comm, keyval: i32) -> i32;
 
     // --- Info ---
+    /// `MPI_Info_create`.
     fn info_create(out: &mut Self::Info) -> i32;
+    /// `MPI_Info_set`.
     fn info_set(i: Self::Info, key: &str, value: &str) -> i32;
+    /// `MPI_Info_get`.
     fn info_get(i: Self::Info, key: &str, out: &mut String, flag: &mut bool) -> i32;
+    /// `MPI_Info_free`.
     fn info_free(i: &mut Self::Info) -> i32;
 }
 

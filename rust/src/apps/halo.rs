@@ -73,13 +73,49 @@ impl Default for HaloParams {
     }
 }
 
-/// Run the stencil; returns (local residual sum, global residual sum)
-/// after `iters` sweeps. Call from every rank.
+/// Run the stencil over `MPI_COMM_WORLD`; returns (local residual sum,
+/// global residual sum) after `iters` sweeps. Call from every rank.
 pub fn jacobi<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
+    jacobi_on::<A>(A::comm_world(), p)
+}
+
+/// The **sessions-only** halo: initialize MPI through the MPI-4
+/// sessions model — `MPI_Session_init` → `mpi://WORLD` pset → group →
+/// `MPI_Comm_create_from_group` — run the stencil over the derived
+/// communicator, and tear everything down, **without ever calling
+/// `MPI_Init`**. The result must be bitwise identical to [`jacobi`]
+/// under the world model, in every exchange mode, under every ABI
+/// configuration (proved by `tests/session_halo.rs`).
+pub fn jacobi_sessions<A: MpiAbi>(p: HaloParams) -> (f64, f64) {
+    let mut session = A::session_null();
+    let rc = A::session_init(A::info_null(), A::errhandler_return(), &mut session);
+    assert_eq!(rc, 0, "session_init");
+    let mut group = unsafe { std::mem::zeroed::<A::Group>() };
+    let rc = A::group_from_session_pset(session, crate::core::session::PSET_WORLD, &mut group);
+    assert_eq!(rc, 0, "group_from_session_pset");
+    let mut comm = A::comm_null();
+    let rc = A::comm_create_from_group(
+        group,
+        "mpi-abi://apps/halo",
+        A::info_null(),
+        A::errhandler_return(),
+        &mut comm,
+    );
+    assert_eq!(rc, 0, "comm_create_from_group");
+    A::group_free(&mut group);
+    let out = jacobi_on::<A>(comm, p);
+    A::comm_free(&mut comm);
+    let rc = A::session_finalize(&mut session);
+    assert_eq!(rc, 0, "session_finalize");
+    out
+}
+
+/// Run the stencil over an arbitrary communicator (the world-model and
+/// sessions-only entry points both land here).
+pub fn jacobi_on<A: MpiAbi>(world: A::Comm, p: HaloParams) -> (f64, f64) {
     let (mut size, mut rank) = (0, 0);
-    A::comm_size(A::comm_world(), &mut size);
-    A::comm_rank(A::comm_world(), &mut rank);
-    let world = A::comm_world();
+    A::comm_size(world, &mut size);
+    A::comm_rank(world, &mut rank);
     let dt = A::datatype(Dt::Double);
     let n = p.n;
     let rows_per = n / size as usize;

@@ -52,12 +52,17 @@ impl CommObj {
     }
 }
 
-/// Install placeholder WORLD/SELF comms; sized at `MPI_Init` by
-/// [`finish_predefined`] (world size unknown at table construction).
+/// Install placeholder WORLD/SELF comms (plus the hidden session
+/// bootstrap comm); sized at init by [`finish_predefined`] (world size
+/// unknown at table construction).
 pub fn install_predefined(comms: &mut Slab<CommObj>) {
     for (id, (name, ctxp, ctxc)) in [
         (super::reserved::COMM_WORLD.0, ("MPI_COMM_WORLD", 0, 1)),
         (super::reserved::COMM_SELF.0, ("MPI_COMM_SELF", 2, 3)),
+        // World-spanning but never exposed through any ABI: carries only
+        // `MPI_Comm_create_from_group` context-plane agreement traffic
+        // (see `core::session`).
+        (super::reserved::COMM_BOOTSTRAP.0, ("(session-bootstrap)", 4, 5)),
     ] {
         comms.insert_at(
             id,
@@ -84,6 +89,12 @@ pub fn finish_predefined(comms: &mut Slab<CommObj>, world_size: usize, rank: usi
     let s = comms.get_mut(super::reserved::COMM_SELF.0).unwrap();
     s.members = vec![rank];
     s.my_rank = 0;
+    // The bootstrap comm spans the world in world-rank order, so a
+    // member's world rank is its bootstrap rank (session.rs relies on
+    // this when addressing context-plane agreement messages).
+    let b = comms.get_mut(super::reserved::COMM_BOOTSTRAP.0).unwrap();
+    b.members = (0..world_size).collect();
+    b.my_rank = rank;
 }
 
 /// `MPI_Comm_size`.

@@ -20,35 +20,59 @@ use crate::abi::constants::{MPI_ANY_SOURCE, MPI_ANY_TAG, MPI_PROC_NULL, MPI_UNDE
 // Init / finalize / environment
 // ---------------------------------------------------------------------------
 
-/// `MPI_Init`. The launcher has already bound the rank context; this marks
-/// the library initialized and sizes the predefined world/self objects.
+/// Size the predefined world/self/bootstrap groups and comms exactly
+/// once per rank — run by whichever of `MPI_Init` / `MPI_Session_init`
+/// happens first (world and sessions share the tables).
+pub(crate) fn ensure_world_objects(ctx: &RankCtx) {
+    if ctx.predef_sized.get() {
+        return;
+    }
+    let (size, rank) = (ctx.world.size, ctx.rank);
+    {
+        let mut t = ctx.tables.borrow_mut();
+        finish_groups(&mut t.groups, size, rank);
+        finish_comms(&mut t.comms, size, rank);
+    }
+    ctx.predef_sized.set(true);
+}
+
+/// `MPI_Init` (the world model). The launcher has already bound the rank
+/// context; this sizes the predefined objects (if no session got there
+/// first) and opens one epoch of the shared init refcount.
 pub fn init() -> RC<()> {
     with_ctx(|ctx| {
         if ctx.initialized.get() {
             return Err(err!(MPI_ERR_OTHER)); // double init
         }
-        let (size, rank) = (ctx.world.size, ctx.rank);
-        {
-            let mut t = ctx.tables.borrow_mut();
-            finish_groups(&mut t.groups, size, rank);
-            finish_comms(&mut t.comms, size, rank);
-        }
+        ensure_world_objects(ctx);
         ctx.initialized.set(true);
+        ctx.note_init();
         Ok(())
     })
 }
 
-/// `MPI_Initialized` — callable at any time.
+/// `MPI_Initialized` — callable at any time. Sessions-aware: true once
+/// *any* initialization — `MPI_Init` or `MPI_Session_init` — has
+/// happened on this process, and it never resets. (MPI-4.1 scopes
+/// these predicates to the world model; this ABI deliberately pins the
+/// refcounted, library-wide reading so coexisting models can probe
+/// whether MPI is alive — the contract is written down in SPEC.md §6.)
 pub fn initialized() -> bool {
-    try_ctx(|ctx| ctx.map(|c| c.initialized.get()).unwrap_or(false))
+    try_ctx(|ctx| ctx.map(|c| c.ever_inited.get()).unwrap_or(false))
 }
 
-/// `MPI_Finalized` — callable at any time.
+/// `MPI_Finalized` — callable at any time. Sessions-aware, like
+/// [`initialized`]: true only when the library was initialized at some
+/// point and *every* initialization epoch — the world model and all
+/// sessions — has since been finalized. A world finalize with a
+/// session still active does not finalize the library.
 pub fn finalized() -> bool {
-    try_ctx(|ctx| ctx.map(|c| c.finalized.get()).unwrap_or(false))
+    try_ctx(|ctx| ctx.map(|c| c.ever_inited.get() && c.active_inits.get() == 0).unwrap_or(false))
 }
 
-/// `MPI_Finalize`: quiesce (barrier over world) then mark finalized.
+/// `MPI_Finalize` (the world model): quiesce (barrier over world), mark
+/// the world model finalized, and close its epoch of the shared init
+/// refcount. Sessions opened before or during the world epoch survive.
 pub fn finalize() -> RC<()> {
     super::collectives::barrier(super::reserved::COMM_WORLD)?;
     with_ctx(|ctx| {
@@ -56,6 +80,7 @@ pub fn finalize() -> RC<()> {
             return Err(err!(MPI_ERR_OTHER));
         }
         ctx.finalized.set(true);
+        ctx.note_finalize_one();
         ctx.world.note_finalize();
         Ok(())
     })

@@ -57,6 +57,12 @@ pub fn errhandler_create(f: Box<dyn Fn(CommId, i32)>) -> RC<ErrhId> {
     })
 }
 
+/// Does `id` name a live error handler? (Validation before collective
+/// operations that would otherwise fail on one rank only.)
+pub fn errhandler_exists(id: ErrhId) -> bool {
+    with_ctx(|ctx| Ok(ctx.tables.borrow().errhs.contains(id.0))).unwrap_or(false)
+}
+
 /// `MPI_Errhandler_free`.
 pub fn errhandler_free(id: ErrhId) -> RC<()> {
     with_ctx(|ctx| {

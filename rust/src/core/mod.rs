@@ -25,6 +25,7 @@ pub mod info;
 pub mod op;
 pub mod request;
 pub mod rma;
+pub mod session;
 pub mod slab;
 pub mod transport;
 pub mod world;
@@ -114,6 +115,10 @@ engine_id!(
     /// RMA window id.
     WinId
 );
+engine_id!(
+    /// MPI-4 session id.
+    SessionId
+);
 
 /// Pre-reserved ids for predefined objects: every rank's tables are
 /// initialized so these indices hold the predefined objects, letting
@@ -124,6 +129,11 @@ pub mod reserved {
     pub const COMM_WORLD: CommId = CommId(0);
     /// `MPI_COMM_SELF`'s engine id.
     pub const COMM_SELF: CommId = CommId(1);
+    /// The hidden world-spanning bootstrap comm used by
+    /// `MPI_Comm_create_from_group` to agree on context planes without
+    /// a parent communicator (see [`crate::core::session`]). Never
+    /// exposed through any ABI.
+    pub const COMM_BOOTSTRAP: CommId = CommId(2);
     /// `MPI_GROUP_EMPTY`'s engine id.
     pub const GROUP_EMPTY: GroupId = GroupId(0);
     /// The world group's engine id.

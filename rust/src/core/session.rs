@@ -1,0 +1,302 @@
+//! MPI-4 **Sessions**: library-friendly initialization without
+//! `MPI_Init`.
+//!
+//! A session is an isolated initialization epoch: a library component
+//! calls `MPI_Session_init`, discovers the **process sets** the launcher
+//! exposes (`mpi://WORLD`, `mpi://SELF`, plus any launcher-provided
+//! sets), builds an `MPI_Group` from one, and derives a communicator
+//! with `MPI_Comm_create_from_group` — never touching `MPI_COMM_WORLD`
+//! and never requiring (or forbidding) the world model. World init and
+//! any number of sessions may coexist; finalize order is free. The
+//! shared **init refcount** lives in [`super::world::RankCtx`]
+//! (`active_inits` / `ever_inited`), and `MPI_Initialized` /
+//! `MPI_Finalized` report over it (see [`super::engine::initialized`]).
+//!
+//! # Context-plane agreement without a parent communicator
+//!
+//! `MPI_Comm_create_from_group` is the interesting part: every other
+//! comm constructor agrees on the new (pt2pt, coll) context planes by
+//! broadcasting over a *parent* communicator (and RMA windows do the
+//! same for their (ops, ctrl) pair) — but here there is no parent. The
+//! engine instead reserves a hidden, world-spanning **bootstrap
+//! communicator** ([`super::reserved::COMM_BOOTSTRAP`], context planes
+//! 4/5, installed alongside WORLD/SELF and never exposed through any
+//! ABI): group rank 0 allocates a fresh plane pair from the world
+//! counter and sends it to each member over the bootstrap planes, using
+//! a wire tag derived from the caller's **tag string** ([`pset_tag`]).
+//! Concurrent creations over overlapping groups are disambiguated by
+//! their tag strings exactly as MPI-4 §11.6 prescribes (callers must
+//! pass distinct strings); sequential creations with the *same* string
+//! are ordered by the fabric's per-(source, context, tag) FIFO.
+
+use super::world::{with_ctx, RankCtx};
+use super::{err, CommId, ErrhId, GroupId, InfoId, SessionId, RC};
+
+/// The process set every session exposes: all ranks of the job.
+pub const PSET_WORLD: &str = "mpi://WORLD";
+/// The singleton process set: just the calling process.
+pub const PSET_SELF: &str = "mpi://SELF";
+
+/// Session table entry: the error handler given at init and the
+/// process-set table snapshotted from the launcher at init time.
+pub struct SessionObj {
+    /// Error handler attached at `MPI_Session_init`.
+    pub errhandler: ErrhId,
+    /// Named process sets visible to this process, in query order:
+    /// `mpi://WORLD`, `mpi://SELF`, then launcher-provided sets that
+    /// contain the calling rank.
+    pub psets: Vec<(String, Vec<usize>)>,
+}
+
+fn build_psets(ctx: &RankCtx) -> Vec<(String, Vec<usize>)> {
+    let mut v = vec![
+        (PSET_WORLD.to_string(), (0..ctx.world.size).collect()),
+        (PSET_SELF.to_string(), vec![ctx.rank]),
+    ];
+    for (name, members) in ctx.world.psets() {
+        if members.contains(&ctx.rank) {
+            v.push((name.clone(), members.clone()));
+        }
+    }
+    v
+}
+
+/// `MPI_Session_init`. Legal before (or entirely without) `MPI_Init`;
+/// bumps the shared init refcount so the library stays active until the
+/// last world/session finalize.
+pub fn session_init(errh: ErrhId) -> RC<SessionId> {
+    with_ctx(|ctx| {
+        super::engine::ensure_world_objects(ctx);
+        let psets = build_psets(ctx);
+        let id = {
+            let mut t = ctx.tables.borrow_mut();
+            if !t.errhs.contains(errh.0) {
+                return Err(err!(MPI_ERR_ERRHANDLER));
+            }
+            t.sessions.insert(SessionObj { errhandler: errh, psets })
+        };
+        ctx.note_init();
+        Ok(SessionId(id))
+    })
+}
+
+/// `MPI_Session_finalize`. Errors with `MPI_ERR_SESSION` on an unknown
+/// (double-finalized) session; decrements the shared init refcount.
+pub fn session_finalize(id: SessionId) -> RC<()> {
+    with_ctx(|ctx| {
+        if ctx.tables.borrow_mut().sessions.remove(id.0).is_none() {
+            return Err(err!(MPI_ERR_SESSION));
+        }
+        ctx.note_finalize_one();
+        Ok(())
+    })
+}
+
+/// `MPI_Session_get_num_psets`.
+pub fn session_num_psets(id: SessionId) -> RC<i32> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let s = t.sessions.get(id.0).ok_or(err!(MPI_ERR_SESSION))?;
+        Ok(s.psets.len() as i32)
+    })
+}
+
+/// `MPI_Session_get_nth_pset`: the nth process-set name, in the stable
+/// order of [`SessionObj::psets`].
+pub fn session_nth_pset(id: SessionId, n: i32) -> RC<String> {
+    with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let s = t.sessions.get(id.0).ok_or(err!(MPI_ERR_SESSION))?;
+        if n < 0 {
+            return Err(err!(MPI_ERR_ARG));
+        }
+        s.psets.get(n as usize).map(|(name, _)| name.clone()).ok_or(err!(MPI_ERR_ARG))
+    })
+}
+
+fn find_pset(s: &SessionObj, name: &str) -> RC<Vec<usize>> {
+    // Process-set names are URIs and compare case-insensitively
+    // (MPI-4 §11.3.2).
+    s.psets
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(name))
+        .map(|(_, m)| m.clone())
+        .ok_or(err!(MPI_ERR_ARG))
+}
+
+/// `MPI_Session_get_pset_info`: an info object describing the named
+/// set (key `mpi_size` = number of members, per MPI-4 §11.3.3). The
+/// caller owns (and frees) the returned info.
+pub fn session_pset_info(id: SessionId, name: &str) -> RC<InfoId> {
+    let members = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let s = t.sessions.get(id.0).ok_or(err!(MPI_ERR_SESSION))?;
+        find_pset(s, name)
+    })?;
+    let info = super::info::info_create()?;
+    super::info::info_set(info, "mpi_size", &members.len().to_string())?;
+    Ok(info)
+}
+
+/// `MPI_Group_from_session_pset`. Unknown set names error with
+/// `MPI_ERR_ARG` (the diagnosable "no such pset" failure).
+pub fn group_from_pset(id: SessionId, name: &str) -> RC<GroupId> {
+    let members = with_ctx(|ctx| {
+        let t = ctx.tables.borrow();
+        let s = t.sessions.get(id.0).ok_or(err!(MPI_ERR_SESSION))?;
+        find_pset(s, name)
+    })?;
+    super::group::group_from_members(members)
+}
+
+/// FNV-1a of the tag string — the full 64-bit digest. The wire tag is a
+/// 23-bit fold of this ([`pset_tag`]); the agreement payload carries the
+/// whole digest so a wire-tag collision between two *distinct* strings
+/// is detected at the receiver instead of silently cross-wiring two
+/// concurrent creations.
+fn tag_hash64(tag: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Derive the bootstrap wire tag from a `MPI_Comm_create_from_group`
+/// tag string: [`tag_hash64`] folded into the tag range (strictly below
+/// `MPI_TAG_UB`, never negative). Distinct strings give distinct wire
+/// tags with overwhelming probability; the full digest riding in the
+/// payload catches the residual collision case.
+pub fn pset_tag(tag: &str) -> i32 {
+    (tag_hash64(tag) & 0x007F_FFFF) as i32
+}
+
+/// `MPI_Comm_create_from_group`: collective over exactly the group's
+/// members, **no parent communicator**. Group rank 0 allocates the new
+/// comm's (pt2pt, coll) context planes and distributes them over the
+/// hidden bootstrap communicator, keyed by the tag string (module docs).
+pub fn comm_create_from_group(group: GroupId, tag: &str) -> RC<CommId> {
+    let (members, my_world) = with_ctx(|ctx| {
+        super::engine::ensure_world_objects(ctx);
+        let t = ctx.tables.borrow();
+        let g = t.groups.get(group.0).ok_or(err!(MPI_ERR_GROUP))?;
+        Ok((g.members.clone(), ctx.rank))
+    })?;
+    // The caller must be a member (MPI-4 §11.6: collective over the group).
+    let my_rank = members.iter().position(|&m| m == my_world).ok_or(err!(MPI_ERR_GROUP))?;
+    let full_hash = tag_hash64(tag);
+    let wire_tag = pset_tag(tag);
+    let byte = super::datatype::builtin_id_of_abi(crate::abi::datatypes::MPI_BYTE)
+        .ok_or(err!(MPI_ERR_INTERN))?;
+    // Payload: the (pt2pt, coll) plane pair + the full 64-bit tag digest
+    // (so a 23-bit wire-tag collision between distinct strings is
+    // detected, not silently cross-wired).
+    let mut bytes = [0u8; 16];
+    if my_rank == 0 {
+        let (p, c) = with_ctx(|ctx| Ok(ctx.world.alloc_context_pair()))?;
+        bytes[..4].copy_from_slice(&p.to_le_bytes());
+        bytes[4..8].copy_from_slice(&c.to_le_bytes());
+        bytes[8..].copy_from_slice(&full_hash.to_le_bytes());
+        // The bootstrap comm spans the world in world-rank order, so a
+        // member's world rank *is* its bootstrap rank.
+        for &m in &members[1..] {
+            super::engine::send(
+                bytes.as_ptr(),
+                16,
+                byte,
+                m as i32,
+                wire_tag,
+                super::reserved::COMM_BOOTSTRAP,
+                super::engine::SendMode::Standard,
+            )?;
+        }
+    } else {
+        super::engine::recv(
+            bytes.as_mut_ptr(),
+            16,
+            byte,
+            members[0] as i32,
+            wire_tag,
+            super::reserved::COMM_BOOTSTRAP,
+        )?;
+        let got = u64::from_le_bytes(bytes[8..].try_into().unwrap());
+        if got != full_hash {
+            // Two concurrent creations with distinct tag strings landed
+            // on the same 23-bit wire tag: diagnosable, not silent.
+            return Err(err!(MPI_ERR_OTHER));
+        }
+    }
+    let p = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+    let c = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    super::comm::insert_comm(members, my_rank, p, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pset_tag_is_a_legal_send_tag() {
+        for s in ["", "a", "mpi-abi://halo", "org.mpi-forum.example", "🦀"] {
+            let t = pset_tag(s);
+            assert!(t >= 0, "{s:?} -> {t}");
+            assert!((t as i64) < crate::abi::constants::TAG_UB_VALUE as i64, "{s:?} -> {t}");
+        }
+    }
+
+    #[test]
+    fn pset_tag_distinguishes_strings() {
+        assert_ne!(pset_tag("a"), pset_tag("b"));
+        assert_ne!(pset_tag("mpi://WORLD"), pset_tag("mpi://SELF"));
+    }
+
+    #[test]
+    fn sessions_only_init_finalize_refcount() {
+        std::thread::spawn(|| {
+            let w = crate::core::world::test_world(1);
+            let ctx = crate::core::world::bind_rank(w, 0);
+            assert!(!crate::core::engine::initialized());
+            assert!(!crate::core::engine::finalized());
+            let s1 = session_init(crate::core::reserved::ERRH_RETURN).unwrap();
+            let s2 = session_init(crate::core::reserved::ERRH_RETURN).unwrap();
+            assert_ne!(s1, s2);
+            assert!(crate::core::engine::initialized(), "a session initializes the library");
+            assert!(!crate::core::engine::finalized());
+            session_finalize(s1).unwrap();
+            assert!(!crate::core::engine::finalized(), "one session still active");
+            session_finalize(s2).unwrap();
+            assert!(crate::core::engine::finalized(), "last finalize finalizes the library");
+            assert!(crate::core::engine::initialized(), "initialized stays true after finalize");
+            // Double finalize is diagnosable.
+            let e = session_finalize(s2).unwrap_err();
+            assert_eq!(e.class, crate::abi::errors::MPI_ERR_SESSION);
+            drop(ctx);
+            crate::core::world::unbind_rank();
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn pset_table_lists_world_and_self() {
+        std::thread::spawn(|| {
+            let w = crate::core::world::test_world(1);
+            let _ctx = crate::core::world::bind_rank(w, 0);
+            let s = session_init(crate::core::reserved::ERRH_RETURN).unwrap();
+            assert_eq!(session_num_psets(s).unwrap(), 2);
+            assert_eq!(session_nth_pset(s, 0).unwrap(), PSET_WORLD);
+            assert_eq!(session_nth_pset(s, 1).unwrap(), PSET_SELF);
+            assert_eq!(
+                session_nth_pset(s, 2).unwrap_err().class,
+                crate::abi::errors::MPI_ERR_ARG
+            );
+            let e = group_from_pset(s, "mpi://NOPE").unwrap_err();
+            assert_eq!(e.class, crate::abi::errors::MPI_ERR_ARG);
+            session_finalize(s).unwrap();
+            crate::core::world::unbind_rank();
+        })
+        .join()
+        .unwrap();
+    }
+}

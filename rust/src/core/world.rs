@@ -22,6 +22,7 @@ use super::info::InfoObj;
 use super::op::OpObj;
 use super::request::RequestObj;
 use super::rma::WinObj;
+use super::session::SessionObj;
 use super::slab::Slab;
 use super::transport::{Envelope, Fabric, TransportKind};
 use super::{attr::KeyvalObj, err, RC};
@@ -47,21 +48,49 @@ pub struct World {
     /// Per-world (not process-global) so parallel test jobs in one
     /// process don't perturb each other's reuse assertions.
     sched_builds: AtomicU64,
+    /// Launcher-provided named process sets (MPI-4 sessions): each is a
+    /// (URI, member world ranks) pair surfaced by `MPI_Session_get_*`
+    /// alongside the built-in `mpi://WORLD` / `mpi://SELF`.
+    psets: Vec<(String, Vec<usize>)>,
 }
 
 impl World {
     pub fn new(size: usize, transport: TransportKind) -> Arc<World> {
+        World::new_with_psets(size, transport, Vec::new())
+    }
+
+    /// [`World::new`] with launcher-provided process sets (the
+    /// `mpiexec --pset` analogue; see [`crate::core::session`]).
+    /// Panics on a malformed set (member rank out of range) — a launcher
+    /// configuration error, caught before any rank can act on it.
+    pub fn new_with_psets(
+        size: usize,
+        transport: TransportKind,
+        psets: Vec<(String, Vec<usize>)>,
+    ) -> Arc<World> {
         assert!(size >= 1, "world needs at least one rank");
+        for (name, members) in &psets {
+            for &m in members {
+                assert!(m < size, "pset {name:?} member {m} out of range for {size} ranks");
+            }
+        }
         Arc::new(World {
             size,
             fabric: Fabric::new(transport, size),
             abort_code: AtomicI64::new(NO_ABORT),
             epoch: Instant::now(),
-            // 0/1 = COMM_WORLD pt2pt/coll, 2/3 = COMM_SELF.
-            context_counter: AtomicU32::new(4),
+            // 0/1 = COMM_WORLD pt2pt/coll, 2/3 = COMM_SELF,
+            // 4/5 = the hidden session-bootstrap comm.
+            context_counter: AtomicU32::new(6),
             finalize_count: AtomicUsize::new(0),
             sched_builds: AtomicU64::new(0),
+            psets,
         })
+    }
+
+    /// The launcher-provided process sets (name, member world ranks).
+    pub fn psets(&self) -> &[(String, Vec<usize>)] {
+        &self.psets
     }
 
     /// Record one collective-schedule construction (see
@@ -128,6 +157,7 @@ pub struct Tables {
     pub infos: Slab<InfoObj>,
     pub keyvals: Slab<KeyvalObj>,
     pub wins: Slab<WinObj>,
+    pub sessions: Slab<SessionObj>,
     /// RMA context plane → window id, so the progress engine can route
     /// incoming one-sided traffic without scanning the window table.
     pub win_by_ctx: std::collections::HashMap<u32, u32>,
@@ -179,13 +209,40 @@ pub struct RankCtx {
     pub tables: RefCell<Tables>,
     /// Messaging state (queues, acks, in-flight schedules).
     pub state: RefCell<RankState>,
-    /// `MPI_Init` has run.
+    /// `MPI_Init` has run (the world model specifically).
     pub initialized: Cell<bool>,
-    /// `MPI_Finalize` has run.
+    /// `MPI_Finalize` has run (the world model specifically).
     pub finalized: Cell<bool>,
+    /// Currently-active initialization epochs: 1 while the world model
+    /// is initialized and not yet finalized, plus 1 per live session.
+    /// `MPI_Finalized` reports true only when this returns to zero —
+    /// world and sessions share one refcount (MPI-4 §11).
+    pub active_inits: Cell<u32>,
+    /// Some initialization (world or session) has ever happened;
+    /// `MPI_Initialized` reports this (and it never resets).
+    pub ever_inited: Cell<bool>,
+    /// The predefined world/self/bootstrap objects have been sized
+    /// (done by whichever of `MPI_Init` / `MPI_Session_init` runs first).
+    pub predef_sized: Cell<bool>,
     /// Re-entrancy latch for the collective schedule pump (a user
     /// reduction op may call back into MPI mid-advance).
     pub sched_pump: Cell<bool>,
+}
+
+impl RankCtx {
+    /// Record one initialization epoch opening (world init or
+    /// `MPI_Session_init`).
+    pub(crate) fn note_init(&self) {
+        self.active_inits.set(self.active_inits.get() + 1);
+        self.ever_inited.set(true);
+    }
+
+    /// Record one initialization epoch closing (world finalize or
+    /// `MPI_Session_finalize`).
+    pub(crate) fn note_finalize_one(&self) {
+        debug_assert!(self.active_inits.get() > 0, "finalize without matching init");
+        self.active_inits.set(self.active_inits.get().saturating_sub(1));
+    }
 }
 
 thread_local! {
@@ -204,6 +261,9 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
         state: RefCell::new(RankState::new()),
         initialized: Cell::new(false),
         finalized: Cell::new(false),
+        active_inits: Cell::new(0),
+        ever_inited: Cell::new(false),
+        predef_sized: Cell::new(false),
         sched_pump: Cell::new(false),
     });
     CURRENT.with(|c| {
@@ -261,6 +321,7 @@ fn init_tables() -> Tables {
         infos: Slab::new(),
         keyvals: Slab::new(),
         wins: Slab::new(),
+        sessions: Slab::new(),
         win_by_ctx: std::collections::HashMap::new(),
     };
     super::group::install_predefined(&mut t.groups);
@@ -294,8 +355,9 @@ mod tests {
         assert_eq!(b, a + 1);
         assert_eq!(d, c + 1);
         assert!(c > b);
-        // Predefined planes 0..4 are never handed out.
-        assert!(a >= 4);
+        // Predefined planes 0..6 (world, self, session bootstrap) are
+        // never handed out.
+        assert!(a >= 6);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use once_cell::sync::Lazy;
 use super::repr::{Backed, Repr};
 use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
 use crate::core::request::StatusCore;
-use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, SessionId, WinId};
 
 /// The public ABI type: `MpichAbi::send(...)` etc.
 pub type MpichAbi = Backed<MpichRepr>;
@@ -52,6 +52,8 @@ pub const T_OP: i32 = 0x6 << 26;
 pub const T_INFO: i32 = 0x7 << 26;
 /// Object-type field: RMA window.
 pub const T_WIN: i32 = 0x8 << 26;
+/// Object-type field: MPI-4 session.
+pub const T_SESSION: i32 = 0x9 << 26;
 /// Object-type field: request.
 pub const T_REQUEST: i32 = 0xB << 26;
 
@@ -113,6 +115,9 @@ pub const MPI_INFO_ENV: i32 = KIND_BUILTIN | T_INFO;
 /// MPICH's `MPI_WIN_NULL` — the window handle is an `int` like every
 /// other MPICH handle, with the `T_WIN` object-type bits.
 pub const MPI_WIN_NULL: i32 = KIND_INVALID | T_WIN; // 0x20000000
+/// MPICH's `MPI_SESSION_NULL` — sessions are `int` handles too, with
+/// their own object-type bits.
+pub const MPI_SESSION_NULL: i32 = KIND_INVALID | T_SESSION; // 0x24000000
 
 /// MPICH's historical `MPI_LOCK_EXCLUSIVE` — nowhere near the standard
 /// ABI's small integers, so translation layers must map it.
@@ -262,6 +267,7 @@ impl Repr for MpichRepr {
     type Errhandler = i32;
     type Info = i32;
     type Win = i32;
+    type Session = i32;
     type Status = MpichStatus;
 
     fn c_comm_world() -> i32 {
@@ -287,6 +293,9 @@ impl Repr for MpichRepr {
     }
     fn c_win_null() -> i32 {
         MPI_WIN_NULL
+    }
+    fn c_session_null() -> i32 {
+        MPI_SESSION_NULL
     }
     fn c_lock_exclusive() -> i32 {
         MPI_LOCK_EXCLUSIVE
@@ -457,6 +466,20 @@ impl Repr for MpichRepr {
     #[inline]
     fn win_h(id: WinId) -> i32 {
         KIND_DIRECT | T_WIN | id.0 as i32
+    }
+
+    #[inline]
+    fn session_id(s: i32) -> RC<SessionId> {
+        if kind_of(s) == KIND_DIRECT && type_of(s) == T_SESSION {
+            Ok(SessionId(payload_of(s) as u32))
+        } else {
+            Err(err!(MPI_ERR_SESSION))
+        }
+    }
+
+    #[inline]
+    fn session_h(id: SessionId) -> i32 {
+        KIND_DIRECT | T_SESSION | id.0 as i32
     }
 
     fn status_empty() -> MpichStatus {

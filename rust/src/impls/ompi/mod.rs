@@ -16,7 +16,7 @@ use once_cell::sync::Lazy;
 use super::repr::{Backed, Repr};
 use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
 use crate::core::request::StatusCore;
-use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, SessionId, WinId};
 
 /// The public ABI type.
 pub type OmpiAbi = Backed<OmpiRepr>;
@@ -34,6 +34,7 @@ pub enum DescKind {
     Errhandler,
     Info,
     Win,
+    Session,
 }
 
 /// Magic word every live descriptor carries ("OMPI").
@@ -131,6 +132,11 @@ ompi_handle!(
     /// `MPI_Win` = `struct ompi_win_t *`.
     OmpiWin
 );
+ompi_handle!(
+    /// `MPI_Session` = `struct ompi_instance_t *` (Open MPI calls the
+    /// sessions object an "instance").
+    OmpiSession
+);
 
 // --- Predefined descriptor globals (the "link-time constants") ---------------
 
@@ -150,6 +156,8 @@ static ERRH_ABORT_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::
 static INFO_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Info, NULL_ID, 0));
 static INFO_ENV_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Info, 0, 0));
 static WIN_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Win, NULL_ID, 0));
+static SESSION_NULL_DESC: Lazy<&'static Desc> =
+    Lazy::new(|| Desc::leak(DescKind::Session, NULL_ID, 0));
 #[allow(dead_code)] // part of the ABI surface even if unreferenced internally
 static OP_NULL_DESC: Lazy<&'static Desc> = Lazy::new(|| Desc::leak(DescKind::Op, NULL_ID, 0));
 
@@ -288,6 +296,7 @@ impl Repr for OmpiRepr {
     type Errhandler = OmpiErrhandler;
     type Info = OmpiInfo;
     type Win = OmpiWin;
+    type Session = OmpiSession;
     type Status = OmpiStatus;
 
     fn c_comm_world() -> OmpiComm {
@@ -313,6 +322,9 @@ impl Repr for OmpiRepr {
     }
     fn c_win_null() -> OmpiWin {
         OmpiWin(*WIN_NULL_DESC)
+    }
+    fn c_session_null() -> OmpiSession {
+        OmpiSession(*SESSION_NULL_DESC)
     }
     fn c_lock_exclusive() -> i32 {
         MPI_LOCK_EXCLUSIVE
@@ -460,6 +472,15 @@ impl Repr for OmpiRepr {
         OmpiWin(alloc(DescKind::Win, id.0, 0))
     }
 
+    #[inline]
+    fn session_id(s: OmpiSession) -> RC<SessionId> {
+        deref(s.0, DescKind::Session).map(|d| SessionId(d.engine_id)).ok_or(err!(MPI_ERR_SESSION))
+    }
+
+    fn session_h(id: SessionId) -> OmpiSession {
+        OmpiSession(alloc(DescKind::Session, id.0, 0))
+    }
+
     fn req_release(r: OmpiRequest) {
         release(r.0);
     }
@@ -483,6 +504,9 @@ impl Repr for OmpiRepr {
     }
     fn win_release(w: OmpiWin) {
         release(w.0);
+    }
+    fn session_release(s: OmpiSession) {
+        release(s.0);
     }
 
     fn status_empty() -> OmpiStatus {

@@ -12,8 +12,9 @@ use std::marker::PhantomData;
 use crate::abi::types::Aint;
 use crate::api::{AttrCopyFn, AttrDeleteFn, Dt, ErrhFn, MpiAbi, OpName, UserOpFn};
 use crate::core::request::StatusCore;
-use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op, rma};
-use crate::core::{CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
+use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op, rma,
+    session};
+use crate::core::{CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, SessionId, WinId};
 
 /// What one MPI ABI fixes. See module docs.
 pub trait Repr: 'static {
@@ -36,6 +37,8 @@ pub trait Repr: 'static {
     type Info: Copy + PartialEq;
     /// `MPI_Win` in this ABI's representation.
     type Win: Copy + PartialEq + std::fmt::Debug;
+    /// `MPI_Session` in this ABI's representation.
+    type Session: Copy + PartialEq + std::fmt::Debug;
     /// The ABI's status struct.
     type Status: Copy;
 
@@ -55,6 +58,8 @@ pub trait Repr: 'static {
     fn c_info_null() -> Self::Info;
     /// `MPI_WIN_NULL`'s handle value.
     fn c_win_null() -> Self::Win;
+    /// `MPI_SESSION_NULL`'s handle value.
+    fn c_session_null() -> Self::Session;
     /// The handle for a predefined datatype.
     fn c_datatype(d: Dt) -> Self::Datatype;
     /// The handle for a predefined reduction op.
@@ -133,6 +138,10 @@ pub trait Repr: 'static {
     fn win_id(w: Self::Win) -> RC<WinId>;
     /// Engine id → window handle.
     fn win_h(id: WinId) -> Self::Win;
+    /// Session handle → engine id.
+    fn session_id(s: Self::Session) -> RC<SessionId>;
+    /// Engine id → session handle.
+    fn session_h(id: SessionId) -> Self::Session;
 
     /// Drop any per-handle allocation when a request handle is consumed
     /// (pointer-handle ABIs heap-allocate request descriptors).
@@ -166,6 +175,10 @@ pub trait Repr: 'static {
     /// Likewise for freed window handles.
     fn win_release(w: Self::Win) {
         let _ = w;
+    }
+    /// Likewise for finalized session handles.
+    fn session_release(s: Self::Session) {
+        let _ = s;
     }
 
     /// An empty status in this ABI's layout.
@@ -402,6 +415,7 @@ impl<R: Repr> MpiAbi for Backed<R> {
     type Errhandler = R::Errhandler;
     type Info = R::Info;
     type Win = R::Win;
+    type Session = R::Session;
     type Status = R::Status;
 
     fn comm_world() -> R::Comm {
@@ -433,6 +447,9 @@ impl<R: Repr> MpiAbi for Backed<R> {
     }
     fn win_null() -> R::Win {
         R::c_win_null()
+    }
+    fn session_null() -> R::Session {
+        R::c_session_null()
     }
     fn lock_exclusive() -> i32 {
         R::c_lock_exclusive()
@@ -507,6 +524,100 @@ impl<R: Repr> MpiAbi for Backed<R> {
     }
     fn get_processor_name() -> String {
         engine::get_processor_name()
+    }
+
+    fn session_init(_info: R::Info, errh: R::Errhandler, out: &mut R::Session) -> i32 {
+        // The info argument carries hints we don't consume; the error
+        // handler converts like any other handle.
+        let eid = conv!(R, None, R::errh_id(errh));
+        match session::session_init(eid) {
+            Ok(id) => {
+                *out = R::session_h(id);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn session_finalize(s: &mut R::Session) -> i32 {
+        let id = conv!(R, None, R::session_id(*s));
+        let r = ret::<R>(None, session::session_finalize(id));
+        if r == 0 {
+            R::session_release(*s);
+            *s = R::c_session_null();
+        }
+        r
+    }
+
+    fn session_get_num_psets(s: R::Session, out: &mut i32) -> i32 {
+        let id = conv!(R, None, R::session_id(s));
+        match session::session_num_psets(id) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn session_get_nth_pset(s: R::Session, n: i32, out: &mut String) -> i32 {
+        let id = conv!(R, None, R::session_id(s));
+        match session::session_nth_pset(id, n) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn session_get_pset_info(s: R::Session, pset: &str, out: &mut R::Info) -> i32 {
+        let id = conv!(R, None, R::session_id(s));
+        match session::session_pset_info(id, pset) {
+            Ok(i) => {
+                *out = R::info_h(i);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn group_from_session_pset(s: R::Session, pset: &str, out: &mut R::Group) -> i32 {
+        let id = conv!(R, None, R::session_id(s));
+        match session::group_from_pset(id, pset) {
+            Ok(g) => {
+                *out = R::group_h(g);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn comm_create_from_group(
+        group: R::Group,
+        stringtag: &str,
+        _info: R::Info,
+        errh: R::Errhandler,
+        out: &mut R::Comm,
+    ) -> i32 {
+        let gid = conv!(R, None, R::group_id(group));
+        let eid = conv!(R, None, R::errh_id(errh));
+        // Validate the errhandler *before* the collective agreement: a
+        // bit-valid-but-dead handle must not error on one rank after
+        // the others have already completed the creation.
+        if !errh::errhandler_exists(eid) {
+            return fail::<R>(None, crate::core::MpiError::new(crate::abi::errors::MPI_ERR_ARG));
+        }
+        match session::comm_create_from_group(gid, stringtag) {
+            Ok(new) => {
+                if let Err(e) = comm::comm_set_errhandler(new, eid) {
+                    return fail::<R>(None, e);
+                }
+                *out = R::comm_h(new);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
     }
 
     fn status_empty() -> R::Status {

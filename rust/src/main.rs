@@ -128,9 +128,10 @@ impl AbiApp<()> for AppRunner {
                 );
             }
             "halo" => {
-                // abirun halo [--mode sendrecv|persistent|rma] [n] [iters]
-                use mpi_abi::apps::halo::{jacobi, HaloMode, HaloParams};
+                // abirun halo [--mode sendrecv|persistent|rma] [--sessions] [n] [iters]
+                use mpi_abi::apps::halo::{jacobi, jacobi_sessions, HaloMode, HaloParams};
                 let mut mode = HaloMode::Sendrecv;
+                let mut sessions = false;
                 let mut nums = Vec::new();
                 let mut it = self.opts.args.iter();
                 while let Some(a) = it.next() {
@@ -139,6 +140,8 @@ impl AbiApp<()> for AppRunner {
                             .next()
                             .and_then(|v| HaloMode::parse(v))
                             .unwrap_or_else(|| usage());
+                    } else if a == "--sessions" {
+                        sessions = true;
                     } else if let Ok(v) = a.parse::<usize>() {
                         nums.push(v);
                     }
@@ -146,18 +149,25 @@ impl AbiApp<()> for AppRunner {
                 let n = nums.first().copied().unwrap_or(96);
                 let iters = nums.get(1).copied().unwrap_or(50);
                 let out = run_job_ok(spec, move |_| {
-                    A::init();
-                    let (_, global) = jacobi::<A>(HaloParams { n, iters, mode });
-                    A::finalize();
-                    global
+                    if sessions {
+                        // Sessions-only: no MPI_Init / MPI_Finalize at all.
+                        let (_, global) = jacobi_sessions::<A>(HaloParams { n, iters, mode });
+                        global
+                    } else {
+                        A::init();
+                        let (_, global) = jacobi::<A>(HaloParams { n, iters, mode });
+                        A::finalize();
+                        global
+                    }
                 });
                 println!(
-                    "halo [{}] {}x{} grid, {} sweeps, mode {}: residual {:.12}",
+                    "halo [{}] {}x{} grid, {} sweeps, mode {}{}: residual {:.12}",
                     A::NAME,
                     n,
                     n,
                     iters,
                     mode.name(),
+                    if sessions { " (sessions-only)" } else { "" },
                     out[0]
                 );
             }

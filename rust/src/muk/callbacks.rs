@@ -18,10 +18,13 @@ use crate::muk::convert::{comm_to_muk, dt_to_muk, ret_code, MukBackend};
 /// `MPI_ERR_NO_MEM`-ish errors, as a real static pool would.
 pub const POOL_SIZE: usize = 32;
 
-/// User callbacks in standard-ABI terms.
+/// User reduction callback in standard-ABI terms.
 pub type MukOpFn = fn(*const u8, *mut u8, i32, AbiDatatype);
+/// User error-handler callback in standard-ABI terms.
 pub type MukErrhFn = fn(AbiComm, i32);
+/// User attribute-copy callback in standard-ABI terms.
 pub type MukCopyFn = fn(AbiComm, i32, usize, usize) -> (bool, usize);
+/// User attribute-delete callback in standard-ABI terms.
 pub type MukDeleteFn = fn(AbiComm, i32, usize, usize);
 
 thread_local! {
@@ -109,14 +112,17 @@ pub fn op_tramp_pool<A: MukBackend>() -> [crate::api::UserOpFn<A>; POOL_SIZE] {
     tramp_table!(op_tramp, A)
 }
 
+/// The error-handler trampoline pool for backend `A`.
 pub fn errh_tramp_pool<A: MukBackend>() -> [crate::api::ErrhFn<A>; POOL_SIZE] {
     tramp_table!(errh_tramp, A)
 }
 
+/// The attribute-copy trampoline pool for backend `A`.
 pub fn copy_tramp_pool<A: MukBackend>() -> [crate::api::AttrCopyFn<A>; POOL_SIZE] {
     tramp_table!(copy_tramp, A)
 }
 
+/// The attribute-delete trampoline pool for backend `A`.
 pub fn delete_tramp_pool<A: MukBackend>() -> [crate::api::AttrDeleteFn<A>; POOL_SIZE] {
     tramp_table!(delete_tramp, A)
 }

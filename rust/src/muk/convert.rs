@@ -59,6 +59,7 @@ pub trait MukBackend:
     Errhandler: AsWord,
     Info: AsWord,
     Win: AsWord,
+    Session: AsWord,
 >
 {
     /// Backend handle for a predefined standard-ABI datatype constant.
@@ -67,6 +68,7 @@ pub trait MukBackend:
     fn predef_dt_rev(h: Self::Datatype) -> Option<usize>;
     /// Backend handle for a predefined standard-ABI op constant.
     fn predef_op(abi_const: usize) -> Option<Self::Op>;
+    /// Standard-ABI constant for a backend *predefined* op handle.
     fn predef_op_rev(h: Self::Op) -> Option<usize>;
     /// Raw byte count hidden in the backend's status layout (the wrap
     /// library is compiled against the backend's mpi.h and knows it).
@@ -163,6 +165,7 @@ impl MukBackend for OmpiAbi {
 
 // --- Handle conversions (the CONVERT_MPI_* functions) ------------------------
 
+/// Standard-ABI `comm` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn comm_to_impl<A: MukBackend>(muk: usize) -> A::Comm {
     match muk {
@@ -173,6 +176,7 @@ pub fn comm_to_impl<A: MukBackend>(muk: usize) -> A::Comm {
     }
 }
 
+/// Backend `comm` handle → standard-ABI word (inverse of `comm_to_impl`).
 #[inline(always)]
 pub fn comm_to_muk<A: MukBackend>(c: A::Comm) -> usize {
     if c == A::comm_world() {
@@ -186,6 +190,7 @@ pub fn comm_to_muk<A: MukBackend>(c: A::Comm) -> usize {
     }
 }
 
+/// Standard-ABI `dt` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn dt_to_impl<A: MukBackend>(muk: usize) -> A::Datatype {
     if muk <= crate::abi::huffman::HUFFMAN_MAX {
@@ -196,6 +201,7 @@ pub fn dt_to_impl<A: MukBackend>(muk: usize) -> A::Datatype {
     A::Datatype::from_word(muk)
 }
 
+/// Backend `dt` handle → standard-ABI word (inverse of `dt_to_impl`).
 #[inline(always)]
 pub fn dt_to_muk<A: MukBackend>(d: A::Datatype) -> usize {
     if let Some(c) = A::predef_dt_rev(d) {
@@ -205,6 +211,7 @@ pub fn dt_to_muk<A: MukBackend>(d: A::Datatype) -> usize {
     }
 }
 
+/// Standard-ABI `op` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn op_to_impl<A: MukBackend>(muk: usize) -> A::Op {
     if muk <= crate::abi::huffman::HUFFMAN_MAX {
@@ -215,6 +222,7 @@ pub fn op_to_impl<A: MukBackend>(muk: usize) -> A::Op {
     A::Op::from_word(muk)
 }
 
+/// Standard-ABI `req` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn req_to_impl<A: MukBackend>(muk: usize) -> A::Request {
     if muk == std_h::MPI_REQUEST_NULL {
@@ -224,6 +232,7 @@ pub fn req_to_impl<A: MukBackend>(muk: usize) -> A::Request {
     }
 }
 
+/// Backend `req` handle → standard-ABI word (inverse of `req_to_impl`).
 #[inline(always)]
 pub fn req_to_muk<A: MukBackend>(r: A::Request) -> usize {
     if r == A::request_null() {
@@ -233,6 +242,7 @@ pub fn req_to_muk<A: MukBackend>(r: A::Request) -> usize {
     }
 }
 
+/// Standard-ABI `errh` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn errh_to_impl<A: MukBackend>(muk: usize) -> A::Errhandler {
     match muk {
@@ -242,6 +252,7 @@ pub fn errh_to_impl<A: MukBackend>(muk: usize) -> A::Errhandler {
     }
 }
 
+/// Backend `errh` handle → standard-ABI word (inverse of `errh_to_impl`).
 #[inline(always)]
 pub fn errh_to_muk<A: MukBackend>(e: A::Errhandler) -> usize {
     if e == A::errhandler_return() {
@@ -253,11 +264,13 @@ pub fn errh_to_muk<A: MukBackend>(e: A::Errhandler) -> usize {
     }
 }
 
+/// Standard-ABI `group` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn group_to_impl<A: MukBackend>(muk: usize) -> A::Group {
     A::Group::from_word(muk)
 }
 
+/// Standard-ABI `info` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn info_to_impl<A: MukBackend>(muk: usize) -> A::Info {
     if muk == std_h::MPI_INFO_NULL {
@@ -267,6 +280,7 @@ pub fn info_to_impl<A: MukBackend>(muk: usize) -> A::Info {
     }
 }
 
+/// Standard-ABI `win` word → backend handle (constants by table, runtime words through the union).
 #[inline(always)]
 pub fn win_to_impl<A: MukBackend>(muk: usize) -> A::Win {
     if muk == std_h::MPI_WIN_NULL {
@@ -276,12 +290,35 @@ pub fn win_to_impl<A: MukBackend>(muk: usize) -> A::Win {
     }
 }
 
+/// Backend `win` handle → standard-ABI word (inverse of `win_to_impl`).
 #[inline(always)]
 pub fn win_to_muk<A: MukBackend>(w: A::Win) -> usize {
     if w == A::win_null() {
         std_h::MPI_WIN_NULL
     } else {
         w.to_word()
+    }
+}
+
+/// `CONVERT_MPI_Session`: null constant ↔ backend null, runtime handles
+/// through the word union — sessions ride the same union as every other
+/// handle kind (the already-reserved `AbiSession` zero-page code).
+#[inline(always)]
+pub fn session_to_impl<A: MukBackend>(muk: usize) -> A::Session {
+    if muk == std_h::MPI_SESSION_NULL {
+        A::session_null()
+    } else {
+        A::Session::from_word(muk)
+    }
+}
+
+/// Inverse of [`session_to_impl`].
+#[inline(always)]
+pub fn session_to_muk<A: MukBackend>(s: A::Session) -> usize {
+    if s == A::session_null() {
+        std_h::MPI_SESSION_NULL
+    } else {
+        s.to_word()
     }
 }
 
@@ -322,6 +359,7 @@ pub fn lock_type_to_impl<A: MukBackend>(lt: i32) -> i32 {
 
 // --- Special integer constants -------------------------------------------------
 
+/// Source-rank translation: `MPI_ANY_SOURCE`/`MPI_PROC_NULL` map by value, real ranks pass through.
 #[inline(always)]
 pub fn src_to_impl<A: MukBackend>(src: i32) -> i32 {
     if src == std_k::MPI_ANY_SOURCE {
@@ -333,6 +371,7 @@ pub fn src_to_impl<A: MukBackend>(src: i32) -> i32 {
     }
 }
 
+/// Destination-rank translation: `MPI_PROC_NULL` maps by value, real ranks pass through.
 #[inline(always)]
 pub fn dest_to_impl<A: MukBackend>(dest: i32) -> i32 {
     if dest == std_k::MPI_PROC_NULL {
@@ -342,6 +381,7 @@ pub fn dest_to_impl<A: MukBackend>(dest: i32) -> i32 {
     }
 }
 
+/// Tag translation: `MPI_ANY_TAG` maps by value, real tags pass through.
 #[inline(always)]
 pub fn tag_to_impl<A: MukBackend>(tag: i32) -> i32 {
     if tag == std_k::MPI_ANY_TAG {
@@ -351,6 +391,7 @@ pub fn tag_to_impl<A: MukBackend>(tag: i32) -> i32 {
     }
 }
 
+/// Buffer-sentinel translation: `MPI_IN_PLACE` maps to the backend's sentinel address.
 #[inline(always)]
 pub fn buf_to_impl<A: MukBackend>(b: *const u8) -> *const u8 {
     if b as usize == std_k::MPI_IN_PLACE {

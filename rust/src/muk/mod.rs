@@ -9,6 +9,10 @@
 //! the representation conversion. This is the paper's *worst-case*
 //! implementation of the standard ABI — the +Mukautuva rows of Table 1.
 
+// The translation layer is itself a binary contract (the libmuk ⇄
+// impl-wrap.so boundary): every public item must say what it converts.
+#![warn(missing_docs)]
+
 pub mod callbacks;
 pub mod convert;
 pub mod state;
@@ -27,19 +31,26 @@ use wrap::{build_symbols, SymbolTable, Vtable};
 /// Which backend implementation libmuk redirects to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
+    /// The MPICH-like integer-handle backend.
     Mpich,
+    /// The Open-MPI-like pointer-handle backend.
     Ompi,
 }
 
 /// Backend selection marker (the `MUK_MPI=...` environment choice),
 /// resolved to a vtable at first use ("dlopen at initialization").
 pub trait BackendSel: 'static {
+    /// Which backend this marker selects.
     const BACKEND: Backend;
+    /// Display name ("muk(mpich)" / "muk(ompi)").
     const NAME: &'static str;
+    /// The resolved WRAP vtable for this backend.
     fn vtable() -> &'static Vtable;
 }
 
+/// Marker: Mukautuva over the MPICH-like backend.
 pub struct OverMpich;
+/// Marker: Mukautuva over the Open-MPI-like backend.
 pub struct OverOmpi;
 
 static MPICH_SYMBOLS: Lazy<SymbolTable> = Lazy::new(|| build_symbols::<MpichAbi>("mpich-wrap"));
@@ -91,6 +102,7 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     type Errhandler = AbiErrhandler;
     type Info = AbiInfo;
     type Win = AbiWin;
+    type Session = AbiSession;
     type Status = AbiStatus;
 
     fn comm_world() -> AbiComm {
@@ -122,6 +134,9 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     }
     fn win_null() -> AbiWin {
         AbiWin::NULL
+    }
+    fn session_null() -> AbiSession {
+        AbiSession::NULL
     }
     fn lock_exclusive() -> i32 {
         crate::abi::constants::MPI_LOCK_EXCLUSIVE
@@ -201,6 +216,34 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
         let mut s = String::new();
         (B::vtable().get_processor_name)(&mut s);
         s
+    }
+
+    fn session_init(info: AbiInfo, errh: AbiErrhandler, session: &mut AbiSession) -> i32 {
+        (B::vtable().session_init)(info.0, errh.0, &mut session.0)
+    }
+    fn session_finalize(session: &mut AbiSession) -> i32 {
+        (B::vtable().session_finalize)(&mut session.0)
+    }
+    fn session_get_num_psets(session: AbiSession, out: &mut i32) -> i32 {
+        (B::vtable().session_get_num_psets)(session.0, out)
+    }
+    fn session_get_nth_pset(session: AbiSession, n: i32, out: &mut String) -> i32 {
+        (B::vtable().session_get_nth_pset)(session.0, n, out)
+    }
+    fn session_get_pset_info(session: AbiSession, pset: &str, out: &mut AbiInfo) -> i32 {
+        (B::vtable().session_get_pset_info)(session.0, pset, &mut out.0)
+    }
+    fn group_from_session_pset(session: AbiSession, pset: &str, out: &mut AbiGroup) -> i32 {
+        (B::vtable().group_from_session_pset)(session.0, pset, &mut out.0)
+    }
+    fn comm_create_from_group(
+        group: AbiGroup,
+        stringtag: &str,
+        info: AbiInfo,
+        errh: AbiErrhandler,
+        out: &mut AbiComm,
+    ) -> i32 {
+        (B::vtable().comm_create_from_group)(group.0, stringtag, info.0, errh.0, &mut out.0)
     }
 
     fn status_empty() -> AbiStatus {

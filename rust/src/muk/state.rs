@@ -11,7 +11,9 @@ use std::collections::HashMap;
 /// the backend may reference them until completion.
 #[derive(Debug)]
 pub struct WState {
+    /// Converted send-side datatype handle words.
     pub sendtypes: Vec<usize>,
+    /// Converted receive-side datatype handle words.
     pub recvtypes: Vec<usize>,
 }
 
@@ -27,6 +29,7 @@ thread_local! {
         RefCell::new(HashMap::new());
 }
 
+/// Park temporary conversion state under a muk request word.
 pub fn reqmap_insert(req: usize, st: WState) {
     REQMAP.with(|m| m.borrow_mut().insert(req, st));
 }
@@ -41,30 +44,37 @@ pub fn reqmap_contains(req: usize) -> bool {
     REQMAP.with(|m| m.borrow().contains_key(&req))
 }
 
+/// Number of requests currently carrying parked state.
 pub fn reqmap_len() -> usize {
     REQMAP.with(|m| m.borrow().len())
 }
 
+/// Record which trampoline slot backs a created op handle.
 pub fn remember_op_slot(op_word: usize, slot: usize) {
     OP_SLOT_OF.with(|m| m.borrow_mut().insert(op_word, slot));
 }
 
+/// Look up (and forget) the trampoline slot of a freed op handle.
 pub fn forget_op_slot(op_word: usize) -> Option<usize> {
     OP_SLOT_OF.with(|m| m.borrow_mut().remove(&op_word))
 }
 
+/// Record which trampoline slot backs a created errhandler handle.
 pub fn remember_errh_slot(errh_word: usize, slot: usize) {
     ERRH_SLOT_OF.with(|m| m.borrow_mut().insert(errh_word, slot));
 }
 
+/// Look up (and forget) the trampoline slot of a freed errhandler.
 pub fn forget_errh_slot(errh_word: usize) -> Option<usize> {
     ERRH_SLOT_OF.with(|m| m.borrow_mut().remove(&errh_word))
 }
 
+/// Record the (copy, delete) trampoline slots of a created keyval.
 pub fn remember_keyval_slots(kv: i32, copy: Option<usize>, delete: Option<usize>) {
     KEYVAL_SLOTS.with(|m| m.borrow_mut().insert(kv, (copy, delete)));
 }
 
+/// Look up (and forget) the trampoline slots of a freed keyval.
 pub fn forget_keyval_slots(kv: i32) -> Option<(Option<usize>, Option<usize>)> {
     KEYVAL_SLOTS.with(|m| m.borrow_mut().remove(&kv))
 }

@@ -15,11 +15,13 @@
 //! type can be stored into / recovered from a word.
 
 use crate::impls::ompi::{OmpiComm, OmpiDatatype, OmpiErrhandler, OmpiGroup, OmpiInfo, OmpiOp,
-    OmpiRequest, OmpiWin};
+    OmpiRequest, OmpiSession, OmpiWin};
 
 /// Round-trip a backend handle through a pointer-sized word.
 pub trait AsWord: Copy {
+    /// Store this handle into the union word.
     fn to_word(self) -> usize;
+    /// Recover a handle from the union word.
     fn from_word(w: usize) -> Self;
 }
 
@@ -52,7 +54,7 @@ macro_rules! ptr_as_word {
 }
 
 ptr_as_word!(OmpiComm, OmpiDatatype, OmpiOp, OmpiRequest, OmpiGroup, OmpiErrhandler, OmpiInfo,
-    OmpiWin);
+    OmpiWin, OmpiSession);
 
 #[cfg(test)]
 mod tests {

@@ -18,6 +18,7 @@ use crate::muk::word::AsWord;
 /// A "shared library": WRAP symbol name → function address.
 pub struct SymbolTable {
     map: HashMap<&'static str, *const ()>,
+    /// Which backend's `mpi.h` this wrap library was "compiled" against.
     pub backend_name: &'static str,
 }
 
@@ -40,10 +41,12 @@ impl SymbolTable {
         unsafe { std::mem::transmute_copy::<*const (), T>(p) }
     }
 
+    /// Number of exported WRAP symbols.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// `true` when no symbols are exported (never, in practice).
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
@@ -51,35 +54,43 @@ impl SymbolTable {
 
 // --- WRAP functions -----------------------------------------------------------
 
+/// `WRAP_init`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn init<A: MukBackend>() -> i32 {
     ret_code::<A>(A::init())
 }
 
+/// `WRAP_finalize`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn finalize<A: MukBackend>() -> i32 {
     ret_code::<A>(A::finalize())
 }
 
+/// `WRAP_initialized`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn initialized<A: MukBackend>() -> bool {
     A::initialized()
 }
 
+/// `WRAP_finalized`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn finalized<A: MukBackend>() -> bool {
     A::finalized()
 }
 
+/// `WRAP_abort`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn abort<A: MukBackend>(comm: usize, code: i32) -> i32 {
     ret_code::<A>(A::abort(comm_to_impl::<A>(comm), code))
 }
 
+/// `WRAP_wtime`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn wtime<A: MukBackend>() -> f64 {
     A::wtime()
 }
 
+/// `WRAP_get_library_version`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn get_library_version<A: MukBackend>(out: &mut String) -> i32 {
     *out = format!("{} via mukautuva", A::get_library_version());
     0
 }
 
+/// `WRAP_get_version`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn get_version<A: MukBackend>(v: &mut i32, sub: &mut i32) -> i32 {
     let (a, b) = A::get_version();
     *v = a;
@@ -87,19 +98,23 @@ pub fn get_version<A: MukBackend>(v: &mut i32, sub: &mut i32) -> i32 {
     0
 }
 
+/// `WRAP_get_processor_name`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn get_processor_name<A: MukBackend>(out: &mut String) -> i32 {
     *out = A::get_processor_name();
     0
 }
 
+/// `WRAP_comm_size`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_size<A: MukBackend>(comm: usize, out: &mut i32) -> i32 {
     ret_code::<A>(A::comm_size(comm_to_impl::<A>(comm), out))
 }
 
+/// `WRAP_comm_rank`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_rank<A: MukBackend>(comm: usize, out: &mut i32) -> i32 {
     ret_code::<A>(A::comm_rank(comm_to_impl::<A>(comm), out))
 }
 
+/// `WRAP_comm_dup`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_dup<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
     let mut c = A::comm_null();
     let rc = A::comm_dup(comm_to_impl::<A>(comm), &mut c);
@@ -109,6 +124,7 @@ pub fn comm_dup<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_split`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_split<A: MukBackend>(comm: usize, color: i32, key: i32, out: &mut usize) -> i32 {
     let color = if color == crate::abi::constants::MPI_UNDEFINED { A::undefined() } else { color };
     let mut c = A::comm_null();
@@ -119,6 +135,7 @@ pub fn comm_split<A: MukBackend>(comm: usize, color: i32, key: i32, out: &mut us
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_free<A: MukBackend>(comm: &mut usize) -> i32 {
     let mut c = comm_to_impl::<A>(*comm);
     let rc = A::comm_free(&mut c);
@@ -128,18 +145,22 @@ pub fn comm_free<A: MukBackend>(comm: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_compare`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_compare<A: MukBackend>(a: usize, b: usize, out: &mut i32) -> i32 {
     ret_code::<A>(A::comm_compare(comm_to_impl::<A>(a), comm_to_impl::<A>(b), out))
 }
 
+/// `WRAP_comm_set_name`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_set_name<A: MukBackend>(comm: usize, name: &str) -> i32 {
     ret_code::<A>(A::comm_set_name(comm_to_impl::<A>(comm), name))
 }
 
+/// `WRAP_comm_get_name`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_get_name<A: MukBackend>(comm: usize, out: &mut String) -> i32 {
     ret_code::<A>(A::comm_get_name(comm_to_impl::<A>(comm), out))
 }
 
+/// `WRAP_comm_group`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_group<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
     let mut g = A::Group::from_word(0);
     let rc = A::comm_group(comm_to_impl::<A>(comm), &mut g);
@@ -149,10 +170,12 @@ pub fn comm_group<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_group_size`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn group_size<A: MukBackend>(g: usize, out: &mut i32) -> i32 {
     ret_code::<A>(A::group_size(group_to_impl::<A>(g), out))
 }
 
+/// `WRAP_group_rank`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn group_rank<A: MukBackend>(g: usize, out: &mut i32) -> i32 {
     let rc = A::group_rank(group_to_impl::<A>(g), out);
     if rc == 0 && *out == A::undefined() {
@@ -161,6 +184,7 @@ pub fn group_rank<A: MukBackend>(g: usize, out: &mut i32) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_group_incl`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn group_incl<A: MukBackend>(g: usize, ranks: &[i32], out: &mut usize) -> i32 {
     let mut n = A::Group::from_word(0);
     let rc = A::group_incl(group_to_impl::<A>(g), ranks, &mut n);
@@ -170,6 +194,7 @@ pub fn group_incl<A: MukBackend>(g: usize, ranks: &[i32], out: &mut usize) -> i3
     ret_code::<A>(rc)
 }
 
+/// `WRAP_group_translate_ranks`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn group_translate_ranks<A: MukBackend>(
     a: usize,
     ranks: &[i32],
@@ -190,6 +215,7 @@ pub fn group_translate_ranks<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_group_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn group_free<A: MukBackend>(g: &mut usize) -> i32 {
     let mut h = group_to_impl::<A>(*g);
     let rc = A::group_free(&mut h);
@@ -199,10 +225,12 @@ pub fn group_free<A: MukBackend>(g: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_set_errhandler`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_set_errhandler<A: MukBackend>(comm: usize, e: usize) -> i32 {
     ret_code::<A>(A::comm_set_errhandler(comm_to_impl::<A>(comm), errh_to_impl::<A>(e)))
 }
 
+/// `WRAP_comm_get_errhandler`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_get_errhandler<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
     let mut e = A::errhandler_fatal();
     let rc = A::comm_get_errhandler(comm_to_impl::<A>(comm), &mut e);
@@ -212,6 +240,7 @@ pub fn comm_get_errhandler<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_create_errhandler`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_create_errhandler<A: MukBackend>(f: callbacks::MukErrhFn, out: &mut usize) -> i32 {
     let Some(slot) = callbacks::alloc_errh_slot(f) else {
         return crate::abi::errors::MPI_ERR_NO_MEM;
@@ -228,6 +257,7 @@ pub fn comm_create_errhandler<A: MukBackend>(f: callbacks::MukErrhFn, out: &mut 
     ret_code::<A>(rc)
 }
 
+/// `WRAP_errhandler_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn errhandler_free<A: MukBackend>(e: &mut usize) -> i32 {
     let mut h = errh_to_impl::<A>(*e);
     let rc = A::errhandler_free(&mut h);
@@ -240,6 +270,7 @@ pub fn errhandler_free<A: MukBackend>(e: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_send`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn send<A: MukBackend>(
     buf: *const u8,
     count: i32,
@@ -252,6 +283,7 @@ pub fn send<A: MukBackend>(
         comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_ssend`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn ssend<A: MukBackend>(
     buf: *const u8,
     count: i32,
@@ -264,6 +296,7 @@ pub fn ssend<A: MukBackend>(
         comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_recv`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn recv<A: MukBackend>(
     buf: *mut u8,
     count: i32,
@@ -282,6 +315,7 @@ pub fn recv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_isend`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn isend<A: MukBackend>(
     buf: *const u8,
     count: i32,
@@ -300,6 +334,7 @@ pub fn isend<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_issend`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn issend<A: MukBackend>(
     buf: *const u8,
     count: i32,
@@ -318,6 +353,7 @@ pub fn issend<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_irecv`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn irecv<A: MukBackend>(
     buf: *mut u8,
     count: i32,
@@ -336,6 +372,7 @@ pub fn irecv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_wait`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn wait<A: MukBackend>(req: &mut usize, status: *mut AbiStatus) -> i32 {
     let mut r = req_to_impl::<A>(*req);
     let mut s = A::status_empty();
@@ -349,6 +386,7 @@ pub fn wait<A: MukBackend>(req: &mut usize, status: *mut AbiStatus) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_test`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn test<A: MukBackend>(req: &mut usize, flag: &mut bool, status: *mut AbiStatus) -> i32 {
     let mut r = req_to_impl::<A>(*req);
     let mut s = A::status_empty();
@@ -362,6 +400,7 @@ pub fn test<A: MukBackend>(req: &mut usize, flag: &mut bool, status: *mut AbiSta
     ret_code::<A>(rc)
 }
 
+/// `WRAP_waitall`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn waitall<A: MukBackend>(reqs: &mut [usize], statuses: *mut AbiStatus) -> i32 {
     let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
     let mut ss = vec![A::status_empty(); rs.len()];
@@ -377,6 +416,7 @@ pub fn waitall<A: MukBackend>(reqs: &mut [usize], statuses: *mut AbiStatus) -> i
     ret_code::<A>(rc)
 }
 
+/// `WRAP_testall`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn testall<A: MukBackend>(reqs: &mut [usize], flag: &mut bool, statuses: *mut AbiStatus) -> i32 {
     let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
     let mut ss = vec![A::status_empty(); rs.len()];
@@ -392,6 +432,7 @@ pub fn testall<A: MukBackend>(reqs: &mut [usize], flag: &mut bool, statuses: *mu
     ret_code::<A>(rc)
 }
 
+/// `WRAP_waitany`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn waitany<A: MukBackend>(reqs: &mut [usize], index: &mut i32, status: *mut AbiStatus) -> i32 {
     let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
     let mut s = A::status_empty();
@@ -416,6 +457,7 @@ pub fn waitany<A: MukBackend>(reqs: &mut [usize], index: &mut i32, status: *mut 
     ret_code::<A>(rc)
 }
 
+/// `WRAP_testany`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn testany<A: MukBackend>(
     reqs: &mut [usize],
     index: &mut i32,
@@ -475,6 +517,7 @@ where
     ret_code::<A>(rc)
 }
 
+/// `WRAP_waitsome`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn waitsome<A: MukBackend>(
     reqs: &mut [usize],
     outcount: &mut i32,
@@ -484,6 +527,7 @@ pub fn waitsome<A: MukBackend>(
     some_via::<A, _>(A::waitsome, reqs, outcount, indices, statuses)
 }
 
+/// `WRAP_testsome`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn testsome<A: MukBackend>(
     reqs: &mut [usize],
     outcount: &mut i32,
@@ -493,6 +537,7 @@ pub fn testsome<A: MukBackend>(
     some_via::<A, _>(A::testsome, reqs, outcount, indices, statuses)
 }
 
+/// `WRAP_probe`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn probe<A: MukBackend>(src: i32, tag: i32, comm: usize, status: *mut AbiStatus) -> i32 {
     let mut s = A::status_empty();
     let rc = A::probe(src_to_impl::<A>(src), tag_to_impl::<A>(tag), comm_to_impl::<A>(comm),
@@ -503,6 +548,7 @@ pub fn probe<A: MukBackend>(src: i32, tag: i32, comm: usize, status: *mut AbiSta
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iprobe`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn iprobe<A: MukBackend>(
     src: i32,
     tag: i32,
@@ -519,11 +565,13 @@ pub fn iprobe<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_cancel`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn cancel<A: MukBackend>(req: &mut usize) -> i32 {
     let mut r = req_to_impl::<A>(*req);
     ret_code::<A>(A::cancel(&mut r))
 }
 
+/// `WRAP_request_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn request_free<A: MukBackend>(req: &mut usize) -> i32 {
     let mut r = req_to_impl::<A>(*req);
     let rc = A::request_free(&mut r);
@@ -540,6 +588,7 @@ pub fn request_free<A: MukBackend>(req: &mut usize) -> i32 {
 // persistent handles alive across wait/test, so the word the app holds
 // stays valid — exactly the lifecycle the standard ABI mandates.
 
+/// `WRAP_send_init`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn send_init<A: MukBackend>(
     buf: *const u8,
     count: i32,
@@ -558,6 +607,7 @@ pub fn send_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_ssend_init`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn ssend_init<A: MukBackend>(
     buf: *const u8,
     count: i32,
@@ -576,6 +626,7 @@ pub fn ssend_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_recv_init`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn recv_init<A: MukBackend>(
     buf: *mut u8,
     count: i32,
@@ -594,6 +645,7 @@ pub fn recv_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_start`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn start<A: MukBackend>(req: &mut usize) -> i32 {
     let mut r = req_to_impl::<A>(*req);
     let rc = A::start(&mut r);
@@ -603,6 +655,7 @@ pub fn start<A: MukBackend>(req: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_startall`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn startall<A: MukBackend>(reqs: &mut [usize]) -> i32 {
     let mut rs: Vec<A::Request> = reqs.iter().map(|&r| req_to_impl::<A>(r)).collect();
     let rc = A::startall(&mut rs);
@@ -614,6 +667,7 @@ pub fn startall<A: MukBackend>(reqs: &mut [usize]) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_sendrecv`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn sendrecv<A: MukBackend>(
     sendbuf: *const u8,
@@ -650,14 +704,17 @@ pub fn sendrecv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_type_size`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_size<A: MukBackend>(dt: usize, out: &mut i32) -> i32 {
     ret_code::<A>(A::type_size(dt_to_impl::<A>(dt), out))
 }
 
+/// `WRAP_type_get_extent`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_get_extent<A: MukBackend>(dt: usize, lb: &mut isize, extent: &mut isize) -> i32 {
     ret_code::<A>(A::type_get_extent(dt_to_impl::<A>(dt), lb, extent))
 }
 
+/// `WRAP_type_contiguous`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_contiguous<A: MukBackend>(count: i32, child: usize, out: &mut usize) -> i32 {
     let mut d = A::datatype(crate::api::Dt::Byte);
     let rc = A::type_contiguous(count, dt_to_impl::<A>(child), &mut d);
@@ -667,6 +724,7 @@ pub fn type_contiguous<A: MukBackend>(count: i32, child: usize, out: &mut usize)
     ret_code::<A>(rc)
 }
 
+/// `WRAP_type_vector`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_vector<A: MukBackend>(
     count: i32,
     blocklen: i32,
@@ -682,6 +740,7 @@ pub fn type_vector<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_type_create_struct`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_create_struct<A: MukBackend>(
     blocks: &[(i32, isize, usize)],
     out: &mut usize,
@@ -697,6 +756,7 @@ pub fn type_create_struct<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_type_commit`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_commit<A: MukBackend>(dt: &mut usize) -> i32 {
     let mut d = dt_to_impl::<A>(*dt);
     let rc = A::type_commit(&mut d);
@@ -706,6 +766,7 @@ pub fn type_commit<A: MukBackend>(dt: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_type_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_free<A: MukBackend>(dt: &mut usize) -> i32 {
     let mut d = dt_to_impl::<A>(*dt);
     let rc = A::type_free(&mut d);
@@ -715,6 +776,7 @@ pub fn type_free<A: MukBackend>(dt: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_type_dup`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn type_dup<A: MukBackend>(dt: usize, out: &mut usize) -> i32 {
     let mut d = A::datatype(crate::api::Dt::Byte);
     let rc = A::type_dup(dt_to_impl::<A>(dt), &mut d);
@@ -724,6 +786,7 @@ pub fn type_dup<A: MukBackend>(dt: usize, out: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_op_create`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn op_create<A: MukBackend>(f: callbacks::MukOpFn, commute: bool, out: &mut usize) -> i32 {
     let Some(slot) = callbacks::alloc_op_slot(f) else {
         return crate::abi::errors::MPI_ERR_NO_MEM;
@@ -740,6 +803,7 @@ pub fn op_create<A: MukBackend>(f: callbacks::MukOpFn, commute: bool, out: &mut 
     ret_code::<A>(rc)
 }
 
+/// `WRAP_op_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn op_free<A: MukBackend>(op: &mut usize) -> i32 {
     let mut o = op_to_impl::<A>(*op);
     let rc = A::op_free(&mut o);
@@ -752,14 +816,17 @@ pub fn op_free<A: MukBackend>(op: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_barrier`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn barrier<A: MukBackend>(comm: usize) -> i32 {
     ret_code::<A>(A::barrier(comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_bcast`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn bcast<A: MukBackend>(buf: *mut u8, count: i32, dt: usize, root: i32, comm: usize) -> i32 {
     ret_code::<A>(A::bcast(buf, count, dt_to_impl::<A>(dt), root, comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_reduce`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn reduce<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -773,6 +840,7 @@ pub fn reduce<A: MukBackend>(
         op_to_impl::<A>(op), root, comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_allreduce`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn allreduce<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -785,6 +853,7 @@ pub fn allreduce<A: MukBackend>(
         op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_gather`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn gather<A: MukBackend>(
     sendbuf: *const u8,
@@ -800,6 +869,7 @@ pub fn gather<A: MukBackend>(
         recvbuf, recvcount, dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_scatter`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn scatter<A: MukBackend>(
     sendbuf: *const u8,
@@ -816,6 +886,7 @@ pub fn scatter<A: MukBackend>(
         dt_to_impl::<A>(recvtype), root, comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_allgather`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn allgather<A: MukBackend>(
     sendbuf: *const u8,
@@ -830,6 +901,7 @@ pub fn allgather<A: MukBackend>(
         recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_alltoall`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn alltoall<A: MukBackend>(
     sendbuf: *const u8,
@@ -844,6 +916,7 @@ pub fn alltoall<A: MukBackend>(
         recvbuf, recvcount, dt_to_impl::<A>(recvtype), comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_alltoallw`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn alltoallw<A: MukBackend>(
     sendbuf: *const u8,
@@ -863,6 +936,7 @@ pub fn alltoallw<A: MukBackend>(
         recvcounts, rdispls, &rt, comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_ialltoallw`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn ialltoallw<A: MukBackend>(
     sendbuf: *const u8,
@@ -897,6 +971,7 @@ pub fn ialltoallw<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_scan`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn scan<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -909,6 +984,7 @@ pub fn scan<A: MukBackend>(
         op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_exscan`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn exscan<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -921,6 +997,7 @@ pub fn exscan<A: MukBackend>(
         op_to_impl::<A>(op), comm_to_impl::<A>(comm)))
 }
 
+/// `WRAP_reduce_scatter_block`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn reduce_scatter_block<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -939,6 +1016,7 @@ pub fn reduce_scatter_block<A: MukBackend>(
 // forwards, and converts the resulting request handle back — the
 // request-heavy paths the paper's §6.2 worries about.
 
+/// `WRAP_ibarrier`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn ibarrier<A: MukBackend>(comm: usize, req: &mut usize) -> i32 {
     let mut r = A::request_null();
     let rc = A::ibarrier(comm_to_impl::<A>(comm), &mut r);
@@ -948,6 +1026,7 @@ pub fn ibarrier<A: MukBackend>(comm: usize, req: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_ibcast`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn ibcast<A: MukBackend>(
     buf: *mut u8,
     count: i32,
@@ -964,6 +1043,7 @@ pub fn ibcast<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_ireduce`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn ireduce<A: MukBackend>(
     sendbuf: *const u8,
@@ -984,6 +1064,7 @@ pub fn ireduce<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iallreduce`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn iallreduce<A: MukBackend>(
     sendbuf: *const u8,
@@ -1003,6 +1084,7 @@ pub fn iallreduce<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_igather`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn igather<A: MukBackend>(
     sendbuf: *const u8,
@@ -1024,6 +1106,7 @@ pub fn igather<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_igatherv`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn igatherv<A: MukBackend>(
     sendbuf: *const u8,
@@ -1047,6 +1130,7 @@ pub fn igatherv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iscatter`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn iscatter<A: MukBackend>(
     sendbuf: *const u8,
@@ -1069,6 +1153,7 @@ pub fn iscatter<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iscatterv`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn iscatterv<A: MukBackend>(
     sendbuf: *const u8,
@@ -1092,6 +1177,7 @@ pub fn iscatterv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iallgather`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn iallgather<A: MukBackend>(
     sendbuf: *const u8,
@@ -1112,6 +1198,7 @@ pub fn iallgather<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iallgatherv`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn iallgatherv<A: MukBackend>(
     sendbuf: *const u8,
@@ -1133,6 +1220,7 @@ pub fn iallgatherv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_ialltoall`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn ialltoall<A: MukBackend>(
     sendbuf: *const u8,
@@ -1153,6 +1241,7 @@ pub fn ialltoall<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_ialltoallv`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn ialltoallv<A: MukBackend>(
     sendbuf: *const u8,
@@ -1176,6 +1265,7 @@ pub fn ialltoallv<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iscan`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn iscan<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -1194,6 +1284,7 @@ pub fn iscan<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_iexscan`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn iexscan<A: MukBackend>(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -1212,6 +1303,7 @@ pub fn iexscan<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_ireduce_scatter_block`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn ireduce_scatter_block<A: MukBackend>(
     sendbuf: *const u8,
@@ -1233,6 +1325,7 @@ pub fn ireduce_scatter_block<A: MukBackend>(
 
 // --- Persistent collectives (MPI-4) --------------------------------------------
 
+/// `WRAP_barrier_init`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn barrier_init<A: MukBackend>(comm: usize, req: &mut usize) -> i32 {
     let mut r = A::request_null();
     let rc = A::barrier_init(comm_to_impl::<A>(comm), &mut r);
@@ -1242,6 +1335,7 @@ pub fn barrier_init<A: MukBackend>(comm: usize, req: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_bcast_init`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn bcast_init<A: MukBackend>(
     buf: *mut u8,
     count: i32,
@@ -1259,6 +1353,7 @@ pub fn bcast_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_allreduce_init`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn allreduce_init<A: MukBackend>(
     sendbuf: *const u8,
@@ -1278,6 +1373,7 @@ pub fn allreduce_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_gather_init`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn gather_init<A: MukBackend>(
     sendbuf: *const u8,
@@ -1299,6 +1395,7 @@ pub fn gather_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_scatter_init`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn scatter_init<A: MukBackend>(
     sendbuf: *const u8,
@@ -1321,6 +1418,7 @@ pub fn scatter_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_alltoall_init`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn alltoall_init<A: MukBackend>(
     sendbuf: *const u8,
@@ -1341,6 +1439,7 @@ pub fn alltoall_init<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_create_keyval`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_create_keyval<A: MukBackend>(
     copy: Option<callbacks::MukCopyFn>,
     delete: Option<callbacks::MukDeleteFn>,
@@ -1385,6 +1484,7 @@ pub fn comm_create_keyval<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_free_keyval`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_free_keyval<A: MukBackend>(keyval: &mut i32) -> i32 {
     let kv = *keyval;
     let rc = A::comm_free_keyval(keyval);
@@ -1401,10 +1501,12 @@ pub fn comm_free_keyval<A: MukBackend>(keyval: &mut i32) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_set_attr`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_set_attr<A: MukBackend>(comm: usize, keyval: i32, value: usize) -> i32 {
     ret_code::<A>(A::comm_set_attr(comm_to_impl::<A>(comm), keyval, value))
 }
 
+/// `WRAP_comm_get_attr`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_get_attr<A: MukBackend>(
     comm: usize,
     keyval: i32,
@@ -1414,10 +1516,12 @@ pub fn comm_get_attr<A: MukBackend>(
     ret_code::<A>(A::comm_get_attr(comm_to_impl::<A>(comm), keyval, value, flag))
 }
 
+/// `WRAP_comm_delete_attr`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_delete_attr<A: MukBackend>(comm: usize, keyval: i32) -> i32 {
     ret_code::<A>(A::comm_delete_attr(comm_to_impl::<A>(comm), keyval))
 }
 
+/// `WRAP_info_create`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn info_create<A: MukBackend>(out: &mut usize) -> i32 {
     let mut i = A::info_null();
     let rc = A::info_create(&mut i);
@@ -1427,14 +1531,17 @@ pub fn info_create<A: MukBackend>(out: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_info_set`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn info_set<A: MukBackend>(info: usize, key: &str, value: &str) -> i32 {
     ret_code::<A>(A::info_set(info_to_impl::<A>(info), key, value))
 }
 
+/// `WRAP_info_get`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn info_get<A: MukBackend>(info: usize, key: &str, out: &mut String, flag: &mut bool) -> i32 {
     ret_code::<A>(A::info_get(info_to_impl::<A>(info), key, out, flag))
 }
 
+/// `WRAP_info_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn info_free<A: MukBackend>(info: &mut usize) -> i32 {
     let mut i = info_to_impl::<A>(*info);
     let rc = A::info_free(&mut i);
@@ -1450,6 +1557,7 @@ pub fn info_free<A: MukBackend>(info: &mut usize) -> i32 {
 // constants that differ per backend (lock types, assertion bitmasks)
 // are translated by value, not bit pattern.
 
+/// `WRAP_win_create`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_create<A: MukBackend>(
     base: *mut u8,
     size: isize,
@@ -1467,6 +1575,7 @@ pub fn win_create<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_win_allocate`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_allocate<A: MukBackend>(
     size: isize,
     disp_unit: i32,
@@ -1484,6 +1593,7 @@ pub fn win_allocate<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+/// `WRAP_win_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_free<A: MukBackend>(win: &mut usize) -> i32 {
     let mut w = win_to_impl::<A>(*win);
     let rc = A::win_free(&mut w);
@@ -1493,23 +1603,28 @@ pub fn win_free<A: MukBackend>(win: &mut usize) -> i32 {
     ret_code::<A>(rc)
 }
 
+/// `WRAP_win_fence`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_fence<A: MukBackend>(assert: i32, win: usize) -> i32 {
     ret_code::<A>(A::win_fence(assert_to_impl::<A>(assert), win_to_impl::<A>(win)))
 }
 
+/// `WRAP_win_lock`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_lock<A: MukBackend>(lock_type: i32, rank: i32, assert: i32, win: usize) -> i32 {
     ret_code::<A>(A::win_lock(lock_type_to_impl::<A>(lock_type), rank,
         assert_to_impl::<A>(assert), win_to_impl::<A>(win)))
 }
 
+/// `WRAP_win_unlock`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_unlock<A: MukBackend>(rank: i32, win: usize) -> i32 {
     ret_code::<A>(A::win_unlock(rank, win_to_impl::<A>(win)))
 }
 
+/// `WRAP_win_flush`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn win_flush<A: MukBackend>(rank: i32, win: usize) -> i32 {
     ret_code::<A>(A::win_flush(rank, win_to_impl::<A>(win)))
 }
 
+/// `WRAP_put`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn put<A: MukBackend>(
     origin: *const u8,
@@ -1526,6 +1641,7 @@ pub fn put<A: MukBackend>(
         win_to_impl::<A>(win)))
 }
 
+/// `WRAP_get`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn get<A: MukBackend>(
     origin: *mut u8,
@@ -1542,6 +1658,7 @@ pub fn get<A: MukBackend>(
         win_to_impl::<A>(win)))
 }
 
+/// `WRAP_accumulate`: translate handles/constants at the boundary, call the backend, translate results back.
 #[allow(clippy::too_many_arguments)]
 pub fn accumulate<A: MukBackend>(
     origin: *const u8,
@@ -1559,6 +1676,7 @@ pub fn accumulate<A: MukBackend>(
         op_to_impl::<A>(op), win_to_impl::<A>(win)))
 }
 
+/// `WRAP_get_elements`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn get_elements<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i32) -> i32 {
     // Rebuild a backend-layout status carrying the muk status's byte
     // count (the wrap library knows the backend layout — it is compiled
@@ -1573,6 +1691,7 @@ pub fn get_elements<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mu
     0
 }
 
+/// `WRAP_get_count`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn get_count<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i32) -> i32 {
     // Counts live in the MUK status's reserved fields after conversion.
     let s = unsafe { &*status };
@@ -1594,6 +1713,83 @@ pub fn get_count<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i
     0
 }
 
+// --- Sessions (MPI-4) --------------------------------------------------------
+//
+// The session handle rides the word union like every other handle kind;
+// the only constant to translate is `MPI_SESSION_NULL`. The pset-name
+// and tag-string arguments are plain strings — nothing ABI-specific.
+
+/// `WRAP_session_init`: translate the info/errhandler handles, call the
+/// backend, hand back the session word.
+pub fn session_init<A: MukBackend>(info: usize, errh: usize, session: &mut usize) -> i32 {
+    let mut s = A::session_null();
+    let rc = A::session_init(info_to_impl::<A>(info), errh_to_impl::<A>(errh), &mut s);
+    if rc == 0 {
+        *session = session_to_muk::<A>(s);
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_session_finalize`: nulls the muk-side word on success.
+pub fn session_finalize<A: MukBackend>(session: &mut usize) -> i32 {
+    let mut s = session_to_impl::<A>(*session);
+    let rc = A::session_finalize(&mut s);
+    if rc == 0 {
+        *session = std_h::MPI_SESSION_NULL;
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_session_get_num_psets`.
+pub fn session_get_num_psets<A: MukBackend>(session: usize, out: &mut i32) -> i32 {
+    ret_code::<A>(A::session_get_num_psets(session_to_impl::<A>(session), out))
+}
+
+/// `WRAP_session_get_nth_pset`.
+pub fn session_get_nth_pset<A: MukBackend>(session: usize, n: i32, out: &mut String) -> i32 {
+    ret_code::<A>(A::session_get_nth_pset(session_to_impl::<A>(session), n, out))
+}
+
+/// `WRAP_session_get_pset_info`: the returned info handle crosses back
+/// as a word (the caller frees it through `WRAP_info_free`).
+pub fn session_get_pset_info<A: MukBackend>(session: usize, pset: &str, out: &mut usize) -> i32 {
+    let mut i = A::info_null();
+    let rc = A::session_get_pset_info(session_to_impl::<A>(session), pset, &mut i);
+    if rc == 0 {
+        *out = i.to_word();
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_group_from_session_pset`.
+pub fn group_from_session_pset<A: MukBackend>(session: usize, pset: &str, out: &mut usize) -> i32 {
+    let mut g = A::Group::from_word(0);
+    let rc = A::group_from_session_pset(session_to_impl::<A>(session), pset, &mut g);
+    if rc == 0 {
+        *out = g.to_word();
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_comm_create_from_group`: the no-parent communicator
+/// constructor — group and errhandler handles translate; the tag string
+/// passes through untouched (it is the disambiguator, not a handle).
+pub fn comm_create_from_group<A: MukBackend>(
+    group: usize,
+    stringtag: &str,
+    info: usize,
+    errh: usize,
+    out: &mut usize,
+) -> i32 {
+    let mut c = A::comm_null();
+    let rc = A::comm_create_from_group(group_to_impl::<A>(group), stringtag,
+        info_to_impl::<A>(info), errh_to_impl::<A>(errh), &mut c);
+    if rc == 0 {
+        *out = comm_to_muk::<A>(c);
+    }
+    ret_code::<A>(rc)
+}
+
 // --- The vtable and symbol table -------------------------------------------------
 
 macro_rules! define_vtable {
@@ -1602,7 +1798,10 @@ macro_rules! define_vtable {
         /// the paper's listing).
         #[allow(non_snake_case)]
         pub struct Vtable {
-            $( pub $name: $ty, )*
+            $(
+                #[doc = concat!("`WRAP_", stringify!($name), "`, resolved to a typed fn pointer.")]
+                pub $name: $ty,
+            )*
         }
 
         impl Vtable {
@@ -1742,4 +1941,11 @@ define_vtable! {
     put: fn(*const u8, i32, usize, i32, isize, i32, usize, usize) -> i32,
     get: fn(*mut u8, i32, usize, i32, isize, i32, usize, usize) -> i32,
     accumulate: fn(*const u8, i32, usize, i32, isize, i32, usize, usize, usize) -> i32,
+    session_init: fn(usize, usize, &mut usize) -> i32,
+    session_finalize: fn(&mut usize) -> i32,
+    session_get_num_psets: fn(usize, &mut i32) -> i32,
+    session_get_nth_pset: fn(usize, i32, &mut String) -> i32,
+    session_get_pset_info: fn(usize, &str, &mut usize) -> i32,
+    group_from_session_pset: fn(usize, &str, &mut usize) -> i32,
+    comm_create_from_group: fn(usize, &str, usize, usize, &mut usize) -> i32,
 }

@@ -21,7 +21,7 @@ use crate::abi::handles::*;
 use crate::abi::status::AbiStatus;
 use crate::api::{dt_to_abi_const, op_to_abi_const, Dt, OpName};
 use crate::core::request::StatusCore;
-use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, WinId};
+use crate::core::{err, CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, SessionId, WinId};
 use crate::impls::repr::{Backed, Repr};
 
 /// The public ABI type.
@@ -43,6 +43,7 @@ enum UserKind {
     Errhandler,
     Info,
     Win,
+    Session,
 }
 
 #[inline(always)]
@@ -87,6 +88,7 @@ impl Repr for NativeRepr {
     type Errhandler = AbiErrhandler;
     type Info = AbiInfo;
     type Win = AbiWin;
+    type Session = AbiSession;
     type Status = AbiStatus;
 
     fn c_comm_world() -> AbiComm {
@@ -112,6 +114,9 @@ impl Repr for NativeRepr {
     }
     fn c_win_null() -> AbiWin {
         AbiWin::NULL
+    }
+    fn c_session_null() -> AbiSession {
+        AbiSession::NULL
     }
 
     fn c_datatype(d: Dt) -> AbiDatatype {
@@ -261,6 +266,16 @@ impl Repr for NativeRepr {
     #[inline]
     fn win_h(id: WinId) -> AbiWin {
         AbiWin(user_h(UserKind::Win, id.0))
+    }
+
+    #[inline]
+    fn session_id(s: AbiSession) -> RC<SessionId> {
+        user_id(UserKind::Session, s.0).map(SessionId).ok_or(err!(MPI_ERR_SESSION))
+    }
+
+    #[inline]
+    fn session_h(id: SessionId) -> AbiSession {
+        AbiSession(user_h(UserKind::Session, id.0))
     }
 
     fn status_empty() -> AbiStatus {

@@ -20,6 +20,7 @@ mod env;
 mod persistent;
 mod pt2pt;
 mod rma;
+mod session;
 
 use crate::api::MpiAbi;
 
@@ -45,15 +46,32 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     v.extend(coll::tests::<A>());
     v.extend(comm_attr::tests::<A>());
     v.extend(rma::tests::<A>());
+    v.extend(session::tests::<A>());
     v
+}
+
+/// The sessions battery alone (init/finalize ordering, pset queries,
+/// `MPI_Comm_create_from_group` tag disambiguation) — what the CI
+/// `sessions` job runs per ABI config via `tests/sessions.rs`.
+pub fn session_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    session::tests::<A>()
 }
 
 /// Run the whole suite under ABI `A`. Call from every rank of a running
 /// job *after* `A::init()`. Returns per-test results (identical on all
 /// ranks: verdicts are AND-reduced).
 pub fn run_all<A: MpiAbi>(rank: usize) -> Vec<TestResult> {
+    run_registry::<A>(rank, registry::<A>())
+}
+
+/// Run an explicit test list (the full [`registry`] or a focused one
+/// like [`session_registry`]) with the usual AND-reduced verdicts.
+pub fn run_registry<A: MpiAbi>(
+    rank: usize,
+    tests: Vec<(&'static str, TestFn)>,
+) -> Vec<TestResult> {
     let mut results = Vec::new();
-    for (name, f) in registry::<A>() {
+    for (name, f) in tests {
         let local = f(rank);
         // Synchronize & combine verdicts: 1 = pass.
         let mine: i32 = if local.is_ok() { 1 } else { 0 };

@@ -1,0 +1,290 @@
+//! MPI-4 Sessions tests: init/finalize ordering (world and sessions
+//! coexist; finalize order is free), the process-set queries and their
+//! error cases, `MPI_Group_from_session_pset`, and
+//! `MPI_Comm_create_from_group` with tag-string disambiguation.
+//!
+//! These run *inside* a world-model job (the suite harness calls
+//! `MPI_Init`), which is exactly the coexistence MPI-4 §11 requires;
+//! the sessions-*only* path (no `MPI_Init` at all) is covered by
+//! `tests/sessions.rs` and the sessions-only halo acceptance test.
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi, OpName};
+use crate::core::session::{PSET_SELF, PSET_WORLD};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("session.init_finalize", init_finalize::<A>),
+        ("session.finalize_order_is_free", finalize_order_is_free::<A>),
+        ("session.world_coexistence", world_coexistence::<A>),
+        ("session.pset_enumeration", pset_enumeration::<A>),
+        ("session.pset_info", pset_info::<A>),
+        ("session.unknown_pset_errors", unknown_pset_errors::<A>),
+        ("session.group_from_pset", group_from_pset::<A>),
+        ("session.comm_from_world_pset", comm_from_world_pset::<A>),
+        ("session.comm_from_self_pset", comm_from_self_pset::<A>),
+        ("session.tag_disambiguation", tag_disambiguation::<A>),
+        ("session.double_finalize_errors", double_finalize_errors::<A>),
+        ("session.null_session_errors", null_session_errors::<A>),
+    ]
+}
+
+fn world_geometry<A: MpiAbi>() -> (i32, i32) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    (size, rank)
+}
+
+/// Open a session, run `f`, finalize. Saves each test the boilerplate.
+fn with_session<A: MpiAbi, F: FnOnce(A::Session) -> Result<(), String>>(
+    f: F,
+) -> Result<(), String> {
+    let mut s = A::session_null();
+    check_rc!(A::session_init(A::info_null(), A::errhandler_return(), &mut s), "session_init");
+    check!(s != A::session_null(), "session_init yields a non-null handle");
+    f(s)?;
+    let mut s2 = s;
+    check_rc!(A::session_finalize(&mut s2), "session_finalize");
+    check!(s2 == A::session_null(), "session_finalize nulls the handle");
+    Ok(())
+}
+
+fn init_finalize<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    with_session::<A, _>(|_s| Ok(()))
+}
+
+fn finalize_order_is_free<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    // Two sessions, finalized in creation order (s1 before s2) — the
+    // refcount, not a stack, governs lifetime.
+    let mut s1 = A::session_null();
+    let mut s2 = A::session_null();
+    check_rc!(A::session_init(A::info_null(), A::errhandler_return(), &mut s1), "init s1");
+    check_rc!(A::session_init(A::info_null(), A::errhandler_return(), &mut s2), "init s2");
+    check!(s1 != s2, "distinct sessions get distinct handles");
+    check_rc!(A::session_finalize(&mut s1), "finalize s1 first");
+    // s2 is still fully usable after s1 is gone.
+    let mut n = 0;
+    check_rc!(A::session_get_num_psets(s2, &mut n), "num_psets on surviving session");
+    check!(n >= 2, "psets visible after sibling finalize");
+    check_rc!(A::session_finalize(&mut s2), "finalize s2");
+    Ok(())
+}
+
+fn world_coexistence<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    // The suite runs under the world model; a session on top must not
+    // perturb MPI_Initialized / MPI_Finalized.
+    with_session::<A, _>(|_s| {
+        check!(A::initialized(), "initialized with world + session active");
+        check!(!A::finalized(), "not finalized while epochs are active");
+        Ok(())
+    })?;
+    check!(A::initialized(), "still initialized after session close");
+    check!(!A::finalized(), "world epoch still open");
+    Ok(())
+}
+
+fn pset_enumeration<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    with_session::<A, _>(|s| {
+        let mut n = 0;
+        check_rc!(A::session_get_num_psets(s, &mut n), "get_num_psets");
+        check!(n >= 2, "at least mpi://WORLD and mpi://SELF ({n})");
+        let mut names = Vec::new();
+        for i in 0..n {
+            let mut name = String::new();
+            check_rc!(A::session_get_nth_pset(s, i, &mut name), "get_nth_pset");
+            names.push(name);
+        }
+        check!(names[0] == PSET_WORLD, "pset 0 is {PSET_WORLD} (got {:?})", names[0]);
+        check!(names[1] == PSET_SELF, "pset 1 is {PSET_SELF} (got {:?})", names[1]);
+        // Out-of-range index errors.
+        let mut name = String::new();
+        check!(A::session_get_nth_pset(s, n, &mut name) != 0, "index {n} out of range");
+        Ok(())
+    })
+}
+
+fn pset_info<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (size, _) = world_geometry::<A>();
+    with_session::<A, _>(|s| {
+        for (pset, want) in [(PSET_WORLD, size), (PSET_SELF, 1)] {
+            let mut info = A::info_null();
+            check_rc!(A::session_get_pset_info(s, pset, &mut info), "get_pset_info");
+            let mut v = String::new();
+            let mut flag = false;
+            check_rc!(A::info_get(info, "mpi_size", &mut v, &mut flag), "info_get");
+            check!(flag, "{pset} info has mpi_size");
+            check!(v == want.to_string(), "{pset} mpi_size {v:?}, want {want}");
+            check_rc!(A::info_free(&mut info), "info_free");
+        }
+        Ok(())
+    })
+}
+
+fn unknown_pset_errors<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    with_session::<A, _>(|s| {
+        let mut info = A::info_null();
+        check!(
+            A::session_get_pset_info(s, "mpi://NO_SUCH_SET", &mut info) != 0,
+            "pset_info on unknown set errors"
+        );
+        let mut g = unsafe { std::mem::zeroed::<A::Group>() };
+        check!(
+            A::group_from_session_pset(s, "mpi://NO_SUCH_SET", &mut g) != 0,
+            "group_from_session_pset on unknown set errors"
+        );
+        Ok(())
+    })
+}
+
+fn group_from_pset<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (size, rank) = world_geometry::<A>();
+    with_session::<A, _>(|s| {
+        let mut g = unsafe { std::mem::zeroed::<A::Group>() };
+        check_rc!(A::group_from_session_pset(s, PSET_WORLD, &mut g), "group from WORLD");
+        let (mut gs, mut gr) = (0, -1);
+        check_rc!(A::group_size(g, &mut gs), "group_size");
+        check_rc!(A::group_rank(g, &mut gr), "group_rank");
+        check!(gs == size, "WORLD group spans the job ({gs} vs {size})");
+        check!(gr == rank, "WORLD group preserves rank order ({gr} vs {rank})");
+        check_rc!(A::group_free(&mut g), "free WORLD group");
+
+        // Pset names are URIs: case-insensitive.
+        let mut g2 = unsafe { std::mem::zeroed::<A::Group>() };
+        check_rc!(A::group_from_session_pset(s, "MPI://world", &mut g2), "case-insensitive");
+        check_rc!(A::group_free(&mut g2), "free");
+
+        let mut gself = unsafe { std::mem::zeroed::<A::Group>() };
+        check_rc!(A::group_from_session_pset(s, PSET_SELF, &mut gself), "group from SELF");
+        let mut ss = 0;
+        check_rc!(A::group_size(gself, &mut ss), "self size");
+        check!(ss == 1, "SELF group is a singleton");
+        check_rc!(A::group_free(&mut gself), "free SELF group");
+        Ok(())
+    })
+}
+
+fn comm_from_world_pset<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (size, rank) = world_geometry::<A>();
+    with_session::<A, _>(|s| {
+        let mut g = unsafe { std::mem::zeroed::<A::Group>() };
+        check_rc!(A::group_from_session_pset(s, PSET_WORLD, &mut g), "group");
+        let mut comm = A::comm_null();
+        check_rc!(
+            A::comm_create_from_group(g, "suite://world-pset", A::info_null(),
+                A::errhandler_return(), &mut comm),
+            "comm_create_from_group"
+        );
+        check_rc!(A::group_free(&mut g), "group_free");
+        let (mut cs, mut cr) = (0, -1);
+        check_rc!(A::comm_size(comm, &mut cs), "comm_size");
+        check_rc!(A::comm_rank(comm, &mut cr), "comm_rank");
+        check!(cs == size && cr == rank, "derived comm mirrors the world ({cs}/{cr})");
+        // The derived comm carries real traffic: allreduce of 1 = size.
+        let one = 1i32;
+        let mut sum = 0i32;
+        check_rc!(
+            A::allreduce(ptr(&one), ptr_mut(&mut sum), 1, A::datatype(Dt::Int),
+                A::op(OpName::Sum), comm),
+            "allreduce on derived comm"
+        );
+        check!(sum == size, "allreduce over session comm ({sum} vs {size})");
+        check_rc!(A::comm_free(&mut comm), "comm_free");
+        Ok(())
+    })
+}
+
+fn comm_from_self_pset<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    with_session::<A, _>(|s| {
+        let mut g = unsafe { std::mem::zeroed::<A::Group>() };
+        check_rc!(A::group_from_session_pset(s, PSET_SELF, &mut g), "group");
+        let mut comm = A::comm_null();
+        check_rc!(
+            A::comm_create_from_group(g, "suite://self-pset", A::info_null(),
+                A::errhandler_return(), &mut comm),
+            "comm_create_from_group over a singleton group"
+        );
+        check_rc!(A::group_free(&mut g), "group_free");
+        let mut cs = 0;
+        check_rc!(A::comm_size(comm, &mut cs), "comm_size");
+        check!(cs == 1, "SELF-derived comm is a singleton");
+        check_rc!(A::comm_free(&mut comm), "comm_free");
+        Ok(())
+    })
+}
+
+/// Two communicators derived concurrently from the same (world) group:
+/// rank 0 creates them in order (a, b), every other rank in order
+/// (b, a). Only the tag strings keep the two context-plane agreements
+/// apart — this is the MPI-4 §11.6 disambiguation rule, exercised.
+fn tag_disambiguation<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (size, rank) = world_geometry::<A>();
+    with_session::<A, _>(|s| {
+        let mut g = unsafe { std::mem::zeroed::<A::Group>() };
+        check_rc!(A::group_from_session_pset(s, PSET_WORLD, &mut g), "group");
+        let make = |tag: &str| -> Result<A::Comm, String> {
+            let mut c = A::comm_null();
+            let rc = A::comm_create_from_group(g, tag, A::info_null(), A::errhandler_return(),
+                &mut c);
+            if rc != 0 {
+                return Err(format!("comm_create_from_group({tag}) rc {rc}"));
+            }
+            Ok(c)
+        };
+        let (mut ca, mut cb) = if rank == 0 {
+            let a = make("suite://disamb/a")?;
+            let b = make("suite://disamb/b")?;
+            (a, b)
+        } else {
+            let b = make("suite://disamb/b")?;
+            let a = make("suite://disamb/a")?;
+            (a, b)
+        };
+        check_rc!(A::group_free(&mut g), "group_free");
+        // Every rank agreed on which comm is which: reductions with
+        // distinct payloads land on the right plane.
+        for (comm, val) in [(ca, 1i32), (cb, 1000i32)] {
+            let mut sum = 0i32;
+            check_rc!(
+                A::allreduce(ptr(&val), ptr_mut(&mut sum), 1, A::datatype(Dt::Int),
+                    A::op(OpName::Sum), comm),
+                "allreduce"
+            );
+            check!(sum == val * size, "disambiguated comm sums {sum} (want {})", val * size);
+        }
+        // Same membership, different contexts: congruent, not identical.
+        let mut cmp = -1;
+        check_rc!(A::comm_compare(ca, cb, &mut cmp), "comm_compare");
+        check!(
+            cmp == crate::abi::constants::MPI_CONGRUENT,
+            "two derived comms are congruent (got {cmp})"
+        );
+        check_rc!(A::comm_free(&mut ca), "free a");
+        check_rc!(A::comm_free(&mut cb), "free b");
+        Ok(())
+    })
+}
+
+fn double_finalize_errors<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut s = A::session_null();
+    check_rc!(A::session_init(A::info_null(), A::errhandler_return(), &mut s), "init");
+    check_rc!(A::session_finalize(&mut s), "first finalize");
+    // The handle is now MPI_SESSION_NULL; finalizing again must error.
+    check!(A::session_finalize(&mut s) != 0, "double finalize errors");
+    Ok(())
+}
+
+fn null_session_errors<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut n = 0;
+    check!(
+        A::session_get_num_psets(A::session_null(), &mut n) != 0,
+        "queries on MPI_SESSION_NULL error"
+    );
+    let mut name = String::new();
+    check!(
+        A::session_get_nth_pset(A::session_null(), 0, &mut name) != 0,
+        "nth_pset on MPI_SESSION_NULL errors"
+    );
+    Ok(())
+}

@@ -46,6 +46,7 @@ fn runtime_handles_roundtrip_mpich() {
     roundtrip_kind!(MpichAbi, dt_to_impl, dt_to_muk, m::T_DATATYPE);
     roundtrip_kind!(MpichAbi, req_to_impl, req_to_muk, m::T_REQUEST);
     roundtrip_kind!(MpichAbi, win_to_impl, win_to_muk, m::T_WIN);
+    roundtrip_kind!(MpichAbi, session_to_impl, session_to_muk, m::T_SESSION);
     roundtrip_kind!(MpichAbi, errh_to_impl, errh_to_muk, m::T_ERRHANDLER);
 }
 
@@ -58,6 +59,7 @@ fn runtime_handles_roundtrip_ompi() {
     roundtrip_kind!(OmpiAbi, comm_to_impl, comm_to_muk, m::T_COMM);
     roundtrip_kind!(OmpiAbi, req_to_impl, req_to_muk, m::T_REQUEST);
     roundtrip_kind!(OmpiAbi, win_to_impl, win_to_muk, m::T_WIN);
+    roundtrip_kind!(OmpiAbi, session_to_impl, session_to_muk, m::T_SESSION);
     roundtrip_kind!(OmpiAbi, errh_to_impl, errh_to_muk, m::T_ERRHANDLER);
 }
 
@@ -88,6 +90,8 @@ fn null_handles_map_both_ways() {
         assert_eq!(req_to_muk::<A>(A::request_null()), std_h::MPI_REQUEST_NULL);
         assert_eq!(win_to_impl::<A>(std_h::MPI_WIN_NULL), A::win_null());
         assert_eq!(win_to_muk::<A>(A::win_null()), std_h::MPI_WIN_NULL);
+        assert_eq!(session_to_impl::<A>(std_h::MPI_SESSION_NULL), A::session_null());
+        assert_eq!(session_to_muk::<A>(A::session_null()), std_h::MPI_SESSION_NULL);
         // Info lacks Debug in the ABI trait; compare without assert_eq.
         assert!(info_to_impl::<A>(std_h::MPI_INFO_NULL) == A::info_null());
     }

@@ -1,0 +1,66 @@
+//! Acceptance: the **sessions-only** halo exchange — `MPI_Session_init`
+//! → `mpi://WORLD` pset → group → `MPI_Comm_create_from_group`, never
+//! calling `MPI_Init` — produces bitwise-identical results to the
+//! world-model run, in every exchange mode (sendrecv / persistent /
+//! RMA), under every ABI configuration, on both transports.
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::apps::halo::{jacobi, jacobi_sessions, HaloMode, HaloParams};
+use mpi_abi::apps::{with_abi, AbiApp, AbiConfig};
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+
+const RANKS: usize = 3;
+const N: usize = 48;
+const ITERS: usize = 8;
+
+struct Halo {
+    transport: TransportKind,
+    mode: HaloMode,
+    sessions: bool,
+}
+
+impl AbiApp<f64> for Halo {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let (mode, sessions) = (self.mode, self.sessions);
+        let out = run_job_ok(JobSpec::new(RANKS).with_transport(self.transport), move |_| {
+            let p = HaloParams { n: N, iters: ITERS, mode };
+            if sessions {
+                // No MPI_Init / MPI_Finalize anywhere on this path.
+                let (_, global) = jacobi_sessions::<A>(p);
+                global
+            } else {
+                A::init();
+                let (_, global) = jacobi::<A>(p);
+                A::finalize();
+                global
+            }
+        });
+        out[0]
+    }
+}
+
+#[test]
+fn sessions_only_halo_bitwise_matches_world_model() {
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        // Reference: the world model, sendrecv, native standard ABI.
+        let reference = with_abi(
+            AbiConfig::NativeAbi,
+            Halo { transport, mode: HaloMode::Sendrecv, sessions: false },
+        );
+        assert!(reference > 0.0, "heat must have diffused");
+        for abi in AbiConfig::ALL {
+            for mode in [HaloMode::Sendrecv, HaloMode::Persistent, HaloMode::Rma] {
+                let got = with_abi(abi, Halo { transport, mode, sessions: true });
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "sessions-only {} / {} on {} transport diverged: {got} vs {reference}",
+                    abi.name(),
+                    mode.name(),
+                    transport.name(),
+                );
+            }
+        }
+    }
+}

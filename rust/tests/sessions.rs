@@ -1,0 +1,226 @@
+//! MPI-4 Sessions: the testsuite battery under all five ABI
+//! configurations, plus engine-level coverage the in-job battery can't
+//! express — sessions-*only* jobs (no `MPI_Init` anywhere), the shared
+//! init refcount behind `MPI_Initialized`/`MPI_Finalized`, and
+//! launcher-provided process sets.
+
+use mpi_abi::api::{Dt, MpiAbi, OpName};
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::core::world::World;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::launcher::{run_job_ok, run_on_world, JobSpec};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+use mpi_abi::testsuite;
+
+fn run_session_battery<A: MpiAbi>(ranks: usize) {
+    let reports = run_job_ok(JobSpec::new(ranks), |rank| {
+        assert_eq!(A::init(), 0, "{} init", A::NAME);
+        let results = testsuite::run_registry::<A>(rank, testsuite::session_registry::<A>());
+        let report = testsuite::report(A::NAME, &results);
+        let failed = results.iter().filter(|r| !r.passed).count();
+        assert_eq!(A::finalize(), 0, "{} finalize", A::NAME);
+        (report, failed)
+    });
+    let (report, failures) = &reports[0];
+    if *failures > 0 {
+        panic!("{report}");
+    }
+}
+
+#[test]
+fn session_battery_mpich_native() {
+    run_session_battery::<MpichAbi>(4);
+}
+
+#[test]
+fn session_battery_ompi_native() {
+    run_session_battery::<OmpiAbi>(4);
+}
+
+#[test]
+fn session_battery_muk_over_mpich() {
+    run_session_battery::<MukMpich>(4);
+}
+
+#[test]
+fn session_battery_muk_over_ompi() {
+    run_session_battery::<MukOmpi>(4);
+}
+
+#[test]
+fn session_battery_native_standard_abi() {
+    run_session_battery::<NativeAbi>(4);
+}
+
+/// A whole job that never calls `MPI_Init`: sessions carry everything,
+/// including a collective over a `MPI_Comm_create_from_group` comm.
+#[test]
+fn sessions_only_job_never_calls_init() {
+    fn body<A: MpiAbi>(ranks: usize) {
+        let out = run_job_ok(JobSpec::new(ranks), |_| {
+            assert!(!A::initialized(), "nothing initialized yet");
+            let mut s = A::session_null();
+            assert_eq!(A::session_init(A::info_null(), A::errhandler_return(), &mut s), 0);
+            assert!(A::initialized(), "a session initializes the library");
+            assert!(!A::finalized());
+            let mut g = unsafe { std::mem::zeroed::<A::Group>() };
+            assert_eq!(
+                A::group_from_session_pset(s, mpi_abi::core::session::PSET_WORLD, &mut g),
+                0
+            );
+            let mut comm = A::comm_null();
+            assert_eq!(
+                A::comm_create_from_group(g, "test://sessions-only", A::info_null(),
+                    A::errhandler_return(), &mut comm),
+                0
+            );
+            A::group_free(&mut g);
+            let one = 1i32;
+            let mut sum = 0i32;
+            assert_eq!(
+                A::allreduce(&one as *const i32 as *const u8, &mut sum as *mut i32 as *mut u8,
+                    1, A::datatype(Dt::Int), A::op(OpName::Sum), comm),
+                0
+            );
+            A::comm_free(&mut comm);
+            assert_eq!(A::session_finalize(&mut s), 0);
+            assert!(A::finalized(), "last session finalize finalizes the library");
+            assert!(A::initialized(), "initialized never resets");
+            sum
+        });
+        for v in out {
+            assert_eq!(v as usize, ranks, "{}", A::NAME);
+        }
+    }
+    body::<MpichAbi>(3);
+    body::<OmpiAbi>(3);
+    body::<MukMpich>(3);
+    body::<MukOmpi>(3);
+    body::<NativeAbi>(3);
+}
+
+/// World finalize with a session still open must NOT report the library
+/// finalized (the sessions-aware refcount contract of SPEC.md §6).
+#[test]
+fn world_finalize_with_open_session_keeps_library_alive() {
+    let out = run_job_ok(JobSpec::new(2), |_| {
+        let mut s = NativeAbi::session_null();
+        assert_eq!(
+            NativeAbi::session_init(NativeAbi::info_null(), NativeAbi::errhandler_return(),
+                &mut s),
+            0
+        );
+        assert_eq!(NativeAbi::init(), 0);
+        assert_eq!(NativeAbi::finalize(), 0);
+        let mid = (NativeAbi::initialized(), NativeAbi::finalized());
+        assert_eq!(NativeAbi::session_finalize(&mut s), 0);
+        let end = (NativeAbi::initialized(), NativeAbi::finalized());
+        (mid, end)
+    });
+    for (mid, end) in out {
+        assert_eq!(mid, (true, false), "world finalized but session alive");
+        assert_eq!(end, (true, true), "all epochs closed");
+    }
+}
+
+/// Launcher-provided process sets surface through the session queries
+/// only on the ranks they contain.
+#[test]
+fn launcher_psets_surface_per_rank() {
+    let ranks = 4;
+    let psets = vec![
+        ("app://even".to_string(), vec![0usize, 2]),
+        ("app://odd".to_string(), vec![1usize, 3]),
+    ];
+    let world = World::new_with_psets(ranks, TransportKind::Spsc, psets);
+    let out = run_on_world(world, ranks, |rank| {
+        let mut s = NativeAbi::session_null();
+        assert_eq!(
+            NativeAbi::session_init(NativeAbi::info_null(), NativeAbi::errhandler_return(),
+                &mut s),
+            0
+        );
+        let mut n = 0;
+        assert_eq!(NativeAbi::session_get_num_psets(s, &mut n), 0);
+        let mut names = Vec::new();
+        for i in 0..n {
+            let mut name = String::new();
+            assert_eq!(NativeAbi::session_get_nth_pset(s, i, &mut name), 0);
+            names.push(name);
+        }
+        // A comm over "my" launcher set: even ranks pair up, odd ranks
+        // pair up — same code path on both, tag string per set.
+        let mine = if rank % 2 == 0 { "app://even" } else { "app://odd" };
+        let mut g = unsafe { std::mem::zeroed::<<NativeAbi as MpiAbi>::Group>() };
+        assert_eq!(NativeAbi::group_from_session_pset(s, mine, &mut g), 0);
+        let mut comm = NativeAbi::comm_null();
+        assert_eq!(
+            NativeAbi::comm_create_from_group(g, mine, NativeAbi::info_null(),
+                NativeAbi::errhandler_return(), &mut comm),
+            0
+        );
+        NativeAbi::group_free(&mut g);
+        let mut cs = 0;
+        assert_eq!(NativeAbi::comm_size(comm, &mut cs), 0);
+        NativeAbi::comm_free(&mut comm);
+        assert_eq!(NativeAbi::session_finalize(&mut s), 0);
+        (names, cs)
+    });
+    for (rank, outcome) in out.into_iter().enumerate() {
+        let (names, cs) = match outcome {
+            mpi_abi::launcher::RankOutcome::Ok(v) => v,
+            other => panic!("rank {rank} failed: {other:?}"),
+        };
+        assert_eq!(cs, 2, "launcher-set comm spans its two members");
+        let mine = if rank % 2 == 0 { "app://even" } else { "app://odd" };
+        let other = if rank % 2 == 0 { "app://odd" } else { "app://even" };
+        assert!(names.iter().any(|n| n == mine), "rank {rank} sees {mine} in {names:?}");
+        assert!(!names.iter().any(|n| n == other), "rank {rank} must not see {other}");
+    }
+}
+
+/// Sequential re-use of the *same* tag string is legal (MPI only needs
+/// distinct tags for concurrent creations): the fabric's FIFO keeps the
+/// two agreements ordered.
+#[test]
+fn same_tag_sequential_creates_are_ordered() {
+    let out = run_job_ok(JobSpec::new(3), |_| {
+        let mut s = NativeAbi::session_null();
+        assert_eq!(
+            NativeAbi::session_init(NativeAbi::info_null(), NativeAbi::errhandler_return(),
+                &mut s),
+            0
+        );
+        let mut g = unsafe { std::mem::zeroed::<<NativeAbi as MpiAbi>::Group>() };
+        assert_eq!(
+            NativeAbi::group_from_session_pset(s, mpi_abi::core::session::PSET_WORLD, &mut g),
+            0
+        );
+        let mut sums = Vec::new();
+        for round in 0..2i32 {
+            let mut comm = NativeAbi::comm_null();
+            assert_eq!(
+                NativeAbi::comm_create_from_group(g, "test://same-tag", NativeAbi::info_null(),
+                    NativeAbi::errhandler_return(), &mut comm),
+                0
+            );
+            let v = round + 1;
+            let mut sum = 0i32;
+            assert_eq!(
+                NativeAbi::allreduce(&v as *const i32 as *const u8,
+                    &mut sum as *mut i32 as *mut u8, 1, NativeAbi::datatype(Dt::Int),
+                    NativeAbi::op(OpName::Sum), comm),
+                0
+            );
+            sums.push(sum);
+            NativeAbi::comm_free(&mut comm);
+        }
+        NativeAbi::group_free(&mut g);
+        assert_eq!(NativeAbi::session_finalize(&mut s), 0);
+        sums
+    });
+    for sums in out {
+        assert_eq!(sums, vec![3, 6]);
+    }
+}

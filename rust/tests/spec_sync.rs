@@ -1,0 +1,175 @@
+//! SPEC.md can never silently rot: parse its machine-readable tables
+//! (delimited by `<!-- *-table:begin/end -->` comments) and assert
+//! every value against the live code — the handle-encoding table
+//! against `abi::all_predefined_handles()` + the Huffman decoders, and
+//! the §5 translation tables against the three ABIs' constants.
+
+use mpi_abi::abi::huffman;
+use mpi_abi::api::MpiAbi;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::native_abi::NativeAbi;
+
+fn spec_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../SPEC.md");
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+/// Rows of the table between `<!-- {tag}:begin -->` and `:end`,
+/// header and separator rows stripped, each row split into cells.
+fn table_rows(spec: &str, tag: &str) -> Vec<Vec<String>> {
+    let begin = format!("<!-- {tag}:begin -->");
+    let end = format!("<!-- {tag}:end -->");
+    let start = spec.find(&begin).unwrap_or_else(|| panic!("SPEC.md lacks {begin}"));
+    let stop = spec.find(&end).unwrap_or_else(|| panic!("SPEC.md lacks {end}"));
+    assert!(start < stop, "malformed {tag} markers");
+    let mut rows = Vec::new();
+    for line in spec[start..stop].lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<String> = line
+            .trim_matches('|')
+            .split('|')
+            .map(|c| c.trim().trim_matches('`').to_string())
+            .collect();
+        // Skip the header and |---| separator rows.
+        if cells.iter().all(|c| c.chars().all(|ch| ch == '-')) || cells[0] == "constant" {
+            continue;
+        }
+        rows.push(cells);
+    }
+    assert!(!rows.is_empty(), "{tag} has no data rows");
+    rows
+}
+
+#[test]
+fn handle_encoding_table_matches_code() {
+    let spec = spec_text();
+    let rows = table_rows(&spec, "handle-table");
+    let code: Vec<(&'static str, usize)> = mpi_abi::abi::all_predefined_handles();
+
+    // Every SPEC row must name a real constant with the exact value,
+    // kind, and encoded fixed size.
+    let mut seen = std::collections::HashSet::new();
+    for cells in &rows {
+        assert_eq!(cells.len(), 4, "malformed row {cells:?}");
+        let (name, bits, kind, size) = (&cells[0], &cells[1], &cells[2], &cells[3]);
+        let value = usize::from_str_radix(bits.trim_start_matches("0b"), 2)
+            .unwrap_or_else(|e| panic!("{name}: bad code {bits:?}: {e}"));
+        let code_value = code
+            .iter()
+            .find(|&&(n, _)| n == name)
+            .unwrap_or_else(|| panic!("SPEC row {name} names no constant in the code"))
+            .1;
+        assert_eq!(value, code_value, "{name}: SPEC says {value:#012b}, code {code_value:#012b}");
+        let code_kind = format!("{:?}", huffman::kind_of(value as u16));
+        assert_eq!(kind, &code_kind, "{name}: SPEC kind {kind}, decoder says {code_kind}");
+        let code_size = huffman::fixed_size_of(value);
+        let spec_size = if size == "—" { None } else { Some(size.parse::<usize>().unwrap()) };
+        assert_eq!(spec_size, code_size, "{name}: fixed-size column disagrees with the bits");
+        assert!(seen.insert(name.clone()), "duplicate SPEC row for {name}");
+    }
+    // …and every constant in the code must have a SPEC row.
+    for (name, _) in &code {
+        assert!(seen.contains(*name), "code constant {name} missing from SPEC.md");
+    }
+    assert_eq!(rows.len(), code.len(), "row count vs inventory");
+}
+
+fn cell_i32(cells: &[String], i: usize) -> i32 {
+    cells[i].parse().unwrap_or_else(|e| panic!("{cells:?}[{i}]: {e}"))
+}
+
+#[test]
+fn lock_type_table_matches_code() {
+    let spec = spec_text();
+    for cells in table_rows(&spec, "locks-table") {
+        let (std_v, mpich_v, ompi_v) =
+            (cell_i32(&cells, 1), cell_i32(&cells, 2), cell_i32(&cells, 3));
+        let per_abi = |excl: bool| {
+            if excl {
+                (NativeAbi::lock_exclusive(), MpichAbi::lock_exclusive(), OmpiAbi::lock_exclusive())
+            } else {
+                (NativeAbi::lock_shared(), MpichAbi::lock_shared(), OmpiAbi::lock_shared())
+            }
+        };
+        let (s, m, o) = match cells[0].as_str() {
+            "MPI_LOCK_EXCLUSIVE" => per_abi(true),
+            "MPI_LOCK_SHARED" => per_abi(false),
+            other => panic!("unexpected lock row {other}"),
+        };
+        assert_eq!((std_v, mpich_v, ompi_v), (s, m, o), "{}", cells[0]);
+    }
+}
+
+#[test]
+fn assertion_bits_table_matches_code() {
+    let spec = spec_text();
+    let mut seen = 0;
+    for cells in table_rows(&spec, "asserts-table") {
+        let want: (i32, i32, i32) = match cells[0].as_str() {
+            "MPI_MODE_NOCHECK" =>
+                (NativeAbi::mode_nocheck(), MpichAbi::mode_nocheck(), OmpiAbi::mode_nocheck()),
+            "MPI_MODE_NOSTORE" =>
+                (NativeAbi::mode_nostore(), MpichAbi::mode_nostore(), OmpiAbi::mode_nostore()),
+            "MPI_MODE_NOPUT" =>
+                (NativeAbi::mode_noput(), MpichAbi::mode_noput(), OmpiAbi::mode_noput()),
+            "MPI_MODE_NOPRECEDE" => (
+                NativeAbi::mode_noprecede(),
+                MpichAbi::mode_noprecede(),
+                OmpiAbi::mode_noprecede(),
+            ),
+            "MPI_MODE_NOSUCCEED" => (
+                NativeAbi::mode_nosucceed(),
+                MpichAbi::mode_nosucceed(),
+                OmpiAbi::mode_nosucceed(),
+            ),
+            other => panic!("unexpected assert row {other}"),
+        };
+        assert_eq!(
+            (cell_i32(&cells, 1), cell_i32(&cells, 2), cell_i32(&cells, 3)),
+            want,
+            "{}",
+            cells[0]
+        );
+        seen += 1;
+    }
+    assert_eq!(seen, 5, "all five assertion bits documented");
+}
+
+#[test]
+fn special_integers_table_matches_code() {
+    let spec = spec_text();
+    for cells in table_rows(&spec, "specials-table") {
+        let want: (i32, i32, i32) = match cells[0].as_str() {
+            "MPI_ANY_SOURCE" =>
+                (NativeAbi::any_source(), MpichAbi::any_source(), OmpiAbi::any_source()),
+            "MPI_ANY_TAG" => (NativeAbi::any_tag(), MpichAbi::any_tag(), OmpiAbi::any_tag()),
+            "MPI_PROC_NULL" =>
+                (NativeAbi::proc_null(), MpichAbi::proc_null(), OmpiAbi::proc_null()),
+            "MPI_UNDEFINED" =>
+                (NativeAbi::undefined(), MpichAbi::undefined(), OmpiAbi::undefined()),
+            other => panic!("unexpected specials row {other}"),
+        };
+        assert_eq!(
+            (cell_i32(&cells, 1), cell_i32(&cells, 2), cell_i32(&cells, 3)),
+            want,
+            "{}",
+            cells[0]
+        );
+    }
+}
+
+#[test]
+fn lifecycle_and_session_sections_exist() {
+    let spec = spec_text();
+    for needle in [
+        "## 6. Initialization lifecycle",
+        "MPI_Comm_create_from_group",
+        "mpi://WORLD",
+        "MPI_SESSION_NULL",
+    ] {
+        assert!(spec.contains(needle), "SPEC.md lost its section mentioning {needle:?}");
+    }
+}
