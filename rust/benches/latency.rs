@@ -36,18 +36,27 @@ fn main() {
     std::env::set_var("MPI_ABI_NO_XLA", "1");
     println!("\nE3 — osu_latency analogue (one-way, 2 ranks)");
     let sizes = [8usize, 64, 512, 4096, 65536];
-    let mut table =
-        Table::new("One-way latency (ns)", &["bytes", "spsc native", "spsc muk", "mutex native"]);
-    let mut base8 = 0.0;
+    let mut table = Table::new(
+        "One-way latency (ns)",
+        &["bytes", "spsc flat", "spsc indexed", "spsc muk", "mutex indexed"],
+    );
+    let (mut base8, mut flat8) = (0.0, 0.0);
     for size in sizes {
+        // Pre-index baseline: the seed's flat matcher + slab-path
+        // blocking ops, restored by the env flag.
+        std::env::set_var("MPI_ABI_FLAT_MATCH", "1");
+        let flat = with_abi(AbiConfig::Mpich, Ping { transport: TransportKind::Spsc, size });
+        std::env::remove_var("MPI_ABI_FLAT_MATCH");
         let spsc = with_abi(AbiConfig::Mpich, Ping { transport: TransportKind::Spsc, size });
         let muk = with_abi(AbiConfig::MukMpich, Ping { transport: TransportKind::Spsc, size });
         let mutex = with_abi(AbiConfig::Mpich, Ping { transport: TransportKind::Mutex, size });
         if size == 8 {
             base8 = spsc;
+            flat8 = flat;
         }
         table.row(&[
             size.to_string(),
+            format!("{:.0}", flat * 1e9),
             format!("{:.0}", spsc * 1e9),
             format!("{:.0}", muk * 1e9),
             format!("{:.0}", mutex * 1e9),
@@ -56,6 +65,12 @@ fn main() {
     println!("{}", table.render());
     println!(
         "shape: small-message fabric latency {:.0} ns — the \"network cost\" that dwarfs the ~ns ABI costs of E1/E6",
+        base8 * 1e9
+    );
+    println!(
+        "index win at 8 B: indexed matcher + zero-alloc blocking path is {:.2}x vs MPI_ABI_FLAT_MATCH=1 ({:.0} ns → {:.0} ns)",
+        flat8 / base8,
+        flat8 * 1e9,
         base8 * 1e9
     );
 }

@@ -67,7 +67,27 @@ fn main() {
         table.row(&[label.to_string(), format!("{rate:.2}")]);
         rates.push(rate);
     }
+    // Pre-index baseline rows (the seed's flat matcher, via the env
+    // flag) so the indexed matching engine's speedup is in the table.
+    std::env::set_var("MPI_ABI_FLAT_MATCH", "1");
+    let flat_spsc =
+        with_abi(AbiConfig::Mpich, Row { transport: TransportKind::Spsc, samples });
+    let flat_mutex =
+        with_abi(AbiConfig::Mpich, Row { transport: TransportKind::Mutex, samples });
+    std::env::remove_var("MPI_ABI_FLAT_MATCH");
+    for (label, rate) in [
+        ("impl-A / spsc, MPI_ABI_FLAT_MATCH=1 (baseline)", flat_spsc),
+        ("impl-A / mutex, MPI_ABI_FLAT_MATCH=1 (baseline)", flat_mutex),
+    ] {
+        println!("{label:<44} {rate:>14.2} msg/s");
+        table.row(&[label.to_string(), format!("{rate:.2}")]);
+    }
     println!("{}", table.render());
+    println!(
+        "index win: indexed matcher is {:.2}x (spsc) / {:.2}x (mutex) vs the flat baseline",
+        rates[2] / flat_spsc,
+        rates[0] / flat_mutex
+    );
 
     // Shape checks against the paper.
     let (mutex_base, mutex_muk) = (rates[0], rates[1]);

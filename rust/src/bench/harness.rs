@@ -1,0 +1,473 @@
+//! The reproducible perf harness behind `cargo run --release --bin
+//! abibench`: every (bench, ABI config, transport) cell of the paper's
+//! evaluation grid in one run, written to a machine-readable
+//! `BENCH_PR5.json` at the repo root so future PRs regress against real
+//! numbers instead of prose.
+//!
+//! Three benches:
+//!
+//! * `latency_8b` — `osu_latency` analogue, 8-byte one-way ns (E3);
+//! * `msgrate_8b` — `osu_mbw_mr` analogue, ns per message at window 64
+//!   (E2 / Table 1);
+//! * `translation_type_size` — the §6.1 `MPI_Type_size` representation-
+//!   decoding cost, per call (E1/E6's smallest translation unit).
+//!
+//! The two pt2pt benches are additionally run with the **flat-baseline
+//! matcher** (`MPI_ABI_FLAT_MATCH=1` semantics, forced per job via
+//! [`JobSpec::with_flat_match`]) so the indexed matching engine's win is
+//! part of the artifact: `speedup_vs_flat` in the JSON is
+//! baseline-ns / indexed-ns (> 1 means the index is faster).
+//!
+//! Two modes: `--smoke` (seconds; the CI `bench-smoke` job) and
+//! `--full` (minutes; the numbers quoted in PR descriptions).
+
+use crate::api::MpiAbi;
+use crate::apps::osu::{latency, mbw_mr, type_size_ns, LatencyParams, MbwMrParams};
+use crate::apps::{with_abi, AbiApp, AbiConfig};
+use crate::core::transport::TransportKind;
+use crate::launcher::{run_job_ok, JobSpec};
+
+/// The benches the harness runs, in grid order.
+pub const BENCHES: [&str; 3] = ["latency_8b", "msgrate_8b", "translation_type_size"];
+
+/// The two transports of every grid.
+pub const TRANSPORTS: [TransportKind; 2] = [TransportKind::Spsc, TransportKind::Mutex];
+
+/// One measured cell of the grid.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Bench name (one of [`BENCHES`]).
+    pub bench: &'static str,
+    /// ABI configuration name ([`AbiConfig::name`]).
+    pub config: &'static str,
+    /// Transport name ([`TransportKind::name`]).
+    pub transport: &'static str,
+    /// Nanoseconds per event (one-way message, one message, one call).
+    pub ns: f64,
+}
+
+/// Harness options (parsed by the `abibench` binary).
+#[derive(Clone, Copy, Debug)]
+pub struct HarnessOpts {
+    /// Smoke mode: iteration counts small enough for CI.
+    pub smoke: bool,
+}
+
+/// Iteration counts for one mode.
+struct Sizing {
+    lat_iters: usize,
+    lat_warmup: usize,
+    mbw_iters: usize,
+    mbw_warmup: usize,
+    ts_iters: usize,
+    reps: usize,
+}
+
+impl Sizing {
+    fn of(opts: HarnessOpts) -> Sizing {
+        if opts.smoke {
+            Sizing {
+                lat_iters: 200,
+                lat_warmup: 20,
+                mbw_iters: 60,
+                mbw_warmup: 10,
+                ts_iters: 20_000,
+                reps: 1,
+            }
+        } else {
+            Sizing {
+                lat_iters: 1000,
+                lat_warmup: 100,
+                mbw_iters: 1000,
+                mbw_warmup: 100,
+                ts_iters: 200_000,
+                reps: 3,
+            }
+        }
+    }
+}
+
+struct LatencyRun {
+    transport: TransportKind,
+    flat: bool,
+    iters: usize,
+    warmup: usize,
+    reps: usize,
+}
+
+impl AbiApp<f64> for LatencyRun {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let mut best = f64::MAX;
+        for _ in 0..self.reps {
+            let spec = JobSpec::new(2)
+                .with_transport(self.transport)
+                .with_flat_match(self.flat);
+            let out = run_job_ok(spec, |_| {
+                A::init();
+                let r = latency::<A>(LatencyParams {
+                    msg_size: 8,
+                    iters: self.iters,
+                    warmup: self.warmup,
+                });
+                A::finalize();
+                r
+            });
+            best = best.min(out[0]);
+        }
+        best * 1e9
+    }
+}
+
+struct MsgRateRun {
+    transport: TransportKind,
+    flat: bool,
+    iters: usize,
+    warmup: usize,
+    reps: usize,
+}
+
+impl AbiApp<f64> for MsgRateRun {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let mut best_rate = 0.0f64;
+        for _ in 0..self.reps {
+            let spec = JobSpec::new(2)
+                .with_transport(self.transport)
+                .with_flat_match(self.flat);
+            let out = run_job_ok(spec, |_| {
+                A::init();
+                let r = mbw_mr::<A>(MbwMrParams {
+                    msg_size: 8,
+                    window: 64,
+                    iters: self.iters,
+                    warmup: self.warmup,
+                });
+                A::finalize();
+                r
+            });
+            best_rate = best_rate.max(out[0]);
+        }
+        1e9 / best_rate // ns per message
+    }
+}
+
+struct TypeSizeRun {
+    iters: usize,
+}
+
+impl AbiApp<f64> for TypeSizeRun {
+    fn run<A: MpiAbi>(self) -> f64 {
+        type_size_ns::<A>(self.iters)
+    }
+}
+
+fn measure(
+    bench: &'static str,
+    config: AbiConfig,
+    transport: TransportKind,
+    flat: bool,
+    s: &Sizing,
+) -> f64 {
+    match bench {
+        "latency_8b" => with_abi(
+            config,
+            LatencyRun {
+                transport,
+                flat,
+                iters: s.lat_iters,
+                warmup: s.lat_warmup,
+                reps: s.reps,
+            },
+        ),
+        "msgrate_8b" => with_abi(
+            config,
+            MsgRateRun {
+                transport,
+                flat,
+                iters: s.mbw_iters,
+                warmup: s.mbw_warmup,
+                reps: s.reps,
+            },
+        ),
+        "translation_type_size" => with_abi(config, TypeSizeRun { iters: s.ts_iters }),
+        _ => unreachable!("unknown bench {bench}"),
+    }
+}
+
+/// The full harness result: every indexed cell, the flat-baseline cells
+/// of the two pt2pt benches, and the headline speedups.
+pub struct HarnessResult {
+    /// Mode the grid was run in (`"smoke"` / `"full"`).
+    pub mode: &'static str,
+    /// Indexed-matcher cells: every (bench, config, transport).
+    pub cells: Vec<Cell>,
+    /// Flat-baseline cells (`latency_8b` / `msgrate_8b` only).
+    pub flat_baseline: Vec<Cell>,
+}
+
+impl HarnessResult {
+    /// baseline-ns / indexed-ns for a (bench, config, transport) — the
+    /// indexed matcher's speedup (> 1 = faster than flat).
+    pub fn speedup(&self, bench: &str, config: &str, transport: &str) -> Option<f64> {
+        let pick = |cells: &[Cell]| {
+            cells
+                .iter()
+                .find(|c| c.bench == bench && c.config == config && c.transport == transport)
+                .map(|c| c.ns)
+        };
+        Some(pick(&self.flat_baseline)? / pick(&self.cells)?)
+    }
+}
+
+/// Run the whole grid. Progress goes to stderr (one line per cell), so
+/// redirecting stdout still yields a clean report.
+pub fn run_harness(opts: HarnessOpts) -> HarnessResult {
+    // Keep XLA client init out of message timings (as the benches do).
+    std::env::set_var("MPI_ABI_NO_XLA", "1");
+    let s = Sizing::of(opts);
+    let mut cells = Vec::new();
+    let mut flat_baseline = Vec::new();
+    for bench in BENCHES {
+        for config in AbiConfig::ALL {
+            if bench == "translation_type_size" {
+                // Transport-independent (no job runs): measure once per
+                // config and publish the same value to both transport
+                // cells so the grid stays rectangular without passing
+                // re-measurement noise off as a transport effect.
+                let ns = measure(bench, config, TRANSPORTS[0], false, &s);
+                eprintln!("  [abibench] {bench:<22} {:<11} both  {ns:>12.1} ns", config.name());
+                for transport in TRANSPORTS {
+                    cells.push(Cell {
+                        bench,
+                        config: config.name(),
+                        transport: transport.name(),
+                        ns,
+                    });
+                }
+                continue;
+            }
+            for transport in TRANSPORTS {
+                let ns = measure(bench, config, transport, false, &s);
+                eprintln!(
+                    "  [abibench] {bench:<22} {:<11} {:<5} {:>12.1} ns",
+                    config.name(),
+                    transport.name(),
+                    ns
+                );
+                cells.push(Cell {
+                    bench,
+                    config: config.name(),
+                    transport: transport.name(),
+                    ns,
+                });
+                let ns = measure(bench, config, transport, true, &s);
+                eprintln!(
+                    "  [abibench] {bench:<22} {:<11} {:<5} {:>12.1} ns  (flat baseline)",
+                    config.name(),
+                    transport.name(),
+                    ns
+                );
+                flat_baseline.push(Cell {
+                    bench,
+                    config: config.name(),
+                    transport: transport.name(),
+                    ns,
+                });
+            }
+        }
+    }
+    HarnessResult {
+        mode: if opts.smoke { "smoke" } else { "full" },
+        cells,
+        flat_baseline,
+    }
+}
+
+fn json_cell(c: &Cell) -> String {
+    format!(
+        "    {{\"bench\": \"{}\", \"config\": \"{}\", \"transport\": \"{}\", \"ns\": {:.2}}}",
+        c.bench, c.config, c.transport, c.ns
+    )
+}
+
+/// Render the result as the `BENCH_PR5.json` document (hand-rolled:
+/// serde is not in the offline crate set).
+pub fn to_json(r: &HarnessResult) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"pr\": 5,\n");
+    out.push_str("  \"generated_by\": \"abibench\",\n");
+    out.push_str(&format!("  \"mode\": \"{}\",\n", r.mode));
+    out.push_str(&format!(
+        "  \"benches\": [{}],\n",
+        BENCHES.map(|b| format!("\"{b}\"")).join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"configs\": [{}],\n",
+        AbiConfig::ALL.map(|c| format!("\"{}\"", c.name())).join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"transports\": [{}],\n",
+        TRANSPORTS.map(|t| format!("\"{}\"", t.name())).join(", ")
+    ));
+    out.push_str("  \"cells\": [\n");
+    let lines: Vec<String> = r.cells.iter().map(json_cell).collect();
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n  ],\n");
+    out.push_str("  \"flat_baseline\": [\n");
+    let lines: Vec<String> = r.flat_baseline.iter().map(json_cell).collect();
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n  ],\n");
+    out.push_str("  \"speedup_vs_flat\": {\n");
+    let mut sp = Vec::new();
+    for bench in ["latency_8b", "msgrate_8b"] {
+        for transport in TRANSPORTS {
+            // Headline: the native standard-ABI build (the paper's
+            // "MPICH dev UCX ABI" row).
+            if let Some(s) = r.speedup(bench, "abi", transport.name()) {
+                sp.push(format!(
+                    "    \"{}_{}\": {:.3}",
+                    bench,
+                    transport.name(),
+                    s
+                ));
+            }
+        }
+    }
+    out.push_str(&sp.join(",\n"));
+    out.push_str("\n  }\n");
+    out.push_str("}\n");
+    out
+}
+
+/// Validate a previously written `BENCH_PR5.json`: every (bench,
+/// config, transport) cell present **in the `cells` array** with a
+/// numeric value, and every (pt2pt bench, config, transport) cell in
+/// the `flat_baseline` array. Each grid is checked inside its own array
+/// section so a cell present only in the *other* section cannot mask a
+/// hole. Returns the list of missing cells (empty = complete). The CI
+/// `bench-smoke` job runs this via `abibench --check` after
+/// regenerating the file.
+pub fn check_json(doc: &str) -> Vec<String> {
+    let mut missing = Vec::new();
+    let sections = (doc.find("\"cells\": ["), doc.find("\"flat_baseline\": ["));
+    let (cells_sec, flat_sec) = match sections {
+        (Some(c), Some(f)) if c < f => (&doc[c..f], &doc[f..]),
+        _ => {
+            missing.push("\"cells\" and \"flat_baseline\" arrays, in that order".to_string());
+            return missing;
+        }
+    };
+    check_grid(cells_sec, &BENCHES, "cells", &mut missing);
+    check_grid(flat_sec, &["latency_8b", "msgrate_8b"], "flat_baseline", &mut missing);
+    missing
+}
+
+/// Check one array section for every (bench, config, transport) cell.
+fn check_grid(section: &str, benches: &[&str], label: &str, missing: &mut Vec<String>) {
+    for &bench in benches {
+        for config in AbiConfig::ALL {
+            for transport in TRANSPORTS {
+                let needle = format!(
+                    "\"bench\": \"{}\", \"config\": \"{}\", \"transport\": \"{}\", \"ns\": ",
+                    bench,
+                    config.name(),
+                    transport.name()
+                );
+                match section.find(&needle) {
+                    Some(pos) => {
+                        let rest = &section[pos + needle.len()..];
+                        let num: String = rest
+                            .chars()
+                            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+                            .collect();
+                        if num.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false) {
+                            continue;
+                        }
+                        missing.push(format!("{label}: {needle}<non-numeric>"));
+                    }
+                    None => missing.push(format!("{label}: {needle}")),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_result() -> HarnessResult {
+        let mut cells = Vec::new();
+        let mut flat = Vec::new();
+        for bench in BENCHES {
+            for config in AbiConfig::ALL {
+                for transport in TRANSPORTS {
+                    cells.push(Cell {
+                        bench,
+                        config: config.name(),
+                        transport: transport.name(),
+                        ns: 100.0,
+                    });
+                    if bench != "translation_type_size" {
+                        flat.push(Cell {
+                            bench,
+                            config: config.name(),
+                            transport: transport.name(),
+                            ns: 150.0,
+                        });
+                    }
+                }
+            }
+        }
+        HarnessResult { mode: "smoke", cells, flat_baseline: flat }
+    }
+
+    #[test]
+    fn json_roundtrips_the_completeness_check() {
+        let doc = to_json(&fake_result());
+        assert!(check_json(&doc).is_empty(), "generated JSON must be complete");
+    }
+
+    #[test]
+    fn check_flags_missing_cells() {
+        let doc = to_json(&fake_result());
+        // Break only the first occurrence — the `cells` array entry; its
+        // flat_baseline twin must NOT mask the hole.
+        let broken = doc.replacen(
+            "\"bench\": \"latency_8b\", \"config\": \"mpich\", \"transport\": \"spsc\"",
+            "\"bench\": \"gone\", \"config\": \"mpich\", \"transport\": \"spsc\"",
+            1,
+        );
+        let missing = check_json(&broken);
+        assert_eq!(missing.len(), 1, "{missing:?}");
+        assert!(missing[0].starts_with("cells: "), "{missing:?}");
+    }
+
+    #[test]
+    fn check_validates_flat_baseline_section_too() {
+        let doc = to_json(&fake_result());
+        // Remove the flat_baseline array entirely: structural failure.
+        let broken = doc.replace("\"flat_baseline\": [", "\"flat_gone\": [");
+        assert!(!check_json(&broken).is_empty());
+        // Break one flat cell (second occurrence of the needle).
+        let pos = doc.rfind("\"bench\": \"msgrate_8b\", \"config\": \"abi\"").unwrap();
+        let broken = format!("{}{}", &doc[..pos], doc[pos..].replacen("msgrate_8b", "gone", 1));
+        let missing = check_json(&broken);
+        assert_eq!(missing.len(), 1, "{missing:?}");
+        assert!(missing[0].starts_with("flat_baseline: "), "{missing:?}");
+    }
+
+    #[test]
+    fn speedup_is_baseline_over_indexed() {
+        let r = fake_result();
+        let s = r.speedup("latency_8b", "abi", "spsc").unwrap();
+        assert!((s - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoke_grid_sizing_is_small() {
+        let s = Sizing::of(HarnessOpts { smoke: true });
+        assert!(s.lat_iters <= 1000 && s.reps == 1);
+    }
+}

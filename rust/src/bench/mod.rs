@@ -1,6 +1,9 @@
 //! Hand-rolled measurement harness (criterion is not in the offline
 //! crate set): warmup, timed iterations, robust statistics, and
-//! criterion-style one-line reports.
+//! criterion-style one-line reports. The [`harness`] submodule is the
+//! grid runner behind the `abibench` binary (`BENCH_PR5.json`).
+
+pub mod harness;
 
 use std::time::Instant;
 

@@ -1,0 +1,80 @@
+//! `abibench` — the perf-grid runner (`BENCH_PR5.json`).
+//!
+//! ```text
+//! cargo run --release --bin abibench -- [--smoke|--full] [--out PATH]
+//! cargo run --release --bin abibench -- --check [--out PATH]
+//! ```
+//!
+//! Default mode is `--smoke` (CI-sized); `--full` is the mode whose
+//! numbers go into PR descriptions. `--check` validates an existing
+//! file instead of running: every (bench, config, transport) cell must
+//! be present with a finite number (exit code 1 otherwise).
+//!
+//! `--out` defaults to `BENCH_PR5.json` **at the repo root** (resolved
+//! from the crate manifest, not the cwd), so running from `rust/`
+//! updates the committed artifact rather than leaving a stray copy.
+
+use mpi_abi::bench::harness::{check_json, run_harness, to_json, HarnessOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut smoke = true;
+    let mut check = false;
+    let mut out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json").to_string();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--smoke" => smoke = true,
+            "--full" => smoke = false,
+            "--check" => check = true,
+            "--out" => {
+                i += 1;
+                out = args.get(i).cloned().unwrap_or_else(|| {
+                    eprintln!("--out needs a path");
+                    std::process::exit(2);
+                });
+            }
+            other => {
+                eprintln!("unknown argument {other}");
+                eprintln!("usage: abibench [--smoke|--full] [--out PATH] [--check]");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+
+    if check {
+        let doc = match std::fs::read_to_string(&out) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("abibench --check: cannot read {out}: {e}");
+                std::process::exit(1);
+            }
+        };
+        let missing = check_json(&doc);
+        if missing.is_empty() {
+            println!("abibench --check: {out} complete (every bench/config/transport cell)");
+            return;
+        }
+        eprintln!("abibench --check: {out} is missing {} cell(s):", missing.len());
+        for m in &missing {
+            eprintln!("  {m}");
+        }
+        std::process::exit(1);
+    }
+
+    let result = run_harness(HarnessOpts { smoke });
+    let doc = to_json(&result);
+    if let Err(e) = std::fs::write(&out, &doc) {
+        eprintln!("abibench: cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    // Headline: the indexed matcher vs the flat baseline on the fast
+    // transport (the ratio quoted in the PR description).
+    for bench in ["latency_8b", "msgrate_8b"] {
+        if let Some(s) = result.speedup(bench, "abi", "spsc") {
+            println!("{bench:<12} spsc abi: indexed is {s:.2}x vs MPI_ABI_FLAT_MATCH=1");
+        }
+    }
+    println!("wrote {out} ({} mode, {} cells)", result.mode, result.cells.len());
+}

@@ -84,15 +84,11 @@ pub(crate) fn coll_recv(ctx: &RankCtx, cc: &CollCtx, src: usize) -> Payload {
     let want_src = cc.members[src] as i32;
     loop {
         progress(ctx);
+        // Exact (src, tag) probe of the unexpected index — O(1).
+        if let Some(env) =
+            ctx.state.borrow_mut().match_index.take_unexpected(cc.context, want_src, cc.tag)
         {
-            let mut st = ctx.state.borrow_mut();
-            let found = st
-                .unexpected
-                .iter()
-                .position(|e| e.matches(cc.context, want_src, cc.tag));
-            if let Some(i) = found {
-                return st.unexpected.remove(i).unwrap().payload;
-            }
+            return env.payload;
         }
         std::thread::yield_now();
     }

@@ -360,12 +360,8 @@ fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
                 let (from, phase, action) = (*from, *phase, *action);
                 let want_src = s.members[from] as i32;
                 let tag = s.tag + phase;
-                let matched = {
-                    let mut st = ctx.state.borrow_mut();
-                    let found =
-                        st.unexpected.iter().position(|e| e.matches(s.context, want_src, tag));
-                    found.map(|i| st.unexpected.remove(i).unwrap())
-                };
+                let matched =
+                    ctx.state.borrow_mut().match_index.take_unexpected(s.context, want_src, tag);
                 match matched {
                     Some(env) => {
                         s.recv_bytes += env.payload.len() as u64;

@@ -167,6 +167,38 @@ fn pack_payload(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Pay
     }
 }
 
+/// Validate and resolve a send's wire route — the **shared prelude** of
+/// the slab path (`isend_impl`, `send_init`) and the zero-alloc fast
+/// path (`send_fast`), so the `MPI_ERR_*` behavior of every path is one
+/// piece of code and can never diverge. Callers handle `MPI_PROC_NULL`
+/// first (its outcome differs per path).
+fn route_send(ctx: &RankCtx, dest: i32, tag: i32, comm: CommId) -> RC<(usize, u32)> {
+    check_tag_send(tag)?;
+    let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
+    check_rank(dest, size, false)?;
+    Ok((dst.ok_or(err!(MPI_ERR_RANK))?, ctx_pt2pt))
+}
+
+/// Validate and resolve a receive's matching key — shared by
+/// `irecv_impl`, `recv_init`, and `recv_fast` for the same reason as
+/// [`route_send`]. Returns the world-rank (or wildcard) source to match
+/// and the pt2pt context plane. Wildcard source matches by *world* rank
+/// of comm members; a concrete source is translated to its world rank
+/// for envelope matching.
+fn route_recv(ctx: &RankCtx, src: i32, tag: i32, comm: CommId) -> RC<(i32, u32)> {
+    if tag != MPI_ANY_TAG {
+        check_tag_send(tag)?;
+    }
+    let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
+    check_rank(src, size, true)?;
+    let src_match = if src == MPI_ANY_SOURCE {
+        MPI_ANY_SOURCE
+    } else {
+        src_world.ok_or(err!(MPI_ERR_RANK))? as i32
+    };
+    Ok((src_match, ctx_pt2pt))
+}
+
 fn isend_impl(
     ctx: &RankCtx,
     buf: *const u8,
@@ -180,10 +212,7 @@ fn isend_impl(
     if dest == MPI_PROC_NULL {
         return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
-    check_tag_send(tag)?;
-    let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
-    check_rank(dest, size, false)?;
-    let dst_world = dst.ok_or(err!(MPI_ERR_RANK))?;
+    let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
     let payload = pack_payload(ctx, buf, count, dt)?;
     let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
     let env = Envelope {
@@ -230,7 +259,12 @@ pub fn isend(
     with_ctx(|ctx| isend_impl(ctx, buf, count, dt, dest, tag, comm, mode))
 }
 
-/// `MPI_Send` / `MPI_Ssend`.
+/// `MPI_Send` / `MPI_Ssend`. Blocking sends take a **zero-allocation
+/// fast path**: the packed payload is handed straight to the fabric
+/// (with an inline backpressure spin that keeps this rank's own
+/// progress running), and synchronous mode spins on the receiver's ack
+/// — the request slab is never touched. The flat-baseline mode
+/// (`MPI_ABI_FLAT_MATCH=1`) restores the seed's isend+wait path.
 pub fn send(
     buf: *const u8,
     count: usize,
@@ -241,10 +275,66 @@ pub fn send(
     mode: SendMode,
 ) -> RC<()> {
     with_ctx(|ctx| {
-        let rid = isend_impl(ctx, buf, count, dt, dest, tag, comm, mode)?;
-        wait_one(ctx, rid)?;
-        Ok(())
+        if ctx.state.borrow().match_index.is_flat() {
+            let rid = isend_impl(ctx, buf, count, dt, dest, tag, comm, mode)?;
+            wait_one(ctx, rid)?;
+            return Ok(());
+        }
+        send_fast(ctx, buf, count, dt, dest, tag, comm, mode)
     })
+}
+
+/// The blocking-send fast path. Validation and routing run first — every
+/// `MPI_ERR_*` check fires exactly as on the slab path — then the
+/// envelope goes to the fabric directly. Per-destination FIFO is
+/// preserved: if deferred (backpressured) envelopes to this destination
+/// exist, the spin lets the progress loop drain them ahead of us.
+#[allow(clippy::too_many_arguments)]
+fn send_fast(
+    ctx: &RankCtx,
+    buf: *const u8,
+    count: usize,
+    dt: DtId,
+    dest: i32,
+    tag: i32,
+    comm: CommId,
+    mode: SendMode,
+) -> RC<()> {
+    if dest == MPI_PROC_NULL {
+        return Ok(());
+    }
+    let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
+    let payload = pack_payload(ctx, buf, count, dt)?;
+    let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
+    let mut env =
+        Some(Envelope { src: ctx.rank as u32, context: ctx_pt2pt, tag, kind, seq, payload });
+    loop {
+        {
+            let mut st = ctx.state.borrow_mut();
+            if !st.pending_sends.contains_key(&dst_world) {
+                match ctx.world.fabric.try_send(dst_world, env.take().unwrap()) {
+                    Ok(()) => break,
+                    Err(e) => env = Some(e),
+                }
+            }
+        }
+        // Ring full (or deferred traffic ahead of us): progress our own
+        // inbound so the peer can drain, then retry.
+        progress(ctx);
+        std::thread::yield_now();
+    }
+    if let Some(id) = sync_id {
+        // Synchronous mode completes when the receiver matches the
+        // message: spin on the ack, still without a request.
+        loop {
+            if ctx.state.borrow_mut().ssend_acks.remove(&id) {
+                break;
+            }
+            progress(ctx);
+            std::thread::yield_now();
+        }
+    }
+    Ok(())
 }
 
 fn irecv_impl(
@@ -259,18 +349,7 @@ fn irecv_impl(
     if src == MPI_PROC_NULL {
         return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
-    if tag != MPI_ANY_TAG {
-        check_tag_send(tag)?;
-    }
-    let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
-    check_rank(src, size, true)?;
-    // Wildcard source matches by *world* rank of comm members; translate a
-    // concrete source to its world rank for envelope matching.
-    let src_match = if src == MPI_ANY_SOURCE {
-        MPI_ANY_SOURCE
-    } else {
-        src_world.ok_or(err!(MPI_ERR_RANK))? as i32
-    };
+    let (src_match, ctx_pt2pt) = route_recv(ctx, src, tag, comm)?;
     Ok(post_recv(ctx, buf as usize, count, dt, src_match, tag, ctx_pt2pt))
 }
 
@@ -286,7 +365,11 @@ pub fn irecv(
     with_ctx(|ctx| irecv_impl(ctx, buf, count, dt, src, tag, comm))
 }
 
-/// `MPI_Recv`.
+/// `MPI_Recv`. Blocking receives take a **zero-allocation fast path**:
+/// after full validation, the indexed unexpected queue is probed (O(1)
+/// for exact matches) and the spin delivers straight from the index
+/// into the user buffer — no request is ever allocated. Flat-baseline
+/// mode (`MPI_ABI_FLAT_MATCH=1`) restores the seed's irecv+wait path.
 pub fn recv(
     buf: *mut u8,
     count: usize,
@@ -296,16 +379,56 @@ pub fn recv(
     comm: CommId,
 ) -> RC<StatusCore> {
     with_ctx(|ctx| {
-        let rid = irecv_impl(ctx, buf, count, dt, src, tag, comm)?;
-        let mut s = wait_one(ctx, rid)?;
-        if let Some(r) = super::comm::comm_rank_of_world(comm, s.source)? {
-            s.source = r;
+        if ctx.state.borrow().match_index.is_flat() {
+            let rid = irecv_impl(ctx, buf, count, dt, src, tag, comm)?;
+            let mut s = wait_one(ctx, rid)?;
+            if let Some(r) = super::comm::comm_rank_of_world(comm, s.source)? {
+                s.source = r;
+            }
+            if s.error != 0 {
+                return Err(MpiError::new(s.error));
+            }
+            return Ok(s);
         }
-        if s.error != 0 {
-            return Err(MpiError::new(s.error));
-        }
-        Ok(s)
+        recv_fast(ctx, buf, count, dt, src, tag, comm)
     })
+}
+
+/// The blocking-recv fast path. Taking from the unexpected index without
+/// posting is safe because of the index invariant (no held message
+/// matches an earlier-posted receive) plus the single-threaded rank
+/// model: no receive can be posted while we spin, so this call is always
+/// the newest — lowest-priority — receive. An arrival that matches an
+/// earlier-posted receive is delivered to *it* by the progress loop, and
+/// the spin simply keeps waiting for its own message.
+fn recv_fast(
+    ctx: &RankCtx,
+    buf: *mut u8,
+    count: usize,
+    dt: DtId,
+    src: i32,
+    tag: i32,
+    comm: CommId,
+) -> RC<StatusCore> {
+    if src == MPI_PROC_NULL {
+        return Ok(StatusCore::empty());
+    }
+    let (src_match, ctx_pt2pt) = route_recv(ctx, src, tag, comm)?;
+    loop {
+        let hit = ctx.state.borrow_mut().match_index.take_unexpected(ctx_pt2pt, src_match, tag);
+        if let Some(env) = hit {
+            let mut s = super::request::deliver_inline(ctx, env, buf as usize, count, dt);
+            if let Some(r) = super::comm::comm_rank_of_world(comm, s.source)? {
+                s.source = r;
+            }
+            if s.error != 0 {
+                return Err(MpiError::new(s.error));
+            }
+            return Ok(s);
+        }
+        progress(ctx);
+        std::thread::yield_now();
+    }
 }
 
 /// `MPI_Sendrecv`.
@@ -369,10 +492,7 @@ pub fn send_init(
                 },
             ));
         }
-        check_tag_send(tag)?;
-        let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
-        check_rank(dest, size, false)?;
-        let dst_world = dst.ok_or(err!(MPI_ERR_RANK))?;
+        let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
         Ok(new_persistent(
             ctx,
             ReqKind::Send,
@@ -414,16 +534,7 @@ pub fn recv_init(
                 },
             ));
         }
-        if tag != MPI_ANY_TAG {
-            check_tag_send(tag)?;
-        }
-        let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
-        check_rank(src, size, true)?;
-        let src_match = if src == MPI_ANY_SOURCE {
-            MPI_ANY_SOURCE
-        } else {
-            src_world.ok_or(err!(MPI_ERR_RANK))? as i32
-        };
+        let (src_match, ctx_pt2pt) = route_recv(ctx, src, tag, comm)?;
         // The armed kind is installed by each start (repost_recv); until
         // then the spec is the single source of truth.
         Ok(new_persistent(
@@ -534,24 +645,24 @@ pub fn probe(src: i32, tag: i32, comm: CommId) -> RC<StatusCore> {
 
 /// `MPI_Iprobe`.
 pub fn iprobe(src: i32, tag: i32, comm: CommId) -> RC<Option<StatusCore>> {
+    if src == MPI_PROC_NULL {
+        // MPI 3.0 §3.8: probe on MPI_PROC_NULL matches immediately with
+        // an empty status — same short-circuit as every receive path.
+        return Ok(Some(StatusCore::empty()));
+    }
     let found = with_ctx(|ctx| {
-        let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
-        check_rank(src, size, true)?;
-        let src_match = if src == MPI_ANY_SOURCE {
-            MPI_ANY_SOURCE
-        } else {
-            src_world.ok_or(err!(MPI_ERR_RANK))? as i32
-        };
+        // Same validation/routing as every receive path (so probe with
+        // an invalid tag errors instead of spinning forever).
+        let (src_match, ctx_pt2pt) = route_recv(ctx, src, tag, comm)?;
         progress(ctx);
         let st = ctx.state.borrow();
-        for env in st.unexpected.iter() {
-            if env.matches(ctx_pt2pt, src_match, tag) {
-                return Ok(Some(StatusCore::success(
-                    env.src as i32,
-                    env.tag,
-                    env.payload.len() as u64,
-                )));
-            }
+        // Earliest-arrived match, straight from the unexpected index.
+        if let Some(env) = st.match_index.peek_unexpected(ctx_pt2pt, src_match, tag) {
+            return Ok(Some(StatusCore::success(
+                env.src as i32,
+                env.tag,
+                env.payload.len() as u64,
+            )));
         }
         Ok(None)
     })?;

@@ -1,0 +1,656 @@
+//! The indexed message-matching engine.
+//!
+//! MPI's matching rule is *posted order × arrival order*: an arriving
+//! message completes the earliest-posted receive it matches, and a newly
+//! posted receive completes against the earliest-arrived unexpected
+//! message it matches. The seed engine kept both sides in flat
+//! `VecDeque`s and re-ran an O(posted × unexpected) nested scan over
+//! *all* contexts on every progress tick. This module replaces that with
+//! per-context structures so the exact-match common case is O(1):
+//!
+//! ```text
+//!   context id ──► ContextQueues
+//!                    ├─ unexpected: (src, tag) ─► FIFO of stamped envelopes
+//!                    ├─ posted exact: (src, tag) ─► FIFO of stamped recvs
+//!                    └─ posted wildcard FIFO (ANY_SOURCE / ANY_TAG)
+//! ```
+//!
+//! Every insertion carries a monotone stamp (one counter for arrivals,
+//! one for posts). A lookup that could match several buckets — a
+//! wildcard receive probing the unexpected side, or an arrival choosing
+//! between the exact bucket and the wildcard FIFO — compares stamps and
+//! takes the earliest, which is exactly the flat scan's answer without
+//! the flat scan's cost.
+//!
+//! **The invariant** that makes insertion-time matching sufficient: the
+//! two sides are mutually non-matching at rest. Every arrival is checked
+//! against the posted side before it is stored; every post is checked
+//! against the unexpected side before it is stored; removals never
+//! create new matches. Under the engine's single-threaded progress model
+//! that invariant makes a per-tick rescan unnecessary.
+//!
+//! The seed's flat structure survives behind `MPI_ABI_FLAT_MATCH=1`
+//! (or [`crate::launcher::JobSpec::with_flat_match`]) as the perf
+//! baseline `benches/latency.rs`, `benches/message_rate.rs`, and the
+//! `abibench` harness regress against — same semantics, linear scans.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::transport::Envelope;
+use super::ReqId;
+use crate::abi::constants::{MPI_ANY_SOURCE, MPI_ANY_TAG};
+
+// ---------------------------------------------------------------------------
+// FxHash — matching sits on the per-message critical path, and SipHash's
+// ~40 ns per probe would eat the win. This is the rustc-style
+// multiply-rotate hash (no external crate in the offline set).
+// ---------------------------------------------------------------------------
+
+/// rustc-style multiply-rotate hasher for the small integer keys the
+/// matching index uses (context ids, `(src, tag)` pairs).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x517c_c1b7_2722_0a95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+    #[inline]
+    fn write_i32(&mut self, v: i32) {
+        self.add(v as u32 as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`].
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+/// `HashMap` keyed with [`FxHasher`] (the index's only map type).
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+// ---------------------------------------------------------------------------
+// Index structures
+// ---------------------------------------------------------------------------
+
+/// One posted receive as the index sees it: the request it completes,
+/// its post stamp, and its matching pattern (src/tag may be wildcards).
+#[derive(Clone, Copy, Debug)]
+struct PostedRecv {
+    rid: ReqId,
+    stamp: u64,
+    src: i32,
+    tag: i32,
+}
+
+impl PostedRecv {
+    /// Does this posted receive accept an arrival from `(src, tag)`?
+    #[inline]
+    fn accepts(&self, src: u32, tag: i32) -> bool {
+        (self.src == MPI_ANY_SOURCE || self.src as u32 == src)
+            && (self.tag == MPI_ANY_TAG || self.tag == tag)
+    }
+}
+
+/// The matching state of one context plane.
+#[derive(Default)]
+struct ContextQueues {
+    /// Arrived-but-unmatched messages, bucketed by concrete `(src, tag)`;
+    /// each bucket is FIFO in arrival order, entries stamped globally.
+    unexpected: FxHashMap<(u32, i32), VecDeque<(u64, Envelope)>>,
+    /// Messages across all `unexpected` buckets (cheap emptiness test).
+    n_unexpected: usize,
+    /// Posted receives with a concrete `(src, tag)`, bucketed likewise.
+    posted_exact: FxHashMap<(i32, i32), VecDeque<PostedRecv>>,
+    /// Posted receives with `MPI_ANY_SOURCE` and/or `MPI_ANY_TAG`, in
+    /// post order (the wildcard FIFO).
+    posted_wild: VecDeque<PostedRecv>,
+    /// Receives across both posted structures (cheap emptiness test).
+    n_posted: usize,
+}
+
+impl ContextQueues {
+    /// Earliest-arrived unexpected envelope matching `(src, tag)`
+    /// (wildcards allowed), removed from its bucket.
+    fn take_unexpected(&mut self, src: i32, tag: i32) -> Option<Envelope> {
+        if self.n_unexpected == 0 {
+            return None;
+        }
+        if src != MPI_ANY_SOURCE && tag != MPI_ANY_TAG {
+            // Exact: one bucket probe, O(1).
+            let key = (src as u32, tag);
+            let q = self.unexpected.get_mut(&key)?;
+            let (_, env) = q.pop_front().expect("index buckets are never left empty");
+            if q.is_empty() {
+                self.unexpected.remove(&key);
+            }
+            self.n_unexpected -= 1;
+            return Some(env);
+        }
+        // Wildcard: compare bucket heads, take the earliest arrival.
+        let mut best: Option<(u64, (u32, i32))> = None;
+        for (&key, q) in self.unexpected.iter() {
+            if (src == MPI_ANY_SOURCE || key.0 == src as u32)
+                && (tag == MPI_ANY_TAG || key.1 == tag)
+            {
+                let head = q.front().expect("index buckets are never left empty").0;
+                if best.map(|(s, _)| head < s).unwrap_or(true) {
+                    best = Some((head, key));
+                }
+            }
+        }
+        let (_, key) = best?;
+        let q = self.unexpected.get_mut(&key).unwrap();
+        let (_, env) = q.pop_front().unwrap();
+        if q.is_empty() {
+            self.unexpected.remove(&key);
+        }
+        self.n_unexpected -= 1;
+        Some(env)
+    }
+
+    /// Like [`ContextQueues::take_unexpected`] but non-destructive:
+    /// a reference to the earliest matching envelope (`MPI_Iprobe`).
+    fn peek_unexpected(&self, src: i32, tag: i32) -> Option<&Envelope> {
+        if self.n_unexpected == 0 {
+            return None;
+        }
+        if src != MPI_ANY_SOURCE && tag != MPI_ANY_TAG {
+            let (_, env) = self.unexpected.get(&(src as u32, tag))?.front()?;
+            return Some(env);
+        }
+        let mut best: Option<(u64, &Envelope)> = None;
+        for (&key, q) in self.unexpected.iter() {
+            if (src == MPI_ANY_SOURCE || key.0 == src as u32)
+                && (tag == MPI_ANY_TAG || key.1 == tag)
+            {
+                let (stamp, env) = q.front().expect("index buckets are never left empty");
+                if best.map(|(s, _)| *stamp < s).unwrap_or(true) {
+                    best = Some((*stamp, env));
+                }
+            }
+        }
+        best.map(|(_, env)| env)
+    }
+
+    /// Earliest unexpected envelope on this context with `tag <
+    /// tag_below` (the RMA op router: data-path tags sit below the
+    /// fence-barrier band).
+    fn take_tag_below(&mut self, tag_below: i32) -> Option<Envelope> {
+        if self.n_unexpected == 0 {
+            return None;
+        }
+        let mut best: Option<(u64, (u32, i32))> = None;
+        for (&key, q) in self.unexpected.iter() {
+            if key.1 < tag_below {
+                let head = q.front().expect("index buckets are never left empty").0;
+                if best.map(|(s, _)| head < s).unwrap_or(true) {
+                    best = Some((head, key));
+                }
+            }
+        }
+        let (_, key) = best?;
+        let q = self.unexpected.get_mut(&key).unwrap();
+        let (_, env) = q.pop_front().unwrap();
+        if q.is_empty() {
+            self.unexpected.remove(&key);
+        }
+        self.n_unexpected -= 1;
+        Some(env)
+    }
+
+    /// Earliest-posted receive accepting an arrival from `(src, tag)`,
+    /// removed from its queue. Compares the exact bucket's head with the
+    /// first matching wildcard (both FIFOs are post-ordered).
+    fn take_posted(&mut self, src: u32, tag: i32) -> Option<ReqId> {
+        if self.n_posted == 0 {
+            return None;
+        }
+        let key = (src as i32, tag);
+        let exact_stamp = self
+            .posted_exact
+            .get(&key)
+            .map(|q| q.front().expect("index buckets are never left empty").stamp);
+        let wild_pos = self.posted_wild.iter().position(|p| p.accepts(src, tag));
+        let wild_stamp = wild_pos.map(|i| self.posted_wild[i].stamp);
+        let use_exact = match (exact_stamp, wild_stamp) {
+            (None, None) => return None,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (Some(e), Some(w)) => e < w,
+        };
+        self.n_posted -= 1;
+        if use_exact {
+            let q = self.posted_exact.get_mut(&key).unwrap();
+            let p = q.pop_front().unwrap();
+            if q.is_empty() {
+                self.posted_exact.remove(&key);
+            }
+            Some(p.rid)
+        } else {
+            self.posted_wild.remove(wild_pos.unwrap()).map(|p| p.rid)
+        }
+    }
+
+    /// Store a posted receive (no unexpected match existed).
+    fn push_posted(&mut self, p: PostedRecv) {
+        if p.src == MPI_ANY_SOURCE || p.tag == MPI_ANY_TAG {
+            self.posted_wild.push_back(p);
+        } else {
+            self.posted_exact.entry((p.src, p.tag)).or_default().push_back(p);
+        }
+        self.n_posted += 1;
+    }
+
+    /// Store an unexpected envelope (no posted match existed).
+    fn push_unexpected(&mut self, stamp: u64, env: Envelope) {
+        self.unexpected.entry((env.src, env.tag)).or_default().push_back((stamp, env));
+        self.n_unexpected += 1;
+    }
+
+    /// Remove a posted receive by request id (cancel / request_free).
+    fn withdraw(&mut self, rid: ReqId) -> bool {
+        if let Some(i) = self.posted_wild.iter().position(|p| p.rid == rid) {
+            self.posted_wild.remove(i);
+            self.n_posted -= 1;
+            return true;
+        }
+        let mut hit: Option<(i32, i32)> = None;
+        for (&key, q) in self.posted_exact.iter_mut() {
+            if let Some(i) = q.iter().position(|p| p.rid == rid) {
+                q.remove(i);
+                hit = Some(key);
+                break;
+            }
+        }
+        if let Some(key) = hit {
+            if self.posted_exact.get(&key).map(|q| q.is_empty()).unwrap_or(false) {
+                self.posted_exact.remove(&key);
+            }
+            self.n_posted -= 1;
+            return true;
+        }
+        false
+    }
+
+    fn is_empty(&self) -> bool {
+        self.n_unexpected == 0 && self.n_posted == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MatchIndex — the engine-facing surface (indexed or flat)
+// ---------------------------------------------------------------------------
+
+/// The per-rank matching engine. All posted receives and unexpected
+/// messages of every context plane live here; see the module docs for
+/// the structure and the invariant.
+pub struct MatchIndex {
+    /// `true` = flat-baseline mode (`MPI_ABI_FLAT_MATCH=1`): linear
+    /// scans over two flat queues, the seed engine's data layout.
+    flat: bool,
+    /// context id → that plane's queues (indexed mode).
+    contexts: FxHashMap<u32, ContextQueues>,
+    /// Global arrival counter (stamps unexpected entries).
+    arrival_stamp: u64,
+    /// Global post counter (stamps posted entries).
+    post_stamp: u64,
+    /// Flat mode: all unexpected messages, arrival order.
+    flat_unexpected: VecDeque<Envelope>,
+    /// Flat mode: all posted receives, post order.
+    flat_posted: VecDeque<(u32, PostedRecv)>,
+}
+
+impl MatchIndex {
+    /// Build the index; mode from the `MPI_ABI_FLAT_MATCH` env flag
+    /// unless the job overrode it (see [`MatchIndex::with_mode`]).
+    pub fn new() -> MatchIndex {
+        MatchIndex::with_mode(flat_match_env())
+    }
+
+    /// Build the index with an explicit mode (`flat = true` restores the
+    /// seed's linear-scan baseline).
+    pub fn with_mode(flat: bool) -> MatchIndex {
+        MatchIndex {
+            flat,
+            contexts: FxHashMap::default(),
+            arrival_stamp: 0,
+            post_stamp: 0,
+            flat_unexpected: VecDeque::new(),
+            flat_posted: VecDeque::new(),
+        }
+    }
+
+    /// Whether the flat baseline is active (the engine also disables the
+    /// zero-alloc fast paths then, so the flag restores the pre-index
+    /// behavior end to end).
+    #[inline]
+    pub fn is_flat(&self) -> bool {
+        self.flat
+    }
+
+    /// Route an arriving data envelope. If a posted receive matches, it
+    /// is removed from the index and returned with the envelope (the
+    /// caller delivers); otherwise the envelope is stored unexpected.
+    pub fn arrive(&mut self, env: Envelope) -> Option<(ReqId, Envelope)> {
+        if self.flat {
+            if let Some(i) = self
+                .flat_posted
+                .iter()
+                .position(|(cx, p)| *cx == env.context && p.accepts(env.src, env.tag))
+            {
+                let (_, p) = self.flat_posted.remove(i).unwrap();
+                return Some((p.rid, env));
+            }
+            self.flat_unexpected.push_back(env);
+            return None;
+        }
+        let cq = self.contexts.entry(env.context).or_default();
+        if let Some(rid) = cq.take_posted(env.src, env.tag) {
+            if cq.is_empty() {
+                self.contexts.remove(&env.context);
+            }
+            return Some((rid, env));
+        }
+        self.arrival_stamp += 1;
+        let stamp = self.arrival_stamp;
+        cq.push_unexpected(stamp, env);
+        None
+    }
+
+    /// Post a receive for `(context, src, tag)` (wildcards allowed). If
+    /// an unexpected message matches, it is removed and returned (the
+    /// caller delivers into `rid`); otherwise the receive is stored.
+    pub fn post(&mut self, rid: ReqId, context: u32, src: i32, tag: i32) -> Option<Envelope> {
+        if self.flat {
+            if let Some(i) = self
+                .flat_unexpected
+                .iter()
+                .position(|e| e.matches(context, src, tag))
+            {
+                return self.flat_unexpected.remove(i);
+            }
+            self.flat_posted.push_back((context, PostedRecv { rid, stamp: 0, src, tag }));
+            return None;
+        }
+        let cq = self.contexts.entry(context).or_default();
+        if let Some(env) = cq.take_unexpected(src, tag) {
+            if cq.is_empty() {
+                self.contexts.remove(&context);
+            }
+            return Some(env);
+        }
+        self.post_stamp += 1;
+        let stamp = self.post_stamp;
+        cq.push_posted(PostedRecv { rid, stamp, src, tag });
+        None
+    }
+
+    /// Remove a posted receive (`MPI_Cancel` / `MPI_Request_free` on a
+    /// still-posted receive). Returns whether it was found.
+    pub fn withdraw(&mut self, rid: ReqId) -> bool {
+        if self.flat {
+            if let Some(i) = self.flat_posted.iter().position(|(_, p)| p.rid == rid) {
+                self.flat_posted.remove(i);
+                return true;
+            }
+            return false;
+        }
+        let mut hit_cx = None;
+        for (&cx, cq) in self.contexts.iter_mut() {
+            if cq.withdraw(rid) {
+                hit_cx = Some(cx);
+                break;
+            }
+        }
+        if let Some(cx) = hit_cx {
+            if self.contexts.get(&cx).map(|c| c.is_empty()).unwrap_or(false) {
+                self.contexts.remove(&cx);
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Take the earliest unexpected message matching `(context, src,
+    /// tag)` — `src`/`tag` may be wildcards. Used by the collective and
+    /// RMA internals (which own their buffers and bypass the request
+    /// table) and by the blocking-recv fast path.
+    pub fn take_unexpected(&mut self, context: u32, src: i32, tag: i32) -> Option<Envelope> {
+        if self.flat {
+            let i = self.flat_unexpected.iter().position(|e| e.matches(context, src, tag))?;
+            return self.flat_unexpected.remove(i);
+        }
+        let cq = self.contexts.get_mut(&context)?;
+        let env = cq.take_unexpected(src, tag)?;
+        if cq.is_empty() {
+            self.contexts.remove(&context);
+        }
+        Some(env)
+    }
+
+    /// Peek the earliest unexpected message matching `(context, src,
+    /// tag)` without removing it (`MPI_Iprobe`/`MPI_Probe`).
+    pub fn peek_unexpected(&self, context: u32, src: i32, tag: i32) -> Option<&Envelope> {
+        if self.flat {
+            return self.flat_unexpected.iter().find(|e| e.matches(context, src, tag));
+        }
+        self.contexts.get(&context)?.peek_unexpected(src, tag)
+    }
+
+    /// Take the earliest unexpected message on `context` with `tag <
+    /// tag_below` (the RMA progress router: every data/control tag sits
+    /// below the fence-barrier band).
+    pub fn take_tag_below(&mut self, context: u32, tag_below: i32) -> Option<Envelope> {
+        if self.flat {
+            let i = self
+                .flat_unexpected
+                .iter()
+                .position(|e| e.context == context && e.tag < tag_below)?;
+            return self.flat_unexpected.remove(i);
+        }
+        let cq = self.contexts.get_mut(&context)?;
+        let env = cq.take_tag_below(tag_below)?;
+        if cq.is_empty() {
+            self.contexts.remove(&context);
+        }
+        Some(env)
+    }
+
+    /// Total unexpected messages held (diagnostics and tests).
+    pub fn unexpected_len(&self) -> usize {
+        if self.flat {
+            return self.flat_unexpected.len();
+        }
+        self.contexts.values().map(|c| c.n_unexpected).sum()
+    }
+
+    /// Total posted receives held (diagnostics and tests).
+    pub fn posted_len(&self) -> usize {
+        if self.flat {
+            return self.flat_posted.len();
+        }
+        self.contexts.values().map(|c| c.n_posted).sum()
+    }
+}
+
+impl Default for MatchIndex {
+    fn default() -> Self {
+        MatchIndex::new()
+    }
+}
+
+/// Read the `MPI_ABI_FLAT_MATCH` baseline flag (value `1`).
+pub fn flat_match_env() -> bool {
+    std::env::var("MPI_ABI_FLAT_MATCH").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::transport::{MsgKind, Payload};
+
+    fn env(src: u32, context: u32, tag: i32) -> Envelope {
+        Envelope {
+            src,
+            context,
+            tag,
+            kind: MsgKind::Eager,
+            seq: 0,
+            payload: Payload::empty(),
+        }
+    }
+
+    fn both_modes(f: impl Fn(&mut MatchIndex)) {
+        for flat in [false, true] {
+            let mut ix = MatchIndex::with_mode(flat);
+            f(&mut ix);
+        }
+    }
+
+    #[test]
+    fn exact_bucket_is_fifo_by_arrival() {
+        both_modes(|ix| {
+            assert!(ix.arrive(env(1, 0, 5)).is_none());
+            assert!(ix.arrive(env(1, 0, 5)).is_none());
+            let a = ix.post(ReqId(10), 0, 1, 5);
+            let b = ix.post(ReqId(11), 0, 1, 5);
+            assert!(a.is_some() && b.is_some());
+            assert_eq!(ix.unexpected_len(), 0);
+            if !ix.is_flat() {
+                assert!(ix.contexts.is_empty(), "emptied context entries must be freed");
+            }
+        });
+    }
+
+    #[test]
+    fn arrival_picks_earliest_posted_across_exact_and_wildcard() {
+        both_modes(|ix| {
+            // Wildcard posted first, then exact: the wildcard wins.
+            assert!(ix.post(ReqId(1), 0, MPI_ANY_SOURCE, 5).is_none());
+            assert!(ix.post(ReqId(2), 0, 3, 5).is_none());
+            let (rid, _) = ix.arrive(env(3, 0, 5)).unwrap();
+            assert_eq!(rid, ReqId(1));
+            let (rid, _) = ix.arrive(env(3, 0, 5)).unwrap();
+            assert_eq!(rid, ReqId(2));
+        });
+    }
+
+    #[test]
+    fn exact_posted_before_wildcard_wins() {
+        both_modes(|ix| {
+            assert!(ix.post(ReqId(1), 0, 3, 5).is_none());
+            assert!(ix.post(ReqId(2), 0, MPI_ANY_SOURCE, MPI_ANY_TAG).is_none());
+            let (rid, _) = ix.arrive(env(3, 0, 5)).unwrap();
+            assert_eq!(rid, ReqId(1));
+            let (rid, _) = ix.arrive(env(7, 0, 9)).unwrap();
+            assert_eq!(rid, ReqId(2));
+        });
+    }
+
+    #[test]
+    fn wildcard_recv_takes_earliest_arrival_across_buckets() {
+        both_modes(|ix| {
+            assert!(ix.arrive(env(2, 0, 8)).is_none()); // earliest
+            assert!(ix.arrive(env(1, 0, 5)).is_none());
+            let got = ix.post(ReqId(1), 0, MPI_ANY_SOURCE, MPI_ANY_TAG).unwrap();
+            assert_eq!((got.src, got.tag), (2, 8));
+            let got = ix.post(ReqId(2), 0, MPI_ANY_SOURCE, MPI_ANY_TAG).unwrap();
+            assert_eq!((got.src, got.tag), (1, 5));
+        });
+    }
+
+    #[test]
+    fn contexts_are_isolated() {
+        both_modes(|ix| {
+            assert!(ix.arrive(env(1, 7, 5)).is_none());
+            assert!(ix.post(ReqId(1), 8, 1, 5).is_none(), "other context must not match");
+            assert!(ix.take_unexpected(8, 1, 5).is_none());
+            assert!(ix.take_unexpected(7, 1, 5).is_some());
+            // The posted recv on context 8 is still there.
+            let (rid, _) = ix.arrive(env(1, 8, 5)).unwrap();
+            assert_eq!(rid, ReqId(1));
+        });
+    }
+
+    #[test]
+    fn withdraw_removes_posted() {
+        both_modes(|ix| {
+            assert!(ix.post(ReqId(1), 0, 1, 5).is_none());
+            assert!(ix.post(ReqId(2), 0, MPI_ANY_SOURCE, 5).is_none());
+            assert!(ix.withdraw(ReqId(1)));
+            assert!(!ix.withdraw(ReqId(1)), "second withdraw finds nothing");
+            // The arrival now matches the wildcard (the exact is gone).
+            let (rid, _) = ix.arrive(env(1, 0, 5)).unwrap();
+            assert_eq!(rid, ReqId(2));
+        });
+    }
+
+    #[test]
+    fn peek_does_not_remove() {
+        both_modes(|ix| {
+            assert!(ix.arrive(env(4, 0, 6)).is_none());
+            assert!(ix.peek_unexpected(0, 4, 6).is_some());
+            assert!(ix.peek_unexpected(0, MPI_ANY_SOURCE, MPI_ANY_TAG).is_some());
+            assert_eq!(ix.unexpected_len(), 1);
+            assert!(ix.take_unexpected(0, 4, MPI_ANY_TAG).is_some());
+            assert!(ix.peek_unexpected(0, 4, 6).is_none());
+        });
+    }
+
+    #[test]
+    fn take_tag_below_respects_band_and_order() {
+        both_modes(|ix| {
+            assert!(ix.arrive(env(1, 9, 100)).is_none());
+            assert!(ix.arrive(env(1, 9, 2)).is_none());
+            assert!(ix.arrive(env(2, 9, 3)).is_none());
+            // 100 is above the band; 2 arrived before 3.
+            let got = ix.take_tag_below(9, 50).unwrap();
+            assert_eq!(got.tag, 2);
+            let got = ix.take_tag_below(9, 50).unwrap();
+            assert_eq!(got.tag, 3);
+            assert!(ix.take_tag_below(9, 50).is_none());
+            assert_eq!(ix.unexpected_len(), 1);
+        });
+    }
+
+    #[test]
+    fn posted_any_source_concrete_tag_filters() {
+        both_modes(|ix| {
+            assert!(ix.post(ReqId(1), 0, MPI_ANY_SOURCE, 5).is_none());
+            assert!(ix.arrive(env(3, 0, 6)).is_none(), "tag 6 must not match tag-5 recv");
+            let (rid, _) = ix.arrive(env(3, 0, 5)).unwrap();
+            assert_eq!(rid, ReqId(1));
+            assert_eq!(ix.unexpected_len(), 1);
+            assert!(ix.take_unexpected(0, 3, 6).is_some());
+        });
+    }
+}

@@ -22,6 +22,7 @@ pub mod engine;
 pub mod errh;
 pub mod group;
 pub mod info;
+pub mod match_index;
 pub mod op;
 pub mod request;
 pub mod rma;

@@ -190,8 +190,10 @@ pub(crate) fn new_persistent(ctx: &RankCtx, kind: ReqKind, spec: PersistSpec) ->
     }))
 }
 
-/// Post a receive request (and try to match it immediately against the
-/// unexpected queue).
+/// Post a receive request. The matching index either completes it on
+/// the spot (a matching message already arrived) or files it for the
+/// next arrival — there is no per-tick rescan (see
+/// [`crate::core::match_index`]).
 pub(crate) fn post_recv(
     ctx: &RankCtx,
     buf: usize,
@@ -202,14 +204,15 @@ pub(crate) fn post_recv(
     context: u32,
 ) -> ReqId {
     let id = new_request(ctx, ReqKind::Recv { buf, count, dt, src, tag, context }, ReqState::Active);
-    ctx.state.borrow_mut().posted.push_back(id);
-    // Immediate match attempt: the message may already be here.
-    match_posted(ctx);
+    let hit = ctx.state.borrow_mut().match_index.post(id, context, src, tag);
+    if let Some(env) = hit {
+        deliver(ctx, id, env);
+    }
     id
 }
 
 /// Re-post an existing (persistent) receive request: set its armed kind,
-/// mark Active, enqueue on the posted list, and try to match.
+/// mark Active, and hand it to the matching index.
 pub(crate) fn repost_recv(
     ctx: &RankCtx,
     rid: ReqId,
@@ -227,111 +230,120 @@ pub(crate) fn repost_recv(
             req.state = ReqState::Active;
         }
     }
-    ctx.state.borrow_mut().posted.push_back(rid);
-    match_posted(ctx);
+    let hit = ctx.state.borrow_mut().match_index.post(rid, context, src, tag);
+    if let Some(env) = hit {
+        deliver(ctx, rid, env);
+    }
 }
 
-/// One progress cycle: flush deferred sends, drain the fabric, match,
-/// service one-sided traffic, then advance every in-flight collective
-/// schedule.
+/// One progress cycle: flush deferred sends, drain the fabric (matching
+/// every arrival as it lands), service one-sided traffic, then advance
+/// every in-flight collective schedule.
 pub(crate) fn progress(ctx: &RankCtx) {
     if let Some(code) = ctx.world.aborted() {
         std::panic::panic_any(super::world::AbortUnwind(code));
     }
     flush_pending_sends(ctx);
     drain_fabric(ctx);
-    match_posted(ctx);
     super::rma::progress_rma(ctx);
     super::collectives::sched::progress_scheds(ctx);
 }
 
+/// Retry deferred sends. Queues are keyed per destination: a
+/// still-full ring parks only that destination's queue — traffic to
+/// every other rank keeps flowing (no head-of-line blocking).
 fn flush_pending_sends(ctx: &RankCtx) {
     let mut st = ctx.state.borrow_mut();
-    while let Some((dst, env)) = st.pending_sends.pop_front() {
-        match ctx.world.fabric.try_send(dst, env) {
-            Ok(()) => {}
-            Err(env) => {
-                st.pending_sends.push_front((dst, env));
-                break;
+    if st.pending_sends.is_empty() {
+        return;
+    }
+    let fabric = &ctx.world.fabric;
+    st.pending_sends.retain(|&dst, q| {
+        while let Some(env) = q.pop_front() {
+            if let Err(env) = fabric.try_send(dst, env) {
+                q.push_front(env);
+                break; // this destination is still full; others continue
             }
         }
-    }
+        !q.is_empty()
+    });
 }
 
+/// Drain every inbound envelope and route it straight into the matching
+/// index: an arrival that matches a posted receive is delivered
+/// immediately; the rest are filed as unexpected (indexed by
+/// `(context, src, tag)` for the O(1) exact-match lookup).
 fn drain_fabric(ctx: &RankCtx) {
-    let mut st = ctx.state.borrow_mut();
     if ctx.world.fabric.inbound_empty(ctx.rank) {
         return;
     }
-    let mut inbox = std::mem::take(&mut st.inbox);
+    let mut inbox = std::mem::take(&mut ctx.state.borrow_mut().inbox);
     ctx.world.fabric.poll_into(ctx.rank, &mut inbox);
     for env in inbox.drain(..) {
+        route_arrival(ctx, env);
+    }
+    ctx.state.borrow_mut().inbox = inbox;
+}
+
+/// Route one arrival: acks feed the Ssend ack set; data envelopes match
+/// against the posted side or land in the unexpected index.
+fn route_arrival(ctx: &RankCtx, env: Envelope) {
+    let matched = {
+        let mut st = ctx.state.borrow_mut();
         match env.kind {
             MsgKind::SsendAck => {
                 st.ssend_acks.insert(env.seq);
+                return;
             }
-            MsgKind::Eager | MsgKind::EagerSync => st.unexpected.push_back(env),
+            MsgKind::Eager | MsgKind::EagerSync => st.match_index.arrive(env),
         }
-    }
-    st.inbox = inbox;
-}
-
-/// Try to complete posted receives against the unexpected queue, in post
-/// order (MPI matching semantics: posted order × arrival order).
-fn match_posted(ctx: &RankCtx) {
-    loop {
-        // Find the first posted request that has a matching message.
-        let mut matched: Option<(usize, usize, ReqId)> = None; // (posted idx, unexpected idx, req)
-        {
-            let st = ctx.state.borrow();
-            let t = ctx.tables.borrow();
-            'outer: for (pi, &rid) in st.posted.iter().enumerate() {
-                let Some(req) = t.reqs.get(rid.0) else { continue };
-                let ReqKind::Recv { src, tag, context, .. } = req.kind else { continue };
-                for (ui, env) in st.unexpected.iter().enumerate() {
-                    if env.matches(context, src, tag) {
-                        matched = Some((pi, ui, rid));
-                        break 'outer;
-                    }
-                }
-            }
-        }
-        let Some((pi, ui, rid)) = matched else { return };
-        // Remove both, then deliver.
-        let env = {
-            let mut st = ctx.state.borrow_mut();
-            st.posted.remove(pi);
-            st.unexpected.remove(ui).expect("index valid")
-        };
+    };
+    if let Some((rid, env)) = matched {
         deliver(ctx, rid, env);
     }
 }
 
 /// Copy a matched message into the receive buffer and complete the request.
 fn deliver(ctx: &RankCtx, rid: ReqId, env: Envelope) {
-    let mut t = ctx.tables.borrow_mut();
-    let tables = &mut *t;
-    let Some(req) = tables.reqs.get_mut(rid.0) else { return };
-    let ReqKind::Recv { buf, count, dt, .. } = req.kind else { return };
-    let data = env.payload.as_slice();
-    // Capacity in packed bytes of the posted buffer.
-    let cap = tables.dtypes.get(dt.0).map(|o| o.size * count).unwrap_or(0);
-    let truncated = data.len() > cap;
-    let take = data.len().min(cap);
-    let consumed = super::datatype::pack::unpack(
-        &tables.dtypes,
-        &data[..take],
-        buf as *mut u8,
-        count,
-        dt,
-    )
-    .unwrap_or(0);
-    let mut status = StatusCore::success(env.src as i32, env.tag, consumed as u64);
-    if truncated {
-        status.error = crate::abi::errors::MPI_ERR_TRUNCATE;
+    let (buf, count, dt) = {
+        let t = ctx.tables.borrow();
+        let Some(req) = t.reqs.get(rid.0) else { return };
+        let ReqKind::Recv { buf, count, dt, .. } = req.kind else { return };
+        (buf, count, dt)
+    };
+    let status = deliver_inline(ctx, env, buf, count, dt);
+    if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
+        req.state = ReqState::Complete(status);
     }
-    req.state = ReqState::Complete(status);
-    drop(t);
+}
+
+/// Unpack a matched envelope into a user buffer and build its status —
+/// the shared tail of the request path ([`deliver`]) and the no-request
+/// blocking-recv fast path ([`crate::core::engine`]). Also acks
+/// synchronous sends (the message is matched the moment it is consumed).
+pub(crate) fn deliver_inline(
+    ctx: &RankCtx,
+    env: Envelope,
+    buf: usize,
+    count: usize,
+    dt: DtId,
+) -> StatusCore {
+    let status = {
+        let t = ctx.tables.borrow();
+        let data = env.payload.as_slice();
+        // Capacity in packed bytes of the posted buffer.
+        let cap = t.dtypes.get(dt.0).map(|o| o.size * count).unwrap_or(0);
+        let truncated = data.len() > cap;
+        let take = data.len().min(cap);
+        let consumed =
+            super::datatype::pack::unpack(&t.dtypes, &data[..take], buf as *mut u8, count, dt)
+                .unwrap_or(0);
+        let mut status = StatusCore::success(env.src as i32, env.tag, consumed as u64);
+        if truncated {
+            status.error = crate::abi::errors::MPI_ERR_TRUNCATE;
+        }
+        status
+    };
     // Ack synchronous sends now that the message is matched.
     if env.kind == MsgKind::EagerSync {
         let ack = Envelope {
@@ -344,19 +356,23 @@ fn deliver(ctx: &RankCtx, rid: ReqId, env: Envelope) {
         };
         enqueue_send(ctx, env.src as usize, ack);
     }
+    status
 }
 
 /// Send an envelope, preserving per-destination FIFO even under
-/// backpressure (deferred envelopes drain before new ones).
+/// backpressure (a destination's deferred envelopes drain before new
+/// ones to it; other destinations are unaffected).
 pub(crate) fn enqueue_send(ctx: &RankCtx, dst: usize, env: Envelope) {
     let mut st = ctx.state.borrow_mut();
-    let blocked = st.pending_sends.iter().any(|&(d, _)| d == dst);
-    if blocked {
-        st.pending_sends.push_back((dst, env));
+    if let Some(q) = st.pending_sends.get_mut(&dst) {
+        // Deferred traffic to this destination exists: queue behind it.
+        q.push_back(env);
         return;
     }
     if let Err(env) = ctx.world.fabric.try_send(dst, env) {
-        st.pending_sends.push_back((dst, env));
+        let mut q = std::collections::VecDeque::with_capacity(4);
+        q.push_back(env);
+        st.pending_sends.insert(dst, q);
     }
 }
 
@@ -465,9 +481,7 @@ pub fn cancel(rid: ReqId) -> RC<()> {
             matches!(req.kind, ReqKind::Recv { .. }) && req.state == ReqState::Active
         };
         if is_recv_pending {
-            let mut st = ctx.state.borrow_mut();
-            st.posted.retain(|&r| r != rid);
-            drop(st);
+            ctx.state.borrow_mut().match_index.withdraw(rid);
             let mut t = ctx.tables.borrow_mut();
             let req = t.reqs.get_mut(rid.0).unwrap();
             let mut s = StatusCore::empty();
@@ -507,8 +521,90 @@ pub fn request_free(rid: ReqId) -> RC<()> {
         // engine first, so the freed slot can be recycled without a stale
         // posted entry matching a foreign message into it.
         if withdraw {
-            ctx.state.borrow_mut().posted.retain(|&r| r != rid);
+            ctx.state.borrow_mut().match_index.withdraw(rid);
         }
         ctx.tables.borrow_mut().reqs.remove(rid.0).map(|_| ()).ok_or(err!(MPI_ERR_REQUEST))
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::transport::{MsgKind, Payload, SPSC_CAPACITY};
+    use crate::core::world::{bind_rank, test_world, unbind_rank};
+
+    fn env(tag: i32) -> Envelope {
+        Envelope {
+            src: 0,
+            context: 0,
+            tag,
+            kind: MsgKind::Eager,
+            seq: 0,
+            payload: Payload::empty(),
+        }
+    }
+
+    /// Deterministic pin of the head-of-line-blocking fix: with *both*
+    /// destination rings full and envelopes parked for each, draining
+    /// ring 0→2 alone must let dst-2's deferred envelopes flow on the
+    /// next flush even though dst-1's stay stuck. (The seed's single
+    /// flush queue stopped at the first full destination, so dst-2
+    /// traffic parked behind dst-1 entries never moved.)
+    #[test]
+    fn flush_is_keyed_per_destination() {
+        std::thread::spawn(|| {
+            let w = test_world(3);
+            let ctx = bind_rank(w, 0);
+            for _ in 0..SPSC_CAPACITY + 2 {
+                enqueue_send(&ctx, 1, env(4));
+                enqueue_send(&ctx, 2, env(6));
+            }
+            {
+                let st = ctx.state.borrow();
+                assert_eq!(st.pending_sends.get(&1).map(|q| q.len()), Some(2));
+                assert_eq!(st.pending_sends.get(&2).map(|q| q.len()), Some(2));
+            }
+            // Play rank 2's role (single-threaded test): drain its ring.
+            let mut sink = Vec::new();
+            ctx.world.fabric.poll_into(2, &mut sink);
+            assert_eq!(sink.len(), SPSC_CAPACITY);
+            flush_pending_sends(&ctx);
+            {
+                let st = ctx.state.borrow();
+                assert!(st.pending_sends.get(&2).is_none(), "dst-2 queue must drain");
+                assert_eq!(
+                    st.pending_sends.get(&1).map(|q| q.len()),
+                    Some(2),
+                    "dst-1 still parked (its ring is still full)"
+                );
+            }
+            unbind_rank();
+        })
+        .join()
+        .unwrap();
+    }
+
+    /// A send to a destination with parked traffic queues behind it
+    /// (per-destination FIFO); sends to other destinations go straight
+    /// to the fabric.
+    #[test]
+    fn enqueue_bypasses_other_destinations_backpressure() {
+        std::thread::spawn(|| {
+            let w = test_world(3);
+            let ctx = bind_rank(w, 0);
+            for _ in 0..SPSC_CAPACITY + 1 {
+                enqueue_send(&ctx, 1, env(4));
+            }
+            enqueue_send(&ctx, 2, env(6));
+            {
+                let st = ctx.state.borrow();
+                assert_eq!(st.pending_sends.get(&1).map(|q| q.len()), Some(1));
+                assert!(st.pending_sends.get(&2).is_none(), "dst 2 must not be parked");
+            }
+            assert!(!ctx.world.fabric.inbound_empty(2), "dst-2 envelope reached the fabric");
+            unbind_rank();
+        })
+        .join()
+        .unwrap();
+    }
 }

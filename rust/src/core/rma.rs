@@ -470,16 +470,15 @@ fn win_barrier(ctx: &RankCtx, members: &[usize], my_rank: usize, ctx_ctrl: u32, 
         enqueue_send(ctx, to_world, env);
         loop {
             progress(ctx);
+            // Exact (src, tag) probe of the unexpected index — O(1).
+            if ctx
+                .state
+                .borrow_mut()
+                .match_index
+                .take_unexpected(ctx_ctrl, from_world as i32, tag)
+                .is_some()
             {
-                let mut st = ctx.state.borrow_mut();
-                if let Some(i) = st
-                    .unexpected
-                    .iter()
-                    .position(|e| e.context == ctx_ctrl && e.tag == tag && e.src == from_world)
-                {
-                    st.unexpected.remove(i);
-                    break;
-                }
+                break;
             }
             std::thread::yield_now();
         }
@@ -948,21 +947,24 @@ fn send_ctrl(ctx: &RankCtx, dst: usize, context: u32, tag: i32, seq: u64, payloa
 pub(crate) fn progress_rma(ctx: &RankCtx) {
     loop {
         let found = {
-            let st = ctx.state.borrow();
+            let mut st = ctx.state.borrow_mut();
             let t = ctx.tables.borrow();
             if t.win_by_ctx.is_empty() {
                 return;
             }
-            st.unexpected.iter().enumerate().find_map(|(i, env)| {
-                if env.tag < FENCE_TAG_BASE {
-                    t.win_by_ctx.get(&env.context).map(|&w| (i, w))
-                } else {
-                    None
+            // Probe each window plane's unexpected queues for the next
+            // data/control message (everything below the fence-barrier
+            // tag band); per-plane arrival order is preserved.
+            let mut hit = None;
+            for (&cx, &w) in t.win_by_ctx.iter() {
+                if let Some(env) = st.match_index.take_tag_below(cx, FENCE_TAG_BASE) {
+                    hit = Some((w, env));
+                    break;
                 }
-            })
+            }
+            hit
         };
-        let Some((i, w)) = found else { return };
-        let env = ctx.state.borrow_mut().unexpected.remove(i).expect("index valid");
+        let Some((w, env)) = found else { return };
         handle_msg(ctx, WinId(w), env);
     }
 }

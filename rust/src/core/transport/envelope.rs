@@ -34,10 +34,21 @@ impl Payload {
         }
     }
 
-    /// Take ownership of an already-heap-allocated buffer (no copy).
+    /// Build a payload from an owned buffer. Small buffers (≤
+    /// [`INLINE_CAP`]) are copied inline and the vector freed — so
+    /// control-message replies and packed small messages built through
+    /// `Vec` stay allocation-free on the wire, same as
+    /// [`Payload::from_slice`]; larger buffers are taken over without a
+    /// copy.
     #[inline]
     pub fn from_vec(data: Vec<u8>) -> Payload {
-        Payload::Heap(data)
+        if data.len() <= INLINE_CAP {
+            let mut bytes = [0u8; INLINE_CAP];
+            bytes[..data.len()].copy_from_slice(&data);
+            Payload::Inline { len: data.len() as u8, bytes }
+        } else {
+            Payload::Heap(data)
+        }
     }
 
     /// View the payload bytes.
@@ -145,6 +156,21 @@ mod tests {
     fn boundary_is_inline() {
         let data = vec![3u8; INLINE_CAP];
         assert!(matches!(Payload::from_slice(&data), Payload::Inline { .. }));
+    }
+
+    #[test]
+    fn from_vec_inlines_small_buffers() {
+        let p = Payload::from_vec(vec![9u8; 8]);
+        assert!(matches!(p, Payload::Inline { .. }), "≤ INLINE_CAP must not stay heap");
+        assert_eq!(p.as_slice(), &[9u8; 8]);
+        let p = Payload::from_vec(vec![4u8; INLINE_CAP]);
+        assert!(matches!(p, Payload::Inline { .. }), "boundary inlines");
+        assert_eq!(p.len(), INLINE_CAP);
+        let p = Payload::from_vec(vec![5u8; INLINE_CAP + 1]);
+        assert!(matches!(p, Payload::Heap(_)), "> INLINE_CAP keeps the buffer");
+        assert_eq!(p.len(), INLINE_CAP + 1);
+        let p = Payload::from_vec(Vec::new());
+        assert!(p.is_empty());
     }
 
     #[test]

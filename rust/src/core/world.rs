@@ -10,7 +10,7 @@
 use std::cell::{Cell, RefCell};
 use std::collections::{HashSet, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -19,6 +19,7 @@ use super::datatype::DatatypeObj;
 use super::errh::ErrhObj;
 use super::group::GroupObj;
 use super::info::InfoObj;
+use super::match_index::{FxHashMap, MatchIndex};
 use super::op::OpObj;
 use super::request::RequestObj;
 use super::rma::WinObj;
@@ -52,6 +53,12 @@ pub struct World {
     /// (URI, member world ranks) pair surfaced by `MPI_Session_get_*`
     /// alongside the built-in `mpi://WORLD` / `mpi://SELF`.
     psets: Vec<(String, Vec<usize>)>,
+    /// Flat-baseline matching (`MPI_ABI_FLAT_MATCH=1` or
+    /// [`crate::launcher::JobSpec::with_flat_match`]): ranks bound to
+    /// this world use the seed's linear-scan matcher and skip the
+    /// zero-alloc fast paths — the perf baseline the benches regress
+    /// against. Read once per rank at bind time.
+    flat_match: AtomicBool,
 }
 
 impl World {
@@ -85,7 +92,20 @@ impl World {
             finalize_count: AtomicUsize::new(0),
             sched_builds: AtomicU64::new(0),
             psets,
+            flat_match: AtomicBool::new(super::match_index::flat_match_env()),
         })
+    }
+
+    /// Override the matching mode for ranks bound after this call (tests
+    /// and benches that compare flat vs indexed without racing on the
+    /// process-global env var).
+    pub fn set_flat_match(&self, flat: bool) {
+        self.flat_match.store(flat, Ordering::SeqCst);
+    }
+
+    /// Whether ranks of this world use the flat-baseline matcher.
+    pub fn flat_match(&self) -> bool {
+        self.flat_match.load(Ordering::SeqCst)
     }
 
     /// The launcher-provided process sets (name, member world ranks).
@@ -165,12 +185,14 @@ pub struct Tables {
 
 /// Mutable per-rank messaging state.
 pub struct RankState {
-    /// Messages received but not yet matched (the unexpected queue).
-    pub unexpected: VecDeque<Envelope>,
-    /// Recv requests posted and not yet matched, in post order.
-    pub posted: VecDeque<super::ReqId>,
-    /// Sends that hit transport backpressure, awaiting retry.
-    pub pending_sends: VecDeque<(usize, Envelope)>,
+    /// The matching engine: every context plane's posted receives and
+    /// unexpected messages, indexed for O(1) exact matching (see
+    /// [`crate::core::match_index`]).
+    pub match_index: MatchIndex,
+    /// Sends that hit transport backpressure, awaiting retry — keyed by
+    /// destination so one full ring only stalls traffic to that rank
+    /// (per-destination FIFO is preserved; other destinations flow).
+    pub pending_sends: FxHashMap<usize, VecDeque<Envelope>>,
     /// Ssend acks received (sync ids).
     pub ssend_acks: HashSet<u64>,
     /// Next sync id for Ssend.
@@ -185,11 +207,10 @@ pub struct RankState {
 }
 
 impl RankState {
-    fn new() -> RankState {
+    fn new(flat_match: bool) -> RankState {
         RankState {
-            unexpected: VecDeque::new(),
-            posted: VecDeque::new(),
-            pending_sends: VecDeque::new(),
+            match_index: MatchIndex::with_mode(flat_match),
+            pending_sends: FxHashMap::default(),
             ssend_acks: HashSet::new(),
             next_sync_id: 1,
             send_seq: 0,
@@ -254,11 +275,12 @@ thread_local! {
 /// the application runs (the "process created" moment, pre-`MPI_Init`).
 pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
     assert!(rank < world.size, "rank {rank} out of bounds");
+    let flat_match = world.flat_match();
     let ctx = Rc::new(RankCtx {
         world,
         rank,
         tables: RefCell::new(init_tables()),
-        state: RefCell::new(RankState::new()),
+        state: RefCell::new(RankState::new(flat_match)),
         initialized: Cell::new(false),
         finalized: Cell::new(false),
         active_inits: Cell::new(0),

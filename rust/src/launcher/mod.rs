@@ -17,15 +17,26 @@ use crate::core::world::{bind_rank, unbind_rank, AbortUnwind, World};
 pub struct JobSpec {
     pub ranks: usize,
     pub transport: TransportKind,
+    /// Matching-engine override: `Some(true)` forces the flat-baseline
+    /// matcher, `Some(false)` the indexed one, `None` defers to the
+    /// `MPI_ABI_FLAT_MATCH` env flag (see [`crate::core::match_index`]).
+    pub flat_match: Option<bool>,
 }
 
 impl JobSpec {
     pub fn new(ranks: usize) -> JobSpec {
-        JobSpec { ranks, transport: TransportKind::Spsc }
+        JobSpec { ranks, transport: TransportKind::Spsc, flat_match: None }
     }
 
     pub fn with_transport(mut self, t: TransportKind) -> JobSpec {
         self.transport = t;
+        self
+    }
+
+    /// Force the matching mode for this job (tests/benches comparing
+    /// flat vs indexed without racing on the process-global env var).
+    pub fn with_flat_match(mut self, flat: bool) -> JobSpec {
+        self.flat_match = Some(flat);
         self
     }
 }
@@ -63,6 +74,9 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let world = World::new(spec.ranks, spec.transport);
+    if let Some(flat) = spec.flat_match {
+        world.set_flat_match(flat);
+    }
     run_on_world(world, spec.ranks, f)
 }
 

@@ -1,0 +1,349 @@
+//! Matching-semantics regression battery for the indexed engine.
+//!
+//! MPI's matching rule — **posted order × arrival order** — is exactly
+//! what the per-context exact buckets + wildcard FIFOs of
+//! [`crate::core::match_index`] must preserve. Each test drives exact,
+//! `MPI_ANY_SOURCE`, and `MPI_ANY_TAG` receives in *every posting
+//! interleaving* against in-order and out-of-order arrivals, on one and
+//! on two context planes (a dup'd communicator), and asserts the
+//! delivery order the flat reference scan would produce.
+//!
+//! Determinism tricks (the tests must pass on both transports at any
+//! timing): a single sender's messages arrive in send order (per-pair
+//! FIFO), and a **synchronous-send sentinel** flushes the channel — when
+//! the receiver has matched the sentinel, everything the sender sent
+//! before it is already in the receiver's unexpected queues.
+
+use super::util::*;
+use super::TestFn;
+use crate::api::{Dt, MpiAbi};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("match.single_sender_fifo_wildcards", single_sender_fifo_wildcards::<A>),
+        ("match.posted_order_permutations", posted_order_permutations::<A>),
+        ("match.unexpected_order_permutations", unexpected_order_permutations::<A>),
+        ("match.two_contexts_isolated", two_contexts_isolated::<A>),
+        ("match.any_source_two_senders", any_source_two_senders::<A>),
+        ("match.out_of_order_tags", out_of_order_tags::<A>),
+    ]
+}
+
+fn world_geometry<A: MpiAbi>() -> (i32, i32) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    (size, rank)
+}
+
+/// All 3-element posting orders: position i gets receive-kind PERMS[p][i]
+/// (0 = exact, 1 = ANY_SOURCE, 2 = ANY_TAG).
+const PERMS: [[usize; 3]; 6] = [
+    [0, 1, 2],
+    [0, 2, 1],
+    [1, 0, 2],
+    [1, 2, 0],
+    [2, 0, 1],
+    [2, 1, 0],
+];
+
+/// Sender side of the channel-flush trick: a synchronous sentinel send
+/// completes only when the receiver matched it — so everything sent
+/// before it has, by per-pair FIFO, already been drained at the
+/// receiver.
+fn flush_sentinel_send<A: MpiAbi>(dest: i32, tag: i32) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int32);
+    let one = [1i32];
+    check_rc!(A::ssend(slice_ptr(&one), 1, dt, dest, tag, A::comm_world()), "sentinel ssend");
+    Ok(())
+}
+
+/// Receiver side: matching the sentinel guarantees the sender's earlier
+/// messages are all in the unexpected queues.
+fn flush_sentinel_recv<A: MpiAbi>(src: i32, tag: i32) -> Result<(), String> {
+    let dt = A::datatype(Dt::Int32);
+    let mut got = [0i32];
+    let mut st = A::status_empty();
+    check_rc!(
+        A::recv(slice_ptr_mut(&mut got), 1, dt, src, tag, A::comm_world(), &mut st),
+        "sentinel recv"
+    );
+    check!(got[0] == 1, "sentinel payload");
+    Ok(())
+}
+
+/// One sender, blocking receives: wildcard takes the earliest arrival,
+/// exact skips past non-matching tags, and the leftover is picked up by
+/// a source-exact ANY_TAG — regardless of how far the sender has
+/// progressed when each receive is posted.
+fn single_sender_fifo_wildcards<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let world = A::comm_world();
+    if me == 1 {
+        for (v, tag) in [(501, 5), (502, 5), (503, 7)] {
+            let v = [v];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, tag, world), "send");
+        }
+    } else if me == 0 {
+        let mut got = [0i32];
+        let mut st = A::status_empty();
+        // ANY/ANY: earliest message from rank 1 (per-pair FIFO ⇒ 501).
+        check_rc!(
+            A::recv(slice_ptr_mut(&mut got), 1, dt, A::any_source(), A::any_tag(), world, &mut st),
+            "any/any recv"
+        );
+        check!(got[0] == 501, "wildcard takes earliest arrival, got {}", got[0]);
+        check!(A::status_source(&st) == 1 && A::status_tag(&st) == 5, "status of 501");
+        check!(A::get_count(&st, dt) == 1, "count of 501");
+        // Exact tag 7 skips the still-queued 502.
+        check_rc!(A::recv(slice_ptr_mut(&mut got), 1, dt, 1, 7, world, &mut st), "tag-7 recv");
+        check!(got[0] == 503, "exact tag skips non-matching, got {}", got[0]);
+        // Source-exact ANY_TAG picks up the leftover.
+        check_rc!(
+            A::recv(slice_ptr_mut(&mut got), 1, dt, 1, A::any_tag(), world, &mut st),
+            "any-tag recv"
+        );
+        check!(got[0] == 502 && A::status_tag(&st) == 5, "leftover 502, got {}", got[0]);
+    }
+    Ok(())
+}
+
+/// Receives posted **before** the messages exist (the posted-side
+/// index): in every interleaving of exact / ANY_SOURCE / ANY_TAG — all
+/// matching the same (src, tag) stream — the i-th *posted* receive must
+/// complete with the i-th *sent* message, whatever its wildcard kind.
+fn posted_order_permutations<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let world = A::comm_world();
+    const TAG: i32 = 21;
+    const GO: i32 = 91;
+    for (p, perm) in PERMS.iter().enumerate() {
+        if me == 0 {
+            let mut bufs = [[0i32]; 3];
+            let mut reqs = vec![A::request_null(); 3];
+            // Post the three receives in this permutation's kind order.
+            for (i, req) in reqs.iter_mut().enumerate() {
+                let (src, tag) = match perm[i] {
+                    0 => (1, TAG),
+                    1 => (A::any_source(), TAG),
+                    _ => (1, A::any_tag()),
+                };
+                check_rc!(
+                    A::irecv(slice_ptr_mut(&mut bufs[i]), 1, dt, src, tag, world, req),
+                    "irecv"
+                );
+            }
+            // Only now release the sender.
+            let go = [p as i32];
+            check_rc!(A::send(slice_ptr(&go), 1, dt, 1, GO, world), "go send");
+            let mut sts = vec![A::status_empty(); 3];
+            check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+            for i in 0..3 {
+                let want = (p * 10 + i) as i32;
+                check!(
+                    bufs[i][0] == want,
+                    "perm {p}: posted[{i}] (kind {}) wanted {want}, got {}",
+                    perm[i],
+                    bufs[i][0]
+                );
+                check!(A::status_source(&sts[i]) == 1, "perm {p}: source of posted[{i}]");
+                check!(A::status_tag(&sts[i]) == TAG, "perm {p}: tag of posted[{i}]");
+            }
+        } else if me == 1 {
+            let mut go = [0i32];
+            let mut st = A::status_empty();
+            check_rc!(A::recv(slice_ptr_mut(&mut go), 1, dt, 0, GO, world, &mut st), "go recv");
+            for i in 0..3 {
+                let v = [(p * 10 + i) as i32];
+                check_rc!(A::send(slice_ptr(&v), 1, dt, 0, TAG, world), "send");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Receives posted **after** the messages arrived (the unexpected-side
+/// index): the sentinel flush guarantees all three messages are queued
+/// unexpected, then every posting interleaving must still deliver in
+/// arrival order.
+fn unexpected_order_permutations<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let world = A::comm_world();
+    const TAG: i32 = 31;
+    const FLUSH: i32 = 92;
+    for (p, perm) in PERMS.iter().enumerate() {
+        if me == 1 {
+            for i in 0..3 {
+                let v = [(p * 10 + i) as i32];
+                check_rc!(A::send(slice_ptr(&v), 1, dt, 0, TAG, world), "send");
+            }
+            flush_sentinel_send::<A>(0, FLUSH)?;
+        } else if me == 0 {
+            flush_sentinel_recv::<A>(1, FLUSH)?;
+            // All three messages are now unexpected; post in perm order.
+            let mut bufs = [[0i32]; 3];
+            let mut reqs = vec![A::request_null(); 3];
+            for (i, req) in reqs.iter_mut().enumerate() {
+                let (src, tag) = match perm[i] {
+                    0 => (1, TAG),
+                    1 => (A::any_source(), TAG),
+                    _ => (1, A::any_tag()),
+                };
+                check_rc!(
+                    A::irecv(slice_ptr_mut(&mut bufs[i]), 1, dt, src, tag, world, req),
+                    "irecv"
+                );
+            }
+            let mut sts = vec![A::status_empty(); 3];
+            check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+            for i in 0..3 {
+                let want = (p * 10 + i) as i32;
+                check!(
+                    bufs[i][0] == want,
+                    "perm {p}: unexpected[{i}] (kind {}) wanted {want}, got {}",
+                    perm[i],
+                    bufs[i][0]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Two context planes (world and a dup): wildcards never cross
+/// contexts, and arrival order is tracked per plane. The sender
+/// interleaves world and dup traffic; a sentinel flush makes all of it
+/// unexpected before the receiver posts anything.
+fn two_contexts_isolated<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    let world = A::comm_world();
+    let mut dup = world;
+    check_rc!(A::comm_dup(world, &mut dup), "comm_dup");
+    let dt = A::datatype(Dt::Int32);
+    let result = (|| -> Result<(), String> {
+        if n < 2 {
+            return Ok(());
+        }
+        const TAG: i32 = 3;
+        const FLUSH: i32 = 93;
+        if me == 1 {
+            let v = [701i32];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, TAG, world), "world send");
+            let v = [702i32];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, TAG, dup), "dup send");
+            let v = [703i32];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, 7, world), "world tag-7 send");
+            flush_sentinel_send::<A>(0, FLUSH)?;
+        } else if me == 0 {
+            flush_sentinel_recv::<A>(1, FLUSH)?;
+            let mut got = [0i32];
+            let mut st = A::status_empty();
+            // ANY/ANY on the dup must see only dup traffic.
+            check_rc!(
+                A::recv(slice_ptr_mut(&mut got), 1, dt, A::any_source(), A::any_tag(), dup, &mut st),
+                "dup any/any"
+            );
+            check!(got[0] == 702, "dup wildcard sees only dup traffic, got {}", got[0]);
+            // ANY/ANY on world: earliest *world* arrival (701, not 702/703).
+            check_rc!(
+                A::recv(
+                    slice_ptr_mut(&mut got),
+                    1,
+                    dt,
+                    A::any_source(),
+                    A::any_tag(),
+                    world,
+                    &mut st
+                ),
+                "world any/any"
+            );
+            check!(got[0] == 701, "world wildcard takes earliest world arrival, got {}", got[0]);
+            check!(A::status_tag(&st) == TAG, "world wildcard tag");
+            check_rc!(
+                A::recv(slice_ptr_mut(&mut got), 1, dt, 1, 7, world, &mut st),
+                "world tag-7"
+            );
+            check!(got[0] == 703, "leftover world message, got {}", got[0]);
+        }
+        Ok(())
+    })();
+    check_rc!(A::comm_free(&mut dup), "comm_free");
+    result
+}
+
+/// `MPI_ANY_SOURCE` against two concurrent senders: an exact-source
+/// receive posted before a wildcard must end up with its source's
+/// message whichever arrival order the transport produces, and the
+/// wildcard takes the other.
+fn any_source_two_senders<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 3 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let world = A::comm_world();
+    const TAG: i32 = 41;
+    if me == 1 || me == 2 {
+        let v = [100 + me];
+        check_rc!(A::send(slice_ptr(&v), 1, dt, 0, TAG, world), "send");
+    } else if me == 0 {
+        let mut exact = [0i32];
+        let mut any = [0i32];
+        let mut reqs = vec![A::request_null(); 2];
+        // Exact source 2 first, then the wildcard.
+        check_rc!(A::irecv(slice_ptr_mut(&mut exact), 1, dt, 2, TAG, world, &mut reqs[0]), "irecv");
+        check_rc!(
+            A::irecv(slice_ptr_mut(&mut any), 1, dt, A::any_source(), TAG, world, &mut reqs[1]),
+            "irecv any"
+        );
+        let mut sts = vec![A::status_empty(); 2];
+        check_rc!(A::waitall(&mut reqs, &mut sts), "waitall");
+        check!(exact[0] == 102, "exact recv pinned to source 2, got {}", exact[0]);
+        check!(any[0] == 101, "wildcard got the remaining sender, got {}", any[0]);
+        check!(A::status_source(&sts[0]) == 2, "exact status source");
+        check!(A::status_source(&sts[1]) == 1, "wildcard status source");
+    }
+    Ok(())
+}
+
+/// Out-of-order tag arrivals against in-order exact receives: tags sent
+/// 3,2,1 are received 1,2,3 via the exact buckets (each blocking recv
+/// must skip everything queued before its match).
+fn out_of_order_tags<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Int32);
+    let world = A::comm_world();
+    const FLUSH: i32 = 94;
+    if me == 1 {
+        for tag in [3, 2, 1] {
+            let v = [800 + tag];
+            check_rc!(A::send(slice_ptr(&v), 1, dt, 0, tag, world), "send");
+        }
+        flush_sentinel_send::<A>(0, FLUSH)?;
+    } else if me == 0 {
+        flush_sentinel_recv::<A>(1, FLUSH)?;
+        for tag in [1, 2, 3] {
+            let mut got = [0i32];
+            let mut st = A::status_empty();
+            check_rc!(A::recv(slice_ptr_mut(&mut got), 1, dt, 1, tag, world, &mut st), "recv");
+            check!(got[0] == 800 + tag, "tag {tag} delivered its own message, got {}", got[0]);
+            check!(A::status_tag(&st) == tag, "status tag {tag}");
+        }
+    }
+    Ok(())
+}

@@ -17,6 +17,7 @@ mod coll;
 mod comm_attr;
 mod dtype;
 mod env;
+mod matching;
 mod persistent;
 mod pt2pt;
 mod rma;
@@ -41,6 +42,7 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     let mut v: Vec<(&'static str, TestFn)> = Vec::new();
     v.extend(env::tests::<A>());
     v.extend(pt2pt::tests::<A>());
+    v.extend(matching::tests::<A>());
     v.extend(persistent::tests::<A>());
     v.extend(dtype::tests::<A>());
     v.extend(coll::tests::<A>());
@@ -55,6 +57,14 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
 /// `sessions` job runs per ABI config via `tests/sessions.rs`.
 pub fn session_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     session::tests::<A>()
+}
+
+/// The message-matching battery alone (posted order × arrival order
+/// under every wildcard interleaving, across two context planes) — run
+/// standalone under all five ABI configs *and both transports* by
+/// `tests/matching.rs`.
+pub fn matching_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    matching::tests::<A>()
 }
 
 /// Run the whole suite under ABI `A`. Call from every rank of a running

@@ -1,0 +1,78 @@
+//! The matching-semantics battery, standalone: all five ABI
+//! configurations × both transports (the ISSUE-5 acceptance grid), plus
+//! a flat-baseline run proving the indexed matcher and the seed's
+//! linear scan produce identical semantics.
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+use mpi_abi::testsuite;
+
+fn run_battery<A: MpiAbi>(ranks: usize, transport: TransportKind, flat: Option<bool>) {
+    let mut spec = JobSpec::new(ranks).with_transport(transport);
+    if let Some(f) = flat {
+        spec = spec.with_flat_match(f);
+    }
+    let reports = run_job_ok(spec, |rank| {
+        assert_eq!(A::init(), 0, "{} init", A::NAME);
+        let results = testsuite::run_registry::<A>(rank, testsuite::matching_registry::<A>());
+        let report = testsuite::report(A::NAME, &results);
+        let failed = results.iter().filter(|r| !r.passed).count();
+        assert_eq!(A::finalize(), 0, "{} finalize", A::NAME);
+        (report, failed)
+    });
+    let (report, failures) = &reports[0];
+    if *failures > 0 {
+        panic!("[{} {:?} flat={flat:?}]\n{report}", A::NAME, transport);
+    }
+}
+
+fn both_transports<A: MpiAbi>(ranks: usize) {
+    run_battery::<A>(ranks, TransportKind::Spsc, None);
+    run_battery::<A>(ranks, TransportKind::Mutex, None);
+}
+
+#[test]
+fn matching_battery_mpich_native() {
+    both_transports::<MpichAbi>(3);
+}
+
+#[test]
+fn matching_battery_ompi_native() {
+    both_transports::<OmpiAbi>(3);
+}
+
+#[test]
+fn matching_battery_muk_over_mpich() {
+    both_transports::<MukMpich>(3);
+}
+
+#[test]
+fn matching_battery_muk_over_ompi() {
+    both_transports::<MukOmpi>(3);
+}
+
+#[test]
+fn matching_battery_native_standard_abi() {
+    both_transports::<NativeAbi>(3);
+}
+
+#[test]
+fn matching_battery_two_and_four_ranks() {
+    both_transports::<NativeAbi>(2);
+    both_transports::<MukMpich>(4);
+}
+
+/// The flat baseline (`MPI_ABI_FLAT_MATCH=1` semantics, forced per job
+/// so parallel tests can't race on the env var) must pass the identical
+/// battery on both transports: the index changes the complexity, never
+/// the matching order.
+#[test]
+fn matching_battery_flat_baseline_identical() {
+    run_battery::<NativeAbi>(3, TransportKind::Spsc, Some(true));
+    run_battery::<NativeAbi>(3, TransportKind::Mutex, Some(true));
+    run_battery::<MpichAbi>(3, TransportKind::Spsc, Some(true));
+}

@@ -166,6 +166,9 @@ fn lifecycle_and_session_sections_exist() {
     let spec = spec_text();
     for needle in [
         "## 6. Initialization lifecycle",
+        "## 7. Request lifecycle and message matching",
+        "Posted order × arrival order",
+        "MPI_ABI_FLAT_MATCH",
         "MPI_Comm_create_from_group",
         "mpi://WORLD",
         "MPI_SESSION_NULL",
