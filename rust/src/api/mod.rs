@@ -57,6 +57,85 @@ pub enum OpName {
     Maxloc,
 }
 
+/// Borrowed per-rank count array for the embiggened (`_c`) v-collectives
+/// — the polymorphic count/displacement trick of ompi's
+/// `count_disp_array.h`: one entry point accepts either the classic
+/// `int[]` or the large-count `MPI_Count[]`, and the implementation
+/// widens lazily per element instead of copying the array.
+#[derive(Clone, Copy, Debug)]
+pub enum Counts<'a> {
+    /// Classic narrow `int[]` counts.
+    Int(&'a [i32]),
+    /// Large-count `MPI_Count[]` counts.
+    Count(&'a [crate::abi::types::Count]),
+}
+
+impl Counts<'_> {
+    /// Element `i`, widened to `MPI_Count`.
+    pub fn get(&self, i: usize) -> crate::abi::types::Count {
+        match self {
+            Counts::Int(v) => v[i] as crate::abi::types::Count,
+            Counts::Count(v) => v[i],
+        }
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        match self {
+            Counts::Int(v) => v.len(),
+            Counts::Count(v) => v.len(),
+        }
+    }
+
+    /// `true` when the array is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen into an owned `MPI_Count` vector (shim convenience).
+    pub fn to_counts(&self) -> Vec<crate::abi::types::Count> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+/// Borrowed per-rank displacement array for the embiggened (`_c`)
+/// v-collectives: classic `int[]` or address-width `MPI_Aint[]`.
+#[derive(Clone, Copy, Debug)]
+pub enum Displs<'a> {
+    /// Classic narrow `int[]` displacements.
+    Int(&'a [i32]),
+    /// Address-width `MPI_Aint[]` displacements (blocks beyond 2 GiB).
+    Aint(&'a [crate::abi::types::Aint]),
+}
+
+impl Displs<'_> {
+    /// Element `i`, widened to `MPI_Aint`.
+    pub fn get(&self, i: usize) -> crate::abi::types::Aint {
+        match self {
+            Displs::Int(v) => v[i] as crate::abi::types::Aint,
+            Displs::Aint(v) => v[i],
+        }
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        match self {
+            Displs::Int(v) => v.len(),
+            Displs::Aint(v) => v.len(),
+        }
+    }
+
+    /// `true` when the array is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Widen into an owned `MPI_Aint` vector (shim convenience).
+    pub fn to_aints(&self) -> Vec<crate::abi::types::Aint> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
 /// User reduction function in ABI `A`: `(invec, inoutvec, len, datatype)`.
 pub type UserOpFn<A> = fn(*const u8, *mut u8, i32, <A as MpiAbi>::Datatype);
 
@@ -244,6 +323,83 @@ pub trait MpiAbi: 'static {
     /// unlike `get_count` it resolves partial items of a derived type
     /// down to their basic leaves.
     fn get_elements(s: &Self::Status, dt: Self::Datatype) -> i32;
+
+    // --- Large-count (`MPI_Count`) entry points: the MPI-4 `_c` family.
+    // Counts are 64-bit everywhere; classic `int` entry points stay
+    // untouched and keep their MPI-4.1 truncation semantics
+    // (`MPI_UNDEFINED` when a count exceeds `int` range). ---
+    /// `MPI_Send_c`: standard-mode send with an `MPI_Count` count.
+    fn send_c(
+        buf: *const u8,
+        count: crate::abi::types::Count,
+        dt: Self::Datatype,
+        dest: i32,
+        tag: i32,
+        comm: Self::Comm,
+    ) -> i32;
+    /// `MPI_Recv_c`: receive with an `MPI_Count` count.
+    fn recv_c(
+        buf: *mut u8,
+        count: crate::abi::types::Count,
+        dt: Self::Datatype,
+        src: i32,
+        tag: i32,
+        comm: Self::Comm,
+        status: &mut Self::Status,
+    ) -> i32;
+    /// `MPI_Get_count_c`: received-item count as `MPI_Count` — never
+    /// truncates, so it round-trips transfers beyond `INT_MAX` items.
+    fn get_count_c(s: &Self::Status, dt: Self::Datatype, out: &mut crate::abi::types::Count)
+        -> i32;
+    /// `MPI_Get_elements_c`: basic-element count as `MPI_Count`.
+    fn get_elements_c(
+        s: &Self::Status,
+        dt: Self::Datatype,
+        out: &mut crate::abi::types::Count,
+    ) -> i32;
+    /// `MPI_Status_set_elements_c`: overwrite the status's element count
+    /// (exercised by layered libraries; also how a test synthesizes a
+    /// beyond-2-GiB status without a beyond-2-GiB transfer).
+    fn status_set_elements_c(
+        s: &mut Self::Status,
+        dt: Self::Datatype,
+        count: crate::abi::types::Count,
+    ) -> i32;
+    /// `MPI_Type_size_c`: datatype size as `MPI_Count`.
+    fn type_size_c(dt: Self::Datatype, out: &mut crate::abi::types::Count) -> i32;
+    /// `MPI_Type_contiguous_c`: contiguous constructor with an
+    /// `MPI_Count` count, for derived types whose logical payload
+    /// exceeds 2 GiB.
+    fn type_contiguous_c(
+        count: crate::abi::types::Count,
+        child: Self::Datatype,
+        out: &mut Self::Datatype,
+    ) -> i32;
+    /// `MPI_Type_vector_c`: vector constructor with `MPI_Count`
+    /// count/blocklength/stride — sparse multi-GiB extents under
+    /// bounded real memory.
+    fn type_vector_c(
+        count: crate::abi::types::Count,
+        blocklen: crate::abi::types::Count,
+        stride: crate::abi::types::Count,
+        child: Self::Datatype,
+        out: &mut Self::Datatype,
+    ) -> i32;
+    /// `MPI_Allgatherv_c`: embiggened allgatherv — per-rank counts as
+    /// [`Counts`] and displacements as [`Displs`] (polymorphic over the
+    /// classic `int[]` and the wide `MPI_Count[]`/`MPI_Aint[]` layouts,
+    /// à la ompi's `count_disp_array.h`).
+    #[allow(clippy::too_many_arguments)]
+    fn allgatherv_c(
+        sendbuf: *const u8,
+        sendcount: crate::abi::types::Count,
+        sendtype: Self::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: Counts<'_>,
+        displs: Displs<'_>,
+        recvtype: Self::Datatype,
+        comm: Self::Comm,
+    ) -> i32;
 
     // --- Communicators & groups ---
     /// `MPI_Comm_size`.

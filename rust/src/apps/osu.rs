@@ -122,6 +122,77 @@ pub fn latency<A: MpiAbi>(p: LatencyParams) -> f64 {
     lat
 }
 
+/// osu_bw parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BwParams {
+    /// Bytes per message.
+    pub msg_size: usize,
+    /// Nonblocking sends in flight per iteration (scaled down for large
+    /// messages by the caller to bound resident memory).
+    pub window: usize,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Untimed warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for BwParams {
+    fn default() -> Self {
+        BwParams { msg_size: 1 << 16, window: 64, iters: 100, warmup: 10 }
+    }
+}
+
+/// Uni-directional bandwidth in bytes/second (osu_bw analogue; valid on
+/// rank 0). Rank 0 streams `window` nonblocking sends per iteration and
+/// waits for a one-byte ack, so the wire — not the ack latency —
+/// dominates for large messages. This is the bench that crosses the
+/// eager→rendezvous threshold: the harness runs it once with the
+/// protocol pinned to eager and once pinned to rendezvous.
+pub fn bw<A: MpiAbi>(p: BwParams) -> f64 {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    assert!(n >= 2, "osu_bw needs 2 ranks");
+    let dt = A::datatype(Dt::Byte);
+    let world = A::comm_world();
+    let sbuf = vec![0x5Au8; p.msg_size];
+    let mut rbuf = vec![0u8; p.msg_size];
+    let ack = [1u8];
+    let mut ackbuf = [0u8];
+
+    let mut rate = 0.0;
+    if me == 0 {
+        let mut reqs = vec![A::request_null(); p.window];
+        let mut sts = vec![A::status_empty(); p.window];
+        let mut t0 = 0.0;
+        for iter in 0..(p.warmup + p.iters) {
+            if iter == p.warmup {
+                t0 = A::wtime();
+            }
+            for r in reqs.iter_mut() {
+                A::isend(sbuf.as_ptr(), p.msg_size as i32, dt, 1, 300, world, r);
+            }
+            A::waitall(&mut reqs, &mut sts);
+            let mut st = A::status_empty();
+            A::recv(ackbuf.as_mut_ptr(), 1, dt, 1, 301, world, &mut st);
+        }
+        let dt_s = A::wtime() - t0;
+        rate = (p.iters * p.window * p.msg_size) as f64 / dt_s;
+    } else if me == 1 {
+        let mut reqs = vec![A::request_null(); p.window];
+        let mut sts = vec![A::status_empty(); p.window];
+        for _ in 0..(p.warmup + p.iters) {
+            for r in reqs.iter_mut() {
+                A::irecv(rbuf.as_mut_ptr(), p.msg_size as i32, dt, 0, 300, world, r);
+            }
+            A::waitall(&mut reqs, &mut sts);
+            A::send(ack.as_ptr(), 1, dt, 0, 301, world);
+        }
+    }
+    A::barrier(world);
+    rate
+}
+
 /// The `MPI_Type_size` throughput micro-measurement of §6.1: mean
 /// nanoseconds per query over the builtin types. Pure representation
 /// decoding — requires no job.

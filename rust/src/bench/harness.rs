@@ -20,9 +20,16 @@
 //!
 //! Two modes: `--smoke` (seconds; the CI `bench-smoke` job) and
 //! `--full` (minutes; the numbers quoted in PR descriptions).
+//!
+//! A second grid, `--bandwidth`, sweeps an `osu_bw` analogue across
+//! message sizes (8 B → 256 MiB in `--full`) for every config ×
+//! transport, once with the protocol pinned to **eager**
+//! (`rndv_threshold = usize::MAX`) and once pinned to **rendezvous**
+//! (`rndv_threshold = 0`), so the committed `BENCH_PR6.json` shows the
+//! eager→rendezvous crossover the default 64 KiB threshold sits on.
 
 use crate::api::MpiAbi;
-use crate::apps::osu::{latency, mbw_mr, type_size_ns, LatencyParams, MbwMrParams};
+use crate::apps::osu::{bw, latency, mbw_mr, type_size_ns, BwParams, LatencyParams, MbwMrParams};
 use crate::apps::{with_abi, AbiApp, AbiConfig};
 use crate::core::transport::TransportKind;
 use crate::launcher::{run_job_ok, JobSpec};
@@ -393,6 +400,289 @@ fn check_grid(section: &str, benches: &[&str], label: &str, missing: &mut Vec<St
     }
 }
 
+// --- Bandwidth curve (`--bandwidth`, BENCH_PR6.json) ---
+
+/// The two protocol columns of the bandwidth grid: the same transfer
+/// with the switch pinned to each side of the threshold.
+pub const PROTOCOLS: [&str; 2] = ["eager", "rndv"];
+
+/// Message sizes of the bandwidth sweep: 8 B × powers of 4, capped at
+/// 512 KiB in smoke mode (still straddles the 64 KiB default threshold,
+/// so CI sees the crossover) and 256 MiB in full mode.
+pub fn bw_sizes(smoke: bool) -> Vec<usize> {
+    let max = if smoke { 512 * 1024 } else { 256 * 1024 * 1024 };
+    let mut v = vec![8usize];
+    while *v.last().unwrap() < max {
+        let next = v.last().unwrap() * 4;
+        v.push(next.min(max));
+    }
+    v
+}
+
+/// One measured point of the bandwidth curve.
+#[derive(Clone, Debug)]
+pub struct BwCell {
+    /// Message size in bytes.
+    pub size: usize,
+    /// ABI configuration name ([`AbiConfig::name`]).
+    pub config: &'static str,
+    /// Transport name ([`TransportKind::name`]).
+    pub transport: &'static str,
+    /// `"eager"` or `"rndv"` (one of [`PROTOCOLS`]).
+    pub protocol: &'static str,
+    /// Uni-directional bandwidth, MB/s (10^6 bytes per second).
+    pub mb_s: f64,
+}
+
+/// The bandwidth-sweep result behind `BENCH_PR6.json`.
+pub struct BwResult {
+    /// Mode the sweep was run in (`"smoke"` / `"full"`).
+    pub mode: &'static str,
+    /// The sizes swept (ascending).
+    pub sizes: Vec<usize>,
+    /// Every (size, config, transport, protocol) point.
+    pub cells: Vec<BwCell>,
+}
+
+impl BwResult {
+    fn mb_s(&self, size: usize, config: &str, transport: &str, protocol: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.size == size
+                    && c.config == config
+                    && c.transport == transport
+                    && c.protocol == protocol
+            })
+            .map(|c| c.mb_s)
+    }
+
+    /// Smallest swept size at which the rendezvous column meets or beats
+    /// eager for this (config, transport) — the measured crossover the
+    /// default `MPI_ABI_RNDV_THRESHOLD` should sit near. `None` if the
+    /// rendezvous column never wins within the sweep.
+    pub fn crossover(&self, config: &str, transport: &str) -> Option<usize> {
+        self.sizes.iter().copied().find(|&s| {
+            match (self.mb_s(s, config, transport, "rndv"), self.mb_s(s, config, transport, "eager"))
+            {
+                (Some(r), Some(e)) => r >= e,
+                _ => false,
+            }
+        })
+    }
+}
+
+/// One point of the sweep: best-of-`reps` bandwidth with the protocol
+/// pinned via the job's rendezvous threshold.
+struct BwRun {
+    transport: TransportKind,
+    msg_size: usize,
+    rndv_threshold: usize,
+    window: usize,
+    iters: usize,
+    warmup: usize,
+    reps: usize,
+}
+
+impl AbiApp<f64> for BwRun {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let mut best = 0.0f64;
+        for _ in 0..self.reps {
+            let spec = JobSpec::new(2)
+                .with_transport(self.transport)
+                .with_rndv_threshold(self.rndv_threshold);
+            let out = run_job_ok(spec, |_| {
+                A::init();
+                let r = bw::<A>(BwParams {
+                    msg_size: self.msg_size,
+                    window: self.window,
+                    iters: self.iters,
+                    warmup: self.warmup,
+                });
+                A::finalize();
+                r
+            });
+            best = best.max(out[0]);
+        }
+        best / 1e6 // bytes/s -> MB/s
+    }
+}
+
+/// Per-size iteration shaping: bound both the resident window
+/// (`window × size`) and the total bytes moved per measurement so the
+/// 256 MiB points do not dominate wall-clock or memory.
+fn bw_shape(size: usize, smoke: bool) -> (usize, usize, usize) {
+    let window_cap_bytes = 4 << 20; // 4 MiB of posted sends at once
+    let window = (window_cap_bytes / size).clamp(1, 64);
+    let target_bytes = if smoke { 8 << 20 } else { 512 << 20 };
+    let iters = (target_bytes / (size * window)).clamp(2, if smoke { 200 } else { 2000 });
+    let warmup = (iters / 10).max(1);
+    (window, iters, warmup)
+}
+
+/// Run the bandwidth sweep. Progress goes to stderr, one line per
+/// (size, config, transport) pair showing both protocol columns.
+pub fn run_bw_harness(opts: HarnessOpts) -> BwResult {
+    std::env::set_var("MPI_ABI_NO_XLA", "1");
+    let sizes = bw_sizes(opts.smoke);
+    let reps = if opts.smoke { 1 } else { 3 };
+    let mut cells = Vec::new();
+    for &size in &sizes {
+        let (window, iters, warmup) = bw_shape(size, opts.smoke);
+        for config in AbiConfig::ALL {
+            for transport in TRANSPORTS {
+                let mut row = [0.0f64; 2];
+                for (pi, protocol) in PROTOCOLS.into_iter().enumerate() {
+                    // Pin the protocol: eager = threshold no send can
+                    // exceed; rndv = threshold every nonempty send
+                    // exceeds.
+                    let threshold = if protocol == "eager" { usize::MAX } else { 0 };
+                    let mb_s = with_abi(
+                        config,
+                        BwRun {
+                            transport,
+                            msg_size: size,
+                            rndv_threshold: threshold,
+                            window,
+                            iters,
+                            warmup,
+                            reps,
+                        },
+                    );
+                    row[pi] = mb_s;
+                    cells.push(BwCell {
+                        size,
+                        config: config.name(),
+                        transport: transport.name(),
+                        protocol,
+                        mb_s,
+                    });
+                }
+                eprintln!(
+                    "  [abibench] bw {size:>10} B  {:<11} {:<5} eager {:>10.1} MB/s  rndv {:>10.1} MB/s",
+                    config.name(),
+                    transport.name(),
+                    row[0],
+                    row[1],
+                );
+            }
+        }
+    }
+    BwResult { mode: if opts.smoke { "smoke" } else { "full" }, sizes, cells }
+}
+
+fn bw_json_cell(c: &BwCell) -> String {
+    format!(
+        "    {{\"size\": {}, \"config\": \"{}\", \"transport\": \"{}\", \"protocol\": \"{}\", \"mb_s\": {:.2}}}",
+        c.size, c.config, c.transport, c.protocol, c.mb_s
+    )
+}
+
+/// Render the sweep as the `BENCH_PR6.json` document.
+pub fn bw_to_json(r: &BwResult) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"pr\": 6,\n");
+    out.push_str("  \"generated_by\": \"abibench --bandwidth\",\n");
+    out.push_str(&format!("  \"mode\": \"{}\",\n", r.mode));
+    out.push_str(&format!(
+        "  \"rndv_threshold_default\": {},\n",
+        crate::core::world::RNDV_THRESHOLD_DEFAULT
+    ));
+    out.push_str(&format!(
+        "  \"msg_sizes\": [{}],\n",
+        r.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"configs\": [{}],\n",
+        AbiConfig::ALL.map(|c| format!("\"{}\"", c.name())).join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"transports\": [{}],\n",
+        TRANSPORTS.map(|t| format!("\"{}\"", t.name())).join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"protocols\": [{}],\n",
+        PROTOCOLS.map(|p| format!("\"{p}\"")).join(", ")
+    ));
+    out.push_str("  \"cells\": [\n");
+    let lines: Vec<String> = r.cells.iter().map(bw_json_cell).collect();
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n  ],\n");
+    out.push_str("  \"crossover_bytes\": {\n");
+    let mut xs = Vec::new();
+    for config in AbiConfig::ALL {
+        for transport in TRANSPORTS {
+            let x = r
+                .crossover(config.name(), transport.name())
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "null".to_string());
+            xs.push(format!("    \"{}_{}\": {}", config.name(), transport.name(), x));
+        }
+    }
+    out.push_str(&xs.join(",\n"));
+    out.push_str("\n  }\n");
+    out.push_str("}\n");
+    out
+}
+
+/// Validate a previously written `BENCH_PR6.json`: the `msg_sizes`
+/// array is read back from the document itself, then every
+/// (size, config, transport, protocol) cell must be present with a
+/// finite bandwidth. The CI `bench-bandwidth` job runs this via
+/// `abibench --bandwidth --check` after regenerating the file.
+pub fn check_bw_json(doc: &str) -> Vec<String> {
+    let mut missing = Vec::new();
+    let sizes: Vec<usize> = match doc.find("\"msg_sizes\": [") {
+        Some(p) => {
+            let rest = &doc[p + "\"msg_sizes\": [".len()..];
+            match rest.find(']') {
+                Some(end) => rest[..end]
+                    .split(',')
+                    .filter_map(|s| s.trim().parse::<usize>().ok())
+                    .collect(),
+                None => Vec::new(),
+            }
+        }
+        None => Vec::new(),
+    };
+    if sizes.is_empty() {
+        missing.push("\"msg_sizes\" array with at least one size".to_string());
+        return missing;
+    }
+    for &size in &sizes {
+        for config in AbiConfig::ALL {
+            for transport in TRANSPORTS {
+                for protocol in PROTOCOLS {
+                    let needle = format!(
+                        "\"size\": {}, \"config\": \"{}\", \"transport\": \"{}\", \"protocol\": \"{}\", \"mb_s\": ",
+                        size,
+                        config.name(),
+                        transport.name(),
+                        protocol
+                    );
+                    match doc.find(&needle) {
+                        Some(pos) => {
+                            let rest = &doc[pos + needle.len()..];
+                            let num: String = rest
+                                .chars()
+                                .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+                                .collect();
+                            if num.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false) {
+                                continue;
+                            }
+                            missing.push(format!("{needle}<non-numeric>"));
+                        }
+                        None => missing.push(needle),
+                    }
+                }
+            }
+        }
+    }
+    missing
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,5 +759,83 @@ mod tests {
     fn smoke_grid_sizing_is_small() {
         let s = Sizing::of(HarnessOpts { smoke: true });
         assert!(s.lat_iters <= 1000 && s.reps == 1);
+    }
+
+    fn fake_bw_result(smoke: bool) -> BwResult {
+        let sizes = bw_sizes(smoke);
+        let mut cells = Vec::new();
+        for &size in &sizes {
+            for config in AbiConfig::ALL {
+                for transport in TRANSPORTS {
+                    for protocol in PROTOCOLS {
+                        // Synthetic curve: eager flat, rendezvous wins
+                        // from 128 KiB up.
+                        let mb_s = if protocol == "rndv" && size >= 128 * 1024 {
+                            2000.0
+                        } else if protocol == "rndv" {
+                            500.0
+                        } else {
+                            1000.0
+                        };
+                        cells.push(BwCell {
+                            size,
+                            config: config.name(),
+                            transport: transport.name(),
+                            protocol,
+                            mb_s,
+                        });
+                    }
+                }
+            }
+        }
+        BwResult { mode: if smoke { "smoke" } else { "full" }, sizes, cells }
+    }
+
+    #[test]
+    fn bw_sizes_span_the_threshold() {
+        for smoke in [true, false] {
+            let s = bw_sizes(smoke);
+            assert_eq!(s[0], 8);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "ascending: {s:?}");
+            // Both modes must straddle the default 64 KiB threshold.
+            assert!(s.iter().any(|&x| x < crate::core::world::RNDV_THRESHOLD_DEFAULT));
+            assert!(s.iter().any(|&x| x > crate::core::world::RNDV_THRESHOLD_DEFAULT));
+        }
+        assert_eq!(*bw_sizes(true).last().unwrap(), 512 * 1024);
+        assert_eq!(*bw_sizes(false).last().unwrap(), 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn bw_shape_bounds_resident_window() {
+        for &size in &bw_sizes(false) {
+            let (window, iters, warmup) = bw_shape(size, true);
+            assert!(window >= 1 && iters >= 2 && warmup >= 1);
+            // Never more than ~4 MiB of posted sends, except a single
+            // message that is itself larger.
+            assert!(window == 1 || window * size <= 4 << 20, "size {size} window {window}");
+        }
+    }
+
+    #[test]
+    fn bw_json_roundtrips_the_completeness_check() {
+        for smoke in [true, false] {
+            let doc = bw_to_json(&fake_bw_result(smoke));
+            assert!(check_bw_json(&doc).is_empty(), "generated bandwidth JSON must be complete");
+        }
+    }
+
+    #[test]
+    fn bw_check_flags_missing_cells() {
+        let doc = bw_to_json(&fake_bw_result(true));
+        let broken = doc.replacen("\"protocol\": \"rndv\"", "\"protocol\": \"gone\"", 1);
+        assert_eq!(check_bw_json(&broken).len(), 1);
+        assert!(check_bw_json("{}").len() == 1, "missing msg_sizes is structural");
+    }
+
+    #[test]
+    fn bw_crossover_finds_first_rndv_win() {
+        let r = fake_bw_result(true);
+        assert_eq!(r.crossover("abi", "spsc"), Some(128 * 1024));
+        assert_eq!(r.crossover("nope", "spsc"), None);
     }
 }

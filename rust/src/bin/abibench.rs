@@ -1,47 +1,68 @@
-//! `abibench` — the perf-grid runner (`BENCH_PR5.json`).
+//! `abibench` — the perf-grid runner (`BENCH_PR5.json` /
+//! `BENCH_PR6.json`).
 //!
 //! ```text
 //! cargo run --release --bin abibench -- [--smoke|--full] [--out PATH]
 //! cargo run --release --bin abibench -- --check [--out PATH]
+//! cargo run --release --bin abibench -- --bandwidth [--smoke|--full] [--out PATH]
+//! cargo run --release --bin abibench -- --bandwidth --check [--out PATH]
 //! ```
 //!
 //! Default mode is `--smoke` (CI-sized); `--full` is the mode whose
 //! numbers go into PR descriptions. `--check` validates an existing
-//! file instead of running: every (bench, config, transport) cell must
-//! be present with a finite number (exit code 1 otherwise).
+//! file instead of running: every grid cell must be present with a
+//! finite number (exit code 1 otherwise).
 //!
-//! `--out` defaults to `BENCH_PR5.json` **at the repo root** (resolved
-//! from the crate manifest, not the cwd), so running from `rust/`
-//! updates the committed artifact rather than leaving a stray copy.
+//! `--bandwidth` switches from the PR-5 latency/msgrate grid to the
+//! PR-6 bandwidth curve: an `osu_bw` analogue swept across message
+//! sizes for every config × transport, once pinned to the eager
+//! protocol and once pinned to rendezvous, so the artifact shows the
+//! eager→rendezvous crossover.
+//!
+//! `--out` defaults to `BENCH_PR5.json` (`BENCH_PR6.json` with
+//! `--bandwidth`) **at the repo root** (resolved from the crate
+//! manifest, not the cwd), so running from `rust/` updates the
+//! committed artifact rather than leaving a stray copy.
 
-use mpi_abi::bench::harness::{check_json, run_harness, to_json, HarnessOpts};
+use mpi_abi::bench::harness::{
+    bw_to_json, check_bw_json, check_json, run_bw_harness, run_harness, to_json, HarnessOpts,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut smoke = true;
     let mut check = false;
-    let mut out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json").to_string();
+    let mut bandwidth = false;
+    let mut out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--smoke" => smoke = true,
             "--full" => smoke = false,
             "--check" => check = true,
+            "--bandwidth" => bandwidth = true,
             "--out" => {
                 i += 1;
-                out = args.get(i).cloned().unwrap_or_else(|| {
+                out = Some(args.get(i).cloned().unwrap_or_else(|| {
                     eprintln!("--out needs a path");
                     std::process::exit(2);
-                });
+                }));
             }
             other => {
                 eprintln!("unknown argument {other}");
-                eprintln!("usage: abibench [--smoke|--full] [--out PATH] [--check]");
+                eprintln!("usage: abibench [--bandwidth] [--smoke|--full] [--out PATH] [--check]");
                 std::process::exit(2);
             }
         }
         i += 1;
     }
+    let out = out.unwrap_or_else(|| {
+        if bandwidth {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json").to_string()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json").to_string()
+        }
+    });
 
     if check {
         let doc = match std::fs::read_to_string(&out) {
@@ -51,9 +72,9 @@ fn main() {
                 std::process::exit(1);
             }
         };
-        let missing = check_json(&doc);
+        let missing = if bandwidth { check_bw_json(&doc) } else { check_json(&doc) };
         if missing.is_empty() {
-            println!("abibench --check: {out} complete (every bench/config/transport cell)");
+            println!("abibench --check: {out} complete (every grid cell present)");
             return;
         }
         eprintln!("abibench --check: {out} is missing {} cell(s):", missing.len());
@@ -61,6 +82,23 @@ fn main() {
             eprintln!("  {m}");
         }
         std::process::exit(1);
+    }
+
+    if bandwidth {
+        let result = run_bw_harness(HarnessOpts { smoke });
+        let doc = bw_to_json(&result);
+        if let Err(e) = std::fs::write(&out, &doc) {
+            eprintln!("abibench: cannot write {out}: {e}");
+            std::process::exit(1);
+        }
+        // Headline: where rendezvous starts winning on the native
+        // standard-ABI build, fast transport.
+        match result.crossover("abi", "spsc") {
+            Some(x) => println!("bandwidth   spsc abi: rendezvous wins from {x} B up"),
+            None => println!("bandwidth   spsc abi: eager won at every swept size"),
+        }
+        println!("wrote {out} ({} mode, {} cells)", result.mode, result.cells.len());
+        return;
     }
 
     let result = run_harness(HarnessOpts { smoke });

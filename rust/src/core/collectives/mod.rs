@@ -32,7 +32,7 @@ use super::comm::{advance_coll_tag, comm_snapshot};
 use super::request::{enqueue_send, progress};
 use super::transport::{Envelope, MsgKind, Payload};
 use super::world::{with_ctx, RankCtx};
-use super::{CommId, MpiError, RC, ReqId};
+use super::{err, CommId, DtId, MpiError, RC, ReqId};
 
 /// Snapshot of what a collective needs: members, my comm rank, the
 /// collective context id, and this collective's tag.
@@ -146,6 +146,77 @@ pub(crate) fn bcast_bytes_cc(ctx: &RankCtx, cc: &CollCtx, buf: &mut [u8], root: 
         let child_real = (child + root) % n;
         coll_send(ctx, cc, child_real, Payload::from_slice(buf));
     }
+}
+
+/// Engine-level `MPI_Allgatherv_c`: the embiggened allgatherv — per-rank
+/// receive counts as `MPI_Count` and displacements as `MPI_Aint` (in
+/// units of `recvtype` extent), so block `r` may start beyond 2 GiB.
+/// Linear exchange on the collective plane: every rank contributes
+/// `sendcount` items of `sendtype`; rank `r`'s block unpacks as
+/// `recvcounts[r]` items of `recvtype` at
+/// `recvbuf + displs[r] × extent(recvtype)`.
+#[allow(clippy::too_many_arguments)]
+pub fn allgatherv_c(
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[i64],
+    displs: &[isize],
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<()> {
+    with_ctx(|ctx| {
+        let cc = coll_begin(comm)?;
+        let n = cc.size();
+        if recvcounts.len() < n || displs.len() < n {
+            return Err(err!(MPI_ERR_COUNT));
+        }
+        if recvcounts.iter().take(n).any(|&c| c < 0) {
+            return Err(err!(MPI_ERR_COUNT));
+        }
+        let (_, rext) = super::datatype::type_get_extent(recvtype)?;
+        // Pack my contribution once; it both goes to every peer and
+        // lands in my own block locally.
+        let mine = {
+            let t = ctx.tables.borrow();
+            let mut v = Vec::new();
+            super::datatype::pack::pack(&t.dtypes, sendbuf, sendcount, sendtype, &mut v)?;
+            v
+        };
+        for r in 0..n {
+            if r != cc.my_rank {
+                coll_send(ctx, &cc, r, Payload::from_slice(&mine));
+            }
+        }
+        {
+            let t = ctx.tables.borrow();
+            let dst = unsafe { recvbuf.offset(displs[cc.my_rank] * rext) };
+            super::datatype::pack::unpack(
+                &t.dtypes,
+                &mine,
+                dst,
+                recvcounts[cc.my_rank] as usize,
+                recvtype,
+            )?;
+        }
+        for r in 0..n {
+            if r == cc.my_rank {
+                continue;
+            }
+            let p = coll_recv(ctx, &cc, r);
+            let t = ctx.tables.borrow();
+            let dst = unsafe { recvbuf.offset(displs[r] * rext) };
+            super::datatype::pack::unpack(
+                &t.dtypes,
+                p.as_slice(),
+                dst,
+                recvcounts[r] as usize,
+                recvtype,
+            )?;
+        }
+        Ok(())
+    })
 }
 
 /// Engine-internal: gather fixed-size byte blocks at `root`.

@@ -60,6 +60,121 @@ pub fn pack(
     Ok(())
 }
 
+/// Pack only the packed-stream byte window `[start, start + len)` of
+/// `count` items of `dt` at `ptr`, appending to `out`. This is the
+/// rendezvous chunk path: the sender materialises one chunk at a time,
+/// never the whole message. Returns `Ok(false)` when the type carries no
+/// cached plan (deep recursion) — the caller falls back to a one-shot
+/// full pack; every other type packs the window directly from the plan.
+pub fn pack_range(
+    dtypes: &Slab<DatatypeObj>,
+    ptr: *const u8,
+    count: usize,
+    dt: DtId,
+    start: usize,
+    len: usize,
+    out: &mut Vec<u8>,
+) -> RC<bool> {
+    let obj = dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+    let total = obj.size * count;
+    let end = (start + len).min(total);
+    if obj.size == 0 || start >= end {
+        return Ok(true);
+    }
+    let plan = match &obj.plan {
+        Some(p) => p,
+        None => return Ok(false),
+    };
+    out.reserve(end - start);
+    if plan_is_dense(plan, obj) {
+        let bytes = unsafe { std::slice::from_raw_parts(ptr.add(start), end - start) };
+        out.extend_from_slice(bytes);
+        return Ok(true);
+    }
+    // Walk only the items the window intersects; inside each item walk
+    // the plan with a running packed offset and copy the overlap.
+    let first_item = start / obj.size;
+    let last_item = (end - 1) / obj.size;
+    for i in first_item..=last_item {
+        let base = unsafe { ptr.offset(obj.extent * i as isize) };
+        let mut packed = i * obj.size; // packed offset of this segment's start
+        for &(off, seg_len) in plan {
+            let seg_start = packed.max(start);
+            let seg_end = (packed + seg_len).min(end);
+            if seg_start < seg_end {
+                let skip = seg_start - packed;
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        base.offset(off + skip as isize),
+                        seg_end - seg_start,
+                    )
+                };
+                out.extend_from_slice(bytes);
+            }
+            packed += seg_len;
+            if packed >= end {
+                return Ok(true);
+            }
+        }
+    }
+    Ok(true)
+}
+
+/// Scatter `data` into the packed-stream window starting at byte `start`
+/// of `count` items of `dt` at `ptr` — the receive half of the rendezvous
+/// chunk path. `data` beyond the type's total packed size is ignored (the
+/// caller accounts truncation). Returns `Ok(false)` when the type carries
+/// no cached plan; the caller then stages the stream and unpacks once at
+/// completion.
+pub fn unpack_range(
+    dtypes: &Slab<DatatypeObj>,
+    data: &[u8],
+    ptr: *mut u8,
+    count: usize,
+    dt: DtId,
+    start: usize,
+) -> RC<bool> {
+    let obj = dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+    let total = obj.size * count;
+    let end = (start + data.len()).min(total);
+    if obj.size == 0 || start >= end {
+        return Ok(true);
+    }
+    let plan = match &obj.plan {
+        Some(p) => p,
+        None => return Ok(false),
+    };
+    if plan_is_dense(plan, obj) {
+        unsafe { std::ptr::copy_nonoverlapping(data.as_ptr(), ptr.add(start), end - start) };
+        return Ok(true);
+    }
+    let first_item = start / obj.size;
+    let last_item = (end - 1) / obj.size;
+    for i in first_item..=last_item {
+        let base = unsafe { ptr.offset(obj.extent * i as isize) };
+        let mut packed = i * obj.size;
+        for &(off, seg_len) in plan {
+            let seg_start = packed.max(start);
+            let seg_end = (packed + seg_len).min(end);
+            if seg_start < seg_end {
+                let skip = seg_start - packed;
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        data.as_ptr().add(seg_start - start),
+                        base.offset(off + skip as isize),
+                        seg_end - seg_start,
+                    );
+                }
+            }
+            packed += seg_len;
+            if packed >= end {
+                return Ok(true);
+            }
+        }
+    }
+    Ok(true)
+}
+
 fn pack_one(
     dtypes: &Slab<DatatypeObj>,
     obj: &DatatypeObj,

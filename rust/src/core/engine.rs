@@ -167,6 +167,21 @@ fn pack_payload(ctx: &RankCtx, buf: *const u8, count: usize, dt: DtId) -> RC<Pay
     }
 }
 
+/// Whether a send of `count` items of `dt` must go rendezvous: packed
+/// size above this rank's eager/rendezvous threshold and non-empty.
+/// (With threshold 0 every non-empty message goes rendezvous; empty
+/// messages always stay eager — a zero-byte stream has nothing to
+/// stream.) Shared by `isend_impl`, `send_fast`, and the persistent
+/// start path so the protocol choice can never diverge between them.
+fn rndv_switch(ctx: &RankCtx, count: usize, dt: DtId) -> RC<bool> {
+    let total = {
+        let t = ctx.tables.borrow();
+        let obj = t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+        obj.size * count
+    };
+    Ok(total > 0 && total > ctx.state.borrow().rndv_threshold)
+}
+
 /// Validate and resolve a send's wire route — the **shared prelude** of
 /// the slab path (`isend_impl`, `send_init`) and the zero-alloc fast
 /// path (`send_fast`), so the `MPI_ERR_*` behavior of every path is one
@@ -213,6 +228,13 @@ fn isend_impl(
         return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
     let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
+    if rndv_switch(ctx, count, dt)? {
+        // Rendezvous covers synchronous mode for free: the CTS implies
+        // the receive matched, and the request completes only after the
+        // full stream is out.
+        let rndv = super::request::begin_rndv_send(ctx, dst_world, ctx_pt2pt, tag, buf, count, dt)?;
+        return Ok(new_request(ctx, ReqKind::RndvSend { rndv }, ReqState::Active));
+    }
     let payload = pack_payload(ctx, buf, count, dt)?;
     let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
     let env = Envelope {
@@ -304,6 +326,16 @@ fn send_fast(
         return Ok(());
     }
     let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
+    if rndv_switch(ctx, count, dt)? {
+        let rndv = super::request::begin_rndv_send(ctx, dst_world, ctx_pt2pt, tag, buf, count, dt)?;
+        // Spin until the stream drains (CTS received and every chunk
+        // enqueued) — the rendezvous analogue of the Ssend ack spin.
+        while super::request::rndv_send_active(ctx, rndv) {
+            progress(ctx);
+            std::thread::yield_now();
+        }
+        return Ok(());
+    }
     let payload = pack_payload(ctx, buf, count, dt)?;
     let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
     let mut env =
@@ -417,6 +449,27 @@ fn recv_fast(
     loop {
         let hit = ctx.state.borrow_mut().match_index.take_unexpected(ctx_pt2pt, src_match, tag);
         if let Some(env) = hit {
+            if let MsgKind::Rts { rndv, .. } = env.kind {
+                // Rendezvous: open the stream inline (no request) and
+                // spin until fully consumed into the user buffer.
+                let src_world = env.src;
+                super::request::begin_rndv_recv(ctx, None, &env, buf as usize, count, dt);
+                loop {
+                    if let Some(mut s) =
+                        super::request::take_rndv_status(ctx, src_world, rndv)
+                    {
+                        if let Some(r) = super::comm::comm_rank_of_world(comm, s.source)? {
+                            s.source = r;
+                        }
+                        if s.error != 0 {
+                            return Err(MpiError::new(s.error));
+                        }
+                        return Ok(s);
+                    }
+                    progress(ctx);
+                    std::thread::yield_now();
+                }
+            }
             let mut s = super::request::deliver_inline(ctx, env, buf as usize, count, dt);
             if let Some(r) = super::comm::comm_rank_of_world(comm, s.source)? {
                 s.source = r;
@@ -585,6 +638,19 @@ fn start_impl(ctx: &RankCtx, rid: ReqId) -> RC<()> {
                 arm_as(ctx, rid, ReqKind::Send, ReqState::Complete(StatusCore::empty()));
                 return Ok(());
             };
+            if rndv_switch(ctx, count, dt)? {
+                let rndv = super::request::begin_rndv_send(
+                    ctx,
+                    dst_world,
+                    context,
+                    tag,
+                    buf as *const u8,
+                    count,
+                    dt,
+                )?;
+                arm_as(ctx, rid, ReqKind::RndvSend { rndv }, ReqState::Active);
+                return Ok(());
+            }
             let payload = pack_payload(ctx, buf as *const u8, count, dt)?;
             let (msg_kind, seq, sync_id) = send_wire_ids(ctx, sync);
             let (req_kind, state) = match sync_id {
@@ -658,11 +724,9 @@ pub fn iprobe(src: i32, tag: i32, comm: CommId) -> RC<Option<StatusCore>> {
         let st = ctx.state.borrow();
         // Earliest-arrived match, straight from the unexpected index.
         if let Some(env) = st.match_index.peek_unexpected(ctx_pt2pt, src_match, tag) {
-            return Ok(Some(StatusCore::success(
-                env.src as i32,
-                env.tag,
-                env.payload.len() as u64,
-            )));
+            // `data_len`, not payload length: a probed RTS must report
+            // the announced message size, not its empty control payload.
+            return Ok(Some(StatusCore::success(env.src as i32, env.tag, env.data_len())));
         }
         Ok(None)
     })?;
@@ -848,7 +912,10 @@ pub fn testsome(rids: &[ReqId]) -> RC<Option<Vec<(usize, StatusCore)>>> {
     })
 }
 
-/// `MPI_Get_count`.
+/// `MPI_Get_count`. A true count above `i32::MAX` is not representable
+/// in the narrow `int` signature, so it reports `MPI_UNDEFINED` (MPI-4.1
+/// §3.2.5) — never a silently truncated value; `MPI_Get_count_c`
+/// ([`get_count_c`]) is the lossless query.
 pub fn get_count(status: &StatusCore, dt: DtId) -> RC<i32> {
     let size = super::datatype::type_size(dt)?;
     if size == 0 {
@@ -857,7 +924,24 @@ pub fn get_count(status: &StatusCore, dt: DtId) -> RC<i32> {
     if status.count_bytes % size as u64 != 0 {
         return Ok(MPI_UNDEFINED);
     }
-    Ok((status.count_bytes / size as u64) as i32)
+    let n = status.count_bytes / size as u64;
+    if n > i32::MAX as u64 {
+        return Ok(MPI_UNDEFINED);
+    }
+    Ok(n as i32)
+}
+
+/// `MPI_Get_count_c`: the embiggened count query — same divisibility
+/// rule as [`get_count`], full `MPI_Count` range.
+pub fn get_count_c(status: &StatusCore, dt: DtId) -> RC<i64> {
+    let size = super::datatype::type_size(dt)?;
+    if size == 0 {
+        return Ok(0);
+    }
+    if status.count_bytes % size as u64 != 0 {
+        return Ok(MPI_UNDEFINED as i64);
+    }
+    Ok((status.count_bytes / size as u64) as i64)
 }
 
 /// `MPI_Get_elements`: the number of *basic* elements received — unlike
@@ -865,6 +949,17 @@ pub fn get_count(status: &StatusCore, dt: DtId) -> RC<i32> {
 /// their leaves (pair types count as two elements). `MPI_UNDEFINED` only
 /// when the byte count splits a basic element.
 pub fn get_elements(status: &StatusCore, dt: DtId) -> RC<i32> {
+    let elems = get_elements_c(status, dt)?;
+    if elems == MPI_UNDEFINED as i64 || elems > i32::MAX as i64 {
+        // Above the narrow signature's range: MPI_UNDEFINED, same rule
+        // as `MPI_Get_count` (use `MPI_Get_elements_c` instead).
+        return Ok(MPI_UNDEFINED);
+    }
+    Ok(elems as i32)
+}
+
+/// `MPI_Get_elements_c`: the embiggened basic-element query.
+pub fn get_elements_c(status: &StatusCore, dt: DtId) -> RC<i64> {
     let leaves = super::datatype::leaf_sizes(dt)?;
     let item_size: usize = leaves.iter().sum();
     let bytes = status.count_bytes;
@@ -879,12 +974,12 @@ pub fn get_elements(status: &StatusCore, dt: DtId) -> RC<i32> {
             break;
         }
         if rem < l {
-            return Ok(MPI_UNDEFINED); // a basic element was split
+            return Ok(MPI_UNDEFINED as i64); // a basic element was split
         }
         rem -= l;
         elems += 1;
     }
-    Ok(elems as i32)
+    Ok(elems as i64)
 }
 
 // ---------------------------------------------------------------------------

@@ -40,6 +40,86 @@ use super::world::{with_ctx, RankCtx};
 use super::{err, DtId, ReqId, RC};
 use crate::abi::constants::MPI_PROC_NULL;
 
+/// Rendezvous chunk size in packed bytes: each [`MsgKind::RndvData`]
+/// envelope carries at most this much payload, so peak buffering for a
+/// transfer is `O(chunk × window)`, never `O(message)`.
+pub const RNDV_CHUNK: usize = 64 * 1024;
+
+/// Cumulative credit window: the receiver lets the sender run at most
+/// this many bytes ahead of what it has consumed.
+pub const RNDV_WINDOW_BYTES: u64 = 4 * RNDV_CHUNK as u64;
+
+/// Re-grant hysteresis: a fresh CTS goes out once remaining credit falls
+/// below this (half the window), keeping the pipe full without a CTS per
+/// chunk.
+const RNDV_REGRANT_BYTES: u64 = 2 * RNDV_CHUNK as u64;
+
+/// Sender side of one rendezvous stream, keyed by stream id in
+/// [`crate::core::world::RankState::rndv_sends`]. Created when a send
+/// exceeds the threshold (RTS goes out); chunks flow once CTS credit
+/// arrives; the entry leaves the map when the last chunk is enqueued —
+/// that departure *is* send completion.
+pub struct RndvSend {
+    /// Destination world rank.
+    pub dst: usize,
+    /// Context plane of the send.
+    pub context: u32,
+    /// Message tag.
+    pub tag: i32,
+    /// User buffer address (chunks are packed straight from it).
+    pub buf: usize,
+    /// Element count.
+    pub count: usize,
+    /// Element datatype.
+    pub dt: DtId,
+    /// Full packed size in bytes.
+    pub total: u64,
+    /// Cumulative bytes already enqueued to the fabric.
+    pub sent: u64,
+    /// Cumulative byte credit granted by the receiver (0 until CTS).
+    pub credit: u64,
+    /// Fallback for the rare plan-less (deeply recursive) type: the
+    /// whole message packed once up front, chunks sliced from it. Every
+    /// plan-carrying type streams windowed from the user buffer instead.
+    pub packed: Option<Vec<u8>>,
+}
+
+/// Receiver side of one rendezvous stream, keyed by
+/// `(sender world rank, stream id)` in
+/// [`crate::core::world::RankState::rndv_recvs`]. Created when an RTS
+/// matches a posted receive (or a blocking recv takes it unexpected);
+/// chunks scatter straight into the user buffer as they land.
+pub struct RndvRecv {
+    /// The receive request the stream completes — `None` for the
+    /// blocking-recv inline path, which polls [`take_rndv_status`].
+    pub rid: Option<ReqId>,
+    /// Destination user buffer address.
+    pub buf: usize,
+    /// Element count posted.
+    pub count: usize,
+    /// Element datatype posted.
+    pub dt: DtId,
+    /// Posted buffer capacity in packed bytes (beyond it = truncation).
+    pub cap: u64,
+    /// Full packed size announced by the RTS.
+    pub total: u64,
+    /// Cumulative stream bytes consumed.
+    pub received: u64,
+    /// Cumulative credit granted so far.
+    pub granted: u64,
+    /// Message tag (for the final status and CTS routing).
+    pub tag: i32,
+    /// Context plane.
+    pub context: u32,
+    /// Fallback staging for plan-less types: the stream accumulates
+    /// here and unpacks once at completion. Plan-carrying types scatter
+    /// each chunk directly and never allocate this.
+    pub staging: Option<Vec<u8>>,
+    /// Completion status, set when the stream finishes — only used by
+    /// the inline (`rid: None`) path.
+    pub status: Option<StatusCore>,
+}
+
 /// Implementation-independent status record. Each ABI converts this to its
 /// own status layout — the translation the paper's §3.2 catalogues.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -82,6 +162,13 @@ pub enum ReqKind {
     Ssend {
         /// Ack id the matching receive will echo back.
         sync_id: u64,
+    },
+    /// Rendezvous send (standard or synchronous — CTS implies the match,
+    /// so streaming out fully satisfies both): complete when stream
+    /// `rndv` leaves [`crate::core::world::RankState::rndv_sends`].
+    RndvSend {
+        /// This rank's stream id.
+        rndv: u64,
     },
     /// Posted receive.
     Recv {
@@ -245,6 +332,7 @@ pub(crate) fn progress(ctx: &RankCtx) {
     }
     flush_pending_sends(ctx);
     drain_fabric(ctx);
+    pump_rndv_sends(ctx);
     super::rma::progress_rma(ctx);
     super::collectives::sched::progress_scheds(ctx);
 }
@@ -285,8 +373,10 @@ fn drain_fabric(ctx: &RankCtx) {
     ctx.state.borrow_mut().inbox = inbox;
 }
 
-/// Route one arrival: acks feed the Ssend ack set; data envelopes match
-/// against the posted side or land in the unexpected index.
+/// Route one arrival: acks feed the Ssend ack set; CTS credits feed the
+/// sender's streams; chunks feed the receiver's streams; matchable
+/// envelopes (eager, eager-sync, RTS) match against the posted side or
+/// land in the unexpected index.
 fn route_arrival(ctx: &RankCtx, env: Envelope) {
     let matched = {
         let mut st = ctx.state.borrow_mut();
@@ -295,7 +385,22 @@ fn route_arrival(ctx: &RankCtx, env: Envelope) {
                 st.ssend_acks.insert(env.seq);
                 return;
             }
-            MsgKind::Eager | MsgKind::EagerSync => st.match_index.arrive(env),
+            MsgKind::Cts { rndv, credit } => {
+                if let Some(s) = st.rndv_sends.get_mut(&rndv) {
+                    if credit > s.credit {
+                        s.credit = credit;
+                    }
+                }
+                return;
+            }
+            MsgKind::RndvData { rndv, offset } => {
+                drop(st);
+                rndv_data_arrive(ctx, env.src, rndv, offset, env.payload);
+                return;
+            }
+            MsgKind::Eager | MsgKind::EagerSync | MsgKind::Rts { .. } => {
+                st.match_index.arrive(env)
+            }
         }
     };
     if let Some((rid, env)) = matched {
@@ -303,7 +408,9 @@ fn route_arrival(ctx: &RankCtx, env: Envelope) {
     }
 }
 
-/// Copy a matched message into the receive buffer and complete the request.
+/// Copy a matched message into the receive buffer and complete the
+/// request — or, for a matched RTS, open the rendezvous stream that will
+/// complete it once fully consumed.
 fn deliver(ctx: &RankCtx, rid: ReqId, env: Envelope) {
     let (buf, count, dt) = {
         let t = ctx.tables.borrow();
@@ -311,6 +418,10 @@ fn deliver(ctx: &RankCtx, rid: ReqId, env: Envelope) {
         let ReqKind::Recv { buf, count, dt, .. } = req.kind else { return };
         (buf, count, dt)
     };
+    if matches!(env.kind, MsgKind::Rts { .. }) {
+        begin_rndv_recv(ctx, Some(rid), &env, buf, count, dt);
+        return;
+    }
     let status = deliver_inline(ctx, env, buf, count, dt);
     if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
         req.state = ReqState::Complete(status);
@@ -359,6 +470,343 @@ pub(crate) fn deliver_inline(
     status
 }
 
+/// Open a rendezvous send: file the stream state and post the RTS (which
+/// travels the ordinary channel, so it keeps FIFO order with eager
+/// traffic on the same `(context, src, tag)`). Returns the stream id the
+/// request completes on. Chunks start flowing when the receiver's CTS
+/// lands — until then nothing but the control envelope is buffered
+/// (except for plan-less types, which pre-pack once as a fallback).
+pub(crate) fn begin_rndv_send(
+    ctx: &RankCtx,
+    dst: usize,
+    context: u32,
+    tag: i32,
+    buf: *const u8,
+    count: usize,
+    dt: DtId,
+) -> RC<u64> {
+    let (total, has_plan) = {
+        let t = ctx.tables.borrow();
+        let obj = t.dtypes.get(dt.0).ok_or(err!(MPI_ERR_TYPE))?;
+        ((obj.size * count) as u64, obj.plan.is_some())
+    };
+    let packed = if has_plan {
+        None
+    } else {
+        let t = ctx.tables.borrow();
+        let mut v = Vec::with_capacity(total as usize);
+        super::datatype::pack::pack(&t.dtypes, buf, count, dt, &mut v)?;
+        Some(v)
+    };
+    let (rndv, seq) = {
+        let mut st = ctx.state.borrow_mut();
+        let rndv = st.next_rndv_id;
+        st.next_rndv_id += 1;
+        let seq = st.send_seq;
+        st.send_seq += 1;
+        st.rndv_sends.insert(
+            rndv,
+            RndvSend {
+                dst,
+                context,
+                tag,
+                buf: buf as usize,
+                count,
+                dt,
+                total,
+                sent: 0,
+                credit: 0,
+                packed,
+            },
+        );
+        (rndv, seq)
+    };
+    let rts = Envelope {
+        src: ctx.rank as u32,
+        context,
+        tag,
+        kind: MsgKind::Rts { total, rndv },
+        seq,
+        payload: Payload::empty(),
+    };
+    enqueue_send(ctx, dst, rts);
+    Ok(rndv)
+}
+
+/// Whether outbound rendezvous stream `rndv` is still in flight (the
+/// blocking-send spin condition; nonblocking sends check it via
+/// [`finish_if_done`]).
+pub(crate) fn rndv_send_active(ctx: &RankCtx, rndv: u64) -> bool {
+    ctx.state.borrow().rndv_sends.contains_key(&rndv)
+}
+
+/// Advance every outbound rendezvous stream: pack and enqueue chunks up
+/// to the granted credit. A destination with parked traffic is skipped
+/// this tick (its queue drains first — and other destinations' streams
+/// keep flowing, so chunk backpressure never head-of-line-blocks). A
+/// stream whose last chunk is enqueued is removed — that completes the
+/// send request.
+fn pump_rndv_sends(ctx: &RankCtx) {
+    let ids: Vec<u64> = {
+        let st = ctx.state.borrow();
+        if st.rndv_sends.is_empty() {
+            return;
+        }
+        st.rndv_sends.keys().copied().collect()
+    };
+    for rndv in ids {
+        loop {
+            // Decide the next chunk (or stop) under a short borrow.
+            let step = {
+                let st = ctx.state.borrow();
+                let Some(s) = st.rndv_sends.get(&rndv) else { break };
+                if st.pending_sends.contains_key(&s.dst) {
+                    None // destination parked; retry next progress tick
+                } else {
+                    let limit = s.total.min(s.credit);
+                    if s.sent >= limit {
+                        None
+                    } else {
+                        let len = ((limit - s.sent).min(RNDV_CHUNK as u64)) as usize;
+                        Some((s.dst, s.context, s.tag, s.buf, s.count, s.dt, s.sent, len))
+                    }
+                }
+            };
+            let Some((dst, context, tag, buf, count, dt, sent, len)) = step else { break };
+            let payload = {
+                let st = ctx.state.borrow();
+                let s = st.rndv_sends.get(&rndv).unwrap();
+                if let Some(p) = &s.packed {
+                    Payload::from_slice(&p[sent as usize..sent as usize + len])
+                } else {
+                    let t = ctx.tables.borrow();
+                    let mut v = Vec::with_capacity(len);
+                    let planned = super::datatype::pack::pack_range(
+                        &t.dtypes,
+                        buf as *const u8,
+                        count,
+                        dt,
+                        sent as usize,
+                        len,
+                        &mut v,
+                    )
+                    .unwrap_or(false);
+                    debug_assert!(planned, "plan-less types pre-pack at begin_rndv_send");
+                    Payload::from_vec(v)
+                }
+            };
+            let env = Envelope {
+                src: ctx.rank as u32,
+                context,
+                tag,
+                kind: MsgKind::RndvData { rndv, offset: sent },
+                seq: 0,
+                payload,
+            };
+            enqueue_send(ctx, dst, env);
+            ctx.world.note_rndv_enqueue(len as u64);
+            let mut st = ctx.state.borrow_mut();
+            if let Some(s) = st.rndv_sends.get_mut(&rndv) {
+                s.sent += len as u64;
+                if s.sent >= s.total {
+                    st.rndv_sends.remove(&rndv); // send complete
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Open the receive side of a rendezvous stream from a matched RTS:
+/// file the stream state and grant the initial credit window. `rid:
+/// None` is the blocking-recv inline path (poll [`take_rndv_status`]).
+pub(crate) fn begin_rndv_recv(
+    ctx: &RankCtx,
+    rid: Option<ReqId>,
+    env: &Envelope,
+    buf: usize,
+    count: usize,
+    dt: DtId,
+) {
+    let MsgKind::Rts { total, rndv } = env.kind else { return };
+    if total == 0 {
+        // Defensive: senders never open a zero-byte stream (empty
+        // messages stay eager), but complete cleanly if one appears.
+        let status = StatusCore::success(env.src as i32, env.tag, 0);
+        match rid {
+            Some(rid) => {
+                if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
+                    req.state = ReqState::Complete(status);
+                }
+            }
+            None => {
+                let mut st = ctx.state.borrow_mut();
+                st.rndv_recvs.insert(
+                    (env.src, rndv),
+                    RndvRecv {
+                        rid: None,
+                        buf,
+                        count,
+                        dt,
+                        cap: 0,
+                        total: 0,
+                        received: 0,
+                        granted: 0,
+                        tag: env.tag,
+                        context: env.context,
+                        staging: None,
+                        status: Some(status),
+                    },
+                );
+            }
+        }
+        return;
+    }
+    let (cap, has_plan) = {
+        let t = ctx.tables.borrow();
+        t.dtypes
+            .get(dt.0)
+            .map(|o| ((o.size * count) as u64, o.plan.is_some()))
+            .unwrap_or((0, true))
+    };
+    let staging = if has_plan { None } else { Some(vec![0u8; total.min(cap) as usize]) };
+    let granted = total.min(RNDV_WINDOW_BYTES);
+    ctx.state.borrow_mut().rndv_recvs.insert(
+        (env.src, rndv),
+        RndvRecv {
+            rid,
+            buf,
+            count,
+            dt,
+            cap,
+            total,
+            received: 0,
+            granted,
+            tag: env.tag,
+            context: env.context,
+            staging,
+            status: None,
+        },
+    );
+    let cts = Envelope {
+        src: ctx.rank as u32,
+        context: env.context,
+        tag: env.tag,
+        kind: MsgKind::Cts { rndv, credit: granted },
+        seq: 0,
+        payload: Payload::empty(),
+    };
+    enqueue_send(ctx, env.src as usize, cts);
+}
+
+/// Consume one rendezvous chunk: scatter it into the user buffer (or
+/// staging) at its packed offset, re-grant credit when the window runs
+/// low, and complete the receive when the stream is fully consumed.
+fn rndv_data_arrive(ctx: &RankCtx, src: u32, rndv: u64, offset: u64, payload: Payload) {
+    let len = payload.len() as u64;
+    ctx.world.note_rndv_consume(len);
+    enum After {
+        Nothing,
+        Regrant { dst: usize, context: u32, tag: i32, credit: u64 },
+        Complete {
+            rid: Option<ReqId>,
+            staging: Option<Vec<u8>>,
+            buf: usize,
+            count: usize,
+            dt: DtId,
+            status: StatusCore,
+        },
+    }
+    let after = {
+        let mut st = ctx.state.borrow_mut();
+        // Unknown stream (request freed mid-stream): drop the chunk.
+        let Some(r) = st.rndv_recvs.get_mut(&(src, rndv)) else { return };
+        let data = payload.as_slice();
+        let take = if offset < r.cap { ((r.cap - offset).min(len)) as usize } else { 0 };
+        if take > 0 {
+            if let Some(stg) = &mut r.staging {
+                stg[offset as usize..offset as usize + take].copy_from_slice(&data[..take]);
+            } else {
+                let t = ctx.tables.borrow();
+                let _ = super::datatype::pack::unpack_range(
+                    &t.dtypes,
+                    &data[..take],
+                    r.buf as *mut u8,
+                    r.count,
+                    r.dt,
+                    offset as usize,
+                );
+            }
+        }
+        r.received += len;
+        if r.received >= r.total {
+            let mut status = StatusCore::success(src as i32, r.tag, r.total.min(r.cap));
+            if r.total > r.cap {
+                status.error = crate::abi::errors::MPI_ERR_TRUNCATE;
+            }
+            let staging = r.staging.take();
+            let (rid, buf, count, dt) = (r.rid, r.buf, r.count, r.dt);
+            if rid.is_some() {
+                st.rndv_recvs.remove(&(src, rndv));
+            }
+            After::Complete { rid, staging, buf, count, dt, status }
+        } else if r.granted < r.total && r.granted - r.received < RNDV_REGRANT_BYTES {
+            let credit = r.total.min(r.received + RNDV_WINDOW_BYTES);
+            r.granted = credit;
+            After::Regrant { dst: src as usize, context: r.context, tag: r.tag, credit }
+        } else {
+            After::Nothing
+        }
+    };
+    match after {
+        After::Nothing => {}
+        After::Regrant { dst, context, tag, credit } => {
+            let cts = Envelope {
+                src: ctx.rank as u32,
+                context,
+                tag,
+                kind: MsgKind::Cts { rndv, credit },
+                seq: 0,
+                payload: Payload::empty(),
+            };
+            enqueue_send(ctx, dst, cts);
+        }
+        After::Complete { rid, staging, buf, count, dt, mut status } => {
+            if let Some(stg) = staging {
+                // Plan-less fallback: one-shot scatter of the staged stream.
+                let t = ctx.tables.borrow();
+                let consumed =
+                    super::datatype::pack::unpack(&t.dtypes, &stg, buf as *mut u8, count, dt)
+                        .unwrap_or(0);
+                status.count_bytes = consumed as u64;
+            }
+            match rid {
+                Some(rid) => {
+                    if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
+                        req.state = ReqState::Complete(status);
+                    }
+                }
+                None => {
+                    if let Some(r) = ctx.state.borrow_mut().rndv_recvs.get_mut(&(src, rndv)) {
+                        r.status = Some(status);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Poll-and-take the completion status of an inline (no-request)
+/// rendezvous receive — the blocking-recv spin partner of
+/// [`begin_rndv_recv`] with `rid: None`.
+pub(crate) fn take_rndv_status(ctx: &RankCtx, src: u32, rndv: u64) -> Option<StatusCore> {
+    let mut st = ctx.state.borrow_mut();
+    if st.rndv_recvs.get(&(src, rndv)).is_some_and(|r| r.status.is_some()) {
+        return st.rndv_recvs.remove(&(src, rndv)).and_then(|r| r.status);
+    }
+    None
+}
+
 /// Send an envelope, preserving per-destination FIFO even under
 /// backpressure (a destination's deferred envelopes drain before new
 /// ones to it; other destinations are unaffected).
@@ -392,6 +840,7 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
         Done(StatusCore),
         Pending,
         CheckSsend(u64),
+        CheckRndv(u64),
     }
     let next = {
         let t = ctx.tables.borrow();
@@ -400,6 +849,7 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
             (ReqState::Complete(s), _) => Next::Done(*s),
             (ReqState::Inactive, _) => Next::Done(StatusCore::empty()),
             (ReqState::Active, ReqKind::Ssend { sync_id }) => Next::CheckSsend(*sync_id),
+            (ReqState::Active, ReqKind::RndvSend { rndv }) => Next::CheckRndv(*rndv),
             (ReqState::Active, _) => Next::Pending,
         }
     };
@@ -415,6 +865,16 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
                 Ok(Some(s))
             } else {
                 Ok(None)
+            }
+        }
+        Next::CheckRndv(rndv) => {
+            if rndv_send_active(ctx, rndv) {
+                Ok(None)
+            } else {
+                let s = StatusCore::empty();
+                ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
+                    ReqState::Complete(s);
+                Ok(Some(s))
             }
         }
     }
@@ -480,7 +940,12 @@ pub fn cancel(rid: ReqId) -> RC<()> {
             let req = t.reqs.get(rid.0).ok_or(err!(MPI_ERR_REQUEST))?;
             matches!(req.kind, ReqKind::Recv { .. }) && req.state == ReqState::Active
         };
-        if is_recv_pending {
+        // A receive bound to an in-flight rendezvous stream has already
+        // matched — MPI semantics say it must complete normally, so
+        // cancel is a no-op for it (same as a matched eager receive).
+        let rndv_bound =
+            ctx.state.borrow().rndv_recvs.values().any(|r| r.rid == Some(rid));
+        if is_recv_pending && !rndv_bound {
             ctx.state.borrow_mut().match_index.withdraw(rid);
             let mut t = ctx.tables.borrow_mut();
             let req = t.reqs.get_mut(rid.0).unwrap();

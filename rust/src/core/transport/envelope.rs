@@ -98,6 +98,34 @@ pub enum MsgKind {
     EagerSync,
     /// Ack for an `EagerSync`; `tag` carries the sender's sync sequence.
     SsendAck,
+    /// Rendezvous request-to-send: a *matchable* control envelope standing
+    /// in for a large message. Carries no payload — `total` is the full
+    /// packed byte count (what probe reports) and `rndv` identifies the
+    /// stream. The receiver answers with [`MsgKind::Cts`] once a receive
+    /// matches it.
+    Rts {
+        /// Full packed size of the message this RTS announces.
+        total: u64,
+        /// Sender-local stream id; `(src, rndv)` is globally unique.
+        rndv: u64,
+    },
+    /// Clear-to-send (receiver → sender): the receive matched, stream up
+    /// to `credit` cumulative bytes. Never enters the matching index.
+    Cts {
+        /// Stream id from the RTS being answered.
+        rndv: u64,
+        /// Cumulative byte credit granted (bounds in-flight chunks).
+        credit: u64,
+    },
+    /// One payload chunk of rendezvous stream `rndv`, covering packed
+    /// bytes `[offset, offset + payload.len())`. Never enters the
+    /// matching index — routed straight into the posted user buffer.
+    RndvData {
+        /// Stream id.
+        rndv: u64,
+        /// Packed-stream byte offset of this chunk.
+        offset: u64,
+    },
 }
 
 /// A message in flight between two ranks.
@@ -124,9 +152,21 @@ impl Envelope {
     pub fn matches(&self, context: u32, src: i32, tag: i32) -> bool {
         use crate::abi::constants::{MPI_ANY_SOURCE, MPI_ANY_TAG};
         self.context == context
-            && matches!(self.kind, MsgKind::Eager | MsgKind::EagerSync)
+            && matches!(self.kind, MsgKind::Eager | MsgKind::EagerSync | MsgKind::Rts { .. })
             && (src == MPI_ANY_SOURCE || self.src == src as u32)
             && (tag == MPI_ANY_TAG || self.tag == tag)
+    }
+
+    /// Logical message size in bytes: what `MPI_Get_count` on a probe
+    /// status must report. For an RTS this is the announced total (the
+    /// control envelope itself carries no payload); for everything else
+    /// it is the payload length.
+    #[inline]
+    pub fn data_len(&self) -> u64 {
+        match self.kind {
+            MsgKind::Rts { total, .. } => total,
+            _ => self.payload.len() as u64,
+        }
     }
 }
 
@@ -201,5 +241,34 @@ mod tests {
         let mut e = env(1, 7, 5);
         e.kind = MsgKind::SsendAck;
         assert!(!e.matches(7, MPI_ANY_SOURCE, MPI_ANY_TAG));
+    }
+
+    #[test]
+    fn rts_matches_like_eager() {
+        let mut e = env(3, 7, 42);
+        e.kind = MsgKind::Rts { total: 1 << 30, rndv: 9 };
+        assert!(e.matches(7, 3, 42));
+        assert!(e.matches(7, MPI_ANY_SOURCE, MPI_ANY_TAG));
+        assert!(!e.matches(8, 3, 42));
+        assert!(!e.matches(7, 3, 41));
+    }
+
+    #[test]
+    fn cts_and_chunks_never_match_recvs() {
+        let mut e = env(1, 7, 5);
+        e.kind = MsgKind::Cts { rndv: 1, credit: 4096 };
+        assert!(!e.matches(7, MPI_ANY_SOURCE, MPI_ANY_TAG));
+        e.kind = MsgKind::RndvData { rndv: 1, offset: 0 };
+        assert!(!e.matches(7, MPI_ANY_SOURCE, MPI_ANY_TAG));
+    }
+
+    #[test]
+    fn data_len_reports_announced_total_for_rts() {
+        let mut e = env(0, 7, 1);
+        e.kind = MsgKind::Rts { total: 5 << 20, rndv: 2 };
+        assert_eq!(e.data_len(), 5 << 20, "probe must see the full size, not the control payload");
+        e.kind = MsgKind::Eager;
+        e.payload = Payload::from_slice(&[0u8; 12]);
+        assert_eq!(e.data_len(), 12);
     }
 }

@@ -59,6 +59,32 @@ pub struct World {
     /// zero-alloc fast paths — the perf baseline the benches regress
     /// against. Read once per rank at bind time.
     flat_match: AtomicBool,
+    /// Eager/rendezvous switch point in packed bytes
+    /// (`MPI_ABI_RNDV_THRESHOLD` or
+    /// [`crate::launcher::JobSpec::with_rndv_threshold`]): sends whose
+    /// packed size exceeds this go RTS/CTS + chunk streaming instead of
+    /// one eager envelope. Read once per rank at bind time.
+    rndv_threshold: AtomicUsize,
+    /// Payload bytes currently in flight inside rendezvous chunks,
+    /// job-wide (incremented at chunk enqueue, decremented at consume).
+    rndv_inflight: AtomicU64,
+    /// High-water mark of `rndv_inflight` — what `tests/rendezvous.rs`
+    /// asserts stays bounded by the chunk window, not the message size.
+    rndv_inflight_peak: AtomicU64,
+}
+
+/// Eager/rendezvous switch point when neither the env var nor the job
+/// spec overrides it: 64 KiB, the classic network-eager cutoff.
+pub const RNDV_THRESHOLD_DEFAULT: usize = 64 * 1024;
+
+/// Read `MPI_ABI_RNDV_THRESHOLD` (packed bytes; `0` forces rendezvous
+/// for every non-empty message), falling back to
+/// [`RNDV_THRESHOLD_DEFAULT`].
+pub fn rndv_threshold_env() -> usize {
+    match std::env::var("MPI_ABI_RNDV_THRESHOLD") {
+        Ok(v) => v.trim().parse().unwrap_or(RNDV_THRESHOLD_DEFAULT),
+        Err(_) => RNDV_THRESHOLD_DEFAULT,
+    }
 }
 
 impl World {
@@ -93,6 +119,9 @@ impl World {
             sched_builds: AtomicU64::new(0),
             psets,
             flat_match: AtomicBool::new(super::match_index::flat_match_env()),
+            rndv_threshold: AtomicUsize::new(rndv_threshold_env()),
+            rndv_inflight: AtomicU64::new(0),
+            rndv_inflight_peak: AtomicU64::new(0),
         })
     }
 
@@ -106,6 +135,37 @@ impl World {
     /// Whether ranks of this world use the flat-baseline matcher.
     pub fn flat_match(&self) -> bool {
         self.flat_match.load(Ordering::SeqCst)
+    }
+
+    /// Override the eager/rendezvous switch point for ranks bound after
+    /// this call (tests and benches that force one protocol without
+    /// racing on the process-global env var). `0` forces rendezvous for
+    /// every non-empty message.
+    pub fn set_rndv_threshold(&self, bytes: usize) {
+        self.rndv_threshold.store(bytes, Ordering::SeqCst);
+    }
+
+    /// The eager/rendezvous switch point (packed bytes) for this world.
+    pub fn rndv_threshold(&self) -> usize {
+        self.rndv_threshold.load(Ordering::SeqCst)
+    }
+
+    /// Account `bytes` of rendezvous chunk payload entering the fabric.
+    pub(crate) fn note_rndv_enqueue(&self, bytes: u64) {
+        let now = self.rndv_inflight.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.rndv_inflight_peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    /// Account `bytes` of rendezvous chunk payload consumed at a receiver.
+    pub(crate) fn note_rndv_consume(&self, bytes: u64) {
+        self.rndv_inflight.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    /// High-water mark of rendezvous payload bytes simultaneously in
+    /// flight — the bounded-buffering witness: for a chunked transfer
+    /// this stays near `chunk × window`, never near the message size.
+    pub fn rndv_inflight_peak(&self) -> u64 {
+        self.rndv_inflight_peak.load(Ordering::SeqCst)
     }
 
     /// The launcher-provided process sets (name, member world ranks).
@@ -204,10 +264,21 @@ pub struct RankState {
     /// Requests backed by in-flight collective schedules, advanced each
     /// progress cycle (see [`crate::core::collectives::sched`]).
     pub active_scheds: Vec<super::ReqId>,
+    /// Outbound rendezvous streams, keyed by this rank's stream id.
+    /// A send request completes when its id leaves this map.
+    pub rndv_sends: FxHashMap<u64, super::request::RndvSend>,
+    /// Inbound rendezvous streams, keyed by `(sender world rank, stream id)`.
+    pub rndv_recvs: FxHashMap<(u32, u64), super::request::RndvRecv>,
+    /// Next outbound rendezvous stream id (per-rank monotone; the pair
+    /// with the sender's world rank is globally unique).
+    pub next_rndv_id: u64,
+    /// This rank's eager/rendezvous switch point, copied from the world
+    /// at bind time (same pattern as the flat-match flag).
+    pub rndv_threshold: usize,
 }
 
 impl RankState {
-    fn new(flat_match: bool) -> RankState {
+    fn new(flat_match: bool, rndv_threshold: usize) -> RankState {
         RankState {
             match_index: MatchIndex::with_mode(flat_match),
             pending_sends: FxHashMap::default(),
@@ -216,6 +287,10 @@ impl RankState {
             send_seq: 0,
             inbox: Vec::with_capacity(64),
             active_scheds: Vec::new(),
+            rndv_sends: FxHashMap::default(),
+            rndv_recvs: FxHashMap::default(),
+            next_rndv_id: 1,
+            rndv_threshold,
         }
     }
 }
@@ -276,11 +351,12 @@ thread_local! {
 pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
     assert!(rank < world.size, "rank {rank} out of bounds");
     let flat_match = world.flat_match();
+    let rndv_threshold = world.rndv_threshold();
     let ctx = Rc::new(RankCtx {
         world,
         rank,
         tables: RefCell::new(init_tables()),
-        state: RefCell::new(RankState::new(flat_match)),
+        state: RefCell::new(RankState::new(flat_match, rndv_threshold)),
         initialized: Cell::new(false),
         finalized: Cell::new(false),
         active_inits: Cell::new(0),

@@ -9,8 +9,8 @@
 
 use std::marker::PhantomData;
 
-use crate::abi::types::Aint;
-use crate::api::{AttrCopyFn, AttrDeleteFn, Dt, ErrhFn, MpiAbi, OpName, UserOpFn};
+use crate::abi::types::{Aint, Count};
+use crate::api::{AttrCopyFn, AttrDeleteFn, Counts, Displs, Dt, ErrhFn, MpiAbi, OpName, UserOpFn};
 use crate::core::request::StatusCore;
 use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op, rma,
     session};
@@ -644,6 +644,11 @@ impl<R: Repr> MpiAbi for Backed<R> {
         let bytes = R::status_count_bytes(s);
         if bytes % size as u64 != 0 {
             R::c_undefined()
+        } else if bytes / size as u64 > i32::MAX as u64 {
+            // MPI-4.1 §3.2.5: the count does not fit in an `int` — the
+            // classic entry point reports MPI_UNDEFINED; `get_count_c`
+            // is the lossless path.
+            R::c_undefined()
         } else {
             (bytes / size as u64) as i32
         }
@@ -658,6 +663,176 @@ impl<R: Repr> MpiAbi for Backed<R> {
             Ok(v) => v,
             Err(_) => R::c_undefined(),
         }
+    }
+
+    fn send_c(buf: *const u8, count: Count, dt: R::Datatype, dest: i32, tag: i32, c: R::Comm)
+        -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        if count < 0 {
+            return fail::<R>(Some(id),
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        ret::<R>(
+            Some(id),
+            engine::send(buf, count as usize, d, dest_in::<R>(dest), tag, id,
+                engine::SendMode::Standard),
+        )
+    }
+
+    fn recv_c(
+        buf: *mut u8,
+        count: Count,
+        dt: R::Datatype,
+        src: i32,
+        tag: i32,
+        c: R::Comm,
+        status: &mut R::Status,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let d = conv!(R, Some(id), R::dt_id(dt));
+        if count < 0 {
+            return fail::<R>(Some(id),
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        match engine::recv(buf, count as usize, d, src_in::<R>(src), tag_in::<R>(tag), id) {
+            Ok(s) => {
+                *status = status_out::<R>(s);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn get_count_c(s: &R::Status, dt: R::Datatype, out: &mut Count) -> i32 {
+        let id = conv!(R, None, R::dt_id(dt));
+        let size = conv!(R, None, datatype::type_size(id));
+        let bytes = R::status_count_bytes(s);
+        *out = if size == 0 {
+            0
+        } else if bytes % size as u64 != 0 {
+            R::c_undefined() as Count
+        } else {
+            (bytes / size as u64) as Count
+        };
+        0
+    }
+
+    fn get_elements_c(s: &R::Status, dt: R::Datatype, out: &mut Count) -> i32 {
+        let id = conv!(R, None, R::dt_id(dt));
+        let mut core = StatusCore::empty();
+        core.count_bytes = R::status_count_bytes(s);
+        match engine::get_elements_c(&core, id) {
+            Ok(v) if v == crate::abi::constants::MPI_UNDEFINED as Count => {
+                *out = R::c_undefined() as Count;
+                0
+            }
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn status_set_elements_c(s: &mut R::Status, dt: R::Datatype, count: Count) -> i32 {
+        let id = conv!(R, None, R::dt_id(dt));
+        let size = conv!(R, None, datatype::type_size(id));
+        if count < 0 {
+            return fail::<R>(None,
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        let Some(bytes) = (count as u64).checked_mul(size as u64) else {
+            return fail::<R>(None,
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        };
+        // Round-trip through the ABI layout: keep source/tag/error/
+        // cancelled, replace the hidden byte count.
+        let mut core = StatusCore::empty();
+        core.source = R::status_source(s);
+        core.tag = R::status_tag(s);
+        core.error = R::status_error(s);
+        core.cancelled = R::status_cancelled(s);
+        core.count_bytes = bytes;
+        *s = R::status_from_core(&core);
+        0
+    }
+
+    fn type_size_c(dt: R::Datatype, out: &mut Count) -> i32 {
+        if let Some(s) = R::type_size_fast(dt) {
+            *out = s as Count;
+            return 0;
+        }
+        let id = conv!(R, None, R::dt_id(dt));
+        match datatype::type_size(id) {
+            Ok(v) => {
+                *out = v as Count;
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_contiguous_c(count: Count, child: R::Datatype, out: &mut R::Datatype) -> i32 {
+        let id = conv!(R, None, R::dt_id(child));
+        if count < 0 {
+            return fail::<R>(None,
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        match datatype::type_contiguous(count as usize, id) {
+            Ok(n) => {
+                *out = R::dt_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn type_vector_c(
+        count: Count,
+        blocklen: Count,
+        stride: Count,
+        child: R::Datatype,
+        out: &mut R::Datatype,
+    ) -> i32 {
+        let id = conv!(R, None, R::dt_id(child));
+        if count < 0 || blocklen < 0 {
+            return fail::<R>(None,
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        match datatype::type_vector(count as usize, blocklen as usize, stride as isize, id) {
+            Ok(n) => {
+                *out = R::dt_h(n);
+                0
+            }
+            Err(e) => fail::<R>(None, e),
+        }
+    }
+
+    fn allgatherv_c(
+        sendbuf: *const u8,
+        sendcount: Count,
+        sendtype: R::Datatype,
+        recvbuf: *mut u8,
+        recvcounts: Counts<'_>,
+        displs: Displs<'_>,
+        recvtype: R::Datatype,
+        c: R::Comm,
+    ) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        let sd = conv!(R, Some(id), R::dt_id(sendtype));
+        let rd = conv!(R, Some(id), R::dt_id(recvtype));
+        if sendcount < 0 {
+            return fail::<R>(Some(id),
+                crate::core::MpiError::new(crate::abi::errors::MPI_ERR_COUNT));
+        }
+        let counts = recvcounts.to_counts();
+        let disps = displs.to_aints();
+        ret::<R>(
+            Some(id),
+            coll::allgatherv_c(buf_in::<R>(sendbuf), sendcount as usize, sd, recvbuf, &counts,
+                &disps, rd, id),
+        )
     }
 
     fn comm_size(c: R::Comm, out: &mut i32) -> i32 {

@@ -21,11 +21,15 @@ pub struct JobSpec {
     /// matcher, `Some(false)` the indexed one, `None` defers to the
     /// `MPI_ABI_FLAT_MATCH` env flag (see [`crate::core::match_index`]).
     pub flat_match: Option<bool>,
+    /// Eager/rendezvous switch override in packed bytes (`Some(0)`
+    /// forces rendezvous for every non-empty message); `None` defers to
+    /// the `MPI_ABI_RNDV_THRESHOLD` env var / 64 KiB default.
+    pub rndv_threshold: Option<usize>,
 }
 
 impl JobSpec {
     pub fn new(ranks: usize) -> JobSpec {
-        JobSpec { ranks, transport: TransportKind::Spsc, flat_match: None }
+        JobSpec { ranks, transport: TransportKind::Spsc, flat_match: None, rndv_threshold: None }
     }
 
     pub fn with_transport(mut self, t: TransportKind) -> JobSpec {
@@ -37,6 +41,13 @@ impl JobSpec {
     /// flat vs indexed without racing on the process-global env var).
     pub fn with_flat_match(mut self, flat: bool) -> JobSpec {
         self.flat_match = Some(flat);
+        self
+    }
+
+    /// Force the eager/rendezvous switch point for this job (tests and
+    /// benches comparing protocols without racing on the env var).
+    pub fn with_rndv_threshold(mut self, bytes: usize) -> JobSpec {
+        self.rndv_threshold = Some(bytes);
         self
     }
 }
@@ -76,6 +87,9 @@ where
     let world = World::new(spec.ranks, spec.transport);
     if let Some(flat) = spec.flat_match {
         world.set_flat_match(flat);
+    }
+    if let Some(t) = spec.rndv_threshold {
+        world.set_rndv_threshold(t);
     }
     run_on_world(world, spec.ranks, f)
 }

@@ -275,6 +275,77 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
         out
     }
 
+    fn send_c(
+        buf: *const u8,
+        count: crate::abi::types::Count,
+        dt: AbiDatatype,
+        dest: i32,
+        tag: i32,
+        c: AbiComm,
+    ) -> i32 {
+        (B::vtable().send_c)(buf, count, dt.0, dest, tag, c.0)
+    }
+    fn recv_c(
+        buf: *mut u8,
+        count: crate::abi::types::Count,
+        dt: AbiDatatype,
+        src: i32,
+        tag: i32,
+        c: AbiComm,
+        status: &mut AbiStatus,
+    ) -> i32 {
+        (B::vtable().recv_c)(buf, count, dt.0, src, tag, c.0, status as *mut AbiStatus)
+    }
+    fn get_count_c(s: &AbiStatus, dt: AbiDatatype, out: &mut crate::abi::types::Count) -> i32 {
+        (B::vtable().get_count_c)(s as *const AbiStatus, dt.0, out)
+    }
+    fn get_elements_c(s: &AbiStatus, dt: AbiDatatype, out: &mut crate::abi::types::Count) -> i32 {
+        (B::vtable().get_elements_c)(s as *const AbiStatus, dt.0, out)
+    }
+    fn status_set_elements_c(
+        s: &mut AbiStatus,
+        dt: AbiDatatype,
+        count: crate::abi::types::Count,
+    ) -> i32 {
+        (B::vtable().status_set_elements_c)(s as *mut AbiStatus, dt.0, count)
+    }
+    fn type_size_c(dt: AbiDatatype, out: &mut crate::abi::types::Count) -> i32 {
+        (B::vtable().type_size_c)(dt.0, out)
+    }
+    fn type_contiguous_c(
+        count: crate::abi::types::Count,
+        child: AbiDatatype,
+        out: &mut AbiDatatype,
+    ) -> i32 {
+        (B::vtable().type_contiguous_c)(count, child.0, &mut out.0)
+    }
+    fn type_vector_c(
+        count: crate::abi::types::Count,
+        blocklen: crate::abi::types::Count,
+        stride: crate::abi::types::Count,
+        child: AbiDatatype,
+        out: &mut AbiDatatype,
+    ) -> i32 {
+        (B::vtable().type_vector_c)(count, blocklen, stride, child.0, &mut out.0)
+    }
+    fn allgatherv_c(
+        sendbuf: *const u8,
+        sendcount: crate::abi::types::Count,
+        sendtype: AbiDatatype,
+        recvbuf: *mut u8,
+        recvcounts: crate::api::Counts<'_>,
+        displs: crate::api::Displs<'_>,
+        recvtype: AbiDatatype,
+        c: AbiComm,
+    ) -> i32 {
+        // Widen once at the boundary: the wrap ABI carries the arrays in
+        // their wide (`MPI_Count[]`/`MPI_Aint[]`) layout.
+        let counts = recvcounts.to_counts();
+        let disps = displs.to_aints();
+        (B::vtable().allgatherv_c)(sendbuf, sendcount, sendtype.0, recvbuf, &counts, &disps,
+            recvtype.0, c.0)
+    }
+
     fn comm_size(c: AbiComm, out: &mut i32) -> i32 {
         (B::vtable().comm_size)(c.0, out)
     }

@@ -50,6 +50,12 @@ impl SymbolTable {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    /// Whether `name` resolves (a `dlsym != NULL` probe, without the
+    /// panic): how `tests/spec_sync.rs` checks the SPEC §9 symbol rows.
+    pub fn has(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
 }
 
 // --- WRAP functions -----------------------------------------------------------
@@ -1707,10 +1713,161 @@ pub fn get_count<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i
     let bytes = s.count_bytes();
     *out = if bytes % size as u64 != 0 {
         crate::abi::constants::MPI_UNDEFINED
+    } else if bytes / size as u64 > i32::MAX as u64 {
+        // MPI-4.1 §3.2.5: count exceeds `int` range — the classic entry
+        // point reports MPI_UNDEFINED; `WRAP_get_count_c` is lossless.
+        crate::abi::constants::MPI_UNDEFINED
     } else {
         (bytes / size as u64) as i32
     };
     0
+}
+
+/// `WRAP_get_count_c`: the embiggened `MPI_Get_count_c` — the count
+/// crosses the wrap boundary as a 64-bit `MPI_Count`, so transfers
+/// beyond `INT_MAX` items round-trip without truncation.
+pub fn get_count_c<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i64) -> i32 {
+    let s = unsafe { &*status };
+    let mut size: i64 = 0;
+    let rc = A::type_size_c(dt_to_impl::<A>(dt), &mut size);
+    if rc != 0 {
+        return ret_code::<A>(rc);
+    }
+    if size == 0 {
+        *out = 0;
+        return 0;
+    }
+    let bytes = s.count_bytes();
+    *out = if bytes % size as u64 != 0 {
+        crate::abi::constants::MPI_UNDEFINED as i64
+    } else {
+        (bytes / size as u64) as i64
+    };
+    0
+}
+
+/// `WRAP_get_elements_c`: `MPI_Get_elements_c` — basic-element count as
+/// `MPI_Count`, resolved through the backend's datatype representation.
+pub fn get_elements_c<A: MukBackend>(status: *const AbiStatus, dt: usize, out: &mut i64) -> i32 {
+    let s = unsafe { &*status };
+    let b = A::status_with_bytes(s.count_bytes());
+    let rc = A::get_elements_c(&b, dt_to_impl::<A>(dt), out);
+    if rc == 0 && *out == A::undefined() as i64 {
+        *out = crate::abi::constants::MPI_UNDEFINED as i64;
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_status_set_elements_c`: `MPI_Status_set_elements_c` — rewrite
+/// the muk status's hidden byte count from an `MPI_Count` element count
+/// (the datatype size comes from the backend).
+pub fn status_set_elements_c<A: MukBackend>(status: *mut AbiStatus, dt: usize, count: i64) -> i32 {
+    if count < 0 {
+        return crate::abi::errors::MPI_ERR_COUNT;
+    }
+    let mut size: i64 = 0;
+    let rc = A::type_size_c(dt_to_impl::<A>(dt), &mut size);
+    if rc != 0 {
+        return ret_code::<A>(rc);
+    }
+    let Some(bytes) = (count as u64).checked_mul(size as u64) else {
+        return crate::abi::errors::MPI_ERR_COUNT;
+    };
+    let s = unsafe { &mut *status };
+    let cancelled = s.cancelled();
+    s.set_count_and_cancelled(bytes, cancelled);
+    0
+}
+
+/// `WRAP_type_size_c`: `MPI_Type_size_c` — datatype size as `MPI_Count`.
+pub fn type_size_c<A: MukBackend>(dt: usize, out: &mut i64) -> i32 {
+    ret_code::<A>(A::type_size_c(dt_to_impl::<A>(dt), out))
+}
+
+/// `WRAP_type_contiguous_c`: `MPI_Type_contiguous_c` — large-count
+/// contiguous datatype constructor.
+pub fn type_contiguous_c<A: MukBackend>(count: i64, child: usize, out: &mut usize) -> i32 {
+    let mut d = A::datatype(crate::api::Dt::Byte);
+    let rc = A::type_contiguous_c(count, dt_to_impl::<A>(child), &mut d);
+    if rc == 0 {
+        *out = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_type_vector_c`: `MPI_Type_vector_c` — large-count vector
+/// constructor (sparse multi-GiB extents under bounded memory).
+pub fn type_vector_c<A: MukBackend>(
+    count: i64,
+    blocklen: i64,
+    stride: i64,
+    child: usize,
+    out: &mut usize,
+) -> i32 {
+    let mut d = A::datatype(crate::api::Dt::Byte);
+    let rc = A::type_vector_c(count, blocklen, stride, dt_to_impl::<A>(child), &mut d);
+    if rc == 0 {
+        *out = dt_to_muk::<A>(d);
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_send_c`: `MPI_Send_c` — standard-mode send with an `MPI_Count`
+/// count word.
+pub fn send_c<A: MukBackend>(
+    buf: *const u8,
+    count: i64,
+    dt: usize,
+    dest: i32,
+    tag: i32,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::send_c(buf, count, dt_to_impl::<A>(dt), dest_to_impl::<A>(dest), tag,
+        comm_to_impl::<A>(comm)))
+}
+
+/// `WRAP_recv_c`: `MPI_Recv_c` — receive with an `MPI_Count` count word.
+pub fn recv_c<A: MukBackend>(
+    buf: *mut u8,
+    count: i64,
+    dt: usize,
+    src: i32,
+    tag: i32,
+    comm: usize,
+    status: *mut AbiStatus,
+) -> i32 {
+    let mut s = A::status_empty();
+    let rc = A::recv_c(buf, count, dt_to_impl::<A>(dt), src_to_impl::<A>(src),
+        tag_to_impl::<A>(tag), comm_to_impl::<A>(comm), &mut s);
+    if !status.is_null() {
+        unsafe { *status = status_to_muk::<A>(&s) };
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_allgatherv_c`: `MPI_Allgatherv_c` — per-rank counts cross the
+/// boundary as `MPI_Count[]` and displacements as `MPI_Aint[]`.
+#[allow(clippy::too_many_arguments)]
+pub fn allgatherv_c<A: MukBackend>(
+    sendbuf: *const u8,
+    sendcount: i64,
+    sendtype: usize,
+    recvbuf: *mut u8,
+    recvcounts: &[i64],
+    displs: &[isize],
+    recvtype: usize,
+    comm: usize,
+) -> i32 {
+    ret_code::<A>(A::allgatherv_c(
+        buf_to_impl::<A>(sendbuf),
+        sendcount,
+        dt_to_impl::<A>(sendtype),
+        recvbuf,
+        crate::api::Counts::Count(recvcounts),
+        crate::api::Displs::Aint(displs),
+        dt_to_impl::<A>(recvtype),
+        comm_to_impl::<A>(comm),
+    ))
 }
 
 // --- Sessions (MPI-4) --------------------------------------------------------
@@ -1931,6 +2088,15 @@ define_vtable! {
     info_free: fn(&mut usize) -> i32,
     get_count: fn(*const AbiStatus, usize, &mut i32) -> i32,
     get_elements: fn(*const AbiStatus, usize, &mut i32) -> i32,
+    get_count_c: fn(*const AbiStatus, usize, &mut i64) -> i32,
+    get_elements_c: fn(*const AbiStatus, usize, &mut i64) -> i32,
+    status_set_elements_c: fn(*mut AbiStatus, usize, i64) -> i32,
+    type_size_c: fn(usize, &mut i64) -> i32,
+    type_contiguous_c: fn(i64, usize, &mut usize) -> i32,
+    type_vector_c: fn(i64, i64, i64, usize, &mut usize) -> i32,
+    send_c: fn(*const u8, i64, usize, i32, i32, usize) -> i32,
+    recv_c: fn(*mut u8, i64, usize, i32, i32, usize, *mut AbiStatus) -> i32,
+    allgatherv_c: fn(*const u8, i64, usize, *mut u8, &[i64], &[isize], usize, usize) -> i32,
     win_create: fn(*mut u8, isize, i32, usize, usize, &mut usize) -> i32,
     win_allocate: fn(isize, i32, usize, usize, &mut *mut u8, &mut usize) -> i32,
     win_free: fn(&mut usize) -> i32,

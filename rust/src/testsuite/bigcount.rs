@@ -1,0 +1,259 @@
+//! Large-count (`MPI_Count` / "embiggened") tests: the `_c` family of
+//! MPI-4 must round-trip counts and displacements beyond `INT_MAX`
+//! through every ABI layer, while the classic `int`-count surface
+//! reports `MPI_UNDEFINED` rather than silently truncating
+//! (MPI-4.1 §3.2.5).
+//!
+//! Transfers with a *logical* payload or extent beyond 2 GiB are built
+//! from sparse/strided derived types over lazily-committed zeroed
+//! allocations, so the battery runs under bounded resident memory. If
+//! the allocator cannot provide the (virtual) region, the test skips
+//! gracefully instead of failing the suite.
+
+use super::util::*;
+use super::TestFn;
+use crate::abi::types::{Aint, Count};
+use crate::api::{Counts, Displs, Dt, MpiAbi};
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("bigcount.type_size_c_builtin", type_size_c_builtin::<A>),
+        ("bigcount.type_contiguous_c_beyond_int_max", type_contiguous_c_beyond_int_max::<A>),
+        ("bigcount.get_count_c_roundtrip_above_int_max", get_count_c_roundtrip::<A>),
+        ("bigcount.classic_get_count_overflow_undefined", classic_get_count_undefined::<A>),
+        ("bigcount.sparse_vector_2gib_logical_extent", sparse_vector_2gib::<A>),
+        ("bigcount.allgatherv_c_aint_displs_beyond_2gib", allgatherv_c_wide_displs::<A>),
+        ("bigcount.negative_counts_rejected", negative_counts_rejected::<A>),
+    ]
+}
+
+/// A zeroed allocation that is virtual until written (calloc-style), so
+/// multi-GiB *logical* regions cost only the pages actually touched.
+/// `None` = allocator refused; callers skip rather than fail.
+struct SparseBuf {
+    ptr: *mut u8,
+    layout: Layout,
+}
+
+impl SparseBuf {
+    fn new(len: usize) -> Option<SparseBuf> {
+        let layout = Layout::from_size_align(len, 8).ok()?;
+        // SAFETY: layout has nonzero size for every caller below.
+        let ptr = unsafe { alloc_zeroed(layout) };
+        if ptr.is_null() {
+            return None;
+        }
+        Some(SparseBuf { ptr, layout })
+    }
+}
+
+impl Drop for SparseBuf {
+    fn drop(&mut self) {
+        // SAFETY: ptr/layout are exactly what alloc_zeroed returned.
+        unsafe { dealloc(self.ptr, self.layout) };
+    }
+}
+
+fn type_size_c_builtin<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut out: Count = -1;
+    check_rc!(A::type_size_c(A::datatype(Dt::Int), &mut out), "Type_size_c");
+    check!(out == 4, "int size_c 4, got {out}");
+    let mut out: Count = -1;
+    check_rc!(A::type_size_c(A::datatype(Dt::Double), &mut out), "Type_size_c");
+    check!(out == 8, "double size_c 8, got {out}");
+    Ok(())
+}
+
+/// A contiguous type of more than `INT_MAX` ints: constructible only
+/// through the `_c` constructor, and its size is reportable only
+/// through `type_size_c` (the classic query would need > 2^31 bytes).
+fn type_contiguous_c_beyond_int_max<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let n: Count = (i32::MAX as Count) + 5; // 2^31 + 4 ints
+    let mut t = A::datatype(Dt::Byte);
+    check_rc!(A::type_contiguous_c(n, A::datatype(Dt::Int32), &mut t), "Type_contiguous_c");
+    check_rc!(A::type_commit(&mut t), "commit");
+    let mut size: Count = 0;
+    check_rc!(A::type_size_c(t, &mut size), "Type_size_c");
+    check!(size == n * 4, "size_c {} = 4 x (INT_MAX+5), got {size}", n * 4);
+    check_rc!(A::type_free(&mut t), "free");
+    Ok(())
+}
+
+/// `MPI_Status_set_elements_c` + `MPI_Get_count_c`: a synthesized
+/// status carrying more than `INT_MAX` elements round-trips losslessly
+/// through the wide accessors on every config — no multi-GiB transfer
+/// needed to prove the 64-bit path.
+fn get_count_c_roundtrip<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let byte = A::datatype(Dt::Byte);
+    let n: Count = 3_000_000_000; // > 2^31 - 1
+    let mut st = A::status_empty();
+    check_rc!(A::status_set_elements_c(&mut st, byte, n), "Status_set_elements_c");
+    let mut out: Count = 0;
+    check_rc!(A::get_count_c(&st, byte, &mut out), "Get_count_c");
+    check!(out == n, "count_c round-trip: want {n}, got {out}");
+    let mut out: Count = 0;
+    check_rc!(A::get_elements_c(&st, byte, &mut out), "Get_elements_c");
+    check!(out == n, "elements_c round-trip: want {n}, got {out}");
+    Ok(())
+}
+
+/// The classic `MPI_Get_count` must report `MPI_UNDEFINED` — not a
+/// truncated value — when the true count exceeds `INT_MAX`
+/// (MPI-4.1 §3.2.5), while `MPI_Get_count_c` on the same status stays
+/// exact.
+fn classic_get_count_undefined<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let int32 = A::datatype(Dt::Int32);
+    let n: Count = (i32::MAX as Count) + 10;
+    let mut st = A::status_empty();
+    check_rc!(A::status_set_elements_c(&mut st, int32, n), "Status_set_elements_c");
+    let classic = A::get_count(&st, int32);
+    check!(classic == A::undefined(), "count > INT_MAX must be MPI_UNDEFINED, got {classic}");
+    let mut wide: Count = 0;
+    check_rc!(A::get_count_c(&st, int32, &mut wide), "Get_count_c");
+    check!(wide == n, "wide count stays exact: want {n}, got {wide}");
+    // An exactly-representable count still works through the classic
+    // accessor (the guard must not over-fire).
+    let mut st = A::status_empty();
+    check_rc!(A::status_set_elements_c(&mut st, int32, 123), "Status_set_elements_c");
+    check!(A::get_count(&st, int32) == 123, "small count still exact");
+    Ok(())
+}
+
+/// Send one item of a strided vector type whose extent spans > 2 GiB of
+/// logical address space, from a lazily-committed sparse buffer: only
+/// the 40 000 one-byte blocks are real. The packed wire payload is
+/// 40 000 bytes; resident memory stays bounded by the touched pages,
+/// not the extent.
+fn sparse_vector_2gib<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    if n < 2 {
+        return Ok(());
+    }
+    const BLOCKS: usize = 40_000;
+    const STRIDE: usize = 65_536;
+    // Extent = (BLOCKS-1)*STRIDE + 1 ≈ 2.62e9 bytes > 2 GiB.
+    const EXTENT: usize = (BLOCKS - 1) * STRIDE + 1;
+    let byte = A::datatype(Dt::Byte);
+    let mut vec_t = A::datatype(Dt::Byte);
+    check_rc!(
+        A::type_vector_c(BLOCKS as Count, 1, STRIDE as Count, byte, &mut vec_t),
+        "Type_vector_c"
+    );
+    check_rc!(A::type_commit(&mut vec_t), "commit");
+    let mut size: Count = 0;
+    check_rc!(A::type_size_c(vec_t, &mut size), "Type_size_c");
+    check!(size == BLOCKS as Count, "vector packs {BLOCKS} bytes, got {size}");
+
+    if me == 0 {
+        match SparseBuf::new(EXTENT) {
+            Some(b) => {
+                for i in 0..BLOCKS {
+                    // SAFETY: i*STRIDE < EXTENT by construction.
+                    unsafe { *b.ptr.add(i * STRIDE) = (i % 251) as u8 };
+                }
+                check_rc!(
+                    A::send_c(b.ptr, 1, vec_t, 1, 40, A::comm_world()),
+                    "send_c sparse vector"
+                );
+            }
+            None => {
+                // Allocator refused the virtual region: tell the peer
+                // to skip (zero-byte message) rather than deadlock it.
+                check_rc!(A::send_c(std::ptr::null(), 0, byte, 1, 40, A::comm_world()), "skip");
+            }
+        }
+    } else if me == 1 {
+        let mut rbuf = vec![0u8; BLOCKS];
+        let mut st = A::status_empty();
+        check_rc!(
+            A::recv_c(rbuf.as_mut_ptr(), BLOCKS as Count, byte, 0, 40, A::comm_world(), &mut st),
+            "recv_c"
+        );
+        let mut got: Count = 0;
+        check_rc!(A::get_count_c(&st, byte, &mut got), "Get_count_c");
+        if got == BLOCKS as Count {
+            for (i, &v) in rbuf.iter().enumerate() {
+                check!(v == (i % 251) as u8, "block {i}: got {v}");
+            }
+        } else {
+            check!(got == 0, "either full transfer or sender-side skip, got {got}");
+        }
+    }
+    check_rc!(A::type_free(&mut vec_t), "free");
+    Ok(())
+}
+
+/// `MPI_Allgatherv_c` with `MPI_Aint` displacements: the last rank's
+/// block lands beyond 2 GiB into the receive buffer — unreachable
+/// through the classic `int` displacement array. The receive buffer is
+/// a sparse zeroed region, so only the landed blocks are resident.
+fn allgatherv_c_wide_displs<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    let n = n as usize;
+    const BLK: usize = 1024;
+    const TOP: usize = 2_200_000_000; // last block's byte offset, > 2 GiB
+    let byte = A::datatype(Dt::Byte);
+    let sbuf: Vec<u8> = (0..BLK).map(|i| ((me as usize) * 7 + i) as u8).collect();
+    let counts: Vec<Count> = vec![BLK as Count; n];
+    let displs: Vec<Aint> =
+        (0..n).map(|r| if n == 1 { 0 } else { (r * (TOP / (n - 1))) as Aint }).collect();
+    let rbuf = match SparseBuf::new(TOP + BLK) {
+        Some(b) => b,
+        None => return Ok(()), // can't get the virtual region: skip
+    };
+    check_rc!(
+        A::allgatherv_c(
+            sbuf.as_ptr(),
+            BLK as Count,
+            byte,
+            rbuf.ptr,
+            Counts::Count(&counts),
+            Displs::Aint(&displs),
+            byte,
+            A::comm_world(),
+        ),
+        "Allgatherv_c"
+    );
+    for r in 0..n {
+        let base = displs[r] as usize;
+        for i in (0..BLK).step_by(97) {
+            // SAFETY: base + i <= TOP + BLK - 1, inside the allocation.
+            let got = unsafe { *rbuf.ptr.add(base + i) };
+            let want = (r * 7 + i) as u8;
+            check!(got == want, "rank {r} block byte {i}: got {got}, want {want}");
+        }
+    }
+    check!(
+        displs[n - 1] as usize >= 2 * 1024 * 1024 * 1024 || n == 1,
+        "test must place the last block beyond 2 GiB"
+    );
+    Ok(())
+}
+
+/// Negative `MPI_Count` arguments are rejected with an error class, on
+/// every layer (the muk WRAP layer validates before crossing the
+/// vtable).
+fn negative_counts_rejected<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_return()), "errh");
+    let int = A::datatype(Dt::Int);
+    let mut t = A::datatype(Dt::Byte);
+    check!(A::type_contiguous_c(-1, int, &mut t) != 0, "Type_contiguous_c(-1) must fail");
+    check!(A::type_vector_c(-2, 1, 1, int, &mut t) != 0, "Type_vector_c(-2) must fail");
+    let mut st = A::status_empty();
+    check!(A::status_set_elements_c(&mut st, int, -3) != 0, "Status_set_elements_c(-3) must fail");
+    let mut b = [0u8; 4];
+    check!(A::send_c(b.as_ptr(), -1, int, 0, 41, A::comm_world()) != 0, "send_c(-1) must fail");
+    let mut st = A::status_empty();
+    check!(
+        A::recv_c(b.as_mut_ptr(), -1, int, 0, 41, A::comm_world(), &mut st) != 0,
+        "recv_c(-1) must fail"
+    );
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_fatal()), "errh restore");
+    check_rc!(A::barrier(A::comm_world()), "resync");
+    Ok(())
+}

@@ -13,6 +13,7 @@
 //! `mpiexec`). Results are combined with a logical-AND allreduce so every
 //! rank reports the same verdict.
 
+mod bigcount;
 mod coll;
 mod comm_attr;
 mod dtype;
@@ -50,6 +51,16 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     v.extend(rma::tests::<A>());
     v.extend(session::tests::<A>());
     v
+}
+
+/// The large-count battery alone (`MPI_Count` round-trips above
+/// `INT_MAX`, sparse > 2 GiB-logical transfers, `MPI_Aint`
+/// displacements beyond 2 GiB) — run standalone under all five ABI
+/// configs and both transports by `tests/bigcount.rs`. Not part of
+/// [`registry`]: its sparse multi-GiB virtual allocations are
+/// per-battery, not per-suite-run.
+pub fn bigcount_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    bigcount::tests::<A>()
 }
 
 /// The sessions battery alone (init/finalize ordering, pset queries,

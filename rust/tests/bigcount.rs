@@ -1,0 +1,67 @@
+//! The large-count (`MPI_Count`) battery, standalone: all five ABI
+//! configurations × both transports (the ISSUE-6 acceptance grid).
+//!
+//! Two ranks per job: the batteries allocate sparse multi-GiB *virtual*
+//! regions per rank (lazily committed), so the rank count — not the
+//! logical transfer size — bounds resident memory.
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::launcher::{run_job_ok, JobSpec};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+use mpi_abi::testsuite;
+
+fn run_battery<A: MpiAbi>(ranks: usize, transport: TransportKind) {
+    let spec = JobSpec::new(ranks).with_transport(transport);
+    let reports = run_job_ok(spec, |rank| {
+        assert_eq!(A::init(), 0, "{} init", A::NAME);
+        let results = testsuite::run_registry::<A>(rank, testsuite::bigcount_registry::<A>());
+        let report = testsuite::report(A::NAME, &results);
+        let failed = results.iter().filter(|r| !r.passed).count();
+        assert_eq!(A::finalize(), 0, "{} finalize", A::NAME);
+        (report, failed)
+    });
+    let (report, failures) = &reports[0];
+    if *failures > 0 {
+        panic!("[{} {:?}]\n{report}", A::NAME, transport);
+    }
+}
+
+fn both_transports<A: MpiAbi>(ranks: usize) {
+    run_battery::<A>(ranks, TransportKind::Spsc);
+    run_battery::<A>(ranks, TransportKind::Mutex);
+}
+
+#[test]
+fn bigcount_battery_mpich_native() {
+    both_transports::<MpichAbi>(2);
+}
+
+#[test]
+fn bigcount_battery_ompi_native() {
+    both_transports::<OmpiAbi>(2);
+}
+
+#[test]
+fn bigcount_battery_muk_over_mpich() {
+    both_transports::<MukMpich>(2);
+}
+
+#[test]
+fn bigcount_battery_muk_over_ompi() {
+    both_transports::<MukOmpi>(2);
+}
+
+#[test]
+fn bigcount_battery_native_standard_abi() {
+    both_transports::<NativeAbi>(2);
+}
+
+/// Three ranks: the `MPI_Aint`-displacement allgatherv splits the
+/// > 2 GiB span into two gaps and the middle rank lands between them.
+#[test]
+fn bigcount_battery_three_ranks() {
+    run_battery::<NativeAbi>(3, TransportKind::Spsc);
+}

@@ -313,6 +313,87 @@ fn prop_comm_split_partitions_world() {
     }
 }
 
+// --- Mixed-size soak: protocol and matcher choices are invisible ----------------------
+
+/// One soak run: rank 0 fires a random mixed-size message stream (sizes
+/// straddling the eager/rendezvous threshold, tags interleaved), rank 1
+/// posts every receive up front and waits. Returns rank 1's received
+/// bytes, concatenated in message order.
+fn soak_run(seed: u64, flat: Option<bool>, rndv_threshold: Option<usize>) -> Vec<u8> {
+    use mpi_abi::api::{Dt, MpiAbi};
+    use mpi_abi::launcher::{run_job_ok, JobSpec};
+    use mpi_abi::native_abi::NativeAbi;
+    type A = NativeAbi;
+
+    let mut spec = JobSpec::new(2);
+    if let Some(f) = flat {
+        spec = spec.with_flat_match(f);
+    }
+    if let Some(t) = rndv_threshold {
+        spec = spec.with_rndv_threshold(t);
+    }
+    let outs = run_job_ok(spec, move |rank| {
+        assert_eq!(A::init(), 0);
+        let dt = A::datatype(Dt::Byte);
+        let world = A::comm_world();
+        // Both ranks derive the identical traffic schedule.
+        let mut rng = Rng::new(seed * 7919 + 1);
+        let n_msgs = 40usize;
+        let sizes: Vec<usize> = (0..n_msgs).map(|_| rng.range(1, 150_000) as usize).collect();
+        let tags: Vec<i32> = (0..n_msgs).map(|_| rng.i32_in(0, 4)).collect();
+        let payload = |i: usize| -> Vec<u8> {
+            (0..sizes[i]).map(|b| (b as u8) ^ (i as u8).wrapping_mul(37)).collect()
+        };
+        let mut received = Vec::new();
+        if rank == 0 {
+            for i in 0..n_msgs {
+                let s = payload(i);
+                assert_eq!(A::send(s.as_ptr(), sizes[i] as i32, dt, 1, tags[i], world), 0);
+            }
+        } else {
+            // Post every receive up front, in message order (per-tag
+            // posted order = send order, so FIFO must resolve it), then
+            // wait for the lot.
+            let mut bufs: Vec<Vec<u8>> = sizes.iter().map(|&s| vec![0u8; s]).collect();
+            let mut reqs = vec![A::request_null(); n_msgs];
+            for i in 0..n_msgs {
+                assert_eq!(
+                    A::irecv(bufs[i].as_mut_ptr(), sizes[i] as i32, dt, 0, tags[i], world,
+                        &mut reqs[i]),
+                    0
+                );
+            }
+            let mut sts = vec![A::status_empty(); n_msgs];
+            assert_eq!(A::waitall(&mut reqs, &mut sts), 0);
+            for i in 0..n_msgs {
+                assert_eq!(bufs[i], payload(i), "message {i} content (seed {seed})");
+                received.extend_from_slice(&bufs[i]);
+            }
+        }
+        assert_eq!(A::finalize(), 0);
+        received
+    });
+    outs.into_iter().nth(1).unwrap()
+}
+
+/// The same random mixed-size stream must land bitwise-identical under
+/// the indexed matcher, the flat-baseline matcher, rendezvous forced
+/// for every message, and eager forced for every message: protocol
+/// switch and matcher choice change complexity, never bytes.
+#[test]
+fn prop_mixed_size_soak_protocols_bitwise_identical() {
+    for seed in 0..3u64 {
+        let indexed_default = soak_run(seed, None, None);
+        let flat = soak_run(seed, Some(true), None);
+        let all_rndv = soak_run(seed, None, Some(0));
+        let all_eager = soak_run(seed, None, Some(usize::MAX));
+        assert!(!indexed_default.is_empty());
+        assert_eq!(indexed_default, flat, "flat matcher diverged (seed {seed})");
+        assert_eq!(indexed_default, all_rndv, "forced rendezvous diverged (seed {seed})");
+        assert_eq!(indexed_default, all_eager, "forced eager diverged (seed {seed})");
+    }
+}
+
 // --- Message ordering under random traffic ------------------------------------------
 
 #[test]

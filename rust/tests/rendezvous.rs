@@ -1,0 +1,292 @@
+//! Eager/rendezvous protocol-switch tests (the PR-6 tentpole): bit
+//! identity across the threshold, RTS/recv arrival-order independence,
+//! wildcard rendezvous, FIFO across interleaved protocols, backpressure
+//! without head-of-line blocking, and the bounded-buffering witness — a
+//! 256 MiB transfer whose in-flight payload never approaches the
+//! message size.
+//!
+//! The threshold is forced per job via
+//! [`JobSpec::with_rndv_threshold`], never via the process-global
+//! `MPI_ABI_RNDV_THRESHOLD` env var, so parallel tests cannot race.
+
+use mpi_abi::api::{Dt, MpiAbi};
+use mpi_abi::core::request::{RNDV_CHUNK, RNDV_WINDOW_BYTES};
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::core::world::World;
+use mpi_abi::impls::MpichAbi;
+use mpi_abi::launcher::{run_job_ok, run_on_world, JobSpec};
+use mpi_abi::muk::MukMpich;
+use mpi_abi::native_abi::NativeAbi;
+
+fn pattern(len: usize, seed: u8) -> Vec<u8> {
+    (0..len).map(|i| (i as u8) ^ seed.wrapping_mul(31)).collect()
+}
+
+/// Messages of threshold−1, threshold, and threshold+1 packed bytes:
+/// the first two stay eager, the third goes rendezvous (the switch is
+/// strictly-greater), and all three arrive bit-identical.
+fn boundary_bit_identity<A: MpiAbi>(transport: TransportKind) {
+    const T: usize = 4096;
+    let spec = JobSpec::new(2).with_transport(transport).with_rndv_threshold(T);
+    run_job_ok(spec, |rank| {
+        assert_eq!(A::init(), 0);
+        let dt = A::datatype(Dt::Byte);
+        let world = A::comm_world();
+        for (i, len) in [T - 1, T, T + 1].into_iter().enumerate() {
+            let tag = 10 + i as i32;
+            if rank == 0 {
+                let s = pattern(len, i as u8);
+                assert_eq!(A::send(s.as_ptr(), len as i32, dt, 1, tag, world), 0);
+            } else {
+                let mut r = vec![0u8; len];
+                let mut st = A::status_empty();
+                assert_eq!(A::recv(r.as_mut_ptr(), len as i32, dt, 0, tag, world, &mut st), 0);
+                assert_eq!(A::get_count(&st, dt), len as i32, "len at boundary {i}");
+                assert_eq!(r, pattern(len, i as u8), "bit identity at boundary {i}");
+            }
+        }
+        assert_eq!(A::finalize(), 0);
+    });
+}
+
+#[test]
+fn threshold_boundary_bit_identity_native_abi() {
+    boundary_bit_identity::<NativeAbi>(TransportKind::Spsc);
+    boundary_bit_identity::<NativeAbi>(TransportKind::Mutex);
+}
+
+#[test]
+fn threshold_boundary_bit_identity_mpich_and_muk() {
+    boundary_bit_identity::<MpichAbi>(TransportKind::Spsc);
+    boundary_bit_identity::<MukMpich>(TransportKind::Spsc);
+}
+
+/// RTS arriving before the receive is posted (unexpected-RTS path) and
+/// after (posted path): both deliver the full payload. The sender uses
+/// isend so the handshake genuinely overlaps the receiver's delay.
+#[test]
+fn rts_before_and_after_recv_posted() {
+    const LEN: usize = 300_000; // > default threshold, several chunks
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        let spec = JobSpec::new(2).with_transport(transport);
+        run_job_ok(spec, |rank| {
+            assert_eq!(NativeAbi::init(), 0);
+            type A = NativeAbi;
+            let dt = A::datatype(Dt::Byte);
+            let world = A::comm_world();
+            // Round 1: RTS lands while no recv is posted.
+            if rank == 0 {
+                let s = pattern(LEN, 1);
+                assert_eq!(A::send(s.as_ptr(), LEN as i32, dt, 1, 20, world), 0);
+            } else {
+                // Let the RTS (and nothing else: no CTS yet) arrive first.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                let mut r = vec![0u8; LEN];
+                let mut st = A::status_empty();
+                assert_eq!(A::recv(r.as_mut_ptr(), LEN as i32, dt, 0, 20, world, &mut st), 0);
+                assert_eq!(r, pattern(LEN, 1), "unexpected-RTS path");
+            }
+            assert_eq!(A::barrier(world), 0);
+            // Round 2: recv posted well before the send starts.
+            if rank == 1 {
+                let mut r = vec![0u8; LEN];
+                let mut req = A::request_null();
+                assert_eq!(A::irecv(r.as_mut_ptr(), LEN as i32, dt, 0, 21, world, &mut req), 0);
+                let mut st = A::status_empty();
+                assert_eq!(A::wait(&mut req, &mut st), 0);
+                assert_eq!(r, pattern(LEN, 2), "posted-recv path");
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                let s = pattern(LEN, 2);
+                assert_eq!(A::send(s.as_ptr(), LEN as i32, dt, 1, 21, world), 0);
+            }
+            assert_eq!(A::finalize(), 0);
+        });
+    }
+}
+
+/// ANY_SOURCE / ANY_TAG receives match rendezvous sends: the RTS is the
+/// matchable envelope, so wildcards see it exactly like an eager send.
+#[test]
+fn wildcard_rendezvous() {
+    const LEN: usize = 200_000;
+    let spec = JobSpec::new(3).with_transport(TransportKind::Spsc);
+    run_job_ok(spec, |rank| {
+        assert_eq!(NativeAbi::init(), 0);
+        type A = NativeAbi;
+        let dt = A::datatype(Dt::Byte);
+        let world = A::comm_world();
+        if rank == 0 {
+            let mut seen = [false; 3];
+            for _ in 0..2 {
+                let mut r = vec![0u8; LEN];
+                let mut st = A::status_empty();
+                assert_eq!(
+                    A::recv(
+                        r.as_mut_ptr(),
+                        LEN as i32,
+                        dt,
+                        A::any_source(),
+                        A::any_tag(),
+                        world,
+                        &mut st
+                    ),
+                    0
+                );
+                let src = A::status_source(&st);
+                let tag = A::status_tag(&st);
+                assert!(src == 1 || src == 2, "wildcard source {src}");
+                assert_eq!(tag, 30 + src, "tag carried through the RTS");
+                assert_eq!(A::get_count(&st, dt), LEN as i32);
+                assert_eq!(r, pattern(LEN, src as u8), "payload from rank {src}");
+                assert!(!seen[src as usize], "each sender matched once");
+                seen[src as usize] = true;
+            }
+        } else {
+            let s = pattern(LEN, rank as u8);
+            assert_eq!(A::send(s.as_ptr(), LEN as i32, dt, 0, 30 + rank as i32, world), 0);
+        }
+        assert_eq!(NativeAbi::finalize(), 0);
+    });
+}
+
+/// Alternating eager and rendezvous sends on the same (src, tag): MPI
+/// non-overtaking must hold across the protocol switch — message k
+/// matches the k-th receive whatever protocol carried it.
+#[test]
+fn interleaved_eager_rendezvous_fifo() {
+    const SMALL: usize = 64;
+    const BIG: usize = 150_000;
+    let spec = JobSpec::new(2).with_transport(TransportKind::Spsc);
+    run_job_ok(spec, |rank| {
+        assert_eq!(NativeAbi::init(), 0);
+        type A = NativeAbi;
+        let dt = A::datatype(Dt::Byte);
+        let world = A::comm_world();
+        let len_of = |k: usize| if k % 2 == 0 { SMALL } else { BIG };
+        if rank == 0 {
+            for k in 0..8 {
+                let s = pattern(len_of(k), k as u8);
+                assert_eq!(A::send(s.as_ptr(), len_of(k) as i32, dt, 1, 40, world), 0);
+            }
+        } else {
+            for k in 0..8 {
+                let len = len_of(k);
+                let mut r = vec![0u8; len];
+                let mut st = A::status_empty();
+                assert_eq!(A::recv(r.as_mut_ptr(), len as i32, dt, 0, 40, world, &mut st), 0);
+                assert_eq!(A::get_count(&st, dt), len as i32, "message {k} length");
+                assert_eq!(r, pattern(len, k as u8), "FIFO across protocols at {k}");
+            }
+        }
+        assert_eq!(NativeAbi::finalize(), 0);
+    });
+}
+
+/// Backpressure on a stalled rendezvous stream must not head-of-line
+/// block the channel: with the big message's receive *not yet posted*
+/// (so the sender is parked waiting for CTS), a later eager message on
+/// another tag still goes through. Only then is the big receive posted.
+#[test]
+fn backpressure_is_not_head_of_line_blocking() {
+    const BIG: usize = 8 * 1024 * 1024; // far beyond the credit window
+    let spec = JobSpec::new(2).with_transport(TransportKind::Spsc);
+    run_job_ok(spec, |rank| {
+        assert_eq!(NativeAbi::init(), 0);
+        type A = NativeAbi;
+        let dt = A::datatype(Dt::Byte);
+        let world = A::comm_world();
+        if rank == 0 {
+            let big = pattern(BIG, 5);
+            let mut req = A::request_null();
+            assert_eq!(A::isend(big.as_ptr(), BIG as i32, dt, 1, 50, world, &mut req), 0);
+            // The eager message leaves while the rendezvous stream above
+            // is still waiting for its first CTS.
+            let small = [7u8; 16];
+            assert_eq!(A::send(small.as_ptr(), 16, dt, 1, 51, world), 0);
+            let mut st = A::status_empty();
+            assert_eq!(A::wait(&mut req, &mut st), 0);
+        } else {
+            // Receive the eager message FIRST: it must not be stuck
+            // behind the unserviced rendezvous handshake.
+            let mut small = [0u8; 16];
+            let mut st = A::status_empty();
+            assert_eq!(A::recv(small.as_mut_ptr(), 16, dt, 0, 51, world, &mut st), 0);
+            assert_eq!(small, [7u8; 16]);
+            let mut big = vec![0u8; BIG];
+            assert_eq!(A::recv(big.as_mut_ptr(), BIG as i32, dt, 0, 50, world, &mut st), 0);
+            assert_eq!(big, pattern(BIG, 5), "big payload after the eager bypass");
+        }
+        assert_eq!(NativeAbi::finalize(), 0);
+    });
+}
+
+/// The acceptance witness: a 256 MiB transfer's peak in-flight
+/// rendezvous payload stays bounded by the credit window (chunk-sized
+/// buffering), never approaching the message size — the receiver
+/// streams chunks straight into the posted user buffer.
+#[test]
+fn peak_inflight_bounded_for_256mib_transfer() {
+    const LEN: usize = 256 * 1024 * 1024;
+    let world = World::new(2, TransportKind::Spsc);
+    let outcomes = run_on_world(world.clone(), 2, |rank| {
+        assert_eq!(NativeAbi::init(), 0);
+        type A = NativeAbi;
+        let dt = A::datatype(Dt::Byte);
+        let comm = A::comm_world();
+        if rank == 0 {
+            let mut s = vec![0u8; LEN];
+            // Cheap deterministic pattern, sparse enough to build fast.
+            for i in (0..LEN).step_by(4096) {
+                s[i] = (i / 4096) as u8;
+            }
+            assert_eq!(A::send(s.as_ptr(), LEN as i32, dt, 1, 60, comm), 0);
+        } else {
+            let mut r = vec![0u8; LEN];
+            let mut st = A::status_empty();
+            assert_eq!(A::recv(r.as_mut_ptr(), LEN as i32, dt, 0, 60, comm, &mut st), 0);
+            assert_eq!(A::get_count(&st, dt), LEN as i32);
+            for i in (0..LEN).step_by(4096) {
+                assert_eq!(r[i], (i / 4096) as u8, "byte {i}");
+            }
+        }
+        assert_eq!(A::finalize(), 0);
+    });
+    assert!(outcomes.iter().all(|o| o.is_ok()));
+    let peak = world.rndv_inflight_peak();
+    assert!(peak > 0, "a 256 MiB transfer must use the rendezvous path");
+    // Bounded by the credit window plus one chunk of slack — five
+    // orders of magnitude below the 256 MiB message.
+    let bound = RNDV_WINDOW_BYTES + RNDV_CHUNK as u64;
+    assert!(
+        peak <= bound,
+        "peak in-flight rendezvous payload {peak} B exceeds window bound {bound} B"
+    );
+}
+
+/// Synchronous-mode semantics survive the switch: a large `MPI_Ssend`
+/// completes only against a matching receive, and small Ssends (eager
+/// size) still synchronize.
+#[test]
+fn ssend_across_the_threshold() {
+    for len in [64usize, 1024 * 1024] {
+        let spec = JobSpec::new(2).with_transport(TransportKind::Spsc);
+        run_job_ok(spec, |rank| {
+            assert_eq!(NativeAbi::init(), 0);
+            type A = NativeAbi;
+            let dt = A::datatype(Dt::Byte);
+            let world = A::comm_world();
+            if rank == 0 {
+                let s = pattern(len, 9);
+                assert_eq!(A::ssend(s.as_ptr(), len as i32, dt, 1, 70, world), 0);
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                let mut r = vec![0u8; len];
+                let mut st = A::status_empty();
+                assert_eq!(A::recv(r.as_mut_ptr(), len as i32, dt, 0, 70, world, &mut st), 0);
+                assert_eq!(r, pattern(len, 9));
+            }
+            assert_eq!(NativeAbi::finalize(), 0);
+        });
+    }
+}

@@ -34,7 +34,9 @@ fn table_rows(spec: &str, tag: &str) -> Vec<Vec<String>> {
             .map(|c| c.trim().trim_matches('`').to_string())
             .collect();
         // Skip the header and |---| separator rows.
-        if cells.iter().all(|c| c.chars().all(|ch| ch == '-')) || cells[0] == "constant" {
+        if cells.iter().all(|c| c.chars().all(|ch| ch == '-'))
+            || ["constant", "type", "function"].contains(&cells[0].as_str())
+        {
             continue;
         }
         rows.push(cells);
@@ -158,6 +160,72 @@ fn special_integers_table_matches_code() {
             "{}",
             cells[0]
         );
+    }
+}
+
+/// SPEC §9: `MPI_Count`/`MPI_Aint` are 64-bit in every configuration.
+/// The table's three config columns must each match the width of the
+/// one live typedef the code compiles everywhere
+/// (`abi::types::{Count, Aint}`).
+#[test]
+fn integer_width_table_matches_code() {
+    let spec = spec_text();
+    let mut seen = 0;
+    for cells in table_rows(&spec, "widths-table") {
+        let code_bits = match cells[0].as_str() {
+            "MPI_Count" => 8 * std::mem::size_of::<mpi_abi::abi::types::Count>(),
+            "MPI_Aint" => 8 * std::mem::size_of::<mpi_abi::abi::types::Aint>(),
+            other => panic!("unexpected widths row {other}"),
+        };
+        for col in 1..=3 {
+            assert_eq!(cell_i32(&cells, col) as usize, code_bits, "{} col {col}", cells[0]);
+        }
+        assert_eq!(code_bits, 64, "{} must be 64-bit", cells[0]);
+        seen += 1;
+    }
+    assert_eq!(seen, 2, "both wide integer types documented");
+}
+
+/// SPEC §9: every `_c` family row names a `WRAP_` symbol that resolves
+/// in BOTH backends' wrap tables (the dlsym probe Mukautuva's init
+/// would fail on), and the classic column names the matching MPI call.
+#[test]
+fn bigcount_symbol_table_matches_code() {
+    use mpi_abi::muk::{symbols, Backend};
+    let spec = spec_text();
+    let mpich = symbols(Backend::Mpich);
+    let ompi = symbols(Backend::Ompi);
+    let mut seen = 0;
+    for cells in table_rows(&spec, "bigcount-table") {
+        let (func, sym) = (&cells[0], &cells[1]);
+        assert!(func.starts_with("MPI_") && func.ends_with("_c"), "malformed function {func}");
+        assert!(sym.starts_with("WRAP_") && sym.ends_with("_c"), "malformed symbol {sym}");
+        assert!(mpich.has(sym), "{sym} missing from the MPICH-backed wrap table");
+        assert!(ompi.has(sym), "{sym} missing from the OMPI-backed wrap table");
+        seen += 1;
+    }
+    assert_eq!(seen, 9, "all nine _c entry points documented");
+    // The guard the _c family exists to avoid: classic get_count
+    // reports MPI_UNDEFINED rather than truncating (MPI-4.1 §3.2.5).
+    assert!(
+        spec.contains("must return `MPI_UNDEFINED` when the true count exceeds `INT_MAX`"),
+        "SPEC.md lost the truncation-is-an-error clause"
+    );
+}
+
+/// SPEC §10: the rendezvous contract stays documented alongside its
+/// tunable.
+#[test]
+fn rendezvous_section_exists() {
+    let spec = spec_text();
+    for needle in [
+        "## 10. The eager/rendezvous protocol switch",
+        "MPI_ABI_RNDV_THRESHOLD",
+        "Matching is protocol-blind",
+        "Buffering is bounded",
+        "BENCH_PR6.json",
+    ] {
+        assert!(spec.contains(needle), "SPEC.md lost its rendezvous clause {needle:?}");
     }
 }
 
