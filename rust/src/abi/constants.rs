@@ -199,6 +199,81 @@ pub const MPI_ABI_VERSION: i32 = 1;
 /// The standard-ABI `MPI_ABI_SUBVERSION` constant.
 pub const MPI_ABI_SUBVERSION: i32 = 0;
 
+// --- Tools interface (MPI_T, §5.4 zero-page additions) -------------------------
+
+/// The standard-ABI `MPI_T_VERBOSITY_USER_BASIC` constant. Verbosity
+/// levels are ordered and contiguous so tools can range-filter.
+pub const MPI_T_VERBOSITY_USER_BASIC: i32 = 1;
+/// The standard-ABI `MPI_T_VERBOSITY_USER_DETAIL` constant.
+pub const MPI_T_VERBOSITY_USER_DETAIL: i32 = 2;
+/// The standard-ABI `MPI_T_VERBOSITY_USER_ALL` constant.
+pub const MPI_T_VERBOSITY_USER_ALL: i32 = 3;
+/// The standard-ABI `MPI_T_VERBOSITY_TUNER_BASIC` constant.
+pub const MPI_T_VERBOSITY_TUNER_BASIC: i32 = 4;
+/// The standard-ABI `MPI_T_VERBOSITY_TUNER_DETAIL` constant.
+pub const MPI_T_VERBOSITY_TUNER_DETAIL: i32 = 5;
+/// The standard-ABI `MPI_T_VERBOSITY_TUNER_ALL` constant.
+pub const MPI_T_VERBOSITY_TUNER_ALL: i32 = 6;
+/// The standard-ABI `MPI_T_VERBOSITY_MPIDEV_BASIC` constant.
+pub const MPI_T_VERBOSITY_MPIDEV_BASIC: i32 = 7;
+/// The standard-ABI `MPI_T_VERBOSITY_MPIDEV_DETAIL` constant.
+pub const MPI_T_VERBOSITY_MPIDEV_DETAIL: i32 = 8;
+/// The standard-ABI `MPI_T_VERBOSITY_MPIDEV_ALL` constant.
+pub const MPI_T_VERBOSITY_MPIDEV_ALL: i32 = 9;
+
+/// The standard-ABI `MPI_T_BIND_NO_OBJECT` constant: every variable this
+/// engine exports is bound to the rank, not to an MPI object.
+pub const MPI_T_BIND_NO_OBJECT: i32 = 0;
+
+/// The standard-ABI `MPI_T_SCOPE_CONSTANT` constant.
+pub const MPI_T_SCOPE_CONSTANT: i32 = 0;
+/// The standard-ABI `MPI_T_SCOPE_READONLY` constant.
+pub const MPI_T_SCOPE_READONLY: i32 = 1;
+/// The standard-ABI `MPI_T_SCOPE_LOCAL` constant: writable, and the
+/// write need not be uniform across ranks.
+pub const MPI_T_SCOPE_LOCAL: i32 = 2;
+/// The standard-ABI `MPI_T_SCOPE_GROUP` constant.
+pub const MPI_T_SCOPE_GROUP: i32 = 3;
+/// The standard-ABI `MPI_T_SCOPE_GROUP_EQ` constant.
+pub const MPI_T_SCOPE_GROUP_EQ: i32 = 4;
+/// The standard-ABI `MPI_T_SCOPE_ALL` constant.
+pub const MPI_T_SCOPE_ALL: i32 = 5;
+/// The standard-ABI `MPI_T_SCOPE_ALL_EQ` constant.
+pub const MPI_T_SCOPE_ALL_EQ: i32 = 6;
+
+/// The standard-ABI `MPI_T_PVAR_CLASS_COUNTER` constant: monotonically
+/// increasing; sessions read it relative to a per-handle baseline.
+pub const MPI_T_PVAR_CLASS_COUNTER: i32 = 1;
+/// The standard-ABI `MPI_T_PVAR_CLASS_LEVEL` constant: an instantaneous
+/// quantity (queue depth); read absolute, reset is a no-op.
+pub const MPI_T_PVAR_CLASS_LEVEL: i32 = 2;
+/// The standard-ABI `MPI_T_PVAR_CLASS_HIGHWATERMARK` constant.
+pub const MPI_T_PVAR_CLASS_HIGHWATERMARK: i32 = 3;
+
+/// All named MPI_T constants (SPEC table inventory + diagnostics).
+pub const MPI_T_CONSTANTS: &[(&str, i32)] = &[
+    ("MPI_T_VERBOSITY_USER_BASIC", MPI_T_VERBOSITY_USER_BASIC),
+    ("MPI_T_VERBOSITY_USER_DETAIL", MPI_T_VERBOSITY_USER_DETAIL),
+    ("MPI_T_VERBOSITY_USER_ALL", MPI_T_VERBOSITY_USER_ALL),
+    ("MPI_T_VERBOSITY_TUNER_BASIC", MPI_T_VERBOSITY_TUNER_BASIC),
+    ("MPI_T_VERBOSITY_TUNER_DETAIL", MPI_T_VERBOSITY_TUNER_DETAIL),
+    ("MPI_T_VERBOSITY_TUNER_ALL", MPI_T_VERBOSITY_TUNER_ALL),
+    ("MPI_T_VERBOSITY_MPIDEV_BASIC", MPI_T_VERBOSITY_MPIDEV_BASIC),
+    ("MPI_T_VERBOSITY_MPIDEV_DETAIL", MPI_T_VERBOSITY_MPIDEV_DETAIL),
+    ("MPI_T_VERBOSITY_MPIDEV_ALL", MPI_T_VERBOSITY_MPIDEV_ALL),
+    ("MPI_T_BIND_NO_OBJECT", MPI_T_BIND_NO_OBJECT),
+    ("MPI_T_SCOPE_CONSTANT", MPI_T_SCOPE_CONSTANT),
+    ("MPI_T_SCOPE_READONLY", MPI_T_SCOPE_READONLY),
+    ("MPI_T_SCOPE_LOCAL", MPI_T_SCOPE_LOCAL),
+    ("MPI_T_SCOPE_GROUP", MPI_T_SCOPE_GROUP),
+    ("MPI_T_SCOPE_GROUP_EQ", MPI_T_SCOPE_GROUP_EQ),
+    ("MPI_T_SCOPE_ALL", MPI_T_SCOPE_ALL),
+    ("MPI_T_SCOPE_ALL_EQ", MPI_T_SCOPE_ALL_EQ),
+    ("MPI_T_PVAR_CLASS_COUNTER", MPI_T_PVAR_CLASS_COUNTER),
+    ("MPI_T_PVAR_CLASS_LEVEL", MPI_T_PVAR_CLASS_LEVEL),
+    ("MPI_T_PVAR_CLASS_HIGHWATERMARK", MPI_T_PVAR_CLASS_HIGHWATERMARK),
+];
+
 // --- Whole-ABI inventory helpers ----------------------------------------------
 
 /// Every predefined handle constant in the ABI (ops + handles + datatypes),
@@ -303,6 +378,47 @@ mod tests {
         for k in keys {
             assert!(special_int_name(k).is_none(), "attr key {k} collides");
         }
+    }
+
+    #[test]
+    fn mpi_t_verbosity_ordered_and_contiguous() {
+        // Tools range-filter on verbosity; the nine levels must be 1..=9.
+        let levels = [
+            MPI_T_VERBOSITY_USER_BASIC,
+            MPI_T_VERBOSITY_USER_DETAIL,
+            MPI_T_VERBOSITY_USER_ALL,
+            MPI_T_VERBOSITY_TUNER_BASIC,
+            MPI_T_VERBOSITY_TUNER_DETAIL,
+            MPI_T_VERBOSITY_TUNER_ALL,
+            MPI_T_VERBOSITY_MPIDEV_BASIC,
+            MPI_T_VERBOSITY_MPIDEV_DETAIL,
+            MPI_T_VERBOSITY_MPIDEV_ALL,
+        ];
+        for (i, v) in levels.iter().enumerate() {
+            assert_eq!(*v, i as i32 + 1);
+        }
+    }
+
+    #[test]
+    fn mpi_t_scopes_distinct_and_small() {
+        let scopes = [
+            MPI_T_SCOPE_CONSTANT,
+            MPI_T_SCOPE_READONLY,
+            MPI_T_SCOPE_LOCAL,
+            MPI_T_SCOPE_GROUP,
+            MPI_T_SCOPE_GROUP_EQ,
+            MPI_T_SCOPE_ALL,
+            MPI_T_SCOPE_ALL_EQ,
+        ];
+        let set: std::collections::HashSet<_> = scopes.into();
+        assert_eq!(set.len(), scopes.len());
+        for s in scopes {
+            assert!((0..=32767).contains(&s));
+        }
+        // The inventory covers every named constant exactly once.
+        let names: std::collections::HashSet<_> =
+            MPI_T_CONSTANTS.iter().map(|&(n, _)| n).collect();
+        assert_eq!(names.len(), MPI_T_CONSTANTS.len());
     }
 
     #[test]

@@ -130,6 +130,20 @@ pub const MPI_ERR_PROC_ABORTED: i32 = 59;
 pub const MPI_ERR_VALUE_TOO_LARGE: i32 = 60;
 /// Error class `MPI_ERR_ERRHANDLER` (the value is part of the ABI contract).
 pub const MPI_ERR_ERRHANDLER: i32 = 61;
+/// Error class `MPI_T_ERR_NOT_INITIALIZED`: an MPI_T call before
+/// `MPI_T_init_thread` (the tools interface has its own init epoch).
+pub const MPI_T_ERR_NOT_INITIALIZED: i32 = 62;
+/// Error class `MPI_T_ERR_INVALID_INDEX`: cvar/pvar index out of range.
+pub const MPI_T_ERR_INVALID_INDEX: i32 = 63;
+/// Error class `MPI_T_ERR_INVALID_HANDLE`: stale or never-allocated
+/// cvar/pvar handle.
+pub const MPI_T_ERR_INVALID_HANDLE: i32 = 64;
+/// Error class `MPI_T_ERR_INVALID_SESSION`: stale or never-created pvar
+/// session.
+pub const MPI_T_ERR_INVALID_SESSION: i32 = 65;
+/// Error class `MPI_T_ERR_CVAR_SET_NEVER`: write attempted on a cvar
+/// whose scope is read-only.
+pub const MPI_T_ERR_CVAR_SET_NEVER: i32 = 66;
 /// Last predefined error class (`MPI_ERR_LASTCODE` floor).
 pub const MPI_ERR_LASTCODE: i32 = 128;
 
@@ -164,6 +178,11 @@ pub const ERROR_CLASSES: &[(&str, i32)] = &[
     ("MPI_ERR_PROC_ABORTED", MPI_ERR_PROC_ABORTED),
     ("MPI_ERR_VALUE_TOO_LARGE", MPI_ERR_VALUE_TOO_LARGE),
     ("MPI_ERR_ERRHANDLER", MPI_ERR_ERRHANDLER),
+    ("MPI_T_ERR_NOT_INITIALIZED", MPI_T_ERR_NOT_INITIALIZED),
+    ("MPI_T_ERR_INVALID_INDEX", MPI_T_ERR_INVALID_INDEX),
+    ("MPI_T_ERR_INVALID_HANDLE", MPI_T_ERR_INVALID_HANDLE),
+    ("MPI_T_ERR_INVALID_SESSION", MPI_T_ERR_INVALID_SESSION),
+    ("MPI_T_ERR_CVAR_SET_NEVER", MPI_T_ERR_CVAR_SET_NEVER),
 ];
 
 /// Human-readable message for `MPI_Error_string`.
@@ -194,6 +213,11 @@ pub fn error_string(class: i32) -> &'static str {
         MPI_ERR_SESSION => "Invalid session",
         MPI_ERR_PROC_ABORTED => "A peer process aborted",
         MPI_ERR_UNKNOWN => "Unknown error",
+        MPI_T_ERR_NOT_INITIALIZED => "MPI_T interface not initialized",
+        MPI_T_ERR_INVALID_INDEX => "Invalid MPI_T variable index",
+        MPI_T_ERR_INVALID_HANDLE => "Invalid MPI_T handle",
+        MPI_T_ERR_INVALID_SESSION => "Invalid MPI_T performance session",
+        MPI_T_ERR_CVAR_SET_NEVER => "Control variable cannot be set",
         _ => "Unknown error class",
     }
 }

@@ -1109,6 +1109,55 @@ pub trait MpiAbi: 'static {
     fn info_get(i: Self::Info, key: &str, out: &mut String, flag: &mut bool) -> i32;
     /// `MPI_Info_free`.
     fn info_free(i: &mut Self::Info) -> i32;
+
+    // --- Tools interface (MPI_T) ---
+    //
+    // The MPI_T layer is deliberately handle-free at this boundary:
+    // cvar/pvar handles and pvar sessions are plain `i32` indices in
+    // every ABI (the standard leaves their representation opaque, so the
+    // smallest portable choice wins), which keeps the five configs
+    // bit-identical without per-repr handle tables.
+
+    /// `MPI_T_init_thread`.
+    fn t_init_thread(required: i32, provided: &mut i32) -> i32;
+    /// `MPI_T_finalize`.
+    fn t_finalize() -> i32;
+    /// `MPI_T_cvar_get_num`.
+    fn t_cvar_get_num(num: &mut i32) -> i32;
+    /// `MPI_T_cvar_get_info` (name + verbosity/bind/scope subset).
+    fn t_cvar_get_info(
+        index: i32,
+        name: &mut String,
+        verbosity: &mut i32,
+        bind: &mut i32,
+        scope: &mut i32,
+    ) -> i32;
+    /// `MPI_T_cvar_handle_alloc` (no-object bind, so no obj argument).
+    fn t_cvar_handle_alloc(index: i32, handle: &mut i32) -> i32;
+    /// `MPI_T_cvar_read`.
+    fn t_cvar_read(handle: i32, value: &mut i64) -> i32;
+    /// `MPI_T_cvar_write`.
+    fn t_cvar_write(handle: i32, value: i64) -> i32;
+    /// `MPI_T_pvar_get_num`.
+    fn t_pvar_get_num(num: &mut i32) -> i32;
+    /// `MPI_T_pvar_get_info` (name + verbosity/class/bind subset).
+    fn t_pvar_get_info(
+        index: i32,
+        name: &mut String,
+        verbosity: &mut i32,
+        class: &mut i32,
+        bind: &mut i32,
+    ) -> i32;
+    /// `MPI_T_pvar_session_create`.
+    fn t_pvar_session_create(session: &mut i32) -> i32;
+    /// `MPI_T_pvar_handle_alloc` (no-object bind, so no obj argument).
+    fn t_pvar_handle_alloc(session: i32, index: i32, handle: &mut i32) -> i32;
+    /// `MPI_T_pvar_start` (re-baselines counter-class variables).
+    fn t_pvar_start(session: i32, handle: i32) -> i32;
+    /// `MPI_T_pvar_read`.
+    fn t_pvar_read(session: i32, handle: i32, value: &mut i64) -> i32;
+    /// `MPI_T_pvar_reset`.
+    fn t_pvar_reset(session: i32, handle: i32) -> i32;
 }
 
 /// Map a canonical [`Dt`] to the standard-ABI datatype constant.

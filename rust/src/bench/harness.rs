@@ -209,6 +209,9 @@ pub struct HarnessResult {
     pub cells: Vec<Cell>,
     /// Flat-baseline cells (`latency_8b` / `msgrate_8b` only).
     pub flat_baseline: Vec<Cell>,
+    /// Rank-0 pvar snapshot from the scripted probe exchange
+    /// ([`pvar_probe`]), embedded in the JSON `meta` block.
+    pub probe_pvars: Vec<(&'static str, u64)>,
 }
 
 impl HarnessResult {
@@ -286,7 +289,88 @@ pub fn run_harness(opts: HarnessOpts) -> HarnessResult {
         mode: if opts.smoke { "smoke" } else { "full" },
         cells,
         flat_baseline,
+        probe_pvars: pvar_probe(),
     }
+}
+
+/// A tiny deterministic 2-rank ping-pong whose rank-0 pvar snapshot
+/// rides along in the BENCH json `meta` block — live proof the MPI_T
+/// counters tick, committed next to the numbers they describe. Queue
+/// depths and high-watermarks in the snapshot are timing-dependent;
+/// the posted/byte counters are exact for the scripted exchange.
+pub fn pvar_probe() -> Vec<(&'static str, u64)> {
+    use crate::core::reserved::COMM_WORLD;
+    use crate::core::{datatype, engine, obs};
+    let out = run_job_ok(JobSpec::new(2), |rank| {
+        engine::init().unwrap();
+        let dt = datatype::builtin_id_of_abi(crate::abi::datatypes::MPI_BYTE).unwrap();
+        let mut buf = [0u8; 8];
+        let snap = if rank == 0 {
+            engine::send(
+                buf.as_ptr(),
+                8,
+                dt,
+                1,
+                7,
+                COMM_WORLD,
+                engine::SendMode::Standard,
+            )
+            .unwrap();
+            engine::recv(buf.as_mut_ptr(), 8, dt, 1, 8, COMM_WORLD).unwrap();
+            obs::pvar_snapshot()
+        } else {
+            engine::recv(buf.as_mut_ptr(), 8, dt, 0, 7, COMM_WORLD).unwrap();
+            engine::send(
+                buf.as_ptr(),
+                8,
+                dt,
+                0,
+                8,
+                COMM_WORLD,
+                engine::SendMode::Standard,
+            )
+            .unwrap();
+            Vec::new()
+        };
+        engine::finalize().unwrap();
+        snap
+    });
+    out.into_iter().next().unwrap_or_default()
+}
+
+/// The shared `meta` provenance block of both BENCH documents: what ran,
+/// with which knobs, when, and the probe's pvar snapshot. `--check`
+/// ignores it entirely — the needle-based validators only look inside
+/// the cell arrays — so regenerated and committed documents can differ
+/// here without failing CI.
+fn meta_json(mode: &str, probe_pvars: &[(&'static str, u64)]) -> String {
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut m = String::new();
+    m.push_str("  \"meta\": {\n");
+    m.push_str(&format!("    \"mode\": \"{mode}\",\n"));
+    m.push_str(&format!(
+        "    \"transports\": [{}],\n",
+        TRANSPORTS.map(|t| format!("\"{}\"", t.name())).join(", ")
+    ));
+    m.push_str(&format!(
+        "    \"rndv_threshold_default\": {},\n",
+        crate::core::world::RNDV_THRESHOLD_DEFAULT
+    ));
+    m.push_str(&format!("    \"timestamp_unix\": {ts},\n"));
+    if probe_pvars.is_empty() {
+        m.push_str("    \"probe_pvars\": {}\n");
+    } else {
+        m.push_str("    \"probe_pvars\": {\n");
+        let pv: Vec<String> =
+            probe_pvars.iter().map(|(n, v)| format!("      \"{n}\": {v}")).collect();
+        m.push_str(&pv.join(",\n"));
+        m.push_str("\n    }\n");
+    }
+    m.push_str("  },\n");
+    m
 }
 
 fn json_cell(c: &Cell) -> String {
@@ -305,6 +389,7 @@ pub fn to_json(r: &HarnessResult) -> String {
     out.push_str("  \"pr\": 5,\n");
     out.push_str("  \"generated_by\": \"abibench\",\n");
     out.push_str(&format!("  \"mode\": \"{}\",\n", r.mode));
+    out.push_str(&meta_json(r.mode, &r.probe_pvars));
     out.push_str(&format!(
         "  \"benches\": [{}],\n",
         BENCHES.map(|b| format!("\"{b}\"")).join(", ")
@@ -442,6 +527,9 @@ pub struct BwResult {
     pub sizes: Vec<usize>,
     /// Every (size, config, transport, protocol) point.
     pub cells: Vec<BwCell>,
+    /// Rank-0 pvar snapshot from the scripted probe exchange
+    /// ([`pvar_probe`]), embedded in the JSON `meta` block.
+    pub probe_pvars: Vec<(&'static str, u64)>,
 }
 
 impl BwResult {
@@ -568,7 +656,12 @@ pub fn run_bw_harness(opts: HarnessOpts) -> BwResult {
             }
         }
     }
-    BwResult { mode: if opts.smoke { "smoke" } else { "full" }, sizes, cells }
+    BwResult {
+        mode: if opts.smoke { "smoke" } else { "full" },
+        sizes,
+        cells,
+        probe_pvars: pvar_probe(),
+    }
 }
 
 fn bw_json_cell(c: &BwCell) -> String {
@@ -586,6 +679,7 @@ pub fn bw_to_json(r: &BwResult) -> String {
     out.push_str("  \"pr\": 6,\n");
     out.push_str("  \"generated_by\": \"abibench --bandwidth\",\n");
     out.push_str(&format!("  \"mode\": \"{}\",\n", r.mode));
+    out.push_str(&meta_json(r.mode, &r.probe_pvars));
     out.push_str(&format!(
         "  \"rndv_threshold_default\": {},\n",
         crate::core::world::RNDV_THRESHOLD_DEFAULT
@@ -710,7 +804,7 @@ mod tests {
                 }
             }
         }
-        HarnessResult { mode: "smoke", cells, flat_baseline: flat }
+        HarnessResult { mode: "smoke", cells, flat_baseline: flat, probe_pvars: Vec::new() }
     }
 
     #[test]
@@ -788,7 +882,12 @@ mod tests {
                 }
             }
         }
-        BwResult { mode: if smoke { "smoke" } else { "full" }, sizes, cells }
+        BwResult {
+            mode: if smoke { "smoke" } else { "full" },
+            sizes,
+            cells,
+            probe_pvars: Vec::new(),
+        }
     }
 
     #[test]

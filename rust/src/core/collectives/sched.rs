@@ -389,6 +389,12 @@ fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
                 unpack(&t.dtypes, src, dst, count, dt)?;
             }
         }
+        crate::core::obs::trace(
+            ctx,
+            crate::core::obs::TraceKind::CollStep,
+            s.context,
+            s.pc as u32,
+        );
         s.pc += 1;
     }
     Ok(true)
@@ -437,6 +443,9 @@ pub(crate) fn start_sched(ctx: &RankCtx, rid: ReqId) -> RC<()> {
             }
         }
     };
+    // A successful extraction is a schedule *reuse* — the build cost was
+    // paid once at `*_init`; this is the re-arm the pvar counts.
+    ctx.world.obs.note_sched_reuse();
     let outcome = arm(ctx, &mut sched).and_then(|()| advance(ctx, &mut sched));
     let became_active = {
         let mut t = ctx.tables.borrow_mut();

@@ -82,6 +82,10 @@ pub fn finalize() -> RC<()> {
         ctx.finalized.set(true);
         ctx.note_finalize_one();
         ctx.world.note_finalize();
+        // Merge this rank's trace ring into the world sink while the
+        // job is still quiesced (unbind_rank re-flushes as a catch-all
+        // for sessions-only runs; the flush is idempotent).
+        super::obs::flush_trace(ctx);
         Ok(())
     })
 }
@@ -228,14 +232,18 @@ fn isend_impl(
         return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
     let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
+    ctx.obs.sends_posted.set(ctx.obs.sends_posted.get() + 1);
     if rndv_switch(ctx, count, dt)? {
         // Rendezvous covers synchronous mode for free: the CTS implies
         // the receive matched, and the request completes only after the
-        // full stream is out.
+        // full stream is out. (The rndv pvars bump inside
+        // `begin_rndv_send`, shared by every rendezvous caller.)
         let rndv = super::request::begin_rndv_send(ctx, dst_world, ctx_pt2pt, tag, buf, count, dt)?;
         return Ok(new_request(ctx, ReqKind::RndvSend { rndv }, ReqState::Active));
     }
     let payload = pack_payload(ctx, buf, count, dt)?;
+    ctx.obs.eager_msgs.set(ctx.obs.eager_msgs.get() + 1);
+    ctx.obs.eager_bytes.set(ctx.obs.eager_bytes.get() + payload.len() as u64);
     let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
     let env = Envelope {
         src: ctx.rank as u32,
@@ -326,6 +334,7 @@ fn send_fast(
         return Ok(());
     }
     let (dst_world, ctx_pt2pt) = route_send(ctx, dest, tag, comm)?;
+    ctx.obs.sends_posted.set(ctx.obs.sends_posted.get() + 1);
     if rndv_switch(ctx, count, dt)? {
         let rndv = super::request::begin_rndv_send(ctx, dst_world, ctx_pt2pt, tag, buf, count, dt)?;
         // Spin until the stream drains (CTS received and every chunk
@@ -337,6 +346,8 @@ fn send_fast(
         return Ok(());
     }
     let payload = pack_payload(ctx, buf, count, dt)?;
+    ctx.obs.eager_msgs.set(ctx.obs.eager_msgs.get() + 1);
+    ctx.obs.eager_bytes.set(ctx.obs.eager_bytes.get() + payload.len() as u64);
     let (kind, seq, sync_id) = send_wire_ids(ctx, mode == SendMode::Sync);
     let mut env =
         Some(Envelope { src: ctx.rank as u32, context: ctx_pt2pt, tag, kind, seq, payload });
@@ -382,6 +393,7 @@ fn irecv_impl(
         return Ok(new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())));
     }
     let (src_match, ctx_pt2pt) = route_recv(ctx, src, tag, comm)?;
+    ctx.obs.recvs_posted.set(ctx.obs.recvs_posted.get() + 1);
     Ok(post_recv(ctx, buf as usize, count, dt, src_match, tag, ctx_pt2pt))
 }
 
@@ -446,6 +458,13 @@ fn recv_fast(
         return Ok(StatusCore::empty());
     }
     let (src_match, ctx_pt2pt) = route_recv(ctx, src, tag, comm)?;
+    ctx.obs.recvs_posted.set(ctx.obs.recvs_posted.get() + 1);
+    super::obs::trace(
+        ctx,
+        super::obs::TraceKind::Post,
+        ctx_pt2pt,
+        if tag == MPI_ANY_TAG { u32::MAX } else { tag as u32 },
+    );
     loop {
         let hit = ctx.state.borrow_mut().match_index.take_unexpected(ctx_pt2pt, src_match, tag);
         if let Some(env) = hit {
@@ -638,6 +657,7 @@ fn start_impl(ctx: &RankCtx, rid: ReqId) -> RC<()> {
                 arm_as(ctx, rid, ReqKind::Send, ReqState::Complete(StatusCore::empty()));
                 return Ok(());
             };
+            ctx.obs.sends_posted.set(ctx.obs.sends_posted.get() + 1);
             if rndv_switch(ctx, count, dt)? {
                 let rndv = super::request::begin_rndv_send(
                     ctx,
@@ -652,6 +672,8 @@ fn start_impl(ctx: &RankCtx, rid: ReqId) -> RC<()> {
                 return Ok(());
             }
             let payload = pack_payload(ctx, buf as *const u8, count, dt)?;
+            ctx.obs.eager_msgs.set(ctx.obs.eager_msgs.get() + 1);
+            ctx.obs.eager_bytes.set(ctx.obs.eager_bytes.get() + payload.len() as u64);
             let (msg_kind, seq, sync_id) = send_wire_ids(ctx, sync);
             let (req_kind, state) = match sync_id {
                 Some(id) => (ReqKind::Ssend { sync_id: id }, ReqState::Active),
@@ -674,6 +696,7 @@ fn start_impl(ctx: &RankCtx, rid: ReqId) -> RC<()> {
                 arm_as(ctx, rid, ReqKind::Send, ReqState::Complete(StatusCore::empty()));
                 return Ok(());
             }
+            ctx.obs.recvs_posted.set(ctx.obs.recvs_posted.get() + 1);
             super::request::repost_recv(ctx, rid, buf, count, dt, src, tag, context);
             Ok(())
         }

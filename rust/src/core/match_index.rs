@@ -229,8 +229,10 @@ impl ContextQueues {
 
     /// Earliest-posted receive accepting an arrival from `(src, tag)`,
     /// removed from its queue. Compares the exact bucket's head with the
-    /// first matching wildcard (both FIFOs are post-ordered).
-    fn take_posted(&mut self, src: u32, tag: i32) -> Option<ReqId> {
+    /// first matching wildcard (both FIFOs are post-ordered). The second
+    /// tuple element reports whether the winner came from the wildcard
+    /// FIFO (the `wildcard_matches` pvar).
+    fn take_posted(&mut self, src: u32, tag: i32) -> Option<(ReqId, bool)> {
         if self.n_posted == 0 {
             return None;
         }
@@ -254,9 +256,9 @@ impl ContextQueues {
             if q.is_empty() {
                 self.posted_exact.remove(&key);
             }
-            Some(p.rid)
+            Some((p.rid, false))
         } else {
-            self.posted_wild.remove(wild_pos.unwrap()).map(|p| p.rid)
+            self.posted_wild.remove(wild_pos.unwrap()).map(|p| (p.rid, true))
         }
     }
 
@@ -310,10 +312,37 @@ impl ContextQueues {
 // MatchIndex — the engine-facing surface (indexed or flat)
 // ---------------------------------------------------------------------------
 
+/// Matching-engine statistics backing the pvar registry
+/// ([`crate::core::obs`]). Plain `u64`s — the index lives inside the
+/// rank's single-threaded `RefCell`, so no atomics.
+///
+/// Counting rules (what "attempt" means): one per [`MatchIndex::arrive`]
+/// and [`MatchIndex::post`] call, plus one per *successful*
+/// [`MatchIndex::take_unexpected`] — the blocking-recv fast path
+/// spin-probes `take_unexpected`, so counting failed probes would make
+/// the counter timing-dependent. [`MatchIndex::take_tag_below`] (the RMA
+/// router) is internal traffic and not counted.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatchStats {
+    /// Match attempts (arrivals routed + receives posted + successful
+    /// unexpected takes).
+    pub attempts: u64,
+    /// Successful matches where a wildcard was involved: the taken
+    /// posted receive was wildcard, or the probing pattern was.
+    pub wildcard_matches: u64,
+    /// High-water mark of the unexpected-message count.
+    pub unexpected_hwm: u64,
+    /// High-water mark of the posted-receive count.
+    pub posted_hwm: u64,
+}
+
 /// The per-rank matching engine. All posted receives and unexpected
 /// messages of every context plane live here; see the module docs for
 /// the structure and the invariant.
 pub struct MatchIndex {
+    /// Pvar-registry statistics (attempts, wildcard matches, queue
+    /// high-water marks).
+    pub stats: MatchStats,
     /// `true` = flat-baseline mode (`MPI_ABI_FLAT_MATCH=1`): linear
     /// scans over two flat queues, the seed engine's data layout.
     flat: bool,
@@ -340,6 +369,7 @@ impl MatchIndex {
     /// seed's linear-scan baseline).
     pub fn with_mode(flat: bool) -> MatchIndex {
         MatchIndex {
+            stats: MatchStats::default(),
             flat,
             contexts: FxHashMap::default(),
             arrival_stamp: 0,
@@ -361,6 +391,7 @@ impl MatchIndex {
     /// is removed from the index and returned with the envelope (the
     /// caller delivers); otherwise the envelope is stored unexpected.
     pub fn arrive(&mut self, env: Envelope) -> Option<(ReqId, Envelope)> {
+        self.stats.attempts += 1;
         if self.flat {
             if let Some(i) = self
                 .flat_posted
@@ -368,21 +399,29 @@ impl MatchIndex {
                 .position(|(cx, p)| *cx == env.context && p.accepts(env.src, env.tag))
             {
                 let (_, p) = self.flat_posted.remove(i).unwrap();
+                if p.src == MPI_ANY_SOURCE || p.tag == MPI_ANY_TAG {
+                    self.stats.wildcard_matches += 1;
+                }
                 return Some((p.rid, env));
             }
             self.flat_unexpected.push_back(env);
+            self.note_unexpected_depth();
             return None;
         }
         let cq = self.contexts.entry(env.context).or_default();
-        if let Some(rid) = cq.take_posted(env.src, env.tag) {
+        if let Some((rid, from_wild)) = cq.take_posted(env.src, env.tag) {
             if cq.is_empty() {
                 self.contexts.remove(&env.context);
+            }
+            if from_wild {
+                self.stats.wildcard_matches += 1;
             }
             return Some((rid, env));
         }
         self.arrival_stamp += 1;
         let stamp = self.arrival_stamp;
         cq.push_unexpected(stamp, env);
+        self.note_unexpected_depth();
         None
     }
 
@@ -390,15 +429,20 @@ impl MatchIndex {
     /// an unexpected message matches, it is removed and returned (the
     /// caller delivers into `rid`); otherwise the receive is stored.
     pub fn post(&mut self, rid: ReqId, context: u32, src: i32, tag: i32) -> Option<Envelope> {
+        self.stats.attempts += 1;
         if self.flat {
             if let Some(i) = self
                 .flat_unexpected
                 .iter()
                 .position(|e| e.matches(context, src, tag))
             {
+                if src == MPI_ANY_SOURCE || tag == MPI_ANY_TAG {
+                    self.stats.wildcard_matches += 1;
+                }
                 return self.flat_unexpected.remove(i);
             }
             self.flat_posted.push_back((context, PostedRecv { rid, stamp: 0, src, tag }));
+            self.note_posted_depth();
             return None;
         }
         let cq = self.contexts.entry(context).or_default();
@@ -406,11 +450,15 @@ impl MatchIndex {
             if cq.is_empty() {
                 self.contexts.remove(&context);
             }
+            if src == MPI_ANY_SOURCE || tag == MPI_ANY_TAG {
+                self.stats.wildcard_matches += 1;
+            }
             return Some(env);
         }
         self.post_stamp += 1;
         let stamp = self.post_stamp;
         cq.push_posted(PostedRecv { rid, stamp, src, tag });
+        self.note_posted_depth();
         None
     }
 
@@ -445,14 +493,22 @@ impl MatchIndex {
     /// RMA internals (which own their buffers and bypass the request
     /// table) and by the blocking-recv fast path.
     pub fn take_unexpected(&mut self, context: u32, src: i32, tag: i32) -> Option<Envelope> {
-        if self.flat {
+        let env = if self.flat {
             let i = self.flat_unexpected.iter().position(|e| e.matches(context, src, tag))?;
-            return self.flat_unexpected.remove(i);
-        }
-        let cq = self.contexts.get_mut(&context)?;
-        let env = cq.take_unexpected(src, tag)?;
-        if cq.is_empty() {
-            self.contexts.remove(&context);
+            self.flat_unexpected.remove(i)?
+        } else {
+            let cq = self.contexts.get_mut(&context)?;
+            let env = cq.take_unexpected(src, tag)?;
+            if cq.is_empty() {
+                self.contexts.remove(&context);
+            }
+            env
+        };
+        // Only successful takes count: the blocking-recv fast path
+        // spin-probes this, and failed probes are timing-dependent.
+        self.stats.attempts += 1;
+        if src == MPI_ANY_SOURCE || tag == MPI_ANY_TAG {
+            self.stats.wildcard_matches += 1;
         }
         Some(env)
     }
@@ -499,6 +555,24 @@ impl MatchIndex {
             return self.flat_posted.len();
         }
         self.contexts.values().map(|c| c.n_posted).sum()
+    }
+
+    /// Refresh the unexpected-queue high-water mark after a store.
+    /// O(#contexts) in indexed mode — stores are already off the O(1)
+    /// happy path, and context counts are small.
+    fn note_unexpected_depth(&mut self) {
+        let depth = self.unexpected_len() as u64;
+        if depth > self.stats.unexpected_hwm {
+            self.stats.unexpected_hwm = depth;
+        }
+    }
+
+    /// Refresh the posted-queue high-water mark after a store.
+    fn note_posted_depth(&mut self) {
+        let depth = self.posted_len() as u64;
+        if depth > self.stats.posted_hwm {
+            self.stats.posted_hwm = depth;
+        }
     }
 }
 

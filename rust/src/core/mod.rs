@@ -23,6 +23,7 @@ pub mod errh;
 pub mod group;
 pub mod info;
 pub mod match_index;
+pub mod obs;
 pub mod op;
 pub mod request;
 pub mod rma;

@@ -1,0 +1,852 @@
+//! The observability subsystem: pvar/cvar registry, the MPI_T tools
+//! interface, and the engine event tracer.
+//!
+//! The paper's strongest use case for a standard ABI is tools — a
+//! profiler must attach to *any* implementation without recompiling.
+//! This module is the engine side of that story:
+//!
+//! * **Performance variables (pvars)** — per-rank counters the engine
+//!   bumps on its hot paths ([`ObsRank`]) plus job-wide atomics that
+//!   used to live as ad-hoc one-offs on `World` ([`WorldObs`]). The
+//!   registry ([`PVARS`]) pins index order: it is ABI surface, like a
+//!   constants table.
+//! * **Control variables (cvars)** — the existing `rndv_threshold` and
+//!   `flat_match` knobs plus the trace flag, readable (and for the
+//!   first two, writable) through [`CVARS`].
+//! * **The MPI_T subset** — `MPI_T_init_thread` through
+//!   `MPI_T_pvar_reset`, with its own init refcount separate from
+//!   `MPI_Init` (MPI-4 §15.3: tools attach before MPI starts). MPI_T
+//!   errors return their code directly — they never invoke a
+//!   communicator error handler.
+//! * **The trace ring** — compact timestamped event records pushed by
+//!   [`trace`]; one branch on a cached bool when disabled. Rings merge
+//!   into the world-level sink at finalize/unbind and render as Chrome
+//!   trace-event JSON ([`chrome_trace_json`]), one lane per rank.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::world::{with_ctx, RankCtx};
+use super::{err, RC};
+use crate::abi::constants as k;
+
+// ---------------------------------------------------------------------------
+// Job-wide counters (the migrated World one-offs)
+// ---------------------------------------------------------------------------
+
+/// Job-global observability counters, embedded in
+/// [`crate::core::world::World`]. These were ad-hoc fields on `World`
+/// before the registry existed; they now live here so every counter in
+/// the engine uses one mechanism with one memory-ordering policy:
+/// **Relaxed** — counters need atomicity, not ordering, and none of
+/// them guards any other memory.
+#[derive(Default)]
+pub struct WorldObs {
+    /// Payload bytes currently in flight inside rendezvous chunks
+    /// (incremented at chunk enqueue, decremented at consume).
+    pub rndv_inflight: AtomicU64,
+    /// High-water mark of `rndv_inflight` — the bounded-buffering
+    /// witness `tests/rendezvous.rs` asserts on.
+    pub rndv_inflight_peak: AtomicU64,
+    /// Collective-schedule constructions in this job (all ranks).
+    pub sched_builds: AtomicU64,
+    /// Collective-schedule re-arms (`MPI_Start` on a persistent
+    /// collective): the reuse the schedule engine exists to deliver.
+    pub sched_reuses: AtomicU64,
+}
+
+impl WorldObs {
+    /// Fresh (all-zero) counters for a new world.
+    pub fn new() -> WorldObs {
+        WorldObs::default()
+    }
+
+    /// Account `bytes` of rendezvous chunk payload entering the fabric.
+    pub(crate) fn note_rndv_enqueue(&self, bytes: u64) {
+        let now = self.rndv_inflight.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.rndv_inflight_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Account `bytes` of rendezvous chunk payload consumed at a receiver.
+    pub(crate) fn note_rndv_consume(&self, bytes: u64) {
+        self.rndv_inflight.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one collective-schedule construction.
+    pub(crate) fn note_sched_build(&self) {
+        self.sched_builds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one collective-schedule re-arm.
+    pub(crate) fn note_sched_reuse(&self) {
+        self.sched_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank counters + MPI_T state + trace ring
+// ---------------------------------------------------------------------------
+
+/// Per-rank observability state, one per [`RankCtx`]. Counters are
+/// plain [`Cell`]s — each rank is single-threaded, so no atomics —
+/// bumped by the engine's pt2pt paths and read through the pvar
+/// registry.
+pub struct ObsRank {
+    /// Point-to-point sends posted (eager + rendezvous; `MPI_PROC_NULL`
+    /// sends carry no message and are not counted).
+    pub sends_posted: Cell<u64>,
+    /// Point-to-point receives posted (blocking, nonblocking, and
+    /// persistent starts; `MPI_PROC_NULL` excluded likewise).
+    pub recvs_posted: Cell<u64>,
+    /// Sends that went eager (at or below the threshold).
+    pub eager_msgs: Cell<u64>,
+    /// Packed payload bytes of those eager sends.
+    pub eager_bytes: Cell<u64>,
+    /// Sends that went rendezvous (RTS/CTS + chunk streaming).
+    pub rndv_msgs: Cell<u64>,
+    /// Announced packed bytes of those rendezvous sends.
+    pub rndv_bytes: Cell<u64>,
+    /// High-water mark of any single destination's deferred-send queue
+    /// (transport backpressure depth).
+    pub pending_send_hwm: Cell<u64>,
+    /// `MPI_T_init_thread` refcount: every MPI_T call below errors
+    /// `MPI_T_ERR_NOT_INITIALIZED` while this is zero.
+    t_init_count: Cell<u32>,
+    /// Sessions and handles of the tools interface.
+    t_state: RefCell<TState>,
+    /// Tracing enabled for this rank (copied from the world at bind —
+    /// the one branch the disabled case pays).
+    pub trace_on: Cell<bool>,
+    /// The event ring (only touched when `trace_on`).
+    ring: RefCell<TraceRing>,
+}
+
+impl ObsRank {
+    /// Fresh per-rank state; `trace_on` comes from the world's flag at
+    /// bind time.
+    pub fn new(trace_on: bool) -> ObsRank {
+        ObsRank {
+            sends_posted: Cell::new(0),
+            recvs_posted: Cell::new(0),
+            eager_msgs: Cell::new(0),
+            eager_bytes: Cell::new(0),
+            rndv_msgs: Cell::new(0),
+            rndv_bytes: Cell::new(0),
+            pending_send_hwm: Cell::new(0),
+            t_init_count: Cell::new(0),
+            t_state: RefCell::new(TState::default()),
+            trace_on: Cell::new(trace_on),
+            ring: RefCell::new(TraceRing::new(TRACE_RING_CAP)),
+        }
+    }
+
+    /// Fetch-max a [`Cell`] high-water mark.
+    #[inline]
+    pub(crate) fn note_pending_depth(&self, depth: u64) {
+        if depth > self.pending_send_hwm.get() {
+            self.pending_send_hwm.set(depth);
+        }
+    }
+}
+
+/// MPI_T sessions and handles of one rank. Handles are indices into
+/// these vectors; the subset has no free calls, so entries live until
+/// the last `MPI_T_finalize` clears everything (after which stale
+/// handles fail range checks with the proper `MPI_T_ERR_*`).
+#[derive(Default)]
+struct TState {
+    /// Pvar sessions; a session is its vector of bound handles.
+    sessions: Vec<PvarSession>,
+    /// Cvar handles: each is just the cvar index it was bound to.
+    cvar_handles: Vec<usize>,
+}
+
+#[derive(Default)]
+struct PvarSession {
+    handles: Vec<PvarHandle>,
+}
+
+/// One bound pvar handle. COUNTER-class variables read relative to
+/// `baseline` (set at alloc, moved by start/reset), so a tool measures
+/// *its* interval regardless of traffic before it attached — this is
+/// also what makes the exact-count battery robust to setup exchanges.
+struct PvarHandle {
+    index: usize,
+    baseline: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// Descriptor of one performance variable.
+pub struct PvarDesc {
+    /// Variable name (`MPI_T_pvar_get_info`).
+    pub name: &'static str,
+    /// Variable class (`MPI_T_PVAR_CLASS_*`).
+    pub class: i32,
+    /// Verbosity level (`MPI_T_VERBOSITY_*`).
+    pub verbosity: i32,
+}
+
+/// The pvar registry, in **fixed index order** — indices are ABI
+/// surface (a tool that caches index 4 must keep reading rendezvous
+/// message counts), so new variables append, never insert.
+pub const PVARS: &[PvarDesc] = &[
+    PvarDesc {
+        name: "sends_posted",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "recvs_posted",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "eager_msgs",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "eager_bytes",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "rndv_msgs",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "rndv_bytes",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "unexpected_depth",
+        class: k::MPI_T_PVAR_CLASS_LEVEL,
+        verbosity: k::MPI_T_VERBOSITY_USER_DETAIL,
+    },
+    PvarDesc {
+        name: "unexpected_hwm",
+        class: k::MPI_T_PVAR_CLASS_HIGHWATERMARK,
+        verbosity: k::MPI_T_VERBOSITY_USER_DETAIL,
+    },
+    PvarDesc {
+        name: "posted_depth",
+        class: k::MPI_T_PVAR_CLASS_LEVEL,
+        verbosity: k::MPI_T_VERBOSITY_USER_DETAIL,
+    },
+    PvarDesc {
+        name: "posted_hwm",
+        class: k::MPI_T_PVAR_CLASS_HIGHWATERMARK,
+        verbosity: k::MPI_T_VERBOSITY_USER_DETAIL,
+    },
+    PvarDesc {
+        name: "match_attempts",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "wildcard_matches",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "pending_send_depth",
+        class: k::MPI_T_PVAR_CLASS_LEVEL,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "pending_send_hwm",
+        class: k::MPI_T_PVAR_CLASS_HIGHWATERMARK,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "rndv_inflight_peak",
+        class: k::MPI_T_PVAR_CLASS_HIGHWATERMARK,
+        verbosity: k::MPI_T_VERBOSITY_MPIDEV_BASIC,
+    },
+    PvarDesc {
+        name: "sched_builds",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_MPIDEV_BASIC,
+    },
+    PvarDesc {
+        name: "sched_reuses",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_MPIDEV_BASIC,
+    },
+];
+
+/// Descriptor of one control variable.
+pub struct CvarDesc {
+    /// Variable name (`MPI_T_cvar_get_info`).
+    pub name: &'static str,
+    /// Scope (`MPI_T_SCOPE_LOCAL` = writable per rank,
+    /// `MPI_T_SCOPE_READONLY` = write returns
+    /// `MPI_T_ERR_CVAR_SET_NEVER`).
+    pub scope: i32,
+    /// Verbosity level.
+    pub verbosity: i32,
+}
+
+/// Cvar index of `rndv_threshold`.
+pub const CVAR_RNDV_THRESHOLD: usize = 0;
+/// Cvar index of `flat_match`.
+pub const CVAR_FLAT_MATCH: usize = 1;
+/// Cvar index of `trace_enabled`.
+pub const CVAR_TRACE_ENABLED: usize = 2;
+
+/// The cvar registry, fixed index order like [`PVARS`]. Writing
+/// `rndv_threshold` retargets **this rank's** live protocol switch (and
+/// the world default for later binds); writing `flat_match` only
+/// changes the world default — a rank's matcher is fixed at bind.
+pub const CVARS: &[CvarDesc] = &[
+    CvarDesc {
+        name: "rndv_threshold",
+        scope: k::MPI_T_SCOPE_LOCAL,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_BASIC,
+    },
+    CvarDesc {
+        name: "flat_match",
+        scope: k::MPI_T_SCOPE_LOCAL,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_BASIC,
+    },
+    CvarDesc {
+        name: "trace_enabled",
+        scope: k::MPI_T_SCOPE_READONLY,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+];
+
+/// Read pvar `i`'s current absolute value for this rank.
+fn pvar_value(ctx: &RankCtx, i: usize) -> u64 {
+    let o = &ctx.obs;
+    match i {
+        0 => o.sends_posted.get(),
+        1 => o.recvs_posted.get(),
+        2 => o.eager_msgs.get(),
+        3 => o.eager_bytes.get(),
+        4 => o.rndv_msgs.get(),
+        5 => o.rndv_bytes.get(),
+        6 => ctx.state.borrow().match_index.unexpected_len() as u64,
+        7 => ctx.state.borrow().match_index.stats.unexpected_hwm,
+        8 => ctx.state.borrow().match_index.posted_len() as u64,
+        9 => ctx.state.borrow().match_index.stats.posted_hwm,
+        10 => ctx.state.borrow().match_index.stats.attempts,
+        11 => ctx.state.borrow().match_index.stats.wildcard_matches,
+        12 => ctx.state.borrow().pending_sends.values().map(|q| q.len() as u64).sum(),
+        13 => o.pending_send_hwm.get(),
+        14 => ctx.world.obs.rndv_inflight_peak.load(Ordering::Relaxed),
+        15 => ctx.world.obs.sched_builds.load(Ordering::Relaxed),
+        16 => ctx.world.obs.sched_reuses.load(Ordering::Relaxed),
+        _ => 0,
+    }
+}
+
+/// Take a named snapshot of every pvar (abibench provenance blocks and
+/// diagnostics — no MPI_T session needed, values are absolute).
+pub fn pvar_snapshot() -> Vec<(&'static str, u64)> {
+    super::world::try_ctx(|ctx| match ctx {
+        Some(ctx) => {
+            (0..PVARS.len()).map(|i| (PVARS[i].name, pvar_value(ctx, i))).collect()
+        }
+        None => Vec::new(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The MPI_T call subset (engine level)
+// ---------------------------------------------------------------------------
+
+fn t_check(ctx: &RankCtx) -> RC<()> {
+    if ctx.obs.t_init_count.get() == 0 {
+        return Err(err!(MPI_T_ERR_NOT_INITIALIZED));
+    }
+    Ok(())
+}
+
+/// `MPI_T_init_thread`: open one tools-interface epoch (refcounted,
+/// independent of `MPI_Init`). Returns the provided thread level —
+/// ranks are single-threaded here, so `MPI_THREAD_SINGLE`.
+pub fn t_init_thread(_required: i32) -> RC<i32> {
+    with_ctx(|ctx| {
+        ctx.obs.t_init_count.set(ctx.obs.t_init_count.get() + 1);
+        Ok(k::MPI_THREAD_SINGLE)
+    })
+}
+
+/// `MPI_T_finalize`: close one epoch; the last close invalidates every
+/// session and handle.
+pub fn t_finalize() -> RC<()> {
+    with_ctx(|ctx| {
+        let n = ctx.obs.t_init_count.get();
+        if n == 0 {
+            return Err(err!(MPI_T_ERR_NOT_INITIALIZED));
+        }
+        ctx.obs.t_init_count.set(n - 1);
+        if n == 1 {
+            let mut st = ctx.obs.t_state.borrow_mut();
+            st.sessions.clear();
+            st.cvar_handles.clear();
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_T_cvar_get_num`.
+pub fn t_cvar_get_num() -> RC<i32> {
+    with_ctx(|ctx| {
+        t_check(ctx)?;
+        Ok(CVARS.len() as i32)
+    })
+}
+
+/// `MPI_T_cvar_get_info`: (name, verbosity, bind, scope).
+pub fn t_cvar_get_info(index: i32) -> RC<(String, i32, i32, i32)> {
+    with_ctx(|ctx| {
+        t_check(ctx)?;
+        let d = usize::try_from(index)
+            .ok()
+            .and_then(|i| CVARS.get(i))
+            .ok_or(err!(MPI_T_ERR_INVALID_INDEX))?;
+        Ok((d.name.to_string(), d.verbosity, k::MPI_T_BIND_NO_OBJECT, d.scope))
+    })
+}
+
+/// `MPI_T_cvar_handle_alloc` (bind is always `MPI_T_BIND_NO_OBJECT`).
+pub fn t_cvar_handle_alloc(index: i32) -> RC<i32> {
+    with_ctx(|ctx| {
+        t_check(ctx)?;
+        let i = usize::try_from(index).ok().filter(|&i| i < CVARS.len());
+        let i = i.ok_or(err!(MPI_T_ERR_INVALID_INDEX))?;
+        let mut st = ctx.obs.t_state.borrow_mut();
+        st.cvar_handles.push(i);
+        Ok(st.cvar_handles.len() as i32 - 1)
+    })
+}
+
+fn cvar_of_handle(ctx: &RankCtx, handle: i32) -> RC<usize> {
+    t_check(ctx)?;
+    usize::try_from(handle)
+        .ok()
+        .and_then(|h| ctx.obs.t_state.borrow().cvar_handles.get(h).copied())
+        .ok_or(err!(MPI_T_ERR_INVALID_HANDLE))
+}
+
+/// `MPI_T_cvar_read`.
+pub fn t_cvar_read(handle: i32) -> RC<i64> {
+    with_ctx(|ctx| {
+        let i = cvar_of_handle(ctx, handle)?;
+        Ok(match i {
+            CVAR_RNDV_THRESHOLD => ctx.state.borrow().rndv_threshold as i64,
+            CVAR_FLAT_MATCH => ctx.state.borrow().match_index.is_flat() as i64,
+            CVAR_TRACE_ENABLED => ctx.obs.trace_on.get() as i64,
+            _ => 0,
+        })
+    })
+}
+
+/// `MPI_T_cvar_write`. `rndv_threshold` takes effect immediately on
+/// this rank's protocol switch; `flat_match` only changes the world
+/// default for ranks bound later (a live matcher is fixed at bind);
+/// `trace_enabled` is read-only.
+pub fn t_cvar_write(handle: i32, value: i64) -> RC<()> {
+    with_ctx(|ctx| {
+        let i = cvar_of_handle(ctx, handle)?;
+        if CVARS[i].scope == k::MPI_T_SCOPE_READONLY || CVARS[i].scope == k::MPI_T_SCOPE_CONSTANT {
+            return Err(err!(MPI_T_ERR_CVAR_SET_NEVER));
+        }
+        if value < 0 {
+            return Err(err!(MPI_ERR_ARG));
+        }
+        match i {
+            CVAR_RNDV_THRESHOLD => {
+                ctx.world.set_rndv_threshold(value as usize);
+                ctx.state.borrow_mut().rndv_threshold = value as usize;
+            }
+            CVAR_FLAT_MATCH => ctx.world.set_flat_match(value != 0),
+            _ => {}
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_T_pvar_get_num`.
+pub fn t_pvar_get_num() -> RC<i32> {
+    with_ctx(|ctx| {
+        t_check(ctx)?;
+        Ok(PVARS.len() as i32)
+    })
+}
+
+/// `MPI_T_pvar_get_info`: (name, verbosity, class, bind).
+pub fn t_pvar_get_info(index: i32) -> RC<(String, i32, i32, i32)> {
+    with_ctx(|ctx| {
+        t_check(ctx)?;
+        let d = usize::try_from(index)
+            .ok()
+            .and_then(|i| PVARS.get(i))
+            .ok_or(err!(MPI_T_ERR_INVALID_INDEX))?;
+        Ok((d.name.to_string(), d.verbosity, d.class, k::MPI_T_BIND_NO_OBJECT))
+    })
+}
+
+/// `MPI_T_pvar_session_create`.
+pub fn t_pvar_session_create() -> RC<i32> {
+    with_ctx(|ctx| {
+        t_check(ctx)?;
+        let mut st = ctx.obs.t_state.borrow_mut();
+        st.sessions.push(PvarSession::default());
+        Ok(st.sessions.len() as i32 - 1)
+    })
+}
+
+fn check_session(ctx: &RankCtx, session: i32) -> RC<usize> {
+    t_check(ctx)?;
+    usize::try_from(session)
+        .ok()
+        .filter(|&s| s < ctx.obs.t_state.borrow().sessions.len())
+        .ok_or(err!(MPI_T_ERR_INVALID_SESSION))
+}
+
+/// `MPI_T_pvar_handle_alloc`: bind pvar `index` into `session`. The
+/// handle's COUNTER baseline starts here.
+pub fn t_pvar_handle_alloc(session: i32, index: i32) -> RC<i32> {
+    with_ctx(|ctx| {
+        let s = check_session(ctx, session)?;
+        let i = usize::try_from(index).ok().filter(|&i| i < PVARS.len());
+        let i = i.ok_or(err!(MPI_T_ERR_INVALID_INDEX))?;
+        let baseline = pvar_value(ctx, i);
+        let mut st = ctx.obs.t_state.borrow_mut();
+        let handles = &mut st.sessions[s].handles;
+        handles.push(PvarHandle { index: i, baseline });
+        Ok(handles.len() as i32 - 1)
+    })
+}
+
+/// Resolve (session, handle) to the handle's pvar index, checking both.
+fn resolve_handle(ctx: &RankCtx, session: i32, handle: i32) -> RC<(usize, usize)> {
+    let s = check_session(ctx, session)?;
+    let h = usize::try_from(handle)
+        .ok()
+        .filter(|&h| h < ctx.obs.t_state.borrow().sessions[s].handles.len())
+        .ok_or(err!(MPI_T_ERR_INVALID_HANDLE))?;
+    Ok((s, h))
+}
+
+/// `MPI_T_pvar_start`: re-baseline a COUNTER handle so reads measure
+/// from this moment (LEVEL/HIGHWATERMARK variables are continuous —
+/// start succeeds without effect).
+pub fn t_pvar_start(session: i32, handle: i32) -> RC<()> {
+    with_ctx(|ctx| {
+        let (s, h) = resolve_handle(ctx, session, handle)?;
+        let i = ctx.obs.t_state.borrow().sessions[s].handles[h].index;
+        if PVARS[i].class == k::MPI_T_PVAR_CLASS_COUNTER {
+            let v = pvar_value(ctx, i);
+            ctx.obs.t_state.borrow_mut().sessions[s].handles[h].baseline = v;
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_T_pvar_read`: COUNTER handles read relative to their baseline;
+/// LEVEL and HIGHWATERMARK handles read absolute.
+pub fn t_pvar_read(session: i32, handle: i32) -> RC<i64> {
+    with_ctx(|ctx| {
+        let (s, h) = resolve_handle(ctx, session, handle)?;
+        let (i, baseline) = {
+            let st = ctx.obs.t_state.borrow();
+            let ph = &st.sessions[s].handles[h];
+            (ph.index, ph.baseline)
+        };
+        let v = pvar_value(ctx, i);
+        Ok(if PVARS[i].class == k::MPI_T_PVAR_CLASS_COUNTER {
+            v.saturating_sub(baseline) as i64
+        } else {
+            v as i64
+        })
+    })
+}
+
+/// `MPI_T_pvar_reset`: zero a COUNTER handle's view (re-baseline);
+/// no-op success for the other classes.
+pub fn t_pvar_reset(session: i32, handle: i32) -> RC<()> {
+    t_pvar_start(session, handle)
+}
+
+// ---------------------------------------------------------------------------
+// The trace ring
+// ---------------------------------------------------------------------------
+
+/// What happened, compactly. The two payload words `a`/`b` are
+/// kind-specific (documented per variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A receive was posted. `a` = context plane, `b` = tag
+    /// (`u32::MAX` for `MPI_ANY_TAG`).
+    Post,
+    /// A message matched a receive. `a` = source world rank, `b` = tag.
+    Match,
+    /// Rendezvous RTS sent. `a` = destination world rank, `b` =
+    /// announced total bytes (saturating).
+    Rts,
+    /// Rendezvous CTS sent (stream opened). `a` = sender world rank,
+    /// `b` = initial credit bytes (saturating).
+    Cts,
+    /// Mid-stream credit re-grant. `a` = sender world rank, `b` = new
+    /// cumulative credit bytes (saturating).
+    ChunkGrant,
+    /// A request completed and was retired. `a` = request id, `b` = 0.
+    Complete,
+    /// One collective-schedule step executed. `a` = context plane,
+    /// `b` = program counter of the executed step.
+    CollStep,
+    /// RMA epoch transition. `a` = window id, `b` = 0 fence / 1 lock /
+    /// 2 unlock.
+    RmaEpoch,
+}
+
+impl TraceKind {
+    /// Chrome trace-event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Post => "post",
+            TraceKind::Match => "match",
+            TraceKind::Rts => "rts",
+            TraceKind::Cts => "cts",
+            TraceKind::ChunkGrant => "chunk-grant",
+            TraceKind::Complete => "complete",
+            TraceKind::CollStep => "coll-step",
+            TraceKind::RmaEpoch => "rma-epoch",
+        }
+    }
+}
+
+/// One compact trace record: 16 bytes.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Nanoseconds since job start.
+    pub ts_ns: u64,
+    /// Event kind.
+    pub kind: TraceKind,
+    /// Kind-specific payload word (see [`TraceKind`]).
+    pub a: u32,
+    /// Kind-specific payload word (see [`TraceKind`]).
+    pub b: u32,
+}
+
+/// Ring capacity per rank: bounded memory however long the job runs;
+/// the oldest events are overwritten and counted as dropped.
+pub const TRACE_RING_CAP: usize = 65536;
+
+/// Fixed-capacity event ring. Chronological drain even after wrap.
+pub struct TraceRing {
+    events: Vec<TraceEvent>,
+    cap: usize,
+    /// Overwrite position once full (index of the *oldest* event).
+    head: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// Empty ring with room for `cap` events.
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { events: Vec::new(), cap: cap.max(1), head: 0, dropped: 0 }
+    }
+
+    /// Append, overwriting the oldest event when full.
+    pub fn push(&mut self, e: TraceEvent) {
+        if self.events.len() < self.cap {
+            self.events.push(e);
+        } else {
+            self.events[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events recorded (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take everything, oldest first, leaving the ring empty.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        let head = std::mem::take(&mut self.head);
+        let mut v = std::mem::take(&mut self.events);
+        v.rotate_left(head);
+        v
+    }
+}
+
+/// Record one event — **the** hot-path entry: one branch on a cached
+/// bool when tracing is off.
+#[inline(always)]
+pub(crate) fn trace(ctx: &RankCtx, kind: TraceKind, a: u32, b: u32) {
+    if !ctx.obs.trace_on.get() {
+        return;
+    }
+    trace_slow(ctx, kind, a, b);
+}
+
+#[cold]
+fn trace_slow(ctx: &RankCtx, kind: TraceKind, a: u32, b: u32) {
+    let ts_ns = ctx.world.elapsed_ns();
+    ctx.obs.ring.borrow_mut().push(TraceEvent { ts_ns, kind, a, b });
+}
+
+/// Move this rank's recorded events into the world-level sink (called
+/// at finalize and again — idempotently — at unbind, so sessions-only
+/// apps are covered too). Empty rings push nothing.
+pub(crate) fn flush_trace(ctx: &RankCtx) {
+    let events = {
+        let mut ring = ctx.obs.ring.borrow_mut();
+        if ring.is_empty() {
+            return;
+        }
+        ring.drain()
+    };
+    ctx.world.push_trace(ctx.rank, events);
+}
+
+/// The world-level merge sink: per-rank event batches, appended at
+/// flush time, drained by the launcher's traced run path.
+pub type TraceSink = Mutex<Vec<(usize, Vec<TraceEvent>)>>;
+
+/// Render merged per-rank events as Chrome trace-event JSON (open in
+/// `chrome://tracing` / Perfetto): instant events, one lane (`tid`)
+/// per rank, timestamps in microseconds.
+pub fn chrome_trace_json(ranks: &[(usize, Vec<TraceEvent>)]) -> String {
+    let mut out = String::with_capacity(256 + ranks.iter().map(|(_, v)| v.len() * 96).sum::<usize>());
+    out.push_str("{\n  \"displayTimeUnit\": \"ns\",\n  \"traceEvents\": [");
+    let mut first = true;
+    for (rank, events) in ranks {
+        for e in events {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            // ts is in microseconds by the trace-event spec; keep ns
+            // resolution via the fractional part.
+            let us = e.ts_ns as f64 / 1000.0;
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"ts\": {us:.3}, \
+                 \"pid\": 0, \"tid\": {rank}, \"args\": {{\"a\": {}, \"b\": {}}}}}",
+                e.kind.name(),
+                e.a,
+                e.b
+            ));
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Read the `MPI_ABI_TRACE` env flag (value `1` enables tracing).
+pub fn trace_env() -> bool {
+    std::env::var("MPI_ABI_TRACE").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: u64) -> TraceEvent {
+        TraceEvent { ts_ns: ts, kind: TraceKind::Post, a: 0, b: 0 }
+    }
+
+    #[test]
+    fn ring_drains_chronologically_after_wrap() {
+        let mut r = TraceRing::new(4);
+        for t in 0..6 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.dropped(), 2);
+        let got: Vec<u64> = r.drain().into_iter().map(|e| e.ts_ns).collect();
+        assert_eq!(got, vec![2, 3, 4, 5]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn ring_below_capacity_keeps_order() {
+        let mut r = TraceRing::new(8);
+        for t in [5, 1, 9] {
+            r.push(ev(t));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0);
+        let got: Vec<u64> = r.drain().into_iter().map(|e| e.ts_ns).collect();
+        assert_eq!(got, vec![5, 1, 9]);
+    }
+
+    #[test]
+    fn registry_indices_are_stable_abi_surface() {
+        // The exact order tools rely on; growing the table appends.
+        let names: Vec<&str> = PVARS.iter().map(|p| p.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "sends_posted",
+                "recvs_posted",
+                "eager_msgs",
+                "eager_bytes",
+                "rndv_msgs",
+                "rndv_bytes",
+                "unexpected_depth",
+                "unexpected_hwm",
+                "posted_depth",
+                "posted_hwm",
+                "match_attempts",
+                "wildcard_matches",
+                "pending_send_depth",
+                "pending_send_hwm",
+                "rndv_inflight_peak",
+                "sched_builds",
+                "sched_reuses",
+            ]
+        );
+        assert_eq!(CVARS[CVAR_RNDV_THRESHOLD].name, "rndv_threshold");
+        assert_eq!(CVARS[CVAR_FLAT_MATCH].name, "flat_match");
+        assert_eq!(CVARS[CVAR_TRACE_ENABLED].name, "trace_enabled");
+        assert_eq!(CVARS[CVAR_TRACE_ENABLED].scope, k::MPI_T_SCOPE_READONLY);
+        // Every class and verbosity is a legal constant.
+        for p in PVARS {
+            assert!((1..=3).contains(&p.class), "{}", p.name);
+            assert!((1..=9).contains(&p.verbosity), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let events = vec![(
+            1usize,
+            vec![
+                TraceEvent { ts_ns: 1500, kind: TraceKind::Rts, a: 2, b: 4096 },
+                TraceEvent { ts_ns: 2500, kind: TraceKind::Complete, a: 7, b: 0 },
+            ],
+        )];
+        let json = chrome_trace_json(&events);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"name\": \"rts\""));
+        assert!(json.contains("\"ts\": 1.500"));
+        assert!(json.contains("\"tid\": 1"));
+        assert!(json.contains("\"ph\": \"i\""));
+        // Empty input still renders a valid document.
+        assert!(chrome_trace_json(&[]).contains("\"traceEvents\": [\n  ]"));
+    }
+}

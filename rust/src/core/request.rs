@@ -35,10 +35,27 @@
 //!
 //! [`Schedule`]: crate::core::collectives::sched::Schedule
 
+use super::obs::{trace, TraceKind};
 use super::transport::{Envelope, MsgKind, Payload};
 use super::world::{with_ctx, RankCtx};
 use super::{err, DtId, ReqId, RC};
-use crate::abi::constants::MPI_PROC_NULL;
+use crate::abi::constants::{MPI_ANY_TAG, MPI_PROC_NULL};
+
+/// Clamp a `u64` trace payload into the event record's `u32` word.
+#[inline]
+fn clamp32(v: u64) -> u32 {
+    v.min(u32::MAX as u64) as u32
+}
+
+/// Trace encoding of a receive's tag pattern (`MPI_ANY_TAG` → max).
+#[inline]
+fn trace_tag(tag: i32) -> u32 {
+    if tag == MPI_ANY_TAG {
+        u32::MAX
+    } else {
+        tag as u32
+    }
+}
 
 /// Rendezvous chunk size in packed bytes: each [`MsgKind::RndvData`]
 /// envelope carries at most this much payload, so peak buffering for a
@@ -291,6 +308,7 @@ pub(crate) fn post_recv(
     context: u32,
 ) -> ReqId {
     let id = new_request(ctx, ReqKind::Recv { buf, count, dt, src, tag, context }, ReqState::Active);
+    trace(ctx, TraceKind::Post, context, trace_tag(tag));
     let hit = ctx.state.borrow_mut().match_index.post(id, context, src, tag);
     if let Some(env) = hit {
         deliver(ctx, id, env);
@@ -317,6 +335,7 @@ pub(crate) fn repost_recv(
             req.state = ReqState::Active;
         }
     }
+    trace(ctx, TraceKind::Post, context, trace_tag(tag));
     let hit = ctx.state.borrow_mut().match_index.post(rid, context, src, tag);
     if let Some(env) = hit {
         deliver(ctx, rid, env);
@@ -439,6 +458,7 @@ pub(crate) fn deliver_inline(
     count: usize,
     dt: DtId,
 ) -> StatusCore {
+    trace(ctx, TraceKind::Match, env.src, env.tag as u32);
     let status = {
         let t = ctx.tables.borrow();
         let data = env.payload.as_slice();
@@ -521,6 +541,9 @@ pub(crate) fn begin_rndv_send(
         );
         (rndv, seq)
     };
+    ctx.obs.rndv_msgs.set(ctx.obs.rndv_msgs.get() + 1);
+    ctx.obs.rndv_bytes.set(ctx.obs.rndv_bytes.get() + total);
+    trace(ctx, TraceKind::Rts, dst as u32, clamp32(total));
     let rts = Envelope {
         src: ctx.rank as u32,
         context,
@@ -688,6 +711,7 @@ pub(crate) fn begin_rndv_recv(
             status: None,
         },
     );
+    trace(ctx, TraceKind::Cts, env.src, clamp32(granted));
     let cts = Envelope {
         src: ctx.rank as u32,
         context: env.context,
@@ -761,6 +785,7 @@ fn rndv_data_arrive(ctx: &RankCtx, src: u32, rndv: u64, offset: u64, payload: Pa
     match after {
         After::Nothing => {}
         After::Regrant { dst, context, tag, credit } => {
+            trace(ctx, TraceKind::ChunkGrant, src, clamp32(credit));
             let cts = Envelope {
                 src: ctx.rank as u32,
                 context,
@@ -815,12 +840,14 @@ pub(crate) fn enqueue_send(ctx: &RankCtx, dst: usize, env: Envelope) {
     if let Some(q) = st.pending_sends.get_mut(&dst) {
         // Deferred traffic to this destination exists: queue behind it.
         q.push_back(env);
+        ctx.obs.note_pending_depth(q.len() as u64);
         return;
     }
     if let Err(env) = ctx.world.fabric.try_send(dst, env) {
         let mut q = std::collections::VecDeque::with_capacity(4);
         q.push_back(env);
         st.pending_sends.insert(dst, q);
+        ctx.obs.note_pending_depth(1);
     }
 }
 
@@ -884,6 +911,7 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
 /// to Inactive and stay in the table (the lifecycle's back edge);
 /// nonpersistent requests are deallocated.
 pub(crate) fn retire(ctx: &RankCtx, rid: ReqId) {
+    trace(ctx, TraceKind::Complete, rid.0, 0);
     let mut t = ctx.tables.borrow_mut();
     let persistent = t.reqs.get(rid.0).map(|r| r.persist.is_some()).unwrap_or(false);
     if persistent {

@@ -287,6 +287,7 @@ pub fn win_fence(assert: i32, win: WinId) -> RC<()> {
             w.fence_seq = w.fence_seq.wrapping_add(1);
             (w.members.clone(), w.my_rank, w.ctx_ctrl, w.fence_seq)
         };
+        super::obs::trace(ctx, super::obs::TraceKind::RmaEpoch, win.0, 0);
         wait_pending(ctx, win)?;
         win_barrier(ctx, &members, my_rank, ctrl, seq);
         let mut t = ctx.tables.borrow_mut();
@@ -319,6 +320,7 @@ pub fn win_lock(lock_type: i32, rank: i32, _assert: i32, win: WinId) -> RC<()> {
             w.lock_granted = false;
             (w.members[rank as usize], w.ctx_ops)
         };
+        super::obs::trace(ctx, super::obs::TraceKind::RmaEpoch, win.0, 1);
         if target_world == ctx.rank {
             // Local target: take the lock through the same state machine,
             // spinning so a remote holder's unlock (processed by our own
@@ -376,6 +378,7 @@ pub fn win_unlock(rank: i32, win: WinId) -> RC<()> {
             }
             (w.members[rank as usize], w.ctx_ops)
         };
+        super::obs::trace(ctx, super::obs::TraceKind::RmaEpoch, win.0, 2);
         wait_pending(ctx, win)?;
         if target_world == ctx.rank {
             let grants = {

@@ -10,8 +10,8 @@
 use std::cell::{Cell, RefCell};
 use std::collections::{HashSet, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::comm::CommObj;
@@ -20,6 +20,7 @@ use super::errh::ErrhObj;
 use super::group::GroupObj;
 use super::info::InfoObj;
 use super::match_index::{FxHashMap, MatchIndex};
+use super::obs::{ObsRank, TraceEvent, TraceSink, WorldObs};
 use super::op::OpObj;
 use super::request::RequestObj;
 use super::rma::WinObj;
@@ -45,10 +46,18 @@ pub struct World {
     context_counter: AtomicU32,
     /// Ranks that called `MPI_Finalize` (for `world_finalized` diagnostics).
     finalize_count: AtomicUsize,
-    /// Collective-schedule constructions in this job (all ranks).
+    /// Job-global observability counters (rendezvous in-flight bytes,
+    /// schedule builds/reuses) — the job-wide end of the pvar registry.
     /// Per-world (not process-global) so parallel test jobs in one
-    /// process don't perturb each other's reuse assertions.
-    sched_builds: AtomicU64,
+    /// process don't perturb each other's assertions.
+    pub obs: WorldObs,
+    /// Engine event tracing (`MPI_ABI_TRACE` or
+    /// [`crate::launcher::JobSpec::with_trace`]): ranks bound to this
+    /// world record trace-ring events. Read once per rank at bind time.
+    trace: AtomicBool,
+    /// Per-rank trace-event batches, merged here at finalize/unbind and
+    /// drained by [`World::take_trace`].
+    trace_sink: TraceSink,
     /// Launcher-provided named process sets (MPI-4 sessions): each is a
     /// (URI, member world ranks) pair surfaced by `MPI_Session_get_*`
     /// alongside the built-in `mpi://WORLD` / `mpi://SELF`.
@@ -65,12 +74,6 @@ pub struct World {
     /// packed size exceeds this go RTS/CTS + chunk streaming instead of
     /// one eager envelope. Read once per rank at bind time.
     rndv_threshold: AtomicUsize,
-    /// Payload bytes currently in flight inside rendezvous chunks,
-    /// job-wide (incremented at chunk enqueue, decremented at consume).
-    rndv_inflight: AtomicU64,
-    /// High-water mark of `rndv_inflight` — what `tests/rendezvous.rs`
-    /// asserts stays bounded by the chunk window, not the message size.
-    rndv_inflight_peak: AtomicU64,
 }
 
 /// Eager/rendezvous switch point when neither the env var nor the job
@@ -116,12 +119,12 @@ impl World {
             // 4/5 = the hidden session-bootstrap comm.
             context_counter: AtomicU32::new(6),
             finalize_count: AtomicUsize::new(0),
-            sched_builds: AtomicU64::new(0),
+            obs: WorldObs::new(),
+            trace: AtomicBool::new(super::obs::trace_env()),
+            trace_sink: Mutex::new(Vec::new()),
             psets,
             flat_match: AtomicBool::new(super::match_index::flat_match_env()),
             rndv_threshold: AtomicUsize::new(rndv_threshold_env()),
-            rndv_inflight: AtomicU64::new(0),
-            rndv_inflight_peak: AtomicU64::new(0),
         })
     }
 
@@ -150,22 +153,52 @@ impl World {
         self.rndv_threshold.load(Ordering::SeqCst)
     }
 
-    /// Account `bytes` of rendezvous chunk payload entering the fabric.
+    /// Account `bytes` of rendezvous chunk payload entering the fabric
+    /// (thin delegate onto the pvar registry's [`WorldObs`]).
     pub(crate) fn note_rndv_enqueue(&self, bytes: u64) {
-        let now = self.rndv_inflight.fetch_add(bytes, Ordering::SeqCst) + bytes;
-        self.rndv_inflight_peak.fetch_max(now, Ordering::SeqCst);
+        self.obs.note_rndv_enqueue(bytes);
     }
 
     /// Account `bytes` of rendezvous chunk payload consumed at a receiver.
     pub(crate) fn note_rndv_consume(&self, bytes: u64) {
-        self.rndv_inflight.fetch_sub(bytes, Ordering::SeqCst);
+        self.obs.note_rndv_consume(bytes);
     }
 
     /// High-water mark of rendezvous payload bytes simultaneously in
     /// flight — the bounded-buffering witness: for a chunked transfer
     /// this stays near `chunk × window`, never near the message size.
+    /// (Pvar `rndv_inflight_peak`; kept as a thin read.)
     pub fn rndv_inflight_peak(&self) -> u64 {
-        self.rndv_inflight_peak.load(Ordering::SeqCst)
+        self.obs.rndv_inflight_peak.load(Ordering::Relaxed)
+    }
+
+    /// Enable/disable event tracing for ranks bound after this call
+    /// (the [`crate::launcher::JobSpec::with_trace`] application site).
+    pub fn set_trace(&self, on: bool) {
+        self.trace.store(on, Ordering::SeqCst);
+    }
+
+    /// Whether ranks of this world record trace events.
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.load(Ordering::SeqCst)
+    }
+
+    /// Nanoseconds since job start (trace timestamps; same epoch as
+    /// [`World::wtime`]).
+    pub fn elapsed_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Merge one rank's drained trace events into the job-level sink.
+    pub(crate) fn push_trace(&self, rank: usize, events: Vec<TraceEvent>) {
+        self.trace_sink.lock().unwrap().push((rank, events));
+    }
+
+    /// Drain the merged trace, sorted by rank (one viewer lane each).
+    pub fn take_trace(&self) -> Vec<(usize, Vec<TraceEvent>)> {
+        let mut v = std::mem::take(&mut *self.trace_sink.lock().unwrap());
+        v.sort_by_key(|(rank, _)| *rank);
+        v
     }
 
     /// The launcher-provided process sets (name, member world ranks).
@@ -174,14 +207,16 @@ impl World {
     }
 
     /// Record one collective-schedule construction (see
-    /// [`crate::core::collectives::schedules_built`]).
+    /// [`crate::core::collectives::schedules_built`]; thin delegate onto
+    /// the pvar registry's [`WorldObs`]).
     pub(crate) fn note_sched_build(&self) {
-        self.sched_builds.fetch_add(1, Ordering::Relaxed);
+        self.obs.note_sched_build();
     }
 
-    /// Collective-schedule constructions in this job so far.
+    /// Collective-schedule constructions in this job so far (pvar
+    /// `sched_builds`; kept as a thin read).
     pub fn sched_builds(&self) -> u64 {
-        self.sched_builds.load(Ordering::Relaxed)
+        self.obs.sched_builds.load(Ordering::Relaxed)
     }
 
     /// Allocate a fresh pair of context ids (pt2pt, coll) for a new comm.
@@ -305,6 +340,9 @@ pub struct RankCtx {
     pub tables: RefCell<Tables>,
     /// Messaging state (queues, acks, in-flight schedules).
     pub state: RefCell<RankState>,
+    /// Per-rank observability: pvar counters, MPI_T sessions/handles,
+    /// the trace ring (see [`crate::core::obs`]).
+    pub obs: ObsRank,
     /// `MPI_Init` has run (the world model specifically).
     pub initialized: Cell<bool>,
     /// `MPI_Finalize` has run (the world model specifically).
@@ -352,11 +390,13 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
     assert!(rank < world.size, "rank {rank} out of bounds");
     let flat_match = world.flat_match();
     let rndv_threshold = world.rndv_threshold();
+    let trace_on = world.trace_enabled();
     let ctx = Rc::new(RankCtx {
         world,
         rank,
         tables: RefCell::new(init_tables()),
         state: RefCell::new(RankState::new(flat_match, rndv_threshold)),
+        obs: ObsRank::new(trace_on),
         initialized: Cell::new(false),
         finalized: Cell::new(false),
         active_inits: Cell::new(0),
@@ -372,10 +412,15 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
     ctx
 }
 
-/// Unbind this thread (launcher, after the application returns).
+/// Unbind this thread (launcher, after the application returns). Any
+/// trace events still in the rank's ring are flushed to the world sink
+/// first — the catch-all for applications that never reach the world
+/// model's `MPI_Finalize` (sessions-only runs).
 pub fn unbind_rank() {
     CURRENT.with(|c| {
-        c.borrow_mut().take();
+        if let Some(ctx) = c.borrow_mut().take() {
+            super::obs::flush_trace(&ctx);
+        }
     });
 }
 

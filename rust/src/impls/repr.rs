@@ -12,7 +12,7 @@ use std::marker::PhantomData;
 use crate::abi::types::{Aint, Count};
 use crate::api::{AttrCopyFn, AttrDeleteFn, Counts, Displs, Dt, ErrhFn, MpiAbi, OpName, UserOpFn};
 use crate::core::request::StatusCore;
-use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, op, rma,
+use crate::core::{collectives as coll, comm, datatype, engine, errh, group, info, obs, op, rma,
     session};
 use crate::core::{CommId, DtId, ErrhId, GroupId, InfoId, OpId, RC, ReqId, SessionId, WinId};
 
@@ -2482,6 +2482,159 @@ impl<R: Repr> MpiAbi for Backed<R> {
             *i = R::c_info_null();
         }
         r
+    }
+
+    // --- Tools interface (MPI_T) ---
+    //
+    // MPI_T errors never flow through communicator error handlers (the
+    // tools interface is legal outside MPI_Init..Finalize, where no
+    // communicator exists), so these map error classes directly via
+    // `err_from_class` instead of `fail`/`ret`.
+
+    fn t_init_thread(required: i32, provided: &mut i32) -> i32 {
+        match obs::t_init_thread(required) {
+            Ok(p) => {
+                *provided = p;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_finalize() -> i32 {
+        match obs::t_finalize() {
+            Ok(()) => 0,
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_cvar_get_num(num: &mut i32) -> i32 {
+        match obs::t_cvar_get_num() {
+            Ok(n) => {
+                *num = n;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_cvar_get_info(
+        index: i32,
+        name: &mut String,
+        verbosity: &mut i32,
+        bind: &mut i32,
+        scope: &mut i32,
+    ) -> i32 {
+        match obs::t_cvar_get_info(index) {
+            Ok((n, v, b, s)) => {
+                *name = n;
+                *verbosity = v;
+                *bind = b;
+                *scope = s;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_cvar_handle_alloc(index: i32, handle: &mut i32) -> i32 {
+        match obs::t_cvar_handle_alloc(index) {
+            Ok(h) => {
+                *handle = h;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_cvar_read(handle: i32, value: &mut i64) -> i32 {
+        match obs::t_cvar_read(handle) {
+            Ok(v) => {
+                *value = v;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_cvar_write(handle: i32, value: i64) -> i32 {
+        match obs::t_cvar_write(handle, value) {
+            Ok(()) => 0,
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_get_num(num: &mut i32) -> i32 {
+        match obs::t_pvar_get_num() {
+            Ok(n) => {
+                *num = n;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_get_info(
+        index: i32,
+        name: &mut String,
+        verbosity: &mut i32,
+        class: &mut i32,
+        bind: &mut i32,
+    ) -> i32 {
+        match obs::t_pvar_get_info(index) {
+            Ok((n, v, c, b)) => {
+                *name = n;
+                *verbosity = v;
+                *class = c;
+                *bind = b;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_session_create(session: &mut i32) -> i32 {
+        match obs::t_pvar_session_create() {
+            Ok(s) => {
+                *session = s;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_handle_alloc(session: i32, index: i32, handle: &mut i32) -> i32 {
+        match obs::t_pvar_handle_alloc(session, index) {
+            Ok(h) => {
+                *handle = h;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_start(session: i32, handle: i32) -> i32 {
+        match obs::t_pvar_start(session, handle) {
+            Ok(()) => 0,
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_read(session: i32, handle: i32, value: &mut i64) -> i32 {
+        match obs::t_pvar_read(session, handle) {
+            Ok(v) => {
+                *value = v;
+                0
+            }
+            Err(e) => R::err_from_class(e.class),
+        }
+    }
+
+    fn t_pvar_reset(session: i32, handle: i32) -> i32 {
+        match obs::t_pvar_reset(session, handle) {
+            Ok(()) => 0,
+            Err(e) => R::err_from_class(e.class),
+        }
     }
 }
 

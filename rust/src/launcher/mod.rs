@@ -25,11 +25,21 @@ pub struct JobSpec {
     /// forces rendezvous for every non-empty message); `None` defers to
     /// the `MPI_ABI_RNDV_THRESHOLD` env var / 64 KiB default.
     pub rndv_threshold: Option<usize>,
+    /// Event-tracing override: `Some(true)` records engine trace events
+    /// on every rank, `None` defers to the `MPI_ABI_TRACE` env flag
+    /// (see [`crate::core::obs`]).
+    pub trace: Option<bool>,
 }
 
 impl JobSpec {
     pub fn new(ranks: usize) -> JobSpec {
-        JobSpec { ranks, transport: TransportKind::Spsc, flat_match: None, rndv_threshold: None }
+        JobSpec {
+            ranks,
+            transport: TransportKind::Spsc,
+            flat_match: None,
+            rndv_threshold: None,
+            trace: None,
+        }
     }
 
     pub fn with_transport(mut self, t: TransportKind) -> JobSpec {
@@ -50,6 +60,29 @@ impl JobSpec {
         self.rndv_threshold = Some(bytes);
         self
     }
+
+    /// Enable (or force-disable) engine event tracing for this job
+    /// without racing on the `MPI_ABI_TRACE` env flag.
+    pub fn with_trace(mut self, on: bool) -> JobSpec {
+        self.trace = Some(on);
+        self
+    }
+}
+
+/// Build a world from a spec, applying every override — the shared
+/// prelude of [`run_job`] and [`run_job_traced`].
+fn world_for(spec: JobSpec) -> Arc<World> {
+    let world = World::new(spec.ranks, spec.transport);
+    if let Some(flat) = spec.flat_match {
+        world.set_flat_match(flat);
+    }
+    if let Some(t) = spec.rndv_threshold {
+        world.set_rndv_threshold(t);
+    }
+    if let Some(on) = spec.trace {
+        world.set_trace(on);
+    }
+    world
 }
 
 /// Per-rank outcome.
@@ -84,14 +117,28 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let world = World::new(spec.ranks, spec.transport);
-    if let Some(flat) = spec.flat_match {
-        world.set_flat_match(flat);
-    }
-    if let Some(t) = spec.rndv_threshold {
-        world.set_rndv_threshold(t);
-    }
-    run_on_world(world, spec.ranks, f)
+    run_on_world(world_for(spec), spec.ranks, f)
+}
+
+/// Run a job and return the merged event trace alongside the outcomes.
+///
+/// The trace is the per-rank ring-buffer contents flushed at finalize
+/// (or rank unbind), sorted by rank; it is empty unless tracing was
+/// enabled via [`JobSpec::with_trace`] or `MPI_ABI_TRACE`. Feed it to
+/// [`crate::core::obs::chrome_trace_json`] for a `chrome://tracing` /
+/// Perfetto-loadable file.
+pub fn run_job_traced<T, F>(
+    spec: JobSpec,
+    f: F,
+) -> (Vec<RankOutcome<T>>, Vec<(usize, Vec<crate::core::obs::TraceEvent>)>)
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let world = world_for(spec);
+    let outcomes = run_on_world(world.clone(), spec.ranks, f);
+    let trace = world.take_trace();
+    (outcomes, trace)
 }
 
 /// Run on an existing world (used by benches that pre-create worlds).

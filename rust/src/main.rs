@@ -128,10 +128,12 @@ impl AbiApp<()> for AppRunner {
                 );
             }
             "halo" => {
-                // abirun halo [--mode sendrecv|persistent|rma] [--sessions] [n] [iters]
+                // abirun halo [--mode sendrecv|persistent|rma] [--sessions]
+                //             [--trace OUT.json] [n] [iters]
                 use mpi_abi::apps::halo::{jacobi, jacobi_sessions, HaloMode, HaloParams};
                 let mut mode = HaloMode::Sendrecv;
                 let mut sessions = false;
+                let mut trace_path: Option<String> = None;
                 let mut nums = Vec::new();
                 let mut it = self.opts.args.iter();
                 while let Some(a) = it.next() {
@@ -142,13 +144,16 @@ impl AbiApp<()> for AppRunner {
                             .unwrap_or_else(|| usage());
                     } else if a == "--sessions" {
                         sessions = true;
+                    } else if a == "--trace" {
+                        trace_path = Some(it.next().cloned().unwrap_or_else(|| usage()));
                     } else if let Ok(v) = a.parse::<usize>() {
                         nums.push(v);
                     }
                 }
                 let n = nums.first().copied().unwrap_or(96);
                 let iters = nums.get(1).copied().unwrap_or(50);
-                let out = run_job_ok(spec, move |_| {
+                let spec = if trace_path.is_some() { spec.with_trace(true) } else { spec };
+                let body = move |_: usize| {
                     if sessions {
                         // Sessions-only: no MPI_Init / MPI_Finalize at all.
                         let (_, global) = jacobi_sessions::<A>(HaloParams { n, iters, mode });
@@ -159,7 +164,20 @@ impl AbiApp<()> for AppRunner {
                         A::finalize();
                         global
                     }
-                });
+                };
+                let out = if let Some(path) = &trace_path {
+                    let (outcomes, trace) = mpi_abi::launcher::run_job_traced(spec, body);
+                    let events: usize = trace.iter().map(|(_, evs)| evs.len()).sum();
+                    let json = mpi_abi::core::obs::chrome_trace_json(&trace);
+                    std::fs::write(path, json).unwrap_or_else(|e| {
+                        eprintln!("abirun: cannot write trace to {path}: {e}");
+                        std::process::exit(1);
+                    });
+                    eprintln!("trace: {events} events from {} ranks -> {path}", trace.len());
+                    outcomes.into_iter().map(|o| o.unwrap()).collect::<Vec<_>>()
+                } else {
+                    run_job_ok(spec, body)
+                };
                 println!(
                     "halo [{}] {}x{} grid, {} sweeps, mode {}{}: residual {:.12}",
                     A::NAME,

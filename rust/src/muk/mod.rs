@@ -1222,6 +1222,63 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     fn info_free(i: &mut AbiInfo) -> i32 {
         (B::vtable().info_free)(&mut i.0)
     }
+
+    // --- Tools interface (MPI_T): integer-only, straight through ---
+
+    fn t_init_thread(required: i32, provided: &mut i32) -> i32 {
+        (B::vtable().t_init_thread)(required, provided)
+    }
+    fn t_finalize() -> i32 {
+        (B::vtable().t_finalize)()
+    }
+    fn t_cvar_get_num(num: &mut i32) -> i32 {
+        (B::vtable().t_cvar_get_num)(num)
+    }
+    fn t_cvar_get_info(
+        index: i32,
+        name: &mut String,
+        verbosity: &mut i32,
+        bind: &mut i32,
+        scope: &mut i32,
+    ) -> i32 {
+        (B::vtable().t_cvar_get_info)(index, name, verbosity, bind, scope)
+    }
+    fn t_cvar_handle_alloc(index: i32, handle: &mut i32) -> i32 {
+        (B::vtable().t_cvar_handle_alloc)(index, handle)
+    }
+    fn t_cvar_read(handle: i32, value: &mut i64) -> i32 {
+        (B::vtable().t_cvar_read)(handle, value)
+    }
+    fn t_cvar_write(handle: i32, value: i64) -> i32 {
+        (B::vtable().t_cvar_write)(handle, value)
+    }
+    fn t_pvar_get_num(num: &mut i32) -> i32 {
+        (B::vtable().t_pvar_get_num)(num)
+    }
+    fn t_pvar_get_info(
+        index: i32,
+        name: &mut String,
+        verbosity: &mut i32,
+        class: &mut i32,
+        bind: &mut i32,
+    ) -> i32 {
+        (B::vtable().t_pvar_get_info)(index, name, verbosity, class, bind)
+    }
+    fn t_pvar_session_create(session: &mut i32) -> i32 {
+        (B::vtable().t_pvar_session_create)(session)
+    }
+    fn t_pvar_handle_alloc(session: i32, index: i32, handle: &mut i32) -> i32 {
+        (B::vtable().t_pvar_handle_alloc)(session, index, handle)
+    }
+    fn t_pvar_start(session: i32, handle: i32) -> i32 {
+        (B::vtable().t_pvar_start)(session, handle)
+    }
+    fn t_pvar_read(session: i32, handle: i32, value: &mut i64) -> i32 {
+        (B::vtable().t_pvar_read)(session, handle, value)
+    }
+    fn t_pvar_reset(session: i32, handle: i32) -> i32 {
+        (B::vtable().t_pvar_reset)(session, handle)
+    }
 }
 
 #[cfg(test)]

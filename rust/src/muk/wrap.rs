@@ -1947,6 +1947,95 @@ pub fn comm_create_from_group<A: MukBackend>(
     ret_code::<A>(rc)
 }
 
+// --- Tools interface (MPI_T) -----------------------------------------------------
+//
+// MPI_T crosses the wrap boundary untranslated: every argument is a
+// plain integer (handles and sessions are i32 indices in all ABIs, per
+// SPEC §11), so only the return code needs mapping back to the
+// standard-ABI error numbering.
+
+/// `WRAP_t_init_thread`.
+pub fn t_init_thread<A: MukBackend>(required: i32, provided: &mut i32) -> i32 {
+    ret_code::<A>(A::t_init_thread(required, provided))
+}
+
+/// `WRAP_t_finalize`.
+pub fn t_finalize<A: MukBackend>() -> i32 {
+    ret_code::<A>(A::t_finalize())
+}
+
+/// `WRAP_t_cvar_get_num`.
+pub fn t_cvar_get_num<A: MukBackend>(num: &mut i32) -> i32 {
+    ret_code::<A>(A::t_cvar_get_num(num))
+}
+
+/// `WRAP_t_cvar_get_info`.
+pub fn t_cvar_get_info<A: MukBackend>(
+    index: i32,
+    name: &mut String,
+    verbosity: &mut i32,
+    bind: &mut i32,
+    scope: &mut i32,
+) -> i32 {
+    ret_code::<A>(A::t_cvar_get_info(index, name, verbosity, bind, scope))
+}
+
+/// `WRAP_t_cvar_handle_alloc`.
+pub fn t_cvar_handle_alloc<A: MukBackend>(index: i32, handle: &mut i32) -> i32 {
+    ret_code::<A>(A::t_cvar_handle_alloc(index, handle))
+}
+
+/// `WRAP_t_cvar_read`.
+pub fn t_cvar_read<A: MukBackend>(handle: i32, value: &mut i64) -> i32 {
+    ret_code::<A>(A::t_cvar_read(handle, value))
+}
+
+/// `WRAP_t_cvar_write`.
+pub fn t_cvar_write<A: MukBackend>(handle: i32, value: i64) -> i32 {
+    ret_code::<A>(A::t_cvar_write(handle, value))
+}
+
+/// `WRAP_t_pvar_get_num`.
+pub fn t_pvar_get_num<A: MukBackend>(num: &mut i32) -> i32 {
+    ret_code::<A>(A::t_pvar_get_num(num))
+}
+
+/// `WRAP_t_pvar_get_info`.
+pub fn t_pvar_get_info<A: MukBackend>(
+    index: i32,
+    name: &mut String,
+    verbosity: &mut i32,
+    class: &mut i32,
+    bind: &mut i32,
+) -> i32 {
+    ret_code::<A>(A::t_pvar_get_info(index, name, verbosity, class, bind))
+}
+
+/// `WRAP_t_pvar_session_create`.
+pub fn t_pvar_session_create<A: MukBackend>(session: &mut i32) -> i32 {
+    ret_code::<A>(A::t_pvar_session_create(session))
+}
+
+/// `WRAP_t_pvar_handle_alloc`.
+pub fn t_pvar_handle_alloc<A: MukBackend>(session: i32, index: i32, handle: &mut i32) -> i32 {
+    ret_code::<A>(A::t_pvar_handle_alloc(session, index, handle))
+}
+
+/// `WRAP_t_pvar_start`.
+pub fn t_pvar_start<A: MukBackend>(session: i32, handle: i32) -> i32 {
+    ret_code::<A>(A::t_pvar_start(session, handle))
+}
+
+/// `WRAP_t_pvar_read`.
+pub fn t_pvar_read<A: MukBackend>(session: i32, handle: i32, value: &mut i64) -> i32 {
+    ret_code::<A>(A::t_pvar_read(session, handle, value))
+}
+
+/// `WRAP_t_pvar_reset`.
+pub fn t_pvar_reset<A: MukBackend>(session: i32, handle: i32) -> i32 {
+    ret_code::<A>(A::t_pvar_reset(session, handle))
+}
+
 // --- The vtable and symbol table -------------------------------------------------
 
 macro_rules! define_vtable {
@@ -2114,4 +2203,18 @@ define_vtable! {
     session_get_pset_info: fn(usize, &str, &mut usize) -> i32,
     group_from_session_pset: fn(usize, &str, &mut usize) -> i32,
     comm_create_from_group: fn(usize, &str, usize, usize, &mut usize) -> i32,
+    t_init_thread: fn(i32, &mut i32) -> i32,
+    t_finalize: fn() -> i32,
+    t_cvar_get_num: fn(&mut i32) -> i32,
+    t_cvar_get_info: fn(i32, &mut String, &mut i32, &mut i32, &mut i32) -> i32,
+    t_cvar_handle_alloc: fn(i32, &mut i32) -> i32,
+    t_cvar_read: fn(i32, &mut i64) -> i32,
+    t_cvar_write: fn(i32, i64) -> i32,
+    t_pvar_get_num: fn(&mut i32) -> i32,
+    t_pvar_get_info: fn(i32, &mut String, &mut i32, &mut i32, &mut i32) -> i32,
+    t_pvar_session_create: fn(&mut i32) -> i32,
+    t_pvar_handle_alloc: fn(i32, i32, &mut i32) -> i32,
+    t_pvar_start: fn(i32, i32) -> i32,
+    t_pvar_read: fn(i32, i32, &mut i64) -> i32,
+    t_pvar_reset: fn(i32, i32) -> i32,
 }

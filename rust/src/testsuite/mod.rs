@@ -19,6 +19,7 @@ mod comm_attr;
 mod dtype;
 mod env;
 mod matching;
+mod mpi_t;
 mod persistent;
 mod pt2pt;
 mod rma;
@@ -50,6 +51,7 @@ pub fn registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     v.extend(comm_attr::tests::<A>());
     v.extend(rma::tests::<A>());
     v.extend(session::tests::<A>());
+    v.extend(mpi_t::tests::<A>());
     v
 }
 
@@ -68,6 +70,14 @@ pub fn bigcount_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
 /// `sessions` job runs per ABI config via `tests/sessions.rs`.
 pub fn session_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     session::tests::<A>()
+}
+
+/// The MPI_T battery alone (registry enumeration, error paths, and the
+/// scripted exchange with bitwise-exact counter pvars) — run standalone
+/// under all five ABI configs *and both transports* by `tests/mpi_t.rs`
+/// and the CI `observability` job.
+pub fn mpi_t_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    mpi_t::tests::<A>()
 }
 
 /// The message-matching battery alone (posted order × arrival order

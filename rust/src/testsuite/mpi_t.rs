@@ -1,0 +1,319 @@
+//! MPI_T tools-interface battery.
+//!
+//! Exercises the §11 surface through the portable [`MpiAbi`] boundary
+//! only, so the same source validates the registry on all five
+//! configurations — including both Mukautuva stacks, where every call
+//! crosses the WRAP vtable. Three angles:
+//!
+//! * **enumeration** — the cvar/pvar registries are a fixed, ordered
+//!   ABI surface: exact counts, names, classes, scopes;
+//! * **error paths** — use before `MPI_T_init_thread`, invalid
+//!   index/handle/session, writes to read-only cvars;
+//! * **scripted exchange** — a deterministic message pattern whose
+//!   counter pvars must read *bitwise-exact* deltas on every config and
+//!   transport, including the `rndv_threshold` cvar write visibly
+//!   flipping the eager/rendezvous protocol choice.
+
+use super::util::*;
+use super::TestFn;
+use crate::abi::constants as k;
+use crate::abi::errors as ec;
+use crate::api::{Dt, MpiAbi};
+
+pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
+    vec![
+        ("mpit.enumerate_registry", enumerate_registry::<A>),
+        ("mpit.error_paths", error_paths::<A>),
+        ("mpit.scripted_exchange_counts", scripted_exchange_counts::<A>),
+    ]
+}
+
+fn world_geometry<A: MpiAbi>() -> (i32, i32) {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(A::comm_world(), &mut size);
+    A::comm_rank(A::comm_world(), &mut rank);
+    (size, rank)
+}
+
+/// The pvar registry in its fixed ABI order (mirrors
+/// `core::obs::PVARS`; `tests/spec_sync.rs` pins the same list against
+/// SPEC.md §11).
+const PVAR_NAMES: [&str; 17] = [
+    "sends_posted",
+    "recvs_posted",
+    "eager_msgs",
+    "eager_bytes",
+    "rndv_msgs",
+    "rndv_bytes",
+    "unexpected_depth",
+    "unexpected_hwm",
+    "posted_depth",
+    "posted_hwm",
+    "match_attempts",
+    "wildcard_matches",
+    "pending_send_depth",
+    "pending_send_hwm",
+    "rndv_inflight_peak",
+    "sched_builds",
+    "sched_reuses",
+];
+
+/// Pvar indices used by the scripted-exchange test.
+const PV_SENDS: i32 = 0;
+const PV_RECVS: i32 = 1;
+const PV_EAGER_MSGS: i32 = 2;
+const PV_EAGER_BYTES: i32 = 3;
+const PV_RNDV_MSGS: i32 = 4;
+const PV_RNDV_BYTES: i32 = 5;
+const PV_MATCH_ATTEMPTS: i32 = 10;
+
+const CV_RNDV_THRESHOLD: i32 = 0;
+const CV_TRACE_ENABLED: i32 = 2;
+
+/// Exact registry shape: counts, names, classes, scopes, binds.
+fn enumerate_registry<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let mut provided = -1;
+    check_rc!(A::t_init_thread(k::MPI_THREAD_SINGLE, &mut provided), "t_init_thread");
+    check!(provided == k::MPI_THREAD_SINGLE, "provided level, got {provided}");
+
+    let mut num = 0;
+    check_rc!(A::t_cvar_get_num(&mut num), "t_cvar_get_num");
+    check!(num == 3, "cvar count, got {num}");
+    let expect_cvars = [
+        ("rndv_threshold", k::MPI_T_SCOPE_LOCAL),
+        ("flat_match", k::MPI_T_SCOPE_LOCAL),
+        ("trace_enabled", k::MPI_T_SCOPE_READONLY),
+    ];
+    for (i, (want_name, want_scope)) in expect_cvars.iter().enumerate() {
+        let mut name = String::new();
+        let (mut verb, mut bind, mut scope) = (0, -1, -1);
+        check_rc!(
+            A::t_cvar_get_info(i as i32, &mut name, &mut verb, &mut bind, &mut scope),
+            "t_cvar_get_info"
+        );
+        check!(name == *want_name, "cvar {i} name, got {name}");
+        check!(scope == *want_scope, "cvar {name} scope, got {scope}");
+        check!(bind == k::MPI_T_BIND_NO_OBJECT, "cvar {name} bind, got {bind}");
+    }
+
+    check_rc!(A::t_pvar_get_num(&mut num), "t_pvar_get_num");
+    check!(num == PVAR_NAMES.len() as i32, "pvar count, got {num}");
+    for (i, want_name) in PVAR_NAMES.iter().enumerate() {
+        let mut name = String::new();
+        let (mut verb, mut class, mut bind) = (0, -1, -1);
+        check_rc!(
+            A::t_pvar_get_info(i as i32, &mut name, &mut verb, &mut class, &mut bind),
+            "t_pvar_get_info"
+        );
+        check!(name == *want_name, "pvar {i} name, got {name}");
+        check!(bind == k::MPI_T_BIND_NO_OBJECT, "pvar {name} bind, got {bind}");
+        let want_class = match i {
+            6 | 8 | 12 => k::MPI_T_PVAR_CLASS_LEVEL,
+            7 | 9 | 13 | 14 => k::MPI_T_PVAR_CLASS_HIGHWATERMARK,
+            _ => k::MPI_T_PVAR_CLASS_COUNTER,
+        };
+        check!(class == want_class, "pvar {name} class, got {class}");
+    }
+    check_rc!(A::t_finalize(), "t_finalize");
+    Ok(())
+}
+
+/// Every documented MPI_T failure mode, by error class.
+fn error_paths<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let class = |rc: i32| A::err_class_of(rc);
+
+    // Anything before MPI_T_init_thread (the tools interface has its
+    // own lifetime, independent of MPI_Init).
+    let mut num = 0;
+    check!(
+        class(A::t_cvar_get_num(&mut num)) == ec::MPI_T_ERR_NOT_INITIALIZED,
+        "cvar_get_num before init"
+    );
+    let mut session = -1;
+    check!(
+        class(A::t_pvar_session_create(&mut session)) == ec::MPI_T_ERR_NOT_INITIALIZED,
+        "session_create before init"
+    );
+
+    let mut provided = 0;
+    check_rc!(A::t_init_thread(k::MPI_THREAD_SINGLE, &mut provided), "t_init_thread");
+
+    // Out-of-range indices.
+    let mut name = String::new();
+    let (mut a, mut b, mut c) = (0, 0, 0);
+    check!(
+        class(A::t_cvar_get_info(99, &mut name, &mut a, &mut b, &mut c))
+            == ec::MPI_T_ERR_INVALID_INDEX,
+        "cvar_get_info bad index"
+    );
+    check!(
+        class(A::t_pvar_get_info(-1, &mut name, &mut a, &mut b, &mut c))
+            == ec::MPI_T_ERR_INVALID_INDEX,
+        "pvar_get_info bad index"
+    );
+    let mut handle = -1;
+    check!(
+        class(A::t_cvar_handle_alloc(99, &mut handle)) == ec::MPI_T_ERR_INVALID_INDEX,
+        "cvar_handle_alloc bad index"
+    );
+
+    // Never-allocated handles and sessions.
+    let mut value = 0i64;
+    check!(
+        class(A::t_cvar_read(7, &mut value)) == ec::MPI_T_ERR_INVALID_HANDLE,
+        "cvar_read bad handle"
+    );
+    check!(
+        class(A::t_pvar_read(5, 0, &mut value)) == ec::MPI_T_ERR_INVALID_SESSION,
+        "pvar_read bad session"
+    );
+    check_rc!(A::t_pvar_session_create(&mut session), "session_create");
+    check!(
+        class(A::t_pvar_read(session, 42, &mut value)) == ec::MPI_T_ERR_INVALID_HANDLE,
+        "pvar_read bad handle"
+    );
+
+    // Writes rejected by scope and by value.
+    check_rc!(A::t_cvar_handle_alloc(CV_TRACE_ENABLED, &mut handle), "alloc trace_enabled");
+    check!(
+        class(A::t_cvar_write(handle, 1)) == ec::MPI_T_ERR_CVAR_SET_NEVER,
+        "write to read-only cvar"
+    );
+    check_rc!(A::t_cvar_handle_alloc(CV_RNDV_THRESHOLD, &mut handle), "alloc rndv_threshold");
+    check!(
+        class(A::t_cvar_write(handle, -5)) == ec::MPI_ERR_ARG,
+        "negative cvar write"
+    );
+
+    // After the last finalize the whole interface goes dormant again and
+    // old handles/sessions are dead.
+    check_rc!(A::t_finalize(), "t_finalize");
+    check!(
+        class(A::t_cvar_read(handle, &mut value)) == ec::MPI_T_ERR_NOT_INITIALIZED,
+        "cvar_read after finalize"
+    );
+    Ok(())
+}
+
+/// Allocate-and-start one pvar handle in `session` (start re-baselines
+/// counter-class pvars, so subsequent reads are deltas).
+fn pvar_arm<A: MpiAbi>(session: i32, index: i32) -> Result<i32, String> {
+    let mut handle = -1;
+    let rc = A::t_pvar_handle_alloc(session, index, &mut handle);
+    if rc != 0 {
+        return Err(format!("pvar_handle_alloc({index}) rc {rc}"));
+    }
+    let rc = A::t_pvar_start(session, handle);
+    if rc != 0 {
+        return Err(format!("pvar_start({index}) rc {rc}"));
+    }
+    Ok(handle)
+}
+
+fn pvar_get<A: MpiAbi>(session: i32, handle: i32) -> Result<i64, String> {
+    let mut v = -1i64;
+    let rc = A::t_pvar_read(session, handle, &mut v);
+    if rc != 0 {
+        return Err(format!("pvar_read rc {rc}"));
+    }
+    Ok(v)
+}
+
+/// The deterministic scripted exchange: with `rndv_threshold` written
+/// down to 1024 via its cvar, five 16-byte messages go eager and three
+/// 4096-byte messages go rendezvous; written back above the message
+/// size, the same 4096-byte message goes eager again. Counter deltas
+/// are exact — the acceptance bar is bitwise-identical values on all
+/// five configs × both transports.
+fn scripted_exchange_counts<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, me) = world_geometry::<A>();
+    if n < 2 {
+        return Ok(());
+    }
+    let dt = A::datatype(Dt::Byte);
+    let world = A::comm_world();
+
+    let mut provided = 0;
+    check_rc!(A::t_init_thread(k::MPI_THREAD_SINGLE, &mut provided), "t_init_thread");
+    let mut session = -1;
+    check_rc!(A::t_pvar_session_create(&mut session), "session_create");
+
+    let result = (|| -> Result<(), String> {
+        if me == 0 {
+            let h_sends = pvar_arm::<A>(session, PV_SENDS)?;
+            let h_emsgs = pvar_arm::<A>(session, PV_EAGER_MSGS)?;
+            let h_ebytes = pvar_arm::<A>(session, PV_EAGER_BYTES)?;
+            let h_rmsgs = pvar_arm::<A>(session, PV_RNDV_MSGS)?;
+            let h_rbytes = pvar_arm::<A>(session, PV_RNDV_BYTES)?;
+
+            let mut th = -1;
+            check_rc!(A::t_cvar_handle_alloc(CV_RNDV_THRESHOLD, &mut th), "cvar alloc");
+            let mut old = 0i64;
+            check_rc!(A::t_cvar_read(th, &mut old), "cvar read");
+            check_rc!(A::t_cvar_write(th, 1024), "cvar write 1024");
+            let mut now = 0i64;
+            check_rc!(A::t_cvar_read(th, &mut now), "cvar re-read");
+            check!(now == 1024, "cvar write round-trip, got {now}");
+
+            let small = [7u8; 16];
+            let big = [9u8; 4096];
+            for i in 0..5 {
+                check_rc!(A::send(slice_ptr(&small), 16, dt, 1, 100 + i, world), "small send");
+            }
+            for j in 0..3 {
+                check_rc!(A::send(slice_ptr(&big), 4096, dt, 1, 200 + j, world), "big send");
+            }
+            check!(pvar_get::<A>(session, h_sends)? == 8, "sends_posted != 8");
+            check!(pvar_get::<A>(session, h_emsgs)? == 5, "eager_msgs != 5");
+            check!(pvar_get::<A>(session, h_ebytes)? == 80, "eager_bytes != 80");
+            check!(pvar_get::<A>(session, h_rmsgs)? == 3, "rndv_msgs != 3");
+            check!(pvar_get::<A>(session, h_rbytes)? == 12288, "rndv_bytes != 12288");
+
+            // Raise the threshold back over the message size: the very
+            // same send must now take the eager path — the cvar write
+            // observably flips the protocol.
+            check_rc!(A::t_cvar_write(th, 8192), "cvar write 8192");
+            check_rc!(A::send(slice_ptr(&big), 4096, dt, 1, 300, world), "flip send");
+            check!(pvar_get::<A>(session, h_sends)? == 9, "sends_posted != 9");
+            check!(pvar_get::<A>(session, h_emsgs)? == 6, "eager_msgs != 6");
+            check!(pvar_get::<A>(session, h_ebytes)? == 4176, "eager_bytes != 4176");
+            check!(pvar_get::<A>(session, h_rmsgs)? == 3, "rndv_msgs moved");
+            check!(pvar_get::<A>(session, h_rbytes)? == 12288, "rndv_bytes moved");
+
+            check_rc!(A::t_cvar_write(th, old), "cvar restore");
+        } else if me == 1 {
+            let h_recvs = pvar_arm::<A>(session, PV_RECVS)?;
+            let h_attempts = pvar_arm::<A>(session, PV_MATCH_ATTEMPTS)?;
+
+            let mut small = [0u8; 16];
+            let mut big = [0u8; 4096];
+            let mut st = A::status_empty();
+            for i in 0..5 {
+                check_rc!(
+                    A::recv(slice_ptr_mut(&mut small), 16, dt, 0, 100 + i, world, &mut st),
+                    "small recv"
+                );
+                check!(small[0] == 7, "small payload");
+            }
+            for j in 0..3 {
+                check_rc!(
+                    A::recv(slice_ptr_mut(&mut big), 4096, dt, 0, 200 + j, world, &mut st),
+                    "big recv"
+                );
+                check!(big[4095] == 9, "big payload");
+            }
+            check_rc!(
+                A::recv(slice_ptr_mut(&mut big), 4096, dt, 0, 300, world, &mut st),
+                "flip recv"
+            );
+            check!(pvar_get::<A>(session, h_recvs)? == 9, "recvs_posted != 9");
+            // Timing-dependent (probes and unexpected arrivals add
+            // attempts), so only a floor is portable.
+            check!(pvar_get::<A>(session, h_attempts)? >= 9, "match_attempts floor");
+        }
+        Ok(())
+    })();
+
+    check_rc!(A::t_finalize(), "t_finalize");
+    result
+}

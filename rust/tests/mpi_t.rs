@@ -1,0 +1,223 @@
+//! The MPI_T tools-interface battery, standalone: all five ABI
+//! configurations × both transports (the ISSUE-8 acceptance grid),
+//! plus trace-machinery checks — a traced job yields events from every
+//! rank and a valid Chrome trace document, and a job without tracing
+//! yields exactly zero events (the one-branch-off guarantee).
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::core::obs::{chrome_trace_json, TraceKind};
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::launcher::{run_job_ok, run_job_traced, JobSpec};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+use mpi_abi::testsuite;
+
+fn run_battery<A: MpiAbi>(ranks: usize, transport: TransportKind, flat: Option<bool>) {
+    let mut spec = JobSpec::new(ranks).with_transport(transport);
+    if let Some(f) = flat {
+        spec = spec.with_flat_match(f);
+    }
+    let reports = run_job_ok(spec, |rank| {
+        assert_eq!(A::init(), 0, "{} init", A::NAME);
+        let results = testsuite::run_registry::<A>(rank, testsuite::mpi_t_registry::<A>());
+        let report = testsuite::report(A::NAME, &results);
+        let failed = results.iter().filter(|r| !r.passed).count();
+        assert_eq!(A::finalize(), 0, "{} finalize", A::NAME);
+        (report, failed)
+    });
+    let (report, failures) = &reports[0];
+    if *failures > 0 {
+        panic!("[{} {:?} flat={flat:?}]\n{report}", A::NAME, transport);
+    }
+}
+
+fn both_transports<A: MpiAbi>(ranks: usize) {
+    run_battery::<A>(ranks, TransportKind::Spsc, None);
+    run_battery::<A>(ranks, TransportKind::Mutex, None);
+}
+
+#[test]
+fn mpi_t_battery_mpich_native() {
+    both_transports::<MpichAbi>(3);
+}
+
+#[test]
+fn mpi_t_battery_ompi_native() {
+    both_transports::<OmpiAbi>(3);
+}
+
+#[test]
+fn mpi_t_battery_muk_over_mpich() {
+    both_transports::<MukMpich>(3);
+}
+
+#[test]
+fn mpi_t_battery_muk_over_ompi() {
+    both_transports::<MukOmpi>(3);
+}
+
+#[test]
+fn mpi_t_battery_native_standard_abi() {
+    both_transports::<NativeAbi>(3);
+}
+
+/// The flat-baseline matcher must report the identical scripted-exchange
+/// counters: the pvar registry observes semantics, not the engine's
+/// data-structure choice.
+#[test]
+fn mpi_t_battery_flat_baseline_identical() {
+    run_battery::<NativeAbi>(3, TransportKind::Spsc, Some(true));
+    run_battery::<NativeAbi>(3, TransportKind::Mutex, Some(true));
+}
+
+/// A scripted pingpong under `with_trace(true)`: every rank contributes
+/// events, the expected kinds show up (post/match on both sides, a
+/// completion everywhere), and the merged document is loadable Chrome
+/// trace JSON.
+fn traced_pingpong(transport: TransportKind) {
+    use mpi_abi::core::reserved::COMM_WORLD;
+    use mpi_abi::core::{datatype, engine};
+    let spec = JobSpec::new(2).with_transport(transport).with_trace(true);
+    let (outcomes, trace) = run_job_traced(spec, |rank| {
+        engine::init().unwrap();
+        let dt = datatype::builtin_id_of_abi(mpi_abi::abi::datatypes::MPI_BYTE).unwrap();
+        let mut buf = [0u8; 64];
+        if rank == 0 {
+            engine::send(
+                buf.as_ptr(),
+                64,
+                dt,
+                1,
+                11,
+                COMM_WORLD,
+                engine::SendMode::Standard,
+            )
+            .unwrap();
+            engine::recv(buf.as_mut_ptr(), 64, dt, 1, 12, COMM_WORLD).unwrap();
+        } else {
+            engine::recv(buf.as_mut_ptr(), 64, dt, 0, 11, COMM_WORLD).unwrap();
+            engine::send(
+                buf.as_ptr(),
+                64,
+                dt,
+                0,
+                12,
+                COMM_WORLD,
+                engine::SendMode::Standard,
+            )
+            .unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+    for o in &outcomes {
+        assert!(o.is_ok());
+    }
+    assert_eq!(trace.len(), 2, "both ranks must contribute trace events");
+    for (rank, events) in &trace {
+        assert!(!events.is_empty(), "rank {rank} produced no events");
+        assert!(
+            events.iter().any(|e| matches!(e.kind, TraceKind::Post)),
+            "rank {rank} has no post event"
+        );
+        assert!(
+            events.iter().any(|e| matches!(e.kind, TraceKind::Match)),
+            "rank {rank} has no match event"
+        );
+        assert!(
+            events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns),
+            "rank {rank} events out of timestamp order"
+        );
+    }
+    let json = chrome_trace_json(&trace);
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"name\": \"post\""));
+    assert!(json.contains("\"name\": \"match\""));
+}
+
+#[test]
+fn traced_pingpong_both_transports() {
+    traced_pingpong(TransportKind::Spsc);
+    traced_pingpong(TransportKind::Mutex);
+}
+
+/// Without `with_trace` (and without `MPI_ABI_TRACE` in the test env)
+/// the very same job must record exactly zero events — tracing off
+/// means one branch on a cached bool, not a smaller trace.
+#[test]
+fn trace_disabled_records_nothing() {
+    use mpi_abi::core::reserved::COMM_WORLD;
+    use mpi_abi::core::{datatype, engine};
+    let spec = JobSpec::new(2);
+    let (outcomes, trace) = run_job_traced(spec, |rank| {
+        engine::init().unwrap();
+        let dt = datatype::builtin_id_of_abi(mpi_abi::abi::datatypes::MPI_BYTE).unwrap();
+        let mut buf = [0u8; 8];
+        if rank == 0 {
+            engine::send(
+                buf.as_ptr(),
+                8,
+                dt,
+                1,
+                5,
+                COMM_WORLD,
+                engine::SendMode::Standard,
+            )
+            .unwrap();
+        } else {
+            engine::recv(buf.as_mut_ptr(), 8, dt, 0, 5, COMM_WORLD).unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+    for o in &outcomes {
+        assert!(o.is_ok());
+    }
+    assert!(trace.is_empty(), "trace-off job recorded {} rank buffers", trace.len());
+}
+
+/// A rendezvous-sized traced transfer must surface the protocol's
+/// control events — RTS on the sender, CTS on the receiver.
+#[test]
+fn traced_rendezvous_shows_protocol_events() {
+    use mpi_abi::core::reserved::COMM_WORLD;
+    use mpi_abi::core::{datatype, engine};
+    let spec = JobSpec::new(2).with_trace(true).with_rndv_threshold(1024);
+    let (outcomes, trace) = run_job_traced(spec, |rank| {
+        engine::init().unwrap();
+        let dt = datatype::builtin_id_of_abi(mpi_abi::abi::datatypes::MPI_BYTE).unwrap();
+        let mut buf = vec![0u8; 1 << 16];
+        if rank == 0 {
+            engine::send(
+                buf.as_ptr(),
+                1 << 16,
+                dt,
+                1,
+                3,
+                COMM_WORLD,
+                engine::SendMode::Standard,
+            )
+            .unwrap();
+        } else {
+            engine::recv(buf.as_mut_ptr(), 1 << 16, dt, 0, 3, COMM_WORLD).unwrap();
+        }
+        engine::finalize().unwrap();
+    });
+    for o in &outcomes {
+        assert!(o.is_ok());
+    }
+    let events_of = |rank: usize| {
+        trace
+            .iter()
+            .find(|(r, _)| *r == rank)
+            .map(|(_, e)| e.as_slice())
+            .unwrap_or(&[])
+    };
+    assert!(
+        events_of(0).iter().any(|e| matches!(e.kind, TraceKind::Rts)),
+        "sender has no RTS event"
+    );
+    assert!(
+        events_of(1).iter().any(|e| matches!(e.kind, TraceKind::Cts)),
+        "receiver has no CTS event"
+    );
+}

@@ -229,6 +229,52 @@ fn rendezvous_section_exists() {
     }
 }
 
+/// SPEC §11: the MPI_T zero-page constants table must match
+/// `abi::constants::MPI_T_CONSTANTS` exactly — same names, same values,
+/// same order (indices into the registries are a fixed ABI surface).
+#[test]
+fn mpit_constants_table_matches_code() {
+    let spec = spec_text();
+    let rows = table_rows(&spec, "mpit-table");
+    let code = mpi_abi::abi::constants::MPI_T_CONSTANTS;
+    assert_eq!(rows.len(), code.len(), "row count vs MPI_T_CONSTANTS");
+    for (cells, &(name, value)) in rows.iter().zip(code) {
+        assert_eq!(cells[0], name, "SPEC order must match code order");
+        assert_eq!(cell_i32(cells, 1), value, "{name}");
+    }
+}
+
+/// SPEC §11: every MPI_T row names a `WRAP_t_` symbol that resolves in
+/// BOTH backends' wrap tables, and the pvar registry order written in
+/// prose stays the code's order.
+#[test]
+fn mpit_symbol_table_matches_code() {
+    use mpi_abi::muk::{symbols, Backend};
+    let spec = spec_text();
+    let mpich = symbols(Backend::Mpich);
+    let ompi = symbols(Backend::Ompi);
+    let mut seen = 0;
+    for cells in table_rows(&spec, "mpit-symbols-table") {
+        let (func, sym) = (&cells[0], &cells[1]);
+        assert!(func.starts_with("MPI_T_"), "malformed function {func}");
+        assert!(sym.starts_with("WRAP_t_"), "malformed symbol {sym}");
+        assert!(mpich.has(sym), "{sym} missing from the MPICH-backed wrap table");
+        assert!(ompi.has(sym), "{sym} missing from the OMPI-backed wrap table");
+        seen += 1;
+    }
+    assert_eq!(seen, 14, "all fourteen MPI_T entry points documented");
+    // The prose registry listing must track `core::obs::PVARS` order.
+    for name in [
+        "`sends_posted`",
+        "`wildcard_matches`",
+        "`rndv_inflight_peak`",
+        "`sched_reuses`",
+        "MPI_T_ERR_CVAR_SET_NEVER",
+    ] {
+        assert!(spec.contains(name), "SPEC.md §11 lost its mention of {name}");
+    }
+}
+
 #[test]
 fn lifecycle_and_session_sections_exist() {
     let spec = spec_text();
