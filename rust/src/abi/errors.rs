@@ -144,6 +144,17 @@ pub const MPI_T_ERR_INVALID_SESSION: i32 = 65;
 /// Error class `MPI_T_ERR_CVAR_SET_NEVER`: write attempted on a cvar
 /// whose scope is read-only.
 pub const MPI_T_ERR_CVAR_SET_NEVER: i32 = 66;
+/// Error class `MPI_ERR_PROC_FAILED` (ULFM): the operation's peer
+/// process has failed; the operation completed with an error instead of
+/// hanging.
+pub const MPI_ERR_PROC_FAILED: i32 = 67;
+/// Error class `MPI_ERR_PROC_FAILED_PENDING` (ULFM): a wildcard receive
+/// cannot complete because a potential matching sender has failed; the
+/// request stays pending until the failure is acknowledged.
+pub const MPI_ERR_PROC_FAILED_PENDING: i32 = 68;
+/// Error class `MPI_ERR_REVOKED` (ULFM): the communicator has been
+/// revoked by `MPI_Comm_revoke`; all non-agreement operations on it fail.
+pub const MPI_ERR_REVOKED: i32 = 69;
 /// Last predefined error class (`MPI_ERR_LASTCODE` floor).
 pub const MPI_ERR_LASTCODE: i32 = 128;
 
@@ -183,6 +194,9 @@ pub const ERROR_CLASSES: &[(&str, i32)] = &[
     ("MPI_T_ERR_INVALID_HANDLE", MPI_T_ERR_INVALID_HANDLE),
     ("MPI_T_ERR_INVALID_SESSION", MPI_T_ERR_INVALID_SESSION),
     ("MPI_T_ERR_CVAR_SET_NEVER", MPI_T_ERR_CVAR_SET_NEVER),
+    ("MPI_ERR_PROC_FAILED", MPI_ERR_PROC_FAILED),
+    ("MPI_ERR_PROC_FAILED_PENDING", MPI_ERR_PROC_FAILED_PENDING),
+    ("MPI_ERR_REVOKED", MPI_ERR_REVOKED),
 ];
 
 /// Human-readable message for `MPI_Error_string`.
@@ -218,6 +232,9 @@ pub fn error_string(class: i32) -> &'static str {
         MPI_T_ERR_INVALID_HANDLE => "Invalid MPI_T handle",
         MPI_T_ERR_INVALID_SESSION => "Invalid MPI_T performance session",
         MPI_T_ERR_CVAR_SET_NEVER => "Control variable cannot be set",
+        MPI_ERR_PROC_FAILED => "A peer process has failed",
+        MPI_ERR_PROC_FAILED_PENDING => "A process failure is pending on a wildcard receive",
+        MPI_ERR_REVOKED => "Communicator has been revoked",
         _ => "Unknown error class",
     }
 }

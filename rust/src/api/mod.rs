@@ -444,6 +444,26 @@ pub trait MpiAbi: 'static {
     /// `MPI_Errhandler_free`.
     fn errhandler_free(e: &mut Self::Errhandler) -> i32;
 
+    // --- ULFM fault tolerance ---
+    /// `MPI_Comm_revoke` (ULFM): poison the communicator — in-flight and
+    /// future operations on it fail with `MPI_ERR_REVOKED` at every
+    /// member.
+    fn comm_revoke(c: Self::Comm) -> i32;
+    /// `MPIX_Comm_is_revoked` (ULFM helper).
+    fn comm_is_revoked(c: Self::Comm, out: &mut bool) -> i32;
+    /// `MPI_Comm_shrink` (ULFM): build a new communicator over the
+    /// surviving members of `c` (which may be revoked or contain failed
+    /// processes).
+    fn comm_shrink(c: Self::Comm, out: &mut Self::Comm) -> i32;
+    /// `MPI_Comm_agree` (ULFM): fault-tolerant agreement — on return,
+    /// `flag` holds the bitwise AND of all surviving members' values.
+    fn comm_agree(c: Self::Comm, flag: &mut i32) -> i32;
+    /// `MPI_Comm_ack_failed` (ULFM): acknowledge up to `num_to_ack`
+    /// known process failures on `c`; `num_acked` reports how many are
+    /// now acknowledged. Fully acknowledged failures stop wildcard
+    /// receives from raising `MPI_ERR_PROC_FAILED_PENDING`.
+    fn comm_ack_failed(c: Self::Comm, num_to_ack: i32, num_acked: &mut i32) -> i32;
+
     // --- Point-to-point ---
     /// `MPI_Send`.
     fn send(

@@ -312,3 +312,153 @@ pub fn jacobi_on<A: MpiAbi>(world: A::Comm, p: HaloParams) -> (f64, f64) {
     );
     (local, global)
 }
+
+/// The **fault-tolerant** halo (ULFM): run the stencil over
+/// `MPI_COMM_WORLD` with a returning error handler, and when a rank
+/// dies mid-run, recover with the ULFM sequence — `MPI_Comm_revoke`
+/// (so every survivor's in-flight exchange fails instead of hanging),
+/// `MPI_Comm_agree` (synchronize the failure view), `MPI_Comm_shrink`
+/// (fresh communicator over the survivors) — then re-decompose the
+/// grid over the shrunk communicator and rerun from the initial state.
+///
+/// Restarting from the initial state is the point, not a shortcut: it
+/// makes the survivor result *bitwise identical* to a cold-start run on
+/// the shrunk rank count, which is the cross-ABI acceptance check for
+/// `abirun halo --kill` (and the property test's oracle). Exchanges use
+/// `MPI_Sendrecv` regardless of `p.mode` — the FT recovery story is
+/// about failure propagation, not transport variants.
+///
+/// Returns `(surviving comm size, global residual)`.
+pub fn jacobi_ft<A: MpiAbi>(p: HaloParams) -> (i32, f64) {
+    let world = A::comm_world();
+    // Without this, the first MPI_ERR_PROC_FAILED would run the default
+    // are-fatal handler and abort the job — ULFM apps always start by
+    // making errors returnable.
+    A::comm_set_errhandler(world, A::errhandler_return());
+    let mut comm = world;
+    loop {
+        if let Some(out) = try_jacobi::<A>(comm, &p) {
+            return out;
+        }
+        // A peer died (MPI_ERR_PROC_FAILED) or another survivor already
+        // revoked the comm (MPI_ERR_REVOKED). Revoke is idempotent, so
+        // every survivor runs the same sequence regardless of which
+        // error it observed first.
+        A::comm_revoke(comm);
+        let mut ok = 1i32;
+        A::comm_agree(comm, &mut ok);
+        assert_eq!(ok, 1, "every survivor contributes 1 to the agreement");
+        let mut next = A::comm_null();
+        let rc = A::comm_shrink(comm, &mut next);
+        assert_eq!(rc, 0, "comm_shrink");
+        A::comm_set_errhandler(next, A::errhandler_return());
+        comm = next;
+    }
+}
+
+/// One attempt of the Sendrecv-mode stencil on `comm`, checking every
+/// return code: `None` means an exchange or the residual reduction
+/// failed (dead peer or revoked comm) and the caller should run ULFM
+/// recovery. Success returns `(comm size, global residual)`.
+fn try_jacobi<A: MpiAbi>(comm: A::Comm, p: &HaloParams) -> Option<(i32, f64)> {
+    let (mut size, mut rank) = (0, 0);
+    A::comm_size(comm, &mut size);
+    A::comm_rank(comm, &mut rank);
+    let dt = A::datatype(Dt::Double);
+    let n = p.n;
+    let rows_per = n / size as usize;
+    assert!(rows_per >= 1, "grid too small for {size} ranks");
+    let my_rows = if rank == size - 1 { n - rows_per * (size as usize - 1) } else { rows_per };
+
+    let w = n;
+    let h = my_rows + 2;
+    let idx = |r: usize, c: usize| r * w + c;
+    let mut grid = vec![0.0f64; w * h];
+    let mut next = grid.clone();
+    if rank == 0 {
+        for c in 0..w {
+            grid[idx(1, c)] = 1.0;
+            next[idx(1, c)] = 1.0;
+        }
+    }
+
+    let up = if rank == 0 { A::proc_null() } else { rank - 1 };
+    let down = if rank == size - 1 { A::proc_null() } else { rank + 1 };
+
+    for _ in 0..p.iters {
+        let mut st = A::status_empty();
+        let first_real = idx(1, 0);
+        let last_real = idx(my_rows, 0);
+        let ghost_top = idx(0, 0);
+        let ghost_bot = idx(my_rows + 1, 0);
+        let rc = A::sendrecv(
+            grid[first_real..].as_ptr() as *const u8,
+            w as i32,
+            dt,
+            up,
+            1,
+            grid[ghost_bot..].as_mut_ptr() as *mut u8,
+            w as i32,
+            dt,
+            down,
+            1,
+            comm,
+            &mut st,
+        );
+        if rc != 0 {
+            return None;
+        }
+        let rc = A::sendrecv(
+            grid[last_real..].as_ptr() as *const u8,
+            w as i32,
+            dt,
+            down,
+            2,
+            grid[ghost_top..].as_mut_ptr() as *mut u8,
+            w as i32,
+            dt,
+            up,
+            2,
+            comm,
+            &mut st,
+        );
+        if rc != 0 {
+            return None;
+        }
+
+        for r in 1..=my_rows {
+            let global_r = rank as usize * rows_per + (r - 1);
+            if global_r == 0 || global_r == n - 1 {
+                for c in 0..w {
+                    next[idx(r, c)] = grid[idx(r, c)];
+                }
+                continue;
+            }
+            for c in 1..w - 1 {
+                next[idx(r, c)] = 0.25
+                    * (grid[idx(r - 1, c)]
+                        + grid[idx(r + 1, c)]
+                        + grid[idx(r, c - 1)]
+                        + grid[idx(r, c + 1)]);
+            }
+            next[idx(r, 0)] = grid[idx(r, 0)];
+            next[idx(r, w - 1)] = grid[idx(r, w - 1)];
+        }
+        std::mem::swap(&mut grid, &mut next);
+    }
+
+    let local: f64 = (1..=my_rows).map(|r| (0..w).map(|c| grid[idx(r, c)]).sum::<f64>()).sum();
+    let mut global = 0.0f64;
+    let rc = A::allreduce(
+        &local as *const f64 as *const u8,
+        &mut global as *mut f64 as *mut u8,
+        1,
+        dt,
+        A::op(crate::api::OpName::Sum),
+        comm,
+    );
+    if rc != 0 {
+        return None;
+    }
+    Some((size, global))
+}

@@ -368,6 +368,19 @@ fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
                         apply_recv(ctx, s, env.payload, action)?;
                     }
                     None => {
+                        // ULFM: a parked step waiting on a dead peer (or
+                        // a revoked comm) can never unpark — abort the
+                        // schedule; the error lands in the request status
+                        // and surfaces at wait/test. Checked only on a
+                        // miss, so data the peer sent before dying still
+                        // flows through the schedule.
+                        if ctx.world.is_revoked(s.context) {
+                            return Err(err!(MPI_ERR_REVOKED));
+                        }
+                        if ctx.world.is_dead(s.members[from]) {
+                            ctx.obs.note_op_failed_proc();
+                            return Err(err!(MPI_ERR_PROC_FAILED));
+                        }
                         // Not here yet: park on this step (pc unchanged).
                         return Ok(false);
                     }

@@ -32,6 +32,10 @@ pub struct CommObj {
     pub name: String,
     /// Predefined comms (world/self) are not freeable.
     pub predefined: bool,
+    /// ULFM: how many member failures this rank has acknowledged on this
+    /// comm (`MPI_Comm_ack_failed`). A wildcard receive only reports
+    /// `MPI_ERR_PROC_FAILED_PENDING` while unacknowledged failures exist.
+    pub acked_failed: usize,
 }
 
 impl CommObj {
@@ -76,6 +80,7 @@ pub fn install_predefined(comms: &mut Slab<CommObj>) {
                 errhandler: super::reserved::ERRH_ARE_FATAL,
                 name: name.to_string(),
                 predefined: true,
+                acked_failed: 0,
             },
         );
     }
@@ -204,6 +209,7 @@ pub fn insert_comm(
             errhandler: super::reserved::ERRH_ARE_FATAL,
             name: String::new(),
             predefined: false,
+            acked_failed: 0,
         })))
     })
 }
@@ -269,5 +275,42 @@ pub(crate) fn advance_coll_tag(comm: CommId) -> RC<i32> {
         let mut t = ctx.tables.borrow_mut();
         let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
         Ok(c.next_coll_tag())
+    })
+}
+
+/// ULFM wildcard-receive condition: does the comm owning pt2pt plane
+/// `context` have a dead member whose failure this rank has not yet
+/// acknowledged? While true, a wildcard receive on that plane cannot
+/// safely block (its match might have been the dead rank's message) and
+/// reports `MPI_ERR_PROC_FAILED_PENDING` instead. Call only when
+/// [`super::world::World::any_dead`] — the per-message fast path stays
+/// one load.
+pub(crate) fn failure_pending_on_context(ctx: &super::world::RankCtx, context: u32) -> bool {
+    let t = ctx.tables.borrow();
+    for (_, c) in t.comms.iter() {
+        if c.ctx_pt2pt == context {
+            let dead = c.members.iter().filter(|&&m| ctx.world.is_dead(m)).count();
+            return dead > c.acked_failed;
+        }
+    }
+    false
+}
+
+/// `MPI_Comm_ack_failed` (ULFM): acknowledge up to `num_to_ack` member
+/// failures on `comm`; returns how many are now acknowledged in total.
+/// Once every current failure is acknowledged, wildcard receives on the
+/// comm stop reporting `MPI_ERR_PROC_FAILED_PENDING` (dead senders are
+/// simply excluded from matching).
+pub fn comm_ack_failed(comm: CommId, num_to_ack: i32) -> RC<i32> {
+    if num_to_ack < 0 {
+        return Err(err!(MPI_ERR_ARG));
+    }
+    with_ctx(|ctx| {
+        let mut t = ctx.tables.borrow_mut();
+        let c = t.comms.get_mut(comm.0).ok_or(err!(MPI_ERR_COMM))?;
+        let dead = c.members.iter().filter(|&&m| ctx.world.is_dead(m)).count();
+        let acked = dead.min(num_to_ack as usize).max(c.acked_failed.min(dead));
+        c.acked_failed = c.acked_failed.max(acked);
+        Ok(acked as i32)
     })
 }

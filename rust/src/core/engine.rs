@@ -195,7 +195,18 @@ fn route_send(ctx: &RankCtx, dest: i32, tag: i32, comm: CommId) -> RC<(usize, u3
     check_tag_send(tag)?;
     let (size, dst, ctx_pt2pt) = super::comm::comm_route(ctx, comm, dest)?;
     check_rank(dest, size, false)?;
-    Ok((dst.ok_or(err!(MPI_ERR_RANK))?, ctx_pt2pt))
+    if ctx.world.is_revoked(ctx_pt2pt) {
+        return Err(err!(MPI_ERR_REVOKED));
+    }
+    let dst = dst.ok_or(err!(MPI_ERR_RANK))?;
+    if ctx.world.is_dead(dst) {
+        // ULFM: communication with a failed process raises
+        // MPI_ERR_PROC_FAILED — failing at post time keeps the
+        // fabric free of traffic nobody will drain.
+        ctx.obs.note_op_failed_proc();
+        return Err(err!(MPI_ERR_PROC_FAILED));
+    }
+    Ok((dst, ctx_pt2pt))
 }
 
 /// Validate and resolve a receive's matching key — shared by
@@ -210,6 +221,9 @@ fn route_recv(ctx: &RankCtx, src: i32, tag: i32, comm: CommId) -> RC<(i32, u32)>
     }
     let (size, src_world, ctx_pt2pt) = super::comm::comm_route(ctx, comm, src)?;
     check_rank(src, size, true)?;
+    if ctx.world.is_revoked(ctx_pt2pt) {
+        return Err(err!(MPI_ERR_REVOKED));
+    }
     let src_match = if src == MPI_ANY_SOURCE {
         MPI_ANY_SOURCE
     } else {
@@ -256,7 +270,9 @@ fn isend_impl(
     enqueue_send(ctx, dst_world, env);
     Ok(match sync_id {
         None => new_request(ctx, ReqKind::Send, ReqState::Complete(StatusCore::empty())),
-        Some(id) => new_request(ctx, ReqKind::Ssend { sync_id: id }, ReqState::Active),
+        Some(id) => {
+            new_request(ctx, ReqKind::Ssend { sync_id: id, dst: dst_world }, ReqState::Active)
+        }
     })
 }
 
@@ -307,7 +323,10 @@ pub fn send(
     with_ctx(|ctx| {
         if ctx.state.borrow().match_index.is_flat() {
             let rid = isend_impl(ctx, buf, count, dt, dest, tag, comm, mode)?;
-            wait_one(ctx, rid)?;
+            let s = wait_one(ctx, rid)?;
+            if s.error != 0 {
+                return Err(MpiError::new(s.error));
+            }
             return Ok(());
         }
         send_fast(ctx, buf, count, dt, dest, tag, comm, mode)
@@ -338,8 +357,19 @@ fn send_fast(
     if rndv_switch(ctx, count, dt)? {
         let rndv = super::request::begin_rndv_send(ctx, dst_world, ctx_pt2pt, tag, buf, count, dt)?;
         // Spin until the stream drains (CTS received and every chunk
-        // enqueued) — the rendezvous analogue of the Ssend ack spin.
+        // enqueued) — the rendezvous analogue of the Ssend ack spin. A
+        // destination that dies (or a comm revoked) mid-stream would
+        // spin forever: fail the send instead.
         while super::request::rndv_send_active(ctx, rndv) {
+            if ctx.world.is_dead(dst_world) {
+                ctx.state.borrow_mut().rndv_sends.remove(&rndv);
+                ctx.obs.note_op_failed_proc();
+                return Err(err!(MPI_ERR_PROC_FAILED));
+            }
+            if ctx.world.is_revoked(ctx_pt2pt) {
+                ctx.state.borrow_mut().rndv_sends.remove(&rndv);
+                return Err(err!(MPI_ERR_REVOKED));
+            }
             progress(ctx);
             std::thread::yield_now();
         }
@@ -361,6 +391,12 @@ fn send_fast(
                 }
             }
         }
+        // A destination that died with its ring full would leave us
+        // spinning on backpressure forever.
+        if ctx.world.is_dead(dst_world) {
+            ctx.obs.note_op_failed_proc();
+            return Err(err!(MPI_ERR_PROC_FAILED));
+        }
         // Ring full (or deferred traffic ahead of us): progress our own
         // inbound so the peer can drain, then retry.
         progress(ctx);
@@ -368,10 +404,18 @@ fn send_fast(
     }
     if let Some(id) = sync_id {
         // Synchronous mode completes when the receiver matches the
-        // message: spin on the ack, still without a request.
+        // message: spin on the ack, still without a request. A receiver
+        // that dies before matching can never ack — fail, don't hang.
         loop {
             if ctx.state.borrow_mut().ssend_acks.remove(&id) {
                 break;
+            }
+            if ctx.world.is_dead(dst_world) {
+                ctx.obs.note_op_failed_proc();
+                return Err(err!(MPI_ERR_PROC_FAILED));
+            }
+            if ctx.world.is_revoked(ctx_pt2pt) {
+                return Err(err!(MPI_ERR_REVOKED));
             }
             progress(ctx);
             std::thread::yield_now();
@@ -498,6 +542,21 @@ fn recv_fast(
             }
             return Ok(s);
         }
+        // ULFM failure checks run only after the take misses: a message
+        // the peer sent before dying is still delivered.
+        if ctx.world.is_revoked(ctx_pt2pt) {
+            return Err(err!(MPI_ERR_REVOKED));
+        }
+        if ctx.world.any_dead() {
+            if src_match == MPI_ANY_SOURCE {
+                if super::comm::failure_pending_on_context(ctx, ctx_pt2pt) {
+                    return Err(err!(MPI_ERR_PROC_FAILED_PENDING));
+                }
+            } else if ctx.world.is_dead(src_match as usize) {
+                ctx.obs.note_op_failed_proc();
+                return Err(err!(MPI_ERR_PROC_FAILED));
+            }
+        }
         progress(ctx);
         std::thread::yield_now();
     }
@@ -521,8 +580,17 @@ pub fn sendrecv(
     with_ctx(|ctx| {
         let r = irecv_impl(ctx, recvbuf, recvcount, recvtype, src, recvtag, comm)?;
         let s = isend_impl(ctx, sendbuf, sendcount, sendtype, dest, sendtag, comm, SendMode::Standard)?;
-        wait_one(ctx, s)?;
+        // Either half completing in error (ULFM: dead peer, revoked comm)
+        // fails the whole sendrecv — this is the detection point for
+        // fault-tolerant halo exchanges.
+        let ss = wait_one(ctx, s)?;
+        if ss.error != 0 {
+            return Err(MpiError::new(ss.error));
+        }
         let mut st = wait_one(ctx, r)?;
+        if st.error != 0 {
+            return Err(MpiError::new(st.error));
+        }
         if let Some(cr) = super::comm::comm_rank_of_world(comm, st.source)? {
             st.source = cr;
         }
@@ -676,7 +744,7 @@ fn start_impl(ctx: &RankCtx, rid: ReqId) -> RC<()> {
             ctx.obs.eager_bytes.set(ctx.obs.eager_bytes.get() + payload.len() as u64);
             let (msg_kind, seq, sync_id) = send_wire_ids(ctx, sync);
             let (req_kind, state) = match sync_id {
-                Some(id) => (ReqKind::Ssend { sync_id: id }, ReqState::Active),
+                Some(id) => (ReqKind::Ssend { sync_id: id, dst: dst_world }, ReqState::Active),
                 None => (ReqKind::Send, ReqState::Complete(StatusCore::empty())),
             };
             let env = Envelope {
@@ -751,6 +819,20 @@ pub fn iprobe(src: i32, tag: i32, comm: CommId) -> RC<Option<StatusCore>> {
             // the announced message size, not its empty control payload.
             return Ok(Some(StatusCore::success(env.src as i32, env.tag, env.data_len())));
         }
+        drop(st);
+        // No buffered match: a dead concrete source (or an
+        // unacknowledged failure under a wildcard) means none can come —
+        // fail so the blocking `probe` loop terminates.
+        if ctx.world.any_dead() {
+            if src_match == MPI_ANY_SOURCE {
+                if super::comm::failure_pending_on_context(ctx, ctx_pt2pt) {
+                    return Err(err!(MPI_ERR_PROC_FAILED_PENDING));
+                }
+            } else if ctx.world.is_dead(src_match as usize) {
+                ctx.obs.note_op_failed_proc();
+                return Err(err!(MPI_ERR_PROC_FAILED));
+            }
+        }
         Ok(None)
     })?;
     match found {
@@ -768,14 +850,27 @@ pub fn iprobe(src: i32, tag: i32, comm: CommId) -> RC<Option<StatusCore>> {
 // Completion
 // ---------------------------------------------------------------------------
 
-/// `MPI_Wait`.
+/// `MPI_Wait`. A request completed *in error* (ULFM: its peer died or
+/// its comm was revoked) is retired like any completed request, but the
+/// failure surfaces as this call's return code — MPI_Wait on a single
+/// request reports operation errors directly, unlike waitall's
+/// error-in-status convention.
 pub fn wait(rid: ReqId) -> RC<StatusCore> {
-    with_ctx(|ctx| wait_one(ctx, rid))
+    with_ctx(|ctx| {
+        let s = wait_one(ctx, rid)?;
+        if s.error != 0 {
+            return Err(crate::core::MpiError::new(s.error));
+        }
+        Ok(s)
+    })
 }
 
-/// `MPI_Test`.
+/// `MPI_Test` (same completed-in-error convention as [`wait`]).
 pub fn test(rid: ReqId) -> RC<Option<StatusCore>> {
-    with_ctx(|ctx| test_one(ctx, rid))
+    with_ctx(|ctx| match test_one(ctx, rid)? {
+        Some(s) if s.error != 0 => Err(crate::core::MpiError::new(s.error)),
+        other => Ok(other),
+    })
 }
 
 /// `MPI_Waitall`.
@@ -1120,6 +1215,190 @@ pub fn comm_create(comm: CommId, group: super::GroupId) -> RC<Option<CommId>> {
     match g_members.iter().position(|&m| m == my_world) {
         Some(new_rank) => Ok(Some(super::comm::insert_comm(g_members, new_rank, p, c)?)),
         None => Ok(None),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ULFM fault tolerance (MPI_Comm_revoke / shrink / agree)
+// ---------------------------------------------------------------------------
+
+/// Derive a bootstrap-plane wire tag for a ULFM recovery exchange on the
+/// comm whose pt2pt plane is `ctx_plane`. Same construction discipline
+/// as [`super::session::pset_tag`]: folded strictly into the legal tag
+/// range; `salt` separates the agree and shrink protocols so concurrent
+/// recovery steps on one comm can never cross-wire.
+fn ulfm_tag(ctx_plane: u32, salt: u32) -> i32 {
+    ((ctx_plane.wrapping_mul(0x9E37_79B9).wrapping_add(salt)) & 0x007F_FFFF) as i32
+}
+
+/// `MPI_Comm_revoke` (ULFM): permanently poison both of the comm's
+/// context planes. Revocation is job-global state — every member's
+/// in-flight and future operations on this comm fail with
+/// `MPI_ERR_REVOKED` (no new message is required to propagate it, which
+/// is exactly the guarantee ULFM revocation exists to give). A second
+/// revoke of the same comm is a no-op success.
+pub fn comm_revoke(comm: CommId) -> RC<()> {
+    let (_, _, ctxp, ctxc) = comm_snapshot(comm)?;
+    with_ctx(|ctx| {
+        let newly_p = ctx.world.revoke_context(ctxp);
+        let newly_c = ctx.world.revoke_context(ctxc);
+        if newly_p || newly_c {
+            // Counts *comms*, once, even though two planes were poisoned.
+            ctx.world.obs.note_comm_revoked();
+        }
+        Ok(())
+    })
+}
+
+/// ULFM helper: whether the comm has been revoked (by any member).
+pub fn comm_is_revoked(comm: CommId) -> RC<bool> {
+    let (_, _, ctxp, _) = comm_snapshot(comm)?;
+    with_ctx(|ctx| Ok(ctx.world.is_revoked(ctxp)))
+}
+
+/// `MPI_Comm_ack_failed` (ULFM): acknowledge up to `num_to_ack` known
+/// failures on the comm, returning the number acknowledged. Once every
+/// known failure is acknowledged, wildcard receives on the comm stop
+/// raising `MPI_ERR_PROC_FAILED_PENDING`.
+pub fn comm_ack_failed(comm: CommId, num_to_ack: i32) -> RC<i32> {
+    super::comm::comm_ack_failed(comm, num_to_ack)
+}
+
+/// `MPI_Comm_agree` (ULFM): fault-tolerant agreement — returns the
+/// bitwise AND of `flag` over the comm's *surviving* members. Runs over
+/// the hidden bootstrap communicator's planes (which are never revoked),
+/// so it works on a revoked comm: revoke → agree → shrink is the ULFM
+/// recovery sequence. The coordinator is the lowest-ranked survivor;
+/// contributions from members that die mid-protocol are skipped.
+pub fn comm_agree(comm: CommId, flag: i32) -> RC<i32> {
+    let (members, my_rank, ctxp, _) = comm_snapshot(comm)?;
+    let byte = super::datatype::builtin_id_of_abi(crate::abi::datatypes::MPI_BYTE)
+        .ok_or(err!(MPI_ERR_INTERN))?;
+    let wire_tag = ulfm_tag(ctxp, 1);
+    let dead: Vec<bool> =
+        with_ctx(|ctx| Ok(members.iter().map(|&m| ctx.world.is_dead(m)).collect()))?;
+    let root = dead.iter().position(|&d| !d).ok_or(err!(MPI_ERR_PROC_FAILED))?;
+    let mut agreed = flag;
+    if my_rank == root {
+        for (r, &m) in members.iter().enumerate() {
+            if r == root || dead[r] {
+                continue;
+            }
+            let mut b = [0u8; 4];
+            // The bootstrap comm spans the world in world-rank order, so
+            // a member's world rank *is* its bootstrap rank.
+            match recv(b.as_mut_ptr(), 4, byte, m as i32, wire_tag, super::reserved::COMM_BOOTSTRAP)
+            {
+                Ok(_) => agreed &= i32::from_le_bytes(b),
+                Err(e) if e.class == crate::abi::errors::MPI_ERR_PROC_FAILED => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let out = agreed.to_le_bytes();
+        for (r, &m) in members.iter().enumerate() {
+            if r == root || dead[r] {
+                continue;
+            }
+            match send(
+                out.as_ptr(),
+                4,
+                byte,
+                m as i32,
+                wire_tag,
+                super::reserved::COMM_BOOTSTRAP,
+                SendMode::Standard,
+            ) {
+                Ok(()) => {}
+                Err(e) if e.class == crate::abi::errors::MPI_ERR_PROC_FAILED => {}
+                Err(e) => return Err(e),
+            }
+        }
+    } else {
+        let b = flag.to_le_bytes();
+        send(
+            b.as_ptr(),
+            4,
+            byte,
+            members[root] as i32,
+            wire_tag,
+            super::reserved::COMM_BOOTSTRAP,
+            SendMode::Standard,
+        )?;
+        let mut rb = [0u8; 4];
+        recv(rb.as_mut_ptr(), 4, byte, members[root] as i32, wire_tag, super::reserved::COMM_BOOTSTRAP)?;
+        agreed = i32::from_le_bytes(rb);
+    }
+    Ok(agreed)
+}
+
+/// `MPI_Comm_shrink` (ULFM): build a fresh communicator over the comm's
+/// surviving members — fresh context planes, survivor-ordered ranks.
+/// Like [`comm_agree`] this bootstraps over the hidden bootstrap
+/// communicator, so it works on a revoked (or failure-poisoned) parent.
+/// The lowest-ranked survivor allocates the plane pair and distributes
+/// `[ctxp, ctxc, n, survivor world ranks…]`; every member installs the
+/// *received* survivor list, so all members agree on the new comm's
+/// membership even if their own failure views raced.
+pub fn comm_shrink(comm: CommId) -> RC<CommId> {
+    let (members, my_rank, ctxp, _) = comm_snapshot(comm)?;
+    let byte = super::datatype::builtin_id_of_abi(crate::abi::datatypes::MPI_BYTE)
+        .ok_or(err!(MPI_ERR_INTERN))?;
+    let wire_tag = ulfm_tag(ctxp, 2);
+    let my_world = members[my_rank];
+    let survivors: Vec<usize> = with_ctx(|ctx| {
+        Ok(members.iter().copied().filter(|&m| !ctx.world.is_dead(m)).collect())
+    })?;
+    let new_rank = survivors
+        .iter()
+        .position(|&m| m == my_world)
+        .ok_or(err!(MPI_ERR_PROC_FAILED))?;
+    if new_rank == 0 {
+        let (p, c) = with_ctx(|ctx| Ok(ctx.world.alloc_context_pair()))?;
+        let mut blob = Vec::with_capacity(12 + 4 * survivors.len());
+        blob.extend_from_slice(&p.to_le_bytes());
+        blob.extend_from_slice(&c.to_le_bytes());
+        blob.extend_from_slice(&(survivors.len() as u32).to_le_bytes());
+        for &m in &survivors {
+            blob.extend_from_slice(&(m as u32).to_le_bytes());
+        }
+        for &m in &survivors[1..] {
+            match send(
+                blob.as_ptr(),
+                blob.len(),
+                byte,
+                m as i32,
+                wire_tag,
+                super::reserved::COMM_BOOTSTRAP,
+                SendMode::Standard,
+            ) {
+                Ok(()) => {}
+                Err(e) if e.class == crate::abi::errors::MPI_ERR_PROC_FAILED => {}
+                Err(e) => return Err(e),
+            }
+        }
+        super::comm::insert_comm(survivors, 0, p, c)
+    } else {
+        // Post capacity for the full parent membership: the root's
+        // survivor list can only be our view or smaller.
+        let mut blob = vec![0u8; 12 + 4 * members.len()];
+        recv(
+            blob.as_mut_ptr(),
+            blob.len(),
+            byte,
+            survivors[0] as i32,
+            wire_tag,
+            super::reserved::COMM_BOOTSTRAP,
+        )?;
+        let rd = |i: usize| u32::from_le_bytes(blob[4 * i..4 * i + 4].try_into().unwrap());
+        let p = rd(0);
+        let c = rd(1);
+        let n = rd(2) as usize;
+        let got: Vec<usize> = (0..n).map(|i| rd(3 + i) as usize).collect();
+        let rank = got
+            .iter()
+            .position(|&m| m == my_world)
+            .ok_or(err!(MPI_ERR_PROC_FAILED))?;
+        super::comm::insert_comm(got, rank, p, c)
     }
 }
 

@@ -54,6 +54,11 @@ pub struct WorldObs {
     /// Collective-schedule re-arms (`MPI_Start` on a persistent
     /// collective): the reuse the schedule engine exists to deliver.
     pub sched_reuses: AtomicU64,
+    /// Communicators revoked (ULFM `MPI_Comm_revoke`). Counts *comms*,
+    /// not context planes — a revoke poisons both of a comm's planes
+    /// but bumps this once, and only when the comm was not already
+    /// revoked.
+    pub comms_revoked: AtomicU64,
 }
 
 impl WorldObs {
@@ -81,6 +86,11 @@ impl WorldObs {
     /// Record one collective-schedule re-arm.
     pub(crate) fn note_sched_reuse(&self) {
         self.sched_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one newly revoked communicator.
+    pub(crate) fn note_comm_revoked(&self) {
+        self.comms_revoked.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -110,6 +120,10 @@ pub struct ObsRank {
     /// High-water mark of any single destination's deferred-send queue
     /// (transport backpressure depth).
     pub pending_send_hwm: Cell<u64>,
+    /// Operations this rank completed with `MPI_ERR_PROC_FAILED`
+    /// (failed sends, receives, and rendezvous streams against a dead
+    /// peer — the ULFM fault-propagation witness).
+    pub ops_failed_proc: Cell<u64>,
     /// `MPI_T_init_thread` refcount: every MPI_T call below errors
     /// `MPI_T_ERR_NOT_INITIALIZED` while this is zero.
     t_init_count: Cell<u32>,
@@ -134,6 +148,7 @@ impl ObsRank {
             rndv_msgs: Cell::new(0),
             rndv_bytes: Cell::new(0),
             pending_send_hwm: Cell::new(0),
+            ops_failed_proc: Cell::new(0),
             t_init_count: Cell::new(0),
             t_state: RefCell::new(TState::default()),
             trace_on: Cell::new(trace_on),
@@ -147,6 +162,11 @@ impl ObsRank {
         if depth > self.pending_send_hwm.get() {
             self.pending_send_hwm.set(depth);
         }
+    }
+
+    /// Record one operation completed with `MPI_ERR_PROC_FAILED`.
+    pub(crate) fn note_op_failed_proc(&self) {
+        self.ops_failed_proc.set(self.ops_failed_proc.get() + 1);
     }
 }
 
@@ -279,6 +299,21 @@ pub const PVARS: &[PvarDesc] = &[
         class: k::MPI_T_PVAR_CLASS_COUNTER,
         verbosity: k::MPI_T_VERBOSITY_MPIDEV_BASIC,
     },
+    PvarDesc {
+        name: "ranks_failed",
+        class: k::MPI_T_PVAR_CLASS_LEVEL,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "ops_failed_proc",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    PvarDesc {
+        name: "comms_revoked",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
 ];
 
 /// Descriptor of one control variable.
@@ -343,6 +378,9 @@ fn pvar_value(ctx: &RankCtx, i: usize) -> u64 {
         14 => ctx.world.obs.rndv_inflight_peak.load(Ordering::Relaxed),
         15 => ctx.world.obs.sched_builds.load(Ordering::Relaxed),
         16 => ctx.world.obs.sched_reuses.load(Ordering::Relaxed),
+        17 => ctx.world.ranks_failed(),
+        18 => ctx.obs.ops_failed_proc.get(),
+        19 => ctx.world.obs.comms_revoked.load(Ordering::Relaxed),
         _ => 0,
     }
 }
@@ -818,6 +856,9 @@ mod tests {
                 "rndv_inflight_peak",
                 "sched_builds",
                 "sched_reuses",
+                "ranks_failed",
+                "ops_failed_proc",
+                "comms_revoked",
             ]
         );
         assert_eq!(CVARS[CVAR_RNDV_THRESHOLD].name, "rndv_threshold");

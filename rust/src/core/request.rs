@@ -179,6 +179,10 @@ pub enum ReqKind {
     Ssend {
         /// Ack id the matching receive will echo back.
         sync_id: u64,
+        /// Destination world rank — kept so an unacked Ssend to a peer
+        /// that dies completes with `MPI_ERR_PROC_FAILED` instead of
+        /// waiting forever for an ack that cannot come.
+        dst: usize,
     },
     /// Rendezvous send (standard or synchronous — CTS implies the match,
     /// so streaming out fully satisfies both): complete when stream
@@ -349,11 +353,79 @@ pub(crate) fn progress(ctx: &RankCtx) {
     if let Some(code) = ctx.world.aborted() {
         std::panic::panic_any(super::world::AbortUnwind(code));
     }
+    // Deterministic death injection: an armed victim counts progress
+    // cycles and dies once its threshold passes. Non-victims pay one
+    // Cell read.
+    if let Some(kill_at) = ctx.kill_at.get() {
+        let t = ctx.ticks.get() + 1;
+        ctx.ticks.set(t);
+        if t > kill_at {
+            die(ctx);
+        }
+    }
     flush_pending_sends(ctx);
     drain_fabric(ctx);
+    if ctx.world.any_dead() {
+        fail_rndv_from_dead(ctx);
+    }
     pump_rndv_sends(ctx);
     super::rma::progress_rma(ctx);
     super::collectives::sched::progress_scheds(ctx);
+}
+
+/// The injected death: mark this rank dead, drain (and discard) whatever
+/// is already in its inbound fabric — a dead process consumes nothing
+/// more, and the drain keeps senders' rings from wedging on a full ring
+/// — then unwind the rank thread *without* aborting the job. Survivors
+/// observe the death as `MPI_ERR_PROC_FAILED`.
+fn die(ctx: &RankCtx) -> ! {
+    ctx.world.mark_dead(ctx.rank);
+    let mut inbox = std::mem::take(&mut ctx.state.borrow_mut().inbox);
+    ctx.world.fabric.poll_into(ctx.rank, &mut inbox);
+    inbox.clear();
+    std::panic::panic_any(super::world::KilledUnwind);
+}
+
+/// Fail every in-flight rendezvous *receive* stream whose sender has
+/// died: the stream can never finish, so its request (or inline status)
+/// completes with `MPI_ERR_PROC_FAILED` instead of hanging. (Outbound
+/// streams to a dead destination fail at their completion checks —
+/// [`finish_if_done`] and the blocking-send spin.)
+fn fail_rndv_from_dead(ctx: &RankCtx) {
+    let failed: Vec<(u32, u64)> = {
+        let st = ctx.state.borrow();
+        st.rndv_recvs
+            .iter()
+            .filter(|(&(src, _), r)| r.status.is_none() && ctx.world.is_dead(src as usize))
+            .map(|(&k, _)| k)
+            .collect()
+    };
+    for (src, rndv) in failed {
+        let done = {
+            let mut st = ctx.state.borrow_mut();
+            let Some(r) = st.rndv_recvs.get_mut(&(src, rndv)) else { continue };
+            let mut status = StatusCore::success(src as i32, r.tag, r.received.min(r.cap));
+            status.error = crate::abi::errors::MPI_ERR_PROC_FAILED;
+            match r.rid {
+                Some(rid) => {
+                    st.rndv_recvs.remove(&(src, rndv));
+                    Some((rid, status))
+                }
+                None => {
+                    // Inline blocking path: park the error status for
+                    // `take_rndv_status` to collect.
+                    r.status = Some(status);
+                    None
+                }
+            }
+        };
+        ctx.obs.note_op_failed_proc();
+        if let Some((rid, status)) = done {
+            if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
+                req.state = ReqState::Complete(status);
+            }
+        }
+    }
 }
 
 /// Retry deferred sends. Queues are keyed per destination: a
@@ -365,7 +437,11 @@ fn flush_pending_sends(ctx: &RankCtx) {
         return;
     }
     let fabric = &ctx.world.fabric;
+    let world = &ctx.world;
     st.pending_sends.retain(|&dst, q| {
+        if world.is_dead(dst) {
+            return false; // messages to a dead process are discarded
+        }
         while let Some(env) = q.pop_front() {
             if let Err(env) = fabric.try_send(dst, env) {
                 q.push_front(env);
@@ -583,6 +659,12 @@ fn pump_rndv_sends(ctx: &RankCtx) {
             let step = {
                 let st = ctx.state.borrow();
                 let Some(s) = st.rndv_sends.get(&rndv) else { break };
+                if ctx.world.is_dead(s.dst) {
+                    // Leave the entry in place: the completion check fails
+                    // the send request with MPI_ERR_PROC_FAILED (removing
+                    // it here would complete the send successfully).
+                    break;
+                }
                 if st.pending_sends.contains_key(&s.dst) {
                     None // destination parked; retry next progress tick
                 } else {
@@ -836,6 +918,9 @@ pub(crate) fn take_rndv_status(ctx: &RankCtx, src: u32, rndv: u64) -> Option<Sta
 /// backpressure (a destination's deferred envelopes drain before new
 /// ones to it; other destinations are unaffected).
 pub(crate) fn enqueue_send(ctx: &RankCtx, dst: usize, env: Envelope) {
+    if ctx.world.is_dead(dst) {
+        return; // messages to a dead process are discarded
+    }
     let mut st = ctx.state.borrow_mut();
     if let Some(q) = st.pending_sends.get_mut(&dst) {
         // Deferred traffic to this destination exists: queue behind it.
@@ -866,8 +951,9 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
     enum Next {
         Done(StatusCore),
         Pending,
-        CheckSsend(u64),
+        CheckSsend { sync_id: u64, dst: usize },
         CheckRndv(u64),
+        CheckRecv { src: i32, context: u32 },
     }
     let next = {
         let t = ctx.tables.borrow();
@@ -875,18 +961,33 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
         match (&req.state, &req.kind) {
             (ReqState::Complete(s), _) => Next::Done(*s),
             (ReqState::Inactive, _) => Next::Done(StatusCore::empty()),
-            (ReqState::Active, ReqKind::Ssend { sync_id }) => Next::CheckSsend(*sync_id),
+            (ReqState::Active, ReqKind::Ssend { sync_id, dst }) => {
+                Next::CheckSsend { sync_id: *sync_id, dst: *dst }
+            }
             (ReqState::Active, ReqKind::RndvSend { rndv }) => Next::CheckRndv(*rndv),
+            (ReqState::Active, ReqKind::Recv { src, context, .. })
+                if ctx.world.any_dead() || ctx.world.is_revoked(*context) =>
+            {
+                Next::CheckRecv { src: *src, context: *context }
+            }
             (ReqState::Active, _) => Next::Pending,
         }
     };
     match next {
         Next::Done(s) => Ok(Some(s)),
         Next::Pending => Ok(None),
-        Next::CheckSsend(sync_id) => {
+        Next::CheckSsend { sync_id, dst } => {
             let acked = ctx.state.borrow_mut().ssend_acks.remove(&sync_id);
             if acked {
                 let s = StatusCore::empty();
+                ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
+                    ReqState::Complete(s);
+                Ok(Some(s))
+            } else if ctx.world.is_dead(dst) {
+                // The ack can never come: ULFM completes the send in error.
+                ctx.obs.note_op_failed_proc();
+                let mut s = StatusCore::empty();
+                s.error = crate::abi::errors::MPI_ERR_PROC_FAILED;
                 ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
                     ReqState::Complete(s);
                 Ok(Some(s))
@@ -895,16 +996,85 @@ pub(crate) fn finish_if_done(ctx: &RankCtx, rid: ReqId) -> RC<Option<StatusCore>
             }
         }
         Next::CheckRndv(rndv) => {
-            if rndv_send_active(ctx, rndv) {
+            let fail = {
+                let st = ctx.state.borrow();
+                match st.rndv_sends.get(&rndv) {
+                    None => {
+                        // Stream fully enqueued: the send completed.
+                        let s = StatusCore::empty();
+                        ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
+                            ReqState::Complete(s);
+                        return Ok(Some(s));
+                    }
+                    Some(s) if ctx.world.is_dead(s.dst) => {
+                        Some(crate::abi::errors::MPI_ERR_PROC_FAILED)
+                    }
+                    Some(s) if ctx.world.is_revoked(s.context) => {
+                        Some(crate::abi::errors::MPI_ERR_REVOKED)
+                    }
+                    Some(_) => None,
+                }
+            };
+            match fail {
+                Some(class) => {
+                    if class == crate::abi::errors::MPI_ERR_PROC_FAILED {
+                        ctx.obs.note_op_failed_proc();
+                    }
+                    ctx.state.borrow_mut().rndv_sends.remove(&rndv);
+                    let mut s = StatusCore::empty();
+                    s.error = class;
+                    ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
+                        ReqState::Complete(s);
+                    Ok(Some(s))
+                }
+                None => Ok(None),
+            }
+        }
+        Next::CheckRecv { src, context } => {
+            if ctx.world.is_revoked(context) {
+                let mut s = StatusCore::empty();
+                s.error = crate::abi::errors::MPI_ERR_REVOKED;
+                return Ok(Some(fail_recv(ctx, rid, s)));
+            }
+            // A receive already matched to a live rendezvous stream is
+            // progressing — let it complete (a dead sender's streams were
+            // failed by `fail_rndv_from_dead` before we got here).
+            let matched_stream =
+                ctx.state.borrow().rndv_recvs.values().any(|r| r.rid == Some(rid));
+            if matched_stream {
+                return Ok(None);
+            }
+            if src == crate::abi::constants::MPI_ANY_SOURCE {
+                // ULFM: a wildcard receive cannot block while an
+                // unacknowledged member failure exists — any dead rank
+                // could have been its matching sender. The request stays
+                // Active; the wait surfaces the *pending* class.
+                if super::comm::failure_pending_on_context(ctx, context) {
+                    return Err(err!(MPI_ERR_PROC_FAILED_PENDING));
+                }
                 Ok(None)
+            } else if src >= 0 && ctx.world.is_dead(src as usize) {
+                ctx.obs.note_op_failed_proc();
+                let mut s = StatusCore::empty();
+                s.source = src;
+                s.error = crate::abi::errors::MPI_ERR_PROC_FAILED;
+                Ok(Some(fail_recv(ctx, rid, s)))
             } else {
-                let s = StatusCore::empty();
-                ctx.tables.borrow_mut().reqs.get_mut(rid.0).unwrap().state =
-                    ReqState::Complete(s);
-                Ok(Some(s))
+                Ok(None)
             }
         }
     }
+}
+
+/// Complete an unmatched receive in error (dead peer or revoked comm):
+/// withdraw it from the matching index so no later arrival can match a
+/// request the application is about to retire, then record the status.
+fn fail_recv(ctx: &RankCtx, rid: ReqId, status: StatusCore) -> StatusCore {
+    ctx.state.borrow_mut().match_index.withdraw(rid);
+    if let Some(req) = ctx.tables.borrow_mut().reqs.get_mut(rid.0) {
+        req.state = ReqState::Complete(status);
+    }
+    status
 }
 
 /// Consume a completed request in wait/test: persistent requests return

@@ -74,6 +74,24 @@ pub struct World {
     /// packed size exceeds this go RTS/CTS + chunk streaming instead of
     /// one eager envelope. Read once per rank at bind time.
     rndv_threshold: AtomicUsize,
+    /// ULFM failure registry: `dead[r]` is set when world rank `r` dies
+    /// (the kill injector's victim). Every blocked or matched operation
+    /// against a dead peer must then *fail* with `MPI_ERR_PROC_FAILED`
+    /// rather than hang.
+    dead: Vec<AtomicBool>,
+    /// Count of dead ranks — the zero-check keeps the failure-free fast
+    /// path to one relaxed load (also pvar `ranks_failed`).
+    failed_count: AtomicUsize,
+    /// Revoked context planes (`MPI_Comm_revoke` poisons both of a
+    /// comm's planes): operations routed onto a revoked plane fail with
+    /// `MPI_ERR_REVOKED`.
+    revoked: Mutex<HashSet<u32>>,
+    /// Count of revoked planes — same zero-check trick as `failed_count`.
+    revoked_count: AtomicUsize,
+    /// Deterministic rank-death injection (`JobSpec::with_kill` /
+    /// `MPI_ABI_KILL`): `(victim world rank, progress ticks to survive)`.
+    /// Read once per rank at bind time.
+    kill: Mutex<Option<(usize, u64)>>,
 }
 
 /// Eager/rendezvous switch point when neither the env var nor the job
@@ -125,7 +143,75 @@ impl World {
             psets,
             flat_match: AtomicBool::new(super::match_index::flat_match_env()),
             rndv_threshold: AtomicUsize::new(rndv_threshold_env()),
+            dead: (0..size).map(|_| AtomicBool::new(false)).collect(),
+            failed_count: AtomicUsize::new(0),
+            revoked: Mutex::new(HashSet::new()),
+            revoked_count: AtomicUsize::new(0),
+            kill: Mutex::new(None),
         })
+    }
+
+    /// Arm the deterministic rank-death injector: world rank `rank` dies
+    /// after surviving `ticks` progress-engine cycles (the
+    /// [`crate::launcher::JobSpec::with_kill`] application site). Read
+    /// once per rank at bind time, so arm before launching.
+    pub fn set_kill(&self, rank: usize, ticks: u64) {
+        assert!(rank < self.size, "kill target {rank} out of range");
+        *self.kill.lock().unwrap() = Some((rank, ticks));
+    }
+
+    /// The armed kill spec, if any.
+    pub fn kill_spec(&self) -> Option<(usize, u64)> {
+        *self.kill.lock().unwrap()
+    }
+
+    /// Mark world rank `rank` dead (the victim calls this as it unwinds,
+    /// after draining its inbound fabric). Idempotent; bumps the
+    /// `ranks_failed` pvar only on the first call per rank.
+    pub fn mark_dead(&self, rank: usize) {
+        if !self.dead[rank].swap(true, Ordering::SeqCst) {
+            self.failed_count.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Whether world rank `rank` has died.
+    pub fn is_dead(&self, rank: usize) -> bool {
+        // Zero-check first: the failure-free fast path is one load.
+        self.failed_count.load(Ordering::Relaxed) != 0
+            && self.dead[rank].load(Ordering::SeqCst)
+    }
+
+    /// Whether any rank has died (one relaxed load — the hot-path guard).
+    pub fn any_dead(&self) -> bool {
+        self.failed_count.load(Ordering::Relaxed) != 0
+    }
+
+    /// Number of ranks that have died (pvar `ranks_failed`).
+    pub fn ranks_failed(&self) -> u64 {
+        self.failed_count.load(Ordering::SeqCst) as u64
+    }
+
+    /// World ranks currently marked dead, ascending.
+    pub fn dead_snapshot(&self) -> Vec<usize> {
+        (0..self.size).filter(|&r| self.dead[r].load(Ordering::SeqCst)).collect()
+    }
+
+    /// Poison context plane `ctx` (`MPI_Comm_revoke` registers *both* of
+    /// the comm's planes). Returns true if the plane was newly revoked.
+    pub fn revoke_context(&self, ctx: u32) -> bool {
+        let mut set = self.revoked.lock().unwrap();
+        let newly = set.insert(ctx);
+        if newly {
+            self.revoked_count.fetch_add(1, Ordering::SeqCst);
+        }
+        newly
+    }
+
+    /// Whether context plane `ctx` has been revoked.
+    pub fn is_revoked(&self, ctx: u32) -> bool {
+        // Zero-check first: no lock on the revoke-free fast path.
+        self.revoked_count.load(Ordering::Relaxed) != 0
+            && self.revoked.lock().unwrap().contains(&ctx)
     }
 
     /// Override the matching mode for ranks bound after this call (tests
@@ -260,6 +346,12 @@ impl World {
 #[derive(Debug)]
 pub struct AbortUnwind(pub i32);
 
+/// Panic payload used to unwind a rank killed by the death injector.
+/// Unlike [`AbortUnwind`], the launcher does *not* take the job down:
+/// survivors keep running and observe the death as `MPI_ERR_PROC_FAILED`.
+#[derive(Debug)]
+pub struct KilledUnwind;
+
 /// Object tables of one rank — the per-process handle tables of a real MPI.
 #[allow(missing_docs)] // one slab per engine object kind; names say it all
 pub struct Tables {
@@ -361,6 +453,11 @@ pub struct RankCtx {
     /// Re-entrancy latch for the collective schedule pump (a user
     /// reduction op may call back into MPI mid-advance).
     pub sched_pump: Cell<bool>,
+    /// Progress-engine cycles survived so far (the kill injector's clock;
+    /// only ticks while a kill is armed for this rank).
+    pub ticks: Cell<u64>,
+    /// If this rank is the armed kill victim: die after this many ticks.
+    pub kill_at: Cell<Option<u64>>,
 }
 
 impl RankCtx {
@@ -391,6 +488,10 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
     let flat_match = world.flat_match();
     let rndv_threshold = world.rndv_threshold();
     let trace_on = world.trace_enabled();
+    let kill_at = match world.kill_spec() {
+        Some((victim, ticks)) if victim == rank => Some(ticks),
+        _ => None,
+    };
     let ctx = Rc::new(RankCtx {
         world,
         rank,
@@ -403,6 +504,8 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
         ever_inited: Cell::new(false),
         predef_sized: Cell::new(false),
         sched_pump: Cell::new(false),
+        ticks: Cell::new(0),
+        kill_at: Cell::new(kill_at),
     });
     CURRENT.with(|c| {
         let mut cur = c.borrow_mut();
@@ -501,6 +604,33 @@ mod tests {
         // Predefined planes 0..6 (world, self, session bootstrap) are
         // never handed out.
         assert!(a >= 6);
+    }
+
+    #[test]
+    fn dead_registry_and_revocation() {
+        let w = test_world(3);
+        assert!(!w.any_dead());
+        assert!(!w.is_dead(1));
+        w.mark_dead(1);
+        w.mark_dead(1); // idempotent: counts once
+        assert!(w.any_dead());
+        assert!(w.is_dead(1));
+        assert!(!w.is_dead(0));
+        assert_eq!(w.ranks_failed(), 1);
+        assert_eq!(w.dead_snapshot(), vec![1]);
+        assert!(!w.is_revoked(8));
+        assert!(w.revoke_context(8));
+        assert!(!w.revoke_context(8)); // idempotent
+        assert!(w.is_revoked(8));
+        assert!(!w.is_revoked(9));
+    }
+
+    #[test]
+    fn kill_spec_binds_only_victim() {
+        let w = test_world(2);
+        assert_eq!(w.kill_spec(), None);
+        w.set_kill(1, 40);
+        assert_eq!(w.kill_spec(), Some((1, 40)));
     }
 
     #[test]

@@ -1041,6 +1041,55 @@ impl<R: Repr> MpiAbi for Backed<R> {
         r
     }
 
+    fn comm_revoke(c: R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        ret::<R>(Some(id), engine::comm_revoke(id))
+    }
+
+    fn comm_is_revoked(c: R::Comm, out: &mut bool) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::comm_is_revoked(id) {
+            Ok(v) => {
+                *out = v;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_shrink(c: R::Comm, out: &mut R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::comm_shrink(id) {
+            Ok(new) => {
+                *out = R::comm_h(new);
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_agree(c: R::Comm, flag: &mut i32) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::comm_agree(id, *flag) {
+            Ok(v) => {
+                *flag = v;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_ack_failed(c: R::Comm, num_to_ack: i32, num_acked: &mut i32) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        match engine::comm_ack_failed(id, num_to_ack) {
+            Ok(n) => {
+                *num_acked = n;
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
     fn send(buf: *const u8, count: i32, dt: R::Datatype, dest: i32, tag: i32, c: R::Comm) -> i32 {
         let id = conv!(R, None, R::comm_id(c));
         let d = conv!(R, Some(id), R::dt_id(dt));

@@ -10,7 +10,7 @@ use std::panic::AssertUnwindSafe;
 use std::sync::Arc;
 
 use crate::core::transport::TransportKind;
-use crate::core::world::{bind_rank, unbind_rank, AbortUnwind, World};
+use crate::core::world::{bind_rank, unbind_rank, AbortUnwind, KilledUnwind, World};
 
 /// Job parameters.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +29,11 @@ pub struct JobSpec {
     /// on every rank, `None` defers to the `MPI_ABI_TRACE` env flag
     /// (see [`crate::core::obs`]).
     pub trace: Option<bool>,
+    /// Deterministic rank-death injection: `(victim rank, progress ticks
+    /// to survive)`. `None` defers to the `MPI_ABI_KILL` env var
+    /// (`"rank:ticks"`). The victim unwinds mid-run; survivors observe
+    /// `MPI_ERR_PROC_FAILED` instead of the job aborting.
+    pub kill: Option<(usize, u64)>,
 }
 
 impl JobSpec {
@@ -39,6 +44,7 @@ impl JobSpec {
             flat_match: None,
             rndv_threshold: None,
             trace: None,
+            kill: None,
         }
     }
 
@@ -67,6 +73,24 @@ impl JobSpec {
         self.trace = Some(on);
         self
     }
+
+    /// Arm the deterministic rank-death injector: `rank` dies after
+    /// surviving `after_n_ticks` progress-engine cycles. The victim's
+    /// outcome is [`RankOutcome::Killed`]; survivors keep running and see
+    /// operations against it fail with `MPI_ERR_PROC_FAILED`.
+    pub fn with_kill(mut self, rank: usize, after_n_ticks: u64) -> JobSpec {
+        self.kill = Some((rank, after_n_ticks));
+        self
+    }
+}
+
+/// Parse the `MPI_ABI_KILL` env var (`"rank:ticks"`, e.g. `"1:50"`).
+/// Malformed values are ignored (no kill) — an env typo should not
+/// silently kill rank 0 at tick 0.
+pub fn kill_env() -> Option<(usize, u64)> {
+    let v = std::env::var("MPI_ABI_KILL").ok()?;
+    let (r, t) = v.trim().split_once(':')?;
+    Some((r.trim().parse().ok()?, t.trim().parse().ok()?))
 }
 
 /// Build a world from a spec, applying every override — the shared
@@ -82,6 +106,9 @@ fn world_for(spec: JobSpec) -> Arc<World> {
     if let Some(on) = spec.trace {
         world.set_trace(on);
     }
+    if let Some((rank, ticks)) = spec.kill.or_else(kill_env) {
+        world.set_kill(rank, ticks);
+    }
     world
 }
 
@@ -92,6 +119,9 @@ pub enum RankOutcome<T> {
     Ok(T),
     /// The job aborted (`MPI_Abort` or fatal error handler) with this code.
     Aborted(i32),
+    /// The rank was killed by the death injector ([`JobSpec::with_kill`]).
+    /// Not a job failure: survivors run to completion.
+    Killed,
     /// The rank panicked (bug in the application or library).
     Panicked(String),
 }
@@ -101,6 +131,7 @@ impl<T> RankOutcome<T> {
         match self {
             RankOutcome::Ok(v) => v,
             RankOutcome::Aborted(c) => panic!("rank aborted with code {c}"),
+            RankOutcome::Killed => panic!("rank was killed by the death injector"),
             RankOutcome::Panicked(m) => panic!("rank panicked: {m}"),
         }
     }
@@ -163,6 +194,9 @@ where
                         Err(payload) => {
                             if let Some(a) = payload.downcast_ref::<AbortUnwind>() {
                                 RankOutcome::Aborted(a.0)
+                            } else if payload.downcast_ref::<KilledUnwind>().is_some() {
+                                // Injected death: survivors keep running.
+                                RankOutcome::Killed
                             } else {
                                 // Unexpected panic: take the whole job down
                                 // so peers don't hang in blocking calls.

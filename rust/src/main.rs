@@ -129,11 +129,12 @@ impl AbiApp<()> for AppRunner {
             }
             "halo" => {
                 // abirun halo [--mode sendrecv|persistent|rma] [--sessions]
-                //             [--trace OUT.json] [n] [iters]
-                use mpi_abi::apps::halo::{jacobi, jacobi_sessions, HaloMode, HaloParams};
+                //             [--trace OUT.json] [--kill RANK[:TICKS]] [n] [iters]
+                use mpi_abi::apps::halo::{jacobi, jacobi_ft, jacobi_sessions, HaloMode, HaloParams};
                 let mut mode = HaloMode::Sendrecv;
                 let mut sessions = false;
                 let mut trace_path: Option<String> = None;
+                let mut kill: Option<(usize, u64)> = None;
                 let mut nums = Vec::new();
                 let mut it = self.opts.args.iter();
                 while let Some(a) = it.next() {
@@ -146,12 +147,74 @@ impl AbiApp<()> for AppRunner {
                         sessions = true;
                     } else if a == "--trace" {
                         trace_path = Some(it.next().cloned().unwrap_or_else(|| usage()));
+                    } else if a == "--kill" {
+                        // RANK[:TICKS] — the victim dies after TICKS
+                        // progress-engine cycles (default 8: early in
+                        // the first sweep).
+                        let v = it.next().cloned().unwrap_or_else(|| usage());
+                        let (r, t) = match v.split_once(':') {
+                            Some((r, t)) => (r.parse().ok(), t.parse().ok()),
+                            None => (v.parse().ok(), Some(8u64)),
+                        };
+                        kill = Some((
+                            r.unwrap_or_else(|| usage()),
+                            t.unwrap_or_else(|| usage()),
+                        ));
                     } else if let Ok(v) = a.parse::<usize>() {
                         nums.push(v);
                     }
                 }
                 let n = nums.first().copied().unwrap_or(96);
                 let iters = nums.get(1).copied().unwrap_or(50);
+                if let Some((victim, ticks)) = kill {
+                    // Fault-tolerant run: the victim dies mid-run; the
+                    // survivors revoke, agree, shrink, re-decompose and
+                    // converge. Every survivor must report the same
+                    // shrunk size and a bitwise-identical residual.
+                    if victim >= self.opts.ranks || self.opts.ranks < 2 {
+                        eprintln!("abirun: --kill rank {victim} out of range");
+                        std::process::exit(2);
+                    }
+                    let spec = spec.with_kill(victim, ticks);
+                    let out = mpi_abi::launcher::run_job(spec, move |_| {
+                        A::init();
+                        let r = jacobi_ft::<A>(HaloParams { n, iters, mode });
+                        // World was revoked during recovery, so the
+                        // finalize barrier fails (returnably) — that is
+                        // the expected ULFM endgame, not an error.
+                        A::finalize();
+                        r
+                    });
+                    let mut survivors = Vec::new();
+                    let mut killed = Vec::new();
+                    for (rank, o) in out.into_iter().enumerate() {
+                        match o {
+                            mpi_abi::launcher::RankOutcome::Ok(v) => survivors.push((rank, v)),
+                            mpi_abi::launcher::RankOutcome::Killed => killed.push(rank),
+                            other => {
+                                eprintln!("abirun: rank {rank} failed: {other:?}");
+                                std::process::exit(1);
+                            }
+                        }
+                    }
+                    assert_eq!(killed, vec![victim], "only the victim dies");
+                    let (_, (shrunk, residual)) = survivors[0];
+                    for &(rank, (s, r)) in &survivors {
+                        assert_eq!(s, shrunk, "rank {rank} disagrees on shrunk size");
+                        assert_eq!(
+                            r.to_bits(),
+                            residual.to_bits(),
+                            "rank {rank} residual diverges bitwise"
+                        );
+                    }
+                    println!(
+                        "halo [{}] {n}x{n} grid, {iters} sweeps: rank {victim} killed at tick \
+                         {ticks}, shrunk {} -> {shrunk} ranks, survivor residual {residual:.12}",
+                        A::NAME,
+                        self.opts.ranks,
+                    );
+                    return;
+                }
                 let spec = if trace_path.is_some() { spec.with_trace(true) } else { spec };
                 let body = move |_: usize| {
                     if sessions {

@@ -401,6 +401,22 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
         (B::vtable().errhandler_free)(&mut e.0)
     }
 
+    fn comm_revoke(c: AbiComm) -> i32 {
+        (B::vtable().comm_revoke)(c.0)
+    }
+    fn comm_is_revoked(c: AbiComm, out: &mut bool) -> i32 {
+        (B::vtable().comm_is_revoked)(c.0, out)
+    }
+    fn comm_shrink(c: AbiComm, out: &mut AbiComm) -> i32 {
+        (B::vtable().comm_shrink)(c.0, &mut out.0)
+    }
+    fn comm_agree(c: AbiComm, flag: &mut i32) -> i32 {
+        (B::vtable().comm_agree)(c.0, flag)
+    }
+    fn comm_ack_failed(c: AbiComm, num_to_ack: i32, num_acked: &mut i32) -> i32 {
+        (B::vtable().comm_ack_failed)(c.0, num_to_ack, num_acked)
+    }
+
     fn send(buf: *const u8, count: i32, dt: AbiDatatype, dest: i32, tag: i32, c: AbiComm) -> i32 {
         (B::vtable().send)(buf, count, dt.0, dest, tag, c.0)
     }

@@ -2036,6 +2036,36 @@ pub fn t_pvar_reset<A: MukBackend>(session: i32, handle: i32) -> i32 {
     ret_code::<A>(A::t_pvar_reset(session, handle))
 }
 
+/// `WRAP_comm_revoke`: translate handles/constants at the boundary, call the backend, translate results back.
+pub fn comm_revoke<A: MukBackend>(comm: usize) -> i32 {
+    ret_code::<A>(A::comm_revoke(comm_to_impl::<A>(comm)))
+}
+
+/// `WRAP_comm_is_revoked`: translate handles/constants at the boundary, call the backend, translate results back.
+pub fn comm_is_revoked<A: MukBackend>(comm: usize, out: &mut bool) -> i32 {
+    ret_code::<A>(A::comm_is_revoked(comm_to_impl::<A>(comm), out))
+}
+
+/// `WRAP_comm_shrink`: translate handles/constants at the boundary, call the backend, translate results back.
+pub fn comm_shrink<A: MukBackend>(comm: usize, out: &mut usize) -> i32 {
+    let mut c = A::comm_null();
+    let rc = A::comm_shrink(comm_to_impl::<A>(comm), &mut c);
+    if rc == 0 {
+        *out = comm_to_muk::<A>(c);
+    }
+    ret_code::<A>(rc)
+}
+
+/// `WRAP_comm_agree`: translate handles/constants at the boundary, call the backend, translate results back.
+pub fn comm_agree<A: MukBackend>(comm: usize, flag: &mut i32) -> i32 {
+    ret_code::<A>(A::comm_agree(comm_to_impl::<A>(comm), flag))
+}
+
+/// `WRAP_comm_ack_failed`: translate handles/constants at the boundary, call the backend, translate results back.
+pub fn comm_ack_failed<A: MukBackend>(comm: usize, num_to_ack: i32, num_acked: &mut i32) -> i32 {
+    ret_code::<A>(A::comm_ack_failed(comm_to_impl::<A>(comm), num_to_ack, num_acked))
+}
+
 // --- The vtable and symbol table -------------------------------------------------
 
 macro_rules! define_vtable {
@@ -2217,4 +2247,9 @@ define_vtable! {
     t_pvar_start: fn(i32, i32) -> i32,
     t_pvar_read: fn(i32, i32, &mut i64) -> i32,
     t_pvar_reset: fn(i32, i32) -> i32,
+    comm_revoke: fn(usize) -> i32,
+    comm_is_revoked: fn(usize, &mut bool) -> i32,
+    comm_shrink: fn(usize, &mut usize) -> i32,
+    comm_agree: fn(usize, &mut i32) -> i32,
+    comm_ack_failed: fn(usize, i32, &mut i32) -> i32,
 }

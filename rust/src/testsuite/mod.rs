@@ -24,6 +24,7 @@ mod persistent;
 mod pt2pt;
 mod rma;
 mod session;
+pub mod ulfm;
 
 use crate::api::MpiAbi;
 
@@ -86,6 +87,15 @@ pub fn mpi_t_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
 /// `tests/matching.rs`.
 pub fn matching_registry<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     matching::tests::<A>()
+}
+
+/// The ULFM fault-tolerance battery. **Not** part of [`registry`]: each
+/// scenario launches its own job with a [`crate::launcher::JobSpec`]
+/// kill spec (the AND-allreduce harness is itself a collective a dead
+/// rank would poison). Run under all five ABI configs *and both
+/// transports* by `tests/ulfm.rs` and the CI `fault-tolerance` job.
+pub fn ulfm_scenarios<A: MpiAbi>() -> Vec<(&'static str, ulfm::UlfmScenario)> {
+    ulfm::scenarios::<A>()
 }
 
 /// Run the whole suite under ABI `A`. Call from every rank of a running

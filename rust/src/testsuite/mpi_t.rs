@@ -38,7 +38,7 @@ fn world_geometry<A: MpiAbi>() -> (i32, i32) {
 /// The pvar registry in its fixed ABI order (mirrors
 /// `core::obs::PVARS`; `tests/spec_sync.rs` pins the same list against
 /// SPEC.md §11).
-const PVAR_NAMES: [&str; 17] = [
+const PVAR_NAMES: [&str; 20] = [
     "sends_posted",
     "recvs_posted",
     "eager_msgs",
@@ -56,6 +56,9 @@ const PVAR_NAMES: [&str; 17] = [
     "rndv_inflight_peak",
     "sched_builds",
     "sched_reuses",
+    "ranks_failed",
+    "ops_failed_proc",
+    "comms_revoked",
 ];
 
 /// Pvar indices used by the scripted-exchange test.
@@ -108,7 +111,7 @@ fn enumerate_registry<A: MpiAbi>(_r: usize) -> Result<(), String> {
         check!(name == *want_name, "pvar {i} name, got {name}");
         check!(bind == k::MPI_T_BIND_NO_OBJECT, "pvar {name} bind, got {bind}");
         let want_class = match i {
-            6 | 8 | 12 => k::MPI_T_PVAR_CLASS_LEVEL,
+            6 | 8 | 12 | 17 => k::MPI_T_PVAR_CLASS_LEVEL,
             7 | 9 | 13 | 14 => k::MPI_T_PVAR_CLASS_HIGHWATERMARK,
             _ => k::MPI_T_PVAR_CLASS_COUNTER,
         };

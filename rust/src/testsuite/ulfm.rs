@@ -1,0 +1,387 @@
+//! ULFM fault-tolerance battery.
+//!
+//! Each scenario launches its **own job** with a deterministic kill
+//! spec ([`JobSpec::with_kill`]) instead of riding the shared
+//! [`super::run_registry`] harness — that harness AND-reduces verdicts
+//! over `MPI_COMM_WORLD`, which is exactly the kind of collective a
+//! dead rank poisons. The scenarios cover the tentpole claims end to
+//! end, through the portable [`MpiAbi`] surface only, so the same
+//! source validates all five configurations × both transports:
+//!
+//! * a blocked receive from a dead peer **fails** with
+//!   `MPI_ERR_PROC_FAILED` instead of hanging;
+//! * a wildcard receive reports `MPI_ERR_PROC_FAILED_PENDING`, and
+//!   `MPI_Comm_ack_failed` clears the pending state;
+//! * `MPI_Comm_revoke` poisons both context planes — pending pt2pt
+//!   *and* collectives fail with `MPI_ERR_REVOKED`, with no new
+//!   message required to propagate it;
+//! * `MPI_Comm_shrink` yields a working survivor communicator
+//!   (barrier + pt2pt round-trip succeed on it);
+//! * `MPI_Comm_agree` returns the AND over surviving contributions;
+//! * a rank killed mid-rendezvous fails the receiver cleanly;
+//! * the `ranks_failed` / `ops_failed_proc` / `comms_revoked` pvars
+//!   read **exact** counts through MPI_T after an injected kill.
+
+use super::util::*;
+use crate::abi::errors as ec;
+use crate::api::{Dt, MpiAbi};
+use crate::core::transport::TransportKind;
+use crate::launcher::{run_job, JobSpec, RankOutcome};
+
+/// A ULFM scenario: runs a whole job on the given transport.
+pub type UlfmScenario = fn(TransportKind) -> Result<(), String>;
+
+pub fn scenarios<A: MpiAbi>() -> Vec<(&'static str, UlfmScenario)> {
+    vec![
+        ("ulfm.recv_from_dead_fails", recv_from_dead_fails::<A>),
+        ("ulfm.wildcard_pending_then_ack", wildcard_pending_then_ack::<A>),
+        ("ulfm.revoke_poisons_both_planes", revoke_poisons_both_planes::<A>),
+        ("ulfm.shrink_then_barrier", shrink_then_barrier::<A>),
+        ("ulfm.agree_returns_and", agree_returns_and::<A>),
+        ("ulfm.rendezvous_kill_fails_receiver", rendezvous_kill_fails_receiver::<A>),
+        ("ulfm.pvar_exact_counts_after_kill", pvar_exact_counts_after_kill::<A>),
+    ]
+}
+
+/// Run a job and fold the per-rank outcomes into one verdict: every
+/// rank must return `Ok(())`, except the victim (if any), whose one
+/// legal outcome is [`RankOutcome::Killed`].
+fn run_scenario<F>(spec: JobSpec, victim: Option<usize>, f: F) -> Result<(), String>
+where
+    F: Fn(usize) -> Result<(), String> + Sync,
+{
+    let out = run_job(spec, f);
+    for (rank, o) in out.into_iter().enumerate() {
+        match o {
+            RankOutcome::Ok(Ok(())) => {}
+            RankOutcome::Ok(Err(m)) => return Err(format!("rank {rank}: {m}")),
+            RankOutcome::Killed if Some(rank) == victim => {}
+            other => return Err(format!("rank {rank}: unexpected outcome: {other:?}")),
+        }
+    }
+    Ok(())
+}
+
+/// Ticks the victim survives before the injector fires: small enough
+/// that it always dies inside its first blocking call.
+const KILL_TICKS: u64 = 3;
+
+/// A blocked receive from a peer that dies must complete in error —
+/// `MPI_ERR_PROC_FAILED`, resolvable to a string — not hang.
+fn recv_from_dead_fails<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    let spec = JobSpec::new(2).with_transport(t).with_kill(1, KILL_TICKS);
+    run_scenario(spec, Some(1), |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Int);
+        let world = A::comm_world();
+        let mut st = A::status_empty();
+        if rank == 1 {
+            // Victim: block in a recv that can never match; each spin
+            // runs the progress engine until the injector unwinds us.
+            let mut v = 0i32;
+            let _ = A::recv(ptr_mut(&mut v), 1, dt, 0, 31999, world, &mut st);
+            return Ok(()); // unreachable: the injector fires first
+        }
+        A::comm_set_errhandler(world, A::errhandler_return());
+        let mut v = 0i32;
+        let rc = A::recv(ptr_mut(&mut v), 1, dt, 1, 7, world, &mut st);
+        check!(rc != 0, "recv from dead peer returned success");
+        check!(
+            A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED,
+            "class: want PROC_FAILED, got {}",
+            A::err_class_of(rc)
+        );
+        check!(!A::error_string(rc).is_empty(), "PROC_FAILED has no error string");
+        Ok(())
+    })
+}
+
+/// A wildcard receive cannot block while an unacknowledged failure
+/// exists: it reports `MPI_ERR_PROC_FAILED_PENDING`. After
+/// `MPI_Comm_ack_failed`, the same wildcard receive completes normally
+/// from a surviving sender.
+fn wildcard_pending_then_ack<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    let spec = JobSpec::new(3).with_transport(t).with_kill(1, KILL_TICKS);
+    run_scenario(spec, Some(1), |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Int);
+        let world = A::comm_world();
+        let mut st = A::status_empty();
+        match rank {
+            1 => {
+                let mut v = 0i32;
+                let _ = A::recv(ptr_mut(&mut v), 1, dt, 0, 31999, world, &mut st);
+                Ok(())
+            }
+            0 => {
+                A::comm_set_errhandler(world, A::errhandler_return());
+                let mut v = 0i32;
+                let rc = A::recv(ptr_mut(&mut v), 1, dt, A::any_source(), 7, world, &mut st);
+                check!(
+                    A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED_PENDING,
+                    "wildcard class: want PROC_FAILED_PENDING, got {}",
+                    A::err_class_of(rc)
+                );
+                // Acknowledge the failure; wildcard receives may block
+                // again afterwards.
+                let mut acked = 0;
+                check_rc!(A::comm_ack_failed(world, 16, &mut acked), "comm_ack_failed");
+                check!(acked == 1, "acked failures: want 1, got {acked}");
+                // Release rank 2, then the same wildcard recv succeeds.
+                let go = 1i32;
+                check_rc!(A::send(ptr(&go), 1, dt, 2, 8, world), "go send");
+                let rc = A::recv(ptr_mut(&mut v), 1, dt, A::any_source(), 7, world, &mut st);
+                check_rc!(rc, "post-ack wildcard recv");
+                check!(v == 77, "payload: want 77, got {v}");
+                check!(A::status_source(&st) == 2, "source: want 2");
+                Ok(())
+            }
+            _ => {
+                A::comm_set_errhandler(world, A::errhandler_return());
+                let mut go = 0i32;
+                check_rc!(A::recv(ptr_mut(&mut go), 1, dt, 0, 8, world, &mut st), "go recv");
+                let payload = 77i32;
+                check_rc!(A::send(ptr(&payload), 1, dt, 0, 7, world), "payload send");
+                Ok(())
+            }
+        }
+    })
+}
+
+/// `MPI_Comm_revoke` poisons both context planes with no failure in the
+/// job at all: a *pending* irecv fails `MPI_ERR_REVOKED`, new sends are
+/// refused at post time, and collectives on the revoked comm fail too.
+fn revoke_poisons_both_planes<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    let spec = JobSpec::new(2).with_transport(t);
+    run_scenario(spec, None, |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Int);
+        let world = A::comm_world();
+        A::comm_set_errhandler(world, A::errhandler_return());
+        let mut st = A::status_empty();
+        if rank == 0 {
+            // Post a receive that can never be satisfied, tell rank 1
+            // it is pending, then wait: revocation must fail it without
+            // any message arriving.
+            let mut v = 0i32;
+            let mut req = A::request_null();
+            check_rc!(A::irecv(ptr_mut(&mut v), 1, dt, 1, 5, world, &mut req), "irecv");
+            let posted = 1i32;
+            check_rc!(A::send(ptr(&posted), 1, dt, 1, 6, world), "posted signal");
+            let rc = A::wait(&mut req, &mut st);
+            check!(
+                A::err_class_of(rc) == ec::MPI_ERR_REVOKED,
+                "pending irecv: want REVOKED, got {}",
+                A::err_class_of(rc)
+            );
+            // The pt2pt plane refuses new traffic at post time.
+            let rc = A::send(ptr(&posted), 1, dt, 1, 9, world);
+            check!(
+                A::err_class_of(rc) == ec::MPI_ERR_REVOKED,
+                "post-revoke send: want REVOKED, got {}",
+                A::err_class_of(rc)
+            );
+        } else {
+            let mut v = 0i32;
+            check_rc!(A::recv(ptr_mut(&mut v), 1, dt, 0, 6, world, &mut st), "posted signal");
+            check_rc!(A::comm_revoke(world), "comm_revoke");
+            let mut revoked = false;
+            check_rc!(A::comm_is_revoked(world, &mut revoked), "comm_is_revoked");
+            check!(revoked, "comm_is_revoked after revoke");
+        }
+        // Both ranks: the collective plane is poisoned too.
+        let rc = A::barrier(world);
+        check!(
+            A::err_class_of(rc) == ec::MPI_ERR_REVOKED,
+            "barrier on revoked comm: want REVOKED, got {}",
+            A::err_class_of(rc)
+        );
+        Ok(())
+    })
+}
+
+/// The full recovery sequence: detect the failure, revoke, agree,
+/// shrink — then prove the shrunk comm *works*: right size and ranks, a
+/// clean barrier, and a pt2pt round-trip between the survivors.
+fn shrink_then_barrier<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    let spec = JobSpec::new(3).with_transport(t).with_kill(1, KILL_TICKS);
+    run_scenario(spec, Some(1), |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Int);
+        let world = A::comm_world();
+        let mut st = A::status_empty();
+        if rank == 1 {
+            let mut v = 0i32;
+            let _ = A::recv(ptr_mut(&mut v), 1, dt, 0, 31999, world, &mut st);
+            return Ok(());
+        }
+        A::comm_set_errhandler(world, A::errhandler_return());
+        let mut v = 0i32;
+        let rc = A::recv(ptr_mut(&mut v), 1, dt, 1, 3, world, &mut st);
+        check!(
+            A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED,
+            "detection: want PROC_FAILED, got {}",
+            A::err_class_of(rc)
+        );
+        check_rc!(A::comm_revoke(world), "comm_revoke");
+        let mut flag = 1i32;
+        check_rc!(A::comm_agree(world, &mut flag), "comm_agree");
+        check!(flag == 1, "agree over survivors");
+        let mut newc = A::comm_null();
+        check_rc!(A::comm_shrink(world, &mut newc), "comm_shrink");
+        A::comm_set_errhandler(newc, A::errhandler_return());
+        let (mut size, mut me) = (0, 0);
+        check_rc!(A::comm_size(newc, &mut size), "comm_size");
+        check_rc!(A::comm_rank(newc, &mut me), "comm_rank");
+        check!(size == 2, "shrunk size: want 2, got {size}");
+        let want_rank = if rank == 0 { 0 } else { 1 };
+        check!(me == want_rank, "shrunk rank: want {want_rank}, got {me}");
+        check_rc!(A::barrier(newc), "barrier on shrunk comm");
+        // Survivor round-trip on the fresh planes.
+        if me == 0 {
+            let x = 42i32;
+            check_rc!(A::send(ptr(&x), 1, dt, 1, 11, newc), "shrunk send");
+            let mut y = 0i32;
+            check_rc!(A::recv(ptr_mut(&mut y), 1, dt, 1, 12, newc, &mut st), "shrunk recv");
+            check!(y == 43, "round-trip payload");
+        } else {
+            let mut x = 0i32;
+            check_rc!(A::recv(ptr_mut(&mut x), 1, dt, 0, 11, newc, &mut st), "shrunk recv");
+            let y = x + 1;
+            check_rc!(A::send(ptr(&y), 1, dt, 0, 12, newc), "shrunk send");
+        }
+        Ok(())
+    })
+}
+
+/// `MPI_Comm_agree` is the AND over *surviving* contributions: with the
+/// victim gone, 1 AND 0 is 0, then 1 AND 1 is 1.
+fn agree_returns_and<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    let spec = JobSpec::new(3).with_transport(t).with_kill(1, KILL_TICKS);
+    run_scenario(spec, Some(1), |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Int);
+        let world = A::comm_world();
+        let mut st = A::status_empty();
+        if rank == 1 {
+            let mut v = 0i32;
+            let _ = A::recv(ptr_mut(&mut v), 1, dt, 0, 31999, world, &mut st);
+            return Ok(());
+        }
+        A::comm_set_errhandler(world, A::errhandler_return());
+        // Detect the failure first so both survivors agree on who's left.
+        let mut v = 0i32;
+        let rc = A::recv(ptr_mut(&mut v), 1, dt, 1, 3, world, &mut st);
+        check!(A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED, "detection");
+        let mut flag = if rank == 0 { 1 } else { 0 };
+        check_rc!(A::comm_agree(world, &mut flag), "comm_agree");
+        check!(flag == 0, "1 AND 0: want 0, got {flag}");
+        let mut flag = 1i32;
+        check_rc!(A::comm_agree(world, &mut flag), "comm_agree");
+        check!(flag == 1, "1 AND 1: want 1, got {flag}");
+        Ok(())
+    })
+}
+
+/// A peer killed while streaming a rendezvous payload fails the
+/// receiver cleanly with `MPI_ERR_PROC_FAILED` — the half-filled
+/// stream is torn down, not left to hang the receive.
+fn rendezvous_kill_fails_receiver<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    // Threshold 0 forces the rendezvous protocol for every message;
+    // 4 MiB takes far more progress ticks to stream than the victim
+    // gets, so it always dies mid-transfer.
+    let spec = JobSpec::new(2).with_transport(t).with_kill(1, 6).with_rndv_threshold(0);
+    run_scenario(spec, Some(1), |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Byte);
+        let world = A::comm_world();
+        let mut st = A::status_empty();
+        const LEN: usize = 4 << 20;
+        if rank == 1 {
+            let big = vec![9u8; LEN];
+            let _ = A::send(slice_ptr(&big), LEN as i32, dt, 0, 21, world);
+            return Ok(()); // unreachable: dies while pumping the stream
+        }
+        A::comm_set_errhandler(world, A::errhandler_return());
+        let mut buf = vec![0u8; LEN];
+        let rc = A::recv(slice_ptr_mut(&mut buf), LEN as i32, dt, 1, 21, world, &mut st);
+        check!(rc != 0, "mid-rendezvous kill: recv returned success");
+        check!(
+            A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED,
+            "mid-rendezvous kill: want PROC_FAILED, got {}",
+            A::err_class_of(rc)
+        );
+        Ok(())
+    })
+}
+
+/// The observability contract (MPI_T): after one injected kill, one
+/// failed operation, and one revocation, the `ranks_failed`,
+/// `ops_failed_proc` and `comms_revoked` pvars read **exactly** 1/1/1
+/// (then a second failed op reads exactly 2) — counters, not vibes.
+fn pvar_exact_counts_after_kill<A: MpiAbi>(t: TransportKind) -> Result<(), String> {
+    use crate::abi::constants as k;
+    // Fixed pvar registry indices (SPEC.md §11 table; append-only).
+    const PV_RANKS_FAILED: i32 = 17;
+    const PV_OPS_FAILED: i32 = 18;
+    const PV_COMMS_REVOKED: i32 = 19;
+    let spec = JobSpec::new(3).with_transport(t).with_kill(1, KILL_TICKS);
+    run_scenario(spec, Some(1), |rank| {
+        check!(A::init() == 0, "init");
+        let dt = A::datatype(Dt::Int);
+        let world = A::comm_world();
+        let mut st = A::status_empty();
+        if rank == 1 {
+            let mut v = 0i32;
+            let _ = A::recv(ptr_mut(&mut v), 1, dt, 0, 31999, world, &mut st);
+            return Ok(());
+        }
+        if rank == 2 {
+            // Bystander: exits cleanly, touches nothing — the exact
+            // counts below belong to rank 0 alone (ops_failed_proc is
+            // a per-rank counter; the other two are world-level).
+            return Ok(());
+        }
+        A::comm_set_errhandler(world, A::errhandler_return());
+        let mut provided = 0;
+        check_rc!(A::t_init_thread(k::MPI_THREAD_SINGLE, &mut provided), "t_init_thread");
+        let mut session = -1;
+        check_rc!(A::t_pvar_session_create(&mut session), "session_create");
+        // Arm (and so baseline) the counters *before* the failures.
+        let mut handles = [-1i32; 3];
+        for (h, idx) in
+            handles.iter_mut().zip([PV_RANKS_FAILED, PV_OPS_FAILED, PV_COMMS_REVOKED])
+        {
+            check_rc!(A::t_pvar_handle_alloc(session, idx, h), "pvar_handle_alloc");
+            check_rc!(A::t_pvar_start(session, *h), "pvar_start");
+        }
+        let read = |h: i32| -> Result<i64, String> {
+            let mut v = -1i64;
+            let rc = A::t_pvar_read(session, h, &mut v);
+            if rc != 0 {
+                return Err(format!("pvar_read rc {rc}"));
+            }
+            Ok(v)
+        };
+        // First failed op against the dead rank.
+        let mut v = 0i32;
+        let rc = A::recv(ptr_mut(&mut v), 1, dt, 1, 3, world, &mut st);
+        check!(A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED, "detection");
+        check!(read(handles[0])? == 1, "ranks_failed: want exactly 1");
+        check!(read(handles[1])? == 1, "ops_failed_proc: want exactly 1");
+        check!(read(handles[2])? == 0, "comms_revoked before revoke: want 0");
+        // A second failed op moves ops_failed_proc alone — a send this
+        // time, refused at post time because its destination is dead.
+        let rc = A::send(ptr(&v), 1, dt, 1, 4, world);
+        check!(A::err_class_of(rc) == ec::MPI_ERR_PROC_FAILED, "dead-dst send");
+        check!(read(handles[1])? == 2, "ops_failed_proc: want exactly 2");
+        // One revocation. A second revoke of the same comm is a no-op
+        // and must not double-count.
+        check_rc!(A::comm_revoke(world), "comm_revoke");
+        check_rc!(A::comm_revoke(world), "second comm_revoke");
+        check!(read(handles[0])? == 1, "ranks_failed moved");
+        check!(read(handles[2])? == 1, "comms_revoked: want exactly 1");
+        check_rc!(A::t_finalize(), "t_finalize");
+        Ok(())
+    })
+}

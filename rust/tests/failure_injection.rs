@@ -56,6 +56,8 @@ fn invalid_tag_class<A: MpiAbi>() {
 #[test]
 fn invalid_tag_class_all_abis() {
     invalid_tag_class::<MpichAbi>();
+    invalid_tag_class::<OmpiAbi>();
+    invalid_tag_class::<MukMpich>();
     invalid_tag_class::<MukOmpi>();
     invalid_tag_class::<NativeAbi>();
 }
@@ -79,6 +81,7 @@ fn freeing_predefined_objects_fails_cleanly() {
     body::<MpichAbi>();
     body::<OmpiAbi>();
     body::<MukMpich>();
+    body::<MukOmpi>();
     body::<NativeAbi>();
 }
 
@@ -98,7 +101,9 @@ fn wait_on_request_null_is_noop() {
         });
     }
     body::<MpichAbi>();
+    body::<OmpiAbi>();
     body::<MukMpich>();
+    body::<MukOmpi>();
     body::<NativeAbi>();
 }
 
@@ -208,6 +213,8 @@ fn zero_count_messages() {
         });
     }
     body::<MpichAbi>();
+    body::<OmpiAbi>();
+    body::<MukMpich>();
     body::<MukOmpi>();
     body::<NativeAbi>();
 }
@@ -239,6 +246,7 @@ fn self_messaging_on_comm_self() {
     body::<MpichAbi>();
     body::<OmpiAbi>();
     body::<MukMpich>();
+    body::<MukOmpi>();
     body::<NativeAbi>();
 }
 

@@ -394,6 +394,84 @@ fn prop_mixed_size_soak_protocols_bitwise_identical() {
     }
 }
 
+// --- ULFM recovery under a random kill schedule -------------------------------------
+
+/// Randomized fault-tolerance property: pick a random victim rank and a
+/// random death tick, run the fault-tolerant Jacobi stencil
+/// ([`mpi_abi::apps::halo::jacobi_ft`]), and require every survivor's
+/// post-shrink residual to be **bitwise identical** to a cold-start run
+/// on the shrunk rank count. `jacobi_ft` restarts from the initial
+/// state after revoke → agree → shrink, so any divergence means the
+/// recovery path leaked state (a partially-updated grid, a stale ghost
+/// row, a wrong shrunk decomposition) — exactly the bugs this property
+/// exists to catch. Checked under both the indexed matcher and the flat
+/// baseline: the ULFM failure checks sit on each matcher's miss paths,
+/// and neither may change the survivors' arithmetic.
+#[test]
+fn prop_random_kill_shrink_matches_cold_start() {
+    use mpi_abi::api::MpiAbi;
+    use mpi_abi::apps::halo::{jacobi, jacobi_ft, HaloMode, HaloParams};
+    use mpi_abi::launcher::{run_job, run_job_ok, JobSpec, RankOutcome};
+    use mpi_abi::native_abi::NativeAbi;
+    type A = NativeAbi;
+
+    let n = 32usize;
+    let iters = 10usize;
+    let params = || HaloParams { n, iters, mode: HaloMode::Sendrecv };
+
+    let mut rng = Rng::new(48);
+    for case in 0..6 {
+        let ranks = rng.range(2, 5) as usize; // 2..=4 ranks
+        let victim = rng.range(0, ranks as u64) as usize; // any rank may die
+        let ticks = rng.range(1, 32); // always before the run completes
+
+        // Oracle: a clean cold-start run on the shrunk rank count.
+        let oracle = run_job_ok(JobSpec::new(ranks - 1), move |_| {
+            assert_eq!(A::init(), 0);
+            let (_, global) = jacobi::<A>(params());
+            assert_eq!(A::finalize(), 0);
+            global
+        })[0];
+        assert!(oracle > 0.0, "case {case}: oracle residual is trivial");
+
+        for flat in [false, true] {
+            let spec = JobSpec::new(ranks).with_kill(victim, ticks).with_flat_match(flat);
+            let outs = run_job(spec, move |_| {
+                assert_eq!(A::init(), 0);
+                let out = jacobi_ft::<A>(params());
+                // World is revoked post-recovery, so finalize's barrier
+                // fails returnably — the expected ULFM endgame.
+                let _ = A::finalize();
+                out
+            });
+            for (rank, out) in outs.iter().enumerate() {
+                match out {
+                    RankOutcome::Killed => assert_eq!(
+                        rank, victim,
+                        "case {case} flat={flat}: wrong rank died"
+                    ),
+                    RankOutcome::Ok((shrunk, residual)) => {
+                        assert_eq!(
+                            *shrunk,
+                            (ranks - 1) as i32,
+                            "case {case} flat={flat} rank {rank}: shrunk comm size"
+                        );
+                        assert_eq!(
+                            residual.to_bits(),
+                            oracle.to_bits(),
+                            "case {case} flat={flat} rank {rank}: survivor residual \
+                             {residual:e} != cold-start {oracle:e} on {} ranks \
+                             (victim {victim}, tick {ticks})",
+                            ranks - 1
+                        );
+                    }
+                    other => panic!("case {case} flat={flat} rank {rank}: {other:?}"),
+                }
+            }
+        }
+    }
+}
+
 // --- Message ordering under random traffic ------------------------------------------
 
 #[test]

@@ -275,6 +275,71 @@ fn mpit_symbol_table_matches_code() {
     }
 }
 
+/// SPEC §12: the ULFM error classes are part of the ABI error space —
+/// the documented values match the code, the classes are registered in
+/// `ERROR_CLASSES` (so `MPI_Error_string` covers them), and every
+/// representation round-trips them through its error-code space.
+#[test]
+fn ulfm_error_class_table_matches_code() {
+    use mpi_abi::abi::errors as ec;
+    use mpi_abi::impls::mpich::MpichRepr;
+    use mpi_abi::impls::ompi::OmpiRepr;
+    use mpi_abi::impls::repr::Repr;
+    use mpi_abi::native_abi::NativeRepr;
+    let spec = spec_text();
+    let mut seen = 0;
+    for cells in table_rows(&spec, "ulfm-errors-table") {
+        let want = match cells[0].as_str() {
+            "MPI_ERR_PROC_FAILED" => ec::MPI_ERR_PROC_FAILED,
+            "MPI_ERR_PROC_FAILED_PENDING" => ec::MPI_ERR_PROC_FAILED_PENDING,
+            "MPI_ERR_REVOKED" => ec::MPI_ERR_REVOKED,
+            other => panic!("unexpected ULFM error row {other}"),
+        };
+        assert_eq!(cell_i32(&cells, 1), want, "{}", cells[0]);
+        assert!(
+            mpi_abi::abi::ERROR_CLASSES.iter().any(|&(n, v)| n == cells[0] && v == want),
+            "{} missing from ERROR_CLASSES",
+            cells[0]
+        );
+        assert_eq!(MpichRepr::class_of_err(MpichRepr::err_from_class(want)), want);
+        assert_eq!(OmpiRepr::class_of_err(OmpiRepr::err_from_class(want)), want);
+        assert_eq!(NativeRepr::class_of_err(NativeRepr::err_from_class(want)), want);
+        seen += 1;
+    }
+    assert_eq!(seen, 3, "all three ULFM error classes documented");
+}
+
+/// SPEC §12: every ULFM row names a `WRAP_` symbol that resolves in
+/// BOTH backends' wrap tables, and the prose keeps the contract's
+/// load-bearing clauses (the kill knob, the no-hang guarantee, the
+/// three failure pvars).
+#[test]
+fn ulfm_symbol_table_matches_code() {
+    use mpi_abi::muk::{symbols, Backend};
+    let spec = spec_text();
+    let mpich = symbols(Backend::Mpich);
+    let ompi = symbols(Backend::Ompi);
+    let mut seen = 0;
+    for cells in table_rows(&spec, "ulfm-symbols-table") {
+        let (func, sym) = (&cells[0], &cells[1]);
+        assert!(func.starts_with("MPI_Comm_"), "malformed function {func}");
+        assert!(sym.starts_with("WRAP_comm_"), "malformed symbol {sym}");
+        assert!(mpich.has(sym), "{sym} missing from the MPICH-backed wrap table");
+        assert!(ompi.has(sym), "{sym} missing from the OMPI-backed wrap table");
+        seen += 1;
+    }
+    assert_eq!(seen, 5, "all five ULFM entry points documented");
+    for needle in [
+        "MPI_ABI_KILL",
+        "never hang",
+        "`ranks_failed`",
+        "`ops_failed_proc`",
+        "`comms_revoked`",
+    ] {
+        assert!(spec.contains(needle), "SPEC.md §12 lost its clause {needle:?}");
+    }
+}
+
 #[test]
 fn lifecycle_and_session_sections_exist() {
     let spec = spec_text();

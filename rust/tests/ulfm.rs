@@ -1,0 +1,83 @@
+//! The ULFM fault-tolerance battery, standalone: all five ABI
+//! configurations × both transports. Every scenario injects (or
+//! simulates) a failure and asserts the ULFM contract — blocked
+//! operations *fail* with `MPI_ERR_PROC_FAILED` /
+//! `MPI_ERR_PROC_FAILED_PENDING` / `MPI_ERR_REVOKED` instead of
+//! hanging, and revoke/shrink/agree recover a working communicator.
+//!
+//! The `abirun halo --kill` acceptance (survivor residuals bitwise
+//! identical across configs after shrink + re-decomposition) lives in
+//! `tests/property_tests.rs`, which reuses the same fault-tolerant
+//! stencil as its oracle.
+
+use mpi_abi::api::MpiAbi;
+use mpi_abi::core::transport::TransportKind;
+use mpi_abi::impls::{MpichAbi, OmpiAbi};
+use mpi_abi::muk::{MukMpich, MukOmpi};
+use mpi_abi::native_abi::NativeAbi;
+use mpi_abi::testsuite;
+
+fn battery<A: MpiAbi>() {
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        for (name, scenario) in testsuite::ulfm_scenarios::<A>() {
+            if let Err(m) = scenario(transport) {
+                panic!("[{} {:?}] {name}: {m}", A::NAME, transport);
+            }
+        }
+    }
+}
+
+#[test]
+fn ulfm_battery_mpich_native() {
+    battery::<MpichAbi>();
+}
+
+#[test]
+fn ulfm_battery_ompi_native() {
+    battery::<OmpiAbi>();
+}
+
+#[test]
+fn ulfm_battery_muk_over_mpich() {
+    battery::<MukMpich>();
+}
+
+#[test]
+fn ulfm_battery_muk_over_ompi() {
+    battery::<MukOmpi>();
+}
+
+#[test]
+fn ulfm_battery_native_standard_abi() {
+    battery::<NativeAbi>();
+}
+
+/// The indexed matcher is the default; the ULFM checks sit on its miss
+/// paths *and* on the flat baseline's request paths — prove the flat
+/// matcher honors the same failure contract.
+#[test]
+fn ulfm_battery_flat_baseline() {
+    use mpi_abi::abi::errors as ec;
+    use mpi_abi::launcher::{run_job, JobSpec, RankOutcome};
+    type A = NativeAbi;
+    for transport in [TransportKind::Spsc, TransportKind::Mutex] {
+        let spec = JobSpec::new(2).with_transport(transport).with_kill(1, 3).with_flat_match(true);
+        let out = run_job(spec, |rank| {
+            assert_eq!(A::init(), 0);
+            let dt = A::datatype(mpi_abi::api::Dt::Int);
+            let world = A::comm_world();
+            let mut st = A::status_empty();
+            let mut v = 0i32;
+            if rank == 1 {
+                let _ = A::recv(&mut v as *mut i32 as *mut u8, 1, dt, 0, 31999, world, &mut st);
+                return;
+            }
+            A::comm_set_errhandler(world, A::errhandler_return());
+            let rc = A::recv(&mut v as *mut i32 as *mut u8, 1, dt, 1, 7, world, &mut st);
+            assert_ne!(rc, 0, "flat-match recv from dead peer returned success");
+            assert_eq!(A::err_class_of(rc), ec::MPI_ERR_PROC_FAILED, "{transport:?}");
+        });
+        assert!(matches!(out[0], RankOutcome::Ok(())), "{transport:?}");
+        assert!(matches!(out[1], RankOutcome::Killed), "{transport:?}");
+    }
+}
