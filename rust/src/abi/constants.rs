@@ -31,6 +31,11 @@ pub const MPI_UNDEFINED: i32 = -105;
 pub const MPI_KEYVAL_INVALID: i32 = -106;
 /// The standard-ABI `MPI_ERR_IN_STATUS_VAL` constant.
 pub const MPI_ERR_IN_STATUS_VAL: i32 = -107;
+/// The standard-ABI `MPI_COMM_TYPE_SHARED` split-type constant
+/// (`MPI_Comm_split_type`; implementations number it differently —
+/// MPICH 1, Open MPI 0 — so it translates at ABI boundaries like any
+/// special int).
+pub const MPI_COMM_TYPE_SHARED: i32 = 1;
 
 /// All named special integer constants (for error reporting by name).
 pub const SPECIAL_INTS: &[(&str, i32)] = &[

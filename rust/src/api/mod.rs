@@ -215,6 +215,11 @@ pub trait MpiAbi: 'static {
     fn proc_null() -> i32;
     /// This ABI's `MPI_UNDEFINED` value.
     fn undefined() -> i32;
+    /// This ABI's `MPI_COMM_TYPE_SHARED` split-type value (MPICH 1,
+    /// Open MPI 0, standard ABI 1).
+    fn comm_type_shared() -> i32 {
+        crate::abi::constants::MPI_COMM_TYPE_SHARED
+    }
     /// The `MPI_IN_PLACE` buffer sentinel.
     fn in_place() -> *const u8;
     /// `MPI_LOCK_EXCLUSIVE` — implementations number lock types
@@ -410,6 +415,9 @@ pub trait MpiAbi: 'static {
     fn comm_dup(c: Self::Comm, out: &mut Self::Comm) -> i32;
     /// `MPI_Comm_split`.
     fn comm_split(c: Self::Comm, color: i32, key: i32, out: &mut Self::Comm) -> i32;
+    /// `MPI_Comm_split_type` (`MPI_COMM_TYPE_SHARED` or
+    /// `MPI_UNDEFINED`; `out` = `MPI_COMM_NULL` for undefined).
+    fn comm_split_type(c: Self::Comm, split_type: i32, key: i32, out: &mut Self::Comm) -> i32;
     /// `MPI_Comm_free`.
     fn comm_free(c: &mut Self::Comm) -> i32;
     /// `MPI_Comm_compare`.

@@ -5,7 +5,7 @@
 //! sends per iteration and waits for a one-byte ack; latency ping-pongs
 //! a message and halves the round-trip.
 
-use crate::api::{Dt, MpiAbi};
+use crate::api::{Dt, MpiAbi, OpName};
 
 /// osu_mbw_mr parameters (defaults match OSU 7.x).
 #[derive(Clone, Copy, Debug)]
@@ -191,6 +191,124 @@ pub fn bw<A: MpiAbi>(p: BwParams) -> f64 {
     }
     A::barrier(world);
     rate
+}
+
+/// Which collective a [`coll_latency`] run times (the `abibench --coll`
+/// scaling grid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollBench {
+    Barrier,
+    Allreduce,
+    Allgather,
+    Alltoall,
+}
+
+impl CollBench {
+    pub fn parse(s: &str) -> Option<CollBench> {
+        Some(match s {
+            "barrier" => CollBench::Barrier,
+            "allreduce" => CollBench::Allreduce,
+            "allgather" => CollBench::Allgather,
+            "alltoall" => CollBench::Alltoall,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CollBench::Barrier => "barrier",
+            CollBench::Allreduce => "allreduce",
+            CollBench::Allgather => "allgather",
+            CollBench::Alltoall => "alltoall",
+        }
+    }
+}
+
+/// osu_allreduce/allgather/alltoall/barrier parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CollParams {
+    pub bench: CollBench,
+    /// Payload bytes: the full vector for allreduce, the per-peer
+    /// contribution for allgather/alltoall (rounded down to whole
+    /// `MPI_INT` elements, minimum one).
+    pub msg_size: usize,
+    pub iters: usize,
+    pub warmup: usize,
+}
+
+impl Default for CollParams {
+    fn default() -> Self {
+        CollParams { bench: CollBench::Allreduce, msg_size: 1024, iters: 100, warmup: 10 }
+    }
+}
+
+/// Mean seconds per collective call (valid on every rank; the harness
+/// reads rank 0's copy). All ranks enter the operation `warmup + iters`
+/// times; a barrier re-synchronizes the job right before the clock
+/// starts so warmup stragglers don't bleed into the timed window, and
+/// once more after it so no rank tears the fabric down early. Uses
+/// `MPI_INT` + `MPI_SUM` so every schedule — whatever algorithm the
+/// selector picked — produces bitwise-identical results.
+pub fn coll_latency<A: MpiAbi>(p: CollParams) -> f64 {
+    let (mut n, mut me) = (0, 0);
+    A::comm_size(A::comm_world(), &mut n);
+    A::comm_rank(A::comm_world(), &mut me);
+    let world = A::comm_world();
+    let dt = A::datatype(Dt::Int);
+    let op = A::op(OpName::Sum);
+    let count = (p.msg_size / 4).max(1) as i32;
+    // Sized for the widest case (alltoall: count elements per peer).
+    let slots = count as usize * n as usize;
+    let sbuf = vec![me; slots];
+    let mut rbuf = vec![0i32; slots];
+
+    let mut t0 = 0.0;
+    for iter in 0..(p.warmup + p.iters) {
+        if iter == p.warmup {
+            A::barrier(world);
+            t0 = A::wtime();
+        }
+        match p.bench {
+            CollBench::Barrier => {
+                A::barrier(world);
+            }
+            CollBench::Allreduce => {
+                A::allreduce(
+                    sbuf.as_ptr() as *const u8,
+                    rbuf.as_mut_ptr() as *mut u8,
+                    count,
+                    dt,
+                    op,
+                    world,
+                );
+            }
+            CollBench::Allgather => {
+                A::allgather(
+                    sbuf.as_ptr() as *const u8,
+                    count,
+                    dt,
+                    rbuf.as_mut_ptr() as *mut u8,
+                    count,
+                    dt,
+                    world,
+                );
+            }
+            CollBench::Alltoall => {
+                A::alltoall(
+                    sbuf.as_ptr() as *const u8,
+                    count,
+                    dt,
+                    rbuf.as_mut_ptr() as *mut u8,
+                    count,
+                    dt,
+                    world,
+                );
+            }
+        }
+    }
+    let per_call = (A::wtime() - t0) / p.iters as f64;
+    A::barrier(world);
+    per_call
 }
 
 /// The `MPI_Type_size` throughput micro-measurement of §6.1: mean

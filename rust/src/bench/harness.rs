@@ -27,10 +27,25 @@
 //! (`rndv_threshold = usize::MAX`) and once pinned to **rendezvous**
 //! (`rndv_threshold = 0`), so the committed `BENCH_PR6.json` shows the
 //! eager→rendezvous crossover the default 64 KiB threshold sits on.
+//!
+//! A third grid, `--coll`, is the PR-10 rank-scaling sweep: collective
+//! latency vs thread-rank count (4 → 256 in `--full`) for every
+//! operation × algorithm column × config × transport, with the
+//! algorithm pinned per job via [`JobSpec::with_coll_algo`]. The
+//! committed `BENCH_PR10.json` shows the selector's `auto` column
+//! sitting on the per-point Pareto frontier of the forced columns.
 
 use crate::api::MpiAbi;
-use crate::apps::osu::{bw, latency, mbw_mr, type_size_ns, BwParams, LatencyParams, MbwMrParams};
+use crate::apps::osu::{
+    bw, coll_latency, latency, mbw_mr, type_size_ns, BwParams, CollBench, CollParams,
+    LatencyParams, MbwMrParams,
+};
 use crate::apps::{with_abi, AbiApp, AbiConfig};
+use crate::core::collectives::{
+    CollAlgoForce, ALLGATHER_GATHER_BCAST, ALLGATHER_RING, ALLREDUCE_BINOMIAL,
+    ALLREDUCE_RABENSEIFNER, ALLREDUCE_RECURSIVE_DOUBLING, ALLREDUCE_RING, ALLTOALL_BRUCK,
+    ALLTOALL_PAIRWISE,
+};
 use crate::core::transport::TransportKind;
 use crate::launcher::{run_job_ok, JobSpec};
 
@@ -777,6 +792,419 @@ pub fn check_bw_json(doc: &str) -> Vec<String> {
     missing
 }
 
+// --- Collective scaling grid (`--coll`, BENCH_PR10.json) ---
+
+/// The collective operations of the scaling grid, in grid order.
+pub const COLL_OPS: [&str; 4] = ["barrier", "allreduce", "allgather", "alltoall"];
+
+/// Thread-rank counts of the scaling sweep. Smoke mode stops at 16 so
+/// the CI `coll-scaling` job stays inside a small container; the
+/// committed artifact is generated with `--full` and carries the whole
+/// 4 → 256 curve.
+pub fn coll_ranks(smoke: bool) -> Vec<usize> {
+    if smoke {
+        vec![4, 16]
+    } else {
+        vec![4, 16, 64, 256]
+    }
+}
+
+/// Payload sizes of the sweep (bytes; allreduce: full vector,
+/// allgather/alltoall: per-peer block). Full mode carries both regimes:
+/// 64 B, where the latency-bound algorithms (recursive doubling, Bruck)
+/// earn their keep, and 16 KiB, where the bandwidth-bound ones
+/// (Rabenseifner, ring) do — no single size shows both, because
+/// pairwise alltoall is already bandwidth-optimal at large blocks.
+/// Smoke keeps one mid-size point so CI stays cheap.
+pub fn coll_msg_sizes(smoke: bool) -> Vec<usize> {
+    if smoke {
+        vec![256]
+    } else {
+        vec![64, 16 * 1024]
+    }
+}
+
+/// Algorithm columns per operation, `"auto"` (the tuning-table
+/// selector) always first. Barrier has a single dissemination schedule,
+/// so its only column is the selector itself.
+pub fn coll_algos(op: &str) -> &'static [&'static str] {
+    match op {
+        "allreduce" => &["auto", "binomial", "ring", "recursive_doubling", "rabenseifner"],
+        "allgather" => &["auto", "gather_bcast", "ring"],
+        "alltoall" => &["auto", "pairwise", "bruck"],
+        "barrier" => &["auto"],
+        _ => &[],
+    }
+}
+
+/// The forced-baseline column per operation (the pre-PR-10 fixed
+/// algorithm the selector must beat at scale).
+pub fn coll_baseline(op: &str) -> Option<&'static str> {
+    match op {
+        "allreduce" => Some("binomial"),
+        "allgather" => Some("gather_bcast"),
+        "alltoall" => Some("pairwise"),
+        _ => None,
+    }
+}
+
+/// Translate an (op, algorithm-column) pair into the per-job force
+/// word. `"auto"` leaves every field 0 = tuning table.
+pub fn coll_force(op: &str, algo: &str) -> CollAlgoForce {
+    let mut f = CollAlgoForce::default();
+    match (op, algo) {
+        (_, "auto") => {}
+        ("allreduce", "binomial") => f.allreduce = ALLREDUCE_BINOMIAL,
+        ("allreduce", "ring") => f.allreduce = ALLREDUCE_RING,
+        ("allreduce", "recursive_doubling") => f.allreduce = ALLREDUCE_RECURSIVE_DOUBLING,
+        ("allreduce", "rabenseifner") => f.allreduce = ALLREDUCE_RABENSEIFNER,
+        ("allgather", "gather_bcast") => f.allgather = ALLGATHER_GATHER_BCAST,
+        ("allgather", "ring") => f.allgather = ALLGATHER_RING,
+        ("alltoall", "pairwise") => f.alltoall = ALLTOALL_PAIRWISE,
+        ("alltoall", "bruck") => f.alltoall = ALLTOALL_BRUCK,
+        _ => unreachable!("unknown coll column {op}/{algo}"),
+    }
+    f
+}
+
+/// One measured point of the scaling grid.
+#[derive(Clone, Debug)]
+pub struct CollCell {
+    /// Operation name (one of [`COLL_OPS`]).
+    pub op: &'static str,
+    /// Algorithm column (one of [`coll_algos`]`(op)`).
+    pub algo: &'static str,
+    /// Thread-rank count of the job.
+    pub ranks: usize,
+    /// Payload bytes (one of [`coll_msg_sizes`]; ignored by barrier,
+    /// which is measured once and published to every size cell).
+    pub msg: usize,
+    /// ABI configuration name ([`AbiConfig::name`]).
+    pub config: &'static str,
+    /// Transport name ([`TransportKind::name`]).
+    pub transport: &'static str,
+    /// Nanoseconds per collective call.
+    pub ns: f64,
+}
+
+/// The scaling-sweep result behind `BENCH_PR10.json`.
+pub struct CollResult {
+    /// Mode the sweep was run in (`"smoke"` / `"full"`).
+    pub mode: &'static str,
+    /// Rank counts swept (ascending).
+    pub ranks: Vec<usize>,
+    /// Payload sizes swept (ascending).
+    pub sizes: Vec<usize>,
+    /// Every (op, algo, ranks, config, transport) point.
+    pub cells: Vec<CollCell>,
+    /// Rank-0 pvar snapshot from the scripted probe exchange
+    /// ([`pvar_probe`]), embedded in the JSON `meta` block.
+    pub probe_pvars: Vec<(&'static str, u64)>,
+}
+
+impl CollResult {
+    /// Latency of one grid point, if present.
+    pub fn ns(
+        &self,
+        op: &str,
+        algo: &str,
+        ranks: usize,
+        msg: usize,
+        config: &str,
+        transport: &str,
+    ) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| {
+                c.op == op
+                    && c.algo == algo
+                    && c.ranks == ranks
+                    && c.msg == msg
+                    && c.config == config
+                    && c.transport == transport
+            })
+            .map(|c| c.ns)
+    }
+
+    /// Best baseline-ns / auto-ns across payload sizes at the largest
+    /// swept rank count — the selector's speedup over the pre-PR-10
+    /// fixed algorithm in whichever regime favors it most (> 1 = the
+    /// tuning table picked a better schedule at scale).
+    pub fn auto_speedup(&self, op: &str, config: &str, transport: &str) -> Option<f64> {
+        let base = coll_baseline(op)?;
+        let &top = self.ranks.last()?;
+        self.sizes
+            .iter()
+            .filter_map(|&msg| {
+                Some(
+                    self.ns(op, base, top, msg, config, transport)?
+                        / self.ns(op, "auto", top, msg, config, transport)?,
+                )
+            })
+            .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))))
+    }
+}
+
+/// One point of the sweep: best-of-`reps` latency with the algorithm
+/// pinned via the job's force word.
+struct CollRun {
+    transport: TransportKind,
+    ranks: usize,
+    bench: CollBench,
+    force: CollAlgoForce,
+    msg_size: usize,
+    iters: usize,
+    warmup: usize,
+    reps: usize,
+}
+
+impl AbiApp<f64> for CollRun {
+    fn run<A: MpiAbi>(self) -> f64 {
+        let mut best = f64::MAX;
+        for _ in 0..self.reps {
+            let spec = JobSpec::new(self.ranks)
+                .with_transport(self.transport)
+                .with_coll_algo(self.force);
+            let out = run_job_ok(spec, |_| {
+                A::init();
+                let r = coll_latency::<A>(CollParams {
+                    bench: self.bench,
+                    msg_size: self.msg_size,
+                    iters: self.iters,
+                    warmup: self.warmup,
+                });
+                A::finalize();
+                r
+            });
+            best = best.min(out[0]);
+        }
+        best * 1e9
+    }
+}
+
+/// Per-rank-count iteration shaping: big jobs run fewer timed calls so
+/// the 256-rank alltoall points don't dominate wall-clock.
+fn coll_shape(ranks: usize, smoke: bool) -> (usize, usize, usize) {
+    let iters = if smoke { 20 } else { (2000 / ranks).clamp(20, 200) };
+    let warmup = (iters / 5).max(2);
+    let reps = if smoke { 1 } else { 3 };
+    (iters, warmup, reps)
+}
+
+/// Run the scaling sweep. Progress goes to stderr, one line per grid
+/// point.
+pub fn run_coll_harness(opts: HarnessOpts) -> CollResult {
+    std::env::set_var("MPI_ABI_NO_XLA", "1");
+    let ranks_axis = coll_ranks(opts.smoke);
+    let sizes = coll_msg_sizes(opts.smoke);
+    let mut cells = Vec::new();
+    for op in COLL_OPS {
+        let bench = CollBench::parse(op).expect("COLL_OPS entries parse");
+        for &ranks in &ranks_axis {
+            let (iters, warmup, reps) = coll_shape(ranks, opts.smoke);
+            for &algo in coll_algos(op) {
+                for config in AbiConfig::ALL {
+                    for transport in TRANSPORTS {
+                        // Barrier moves no payload: measure once and
+                        // publish the same value to every size cell so
+                        // the grid stays rectangular without passing
+                        // re-measurement noise off as a size effect.
+                        let mut once: Option<f64> = None;
+                        for &msg in &sizes {
+                            let ns = match (op, once) {
+                                ("barrier", Some(ns)) => ns,
+                                _ => {
+                                    let ns = with_abi(
+                                        config,
+                                        CollRun {
+                                            transport,
+                                            ranks,
+                                            bench,
+                                            force: coll_force(op, algo),
+                                            msg_size: msg,
+                                            iters,
+                                            warmup,
+                                            reps,
+                                        },
+                                    );
+                                    eprintln!(
+                                        "  [abibench] coll {op:<9} {algo:<18} {ranks:>3}r {msg:>6} B {:<11} {:<5} {ns:>14.1} ns",
+                                        config.name(),
+                                        transport.name(),
+                                    );
+                                    once = Some(ns);
+                                    ns
+                                }
+                            };
+                            cells.push(CollCell {
+                                op,
+                                algo,
+                                ranks,
+                                msg,
+                                config: config.name(),
+                                transport: transport.name(),
+                                ns,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    CollResult {
+        mode: if opts.smoke { "smoke" } else { "full" },
+        ranks: ranks_axis,
+        sizes,
+        cells,
+        probe_pvars: pvar_probe(),
+    }
+}
+
+fn coll_json_cell(c: &CollCell) -> String {
+    format!(
+        "    {{\"op\": \"{}\", \"algo\": \"{}\", \"ranks\": {}, \"msg\": {}, \"config\": \"{}\", \"transport\": \"{}\", \"ns\": {:.1}}}",
+        c.op, c.algo, c.ranks, c.msg, c.config, c.transport, c.ns
+    )
+}
+
+/// Render the sweep as the `BENCH_PR10.json` document.
+pub fn coll_to_json(r: &CollResult) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str("  \"pr\": 10,\n");
+    out.push_str("  \"generated_by\": \"abibench --coll\",\n");
+    out.push_str(&format!("  \"mode\": \"{}\",\n", r.mode));
+    out.push_str(&meta_json(r.mode, &r.probe_pvars));
+    out.push_str(&format!(
+        "  \"coll_msg_sizes\": [{}],\n",
+        r.sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"coll_ranks\": [{}],\n",
+        r.ranks.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"coll_ops\": [{}],\n",
+        COLL_OPS.map(|o| format!("\"{o}\"")).join(", ")
+    ));
+    out.push_str("  \"coll_algos\": {\n");
+    let algos: Vec<String> = COLL_OPS
+        .iter()
+        .map(|&op| {
+            format!(
+                "    \"{op}\": [{}]",
+                coll_algos(op).iter().map(|a| format!("\"{a}\"")).collect::<Vec<_>>().join(", ")
+            )
+        })
+        .collect();
+    out.push_str(&algos.join(",\n"));
+    out.push_str("\n  },\n");
+    out.push_str(&format!(
+        "  \"configs\": [{}],\n",
+        AbiConfig::ALL.map(|c| format!("\"{}\"", c.name())).join(", ")
+    ));
+    out.push_str(&format!(
+        "  \"transports\": [{}],\n",
+        TRANSPORTS.map(|t| format!("\"{}\"", t.name())).join(", ")
+    ));
+    out.push_str("  \"cells\": [\n");
+    let lines: Vec<String> = r.cells.iter().map(coll_json_cell).collect();
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n  ],\n");
+    out.push_str("  \"auto_speedup_vs_baseline_at_max_ranks\": {\n");
+    let mut sp = Vec::new();
+    for op in COLL_OPS {
+        if coll_baseline(op).is_none() {
+            continue;
+        }
+        for transport in TRANSPORTS {
+            // Headline: the native standard-ABI build.
+            if let Some(s) = r.auto_speedup(op, "abi", transport.name()) {
+                sp.push(format!("    \"{}_{}\": {:.3}", op, transport.name(), s));
+            }
+        }
+    }
+    out.push_str(&sp.join(",\n"));
+    out.push_str("\n  }\n");
+    out.push_str("}\n");
+    out
+}
+
+/// Validate a previously written `BENCH_PR10.json`: the `coll_ranks`
+/// array is read back from the document itself, then every (op, algo,
+/// ranks, config, transport) cell must be present with a finite
+/// latency. The CI `coll-scaling` job runs this via `abibench --coll
+/// --check` against the committed artifact.
+pub fn check_coll_json(doc: &str) -> Vec<String> {
+    let mut missing = Vec::new();
+    fn usize_list(doc: &str, key: &str) -> Vec<usize> {
+        let head = format!("\"{key}\": [");
+        match doc.find(&head) {
+            Some(p) => {
+                let rest = &doc[p + head.len()..];
+                match rest.find(']') {
+                    Some(end) => rest[..end]
+                        .split(',')
+                        .filter_map(|s| s.trim().parse::<usize>().ok())
+                        .collect(),
+                    None => Vec::new(),
+                }
+            }
+            None => Vec::new(),
+        }
+    }
+    let ranks = usize_list(doc, "coll_ranks");
+    let sizes = usize_list(doc, "coll_msg_sizes");
+    if ranks.is_empty() {
+        missing.push("\"coll_ranks\" array with at least one rank count".to_string());
+        return missing;
+    }
+    if sizes.is_empty() {
+        missing.push("\"coll_msg_sizes\" array with at least one size".to_string());
+        return missing;
+    }
+    for op in COLL_OPS {
+        for &algo in coll_algos(op) {
+            for &ranks in &ranks {
+                for &msg in &sizes {
+                    for config in AbiConfig::ALL {
+                        for transport in TRANSPORTS {
+                            let needle = format!(
+                                "\"op\": \"{}\", \"algo\": \"{}\", \"ranks\": {}, \"msg\": {}, \"config\": \"{}\", \"transport\": \"{}\", \"ns\": ",
+                                op,
+                                algo,
+                                ranks,
+                                msg,
+                                config.name(),
+                                transport.name()
+                            );
+                            match doc.find(&needle) {
+                                Some(pos) => {
+                                    let rest = &doc[pos + needle.len()..];
+                                    let num: String = rest
+                                        .chars()
+                                        .take_while(|c| {
+                                            c.is_ascii_digit() || *c == '.' || *c == '-'
+                                        })
+                                        .collect();
+                                    if num.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false)
+                                    {
+                                        continue;
+                                    }
+                                    missing.push(format!("{needle}<non-numeric>"));
+                                }
+                                None => missing.push(needle),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    missing
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -936,5 +1364,86 @@ mod tests {
         let r = fake_bw_result(true);
         assert_eq!(r.crossover("abi", "spsc"), Some(128 * 1024));
         assert_eq!(r.crossover("nope", "spsc"), None);
+    }
+
+    fn fake_coll_result(smoke: bool) -> CollResult {
+        let ranks = coll_ranks(smoke);
+        let sizes = coll_msg_sizes(smoke);
+        let mut cells = Vec::new();
+        for op in COLL_OPS {
+            for &algo in coll_algos(op) {
+                for &r in &ranks {
+                    for &msg in &sizes {
+                        for config in AbiConfig::ALL {
+                            for transport in TRANSPORTS {
+                                // Synthetic curves: auto tracks the best
+                                // forced column, the baseline grows
+                                // fastest.
+                                let ns = match algo {
+                                    "auto" => 100.0 * r as f64,
+                                    a if Some(a) == coll_baseline(op) => 250.0 * r as f64,
+                                    _ => 150.0 * r as f64,
+                                };
+                                cells.push(CollCell {
+                                    op,
+                                    algo,
+                                    ranks: r,
+                                    msg,
+                                    config: config.name(),
+                                    transport: transport.name(),
+                                    ns,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        CollResult {
+            mode: if smoke { "smoke" } else { "full" },
+            ranks,
+            sizes,
+            cells,
+            probe_pvars: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn coll_ranks_scale_to_256_in_full_mode() {
+        assert_eq!(coll_ranks(true), vec![4, 16]);
+        assert_eq!(coll_ranks(false), vec![4, 16, 64, 256]);
+    }
+
+    #[test]
+    fn coll_force_pins_exactly_one_op() {
+        let f = coll_force("allreduce", "rabenseifner");
+        assert_eq!(f.allreduce, ALLREDUCE_RABENSEIFNER);
+        assert_eq!((f.allgather, f.alltoall), (0, 0));
+        assert_eq!(coll_force("alltoall", "bruck").alltoall, ALLTOALL_BRUCK);
+        assert_eq!(coll_force("barrier", "auto"), CollAlgoForce::default());
+    }
+
+    #[test]
+    fn coll_json_roundtrips_the_completeness_check() {
+        for smoke in [true, false] {
+            let doc = coll_to_json(&fake_coll_result(smoke));
+            assert!(check_coll_json(&doc).is_empty(), "generated coll JSON must be complete");
+        }
+    }
+
+    #[test]
+    fn coll_check_flags_missing_cells() {
+        let doc = coll_to_json(&fake_coll_result(true));
+        let broken = doc.replacen("\"algo\": \"rabenseifner\"", "\"algo\": \"gone\"", 1);
+        assert_eq!(check_coll_json(&broken).len(), 1);
+        assert_eq!(check_coll_json("{}").len(), 1, "missing coll_ranks is structural");
+    }
+
+    #[test]
+    fn coll_auto_speedup_is_baseline_over_auto() {
+        let r = fake_coll_result(false);
+        let s = r.auto_speedup("allreduce", "abi", "spsc").unwrap();
+        assert!((s - 2.5).abs() < 1e-9, "{s}");
+        assert!(r.auto_speedup("barrier", "abi", "spsc").is_none());
     }
 }

@@ -1,11 +1,13 @@
 //! `abibench` — the perf-grid runner (`BENCH_PR5.json` /
-//! `BENCH_PR6.json`).
+//! `BENCH_PR6.json` / `BENCH_PR10.json`).
 //!
 //! ```text
 //! cargo run --release --bin abibench -- [--smoke|--full] [--out PATH]
 //! cargo run --release --bin abibench -- --check [--out PATH]
 //! cargo run --release --bin abibench -- --bandwidth [--smoke|--full] [--out PATH]
 //! cargo run --release --bin abibench -- --bandwidth --check [--out PATH]
+//! cargo run --release --bin abibench -- --coll [--smoke|--full] [--out PATH]
+//! cargo run --release --bin abibench -- --coll --check [--out PATH]
 //! ```
 //!
 //! Default mode is `--smoke` (CI-sized); `--full` is the mode whose
@@ -19,13 +21,21 @@
 //! protocol and once pinned to rendezvous, so the artifact shows the
 //! eager→rendezvous crossover.
 //!
+//! `--coll` switches to the PR-10 collective rank-scaling grid:
+//! latency vs thread-rank count for every operation × algorithm
+//! column × config × transport, with the schedule algorithm pinned per
+//! job, so the artifact shows the auto selector on the Pareto frontier
+//! of the forced columns.
+//!
 //! `--out` defaults to `BENCH_PR5.json` (`BENCH_PR6.json` with
-//! `--bandwidth`) **at the repo root** (resolved from the crate
-//! manifest, not the cwd), so running from `rust/` updates the
-//! committed artifact rather than leaving a stray copy.
+//! `--bandwidth`, `BENCH_PR10.json` with `--coll`) **at the repo root**
+//! (resolved from the crate manifest, not the cwd), so running from
+//! `rust/` updates the committed artifact rather than leaving a stray
+//! copy.
 
 use mpi_abi::bench::harness::{
-    bw_to_json, check_bw_json, check_json, run_bw_harness, run_harness, to_json, HarnessOpts,
+    bw_to_json, check_bw_json, check_coll_json, check_json, coll_to_json, run_bw_harness,
+    run_coll_harness, run_harness, to_json, HarnessOpts, COLL_OPS, TRANSPORTS,
 };
 
 fn main() {
@@ -33,6 +43,7 @@ fn main() {
     let mut smoke = true;
     let mut check = false;
     let mut bandwidth = false;
+    let mut coll = false;
     let mut out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
@@ -41,6 +52,7 @@ fn main() {
             "--full" => smoke = false,
             "--check" => check = true,
             "--bandwidth" => bandwidth = true,
+            "--coll" => coll = true,
             "--out" => {
                 i += 1;
                 out = Some(args.get(i).cloned().unwrap_or_else(|| {
@@ -50,14 +62,22 @@ fn main() {
             }
             other => {
                 eprintln!("unknown argument {other}");
-                eprintln!("usage: abibench [--bandwidth] [--smoke|--full] [--out PATH] [--check]");
+                eprintln!(
+                    "usage: abibench [--bandwidth|--coll] [--smoke|--full] [--out PATH] [--check]"
+                );
                 std::process::exit(2);
             }
         }
         i += 1;
     }
+    if bandwidth && coll {
+        eprintln!("--bandwidth and --coll are mutually exclusive");
+        std::process::exit(2);
+    }
     let out = out.unwrap_or_else(|| {
-        if bandwidth {
+        if coll {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR10.json").to_string()
+        } else if bandwidth {
             concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json").to_string()
         } else {
             concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json").to_string()
@@ -72,7 +92,13 @@ fn main() {
                 std::process::exit(1);
             }
         };
-        let missing = if bandwidth { check_bw_json(&doc) } else { check_json(&doc) };
+        let missing = if coll {
+            check_coll_json(&doc)
+        } else if bandwidth {
+            check_bw_json(&doc)
+        } else {
+            check_json(&doc)
+        };
         if missing.is_empty() {
             println!("abibench --check: {out} complete (every grid cell present)");
             return;
@@ -82,6 +108,30 @@ fn main() {
             eprintln!("  {m}");
         }
         std::process::exit(1);
+    }
+
+    if coll {
+        let result = run_coll_harness(HarnessOpts { smoke });
+        let doc = coll_to_json(&result);
+        if let Err(e) = std::fs::write(&out, &doc) {
+            eprintln!("abibench: cannot write {out}: {e}");
+            std::process::exit(1);
+        }
+        // Headline: the selector vs the pre-PR-10 fixed algorithm at
+        // the largest swept rank count, native standard-ABI build.
+        for op in COLL_OPS {
+            for transport in TRANSPORTS {
+                if let Some(s) = result.auto_speedup(op, "abi", transport.name()) {
+                    println!(
+                        "coll {op:<9} {} abi @{}r: auto is {s:.2}x vs fixed baseline",
+                        transport.name(),
+                        result.ranks.last().unwrap()
+                    );
+                }
+            }
+        }
+        println!("wrote {out} ({} mode, {} cells)", result.mode, result.cells.len());
+        return;
     }
 
     if bandwidth {

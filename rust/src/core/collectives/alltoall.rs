@@ -78,7 +78,7 @@ pub fn alltoall_bytes(send: &[u8], recv: &mut [u8], blk: usize, comm: CommId) ->
             if r == cc.my_rank {
                 continue;
             }
-            let p = coll_recv(ctx, &cc, r);
+            let p = coll_recv(ctx, &cc, r)?;
             recv[r * blk..r * blk + p.len().min(blk)]
                 .copy_from_slice(&p.as_slice()[..p.len().min(blk)]);
         }

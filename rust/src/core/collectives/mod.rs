@@ -2,9 +2,16 @@
 //! communicator's dedicated collective context plane.
 //!
 //! Algorithms: dissemination barrier, binomial-tree bcast/reduce,
-//! reduce+bcast allreduce, linear (root-rooted) gather/scatter familes,
-//! pairwise alltoall, linear scan. All collectives advance a per-comm
-//! collective tag so consecutive collectives never cross-match.
+//! linear (root-rooted) gather/scatter familes, linear scan — plus
+//! *selectable* variants for the unrooted heavyweights: allreduce
+//! (binomial reduce+bcast, ring, recursive doubling, Rabenseifner),
+//! allgather(v) (gather+bcast, ring) and uniform alltoall (pairwise,
+//! Bruck). A tuning table keyed on (packed bytes, comm size) picks the
+//! variant per call — see [`pick_allreduce`] & co. — overridable
+//! per-operation through the `coll_*_algo` cvars and the
+//! `MPI_ABI_COLL_ALGO` environment variable, so tests can force every
+//! choice. All collectives advance a per-comm collective tag so
+//! consecutive collectives never cross-match.
 //!
 //! Every algorithm lives exactly once, as a schedule builder in
 //! [`sched`]; the nonblocking entry points (`ibcast`, `iallreduce`, …)
@@ -64,6 +71,209 @@ pub(crate) fn coll_begin(comm: CommId) -> RC<CollCtx> {
 /// Tag slots reserved per collective for internal phases/rounds.
 pub(crate) const PHASES_PER_COLL: i32 = 32;
 
+// ---------------------------------------------------------------------------
+// Collective algorithm selection
+// ---------------------------------------------------------------------------
+
+/// Per-operation algorithm overrides: 0 = auto (tuning table), else one
+/// of the per-op force codes below. Carried on the [`World`] as the job
+/// default (set from `MPI_ABI_COLL_ALGO` or
+/// [`crate::launcher::JobSpec::with_coll_algo`]), copied per rank at
+/// bind, and writable per rank through the `coll_*_algo` cvars.
+///
+/// [`World`]: crate::core::world::World
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CollAlgoForce {
+    pub allreduce: u8,
+    pub allgather: u8,
+    pub alltoall: u8,
+}
+
+impl CollAlgoForce {
+    /// Pack into one `u32` (the [`World`] stores it in a single atomic).
+    ///
+    /// [`World`]: crate::core::world::World
+    pub fn pack(self) -> u32 {
+        (self.allreduce as u32) | ((self.allgather as u32) << 8) | ((self.alltoall as u32) << 16)
+    }
+
+    pub fn unpack(v: u32) -> CollAlgoForce {
+        CollAlgoForce {
+            allreduce: (v & 0xFF) as u8,
+            allgather: ((v >> 8) & 0xFF) as u8,
+            alltoall: ((v >> 16) & 0xFF) as u8,
+        }
+    }
+}
+
+/// Auto-select from the tuning table (the zero value of every force code).
+pub const COLL_AUTO: u8 = 0;
+/// Allreduce force codes (cvar `coll_allreduce_algo`).
+pub const ALLREDUCE_BINOMIAL: u8 = 1;
+pub const ALLREDUCE_RING: u8 = 2;
+pub const ALLREDUCE_RECURSIVE_DOUBLING: u8 = 3;
+pub const ALLREDUCE_RABENSEIFNER: u8 = 4;
+/// Allgather(v) force codes (cvar `coll_allgather_algo`).
+pub const ALLGATHER_GATHER_BCAST: u8 = 1;
+pub const ALLGATHER_RING: u8 = 2;
+/// Uniform-alltoall force codes (cvar `coll_alltoall_algo`).
+pub const ALLTOALL_PAIRWISE: u8 = 1;
+pub const ALLTOALL_BRUCK: u8 = 2;
+
+/// One tuning-table band: the first row whose bounds cover the call's
+/// (packed bytes, comm size) wins. Bounds are inclusive.
+struct CollTuneRow {
+    max_bytes: usize,
+    max_ranks: usize,
+    algo: u8,
+}
+
+/// Allreduce tuning: latency-bound small messages take recursive
+/// doubling (⌈log2 n⌉ rounds — half the binomial reduce+bcast depth at
+/// every comm size, so there is no small-n binomial band), the mid band
+/// takes Rabenseifner (log rounds at half the data per round), and
+/// large messages at scale take the bandwidth-optimal ring. n ≤ 2 is
+/// forced binomial by [`pick_allreduce`] before the table is consulted.
+const ALLREDUCE_TUNING: &[CollTuneRow] = &[
+    CollTuneRow { max_bytes: 2048, max_ranks: usize::MAX, algo: ALLREDUCE_RECURSIVE_DOUBLING },
+    CollTuneRow { max_bytes: 64 * 1024, max_ranks: usize::MAX, algo: ALLREDUCE_RABENSEIFNER },
+    CollTuneRow { max_bytes: usize::MAX, max_ranks: 8, algo: ALLREDUCE_RABENSEIFNER },
+    CollTuneRow { max_bytes: usize::MAX, max_ranks: usize::MAX, algo: ALLREDUCE_RING },
+];
+
+/// Allgather tuning: tiny comms take the ring outright (n−1 rounds ≤
+/// the two binomial trees' 2·⌈log2 n⌉ when n ≤ 8), mid-size comms with
+/// small totals keep the gather+bcast baseline (2·⌈log2 n⌉ envelopes
+/// beat the ring's n−1 while envelope cost dominates payload cost),
+/// and large totals take the ring at every size (no root hotspot, each
+/// link carries the total exactly once instead of the bcast tree's
+/// log2 n times).
+const ALLGATHER_TUNING: &[CollTuneRow] = &[
+    CollTuneRow { max_bytes: 32 * 1024, max_ranks: 8, algo: ALLGATHER_RING },
+    CollTuneRow { max_bytes: 32 * 1024, max_ranks: usize::MAX, algo: ALLGATHER_GATHER_BCAST },
+    CollTuneRow { max_bytes: usize::MAX, max_ranks: usize::MAX, algo: ALLGATHER_RING },
+];
+
+/// Alltoall tuning: Bruck trades n−1 envelopes for ⌈log2 n⌉ envelopes of
+/// n/2 blocks each — a win when blocks are small and ranks are many.
+const ALLTOALL_TUNING: &[CollTuneRow] = &[
+    CollTuneRow { max_bytes: 2048, max_ranks: 7, algo: ALLTOALL_PAIRWISE },
+    CollTuneRow { max_bytes: 2048, max_ranks: usize::MAX, algo: ALLTOALL_BRUCK },
+    CollTuneRow { max_bytes: usize::MAX, max_ranks: usize::MAX, algo: ALLTOALL_PAIRWISE },
+];
+
+fn tune(table: &[CollTuneRow], bytes: usize, n: usize) -> u8 {
+    table
+        .iter()
+        .find(|row| bytes <= row.max_bytes && n <= row.max_ranks)
+        .map(|row| row.algo)
+        .unwrap_or(COLL_AUTO)
+}
+
+/// Pick the allreduce variant for (force, packed bytes, comm size, op
+/// commutativity). Segment-reordering variants (everything but binomial)
+/// change the fold bracketing, so non-commutative user ops always take
+/// the baseline; Rabenseifner's 2·log2(p) exchange phases must also fit
+/// the [`PHASES_PER_COLL`] tag band (they stop fitting only beyond 2^14
+/// ranks, where the guard falls back to the 2-phase ring).
+pub(crate) fn pick_allreduce(force: u8, bytes: usize, n: usize, commutative: bool) -> u8 {
+    let force = if force <= ALLREDUCE_RABENSEIFNER { force } else { COLL_AUTO };
+    let algo = match force {
+        COLL_AUTO => {
+            if !commutative || n <= 2 {
+                ALLREDUCE_BINOMIAL
+            } else {
+                tune(ALLREDUCE_TUNING, bytes, n)
+            }
+        }
+        f => f,
+    };
+    if algo == ALLREDUCE_RABENSEIFNER && n > (1 << 14) {
+        ALLREDUCE_RING
+    } else {
+        algo
+    }
+}
+
+/// Pick the allgather(v) variant for (force, total packed bytes, comm
+/// size).
+pub(crate) fn pick_allgather(force: u8, total_bytes: usize, n: usize) -> u8 {
+    let force = if force <= ALLGATHER_RING { force } else { COLL_AUTO };
+    match force {
+        COLL_AUTO => tune(ALLGATHER_TUNING, total_bytes, n),
+        f => f,
+    }
+}
+
+/// Pick the uniform-alltoall variant for (force, per-block packed bytes,
+/// comm size).
+pub(crate) fn pick_alltoall(force: u8, blk_bytes: usize, n: usize) -> u8 {
+    let force = if force <= ALLTOALL_BRUCK { force } else { COLL_AUTO };
+    match force {
+        COLL_AUTO => tune(ALLTOALL_TUNING, blk_bytes, n),
+        f => f,
+    }
+}
+
+/// Parse a `MPI_ABI_COLL_ALGO`-style override string:
+/// `"allreduce=ring,allgather=ring,alltoall=bruck"`. Names or numeric
+/// force codes are accepted; unknown keys and names fall back to auto.
+pub fn parse_coll_algo(s: &str) -> CollAlgoForce {
+    fn code(name: &str, table: &[(&str, u8)]) -> u8 {
+        let name = name.trim();
+        table
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| *c)
+            .or_else(|| name.parse::<u8>().ok())
+            .unwrap_or(COLL_AUTO)
+    }
+    let mut f = CollAlgoForce::default();
+    for part in s.split(',') {
+        let Some((op, name)) = part.split_once('=') else { continue };
+        match op.trim() {
+            "allreduce" => {
+                f.allreduce = code(name, &[
+                    ("auto", COLL_AUTO),
+                    ("binomial", ALLREDUCE_BINOMIAL),
+                    ("ring", ALLREDUCE_RING),
+                    ("rd", ALLREDUCE_RECURSIVE_DOUBLING),
+                    ("recursive_doubling", ALLREDUCE_RECURSIVE_DOUBLING),
+                    ("rabenseifner", ALLREDUCE_RABENSEIFNER),
+                ]);
+            }
+            "allgather" => {
+                f.allgather = code(name, &[
+                    ("auto", COLL_AUTO),
+                    ("gather_bcast", ALLGATHER_GATHER_BCAST),
+                    ("binomial", ALLGATHER_GATHER_BCAST),
+                    ("ring", ALLGATHER_RING),
+                ]);
+            }
+            "alltoall" => {
+                f.alltoall = code(name, &[
+                    ("auto", COLL_AUTO),
+                    ("pairwise", ALLTOALL_PAIRWISE),
+                    ("bruck", ALLTOALL_BRUCK),
+                ]);
+            }
+            _ => {}
+        }
+    }
+    f
+}
+
+/// Job-default override from the `MPI_ABI_COLL_ALGO` environment
+/// variable (read once at [`World`] construction).
+///
+/// [`World`]: crate::core::world::World
+pub fn coll_algo_env() -> CollAlgoForce {
+    match std::env::var("MPI_ABI_COLL_ALGO") {
+        Ok(s) => parse_coll_algo(&s),
+        Err(_) => CollAlgoForce::default(),
+    }
+}
+
 /// Send raw bytes to comm rank `dst` on the collective plane.
 pub(crate) fn coll_send(ctx: &RankCtx, cc: &CollCtx, dst: usize, payload: Payload) {
     let env = Envelope {
@@ -80,7 +290,13 @@ pub(crate) fn coll_send(ctx: &RankCtx, cc: &CollCtx, dst: usize, payload: Payloa
 /// Blocking receive of raw bytes from comm rank `src` on the collective
 /// plane (bypasses the request engine: collective internals own their
 /// buffers).
-pub(crate) fn coll_recv(ctx: &RankCtx, cc: &CollCtx, src: usize) -> Payload {
+///
+/// ULFM-aware: these spins back the *creation-time* byte exchanges
+/// (`comm_dup`/`comm_split` bootstrap, engine agreement rounds), which
+/// run before the new comm exists — a peer dying mid-create must surface
+/// `MPI_ERR_PROC_FAILED` here rather than hang the spin. Checked only on
+/// a miss, so bytes the peer sent before dying still flow through.
+pub(crate) fn coll_recv(ctx: &RankCtx, cc: &CollCtx, src: usize) -> RC<Payload> {
     let want_src = cc.members[src] as i32;
     loop {
         progress(ctx);
@@ -88,7 +304,14 @@ pub(crate) fn coll_recv(ctx: &RankCtx, cc: &CollCtx, src: usize) -> Payload {
         if let Some(env) =
             ctx.state.borrow_mut().match_index.take_unexpected(cc.context, want_src, cc.tag)
         {
-            return env.payload;
+            return Ok(env.payload);
+        }
+        if ctx.world.is_revoked(cc.context) {
+            return Err(err!(MPI_ERR_REVOKED));
+        }
+        if ctx.world.is_dead(cc.members[src]) {
+            ctx.obs.note_op_failed_proc();
+            return Err(err!(MPI_ERR_PROC_FAILED));
         }
         std::thread::yield_now();
     }
@@ -119,16 +342,15 @@ pub fn barrier(comm: CommId) -> RC<()> {
 pub fn bcast_bytes(buf: &mut [u8], root: usize, comm: CommId) -> RC<()> {
     with_ctx(|ctx| {
         let cc = coll_begin(comm)?;
-        bcast_bytes_cc(ctx, &cc, buf, root);
-        Ok(())
+        bcast_bytes_cc(ctx, &cc, buf, root)
     })
 }
 
 /// Binomial-tree byte broadcast over an existing CollCtx.
-pub(crate) fn bcast_bytes_cc(ctx: &RankCtx, cc: &CollCtx, buf: &mut [u8], root: usize) {
+pub(crate) fn bcast_bytes_cc(ctx: &RankCtx, cc: &CollCtx, buf: &mut [u8], root: usize) -> RC<()> {
     let n = cc.size();
     if n <= 1 {
-        return;
+        return Ok(());
     }
     // Virtual ranks with root at 0.
     let vrank = (cc.my_rank + n - root) % n;
@@ -136,7 +358,7 @@ pub(crate) fn bcast_bytes_cc(ctx: &RankCtx, cc: &CollCtx, buf: &mut [u8], root: 
     if vrank != 0 {
         let parent = parent_of(vrank);
         let parent_real = (parent + root) % n;
-        let p = coll_recv(ctx, cc, parent_real);
+        let p = coll_recv(ctx, cc, parent_real)?;
         let data = p.as_slice();
         let take = data.len().min(buf.len());
         buf[..take].copy_from_slice(&data[..take]);
@@ -146,6 +368,7 @@ pub(crate) fn bcast_bytes_cc(ctx: &RankCtx, cc: &CollCtx, buf: &mut [u8], root: 
         let child_real = (child + root) % n;
         coll_send(ctx, cc, child_real, Payload::from_slice(buf));
     }
+    Ok(())
 }
 
 /// Engine-level `MPI_Allgatherv_c`: the embiggened allgatherv — per-rank
@@ -204,7 +427,7 @@ pub fn allgatherv_c(
             if r == cc.my_rank {
                 continue;
             }
-            let p = coll_recv(ctx, &cc, r);
+            let p = coll_recv(ctx, &cc, r)?;
             let t = ctx.tables.borrow();
             let dst = unsafe { recvbuf.offset(displs[r] * rext) };
             super::datatype::pack::unpack(
@@ -232,7 +455,7 @@ pub fn gather_bytes(send: &[u8], recv: &mut [u8], root: usize, comm: CommId) -> 
                 if r == root {
                     continue;
                 }
-                let p = coll_recv(ctx, &cc, r);
+                let p = coll_recv(ctx, &cc, r)?;
                 recv[r * blk..r * blk + p.len().min(blk)]
                     .copy_from_slice(&p.as_slice()[..p.len().min(blk)]);
             }
@@ -258,7 +481,7 @@ pub fn scatter_var_bytes(blobs: &[Vec<u8>], root: usize, comm: CommId) -> RC<Vec
             }
             Ok(blobs[root].clone())
         } else {
-            Ok(coll_recv(ctx, &cc, root).as_slice().to_vec())
+            Ok(coll_recv(ctx, &cc, root)?.as_slice().to_vec())
         }
     })
 }

@@ -89,6 +89,14 @@ pub(crate) enum RecvAction {
     /// (reduction trees and scan chains; fold order matches the blocking
     /// algorithms so non-commutative user ops see identical bracketing).
     Combine { op: OpId, count: usize, dt: DtId },
+    /// Fold the payload into `accum[offset..offset+len]` only — the
+    /// segmented reductions of the ring and Rabenseifner allreduce
+    /// variants (`count` = elements in the segment).
+    CombineAt { op: OpId, offset: usize, len: usize, count: usize, dt: DtId },
+    /// Scatter the payload back into the accumulator ranges listed in
+    /// `Schedule::bands[band]`, in order (Bruck rounds). Indexing the
+    /// side table keeps this enum `Copy`.
+    ScatterBands { band: usize },
     /// Unpack the payload straight into user memory at `buf + displ`
     /// (rooted gathers, scatter leaves, alltoall blocks).
     Unpack { buf: usize, displ: isize, count: usize, dt: DtId },
@@ -106,6 +114,10 @@ pub(crate) enum Step {
     /// Eager-send the accumulator (or `range` of it) *as of execution
     /// time* — for data produced by earlier receive steps.
     SendAccum { to: usize, phase: i32, range: Option<(usize, usize)> },
+    /// Eager-send the concatenation of the accumulator ranges listed in
+    /// `Schedule::bands[band]` *as of execution time* (the non-contiguous
+    /// block sets a Bruck round ships in one envelope).
+    SendAccumBands { to: usize, phase: i32, band: usize },
     /// Park until a message from `from` on `phase` arrives, then apply
     /// `action`.
     Recv { from: usize, phase: i32, action: RecvAction },
@@ -182,6 +194,14 @@ pub struct Schedule {
     /// Whether this schedule will be re-armed ([`submit_init`] sets it).
     /// One-shot schedules surrender their send blocks instead of copying.
     persistent: bool,
+    /// Accumulator range lists referenced by [`Step::SendAccumBands`] and
+    /// [`RecvAction::ScatterBands`] — immutable after build, so restarts
+    /// reuse them.
+    bands: Vec<Vec<(usize, usize)>>,
+    /// Algorithm id of this schedule ([`crate::core::obs`]'s
+    /// `COLL_ALGO_*`; 0 = unlabeled). Stamped into the high byte of the
+    /// CollStep trace word.
+    algo: u8,
 }
 
 impl Schedule {
@@ -203,6 +223,8 @@ impl Schedule {
             recv_bytes: 0,
             scratch: Vec::new(),
             persistent: false,
+            bands: Vec::new(),
+            algo: 0,
         }
     }
 
@@ -270,6 +292,28 @@ fn apply_recv(ctx: &RankCtx, s: &mut Schedule, payload: Payload, action: RecvAct
         }
         RecvAction::Combine { op, count, dt } => {
             crate::core::op::apply(op, data, &mut s.accum, count, dt)
+        }
+        RecvAction::CombineAt { op, offset, len, count, dt } => {
+            let end = offset.saturating_add(len).min(s.accum.len());
+            if offset >= end {
+                return Ok(());
+            }
+            let take = (end - offset).min(data.len());
+            crate::core::op::apply(op, &data[..take], &mut s.accum[offset..offset + take], count, dt)
+        }
+        RecvAction::ScatterBands { band } => {
+            let mut pos = 0usize;
+            for &(off, len) in &s.bands[band] {
+                let end = off.saturating_add(len).min(s.accum.len());
+                if off < end {
+                    let take = (end - off).min(data.len().saturating_sub(pos));
+                    if take > 0 {
+                        s.accum[off..off + take].copy_from_slice(&data[pos..pos + take]);
+                    }
+                }
+                pos += len;
+            }
+            Ok(())
         }
         RecvAction::Unpack { buf, displ, count, dt } => {
             let t = ctx.tables.borrow();
@@ -356,6 +400,14 @@ fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
                 let payload = Payload::from_slice(ranged(&s.accum, range));
                 send_payload(ctx, s, to, phase, payload);
             }
+            Step::SendAccumBands { to, phase, band } => {
+                let (to, phase, band) = (*to, *phase, *band);
+                let mut data = Vec::new();
+                for &(off, len) in &s.bands[band] {
+                    data.extend_from_slice(ranged(&s.accum, Some((off, len))));
+                }
+                send_payload(ctx, s, to, phase, Payload::from_vec(data));
+            }
             Step::Recv { from, phase, action } => {
                 let (from, phase, action) = (*from, *phase, *action);
                 let want_src = s.members[from] as i32;
@@ -406,7 +458,7 @@ fn advance(ctx: &RankCtx, s: &mut Schedule) -> RC<bool> {
             ctx,
             crate::core::obs::TraceKind::CollStep,
             s.context,
-            s.pc as u32,
+            ((s.algo as u32) << 24) | (s.pc as u32 & 0x00FF_FFFF),
         );
         s.pc += 1;
     }
@@ -612,6 +664,99 @@ fn uniform_layout(count: usize, n: usize) -> (Vec<usize>, Vec<isize>) {
     (vec![count; n], (0..n).map(|r| (r * count) as isize).collect())
 }
 
+/// Even element split for the segmented allreduce variants: segment `r`
+/// of `count` elements over `n` ranks covers `[r·count/n, (r+1)·count/n)`
+/// — sizes differ by at most one element and every rank computes
+/// identical boundaries.
+fn seg_bounds(count: usize, n: usize, r: usize) -> (usize, usize) {
+    (r * count / n, (r + 1) * count / n)
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+fn prev_pow2(n: usize) -> usize {
+    if n.is_power_of_two() {
+        n
+    } else {
+        n.next_power_of_two() / 2
+    }
+}
+
+/// Whether `op` commutes — builtins all do; user ops report their
+/// `MPI_Op_create` flag. The selector refuses segment-reordering
+/// algorithms for non-commutative ops.
+fn op_commutes(ctx: &RankCtx, op: OpId) -> bool {
+    let t = ctx.tables.borrow();
+    match t.ops.get(op.0).map(|o| &o.kind) {
+        Some(crate::core::op::OpKind::User { commute, .. }) => *commute,
+        _ => true,
+    }
+}
+
+// --- non-power-of-two fold (recursive doubling / Rabenseifner) -------------
+//
+// The first 2r ranks (r = n − prev_pow2(n)) pair up even→odd on phase 0 so
+// a power-of-two subset runs the exchange rounds; the folded-out evens
+// receive the finished vector on `post_phase`. Virtual-rank mapping is
+// MPICH's: odd pair members continue as vrank me/2, the unpaired tail as
+// me − r.
+
+fn fold_in(s: &mut Schedule, me: usize, r: usize, op: OpId, count: usize, dt: DtId) -> Option<usize> {
+    if me < 2 * r {
+        if me % 2 == 0 {
+            s.push(Step::SendAccum { to: me + 1, phase: 0, range: None });
+            None
+        } else {
+            s.push(Step::Recv {
+                from: me - 1,
+                phase: 0,
+                action: RecvAction::Combine { op, count, dt },
+            });
+            Some(me / 2)
+        }
+    } else {
+        Some(me - r)
+    }
+}
+
+fn fold_out(s: &mut Schedule, me: usize, r: usize, post_phase: i32) {
+    if me < 2 * r {
+        if me % 2 == 0 {
+            s.push(Step::Recv { from: me + 1, phase: post_phase, action: RecvAction::Store });
+        } else {
+            s.push(Step::SendAccum { to: me - 1, phase: post_phase, range: None });
+        }
+    }
+}
+
+/// Real comm rank of virtual rank `v` under the fold mapping.
+fn real_of(v: usize, r: usize) -> usize {
+    if v < r {
+        2 * v + 1
+    } else {
+        v + r
+    }
+}
+
+/// Element range virtual rank `v` holds after recursive halving from mask
+/// `p/2` down to `down_to` (inclusive): the lower-bit side keeps the
+/// lower half at every level. `down_to = 1` gives the final
+/// reduce-scatter range; larger masks give the intermediate ranges the
+/// allgather phase re-merges.
+fn halved_range(v: usize, p: usize, count: usize, down_to: usize) -> (usize, usize) {
+    let (mut lo, mut hi) = (0usize, count);
+    let mut mask = p / 2;
+    while mask >= down_to {
+        let mid = lo + (hi - lo) / 2;
+        if v & mask == 0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        mask >>= 1;
+    }
+    (lo, hi)
+}
+
 // ---------------------------------------------------------------------------
 // Schedule builders
 // ---------------------------------------------------------------------------
@@ -801,6 +946,263 @@ fn build_allreduce(
     Ok(s)
 }
 
+/// Ring allreduce: a reduce-scatter ring (phase 0, n−1 rounds) then an
+/// allgather ring (phase 1, n−1 rounds). Bandwidth-optimal — every rank
+/// moves ~2·(n−1)/n of the vector no matter how large n gets — at the
+/// cost of 2(n−1) serialized rounds, so the selector reserves it for
+/// large messages.
+fn build_allreduce_ring(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+    let esize = packed_len(ctx, 1, dt)?;
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
+    if n > 1 {
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        // Reduce-scatter: round k sends segment (me−k) mod n right and
+        // folds segment (me−k−1) mod n from the left; after n−1 rounds
+        // segment (me+1) mod n is fully reduced here.
+        for k in 0..n - 1 {
+            let send_seg = (me + n - k) % n;
+            let recv_seg = (me + n - k - 1) % n;
+            let (slo, shi) = seg_bounds(count, n, send_seg);
+            let (rlo, rhi) = seg_bounds(count, n, recv_seg);
+            s.push(Step::SendAccum {
+                to: right,
+                phase: 0,
+                range: Some((slo * esize, (shi - slo) * esize)),
+            });
+            s.push(Step::Recv {
+                from: left,
+                phase: 0,
+                action: RecvAction::CombineAt {
+                    op,
+                    offset: rlo * esize,
+                    len: (rhi - rlo) * esize,
+                    count: rhi - rlo,
+                    dt,
+                },
+            });
+        }
+        // Allgather: circulate the completed segments once around.
+        for k in 0..n - 1 {
+            let send_seg = (me + n + 1 - k) % n;
+            let recv_seg = (me + n - k) % n;
+            let (slo, shi) = seg_bounds(count, n, send_seg);
+            let (rlo, rhi) = seg_bounds(count, n, recv_seg);
+            s.push(Step::SendAccum {
+                to: right,
+                phase: 1,
+                range: Some((slo * esize, (shi - slo) * esize)),
+            });
+            s.push(Step::Recv {
+                from: left,
+                phase: 1,
+                action: RecvAction::StoreAt { offset: rlo * esize, len: (rhi - rlo) * esize },
+            });
+        }
+    }
+    s.push(Step::Unpack {
+        buf: recvbuf as usize,
+        displ: 0,
+        count,
+        dt,
+        range: None,
+        from_aux: false,
+    });
+    Ok(s)
+}
+
+/// Recursive-doubling allreduce: ⌈log2 n⌉ whole-vector exchange rounds
+/// among a power-of-two subset (fold for the rest). Fewest rounds of any
+/// variant — the latency algorithm for small messages.
+fn build_allreduce_rd(
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
+    if n > 1 {
+        let p = prev_pow2(n);
+        let r = n - p;
+        let rounds = p.trailing_zeros() as i32;
+        if let Some(v) = fold_in(&mut s, me, r, op, count, dt) {
+            let mut mask = 1usize;
+            let mut phase = 1i32;
+            while mask < p {
+                let partner = real_of(v ^ mask, r);
+                s.push(Step::SendAccum { to: partner, phase, range: None });
+                s.push(Step::Recv {
+                    from: partner,
+                    phase,
+                    action: RecvAction::Combine { op, count, dt },
+                });
+                mask <<= 1;
+                phase += 1;
+            }
+        }
+        fold_out(&mut s, me, r, 1 + rounds);
+    }
+    s.push(Step::Unpack {
+        buf: recvbuf as usize,
+        displ: 0,
+        count,
+        dt,
+        range: None,
+        from_aux: false,
+    });
+    Ok(s)
+}
+
+/// Rabenseifner allreduce: recursive-halving reduce-scatter, then a
+/// recursive-doubling allgather re-merging the halves (fold for
+/// non-power-of-two). Log rounds like recursive doubling, but each round
+/// moves half the remaining data — the mid-size algorithm.
+fn build_allreduce_rabenseifner(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let contrib = if in_place(sendbuf) { recvbuf as *const u8 } else { sendbuf };
+    let esize = packed_len(ctx, 1, dt)?;
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::PackAccum { buf: contrib as usize, displ: 0, count, dt });
+    if n > 1 {
+        let p = prev_pow2(n);
+        let r = n - p;
+        let rounds = p.trailing_zeros() as i32;
+        if let Some(v) = fold_in(&mut s, me, r, op, count, dt) {
+            // Reduce-scatter by recursive halving, masks p/2 → 1.
+            let mut mask = p / 2;
+            let mut phase = 1i32;
+            while mask >= 1 {
+                let vp = v ^ mask;
+                let partner = real_of(vp, r);
+                let (klo, khi) = halved_range(v, p, count, mask);
+                let (glo, ghi) = halved_range(vp, p, count, mask);
+                s.push(Step::SendAccum {
+                    to: partner,
+                    phase,
+                    range: Some((glo * esize, (ghi - glo) * esize)),
+                });
+                s.push(Step::Recv {
+                    from: partner,
+                    phase,
+                    action: RecvAction::CombineAt {
+                        op,
+                        offset: klo * esize,
+                        len: (khi - klo) * esize,
+                        count: khi - klo,
+                        dt,
+                    },
+                });
+                mask >>= 1;
+                phase += 1;
+            }
+            // Allgather by recursive doubling, masks 1 → p/2; each step
+            // swaps the sibling interval at that recursion level.
+            let mut mask = 1usize;
+            while mask < p {
+                let vp = v ^ mask;
+                let partner = real_of(vp, r);
+                let (mlo, mhi) = halved_range(v, p, count, mask);
+                let (tlo, thi) = halved_range(vp, p, count, mask);
+                s.push(Step::SendAccum {
+                    to: partner,
+                    phase,
+                    range: Some((mlo * esize, (mhi - mlo) * esize)),
+                });
+                s.push(Step::Recv {
+                    from: partner,
+                    phase,
+                    action: RecvAction::StoreAt {
+                        offset: tlo * esize,
+                        len: (thi - tlo) * esize,
+                    },
+                });
+                mask <<= 1;
+                phase += 1;
+            }
+        }
+        fold_out(&mut s, me, r, 1 + 2 * rounds);
+    }
+    s.push(Step::Unpack {
+        buf: recvbuf as usize,
+        displ: 0,
+        count,
+        dt,
+        range: None,
+        from_aux: false,
+    });
+    Ok(s)
+}
+
+/// Selector-routed allreduce build: consult the forced override / tuning
+/// table, build the variant, stamp its algorithm id (trace high byte)
+/// and count the selection (pvar registry 20+).
+fn build_allreduce_any(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    recvbuf: *mut u8,
+    count: usize,
+    dt: DtId,
+    op: OpId,
+    comm: CommId,
+) -> RC<Schedule> {
+    use crate::core::obs as ob;
+    let n = comm_size(comm)? as usize;
+    let bytes = packed_len(ctx, count, dt)?;
+    let force = ctx.state.borrow().coll_algo.allreduce;
+    let algo = super::pick_allreduce(force, bytes, n, op_commutes(ctx, op));
+    let (mut s, id) = match algo {
+        super::ALLREDUCE_RING => (
+            build_allreduce_ring(ctx, sendbuf, recvbuf, count, dt, op, comm)?,
+            ob::COLL_ALGO_RING,
+        ),
+        super::ALLREDUCE_RECURSIVE_DOUBLING => (
+            build_allreduce_rd(sendbuf, recvbuf, count, dt, op, comm)?,
+            ob::COLL_ALGO_RECURSIVE_DOUBLING,
+        ),
+        super::ALLREDUCE_RABENSEIFNER => (
+            build_allreduce_rabenseifner(ctx, sendbuf, recvbuf, count, dt, op, comm)?,
+            ob::COLL_ALGO_RABENSEIFNER,
+        ),
+        _ => (
+            build_allreduce(sendbuf, recvbuf, count, dt, op, comm)?,
+            ob::COLL_ALGO_BINOMIAL,
+        ),
+    };
+    s.algo = id;
+    ctx.obs.note_coll_algo(id);
+    Ok(s)
+}
+
 /// `MPI_Iallreduce`.
 pub fn iallreduce(
     sendbuf: *const u8,
@@ -810,11 +1212,15 @@ pub fn iallreduce(
     op: OpId,
     comm: CommId,
 ) -> RC<ReqId> {
-    with_ctx(|ctx| submit(ctx, build_allreduce(sendbuf, recvbuf, count, dt, op, comm)?))
+    with_ctx(|ctx| {
+        let s = build_allreduce_any(ctx, sendbuf, recvbuf, count, dt, op, comm)?;
+        submit(ctx, s)
+    })
 }
 
 /// `MPI_Allreduce_init` (MPI-4): contributions are re-packed from the
-/// send buffer at every start. Collective call.
+/// send buffer at every start. Collective call. The algorithm is chosen
+/// once, at init time, and reused across starts.
 pub fn allreduce_init(
     sendbuf: *const u8,
     recvbuf: *mut u8,
@@ -823,7 +1229,10 @@ pub fn allreduce_init(
     op: OpId,
     comm: CommId,
 ) -> RC<ReqId> {
-    with_ctx(|ctx| submit_init(ctx, build_allreduce(sendbuf, recvbuf, count, dt, op, comm)?))
+    with_ctx(|ctx| {
+        let s = build_allreduce_any(ctx, sendbuf, recvbuf, count, dt, op, comm)?;
+        submit_init(ctx, s)
+    })
 }
 
 /// Linear rooted gather (displacements in recvtype extents, MPI-style).
@@ -1151,6 +1560,124 @@ fn build_allgatherv(
     Ok(s)
 }
 
+/// Ring allgather(v): every rank's block travels once around the ring —
+/// n−1 rounds on one phase, each rank forwarding the newest block it
+/// holds. Total bytes moved per rank ≈ the full gathered size no matter
+/// the root topology, with no rank-0 hotspot; the selector picks it over
+/// gather+bcast for large totals.
+#[allow(clippy::too_many_arguments)]
+fn build_allgatherv_ring(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    displs: &[isize],
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    if recvcounts.len() != n || displs.len() != n {
+        return Err(err!(MPI_ERR_COUNT));
+    }
+    let rext = extent_of(ctx, recvtype)?;
+    let per = packed_len(ctx, 1, recvtype)?;
+    let mut offs = Vec::with_capacity(n);
+    let mut total = 0usize;
+    for &c in recvcounts {
+        offs.push(total);
+        total += per * c;
+    }
+    let (own_buf, own_displ, own_count, own_dt) = if in_place(sendbuf) {
+        (recvbuf as usize, rext * displs[me], recvcounts[me], recvtype)
+    } else {
+        (sendbuf as usize, 0, sendcount, sendtype)
+    };
+    let mut s = Schedule::new(cc);
+    s.prep.push(Prep::ClearAccum { len: total });
+    s.prep.push(Prep::PackAccumAt {
+        off: offs[me],
+        buf: own_buf,
+        displ: own_displ,
+        count: own_count,
+        dt: own_dt,
+    });
+    if n > 1 {
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        // Round k forwards block (me−k) mod n right and stores block
+        // (me−k−1) mod n from the left.
+        for k in 0..n - 1 {
+            let send_blk = (me + n - k) % n;
+            let recv_blk = (me + n - 1 - k) % n;
+            s.push(Step::SendAccum {
+                to: right,
+                phase: 0,
+                range: Some((offs[send_blk], per * recvcounts[send_blk])),
+            });
+            s.push(Step::Recv {
+                from: left,
+                phase: 0,
+                action: RecvAction::StoreAt {
+                    offset: offs[recv_blk],
+                    len: per * recvcounts[recv_blk],
+                },
+            });
+        }
+    }
+    for r in 0..n {
+        s.push(Step::Unpack {
+            buf: recvbuf as usize,
+            displ: rext * displs[r],
+            count: recvcounts[r],
+            dt: recvtype,
+            range: Some((offs[r], per * recvcounts[r])),
+            from_aux: false,
+        });
+    }
+    Ok(s)
+}
+
+/// Selector-routed allgatherv build (`iallgather` lands here too via the
+/// uniform layout).
+#[allow(clippy::too_many_arguments)]
+fn build_allgatherv_any(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcounts: &[usize],
+    displs: &[isize],
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<Schedule> {
+    use crate::core::obs as ob;
+    let n = comm_size(comm)? as usize;
+    let per = packed_len(ctx, 1, recvtype)?;
+    let total: usize = recvcounts.iter().map(|&c| per * c).sum();
+    let force = ctx.state.borrow().coll_algo.allgather;
+    let algo = super::pick_allgather(force, total, n);
+    let (mut s, id) = match algo {
+        super::ALLGATHER_RING => (
+            build_allgatherv_ring(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcounts,
+                displs, recvtype, comm)?,
+            ob::COLL_ALGO_RING,
+        ),
+        _ => (
+            build_allgatherv(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs,
+                recvtype, comm)?,
+            ob::COLL_ALGO_BINOMIAL,
+        ),
+    };
+    s.algo = id;
+    ctx.obs.note_coll_algo(id);
+    Ok(s)
+}
+
 /// `MPI_Iallgatherv`.
 #[allow(clippy::too_many_arguments)]
 pub fn iallgatherv(
@@ -1164,8 +1691,8 @@ pub fn iallgatherv(
     comm: CommId,
 ) -> RC<ReqId> {
     with_ctx(|ctx| {
-        let s = build_allgatherv(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcounts, displs,
-            recvtype, comm)?;
+        let s = build_allgatherv_any(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcounts,
+            displs, recvtype, comm)?;
         submit(ctx, s)
     })
 }
@@ -1303,6 +1830,117 @@ pub fn ialltoallv(
     ialltoallw(&args, comm)
 }
 
+/// Bruck alltoall (uniform blocks): rotate blocks locally so block `j`
+/// targets rank (me+j) mod n, run ⌈log2 n⌉ rounds where round `k` ships
+/// every block whose index has bit `k` set to the rank 2^k to the right
+/// (one envelope per round via the band table), then unrotate into the
+/// receive buffer. ⌈log2 n⌉ envelopes instead of pairwise's n−1 — the
+/// small-block / high-rank algorithm.
+#[allow(clippy::too_many_arguments)]
+fn build_alltoall_bruck(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<Schedule> {
+    let cc = coll_begin(comm)?;
+    let n = cc.size();
+    let me = cc.my_rank;
+    let (sbuf, scount, stype) = if in_place(sendbuf) {
+        (recvbuf as *const u8, recvcount, recvtype)
+    } else {
+        (sendbuf, sendcount, sendtype)
+    };
+    let blk = packed_len(ctx, scount, stype)?;
+    let sext = extent_of(ctx, stype)?;
+    let rext = extent_of(ctx, recvtype)?;
+    let mut s = Schedule::new(cc);
+    // Rotation: accum block j = my send block for rank (me+j) mod n. All
+    // packing happens at arm time, before any receive step can overwrite
+    // recvbuf — which is what makes MPI_IN_PLACE safe (same argument as
+    // the pairwise builder).
+    s.prep.push(Prep::ClearAccum { len: blk * n });
+    for j in 0..n {
+        let dst_rank = (me + j) % n;
+        s.prep.push(Prep::PackAccumAt {
+            off: j * blk,
+            buf: sbuf as usize,
+            displ: sext * (dst_rank * scount) as isize,
+            count: scount,
+            dt: stype,
+        });
+    }
+    let mut k = 1usize;
+    let mut phase = 0i32;
+    while k < n {
+        let band = s.bands.len();
+        s.bands.push((0..n).filter(|j| j & k != 0).map(|j| (j * blk, blk)).collect());
+        // Program order guarantees the send packs these blocks before
+        // the receive overwrites the same indices.
+        s.push(Step::SendAccumBands { to: (me + k) % n, phase, band });
+        s.push(Step::Recv {
+            from: (me + n - k) % n,
+            phase,
+            action: RecvAction::ScatterBands { band },
+        });
+        k <<= 1;
+        phase += 1;
+    }
+    // Unrotation: the block from source rank i sits at index (me−i) mod n.
+    for i in 0..n {
+        let j = (me + n - i) % n;
+        s.push(Step::Unpack {
+            buf: recvbuf as usize,
+            displ: rext * (i * recvcount) as isize,
+            count: recvcount,
+            dt: recvtype,
+            range: Some((j * blk, blk)),
+            from_aux: false,
+        });
+    }
+    Ok(s)
+}
+
+/// Selector-routed uniform alltoall build (Bruck vs pairwise; the v/w
+/// entry points always take the pairwise builder, whose layouts Bruck's
+/// rotation cannot express).
+#[allow(clippy::too_many_arguments)]
+fn build_alltoall_any(
+    ctx: &RankCtx,
+    sendbuf: *const u8,
+    sendcount: usize,
+    sendtype: DtId,
+    recvbuf: *mut u8,
+    recvcount: usize,
+    recvtype: DtId,
+    comm: CommId,
+) -> RC<Schedule> {
+    use crate::core::obs as ob;
+    let n = comm_size(comm)? as usize;
+    let blk = packed_len(ctx, recvcount, recvtype)?;
+    let force = ctx.state.borrow().coll_algo.alltoall;
+    let algo = super::pick_alltoall(force, blk, n);
+    if algo == super::ALLTOALL_BRUCK {
+        let mut s = build_alltoall_bruck(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcount,
+            recvtype, comm)?;
+        s.algo = ob::COLL_ALGO_BRUCK;
+        ctx.obs.note_coll_algo(ob::COLL_ALGO_BRUCK);
+        return Ok(s);
+    }
+    let (scounts, sdispls) = uniform_layout(sendcount, n);
+    let (rcounts, rdispls) = uniform_layout(recvcount, n);
+    let args = alltoallv_args(sendbuf, &scounts, &sdispls, sendtype, recvbuf, &rcounts, &rdispls,
+        recvtype, n)?;
+    let mut s = build_alltoallw(&args, comm)?;
+    s.algo = ob::COLL_ALGO_PAIRWISE;
+    ctx.obs.note_coll_algo(ob::COLL_ALGO_PAIRWISE);
+    Ok(s)
+}
+
 /// `MPI_Ialltoall`.
 #[allow(clippy::too_many_arguments)]
 pub fn ialltoall(
@@ -1314,14 +1952,15 @@ pub fn ialltoall(
     recvtype: DtId,
     comm: CommId,
 ) -> RC<ReqId> {
-    let n = comm_size(comm)? as usize;
-    let (scounts, sdispls) = uniform_layout(sendcount, n);
-    let (rcounts, rdispls) = uniform_layout(recvcount, n);
-    ialltoallv(sendbuf, &scounts, &sdispls, sendtype, recvbuf, &rcounts, &rdispls, recvtype, comm)
+    with_ctx(|ctx| {
+        let s = build_alltoall_any(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcount,
+            recvtype, comm)?;
+        submit(ctx, s)
+    })
 }
 
 /// `MPI_Alltoall_init` (MPI-4): every send block is re-packed at every
-/// start. Collective call.
+/// start. Collective call. The algorithm is chosen once, at init time.
 #[allow(clippy::too_many_arguments)]
 pub fn alltoall_init(
     sendbuf: *const u8,
@@ -1332,12 +1971,11 @@ pub fn alltoall_init(
     recvtype: DtId,
     comm: CommId,
 ) -> RC<ReqId> {
-    let n = comm_size(comm)? as usize;
-    let (scounts, sdispls) = uniform_layout(sendcount, n);
-    let (rcounts, rdispls) = uniform_layout(recvcount, n);
-    let args = alltoallv_args(sendbuf, &scounts, &sdispls, sendtype, recvbuf, &rcounts, &rdispls,
-        recvtype, n)?;
-    with_ctx(|ctx| submit_init(ctx, build_alltoallw(&args, comm)?))
+    with_ctx(|ctx| {
+        let s = build_alltoall_any(ctx, sendbuf, sendcount, sendtype, recvbuf, recvcount,
+            recvtype, comm)?;
+        submit_init(ctx, s)
+    })
 }
 
 /// Inclusive scan, linear chain.

@@ -1146,6 +1146,20 @@ pub fn comm_split(comm: CommId, color: i32, key: i32) -> RC<Option<CommId>> {
     decode_split_result(&my_blob)
 }
 
+/// `MPI_Comm_split_type`. `MPI_COMM_TYPE_SHARED` groups ranks that
+/// share memory — our ranks are threads of one process, so *every*
+/// member shares memory and the split is total (color 0, key-ordered).
+/// `MPI_UNDEFINED` ranks still participate in the collective exchange
+/// but get no communicator. Any other split type is `MPI_ERR_ARG`.
+pub fn comm_split_type(comm: CommId, split_type: i32, key: i32) -> RC<Option<CommId>> {
+    let color = match split_type {
+        crate::abi::constants::MPI_COMM_TYPE_SHARED => 0,
+        MPI_UNDEFINED => MPI_UNDEFINED,
+        _ => return Err(err!(MPI_ERR_ARG)),
+    };
+    comm_split(comm, color, key)
+}
+
 fn split_assignments(colorkeys: &[i32], parent_members: &[usize]) -> RC<Vec<Vec<u8>>> {
     let size = parent_members.len();
     let mut colors: Vec<i32> = Vec::new();

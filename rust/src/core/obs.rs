@@ -98,6 +98,27 @@ impl WorldObs {
 // Per-rank counters + MPI_T state + trace ring
 // ---------------------------------------------------------------------------
 
+/// Collective-algorithm ids, recorded per schedule by the selection
+/// layer ([`crate::core::collectives`]) and surfaced three ways: the
+/// `coll_sel_*` pvars count selections per algorithm, the trace ring's
+/// [`TraceKind::CollStep`] events carry the id in the high byte of `b`,
+/// and `0` everywhere means "no algorithm stamped" (pre-selection
+/// schedules: bcast, reduce, barrier, …).
+pub const COLL_ALGO_BINOMIAL: u8 = 1;
+/// Ring reduce-scatter + ring allgather allreduce (also ring allgather).
+pub const COLL_ALGO_RING: u8 = 2;
+/// Recursive-doubling allreduce.
+pub const COLL_ALGO_RECURSIVE_DOUBLING: u8 = 3;
+/// Rabenseifner allreduce (recursive-halving reduce-scatter + doubling
+/// allgather).
+pub const COLL_ALGO_RABENSEIFNER: u8 = 4;
+/// Bruck alltoall (log-round block exchange).
+pub const COLL_ALGO_BRUCK: u8 = 5;
+/// Pairwise/linear alltoall (the alltoallw engine).
+pub const COLL_ALGO_PAIRWISE: u8 = 6;
+/// Number of distinct algorithm ids (the `coll_sel` array length).
+pub const NUM_COLL_ALGOS: usize = 6;
+
 /// Per-rank observability state, one per [`RankCtx`]. Counters are
 /// plain [`Cell`]s — each rank is single-threaded, so no atomics —
 /// bumped by the engine's pt2pt paths and read through the pvar
@@ -124,6 +145,10 @@ pub struct ObsRank {
     /// (failed sends, receives, and rendezvous streams against a dead
     /// peer — the ULFM fault-propagation witness).
     pub ops_failed_proc: Cell<u64>,
+    /// Collective-schedule selections per algorithm id (index
+    /// `algo - 1`; see [`COLL_ALGO_BINOMIAL`] and friends) — how often
+    /// the tuning table (or a forced override) picked each variant.
+    pub coll_sel: [Cell<u64>; NUM_COLL_ALGOS],
     /// `MPI_T_init_thread` refcount: every MPI_T call below errors
     /// `MPI_T_ERR_NOT_INITIALIZED` while this is zero.
     t_init_count: Cell<u32>,
@@ -149,6 +174,7 @@ impl ObsRank {
             rndv_bytes: Cell::new(0),
             pending_send_hwm: Cell::new(0),
             ops_failed_proc: Cell::new(0),
+            coll_sel: Default::default(),
             t_init_count: Cell::new(0),
             t_state: RefCell::new(TState::default()),
             trace_on: Cell::new(trace_on),
@@ -167,6 +193,16 @@ impl ObsRank {
     /// Record one operation completed with `MPI_ERR_PROC_FAILED`.
     pub(crate) fn note_op_failed_proc(&self) {
         self.ops_failed_proc.set(self.ops_failed_proc.get() + 1);
+    }
+
+    /// Record one collective-algorithm selection (id `0` = unstamped
+    /// schedule, not counted).
+    pub(crate) fn note_coll_algo(&self, algo: u8) {
+        if algo == 0 || algo as usize > NUM_COLL_ALGOS {
+            return;
+        }
+        let c = &self.coll_sel[algo as usize - 1];
+        c.set(c.get() + 1);
     }
 }
 
@@ -314,6 +350,38 @@ pub const PVARS: &[PvarDesc] = &[
         class: k::MPI_T_PVAR_CLASS_COUNTER,
         verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
     },
+    // Indices 20..=25: collective-algorithm selection counts, one per
+    // id in [`COLL_ALGO_BINOMIAL`]..[`COLL_ALGO_PAIRWISE`] order.
+    PvarDesc {
+        name: "coll_sel_binomial",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "coll_sel_ring",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "coll_sel_recursive_doubling",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "coll_sel_rabenseifner",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "coll_sel_bruck",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
+    PvarDesc {
+        name: "coll_sel_pairwise",
+        class: k::MPI_T_PVAR_CLASS_COUNTER,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_DETAIL,
+    },
 ];
 
 /// Descriptor of one control variable.
@@ -334,6 +402,12 @@ pub const CVAR_RNDV_THRESHOLD: usize = 0;
 pub const CVAR_FLAT_MATCH: usize = 1;
 /// Cvar index of `trace_enabled`.
 pub const CVAR_TRACE_ENABLED: usize = 2;
+/// Cvar index of `coll_allreduce_algo`.
+pub const CVAR_COLL_ALLREDUCE_ALGO: usize = 3;
+/// Cvar index of `coll_allgather_algo`.
+pub const CVAR_COLL_ALLGATHER_ALGO: usize = 4;
+/// Cvar index of `coll_alltoall_algo`.
+pub const CVAR_COLL_ALLTOALL_ALGO: usize = 5;
 
 /// The cvar registry, fixed index order like [`PVARS`]. Writing
 /// `rndv_threshold` retargets **this rank's** live protocol switch (and
@@ -354,6 +428,26 @@ pub const CVARS: &[CvarDesc] = &[
         name: "trace_enabled",
         scope: k::MPI_T_SCOPE_READONLY,
         verbosity: k::MPI_T_VERBOSITY_USER_BASIC,
+    },
+    // Indices 3..=5: forced collective-algorithm choices, one per
+    // operation. Values are the force codes of
+    // [`crate::core::collectives`] (`0` = auto/tuning table). Writes
+    // retarget **this rank's** live selector and the world default for
+    // ranks bound later (the `rndv_threshold` pattern).
+    CvarDesc {
+        name: "coll_allreduce_algo",
+        scope: k::MPI_T_SCOPE_LOCAL,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_BASIC,
+    },
+    CvarDesc {
+        name: "coll_allgather_algo",
+        scope: k::MPI_T_SCOPE_LOCAL,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_BASIC,
+    },
+    CvarDesc {
+        name: "coll_alltoall_algo",
+        scope: k::MPI_T_SCOPE_LOCAL,
+        verbosity: k::MPI_T_VERBOSITY_TUNER_BASIC,
     },
 ];
 
@@ -381,6 +475,7 @@ fn pvar_value(ctx: &RankCtx, i: usize) -> u64 {
         17 => ctx.world.ranks_failed(),
         18 => ctx.obs.ops_failed_proc.get(),
         19 => ctx.world.obs.comms_revoked.load(Ordering::Relaxed),
+        i @ 20..=25 => o.coll_sel[i - 20].get(),
         _ => 0,
     }
 }
@@ -483,6 +578,9 @@ pub fn t_cvar_read(handle: i32) -> RC<i64> {
             CVAR_RNDV_THRESHOLD => ctx.state.borrow().rndv_threshold as i64,
             CVAR_FLAT_MATCH => ctx.state.borrow().match_index.is_flat() as i64,
             CVAR_TRACE_ENABLED => ctx.obs.trace_on.get() as i64,
+            CVAR_COLL_ALLREDUCE_ALGO => ctx.state.borrow().coll_algo.allreduce as i64,
+            CVAR_COLL_ALLGATHER_ALGO => ctx.state.borrow().coll_algo.allgather as i64,
+            CVAR_COLL_ALLTOALL_ALGO => ctx.state.borrow().coll_algo.alltoall as i64,
             _ => 0,
         })
     })
@@ -507,6 +605,19 @@ pub fn t_cvar_write(handle: i32, value: i64) -> RC<()> {
                 ctx.state.borrow_mut().rndv_threshold = value as usize;
             }
             CVAR_FLAT_MATCH => ctx.world.set_flat_match(value != 0),
+            CVAR_COLL_ALLREDUCE_ALGO | CVAR_COLL_ALLGATHER_ALGO | CVAR_COLL_ALLTOALL_ALGO => {
+                if value > u8::MAX as i64 {
+                    return Err(err!(MPI_ERR_ARG));
+                }
+                let mut force = ctx.state.borrow().coll_algo;
+                match i {
+                    CVAR_COLL_ALLREDUCE_ALGO => force.allreduce = value as u8,
+                    CVAR_COLL_ALLGATHER_ALGO => force.allgather = value as u8,
+                    _ => force.alltoall = value as u8,
+                }
+                ctx.world.set_coll_algo(force);
+                ctx.state.borrow_mut().coll_algo = force;
+            }
             _ => {}
         }
         Ok(())
@@ -641,7 +752,9 @@ pub enum TraceKind {
     /// A request completed and was retired. `a` = request id, `b` = 0.
     Complete,
     /// One collective-schedule step executed. `a` = context plane,
-    /// `b` = program counter of the executed step.
+    /// `b` = algorithm id ([`COLL_ALGO_BINOMIAL`] etc., `0` for
+    /// unstamped schedules) in the high byte and the program counter of
+    /// the executed step in the low 24 bits.
     CollStep,
     /// RMA epoch transition. `a` = window id, `b` = 0 fence / 1 lock /
     /// 2 unlock.
@@ -859,12 +972,22 @@ mod tests {
                 "ranks_failed",
                 "ops_failed_proc",
                 "comms_revoked",
+                "coll_sel_binomial",
+                "coll_sel_ring",
+                "coll_sel_recursive_doubling",
+                "coll_sel_rabenseifner",
+                "coll_sel_bruck",
+                "coll_sel_pairwise",
             ]
         );
         assert_eq!(CVARS[CVAR_RNDV_THRESHOLD].name, "rndv_threshold");
         assert_eq!(CVARS[CVAR_FLAT_MATCH].name, "flat_match");
         assert_eq!(CVARS[CVAR_TRACE_ENABLED].name, "trace_enabled");
         assert_eq!(CVARS[CVAR_TRACE_ENABLED].scope, k::MPI_T_SCOPE_READONLY);
+        assert_eq!(CVARS[CVAR_COLL_ALLREDUCE_ALGO].name, "coll_allreduce_algo");
+        assert_eq!(CVARS[CVAR_COLL_ALLGATHER_ALGO].name, "coll_allgather_algo");
+        assert_eq!(CVARS[CVAR_COLL_ALLTOALL_ALGO].name, "coll_alltoall_algo");
+        assert_eq!(PVARS.len(), 20 + NUM_COLL_ALGOS);
         // Every class and verbosity is a legal constant.
         for p in PVARS {
             assert!((1..=3).contains(&p.class), "{}", p.name);

@@ -15,6 +15,8 @@ pub mod spsc;
 
 pub use envelope::{Envelope, MsgKind, Payload, INLINE_CAP};
 
+use std::sync::atomic::{AtomicI64, Ordering};
+
 use mutex_queue::MutexQueue;
 use spsc::Spsc;
 
@@ -57,6 +59,15 @@ pub enum Fabric {
     Spsc {
         /// Per-ordered-pair rings, indexed `[dst][src]`.
         rings: Vec<Vec<Spsc<Envelope>>>,
+        /// Per-destination doorbell: an approximate count of envelopes
+        /// inbound at `dst` across all of its rings. Senders increment
+        /// after a successful push; the receiver decrements by what it
+        /// drained. Makes [`Fabric::inbound_empty`] O(1) instead of an
+        /// O(ranks) ring scan — the scan made every idle progress tick
+        /// O(ranks²) job-wide, which dominates at 64–512 thread-ranks.
+        /// May transiently read stale (a push's increment lands a beat
+        /// later), never permanently: a spin loop re-checks next tick.
+        doorbell: Vec<AtomicI64>,
         /// World size.
         size: usize,
     },
@@ -77,6 +88,7 @@ impl Fabric {
                 rings: (0..size)
                     .map(|_| (0..size).map(|_| Spsc::new(SPSC_CAPACITY)).collect())
                     .collect(),
+                doorbell: (0..size).map(|_| AtomicI64::new(0)).collect(),
                 size,
             },
             TransportKind::Mutex => {
@@ -109,7 +121,15 @@ impl Fabric {
     #[inline]
     pub fn try_send(&self, dst: usize, env: Envelope) -> Result<(), Envelope> {
         match self {
-            Fabric::Spsc { rings, .. } => rings[dst][env.src as usize].push(env),
+            Fabric::Spsc { rings, doorbell, .. } => {
+                let src = env.src as usize;
+                rings[dst][src].push(env).map(|()| {
+                    // Ring the doorbell only after the push landed; the
+                    // counter needs atomicity, not ordering (staleness
+                    // is tolerated, see the field doc).
+                    doorbell[dst].fetch_add(1, Ordering::Relaxed);
+                })
+            }
             Fabric::Mutex { queues, .. } => {
                 queues[dst].push(env);
                 Ok(())
@@ -122,11 +142,19 @@ impl Fabric {
     #[inline]
     pub fn poll_into(&self, dst: usize, out: &mut Vec<Envelope>) {
         match self {
-            Fabric::Spsc { rings, .. } => {
+            Fabric::Spsc { rings, doorbell, .. } => {
+                let before = out.len();
                 for q in &rings[dst] {
                     while let Some(e) = q.pop() {
                         out.push(e);
                     }
+                }
+                let drained = (out.len() - before) as i64;
+                if drained > 0 {
+                    // May transiently drive the counter negative (we can
+                    // drain a push whose increment hasn't landed yet);
+                    // `inbound_empty` treats <= 0 as empty.
+                    doorbell[dst].fetch_sub(drained, Ordering::Relaxed);
                 }
             }
             Fabric::Mutex { queues, .. } => queues[dst].drain_into(out),
@@ -138,7 +166,7 @@ impl Fabric {
     #[inline]
     pub fn inbound_empty(&self, dst: usize) -> bool {
         match self {
-            Fabric::Spsc { rings, .. } => rings[dst].iter().all(|q| q.is_empty()),
+            Fabric::Spsc { doorbell, .. } => doorbell[dst].load(Ordering::Relaxed) <= 0,
             Fabric::Mutex { queues, .. } => queues[dst].is_empty(),
         }
     }
@@ -184,6 +212,29 @@ mod tests {
         f.poll_into(1, &mut out);
         assert_eq!(out[0].tag, 5);
         assert!(f.inbound_empty(1));
+    }
+
+    #[test]
+    fn spsc_doorbell_tracks_inbound() {
+        let f = Fabric::new(TransportKind::Spsc, 3);
+        assert!(f.inbound_empty(1));
+        f.try_send(1, env(0, 1)).unwrap();
+        f.try_send(1, env(2, 2)).unwrap();
+        assert!(!f.inbound_empty(1));
+        let mut out = Vec::new();
+        f.poll_into(1, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(f.inbound_empty(1));
+        // A rejected push must not ring the doorbell.
+        let g = Fabric::new(TransportKind::Spsc, 2);
+        for i in 0..SPSC_CAPACITY {
+            g.try_send(1, env(0, i as i32)).unwrap();
+        }
+        assert!(g.try_send(1, env(0, -1)).is_err());
+        let mut out = Vec::new();
+        g.poll_into(1, &mut out);
+        assert_eq!(out.len(), SPSC_CAPACITY);
+        assert!(g.inbound_empty(1));
     }
 
     #[test]

@@ -74,6 +74,12 @@ pub struct World {
     /// packed size exceeds this go RTS/CTS + chunk streaming instead of
     /// one eager envelope. Read once per rank at bind time.
     rndv_threshold: AtomicUsize,
+    /// Forced collective-algorithm choices (`MPI_ABI_COLL_ALGO` or
+    /// [`crate::launcher::JobSpec::with_coll_algo`]), packed as a
+    /// [`crate::core::collectives::CollAlgoForce`] word. `0` per
+    /// operation means "auto" (the tuning table decides). Read once per
+    /// rank at bind time.
+    coll_algo: AtomicU32,
     /// ULFM failure registry: `dead[r]` is set when world rank `r` dies
     /// (the kill injector's victim). Every blocked or matched operation
     /// against a dead peer must then *fail* with `MPI_ERR_PROC_FAILED`
@@ -143,6 +149,7 @@ impl World {
             psets,
             flat_match: AtomicBool::new(super::match_index::flat_match_env()),
             rndv_threshold: AtomicUsize::new(rndv_threshold_env()),
+            coll_algo: AtomicU32::new(super::collectives::coll_algo_env().pack()),
             dead: (0..size).map(|_| AtomicBool::new(false)).collect(),
             failed_count: AtomicUsize::new(0),
             revoked: Mutex::new(HashSet::new()),
@@ -237,6 +244,18 @@ impl World {
     /// The eager/rendezvous switch point (packed bytes) for this world.
     pub fn rndv_threshold(&self) -> usize {
         self.rndv_threshold.load(Ordering::SeqCst)
+    }
+
+    /// Override the forced collective-algorithm choices for ranks bound
+    /// after this call (tests and benches that force one algorithm
+    /// without racing on the process-global env var).
+    pub fn set_coll_algo(&self, force: super::collectives::CollAlgoForce) {
+        self.coll_algo.store(force.pack(), Ordering::SeqCst);
+    }
+
+    /// The forced collective-algorithm choices for this world.
+    pub fn coll_algo(&self) -> super::collectives::CollAlgoForce {
+        super::collectives::CollAlgoForce::unpack(self.coll_algo.load(Ordering::SeqCst))
     }
 
     /// Account `bytes` of rendezvous chunk payload entering the fabric
@@ -402,10 +421,18 @@ pub struct RankState {
     /// This rank's eager/rendezvous switch point, copied from the world
     /// at bind time (same pattern as the flat-match flag).
     pub rndv_threshold: usize,
+    /// This rank's forced collective-algorithm choices, copied from the
+    /// world at bind time; writable per rank through the
+    /// `coll_*_algo` cvars (see [`crate::core::obs`]).
+    pub coll_algo: super::collectives::CollAlgoForce,
 }
 
 impl RankState {
-    fn new(flat_match: bool, rndv_threshold: usize) -> RankState {
+    fn new(
+        flat_match: bool,
+        rndv_threshold: usize,
+        coll_algo: super::collectives::CollAlgoForce,
+    ) -> RankState {
         RankState {
             match_index: MatchIndex::with_mode(flat_match),
             pending_sends: FxHashMap::default(),
@@ -418,6 +445,7 @@ impl RankState {
             rndv_recvs: FxHashMap::default(),
             next_rndv_id: 1,
             rndv_threshold,
+            coll_algo,
         }
     }
 }
@@ -487,6 +515,7 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
     assert!(rank < world.size, "rank {rank} out of bounds");
     let flat_match = world.flat_match();
     let rndv_threshold = world.rndv_threshold();
+    let coll_algo = world.coll_algo();
     let trace_on = world.trace_enabled();
     let kill_at = match world.kill_spec() {
         Some((victim, ticks)) if victim == rank => Some(ticks),
@@ -496,7 +525,7 @@ pub fn bind_rank(world: Arc<World>, rank: usize) -> Rc<RankCtx> {
         world,
         rank,
         tables: RefCell::new(init_tables()),
-        state: RefCell::new(RankState::new(flat_match, rndv_threshold)),
+        state: RefCell::new(RankState::new(flat_match, rndv_threshold, coll_algo)),
         obs: ObsRank::new(trace_on),
         initialized: Cell::new(false),
         finalized: Cell::new(false),

@@ -137,6 +137,8 @@ pub const MPI_PROC_NULL: i32 = -1;
 pub const MPI_ROOT: i32 = -3;
 /// `MPI_UNDEFINED` in MPICH's numbering.
 pub const MPI_UNDEFINED: i32 = -32766;
+/// `MPI_COMM_TYPE_SHARED` in MPICH's numbering.
+pub const MPI_COMM_TYPE_SHARED: i32 = 1;
 
 /// `MPI_IN_PLACE` in MPICH is `(void *) -1`.
 pub const fn in_place_ptr() -> *const u8 {
@@ -324,6 +326,9 @@ impl Repr for MpichRepr {
     }
     fn c_undefined() -> i32 {
         MPI_UNDEFINED
+    }
+    fn c_comm_type_shared() -> i32 {
+        MPI_COMM_TYPE_SHARED
     }
     fn c_in_place() -> *const u8 {
         in_place_ptr()

@@ -196,6 +196,9 @@ pub const MPI_PROC_NULL: i32 = -2;
 pub const MPI_ROOT: i32 = -4;
 /// `MPI_UNDEFINED` in Open MPI's numbering.
 pub const MPI_UNDEFINED: i32 = -32766;
+/// `MPI_COMM_TYPE_SHARED` in Open MPI's numbering (0 — differs from
+/// MPICH's 1, the §5.4 special-int translation hazard again).
+pub const MPI_COMM_TYPE_SHARED: i32 = 0;
 
 /// Open MPI's `MPI_MODE_NOCHECK`: the assertion family uses a *dense*
 /// 1/2/4/8/16 numbering, deliberately different from MPICH's (and the
@@ -369,6 +372,9 @@ impl Repr for OmpiRepr {
     }
     fn c_undefined() -> i32 {
         MPI_UNDEFINED
+    }
+    fn c_comm_type_shared() -> i32 {
+        MPI_COMM_TYPE_SHARED
     }
     fn c_in_place() -> *const u8 {
         in_place_ptr()

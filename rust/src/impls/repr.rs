@@ -103,6 +103,11 @@ pub trait Repr: 'static {
     fn c_proc_null() -> i32;
     /// This ABI's `MPI_UNDEFINED`.
     fn c_undefined() -> i32;
+    /// This ABI's `MPI_COMM_TYPE_SHARED` (split-type values differ per
+    /// implementation too: MPICH 1, Open MPI 0).
+    fn c_comm_type_shared() -> i32 {
+        crate::abi::constants::MPI_COMM_TYPE_SHARED
+    }
     /// This ABI's `MPI_IN_PLACE` sentinel.
     fn c_in_place() -> *const u8;
 
@@ -876,6 +881,31 @@ impl<R: Repr> MpiAbi for Backed<R> {
             color
         };
         match engine::comm_split(id, color, key) {
+            Ok(Some(new)) => {
+                *out = R::comm_h(new);
+                0
+            }
+            Ok(None) => {
+                *out = R::c_comm_null();
+                0
+            }
+            Err(e) => fail::<R>(Some(id), e),
+        }
+    }
+
+    fn comm_split_type(c: R::Comm, split_type: i32, key: i32, out: &mut R::Comm) -> i32 {
+        let id = conv!(R, None, R::comm_id(c));
+        // Translate this ABI's split-type numbering to canonical before
+        // the engine sees it (checked before shared: OMPI's shared
+        // value is 0, which no ABI uses for undefined).
+        let split_type = if split_type == R::c_undefined() {
+            crate::abi::constants::MPI_UNDEFINED
+        } else if split_type == R::c_comm_type_shared() {
+            crate::abi::constants::MPI_COMM_TYPE_SHARED
+        } else {
+            split_type
+        };
+        match engine::comm_split_type(id, split_type, key) {
             Ok(Some(new)) => {
                 *out = R::comm_h(new);
                 0

@@ -34,6 +34,10 @@ pub struct JobSpec {
     /// (`"rank:ticks"`). The victim unwinds mid-run; survivors observe
     /// `MPI_ERR_PROC_FAILED` instead of the job aborting.
     pub kill: Option<(usize, u64)>,
+    /// Forced collective-algorithm choices (`0` per operation = the
+    /// tuning table decides); `None` defers to the `MPI_ABI_COLL_ALGO`
+    /// env var (see [`crate::core::collectives`]).
+    pub coll_algo: Option<crate::core::collectives::CollAlgoForce>,
 }
 
 impl JobSpec {
@@ -45,6 +49,7 @@ impl JobSpec {
             rndv_threshold: None,
             trace: None,
             kill: None,
+            coll_algo: None,
         }
     }
 
@@ -82,6 +87,13 @@ impl JobSpec {
         self.kill = Some((rank, after_n_ticks));
         self
     }
+
+    /// Force collective-algorithm choices for this job (tests and
+    /// benches comparing algorithms without racing on the env var).
+    pub fn with_coll_algo(mut self, force: crate::core::collectives::CollAlgoForce) -> JobSpec {
+        self.coll_algo = Some(force);
+        self
+    }
 }
 
 /// Parse the `MPI_ABI_KILL` env var (`"rank:ticks"`, e.g. `"1:50"`).
@@ -108,6 +120,9 @@ fn world_for(spec: JobSpec) -> Arc<World> {
     }
     if let Some((rank, ticks)) = spec.kill.or_else(kill_env) {
         world.set_kill(rank, ticks);
+    }
+    if let Some(force) = spec.coll_algo {
+        world.set_coll_algo(force);
     }
     world
 }

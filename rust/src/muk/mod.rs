@@ -358,6 +358,9 @@ impl<B: BackendSel> MpiAbi for Muk<B> {
     fn comm_split(c: AbiComm, color: i32, key: i32, out: &mut AbiComm) -> i32 {
         (B::vtable().comm_split)(c.0, color, key, &mut out.0)
     }
+    fn comm_split_type(c: AbiComm, split_type: i32, key: i32, out: &mut AbiComm) -> i32 {
+        (B::vtable().comm_split_type)(c.0, split_type, key, &mut out.0)
+    }
     fn comm_free(c: &mut AbiComm) -> i32 {
         (B::vtable().comm_free)(&mut c.0)
     }

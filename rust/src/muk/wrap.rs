@@ -141,6 +141,30 @@ pub fn comm_split<A: MukBackend>(comm: usize, color: i32, key: i32, out: &mut us
     ret_code::<A>(rc)
 }
 
+/// `WRAP_comm_split_type`: translate handles/constants at the boundary, call the backend, translate results back.
+pub fn comm_split_type<A: MukBackend>(
+    comm: usize,
+    split_type: i32,
+    key: i32,
+    out: &mut usize,
+) -> i32 {
+    // Undefined checked before shared: OMPI numbers shared as 0, which
+    // no ABI uses for undefined, so the order is unambiguous.
+    let split_type = if split_type == crate::abi::constants::MPI_UNDEFINED {
+        A::undefined()
+    } else if split_type == crate::abi::constants::MPI_COMM_TYPE_SHARED {
+        A::comm_type_shared()
+    } else {
+        split_type
+    };
+    let mut c = A::comm_null();
+    let rc = A::comm_split_type(comm_to_impl::<A>(comm), split_type, key, &mut c);
+    if rc == 0 {
+        *out = comm_to_muk::<A>(c);
+    }
+    ret_code::<A>(rc)
+}
+
 /// `WRAP_comm_free`: translate handles/constants at the boundary, call the backend, translate results back.
 pub fn comm_free<A: MukBackend>(comm: &mut usize) -> i32 {
     let mut c = comm_to_impl::<A>(*comm);
@@ -2114,6 +2138,7 @@ define_vtable! {
     comm_rank: fn(usize, &mut i32) -> i32,
     comm_dup: fn(usize, &mut usize) -> i32,
     comm_split: fn(usize, i32, i32, &mut usize) -> i32,
+    comm_split_type: fn(usize, i32, i32, &mut usize) -> i32,
     comm_free: fn(&mut usize) -> i32,
     comm_compare: fn(usize, usize, &mut i32) -> i32,
     comm_set_name: fn(usize, &str) -> i32,

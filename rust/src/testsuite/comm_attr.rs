@@ -11,6 +11,8 @@ pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
         ("comm.dup_isolated_traffic", dup_isolated_traffic::<A>),
         ("comm.split_even_odd", split_even_odd::<A>),
         ("comm.split_undefined", split_undefined::<A>),
+        ("comm.split_type_shared", split_type_shared::<A>),
+        ("comm.split_type_undefined", split_type_undefined::<A>),
         ("comm.compare", compare::<A>),
         ("comm.names", names::<A>),
         ("comm.groups", groups::<A>),
@@ -92,6 +94,56 @@ fn split_undefined<A: MpiAbi>(_r: usize) -> Result<(), String> {
         check!(sub != A::comm_null(), "others get a comm");
         check_rc!(A::comm_free(&mut sub), "free");
     }
+    Ok(())
+}
+
+fn split_type_shared<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    // Thread-ranks all share memory: COMM_TYPE_SHARED must reproduce
+    // the whole communicator, ordered by key.
+    let (n, me) = geom::<A>();
+    let mut sub = A::comm_null();
+    check_rc!(
+        A::comm_split_type(A::comm_world(), A::comm_type_shared(), n - 1 - me, &mut sub),
+        "split_type"
+    );
+    check!(sub != A::comm_null(), "shared split yields a comm");
+    let (mut sn, mut sr) = (0, 0);
+    check_rc!(A::comm_size(sub, &mut sn), "sub size");
+    check_rc!(A::comm_rank(sub, &mut sr), "sub rank");
+    check!(sn == n, "shared node comm spans all {n} thread-ranks, got {sn}");
+    check!(sr == n - 1 - me, "key reverses rank order: {sr}");
+    // Use it: an allreduce proves the new context planes work.
+    let dt = A::datatype(Dt::Int);
+    let send = [1i32];
+    let mut total = [0i32];
+    check_rc!(
+        A::allreduce(slice_ptr(&send), slice_ptr_mut(&mut total), 1, dt,
+            A::op(crate::api::OpName::Sum), sub),
+        "allreduce on node comm"
+    );
+    check!(total[0] == n, "node comm allreduce");
+    check_rc!(A::comm_free(&mut sub), "free");
+    Ok(())
+}
+
+fn split_type_undefined<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (_n, me) = geom::<A>();
+    let split_type = if me == 0 { A::undefined() } else { A::comm_type_shared() };
+    let mut sub = A::comm_null();
+    check_rc!(A::comm_split_type(A::comm_world(), split_type, 0, &mut sub), "split_type");
+    if me == 0 {
+        check!(sub == A::comm_null(), "UNDEFINED split type yields COMM_NULL");
+    } else {
+        check!(sub != A::comm_null(), "others get the node comm");
+        check_rc!(A::comm_free(&mut sub), "free");
+    }
+    // A bogus split type must error (not hang, not succeed). Rejected
+    // rank-locally before any exchange, so no resync trap.
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_return()), "errh");
+    let rc = A::comm_split_type(A::comm_world(), -12345, 0, &mut sub);
+    check!(rc != 0, "bogus split type errors");
+    check_rc!(A::comm_set_errhandler(A::comm_world(), A::errhandler_fatal()), "errh restore");
+    check_rc!(A::barrier(A::comm_world()), "resync");
     Ok(())
 }
 

@@ -18,13 +18,14 @@ use super::util::*;
 use super::TestFn;
 use crate::abi::constants as k;
 use crate::abi::errors as ec;
-use crate::api::{Dt, MpiAbi};
+use crate::api::{Dt, MpiAbi, OpName};
 
 pub fn tests<A: MpiAbi>() -> Vec<(&'static str, TestFn)> {
     vec![
         ("mpit.enumerate_registry", enumerate_registry::<A>),
         ("mpit.error_paths", error_paths::<A>),
         ("mpit.scripted_exchange_counts", scripted_exchange_counts::<A>),
+        ("mpit.coll_selection_counts", coll_selection_counts::<A>),
     ]
 }
 
@@ -38,7 +39,7 @@ fn world_geometry<A: MpiAbi>() -> (i32, i32) {
 /// The pvar registry in its fixed ABI order (mirrors
 /// `core::obs::PVARS`; `tests/spec_sync.rs` pins the same list against
 /// SPEC.md §11).
-const PVAR_NAMES: [&str; 20] = [
+const PVAR_NAMES: [&str; 26] = [
     "sends_posted",
     "recvs_posted",
     "eager_msgs",
@@ -59,6 +60,12 @@ const PVAR_NAMES: [&str; 20] = [
     "ranks_failed",
     "ops_failed_proc",
     "comms_revoked",
+    "coll_sel_binomial",
+    "coll_sel_ring",
+    "coll_sel_recursive_doubling",
+    "coll_sel_rabenseifner",
+    "coll_sel_bruck",
+    "coll_sel_pairwise",
 ];
 
 /// Pvar indices used by the scripted-exchange test.
@@ -69,9 +76,21 @@ const PV_EAGER_BYTES: i32 = 3;
 const PV_RNDV_MSGS: i32 = 4;
 const PV_RNDV_BYTES: i32 = 5;
 const PV_MATCH_ATTEMPTS: i32 = 10;
+/// Selection counters (one per `COLL_ALGO_*` id, ABI order 20..=25).
+/// `coll_sel_binomial` also counts the allgather gather+bcast baseline —
+/// both are the binomial-tree builder.
+const PV_COLL_SEL_BINOMIAL: i32 = 20;
+const PV_COLL_SEL_RING: i32 = 21;
+const PV_COLL_SEL_RECURSIVE_DOUBLING: i32 = 22;
+const PV_COLL_SEL_RABENSEIFNER: i32 = 23;
+const PV_COLL_SEL_BRUCK: i32 = 24;
+const PV_COLL_SEL_PAIRWISE: i32 = 25;
 
 const CV_RNDV_THRESHOLD: i32 = 0;
 const CV_TRACE_ENABLED: i32 = 2;
+const CV_COLL_ALLREDUCE_ALGO: i32 = 3;
+const CV_COLL_ALLGATHER_ALGO: i32 = 4;
+const CV_COLL_ALLTOALL_ALGO: i32 = 5;
 
 /// Exact registry shape: counts, names, classes, scopes, binds.
 fn enumerate_registry<A: MpiAbi>(_r: usize) -> Result<(), String> {
@@ -81,11 +100,14 @@ fn enumerate_registry<A: MpiAbi>(_r: usize) -> Result<(), String> {
 
     let mut num = 0;
     check_rc!(A::t_cvar_get_num(&mut num), "t_cvar_get_num");
-    check!(num == 3, "cvar count, got {num}");
+    check!(num == 6, "cvar count, got {num}");
     let expect_cvars = [
         ("rndv_threshold", k::MPI_T_SCOPE_LOCAL),
         ("flat_match", k::MPI_T_SCOPE_LOCAL),
         ("trace_enabled", k::MPI_T_SCOPE_READONLY),
+        ("coll_allreduce_algo", k::MPI_T_SCOPE_LOCAL),
+        ("coll_allgather_algo", k::MPI_T_SCOPE_LOCAL),
+        ("coll_alltoall_algo", k::MPI_T_SCOPE_LOCAL),
     ];
     for (i, (want_name, want_scope)) in expect_cvars.iter().enumerate() {
         let mut name = String::new();
@@ -187,6 +209,19 @@ fn error_paths<A: MpiAbi>(_r: usize) -> Result<(), String> {
         class(A::t_cvar_write(handle, -5)) == ec::MPI_ERR_ARG,
         "negative cvar write"
     );
+    // Force codes are a u8 surface: out-of-range writes are rejected
+    // without touching the live selector.
+    check_rc!(
+        A::t_cvar_handle_alloc(CV_COLL_ALLREDUCE_ALGO, &mut handle),
+        "alloc coll_allreduce_algo"
+    );
+    check!(
+        class(A::t_cvar_write(handle, 256)) == ec::MPI_ERR_ARG,
+        "force code above u8::MAX"
+    );
+    let mut force_now = -1i64;
+    check_rc!(A::t_cvar_read(handle, &mut force_now), "coll cvar read");
+    check!(force_now == 0, "rejected write must leave auto in place, got {force_now}");
 
     // After the last finalize the whole interface goes dormant again and
     // old handles/sessions are dead.
@@ -314,6 +349,155 @@ fn scripted_exchange_counts<A: MpiAbi>(_r: usize) -> Result<(), String> {
             // attempts), so only a floor is portable.
             check!(pvar_get::<A>(session, h_attempts)? >= 9, "match_attempts floor");
         }
+        Ok(())
+    })();
+
+    check_rc!(A::t_finalize(), "t_finalize");
+    result
+}
+
+/// The PR-10 selection layer, observed end to end through MPI_T: cvar
+/// writes retarget the live selector, and the per-algorithm selection
+/// counters (pvar indices 20..=25) tick **exactly once per schedule
+/// build** — forced and auto picks alike. Every rank runs the identical
+/// script (the collectives are collective; every rank builds its own
+/// schedule), so the deltas are exact on every rank, every config, and
+/// both transports. Counts are distinct per call so no schedule is
+/// reused from the cache (reuse deliberately does not re-count).
+fn coll_selection_counts<A: MpiAbi>(_r: usize) -> Result<(), String> {
+    let (n, _me) = world_geometry::<A>();
+    if n < 3 {
+        // n <= 2 pins allreduce to binomial before the selector runs.
+        return Ok(());
+    }
+    let world = A::comm_world();
+    let dt = A::datatype(Dt::Int);
+    let op = A::op(OpName::Sum);
+
+    let mut provided = 0;
+    check_rc!(A::t_init_thread(k::MPI_THREAD_SINGLE, &mut provided), "t_init_thread");
+    let mut session = -1;
+    check_rc!(A::t_pvar_session_create(&mut session), "session_create");
+
+    let result = (|| -> Result<(), String> {
+        let h_bin = pvar_arm::<A>(session, PV_COLL_SEL_BINOMIAL)?;
+        let h_ring = pvar_arm::<A>(session, PV_COLL_SEL_RING)?;
+        let h_rd = pvar_arm::<A>(session, PV_COLL_SEL_RECURSIVE_DOUBLING)?;
+        let h_rab = pvar_arm::<A>(session, PV_COLL_SEL_RABENSEIFNER)?;
+        let h_bruck = pvar_arm::<A>(session, PV_COLL_SEL_BRUCK)?;
+        let h_pair = pvar_arm::<A>(session, PV_COLL_SEL_PAIRWISE)?;
+
+        let (mut ch_ar, mut ch_ag, mut ch_aa) = (-1, -1, -1);
+        check_rc!(A::t_cvar_handle_alloc(CV_COLL_ALLREDUCE_ALGO, &mut ch_ar), "alloc ar");
+        check_rc!(A::t_cvar_handle_alloc(CV_COLL_ALLGATHER_ALGO, &mut ch_ag), "alloc ag");
+        check_rc!(A::t_cvar_handle_alloc(CV_COLL_ALLTOALL_ALGO, &mut ch_aa), "alloc aa");
+        for (name, h) in [("ar", ch_ar), ("ag", ch_ag), ("aa", ch_aa)] {
+            let mut v = -1i64;
+            check_rc!(A::t_cvar_read(h, &mut v), "initial read");
+            check!(v == 0, "{name} default must be auto, got {v}");
+        }
+
+        // Distinct counts per call: no two collectives share a cached
+        // schedule, so builds (and selection ticks) are 1:1 with calls.
+        let mut next_count = 4i32;
+        let mut allreduce = |force: i64| -> Result<(), String> {
+            check_rc!(A::t_cvar_write(ch_ar, force), "cvar write ar");
+            let count = next_count;
+            next_count += 1;
+            let send = vec![1i32; count as usize];
+            let mut recv = vec![0i32; count as usize];
+            check_rc!(
+                A::allreduce(
+                    slice_ptr(&send),
+                    slice_ptr_mut(&mut recv),
+                    count,
+                    dt,
+                    op,
+                    world
+                ),
+                "allreduce"
+            );
+            check!(recv[0] == n, "allreduce value, got {}", recv[0]);
+            Ok(())
+        };
+        allreduce(2)?; // forced ring
+        allreduce(3)?; // forced recursive doubling
+        allreduce(3)?; // forced recursive doubling, new count = new build
+        allreduce(4)?; // forced Rabenseifner
+        allreduce(1)?; // forced binomial baseline
+        allreduce(0)?; // auto: tens of bytes -> recursive doubling band
+        check!(pvar_get::<A>(session, h_ring)? == 1, "ring after allreduce block");
+        check!(pvar_get::<A>(session, h_rd)? == 3, "rd after allreduce block");
+        check!(pvar_get::<A>(session, h_rab)? == 1, "rabenseifner after allreduce block");
+        check!(pvar_get::<A>(session, h_bin)? == 1, "binomial after allreduce block");
+
+        let mut allgather = |force: i64| -> Result<(), String> {
+            check_rc!(A::t_cvar_write(ch_ag, force), "cvar write ag");
+            let count = next_count;
+            next_count += 1;
+            let send = vec![7i32; count as usize];
+            let mut recv = vec![0i32; count as usize * n as usize];
+            check_rc!(
+                A::allgather(
+                    slice_ptr(&send),
+                    count,
+                    dt,
+                    slice_ptr_mut(&mut recv),
+                    count,
+                    dt,
+                    world
+                ),
+                "allgather"
+            );
+            check!(recv[0] == 7, "allgather value, got {}", recv[0]);
+            Ok(())
+        };
+        allgather(1)?; // forced gather+bcast — the binomial-tree builder
+        allgather(2)?; // forced ring
+        allgather(0)?; // auto: tiny total at n <= 8 -> ring band
+        check!(pvar_get::<A>(session, h_bin)? == 2, "binomial after allgather block");
+        check!(pvar_get::<A>(session, h_ring)? == 3, "ring after allgather block");
+
+        let mut alltoall = |force: i64| -> Result<(), String> {
+            check_rc!(A::t_cvar_write(ch_aa, force), "cvar write aa");
+            let count = next_count;
+            next_count += 1;
+            let send = vec![9i32; count as usize * n as usize];
+            let mut recv = vec![0i32; count as usize * n as usize];
+            check_rc!(
+                A::alltoall(
+                    slice_ptr(&send),
+                    count,
+                    dt,
+                    slice_ptr_mut(&mut recv),
+                    count,
+                    dt,
+                    world
+                ),
+                "alltoall"
+            );
+            check!(recv[0] == 9, "alltoall value, got {}", recv[0]);
+            Ok(())
+        };
+        alltoall(2)?; // forced Bruck
+        alltoall(1)?; // forced pairwise
+        alltoall(0)?; // auto: small blocks at n <= 7 -> pairwise band
+        check!(pvar_get::<A>(session, h_bruck)? == 1, "bruck after alltoall block");
+        check!(pvar_get::<A>(session, h_pair)? == 2, "pairwise after alltoall block");
+
+        // Full ledger: nothing else moved.
+        check!(pvar_get::<A>(session, h_bin)? == 2, "final binomial");
+        check!(pvar_get::<A>(session, h_ring)? == 3, "final ring");
+        check!(pvar_get::<A>(session, h_rd)? == 3, "final recursive_doubling");
+        check!(pvar_get::<A>(session, h_rab)? == 1, "final rabenseifner");
+        check!(pvar_get::<A>(session, h_bruck)? == 1, "final bruck");
+        check!(pvar_get::<A>(session, h_pair)? == 2, "final pairwise");
+
+        // Restore auto everywhere (later registry entries and the
+        // verdict-combining allreduce must see the default selector).
+        check_rc!(A::t_cvar_write(ch_ar, 0), "restore ar");
+        check_rc!(A::t_cvar_write(ch_ag, 0), "restore ag");
+        check_rc!(A::t_cvar_write(ch_aa, 0), "restore aa");
         Ok(())
     })();
 

@@ -923,6 +923,207 @@ fn many_nonblocking_collectives_in_flight() {
 }
 
 // ---------------------------------------------------------------------------
+// Forced collective algorithm selection (PR 10)
+// ---------------------------------------------------------------------------
+
+/// Every forced allreduce builder computes the same sums as the binomial
+/// baseline, on power-of-two, prime, and composite rank counts. The
+/// vector is long enough that ring and Rabenseifner segment it unevenly
+/// when the count does not divide by the rank count.
+#[test]
+fn forced_allreduce_algorithms_all_reduce_correctly() {
+    for algo in [
+        coll::ALLREDUCE_BINOMIAL,
+        coll::ALLREDUCE_RING,
+        coll::ALLREDUCE_RECURSIVE_DOUBLING,
+        coll::ALLREDUCE_RABENSEIFNER,
+    ] {
+        for n in [2usize, 3, 5, 7, 8] {
+            let force = coll::CollAlgoForce { allreduce: algo, ..Default::default() };
+            run_job_ok(JobSpec::new(n).with_coll_algo(force), move |rank| {
+                engine::init().unwrap();
+                let send: Vec<i32> = (0..10).map(|i| (rank as i32 + 1) * (i + 1)).collect();
+                let mut recv = vec![0i32; 10];
+                coll::allreduce(
+                    send.as_ptr() as *const u8,
+                    recv.as_mut_ptr() as *mut u8,
+                    10,
+                    dt_i32(),
+                    op_sum(),
+                    COMM_WORLD,
+                )
+                .unwrap();
+                let ranks_sum: i32 = (1..=n as i32).sum();
+                let expect: Vec<i32> = (0..10).map(|i| ranks_sum * (i + 1)).collect();
+                assert_eq!(recv, expect, "algo {algo} n {n}");
+                engine::finalize().unwrap();
+            });
+        }
+    }
+}
+
+#[test]
+fn forced_ring_allgather_collects_everything() {
+    for n in [3usize, 5, 8] {
+        let force = coll::CollAlgoForce { allgather: coll::ALLGATHER_RING, ..Default::default() };
+        run_job_ok(JobSpec::new(n).with_coll_algo(force), move |rank| {
+            engine::init().unwrap();
+            let send = [rank as i32 + 100, -(rank as i32)];
+            let mut recv = vec![0i32; 2 * n];
+            coll::allgather(
+                send.as_ptr() as *const u8,
+                2,
+                dt_i32(),
+                recv.as_mut_ptr() as *mut u8,
+                2,
+                dt_i32(),
+                COMM_WORLD,
+            )
+            .unwrap();
+            let expect: Vec<i32> =
+                (0..n).flat_map(|r| [r as i32 + 100, -(r as i32)]).collect();
+            assert_eq!(recv, expect, "n {n}");
+            engine::finalize().unwrap();
+        });
+    }
+}
+
+/// The ring builder serves allgatherv too: variable block sizes rotate
+/// around the ring with per-source displacements intact.
+#[test]
+fn forced_ring_allgatherv_variable_blocks() {
+    let n = 4;
+    let force = coll::CollAlgoForce { allgather: coll::ALLGATHER_RING, ..Default::default() };
+    run_job_ok(JobSpec::new(n).with_coll_algo(force), move |rank| {
+        engine::init().unwrap();
+        // Rank r contributes r+1 ints: r*10, r*10+1, ...
+        let send: Vec<i32> = (0..rank as i32 + 1).map(|i| rank as i32 * 10 + i).collect();
+        let counts: Vec<usize> = (0..n).map(|r| r + 1).collect();
+        let displs: Vec<isize> = {
+            let mut d = vec![0isize; n];
+            for r in 1..n {
+                d[r] = d[r - 1] + counts[r - 1] as isize;
+            }
+            d
+        };
+        let total: usize = counts.iter().sum();
+        let mut recv = vec![-1i32; total];
+        coll::allgatherv(
+            send.as_ptr() as *const u8,
+            send.len(),
+            dt_i32(),
+            recv.as_mut_ptr() as *mut u8,
+            &counts,
+            &displs,
+            dt_i32(),
+            COMM_WORLD,
+        )
+        .unwrap();
+        let expect: Vec<i32> =
+            (0..n as i32).flat_map(|r| (0..r + 1).map(move |i| r * 10 + i)).collect();
+        assert_eq!(recv, expect);
+        engine::finalize().unwrap();
+    });
+}
+
+#[test]
+fn forced_bruck_alltoall_transposes_non_power_of_two() {
+    for n in [3usize, 5, 6, 7] {
+        let force = coll::CollAlgoForce { alltoall: coll::ALLTOALL_BRUCK, ..Default::default() };
+        run_job_ok(JobSpec::new(n).with_coll_algo(force), move |rank| {
+            engine::init().unwrap();
+            // Two ints per destination so Bruck's rotate/pack phases move
+            // multi-element blocks.
+            let send: Vec<i32> = (0..n)
+                .flat_map(|d| [(rank * 100 + d) as i32, (d * 100 + rank) as i32])
+                .collect();
+            let mut recv = vec![-1i32; 2 * n];
+            coll::alltoall(
+                send.as_ptr() as *const u8,
+                2,
+                dt_i32(),
+                recv.as_mut_ptr() as *mut u8,
+                2,
+                dt_i32(),
+                COMM_WORLD,
+            )
+            .unwrap();
+            let expect: Vec<i32> = (0..n)
+                .flat_map(|s| [(s * 100 + rank) as i32, (rank * 100 + s) as i32])
+                .collect();
+            assert_eq!(recv, expect, "n {n}");
+            engine::finalize().unwrap();
+        });
+    }
+}
+
+/// Forced algorithms flow through the nonblocking schedule path and the
+/// mutex transport exactly as through the blocking spsc default.
+#[test]
+fn forced_algorithms_nonblocking_on_mutex_transport() {
+    use mpi_abi::core::transport::TransportKind;
+    let n = 5;
+    let force = coll::CollAlgoForce {
+        allreduce: coll::ALLREDUCE_RING,
+        allgather: coll::ALLGATHER_RING,
+        alltoall: coll::ALLTOALL_BRUCK,
+    };
+    run_job_ok(
+        JobSpec::new(n).with_transport(TransportKind::Mutex).with_coll_algo(force),
+        move |rank| {
+            engine::init().unwrap();
+            let ar_in = [rank as i32 + 1];
+            let mut ar_out = [0i32];
+            let ag_in = [rank as i32 * 7];
+            let mut ag_out = vec![0i32; n];
+            let a2a_in: Vec<i32> = (0..n).map(|d| (rank * 10 + d) as i32).collect();
+            let mut a2a_out = vec![0i32; n];
+            let reqs = vec![
+                coll::iallreduce(
+                    ar_in.as_ptr() as *const u8,
+                    ar_out.as_mut_ptr() as *mut u8,
+                    1,
+                    dt_i32(),
+                    op_sum(),
+                    COMM_WORLD,
+                )
+                .unwrap(),
+                coll::iallgather(
+                    ag_in.as_ptr() as *const u8,
+                    1,
+                    dt_i32(),
+                    ag_out.as_mut_ptr() as *mut u8,
+                    1,
+                    dt_i32(),
+                    COMM_WORLD,
+                )
+                .unwrap(),
+            ];
+            for st in engine::waitall(&reqs).unwrap() {
+                assert_eq!(st.error, 0);
+            }
+            coll::alltoall(
+                a2a_in.as_ptr() as *const u8,
+                1,
+                dt_i32(),
+                a2a_out.as_mut_ptr() as *mut u8,
+                1,
+                dt_i32(),
+                COMM_WORLD,
+            )
+            .unwrap();
+            assert_eq!(ar_out[0], (1..=n as i32).sum::<i32>());
+            assert_eq!(ag_out, (0..n as i32).map(|r| r * 7).collect::<Vec<_>>());
+            assert_eq!(
+                a2a_out,
+                (0..n as i32).map(|s| s * 10 + rank as i32).collect::<Vec<_>>()
+            );
+            engine::finalize().unwrap();
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Persistent requests (engine level)
 // ---------------------------------------------------------------------------
 

@@ -472,6 +472,194 @@ fn prop_random_kill_shrink_matches_cold_start() {
     }
 }
 
+// --- Collective algorithm identity ----------------------------------------------
+
+/// Run the PR-10 collective set once under a given force word and
+/// matcher, returning each rank's concatenated integer results:
+/// builtin-int allreduce, derived-vector allreduce, uniform allgather,
+/// uniform alltoall, and a derived-contiguous alltoall, all with
+/// randomized counts derived from `seed`. Integer `MPI_SUM` wraps, so
+/// every segment bracketing (binomial, ring, recursive doubling,
+/// Rabenseifner) must produce bitwise-identical bytes.
+fn coll_identity_run(
+    ranks: usize,
+    seed: u64,
+    force: mpi_abi::core::collectives::CollAlgoForce,
+    flat: bool,
+) -> Vec<Vec<i32>> {
+    use mpi_abi::api::{Dt, MpiAbi, OpName};
+    use mpi_abi::launcher::{run_job_ok, JobSpec};
+    use mpi_abi::native_abi::NativeAbi;
+    type A = NativeAbi;
+
+    let spec = JobSpec::new(ranks).with_flat_match(flat).with_coll_algo(force);
+    run_job_ok(spec, move |rank| {
+        assert_eq!(A::init(), 0);
+        let world = A::comm_world();
+        let int = A::datatype(Dt::Int);
+        let sum = A::op(OpName::Sum);
+        let (mut n, mut me) = (0, 0);
+        A::comm_size(world, &mut n);
+        A::comm_rank(world, &mut me);
+        assert_eq!(me as usize, rank);
+        let n = n as usize;
+        // Every rank derives the identical size schedule; payloads mix
+        // in the rank so reordering bugs cannot cancel out.
+        let mut rng = Rng::new(seed * 131 + 7);
+        let ar_count = rng.range(1, 600) as usize;
+        let blk = rng.range(1, 5) as usize;
+        let vec_count = rng.range(1, 40) as usize;
+        let ag_count = rng.range(1, 200) as usize;
+        let a2a_count = rng.range(1, 100) as usize;
+        let gen = move |i: usize, salt: i32| -> i32 {
+            (rank as i32)
+                .wrapping_mul(1_000_003)
+                .wrapping_add((i as i32).wrapping_mul(7919))
+                .wrapping_add(salt.wrapping_mul(104_729))
+        };
+        let mut out = Vec::new();
+
+        // Builtin-int allreduce.
+        let sbuf: Vec<i32> = (0..ar_count).map(|i| gen(i, 1)).collect();
+        let mut rbuf = vec![0i32; ar_count];
+        assert_eq!(
+            A::allreduce(
+                sbuf.as_ptr() as *const u8,
+                rbuf.as_mut_ptr() as *mut u8,
+                ar_count as i32,
+                int,
+                sum,
+                world
+            ),
+            0
+        );
+        out.extend_from_slice(&rbuf);
+
+        // Derived-vector allreduce (stride == blocklen: hole-free, but
+        // exercises the derived-type pack path in every builder).
+        let mut vt = int;
+        assert_eq!(A::type_vector(vec_count as i32, blk as i32, blk as i32, int, &mut vt), 0);
+        assert_eq!(A::type_commit(&mut vt), 0);
+        let elems = 2 * vec_count * blk;
+        let sbuf2: Vec<i32> = (0..elems).map(|i| gen(i, 2)).collect();
+        let mut rbuf2 = vec![0i32; elems];
+        assert_eq!(
+            A::allreduce(
+                sbuf2.as_ptr() as *const u8,
+                rbuf2.as_mut_ptr() as *mut u8,
+                2,
+                vt,
+                sum,
+                world
+            ),
+            0
+        );
+        out.extend_from_slice(&rbuf2);
+        assert_eq!(A::type_free(&mut vt), 0);
+
+        // Uniform allgather.
+        let sbuf3: Vec<i32> = (0..ag_count).map(|i| gen(i, 3)).collect();
+        let mut rbuf3 = vec![0i32; ag_count * n];
+        assert_eq!(
+            A::allgather(
+                sbuf3.as_ptr() as *const u8,
+                ag_count as i32,
+                int,
+                rbuf3.as_mut_ptr() as *mut u8,
+                ag_count as i32,
+                int,
+                world
+            ),
+            0
+        );
+        out.extend_from_slice(&rbuf3);
+
+        // Uniform alltoall.
+        let sbuf4: Vec<i32> = (0..a2a_count * n).map(|i| gen(i, 4)).collect();
+        let mut rbuf4 = vec![0i32; a2a_count * n];
+        assert_eq!(
+            A::alltoall(
+                sbuf4.as_ptr() as *const u8,
+                a2a_count as i32,
+                int,
+                rbuf4.as_mut_ptr() as *mut u8,
+                a2a_count as i32,
+                int,
+                world
+            ),
+            0
+        );
+        out.extend_from_slice(&rbuf4);
+
+        // Derived-contiguous alltoall (blk ints per element).
+        let mut ct = int;
+        assert_eq!(A::type_contiguous(blk as i32, int, &mut ct), 0);
+        assert_eq!(A::type_commit(&mut ct), 0);
+        let c5 = 1 + a2a_count % 4;
+        let elems5 = c5 * blk * n;
+        let sbuf5: Vec<i32> = (0..elems5).map(|i| gen(i, 5)).collect();
+        let mut rbuf5 = vec![0i32; elems5];
+        assert_eq!(
+            A::alltoall(
+                sbuf5.as_ptr() as *const u8,
+                c5 as i32,
+                ct,
+                rbuf5.as_mut_ptr() as *mut u8,
+                c5 as i32,
+                ct,
+                world
+            ),
+            0
+        );
+        out.extend_from_slice(&rbuf5);
+        assert_eq!(A::type_free(&mut ct), 0);
+
+        assert_eq!(A::finalize(), 0);
+        out
+    })
+}
+
+/// Every forced schedule builder — and the auto selector — must produce
+/// bitwise-identical results on prime and non-power-of-two rank counts,
+/// randomized sizes, derived datatypes, and both matchers. The first
+/// force triple is the pre-PR-10 binomial/gather-bcast/pairwise
+/// baseline; every later triple is compared against it.
+#[test]
+fn prop_forced_coll_algorithms_bitwise_identical() {
+    use mpi_abi::core::collectives::{
+        CollAlgoForce, ALLGATHER_GATHER_BCAST, ALLGATHER_RING, ALLREDUCE_BINOMIAL,
+        ALLREDUCE_RABENSEIFNER, ALLREDUCE_RECURSIVE_DOUBLING, ALLREDUCE_RING, ALLTOALL_BRUCK,
+        ALLTOALL_PAIRWISE, COLL_AUTO,
+    };
+
+    let forces = [
+        (ALLREDUCE_BINOMIAL, ALLGATHER_GATHER_BCAST, ALLTOALL_PAIRWISE),
+        (ALLREDUCE_RING, ALLGATHER_RING, ALLTOALL_BRUCK),
+        (ALLREDUCE_RECURSIVE_DOUBLING, ALLGATHER_GATHER_BCAST, ALLTOALL_BRUCK),
+        (ALLREDUCE_RABENSEIFNER, ALLGATHER_RING, ALLTOALL_PAIRWISE),
+        (COLL_AUTO, COLL_AUTO, COLL_AUTO),
+    ];
+    for &ranks in &[3usize, 5, 6, 7] {
+        for seed in 0..2u64 {
+            for flat in [false, true] {
+                let mut baseline: Option<Vec<Vec<i32>>> = None;
+                for &(ar, ag, aa) in &forces {
+                    let force =
+                        CollAlgoForce { allreduce: ar, allgather: ag, alltoall: aa };
+                    let got = coll_identity_run(ranks, seed, force, flat);
+                    match &baseline {
+                        None => baseline = Some(got),
+                        Some(base) => assert_eq!(
+                            base, &got,
+                            "ranks {ranks} seed {seed} flat {flat} force {force:?}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
 // --- Message ordering under random traffic ------------------------------------------
 
 #[test]

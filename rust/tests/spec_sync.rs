@@ -35,7 +35,7 @@ fn table_rows(spec: &str, tag: &str) -> Vec<Vec<String>> {
             .collect();
         // Skip the header and |---| separator rows.
         if cells.iter().all(|c| c.chars().all(|ch| ch == '-'))
-            || ["constant", "type", "function"].contains(&cells[0].as_str())
+            || ["constant", "type", "function", "cvar"].contains(&cells[0].as_str())
         {
             continue;
         }
@@ -337,6 +337,62 @@ fn ulfm_symbol_table_matches_code() {
         "`comms_revoked`",
     ] {
         assert!(spec.contains(needle), "SPEC.md §12 lost its clause {needle:?}");
+    }
+}
+
+/// SPEC §13: the collective-algorithm force codes, their cvar names and
+/// indices, and the `MPI_ABI_COLL_ALGO` spelling of each algorithm are
+/// a fixed ABI surface — machine-checked against `core::collectives`
+/// and `core::obs`, including a round-trip of every name through the
+/// environment-override parser.
+#[test]
+fn coll_algo_table_matches_code() {
+    use mpi_abi::core::collectives as c;
+    use mpi_abi::core::obs;
+    let spec = spec_text();
+    let mut seen = 0;
+    for cells in table_rows(&spec, "coll-algos-table") {
+        assert_eq!(cells.len(), 5, "malformed row {cells:?}");
+        let (cvar, idx, op, code, algo) =
+            (&cells[0], cell_i32(&cells, 1), &cells[2], cell_i32(&cells, 3) as u8, &cells[4]);
+        let want_idx = match op.as_str() {
+            "allreduce" => obs::CVAR_COLL_ALLREDUCE_ALGO,
+            "allgather" => obs::CVAR_COLL_ALLGATHER_ALGO,
+            "alltoall" => obs::CVAR_COLL_ALLTOALL_ALGO,
+            other => panic!("unexpected operation row {other}"),
+        };
+        assert_eq!(idx as usize, want_idx, "{op} cvar index");
+        assert_eq!(cvar, obs::CVARS[want_idx].name, "{op} cvar name");
+        let want_code = match (op.as_str(), algo.as_str()) {
+            ("allreduce", "binomial") => c::ALLREDUCE_BINOMIAL,
+            ("allreduce", "ring") => c::ALLREDUCE_RING,
+            ("allreduce", "recursive_doubling") => c::ALLREDUCE_RECURSIVE_DOUBLING,
+            ("allreduce", "rabenseifner") => c::ALLREDUCE_RABENSEIFNER,
+            ("allgather", "gather_bcast") => c::ALLGATHER_GATHER_BCAST,
+            ("allgather", "ring") => c::ALLGATHER_RING,
+            ("alltoall", "pairwise") => c::ALLTOALL_PAIRWISE,
+            ("alltoall", "bruck") => c::ALLTOALL_BRUCK,
+            (o, a) => panic!("unexpected algorithm row {o}/{a}"),
+        };
+        assert_eq!(code, want_code, "{op}/{algo} force code");
+        let f = c::parse_coll_algo(&format!("{op}={algo}"));
+        let parsed = match op.as_str() {
+            "allreduce" => f.allreduce,
+            "allgather" => f.allgather,
+            _ => f.alltoall,
+        };
+        assert_eq!(parsed, want_code, "parse_coll_algo({op}={algo})");
+        seen += 1;
+    }
+    assert_eq!(seen, 8, "all eight (operation, algorithm) rows documented");
+    for needle in [
+        "MPI_ABI_COLL_ALGO",
+        "`coll_sel_binomial`",
+        "`coll_allreduce_algo`",
+        "BENCH_PR10.json",
+        "Pareto frontier",
+    ] {
+        assert!(spec.contains(needle), "SPEC.md §13 lost its clause {needle:?}");
     }
 }
 
